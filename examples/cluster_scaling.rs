@@ -1,0 +1,34 @@
+//! Cluster-scaling sweep (the Figure 4 workload): per-machine memory and
+//! convergence speedup as machines are added, model-parallel vs the
+//! data-parallel baseline on the 1 Gbps low-end network.
+//!
+//! ```bash
+//! cargo run --release --example cluster_scaling [K]
+//! ```
+
+use mplda::eval::{fig4a, fig4b};
+
+fn main() -> anyhow::Result<()> {
+    mplda::util::logger::init();
+    let args: Vec<String> = std::env::args().collect();
+    let k: usize = args.get(1).map(|s| s.parse()).transpose()?.unwrap_or(300);
+
+    let a = fig4a::run(&fig4a::Opts {
+        topics: k,
+        machines: vec![4, 8, 16, 32],
+        iterations: 2,
+        out_dir: Some("out".into()),
+    })?;
+    println!("{a}");
+
+    let b = fig4b::run(&fig4b::Opts {
+        topics: k,
+        machines: vec![4, 8, 16, 32],
+        iterations: 10,
+        frac: 0.9,
+        out_dir: Some("out".into()),
+    })?;
+    println!("{b}");
+    println!("CSV series written under out/");
+    Ok(())
+}

@@ -1,0 +1,64 @@
+//! Pubmed-scale convergence comparison (the Figure 2 workload): model-
+//! parallel vs Yahoo!LDA-style data-parallel on the high-end cluster
+//! preset.
+//!
+//! Drop the real UCI Pubmed `docword.pubmed.txt` somewhere and run with
+//! `--corpus.preset uci --corpus.path <file>` via `mplda train` for the
+//! unscaled version; this example uses the scaled `pubmed-sim` preset.
+//!
+//! ```bash
+//! cargo run --release --example pubmed_convergence [K] [iterations]
+//! ```
+
+use mplda::eval::common::{base_config, ll_threshold, run_training_on};
+
+fn main() -> anyhow::Result<()> {
+    mplda::util::logger::init();
+    let args: Vec<String> = std::env::args().collect();
+    let k: usize = args.get(1).map(|s| s.parse()).transpose()?.unwrap_or(500);
+    let iters: usize = args.get(2).map(|s| s.parse()).transpose()?.unwrap_or(15);
+
+    let mut cfg = base_config("pubmed-sim", "high-end")?;
+    cfg.cluster.machines = 8;
+    cfg.coord.workers = 8;
+    cfg.coord.blocks = 0;
+    cfg.train.topics = k;
+    cfg.train.iterations = iters;
+    cfg.finalize()?;
+    let corpus = mplda::corpus::build(&cfg.corpus)?;
+    println!("corpus: {} | K={k} | 8 high-end machines\n", corpus.summary());
+
+    let mut mp_cfg = cfg.clone();
+    mp_cfg.train.sampler = mplda::config::SamplerKind::InvertedXy;
+    println!("training model-parallel (inverted-index X+Y sampler)...");
+    let mp = run_training_on(&mp_cfg, corpus.clone())?;
+
+    let mut dp_cfg = cfg;
+    dp_cfg.train.sampler = mplda::config::SamplerKind::SparseYao;
+    println!("training data-parallel baseline (SparseLDA + async sync)...");
+    let dp = run_training_on(&dp_cfg, corpus)?;
+
+    println!("\n{:>5} {:>16} {:>16}", "iter", "model-parallel", "yahoo-lda");
+    for i in 0..mp.ll_series.len() {
+        println!(
+            "{:>5} {:>16.1} {:>16}",
+            mp.ll_series[i].0,
+            mp.ll_series[i].2,
+            dp.ll_series.get(i).map(|x| format!("{:.1}", x.2)).unwrap_or("-".into()),
+        );
+    }
+
+    let th = ll_threshold(&mp, &dp, 0.95);
+    println!("\n95%-of-best threshold: {th:.1}");
+    println!(
+        "  model-parallel: {} iterations, {} simulated",
+        mp.iters_to_ll(th).map(|i| i.to_string()).unwrap_or("-".into()),
+        mp.time_to_ll(th).map(mplda::util::bench::fmt_secs).unwrap_or("-".into()),
+    );
+    println!(
+        "  yahoo-lda     : {} iterations, {} simulated",
+        dp.iters_to_ll(th).map(|i| i.to_string()).unwrap_or("-".into()),
+        dp.time_to_ll(th).map(mplda::util::bench::fmt_secs).unwrap_or("-".into()),
+    );
+    Ok(())
+}

@@ -1,0 +1,97 @@
+"""AOT lowering: JAX → HLO **text** artifacts + manifest.
+
+Runs once at build time (`make artifacts`); the rust runtime
+(`rust/src/runtime/`) loads the text with `HloModuleProto::from_text_file`,
+compiles on the PJRT CPU client and executes — Python never runs on the
+sampling path.
+
+HLO text, NOT `.serialize()`: jax >= 0.5 emits HloModuleProtos with 64-bit
+instruction ids that the image's xla_extension 0.5.1 rejects
+(`proto.id() <= INT_MAX`); the text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md).
+
+Artifacts:
+  artifacts/gibbs_b{B}_k{K}.hlo.txt      — sampling step (z out)
+  artifacts/marginal_b{B}_k{K}.hlo.txt   — token-marginal step (ll out)
+  artifacts/manifest.txt                 — one `key=value ...` line each
+
+Usage: python -m compile.aot --out ../artifacts [--variants B:K,B:K,...]
+"""
+
+import argparse
+import os
+import sys
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# (batch, topics) variants shipped by default. Batches are multiples of the
+# kernel tile (8). K values cover the test/CI sizes plus the experiment
+# sizes the XLA backend demos use.
+DEFAULT_VARIANTS = [
+    (64, 16),
+    (256, 16),
+    (256, 64),
+    (256, 128),
+    (256, 256),
+    (512, 1000),
+]
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (the 0.5.1-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_variant(batch: int, topics: int):
+    """Lower both steps for one (B, K) variant. Returns [(kind, text)]."""
+    gibbs = jax.jit(model.gibbs_step).lower(*model.example_args(batch, topics))
+    marginal = jax.jit(model.marginal_step).lower(
+        *model.example_args(batch, topics, with_u=False)
+    )
+    return [("gibbs", to_hlo_text(gibbs)), ("marginal", to_hlo_text(marginal))]
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="output directory")
+    ap.add_argument(
+        "--variants",
+        default=",".join(f"{b}:{k}" for b, k in DEFAULT_VARIANTS),
+        help="comma-separated B:K pairs",
+    )
+    args = ap.parse_args()
+
+    variants = []
+    for spec in args.variants.split(","):
+        b, k = spec.strip().split(":")
+        variants.append((int(b), int(k)))
+
+    os.makedirs(args.out, exist_ok=True)
+    manifest_lines = []
+    for batch, topics in variants:
+        for kind, text in lower_variant(batch, topics):
+            name = f"{kind}_b{batch}_k{topics}.hlo.txt"
+            path = os.path.join(args.out, name)
+            with open(path, "w") as f:
+                f.write(text)
+            manifest_lines.append(
+                f"kind={kind} batch={batch} topics={topics} file={name}"
+            )
+            print(f"wrote {path} ({len(text)} chars)")
+
+    with open(os.path.join(args.out, "manifest.txt"), "w") as f:
+        f.write("# mplda AOT artifact manifest — one artifact per line\n")
+        f.write("\n".join(manifest_lines) + "\n")
+    print(f"wrote {os.path.join(args.out, 'manifest.txt')} ({len(manifest_lines)} artifacts)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,3 @@
+"""L1 Pallas kernels + pure-jnp oracles."""
+
+from . import gibbs_block, ref  # noqa: F401

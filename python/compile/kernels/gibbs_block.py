@@ -1,0 +1,109 @@
+"""L1 — Pallas kernels for the microbatch Gibbs step and the token-marginal
+log-likelihood.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the token axis is the grid —
+each grid step stages a (TB, K) tile of `ct`/`cd` into VMEM along with the
+shared (K,) totals row and computes the probability tile, its row-cumsum
+and the inverse-CDF draw entirely in-register. At K = 10^4 a f32 (8, K)
+tile is ~320 KiB — comfortably inside VMEM with double-buffering; there is
+no matmul, so the kernel is VPU-bound and the roofline is HBM bandwidth on
+the two [B,K] streams (see DESIGN.md §Perf).
+
+`interpret=True` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, and interpret-mode lowering produces plain HLO that the rust
+runtime loads (see /opt/xla-example/README.md). Hyperparameters arrive as a
+`(4,)` f32 operand `[alpha, beta, vbeta, 0]` so one AOT artifact serves any
+(alpha, beta, V).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Token-axis tile. 8 keeps the probability tile small at huge K while the
+# grid amortizes setup; perf notes in EXPERIMENTS.md §Perf.
+DEFAULT_TILE = 8
+
+
+def _gibbs_kernel(ct_ref, cd_ref, ck_ref, params_ref, u_ref, z_ref):
+    """One (TB, K) tile: probabilities -> row cumsum -> inverse CDF."""
+    alpha = params_ref[0]
+    beta = params_ref[1]
+    vbeta = params_ref[2]
+    ct = ct_ref[...]
+    cd = cd_ref[...]
+    ck = ck_ref[...]
+    u = u_ref[...]
+    probs = (cd + alpha) * (ct + beta) / (ck[None, :] + vbeta)
+    cum = jnp.cumsum(probs, axis=1)
+    total = cum[:, -1:]
+    target = u[:, None] * total
+    z = jnp.sum((cum < target).astype(jnp.int32), axis=1)
+    z_ref[...] = jnp.minimum(z, probs.shape[1] - 1).astype(jnp.int32)
+
+
+def _marginal_kernel(ct_ref, cd_ref, ck_ref, params_ref, o_ref):
+    """One (TB, K) tile of the token-marginal log mass."""
+    alpha = params_ref[0]
+    beta = params_ref[1]
+    vbeta = params_ref[2]
+    probs = (cd_ref[...] + alpha) * (ct_ref[...] + beta) / (ck_ref[...][None, :] + vbeta)
+    o_ref[...] = jnp.log(jnp.sum(probs, axis=1))
+
+
+def _common_specs(tile, k):
+    """BlockSpecs shared by both kernels: tile tokens, replicate ck/params."""
+    return [
+        pl.BlockSpec((tile, k), lambda i: (i, 0)),  # ct
+        pl.BlockSpec((tile, k), lambda i: (i, 0)),  # cd
+        pl.BlockSpec((k,), lambda i: (0,)),         # ck (broadcast)
+        pl.BlockSpec((4,), lambda i: (0,)),         # params (broadcast)
+    ]
+
+
+@functools.partial(jax.jit, static_argnames=("tile",))
+def gibbs_block(ct, cd, ck, params, u, *, tile=DEFAULT_TILE):
+    """Sample a [B] microbatch. B must be a multiple of `tile`.
+
+    Args:
+      ct:     [B, K] f32 — word-topic counts per token (self-excluded).
+      cd:     [B, K] f32 — doc-topic counts per token (self-excluded).
+      ck:     [K]    f32 — topic totals.
+      params: [4]    f32 — [alpha, beta, vbeta, unused].
+      u:      [B]    f32 — uniforms in [0, 1).
+
+    Returns:
+      [B] int32 sampled topics.
+    """
+    b, k = ct.shape
+    assert b % tile == 0, f"batch {b} not a multiple of tile {tile}"
+    return pl.pallas_call(
+        _gibbs_kernel,
+        grid=(b // tile,),
+        in_specs=_common_specs(tile, k) + [pl.BlockSpec((tile,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((tile,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((b,), jnp.int32),
+        interpret=True,
+    )(ct, cd, ck, params, u)
+
+
+@functools.partial(jax.jit, static_argnames=("tile",))
+def token_marginal(ct, cd, ck, params, *, tile=DEFAULT_TILE):
+    """Per-token log marginal mass, [B] f32 (see ref.ref_token_marginal)."""
+    b, k = ct.shape
+    assert b % tile == 0, f"batch {b} not a multiple of tile {tile}"
+    return pl.pallas_call(
+        _marginal_kernel,
+        grid=(b // tile,),
+        in_specs=_common_specs(tile, k),
+        out_specs=pl.BlockSpec((tile,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((b,), jnp.float32),
+        interpret=True,
+    )(ct, cd, ck, params)
+
+
+def pack_params(alpha, beta, vbeta):
+    """Build the (4,) hyperparameter operand."""
+    return jnp.asarray([alpha, beta, vbeta, 0.0], jnp.float32)

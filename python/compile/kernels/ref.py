@@ -1,0 +1,44 @@
+"""Pure-jnp oracle for the Pallas kernels.
+
+These are the CORE correctness references: every kernel in this package
+must agree with its `ref_*` twin exactly (same f32 arithmetic order along
+the reduction axis is not guaranteed, so comparisons use tight tolerances;
+the *sampled index* must match except at probability-boundary ties, which
+the tests detect and exclude).
+
+Semantics (eq. 3 of the paper, X+Y buckets merged; see
+rust/src/sampler/xla_dense.rs for the rust twin):
+
+    p_b(k) ∝ (cd[b,k] + alpha) * (ct[b,k] + beta) / (ck[k] + vbeta)
+    z_b    = first k such that cumsum(p_b)[k] >= u_b * sum(p_b)
+"""
+
+import jax.numpy as jnp
+
+
+def ref_probs(ct, cd, ck, alpha, beta, vbeta):
+    """Unnormalized eq.-3 probabilities, shape [B, K] (f32)."""
+    ct = jnp.asarray(ct, jnp.float32)
+    cd = jnp.asarray(cd, jnp.float32)
+    ck = jnp.asarray(ck, jnp.float32)
+    return (cd + alpha) * (ct + beta) / (ck[None, :] + vbeta)
+
+
+def ref_gibbs(ct, cd, ck, u, alpha, beta, vbeta):
+    """Sampled topics, shape [B] (int32): inverse-CDF at u*total."""
+    probs = ref_probs(ct, cd, ck, alpha, beta, vbeta)
+    cum = jnp.cumsum(probs, axis=1)
+    total = cum[:, -1:]
+    target = jnp.asarray(u, jnp.float32)[:, None] * total
+    # Number of prefix sums strictly below the target == first index where
+    # cum >= target.
+    z = jnp.sum(cum < target, axis=1)
+    return jnp.minimum(z, probs.shape[1] - 1).astype(jnp.int32)
+
+
+def ref_token_marginal(ct, cd, ck, alpha, beta, vbeta):
+    """log Σ_k p_b(k), shape [B] (f32) — the collapsed predictive token
+    mass (up to the doc-length normalizer), used for online perplexity
+    estimates."""
+    probs = ref_probs(ct, cd, ck, alpha, beta, vbeta)
+    return jnp.log(jnp.sum(probs, axis=1))

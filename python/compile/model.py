@@ -1,0 +1,46 @@
+"""L2 — the JAX compute graph the rust workers execute.
+
+For a Gibbs-sampling system the "model step" is the collapsed sampling
+update itself (there is no gradient pass): given a microbatch's dense count
+tiles, produce the new topic assignments — plus the token-marginal variant
+used for online perplexity. Both call the L1 Pallas kernels so the whole
+step lowers into one HLO module per (B, K) variant, AOT-compiled by
+`aot.py` and executed from rust (`rust/src/runtime/`).
+
+The function signatures are the ABI the rust side relies on (see
+rust/src/runtime/exec.rs):
+
+    gibbs_step:     (ct[B,K] f32, cd[B,K] f32, ck[K] f32,
+                     params[4] f32, u[B] f32) -> (z[B] i32,)
+    marginal_step:  (ct, cd, ck, params)      -> (ll[B] f32,)
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import gibbs_block
+
+
+def gibbs_step(ct, cd, ck, params, u):
+    """One device-side microbatch Gibbs step (returns a 1-tuple: the rust
+    loader unwraps tuple outputs)."""
+    return (gibbs_block.gibbs_block(ct, cd, ck, params, u),)
+
+
+def marginal_step(ct, cd, ck, params):
+    """Per-token log marginal mass."""
+    return (gibbs_block.token_marginal(ct, cd, ck, params),)
+
+
+def example_args(batch, topics, with_u=True):
+    """ShapeDtypeStructs for AOT lowering of a (B, K) variant."""
+    f32 = jnp.float32
+    args = [
+        jax.ShapeDtypeStruct((batch, topics), f32),  # ct
+        jax.ShapeDtypeStruct((batch, topics), f32),  # cd
+        jax.ShapeDtypeStruct((topics,), f32),        # ck
+        jax.ShapeDtypeStruct((4,), f32),             # params
+    ]
+    if with_u:
+        args.append(jax.ShapeDtypeStruct((batch,), f32))  # u
+    return args

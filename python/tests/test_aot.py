@@ -1,0 +1,38 @@
+"""AOT pipeline test: lower a small variant set into a temp dir and check
+the artifacts + manifest a rust runtime would consume."""
+
+import os
+import subprocess
+import sys
+
+PKG_DIR = os.path.join(os.path.dirname(__file__), "..")
+
+
+def test_aot_writes_artifacts_and_manifest(tmp_path):
+    out = tmp_path / "artifacts"
+    proc = subprocess.run(
+        [
+            sys.executable,
+            "-m",
+            "compile.aot",
+            "--out",
+            str(out),
+            "--variants",
+            "8:4,16:8",
+        ],
+        cwd=PKG_DIR,
+        capture_output=True,
+        text=True,
+        timeout=600,
+    )
+    assert proc.returncode == 0, proc.stderr
+    manifest = (out / "manifest.txt").read_text()
+    lines = [l for l in manifest.splitlines() if l and not l.startswith("#")]
+    assert len(lines) == 4  # 2 variants × (gibbs, marginal)
+    for line in lines:
+        fields = dict(kv.split("=", 1) for kv in line.split())
+        assert fields["kind"] in ("gibbs", "marginal")
+        path = out / fields["file"]
+        assert path.exists(), f"missing artifact {path}"
+        head = path.read_text()[:200]
+        assert head.startswith("HloModule"), head

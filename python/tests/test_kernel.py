@@ -1,0 +1,191 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracle.
+
+Hypothesis sweeps shapes/hyperparameters; numpy fixtures check structured
+cases exactly. The sampled index may legitimately differ at probability-
+boundary ties (cum ≈ target at f32 precision); those cases are excluded by
+construction (uniforms are kept away from bucket edges by the tolerance
+check below).
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.gibbs_block import (
+    DEFAULT_TILE,
+    gibbs_block,
+    pack_params,
+    token_marginal,
+)
+from compile.kernels.ref import ref_gibbs, ref_probs, ref_token_marginal
+
+RNG = np.random.default_rng(0)
+
+
+def make_inputs(rng, b, k, max_count=50):
+    ct = rng.integers(0, max_count, size=(b, k)).astype(np.float32)
+    # Most counts are zero in reality — sparsify.
+    ct *= rng.random((b, k)) < 0.2
+    cd = rng.integers(0, 10, size=(b, k)).astype(np.float32)
+    cd *= rng.random((b, k)) < 0.3
+    ck = (ct.sum(axis=0) + rng.integers(1, 100, size=k)).astype(np.float32)
+    u = rng.random(b).astype(np.float32)
+    return ct, cd, ck, u
+
+
+def boundary_safe(ct, cd, ck, u, alpha, beta, vbeta, eps=1e-5):
+    """Mask of tokens whose target is not within eps of any CDF edge."""
+    probs = np.asarray(ref_probs(ct, cd, ck, alpha, beta, vbeta))
+    cum = np.cumsum(probs, axis=1)
+    total = cum[:, -1:]
+    target = u[:, None] * total
+    rel = np.abs(cum - target) / np.maximum(total, 1e-30)
+    return rel.min(axis=1) > eps
+
+
+class TestGibbsKernel:
+    @pytest.mark.parametrize("b,k", [(8, 4), (8, 16), (64, 16), (64, 128), (256, 64)])
+    def test_matches_ref_on_random_inputs(self, b, k):
+        rng = np.random.default_rng(b * 1000 + k)
+        ct, cd, ck, u = make_inputs(rng, b, k)
+        alpha, beta, vbeta = 0.1, 0.01, 0.01 * 1000
+        params = pack_params(alpha, beta, vbeta)
+        got = np.asarray(gibbs_block(ct, cd, ck, params, u))
+        want = np.asarray(ref_gibbs(ct, cd, ck, u, alpha, beta, vbeta))
+        safe = boundary_safe(ct, cd, ck, u, alpha, beta, vbeta)
+        assert safe.mean() > 0.9  # the test is vacuous if everything is a tie
+        np.testing.assert_array_equal(got[safe], want[safe])
+        assert got.dtype == np.int32
+        assert (got >= 0).all() and (got < k).all()
+
+    def test_deterministic_extremes(self):
+        b, k = 8, 8
+        ct = np.zeros((b, k), np.float32)
+        cd = np.zeros((b, k), np.float32)
+        ck = np.full(k, 100.0, np.float32)
+        # Token 0: all mass on topic 3.
+        ct[0, 3] = 1000.0
+        cd[0, 3] = 50.0
+        # Token 1: uniform probs, u=0 → topic 0.
+        # Token 2: uniform probs, u→1 → topic K-1.
+        u = np.zeros(b, np.float32)
+        u[0] = 0.5
+        u[2] = 0.999999
+        params = pack_params(0.1, 0.01, 10.0)
+        z = np.asarray(gibbs_block(ct, cd, ck, params, u))
+        assert z[0] == 3
+        assert z[1] == 0
+        assert z[2] == k - 1
+
+    def test_statistical_frequencies(self):
+        # With fixed probs, sampled frequencies over many uniforms must
+        # match the normalized distribution.
+        b, k = 512, 4
+        rng = np.random.default_rng(7)
+        row_ct = np.array([5.0, 0.0, 20.0, 1.0], np.float32)
+        ct = np.tile(row_ct, (b, 1))
+        cd = np.zeros((b, k), np.float32)
+        ck = np.full(k, 50.0, np.float32)
+        alpha, beta, vbeta = 0.1, 0.01, 1.0
+        params = pack_params(alpha, beta, vbeta)
+        counts = np.zeros(k)
+        for _ in range(8):
+            u = rng.random(b).astype(np.float32)
+            z = np.asarray(gibbs_block(ct, cd, ck, params, u))
+            counts += np.bincount(z, minlength=k)
+        probs = (0.1) * (row_ct + 0.01) / (50.0 + 1.0)
+        probs /= probs.sum()
+        freqs = counts / counts.sum()
+        np.testing.assert_allclose(freqs, probs, atol=0.03)
+
+    @settings(max_examples=30, deadline=None)
+    @given(
+        b_tiles=st.integers(1, 8),
+        k=st.integers(2, 96),
+        alpha=st.floats(0.01, 2.0),
+        beta=st.floats(0.001, 1.0),
+        v=st.integers(10, 100000),
+        seed=st.integers(0, 2**31),
+    )
+    def test_hypothesis_sweep(self, b_tiles, k, alpha, beta, v, seed):
+        b = b_tiles * DEFAULT_TILE
+        rng = np.random.default_rng(seed)
+        ct, cd, ck, u = make_inputs(rng, b, k)
+        vbeta = beta * v
+        params = pack_params(alpha, beta, vbeta)
+        got = np.asarray(gibbs_block(ct, cd, ck, params, u))
+        want = np.asarray(ref_gibbs(ct, cd, ck, u, alpha, beta, vbeta))
+        safe = boundary_safe(ct, cd, ck, u, alpha, beta, vbeta)
+        np.testing.assert_array_equal(got[safe], want[safe])
+
+
+class TestMarginalKernel:
+    @pytest.mark.parametrize("b,k", [(8, 4), (64, 32), (256, 128)])
+    def test_matches_ref(self, b, k):
+        rng = np.random.default_rng(b + k)
+        ct, cd, ck, _ = make_inputs(rng, b, k)
+        alpha, beta, vbeta = 0.1, 0.01, 5.0
+        params = pack_params(alpha, beta, vbeta)
+        got = np.asarray(token_marginal(ct, cd, ck, params))
+        want = np.asarray(ref_token_marginal(ct, cd, ck, alpha, beta, vbeta))
+        np.testing.assert_allclose(got, want, rtol=1e-5)
+
+    @settings(max_examples=20, deadline=None)
+    @given(
+        b_tiles=st.integers(1, 4),
+        k=st.integers(2, 64),
+        seed=st.integers(0, 2**31),
+    )
+    def test_hypothesis_sweep(self, b_tiles, k, seed):
+        b = b_tiles * DEFAULT_TILE
+        rng = np.random.default_rng(seed)
+        ct, cd, ck, _ = make_inputs(rng, b, k)
+        params = pack_params(0.5, 0.05, 2.0)
+        got = np.asarray(token_marginal(ct, cd, ck, params))
+        want = np.asarray(ref_token_marginal(ct, cd, ck, 0.5, 0.05, 2.0))
+        np.testing.assert_allclose(got, want, rtol=1e-5)
+
+
+class TestTileIndependence:
+    def test_result_independent_of_tile(self):
+        # The grid decomposition must not change results.
+        b, k = 64, 32
+        rng = np.random.default_rng(3)
+        ct, cd, ck, u = make_inputs(rng, b, k)
+        params = pack_params(0.1, 0.01, 3.0)
+        z8 = np.asarray(gibbs_block(ct, cd, ck, params, u, tile=8))
+        z16 = np.asarray(gibbs_block(ct, cd, ck, params, u, tile=16))
+        z64 = np.asarray(gibbs_block(ct, cd, ck, params, u, tile=64))
+        np.testing.assert_array_equal(z8, z16)
+        np.testing.assert_array_equal(z8, z64)
+
+    def test_bad_batch_asserts(self):
+        ct = np.zeros((10, 4), np.float32)  # 10 not a multiple of 8
+        cd = np.zeros((10, 4), np.float32)
+        ck = np.ones(4, np.float32)
+        u = np.zeros(10, np.float32)
+        with pytest.raises(AssertionError):
+            gibbs_block(ct, cd, ck, pack_params(0.1, 0.01, 1.0), u)
+
+
+class TestParamsOperand:
+    def test_pack_params(self):
+        p = np.asarray(pack_params(0.1, 0.02, 30.0))
+        np.testing.assert_allclose(p, [0.1, 0.02, 30.0, 0.0], rtol=1e-6)
+
+    def test_hyperparams_affect_distribution(self):
+        # Bigger alpha flattens the conditional: with zero counts the
+        # kernel must still sample all topics; with huge ct concentration
+        # it must not.
+        b, k = 64, 8
+        ct = np.zeros((b, k), np.float32)
+        cd = np.zeros((b, k), np.float32)
+        ck = np.ones(k, np.float32)
+        rng = np.random.default_rng(1)
+        u = rng.random(b).astype(np.float32)
+        z_flat = np.asarray(gibbs_block(ct, cd, ck, pack_params(1.0, 0.1, 1.0), u))
+        assert len(np.unique(z_flat)) > 3
+        ct[:, 5] = 1e6
+        z_peak = np.asarray(gibbs_block(ct, cd, ck, pack_params(1.0, 0.1, 1.0), u))
+        assert (z_peak == 5).mean() > 0.95

@@ -1,0 +1,62 @@
+"""L2 shape/ABI tests: the jitted steps must keep the signature the rust
+runtime compiles against, and lowering must stay xla_extension-0.5.1-safe
+(HLO text, ids reassignable)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+from compile.kernels.gibbs_block import pack_params
+from compile.kernels.ref import ref_gibbs
+
+
+class TestGibbsStepABI:
+    def test_output_is_one_tuple_int32(self):
+        b, k = 8, 4
+        ct = jnp.zeros((b, k), jnp.float32)
+        cd = jnp.zeros((b, k), jnp.float32)
+        ck = jnp.ones((k,), jnp.float32)
+        u = jnp.zeros((b,), jnp.float32)
+        out = model.gibbs_step(ct, cd, ck, pack_params(0.1, 0.01, 1.0), u)
+        assert isinstance(out, tuple) and len(out) == 1
+        assert out[0].shape == (b,)
+        assert out[0].dtype == jnp.int32
+
+    def test_matches_ref_end_to_end(self):
+        b, k = 16, 8
+        rng = np.random.default_rng(5)
+        ct = rng.integers(0, 20, (b, k)).astype(np.float32)
+        cd = rng.integers(0, 5, (b, k)).astype(np.float32)
+        ck = ct.sum(axis=0) + 10.0
+        u = rng.random(b).astype(np.float32)
+        (z,) = model.gibbs_step(ct, cd, ck, pack_params(0.1, 0.01, 2.0), u)
+        want = ref_gibbs(ct, cd, ck, u, 0.1, 0.01, 2.0)
+        np.testing.assert_array_equal(np.asarray(z), np.asarray(want))
+
+    def test_example_args_match_signature(self):
+        args = model.example_args(64, 16)
+        assert [a.shape for a in args] == [(64, 16), (64, 16), (16,), (4,), (64,)]
+        args = model.example_args(64, 16, with_u=False)
+        assert len(args) == 4
+
+
+class TestLowering:
+    @pytest.mark.parametrize("b,k", [(8, 4), (64, 16)])
+    def test_lowers_to_single_fused_module(self, b, k):
+        lowered = jax.jit(model.gibbs_step).lower(*model.example_args(b, k))
+        text = str(lowered.compiler_ir("stablehlo"))
+        assert "cumsum" in text or "iota" in text or "add" in text
+        # One module, no host callbacks (python never on the request path).
+        assert "callback" not in text
+        assert "CustomCall" not in text or "Sharding" in text
+
+    def test_hlo_text_exports(self):
+        from compile.aot import to_hlo_text
+
+        lowered = jax.jit(model.gibbs_step).lower(*model.example_args(8, 4))
+        text = to_hlo_text(lowered)
+        assert text.startswith("HloModule")
+        # Entry computation must take our 5 operands.
+        assert text.count("parameter(") >= 5

@@ -1,0 +1,35 @@
+//! Bench E1/E2 — regenerates Figure 2 (convergence per iteration and per
+//! simulated time), model-parallel vs Yahoo!LDA on pubmed-sim.
+//!
+//! `cargo bench --bench fig2_convergence`
+//! Env: MPLDA_BENCH_FULL=1 for the larger parameterization.
+
+use mplda::eval::fig2;
+use mplda::util::bench::banner;
+
+fn main() {
+    mplda::util::logger::init();
+    banner(
+        "fig2_convergence",
+        "Paper Fig 2: LL per iteration (a) and per elapsed time (b); \
+         MP should reach the threshold in fewer iterations and less time.",
+    );
+    let full = std::env::var("MPLDA_BENCH_FULL").is_ok();
+    let opts = if full {
+        fig2::Opts {
+            topics: vec![1000, 5000],
+            iterations: 30,
+            workers: 10,
+            out_dir: Some("out".into()),
+        }
+    } else {
+        fig2::Opts::default()
+    };
+    match fig2::run(&opts) {
+        Ok(report) => println!("{report}"),
+        Err(e) => {
+            eprintln!("bench failed: {e:#}");
+            std::process::exit(1);
+        }
+    }
+}

@@ -1,0 +1,54 @@
+//! Bench E3 — regenerates Figure 3: the Δ_{r,i} parallelization-error
+//! series (lazy C_k sync). Also runs the ck_sync ablation the paper's §3.3
+//! argument rests on.
+//!
+//! `cargo bench --bench fig3_delta`
+
+use mplda::config::CkSyncPolicy;
+use mplda::coordinator::Driver;
+use mplda::eval::common::base_config;
+use mplda::eval::fig3;
+use mplda::util::bench::{banner, Table};
+
+fn main() {
+    mplda::util::logger::init();
+    banner(
+        "fig3_delta",
+        "Paper Fig 3: Δ_r,i ∈ [0,2] per round — 'almost 0 everywhere'. \
+         Plus the C_k sync-policy ablation.",
+    );
+    match fig3::run(&fig3::Opts::default()) {
+        Ok(report) => println!("{report}"),
+        Err(e) => {
+            eprintln!("bench failed: {e:#}");
+            std::process::exit(1);
+        }
+    }
+
+    // Ablation: how much staleness does each C_k policy leave?
+    println!("\n-- ablation: C_k sync policy (pubmed-sim, K=200, M=8) --");
+    let mut table = Table::new(&["policy", "mean Δ", "max Δ", "final LL", "totals traffic"]);
+    for policy in [CkSyncPolicy::PerRound, CkSyncPolicy::PerIteration, CkSyncPolicy::PerMicrobatch]
+    {
+        let mut cfg = base_config("pubmed-sim", "high-end").unwrap();
+        cfg.cluster.machines = 8;
+        cfg.coord.workers = 8;
+        cfg.coord.blocks = 0;
+        cfg.coord.ck_sync = policy;
+        cfg.train.topics = 200;
+        cfg.train.iterations = 6;
+        cfg.finalize().unwrap();
+        let mut d = Driver::new(&cfg).unwrap();
+        let report = d.run(6, |_, _| {}).unwrap();
+        table.row(&[
+            policy.name().to_string(),
+            format!("{:.3e}", d.deltas.mean_delta()),
+            format!("{:.3e}", d.deltas.max_delta()),
+            format!("{:.1}", report.final_loglik),
+            mplda::util::fmt::bytes(
+                d.kv().meter().bytes_of(mplda::kvstore::traffic::TransferKind::TotalsRead),
+            ),
+        ]);
+    }
+    println!("{}", table.render());
+}

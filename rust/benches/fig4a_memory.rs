@@ -1,0 +1,23 @@
+//! Bench E5 — regenerates Figure 4(a): per-machine peak memory vs number
+//! of machines; MP ~1/M, YLDA ~flat.
+//!
+//! `cargo bench --bench fig4a_memory`
+
+use mplda::eval::fig4a;
+use mplda::util::bench::banner;
+
+fn main() {
+    mplda::util::logger::init();
+    banner(
+        "fig4a_memory",
+        "Paper Fig 4(a): MP memory follows 1/M (model+data partitioned); \
+         YLDA stays flat (full replica per machine).",
+    );
+    match fig4a::run(&fig4a::Opts::default()) {
+        Ok(report) => println!("{report}"),
+        Err(e) => {
+            eprintln!("bench failed: {e:#}");
+            std::process::exit(1);
+        }
+    }
+}

@@ -1,0 +1,23 @@
+//! Bench E6 — regenerates Figure 4(b): convergence speedup vs machines on
+//! the 1 Gbps low-end network; MP near-ideal, YLDA degrades past ~16–32.
+//!
+//! `cargo bench --bench fig4b_speedup`
+
+use mplda::eval::fig4b;
+use mplda::util::bench::banner;
+
+fn main() {
+    mplda::util::logger::init();
+    banner(
+        "fig4b_speedup",
+        "Paper Fig 4(b): time-to-LL speedup vs machines at 1 Gbps; YLDA's \
+         O(M²)-ish sync traffic congests, MP's rotation stays balanced.",
+    );
+    match fig4b::run(&fig4b::Opts::default()) {
+        Ok(report) => println!("{report}"),
+        Err(e) => {
+            eprintln!("bench failed: {e:#}");
+            std::process::exit(1);
+        }
+    }
+}

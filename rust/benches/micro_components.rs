@@ -1,0 +1,158 @@
+//! Micro-benchmarks of the coordination substrates: KV-store lease/commit,
+//! wire codec, rotation scheduling, network model, Δ metric, log-likelihood
+//! pass, and the PJRT executor's per-call overhead.
+//!
+//! These bound the non-sampling cost of a round — the paper's design
+//! argument is that coordination is cheap next to sampling; this bench
+//! quantifies it. `cargo bench --bench micro_components`
+
+use mplda::cluster::{ClusterSpec, Flow, NetworkModel};
+use mplda::config::Config;
+use mplda::corpus::synthetic::{generate, GenSpec};
+use mplda::kvstore::{KvStore, ShardMap};
+use mplda::metrics::{joint_log_likelihood, DeltaTracker};
+use mplda::model::{wire, Assignments, BlockMap, TopicCounts};
+use mplda::util::bench::{banner, black_box, fmt_secs, Bencher, Table};
+use mplda::util::rng::Pcg64;
+
+fn main() {
+    mplda::util::logger::init();
+    banner("micro_components", "per-operation cost of every coordination substrate");
+    let bench = Bencher::default();
+    let mut table = Table::new(&["component", "op", "median", "notes"]);
+
+    // Fixture: pubmed-sim-ish state.
+    let corpus = generate(&GenSpec {
+        vocab: 8_000,
+        docs: 2_000,
+        avg_doc_len: 90,
+        zipf_s: 1.07,
+        topics: 50,
+        alpha: 0.1,
+        seed: 2,
+    });
+    let k = 500;
+    let mut rng = Pcg64::new(3);
+    let assign = Assignments::random(&corpus, k, &mut rng);
+    let (dt, wt, ck) = assign.build_counts(&corpus);
+    let map = BlockMap::balanced(&corpus.word_frequencies(), 16);
+    let blocks = Assignments::build_blocks(&wt, &map);
+
+    // wire codec.
+    let big = blocks.iter().max_by_key(|b| b.nnz()).unwrap().clone();
+    let enc = wire::encode_block(&big);
+    let stats = bench.run(|| wire::encode_block(&big));
+    table.row(&[
+        "wire".into(),
+        format!("encode block ({} nnz)", big.nnz()),
+        fmt_secs(stats.median()),
+        format!("{} on the wire", mplda::util::fmt::bytes(enc.len() as u64)),
+    ]);
+    let stats = bench.run(|| wire::decode_block(&enc).unwrap());
+    table.row(&["wire".into(), "decode block".into(), fmt_secs(stats.median()), String::new()]);
+
+    // kv-store round: lease+commit all 16 blocks.
+    let cfg = Config::from_str("[cluster]\npreset = \"custom\"\nmachines = 16").unwrap();
+    let spec = ClusterSpec::from_config(&cfg.cluster);
+    let stats = bench.run(|| {
+        let mut kv = KvStore::new(
+            blocks.clone(),
+            ck.clone(),
+            ShardMap::round_robin(16, &spec),
+        );
+        for b in 0..16u32 {
+            let blk = kv.lease_block(b, b as usize % 16).unwrap();
+            kv.commit_block(blk, b as usize % 16).unwrap();
+        }
+        kv
+    });
+    table.row(&[
+        "kvstore".into(),
+        "16 lease+commit cycles".into(),
+        fmt_secs(stats.median()),
+        "includes wire-size metering".into(),
+    ]);
+
+    // network phase evaluation at M=128.
+    let lowend = Config::from_str("[cluster]\npreset = \"low-end\"").unwrap();
+    let net = NetworkModel::new(&ClusterSpec::from_config(&lowend.cluster));
+    let flows: Vec<Flow> = (0..128)
+        .map(|i| Flow { src: i, dst: (i + 1) % 128, bytes: 1 << 20 })
+        .collect();
+    let stats = bench.run(|| net.phase_time(black_box(&flows)));
+    table.row(&[
+        "network".into(),
+        "phase_time, 128 flows".into(),
+        fmt_secs(stats.median()),
+        String::new(),
+    ]);
+
+    // Δ metric.
+    let snaps: Vec<TopicCounts> = (0..64).map(|_| ck.clone()).collect();
+    let stats = bench.run(|| {
+        let mut t = DeltaTracker::new();
+        t.record_round(0, 0, 64, &ck, black_box(&snaps))
+    });
+    table.row(&[
+        "metrics".into(),
+        "Δ over 64 workers (K=500)".into(),
+        fmt_secs(stats.median()),
+        String::new(),
+    ]);
+
+    // log-likelihood pass.
+    let stats = bench.run(|| joint_log_likelihood(&dt, &wt, &ck, 0.1, 0.01));
+    table.row(&[
+        "metrics".into(),
+        format!("joint LL ({} tokens)", corpus.num_tokens()),
+        fmt_secs(stats.median()),
+        String::new(),
+    ]);
+
+    // PJRT executor per-call overhead (if artifacts are built).
+    if std::path::Path::new("artifacts/manifest.txt").exists() {
+        use mplda::sampler::xla_dense::MicrobatchExecutor;
+        let params = mplda::sampler::Params::new(16, 1000, 0.1, 0.01);
+        let mut exec =
+            mplda::runtime::XlaExecutor::from_dir("artifacts", &params, 256).unwrap();
+        let (b, kk) = (exec.batch_size(), exec.num_topics());
+        let ct = vec![0.0f32; b * kk];
+        let cd = vec![0.0f32; b * kk];
+        let ckv = vec![10.0f32; kk];
+        let u = vec![0.5f32; b];
+        let stats = bench.run(|| exec.execute(&ct, &cd, &ckv, &u).unwrap());
+        table.row(&[
+            "runtime".into(),
+            format!("PJRT gibbs call (B={b}, K={kk})"),
+            fmt_secs(stats.median()),
+            format!("{} per token", fmt_secs(stats.median() / b as f64)),
+        ]);
+    } else {
+        table.row(&[
+            "runtime".into(),
+            "PJRT gibbs call".into(),
+            "skipped".into(),
+            "run `make artifacts`".into(),
+        ]);
+    }
+
+    // Rotation schedule (should be ~free).
+    let sched = mplda::coordinator::RotationSchedule::new(128, 128);
+    let stats = bench.run(|| {
+        let mut acc = 0u32;
+        for r in 0..128 {
+            for w in 0..128 {
+                acc = acc.wrapping_add(sched.block_for(w, r));
+            }
+        }
+        acc
+    });
+    table.row(&[
+        "scheduler".into(),
+        "full 128×128 iteration".into(),
+        fmt_secs(stats.median()),
+        String::new(),
+    ]);
+
+    println!("{}", table.render());
+}

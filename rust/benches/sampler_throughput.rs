@@ -1,0 +1,147 @@
+//! Bench E7 — sampler token throughput per backend.
+//!
+//! The paper cites ~20K tokens/s/core for Yahoo!LDA and PLDA+ (§5) and
+//! claims "similar sampling throughput" for its own sampler; this bench
+//! reports tokens/s for every backend in the repo on the pubmed-sim
+//! profile at two K regimes.
+//!
+//! `cargo bench --bench sampler_throughput`
+
+use mplda::corpus::synthetic::{generate, GenSpec};
+use mplda::corpus::InvertedIndex;
+use mplda::model::{Assignments, BlockMap};
+use mplda::sampler::sparse_yao::SparseYao;
+use mplda::sampler::xla_dense::{sample_block_microbatch, RustRefExecutor};
+use mplda::sampler::{dense, inverted_xy, Params, Scratch};
+use mplda::util::bench::{banner, fmt_rate, Table};
+use mplda::util::rng::Pcg64;
+
+fn main() {
+    mplda::util::logger::init();
+    banner(
+        "sampler_throughput",
+        "tokens/s per backend (paper reference: ~20K tok/s/core for YLDA & PLDA+; \
+         dense is the O(K) oracle, not a contender at large K).",
+    );
+    let full = std::env::var("MPLDA_BENCH_FULL").is_ok();
+    let ks: Vec<usize> = if full { vec![100, 1000, 5000] } else { vec![100, 1000] };
+    let mut table = Table::new(&["K", "backend", "tokens/s", "vs 20K/core"]);
+
+    for &k in &ks {
+        let corpus = generate(&GenSpec {
+            vocab: 8_000,
+            docs: 2_000,
+            avg_doc_len: 90,
+            zipf_s: 1.07,
+            topics: 50,
+            alpha: 0.1,
+            seed: 42,
+        });
+        let mut rng = Pcg64::new(7);
+        let assign0 = Assignments::random(&corpus, k, &mut rng);
+        let tokens = corpus.num_tokens() as f64;
+
+        // dense O(K) — skip at large K unless full (too slow to be useful).
+        if k <= 100 || full {
+            let (mut assign, mut dt, mut wt, mut ck) = {
+                let a = assign0.clone();
+                let (dt, wt, ck) = a.build_counts(&corpus);
+                (a, dt, wt, ck)
+            };
+            let params = Params::new(k, corpus.num_words(), 0.1, 0.01);
+            let mut scratch = Scratch::new(k);
+            let mut rng = Pcg64::new(1);
+            let t0 = std::time::Instant::now();
+            dense::sweep(&corpus, &mut assign, &mut dt, &mut wt, &mut ck, &params, &mut scratch, &mut rng);
+            let rate = tokens / t0.elapsed().as_secs_f64();
+            table.row(&[k.to_string(), "dense (oracle)".into(), fmt_rate(rate, "tok"), ratio(rate)]);
+        }
+
+        // sparse-yao (eq. 2).
+        {
+            let mut assign = assign0.clone();
+            let (mut dt, mut wt, mut ck) = assign.build_counts(&corpus);
+            let params = Params::new(k, corpus.num_words(), 0.1, 0.01);
+            let mut yao = SparseYao::new(params, &ck);
+            let mut scratch = Scratch::new(k);
+            let mut rng = Pcg64::new(1);
+            // Warm one sweep, then measure.
+            yao.sweep(&corpus, &mut assign, &mut dt, &mut wt, &mut ck, &mut scratch, &mut rng);
+            let t0 = std::time::Instant::now();
+            yao.sweep(&corpus, &mut assign, &mut dt, &mut wt, &mut ck, &mut scratch, &mut rng);
+            let rate = tokens / t0.elapsed().as_secs_f64();
+            table.row(&[k.to_string(), "sparse-yao (eq2)".into(), fmt_rate(rate, "tok"), ratio(rate)]);
+        }
+
+        // inverted-xy (eq. 3) — the paper's sampler.
+        {
+            let mut assign = assign0.clone();
+            let (mut dt, wt, mut ck) = assign.build_counts(&corpus);
+            let map = BlockMap::balanced(&corpus.word_frequencies(), 8);
+            let mut blocks = Assignments::build_blocks(&wt, &map);
+            let all: Vec<u32> = (0..corpus.num_docs() as u32).collect();
+            let index = InvertedIndex::build(&corpus, &all);
+            let params = Params::new(k, corpus.num_words(), 0.1, 0.01);
+            let mut scratch = Scratch::new(k);
+            let mut rng = Pcg64::new(1);
+            let sweep = |blocks: &mut Vec<mplda::model::ModelBlock>,
+                         assign: &mut Assignments,
+                         dt: &mut mplda::model::DocTopic,
+                         ck: &mut mplda::model::TopicCounts,
+                         scratch: &mut Scratch,
+                         rng: &mut Pcg64| {
+                for b in blocks.iter_mut() {
+                    inverted_xy::sample_block(
+                        &corpus, &mut assign.z, &index, b, dt, ck, &params, scratch, rng,
+                    );
+                }
+            };
+            sweep(&mut blocks, &mut assign, &mut dt, &mut ck, &mut scratch, &mut rng);
+            let t0 = std::time::Instant::now();
+            sweep(&mut blocks, &mut assign, &mut dt, &mut ck, &mut scratch, &mut rng);
+            let rate = tokens / t0.elapsed().as_secs_f64();
+            table.row(&[
+                k.to_string(),
+                "inverted-xy (eq3)".into(),
+                fmt_rate(rate, "tok"),
+                ratio(rate),
+            ]);
+        }
+
+        // xla microbatch semantics (rust-ref executor; PJRT adds transport
+        // cost measured in micro_components).
+        if k <= 1000 {
+            let mut assign = assign0.clone();
+            let (mut dt, wt, mut ck) = assign.build_counts(&corpus);
+            let map = BlockMap::balanced(&corpus.word_frequencies(), 8);
+            let mut blocks = Assignments::build_blocks(&wt, &map);
+            let all: Vec<u32> = (0..corpus.num_docs() as u32).collect();
+            let index = InvertedIndex::build(&corpus, &all);
+            let params = Params::new(k, corpus.num_words(), 0.1, 0.01);
+            let mut exec = RustRefExecutor::new(256, k, &params);
+            let mut rng = Pcg64::new(1);
+            let t0 = std::time::Instant::now();
+            for b in blocks.iter_mut() {
+                sample_block_microbatch(
+                    &corpus, &mut assign.z, &index, b, &mut dt, &mut ck, &params, &mut exec,
+                    &mut rng,
+                )
+                .unwrap();
+            }
+            let rate = tokens / t0.elapsed().as_secs_f64();
+            table.row(&[
+                k.to_string(),
+                "microbatch (xla sem.)".into(),
+                fmt_rate(rate, "tok"),
+                ratio(rate),
+            ]);
+        }
+    }
+    println!("{}", table.render());
+    println!("note: single host core; the paper normalizes per core, so the");
+    println!("      'vs 20K/core' column is directly comparable to its §5 claim.");
+}
+
+fn ratio(rate: f64) -> String {
+    format!("{:.1}×", rate / 20_000.0)
+}

@@ -1,0 +1,39 @@
+//! Bench E4 — regenerates Table 1: time-to-converge across model sizes on
+//! 64 low-end machines, with the baseline's OOM cells.
+//!
+//! `cargo bench --bench table1_modelsize`
+//! Env: MPLDA_BENCH_FULL=1 for the larger K grid.
+
+use mplda::eval::table1;
+use mplda::util::bench::banner;
+
+fn main() {
+    mplda::util::logger::init();
+    banner(
+        "table1_modelsize",
+        "Paper Table 1: {wiki-uni, wiki-bi} × K grid; MP completes all cells, \
+         YLDA goes N/A where the replica exceeds the (scaled) node RAM.",
+    );
+    let full = std::env::var("MPLDA_BENCH_FULL").is_ok();
+    let opts = if full {
+        table1::Opts {
+            grid: vec![
+                ("wiki-uni-sim".into(), 1000),
+                ("wiki-uni-sim".into(), 2000),
+                ("wiki-bi-sim".into(), 1000),
+                ("wiki-bi-sim".into(), 2000),
+            ],
+            iterations: 15,
+            ..Default::default()
+        }
+    } else {
+        table1::Opts::default()
+    };
+    match table1::run(&opts) {
+        Ok(report) => println!("{report}"),
+        Err(e) => {
+            eprintln!("bench failed: {e:#}");
+            std::process::exit(1);
+        }
+    }
+}

@@ -1,0 +1,14 @@
+//! The data-parallel comparator: a reimplementation of the Yahoo!LDA
+//! strategy (Ahmed et al., WSDM'13 — the paper's baseline [1]).
+//!
+//! Each worker keeps a **full local replica** of the word–topic rows its
+//! shard touches, samples with SparseLDA (eq. 2), and exchanges state with
+//! a parameter server through **periodic background synchronization**:
+//! push the accumulated update log, pull fresh rows. Consistency is
+//! best-effort — exactly the staleness-vs-bandwidth failure mode the paper
+//! measures against (Figs 2 and 4b).
+
+pub mod yahoo;
+pub mod syncer;
+
+pub use yahoo::{YahooLda, YahooReport};

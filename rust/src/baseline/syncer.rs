@@ -1,0 +1,98 @@
+//! Background-synchronization model for the data-parallel baseline.
+//!
+//! Yahoo!LDA's sync thread cycles over the local model "hoping the
+//! inconsistency does not affect the algorithm by much" (§3). We model its
+//! two observable effects:
+//!
+//! * **time** — sync traffic overlaps compute (`max(t_compute, t_sync)` per
+//!   period), so a saturated network stretches wall-clock;
+//! * **staleness** — when a sync pass takes longer than the compute period
+//!   it hides behind, pulls land *late*: workers keep sampling on old
+//!   replicas. [`StalenessGovernor`] turns the measured `t_sync/t_compute`
+//!   ratio into a deterministic skip schedule — with `lag = 3`, only every
+//!   3rd period's pull is applied, which is precisely "the algorithm
+//!   proceeds without noticing the slow synchronization in the background".
+
+/// Decides which sync periods actually apply their pulls.
+#[derive(Debug, Clone, Default)]
+pub struct StalenessGovernor {
+    /// Completed fraction of the in-flight sync pass.
+    progress: f64,
+    /// Periods skipped so far (reporting).
+    pub skipped: u64,
+    /// Periods applied so far.
+    pub applied: u64,
+}
+
+impl StalenessGovernor {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Report a period's measured times; returns whether the pull is
+    /// applied this period. Per compute period the background thread
+    /// completes `t_compute/t_sync` of a full sync pass; a pull lands when
+    /// a pass completes.
+    pub fn on_period(&mut self, t_compute: f64, t_sync: f64) -> bool {
+        let capacity = if t_sync > 0.0 { (t_compute / t_sync).min(1.0) } else { 1.0 };
+        self.progress += capacity;
+        if self.progress >= 1.0 {
+            self.progress -= 1.0;
+            self.applied += 1;
+            true
+        } else {
+            self.skipped += 1;
+            false
+        }
+    }
+
+    /// Fraction of periods whose pulls were skipped.
+    pub fn skip_rate(&self) -> f64 {
+        let total = self.skipped + self.applied;
+        if total == 0 {
+            0.0
+        } else {
+            self.skipped as f64 / total as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fast_network_never_skips() {
+        let mut g = StalenessGovernor::new();
+        for _ in 0..100 {
+            assert!(g.on_period(1.0, 0.2));
+        }
+        assert_eq!(g.skipped, 0);
+    }
+
+    #[test]
+    fn saturated_network_skips_proportionally() {
+        // t_sync = 3 × t_compute → ~2 of every 3 pulls skipped.
+        let mut g = StalenessGovernor::new();
+        for _ in 0..300 {
+            g.on_period(1.0, 3.0);
+        }
+        let rate = g.skip_rate();
+        assert!((rate - 2.0 / 3.0).abs() < 0.05, "rate={rate}");
+    }
+
+    #[test]
+    fn borderline_network_rarely_skips() {
+        let mut g = StalenessGovernor::new();
+        for _ in 0..100 {
+            g.on_period(1.0, 1.05);
+        }
+        assert!(g.skip_rate() < 0.1);
+    }
+
+    #[test]
+    fn zero_compute_means_infinite_lag() {
+        let mut g = StalenessGovernor::new();
+        assert!(!g.on_period(0.0, 1.0));
+    }
+}

@@ -1,0 +1,512 @@
+//! Yahoo!LDA-style data-parallel trainer.
+//!
+//! Layout: documents are sharded across workers (same partitioner as the
+//! model-parallel driver); each worker holds a **replica** of every
+//! word–topic row its shard touches plus a local `C_k`. A parameter server
+//! (the first `baseline.server_shards` machines) holds the authoritative
+//! table. Workers sample with SparseLDA (eq. 2) on their replicas and, every
+//! `baseline.sync_period_tokens` sampled tokens, run a sync period:
+//!
+//! 1. **push** the accumulated `(word, old, new)` move log to the server,
+//! 2. **pull** fresh copies of all shard-resident rows + `C_k` — but only
+//!    if the network kept up ([`super::syncer::StalenessGovernor`]).
+//!
+//! The aggregate sync traffic per period is `O(M × replica)` through a few
+//! server NICs — the `O(M²)`-flavored congestion of §5.3 — while the
+//! per-iteration convergence penalty comes from sampling against replicas
+//! that are one-or-more periods stale.
+
+use anyhow::{Context, Result};
+
+use crate::cluster::simclock::barrier;
+use crate::cluster::{ClusterSpec, MemCategory, MemoryAccountant, NetworkModel, SimClock};
+use crate::config::Config;
+use crate::corpus::{self, Corpus, DataPartition};
+use crate::kvstore::traffic::{TrafficMeter, TransferKind};
+use crate::metrics::joint_log_likelihood;
+use crate::model::{Assignments, DocTopic, TopicCounts, WordTopicTable};
+use crate::sampler::sparse_yao::SparseYao;
+use crate::sampler::{Params, Scratch};
+use crate::util::rng::Pcg64;
+
+use super::syncer::StalenessGovernor;
+
+/// One worker's private state.
+struct YWorker {
+    /// Worker id (diagnostics; the driver addresses workers by index).
+    #[allow(dead_code)]
+    id: usize,
+    machine: usize,
+    docs: Vec<u32>,
+    /// Distinct words in the shard (what the replica stores — Yahoo!LDA
+    /// "only stores keys that appear in the local subset", §5.2).
+    shard_words: Vec<u32>,
+    /// Replica rows (full-V vector; only shard words populated).
+    wt: WordTopicTable,
+    ck: TopicCounts,
+    /// Update log since last push: (word, old_topic, new_topic).
+    move_log: Vec<(u32, u32, u32)>,
+    rng: Pcg64,
+    scratch: Scratch,
+    governor: StalenessGovernor,
+    /// Sweep cursor: next doc index (into `docs`) this iteration.
+    cursor: usize,
+}
+
+/// Per-iteration report entry.
+#[derive(Debug, Clone)]
+pub struct YahooIterStats {
+    pub iteration: usize,
+    pub sim_time: f64,
+    pub tokens: u64,
+    pub comm_bytes: u64,
+    pub skip_rate: f64,
+    pub host_compute_secs: f64,
+}
+
+/// Full baseline training report (mirrors [`crate::coordinator::TrainReport`]).
+#[derive(Debug, Clone, Default)]
+pub struct YahooReport {
+    pub ll_series: Vec<(usize, f64, f64)>,
+    pub iters: Vec<YahooIterStats>,
+    pub final_loglik: f64,
+    pub peak_mem_bytes: u64,
+    pub total_comm_bytes: u64,
+    pub total_tokens: u64,
+    pub sim_time: f64,
+}
+
+/// The baseline trainer.
+pub struct YahooLda {
+    pub cfg: Config,
+    pub corpus: Corpus,
+    pub params: Params,
+    assign: Assignments,
+    dt: DocTopic,
+    /// Authoritative parameter-server state.
+    ps_wt: WordTopicTable,
+    ps_ck: TopicCounts,
+    workers: Vec<YWorker>,
+    spec: ClusterSpec,
+    net: NetworkModel,
+    clocks: Vec<SimClock>,
+    pub mem: MemoryAccountant,
+    meter: TrafficMeter,
+    iteration: usize,
+}
+
+impl YahooLda {
+    pub fn new(cfg: &Config) -> Result<YahooLda> {
+        let corpus = corpus::build(&cfg.corpus)?;
+        Self::with_corpus(cfg, corpus)
+    }
+
+    pub fn with_corpus(cfg: &Config, corpus: Corpus) -> Result<YahooLda> {
+        let mut cfg = cfg.clone();
+        cfg.finalize()?;
+        let k = cfg.train.topics;
+        let params = Params::new(k, corpus.num_words(), cfg.train.alpha, cfg.train.beta);
+
+        let mut rng = Pcg64::with_stream(cfg.train.seed, 0xd217); // same init as MP driver
+        let assign = Assignments::random(&corpus, k, &mut rng);
+        let (dt, ps_wt, ps_ck) = assign.build_counts(&corpus);
+
+        let spec = ClusterSpec::from_config(&cfg.cluster);
+        let part = DataPartition::balanced(&corpus, cfg.coord.workers);
+        let mut mem =
+            MemoryAccountant::new(spec.machines, spec.node.ram_bytes, cfg.cluster.enforce_ram);
+
+        let mut workers = Vec::with_capacity(cfg.coord.workers);
+        for w in 0..cfg.coord.workers {
+            let docs = part.shards[w].clone();
+            // Shard vocabulary + replica rows.
+            let mut present = vec![false; corpus.num_words()];
+            for &d in &docs {
+                for &t in &corpus.docs[d as usize].tokens {
+                    present[t as usize] = true;
+                }
+            }
+            let shard_words: Vec<u32> = present
+                .iter()
+                .enumerate()
+                .filter(|&(_, &p)| p)
+                .map(|(t, _)| t as u32)
+                .collect();
+            let mut wt = WordTopicTable::zeros(corpus.num_words(), k);
+            for &t in &shard_words {
+                *wt.row_mut(t as usize) = ps_wt.row(t as usize).clone();
+            }
+            let machine = spec.worker_home(w);
+            let ws = YWorker {
+                id: w,
+                machine,
+                docs,
+                shard_words,
+                wt,
+                ck: ps_ck.clone(),
+                move_log: Vec::new(),
+                rng: Pcg64::with_stream(cfg.train.seed, w as u64 + 1),
+                scratch: Scratch::new(k),
+                governor: StalenessGovernor::new(),
+                cursor: 0,
+            };
+            // Memory: data + replica + dt. The replica is the whole point
+            // of Fig 4a: it does NOT shrink as machines are added.
+            let tokens: u64 =
+                ws.docs.iter().map(|&d| corpus.docs[d as usize].len() as u64).sum();
+            mem.charge(machine, MemCategory::Data, tokens * 8)
+                .context("baseline worker data")?;
+            mem.charge(machine, MemCategory::Model, ws.wt.bytes() + k as u64 * 8)?;
+            let dt_bytes: u64 = ws.docs.iter().map(|&d| dt.doc(d as usize).bytes()).sum();
+            mem.charge(machine, MemCategory::DocTopic, dt_bytes)?;
+            workers.push(ws);
+        }
+        // Server holds the authoritative table on the PS machines.
+        let shards = cfg.baseline.server_shards.max(1).min(spec.machines);
+        for s in 0..shards {
+            mem.charge(s, MemCategory::KvShard, ps_wt.bytes() / shards as u64)?;
+        }
+
+        let net = NetworkModel::new(&spec);
+        let clocks = vec![SimClock::new(spec.node.cores, spec.node.speed); cfg.coord.workers];
+        Ok(YahooLda {
+            cfg,
+            corpus,
+            params,
+            assign,
+            dt,
+            ps_wt,
+            ps_ck,
+            workers,
+            spec,
+            net,
+            clocks,
+            mem,
+            meter: TrafficMeter::new(),
+            iteration: 0,
+        })
+    }
+
+    pub fn sim_time(&self) -> f64 {
+        self.clocks.iter().map(|c| c.now()).fold(0.0, f64::max)
+    }
+
+    /// Authoritative-state log-likelihood. Callers should [`Self::flush`]
+    /// first for an exact value.
+    pub fn loglik(&self) -> f64 {
+        joint_log_likelihood(&self.dt, &self.ps_wt, &self.ps_ck, self.params.alpha, self.params.beta)
+    }
+
+    /// Push all outstanding worker logs to the server (no pulls, no time
+    /// charged — bookkeeping for exact evaluation points).
+    pub fn flush(&mut self) {
+        for w in 0..self.workers.len() {
+            self.apply_push(w);
+        }
+    }
+
+    fn apply_push(&mut self, w: usize) -> u64 {
+        let log = std::mem::take(&mut self.workers[w].move_log);
+        let bytes = log.len() as u64 * 6; // (word, old, new) varint-packed
+        for (word, old, new) in log {
+            self.ps_wt.row_mut(word as usize).dec(old);
+            self.ps_wt.row_mut(word as usize).inc(new);
+            self.ps_ck.dec(old as usize);
+            self.ps_ck.inc(new as usize);
+        }
+        bytes
+    }
+
+    /// Pull bytes for worker `w`'s replica refresh (rows + totals).
+    fn pull_bytes(&self, w: usize) -> u64 {
+        let nnz: u64 = self.workers[w]
+            .shard_words
+            .iter()
+            .map(|&t| self.ps_wt.row(t as usize).nnz() as u64)
+            .sum();
+        crate::model::wire::block_wire_size_estimate(nnz, self.workers[w].shard_words.len() as u64)
+            + self.params.num_topics as u64 * 4
+    }
+
+    fn apply_pull(&mut self, w: usize) {
+        let words = std::mem::take(&mut self.workers[w].shard_words);
+        for &t in &words {
+            *self.workers[w].wt.row_mut(t as usize) = self.ps_wt.row(t as usize).clone();
+        }
+        self.workers[w].shard_words = words;
+        self.workers[w].ck = self.ps_ck.clone();
+    }
+
+    /// One full iteration (every worker sweeps its shard once), in lockstep
+    /// sync periods of `baseline.sync_period_tokens` tokens per worker.
+    pub fn run_iteration(&mut self) -> Result<YahooIterStats> {
+        let period = self.cfg.baseline.sync_period_tokens.max(1);
+        let server_shards = self.cfg.baseline.server_shards.max(1).min(self.spec.machines);
+        let bytes_before = self.meter.total_bytes();
+        let mut tokens_total = 0u64;
+        let mut host_total = 0.0;
+        for w in &mut self.workers {
+            w.cursor = 0;
+        }
+
+        loop {
+            // ---- compute phase: each worker samples ~period tokens -------
+            let mut any_active = false;
+            let mut phase_host = vec![0.0f64; self.workers.len()];
+            for wi in 0..self.workers.len() {
+                let t0 = crate::util::cputime::CpuTimer::start();
+                let mut tokens_this = 0usize;
+                loop {
+                    let (cursor, done) = {
+                        let w = &self.workers[wi];
+                        (w.cursor, w.cursor >= w.docs.len())
+                    };
+                    if done || tokens_this >= period {
+                        break;
+                    }
+                    let d = self.workers[wi].docs[cursor] as usize;
+                    tokens_this += self.sweep_doc(wi, d)?;
+                    self.workers[wi].cursor += 1;
+                }
+                if tokens_this > 0 {
+                    any_active = true;
+                }
+                tokens_total += tokens_this as u64;
+                phase_host[wi] = t0.elapsed();
+                host_total += phase_host[wi];
+            }
+            if !any_active {
+                break;
+            }
+
+            // ---- sync phase: all workers push+pull through the PS --------
+            let mut flows = Vec::new();
+            let mut pull_bytes = Vec::with_capacity(self.workers.len());
+            for wi in 0..self.workers.len() {
+                let server = wi % server_shards;
+                let push = self.workers[wi].move_log.len() as u64 * 6;
+                let pull = self.pull_bytes(wi);
+                let machine = self.workers[wi].machine;
+                self.meter.record(machine, server, push, TransferKind::PsSync);
+                self.meter.record(server, machine, pull, TransferKind::PsSync);
+                flows.push(crate::cluster::Flow { src: machine, dst: server, bytes: push });
+                flows.push(crate::cluster::Flow { src: server, dst: machine, bytes: pull });
+                pull_bytes.push(pull);
+            }
+            let t_sync = self.net.phase_time(&flows);
+
+            // The background channel carries pushes AND pulls; when a sync
+            // pass takes longer than the compute period it hides behind,
+            // the whole exchange lands late: the worker keeps sampling on
+            // its stale replica and the server keeps missing its updates —
+            // "the algorithm proceeds without noticing the slow
+            // synchronization in the background" (§3).
+            for wi in 0..self.workers.len() {
+                let t_compute = phase_host[wi] / self.clock_div();
+                let apply = self.workers[wi].governor.on_period(t_compute, t_sync);
+                if apply {
+                    self.apply_push(wi);
+                    self.apply_pull(wi);
+                }
+            }
+
+            // ---- clocks: background sync overlaps compute ----------------
+            for wi in 0..self.workers.len() {
+                self.clocks[wi].charge_overlapped(phase_host[wi], t_sync);
+            }
+        }
+        barrier(&mut self.clocks);
+        self.iteration += 1;
+
+        let skip_rate = {
+            let (s, a) = self
+                .workers
+                .iter()
+                .fold((0u64, 0u64), |acc, w| (acc.0 + w.governor.skipped, acc.1 + w.governor.applied));
+            if s + a == 0 {
+                0.0
+            } else {
+                s as f64 / (s + a) as f64
+            }
+        };
+        Ok(YahooIterStats {
+            iteration: self.iteration,
+            sim_time: self.sim_time(),
+            tokens: tokens_total,
+            comm_bytes: self.meter.total_bytes() - bytes_before,
+            skip_rate,
+            host_compute_secs: host_total,
+        })
+    }
+
+    fn clock_div(&self) -> f64 {
+        self.spec.node.cores as f64 * self.spec.node.speed
+    }
+
+    /// Sample one document on worker `wi`'s replica, recording moves.
+    fn sweep_doc(&mut self, wi: usize, d: usize) -> Result<usize> {
+        let w = &mut self.workers[wi];
+        // SparseYao over the worker's replica; move capture via z diff.
+        let before: Vec<u32> = self.assign.z[d].clone();
+        let mut yao = SparseYao::new(self.params, &w.ck);
+        yao.sweep_doc(
+            &self.corpus,
+            &mut self.assign,
+            &mut self.dt,
+            &mut w.wt,
+            &mut w.ck,
+            d,
+            &mut w.scratch,
+            &mut w.rng,
+        );
+        let tokens = self.corpus.docs[d].tokens.len();
+        for (n, (&old, &new)) in before.iter().zip(&self.assign.z[d]).enumerate() {
+            if old != new {
+                w.move_log.push((self.corpus.docs[d].tokens[n], old, new));
+            }
+        }
+        Ok(tokens)
+    }
+
+    /// Run `iterations` sweeps with LL checkpoints (exact: flushes first).
+    pub fn run<F: FnMut(&YahooIterStats, Option<f64>)>(
+        &mut self,
+        iterations: usize,
+        mut on_iter: F,
+    ) -> Result<YahooReport> {
+        let mut report = YahooReport::default();
+        report.ll_series.push((0, 0.0, self.loglik()));
+        for _ in 0..iterations {
+            let stats = self.run_iteration()?;
+            let ll = if self.cfg.train.ll_every > 0
+                && self.iteration % self.cfg.train.ll_every == 0
+            {
+                self.flush();
+                let ll = self.loglik();
+                report.ll_series.push((self.iteration, stats.sim_time, ll));
+                Some(ll)
+            } else {
+                None
+            };
+            on_iter(&stats, ll);
+            report.total_tokens += stats.tokens;
+            report.iters.push(stats);
+        }
+        self.flush();
+        report.final_loglik = self.loglik();
+        report.peak_mem_bytes = self.mem.max_peak();
+        report.total_comm_bytes = self.meter.total_bytes();
+        report.sim_time = self.sim_time();
+        Ok(report)
+    }
+
+    /// Consistency: after a flush, PS state must match Z exactly.
+    pub fn check_consistency(&mut self) -> Result<()> {
+        self.flush();
+        self.assign
+            .check_consistency(&self.corpus, &self.dt, &self.ps_wt, &self.ps_ck)
+            .map_err(|e| anyhow::anyhow!(e))
+    }
+
+    pub fn meter(&self) -> &TrafficMeter {
+        &self.meter
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_cfg_lat(workers: usize, bandwidth_gbps: f64, latency_us: f64) -> Config {
+        Config::from_str(&format!(
+            r#"
+[corpus]
+preset = "tiny"
+seed = 11
+
+[train]
+topics = 16
+sampler = "sparse-yao"
+seed = 7
+
+[coord]
+workers = {workers}
+
+[cluster]
+preset = "custom"
+machines = {workers}
+bandwidth_gbps = {bandwidth_gbps}
+latency_us = {latency_us}
+
+[baseline]
+sync_period_tokens = 4000
+"#
+        ))
+        .unwrap()
+    }
+
+    fn tiny_cfg(workers: usize, bandwidth_gbps: f64) -> Config {
+        tiny_cfg_lat(workers, bandwidth_gbps, 100.0)
+    }
+
+    #[test]
+    fn iteration_samples_every_token_and_stays_consistent() {
+        let mut y = YahooLda::new(&tiny_cfg(4, 10.0)).unwrap();
+        let stats = y.run_iteration().unwrap();
+        assert_eq!(stats.tokens as usize, y.corpus.num_tokens());
+        y.check_consistency().unwrap();
+        assert!(stats.comm_bytes > 0);
+    }
+
+    #[test]
+    fn loglik_rises() {
+        let mut y = YahooLda::new(&tiny_cfg(4, 10.0)).unwrap();
+        let report = y.run(8, |_, _| {}).unwrap();
+        let first = report.ll_series.first().unwrap().2;
+        assert!(report.final_loglik > first + 100.0);
+    }
+
+    #[test]
+    fn low_bandwidth_causes_staleness_skips() {
+        // Absurdly slow network → governor must skip most pulls.
+        let mut cfg = tiny_cfg(8, 0.000001);
+        cfg.baseline.sync_period_tokens = 1000;
+        let mut y = YahooLda::new(&cfg).unwrap();
+        let stats = y.run_iteration().unwrap();
+        assert!(stats.skip_rate > 0.4, "skip_rate={}", stats.skip_rate);
+
+        // Effectively instantaneous network (zero latency matters too: on a
+        // tiny corpus the compute phases are microseconds) → fewer skips.
+        let mut fast = YahooLda::new(&tiny_cfg_lat(8, 100000.0, 0.0)).unwrap();
+        let fstats = fast.run_iteration().unwrap();
+        assert!(
+            fstats.skip_rate < stats.skip_rate,
+            "fast={} slow={}",
+            fstats.skip_rate,
+            stats.skip_rate
+        );
+    }
+
+    #[test]
+    fn sim_time_grows_with_lower_bandwidth() {
+        let t = |gbps: f64| {
+            let mut y = YahooLda::new(&tiny_cfg(4, gbps)).unwrap();
+            y.run(2, |_, _| {}).unwrap().sim_time
+        };
+        let fast = t(100.0);
+        let slow = t(0.01);
+        assert!(slow > fast * 1.5, "fast={fast} slow={slow}");
+    }
+
+    #[test]
+    fn replica_memory_does_not_shrink_with_more_machines() {
+        // Fig 4a's flat line: per-machine replica stays ~constant.
+        let peak = |workers: usize| {
+            let y = YahooLda::new(&tiny_cfg(workers, 10.0)).unwrap();
+            y.mem.max_peak()
+        };
+        let p2 = peak(2) as f64;
+        let p8 = peak(8) as f64;
+        assert!(p8 > p2 * 0.5, "p2={p2} p8={p8} — replica should not scale 1/M");
+    }
+}

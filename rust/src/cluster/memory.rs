@@ -1,0 +1,164 @@
+//! Per-node memory accounting (Fig 4a, Table 1's OOM row).
+//!
+//! Every data structure a node holds registers its bytes under a category;
+//! the accountant tracks current and **peak** usage per node and can
+//! enforce the node RAM capacity — exceeding it is exactly how the
+//! Yahoo!LDA baseline reproduces the paper's `N/A` cells in Table 1
+//! ("local copy of the model no longer fits into the memory").
+
+use anyhow::{bail, Result};
+
+/// What the bytes are for (reported in Fig 4a breakdowns).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum MemCategory {
+    /// Token streams + assignments of the worker's document shard.
+    Data,
+    /// Inverted index over the shard.
+    Index,
+    /// Doc–topic counts for the shard.
+    DocTopic,
+    /// Word–topic model state held right now (blocks or full replica).
+    Model,
+    /// KV-store shard hosted on this node.
+    KvShard,
+    /// Topic totals, buffers, misc.
+    Other,
+}
+
+const NUM_CATEGORIES: usize = 6;
+
+fn cat_idx(c: MemCategory) -> usize {
+    match c {
+        MemCategory::Data => 0,
+        MemCategory::Index => 1,
+        MemCategory::DocTopic => 2,
+        MemCategory::Model => 3,
+        MemCategory::KvShard => 4,
+        MemCategory::Other => 5,
+    }
+}
+
+/// Tracks current + peak bytes per node and category.
+#[derive(Debug, Clone)]
+pub struct MemoryAccountant {
+    capacity: u64,
+    current: Vec<[u64; NUM_CATEGORIES]>,
+    peak: Vec<u64>,
+    enforce: bool,
+}
+
+impl MemoryAccountant {
+    pub fn new(machines: usize, capacity_bytes: u64, enforce: bool) -> MemoryAccountant {
+        MemoryAccountant {
+            capacity: capacity_bytes,
+            current: vec![[0; NUM_CATEGORIES]; machines],
+            peak: vec![0; machines],
+            enforce,
+        }
+    }
+
+    /// Add bytes; errors if enforcement is on and the node exceeds RAM.
+    pub fn charge(&mut self, node: usize, cat: MemCategory, bytes: u64) -> Result<()> {
+        self.current[node][cat_idx(cat)] += bytes;
+        let total = self.node_total(node);
+        if total > self.peak[node] {
+            self.peak[node] = total;
+        }
+        if self.enforce && total > self.capacity {
+            bail!(
+                "node {node} out of memory: {} used > {} capacity ({:?} grew by {})",
+                crate::util::fmt::bytes(total),
+                crate::util::fmt::bytes(self.capacity),
+                cat,
+                crate::util::fmt::bytes(bytes),
+            );
+        }
+        Ok(())
+    }
+
+    /// Release bytes (saturating — releasing more than charged clamps to 0).
+    pub fn release(&mut self, node: usize, cat: MemCategory, bytes: u64) {
+        let slot = &mut self.current[node][cat_idx(cat)];
+        *slot = slot.saturating_sub(bytes);
+    }
+
+    /// Replace a category's current value (for "re-measure" style updates).
+    pub fn set(&mut self, node: usize, cat: MemCategory, bytes: u64) -> Result<()> {
+        self.current[node][cat_idx(cat)] = 0;
+        self.charge(node, cat, bytes)
+    }
+
+    pub fn node_total(&self, node: usize) -> u64 {
+        self.current[node].iter().sum()
+    }
+
+    pub fn node_peak(&self, node: usize) -> u64 {
+        self.peak[node]
+    }
+
+    /// Max peak across nodes — the "memory per machine" y-axis of Fig 4a.
+    pub fn max_peak(&self) -> u64 {
+        self.peak.iter().copied().max().unwrap_or(0)
+    }
+
+    /// Mean peak across nodes.
+    pub fn mean_peak(&self) -> f64 {
+        if self.peak.is_empty() {
+            return 0.0;
+        }
+        self.peak.iter().sum::<u64>() as f64 / self.peak.len() as f64
+    }
+
+    pub fn category(&self, node: usize, cat: MemCategory) -> u64 {
+        self.current[node][cat_idx(cat)]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn charge_release_peak() {
+        let mut m = MemoryAccountant::new(2, 1000, false);
+        m.charge(0, MemCategory::Model, 600).unwrap();
+        m.charge(0, MemCategory::Data, 300).unwrap();
+        assert_eq!(m.node_total(0), 900);
+        m.release(0, MemCategory::Model, 600);
+        assert_eq!(m.node_total(0), 300);
+        assert_eq!(m.node_peak(0), 900); // peak remembered
+        assert_eq!(m.node_peak(1), 0);
+        assert_eq!(m.max_peak(), 900);
+    }
+
+    #[test]
+    fn enforcement_errors_like_table1() {
+        let mut m = MemoryAccountant::new(1, 1000, true);
+        m.charge(0, MemCategory::Model, 900).unwrap();
+        let err = m.charge(0, MemCategory::Model, 200).unwrap_err().to_string();
+        assert!(err.contains("out of memory"), "{err}");
+    }
+
+    #[test]
+    fn no_enforcement_allows_overcommit() {
+        let mut m = MemoryAccountant::new(1, 10, false);
+        m.charge(0, MemCategory::Model, 1_000_000).unwrap();
+        assert_eq!(m.node_peak(0), 1_000_000);
+    }
+
+    #[test]
+    fn set_replaces() {
+        let mut m = MemoryAccountant::new(1, 1000, false);
+        m.set(0, MemCategory::DocTopic, 100).unwrap();
+        m.set(0, MemCategory::DocTopic, 40).unwrap();
+        assert_eq!(m.category(0, MemCategory::DocTopic), 40);
+    }
+
+    #[test]
+    fn release_saturates() {
+        let mut m = MemoryAccountant::new(1, 1000, false);
+        m.charge(0, MemCategory::Other, 5).unwrap();
+        m.release(0, MemCategory::Other, 50);
+        assert_eq!(m.node_total(0), 0);
+    }
+}

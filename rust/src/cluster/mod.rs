@@ -1,0 +1,20 @@
+//! Discrete-event cluster simulation — the hardware substitute for the
+//! paper's PROBE clusters (DESIGN.md §4).
+//!
+//! Workers do **real sampling work on real data structures**; what is
+//! simulated is *placement and time*: [`node`] describes machines (cores,
+//! RAM, NIC), [`network`] turns measured byte flows into transfer times
+//! under a bottleneck (NIC-share) model, [`simclock`] merges measured
+//! compute time with modeled communication time into per-worker simulated
+//! clocks with round barriers, and [`memory`] accounts peak bytes per node
+//! (Fig 4a) and enforces RAM capacity (the Table 1 OOM row).
+
+pub mod node;
+pub mod network;
+pub mod simclock;
+pub mod memory;
+
+pub use memory::{MemCategory, MemoryAccountant};
+pub use network::{Flow, NetworkModel};
+pub use node::ClusterSpec;
+pub use simclock::SimClock;

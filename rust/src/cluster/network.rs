@@ -1,0 +1,196 @@
+//! Bottleneck network model.
+//!
+//! Communication in a phase is a set of [`Flow`]s `(src, dst, bytes)`. The
+//! model charges each machine's NIC with the bytes it must send and
+//! receive; the phase's transfer time is the **worst NIC's drain time**
+//! plus a per-message latency term:
+//!
+//! ```text
+//! t_phase = max_node( max(out_bytes·8/bw, in_bytes·8/bw) ) + L·max_msgs_per_node
+//! ```
+//!
+//! This is the classic bandwidth-bottleneck (LogGP-style `G` term) model.
+//! It is exactly what produces the paper's Fig 4(b) effect: Yahoo!LDA-style
+//! all-to-server synchronization puts `O(M)` flows on the server NIC each
+//! period (aggregate traffic `O(M²)` per unit model progress), while the
+//! rotation schedule's on-demand transfers stay balanced — every NIC
+//! carries `O(model/M)` per round regardless of `M`.
+
+use super::node::ClusterSpec;
+
+/// One directed transfer.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Flow {
+    pub src: usize,
+    pub dst: usize,
+    pub bytes: u64,
+}
+
+/// The cluster's network model.
+#[derive(Debug, Clone)]
+pub struct NetworkModel {
+    machines: usize,
+    nic_bps: f64,
+    latency_s: f64,
+}
+
+impl NetworkModel {
+    pub fn new(spec: &ClusterSpec) -> NetworkModel {
+        NetworkModel {
+            machines: spec.machines,
+            nic_bps: spec.node.nic_bps,
+            latency_s: spec.latency_s,
+        }
+    }
+
+    pub fn latency(&self) -> f64 {
+        self.latency_s
+    }
+
+    /// Time for a single point-to-point transfer with no contention.
+    pub fn p2p_time(&self, bytes: u64) -> f64 {
+        if bytes == 0 {
+            return 0.0;
+        }
+        self.latency_s + bytes as f64 * 8.0 / self.nic_bps
+    }
+
+    /// Time for a phase of concurrent flows (barrier at the end): the
+    /// bottleneck NIC's drain time. Local (src == dst) flows are free.
+    pub fn phase_time(&self, flows: &[Flow]) -> f64 {
+        let mut out_bytes = vec![0u64; self.machines];
+        let mut in_bytes = vec![0u64; self.machines];
+        let mut msgs = vec![0u64; self.machines];
+        for f in flows {
+            if f.src == f.dst {
+                continue; // intra-node: no NIC traversal
+            }
+            out_bytes[f.src] += f.bytes;
+            in_bytes[f.dst] += f.bytes;
+            msgs[f.src] += 1;
+            msgs[f.dst] += 1;
+        }
+        let mut worst = 0.0f64;
+        for m in 0..self.machines {
+            let t = (out_bytes[m].max(in_bytes[m])) as f64 * 8.0 / self.nic_bps
+                + self.latency_s * msgs[m] as f64;
+            worst = worst.max(t);
+        }
+        worst
+    }
+
+    /// Time for a tree-structured reduce(+broadcast) of a `bytes`-sized
+    /// vector across `m` machines: `2·⌈log₂ m⌉` rounds of one
+    /// latency+transfer each — the standard allreduce shape used for the
+    /// `C_k` totals channel (§3.3); a star topology would bottleneck the
+    /// totals home at `O(m)`.
+    pub fn reduce_time(&self, bytes: u64, m: usize) -> f64 {
+        if m <= 1 || bytes == 0 {
+            return 0.0;
+        }
+        let rounds = (usize::BITS - (m - 1).leading_zeros()) as f64; // ceil(log2 m)
+        2.0 * rounds * (self.latency_s + bytes as f64 * 8.0 / self.nic_bps)
+    }
+
+    /// Per-worker phase times: each worker is charged its own flows' drain
+    /// on the bottleneck NICs it touches. Used when a phase is *not* a
+    /// global barrier (on-demand fetches overlap with compute).
+    pub fn per_flow_times(&self, flows: &[Flow]) -> Vec<f64> {
+        // Contention factor per NIC = number of remote flows touching it.
+        let mut out_flows = vec![0u64; self.machines];
+        let mut in_flows = vec![0u64; self.machines];
+        for f in flows {
+            if f.src == f.dst {
+                continue;
+            }
+            out_flows[f.src] += 1;
+            in_flows[f.dst] += 1;
+        }
+        flows
+            .iter()
+            .map(|f| {
+                if f.src == f.dst || f.bytes == 0 {
+                    return 0.0;
+                }
+                let share = out_flows[f.src].max(in_flows[f.dst]).max(1) as f64;
+                self.latency_s + f.bytes as f64 * 8.0 * share / self.nic_bps
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Config;
+    use crate::cluster::node::ClusterSpec;
+
+    fn model(machines: usize, gbps: f64) -> NetworkModel {
+        let cfg = Config::from_str(&format!(
+            "[cluster]\npreset = \"custom\"\nmachines = {machines}\nbandwidth_gbps = {gbps}\nlatency_us = 100.0"
+        ))
+        .unwrap();
+        NetworkModel::new(&ClusterSpec::from_config(&cfg.cluster))
+    }
+
+    #[test]
+    fn p2p_time_scales_with_bytes_and_bandwidth() {
+        let m = model(4, 1.0);
+        let t1 = m.p2p_time(1_000_000); // 8 Mbit over 1 Gbps ≈ 8 ms
+        assert!((t1 - (1e-4 + 0.008)).abs() < 1e-9);
+        let m = model(4, 10.0);
+        assert!(m.p2p_time(1_000_000) < t1);
+        assert_eq!(m.p2p_time(0), 0.0);
+    }
+
+    #[test]
+    fn local_flows_are_free() {
+        let m = model(4, 1.0);
+        assert_eq!(m.phase_time(&[Flow { src: 2, dst: 2, bytes: 1 << 30 }]), 0.0);
+    }
+
+    #[test]
+    fn incast_bottleneck_scales_with_fan_in() {
+        // M workers each sending B bytes to node 0: node 0's inbound NIC
+        // serializes them → time ∝ M.
+        let m = model(9, 1.0);
+        let mk = |n: usize| -> Vec<Flow> {
+            (1..=n).map(|s| Flow { src: s, dst: 0, bytes: 1_000_000 }).collect()
+        };
+        let t2 = m.phase_time(&mk(2));
+        let t8 = m.phase_time(&mk(8));
+        assert!(t8 > t2 * 3.5, "t2={t2} t8={t8}");
+    }
+
+    #[test]
+    fn balanced_ring_does_not_scale_with_m() {
+        // Rotation-style traffic: node i sends B bytes to node (i+1)%M.
+        // Every NIC carries exactly B in and B out → time independent of M.
+        let mk = |mach: usize| -> (NetworkModel, Vec<Flow>) {
+            let mm = model(mach, 1.0);
+            let flows = (0..mach)
+                .map(|s| Flow { src: s, dst: (s + 1) % mach, bytes: 1_000_000 })
+                .collect();
+            (mm, flows)
+        };
+        let (m4, f4) = mk(4);
+        let (m32, f32_) = mk(32);
+        let t4 = m4.phase_time(&f4);
+        let t32 = m32.phase_time(&f32_);
+        assert!((t4 - t32).abs() / t4 < 0.01, "t4={t4} t32={t32}");
+    }
+
+    #[test]
+    fn per_flow_times_reflect_contention() {
+        let m = model(4, 1.0);
+        let flows = vec![
+            Flow { src: 1, dst: 0, bytes: 1_000_000 },
+            Flow { src: 2, dst: 0, bytes: 1_000_000 },
+            Flow { src: 3, dst: 2, bytes: 0 },
+        ];
+        let times = m.per_flow_times(&flows);
+        // Two flows share node 0 inbound → each slower than a lone p2p.
+        assert!(times[0] > m.p2p_time(1_000_000) * 1.5);
+        assert_eq!(times[2], 0.0);
+    }
+}

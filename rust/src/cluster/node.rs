@@ -1,0 +1,97 @@
+//! Machine and cluster descriptions.
+//!
+//! The two presets mirror §5 "Experiment Settings": a high-end cluster
+//! (10 machines × 64 cores, 128 GiB, 40 Gbps) and a low-end cluster
+//! (128 machines × 2 cores, 8 GiB, 1 Gbps). One *worker process* runs per
+//! machine (the paper's layout); its cores parallelize sampling within the
+//! machine, which the clock models as ideal intra-node scaling — the
+//! cross-machine effects the paper studies are all in the network model.
+
+use crate::config::ClusterConfig;
+
+/// One machine.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct NodeSpec {
+    pub cores: usize,
+    pub ram_bytes: u64,
+    /// NIC bandwidth, bits/second.
+    pub nic_bps: f64,
+    /// Relative per-core speed vs the host running the simulation.
+    pub speed: f64,
+}
+
+/// The whole cluster (homogeneous, like the paper's).
+#[derive(Debug, Clone)]
+pub struct ClusterSpec {
+    pub machines: usize,
+    pub node: NodeSpec,
+    /// Per-message latency, seconds.
+    pub latency_s: f64,
+}
+
+impl ClusterSpec {
+    pub fn from_config(cfg: &ClusterConfig) -> ClusterSpec {
+        ClusterSpec {
+            machines: cfg.machines,
+            node: NodeSpec {
+                cores: cfg.cores_per_machine,
+                ram_bytes: (cfg.ram_gib * (1u64 << 30) as f64) as u64,
+                nic_bps: cfg.bandwidth_gbps * 1e9,
+                speed: cfg.compute_scale,
+            },
+            latency_s: cfg.latency_us * 1e-6,
+        }
+    }
+
+    /// Total sampling cores in the cluster.
+    pub fn total_cores(&self) -> usize {
+        self.machines * self.node.cores
+    }
+
+    /// Which machine hosts KV-store shard `s` (shards spread round-robin —
+    /// the distributed-hash-table placement of §3.2).
+    pub fn shard_home(&self, shard: usize) -> usize {
+        shard % self.machines
+    }
+
+    /// Which machine hosts worker `w` (one worker per machine; if the
+    /// config asks for more workers than machines they wrap, which models
+    /// multiple worker processes per node).
+    pub fn worker_home(&self, worker: usize) -> usize {
+        worker % self.machines
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Config;
+
+    #[test]
+    fn presets_materialize() {
+        let cfg = Config::from_str("[cluster]\npreset = \"high-end\"").unwrap();
+        let spec = ClusterSpec::from_config(&cfg.cluster);
+        assert_eq!(spec.machines, 10);
+        assert_eq!(spec.node.cores, 64);
+        assert_eq!(spec.total_cores(), 640);
+        assert!((spec.node.nic_bps - 40e9).abs() < 1.0);
+        assert_eq!(spec.node.ram_bytes, 128 << 30);
+
+        let cfg = Config::from_str("[cluster]\npreset = \"low-end\"").unwrap();
+        let spec = ClusterSpec::from_config(&cfg.cluster);
+        assert_eq!(spec.machines, 128);
+        assert_eq!(spec.total_cores(), 256);
+    }
+
+    #[test]
+    fn placement_is_total_and_wrapping() {
+        let cfg = Config::from_str("[cluster]\npreset = \"custom\"\nmachines = 4").unwrap();
+        let spec = ClusterSpec::from_config(&cfg.cluster);
+        for s in 0..16 {
+            assert!(spec.shard_home(s) < 4);
+            assert!(spec.worker_home(s) < 4);
+        }
+        assert_eq!(spec.shard_home(5), 1);
+        assert_eq!(spec.worker_home(7), 3);
+    }
+}

@@ -1,0 +1,116 @@
+//! Simulated time: merging measured compute with modeled communication.
+//!
+//! Each worker owns a [`SimClock`]. Sampling work is *measured* on the host
+//! and converted to cluster time by `host_secs / (cores · speed)` (the
+//! worker process parallelizes over its machine's cores; the paper's
+//! scalability effects all live across machines, not inside them).
+//! Communication phases come from [`super::network::NetworkModel`]. Rounds
+//! end in a barrier: all clocks advance to the maximum — exactly the
+//! scheduler semantics of Algorithm 1 ("once all the workers have finished
+//! … the scheduler rotates").
+
+/// Per-worker simulated clock.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SimClock {
+    now: f64,
+    /// Effective speedup for measured host compute: cores × per-core speed.
+    compute_div: f64,
+}
+
+impl SimClock {
+    pub fn new(cores: usize, speed: f64) -> SimClock {
+        assert!(cores >= 1 && speed > 0.0);
+        SimClock { now: 0.0, compute_div: cores as f64 * speed }
+    }
+
+    pub fn now(&self) -> f64 {
+        self.now
+    }
+
+    /// Charge measured host compute seconds.
+    pub fn charge_compute(&mut self, host_secs: f64) -> f64 {
+        let t = host_secs / self.compute_div;
+        self.now += t;
+        t
+    }
+
+    /// Charge modeled communication seconds.
+    pub fn charge_comm(&mut self, secs: f64) {
+        self.now += secs;
+    }
+
+    /// Charge a phase where communication overlaps compute (§3.2 async
+    /// send/receive): time = max(comm, compute).
+    pub fn charge_overlapped(&mut self, host_compute_secs: f64, comm_secs: f64) -> f64 {
+        let t = (host_compute_secs / self.compute_div).max(comm_secs);
+        self.now += t;
+        t
+    }
+
+    /// Advance to at least `t` (barrier).
+    pub fn advance_to(&mut self, t: f64) {
+        if t > self.now {
+            self.now = t;
+        }
+    }
+}
+
+/// Barrier over a set of clocks: everyone advances to the max. Returns the
+/// barrier time.
+pub fn barrier(clocks: &mut [SimClock]) -> f64 {
+    let t = clocks.iter().map(|c| c.now()).fold(0.0, f64::max);
+    for c in clocks.iter_mut() {
+        c.advance_to(t);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn compute_scales_with_cores() {
+        let mut c2 = SimClock::new(2, 1.0);
+        let mut c64 = SimClock::new(64, 1.0);
+        c2.charge_compute(64.0);
+        c64.charge_compute(64.0);
+        assert!((c2.now() - 32.0).abs() < 1e-12);
+        assert!((c64.now() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn speed_factor_applies() {
+        let mut c = SimClock::new(1, 0.5); // half-speed core
+        c.charge_compute(1.0);
+        assert!((c.now() - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn overlap_takes_max() {
+        let mut c = SimClock::new(1, 1.0);
+        c.charge_overlapped(2.0, 5.0);
+        assert!((c.now() - 5.0).abs() < 1e-12);
+        c.charge_overlapped(4.0, 1.0);
+        assert!((c.now() - 9.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn barrier_aligns_all() {
+        let mut clocks = vec![SimClock::new(1, 1.0); 3];
+        clocks[0].charge_comm(1.0);
+        clocks[1].charge_comm(5.0);
+        clocks[2].charge_comm(3.0);
+        let t = barrier(&mut clocks);
+        assert!((t - 5.0).abs() < 1e-12);
+        assert!(clocks.iter().all(|c| (c.now() - 5.0).abs() < 1e-12));
+    }
+
+    #[test]
+    fn advance_never_goes_backwards() {
+        let mut c = SimClock::new(1, 1.0);
+        c.charge_comm(10.0);
+        c.advance_to(5.0);
+        assert!((c.now() - 10.0).abs() < 1e-12);
+    }
+}

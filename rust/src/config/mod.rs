@@ -1,0 +1,11 @@
+//! Configuration system: a TOML-subset parser ([`toml`]) and the typed
+//! experiment schema ([`schema`]) with presets, validation, and dotted-key
+//! CLI overrides.
+
+pub mod toml;
+pub mod schema;
+
+pub use schema::{
+    BaselineConfig, BlockLayout, CkSyncPolicy, ClusterConfig, Config, CoordConfig, CorpusConfig, OutputConfig,
+    RuntimeConfig, SamplerKind, TrainConfig,
+};

@@ -1,0 +1,596 @@
+//! Typed experiment configuration.
+//!
+//! A [`Config`] fully determines an experiment: corpus (or generator
+//! preset), LDA hyperparameters, sampler backend, coordinator layout,
+//! simulated cluster, baseline settings, runtime artifact location and
+//! output paths. Configs load from TOML files ([`Config::from_file`]) and
+//! accept dotted CLI overrides (`--train.topics 5000`) so every experiment
+//! driver and bench shares one configuration surface.
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::toml::{parse, Value};
+
+/// Which Gibbs-sampler backend the workers run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SamplerKind {
+    /// Exact O(K) dense collapsed Gibbs (eq. 1) — the correctness oracle.
+    Dense,
+    /// SparseLDA A+B+C decomposition (eq. 2, Yao et al.) — doc-major; the
+    /// algorithmic core of the Yahoo!LDA baseline.
+    SparseYao,
+    /// The paper's X+Y decomposition on the inverted index (eq. 3).
+    InvertedXy,
+    /// Dense microbatch sampling through the AOT-compiled XLA artifact
+    /// (JAX/Pallas L1–L2 path).
+    Xla,
+}
+
+impl SamplerKind {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "dense" => SamplerKind::Dense,
+            "sparse-yao" | "sparse" | "yao" => SamplerKind::SparseYao,
+            "inverted-xy" | "xy" | "mp" => SamplerKind::InvertedXy,
+            "xla" => SamplerKind::Xla,
+            other => bail!("unknown sampler {other:?} (dense|sparse-yao|inverted-xy|xla)"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            SamplerKind::Dense => "dense",
+            SamplerKind::SparseYao => "sparse-yao",
+            SamplerKind::InvertedXy => "inverted-xy",
+            SamplerKind::Xla => "xla",
+        }
+    }
+}
+
+/// When workers refresh the non-separable topic-totals vector `C_k` (§3.3).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CkSyncPolicy {
+    /// Paper default: sync at the beginning of every round.
+    PerRound,
+    /// Ablation: only at iteration boundaries (more staleness).
+    PerIteration,
+    /// Ablation: after every microbatch (more traffic, less staleness).
+    PerMicrobatch,
+}
+
+impl CkSyncPolicy {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "per-round" | "round" => CkSyncPolicy::PerRound,
+            "per-iteration" | "iteration" => CkSyncPolicy::PerIteration,
+            "per-microbatch" | "microbatch" => CkSyncPolicy::PerMicrobatch,
+            other => bail!("unknown ck_sync {other:?} (per-round|per-iteration|per-microbatch)"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            CkSyncPolicy::PerRound => "per-round",
+            CkSyncPolicy::PerIteration => "per-iteration",
+            CkSyncPolicy::PerMicrobatch => "per-microbatch",
+        }
+    }
+}
+
+/// Corpus source / generator settings.
+#[derive(Debug, Clone)]
+pub struct CorpusConfig {
+    /// `tiny` | `pubmed-sim` | `wiki-uni-sim` | `wiki-bi-sim` | `custom` |
+    /// `uci` (load `path`).
+    pub preset: String,
+    /// Vocabulary size (custom preset).
+    pub vocab: usize,
+    /// Number of documents (custom preset).
+    pub docs: usize,
+    /// Mean document length (custom preset).
+    pub avg_doc_len: usize,
+    /// Zipf exponent for word marginals.
+    pub zipf_s: f64,
+    /// Number of latent topics used by the generative simulator.
+    pub gen_topics: usize,
+    /// Dirichlet hyperparameters used by the generative simulator.
+    pub gen_alpha: f64,
+    pub gen_beta: f64,
+    /// Augment with bigrams (Wiki-bigram style vocabulary blow-up).
+    pub bigram: bool,
+    /// Path to a UCI bag-of-words `docword` file (preset = `uci`).
+    pub path: String,
+    /// Corpus generation seed (independent of training seed).
+    pub seed: u64,
+}
+
+impl Default for CorpusConfig {
+    fn default() -> Self {
+        CorpusConfig {
+            preset: "tiny".into(),
+            vocab: 2_000,
+            docs: 1_000,
+            avg_doc_len: 64,
+            zipf_s: 1.07,
+            gen_topics: 20,
+            gen_alpha: 0.1,
+            gen_beta: 0.01,
+            bigram: false,
+            path: String::new(),
+            seed: 1234,
+        }
+    }
+}
+
+/// LDA training hyperparameters and sampler selection.
+#[derive(Debug, Clone)]
+pub struct TrainConfig {
+    /// Number of topics K.
+    pub topics: usize,
+    /// Symmetric document–topic prior.
+    pub alpha: f64,
+    /// Symmetric topic–word prior.
+    pub beta: f64,
+    /// Full sweeps over the corpus.
+    pub iterations: usize,
+    /// Training seed (initial assignments + sampling).
+    pub seed: u64,
+    /// Worker sampler backend.
+    pub sampler: SamplerKind,
+    /// Microbatch size for the XLA backend (tokens per device call).
+    pub microbatch: usize,
+    /// Compute the training log-likelihood every N iterations.
+    pub ll_every: usize,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            topics: 100,
+            alpha: 0.1,
+            beta: 0.01,
+            iterations: 50,
+            seed: 42,
+            sampler: SamplerKind::InvertedXy,
+            microbatch: 1024,
+            ll_every: 1,
+        }
+    }
+}
+
+/// How the vocabulary is laid out into model blocks.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BlockLayout {
+    /// Strided: block `b` = words ≡ b (mod M). Default — uniformizes the
+    /// per-(shard ∩ block) work cells (see `model::block`).
+    Strided,
+    /// Contiguous ranges balanced by token mass.
+    Balanced,
+    /// Contiguous ranges of equal word count (ablation baseline).
+    Even,
+}
+
+impl BlockLayout {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "strided" => BlockLayout::Strided,
+            "balanced" => BlockLayout::Balanced,
+            "even" => BlockLayout::Even,
+            other => bail!("unknown block_layout {other:?} (strided|balanced|even)"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            BlockLayout::Strided => "strided",
+            BlockLayout::Balanced => "balanced",
+            BlockLayout::Even => "even",
+        }
+    }
+}
+
+/// Coordinator layout: workers, model blocks, `C_k` protocol.
+#[derive(Debug, Clone)]
+pub struct CoordConfig {
+    /// Number of workers; 0 ⇒ one per cluster machine.
+    pub workers: usize,
+    /// Number of model blocks M; 0 ⇒ equal to worker count (paper default).
+    pub blocks: usize,
+    /// Vocabulary → block layout.
+    pub block_layout: BlockLayout,
+    /// `C_k` synchronization policy.
+    pub ck_sync: CkSyncPolicy,
+    /// Overlap communication with sampling (§3.2 "can be further
+    /// accelerated"): prefetch the next round's block while sampling.
+    pub prefetch: bool,
+}
+
+impl Default for CoordConfig {
+    fn default() -> Self {
+        CoordConfig {
+            workers: 0,
+            blocks: 0,
+            block_layout: BlockLayout::Strided,
+            ck_sync: CkSyncPolicy::PerRound,
+            prefetch: true,
+        }
+    }
+}
+
+/// Simulated cluster description.
+#[derive(Debug, Clone)]
+pub struct ClusterConfig {
+    /// `high-end` | `low-end` | `custom`.
+    pub preset: String,
+    /// Number of machines.
+    pub machines: usize,
+    /// Worker threads (sampling cores) per machine.
+    pub cores_per_machine: usize,
+    /// RAM per machine (GiB) — enforced by the memory accountant.
+    pub ram_gib: f64,
+    /// NIC bandwidth per machine (Gbit/s).
+    pub bandwidth_gbps: f64,
+    /// Per-message latency (µs).
+    pub latency_us: f64,
+    /// Relative per-core sampling speed (1.0 = this host's core).
+    pub compute_scale: f64,
+    /// Enforce RAM capacity (out-of-memory aborts the run — Table 1's N/A
+    /// cells). Off by default so exploratory runs never die.
+    pub enforce_ram: bool,
+}
+
+impl Default for ClusterConfig {
+    fn default() -> Self {
+        ClusterConfig {
+            preset: "custom".into(),
+            machines: 0, // resolved by finalize(): preset default, or 8 for custom
+
+            cores_per_machine: 2,
+            ram_gib: 8.0,
+            bandwidth_gbps: 1.0,
+            latency_us: 100.0,
+            compute_scale: 1.0,
+            enforce_ram: false,
+        }
+    }
+}
+
+impl ClusterConfig {
+    /// Apply the named preset's hardware numbers (paper §5).
+    pub fn apply_preset(&mut self) -> Result<()> {
+        match self.preset.as_str() {
+            // 10 machines, quad-socket 16-core Opteron 6272, 128 GiB, 40 Gbps.
+            "high-end" => {
+                if self.machines == 0 {
+                    self.machines = 10;
+                }
+                self.cores_per_machine = 64;
+                self.ram_gib = 128.0;
+                self.bandwidth_gbps = 40.0;
+                self.latency_us = 20.0;
+            }
+            // 128 machines, dual-socket Opteron 252, 8 GiB, 1 Gbps.
+            "low-end" => {
+                if self.machines == 0 {
+                    self.machines = 128;
+                }
+                self.cores_per_machine = 2;
+                self.ram_gib = 8.0;
+                self.bandwidth_gbps = 1.0;
+                self.latency_us = 100.0;
+            }
+            "custom" => {}
+            other => bail!("unknown cluster preset {other:?} (high-end|low-end|custom)"),
+        }
+        Ok(())
+    }
+}
+
+/// Yahoo!LDA-style baseline knobs.
+#[derive(Debug, Clone)]
+pub struct BaselineConfig {
+    /// Background sync pass period, in sampled tokens per worker between
+    /// model-delta exchanges with the parameter server.
+    pub sync_period_tokens: usize,
+    /// Parameter-server shards (machines holding the global table).
+    pub server_shards: usize,
+}
+
+impl Default for BaselineConfig {
+    fn default() -> Self {
+        // Yahoo!LDA's sync thread cycles continuously; 5K tokens/worker
+        // between exchanges keeps the same duty cycle on scaled corpora.
+        BaselineConfig { sync_period_tokens: 5_000, server_shards: 1 }
+    }
+}
+
+/// PJRT/XLA runtime settings.
+#[derive(Debug, Clone)]
+pub struct RuntimeConfig {
+    /// Directory containing `manifest.txt` + `*.hlo.txt` (from `make artifacts`).
+    pub artifacts_dir: String,
+}
+
+impl Default for RuntimeConfig {
+    fn default() -> Self {
+        RuntimeConfig { artifacts_dir: "artifacts".into() }
+    }
+}
+
+/// Where experiment outputs (CSV series, reports) go.
+#[derive(Debug, Clone)]
+pub struct OutputConfig {
+    pub dir: String,
+    pub write_csv: bool,
+    /// Record a per-round phase timeline and write Chrome trace JSON.
+    pub trace: bool,
+}
+
+impl Default for OutputConfig {
+    fn default() -> Self {
+        OutputConfig { dir: "out".into(), write_csv: true, trace: false }
+    }
+}
+
+/// Top-level experiment configuration.
+#[derive(Debug, Clone, Default)]
+pub struct Config {
+    pub corpus: CorpusConfig,
+    pub train: TrainConfig,
+    pub coord: CoordConfig,
+    pub cluster: ClusterConfig,
+    pub baseline: BaselineConfig,
+    pub runtime: RuntimeConfig,
+    pub output: OutputConfig,
+}
+
+impl Config {
+    /// Load from a TOML file, then validate.
+    pub fn from_file<P: AsRef<Path>>(path: P) -> Result<Config> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .with_context(|| format!("reading config {:?}", path.as_ref()))?;
+        Self::from_str(&text)
+    }
+
+    /// Parse from TOML text.
+    #[allow(clippy::should_implement_trait)]
+    pub fn from_str(text: &str) -> Result<Config> {
+        let map = parse(text)?;
+        let mut cfg = Config::default();
+        for (key, value) in &map {
+            cfg.set(key, value)
+                .with_context(|| format!("config key {key:?}"))?;
+        }
+        cfg.finalize()?;
+        Ok(cfg)
+    }
+
+    /// Apply dotted-key CLI overrides (`train.topics=5000`).
+    pub fn apply_overrides<'a, I: IntoIterator<Item = (&'a str, &'a str)>>(
+        &mut self,
+        pairs: I,
+    ) -> Result<()> {
+        for (k, v) in pairs {
+            if !k.contains('.') {
+                continue; // not a config key (e.g. --config, --help)
+            }
+            let value = guess_value(v);
+            self.set(k, &value).with_context(|| format!("override {k:?}"))?;
+        }
+        self.finalize()
+    }
+
+    fn set(&mut self, key: &str, value: &Value) -> Result<()> {
+        let s = |v: &Value| -> Result<String> {
+            v.as_str().map(str::to_string).context("expected string")
+        };
+        let u = |v: &Value| -> Result<usize> {
+            let i = v.as_i64().context("expected integer")?;
+            if i < 0 {
+                bail!("expected non-negative integer, got {i}");
+            }
+            Ok(i as usize)
+        };
+        let f = |v: &Value| -> Result<f64> { v.as_f64().context("expected number") };
+        let b = |v: &Value| -> Result<bool> { v.as_bool().context("expected bool") };
+        let u64v = |v: &Value| -> Result<u64> {
+            let i = v.as_i64().context("expected integer")?;
+            Ok(i as u64)
+        };
+        match key {
+            "corpus.preset" => self.corpus.preset = s(value)?,
+            "corpus.vocab" => self.corpus.vocab = u(value)?,
+            "corpus.docs" => self.corpus.docs = u(value)?,
+            "corpus.avg_doc_len" => self.corpus.avg_doc_len = u(value)?,
+            "corpus.zipf_s" => self.corpus.zipf_s = f(value)?,
+            "corpus.gen_topics" => self.corpus.gen_topics = u(value)?,
+            "corpus.gen_alpha" => self.corpus.gen_alpha = f(value)?,
+            "corpus.gen_beta" => self.corpus.gen_beta = f(value)?,
+            "corpus.bigram" => self.corpus.bigram = b(value)?,
+            "corpus.path" => self.corpus.path = s(value)?,
+            "corpus.seed" => self.corpus.seed = u64v(value)?,
+            "train.topics" => self.train.topics = u(value)?,
+            "train.alpha" => self.train.alpha = f(value)?,
+            "train.beta" => self.train.beta = f(value)?,
+            "train.iterations" => self.train.iterations = u(value)?,
+            "train.seed" => self.train.seed = u64v(value)?,
+            "train.sampler" => self.train.sampler = SamplerKind::parse(&s(value)?)?,
+            "train.microbatch" => self.train.microbatch = u(value)?,
+            "train.ll_every" => self.train.ll_every = u(value)?,
+            "coord.workers" => self.coord.workers = u(value)?,
+            "coord.blocks" => self.coord.blocks = u(value)?,
+            "coord.ck_sync" => self.coord.ck_sync = CkSyncPolicy::parse(&s(value)?)?,
+            "coord.block_layout" => self.coord.block_layout = BlockLayout::parse(&s(value)?)?,
+            "coord.prefetch" => self.coord.prefetch = b(value)?,
+            "cluster.preset" => self.cluster.preset = s(value)?,
+            "cluster.machines" => self.cluster.machines = u(value)?,
+            "cluster.cores_per_machine" => self.cluster.cores_per_machine = u(value)?,
+            "cluster.ram_gib" => self.cluster.ram_gib = f(value)?,
+            "cluster.bandwidth_gbps" => self.cluster.bandwidth_gbps = f(value)?,
+            "cluster.latency_us" => self.cluster.latency_us = f(value)?,
+            "cluster.compute_scale" => self.cluster.compute_scale = f(value)?,
+            "cluster.enforce_ram" => self.cluster.enforce_ram = b(value)?,
+            "baseline.sync_period_tokens" => self.baseline.sync_period_tokens = u(value)?,
+            "baseline.server_shards" => self.baseline.server_shards = u(value)?,
+            "runtime.artifacts_dir" => self.runtime.artifacts_dir = s(value)?,
+            "output.dir" => self.output.dir = s(value)?,
+            "output.write_csv" => self.output.write_csv = b(value)?,
+            "output.trace" => self.output.trace = b(value)?,
+            other => bail!("unknown config key {other:?}"),
+        }
+        Ok(())
+    }
+
+    /// Resolve presets and defaults, then validate invariants.
+    pub fn finalize(&mut self) -> Result<()> {
+        if self.cluster.preset != "custom" {
+            self.cluster.apply_preset()?;
+        }
+        if self.cluster.machines == 0 {
+            self.cluster.machines = 8;
+        }
+        if self.coord.workers == 0 {
+            self.coord.workers = self.cluster.machines;
+        }
+        if self.coord.blocks == 0 {
+            self.coord.blocks = self.coord.workers;
+        }
+        self.validate()
+    }
+
+    /// Check invariants; every experiment driver calls this before running.
+    pub fn validate(&self) -> Result<()> {
+        if self.train.topics == 0 {
+            bail!("train.topics must be >= 1");
+        }
+        if self.train.alpha <= 0.0 || self.train.beta <= 0.0 {
+            bail!("alpha/beta must be positive");
+        }
+        if self.coord.workers == 0 {
+            bail!("coord.workers must be >= 1");
+        }
+        if self.coord.blocks < self.coord.workers {
+            bail!(
+                "coord.blocks ({}) must be >= coord.workers ({}) so every worker holds at most one block per round",
+                self.coord.blocks,
+                self.coord.workers
+            );
+        }
+        if self.cluster.machines == 0 {
+            bail!("cluster.machines must be >= 1");
+        }
+        if self.train.microbatch == 0 {
+            bail!("train.microbatch must be >= 1");
+        }
+        if self.corpus.preset == "uci" && self.corpus.path.is_empty() {
+            bail!("corpus.preset = uci requires corpus.path");
+        }
+        Ok(())
+    }
+}
+
+/// Guess the TOML type of a CLI override value.
+fn guess_value(v: &str) -> Value {
+    if v == "true" {
+        Value::Bool(true)
+    } else if v == "false" {
+        Value::Bool(false)
+    } else if let Ok(i) = v.parse::<i64>() {
+        Value::Int(i)
+    } else if let Ok(f) = v.parse::<f64>() {
+        Value::Float(f)
+    } else {
+        Value::Str(v.to_string())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_finalizes() {
+        let mut cfg = Config::default();
+        cfg.finalize().unwrap();
+        assert_eq!(cfg.coord.workers, cfg.cluster.machines);
+        assert_eq!(cfg.coord.blocks, cfg.coord.workers);
+    }
+
+    #[test]
+    fn parses_full_document() {
+        let cfg = Config::from_str(
+            r#"
+[corpus]
+preset = "pubmed-sim"
+seed = 7
+
+[train]
+topics = 1000
+sampler = "inverted-xy"
+alpha = 0.05
+
+[cluster]
+preset = "high-end"
+machines = 10
+"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.corpus.preset, "pubmed-sim");
+        assert_eq!(cfg.train.topics, 1000);
+        assert_eq!(cfg.cluster.cores_per_machine, 64);
+        assert_eq!(cfg.cluster.bandwidth_gbps, 40.0);
+    }
+
+    #[test]
+    fn low_end_preset_matches_paper() {
+        let cfg = Config::from_str("[cluster]\npreset = \"low-end\"").unwrap();
+        assert_eq!(cfg.cluster.machines, 128);
+        assert_eq!(cfg.cluster.cores_per_machine, 2);
+        assert_eq!(cfg.cluster.ram_gib, 8.0);
+        assert_eq!(cfg.cluster.bandwidth_gbps, 1.0);
+    }
+
+    #[test]
+    fn unknown_key_rejected() {
+        assert!(Config::from_str("[train]\nbogus = 1").is_err());
+    }
+
+    #[test]
+    fn sampler_parse() {
+        assert_eq!(SamplerKind::parse("xy").unwrap(), SamplerKind::InvertedXy);
+        assert_eq!(SamplerKind::parse("dense").unwrap(), SamplerKind::Dense);
+        assert!(SamplerKind::parse("what").is_err());
+    }
+
+    #[test]
+    fn overrides_apply_and_validate() {
+        let mut cfg = Config::default();
+        cfg.apply_overrides([("train.topics", "500"), ("cluster.machines", "4"), ("noconfig", "x")])
+            .unwrap();
+        assert_eq!(cfg.train.topics, 500);
+        assert_eq!(cfg.cluster.machines, 4);
+    }
+
+    #[test]
+    fn validation_catches_bad_blocks() {
+        let mut cfg = Config::default();
+        cfg.finalize().unwrap();
+        cfg.coord.blocks = 2;
+        cfg.coord.workers = 4;
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn uci_requires_path() {
+        let mut cfg = Config::default();
+        cfg.corpus.preset = "uci".into();
+        assert!(cfg.finalize().is_err());
+    }
+
+    #[test]
+    fn negative_int_rejected() {
+        assert!(Config::from_str("[train]\ntopics = -5").is_err());
+    }
+}

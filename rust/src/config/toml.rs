@@ -1,0 +1,254 @@
+//! TOML-subset parser (offline substitute for the `toml` crate).
+//!
+//! Supports what `mplda` config files need: `[section]` and
+//! `[section.subsection]` headers, `key = value` with string / integer /
+//! float / boolean / homogeneous-array values, `#` comments, and blank lines.
+//! Values are exposed as a flat `section.key → Value` map.
+
+use std::collections::BTreeMap;
+
+/// A parsed TOML-subset value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Array(Vec<Value>),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            Value::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Float(f) => Some(*f),
+            Value::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_array(&self) -> Option<&[Value]> {
+        match self {
+            Value::Array(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+/// Parse error with line information.
+#[derive(Debug, thiserror::Error)]
+#[error("config parse error at line {line}: {msg}")]
+pub struct ParseError {
+    pub line: usize,
+    pub msg: String,
+}
+
+/// Parse a TOML-subset document into a flat dotted-key map.
+pub fn parse(input: &str) -> Result<BTreeMap<String, Value>, ParseError> {
+    let mut map = BTreeMap::new();
+    let mut section = String::new();
+    for (lineno, raw) in input.lines().enumerate() {
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix('[') {
+            let name = rest.strip_suffix(']').ok_or_else(|| ParseError {
+                line: lineno + 1,
+                msg: format!("unterminated section header: {raw:?}"),
+            })?;
+            let name = name.trim();
+            if name.is_empty() || !name.chars().all(|c| c.is_alphanumeric() || c == '_' || c == '.' || c == '-') {
+                return Err(ParseError { line: lineno + 1, msg: format!("bad section name: {name:?}") });
+            }
+            section = name.to_string();
+            continue;
+        }
+        let (key, val) = line.split_once('=').ok_or_else(|| ParseError {
+            line: lineno + 1,
+            msg: format!("expected `key = value`, got {raw:?}"),
+        })?;
+        let key = key.trim();
+        if key.is_empty() || !key.chars().all(|c| c.is_alphanumeric() || c == '_' || c == '-') {
+            return Err(ParseError { line: lineno + 1, msg: format!("bad key: {key:?}") });
+        }
+        let value = parse_value(val.trim()).map_err(|msg| ParseError { line: lineno + 1, msg })?;
+        let full = if section.is_empty() { key.to_string() } else { format!("{section}.{key}") };
+        map.insert(full, value);
+    }
+    Ok(map)
+}
+
+fn strip_comment(line: &str) -> &str {
+    // `#` starts a comment unless inside a quoted string.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<Value, String> {
+    if s.is_empty() {
+        return Err("empty value".into());
+    }
+    if let Some(inner) = s.strip_prefix('"') {
+        let inner = inner.strip_suffix('"').ok_or("unterminated string")?;
+        return Ok(Value::Str(unescape(inner)));
+    }
+    if s == "true" {
+        return Ok(Value::Bool(true));
+    }
+    if s == "false" {
+        return Ok(Value::Bool(false));
+    }
+    if let Some(inner) = s.strip_prefix('[') {
+        let inner = inner.strip_suffix(']').ok_or("unterminated array")?.trim();
+        if inner.is_empty() {
+            return Ok(Value::Array(Vec::new()));
+        }
+        let items: Result<Vec<Value>, String> =
+            split_top_level(inner).into_iter().map(|p| parse_value(p.trim())).collect();
+        return Ok(Value::Array(items?));
+    }
+    let clean = s.replace('_', "");
+    if let Ok(i) = clean.parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    if let Ok(f) = clean.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    Err(format!("cannot parse value: {s:?}"))
+}
+
+fn split_top_level(s: &str) -> Vec<&str> {
+    let mut parts = Vec::new();
+    let mut depth = 0usize;
+    let mut in_str = false;
+    let mut start = 0usize;
+    for (i, c) in s.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '[' if !in_str => depth += 1,
+            ']' if !in_str => depth = depth.saturating_sub(1),
+            ',' if !in_str && depth == 0 => {
+                parts.push(&s[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    parts.push(&s[start..]);
+    parts
+}
+
+fn unescape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    let mut chars = s.chars();
+    while let Some(c) = chars.next() {
+        if c == '\\' {
+            match chars.next() {
+                Some('n') => out.push('\n'),
+                Some('t') => out.push('\t'),
+                Some('"') => out.push('"'),
+                Some('\\') => out.push('\\'),
+                Some(other) => {
+                    out.push('\\');
+                    out.push(other);
+                }
+                None => out.push('\\'),
+            }
+        } else {
+            out.push(c);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let doc = r#"
+# experiment config
+[train]
+topics = 5_000
+alpha = 0.1
+sampler = "inverted-xy"
+verbose = true
+
+[cluster.network]
+bandwidth_gbps = 1.0
+"#;
+        let m = parse(doc).unwrap();
+        assert_eq!(m["train.topics"].as_i64(), Some(5000));
+        assert_eq!(m["train.alpha"].as_f64(), Some(0.1));
+        assert_eq!(m["train.sampler"].as_str(), Some("inverted-xy"));
+        assert_eq!(m["train.verbose"].as_bool(), Some(true));
+        assert_eq!(m["cluster.network.bandwidth_gbps"].as_f64(), Some(1.0));
+    }
+
+    #[test]
+    fn parses_arrays() {
+        let m = parse("ks = [1000, 5000, 10000]\nnames = [\"a\", \"b\"]").unwrap();
+        let ks: Vec<i64> = m["ks"].as_array().unwrap().iter().map(|v| v.as_i64().unwrap()).collect();
+        assert_eq!(ks, vec![1000, 5000, 10000]);
+        assert_eq!(m["names"].as_array().unwrap().len(), 2);
+    }
+
+    #[test]
+    fn comment_inside_string_preserved() {
+        let m = parse(r##"path = "dir#1/file""##).unwrap();
+        assert_eq!(m["path"].as_str(), Some("dir#1/file"));
+    }
+
+    #[test]
+    fn int_promotes_to_f64() {
+        let m = parse("x = 3").unwrap();
+        assert_eq!(m["x"].as_f64(), Some(3.0));
+    }
+
+    #[test]
+    fn error_reports_line() {
+        let err = parse("ok = 1\nbroken line").unwrap_err();
+        assert_eq!(err.line, 2);
+    }
+
+    #[test]
+    fn rejects_bad_section() {
+        assert!(parse("[bad section!]").is_err());
+        assert!(parse("[unterminated").is_err());
+    }
+
+    #[test]
+    fn escapes_in_strings() {
+        let m = parse(r#"s = "a\nb\t\"c\"""#).unwrap();
+        assert_eq!(m["s"].as_str(), Some("a\nb\t\"c\""));
+    }
+}

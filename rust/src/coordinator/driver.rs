@@ -1,0 +1,607 @@
+//! The round/iteration driver: scheduler + workers + KV-store + cluster.
+//!
+//! One iteration = `B` rounds (B = number of blocks). Each round:
+//!
+//! 1. **Totals sync** (policy-dependent, §3.3): every worker snapshots
+//!    `C_k` from the KV-store — a K-sized vector, the only non-separable
+//!    state.
+//! 2. **Block fetch**: each worker leases the block the rotation schedule
+//!    assigns it. Fetch flows are timed individually (they contend on the
+//!    shard-home NICs).
+//! 3. **Compute**: workers sample their shard ∩ block tokens. Work is real
+//!    and measured; worker RNG streams make results independent of
+//!    execution order, so the serial host execution is *exactly* what a
+//!    parallel cluster would compute.
+//! 4. **Commit**: blocks return to the store; signed `C_k` deltas merge.
+//!    The paper's `Δ_{r,i}` is recorded here (truth vs worker snapshots).
+//! 5. **Clock**: per-worker simulated time advances by comm + compute
+//!    (overlapped if `coord.prefetch`), then the round barrier aligns all
+//!    clocks (Algorithm 1's "once all the workers have finished").
+
+use anyhow::{bail, Context, Result};
+
+use crate::cluster::simclock::barrier;
+use crate::cluster::{ClusterSpec, MemCategory, MemoryAccountant, NetworkModel, SimClock};
+use crate::config::{CkSyncPolicy, Config, SamplerKind};
+use crate::corpus::{self, Corpus, DataPartition};
+use crate::kvstore::{KvStore, ShardMap};
+use crate::metrics::{joint_log_likelihood_blocks, DeltaTracker};
+use crate::model::{Assignments, BlockMap, DocTopic, TopicCounts};
+use crate::sampler::xla_dense::MicrobatchExecutor;
+use crate::sampler::Params;
+use crate::util::rng::Pcg64;
+
+use super::scheduler::RotationSchedule;
+use super::timeline::{Phase, Span, Timeline};
+use super::worker::{Backend, WorkerState};
+
+/// Per-iteration statistics.
+#[derive(Debug, Clone)]
+pub struct IterStats {
+    pub iteration: usize,
+    /// Simulated cluster time at iteration end (seconds).
+    pub sim_time: f64,
+    /// Tokens sampled this iteration.
+    pub tokens: u64,
+    /// Mean `Δ_{r,i}` over the iteration's rounds.
+    pub mean_delta: f64,
+    /// Communication bytes this iteration.
+    pub comm_bytes: u64,
+    /// Host compute seconds actually spent sampling this iteration.
+    pub host_compute_secs: f64,
+}
+
+/// Full training report.
+#[derive(Debug, Clone, Default)]
+pub struct TrainReport {
+    /// (iteration, sim_time, loglik) at each `ll_every` checkpoint.
+    pub ll_series: Vec<(usize, f64, f64)>,
+    pub iters: Vec<IterStats>,
+    pub final_loglik: f64,
+    /// Max per-node peak memory (Fig 4a y-axis).
+    pub peak_mem_bytes: u64,
+    pub total_comm_bytes: u64,
+    pub total_tokens: u64,
+    pub sim_time: f64,
+}
+
+/// The model-parallel training driver.
+pub struct Driver {
+    pub cfg: Config,
+    pub corpus: Corpus,
+    pub params: Params,
+    assign: Assignments,
+    dt: DocTopic,
+    kv: KvStore,
+    schedule: RotationSchedule,
+    workers: Vec<WorkerState>,
+    spec: ClusterSpec,
+    net: NetworkModel,
+    clocks: Vec<SimClock>,
+    pub mem: MemoryAccountant,
+    pub deltas: DeltaTracker,
+    /// Per-round phase trace (enabled by `output.trace`).
+    pub timeline: Timeline,
+    iteration: usize,
+    exec: Option<Box<dyn MicrobatchExecutor>>,
+}
+
+impl Driver {
+    /// Build a driver, generating the corpus from config.
+    pub fn new(cfg: &Config) -> Result<Driver> {
+        let corpus = corpus::build(&cfg.corpus)?;
+        Self::with_corpus(cfg, corpus)
+    }
+
+    /// Build a driver over an existing corpus (experiments reuse corpora
+    /// across configurations).
+    pub fn with_corpus(cfg: &Config, corpus: Corpus) -> Result<Driver> {
+        let mut cfg = cfg.clone();
+        cfg.finalize()?;
+        if corpus.num_words() < cfg.coord.blocks {
+            bail!(
+                "vocabulary ({}) smaller than block count ({})",
+                corpus.num_words(),
+                cfg.coord.blocks
+            );
+        }
+        let k = cfg.train.topics;
+        let params = Params::new(k, corpus.num_words(), cfg.train.alpha, cfg.train.beta);
+
+        // Initial assignments and counts.
+        let mut rng = Pcg64::with_stream(cfg.train.seed, 0xd217);
+        let assign = Assignments::random(&corpus, k, &mut rng);
+        let (dt, wt, ck) = assign.build_counts(&corpus);
+
+        // Model blocks + KV store.
+        let freqs = corpus.word_frequencies();
+        let map = match cfg.coord.block_layout {
+            crate::config::BlockLayout::Strided => {
+                BlockMap::strided(corpus.num_words(), cfg.coord.blocks)
+            }
+            crate::config::BlockLayout::Balanced => BlockMap::balanced(&freqs, cfg.coord.blocks),
+            crate::config::BlockLayout::Even => {
+                BlockMap::even(corpus.num_words(), cfg.coord.blocks)
+            }
+        };
+        let blocks = Assignments::build_blocks(&wt, &map);
+        drop(wt); // the full table never persists — blocks own the rows now
+
+        let spec = ClusterSpec::from_config(&cfg.cluster);
+        let shards = ShardMap::round_robin(cfg.coord.blocks, &spec);
+        let kv = KvStore::new(blocks, ck.clone(), shards);
+
+        // Workers: disjoint doc shards, private RNG streams.
+        let part = DataPartition::balanced(&corpus, cfg.coord.workers);
+        let workers: Vec<WorkerState> = (0..cfg.coord.workers)
+            .map(|w| {
+                let mut ws = WorkerState::new(
+                    w,
+                    spec.worker_home(w),
+                    part.shards[w].clone(),
+                    &corpus,
+                    k,
+                    cfg.train.seed,
+                );
+                ws.install_totals(ck.clone());
+                ws
+            })
+            .collect();
+
+        let net = NetworkModel::new(&spec);
+        let clocks = vec![SimClock::new(spec.node.cores, spec.node.speed); cfg.coord.workers];
+        let mut mem =
+            MemoryAccountant::new(spec.machines, spec.node.ram_bytes, cfg.cluster.enforce_ram);
+
+        // Static memory: shard data + index + doc-topic per worker machine;
+        // KV shard bytes per home machine.
+        for w in &workers {
+            mem.charge(w.machine, MemCategory::Data, w.resident_bytes(&corpus))
+                .context("charging worker data")?;
+            mem.charge(w.machine, MemCategory::Index, w.index.bytes())?;
+            let dt_bytes: u64 = w.docs.iter().map(|&d| dt.doc(d as usize).bytes()).sum();
+            mem.charge(w.machine, MemCategory::DocTopic, dt_bytes)?;
+        }
+        for (node, bytes) in kv.shard_bytes(spec.machines).into_iter().enumerate() {
+            mem.charge(node, MemCategory::KvShard, bytes)?;
+        }
+
+        let schedule = RotationSchedule::new(cfg.coord.workers, cfg.coord.blocks);
+        let trace_enabled = cfg.output.trace;
+        Ok(Driver {
+            cfg,
+            corpus,
+            params,
+            assign,
+            dt,
+            kv,
+            schedule,
+            workers,
+            spec,
+            net,
+            clocks,
+            mem,
+            deltas: DeltaTracker::new(),
+            timeline: Timeline::new(trace_enabled),
+            iteration: 0,
+            exec: None,
+        })
+    }
+
+    /// Install the XLA microbatch executor (required when
+    /// `train.sampler = "xla"`). The executor is shared across workers —
+    /// calls are serialized, matching one PJRT client per process.
+    pub fn set_executor(&mut self, exec: Box<dyn MicrobatchExecutor>) {
+        self.exec = Some(exec);
+    }
+
+    pub fn sim_time(&self) -> f64 {
+        self.clocks.iter().map(|c| c.now()).fold(0.0, f64::max)
+    }
+
+    pub fn iteration(&self) -> usize {
+        self.iteration
+    }
+
+    pub fn num_workers(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Training log-likelihood from the current (quiescent) state.
+    pub fn loglik(&self) -> f64 {
+        joint_log_likelihood_blocks(
+            &self.dt,
+            self.kv.resident_blocks(),
+            self.kv.totals(),
+            self.corpus.num_words(),
+            self.params.alpha,
+            self.params.beta,
+        )
+    }
+
+    /// Run one full iteration (B rounds). Returns its statistics.
+    pub fn run_iteration(&mut self) -> Result<IterStats> {
+        match self.cfg.train.sampler {
+            SamplerKind::InvertedXy | SamplerKind::Xla => {}
+            other => bail!(
+                "the model-parallel driver runs inverted-xy or xla backends; {} is the \
+                 data-parallel baseline's sampler (see baseline::yahoo)",
+                other.name()
+            ),
+        }
+        let rounds = self.schedule.rounds_per_iteration();
+        let bytes_before = self.kv.meter().total_bytes();
+        let mut tokens = 0u64;
+        let mut host_secs_total = 0.0;
+        let mut delta_sum = 0.0;
+
+        for round in 0..rounds {
+            let sync_totals = match self.cfg.coord.ck_sync {
+                CkSyncPolicy::PerRound | CkSyncPolicy::PerMicrobatch => true,
+                CkSyncPolicy::PerIteration => round == 0,
+            };
+
+            // ---- Phase 1: totals snapshot --------------------------------
+            // Distribution is tree-structured (broadcast half of an
+            // allreduce): the timing uses `reduce_time`, not the star
+            // topology the per-flow records would imply.
+            let mut totals_bytes_per_worker = 0u64;
+            if sync_totals {
+                for w in &mut self.workers {
+                    let before = self.kv.meter().total_bytes();
+                    let t = self.kv.read_totals(w.machine);
+                    totals_bytes_per_worker = self.kv.meter().total_bytes() - before;
+                    w.install_totals(t);
+                }
+            }
+            let _ = self.kv.meter_mut().drain_flows();
+            let t_totals = self.net.reduce_time(totals_bytes_per_worker, self.workers.len());
+
+            // ---- Phase 2: block leases -----------------------------------
+            let mut leased = Vec::with_capacity(self.workers.len());
+            for w in &self.workers {
+                let b = self.schedule.block_for(w.id, round);
+                leased.push(self.kv.lease_block(b, w.machine)?);
+            }
+            let fetch_flows = self.kv.meter_mut().drain_flows();
+            let fetch_times = self.net.per_flow_times(&fetch_flows);
+            debug_assert_eq!(fetch_times.len(), self.workers.len());
+
+            // Memory: the leased block is resident on the worker during the
+            // round.
+            for (w, blk) in self.workers.iter().zip(&leased) {
+                self.mem.charge(w.machine, MemCategory::Model, blk.bytes())?;
+            }
+
+            // ---- Phase 3: compute ---------------------------------------
+            let mut host_secs = Vec::with_capacity(self.workers.len());
+            for (w, blk) in self.workers.iter_mut().zip(leased.iter_mut()) {
+                let mut backend = match self.cfg.train.sampler {
+                    SamplerKind::InvertedXy => Backend::InvertedXy,
+                    SamplerKind::Xla => {
+                        let exec = self
+                            .exec
+                            .as_deref_mut()
+                            .context("xla sampler selected but no executor installed")?;
+                        Backend::Xla(exec)
+                    }
+                    _ => unreachable!(),
+                };
+                let (n, secs) = w.run_round(
+                    &self.corpus,
+                    &mut self.assign.z,
+                    blk,
+                    &mut self.dt,
+                    &self.params,
+                    &mut backend,
+                )?;
+                tokens += n;
+                host_secs_total += secs;
+                host_secs.push(secs);
+            }
+
+            // ---- Phase 4: commits + totals merges ------------------------
+            // Block commits are point-to-point to their shard homes; the
+            // C_k delta merge is the reduce half of the allreduce.
+            let mut merge_bytes_per_worker = 0u64;
+            for (w, blk) in self.workers.iter_mut().zip(leased.drain(..)) {
+                self.mem.release(w.machine, MemCategory::Model, blk.bytes());
+                self.kv.commit_block(blk, w.machine)?;
+                let before = self.kv.meter().total_bytes();
+                let delta = w.extract_totals_delta();
+                self.kv.merge_totals_delta(&delta, w.machine);
+                merge_bytes_per_worker = self.kv.meter().total_bytes() - before;
+            }
+            // Partition the recorded transfers: commit flows timed as a
+            // phase, merge flows timed as a tree reduce.
+            let commit_flows: Vec<crate::cluster::Flow> = self
+                .kv
+                .meter()
+                .pending()
+                .iter()
+                .filter(|t| t.what == crate::kvstore::traffic::TransferKind::BlockCommit)
+                .map(|t| crate::cluster::Flow { src: t.src, dst: t.dst, bytes: t.bytes })
+                .collect();
+            let _ = self.kv.meter_mut().drain_flows();
+            let t_commit = self.net.phase_time(&commit_flows)
+                + self.net.reduce_time(merge_bytes_per_worker, self.workers.len());
+
+            // ---- Δ_{r,i}: truth vs worker snapshots (Fig 3) --------------
+            let snaps: Vec<TopicCounts> = self.workers.iter().map(|w| w.ck.clone()).collect();
+            let d = self.deltas.record_round(
+                self.iteration,
+                round,
+                rounds,
+                self.kv.totals(),
+                &snaps,
+            );
+            delta_sum += d;
+
+            // ---- Clocks + timeline ---------------------------------------
+            let compute_div = self.spec.node.cores as f64 * self.spec.node.speed;
+            for (i, w) in self.workers.iter().enumerate() {
+                let c = &mut self.clocks[w.id];
+                let t0 = c.now();
+                c.charge_comm(t_totals);
+                let t1 = c.now();
+                self.timeline.record(Span {
+                    worker: w.id,
+                    iteration: self.iteration,
+                    round,
+                    phase: Phase::TotalsSync,
+                    start: t0,
+                    end: t1,
+                });
+                if self.cfg.coord.prefetch {
+                    // §3.2: block transfer overlaps sampling — record both
+                    // lanes starting together.
+                    c.charge_overlapped(host_secs[i], fetch_times[i] + t_commit);
+                    self.timeline.record(Span {
+                        worker: w.id,
+                        iteration: self.iteration,
+                        round,
+                        phase: Phase::Compute,
+                        start: t1,
+                        end: t1 + host_secs[i] / compute_div,
+                    });
+                    self.timeline.record(Span {
+                        worker: w.id,
+                        iteration: self.iteration,
+                        round,
+                        phase: Phase::Fetch,
+                        start: t1,
+                        end: t1 + fetch_times[i] + t_commit,
+                    });
+                } else {
+                    c.charge_comm(fetch_times[i]);
+                    let t2 = c.now();
+                    c.charge_compute(host_secs[i]);
+                    let t3 = c.now();
+                    c.charge_comm(t_commit);
+                    let t4 = c.now();
+                    for (phase, s, e) in [
+                        (Phase::Fetch, t1, t2),
+                        (Phase::Compute, t2, t3),
+                        (Phase::Commit, t3, t4),
+                    ] {
+                        self.timeline.record(Span {
+                            worker: w.id,
+                            iteration: self.iteration,
+                            round,
+                            phase,
+                            start: s,
+                            end: e,
+                        });
+                    }
+                }
+            }
+            let pre_barrier: Vec<f64> = self.clocks.iter().map(|c| c.now()).collect();
+            let bar = barrier(&mut self.clocks);
+            for w in &self.workers {
+                self.timeline.record(Span {
+                    worker: w.id,
+                    iteration: self.iteration,
+                    round,
+                    phase: Phase::Barrier,
+                    start: pre_barrier[w.id],
+                    end: bar,
+                });
+            }
+
+            // KV shard memory can shift as rows grow/shrink.
+            for (node, bytes) in self.kv.shard_bytes(self.spec.machines).into_iter().enumerate() {
+                self.mem.set(node, MemCategory::KvShard, bytes)?;
+            }
+        }
+
+        self.iteration += 1;
+        Ok(IterStats {
+            iteration: self.iteration,
+            sim_time: self.sim_time(),
+            tokens,
+            mean_delta: delta_sum / rounds as f64,
+            comm_bytes: self.kv.meter().total_bytes() - bytes_before,
+            host_compute_secs: host_secs_total,
+        })
+    }
+
+    /// Run `iterations` full sweeps, checkpointing the log-likelihood every
+    /// `ll_every` iterations. `on_iter` observes progress (may be a no-op).
+    pub fn run<F: FnMut(&IterStats, Option<f64>)>(
+        &mut self,
+        iterations: usize,
+        mut on_iter: F,
+    ) -> Result<TrainReport> {
+        let mut report = TrainReport::default();
+        let ll0 = self.loglik();
+        report.ll_series.push((0, 0.0, ll0));
+        for _ in 0..iterations {
+            let stats = self.run_iteration()?;
+            let ll = if self.cfg.train.ll_every > 0
+                && self.iteration % self.cfg.train.ll_every == 0
+            {
+                let ll = self.loglik();
+                report.ll_series.push((self.iteration, stats.sim_time, ll));
+                Some(ll)
+            } else {
+                None
+            };
+            on_iter(&stats, ll);
+            report.total_tokens += stats.tokens;
+            report.iters.push(stats);
+        }
+        report.final_loglik = self.loglik();
+        report.peak_mem_bytes = self.mem.max_peak();
+        report.total_comm_bytes = self.kv.meter().total_bytes();
+        report.sim_time = self.sim_time();
+        Ok(report)
+    }
+
+    /// Verify full-system consistency: KV quiescent, counts match Z.
+    /// Used by integration tests; O(corpus).
+    pub fn check_consistency(&self) -> Result<()> {
+        self.kv
+            .check_quiescent_consistency(self.params.num_topics)
+            .context("kv store")?;
+        // Rebuild a table view from blocks and compare with Z-derived counts.
+        let mut wt = crate::model::WordTopicTable::zeros(
+            self.corpus.num_words(),
+            self.params.num_topics,
+        );
+        for b in self.kv.resident_blocks() {
+            for (i, row) in b.rows.iter().enumerate() {
+                *wt.row_mut(b.word_at(i) as usize) = row.clone();
+            }
+        }
+        self.assign
+            .check_consistency(&self.corpus, &self.dt, &wt, self.kv.totals())
+            .map_err(|e| anyhow::anyhow!(e))
+    }
+
+    /// Access to pieces experiments need.
+    pub fn kv(&self) -> &KvStore {
+        &self.kv
+    }
+
+    pub fn spec(&self) -> &ClusterSpec {
+        &self.spec
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_cfg(workers: usize, sampler: &str) -> Config {
+        Config::from_str(&format!(
+            r#"
+[corpus]
+preset = "tiny"
+seed = 11
+
+[train]
+topics = 16
+iterations = 3
+sampler = "{sampler}"
+seed = 7
+
+[coord]
+workers = {workers}
+
+[cluster]
+preset = "custom"
+machines = {workers}
+"#
+        ))
+        .unwrap()
+    }
+
+    #[test]
+    fn single_iteration_samples_every_token_once() {
+        let mut d = Driver::new(&tiny_cfg(4, "inverted-xy")).unwrap();
+        let stats = d.run_iteration().unwrap();
+        assert_eq!(stats.tokens as usize, d.corpus.num_tokens());
+        d.check_consistency().unwrap();
+        assert!(stats.sim_time > 0.0);
+        assert!(stats.comm_bytes > 0);
+    }
+
+    #[test]
+    fn loglik_rises_over_iterations() {
+        let mut d = Driver::new(&tiny_cfg(4, "inverted-xy")).unwrap();
+        let report = d.run(8, |_, _| {}).unwrap();
+        let first = report.ll_series.first().unwrap().2;
+        let last = report.final_loglik;
+        assert!(last > first + 100.0, "first={first} last={last}");
+        d.check_consistency().unwrap();
+    }
+
+    #[test]
+    fn delta_metric_is_tiny_like_fig3() {
+        let mut d = Driver::new(&tiny_cfg(8, "inverted-xy")).unwrap();
+        d.run(3, |_, _| {}).unwrap();
+        // Fig 3: error near 0 everywhere (bounded well below the [0,2] range).
+        assert!(d.deltas.max_delta() < 0.05, "max delta = {}", d.deltas.max_delta());
+    }
+
+    #[test]
+    fn xla_backend_with_ref_executor() {
+        let mut cfg = tiny_cfg(2, "xla");
+        cfg.train.microbatch = 64;
+        let mut d = Driver::new(&cfg).unwrap();
+        let params = d.params;
+        d.set_executor(Box::new(crate::sampler::xla_dense::RustRefExecutor::new(
+            64, 16, &params,
+        )));
+        let stats = d.run_iteration().unwrap();
+        assert_eq!(stats.tokens as usize, d.corpus.num_tokens());
+        d.check_consistency().unwrap();
+    }
+
+    #[test]
+    fn xla_backend_without_executor_errors() {
+        let mut d = Driver::new(&tiny_cfg(2, "xla")).unwrap();
+        assert!(d.run_iteration().is_err());
+    }
+
+    #[test]
+    fn dense_sampler_rejected_by_mp_driver() {
+        let mut d = Driver::new(&tiny_cfg(2, "dense")).unwrap();
+        let err = d.run_iteration().unwrap_err().to_string();
+        assert!(err.contains("baseline"), "{err}");
+    }
+
+    #[test]
+    fn deterministic_across_runs() {
+        let run = || {
+            let mut d = Driver::new(&tiny_cfg(4, "inverted-xy")).unwrap();
+            d.run(3, |_, _| {}).unwrap().final_loglik
+        };
+        assert_eq!(run(), run());
+    }
+
+    #[test]
+    fn worker_count_does_not_change_total_work() {
+        // More workers split the same iteration; tokens per iteration equal.
+        let t = |workers| {
+            let mut d = Driver::new(&tiny_cfg(workers, "inverted-xy")).unwrap();
+            d.run_iteration().unwrap().tokens
+        };
+        assert_eq!(t(2), t(8));
+    }
+
+    #[test]
+    fn memory_peak_decreases_with_more_machines() {
+        // The Fig 4a effect in miniature.
+        let peak = |workers: usize| {
+            let mut d = Driver::new(&tiny_cfg(workers, "inverted-xy")).unwrap();
+            d.run(2, |_, _| {}).unwrap().peak_mem_bytes
+        };
+        let p2 = peak(2);
+        let p8 = peak(8);
+        assert!(
+            (p8 as f64) < p2 as f64 * 0.55,
+            "peak(2)={p2} peak(8)={p8} — expected ~1/M scaling"
+        );
+    }
+}

@@ -1,0 +1,19 @@
+//! The model-parallel coordinator — the paper's system contribution.
+//!
+//! * [`scheduler`] — Algorithm 1: the task pool and the block-rotation
+//!   schedule (`worker m` takes block `(m + r) mod M` in round `r`).
+//! * [`worker`] — Algorithm 2: receive tasks → fetch model block → Gibbs
+//!   sample on the inverted index → commit the block.
+//! * [`driver`] — ties scheduler, workers, the KV-store, the network model
+//!   and the simulated clocks into the round/iteration loop, collecting the
+//!   convergence/Δ/traffic/memory series the experiments report.
+
+pub mod scheduler;
+pub mod worker;
+pub mod driver;
+pub mod timeline;
+
+pub use driver::{Driver, IterStats, TrainReport};
+pub use scheduler::RotationSchedule;
+pub use timeline::{Phase, Timeline};
+pub use worker::WorkerState;

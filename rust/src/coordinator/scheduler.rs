@@ -1,0 +1,138 @@
+//! Algorithm 1 — the scheduler's rotation schedule.
+//!
+//! The vocabulary's `B` blocks rotate across `P` workers (`B ≥ P`; the
+//! paper's default is `B = P = M`). In round `r`, worker `m` holds block
+//! `(m + r) mod B`; after `B` rounds every worker has processed every
+//! block exactly once — one full *iteration* in which every token was
+//! sampled exactly once. Two invariants make the schedule correct and are
+//! property-tested in `tests/prop_scheduler.rs`:
+//!
+//! 1. **Round disjointness** — no two workers hold the same block in the
+//!    same round (⇒ no write conflict on any word–topic row);
+//! 2. **Iteration completeness** — every (worker, block) pair occurs
+//!    exactly once per iteration (⇒ every token sampled exactly once).
+
+/// The static rotation schedule.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RotationSchedule {
+    workers: usize,
+    blocks: usize,
+}
+
+impl RotationSchedule {
+    pub fn new(workers: usize, blocks: usize) -> RotationSchedule {
+        assert!(workers >= 1, "need at least one worker");
+        assert!(
+            blocks >= workers,
+            "blocks ({blocks}) must be >= workers ({workers}) for round disjointness"
+        );
+        RotationSchedule { workers, blocks }
+    }
+
+    pub fn num_workers(&self) -> usize {
+        self.workers
+    }
+
+    pub fn num_blocks(&self) -> usize {
+        self.blocks
+    }
+
+    /// Rounds per iteration (= number of blocks).
+    pub fn rounds_per_iteration(&self) -> usize {
+        self.blocks
+    }
+
+    /// Block held by `worker` in `round` (rounds count within an
+    /// iteration; passing a global round index works too since the
+    /// schedule is periodic).
+    #[inline]
+    pub fn block_for(&self, worker: usize, round: usize) -> u32 {
+        debug_assert!(worker < self.workers);
+        ((worker + round) % self.blocks) as u32
+    }
+
+    /// The tasks of one round: `(worker, block)` pairs.
+    pub fn round_tasks(&self, round: usize) -> Vec<(usize, u32)> {
+        (0..self.workers).map(|w| (w, self.block_for(w, round))).collect()
+    }
+
+    /// Check round disjointness for a specific round.
+    pub fn round_is_disjoint(&self, round: usize) -> bool {
+        let mut seen = vec![false; self.blocks];
+        for w in 0..self.workers {
+            let b = self.block_for(w, round) as usize;
+            if seen[b] {
+                return false;
+            }
+            seen[b] = true;
+        }
+        true
+    }
+
+    /// Check iteration completeness: over `blocks` rounds, each worker sees
+    /// each block exactly once.
+    pub fn iteration_is_complete(&self) -> bool {
+        for w in 0..self.workers {
+            let mut seen = vec![false; self.blocks];
+            for r in 0..self.blocks {
+                let b = self.block_for(w, r) as usize;
+                if seen[b] {
+                    return false;
+                }
+                seen[b] = true;
+            }
+            if !seen.iter().all(|&s| s) {
+                return false;
+            }
+        }
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_default_square_schedule() {
+        let s = RotationSchedule::new(4, 4);
+        assert_eq!(s.rounds_per_iteration(), 4);
+        // Round 0: identity assignment.
+        assert_eq!(s.round_tasks(0), vec![(0, 0), (1, 1), (2, 2), (3, 3)]);
+        // Round 1: rotated by one (m acquires block m+1 mod M — §3.1).
+        assert_eq!(s.round_tasks(1), vec![(0, 1), (1, 2), (2, 3), (3, 0)]);
+        assert!(s.iteration_is_complete());
+        for r in 0..4 {
+            assert!(s.round_is_disjoint(r));
+        }
+    }
+
+    #[test]
+    fn rectangular_schedule_more_blocks_than_workers() {
+        let s = RotationSchedule::new(3, 7);
+        assert_eq!(s.rounds_per_iteration(), 7);
+        for r in 0..7 {
+            assert!(s.round_is_disjoint(r), "round {r}");
+        }
+        assert!(s.iteration_is_complete());
+    }
+
+    #[test]
+    fn single_worker_degenerates_to_serial() {
+        let s = RotationSchedule::new(1, 5);
+        let blocks: Vec<u32> = (0..5).map(|r| s.block_for(0, r)).collect();
+        assert_eq!(blocks, vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    #[should_panic(expected = "must be >=")]
+    fn fewer_blocks_than_workers_panics() {
+        RotationSchedule::new(4, 2);
+    }
+
+    #[test]
+    fn schedule_is_periodic() {
+        let s = RotationSchedule::new(2, 4);
+        assert_eq!(s.block_for(1, 3), s.block_for(1, 7));
+    }
+}

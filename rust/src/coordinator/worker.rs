@@ -1,0 +1,227 @@
+//! Algorithm 2 — the worker.
+//!
+//! A worker owns a fixed document shard (data-parallel side) and, each
+//! round, one leased model block (model-parallel side). Its loop:
+//!
+//! ```text
+//! while not converged:
+//!   receive tasks from scheduler            (driver hands it the block id)
+//!   request model blocks from kv-store      (driver leases on its behalf)
+//!   Gibbs sampling using eq. 3              (run_round, below)
+//!   commit new model blocks to kv-store
+//! ```
+//!
+//! The worker's private state — doc–topic counts are shared-by-disjointness
+//! (each document belongs to exactly one worker), the `C_k` snapshot is
+//! private and lazily synced (§3.3), and the RNG is a per-worker stream so
+//! results are independent of worker execution order (tested in
+//! `sampler::inverted_xy`).
+
+use anyhow::Result;
+
+use crate::corpus::{Corpus, InvertedIndex};
+use crate::model::{DocTopic, ModelBlock, TopicCounts};
+use crate::sampler::xla_dense::MicrobatchExecutor;
+use crate::sampler::{inverted_xy, xla_dense, Params, Scratch};
+use crate::util::rng::Pcg64;
+
+/// Which compute path the worker uses inside a round.
+pub enum Backend<'a> {
+    /// The paper's sparse X+Y sampler (rust, §4.2).
+    InvertedXy,
+    /// Dense microbatch sampling on an AOT-compiled XLA executable.
+    Xla(&'a mut dyn MicrobatchExecutor),
+}
+
+/// Per-worker persistent state.
+pub struct WorkerState {
+    pub id: usize,
+    /// Machine hosting this worker.
+    pub machine: usize,
+    /// Document ids of the shard (sorted).
+    pub docs: Vec<u32>,
+    /// Inverted index over the shard (§4.2).
+    pub index: InvertedIndex,
+    /// Private RNG stream.
+    pub rng: Pcg64,
+    /// Dense scratch (allocation-free sampling).
+    pub scratch: Scratch,
+    /// Local `C_k` snapshot (drifts within a round — §3.3).
+    pub ck: TopicCounts,
+    /// Value of the snapshot at the last totals read (for delta extraction).
+    pub ck_read: TopicCounts,
+    /// Tokens sampled since construction.
+    pub tokens_sampled: u64,
+}
+
+impl WorkerState {
+    pub fn new(
+        id: usize,
+        machine: usize,
+        docs: Vec<u32>,
+        corpus: &Corpus,
+        num_topics: usize,
+        seed: u64,
+    ) -> WorkerState {
+        let index = InvertedIndex::build(corpus, &docs);
+        WorkerState {
+            id,
+            machine,
+            docs,
+            index,
+            rng: Pcg64::with_stream(seed, id as u64 + 1),
+            scratch: Scratch::new(num_topics),
+            ck: TopicCounts::zeros(num_topics),
+            ck_read: TopicCounts::zeros(num_topics),
+            tokens_sampled: 0,
+        }
+    }
+
+    /// Install a fresh `C_k` snapshot (round-start sync).
+    pub fn install_totals(&mut self, totals: TopicCounts) {
+        self.ck = totals.clone();
+        self.ck_read = totals;
+    }
+
+    /// Signed delta accumulated since the last read/extract, and reset the
+    /// baseline (round-end merge).
+    pub fn extract_totals_delta(&mut self) -> TopicCounts {
+        let delta = self.ck.diff(&self.ck_read);
+        self.ck_read = self.ck.clone();
+        delta
+    }
+
+    /// Run one round over the leased block: sample every token of the
+    /// shard whose word lies in the block. Returns (tokens, host-seconds).
+    pub fn run_round(
+        &mut self,
+        corpus: &Corpus,
+        assign_z: &mut [Vec<u32>],
+        block: &mut ModelBlock,
+        dt: &mut DocTopic,
+        params: &Params,
+        backend: &mut Backend<'_>,
+    ) -> Result<(u64, f64)> {
+        let t0 = crate::util::cputime::CpuTimer::start();
+        let tokens = match backend {
+            Backend::InvertedXy => inverted_xy::sample_block(
+                corpus,
+                assign_z,
+                &self.index,
+                block,
+                dt,
+                &mut self.ck,
+                params,
+                &mut self.scratch,
+                &mut self.rng,
+            ),
+            Backend::Xla(exec) => xla_dense::sample_block_microbatch(
+                corpus,
+                assign_z,
+                &self.index,
+                block,
+                dt,
+                &mut self.ck,
+                params,
+                *exec,
+                &mut self.rng,
+            )?,
+        };
+        self.tokens_sampled += tokens;
+        Ok((tokens, t0.elapsed()))
+    }
+
+    /// Bytes of the worker's resident structures (memory accounting):
+    /// token streams + assignments, inverted index, and `C_k` snapshot.
+    pub fn resident_bytes(&self, corpus: &Corpus) -> u64 {
+        let tokens: u64 = self.docs.iter().map(|&d| corpus.docs[d as usize].len() as u64).sum();
+        let data = tokens * 8; // token word id + z assignment
+        let ck = self.ck.num_topics() as u64 * 8 * 2;
+        data + self.index.bytes() + ck
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::corpus::partition::DataPartition;
+    use crate::corpus::synthetic::{generate, GenSpec};
+    use crate::model::{Assignments, BlockMap};
+
+    fn setup() -> (Corpus, Assignments, DocTopic, Vec<ModelBlock>, TopicCounts, Params) {
+        let corpus = generate(&GenSpec {
+            vocab: 150,
+            docs: 60,
+            avg_doc_len: 20,
+            zipf_s: 1.05,
+            topics: 5,
+            alpha: 0.1,
+            seed: 12,
+        });
+        let mut rng = Pcg64::new(3);
+        let assign = Assignments::random(&corpus, 8, &mut rng);
+        let (dt, wt, ck) = assign.build_counts(&corpus);
+        let map = BlockMap::balanced(&corpus.word_frequencies(), 2);
+        let blocks = Assignments::build_blocks(&wt, &map);
+        let params = Params::new(8, corpus.num_words(), 0.1, 0.01);
+        (corpus, assign, dt, blocks, ck, params)
+    }
+
+    #[test]
+    fn round_samples_only_block_tokens() {
+        let (corpus, mut assign, mut dt, mut blocks, ck, params) = setup();
+        let part = DataPartition::balanced(&corpus, 2);
+        let mut w = WorkerState::new(0, 0, part.shards[0].clone(), &corpus, 8, 99);
+        w.install_totals(ck);
+        let block = &mut blocks[0];
+        // Count tokens of shard 0 with words in block 0.
+        let expect: usize = part.shards[0]
+            .iter()
+            .map(|&d| {
+                corpus.docs[d as usize]
+                    .tokens
+                    .iter()
+                    .filter(|&&t| t >= block.lo && t < block.hi)
+                    .count()
+            })
+            .sum();
+        let (n, secs) = w
+            .run_round(&corpus, &mut assign.z, block, &mut dt, &params, &mut Backend::InvertedXy)
+            .unwrap();
+        assert_eq!(n as usize, expect);
+        assert!(secs >= 0.0);
+        assert_eq!(w.tokens_sampled, n);
+    }
+
+    #[test]
+    fn delta_extraction_tracks_ck_drift() {
+        let (corpus, mut assign, mut dt, mut blocks, ck, params) = setup();
+        let part = DataPartition::balanced(&corpus, 1);
+        let mut w = WorkerState::new(0, 0, part.shards[0].clone(), &corpus, 8, 42);
+        let before = ck.clone();
+        w.install_totals(ck);
+        w.run_round(&corpus, &mut assign.z, &mut blocks[0], &mut dt, &params, &mut Backend::InvertedXy)
+            .unwrap();
+        let delta = w.extract_totals_delta();
+        // Delta sums to zero (tokens moved, not created).
+        assert_eq!(delta.as_slice().iter().sum::<i64>(), 0);
+        // Applying the delta to the original totals gives the local view.
+        let mut merged = before;
+        merged.merge(&delta);
+        assert_eq!(merged, w.ck);
+        // Second extraction with no work is all-zero.
+        let delta2 = w.extract_totals_delta();
+        assert!(delta2.as_slice().iter().all(|&x| x == 0));
+    }
+
+    #[test]
+    fn resident_bytes_positive_and_scales() {
+        let (corpus, _assign, _dt, _blocks, ck, _params) = setup();
+        let part = DataPartition::balanced(&corpus, 2);
+        let mut a = WorkerState::new(0, 0, part.shards[0].clone(), &corpus, 8, 1);
+        let mut b = WorkerState::new(1, 1, vec![], &corpus, 8, 1);
+        a.install_totals(ck.clone());
+        b.install_totals(ck);
+        assert!(a.resident_bytes(&corpus) > b.resident_bytes(&corpus));
+    }
+}

@@ -1,0 +1,165 @@
+//! UCI bag-of-words format IO (the format Pubmed ships in).
+//!
+//! `docword.txt`:
+//! ```text
+//! D
+//! W
+//! NNZ
+//! docID wordID count   # 1-based ids, one triple per line
+//! ...
+//! ```
+//! plus an optional `vocab.txt` with one term per line. This loader lets the
+//! real Pubmed `docword.pubmed.txt` drop into the experiment harness
+//! unchanged; the synthetic presets are used when the file is absent.
+
+use std::io::{BufRead, BufReader, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::doc::{Corpus, Document};
+use super::vocab::Vocabulary;
+
+/// Read a UCI `docword` file (optionally gzip-free plain text).
+pub fn read_docword<P: AsRef<Path>>(path: P) -> Result<Corpus> {
+    let path = path.as_ref();
+    let file = std::fs::File::open(path).with_context(|| format!("opening {path:?}"))?;
+    let mut lines = BufReader::new(file).lines();
+    let mut header = |name: &str| -> Result<usize> {
+        lines
+            .next()
+            .transpose()?
+            .with_context(|| format!("missing {name} header"))?
+            .trim()
+            .parse::<usize>()
+            .with_context(|| format!("bad {name} header"))
+    };
+    let n_docs = header("D")?;
+    let n_words = header("W")?;
+    let nnz = header("NNZ")?;
+
+    // Load companion vocab if present (vocab.<name>.txt next to docword).
+    let vocab_path = vocab_sibling(path);
+    let mut vocab = match vocab_path.as_ref().filter(|p| p.exists()) {
+        Some(p) => {
+            let mut v = Vocabulary::new();
+            let f = std::fs::File::open(p)?;
+            for line in BufReader::new(f).lines() {
+                v.intern(line?.trim());
+            }
+            if v.len() != n_words {
+                bail!("vocab file has {} terms, docword header says {}", v.len(), n_words);
+            }
+            v
+        }
+        None => Vocabulary::synthetic(n_words),
+    };
+
+    let mut docs = vec![Document::default(); n_docs];
+    let mut seen = 0usize;
+    for line in lines {
+        let line = line?;
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        let mut it = line.split_whitespace();
+        let (d, w, c): (usize, usize, usize) = match (it.next(), it.next(), it.next()) {
+            (Some(d), Some(w), Some(c)) => (d.parse()?, w.parse()?, c.parse()?),
+            _ => bail!("bad triple line: {line:?}"),
+        };
+        if d == 0 || d > n_docs || w == 0 || w > n_words {
+            bail!("triple out of range: {line:?} (D={n_docs}, W={n_words})");
+        }
+        let word = (w - 1) as u32;
+        docs[d - 1].tokens.extend(std::iter::repeat(word).take(c));
+        vocab.add_occurrences(word, c as u64);
+        seen += 1;
+    }
+    if seen != nnz {
+        log::warn!("docword NNZ header says {nnz}, saw {seen} triples");
+    }
+    Ok(Corpus { docs, vocab })
+}
+
+/// Write a corpus in UCI docword format (round-trip support and fixtures).
+pub fn write_docword<P: AsRef<Path>>(corpus: &Corpus, path: P) -> Result<()> {
+    let mut counts: Vec<std::collections::BTreeMap<u32, usize>> =
+        vec![Default::default(); corpus.num_docs()];
+    for (d, doc) in corpus.docs.iter().enumerate() {
+        for &w in &doc.tokens {
+            *counts[d].entry(w).or_insert(0) += 1;
+        }
+    }
+    let nnz: usize = counts.iter().map(|m| m.len()).sum();
+    let mut out = std::io::BufWriter::new(std::fs::File::create(path.as_ref())?);
+    writeln!(out, "{}", corpus.num_docs())?;
+    writeln!(out, "{}", corpus.num_words())?;
+    writeln!(out, "{nnz}")?;
+    for (d, m) in counts.iter().enumerate() {
+        for (&w, &c) in m {
+            writeln!(out, "{} {} {}", d + 1, w + 1, c)?;
+        }
+    }
+    Ok(())
+}
+
+fn vocab_sibling(docword: &Path) -> Option<std::path::PathBuf> {
+    let name = docword.file_name()?.to_str()?;
+    let vocab_name = if let Some(rest) = name.strip_prefix("docword.") {
+        format!("vocab.{rest}")
+    } else {
+        format!("vocab.{name}")
+    };
+    Some(docword.with_file_name(vocab_name))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_trip() {
+        let dir = std::env::temp_dir().join(format!("mplda_bow_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let vocab = Vocabulary::synthetic(4);
+        let corpus = Corpus {
+            docs: vec![
+                Document { tokens: vec![0, 0, 1] },
+                Document { tokens: vec![2, 3, 3, 3] },
+            ],
+            vocab,
+        };
+        let path = dir.join("docword.test.txt");
+        write_docword(&corpus, &path).unwrap();
+        let loaded = read_docword(&path).unwrap();
+        assert_eq!(loaded.num_docs(), 2);
+        assert_eq!(loaded.num_words(), 4);
+        assert_eq!(loaded.num_tokens(), 7);
+        // Token multiset per doc preserved (order within doc may differ).
+        let mut d0 = loaded.docs[0].tokens.clone();
+        d0.sort_unstable();
+        assert_eq!(d0, vec![0, 0, 1]);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn rejects_out_of_range() {
+        let dir = std::env::temp_dir().join(format!("mplda_bow_bad_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("docword.bad.txt");
+        std::fs::write(&path, "1\n2\n1\n1 5 1\n").unwrap();
+        assert!(read_docword(&path).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn missing_header_is_error() {
+        let dir = std::env::temp_dir().join(format!("mplda_bow_hdr_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("docword.short.txt");
+        std::fs::write(&path, "3\n").unwrap();
+        assert!(read_docword(&path).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

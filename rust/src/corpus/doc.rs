@@ -1,0 +1,119 @@
+//! Documents and corpora in forward (bag-of-words) representation.
+//!
+//! Tokens are stored flat per document as word ids; the topic assignments
+//! `z_dn` live in the model state (`model::init`), not here — the corpus is
+//! immutable throughout training (the data/model dichotomy of §1).
+
+use super::vocab::Vocabulary;
+
+/// One document: a flat token stream of word ids.
+#[derive(Debug, Clone, Default)]
+pub struct Document {
+    pub tokens: Vec<u32>,
+}
+
+impl Document {
+    pub fn len(&self) -> usize {
+        self.tokens.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tokens.is_empty()
+    }
+}
+
+/// An immutable corpus: documents + vocabulary.
+#[derive(Debug, Clone, Default)]
+pub struct Corpus {
+    pub docs: Vec<Document>,
+    pub vocab: Vocabulary,
+}
+
+impl Corpus {
+    pub fn num_docs(&self) -> usize {
+        self.docs.len()
+    }
+
+    pub fn num_words(&self) -> usize {
+        self.vocab.len()
+    }
+
+    pub fn num_tokens(&self) -> usize {
+        self.docs.iter().map(|d| d.len()).sum()
+    }
+
+    /// Mean document length.
+    pub fn avg_doc_len(&self) -> f64 {
+        if self.docs.is_empty() {
+            0.0
+        } else {
+            self.num_tokens() as f64 / self.num_docs() as f64
+        }
+    }
+
+    /// Per-word token frequencies computed from the token streams (used to
+    /// cross-check the vocabulary's counters and to balance model blocks).
+    pub fn word_frequencies(&self) -> Vec<u64> {
+        let mut freq = vec![0u64; self.num_words()];
+        for d in &self.docs {
+            for &w in &d.tokens {
+                freq[w as usize] += 1;
+            }
+        }
+        freq
+    }
+
+    /// Human summary line for logs and reports.
+    pub fn summary(&self) -> String {
+        format!(
+            "docs={} vocab={} tokens={} avg_len={:.1}",
+            self.num_docs(),
+            self.num_words(),
+            self.num_tokens(),
+            self.avg_doc_len()
+        )
+    }
+
+    /// Model-variable count for a given K — the paper's headline metric
+    /// (`V × K`), e.g. 218B for Wiki-bigram at K=10⁴.
+    pub fn model_variables(&self, topics: usize) -> u64 {
+        self.num_words() as u64 * topics as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> Corpus {
+        let vocab = Vocabulary::synthetic(5);
+        let docs = vec![
+            Document { tokens: vec![0, 1, 2, 0] },
+            Document { tokens: vec![3, 4] },
+            Document { tokens: vec![] },
+        ];
+        Corpus { docs, vocab }
+    }
+
+    #[test]
+    fn counts() {
+        let c = tiny();
+        assert_eq!(c.num_docs(), 3);
+        assert_eq!(c.num_tokens(), 6);
+        assert_eq!(c.num_words(), 5);
+        assert!((c.avg_doc_len() - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn word_frequencies_from_streams() {
+        let c = tiny();
+        let f = c.word_frequencies();
+        assert_eq!(f, vec![2, 1, 1, 1, 1]);
+    }
+
+    #[test]
+    fn model_variables_scale() {
+        let c = tiny();
+        assert_eq!(c.model_variables(1000), 5000);
+    }
+}

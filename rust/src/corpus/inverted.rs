@@ -1,0 +1,188 @@
+//! Inverted index over a worker's document shard (§4.2).
+//!
+//! Model-parallel rounds sample *by word*: worker `m` must visit exactly the
+//! tokens whose word lies in its current block. A forward (bag-of-words)
+//! scan would re-test every token against the task list each round; the
+//! inverted index stores, per word, the slots `(doc, position)` of all its
+//! occurrences in the shard, so a round visits only its own tokens — the
+//! classic search-engine structure the paper adopts.
+//!
+//! Layout is CSR over the words *present in the shard*: `words[i]` is a
+//! global word id, `offsets[i]..offsets[i+1]` indexes into `slots`.
+
+use super::doc::Corpus;
+
+/// One token occurrence in a shard: document (global id) and position.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TokenSlot {
+    pub doc: u32,
+    pub pos: u32,
+}
+
+/// CSR inverted index for one shard.
+#[derive(Debug, Clone, Default)]
+pub struct InvertedIndex {
+    /// Sorted global word ids present in this shard.
+    pub words: Vec<u32>,
+    /// CSR offsets into `slots`, len = words.len() + 1.
+    pub offsets: Vec<u32>,
+    /// Token slots grouped by word.
+    pub slots: Vec<TokenSlot>,
+}
+
+impl InvertedIndex {
+    /// Build the index for the given document ids of `corpus`.
+    pub fn build(corpus: &Corpus, doc_ids: &[u32]) -> InvertedIndex {
+        // Count occurrences per word (dense over V: V fits comfortably in
+        // memory here; for the full 21.8M-V case this becomes a hashmap —
+        // see `build_sparse_counting`).
+        let v = corpus.num_words();
+        let mut counts = vec![0u32; v];
+        let mut total = 0usize;
+        for &d in doc_ids {
+            for &w in &corpus.docs[d as usize].tokens {
+                counts[w as usize] += 1;
+                total += 1;
+            }
+        }
+        let mut words = Vec::new();
+        let mut offsets = Vec::new();
+        let mut cursor = 0u32;
+        // word id → dense index in `words` (only for present words).
+        let mut word_pos = vec![u32::MAX; v];
+        for (w, &c) in counts.iter().enumerate() {
+            if c > 0 {
+                word_pos[w] = words.len() as u32;
+                words.push(w as u32);
+                offsets.push(cursor);
+                cursor += c;
+            }
+        }
+        offsets.push(cursor);
+        let mut fill: Vec<u32> = offsets[..offsets.len() - 1].to_vec();
+        let mut slots = vec![TokenSlot { doc: 0, pos: 0 }; total];
+        for &d in doc_ids {
+            for (pos, &w) in corpus.docs[d as usize].tokens.iter().enumerate() {
+                let wi = word_pos[w as usize] as usize;
+                slots[fill[wi] as usize] = TokenSlot { doc: d, pos: pos as u32 };
+                fill[wi] += 1;
+            }
+        }
+        InvertedIndex { words, offsets, slots }
+    }
+
+    /// Number of distinct words in the shard.
+    pub fn num_words(&self) -> usize {
+        self.words.len()
+    }
+
+    /// Number of token slots.
+    pub fn num_slots(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Slots for the word at dense index `i`.
+    pub fn slots_at(&self, i: usize) -> &[TokenSlot] {
+        &self.slots[self.offsets[i] as usize..self.offsets[i + 1] as usize]
+    }
+
+    /// Dense index of a global word id, if present.
+    pub fn find(&self, word: u32) -> Option<usize> {
+        self.words.binary_search(&word).ok()
+    }
+
+    /// Iterate `(word, slots)` for all words in the *inclusive-exclusive*
+    /// global word-id range `[lo, hi)` — exactly a model block's tasks.
+    pub fn range(&self, lo: u32, hi: u32) -> impl Iterator<Item = (u32, &[TokenSlot])> {
+        let start = self.words.partition_point(|&w| w < lo);
+        let end = self.words.partition_point(|&w| w < hi);
+        (start..end).map(move |i| (self.words[i], self.slots_at(i)))
+    }
+
+    /// Bytes used (memory accounting).
+    pub fn bytes(&self) -> u64 {
+        (self.words.len() * 4 + self.offsets.len() * 4 + self.slots.len() * 8) as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::corpus::doc::Document;
+    use crate::corpus::vocab::Vocabulary;
+
+    fn corpus() -> Corpus {
+        Corpus {
+            docs: vec![
+                Document { tokens: vec![2, 0, 2] },
+                Document { tokens: vec![1, 2] },
+                Document { tokens: vec![4] },
+            ],
+            vocab: Vocabulary::synthetic(5),
+        }
+    }
+
+    #[test]
+    fn build_full_shard() {
+        let c = corpus();
+        let idx = InvertedIndex::build(&c, &[0, 1, 2]);
+        assert_eq!(idx.words, vec![0, 1, 2, 4]);
+        assert_eq!(idx.num_slots(), 6);
+        let w2 = idx.find(2).unwrap();
+        let slots = idx.slots_at(w2);
+        assert_eq!(slots.len(), 3);
+        assert!(slots.contains(&TokenSlot { doc: 0, pos: 0 }));
+        assert!(slots.contains(&TokenSlot { doc: 0, pos: 2 }));
+        assert!(slots.contains(&TokenSlot { doc: 1, pos: 1 }));
+    }
+
+    #[test]
+    fn build_partial_shard() {
+        let c = corpus();
+        let idx = InvertedIndex::build(&c, &[1]);
+        assert_eq!(idx.words, vec![1, 2]);
+        assert_eq!(idx.num_slots(), 2);
+        assert!(idx.find(0).is_none());
+    }
+
+    #[test]
+    fn range_selects_block() {
+        let c = corpus();
+        let idx = InvertedIndex::build(&c, &[0, 1, 2]);
+        let in_block: Vec<u32> = idx.range(1, 4).map(|(w, _)| w).collect();
+        assert_eq!(in_block, vec![1, 2]);
+        let all: Vec<u32> = idx.range(0, 5).map(|(w, _)| w).collect();
+        assert_eq!(all, vec![0, 1, 2, 4]);
+        assert_eq!(idx.range(3, 4).count(), 0);
+    }
+
+    #[test]
+    fn slots_reference_correct_tokens() {
+        let c = corpus();
+        let idx = InvertedIndex::build(&c, &[0, 1, 2]);
+        for (i, &w) in idx.words.iter().enumerate() {
+            for slot in idx.slots_at(i) {
+                assert_eq!(c.docs[slot.doc as usize].tokens[slot.pos as usize], w);
+            }
+        }
+    }
+
+    #[test]
+    fn every_token_appears_exactly_once() {
+        let c = corpus();
+        let idx = InvertedIndex::build(&c, &[0, 1, 2]);
+        let mut seen = std::collections::HashSet::new();
+        for s in &idx.slots {
+            assert!(seen.insert((s.doc, s.pos)), "duplicate slot {s:?}");
+        }
+        assert_eq!(seen.len(), c.num_tokens());
+    }
+
+    #[test]
+    fn empty_shard() {
+        let c = corpus();
+        let idx = InvertedIndex::build(&c, &[]);
+        assert_eq!(idx.num_words(), 0);
+        assert_eq!(idx.num_slots(), 0);
+    }
+}

@@ -1,0 +1,40 @@
+//! Corpus substrate: vocabulary, documents, IO, synthetic generators,
+//! bigram augmentation, sharding and the inverted index.
+//!
+//! Real Pubmed / Wikipedia dumps are not available in this environment, so
+//! the experiment presets are **simulated corpora** drawn from the LDA
+//! generative process with Zipf word marginals (see `DESIGN.md` §4 for the
+//! substitution argument); the UCI bag-of-words loader in [`bow`] lets the
+//! real files drop in unchanged.
+
+pub mod vocab;
+pub mod doc;
+pub mod bow;
+pub mod synthetic;
+pub mod bigram;
+pub mod partition;
+pub mod inverted;
+pub mod transform;
+
+pub use doc::{Corpus, Document};
+pub use inverted::{InvertedIndex, TokenSlot};
+pub use partition::DataPartition;
+pub use vocab::Vocabulary;
+
+use crate::config::CorpusConfig;
+
+/// Build a corpus from config: dispatch on preset.
+pub fn build(cfg: &CorpusConfig) -> anyhow::Result<Corpus> {
+    match cfg.preset.as_str() {
+        "uci" => bow::read_docword(&cfg.path),
+        "tiny" | "pubmed-sim" | "wiki-uni-sim" | "wiki-bi-sim" | "custom" => {
+            let spec = synthetic::GenSpec::from_config(cfg)?;
+            let mut corpus = synthetic::generate(&spec);
+            if cfg.bigram || cfg.preset == "wiki-bi-sim" {
+                corpus = bigram::augment(&corpus);
+            }
+            Ok(corpus)
+        }
+        other => anyhow::bail!("unknown corpus preset {other:?}"),
+    }
+}

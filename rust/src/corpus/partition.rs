@@ -1,0 +1,127 @@
+//! Data partitioning: assign documents to workers, balanced by token count.
+//!
+//! The paper partitions *data* across workers (each worker owns a fixed
+//! document shard for the whole run) and *model* across rounds (the
+//! rotating word blocks, `model::block`). This module implements the data
+//! side with a greedy longest-processing-time assignment so shards have
+//! near-equal token mass even with skewed document lengths.
+
+use super::doc::Corpus;
+
+/// A partition of document ids across `P` workers.
+#[derive(Debug, Clone)]
+pub struct DataPartition {
+    /// `shards[p]` = sorted doc ids owned by worker `p`.
+    pub shards: Vec<Vec<u32>>,
+    /// Token mass per shard.
+    pub tokens: Vec<u64>,
+}
+
+impl DataPartition {
+    /// Greedy LPT balance of documents over `p` shards by token count.
+    pub fn balanced(corpus: &Corpus, p: usize) -> DataPartition {
+        assert!(p > 0, "need at least one shard");
+        let mut order: Vec<u32> = (0..corpus.num_docs() as u32).collect();
+        order.sort_by_key(|&d| std::cmp::Reverse(corpus.docs[d as usize].len()));
+        let mut shards = vec![Vec::new(); p];
+        let mut tokens = vec![0u64; p];
+        for d in order {
+            // Smallest-load shard; linear scan is fine (P ≤ a few hundred).
+            let (idx, _) = tokens.iter().enumerate().min_by_key(|&(_, &t)| t).unwrap();
+            shards[idx].push(d);
+            tokens[idx] += corpus.docs[d as usize].len() as u64;
+        }
+        for s in &mut shards {
+            s.sort_unstable();
+        }
+        DataPartition { shards, tokens }
+    }
+
+    pub fn num_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Max/min token imbalance ratio (1.0 = perfect).
+    pub fn imbalance(&self) -> f64 {
+        let max = *self.tokens.iter().max().unwrap_or(&0) as f64;
+        let min = *self.tokens.iter().min().unwrap_or(&0) as f64;
+        if min == 0.0 {
+            f64::INFINITY
+        } else {
+            max / min
+        }
+    }
+
+    /// Every document appears exactly once across shards.
+    pub fn is_exact_cover(&self, num_docs: usize) -> bool {
+        let mut seen = vec![false; num_docs];
+        for s in &self.shards {
+            for &d in s {
+                if d as usize >= num_docs || seen[d as usize] {
+                    return false;
+                }
+                seen[d as usize] = true;
+            }
+        }
+        seen.iter().all(|&x| x)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::corpus::synthetic::{generate, GenSpec};
+
+    fn corpus() -> Corpus {
+        generate(&GenSpec {
+            vocab: 300,
+            docs: 400,
+            avg_doc_len: 25,
+            zipf_s: 1.05,
+            topics: 8,
+            alpha: 0.1,
+            seed: 5,
+        })
+    }
+
+    #[test]
+    fn exact_cover() {
+        let c = corpus();
+        for p in [1, 2, 3, 8, 64] {
+            let part = DataPartition::balanced(&c, p);
+            assert!(part.is_exact_cover(c.num_docs()), "p={p}");
+        }
+    }
+
+    #[test]
+    fn balanced_within_tolerance() {
+        let c = corpus();
+        let part = DataPartition::balanced(&c, 8);
+        assert!(part.imbalance() < 1.1, "imbalance={}", part.imbalance());
+    }
+
+    #[test]
+    fn single_shard_gets_everything() {
+        let c = corpus();
+        let part = DataPartition::balanced(&c, 1);
+        assert_eq!(part.shards[0].len(), c.num_docs());
+        assert_eq!(part.tokens[0] as usize, c.num_tokens());
+    }
+
+    #[test]
+    fn more_shards_than_docs() {
+        let c = generate(&GenSpec {
+            vocab: 50,
+            docs: 3,
+            avg_doc_len: 5,
+            zipf_s: 1.0,
+            topics: 2,
+            alpha: 0.5,
+            seed: 1,
+        });
+        let part = DataPartition::balanced(&c, 8);
+        assert!(part.is_exact_cover(3));
+        let nonempty = part.shards.iter().filter(|s| !s.is_empty()).count();
+        assert_eq!(nonempty, 3);
+    }
+}

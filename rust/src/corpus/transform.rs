@@ -1,0 +1,145 @@
+//! Corpus transforms: frequency filtering, train/held-out splitting and
+//! document shuffling — the preprocessing a real deployment runs before
+//! training (stopword-type pruning matters doubly here because the block
+//! partitioner balances by token mass, and an unpruned head word can pin a
+//! block's mass).
+
+use crate::util::rng::Pcg64;
+
+use super::doc::{Corpus, Document};
+use super::vocab::Vocabulary;
+
+/// Drop words outside `[min_freq, max_frac]`: rarer than `min_freq`
+/// occurrences or present in more than `max_frac` of token mass (stopword
+/// proxy). Remaining words are re-interned (ids re-ranked by frequency).
+pub fn filter_by_frequency(corpus: &Corpus, min_freq: u64, max_frac: f64) -> Corpus {
+    let freqs = corpus.word_frequencies();
+    let total: u64 = freqs.iter().sum();
+    let cap = (total as f64 * max_frac) as u64;
+    let keep: Vec<bool> = freqs.iter().map(|&f| f >= min_freq && f <= cap).collect();
+
+    let mut vocab = Vocabulary::new();
+    let mut remap = vec![u32::MAX; corpus.num_words()];
+    let mut docs = Vec::with_capacity(corpus.num_docs());
+    for doc in &corpus.docs {
+        let tokens: Vec<u32> = doc
+            .tokens
+            .iter()
+            .filter(|&&t| keep[t as usize])
+            .map(|&t| {
+                if remap[t as usize] == u32::MAX {
+                    remap[t as usize] = vocab.intern(corpus.vocab.term(t));
+                } else {
+                    let id = remap[t as usize];
+                    vocab.add_occurrences(id, 1);
+                }
+                remap[t as usize]
+            })
+            .collect();
+        docs.push(Document { tokens });
+    }
+    let final_remap = vocab.freeze();
+    for d in &mut docs {
+        for t in &mut d.tokens {
+            *t = final_remap[*t as usize];
+        }
+    }
+    Corpus { docs, vocab }
+}
+
+/// Split document ids into (train, held-out) with `held_frac` held out,
+/// deterministic under `seed`.
+pub fn train_test_split(corpus: &Corpus, held_frac: f64, seed: u64) -> (Vec<u32>, Vec<u32>) {
+    assert!((0.0..1.0).contains(&held_frac));
+    let mut ids: Vec<u32> = (0..corpus.num_docs() as u32).collect();
+    let mut rng = Pcg64::with_stream(seed, 0x5117);
+    rng.shuffle(&mut ids);
+    let held = (corpus.num_docs() as f64 * held_frac).round() as usize;
+    let (test, train) = ids.split_at(held);
+    let mut train = train.to_vec();
+    let mut test = test.to_vec();
+    train.sort_unstable();
+    test.sort_unstable();
+    (train, test)
+}
+
+/// Materialize a sub-corpus from document ids (shares the vocabulary).
+pub fn subset(corpus: &Corpus, doc_ids: &[u32]) -> Corpus {
+    Corpus {
+        docs: doc_ids.iter().map(|&d| corpus.docs[d as usize].clone()).collect(),
+        vocab: corpus.vocab.clone(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::corpus::synthetic::{generate, GenSpec};
+
+    fn fixture() -> Corpus {
+        generate(&GenSpec {
+            vocab: 400,
+            docs: 200,
+            avg_doc_len: 30,
+            zipf_s: 1.1,
+            topics: 8,
+            alpha: 0.1,
+            seed: 44,
+        })
+    }
+
+    #[test]
+    fn frequency_filter_prunes_head_and_tail() {
+        let corpus = fixture();
+        let before_v = corpus.num_words();
+        let filtered = filter_by_frequency(&corpus, 3, 0.02);
+        assert!(filtered.num_words() < before_v);
+        // The cap is defined against the ORIGINAL token mass.
+        let orig_total: u64 = corpus.word_frequencies().iter().sum();
+        let cap = (orig_total as f64 * 0.02) as u64;
+        let freqs = filtered.word_frequencies();
+        for (w, &f) in freqs.iter().enumerate() {
+            assert!(f >= 3, "word {w} below min_freq survived");
+            assert!(f <= cap, "head word {w} survived (f={f} cap={cap})");
+        }
+        // Vocabulary counters must agree with the token streams.
+        for w in 0..filtered.num_words() as u32 {
+            assert_eq!(filtered.vocab.freq(w), freqs[w as usize]);
+        }
+    }
+
+    #[test]
+    fn filter_keeps_ids_frequency_ranked() {
+        let filtered = filter_by_frequency(&fixture(), 2, 0.5);
+        let f = filtered.word_frequencies();
+        for w in 1..f.len() {
+            assert!(f[w - 1] >= f[w]);
+        }
+    }
+
+    #[test]
+    fn split_is_exact_partition_and_deterministic() {
+        let corpus = fixture();
+        let (tr1, te1) = train_test_split(&corpus, 0.2, 9);
+        let (tr2, te2) = train_test_split(&corpus, 0.2, 9);
+        assert_eq!(tr1, tr2);
+        assert_eq!(te1, te2);
+        assert_eq!(tr1.len() + te1.len(), corpus.num_docs());
+        let mut all: Vec<u32> = tr1.iter().chain(te1.iter()).copied().collect();
+        all.sort_unstable();
+        assert_eq!(all, (0..corpus.num_docs() as u32).collect::<Vec<_>>());
+        assert_eq!(te1.len(), 40);
+        // Different seed → different split.
+        let (tr3, _) = train_test_split(&corpus, 0.2, 10);
+        assert_ne!(tr1, tr3);
+    }
+
+    #[test]
+    fn subset_shares_vocab() {
+        let corpus = fixture();
+        let sub = subset(&corpus, &[0, 5, 7]);
+        assert_eq!(sub.num_docs(), 3);
+        assert_eq!(sub.num_words(), corpus.num_words());
+        assert_eq!(sub.docs[1].tokens, corpus.docs[5].tokens);
+    }
+}

@@ -1,0 +1,161 @@
+//! Vocabulary: term id ↔ surface-form mapping plus corpus frequencies.
+//!
+//! For synthetic corpora the surface forms are generated (`w000123`); for
+//! UCI corpora they come from the `vocab.*.txt` companion file. Word ids are
+//! **frequency-ranked** (id 0 = most frequent) after [`Vocabulary::freeze`],
+//! which the block partitioner exploits to balance blocks by token mass.
+
+use std::collections::HashMap;
+
+/// A vocabulary under construction or frozen.
+#[derive(Debug, Clone, Default)]
+pub struct Vocabulary {
+    terms: Vec<String>,
+    freqs: Vec<u64>,
+    index: HashMap<String, u32>,
+    frozen: bool,
+}
+
+impl Vocabulary {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Create a synthetic vocabulary of `v` terms with ids already ranked.
+    pub fn synthetic(v: usize) -> Self {
+        let terms: Vec<String> = (0..v).map(|i| format!("w{i:07}")).collect();
+        let index = terms.iter().enumerate().map(|(i, t)| (t.clone(), i as u32)).collect();
+        Vocabulary { terms, freqs: vec![0; v], index, frozen: false }
+    }
+
+    /// Intern a term, returning its id; counts one occurrence.
+    pub fn intern(&mut self, term: &str) -> u32 {
+        assert!(!self.frozen, "cannot intern into a frozen vocabulary");
+        if let Some(&id) = self.index.get(term) {
+            self.freqs[id as usize] += 1;
+            return id;
+        }
+        let id = self.terms.len() as u32;
+        self.terms.push(term.to_string());
+        self.freqs.push(1);
+        self.index.insert(term.to_string(), id);
+        id
+    }
+
+    /// Record `n` occurrences of an existing id (bulk loaders).
+    pub fn add_occurrences(&mut self, id: u32, n: u64) {
+        self.freqs[id as usize] += n;
+    }
+
+    pub fn len(&self) -> usize {
+        self.terms.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.terms.is_empty()
+    }
+
+    pub fn term(&self, id: u32) -> &str {
+        &self.terms[id as usize]
+    }
+
+    pub fn id(&self, term: &str) -> Option<u32> {
+        self.index.get(term).copied()
+    }
+
+    pub fn freq(&self, id: u32) -> u64 {
+        self.freqs[id as usize]
+    }
+
+    pub fn total_tokens(&self) -> u64 {
+        self.freqs.iter().sum()
+    }
+
+    /// Re-rank ids by descending frequency. Returns the old→new id mapping
+    /// the caller must apply to token streams.
+    pub fn freeze(&mut self) -> Vec<u32> {
+        let mut order: Vec<u32> = (0..self.terms.len() as u32).collect();
+        order.sort_by_key(|&id| std::cmp::Reverse(self.freqs[id as usize]));
+        let mut remap = vec![0u32; self.terms.len()];
+        for (new_id, &old_id) in order.iter().enumerate() {
+            remap[old_id as usize] = new_id as u32;
+        }
+        let mut terms = vec![String::new(); self.terms.len()];
+        let mut freqs = vec![0u64; self.terms.len()];
+        for (old, &new) in remap.iter().enumerate() {
+            terms[new as usize] = std::mem::take(&mut self.terms[old]);
+            freqs[new as usize] = self.freqs[old];
+        }
+        self.terms = terms;
+        self.freqs = freqs;
+        self.index = self
+            .terms
+            .iter()
+            .enumerate()
+            .map(|(i, t)| (t.clone(), i as u32))
+            .collect();
+        self.frozen = true;
+        remap
+    }
+
+    pub fn is_frozen(&self) -> bool {
+        self.frozen
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn intern_dedups_and_counts() {
+        let mut v = Vocabulary::new();
+        let a = v.intern("alpha");
+        let b = v.intern("beta");
+        let a2 = v.intern("alpha");
+        assert_eq!(a, a2);
+        assert_ne!(a, b);
+        assert_eq!(v.freq(a), 2);
+        assert_eq!(v.freq(b), 1);
+        assert_eq!(v.len(), 2);
+    }
+
+    #[test]
+    fn freeze_ranks_by_frequency() {
+        let mut v = Vocabulary::new();
+        for _ in 0..1 {
+            v.intern("rare");
+        }
+        for _ in 0..10 {
+            v.intern("common");
+        }
+        for _ in 0..5 {
+            v.intern("medium");
+        }
+        let remap = v.freeze();
+        assert_eq!(v.term(0), "common");
+        assert_eq!(v.term(1), "medium");
+        assert_eq!(v.term(2), "rare");
+        // remap maps old ids to new ids: old "rare"=0 → new 2.
+        assert_eq!(remap[0], 2);
+        assert!(v.is_frozen());
+        assert_eq!(v.id("common"), Some(0));
+    }
+
+    #[test]
+    fn synthetic_vocab_shape() {
+        let v = Vocabulary::synthetic(100);
+        assert_eq!(v.len(), 100);
+        assert_eq!(v.term(42), "w0000042");
+        assert_eq!(v.id("w0000042"), Some(42));
+    }
+
+    #[test]
+    #[should_panic(expected = "frozen")]
+    fn intern_after_freeze_panics() {
+        let mut v = Vocabulary::new();
+        v.intern("x");
+        v.freeze();
+        v.intern("y");
+    }
+}

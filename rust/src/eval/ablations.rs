@@ -1,0 +1,135 @@
+//! Ablations over the design choices DESIGN.md §7 calls out:
+//!
+//! * **block layout** — strided vs contiguous-balanced vs contiguous-even
+//!   (the §Perf straggler story);
+//! * **prefetch** — §3.2's comm/compute overlap on and off;
+//! * **C_k sync policy** — per-round vs per-iteration (staleness/Δ trade);
+//! * **blocks-per-worker** — B = M vs 2M vs 4M (rotation granularity).
+//!
+//! Each row reports simulated time, final LL and max Δ for the same
+//! workload, so a change that "wins" on time but regresses quality is
+//! visible immediately.
+
+use anyhow::Result;
+
+use crate::config::{BlockLayout, CkSyncPolicy, Config};
+use crate::coordinator::Driver;
+use crate::util::bench::{fmt_secs, Table};
+
+#[derive(Debug, Clone)]
+pub struct Opts {
+    pub topics: usize,
+    pub workers: usize,
+    pub iterations: usize,
+}
+
+impl Default for Opts {
+    fn default() -> Self {
+        Opts { topics: 500, workers: 16, iterations: 5 }
+    }
+}
+
+fn base(opts: &Opts) -> Result<Config> {
+    let mut cfg = super::common::base_config("wiki-uni-sim", "low-end")?;
+    cfg.cluster.machines = opts.workers;
+    cfg.coord.workers = opts.workers;
+    cfg.coord.blocks = 0;
+    cfg.train.topics = opts.topics;
+    cfg.train.iterations = opts.iterations;
+    super::common::apply_scaled_cluster(&mut cfg);
+    cfg.finalize()?;
+    Ok(cfg)
+}
+
+fn run_one(cfg: &Config, corpus: &crate::corpus::Corpus) -> Result<(f64, f64, f64)> {
+    let mut d = Driver::with_corpus(cfg, corpus.clone())?;
+    let report = d.run(cfg.train.iterations, |_, _| {})?;
+    Ok((report.sim_time, report.final_loglik, d.deltas.max_delta()))
+}
+
+pub fn run(opts: &Opts) -> Result<String> {
+    let mut out = String::new();
+    out.push_str(&format!(
+        "Ablations — wiki-uni-sim, K={}, M={}, {} iterations\n\n",
+        opts.topics, opts.workers, opts.iterations
+    ));
+    let cfg0 = base(opts)?;
+    let corpus = crate::corpus::build(&cfg0.corpus)?;
+    let mut table = Table::new(&["knob", "setting", "sim time", "final LL", "max Δ"]);
+
+    // Block layout.
+    for layout in [BlockLayout::Strided, BlockLayout::Balanced, BlockLayout::Even] {
+        let mut cfg = cfg0.clone();
+        cfg.coord.block_layout = layout;
+        let (t, ll, d) = run_one(&cfg, &corpus)?;
+        table.row(&[
+            "block_layout".into(),
+            layout.name().into(),
+            fmt_secs(t),
+            format!("{ll:.3e}"),
+            format!("{d:.1e}"),
+        ]);
+    }
+
+    // Prefetch.
+    for prefetch in [true, false] {
+        let mut cfg = cfg0.clone();
+        cfg.coord.prefetch = prefetch;
+        let (t, ll, d) = run_one(&cfg, &corpus)?;
+        table.row(&[
+            "prefetch".into(),
+            prefetch.to_string(),
+            fmt_secs(t),
+            format!("{ll:.3e}"),
+            format!("{d:.1e}"),
+        ]);
+    }
+
+    // C_k sync policy.
+    for policy in [CkSyncPolicy::PerRound, CkSyncPolicy::PerIteration] {
+        let mut cfg = cfg0.clone();
+        cfg.coord.ck_sync = policy;
+        let (t, ll, d) = run_one(&cfg, &corpus)?;
+        table.row(&[
+            "ck_sync".into(),
+            policy.name().into(),
+            fmt_secs(t),
+            format!("{ll:.3e}"),
+            format!("{d:.1e}"),
+        ]);
+    }
+
+    // Rotation granularity.
+    for mult in [1usize, 2, 4] {
+        let mut cfg = cfg0.clone();
+        cfg.coord.blocks = opts.workers * mult;
+        let (t, ll, d) = run_one(&cfg, &corpus)?;
+        table.row(&[
+            "blocks".into(),
+            format!("{}×workers", mult),
+            fmt_secs(t),
+            format!("{ll:.3e}"),
+            format!("{d:.1e}"),
+        ]);
+    }
+
+    out.push_str(&table.render());
+    out.push_str(
+        "\n(expect: strided <= balanced <= even on time; prefetch faster;\n          per-iteration ck_sync larger D; finer blocks slower at this scale)\n",
+    );
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ablations_smoke() {
+        let opts = Opts { topics: 32, workers: 4, iterations: 2 };
+        let report = run(&opts).unwrap();
+        assert!(report.contains("block_layout"));
+        assert!(report.contains("strided"));
+        assert!(report.contains("ck_sync"));
+    }
+}

@@ -1,0 +1,232 @@
+//! Shared experiment plumbing: unified training entry point over both
+//! systems (model-parallel driver and the Yahoo!LDA baseline), scaled-size
+//! helpers, and report rendering.
+
+use anyhow::{bail, Result};
+
+use crate::baseline::YahooLda;
+use crate::config::{Config, SamplerKind};
+use crate::coordinator::Driver;
+use crate::corpus::Corpus;
+use crate::runtime::XlaExecutor;
+
+/// Unified result of a training run (either system).
+#[derive(Debug, Clone, Default)]
+pub struct RunSummary {
+    /// (iteration, sim_time_secs, loglik) checkpoints; entry 0 is init.
+    pub ll_series: Vec<(usize, f64, f64)>,
+    pub final_loglik: f64,
+    pub sim_time: f64,
+    pub peak_mem_bytes: u64,
+    pub total_comm_bytes: u64,
+    pub total_tokens: u64,
+    /// Mean Δ_{r,i} (MP runs only; 0 for the baseline).
+    pub mean_delta: f64,
+    pub max_delta: f64,
+    /// Host compute seconds actually burned (for throughput reporting).
+    pub host_compute_secs: f64,
+}
+
+impl RunSummary {
+    /// Simulated time at which the LL series first reaches `threshold`
+    /// (linear interpolation), if it does.
+    pub fn time_to_ll(&self, threshold: f64) -> Option<f64> {
+        let mut prev: Option<(f64, f64)> = None;
+        for &(_, t, ll) in &self.ll_series {
+            if ll >= threshold {
+                return Some(match prev {
+                    Some((pt, pll)) if ll > pll => pt + (t - pt) * (threshold - pll) / (ll - pll),
+                    _ => t,
+                });
+            }
+            prev = Some((t, ll));
+        }
+        None
+    }
+
+    /// Iterations to reach `threshold`.
+    pub fn iters_to_ll(&self, threshold: f64) -> Option<usize> {
+        self.ll_series.iter().find(|&&(_, _, ll)| ll >= threshold).map(|&(i, _, _)| i)
+    }
+}
+
+/// Train per `cfg` and return the unified summary.
+///
+/// * `inverted-xy` / `xla` → the model-parallel [`Driver`];
+/// * `sparse-yao` / `dense` → the data-parallel [`YahooLda`] baseline
+///   (dense is coerced to sparse-yao — the baseline's sampler is eq. 2).
+pub fn run_training(cfg: &Config) -> Result<RunSummary> {
+    let corpus = crate::corpus::build(&cfg.corpus)?;
+    run_training_on(cfg, corpus)
+}
+
+/// Same, over a pre-built corpus (experiments reuse corpora).
+pub fn run_training_on(cfg: &Config, corpus: Corpus) -> Result<RunSummary> {
+    match cfg.train.sampler {
+        SamplerKind::InvertedXy | SamplerKind::Xla => {
+            let mut driver = Driver::with_corpus(cfg, corpus)?;
+            if cfg.train.sampler == SamplerKind::Xla {
+                let exec = XlaExecutor::from_dir(
+                    &cfg.runtime.artifacts_dir,
+                    &driver.params,
+                    cfg.train.microbatch,
+                )?;
+                driver.set_executor(Box::new(exec));
+            }
+            let report = driver.run(cfg.train.iterations, |stats, ll| {
+                if let Some(ll) = ll {
+                    log::info!(
+                        "iter {:3} t={:8.2}s ll={} Δ={:.2e}",
+                        stats.iteration,
+                        stats.sim_time,
+                        crate::util::fmt::sci(ll),
+                        stats.mean_delta
+                    );
+                }
+            })?;
+            let host = report.iters.iter().map(|i| i.host_compute_secs).sum();
+            Ok(RunSummary {
+                ll_series: report.ll_series,
+                final_loglik: report.final_loglik,
+                sim_time: report.sim_time,
+                peak_mem_bytes: report.peak_mem_bytes,
+                total_comm_bytes: report.total_comm_bytes,
+                total_tokens: report.total_tokens,
+                mean_delta: driver.deltas.mean_delta(),
+                max_delta: driver.deltas.max_delta(),
+                host_compute_secs: host,
+            })
+        }
+        SamplerKind::SparseYao | SamplerKind::Dense => {
+            let mut y = YahooLda::with_corpus(cfg, corpus)?;
+            let report = y.run(cfg.train.iterations, |stats, ll| {
+                if let Some(ll) = ll {
+                    log::info!(
+                        "iter {:3} t={:8.2}s ll={} skip={:.0}%",
+                        stats.iteration,
+                        stats.sim_time,
+                        crate::util::fmt::sci(ll),
+                        stats.skip_rate * 100.0
+                    );
+                }
+            })?;
+            let host = report.iters.iter().map(|i| i.host_compute_secs).sum();
+            Ok(RunSummary {
+                ll_series: report.ll_series,
+                final_loglik: report.final_loglik,
+                sim_time: report.sim_time,
+                peak_mem_bytes: report.peak_mem_bytes,
+                total_comm_bytes: report.total_comm_bytes,
+                total_tokens: report.total_tokens,
+                mean_delta: 0.0,
+                max_delta: 0.0,
+                host_compute_secs: host,
+            })
+        }
+    }
+}
+
+/// A convergence threshold for "time to converge" comparisons: the LL both
+/// systems reach, set at `frac` of the way from initial to the better
+/// final LL. `frac ∈ (0,1)`, paper-style thresholds use ~0.95.
+pub fn ll_threshold(a: &RunSummary, b: &RunSummary, frac: f64) -> f64 {
+    let init = a.ll_series.first().map(|&(_, _, ll)| ll).unwrap_or(0.0);
+    let best = a.final_loglik.max(b.final_loglik);
+    init + (best - init) * frac
+}
+
+/// A threshold **both** systems actually reach within their budgets: `frac`
+/// of the way to the *worse* final LL. The paper's Fig 4(b)/Table 1 use a
+/// fixed absolute LL both systems attain; with iteration-bounded runs the
+/// min-based construct is the scale-free equivalent.
+pub fn ll_threshold_common(a: &RunSummary, b: &RunSummary, frac: f64) -> f64 {
+    let init = a.ll_series.first().map(|&(_, _, ll)| ll).unwrap_or(0.0);
+    let worse = a.final_loglik.min(b.final_loglik);
+    init + (worse - init) * frac
+}
+
+/// Calibrate the simulated cluster for a ×10⁻³-scaled corpus (DESIGN.md §4).
+///
+/// Two knobs restore the paper's comm:compute regime after the corpus
+/// shrinks ~1000×:
+///
+/// * `compute_scale = 0.01` — a paper-era Opteron core samples ~20K tok/s
+///   (§5); this host core does ~2M tok/s, so a simulated core at 1% of the
+///   host reproduces the per-core rate the paper's timings are built on.
+/// * `latency_us × 10⁻³` — per-message latency does not shrink with the
+///   corpus, so an unscaled 100 µs would dominate rounds that now carry
+///   1000× fewer tokens; bandwidth terms need no adjustment because block
+///   and sync *bytes* already scale with the corpus.
+pub fn apply_scaled_cluster(cfg: &mut Config) {
+    cfg.cluster.compute_scale = 0.01;
+    cfg.cluster.latency_us *= 1e-3;
+}
+
+/// Scaled experiment base config shared by the §5 harnesses.
+pub fn base_config(corpus_preset: &str, cluster_preset: &str) -> Result<Config> {
+    let mut cfg = Config::default();
+    cfg.corpus.preset = corpus_preset.into();
+    cfg.cluster.preset = cluster_preset.into();
+    if corpus_preset == "wiki-bi-sim" {
+        cfg.corpus.bigram = true;
+    }
+    cfg.train.ll_every = 1;
+    cfg.finalize()?;
+    Ok(cfg)
+}
+
+/// Guard rail for experiment parameter sanity.
+pub fn require(cond: bool, what: &str) -> Result<()> {
+    if !cond {
+        bail!("experiment parameter error: {what}");
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quick_cfg(sampler: &str) -> Config {
+        let mut cfg = Config::from_str(&format!(
+            "[corpus]\npreset = \"tiny\"\n[train]\ntopics = 16\niterations = 3\nsampler = \"{sampler}\"\n[coord]\nworkers = 4\n[cluster]\npreset = \"custom\"\nmachines = 4"
+        ))
+        .unwrap();
+        cfg.finalize().unwrap();
+        cfg
+    }
+
+    #[test]
+    fn unified_runner_both_systems() {
+        let mp = run_training(&quick_cfg("inverted-xy")).unwrap();
+        let dp = run_training(&quick_cfg("sparse-yao")).unwrap();
+        assert!(mp.final_loglik.is_finite() && dp.final_loglik.is_finite());
+        assert!(mp.total_tokens > 0 && dp.total_tokens > 0);
+        assert_eq!(mp.ll_series.len(), 4); // init + 3 iters
+        assert!(mp.mean_delta >= 0.0);
+    }
+
+    #[test]
+    fn time_to_ll_interpolates() {
+        let s = RunSummary {
+            ll_series: vec![(0, 0.0, -100.0), (1, 10.0, -50.0), (2, 20.0, -10.0)],
+            ..Default::default()
+        };
+        let t = s.time_to_ll(-30.0).unwrap();
+        assert!(t > 10.0 && t < 20.0);
+        assert!(s.time_to_ll(0.0).is_none());
+        assert_eq!(s.iters_to_ll(-50.0), Some(1));
+    }
+
+    #[test]
+    fn threshold_between_init_and_best() {
+        let a = RunSummary {
+            ll_series: vec![(0, 0.0, -100.0)],
+            final_loglik: -20.0,
+            ..Default::default()
+        };
+        let b = RunSummary { final_loglik: -30.0, ..a.clone() };
+        let th = ll_threshold(&a, &b, 0.9);
+        assert!(th > -100.0 && th < -20.0);
+    }
+}

@@ -1,0 +1,122 @@
+//! E1/E2 — Figure 2: convergence of model-parallel vs data-parallel
+//! (Yahoo!LDA-style) inference on the Pubmed-scale corpus, high-end
+//! cluster. (a) log-likelihood per iteration; (b) per simulated time.
+
+use anyhow::Result;
+
+use crate::metrics::Recorder;
+use crate::util::bench::Table;
+use crate::util::fmt;
+
+use super::common::{apply_scaled_cluster, base_config, run_training_on, RunSummary};
+
+/// Experiment parameters (defaults are the scaled CI size; the paper-scale
+/// values are K ∈ {1000, 5000} over the full Pubmed).
+#[derive(Debug, Clone)]
+pub struct Opts {
+    /// Topic counts to sweep (paper: 1000, 5000).
+    pub topics: Vec<usize>,
+    pub iterations: usize,
+    pub workers: usize,
+    pub out_dir: Option<String>,
+}
+
+impl Default for Opts {
+    fn default() -> Self {
+        Opts { topics: vec![200, 1000], iterations: 15, workers: 8, out_dir: Some("out".into()) }
+    }
+}
+
+/// Run the experiment; returns the rendered report.
+pub fn run(opts: &Opts) -> Result<String> {
+    let mut out = String::new();
+    let mut recorder = match &opts.out_dir {
+        Some(d) => Recorder::with_dir(d),
+        None => Recorder::new(),
+    };
+
+    out.push_str("Figure 2 — convergence, pubmed-sim, high-end cluster\n");
+    out.push_str(&format!(
+        "(paper: Pubmed 8.2M docs; here: scaled pubmed-sim, {} workers)\n\n",
+        opts.workers
+    ));
+
+    for &k in &opts.topics {
+        let mut results: Vec<(&str, RunSummary)> = Vec::new();
+        for (label, sampler) in [("model-parallel", "inverted-xy"), ("yahoo-lda", "sparse-yao")] {
+            let mut cfg = base_config("pubmed-sim", "high-end")?;
+            cfg.cluster.machines = opts.workers;
+            cfg.coord.workers = opts.workers;
+            cfg.coord.blocks = 0;
+            cfg.train.topics = k;
+            cfg.train.iterations = opts.iterations;
+            cfg.train.sampler = crate::config::SamplerKind::parse(sampler)?;
+            apply_scaled_cluster(&mut cfg);
+            cfg.finalize()?;
+            let corpus = crate::corpus::build(&cfg.corpus)?;
+            log::info!("fig2: {label} K={k} on {}", corpus.summary());
+            let summary = run_training_on(&cfg, corpus)?;
+
+            let series = recorder.series(
+                &format!("fig2_{label}_k{k}"),
+                &["iteration", "sim_time", "loglik"],
+            );
+            for &(i, t, ll) in &summary.ll_series {
+                series.push(&[i as f64, t, ll]);
+            }
+            results.push((label, summary));
+        }
+
+        // Render 2(a): per-iteration.
+        out.push_str(&format!("\n-- K = {k} — (a) log-likelihood per iteration --\n"));
+        let mut table = Table::new(&["iter", "model-parallel", "yahoo-lda"]);
+        let iters = results[0].1.ll_series.len();
+        for i in 0..iters {
+            table.row(&[
+                format!("{}", results[0].1.ll_series[i].0),
+                fmt::sci(results[0].1.ll_series[i].2),
+                fmt::sci(results[1].1.ll_series.get(i).map(|x| x.2).unwrap_or(f64::NAN)),
+            ]);
+        }
+        out.push_str(&table.render());
+
+        // Render 2(b): per-time summary (full series in CSV).
+        out.push_str(&format!("\n-- K = {k} — (b) elapsed simulated time --\n"));
+        let mut table = Table::new(&["system", "final LL", "sim time", "iters to 95% of best"]);
+        let th = super::common::ll_threshold(&results[0].1, &results[1].1, 0.95);
+        for (label, s) in &results {
+            table.row(&[
+                label.to_string(),
+                fmt::sci(s.final_loglik),
+                crate::util::bench::fmt_secs(s.sim_time),
+                s.iters_to_ll(th).map(|i| i.to_string()).unwrap_or("-".into()),
+            ]);
+        }
+        out.push_str(&table.render());
+
+        // The paper's claim: MP converges in fewer iterations AND less time.
+        let mp_iters = results[0].1.iters_to_ll(th);
+        let dp_iters = results[1].1.iters_to_ll(th);
+        out.push_str(&format!(
+            "claim check (MP fewer iters to threshold): MP={mp_iters:?} DP={dp_iters:?}\n"
+        ));
+    }
+
+    recorder.flush()?;
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig2_smoke() {
+        // Tiny version exercises the whole harness.
+        let opts = Opts { topics: vec![32], iterations: 3, workers: 4, out_dir: None };
+        let report = run(&opts).unwrap();
+        assert!(report.contains("K = 32"));
+        assert!(report.contains("model-parallel"));
+        assert!(report.contains("claim check"));
+    }
+}

@@ -1,0 +1,115 @@
+//! E5 — Figure 4(a): per-machine memory versus number of machines.
+//!
+//! The paper's result: model-parallel memory follows a `1/M` curve
+//! (partitioning both data and model), while Yahoo!LDA's stays nearly flat
+//! (each machine replicates most of the word–topic table).
+
+use anyhow::Result;
+
+use crate::metrics::Recorder;
+use crate::util::bench::Table;
+use crate::util::fmt;
+
+use super::common::{apply_scaled_cluster, base_config, run_training_on};
+
+#[derive(Debug, Clone)]
+pub struct Opts {
+    pub topics: usize,
+    pub machines: Vec<usize>,
+    pub iterations: usize,
+    pub out_dir: Option<String>,
+}
+
+impl Default for Opts {
+    fn default() -> Self {
+        Opts {
+            topics: 1000, // scaled from the paper's K=5000
+            machines: vec![8, 16, 32, 64],
+            iterations: 2,
+            out_dir: Some("out".into()),
+        }
+    }
+}
+
+pub fn run(opts: &Opts) -> Result<String> {
+    let mut out = String::new();
+    out.push_str(&format!(
+        "Figure 4(a) — per-machine peak memory vs machines (wiki-uni-sim, K={})\n\n",
+        opts.topics
+    ));
+    let mut recorder = match &opts.out_dir {
+        Some(d) => Recorder::with_dir(d),
+        None => Recorder::new(),
+    };
+    let mut table = Table::new(&["machines", "Model-Parallel", "Yahoo!LDA", "MP ratio vs M=min"]);
+
+    let mut mp_first = None;
+    let mut rows = Vec::new();
+    for &m in &opts.machines {
+        let mut cfg = base_config("wiki-uni-sim", "low-end")?;
+        cfg.cluster.machines = m;
+        cfg.coord.workers = m;
+        cfg.coord.blocks = 0;
+        cfg.train.topics = opts.topics;
+        cfg.train.iterations = opts.iterations;
+        apply_scaled_cluster(&mut cfg);
+        cfg.finalize()?;
+        let corpus = crate::corpus::build(&cfg.corpus)?;
+
+        let mut mp_cfg = cfg.clone();
+        mp_cfg.train.sampler = crate::config::SamplerKind::InvertedXy;
+        let mp = run_training_on(&mp_cfg, corpus.clone())?;
+
+        let mut dp_cfg = cfg;
+        dp_cfg.train.sampler = crate::config::SamplerKind::SparseYao;
+        let dp = run_training_on(&dp_cfg, corpus)?;
+
+        if mp_first.is_none() {
+            mp_first = Some(mp.peak_mem_bytes as f64);
+        }
+        let ratio = mp.peak_mem_bytes as f64 / mp_first.unwrap();
+        recorder.series("fig4a_memory", &["machines", "mp_bytes", "dp_bytes"]).push(&[
+            m as f64,
+            mp.peak_mem_bytes as f64,
+            dp.peak_mem_bytes as f64,
+        ]);
+        rows.push((m, mp.peak_mem_bytes, dp.peak_mem_bytes, ratio));
+        table.row(&[
+            m.to_string(),
+            fmt::bytes(mp.peak_mem_bytes),
+            fmt::bytes(dp.peak_mem_bytes),
+            format!("{ratio:.2}"),
+        ]);
+    }
+    out.push_str(&table.render());
+
+    // Claim checks: MP ~1/M; DP ~flat.
+    let (m0, mp0, dp0, _) = rows[0];
+    let (m1, mp1, dp1, _) = *rows.last().unwrap();
+    let scale = m1 as f64 / m0 as f64;
+    let mp_drop = mp0 as f64 / mp1 as f64;
+    let dp_drop = dp0 as f64 / dp1 as f64;
+    out.push_str(&format!(
+        "\nclaim check (MP ≈ 1/M): {m0}→{m1} machines gave {mp_drop:.1}× drop \
+         (ideal {scale:.0}×) → {}\n",
+        if mp_drop > scale * 0.4 { "PASS" } else { "FAIL" }
+    ));
+    out.push_str(&format!(
+        "claim check (YLDA ≈ flat): drop only {dp_drop:.2}× → {}\n",
+        if dp_drop < scale * 0.4 { "PASS" } else { "FAIL" }
+    ));
+    recorder.flush()?;
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig4a_smoke() {
+        let opts = Opts { topics: 32, machines: vec![2, 8], iterations: 1, out_dir: None };
+        let report = run(&opts).unwrap();
+        assert!(report.contains("claim check"));
+    }
+}

@@ -1,0 +1,176 @@
+//! E6 — Figure 4(b): convergence-speedup versus number of machines on the
+//! low-end (1 Gbps) cluster.
+//!
+//! The paper's result: model-parallel speedup tracks the ideal line, while
+//! Yahoo!LDA *degrades* beyond ~16–32 machines — its all-to-server sync
+//! traffic grows with M over a fixed-capacity network, so parameters go
+//! stale and convergence stalls ("performs worse given 32 machines").
+
+use anyhow::Result;
+
+use crate::metrics::Recorder;
+use crate::util::bench::{fmt_secs, Table};
+
+use super::common::{apply_scaled_cluster, base_config, ll_threshold_common, run_training_on, RunSummary};
+
+#[derive(Debug, Clone)]
+pub struct Opts {
+    pub topics: usize,
+    pub machines: Vec<usize>,
+    pub iterations: usize,
+    /// Threshold fraction for "time to reach LL" (paper uses a fixed LL,
+    /// −2.7e9; we use frac of best final — same construct, scale-free).
+    pub frac: f64,
+    pub out_dir: Option<String>,
+}
+
+impl Default for Opts {
+    fn default() -> Self {
+        Opts {
+            topics: 1000, // scaled from K=5000
+            machines: vec![8, 16, 32, 64],
+            iterations: 12,
+            frac: 0.9,
+            out_dir: Some("out".into()),
+        }
+    }
+}
+
+pub fn run(opts: &Opts) -> Result<String> {
+    let mut out = String::new();
+    out.push_str(&format!(
+        "Figure 4(b) — speedup vs machines (wiki-uni-sim, K={}, 1 Gbps low-end)\n\n",
+        opts.topics
+    ));
+    let mut recorder = match &opts.out_dir {
+        Some(d) => Recorder::with_dir(d),
+        None => Recorder::new(),
+    };
+
+    // Collect summaries per (system, M); the threshold is fixed ONCE from
+    // the smallest-M runs (the paper uses one absolute LL, −2.7e9, across
+    // the whole sweep).
+    let mut runs: Vec<(usize, RunSummary, RunSummary)> = Vec::new();
+    for &m in &opts.machines {
+        let mut cfg = base_config("wiki-uni-sim", "low-end")?;
+        cfg.cluster.machines = m;
+        cfg.coord.workers = m;
+        cfg.coord.blocks = 0;
+        cfg.train.topics = opts.topics;
+        cfg.train.iterations = opts.iterations;
+        apply_scaled_cluster(&mut cfg);
+        cfg.finalize()?;
+        let corpus = crate::corpus::build(&cfg.corpus)?;
+
+        let mut mp_cfg = cfg.clone();
+        mp_cfg.train.sampler = crate::config::SamplerKind::InvertedXy;
+        let mp = run_training_on(&mp_cfg, corpus.clone())?;
+
+        let mut dp_cfg = cfg;
+        dp_cfg.train.sampler = crate::config::SamplerKind::SparseYao;
+        let dp = run_training_on(&dp_cfg, corpus)?;
+
+        log_summary(m, &mp, &dp);
+        runs.push((m, mp, dp));
+    }
+    let th = ll_threshold_common(&runs[0].1, &runs[0].2, opts.frac);
+    let times: Vec<(usize, Option<f64>, Option<f64>)> = runs
+        .iter()
+        .map(|(m, mp, dp)| (*m, mp.time_to_ll(th), dp.time_to_ll(th)))
+        .collect();
+
+    // Speedups relative to the smallest machine count.
+    let (m0, mp0, dp0) = times[0].clone();
+    let mut table =
+        Table::new(&["machines", "MP time", "YLDA time", "MP speedup", "YLDA speedup", "ideal"]);
+    for (m, mp_t, dp_t) in &times {
+        let ideal = *m as f64 / m0 as f64;
+        let mp_s = match (mp0, mp_t) {
+            (Some(base), Some(t)) if *t > 0.0 => Some(base / t),
+            _ => None,
+        };
+        let dp_s = match (dp0, dp_t) {
+            (Some(base), Some(t)) if *t > 0.0 => Some(base / t),
+            _ => None,
+        };
+        recorder.series("fig4b_speedup", &["machines", "mp_speedup", "dp_speedup", "ideal"]).push(
+            &[
+                *m as f64,
+                mp_s.unwrap_or(f64::NAN),
+                dp_s.unwrap_or(f64::NAN),
+                ideal,
+            ],
+        );
+        let fmt_opt = |x: &Option<f64>| x.map(fmt_secs).unwrap_or("-".into());
+        let fmt_sp = |x: &Option<f64>| x.map(|s| format!("{s:.2}×")).unwrap_or("-".into());
+        table.row(&[
+            m.to_string(),
+            fmt_opt(mp_t),
+            fmt_opt(dp_t),
+            fmt_sp(&mp_s),
+            fmt_sp(&dp_s),
+            format!("{ideal:.0}×"),
+        ]);
+    }
+    out.push_str(&table.render());
+
+    // Claim checks.
+    let last = times.last().unwrap();
+    let mp_scales = match (mp0, last.1) {
+        (Some(base), Some(t)) => base / t > (last.0 as f64 / m0 as f64) * 0.4,
+        _ => false,
+    };
+    let dp_degrades = {
+        let ts = &times[..];
+        {
+            // YLDA's best time should NOT be at the largest M.
+            let best = ts
+                .iter()
+                .filter_map(|(m, _, t)| t.map(|t| (*m, t)))
+                .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+            match best {
+                Some((m_best, _)) => m_best < last.0,
+                None => true,
+            }
+        }
+    };
+    out.push_str(&format!(
+        "\nclaim check (MP near-ideal scaling): {}\n",
+        if mp_scales { "PASS" } else { "FAIL" }
+    ));
+    out.push_str(&format!(
+        "claim check (YLDA degrades at scale — best time not at max M): {}\n",
+        if dp_degrades { "PASS" } else { "FAIL" }
+    ));
+    recorder.flush()?;
+    Ok(out)
+}
+
+fn log_summary(m: usize, mp: &RunSummary, dp: &RunSummary) {
+    log::info!(
+        "fig4b M={m}: MP t={:.1}s comm={} | DP t={:.1}s comm={}",
+        mp.sim_time,
+        crate::util::fmt::bytes(mp.total_comm_bytes),
+        dp.sim_time,
+        crate::util::fmt::bytes(dp.total_comm_bytes),
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig4b_smoke() {
+        let opts = Opts {
+            topics: 32,
+            machines: vec![2, 4],
+            iterations: 3,
+            frac: 0.8,
+            out_dir: None,
+        };
+        let report = run(&opts).unwrap();
+        assert!(report.contains("speedup"));
+        assert!(report.contains("claim check"));
+    }
+}

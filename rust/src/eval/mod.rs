@@ -1,0 +1,15 @@
+//! Experiment drivers — one per table/figure of the paper's §5 (see
+//! DESIGN.md §5 for the index). Each driver is callable from the `mplda
+//! eval` CLI and from the corresponding `cargo bench` target, writes CSV
+//! series via [`crate::metrics::Recorder`], and prints the rows/series the
+//! paper reports.
+
+pub mod common;
+pub mod fig2;
+pub mod fig3;
+pub mod table1;
+pub mod fig4a;
+pub mod fig4b;
+pub mod ablations;
+
+pub use common::{run_training, RunSummary};

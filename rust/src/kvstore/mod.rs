@@ -1,0 +1,18 @@
+//! Distributed key-value store for model blocks (§3.2).
+//!
+//! "Different from being a 'parameter server', the purpose of this
+//! component is mainly for distributed in-memory storage" — blocks are
+//! fetched **on demand** at round start and committed at round end; there
+//! is no background synchronization. [`store::KvStore`] implements the
+//! sharded table with a **lease** protocol (at-most-one holder per block —
+//! the mechanical enforcement of the paper's disjointness argument),
+//! [`shard`] the block→node placement, and [`traffic`] the byte metering
+//! the network model consumes.
+
+pub mod store;
+pub mod shard;
+pub mod traffic;
+
+pub use shard::ShardMap;
+pub use store::KvStore;
+pub use traffic::{TrafficMeter, Transfer};

@@ -1,0 +1,72 @@
+//! Block → KV-shard → machine placement.
+//!
+//! One shard per model block, placed round-robin across machines (a simple
+//! distributed hash table "suffices the need", §3.2). Placement is what
+//! determines the byte flows: fetching block `b` from worker `w` is a flow
+//! `home(b) → machine(w)`.
+
+use crate::cluster::ClusterSpec;
+
+/// Placement of block-shards on machines.
+#[derive(Debug, Clone)]
+pub struct ShardMap {
+    homes: Vec<usize>,
+}
+
+impl ShardMap {
+    /// Round-robin placement of `num_blocks` shards over the cluster.
+    pub fn round_robin(num_blocks: usize, spec: &ClusterSpec) -> ShardMap {
+        ShardMap { homes: (0..num_blocks).map(|b| spec.shard_home(b)).collect() }
+    }
+
+    /// Machine hosting block `b`'s shard.
+    pub fn home(&self, block: usize) -> usize {
+        self.homes[block]
+    }
+
+    pub fn num_blocks(&self) -> usize {
+        self.homes.len()
+    }
+
+    /// Blocks hosted on machine `m`.
+    pub fn blocks_on(&self, machine: usize) -> Vec<usize> {
+        self.homes
+            .iter()
+            .enumerate()
+            .filter(|&(_, &h)| h == machine)
+            .map(|(b, _)| b)
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Config;
+
+    fn spec(machines: usize) -> ClusterSpec {
+        let cfg = Config::from_str(&format!(
+            "[cluster]\npreset = \"custom\"\nmachines = {machines}"
+        ))
+        .unwrap();
+        ClusterSpec::from_config(&cfg.cluster)
+    }
+
+    #[test]
+    fn round_robin_spreads_evenly() {
+        let map = ShardMap::round_robin(16, &spec(4));
+        for m in 0..4 {
+            assert_eq!(map.blocks_on(m).len(), 4, "machine {m}");
+        }
+        assert_eq!(map.home(5), 1);
+    }
+
+    #[test]
+    fn fewer_blocks_than_machines() {
+        let map = ShardMap::round_robin(2, &spec(8));
+        assert_eq!(map.num_blocks(), 2);
+        assert_eq!(map.home(0), 0);
+        assert_eq!(map.home(1), 1);
+        assert!(map.blocks_on(5).is_empty());
+    }
+}

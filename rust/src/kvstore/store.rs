@@ -1,0 +1,270 @@
+//! The sharded block store with lease semantics.
+//!
+//! Operations (all meter traffic against the requesting worker's machine):
+//!
+//! * [`KvStore::lease_block`] — move a block out of its shard to a worker.
+//!   A block can have **at most one holder**; double-lease is a protocol
+//!   violation and errors loudly (this is the §3.2 disjointness guarantee
+//!   made mechanical).
+//! * [`KvStore::commit_block`] — return the (mutated) block.
+//! * [`KvStore::read_totals`] / [`KvStore::merge_totals_delta`] — the §3.3
+//!   relaxed-consistency channel for `C_k`: snapshot at round start, merge
+//!   signed deltas at round end.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+use crate::model::wire;
+use crate::model::{ModelBlock, TopicCounts};
+
+use super::shard::ShardMap;
+use super::traffic::{TrafficMeter, TransferKind};
+
+/// Sharded in-memory store of model blocks + topic totals.
+pub struct KvStore {
+    shards: ShardMap,
+    /// Blocks currently resident (not leased), by id.
+    resident: BTreeMap<u32, ModelBlock>,
+    /// Holder of each leased block.
+    leased_to: BTreeMap<u32, usize>,
+    /// Authoritative topic totals (machine hosting it = totals_home).
+    totals: TopicCounts,
+    totals_home: usize,
+    meter: TrafficMeter,
+}
+
+impl KvStore {
+    /// Build from the initial blocks and totals.
+    pub fn new(blocks: Vec<ModelBlock>, totals: TopicCounts, shards: ShardMap) -> KvStore {
+        assert_eq!(blocks.len(), shards.num_blocks());
+        let resident = blocks.into_iter().map(|b| (b.id, b)).collect();
+        KvStore {
+            shards,
+            resident,
+            leased_to: BTreeMap::new(),
+            totals,
+            totals_home: 0,
+            meter: TrafficMeter::new(),
+        }
+    }
+
+    /// Lease block `id` to a worker on `worker_machine`. Records the fetch
+    /// flow `home(id) → worker_machine` sized by the block's wire encoding.
+    pub fn lease_block(&mut self, id: u32, worker_machine: usize) -> Result<ModelBlock> {
+        if let Some(&holder) = self.leased_to.get(&id) {
+            bail!("protocol violation: block {id} already leased to machine {holder}");
+        }
+        let block = self
+            .resident
+            .remove(&id)
+            .with_context(|| format!("block {id} not in store"))?;
+        let bytes = wire::encode_block(&block).len() as u64;
+        self.meter.record(
+            self.shards.home(id as usize),
+            worker_machine,
+            bytes,
+            TransferKind::BlockFetch,
+        );
+        self.leased_to.insert(id, worker_machine);
+        Ok(block)
+    }
+
+    /// Commit a leased block back. Records the commit flow.
+    pub fn commit_block(&mut self, block: ModelBlock, worker_machine: usize) -> Result<()> {
+        match self.leased_to.remove(&block.id) {
+            None => bail!("protocol violation: commit of unleased block {}", block.id),
+            Some(holder) if holder != worker_machine => {
+                bail!(
+                    "protocol violation: block {} leased to machine {holder}, committed from {worker_machine}",
+                    block.id
+                );
+            }
+            Some(_) => {}
+        }
+        let bytes = wire::encode_block(&block).len() as u64;
+        self.meter.record(
+            worker_machine,
+            self.shards.home(block.id as usize),
+            bytes,
+            TransferKind::BlockCommit,
+        );
+        self.resident.insert(block.id, block);
+        Ok(())
+    }
+
+    /// Snapshot the topic totals (round-start sync of §3.3).
+    pub fn read_totals(&mut self, worker_machine: usize) -> TopicCounts {
+        let bytes = wire::encode_totals(&self.totals).len() as u64;
+        self.meter
+            .record(self.totals_home, worker_machine, bytes, TransferKind::TotalsRead);
+        self.totals.clone()
+    }
+
+    /// Merge a worker's signed `C_k` delta (round-end).
+    pub fn merge_totals_delta(&mut self, delta: &TopicCounts, worker_machine: usize) {
+        let bytes = wire::encode_totals(delta).len() as u64;
+        self.meter
+            .record(worker_machine, self.totals_home, bytes, TransferKind::PsSync);
+        // Classified as TotalsMerge for reporting:
+        self.meter.record(worker_machine, self.totals_home, 0, TransferKind::TotalsMerge);
+        self.totals.merge(delta);
+    }
+
+    /// Authoritative totals (truth `T` of the Fig 3 metric).
+    pub fn totals(&self) -> &TopicCounts {
+        &self.totals
+    }
+
+    /// Number of blocks currently leased out.
+    pub fn num_leased(&self) -> usize {
+        self.leased_to.len()
+    }
+
+    /// Traffic meter access (drained by the coordinator for timing).
+    pub fn meter_mut(&mut self) -> &mut TrafficMeter {
+        &mut self.meter
+    }
+
+    pub fn meter(&self) -> &TrafficMeter {
+        &self.meter
+    }
+
+    /// Resident (non-leased) blocks — the quiescent model view used by the
+    /// driver's log-likelihood pass.
+    pub fn resident_blocks(&self) -> impl Iterator<Item = &ModelBlock> {
+        self.resident.values()
+    }
+
+    /// Bytes of shard storage on each machine (memory accounting).
+    pub fn shard_bytes(&self, machines: usize) -> Vec<u64> {
+        let mut per = vec![0u64; machines];
+        for (id, b) in &self.resident {
+            per[self.shards.home(*id as usize)] += b.bytes();
+        }
+        per
+    }
+
+    /// Validate internal consistency: every block either resident or
+    /// leased; totals match the column sums of resident blocks only if
+    /// nothing is leased.
+    pub fn check_quiescent_consistency(&self, num_topics: usize) -> Result<()> {
+        if !self.leased_to.is_empty() {
+            bail!("store not quiescent: {} blocks leased", self.leased_to.len());
+        }
+        let mut sums = vec![0i64; num_topics];
+        for b in self.resident.values() {
+            for (k, s) in b.column_sums(num_topics).into_iter().enumerate() {
+                sums[k] += s;
+            }
+        }
+        if sums != self.totals.as_slice() {
+            bail!(
+                "totals out of sync with blocks: blocks={sums:?} totals={:?}",
+                self.totals.as_slice()
+            );
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::ClusterSpec;
+    use crate::config::Config;
+    use crate::util::rng::Pcg64;
+
+    fn setup(num_blocks: usize, machines: usize) -> KvStore {
+        let cfg = Config::from_str(&format!(
+            "[cluster]\npreset = \"custom\"\nmachines = {machines}"
+        ))
+        .unwrap();
+        let spec = ClusterSpec::from_config(&cfg.cluster);
+        let mut rng = Pcg64::new(1);
+        let k = 8;
+        let mut totals = TopicCounts::zeros(k);
+        let blocks: Vec<ModelBlock> = (0..num_blocks as u32)
+            .map(|id| {
+                let mut b = ModelBlock::empty(id, id * 10, (id + 1) * 10);
+                for w in b.lo..b.hi {
+                    for _ in 0..rng.next_below(5) {
+                        let t = rng.next_below(k as u64) as u32;
+                        b.row_mut(w).inc(t);
+                        totals.inc(t as usize);
+                    }
+                }
+                b
+            })
+            .collect();
+        let shards = ShardMap::round_robin(num_blocks, &spec);
+        KvStore::new(blocks, totals, shards)
+    }
+
+    #[test]
+    fn lease_commit_cycle() {
+        let mut kv = setup(4, 2);
+        let b = kv.lease_block(2, 1).unwrap();
+        assert_eq!(kv.num_leased(), 1);
+        kv.commit_block(b, 1).unwrap();
+        assert_eq!(kv.num_leased(), 0);
+        kv.check_quiescent_consistency(8).unwrap();
+        assert!(kv.meter().total_bytes() > 0);
+    }
+
+    #[test]
+    fn double_lease_rejected() {
+        let mut kv = setup(4, 2);
+        let _b = kv.lease_block(0, 0).unwrap();
+        let err = kv.lease_block(0, 1).unwrap_err().to_string();
+        assert!(err.contains("already leased"), "{err}");
+    }
+
+    #[test]
+    fn commit_from_wrong_machine_rejected() {
+        let mut kv = setup(4, 2);
+        let b = kv.lease_block(0, 0).unwrap();
+        assert!(kv.commit_block(b, 1).is_err());
+    }
+
+    #[test]
+    fn commit_unleased_rejected() {
+        let mut kv = setup(4, 2);
+        let b = ModelBlock::empty(0, 0, 10);
+        assert!(kv.commit_block(b, 0).is_err());
+    }
+
+    #[test]
+    fn totals_round_trip() {
+        let mut kv = setup(2, 2);
+        let snap = kv.read_totals(1);
+        let mut delta = TopicCounts::zeros(8);
+        delta.inc(3);
+        delta.dec(0);
+        kv.merge_totals_delta(&delta, 1);
+        assert_eq!(kv.totals().get(3), snap.get(3) + 1);
+        assert_eq!(kv.totals().get(0), snap.get(0) - 1);
+    }
+
+    #[test]
+    fn quiescent_check_detects_leak() {
+        let mut kv = setup(2, 2);
+        let _b = kv.lease_block(0, 0).unwrap();
+        assert!(kv.check_quiescent_consistency(8).is_err());
+    }
+
+    #[test]
+    fn mutated_commit_breaks_totals_until_delta_merged() {
+        // Committing a mutated block without merging the C_k delta leaves
+        // the store inconsistent — the §3.3 channel is what fixes it.
+        let mut kv = setup(2, 2);
+        let mut b = kv.lease_block(0, 0).unwrap();
+        b.row_mut(b.lo).inc(5);
+        kv.commit_block(b, 0).unwrap();
+        assert!(kv.check_quiescent_consistency(8).is_err());
+        let mut delta = TopicCounts::zeros(8);
+        delta.inc(5);
+        kv.merge_totals_delta(&delta, 0);
+        kv.check_quiescent_consistency(8).unwrap();
+    }
+}

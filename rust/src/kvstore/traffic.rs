@@ -1,0 +1,113 @@
+//! Byte metering: every KV-store operation records what moved where.
+//!
+//! The coordinator drains the meter at phase boundaries and hands the
+//! transfers to [`crate::cluster::NetworkModel`] for timing; experiment
+//! harnesses also read the running totals to report communication volume
+//! (the on-demand vs background-sync traffic comparison of §3.2/§5.3).
+
+use crate::cluster::Flow;
+
+/// One recorded transfer with a label for reporting.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Transfer {
+    pub src: usize,
+    pub dst: usize,
+    pub bytes: u64,
+    pub what: TransferKind,
+}
+
+/// Classification for traffic reports.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TransferKind {
+    BlockFetch,
+    BlockCommit,
+    TotalsRead,
+    TotalsMerge,
+    /// Baseline parameter-server delta push/pull.
+    PsSync,
+}
+
+/// Accumulating traffic meter.
+#[derive(Debug, Default, Clone)]
+pub struct TrafficMeter {
+    pending: Vec<Transfer>,
+    total_bytes: u64,
+    by_kind: [u64; 5],
+}
+
+fn kind_idx(k: TransferKind) -> usize {
+    match k {
+        TransferKind::BlockFetch => 0,
+        TransferKind::BlockCommit => 1,
+        TransferKind::TotalsRead => 2,
+        TransferKind::TotalsMerge => 3,
+        TransferKind::PsSync => 4,
+    }
+}
+
+impl TrafficMeter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record(&mut self, src: usize, dst: usize, bytes: u64, what: TransferKind) {
+        self.total_bytes += bytes;
+        self.by_kind[kind_idx(what)] += bytes;
+        self.pending.push(Transfer { src, dst, bytes, what });
+    }
+
+    /// Take the pending transfers (for a phase's network timing) as flows.
+    pub fn drain_flows(&mut self) -> Vec<Flow> {
+        let flows = self
+            .pending
+            .iter()
+            .map(|t| Flow { src: t.src, dst: t.dst, bytes: t.bytes })
+            .collect();
+        self.pending.clear();
+        flows
+    }
+
+    /// Pending transfers belonging to one destination worker machine.
+    pub fn pending(&self) -> &[Transfer] {
+        &self.pending
+    }
+
+    pub fn total_bytes(&self) -> u64 {
+        self.total_bytes
+    }
+
+    pub fn bytes_of(&self, kind: TransferKind) -> u64 {
+        self.by_kind[kind_idx(kind)]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn record_and_drain() {
+        let mut m = TrafficMeter::new();
+        m.record(0, 1, 100, TransferKind::BlockFetch);
+        m.record(1, 0, 50, TransferKind::BlockCommit);
+        assert_eq!(m.total_bytes(), 150);
+        assert_eq!(m.bytes_of(TransferKind::BlockFetch), 100);
+        let flows = m.drain_flows();
+        assert_eq!(flows.len(), 2);
+        assert_eq!(flows[0], Flow { src: 0, dst: 1, bytes: 100 });
+        assert!(m.pending().is_empty());
+        // Totals survive draining.
+        assert_eq!(m.total_bytes(), 150);
+    }
+
+    #[test]
+    fn kinds_accumulate_independently() {
+        let mut m = TrafficMeter::new();
+        m.record(0, 1, 10, TransferKind::PsSync);
+        m.record(0, 1, 20, TransferKind::PsSync);
+        m.record(0, 1, 5, TransferKind::TotalsRead);
+        assert_eq!(m.bytes_of(TransferKind::PsSync), 30);
+        assert_eq!(m.bytes_of(TransferKind::TotalsRead), 5);
+        assert_eq!(m.bytes_of(TransferKind::BlockCommit), 0);
+    }
+}

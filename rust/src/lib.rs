@@ -1,0 +1,54 @@
+//! # mplda — Model-Parallel Inference for Big Topic Models
+//!
+//! A production-grade reproduction of *Model-Parallel Inference for Big Topic
+//! Models* (Zheng, Kim, Ho, Xing — CS.DC 2014): word-partitioned,
+//! model-parallel collapsed Gibbs sampling for LDA, with
+//!
+//! * a **scheduler** that partitions the `V×K` word–topic table into `M`
+//!   disjoint word blocks and rotates them across workers (Algorithm 1),
+//! * **workers** that fetch model blocks on demand from a distributed
+//!   key-value store, sample on an inverted index with the paper's `X+Y`
+//!   decomposition (eq. 3), and commit blocks back (Algorithm 2),
+//! * a **lazy-sync protocol** for the non-separable topic-totals vector
+//!   `C_k` (§3.3) with the paper's `Δ_{r,i}` error metric,
+//! * a **Yahoo!LDA-style data-parallel baseline** (full model replica +
+//!   background asynchronous synchronization) for head-to-head comparison,
+//! * a **discrete-event cluster simulator** (node presets, per-link
+//!   bandwidth/latency, shared-uplink congestion) standing in for the
+//!   paper's PROBE clusters, and
+//! * an **XLA/PJRT execution backend** whose compute kernel is authored in
+//!   JAX/Pallas and AOT-lowered to HLO text at build time (`make artifacts`);
+//!   Python never runs on the sampling path.
+//!
+//! See `DESIGN.md` for the system inventory and the per-experiment index, and
+//! `EXPERIMENTS.md` for paper-vs-measured results.
+//!
+//! ## Quick start
+//!
+//! ```no_run
+//! use mplda::config::Config;
+//! use mplda::eval::common::run_training;
+//!
+//! let mut cfg = Config::default();
+//! cfg.corpus.preset = "tiny".into();
+//! cfg.train.topics = 50;
+//! cfg.train.iterations = 20;
+//! let report = run_training(&cfg).unwrap();
+//! println!("final log-likelihood: {}", report.final_loglik);
+//! ```
+
+pub mod util;
+pub mod config;
+pub mod corpus;
+pub mod model;
+pub mod sampler;
+pub mod kvstore;
+pub mod coordinator;
+pub mod cluster;
+pub mod baseline;
+pub mod metrics;
+pub mod runtime;
+pub mod eval;
+
+/// Library version, mirrors `Cargo.toml`.
+pub const VERSION: &str = env!("CARGO_PKG_VERSION");

@@ -1,0 +1,241 @@
+//! `mplda` — the CLI launcher.
+//!
+//! ```text
+//! mplda train   [--config FILE] [--<section>.<key> VALUE ...]
+//! mplda eval    <fig2|fig3|table1|fig4a|fig4b|all> [options]
+//! mplda corpus  [--corpus.preset NAME ...]      # corpus statistics
+//! mplda check   [--runtime.artifacts_dir DIR]   # artifact + PJRT smoke
+//! ```
+//!
+//! Every experiment of the paper's §5 is reachable from `mplda eval`; the
+//! same drivers back the `cargo bench` targets.
+
+use anyhow::{bail, Context, Result};
+
+use mplda::config::Config;
+use mplda::eval;
+use mplda::util::cli::{Args, HelpBuilder};
+use mplda::util::{fmt, logger};
+
+fn main() {
+    logger::init();
+    let args = Args::from_env(true);
+    let code = match dispatch(&args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn load_config(args: &Args) -> Result<Config> {
+    // Defaults stay *unresolved* (workers/blocks = 0 sentinels) until after
+    // CLI overrides, so `--coord.workers 64` implies blocks = 64 rather
+    // than clashing with an eagerly-derived default. When using --config,
+    // override coord.blocks explicitly if you also override coord.workers.
+    let mut cfg = match args.get("config") {
+        Some(path) => Config::from_file(path)?,
+        None => Config::default(),
+    };
+    cfg.apply_overrides(args.options())?;
+    Ok(cfg)
+}
+
+fn dispatch(args: &Args) -> Result<()> {
+    match args.subcommand.as_deref() {
+        Some("train") => cmd_train(args),
+        Some("eval") => cmd_eval(args),
+        Some("corpus") => cmd_corpus(args),
+        Some("topics") => cmd_topics(args),
+        Some("check") => cmd_check(args),
+        Some("help") | None => {
+            print!("{}", help());
+            Ok(())
+        }
+        Some(other) => bail!("unknown command {other:?} (try `mplda help`)"),
+    }
+}
+
+fn help() -> String {
+    HelpBuilder::new(&format!(
+        "mplda {} — model-parallel inference for big topic models\n\
+         (Zheng, Kim, Ho & Xing, 2014 — rust + JAX/Pallas reproduction)",
+        mplda::VERSION
+    ))
+    .section("Commands")
+    .entry("train", "train LDA per config (model-parallel or baseline)")
+    .entry("eval <exp>", "reproduce a paper experiment: fig2 fig3 table1 fig4a fig4b ablations all")
+    .entry("topics", "train briefly, then print top words + coherence per topic")
+    .entry("corpus", "print corpus statistics for a preset")
+    .entry("check", "verify AOT artifacts load and execute via PJRT")
+    .section("Common options")
+    .entry("--config FILE", "TOML config (see configs/)")
+    .entry("--<sec>.<key> V", "override any config key, e.g. --train.topics 1000")
+    .entry("--out DIR", "experiment CSV output dir (default out/)")
+    .render()
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let cfg = load_config(args)?;
+    if cfg.output.trace {
+        return cmd_train_traced(&cfg);
+    }
+    log::info!(
+        "training: sampler={} K={} iters={} workers={} machines={}",
+        cfg.train.sampler.name(),
+        cfg.train.topics,
+        cfg.train.iterations,
+        cfg.coord.workers,
+        cfg.cluster.machines
+    );
+    let summary = eval::run_training(&cfg)?;
+    println!("== training complete ==");
+    println!("final log-likelihood : {}", fmt::sci(summary.final_loglik));
+    println!("simulated time       : {}", mplda::util::bench::fmt_secs(summary.sim_time));
+    println!("tokens sampled       : {}", fmt::count(summary.total_tokens));
+    println!("communication        : {}", fmt::bytes(summary.total_comm_bytes));
+    println!("peak node memory     : {}", fmt::bytes(summary.peak_mem_bytes));
+    if summary.max_delta > 0.0 {
+        println!("max Δ_r,i            : {:.3e}", summary.max_delta);
+    }
+    if summary.host_compute_secs > 0.0 {
+        println!(
+            "sampler throughput   : {}",
+            mplda::util::bench::fmt_rate(
+                summary.total_tokens as f64 / summary.host_compute_secs,
+                "tok"
+            )
+        );
+    }
+    Ok(())
+}
+
+/// Traced variant of `train`: runs the MP driver with the phase timeline
+/// on, prints the phase breakdown and writes Chrome trace JSON.
+fn cmd_train_traced(cfg: &Config) -> Result<()> {
+    use mplda::coordinator::{Driver, Phase};
+    let mut driver = Driver::new(cfg)?;
+    let report = driver.run(cfg.train.iterations, |_, _| {})?;
+    println!("final log-likelihood : {}", fmt::sci(report.final_loglik));
+    println!("simulated time       : {}", mplda::util::bench::fmt_secs(report.sim_time));
+    println!("\nphase breakdown (fraction of worker-time):");
+    for phase in [Phase::TotalsSync, Phase::Fetch, Phase::Compute, Phase::Commit, Phase::Barrier]
+    {
+        println!("  {:12?} {:6.1}%", phase, driver.timeline.phase_fraction(phase) * 100.0);
+    }
+    std::fs::create_dir_all(&cfg.output.dir)?;
+    let path = std::path::Path::new(&cfg.output.dir).join("trace.json");
+    driver.timeline.write_chrome_trace(&path)?;
+    println!("\nchrome trace written to {path:?} ({} spans)", driver.timeline.spans().len());
+    Ok(())
+}
+
+fn cmd_eval(args: &Args) -> Result<()> {
+    let which = args
+        .positional()
+        .first()
+        .map(|s| s.as_str())
+        .context("eval needs an experiment: fig2 fig3 table1 fig4a fig4b all")?;
+    let out_dir = Some(args.get_or("out", "out"));
+    let run_one = |name: &str| -> Result<()> {
+        let report = match name {
+            "fig2" => {
+                eval::fig2::run(&eval::fig2::Opts { out_dir: out_dir.clone(), ..Default::default() })?
+            }
+            "fig3" => {
+                eval::fig3::run(&eval::fig3::Opts { out_dir: out_dir.clone(), ..Default::default() })?
+            }
+            "table1" => eval::table1::run(&eval::table1::Opts {
+                out_dir: out_dir.clone(),
+                ..Default::default()
+            })?,
+            "fig4a" => eval::fig4a::run(&eval::fig4a::Opts {
+                out_dir: out_dir.clone(),
+                ..Default::default()
+            })?,
+            "fig4b" => eval::fig4b::run(&eval::fig4b::Opts {
+                out_dir: out_dir.clone(),
+                ..Default::default()
+            })?,
+            "ablations" => eval::ablations::run(&eval::ablations::Opts::default())?,
+            other => bail!("unknown experiment {other:?}"),
+        };
+        println!("{report}");
+        Ok(())
+    };
+    if which == "all" {
+        for name in ["fig2", "fig3", "table1", "fig4a", "fig4b"] {
+            println!("\n##### {name} #####\n");
+            run_one(name)?;
+        }
+        Ok(())
+    } else {
+        run_one(which)
+    }
+}
+
+fn cmd_corpus(args: &Args) -> Result<()> {
+    let cfg = load_config(args)?;
+    let corpus = mplda::corpus::build(&cfg.corpus)?;
+    println!("preset   : {}", cfg.corpus.preset);
+    println!("{}", corpus.summary());
+    let freqs = corpus.word_frequencies();
+    println!("head word freq : {}", freqs.first().copied().unwrap_or(0));
+    println!(
+        "model variables at K={}: {}",
+        cfg.train.topics,
+        fmt::count(corpus.model_variables(cfg.train.topics))
+    );
+    Ok(())
+}
+
+/// Train briefly and show topic quality: top words and UMass coherence.
+fn cmd_topics(args: &Args) -> Result<()> {
+    let mut cfg = load_config(args)?;
+    if cfg.train.iterations > 30 {
+        cfg.train.iterations = 30;
+    }
+    let mut driver = mplda::coordinator::Driver::new(&cfg)?;
+    driver.run(cfg.train.iterations, |_, _| {})?;
+    // Rebuild a table view for inspection.
+    let mut wt =
+        mplda::model::WordTopicTable::zeros(driver.corpus.num_words(), cfg.train.topics);
+    for b in driver.kv().resident_blocks() {
+        for (i, row) in b.rows.iter().enumerate() {
+            *wt.row_mut(b.word_at(i) as usize) = row.clone();
+        }
+    }
+    let n = args.parsed_or("top", 10usize)?;
+    for line in mplda::metrics::topics::render_topics(&wt, &driver.corpus, n) {
+        println!("{line}");
+    }
+    println!(
+        "\nmean UMass coherence (top {n}): {:.2}",
+        mplda::metrics::topics::mean_coherence(&wt, &driver.corpus, n)
+    );
+    Ok(())
+}
+
+fn cmd_check(args: &Args) -> Result<()> {
+    let cfg = load_config(args)?;
+    let reg = mplda::runtime::ArtifactRegistry::load(&cfg.runtime.artifacts_dir)?;
+    println!("manifest: {} artifacts", reg.len());
+    let topics = reg.available_topics(mplda::runtime::ArtifactKind::Gibbs);
+    println!("gibbs K variants: {topics:?}");
+    // Compile + execute the smallest gibbs artifact as a smoke test.
+    let k = *topics.first().context("no gibbs artifacts")?;
+    let params = mplda::sampler::Params::new(k, 1000, 0.1, 0.01);
+    let mut exec = mplda::runtime::XlaExecutor::from_registry(&reg, &params, usize::MAX)?;
+    use mplda::sampler::xla_dense::MicrobatchExecutor;
+    let b = exec.batch_size();
+    let ct = vec![0.0f32; b * k];
+    let cd = vec![0.0f32; b * k];
+    let ck = vec![10.0f32; k];
+    let u = vec![0.5f32; b];
+    let z = exec.execute(&ct, &cd, &ck, &u)?;
+    println!("executed gibbs_b{b}_k{k}: z[0..4] = {:?}", &z[..4.min(z.len())]);
+    println!("PJRT round-trip OK");
+    Ok(())
+}

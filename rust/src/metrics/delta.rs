@@ -1,0 +1,123 @@
+//! The `Δ_{r,i}` parallelization-error metric (Fig 3, §5.1).
+//!
+//! Within a round, each worker's snapshot `T̃_m` of the topic totals `C_k`
+//! drifts from the true (all-deltas-merged) value `T`. The paper defines
+//!
+//! ```text
+//! Δ_{r,i} = (1 / (M·N)) · Σ_m ‖T − T̃_m‖₁      ∈ [0, 2]
+//! ```
+//!
+//! where `N = Σ_k C_k` is the corpus token count. The tracker collects the
+//! per-worker end-of-round snapshots and emits one `Δ` per round; the Fig 3
+//! harness plots rounds as `1/M` fractions of an iteration.
+
+use crate::model::TopicCounts;
+
+/// One round's error observation.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DeltaPoint {
+    pub iteration: usize,
+    pub round: usize,
+    /// Fractional iteration = iteration + round/M (x-axis of Fig 3).
+    pub frac_iteration: f64,
+    pub delta: f64,
+}
+
+/// Collects per-round snapshots and computes `Δ_{r,i}`.
+#[derive(Debug, Default)]
+pub struct DeltaTracker {
+    points: Vec<DeltaPoint>,
+}
+
+impl DeltaTracker {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record one round: the true totals and every worker's local snapshot
+    /// at the moment the round ended.
+    pub fn record_round(
+        &mut self,
+        iteration: usize,
+        round: usize,
+        num_rounds: usize,
+        truth: &TopicCounts,
+        worker_snapshots: &[TopicCounts],
+    ) -> f64 {
+        let n = truth.total().max(1) as f64;
+        let m = worker_snapshots.len().max(1) as f64;
+        let sum: u64 = worker_snapshots.iter().map(|s| truth.l1_distance(s)).sum();
+        let delta = sum as f64 / (m * n);
+        self.points.push(DeltaPoint {
+            iteration,
+            round,
+            frac_iteration: iteration as f64 + round as f64 / num_rounds.max(1) as f64,
+            delta,
+        });
+        delta
+    }
+
+    pub fn points(&self) -> &[DeltaPoint] {
+        &self.points
+    }
+
+    pub fn max_delta(&self) -> f64 {
+        self.points.iter().map(|p| p.delta).fold(0.0, f64::max)
+    }
+
+    pub fn mean_delta(&self) -> f64 {
+        if self.points.is_empty() {
+            return 0.0;
+        }
+        self.points.iter().map(|p| p.delta).sum::<f64>() / self.points.len() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zero_when_snapshots_exact() {
+        let truth = TopicCounts::from_vec(vec![10, 20, 30]);
+        let mut t = DeltaTracker::new();
+        let d = t.record_round(0, 0, 4, &truth, &[truth.clone(), truth.clone()]);
+        assert_eq!(d, 0.0);
+    }
+
+    #[test]
+    fn matches_hand_computation() {
+        let truth = TopicCounts::from_vec(vec![10, 20, 30]); // N = 60
+        let s1 = TopicCounts::from_vec(vec![12, 20, 30]); // l1 = 2
+        let s2 = TopicCounts::from_vec(vec![10, 16, 30]); // l1 = 4
+        let mut t = DeltaTracker::new();
+        let d = t.record_round(1, 2, 4, &truth, &[s1, s2]);
+        // (2+4) / (2 * 60) = 0.05
+        assert!((d - 0.05).abs() < 1e-12);
+        let p = &t.points()[0];
+        assert!((p.frac_iteration - 1.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn bounded_by_two() {
+        // Maximal disagreement: snapshot has all mass moved.
+        let truth = TopicCounts::from_vec(vec![100, 0]);
+        let snap = TopicCounts::from_vec(vec![0, 100]);
+        let mut t = DeltaTracker::new();
+        let d = t.record_round(0, 0, 1, &truth, &[snap]);
+        assert!(d <= 2.0 + 1e-12);
+        assert!((d - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn aggregates() {
+        let truth = TopicCounts::from_vec(vec![50, 50]);
+        let near = TopicCounts::from_vec(vec![49, 51]);
+        let mut t = DeltaTracker::new();
+        t.record_round(0, 0, 2, &truth, &[truth.clone()]);
+        t.record_round(0, 1, 2, &truth, &[near]);
+        assert!(t.max_delta() > 0.0);
+        assert!(t.mean_delta() > 0.0);
+        assert_eq!(t.points().len(), 2);
+    }
+}

@@ -1,0 +1,322 @@
+//! Training log-likelihood — the convergence surrogate (§5 "Evaluation").
+//!
+//! We compute the full collapsed joint `log p(W, Z | α, β)`:
+//!
+//! ```text
+//! log p(W,Z) = Σ_k [ log Γ(Vβ) − V log Γ(β) + Σ_t log Γ(C_t^k+β) − log Γ(C_k+Vβ) ]
+//!            + Σ_d [ log Γ(Kα) − K log Γ(α) + Σ_k log Γ(C_d^k+α) − log Γ(N_d+Kα) ]
+//! ```
+//!
+//! computed over the sparse counts in O(nnz) with a memoized
+//! `log Γ(n + const)` table for small integer counts ([`LoglikCache`]) —
+//! counts are overwhelmingly small integers, so the table hit-rate is ≈100%
+//! and the LL pass stays negligible next to sampling.
+//!
+//! `log Γ` itself is a Lanczos(g=7, n=9) approximation since `std` has no
+//! stable `ln_gamma`; accuracy ~1e-13 relative, unit-tested against exact
+//! factorials and known values.
+
+use crate::model::{DocTopic, TopicCounts, WordTopicTable};
+
+/// Lanczos g=7, n=9 coefficients (Boost/GSL standard set).
+const LANCZOS_G: f64 = 7.0;
+const LANCZOS: [f64; 9] = [
+    0.99999999999980993,
+    676.5203681218851,
+    -1259.1392167224028,
+    771.32342877765313,
+    -176.61502916214059,
+    12.507343278686905,
+    -0.13857109526572012,
+    9.9843695780195716e-6,
+    1.5056327351493116e-7,
+];
+
+/// `ln Γ(x)` for `x > 0`.
+pub fn lgamma(x: f64) -> f64 {
+    debug_assert!(x > 0.0, "lgamma domain: x={x}");
+    if x < 0.5 {
+        // Reflection: Γ(x)Γ(1−x) = π / sin(πx)
+        let pi = std::f64::consts::PI;
+        return (pi / (pi * x).sin()).ln() - lgamma(1.0 - x);
+    }
+    let x = x - 1.0;
+    let mut acc = LANCZOS[0];
+    for (i, &c) in LANCZOS.iter().enumerate().skip(1) {
+        acc += c / (x + i as f64);
+    }
+    let t = x + LANCZOS_G + 0.5;
+    0.5 * (2.0 * std::f64::consts::PI).ln() + (x + 0.5) * t.ln() - t + acc.ln()
+}
+
+/// Memoized `ln Γ(n + offset)` for integer `n` in `[0, table_len)`.
+pub struct LoglikCache {
+    offset: f64,
+    table: Vec<f64>,
+}
+
+impl LoglikCache {
+    pub fn new(offset: f64, table_len: usize) -> Self {
+        let table = (0..table_len).map(|n| lgamma(n as f64 + offset)).collect();
+        LoglikCache { offset, table }
+    }
+
+    #[inline]
+    pub fn get(&self, n: u64) -> f64 {
+        match self.table.get(n as usize) {
+            Some(&v) => v,
+            None => lgamma(n as f64 + self.offset),
+        }
+    }
+}
+
+/// Full collapsed joint log-likelihood from the three count statistics.
+///
+/// `doc_lens[d]` must equal `Σ_k C_d^k` (callers have it from the corpus).
+pub fn joint_log_likelihood(
+    dt: &DocTopic,
+    wt: &WordTopicTable,
+    ck: &TopicCounts,
+    alpha: f64,
+    beta: f64,
+) -> f64 {
+    let k = ck.num_topics() as f64;
+    let v = wt.num_words() as f64;
+    let vbeta = v * beta;
+    let kalpha = k * alpha;
+
+    let beta_cache = LoglikCache::new(beta, 4096);
+    let alpha_cache = LoglikCache::new(alpha, 4096);
+    let lg_beta = lgamma(beta);
+    let lg_alpha = lgamma(alpha);
+
+    // Word–topic term.
+    let mut word_ll = ck.num_topics() as f64 * (lgamma(vbeta) - v * lg_beta);
+    let mut nnz: u64 = 0;
+    for row in &wt.rows {
+        for (_, c) in row.iter() {
+            word_ll += beta_cache.get(c as u64);
+            nnz += 1;
+        }
+    }
+    // Zero-count entries contribute lgamma(beta) each.
+    let total_cells = wt.num_words() as u64 * ck.num_topics() as u64;
+    word_ll += (total_cells - nnz) as f64 * lg_beta;
+    for kk in 0..ck.num_topics() {
+        word_ll -= lgamma(ck.get(kk) as f64 + vbeta);
+    }
+
+    // Doc–topic term.
+    let mut doc_ll = dt.num_docs() as f64 * (lgamma(kalpha) - k * lg_alpha);
+    for d in 0..dt.num_docs() {
+        let counts = dt.doc(d);
+        let mut nd = 0u64;
+        for (_, c) in counts.iter() {
+            doc_ll += alpha_cache.get(c as u64);
+            nd += c as u64;
+        }
+        doc_ll += (ck.num_topics() - counts.len()) as f64 * lg_alpha;
+        doc_ll -= lgamma(nd as f64 + kalpha);
+    }
+
+    word_ll + doc_ll
+}
+
+/// Same likelihood, computed from sharded model blocks instead of a full
+/// table (the distributed driver's view — the full `V×K` table never
+/// exists on one node).
+pub fn joint_log_likelihood_blocks<'a, I>(
+    dt: &DocTopic,
+    blocks: I,
+    ck: &TopicCounts,
+    num_words: usize,
+    alpha: f64,
+    beta: f64,
+) -> f64
+where
+    I: Iterator<Item = &'a crate::model::ModelBlock>,
+{
+    let k = ck.num_topics() as f64;
+    let v = num_words as f64;
+    let vbeta = v * beta;
+    let kalpha = k * alpha;
+    let beta_cache = LoglikCache::new(beta, 4096);
+    let alpha_cache = LoglikCache::new(alpha, 4096);
+    let lg_beta = lgamma(beta);
+    let lg_alpha = lgamma(alpha);
+
+    let mut word_ll = ck.num_topics() as f64 * (lgamma(vbeta) - v * lg_beta);
+    let mut nnz: u64 = 0;
+    for block in blocks {
+        for row in &block.rows {
+            for (_, c) in row.iter() {
+                word_ll += beta_cache.get(c as u64);
+                nnz += 1;
+            }
+        }
+    }
+    let total_cells = num_words as u64 * ck.num_topics() as u64;
+    word_ll += (total_cells - nnz) as f64 * lg_beta;
+    for kk in 0..ck.num_topics() {
+        word_ll -= lgamma(ck.get(kk) as f64 + vbeta);
+    }
+
+    let mut doc_ll = dt.num_docs() as f64 * (lgamma(kalpha) - k * lg_alpha);
+    for d in 0..dt.num_docs() {
+        let counts = dt.doc(d);
+        let mut nd = 0u64;
+        for (_, c) in counts.iter() {
+            doc_ll += alpha_cache.get(c as u64);
+            nd += c as u64;
+        }
+        doc_ll += (ck.num_topics() - counts.len()) as f64 * lg_alpha;
+        doc_ll -= lgamma(nd as f64 + kalpha);
+    }
+    word_ll + doc_ll
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::corpus::synthetic::{generate, GenSpec};
+    use crate::model::Assignments;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn lgamma_matches_factorials() {
+        // ln Γ(n) = ln (n-1)!
+        let mut fact = 1.0f64;
+        for n in 1..15u32 {
+            let expect = fact.ln();
+            let got = lgamma(n as f64);
+            assert!((got - expect).abs() < 1e-10, "n={n} got={got} expect={expect}");
+            fact *= n as f64;
+        }
+    }
+
+    #[test]
+    fn lgamma_half() {
+        // Γ(1/2) = sqrt(pi)
+        let expect = std::f64::consts::PI.sqrt().ln();
+        assert!((lgamma(0.5) - expect).abs() < 1e-12);
+        // Γ(3/2) = sqrt(pi)/2
+        let expect = (std::f64::consts::PI.sqrt() / 2.0).ln();
+        assert!((lgamma(1.5) - expect).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cache_agrees_with_direct() {
+        let c = LoglikCache::new(0.01, 64);
+        for n in [0u64, 1, 5, 63, 64, 1000] {
+            assert!((c.get(n) - lgamma(n as f64 + 0.01)).abs() < 1e-12);
+        }
+    }
+
+    fn state() -> (DocTopic, WordTopicTable, TopicCounts) {
+        let corpus = generate(&GenSpec {
+            vocab: 100,
+            docs: 60,
+            avg_doc_len: 25,
+            zipf_s: 1.05,
+            topics: 5,
+            alpha: 0.1,
+            seed: 21,
+        });
+        let mut rng = Pcg64::new(1);
+        let assign = Assignments::random(&corpus, 10, &mut rng);
+        assign.build_counts(&corpus)
+    }
+
+    #[test]
+    fn loglik_is_finite_and_negative() {
+        let (dt, wt, ck) = state();
+        let ll = joint_log_likelihood(&dt, &wt, &ck, 0.1, 0.01);
+        assert!(ll.is_finite());
+        assert!(ll < 0.0);
+    }
+
+    #[test]
+    fn loglik_brute_force_agreement() {
+        // Recompute with no sparsity shortcuts and no caches.
+        let (dt, wt, ck) = state();
+        let (alpha, beta) = (0.1, 0.01);
+        let k = ck.num_topics();
+        let v = wt.num_words();
+        let vbeta = v as f64 * beta;
+        let kalpha = k as f64 * alpha;
+        let mut expect = 0.0;
+        for kk in 0..k {
+            expect += lgamma(vbeta) - v as f64 * lgamma(beta);
+            for w in 0..v {
+                expect += lgamma(wt.row(w).get(kk as u32) as f64 + beta);
+            }
+            expect -= lgamma(ck.get(kk) as f64 + vbeta);
+        }
+        for d in 0..dt.num_docs() {
+            expect += lgamma(kalpha) - k as f64 * lgamma(alpha);
+            let mut nd = 0.0;
+            for kk in 0..k {
+                let c = dt.doc(d).get(kk as u32) as f64;
+                expect += lgamma(c + alpha);
+                nd += c;
+            }
+            expect -= lgamma(nd + kalpha);
+        }
+        let got = joint_log_likelihood(&dt, &wt, &ck, alpha, beta);
+        assert!(
+            (got - expect).abs() / expect.abs() < 1e-12,
+            "got={got} expect={expect}"
+        );
+    }
+
+    #[test]
+    fn blocks_variant_matches_full_table() {
+        let (dt, wt, ck) = state();
+        let full = joint_log_likelihood(&dt, &wt, &ck, 0.1, 0.01);
+        let map = crate::model::BlockMap::balanced(&vec![1u64; wt.num_words()], 4);
+        let blocks = crate::model::Assignments::build_blocks(&wt, &map);
+        let sharded = joint_log_likelihood_blocks(
+            &dt,
+            blocks.iter(),
+            &ck,
+            wt.num_words(),
+            0.1,
+            0.01,
+        );
+        assert!((full - sharded).abs() < 1e-9, "full={full} sharded={sharded}");
+    }
+
+    #[test]
+    fn concentrated_assignment_beats_random() {
+        // Assigning each word deterministically by word id should produce a
+        // higher (less negative) word LL than uniform-random topics on the
+        // same corpus — a sanity check that the metric orders states
+        // correctly.
+        let corpus = generate(&GenSpec {
+            vocab: 50,
+            docs: 40,
+            avg_doc_len: 30,
+            zipf_s: 1.0,
+            topics: 4,
+            alpha: 0.05,
+            seed: 6,
+        });
+        let mut rng = Pcg64::new(2);
+        let random = Assignments::random(&corpus, 8, &mut rng);
+        let (rdt, rwt, rck) = random.build_counts(&corpus);
+        let ll_random = joint_log_likelihood(&rdt, &rwt, &rck, 0.1, 0.01);
+
+        let mut structured = random.clone();
+        for (d, doc) in corpus.docs.iter().enumerate() {
+            for (n, &w) in doc.tokens.iter().enumerate() {
+                structured.z[d][n] = w % 8;
+            }
+        }
+        let (sdt, swt, sck) = structured.build_counts(&corpus);
+        let ll_structured = joint_log_likelihood(&sdt, &swt, &sck, 0.1, 0.01);
+        assert!(
+            ll_structured > ll_random,
+            "structured={ll_structured} random={ll_random}"
+        );
+    }
+}

@@ -1,0 +1,170 @@
+//! Held-out evaluation: per-token predictive log-probability and
+//! perplexity from the collapsed predictive distribution
+//!
+//! ```text
+//! p(w | d, state) = Σ_k  (C_d^k + α)/(N_d + Kα) · (C_w^k + β)/(C_k + Vβ)
+//! ```
+//!
+//! Used on a held-out document set against trained counts (fold-in-free
+//! evaluation: held-out docs use the smoothing-only doc term unless their
+//! `C_d^k` is provided). The device path reuses the AOT-compiled
+//! `marginal` artifact (L1's `token_marginal` kernel), demonstrating the
+//! second compiled kernel on the rust side; the pure-rust path is the
+//! oracle.
+//!
+//! Note the paper argues training LL — not test perplexity — is the right
+//! convergence surrogate for comparing *inference systems* (§5
+//! "Evaluation"); this module exists for the model-quality use case.
+
+use crate::corpus::Corpus;
+use crate::model::{SparseCounts, TopicCounts, WordTopicTable};
+use crate::sampler::Params;
+
+/// Predictive log-probability of one token under the current state.
+pub fn token_log_prob(
+    wt: &WordTopicTable,
+    ck: &TopicCounts,
+    doc_counts: Option<&SparseCounts>,
+    word: u32,
+    params: &Params,
+) -> f64 {
+    let k = params.num_topics;
+    let nd = doc_counts.map(|c| c.total()).unwrap_or(0) as f64;
+    let denom_theta = nd + k as f64 * params.alpha;
+    let row = wt.row(word as usize);
+    // Smoothing-only part: α/(N_d+Kα) Σ_k (C_wk+β)/(C_k+Vβ); split into the
+    // sparse row part and the all-β remainder.
+    let mut p = 0.0;
+    let mut row_mass = 0.0;
+    for (kk, c) in row.iter() {
+        let phi = (c as f64 + params.beta) / (ck.get(kk as usize) as f64 + params.vbeta);
+        row_mass += phi;
+        p += params.alpha / denom_theta * phi;
+    }
+    // Topics absent from the row.
+    let absent: f64 = (0..k)
+        .filter(|kk| row.get(*kk as u32) == 0)
+        .map(|kk| params.beta / (ck.get(kk) as f64 + params.vbeta))
+        .sum();
+    p += params.alpha / denom_theta * absent;
+    let _ = row_mass;
+    // Doc-specific part over the doc's non-zero topics.
+    if let Some(dc) = doc_counts {
+        for (kk, c) in dc.iter() {
+            let phi = (row.get(kk) as f64 + params.beta)
+                / (ck.get(kk as usize) as f64 + params.vbeta);
+            p += c as f64 / denom_theta * phi;
+        }
+    }
+    p.max(f64::MIN_POSITIVE).ln()
+}
+
+/// Mean per-token predictive log-prob and perplexity over documents.
+///
+/// `doc_counts[d]` may be `None` (pure cold-start evaluation).
+pub fn perplexity(
+    corpus: &Corpus,
+    docs: &[u32],
+    wt: &WordTopicTable,
+    ck: &TopicCounts,
+    doc_counts: impl Fn(usize) -> Option<SparseCounts>,
+    params: &Params,
+) -> (f64, f64) {
+    let mut total_lp = 0.0;
+    let mut tokens = 0usize;
+    for &d in docs {
+        let dc = doc_counts(d as usize);
+        for &w in &corpus.docs[d as usize].tokens {
+            total_lp += token_log_prob(wt, ck, dc.as_ref(), w, params);
+            tokens += 1;
+        }
+    }
+    if tokens == 0 {
+        return (0.0, f64::NAN);
+    }
+    let mean_lp = total_lp / tokens as f64;
+    (mean_lp, (-mean_lp).exp())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::corpus::synthetic::{generate, GenSpec};
+    use crate::model::Assignments;
+    use crate::sampler::{dense, Scratch};
+    use crate::util::rng::Pcg64;
+
+    fn fixture() -> (Corpus, Assignments) {
+        let corpus = generate(&GenSpec {
+            vocab: 150,
+            docs: 120,
+            avg_doc_len: 25,
+            zipf_s: 1.05,
+            topics: 6,
+            alpha: 0.05,
+            seed: 31,
+        });
+        let mut rng = Pcg64::new(2);
+        let assign = Assignments::random(&corpus, 10, &mut rng);
+        (corpus, assign)
+    }
+
+    #[test]
+    fn token_log_prob_is_proper() {
+        // Σ_w p(w|d) must equal 1 (up to float error) when summed over the
+        // vocabulary.
+        let (corpus, assign) = fixture();
+        let (dt, wt, ck) = assign.build_counts(&corpus);
+        let params = Params::new(10, corpus.num_words(), 0.05, 0.01);
+        let mut total = 0.0;
+        for w in 0..corpus.num_words() as u32 {
+            total += token_log_prob(&wt, &ck, Some(dt.doc(0)), w, &params).exp();
+        }
+        assert!((total - 1.0).abs() < 1e-6, "total={total}");
+        // Also proper with no doc counts.
+        let mut total = 0.0;
+        for w in 0..corpus.num_words() as u32 {
+            total += token_log_prob(&wt, &ck, None, w, &params).exp();
+        }
+        assert!((total - 1.0).abs() < 1e-6, "cold total={total}");
+    }
+
+    #[test]
+    fn training_reduces_foldin_perplexity() {
+        // With fold-in (doc–topic counts supplied), training must sharpen
+        // the per-doc predictive distribution. (Cold-start evaluation with
+        // no doc counts mixes topics uniformly and reduces to roughly the
+        // unigram distribution — invariant under training by design.)
+        let (corpus, mut assign) = fixture();
+        let docs: Vec<u32> = (0..corpus.num_docs() as u32).collect();
+        let mut rng = Pcg64::new(9);
+        let (mut dt, mut wt, mut ck) = assign.build_counts(&corpus);
+        let params = Params::new(10, corpus.num_words(), 0.05, 0.01);
+
+        let (_, ppx_before) =
+            perplexity(&corpus, &docs, &wt, &ck, |d| Some(dt.doc(d).clone()), &params);
+        let mut scratch = Scratch::new(10);
+        for _ in 0..25 {
+            dense::sweep(
+                &corpus, &mut assign, &mut dt, &mut wt, &mut ck, &params, &mut scratch, &mut rng,
+            );
+        }
+        let (_, ppx_after) =
+            perplexity(&corpus, &docs, &wt, &ck, |d| Some(dt.doc(d).clone()), &params);
+        assert!(
+            ppx_after < ppx_before,
+            "perplexity should drop: before={ppx_before} after={ppx_after}"
+        );
+        assert!(ppx_after > 1.0);
+    }
+
+    #[test]
+    fn empty_doc_set() {
+        let (corpus, assign) = fixture();
+        let (_, wt, ck) = assign.build_counts(&corpus);
+        let params = Params::new(10, corpus.num_words(), 0.05, 0.01);
+        let (lp, ppx) = perplexity(&corpus, &[], &wt, &ck, |_| None, &params);
+        assert_eq!(lp, 0.0);
+        assert!(ppx.is_nan());
+    }
+}

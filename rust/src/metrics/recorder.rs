@@ -1,0 +1,176 @@
+//! Time-series recording for experiment outputs.
+//!
+//! Every experiment driver logs `(x, y…)` rows into named [`Series`] and
+//! writes them as CSV under the configured output directory, so figures can
+//! be re-plotted from files rather than scraped from stdout.
+
+use std::collections::BTreeMap;
+use std::io::Write;
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+/// One named series with fixed column names.
+#[derive(Debug, Clone)]
+pub struct Series {
+    pub name: String,
+    pub columns: Vec<String>,
+    pub rows: Vec<Vec<f64>>,
+}
+
+impl Series {
+    pub fn new(name: &str, columns: &[&str]) -> Self {
+        Series {
+            name: name.to_string(),
+            columns: columns.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn push(&mut self, row: &[f64]) {
+        assert_eq!(row.len(), self.columns.len(), "series {} row width", self.name);
+        self.rows.push(row.to_vec());
+    }
+
+    /// Column index by name.
+    pub fn col(&self, name: &str) -> Option<usize> {
+        self.columns.iter().position(|c| c == name)
+    }
+
+    /// Values of a column.
+    pub fn column(&self, name: &str) -> Vec<f64> {
+        let i = self.col(name).unwrap_or_else(|| panic!("no column {name}"));
+        self.rows.iter().map(|r| r[i]).collect()
+    }
+
+    /// Last value of a column.
+    pub fn last(&self, name: &str) -> Option<f64> {
+        let i = self.col(name)?;
+        self.rows.last().map(|r| r[i])
+    }
+
+    /// First x where column `ycol` reaches `threshold` (linear
+    /// interpolation between rows) — used for "time to reach LL" speedup
+    /// numbers (Fig 4b). Assumes `ycol` is nondecreasing-ish.
+    pub fn first_reach(&self, xcol: &str, ycol: &str, threshold: f64) -> Option<f64> {
+        let xi = self.col(xcol)?;
+        let yi = self.col(ycol)?;
+        let mut prev: Option<(f64, f64)> = None;
+        for r in &self.rows {
+            let (x, y) = (r[xi], r[yi]);
+            if y >= threshold {
+                return Some(match prev {
+                    Some((px, py)) if y > py => {
+                        px + (x - px) * (threshold - py) / (y - py)
+                    }
+                    _ => x,
+                });
+            }
+            prev = Some((x, y));
+        }
+        None
+    }
+
+    pub fn to_csv(&self) -> String {
+        let mut out = self.columns.join(",");
+        out.push('\n');
+        for r in &self.rows {
+            let cells: Vec<String> = r.iter().map(|v| format!("{v}")).collect();
+            out.push_str(&cells.join(","));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// A set of series persisted to a directory.
+#[derive(Debug, Default)]
+pub struct Recorder {
+    series: BTreeMap<String, Series>,
+    dir: Option<PathBuf>,
+}
+
+impl Recorder {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn with_dir<P: AsRef<Path>>(dir: P) -> Self {
+        Recorder { series: BTreeMap::new(), dir: Some(dir.as_ref().to_path_buf()) }
+    }
+
+    /// Get or create a series.
+    pub fn series(&mut self, name: &str, columns: &[&str]) -> &mut Series {
+        self.series
+            .entry(name.to_string())
+            .or_insert_with(|| Series::new(name, columns))
+    }
+
+    pub fn get(&self, name: &str) -> Option<&Series> {
+        self.series.get(name)
+    }
+
+    /// Write all series as `<dir>/<name>.csv`.
+    pub fn flush(&self) -> Result<()> {
+        let Some(dir) = &self.dir else {
+            return Ok(());
+        };
+        std::fs::create_dir_all(dir).with_context(|| format!("creating {dir:?}"))?;
+        for s in self.series.values() {
+            let path = dir.join(format!("{}.csv", s.name));
+            let mut f = std::fs::File::create(&path).with_context(|| format!("creating {path:?}"))?;
+            f.write_all(s.to_csv().as_bytes())?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn series_push_and_columns() {
+        let mut s = Series::new("ll", &["iter", "loglik"]);
+        s.push(&[0.0, -100.0]);
+        s.push(&[1.0, -90.0]);
+        assert_eq!(s.column("loglik"), vec![-100.0, -90.0]);
+        assert_eq!(s.last("iter"), Some(1.0));
+    }
+
+    #[test]
+    fn first_reach_interpolates() {
+        let mut s = Series::new("ll", &["t", "y"]);
+        s.push(&[0.0, 0.0]);
+        s.push(&[10.0, 100.0]);
+        let t = s.first_reach("t", "y", 50.0).unwrap();
+        assert!((t - 5.0).abs() < 1e-12);
+        assert!(s.first_reach("t", "y", 200.0).is_none());
+    }
+
+    #[test]
+    fn csv_format() {
+        let mut s = Series::new("x", &["a", "b"]);
+        s.push(&[1.0, 2.5]);
+        let csv = s.to_csv();
+        assert_eq!(csv, "a,b\n1,2.5\n");
+    }
+
+    #[test]
+    fn recorder_flush_writes_files() {
+        let dir = std::env::temp_dir().join(format!("mplda_rec_{}", std::process::id()));
+        let mut r = Recorder::with_dir(&dir);
+        r.series("test_series", &["x"]).push(&[42.0]);
+        r.flush().unwrap();
+        let content = std::fs::read_to_string(dir.join("test_series.csv")).unwrap();
+        assert!(content.contains("42"));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    #[should_panic(expected = "row width")]
+    fn wrong_width_panics() {
+        let mut s = Series::new("x", &["a", "b"]);
+        s.push(&[1.0]);
+    }
+}

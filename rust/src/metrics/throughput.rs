@@ -1,0 +1,98 @@
+//! Token-throughput accounting.
+//!
+//! The paper benchmarks samplers in tokens/second/core (Yahoo!LDA and
+//! PLDA+ ≈ 20K tok/s/core, §5). [`Throughput`] accumulates sampled-token
+//! counts and wall/simulated time and reports normalized rates.
+
+use std::time::Instant;
+
+/// Accumulates tokens over measured time.
+#[derive(Debug, Clone)]
+pub struct Throughput {
+    tokens: u64,
+    elapsed_secs: f64,
+    started: Option<Instant>,
+}
+
+impl Default for Throughput {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Throughput {
+    pub fn new() -> Self {
+        Throughput { tokens: 0, elapsed_secs: 0.0, started: None }
+    }
+
+    /// Begin a wall-clock measured region.
+    pub fn start(&mut self) {
+        self.started = Some(Instant::now());
+    }
+
+    /// End the region, crediting `tokens`.
+    pub fn stop(&mut self, tokens: u64) {
+        let t = self.started.take().expect("stop without start");
+        self.elapsed_secs += t.elapsed().as_secs_f64();
+        self.tokens += tokens;
+    }
+
+    /// Credit tokens against externally measured (e.g. simulated) seconds.
+    pub fn add(&mut self, tokens: u64, secs: f64) {
+        self.tokens += tokens;
+        self.elapsed_secs += secs;
+    }
+
+    pub fn tokens(&self) -> u64 {
+        self.tokens
+    }
+
+    pub fn secs(&self) -> f64 {
+        self.elapsed_secs
+    }
+
+    /// Tokens per second.
+    pub fn rate(&self) -> f64 {
+        if self.elapsed_secs == 0.0 {
+            0.0
+        } else {
+            self.tokens as f64 / self.elapsed_secs
+        }
+    }
+
+    /// Tokens per second per core (the paper's normalization).
+    pub fn rate_per_core(&self, cores: usize) -> f64 {
+        self.rate() / cores.max(1) as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn add_and_rate() {
+        let mut t = Throughput::new();
+        t.add(1000, 0.5);
+        t.add(1000, 0.5);
+        assert_eq!(t.tokens(), 2000);
+        assert!((t.rate() - 2000.0).abs() < 1e-9);
+        assert!((t.rate_per_core(4) - 500.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn wall_clock_region() {
+        let mut t = Throughput::new();
+        t.start();
+        std::thread::sleep(std::time::Duration::from_millis(5));
+        t.stop(100);
+        assert!(t.secs() >= 0.005);
+        assert!(t.rate() > 0.0);
+    }
+
+    #[test]
+    fn zero_time_rate_is_zero() {
+        let t = Throughput::new();
+        assert_eq!(t.rate(), 0.0);
+    }
+}

@@ -1,0 +1,174 @@
+//! Topic inspection and quality: top words per topic and UMass coherence
+//! (Mimno et al. 2011) — the standard "are the topics any good" check a
+//! topic-modeling framework ships with.
+
+use crate::corpus::Corpus;
+use crate::model::WordTopicTable;
+
+/// Top-`n` words of topic `k` by count, with counts.
+pub fn top_words(wt: &WordTopicTable, k: u32, n: usize) -> Vec<(u32, u32)> {
+    let mut words: Vec<(u32, u32)> = (0..wt.num_words() as u32)
+        .filter_map(|w| {
+            let c = wt.row(w as usize).get(k);
+            (c > 0).then_some((w, c))
+        })
+        .collect();
+    words.sort_unstable_by_key(|&(w, c)| (std::cmp::Reverse(c), w));
+    words.truncate(n);
+    words
+}
+
+/// Render the top words of every topic as display lines.
+pub fn render_topics(wt: &WordTopicTable, corpus: &Corpus, n: usize) -> Vec<String> {
+    (0..wt.num_topics() as u32)
+        .map(|k| {
+            let words: Vec<String> = top_words(wt, k, n)
+                .into_iter()
+                .map(|(w, c)| format!("{}({c})", corpus.vocab.term(w)))
+                .collect();
+            format!("topic {k:4}: {}", words.join(" "))
+        })
+        .collect()
+}
+
+/// UMass coherence of one topic's top-`n` words:
+///
+/// ```text
+/// C(k) = Σ_{i<j} log ( (D(w_i, w_j) + 1) / D(w_j) )
+/// ```
+///
+/// where `D(w)` counts documents containing `w` and `D(w_i,w_j)` documents
+/// containing both; words ordered by descending topic count. Higher
+/// (closer to 0) is better.
+pub fn umass_coherence(corpus: &Corpus, top: &[(u32, u32)]) -> f64 {
+    if top.len() < 2 {
+        return 0.0;
+    }
+    // Document frequency and co-document frequency over the top set.
+    let words: Vec<u32> = top.iter().map(|&(w, _)| w).collect();
+    let idx_of = |w: u32| words.iter().position(|&x| x == w);
+    let mut df = vec![0u32; words.len()];
+    let mut codf = vec![vec![0u32; words.len()]; words.len()];
+    let mut present = vec![false; words.len()];
+    for doc in &corpus.docs {
+        present.iter_mut().for_each(|p| *p = false);
+        for &t in &doc.tokens {
+            if let Some(i) = idx_of(t) {
+                present[i] = true;
+            }
+        }
+        for i in 0..words.len() {
+            if present[i] {
+                df[i] += 1;
+                for j in 0..i {
+                    if present[j] {
+                        codf[i][j] += 1;
+                        codf[j][i] += 1;
+                    }
+                }
+            }
+        }
+    }
+    let mut score = 0.0;
+    for i in 1..words.len() {
+        for j in 0..i {
+            if df[j] > 0 {
+                score += ((codf[i][j] as f64 + 1.0) / df[j] as f64).ln();
+            }
+        }
+    }
+    score
+}
+
+/// Mean UMass coherence over all topics' top-`n` words.
+pub fn mean_coherence(wt: &WordTopicTable, corpus: &Corpus, n: usize) -> f64 {
+    let k = wt.num_topics();
+    if k == 0 {
+        return 0.0;
+    }
+    (0..k as u32)
+        .map(|kk| umass_coherence(corpus, &top_words(wt, kk, n)))
+        .sum::<f64>()
+        / k as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::corpus::doc::Document;
+    use crate::corpus::Vocabulary;
+    use crate::model::Assignments;
+    use crate::sampler::{dense, Params, Scratch};
+    use crate::util::rng::Pcg64;
+
+    fn two_theme_corpus() -> Corpus {
+        // Words 0-4 co-occur; words 5-9 co-occur; never mixed.
+        let mut docs = Vec::new();
+        for i in 0..30 {
+            let base = if i % 2 == 0 { 0u32 } else { 5 };
+            docs.push(Document {
+                tokens: (0..20).map(|j| base + (j % 5) as u32).collect(),
+            });
+        }
+        Corpus { docs, vocab: Vocabulary::synthetic(10) }
+    }
+
+    #[test]
+    fn top_words_sorted_and_bounded() {
+        let corpus = two_theme_corpus();
+        let mut rng = Pcg64::new(3);
+        let assign = Assignments::random(&corpus, 2, &mut rng);
+        let (_, wt, _) = assign.build_counts(&corpus);
+        let top = top_words(&wt, 0, 3);
+        assert!(top.len() <= 3);
+        for w in top.windows(2) {
+            assert!(w[0].1 >= w[1].1);
+        }
+    }
+
+    #[test]
+    fn coherence_separates_real_topics_from_random_word_sets() {
+        let corpus = two_theme_corpus();
+        // A "topic" of co-occurring words vs one of never-co-occurring words.
+        let good: Vec<(u32, u32)> = (0..5u32).map(|w| (w, 10)).collect();
+        let bad: Vec<(u32, u32)> = vec![(0, 10), (5, 9), (1, 8), (6, 7)];
+        let cg = umass_coherence(&corpus, &good);
+        let cb = umass_coherence(&corpus, &bad);
+        assert!(cg > cb, "good={cg} bad={cb}");
+    }
+
+    #[test]
+    fn gibbs_training_improves_coherence() {
+        let corpus = two_theme_corpus();
+        let mut rng = Pcg64::new(5);
+        let mut assign = Assignments::random(&corpus, 2, &mut rng);
+        let (mut dt, mut wt, mut ck) = assign.build_counts(&corpus);
+        let before = mean_coherence(&wt, &corpus, 5);
+        let params = Params::new(2, corpus.num_words(), 0.1, 0.01);
+        let mut scratch = Scratch::new(2);
+        for _ in 0..30 {
+            dense::sweep(&corpus, &mut assign, &mut dt, &mut wt, &mut ck, &params, &mut scratch, &mut rng);
+        }
+        let after = mean_coherence(&wt, &corpus, 5);
+        assert!(after >= before, "before={before} after={after}");
+        // The two themes should be recovered: each topic's top words from
+        // one block only.
+        for k in 0..2u32 {
+            let top = top_words(&wt, k, 5);
+            let lows = top.iter().filter(|&&(w, _)| w < 5).count();
+            assert!(lows == 0 || lows == top.len(), "topic {k} mixed: {top:?}");
+        }
+    }
+
+    #[test]
+    fn render_is_human_readable() {
+        let corpus = two_theme_corpus();
+        let mut rng = Pcg64::new(3);
+        let assign = Assignments::random(&corpus, 2, &mut rng);
+        let (_, wt, _) = assign.build_counts(&corpus);
+        let lines = render_topics(&wt, &corpus, 3);
+        assert_eq!(lines.len(), 2);
+        assert!(lines[0].contains("topic"));
+        assert!(lines[0].contains("w000000") || lines[0].contains('('));
+    }
+}

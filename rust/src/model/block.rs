@@ -1,0 +1,352 @@
+//! Model blocks: the unit of model-parallelism (§3.1).
+//!
+//! Two disjoint layouts of the vocabulary into `M` blocks:
+//!
+//! * **contiguous** — word-id ranges with balanced token mass (ids are
+//!   frequency-ranked, so equal-width ranges would be wildly unbalanced);
+//! * **strided** (default) — block `b` = words `{w : w ≡ b (mod M)}`.
+//!   Every block then samples each frequency stratum, which uniformizes
+//!   the per-(shard ∩ block) work cells and cuts round-barrier straggling
+//!   (the §Perf ablation measures contiguous-vs-strided directly).
+//!
+//! A [`ModelBlock`] owns the sparse `C_t^k` rows for its word set
+//! (`lo + i·stride`); exactly one holder may mutate it at any time, which
+//! the KV-store lease protocol enforces.
+
+use super::word_topic::SparseRow;
+
+/// The static map from word ids to block ids.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct BlockMap {
+    layout: Layout,
+}
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+enum Layout {
+    /// Block `b` covers word ids `[bounds[b], bounds[b+1])`.
+    Contiguous { bounds: Vec<u32> },
+    /// Block `b` covers `{w : w % blocks == b}` over `[0, v)`.
+    Strided { v: u32, blocks: u32 },
+}
+
+impl BlockMap {
+    /// Strided layout over `v` words and `m` blocks.
+    pub fn strided(v: usize, m: usize) -> BlockMap {
+        assert!(m >= 1 && v >= m, "need v >= m >= 1 (v={v}, m={m})");
+        BlockMap { layout: Layout::Strided { v: v as u32, blocks: m as u32 } }
+    }
+
+    /// Split `[0, V)` into `m` contiguous ranges with near-equal token
+    /// mass given the per-word frequencies (ids must be frequency-ranked
+    /// or at least the caller's true token counts).
+    pub fn balanced(freqs: &[u64], m: usize) -> BlockMap {
+        assert!(m >= 1, "need at least one block");
+        let v = freqs.len();
+        assert!(v >= m, "more blocks ({m}) than words ({v})");
+        let total: u64 = freqs.iter().sum();
+        let mut bounds = Vec::with_capacity(m + 1);
+        bounds.push(0u32);
+        let mut acc = 0u64;
+        let mut next_target = 1u64;
+        for (w, &f) in freqs.iter().enumerate() {
+            acc += f;
+            // Close block b when cumulative mass passes b/m of total, but
+            // always leave enough words for the remaining blocks.
+            let b = bounds.len() as u64;
+            if b <= (m - 1) as u64 {
+                let target = total * b / m as u64;
+                let words_left = v - (w + 1);
+                let blocks_left = m - bounds.len();
+                if (acc >= target.max(next_target) && words_left >= blocks_left)
+                    || words_left == blocks_left
+                {
+                    bounds.push((w + 1) as u32);
+                    next_target = acc + 1;
+                }
+            }
+        }
+        while bounds.len() < m {
+            // Degenerate tail (e.g. all mass in first words): split remaining
+            // id space evenly.
+            let last = *bounds.last().unwrap() as usize;
+            let remaining = v - last;
+            let blocks_left = m + 1 - bounds.len();
+            bounds.push((last + remaining.div_ceil(blocks_left)) as u32);
+        }
+        bounds.push(v as u32);
+        debug_assert_eq!(bounds.len(), m + 1);
+        BlockMap { layout: Layout::Contiguous { bounds } }
+    }
+
+    /// Even contiguous split by word count (ablation baseline — no mass
+    /// balancing).
+    pub fn even(v: usize, m: usize) -> BlockMap {
+        assert!(m >= 1 && v >= m);
+        let bounds: Vec<u32> = (0..=m).map(|b| (v * b / m) as u32).collect();
+        BlockMap { layout: Layout::Contiguous { bounds } }
+    }
+
+    pub fn num_blocks(&self) -> usize {
+        match &self.layout {
+            Layout::Contiguous { bounds } => bounds.len() - 1,
+            Layout::Strided { blocks, .. } => *blocks as usize,
+        }
+    }
+
+    /// Covering spec of block `b`: word ids `lo, lo+stride, …  < hi`.
+    pub fn spec(&self, b: usize) -> (u32, u32, u32) {
+        match &self.layout {
+            Layout::Contiguous { bounds } => (bounds[b], bounds[b + 1], 1),
+            Layout::Strided { v, blocks } => (b as u32, *v, *blocks),
+        }
+    }
+
+    /// Word-id range `[lo, hi)` of block `b` (contiguous layouts only —
+    /// callers needing layout-generality use [`BlockMap::spec`]).
+    pub fn range(&self, b: usize) -> (u32, u32) {
+        let (lo, hi, stride) = self.spec(b);
+        assert_eq!(stride, 1, "range() on a strided block map");
+        (lo, hi)
+    }
+
+    /// Which block a word id belongs to.
+    pub fn block_of(&self, word: u32) -> usize {
+        match &self.layout {
+            Layout::Contiguous { bounds } => {
+                debug_assert!(word < *bounds.last().unwrap());
+                bounds.partition_point(|&b| b <= word) - 1
+            }
+            Layout::Strided { blocks, .. } => (word % blocks) as usize,
+        }
+    }
+
+    /// Token mass of each block given frequencies.
+    pub fn masses(&self, freqs: &[u64]) -> Vec<u64> {
+        let mut masses = vec![0u64; self.num_blocks()];
+        for (w, &f) in freqs.iter().enumerate() {
+            masses[self.block_of(w as u32)] += f;
+        }
+        masses
+    }
+
+    /// Verify the blocks exactly cover `[0, v)` without overlap.
+    pub fn is_exact_cover(&self, v: usize) -> bool {
+        match &self.layout {
+            Layout::Contiguous { bounds } => {
+                bounds.first() == Some(&0)
+                    && *bounds.last().unwrap() as usize == v
+                    && bounds.windows(2).all(|w| w[0] < w[1])
+            }
+            Layout::Strided { v: sv, blocks } => *sv as usize == v && *blocks as usize <= v,
+        }
+    }
+}
+
+/// A block of the word–topic table: sparse rows for the word set
+/// `{lo + i·stride | i < rows.len(), lo + i·stride < hi}` (stride 1 =
+/// contiguous range).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ModelBlock {
+    pub id: u32,
+    /// First word id covered.
+    pub lo: u32,
+    /// Exclusive upper bound on word ids.
+    pub hi: u32,
+    /// Word-id step between consecutive rows.
+    pub stride: u32,
+    /// Rows indexed by `(word - lo) / stride`.
+    pub rows: Vec<SparseRow>,
+}
+
+impl ModelBlock {
+    pub fn empty(id: u32, lo: u32, hi: u32) -> ModelBlock {
+        Self::empty_strided(id, lo, hi, 1)
+    }
+
+    pub fn empty_strided(id: u32, lo: u32, hi: u32, stride: u32) -> ModelBlock {
+        assert!(stride >= 1 && hi >= lo);
+        let n = ((hi - lo) as usize).div_ceil(stride as usize);
+        ModelBlock { id, lo, hi, stride, rows: vec![SparseRow::new(); n] }
+    }
+
+    pub fn num_words(&self) -> usize {
+        self.rows.len()
+    }
+
+    /// Does this block own `word`'s row?
+    #[inline]
+    pub fn contains(&self, word: u32) -> bool {
+        word >= self.lo && word < self.hi && (word - self.lo) % self.stride == 0
+    }
+
+    /// The `i`-th word id this block covers.
+    #[inline]
+    pub fn word_at(&self, i: usize) -> u32 {
+        self.lo + i as u32 * self.stride
+    }
+
+    #[inline]
+    pub fn row(&self, word: u32) -> &SparseRow {
+        debug_assert!(self.contains(word), "word {word} outside block");
+        &self.rows[((word - self.lo) / self.stride) as usize]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, word: u32) -> &mut SparseRow {
+        debug_assert!(self.contains(word), "word {word} outside block");
+        &mut self.rows[((word - self.lo) / self.stride) as usize]
+    }
+
+    /// Column sums over this block only.
+    pub fn column_sums(&self, k: usize) -> Vec<i64> {
+        let mut sums = vec![0i64; k];
+        for row in &self.rows {
+            for (t, c) in row.iter() {
+                sums[t as usize] += c as i64;
+            }
+        }
+        sums
+    }
+
+    /// Total non-zero entries (drives wire size).
+    pub fn nnz(&self) -> usize {
+        self.rows.iter().map(|r| r.nnz()).sum()
+    }
+
+    /// Approximate heap bytes (memory accounting).
+    pub fn bytes(&self) -> u64 {
+        self.rows.iter().map(|r| r.bytes()).sum::<u64>() + 16
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn balanced_covers_and_balances() {
+        // Zipf-ish masses.
+        let freqs: Vec<u64> = (1..=1000u64).map(|r| 10_000 / r).collect();
+        for m in [1, 2, 4, 8, 32] {
+            let map = BlockMap::balanced(&freqs, m);
+            assert!(map.is_exact_cover(freqs.len()), "m={m}");
+            assert_eq!(map.num_blocks(), m);
+            let masses = map.masses(&freqs);
+            let total: u64 = freqs.iter().sum();
+            let max = *masses.iter().max().unwrap() as f64;
+            // No block should exceed ~2.2x the fair share for this profile —
+            // the head word alone caps achievable balance.
+            assert!(
+                max <= (total as f64 / m as f64) * 2.2 + freqs[0] as f64,
+                "m={m} masses={masses:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn block_of_is_consistent_with_range() {
+        let freqs = vec![5u64; 100];
+        let map = BlockMap::balanced(&freqs, 7);
+        for w in 0..100u32 {
+            let b = map.block_of(w);
+            let (lo, hi) = map.range(b);
+            assert!(w >= lo && w < hi, "w={w} b={b} range=({lo},{hi})");
+        }
+    }
+
+    #[test]
+    fn even_split() {
+        let map = BlockMap::even(10, 3);
+        assert!(map.is_exact_cover(10));
+        assert_eq!(map.range(0), (0, 3));
+        assert_eq!(map.range(2), (6, 10));
+    }
+
+    #[test]
+    fn degenerate_all_mass_in_head() {
+        let mut freqs = vec![0u64; 50];
+        freqs[0] = 1_000_000;
+        let map = BlockMap::balanced(&freqs, 8);
+        assert!(map.is_exact_cover(50));
+        assert_eq!(map.num_blocks(), 8);
+    }
+
+    #[test]
+    fn blocks_are_disjoint_word_sets() {
+        let freqs: Vec<u64> = (1..=200u64).rev().collect();
+        let map = BlockMap::balanced(&freqs, 5);
+        let mut seen = vec![false; 200];
+        for b in 0..map.num_blocks() {
+            let (lo, hi) = map.range(b);
+            for w in lo..hi {
+                assert!(!seen[w as usize], "word {w} in two blocks");
+                seen[w as usize] = true;
+            }
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn model_block_rows() {
+        let mut b = ModelBlock::empty(0, 10, 20);
+        b.row_mut(15).inc(3);
+        b.row_mut(15).inc(3);
+        assert_eq!(b.row(15).get(3), 2);
+        assert_eq!(b.nnz(), 1);
+        let sums = b.column_sums(5);
+        assert_eq!(sums[3], 2);
+    }
+
+    #[test]
+    fn strided_map_covers_and_balances_zipf_mass() {
+        // Zipf-like frequencies: strided blocks must be far better balanced
+        // than contiguous-even and competitive with contiguous-balanced.
+        let freqs: Vec<u64> = (1..=1000u64).map(|r| 100_000 / r).collect();
+        let m = 8;
+        let strided = BlockMap::strided(freqs.len(), m);
+        assert!(strided.is_exact_cover(freqs.len()));
+        assert_eq!(strided.num_blocks(), m);
+        let masses = strided.masses(&freqs);
+        let total: u64 = freqs.iter().sum();
+        let max = *masses.iter().max().unwrap() as f64;
+        let fair = total as f64 / m as f64;
+        // The head word alone is ~17% of mass here; strided puts it in one
+        // block but every other stratum is spread evenly.
+        assert!(max < fair * 2.5, "masses={masses:?}");
+        // Disjoint cover by construction:
+        let mut seen = vec![false; freqs.len()];
+        for b in 0..m {
+            let (lo, hi, stride) = strided.spec(b);
+            let mut w = lo;
+            while w < hi {
+                assert!(!seen[w as usize]);
+                seen[w as usize] = true;
+                assert_eq!(strided.block_of(w), b);
+                w += stride;
+            }
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn strided_model_block_indexing() {
+        // Block 2 of 5 over V=23: words 2,7,12,17,22.
+        let mut b = ModelBlock::empty_strided(2, 2, 23, 5);
+        assert_eq!(b.num_words(), 5);
+        assert_eq!(b.word_at(0), 2);
+        assert_eq!(b.word_at(4), 22);
+        assert!(b.contains(17));
+        assert!(!b.contains(18));
+        assert!(!b.contains(23));
+        b.row_mut(17).inc(1);
+        assert_eq!(b.row(17).get(1), 1);
+        assert_eq!(b.column_sums(3)[1], 1);
+    }
+
+    #[test]
+    fn range_panics_on_strided() {
+        let map = BlockMap::strided(10, 2);
+        let r = std::panic::catch_unwind(|| map.range(0));
+        assert!(r.is_err());
+    }
+}

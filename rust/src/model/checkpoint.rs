@@ -1,0 +1,207 @@
+//! Training-state checkpointing.
+//!
+//! A checkpoint stores the topic assignments `Z` (the sufficient state —
+//! all three count statistics are pure functions of `Z` and the corpus)
+//! plus a corpus fingerprint and the topic count, varint-packed with the
+//! same codec as the wire format. Restoring rebuilds the counts and
+//! verifies the fingerprint, so resuming against the wrong corpus fails
+//! loudly instead of silently corrupting counts.
+//!
+//! Format:
+//! ```text
+//! magic "MPLDAKPT" | version:varint | num_topics:varint |
+//! corpus_fp:u64 | num_docs:varint | (doc_len:varint z:varint*)*
+//! ```
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::corpus::Corpus;
+
+use super::init::Assignments;
+use super::wire::{get_varint, put_varint};
+
+const MAGIC: &[u8; 8] = b"MPLDAKPT";
+const VERSION: u64 = 1;
+
+/// Order-sensitive corpus fingerprint (FNV-1a over doc lengths and token
+/// ids): cheap, stable across runs, catches preset/seed/path mismatches.
+pub fn corpus_fingerprint(corpus: &Corpus) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    let mut mix = |x: u64| {
+        h ^= x;
+        h = h.wrapping_mul(0x100000001b3);
+    };
+    mix(corpus.num_docs() as u64);
+    mix(corpus.num_words() as u64);
+    for d in &corpus.docs {
+        mix(d.tokens.len() as u64);
+        for &t in &d.tokens {
+            mix(t as u64);
+        }
+    }
+    h
+}
+
+/// Serialize assignments to a writer.
+pub fn write_checkpoint<W: Write>(
+    mut w: W,
+    assign: &Assignments,
+    corpus: &Corpus,
+) -> Result<()> {
+    let mut buf = Vec::with_capacity(assign.num_tokens() * 2 + 64);
+    buf.extend_from_slice(MAGIC);
+    put_varint(&mut buf, VERSION);
+    put_varint(&mut buf, assign.num_topics as u64);
+    buf.extend_from_slice(&corpus_fingerprint(corpus).to_le_bytes());
+    put_varint(&mut buf, assign.z.len() as u64);
+    for doc in &assign.z {
+        put_varint(&mut buf, doc.len() as u64);
+        for &z in doc {
+            put_varint(&mut buf, z as u64);
+        }
+    }
+    w.write_all(&buf).context("writing checkpoint")
+}
+
+/// Deserialize assignments, verifying the corpus fingerprint.
+pub fn read_checkpoint<R: Read>(mut r: R, corpus: &Corpus) -> Result<Assignments> {
+    let mut buf = Vec::new();
+    r.read_to_end(&mut buf).context("reading checkpoint")?;
+    if buf.len() < 16 || &buf[..8] != MAGIC {
+        bail!("not a mplda checkpoint (bad magic)");
+    }
+    let mut pos = 8;
+    let version = get_varint(&buf, &mut pos)?;
+    if version != VERSION {
+        bail!("unsupported checkpoint version {version}");
+    }
+    let num_topics = get_varint(&buf, &mut pos)? as usize;
+    let fp = u64::from_le_bytes(buf[pos..pos + 8].try_into().unwrap());
+    pos += 8;
+    let expect = corpus_fingerprint(corpus);
+    if fp != expect {
+        bail!("checkpoint was written for a different corpus (fp {fp:#x} != {expect:#x})");
+    }
+    let num_docs = get_varint(&buf, &mut pos)? as usize;
+    if num_docs != corpus.num_docs() {
+        bail!("doc count mismatch: checkpoint {num_docs}, corpus {}", corpus.num_docs());
+    }
+    let mut z = Vec::with_capacity(num_docs);
+    for d in 0..num_docs {
+        let len = get_varint(&buf, &mut pos)? as usize;
+        if len != corpus.docs[d].tokens.len() {
+            bail!("doc {d} length mismatch");
+        }
+        let mut doc = Vec::with_capacity(len);
+        for _ in 0..len {
+            let zi = get_varint(&buf, &mut pos)? as u32;
+            if zi as usize >= num_topics {
+                bail!("topic id {zi} out of range (K={num_topics})");
+            }
+            doc.push(zi);
+        }
+        z.push(doc);
+    }
+    if pos != buf.len() {
+        bail!("trailing bytes in checkpoint");
+    }
+    Ok(Assignments { z, num_topics })
+}
+
+/// Convenience: save to a path.
+pub fn save<P: AsRef<Path>>(path: P, assign: &Assignments, corpus: &Corpus) -> Result<()> {
+    let f = std::fs::File::create(path.as_ref())
+        .with_context(|| format!("creating {:?}", path.as_ref()))?;
+    write_checkpoint(std::io::BufWriter::new(f), assign, corpus)
+}
+
+/// Convenience: load from a path.
+pub fn load<P: AsRef<Path>>(path: P, corpus: &Corpus) -> Result<Assignments> {
+    let f = std::fs::File::open(path.as_ref())
+        .with_context(|| format!("opening {:?}", path.as_ref()))?;
+    read_checkpoint(std::io::BufReader::new(f), corpus)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::corpus::synthetic::{generate, GenSpec};
+    use crate::util::rng::Pcg64;
+
+    fn fixture() -> (Corpus, Assignments) {
+        let corpus = generate(&GenSpec {
+            vocab: 100,
+            docs: 50,
+            avg_doc_len: 15,
+            zipf_s: 1.05,
+            topics: 4,
+            alpha: 0.1,
+            seed: 77,
+        });
+        let mut rng = Pcg64::new(1);
+        let assign = Assignments::random(&corpus, 12, &mut rng);
+        (corpus, assign)
+    }
+
+    #[test]
+    fn round_trip_preserves_state() {
+        let (corpus, assign) = fixture();
+        let mut buf = Vec::new();
+        write_checkpoint(&mut buf, &assign, &corpus).unwrap();
+        let loaded = read_checkpoint(&buf[..], &corpus).unwrap();
+        assert_eq!(loaded.z, assign.z);
+        assert_eq!(loaded.num_topics, 12);
+        // Counts rebuilt from the restored Z match the originals.
+        let (dt, wt, ck) = assign.build_counts(&corpus);
+        loaded.check_consistency(&corpus, &dt, &wt, &ck).unwrap();
+    }
+
+    #[test]
+    fn wrong_corpus_rejected() {
+        let (corpus, assign) = fixture();
+        let mut buf = Vec::new();
+        write_checkpoint(&mut buf, &assign, &corpus).unwrap();
+        let other = generate(&GenSpec {
+            vocab: 100,
+            docs: 50,
+            avg_doc_len: 15,
+            zipf_s: 1.05,
+            topics: 4,
+            alpha: 0.1,
+            seed: 78, // different corpus
+        });
+        let err = read_checkpoint(&buf[..], &other).unwrap_err().to_string();
+        assert!(err.contains("different corpus"), "{err}");
+    }
+
+    #[test]
+    fn garbage_rejected() {
+        let (corpus, _) = fixture();
+        assert!(read_checkpoint(&b"nonsense"[..], &corpus).is_err());
+        let mut bad = MAGIC.to_vec();
+        bad.push(99); // version 99
+        assert!(read_checkpoint(&bad[..], &corpus).is_err());
+    }
+
+    #[test]
+    fn truncation_rejected() {
+        let (corpus, assign) = fixture();
+        let mut buf = Vec::new();
+        write_checkpoint(&mut buf, &assign, &corpus).unwrap();
+        buf.truncate(buf.len() - 3);
+        assert!(read_checkpoint(&buf[..], &corpus).is_err());
+    }
+
+    #[test]
+    fn file_round_trip() {
+        let (corpus, assign) = fixture();
+        let path = std::env::temp_dir().join(format!("mplda_ckpt_{}.bin", std::process::id()));
+        save(&path, &assign, &corpus).unwrap();
+        let loaded = load(&path, &corpus).unwrap();
+        assert_eq!(loaded.z, assign.z);
+        std::fs::remove_file(&path).ok();
+    }
+}

@@ -1,0 +1,215 @@
+//! Document–topic counts `C_d^k`, stored sparse.
+//!
+//! Only `K_d ≪ K` topics have non-zero count in a document (§2.2); the
+//! sparse samplers walk exactly those entries. [`SparseCounts`] keeps
+//! entries **sorted by descending count** and maintains the order with
+//! adjacent swaps on inc/dec — the bucket-walk then hits high-mass topics
+//! first, shortening the expected scan (the SparseLDA trick, also used by
+//! the paper's X+Y sampler for its `Y` bucket).
+
+/// Sparse topic→count map, descending by count.
+#[derive(Debug, Clone, Default)]
+pub struct SparseCounts {
+    entries: Vec<(u32, u32)>, // (topic, count), count > 0, desc by count
+}
+
+/// Equality is as a *map* (ties among equal counts may be ordered
+/// differently depending on update history).
+impl PartialEq for SparseCounts {
+    fn eq(&self, other: &Self) -> bool {
+        if self.entries.len() != other.entries.len() {
+            return false;
+        }
+        let canon = |s: &SparseCounts| {
+            let mut v = s.entries.clone();
+            v.sort_unstable();
+            v
+        };
+        canon(self) == canon(other)
+    }
+}
+
+impl Eq for SparseCounts {}
+
+impl SparseCounts {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Non-zero entries, descending by count.
+    #[inline]
+    pub fn iter(&self) -> impl Iterator<Item = (u32, u32)> + '_ {
+        self.entries.iter().copied()
+    }
+
+    pub fn get(&self, topic: u32) -> u32 {
+        self.entries
+            .iter()
+            .find(|&&(k, _)| k == topic)
+            .map(|&(_, c)| c)
+            .unwrap_or(0)
+    }
+
+    /// Increment `topic`; maintains descending order with adjacent bubbling.
+    pub fn inc(&mut self, topic: u32) {
+        match self.entries.iter().position(|&(k, _)| k == topic) {
+            Some(i) => {
+                self.entries[i].1 += 1;
+                // Bubble towards the front while larger than predecessor.
+                let mut i = i;
+                while i > 0 && self.entries[i - 1].1 < self.entries[i].1 {
+                    self.entries.swap(i - 1, i);
+                    i -= 1;
+                }
+            }
+            None => self.entries.push((topic, 1)),
+        }
+    }
+
+    /// Decrement `topic` (must be present); removes at zero.
+    pub fn dec(&mut self, topic: u32) {
+        let i = self
+            .entries
+            .iter()
+            .position(|&(k, _)| k == topic)
+            .expect("dec of absent topic");
+        self.entries[i].1 -= 1;
+        if self.entries[i].1 == 0 {
+            self.entries.remove(i);
+        } else {
+            let mut i = i;
+            while i + 1 < self.entries.len() && self.entries[i + 1].1 > self.entries[i].1 {
+                self.entries.swap(i, i + 1);
+                i += 1;
+            }
+        }
+    }
+
+    /// Total count (= document length while consistent).
+    pub fn total(&self) -> u64 {
+        self.entries.iter().map(|&(_, c)| c as u64).sum()
+    }
+
+    /// Order invariant check (tests).
+    pub fn is_sorted_desc(&self) -> bool {
+        self.entries.windows(2).all(|w| w[0].1 >= w[1].1)
+    }
+
+    /// Approximate heap bytes.
+    pub fn bytes(&self) -> u64 {
+        (self.entries.capacity() * 8 + 24) as u64
+    }
+}
+
+/// All documents' topic counts for one worker shard (indexed by global doc
+/// id through a dense map owned by the caller) or the whole corpus.
+#[derive(Debug, Clone, Default)]
+pub struct DocTopic {
+    pub docs: Vec<SparseCounts>,
+}
+
+impl DocTopic {
+    pub fn zeros(num_docs: usize) -> Self {
+        DocTopic { docs: vec![SparseCounts::new(); num_docs] }
+    }
+
+    pub fn num_docs(&self) -> usize {
+        self.docs.len()
+    }
+
+    #[inline]
+    pub fn doc(&self, d: usize) -> &SparseCounts {
+        &self.docs[d]
+    }
+
+    #[inline]
+    pub fn doc_mut(&mut self, d: usize) -> &mut SparseCounts {
+        &mut self.docs[d]
+    }
+
+    /// Mean `K_d` (avg non-zero topics per doc) — the sparsity statistic
+    /// that drives sparse-sampler complexity.
+    pub fn avg_kd(&self) -> f64 {
+        if self.docs.is_empty() {
+            return 0.0;
+        }
+        self.docs.iter().map(|d| d.len()).sum::<usize>() as f64 / self.docs.len() as f64
+    }
+
+    pub fn bytes(&self) -> u64 {
+        self.docs.iter().map(|d| d.bytes()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn inc_dec_roundtrip() {
+        let mut c = SparseCounts::new();
+        c.inc(5);
+        c.inc(5);
+        c.inc(2);
+        assert_eq!(c.get(5), 2);
+        assert_eq!(c.get(2), 1);
+        assert_eq!(c.get(9), 0);
+        c.dec(5);
+        c.dec(5);
+        assert_eq!(c.get(5), 0);
+        assert_eq!(c.len(), 1);
+        assert_eq!(c.total(), 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "absent topic")]
+    fn dec_absent_panics() {
+        let mut c = SparseCounts::new();
+        c.dec(3);
+    }
+
+    #[test]
+    fn stays_sorted_under_random_ops() {
+        let mut rng = Pcg64::new(8);
+        let mut c = SparseCounts::new();
+        let mut reference = std::collections::HashMap::new();
+        for _ in 0..5_000 {
+            let k = rng.next_below(20) as u32;
+            let cur = *reference.get(&k).unwrap_or(&0u32);
+            if cur > 0 && rng.next_f64() < 0.45 {
+                c.dec(k);
+                if cur == 1 {
+                    reference.remove(&k);
+                } else {
+                    reference.insert(k, cur - 1);
+                }
+            } else {
+                c.inc(k);
+                reference.insert(k, cur + 1);
+            }
+            assert!(c.is_sorted_desc());
+        }
+        for (&k, &v) in &reference {
+            assert_eq!(c.get(k), v);
+        }
+        assert_eq!(c.len(), reference.len());
+    }
+
+    #[test]
+    fn avg_kd() {
+        let mut dt = DocTopic::zeros(2);
+        dt.doc_mut(0).inc(1);
+        dt.doc_mut(0).inc(2);
+        dt.doc_mut(1).inc(1);
+        assert!((dt.avg_kd() - 1.5).abs() < 1e-12);
+    }
+}

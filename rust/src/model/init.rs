@@ -1,0 +1,182 @@
+//! Initial state: random topic assignments and the counts they induce.
+//!
+//! Training state = `(Z, C_d^k, C_t^k, C_k)` where the three counts are pure
+//! functions of `Z` and the corpus. Everything here is deterministic given
+//! the seed, and [`Assignments::check_consistency`] re-derives the counts
+//! from `Z` to validate any sampler or distributed protocol against
+//! corruption — it is used liberally in integration tests.
+
+use crate::corpus::Corpus;
+use crate::util::rng::Pcg64;
+
+use super::block::{BlockMap, ModelBlock};
+use super::doc_topic::DocTopic;
+use super::topic_counts::TopicCounts;
+use super::word_topic::WordTopicTable;
+
+/// Topic assignments `z_dn`, parallel to the corpus token streams.
+#[derive(Debug, Clone)]
+pub struct Assignments {
+    pub z: Vec<Vec<u32>>,
+    pub num_topics: usize,
+}
+
+impl Assignments {
+    /// Uniform-random initialization.
+    pub fn random(corpus: &Corpus, num_topics: usize, rng: &mut Pcg64) -> Assignments {
+        let z = corpus
+            .docs
+            .iter()
+            .map(|d| {
+                d.tokens
+                    .iter()
+                    .map(|_| rng.next_below(num_topics as u64) as u32)
+                    .collect()
+            })
+            .collect();
+        Assignments { z, num_topics }
+    }
+
+    pub fn num_tokens(&self) -> usize {
+        self.z.iter().map(|d| d.len()).sum()
+    }
+
+    /// Build the three count statistics from scratch.
+    pub fn build_counts(&self, corpus: &Corpus) -> (DocTopic, WordTopicTable, TopicCounts) {
+        let mut dt = DocTopic::zeros(corpus.num_docs());
+        let mut wt = WordTopicTable::zeros(corpus.num_words(), self.num_topics);
+        let mut ck = TopicCounts::zeros(self.num_topics);
+        for (d, doc) in corpus.docs.iter().enumerate() {
+            for (n, &w) in doc.tokens.iter().enumerate() {
+                let k = self.z[d][n];
+                dt.doc_mut(d).inc(k);
+                wt.row_mut(w as usize).inc(k);
+                ck.inc(k as usize);
+            }
+        }
+        (dt, wt, ck)
+    }
+
+    /// Shard the word–topic table into model blocks per the block map.
+    pub fn build_blocks(wt: &WordTopicTable, map: &BlockMap) -> Vec<ModelBlock> {
+        (0..map.num_blocks())
+            .map(|b| {
+                let (lo, hi, stride) = map.spec(b);
+                let mut block = ModelBlock::empty_strided(b as u32, lo, hi, stride);
+                for (i, row) in block.rows.iter_mut().enumerate() {
+                    *row = wt.rows[(lo + i as u32 * stride) as usize].clone();
+                }
+                block
+            })
+            .collect()
+    }
+
+    /// Verify `(dt, wt, ck)` equal the counts induced by `Z`. Returns a
+    /// description of the first inconsistency found.
+    pub fn check_consistency(
+        &self,
+        corpus: &Corpus,
+        dt: &DocTopic,
+        wt: &WordTopicTable,
+        ck: &TopicCounts,
+    ) -> Result<(), String> {
+        let (edt, ewt, eck) = self.build_counts(corpus);
+        for d in 0..corpus.num_docs() {
+            if edt.doc(d) != dt.doc(d) {
+                return Err(format!(
+                    "doc-topic mismatch at doc {d}: expect {:?} got {:?}",
+                    edt.doc(d),
+                    dt.doc(d)
+                ));
+            }
+        }
+        for w in 0..corpus.num_words() {
+            if ewt.row(w) != wt.row(w) {
+                return Err(format!(
+                    "word-topic mismatch at word {w}: expect {:?} got {:?}",
+                    ewt.row(w),
+                    wt.row(w)
+                ));
+            }
+        }
+        if eck != *ck {
+            return Err(format!("topic totals mismatch: expect {eck:?} got {ck:?}"));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::corpus::synthetic::{generate, GenSpec};
+
+    fn setup() -> (Corpus, Assignments) {
+        let corpus = generate(&GenSpec {
+            vocab: 200,
+            docs: 100,
+            avg_doc_len: 20,
+            zipf_s: 1.05,
+            topics: 5,
+            alpha: 0.1,
+            seed: 3,
+        });
+        let mut rng = Pcg64::new(77);
+        let assign = Assignments::random(&corpus, 16, &mut rng);
+        (corpus, assign)
+    }
+
+    #[test]
+    fn counts_consistent_after_init() {
+        let (corpus, assign) = setup();
+        let (dt, wt, ck) = assign.build_counts(&corpus);
+        assign.check_consistency(&corpus, &dt, &wt, &ck).unwrap();
+        assert_eq!(ck.total() as usize, corpus.num_tokens());
+        assert_eq!(wt.column_sums(), ck.as_slice().to_vec());
+        for d in 0..corpus.num_docs() {
+            assert_eq!(dt.doc(d).total() as usize, corpus.docs[d].len());
+        }
+    }
+
+    #[test]
+    fn blocks_partition_the_table() {
+        let (corpus, assign) = setup();
+        let (_, wt, ck) = assign.build_counts(&corpus);
+        let map = BlockMap::balanced(&corpus.word_frequencies(), 4);
+        let blocks = Assignments::build_blocks(&wt, &map);
+        assert_eq!(blocks.len(), 4);
+        // Sum of block column-sums equals global C_k.
+        let mut sums = vec![0i64; 16];
+        for b in &blocks {
+            for (k, s) in b.column_sums(16).into_iter().enumerate() {
+                sums[k] += s;
+            }
+        }
+        assert_eq!(sums, ck.as_slice().to_vec());
+        // Rows inside each block equal the table's rows.
+        for b in &blocks {
+            for (i, row) in b.rows.iter().enumerate() {
+                let w = b.word_at(i);
+                assert_eq!(row, wt.row(w as usize));
+            }
+        }
+    }
+
+    #[test]
+    fn consistency_check_detects_corruption() {
+        let (corpus, assign) = setup();
+        let (dt, mut wt, ck) = assign.build_counts(&corpus);
+        wt.row_mut(0).inc(7); // corrupt
+        assert!(assign.check_consistency(&corpus, &dt, &wt, &ck).is_err());
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let (corpus, _) = setup();
+        let mut r1 = Pcg64::new(5);
+        let mut r2 = Pcg64::new(5);
+        let a = Assignments::random(&corpus, 8, &mut r1);
+        let b = Assignments::random(&corpus, 8, &mut r2);
+        assert_eq!(a.z, b.z);
+    }
+}

@@ -1,0 +1,23 @@
+//! The LDA "model" state: count statistics and their partitioning.
+//!
+//! Collapsed Gibbs sampling maintains three statistics (§2.1):
+//! `C_d^k` (doc–topic, [`doc_topic`]), `C_t^k` (word–topic, [`word_topic`])
+//! and `C_k` (topic totals, [`topic_counts`]). The word–topic table is the
+//! "big model" — `V × K` entries — and is what gets partitioned into
+//! disjoint word [`block`]s and rotated between workers. [`wire`] defines
+//! the byte format blocks travel in (its length is what the network
+//! simulator charges), and [`init`] draws the initial topic assignments.
+
+pub mod topic_counts;
+pub mod doc_topic;
+pub mod word_topic;
+pub mod block;
+pub mod init;
+pub mod wire;
+pub mod checkpoint;
+
+pub use block::{BlockMap, ModelBlock};
+pub use doc_topic::{DocTopic, SparseCounts};
+pub use init::Assignments;
+pub use topic_counts::TopicCounts;
+pub use word_topic::{SparseRow, WordTopicTable};

@@ -1,0 +1,126 @@
+//! Global topic totals `C_k` — the non-separable dependency (§3.3).
+//!
+//! `C_k = Σ_t C_t^k` is needed in every sampling step's denominator and
+//! cannot be partitioned by words. The paper's protocol: workers read a
+//! snapshot at round start, accumulate local deltas while sampling, and
+//! merge deltas back at round end. [`TopicCounts`] is the value type used
+//! for both the authoritative copy (in the KV-store) and worker snapshots;
+//! [`TopicCounts::l1_distance`] implements the `Δ_{r,i}` numerator of Fig 3.
+
+/// Topic-total vector `C_k` (signed internally so transient deltas can dip
+/// below zero before a merge completes).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TopicCounts {
+    counts: Vec<i64>,
+}
+
+impl TopicCounts {
+    pub fn zeros(k: usize) -> Self {
+        TopicCounts { counts: vec![0; k] }
+    }
+
+    pub fn from_vec(counts: Vec<i64>) -> Self {
+        TopicCounts { counts }
+    }
+
+    pub fn num_topics(&self) -> usize {
+        self.counts.len()
+    }
+
+    #[inline]
+    pub fn get(&self, k: usize) -> i64 {
+        self.counts[k]
+    }
+
+    #[inline]
+    pub fn inc(&mut self, k: usize) {
+        self.counts[k] += 1;
+    }
+
+    #[inline]
+    pub fn dec(&mut self, k: usize) {
+        self.counts[k] -= 1;
+    }
+
+    pub fn as_slice(&self) -> &[i64] {
+        &self.counts
+    }
+
+    /// Total token mass `N = Σ_k C_k`.
+    pub fn total(&self) -> i64 {
+        self.counts.iter().sum()
+    }
+
+    /// `self += other` (merging a worker's delta).
+    pub fn merge(&mut self, delta: &TopicCounts) {
+        assert_eq!(self.counts.len(), delta.counts.len());
+        for (a, b) in self.counts.iter_mut().zip(&delta.counts) {
+            *a += b;
+        }
+    }
+
+    /// `self - other` as a new delta.
+    pub fn diff(&self, other: &TopicCounts) -> TopicCounts {
+        assert_eq!(self.counts.len(), other.counts.len());
+        TopicCounts {
+            counts: self.counts.iter().zip(&other.counts).map(|(a, b)| a - b).collect(),
+        }
+    }
+
+    /// `‖self − other‖₁` — numerator of the paper's `Δ_{r,i}` error metric.
+    pub fn l1_distance(&self, other: &TopicCounts) -> u64 {
+        assert_eq!(self.counts.len(), other.counts.len());
+        self.counts
+            .iter()
+            .zip(&other.counts)
+            .map(|(a, b)| a.abs_diff(*b))
+            .sum()
+    }
+
+    /// All entries non-negative (health check after merges).
+    pub fn is_valid(&self) -> bool {
+        self.counts.iter().all(|&c| c >= 0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn inc_dec_total() {
+        let mut c = TopicCounts::zeros(4);
+        c.inc(0);
+        c.inc(0);
+        c.inc(3);
+        c.dec(0);
+        assert_eq!(c.get(0), 1);
+        assert_eq!(c.get(3), 1);
+        assert_eq!(c.total(), 2);
+        assert!(c.is_valid());
+    }
+
+    #[test]
+    fn merge_and_diff_are_inverses() {
+        let a = TopicCounts::from_vec(vec![5, 3, 0, 2]);
+        let b = TopicCounts::from_vec(vec![4, 3, 1, 0]);
+        let delta = a.diff(&b);
+        let mut rebuilt = b.clone();
+        rebuilt.merge(&delta);
+        assert_eq!(rebuilt, a);
+    }
+
+    #[test]
+    fn l1_distance_matches_fig3_definition() {
+        let t = TopicCounts::from_vec(vec![10, 20, 30]);
+        let tm = TopicCounts::from_vec(vec![12, 18, 30]);
+        assert_eq!(t.l1_distance(&tm), 4);
+        assert_eq!(t.l1_distance(&t), 0);
+    }
+
+    #[test]
+    fn validity_detects_negative() {
+        let c = TopicCounts::from_vec(vec![1, -1]);
+        assert!(!c.is_valid());
+    }
+}

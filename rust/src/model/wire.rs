@@ -1,0 +1,252 @@
+//! Wire format for model state in flight (§3.2 "on-demand communication").
+//!
+//! Blocks and topic-total vectors are serialized when they move between a
+//! worker and the KV-store; the **byte length of the encoding is what the
+//! network simulator charges**, so the format matters for fidelity: like
+//! the paper's C++ implementation we send sparse rows as varint-delta
+//! streams, which makes block size proportional to `nnz`, not `V_block × K`.
+//!
+//! Layout (little-endian, LEB128 varints):
+//! ```text
+//! Block  := id:u32 lo:u32 hi:u32 stride:varint nrows:varint Row*
+//! Row    := nnz:varint (topic_delta:varint count:varint)*
+//! Totals := k:varint (zigzag(count):varint)*
+//! ```
+
+use anyhow::{bail, Result};
+
+use super::block::ModelBlock;
+use super::topic_counts::TopicCounts;
+use super::word_topic::SparseRow;
+
+/// Append a LEB128 varint.
+#[inline]
+pub fn put_varint(buf: &mut Vec<u8>, mut x: u64) {
+    loop {
+        let byte = (x & 0x7f) as u8;
+        x >>= 7;
+        if x == 0 {
+            buf.push(byte);
+            return;
+        }
+        buf.push(byte | 0x80);
+    }
+}
+
+/// Read a LEB128 varint.
+#[inline]
+pub fn get_varint(buf: &[u8], pos: &mut usize) -> Result<u64> {
+    let mut x = 0u64;
+    let mut shift = 0u32;
+    loop {
+        let Some(&byte) = buf.get(*pos) else {
+            bail!("varint truncated at {pos}");
+        };
+        *pos += 1;
+        x |= ((byte & 0x7f) as u64) << shift;
+        if byte & 0x80 == 0 {
+            return Ok(x);
+        }
+        shift += 7;
+        if shift >= 64 {
+            bail!("varint overflow");
+        }
+    }
+}
+
+#[inline]
+fn zigzag(x: i64) -> u64 {
+    ((x << 1) ^ (x >> 63)) as u64
+}
+
+#[inline]
+fn unzigzag(x: u64) -> i64 {
+    ((x >> 1) as i64) ^ -((x & 1) as i64)
+}
+
+/// Encode a model block.
+pub fn encode_block(block: &ModelBlock) -> Vec<u8> {
+    let mut buf = Vec::with_capacity(16 + block.nnz() * 3);
+    buf.extend_from_slice(&block.id.to_le_bytes());
+    buf.extend_from_slice(&block.lo.to_le_bytes());
+    buf.extend_from_slice(&block.hi.to_le_bytes());
+    put_varint(&mut buf, block.stride as u64);
+    put_varint(&mut buf, block.rows.len() as u64);
+    for row in &block.rows {
+        put_varint(&mut buf, row.nnz() as u64);
+        let mut prev = 0u32;
+        for (k, c) in row.iter() {
+            put_varint(&mut buf, (k - prev) as u64);
+            put_varint(&mut buf, c as u64);
+            prev = k;
+        }
+    }
+    buf
+}
+
+/// Decode a model block.
+pub fn decode_block(buf: &[u8]) -> Result<ModelBlock> {
+    if buf.len() < 12 {
+        bail!("block header truncated");
+    }
+    let id = u32::from_le_bytes(buf[0..4].try_into().unwrap());
+    let lo = u32::from_le_bytes(buf[4..8].try_into().unwrap());
+    let hi = u32::from_le_bytes(buf[8..12].try_into().unwrap());
+    let mut pos = 12;
+    let stride = get_varint(buf, &mut pos)? as u32;
+    if stride == 0 {
+        bail!("zero stride");
+    }
+    let nrows = get_varint(buf, &mut pos)? as usize;
+    let expect = ((hi - lo) as usize).div_ceil(stride as usize);
+    if nrows != expect {
+        bail!("row count {nrows} does not match range [{lo},{hi}) stride {stride}");
+    }
+    let mut rows = Vec::with_capacity(nrows);
+    for _ in 0..nrows {
+        let nnz = get_varint(buf, &mut pos)? as usize;
+        let mut entries = Vec::with_capacity(nnz);
+        let mut prev = 0u32;
+        for _ in 0..nnz {
+            let dk = get_varint(buf, &mut pos)? as u32;
+            let c = get_varint(buf, &mut pos)? as u32;
+            let k = prev + dk;
+            entries.push((k, c));
+            prev = k;
+        }
+        rows.push(SparseRow::from_entries(entries));
+    }
+    if pos != buf.len() {
+        bail!("trailing bytes after block");
+    }
+    Ok(ModelBlock { id, lo, hi, stride, rows })
+}
+
+/// Encode a topic-totals vector (or signed delta).
+pub fn encode_totals(t: &TopicCounts) -> Vec<u8> {
+    let mut buf = Vec::with_capacity(4 + t.num_topics() * 2);
+    put_varint(&mut buf, t.num_topics() as u64);
+    for &c in t.as_slice() {
+        put_varint(&mut buf, zigzag(c));
+    }
+    buf
+}
+
+/// Decode a topic-totals vector.
+pub fn decode_totals(buf: &[u8]) -> Result<TopicCounts> {
+    let mut pos = 0;
+    let k = get_varint(buf, &mut pos)? as usize;
+    let mut counts = Vec::with_capacity(k);
+    for _ in 0..k {
+        counts.push(unzigzag(get_varint(buf, &mut pos)?));
+    }
+    if pos != buf.len() {
+        bail!("trailing bytes after totals");
+    }
+    Ok(TopicCounts::from_vec(counts))
+}
+
+/// Wire size of a block without materializing the encoding — used by the
+/// memory/traffic accountant for the full-scale extrapolations where we
+/// never build the 21.8M-word table.
+pub fn block_wire_size_estimate(nnz: u64, num_rows: u64) -> u64 {
+    // header 12 + nrows varint (≤5) + per-row nnz varint (≈1) +
+    // per-entry ≈ 1.5 (topic delta) + 1.5 (count) bytes on Zipf data.
+    12 + 5 + num_rows + nnz * 3
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    fn random_block(seed: u64, lo: u32, hi: u32, k: u64) -> ModelBlock {
+        let mut rng = Pcg64::new(seed);
+        let mut b = ModelBlock::empty(3, lo, hi);
+        for w in lo..hi {
+            let n = rng.next_below(20);
+            for _ in 0..n {
+                b.row_mut(w).inc(rng.next_below(k) as u32);
+            }
+        }
+        b
+    }
+
+    #[test]
+    fn varint_roundtrip() {
+        let mut buf = Vec::new();
+        let values = [0u64, 1, 127, 128, 300, u32::MAX as u64, u64::MAX];
+        for &v in &values {
+            put_varint(&mut buf, v);
+        }
+        let mut pos = 0;
+        for &v in &values {
+            assert_eq!(get_varint(&buf, &mut pos).unwrap(), v);
+        }
+        assert_eq!(pos, buf.len());
+    }
+
+    #[test]
+    fn varint_truncation_detected() {
+        let mut buf = Vec::new();
+        put_varint(&mut buf, u64::MAX);
+        buf.pop();
+        let mut pos = 0;
+        assert!(get_varint(&buf, &mut pos).is_err());
+    }
+
+    #[test]
+    fn block_roundtrip() {
+        let b = random_block(10, 100, 164, 50);
+        let enc = encode_block(&b);
+        let dec = decode_block(&enc).unwrap();
+        assert_eq!(dec, b);
+    }
+
+    #[test]
+    fn empty_block_roundtrip() {
+        let b = ModelBlock::empty(0, 5, 9);
+        let dec = decode_block(&encode_block(&b)).unwrap();
+        assert_eq!(dec, b);
+    }
+
+    #[test]
+    fn totals_roundtrip_including_negatives() {
+        let t = TopicCounts::from_vec(vec![5, -3, 0, 1_000_000, -42]);
+        let dec = decode_totals(&encode_totals(&t)).unwrap();
+        assert_eq!(dec, t);
+    }
+
+    #[test]
+    fn wire_size_tracks_sparsity_not_dimensions() {
+        // Same range, different densities — size must scale with nnz.
+        let sparse = random_block(1, 0, 256, 1000);
+        let mut dense = ModelBlock::empty(0, 0, 256);
+        let mut rng = Pcg64::new(2);
+        for w in 0..256u32 {
+            for _ in 0..200 {
+                dense.row_mut(w).inc(rng.next_below(1000) as u32);
+            }
+        }
+        let s = encode_block(&sparse).len();
+        let d = encode_block(&dense).len();
+        assert!(d > s * 3, "dense={d} sparse={s}");
+    }
+
+    #[test]
+    fn decode_rejects_garbage() {
+        assert!(decode_block(&[1, 2, 3]).is_err());
+        let b = random_block(4, 0, 10, 20);
+        let mut enc = encode_block(&b);
+        enc.push(0); // trailing byte
+        assert!(decode_block(&enc).is_err());
+    }
+
+    #[test]
+    fn estimate_is_within_2x_of_actual() {
+        let b = random_block(9, 0, 500, 200);
+        let actual = encode_block(&b).len() as u64;
+        let est = block_wire_size_estimate(b.nnz() as u64, b.num_words() as u64);
+        assert!(est >= actual / 2 && est <= actual * 2, "actual={actual} est={est}");
+    }
+}

@@ -1,0 +1,224 @@
+//! Word–topic counts `C_t^k` — the big model.
+//!
+//! Rows are stored sparse ([`SparseRow`]: sorted by topic id for
+//! deterministic serialization and O(K_t) merges); the whole-table type
+//! [`WordTopicTable`] exists for single-process samplers and tests, while
+//! distributed training shards rows into [`super::block::ModelBlock`]s that
+//! live in the KV-store and never coexist fully on one node.
+
+/// One sparse word–topic row: `(topic, count)` sorted ascending by topic.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct SparseRow {
+    entries: Vec<(u32, u32)>,
+}
+
+impl SparseRow {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn from_entries(mut entries: Vec<(u32, u32)>) -> Self {
+        entries.retain(|&(_, c)| c > 0);
+        entries.sort_unstable_by_key(|&(k, _)| k);
+        SparseRow { entries }
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// `K_t`: non-zero topics in this row.
+    pub fn nnz(&self) -> usize {
+        self.entries.len()
+    }
+
+    #[inline]
+    pub fn iter(&self) -> impl Iterator<Item = (u32, u32)> + '_ {
+        self.entries.iter().copied()
+    }
+
+    pub fn get(&self, topic: u32) -> u32 {
+        match self.entries.binary_search_by_key(&topic, |&(k, _)| k) {
+            Ok(i) => self.entries[i].1,
+            Err(_) => 0,
+        }
+    }
+
+    pub fn inc(&mut self, topic: u32) {
+        match self.entries.binary_search_by_key(&topic, |&(k, _)| k) {
+            Ok(i) => self.entries[i].1 += 1,
+            Err(i) => self.entries.insert(i, (topic, 1)),
+        }
+    }
+
+    pub fn dec(&mut self, topic: u32) {
+        match self.entries.binary_search_by_key(&topic, |&(k, _)| k) {
+            Ok(i) => {
+                self.entries[i].1 -= 1;
+                if self.entries[i].1 == 0 {
+                    self.entries.remove(i);
+                }
+            }
+            Err(_) => panic!("dec of absent topic {topic} in word row"),
+        }
+    }
+
+    /// Write this row into a dense scratch slice (len K), returning the
+    /// topics touched so the caller can clear them cheaply afterwards.
+    pub fn expand_into(&self, dense: &mut [u32], touched: &mut Vec<u32>) {
+        for &(k, c) in &self.entries {
+            dense[k as usize] = c;
+            touched.push(k);
+        }
+    }
+
+    /// Rebuild from a dense scratch slice given the touched topic list.
+    pub fn compress_from(dense: &[u32], touched: &[u32]) -> SparseRow {
+        let mut entries: Vec<(u32, u32)> = touched
+            .iter()
+            .filter_map(|&k| {
+                let c = dense[k as usize];
+                (c > 0).then_some((k, c))
+            })
+            .collect();
+        entries.sort_unstable_by_key(|&(k, _)| k);
+        entries.dedup_by_key(|e| e.0);
+        SparseRow { entries }
+    }
+
+    pub fn total(&self) -> u64 {
+        self.entries.iter().map(|&(_, c)| c as u64).sum()
+    }
+
+    /// Approximate heap bytes (memory accounting).
+    pub fn bytes(&self) -> u64 {
+        (self.entries.capacity() * 8 + 24) as u64
+    }
+}
+
+/// Full `V × K` table (single-process use: oracle sampler, tests, the
+/// Yahoo!LDA baseline's per-worker replica).
+#[derive(Debug, Clone, Default)]
+pub struct WordTopicTable {
+    pub rows: Vec<SparseRow>,
+    num_topics: usize,
+}
+
+impl WordTopicTable {
+    pub fn zeros(num_words: usize, num_topics: usize) -> Self {
+        WordTopicTable { rows: vec![SparseRow::new(); num_words], num_topics }
+    }
+
+    pub fn num_words(&self) -> usize {
+        self.rows.len()
+    }
+
+    pub fn num_topics(&self) -> usize {
+        self.num_topics
+    }
+
+    #[inline]
+    pub fn row(&self, w: usize) -> &SparseRow {
+        &self.rows[w]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, w: usize) -> &mut SparseRow {
+        &mut self.rows[w]
+    }
+
+    /// Column sums = `C_k` recomputed from scratch (consistency checks).
+    pub fn column_sums(&self) -> Vec<i64> {
+        let mut sums = vec![0i64; self.num_topics];
+        for row in &self.rows {
+            for (k, c) in row.iter() {
+                sums[k as usize] += c as i64;
+            }
+        }
+        sums
+    }
+
+    /// Mean `K_t` over non-empty rows.
+    pub fn avg_kt(&self) -> f64 {
+        let nonempty: Vec<usize> = self.rows.iter().map(|r| r.nnz()).filter(|&n| n > 0).collect();
+        if nonempty.is_empty() {
+            return 0.0;
+        }
+        nonempty.iter().sum::<usize>() as f64 / nonempty.len() as f64
+    }
+
+    pub fn bytes(&self) -> u64 {
+        self.rows.iter().map(|r| r.bytes()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn row_ops() {
+        let mut r = SparseRow::new();
+        r.inc(7);
+        r.inc(7);
+        r.inc(1);
+        assert_eq!(r.get(7), 2);
+        assert_eq!(r.get(1), 1);
+        assert_eq!(r.get(2), 0);
+        assert_eq!(r.nnz(), 2);
+        r.dec(7);
+        r.dec(7);
+        assert_eq!(r.nnz(), 1);
+        assert_eq!(r.total(), 1);
+    }
+
+    #[test]
+    fn expand_compress_roundtrip() {
+        let mut rng = Pcg64::new(2);
+        let k = 64;
+        let mut row = SparseRow::new();
+        for _ in 0..200 {
+            row.inc(rng.next_below(k as u64) as u32);
+        }
+        let mut dense = vec![0u32; k];
+        let mut touched = Vec::new();
+        row.expand_into(&mut dense, &mut touched);
+        let back = SparseRow::compress_from(&dense, &touched);
+        assert_eq!(back, row);
+        // clear
+        for &t in &touched {
+            dense[t as usize] = 0;
+        }
+        assert!(dense.iter().all(|&x| x == 0));
+    }
+
+    #[test]
+    fn entries_sorted_by_topic() {
+        let r = SparseRow::from_entries(vec![(9, 1), (2, 3), (5, 0), (4, 2)]);
+        let ks: Vec<u32> = r.iter().map(|(k, _)| k).collect();
+        assert_eq!(ks, vec![2, 4, 9]); // zero-count dropped, sorted
+    }
+
+    #[test]
+    fn table_column_sums() {
+        let mut t = WordTopicTable::zeros(3, 4);
+        t.row_mut(0).inc(0);
+        t.row_mut(1).inc(0);
+        t.row_mut(2).inc(3);
+        assert_eq!(t.column_sums(), vec![2, 0, 0, 1]);
+    }
+
+    #[test]
+    fn avg_kt_ignores_empty_rows() {
+        let mut t = WordTopicTable::zeros(4, 8);
+        t.row_mut(0).inc(1);
+        t.row_mut(0).inc(2);
+        t.row_mut(1).inc(3);
+        assert!((t.avg_kt() - 1.5).abs() < 1e-12);
+    }
+}

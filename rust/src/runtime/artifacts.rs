@@ -1,0 +1,217 @@
+//! Artifact manifest parsing and variant selection.
+//!
+//! `make artifacts` writes `artifacts/manifest.txt` with one line per AOT
+//! artifact: `kind=gibbs batch=256 topics=128 file=gibbs_b256_k128.hlo.txt`.
+//! The registry indexes them and picks the variant for a training config:
+//! topics must match **exactly** (shapes are baked into HLO); batch picks
+//! the largest available ≤ the configured microbatch (or the smallest one
+//! if none fit).
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+/// What a compiled module computes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum ArtifactKind {
+    /// Microbatch Gibbs step: `(ct, cd, ck, params, u) -> z`.
+    Gibbs,
+    /// Token-marginal step: `(ct, cd, ck, params) -> ll`.
+    Marginal,
+}
+
+impl ArtifactKind {
+    fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "gibbs" => ArtifactKind::Gibbs,
+            "marginal" => ArtifactKind::Marginal,
+            other => bail!("unknown artifact kind {other:?}"),
+        })
+    }
+}
+
+/// One manifest entry.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Artifact {
+    pub kind: ArtifactKind,
+    pub batch: usize,
+    pub topics: usize,
+    pub path: PathBuf,
+}
+
+/// Index over the artifacts directory.
+#[derive(Debug, Clone, Default)]
+pub struct ArtifactRegistry {
+    by_key: BTreeMap<(ArtifactKind, usize, usize), Artifact>,
+}
+
+impl ArtifactRegistry {
+    /// Load `<dir>/manifest.txt`.
+    pub fn load<P: AsRef<Path>>(dir: P) -> Result<ArtifactRegistry> {
+        let dir = dir.as_ref();
+        let manifest = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&manifest).with_context(|| {
+            format!("reading {manifest:?} — run `make artifacts` first")
+        })?;
+        let mut reg = ArtifactRegistry::default();
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let mut fields: BTreeMap<&str, &str> = BTreeMap::new();
+            for kv in line.split_whitespace() {
+                let (k, v) = kv
+                    .split_once('=')
+                    .with_context(|| format!("manifest line {}: bad field {kv:?}", lineno + 1))?;
+                fields.insert(k, v);
+            }
+            let get = |k: &str| -> Result<&str> {
+                fields
+                    .get(k)
+                    .copied()
+                    .with_context(|| format!("manifest line {}: missing {k}", lineno + 1))
+            };
+            let artifact = Artifact {
+                kind: ArtifactKind::parse(get("kind")?)?,
+                batch: get("batch")?.parse().context("batch")?,
+                topics: get("topics")?.parse().context("topics")?,
+                path: dir.join(get("file")?),
+            };
+            if !artifact.path.exists() {
+                bail!("manifest references missing artifact {:?}", artifact.path);
+            }
+            reg.by_key
+                .insert((artifact.kind, artifact.topics, artifact.batch), artifact);
+        }
+        if reg.by_key.is_empty() {
+            bail!("manifest {manifest:?} lists no artifacts");
+        }
+        Ok(reg)
+    }
+
+    pub fn len(&self) -> usize {
+        self.by_key.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.by_key.is_empty()
+    }
+
+    /// Exact lookup.
+    pub fn get(&self, kind: ArtifactKind, topics: usize, batch: usize) -> Option<&Artifact> {
+        self.by_key.get(&(kind, topics, batch))
+    }
+
+    /// Select the variant for a config: exact `topics`, largest batch
+    /// ≤ `max_batch` (falling back to the smallest batch available).
+    pub fn select(&self, kind: ArtifactKind, topics: usize, max_batch: usize) -> Result<&Artifact> {
+        let candidates: Vec<&Artifact> = self
+            .by_key
+            .range((kind, topics, 0)..=(kind, topics, usize::MAX))
+            .map(|(_, a)| a)
+            .collect();
+        if candidates.is_empty() {
+            let have: Vec<usize> = self
+                .by_key
+                .keys()
+                .filter(|(k, _, _)| *k == kind)
+                .map(|(_, t, _)| *t)
+                .collect();
+            bail!(
+                "no {kind:?} artifact for K={topics}; available K: {have:?}. \
+                 Re-run `make artifacts` with --variants including B:{topics}"
+            );
+        }
+        Ok(candidates
+            .iter()
+            .rev()
+            .find(|a| a.batch <= max_batch)
+            .copied()
+            .unwrap_or(candidates[0]))
+    }
+
+    /// All topic counts available for a kind.
+    pub fn available_topics(&self, kind: ArtifactKind) -> Vec<usize> {
+        let mut v: Vec<usize> = self
+            .by_key
+            .keys()
+            .filter(|(k, _, _)| *k == kind)
+            .map(|(_, t, _)| *t)
+            .collect();
+        v.dedup();
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fake_dir() -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("mplda_art_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        for name in ["gibbs_b64_k16.hlo.txt", "gibbs_b256_k16.hlo.txt", "marginal_b64_k16.hlo.txt"]
+        {
+            std::fs::write(dir.join(name), "HloModule fake").unwrap();
+        }
+        std::fs::write(
+            dir.join("manifest.txt"),
+            "# comment\n\
+             kind=gibbs batch=64 topics=16 file=gibbs_b64_k16.hlo.txt\n\
+             kind=gibbs batch=256 topics=16 file=gibbs_b256_k16.hlo.txt\n\
+             kind=marginal batch=64 topics=16 file=marginal_b64_k16.hlo.txt\n",
+        )
+        .unwrap();
+        dir
+    }
+
+    #[test]
+    fn loads_and_selects() {
+        let dir = fake_dir();
+        let reg = ArtifactRegistry::load(&dir).unwrap();
+        assert_eq!(reg.len(), 3);
+        // Largest batch under the cap.
+        let a = reg.select(ArtifactKind::Gibbs, 16, 300).unwrap();
+        assert_eq!(a.batch, 256);
+        let a = reg.select(ArtifactKind::Gibbs, 16, 100).unwrap();
+        assert_eq!(a.batch, 64);
+        // Nothing fits → smallest.
+        let a = reg.select(ArtifactKind::Gibbs, 16, 8).unwrap();
+        assert_eq!(a.batch, 64);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn missing_topics_is_helpful_error() {
+        let dir = fake_dir();
+        let reg = ArtifactRegistry::load(&dir).unwrap();
+        let err = reg.select(ArtifactKind::Gibbs, 999, 64).unwrap_err().to_string();
+        assert!(err.contains("K=999") && err.contains("make artifacts"), "{err}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn missing_file_detected_at_load() {
+        let dir = std::env::temp_dir().join(format!("mplda_art2_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.txt"),
+            "kind=gibbs batch=8 topics=4 file=nope.hlo.txt\n",
+        )
+        .unwrap();
+        assert!(ArtifactRegistry::load(&dir).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn real_manifest_loads_if_built() {
+        // Integration smoke against the actual artifacts dir when present.
+        if std::path::Path::new("artifacts/manifest.txt").exists() {
+            let reg = ArtifactRegistry::load("artifacts").unwrap();
+            assert!(!reg.is_empty());
+            assert!(reg.select(ArtifactKind::Gibbs, 16, 256).is_ok());
+        }
+    }
+}

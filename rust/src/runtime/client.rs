@@ -1,0 +1,57 @@
+//! Per-thread PJRT CPU client.
+//!
+//! The xla crate's `PjRtClient` is `Rc`-backed (not `Send`), so the shared
+//! client is thread-local. The training driver executes device calls from
+//! one thread (the simulated cluster serializes compute anyway), so in
+//! practice exactly one client exists per process.
+
+use anyhow::{Context, Result};
+
+thread_local! {
+    static CLIENT: std::cell::RefCell<Option<xla::PjRtClient>> =
+        const { std::cell::RefCell::new(None) };
+}
+
+/// Get (or create) this thread's CPU client and run `f` with it.
+pub fn with_client<T>(f: impl FnOnce(&xla::PjRtClient) -> Result<T>) -> Result<T> {
+    CLIENT.with(|cell| {
+        let mut slot = cell.borrow_mut();
+        if slot.is_none() {
+            let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+            log::info!(
+                "PJRT client: platform={} devices={}",
+                client.platform_name(),
+                client.device_count()
+            );
+            *slot = Some(client);
+        }
+        f(slot.as_ref().unwrap())
+    })
+}
+
+/// Load an HLO-text artifact and compile it on this thread's client.
+pub fn compile_hlo_text(path: &std::path::Path) -> Result<xla::PjRtLoadedExecutable> {
+    with_client(|client| {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 artifact path")?,
+        )
+        .with_context(|| format!("parsing HLO text {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        client
+            .compile(&comp)
+            .with_context(|| format!("compiling {path:?}"))
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn client_initializes_once_per_thread() {
+        let a = with_client(|c| Ok(c.platform_name())).unwrap();
+        let b = with_client(|c| Ok(c.platform_name())).unwrap();
+        assert_eq!(a, b);
+        assert!(!a.is_empty());
+    }
+}

@@ -1,0 +1,135 @@
+//! PJRT-backed microbatch executor.
+//!
+//! [`XlaExecutor`] compiles a `gibbs` artifact once and implements
+//! [`MicrobatchExecutor`]: rust fills the dense count buffers, PJRT runs
+//! the AOT-compiled probability/CDF/sample computation, rust applies the
+//! deltas. Validated against [`crate::sampler::xla_dense::RustRefExecutor`]
+//! in `rust/tests/integration_runtime.rs` — same inputs, same outputs.
+
+use anyhow::{Context, Result};
+
+use crate::sampler::xla_dense::MicrobatchExecutor;
+use crate::sampler::Params;
+
+use super::artifacts::{ArtifactKind, ArtifactRegistry};
+use super::client;
+
+/// A compiled `gibbs` executable + its static shape and hyperparameters.
+pub struct XlaExecutor {
+    exe: xla::PjRtLoadedExecutable,
+    batch: usize,
+    topics: usize,
+    params_vec: [f32; 4],
+}
+
+impl XlaExecutor {
+    /// Compile the best-fitting artifact for `(params, max_batch)` from a
+    /// registry.
+    pub fn from_registry(
+        reg: &ArtifactRegistry,
+        params: &Params,
+        max_batch: usize,
+    ) -> Result<XlaExecutor> {
+        let artifact = reg.select(ArtifactKind::Gibbs, params.num_topics, max_batch)?;
+        log::info!(
+            "compiling artifact {:?} (B={}, K={})",
+            artifact.path,
+            artifact.batch,
+            artifact.topics
+        );
+        let exe = client::compile_hlo_text(&artifact.path)?;
+        Ok(XlaExecutor {
+            exe,
+            batch: artifact.batch,
+            topics: artifact.topics,
+            params_vec: [
+                params.alpha as f32,
+                params.beta as f32,
+                params.vbeta as f32,
+                0.0,
+            ],
+        })
+    }
+
+    /// Convenience: load from an artifacts directory (e.g. config's
+    /// `runtime.artifacts_dir`).
+    pub fn from_dir(dir: &str, params: &Params, max_batch: usize) -> Result<XlaExecutor> {
+        let reg = ArtifactRegistry::load(dir)?;
+        Self::from_registry(&reg, params, max_batch)
+    }
+}
+
+impl MicrobatchExecutor for XlaExecutor {
+    fn batch_size(&self) -> usize {
+        self.batch
+    }
+
+    fn num_topics(&self) -> usize {
+        self.topics
+    }
+
+    fn execute(&mut self, ct: &[f32], cd: &[f32], ck: &[f32], u: &[f32]) -> Result<Vec<i32>> {
+        let (b, k) = (self.batch, self.topics);
+        anyhow::ensure!(
+            ct.len() == b * k && cd.len() == b * k && ck.len() == k && u.len() == b,
+            "executor input shape mismatch (B={b}, K={k})"
+        );
+        let ct_lit = xla::Literal::vec1(ct).reshape(&[b as i64, k as i64])?;
+        let cd_lit = xla::Literal::vec1(cd).reshape(&[b as i64, k as i64])?;
+        let ck_lit = xla::Literal::vec1(ck);
+        let params_lit = xla::Literal::vec1(&self.params_vec[..]);
+        let u_lit = xla::Literal::vec1(u);
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&[ct_lit, cd_lit, ck_lit, params_lit, u_lit])
+            .context("PJRT execute")?[0][0]
+            .to_literal_sync()?;
+        // aot.py lowers with return_tuple=True → unwrap the 1-tuple.
+        let out = result.to_tuple1().context("unwrapping output tuple")?;
+        let z = out.to_vec::<i32>().context("reading z output")?;
+        anyhow::ensure!(z.len() == b, "output length {} != batch {b}", z.len());
+        Ok(z)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sampler::xla_dense::RustRefExecutor;
+
+    /// Requires `make artifacts` to have run (skips otherwise) — the full
+    /// cross-validation lives in tests/integration_runtime.rs.
+    #[test]
+    fn pjrt_matches_rust_ref_smoke() {
+        if !std::path::Path::new("artifacts/manifest.txt").exists() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let params = Params::new(16, 1000, 0.1, 0.01);
+        let mut xla_exec = XlaExecutor::from_dir("artifacts", &params, 64).unwrap();
+        let b = xla_exec.batch_size();
+        let k = xla_exec.num_topics();
+        let mut ref_exec = RustRefExecutor::new(b, k, &params);
+
+        let mut rng = crate::util::rng::Pcg64::new(9);
+        let ct: Vec<f32> = (0..b * k)
+            .map(|_| if rng.next_f64() < 0.2 { rng.next_below(30) as f32 } else { 0.0 })
+            .collect();
+        let cd: Vec<f32> = (0..b * k)
+            .map(|_| if rng.next_f64() < 0.3 { rng.next_below(8) as f32 } else { 0.0 })
+            .collect();
+        let ck: Vec<f32> = (0..k).map(|_| 50.0 + rng.next_below(100) as f32).collect();
+        let u: Vec<f32> = (0..b).map(|_| rng.next_f32()).collect();
+
+        let z_xla = xla_exec.execute(&ct, &cd, &ck, &u).unwrap();
+        let z_ref = ref_exec.execute(&ct, &cd, &ck, &u).unwrap();
+        // f32 summation order may differ at CDF boundaries; demand ≥95%
+        // exact agreement and all indices in range.
+        let agree = z_xla.iter().zip(&z_ref).filter(|(a, b)| a == b).count();
+        assert!(
+            agree as f64 >= 0.95 * b as f64,
+            "agreement {agree}/{b} too low"
+        );
+        assert!(z_xla.iter().all(|&z| (z as usize) < k));
+    }
+}

@@ -1,0 +1,17 @@
+//! XLA/PJRT runtime — loads the AOT artifacts `make artifacts` produced and
+//! executes them on the sampling path. Python never runs here.
+//!
+//! * [`client`] — process-wide PJRT CPU client (one per process; compiled
+//!   executables are cached on it).
+//! * [`artifacts`] — the manifest parser + registry: selects the right
+//!   `(kind, batch, topics)` HLO file for a training configuration.
+//! * [`exec`] — [`exec::XlaExecutor`]: the
+//!   [`crate::sampler::xla_dense::MicrobatchExecutor`] implementation
+//!   backed by a compiled PJRT executable.
+
+pub mod client;
+pub mod artifacts;
+pub mod exec;
+
+pub use artifacts::{ArtifactKind, ArtifactRegistry};
+pub use exec::XlaExecutor;

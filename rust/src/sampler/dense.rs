@@ -1,0 +1,166 @@
+//! Dense O(K) collapsed Gibbs sampler (eq. 1, Griffiths & Steyvers) — the
+//! correctness oracle every other backend is validated against.
+//!
+//! Doc-major sweep, full conditional materialized per token. Slow by
+//! design; used for small-scale equivalence tests and as the reference for
+//! the XLA microbatch backend's probability construction.
+
+use crate::corpus::Corpus;
+use crate::model::{Assignments, DocTopic, TopicCounts, WordTopicTable};
+use crate::util::rng::Pcg64;
+
+use super::{Params, Scratch};
+
+/// One full Gibbs sweep over all tokens, doc-major. Returns tokens sampled.
+pub fn sweep(
+    corpus: &Corpus,
+    assign: &mut Assignments,
+    dt: &mut DocTopic,
+    wt: &mut WordTopicTable,
+    ck: &mut TopicCounts,
+    params: &Params,
+    scratch: &mut Scratch,
+    rng: &mut Pcg64,
+) -> u64 {
+    let mut sampled = 0u64;
+    for (d, doc) in corpus.docs.iter().enumerate() {
+        for (n, &w) in doc.tokens.iter().enumerate() {
+            let z_old = assign.z[d][n];
+            // Remove the token from all counts.
+            dt.doc_mut(d).dec(z_old);
+            wt.row_mut(w as usize).dec(z_old);
+            ck.dec(z_old as usize);
+
+            let z_new = sample_token(dt, wt, ck, d, w, params, scratch, rng);
+
+            dt.doc_mut(d).inc(z_new);
+            wt.row_mut(w as usize).inc(z_new);
+            ck.inc(z_new as usize);
+            assign.z[d][n] = z_new;
+            sampled += 1;
+        }
+    }
+    sampled
+}
+
+/// Draw one topic from the exact conditional (counts must already exclude
+/// the token).
+#[allow(clippy::too_many_arguments)]
+#[inline]
+pub fn sample_token(
+    dt: &DocTopic,
+    wt: &WordTopicTable,
+    ck: &TopicCounts,
+    d: usize,
+    w: u32,
+    params: &Params,
+    scratch: &mut Scratch,
+    rng: &mut Pcg64,
+) -> u32 {
+    let k = params.num_topics;
+    let prob = &mut scratch.prob[..k];
+    // Dense construction: start from the smoothing-only term, then add the
+    // sparse doc and word contributions.
+    let row = wt.row(w as usize);
+    let doc = dt.doc(d);
+    let mut total = 0.0;
+    for (kk, p) in prob.iter_mut().enumerate() {
+        *p = params.alpha * params.beta / (ck.get(kk) as f64 + params.vbeta);
+        total += *p;
+    }
+    for (kk, c) in doc.iter() {
+        let denom = ck.get(kk as usize) as f64 + params.vbeta;
+        let add = c as f64 * params.beta / denom;
+        prob[kk as usize] += add;
+        total += add;
+    }
+    for (kk, c) in row.iter() {
+        let denom = ck.get(kk as usize) as f64 + params.vbeta;
+        let add = c as f64 * (params.alpha + doc.get(kk) as f64) / denom;
+        prob[kk as usize] += add;
+        total += add;
+    }
+    // Inverse-CDF draw.
+    let mut u = rng.next_f64() * total;
+    for (kk, &p) in prob.iter().enumerate() {
+        u -= p;
+        if u <= 0.0 {
+            return kk as u32;
+        }
+    }
+    (k - 1) as u32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::joint_log_likelihood;
+    use crate::sampler::testutil::{eq1_excluded, small_state};
+
+    #[test]
+    fn construction_matches_eq1() {
+        // sample_token's probability vector (pre-draw) must equal eq. 1.
+        let (corpus, assign, mut dt, mut wt, mut ck) = small_state(7, 10);
+        let params = Params::new(10, corpus.num_words(), 0.1, 0.01);
+        let _scratch = Scratch::new(10);
+        let d = 3;
+        let w = corpus.docs[d].tokens[0];
+        let z_old = assign.z[d][0];
+        let truth = eq1_excluded(&params, dt.doc(d), wt.row(w as usize), &ck, z_old);
+
+        // Exclude the token, then rebuild the dense probabilities the way
+        // sample_token does.
+        dt.doc_mut(d).dec(z_old);
+        wt.row_mut(w as usize).dec(z_old);
+        ck.dec(z_old as usize);
+        let row = wt.row(w as usize);
+        let doc = dt.doc(d);
+        for k in 0..10usize {
+            let denom = ck.get(k) as f64 + params.vbeta;
+            let p = (doc.get(k as u32) as f64 + params.alpha)
+                * (row.get(k as u32) as f64 + params.beta)
+                / denom;
+            assert!((p - truth[k]).abs() < 1e-12, "k={k}");
+        }
+    }
+
+    #[test]
+    fn sweep_preserves_count_consistency() {
+        let (corpus, mut assign, mut dt, mut wt, mut ck) = small_state(8, 12);
+        let params = Params::new(12, corpus.num_words(), 0.1, 0.01);
+        let mut scratch = Scratch::new(12);
+        let mut rng = Pcg64::new(55);
+        let n = sweep(&corpus, &mut assign, &mut dt, &mut wt, &mut ck, &params, &mut scratch, &mut rng);
+        assert_eq!(n as usize, corpus.num_tokens());
+        assign.check_consistency(&corpus, &dt, &wt, &ck).unwrap();
+        assert!(ck.is_valid());
+    }
+
+    #[test]
+    fn loglik_improves_from_random_init() {
+        let (corpus, mut assign, mut dt, mut wt, mut ck) = small_state(9, 8);
+        let params = Params::new(8, corpus.num_words(), 0.1, 0.01);
+        let mut scratch = Scratch::new(8);
+        let mut rng = Pcg64::new(77);
+        let ll0 = joint_log_likelihood(&dt, &wt, &ck, params.alpha, params.beta);
+        for _ in 0..15 {
+            sweep(&corpus, &mut assign, &mut dt, &mut wt, &mut ck, &params, &mut scratch, &mut rng);
+        }
+        let ll1 = joint_log_likelihood(&dt, &wt, &ck, params.alpha, params.beta);
+        assert!(ll1 > ll0 + 100.0, "ll0={ll0} ll1={ll1}");
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let run = |seed| {
+            let (corpus, mut assign, mut dt, mut wt, mut ck) = small_state(10, 8);
+            let params = Params::new(8, corpus.num_words(), 0.1, 0.01);
+            let mut scratch = Scratch::new(8);
+            let mut rng = Pcg64::new(seed);
+            sweep(&corpus, &mut assign, &mut dt, &mut wt, &mut ck, &params, &mut scratch, &mut rng);
+            assign.z
+        };
+        assert_eq!(run(1), run(1));
+        assert_ne!(run(1), run(2));
+    }
+}

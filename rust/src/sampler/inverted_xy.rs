@@ -1,0 +1,344 @@
+//! The paper's model-parallel sampler: eq. 3's `X+Y` decomposition on the
+//! inverted index (§4.2).
+//!
+//! Word-major sampling breaks SparseLDA's per-document caching (eq. 2's
+//! `Σ_k B_k` would be recomputed for almost every token), so the paper
+//! regroups the conditional by the *word-side* fraction:
+//!
+//! ```text
+//! p(z=k) ∝ X_k + Y_k
+//! X_k = α · q_k           q_k = (C_t^k+β)/(C_k+Vβ)
+//! Y_k = C_d^k · q_k
+//! ```
+//!
+//! `q` and `Σ_k X_k` are built **once per word** in O(K_t) — not O(K) —
+//! and maintained in O(1) per update (a token move changes `C_t^k` and
+//! `C_k` at exactly two topics); the `Y` bucket costs O(K_d) per token
+//! over the document's non-zero topics. All counts the sampler mutates are
+//! worker-private during a round: the doc shard's `C_d^k`, the leased
+//! block's `C_t^k` rows, and the local `C_k` snapshot — which is exactly
+//! the paper's correctness argument for model-parallelism.
+//!
+//! ## Hot-path layout (§Perf optimization, EXPERIMENTS.md)
+//!
+//! `q_k` factors as `(C_t^k + β) · inv_k` with `inv_k = 1/(C_k + Vβ)`
+//! shared by **all** words: the naive per-word O(K) rebuild of a dense `q`
+//! dominated at scaled corpus sizes (tokens-per-word-per-shard is small,
+//! and the cost grew with the worker count). Instead one dense `inv`
+//! vector and its sum are built once per block call and updated at two
+//! coordinates per token move; per word only the row's non-zero
+//! adjustment `Σ_{k∈row} ct_k·inv_k` is computed, and the rare dense `X`
+//! walk evaluates `q` on the fly from `ct`/`inv`. Per-call cost drops from
+//! `O(|words| · K)` to `O(K + nnz)`.
+
+use crate::corpus::{Corpus, InvertedIndex};
+use crate::model::{DocTopic, ModelBlock, TopicCounts};
+use crate::util::rng::Pcg64;
+
+use super::{Params, Scratch};
+
+/// Sample every token of `index ∩ [block.lo, block.hi)`, mutating the
+/// block's rows, the shard's doc–topic counts, the local `C_k` snapshot and
+/// the assignments. Returns tokens sampled.
+///
+/// `assign_z` is indexed by *global* doc id (same layout as
+/// `Assignments::z`); only documents in this worker's shard are touched.
+#[allow(clippy::too_many_arguments)]
+pub fn sample_block(
+    corpus: &Corpus,
+    assign_z: &mut [Vec<u32>],
+    index: &InvertedIndex,
+    block: &mut ModelBlock,
+    dt: &mut DocTopic,
+    ck: &mut TopicCounts,
+    params: &Params,
+    scratch: &mut Scratch,
+    rng: &mut Pcg64,
+) -> u64 {
+    debug_assert_eq!(scratch.ct.len(), params.num_topics);
+    let k = params.num_topics;
+    let mut sampled = 0u64;
+
+    // Word iteration: contiguous blocks use a binary-searched range over
+    // the sorted index words; strided blocks filter by congruence.
+    let start = index.words.partition_point(|&w| w < block.lo);
+    let end = index.words.partition_point(|&w| w < block.hi);
+    if start == end {
+        return 0;
+    }
+
+    // ---- per-call setup: dense inv_k = 1/(C_k + Vβ), O(K) once ----------
+    // Reuses the scratch.q buffer as `inv` storage; updated at the two
+    // moved coordinates per token. Split-borrow the scratch fields so the
+    // dense expansion and `inv` can be used simultaneously.
+    let Scratch { ct, touched, q: inv, .. } = scratch;
+    let clear_ct = |ct: &mut Vec<u32>, touched: &mut Vec<u32>| {
+        for &t in touched.iter() {
+            ct[t as usize] = 0;
+        }
+        touched.clear();
+    };
+    let mut sum_inv = 0.0;
+    for kk in 0..k {
+        let v = 1.0 / (ck.get(kk) as f64 + params.vbeta);
+        inv[kk] = v;
+        sum_inv += v;
+    }
+
+    for wi in start..end {
+        let word = index.words[wi];
+        if block.stride != 1 && (word - block.lo) % block.stride != 0 {
+            continue;
+        }
+        let slot_range = index.offsets[wi] as usize..index.offsets[wi + 1] as usize;
+
+        // ---- per-word setup: expand row, row adjustment (O(K_t)) --------
+        clear_ct(ct, touched);
+        block.row(word).expand_into(ct, touched);
+        // Σq = β·Σinv + Σ_{k∈row} ct_k·inv_k.
+        let mut row_adj = 0.0;
+        for &t in touched.iter() {
+            row_adj += ct[t as usize] as f64 * inv[t as usize];
+        }
+        let mut sum_q = params.beta * sum_inv + row_adj;
+
+        // ---- sample every occurrence of this word in the shard ----------
+        for si in slot_range {
+            let slot = index.slots[si];
+            let d = slot.doc as usize;
+            let z_old = assign_z[d][slot.pos as usize];
+            let zo = z_old as usize;
+
+            // Remove the token; inv[z_old] and Σq follow in O(1).
+            dt.doc_mut(d).dec(z_old);
+            sum_q -= (ct[zo] as f64 + params.beta) * inv[zo];
+            sum_inv -= inv[zo];
+            ct[zo] -= 1;
+            ck.dec(zo);
+            let inv_new = 1.0 / (ck.get(zo) as f64 + params.vbeta);
+            inv[zo] = inv_new;
+            sum_inv += inv_new;
+            sum_q += (ct[zo] as f64 + params.beta) * inv_new;
+
+            // Y bucket over the doc's non-zeros (desc by count → early exit
+            // on the walk below is likely).
+            let doc_counts = dt.doc(d);
+            let mut sum_y = 0.0;
+            for (kk, c) in doc_counts.iter() {
+                let ki = kk as usize;
+                sum_y += c as f64 * (ct[ki] as f64 + params.beta) * inv[ki];
+            }
+
+            let total = params.alpha * sum_q + sum_y;
+            let u = rng.next_f64() * total;
+            let z_new = if u < sum_y {
+                // Walk the doc bucket.
+                let mut acc = 0.0;
+                let mut chosen = None;
+                for (kk, c) in doc_counts.iter() {
+                    let ki = kk as usize;
+                    acc += c as f64 * (ct[ki] as f64 + params.beta) * inv[ki];
+                    if u <= acc {
+                        chosen = Some(kk);
+                        break;
+                    }
+                }
+                chosen.unwrap_or_else(|| doc_counts.iter().last().map(|(kk, _)| kk).unwrap())
+            } else {
+                // Walk the dense X bucket, evaluating q on the fly.
+                let target = (u - sum_y) / params.alpha;
+                let mut acc = 0.0;
+                let mut chosen = (k - 1) as u32;
+                for kk in 0..k {
+                    acc += (ct[kk] as f64 + params.beta) * inv[kk];
+                    if target <= acc {
+                        chosen = kk as u32;
+                        break;
+                    }
+                }
+                chosen
+            };
+
+            // Add the token back under z_new.
+            let zn = z_new as usize;
+            dt.doc_mut(d).inc(z_new);
+            sum_q -= (ct[zn] as f64 + params.beta) * inv[zn];
+            sum_inv -= inv[zn];
+            if ct[zn] == 0 {
+                touched.push(z_new);
+            }
+            ct[zn] += 1;
+            ck.inc(zn);
+            let inv_new = 1.0 / (ck.get(zn) as f64 + params.vbeta);
+            inv[zn] = inv_new;
+            sum_inv += inv_new;
+            sum_q += (ct[zn] as f64 + params.beta) * inv_new;
+
+            assign_z[d][slot.pos as usize] = z_new;
+            sampled += 1;
+        }
+
+        // ---- write the row back ------------------------------------------
+        *block.row_mut(word) =
+            crate::model::SparseRow::compress_from(ct, touched);
+    }
+    let _ = corpus; // corpus retained in the signature for symmetry/debug asserts
+    clear_ct(ct, touched);
+    sampled
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::corpus::partition::DataPartition;
+    use crate::metrics::joint_log_likelihood;
+    use crate::model::{Assignments, BlockMap};
+    use crate::sampler::testutil::small_state;
+
+    /// Serial "model-parallel" driver: one worker, all blocks in order.
+    fn serial_mp_sweep(
+        corpus: &crate::corpus::Corpus,
+        assign: &mut Assignments,
+        dt: &mut DocTopic,
+        blocks: &mut [ModelBlock],
+        ck: &mut TopicCounts,
+        params: &Params,
+        scratch: &mut Scratch,
+        rng: &mut Pcg64,
+    ) -> u64 {
+        let all_docs: Vec<u32> = (0..corpus.num_docs() as u32).collect();
+        let index = InvertedIndex::build(corpus, &all_docs);
+        let mut n = 0;
+        for b in blocks.iter_mut() {
+            n += sample_block(corpus, &mut assign.z, &index, b, dt, ck, params, scratch, rng);
+        }
+        n
+    }
+
+    #[test]
+    fn block_sweep_preserves_consistency() {
+        let (corpus, mut assign, mut dt, wt, mut ck) = small_state(40, 12);
+        let params = Params::new(12, corpus.num_words(), 0.1, 0.01);
+        let map = BlockMap::balanced(&corpus.word_frequencies(), 4);
+        let mut blocks = Assignments::build_blocks(&wt, &map);
+        let mut scratch = Scratch::new(12);
+        let mut rng = Pcg64::new(9);
+        let n = serial_mp_sweep(
+            &corpus, &mut assign, &mut dt, &mut blocks, &mut ck, &params, &mut scratch, &mut rng,
+        );
+        assert_eq!(n as usize, corpus.num_tokens());
+        // Rebuild the full table from blocks and verify against Z.
+        let mut wt2 = crate::model::WordTopicTable::zeros(corpus.num_words(), 12);
+        for b in &blocks {
+            for (i, row) in b.rows.iter().enumerate() {
+                let w = b.word_at(i);
+                *wt2.row_mut(w as usize) = row.clone();
+            }
+        }
+        assign.check_consistency(&corpus, &dt, &wt2, &ck).unwrap();
+    }
+
+    #[test]
+    fn converges_like_dense() {
+        let (corpus, assign0, dt0, wt0, ck0) = small_state(41, 8);
+        let params = Params::new(8, corpus.num_words(), 0.1, 0.01);
+        let mut scratch = Scratch::new(8);
+
+        // Dense reference.
+        let mut a = (assign0.clone(), dt0.clone(), wt0.clone(), ck0.clone());
+        let mut rng = Pcg64::new(2);
+        for _ in 0..20 {
+            super::super::dense::sweep(
+                &corpus, &mut a.0, &mut a.1, &mut a.2, &mut a.3, &params, &mut scratch, &mut rng,
+            );
+        }
+        let ll_dense = joint_log_likelihood(&a.1, &a.2, &a.3, params.alpha, params.beta);
+
+        // X+Y over 4 blocks, single worker.
+        let map = BlockMap::balanced(&corpus.word_frequencies(), 4);
+        let mut blocks = Assignments::build_blocks(&wt0, &map);
+        let mut b = (assign0, dt0, ck0);
+        let mut rng = Pcg64::new(2);
+        for _ in 0..20 {
+            serial_mp_sweep(
+                &corpus, &mut b.0, &mut b.1, &mut blocks, &mut b.2, &params, &mut scratch,
+                &mut rng,
+            );
+        }
+        let mut wt2 = crate::model::WordTopicTable::zeros(corpus.num_words(), 8);
+        for blk in &blocks {
+            for (i, row) in blk.rows.iter().enumerate() {
+                let w = blk.word_at(i);
+                *wt2.row_mut(w as usize) = row.clone();
+            }
+        }
+        let ll_xy = joint_log_likelihood(&b.1, &wt2, &b.2, params.alpha, params.beta);
+        let rel = (ll_dense - ll_xy).abs() / ll_dense.abs();
+        assert!(rel < 0.02, "dense={ll_dense} xy={ll_xy} rel={rel}");
+    }
+
+    #[test]
+    fn disjoint_worker_updates_commute_exactly() {
+        // The paper's §3 claim: with disjoint doc shards, disjoint word
+        // blocks and private C_k snapshots, worker executions commute —
+        // running (w0 then w1) equals (w1 then w0) bit-for-bit.
+        let (corpus, assign, dt, wt, ck) = small_state(42, 10);
+        let params = Params::new(10, corpus.num_words(), 0.1, 0.01);
+        let map = BlockMap::balanced(&corpus.word_frequencies(), 2);
+        let part = DataPartition::balanced(&corpus, 2);
+        let idx0 = InvertedIndex::build(&corpus, &part.shards[0]);
+        let idx1 = InvertedIndex::build(&corpus, &part.shards[1]);
+
+        let run = |order: [usize; 2]| {
+            let mut z = assign.z.clone();
+            let mut dtl = dt.clone();
+            let mut blocks = Assignments::build_blocks(&wt, &map);
+            let (mut b0, mut b1) = {
+                let mut it = blocks.drain(..);
+                (it.next().unwrap(), it.next().unwrap())
+            };
+            let mut scratch = Scratch::new(10);
+            // Private C_k snapshots per worker; private RNG per worker.
+            let mut ck0 = ck.clone();
+            let mut ck1 = ck.clone();
+            for &who in &order {
+                if who == 0 {
+                    let mut rng = Pcg64::with_stream(7, 0);
+                    sample_block(
+                        &corpus, &mut z, &idx0, &mut b0, &mut dtl, &mut ck0, &params,
+                        &mut scratch, &mut rng,
+                    );
+                } else {
+                    let mut rng = Pcg64::with_stream(7, 1);
+                    sample_block(
+                        &corpus, &mut z, &idx1, &mut b1, &mut dtl, &mut ck1, &params,
+                        &mut scratch, &mut rng,
+                    );
+                }
+            }
+            (z, b0, b1)
+        };
+        let (za, b0a, b1a) = run([0, 1]);
+        let (zb, b0b, b1b) = run([1, 0]);
+        assert_eq!(za, zb, "assignments must be order-independent");
+        assert_eq!(b0a, b0b);
+        assert_eq!(b1a, b1b);
+    }
+
+    #[test]
+    fn empty_block_is_noop() {
+        let (corpus, mut assign, mut dt, _wt, mut ck) = small_state(43, 6);
+        let params = Params::new(6, corpus.num_words(), 0.1, 0.01);
+        let all_docs: Vec<u32> = (0..corpus.num_docs() as u32).collect();
+        let index = InvertedIndex::build(&corpus, &all_docs);
+        // Block beyond the vocabulary range → nothing to sample.
+        let mut block = ModelBlock::empty(9, corpus.num_words() as u32, corpus.num_words() as u32);
+        let mut scratch = Scratch::new(6);
+        let mut rng = Pcg64::new(3);
+        let n = sample_block(
+            &corpus, &mut assign.z, &index, &mut block, &mut dt, &mut ck, &params, &mut scratch,
+            &mut rng,
+        );
+        assert_eq!(n, 0);
+    }
+}

@@ -1,0 +1,272 @@
+//! SparseLDA sampler — eq. 2's `A+B+C` bucket decomposition (Yao, Mimno &
+//! McCallum 2009, §2.2). Doc-major; the algorithmic core of Yahoo!LDA and
+//! of our data-parallel baseline.
+//!
+//! ```text
+//! p(z=k) ∝ A_k + B_k + C_k
+//! A_k = αβ  / (C_k+Vβ)                  (smoothing-only;  dense, cached)
+//! B_k = β·C_d^k / (C_k+Vβ)              (doc bucket;      O(K_d) per doc)
+//! C_k = (α+C_d^k)·C_t^k / (C_k+Vβ)      (word bucket;     O(K_t) per token)
+//! ```
+//!
+//! `Σ_k A_k` ("s") is maintained globally in O(1) per update, `Σ_k B_k`
+//! ("r") per document in O(1) per update, and the `C` bucket is rebuilt per
+//! token from the word row's non-zeros with cached coefficients
+//! `(α+C_d^k)/(C_k+Vβ)`. Most of the probability mass sits in `C` then `B`,
+//! so the bucket test order makes the expected per-token cost O(K_d+K_t).
+
+use crate::corpus::Corpus;
+use crate::model::{Assignments, DocTopic, TopicCounts, WordTopicTable};
+use crate::util::rng::Pcg64;
+
+use super::{Params, Scratch};
+
+/// Persistent sampler state across sweeps (bucket caches).
+pub struct SparseYao {
+    params: Params,
+    /// s = Σ_k αβ/(C_k+Vβ).
+    s_bucket: f64,
+    /// Cached coefficient (α+C_d^k)/(C_k+Vβ) for the *current doc*, dense.
+    coeff: Vec<f64>,
+}
+
+impl SparseYao {
+    pub fn new(params: Params, ck: &TopicCounts) -> SparseYao {
+        let mut s = SparseYao { params, s_bucket: 0.0, coeff: vec![0.0; params.num_topics] };
+        s.rebuild_s(ck);
+        s
+    }
+
+    /// Recompute `s` from scratch — O(K); called per sweep to wash out any
+    /// accumulated float drift.
+    pub fn rebuild_s(&mut self, ck: &TopicCounts) {
+        self.s_bucket = (0..self.params.num_topics)
+            .map(|k| self.params.alpha * self.params.beta / (ck.get(k) as f64 + self.params.vbeta))
+            .sum();
+    }
+
+    /// One full sweep, doc-major. Returns tokens sampled.
+    #[allow(clippy::too_many_arguments)]
+    pub fn sweep(
+        &mut self,
+        corpus: &Corpus,
+        assign: &mut Assignments,
+        dt: &mut DocTopic,
+        wt: &mut WordTopicTable,
+        ck: &mut TopicCounts,
+        scratch: &mut Scratch,
+        rng: &mut Pcg64,
+    ) -> u64 {
+        self.rebuild_s(ck);
+        let mut sampled = 0u64;
+        let doc_ids: Vec<usize> = (0..corpus.num_docs()).collect();
+        for &d in &doc_ids {
+            sampled += self.sweep_doc(corpus, assign, dt, wt, ck, d, scratch, rng);
+        }
+        sampled
+    }
+
+    /// Sample all tokens of one document (the unit Yahoo!LDA-style workers
+    /// process between sync points).
+    #[allow(clippy::too_many_arguments)]
+    pub fn sweep_doc(
+        &mut self,
+        corpus: &Corpus,
+        assign: &mut Assignments,
+        dt: &mut DocTopic,
+        wt: &mut WordTopicTable,
+        ck: &mut TopicCounts,
+        d: usize,
+        _scratch: &mut Scratch,
+        rng: &mut Pcg64,
+    ) -> u64 {
+        let params = self.params;
+        // Per-doc setup: r = Σ β C_d^k/(C_k+Vβ), coefficients for C bucket.
+        let mut r_bucket = 0.0;
+        for (k, c) in dt.doc(d).iter() {
+            r_bucket += params.beta * c as f64 / (ck.get(k as usize) as f64 + params.vbeta);
+        }
+        for k in 0..params.num_topics {
+            self.coeff[k] =
+                (params.alpha + dt.doc(d).get(k as u32) as f64) / (ck.get(k) as f64 + params.vbeta);
+        }
+
+        let mut sampled = 0u64;
+        let doc = &corpus.docs[d];
+        for (n, &w) in doc.tokens.iter().enumerate() {
+            let z_old = assign.z[d][n];
+            // --- remove token, updating buckets incrementally -------------
+            self.remove_token(dt, ck, d, z_old, &mut r_bucket);
+            wt.row_mut(w as usize).dec(z_old);
+
+            // --- build C bucket over word row non-zeros -------------------
+            let row = wt.row(w as usize);
+            let mut c_bucket = 0.0;
+            for (k, c) in row.iter() {
+                c_bucket += self.coeff[k as usize] * c as f64;
+            }
+
+            // --- draw -----------------------------------------------------
+            let total = self.s_bucket + r_bucket + c_bucket;
+            let u = rng.next_f64() * total;
+            let z_new = if u < c_bucket {
+                // Walk word-row non-zeros (most mass lands here).
+                let mut acc = 0.0;
+                let mut chosen = None;
+                for (k, c) in row.iter() {
+                    acc += self.coeff[k as usize] * c as f64;
+                    if u <= acc {
+                        chosen = Some(k);
+                        break;
+                    }
+                }
+                chosen.unwrap_or_else(|| row.iter().last().map(|(k, _)| k).unwrap())
+            } else if u < c_bucket + r_bucket {
+                // Doc bucket: walk C_d^k non-zeros (desc by count).
+                let target = u - c_bucket;
+                let mut acc = 0.0;
+                let mut chosen = None;
+                for (k, c) in dt.doc(d).iter() {
+                    acc += params.beta * c as f64 / (ck.get(k as usize) as f64 + params.vbeta);
+                    if target <= acc {
+                        chosen = Some(k);
+                        break;
+                    }
+                }
+                chosen.unwrap_or_else(|| dt.doc(d).iter().last().map(|(k, _)| k).unwrap())
+            } else {
+                // Smoothing bucket: dense walk (rare).
+                let target = u - c_bucket - r_bucket;
+                let mut acc = 0.0;
+                let mut chosen = (params.num_topics - 1) as u32;
+                for k in 0..params.num_topics {
+                    acc += params.alpha * params.beta / (ck.get(k) as f64 + params.vbeta);
+                    if target <= acc {
+                        chosen = k as u32;
+                        break;
+                    }
+                }
+                chosen
+            };
+
+            // --- add token back under z_new -------------------------------
+            self.add_token(dt, ck, d, z_new, &mut r_bucket);
+            wt.row_mut(w as usize).inc(z_new);
+            assign.z[d][n] = z_new;
+            sampled += 1;
+        }
+        sampled
+    }
+
+    /// Decrement doc/topic counts for topic `k`, updating s, r and coeff.
+    fn remove_token(
+        &mut self,
+        dt: &mut DocTopic,
+        ck: &mut TopicCounts,
+        d: usize,
+        k: u32,
+        r_bucket: &mut f64,
+    ) {
+        let params = self.params;
+        let ki = k as usize;
+        // Remove old contributions of topic k to s and r.
+        let denom_old = ck.get(ki) as f64 + params.vbeta;
+        self.s_bucket -= params.alpha * params.beta / denom_old;
+        *r_bucket -= params.beta * dt.doc(d).get(k) as f64 / denom_old;
+        dt.doc_mut(d).dec(k);
+        ck.dec(ki);
+        let denom_new = ck.get(ki) as f64 + params.vbeta;
+        self.s_bucket += params.alpha * params.beta / denom_new;
+        *r_bucket += params.beta * dt.doc(d).get(k) as f64 / denom_new;
+        self.coeff[ki] = (params.alpha + dt.doc(d).get(k) as f64) / denom_new;
+    }
+
+    /// Increment doc/topic counts for topic `k`, updating s, r and coeff.
+    fn add_token(
+        &mut self,
+        dt: &mut DocTopic,
+        ck: &mut TopicCounts,
+        d: usize,
+        k: u32,
+        r_bucket: &mut f64,
+    ) {
+        let params = self.params;
+        let ki = k as usize;
+        let denom_old = ck.get(ki) as f64 + params.vbeta;
+        self.s_bucket -= params.alpha * params.beta / denom_old;
+        *r_bucket -= params.beta * dt.doc(d).get(k) as f64 / denom_old;
+        dt.doc_mut(d).inc(k);
+        ck.inc(ki);
+        let denom_new = ck.get(ki) as f64 + params.vbeta;
+        self.s_bucket += params.alpha * params.beta / denom_new;
+        *r_bucket += params.beta * dt.doc(d).get(k) as f64 / denom_new;
+        self.coeff[ki] = (params.alpha + dt.doc(d).get(k) as f64) / denom_new;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::joint_log_likelihood;
+    use crate::sampler::testutil::small_state;
+
+    #[test]
+    fn sweep_preserves_count_consistency() {
+        let (corpus, mut assign, mut dt, mut wt, mut ck) = small_state(18, 12);
+        let params = Params::new(12, corpus.num_words(), 0.1, 0.01);
+        let mut sampler = SparseYao::new(params, &ck);
+        let mut scratch = Scratch::new(12);
+        let mut rng = Pcg64::new(5);
+        let n = sampler.sweep(&corpus, &mut assign, &mut dt, &mut wt, &mut ck, &mut scratch, &mut rng);
+        assert_eq!(n as usize, corpus.num_tokens());
+        assign.check_consistency(&corpus, &dt, &wt, &ck).unwrap();
+    }
+
+    #[test]
+    fn bucket_cache_stays_accurate() {
+        // After a sweep, the incrementally maintained s must equal the
+        // from-scratch value to float precision.
+        let (corpus, mut assign, mut dt, mut wt, mut ck) = small_state(19, 10);
+        let params = Params::new(10, corpus.num_words(), 0.1, 0.01);
+        let mut sampler = SparseYao::new(params, &ck);
+        let mut scratch = Scratch::new(10);
+        let mut rng = Pcg64::new(6);
+        sampler.sweep(&corpus, &mut assign, &mut dt, &mut wt, &mut ck, &mut scratch, &mut rng);
+        let maintained = sampler.s_bucket;
+        sampler.rebuild_s(&ck);
+        assert!(
+            (maintained - sampler.s_bucket).abs() < 1e-9,
+            "maintained={maintained} fresh={}",
+            sampler.s_bucket
+        );
+    }
+
+    #[test]
+    fn converges_like_dense() {
+        // Both samplers target the same posterior: after the same number of
+        // sweeps from the same init, final LLs should be close.
+        let (corpus, assign0, dt0, wt0, ck0) = small_state(20, 8);
+        let params = Params::new(8, corpus.num_words(), 0.1, 0.01);
+
+        let mut a = (assign0.clone(), dt0.clone(), wt0.clone(), ck0.clone());
+        let mut scratch = Scratch::new(8);
+        let mut rng = Pcg64::new(1);
+        for _ in 0..20 {
+            super::super::dense::sweep(
+                &corpus, &mut a.0, &mut a.1, &mut a.2, &mut a.3, &params, &mut scratch, &mut rng,
+            );
+        }
+        let ll_dense = joint_log_likelihood(&a.1, &a.2, &a.3, params.alpha, params.beta);
+
+        let mut b = (assign0, dt0, wt0, ck0);
+        let mut sampler = SparseYao::new(params, &b.3);
+        let mut rng = Pcg64::new(1);
+        for _ in 0..20 {
+            sampler.sweep(&corpus, &mut b.0, &mut b.1, &mut b.2, &mut b.3, &mut scratch, &mut rng);
+        }
+        let ll_yao = joint_log_likelihood(&b.1, &b.2, &b.3, params.alpha, params.beta);
+
+        let rel = (ll_dense - ll_yao).abs() / ll_dense.abs();
+        assert!(rel < 0.02, "dense={ll_dense} yao={ll_yao} rel={rel}");
+    }
+}

@@ -1,0 +1,228 @@
+//! Benchmark harness (offline substitute for `criterion`).
+//!
+//! Provides warmup + repeated timed runs with robust statistics (median,
+//! mean, p10/p90, stddev), throughput reporting, and aligned table output so
+//! every `cargo bench` target prints the rows/series of the paper table or
+//! figure it regenerates.
+
+use std::time::{Duration, Instant};
+
+/// Statistics over a set of measured runs.
+#[derive(Debug, Clone)]
+pub struct Stats {
+    pub samples: Vec<f64>, // seconds
+}
+
+impl Stats {
+    pub fn from_secs(mut samples: Vec<f64>) -> Self {
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        Stats { samples }
+    }
+
+    pub fn median(&self) -> f64 {
+        percentile(&self.samples, 50.0)
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.samples.iter().sum::<f64>() / self.samples.len() as f64
+    }
+
+    pub fn p10(&self) -> f64 {
+        percentile(&self.samples, 10.0)
+    }
+
+    pub fn p90(&self) -> f64 {
+        percentile(&self.samples, 90.0)
+    }
+
+    pub fn stddev(&self) -> f64 {
+        let m = self.mean();
+        let var = self
+            .samples
+            .iter()
+            .map(|x| (x - m) * (x - m))
+            .sum::<f64>()
+            / self.samples.len().max(1) as f64;
+        var.sqrt()
+    }
+}
+
+fn percentile(sorted: &[f64], p: f64) -> f64 {
+    if sorted.is_empty() {
+        return f64::NAN;
+    }
+    let idx = (p / 100.0 * (sorted.len() - 1) as f64).round() as usize;
+    sorted[idx.min(sorted.len() - 1)]
+}
+
+/// A single benchmark runner with warmup.
+pub struct Bencher {
+    pub warmup_runs: usize,
+    pub measured_runs: usize,
+    pub min_time: Duration,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher { warmup_runs: 1, measured_runs: 5, min_time: Duration::from_millis(10) }
+    }
+}
+
+impl Bencher {
+    pub fn quick() -> Self {
+        Bencher { warmup_runs: 1, measured_runs: 3, min_time: Duration::from_millis(1) }
+    }
+
+    /// Run `f` with warmup and return timing stats. `f` may return a value;
+    /// it is passed through a black-box sink so the optimizer cannot elide
+    /// the work.
+    pub fn run<T, F: FnMut() -> T>(&self, mut f: F) -> Stats {
+        for _ in 0..self.warmup_runs {
+            black_box(f());
+        }
+        let mut samples = Vec::with_capacity(self.measured_runs);
+        for _ in 0..self.measured_runs {
+            let t0 = Instant::now();
+            black_box(f());
+            samples.push(t0.elapsed().as_secs_f64());
+        }
+        Stats::from_secs(samples)
+    }
+}
+
+/// Optimization barrier (stable-rust equivalent of `std::hint::black_box`,
+/// which we do use — wrapped here so the call sites read uniformly).
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+/// Formats an aligned table: call `row` repeatedly, then `render`.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Self {
+        Table { headers: headers.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len(), "row width mismatch");
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn render(&self) -> String {
+        let ncol = self.headers.len();
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for c in 0..ncol {
+                widths[c] = widths[c].max(row[c].len());
+            }
+        }
+        let mut out = String::new();
+        let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+            let mut line = String::from("| ");
+            for (c, cell) in cells.iter().enumerate() {
+                line.push_str(&format!("{cell:<width$} | ", width = widths[c]));
+            }
+            line.trim_end().to_string()
+        };
+        out.push_str(&fmt_row(&self.headers, &widths));
+        out.push('\n');
+        let mut sep = String::from("|");
+        for w in &widths {
+            sep.push_str(&"-".repeat(w + 2));
+            sep.push('|');
+        }
+        out.push_str(&sep);
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &widths));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// Seconds → human string.
+pub fn fmt_secs(s: f64) -> String {
+    if s < 1e-6 {
+        format!("{:.1} ns", s * 1e9)
+    } else if s < 1e-3 {
+        format!("{:.1} µs", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.2} ms", s * 1e3)
+    } else if s < 120.0 {
+        format!("{:.2} s", s)
+    } else if s < 7200.0 {
+        format!("{:.1} min", s / 60.0)
+    } else {
+        format!("{:.2} hr", s / 3600.0)
+    }
+}
+
+/// Rate → human string, e.g. tokens/sec.
+pub fn fmt_rate(per_sec: f64, unit: &str) -> String {
+    if per_sec >= 1e9 {
+        format!("{:.2} G{unit}/s", per_sec / 1e9)
+    } else if per_sec >= 1e6 {
+        format!("{:.2} M{unit}/s", per_sec / 1e6)
+    } else if per_sec >= 1e3 {
+        format!("{:.1} K{unit}/s", per_sec / 1e3)
+    } else {
+        format!("{per_sec:.1} {unit}/s")
+    }
+}
+
+/// Standard bench header so all bench binaries look uniform.
+pub fn banner(name: &str, what: &str) {
+    println!("\n=== bench: {name} ===");
+    println!("{what}\n");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_percentiles_ordered() {
+        let s = Stats::from_secs(vec![5.0, 1.0, 3.0, 2.0, 4.0]);
+        assert_eq!(s.median(), 3.0);
+        assert!(s.p10() <= s.median() && s.median() <= s.p90());
+    }
+
+    #[test]
+    fn bencher_measures_positive_time() {
+        let b = Bencher::quick();
+        let stats = b.run(|| {
+            let mut acc = 0u64;
+            for i in 0..10_000u64 {
+                acc = acc.wrapping_add(i * i);
+            }
+            acc
+        });
+        assert!(stats.median() > 0.0);
+        assert_eq!(stats.samples.len(), 3);
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new(&["K", "time"]);
+        t.row(&["1000".into(), "2.3 hr".into()]);
+        t.row(&["10000".into(), "5.0 hr".into()]);
+        let s = t.render();
+        assert!(s.contains("| K "));
+        assert_eq!(s.lines().count(), 4);
+    }
+
+    #[test]
+    fn fmt_helpers() {
+        assert!(fmt_secs(2.5e-9).contains("ns"));
+        assert!(fmt_secs(0.002).contains("ms"));
+        assert!(fmt_secs(4000.0).contains("min"));
+        assert!(fmt_secs(9000.0).contains("hr"));
+        assert!(fmt_rate(25_000.0, "tok").contains("K"));
+    }
+}

@@ -1,0 +1,215 @@
+//! Minimal command-line argument parser (offline substitute for `clap`).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, positional arguments and
+//! subcommands. Typed accessors with helpful error messages; `--help` text is
+//! assembled from registered options.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+/// Parsed arguments: subcommand, key→value options, bare flags, positionals.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    /// Program name (argv[0] basename).
+    pub program: String,
+    /// First non-flag token, if the caller asked for subcommand parsing.
+    pub subcommand: Option<String>,
+    opts: BTreeMap<String, String>,
+    flags: Vec<String>,
+    positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse `std::env::args()`; `with_subcommand` treats the first bare
+    /// token as a subcommand name rather than a positional.
+    pub fn from_env(with_subcommand: bool) -> Args {
+        Self::parse(std::env::args().collect(), with_subcommand)
+    }
+
+    /// Parse an explicit argv (first element is the program name).
+    pub fn parse(argv: Vec<String>, with_subcommand: bool) -> Args {
+        let mut args = Args {
+            program: argv
+                .first()
+                .map(|p| {
+                    p.rsplit('/')
+                        .next()
+                        .unwrap_or(p)
+                        .to_string()
+                })
+                .unwrap_or_default(),
+            ..Default::default()
+        };
+        let mut it = argv.into_iter().skip(1).peekable();
+        while let Some(tok) = it.next() {
+            if let Some(stripped) = tok.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    args.opts.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = it.next().unwrap();
+                    args.opts.insert(stripped.to_string(), v);
+                } else {
+                    args.flags.push(stripped.to_string());
+                }
+            } else if with_subcommand && args.subcommand.is_none() {
+                args.subcommand = Some(tok);
+            } else {
+                args.positional.push(tok);
+            }
+        }
+        args
+    }
+
+    /// String option.
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.opts.get(key).map(|s| s.as_str())
+    }
+
+    /// String option with default.
+    pub fn get_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    /// Typed option; errors mention the offending key and value.
+    pub fn get_parsed<T: std::str::FromStr>(&self, key: &str) -> anyhow::Result<Option<T>> {
+        match self.get(key) {
+            None => Ok(None),
+            Some(v) => v.parse::<T>().map(Some).map_err(|_| {
+                anyhow::anyhow!("--{key}: cannot parse {v:?} as {}", std::any::type_name::<T>())
+            }),
+        }
+    }
+
+    /// Typed option with default.
+    pub fn parsed_or<T: std::str::FromStr>(&self, key: &str, default: T) -> anyhow::Result<T> {
+        Ok(self.get_parsed(key)?.unwrap_or(default))
+    }
+
+    /// Bare `--flag` (also true for `--flag=true`).
+    pub fn flag(&self, key: &str) -> bool {
+        self.flags.iter().any(|f| f == key)
+            || self.get(key).map(|v| v == "true" || v == "1").unwrap_or(false)
+    }
+
+    /// Positional arguments (after subcommand, if any).
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+
+    /// All `--key value` pairs — used to apply CLI overrides onto a Config.
+    pub fn options(&self) -> impl Iterator<Item = (&str, &str)> {
+        self.opts.iter().map(|(k, v)| (k.as_str(), v.as_str()))
+    }
+}
+
+/// Declarative help text builder.
+pub struct HelpBuilder {
+    header: String,
+    sections: Vec<(String, Vec<(String, String)>)>,
+}
+
+impl HelpBuilder {
+    pub fn new(header: &str) -> Self {
+        HelpBuilder { header: header.to_string(), sections: Vec::new() }
+    }
+
+    pub fn section(mut self, title: &str) -> Self {
+        self.sections.push((title.to_string(), Vec::new()));
+        self
+    }
+
+    pub fn entry(mut self, name: &str, desc: &str) -> Self {
+        if self.sections.is_empty() {
+            self.sections.push(("Options".to_string(), Vec::new()));
+        }
+        self.sections
+            .last_mut()
+            .unwrap()
+            .1
+            .push((name.to_string(), desc.to_string()));
+        self
+    }
+
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        let _ = writeln!(out, "{}", self.header);
+        for (title, entries) in &self.sections {
+            let _ = writeln!(out, "\n{title}:");
+            let width = entries.iter().map(|(n, _)| n.len()).max().unwrap_or(0);
+            for (name, desc) in entries {
+                let _ = writeln!(out, "  {name:<width$}  {desc}");
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &str) -> Vec<String> {
+        std::iter::once("prog".to_string())
+            .chain(s.split_whitespace().map(String::from))
+            .collect()
+    }
+
+    #[test]
+    fn parses_key_value_both_styles() {
+        let a = Args::parse(argv("--topics 100 --alpha=0.5"), false);
+        assert_eq!(a.get("topics"), Some("100"));
+        assert_eq!(a.get("alpha"), Some("0.5"));
+    }
+
+    #[test]
+    fn parses_subcommand_and_positionals() {
+        let a = Args::parse(argv("eval fig2 extra"), true);
+        assert_eq!(a.subcommand.as_deref(), Some("eval"));
+        assert_eq!(a.positional(), &["fig2".to_string(), "extra".to_string()]);
+    }
+
+    #[test]
+    fn flags_detected() {
+        let a = Args::parse(argv("--verbose --dry-run=true --quiet=0"), false);
+        assert!(a.flag("verbose"));
+        assert!(a.flag("dry-run"));
+        assert!(!a.flag("quiet"));
+        assert!(!a.flag("missing"));
+    }
+
+    #[test]
+    fn typed_parse_errors_are_descriptive() {
+        let a = Args::parse(argv("--topics ten"), false);
+        let err = a.get_parsed::<u32>("topics").unwrap_err().to_string();
+        assert!(err.contains("topics") && err.contains("ten"), "{err}");
+    }
+
+    #[test]
+    fn parsed_or_default() {
+        let a = Args::parse(argv("--x 3"), false);
+        assert_eq!(a.parsed_or("x", 0u32).unwrap(), 3);
+        assert_eq!(a.parsed_or("y", 7u32).unwrap(), 7);
+    }
+
+    #[test]
+    fn flag_followed_by_flag_not_swallowed() {
+        let a = Args::parse(argv("--a --b v"), false);
+        assert!(a.flag("a"));
+        assert_eq!(a.get("b"), Some("v"));
+    }
+
+    #[test]
+    fn help_renders_sections() {
+        let h = HelpBuilder::new("mplda — model-parallel LDA")
+            .section("Commands")
+            .entry("train", "run training")
+            .entry("eval", "reproduce a figure")
+            .render();
+        assert!(h.contains("Commands:"));
+        assert!(h.contains("train"));
+    }
+}

@@ -1,0 +1,84 @@
+//! Human-readable formatting helpers shared by CLI output, benches and
+//! experiment reports.
+
+/// Bytes → human string (binary units).
+pub fn bytes(n: u64) -> String {
+    const UNITS: [&str; 6] = ["B", "KiB", "MiB", "GiB", "TiB", "PiB"];
+    let mut x = n as f64;
+    let mut u = 0;
+    while x >= 1024.0 && u < UNITS.len() - 1 {
+        x /= 1024.0;
+        u += 1;
+    }
+    if u == 0 {
+        format!("{n} B")
+    } else {
+        format!("{x:.2} {}", UNITS[u])
+    }
+}
+
+/// Large counts → human string (decimal units), e.g. 218e9 → "218.0B".
+pub fn count(n: u64) -> String {
+    let x = n as f64;
+    if x >= 1e12 {
+        format!("{:.1}T", x / 1e12)
+    } else if x >= 1e9 {
+        format!("{:.1}B", x / 1e9)
+    } else if x >= 1e6 {
+        format!("{:.1}M", x / 1e6)
+    } else if x >= 1e3 {
+        format!("{:.1}K", x / 1e3)
+    } else {
+        format!("{n}")
+    }
+}
+
+/// Scientific notation for log-likelihood values, e.g. -2.7e9.
+pub fn sci(x: f64) -> String {
+    if x == 0.0 || !x.is_finite() {
+        return format!("{x}");
+    }
+    let exp = x.abs().log10().floor() as i32;
+    let mant = x / 10f64.powi(exp);
+    format!("{mant:.3}e{exp}")
+}
+
+/// Percentage with sign, for perf before/after deltas.
+pub fn pct_delta(before: f64, after: f64) -> String {
+    if before == 0.0 {
+        return "n/a".into();
+    }
+    let d = (after - before) / before * 100.0;
+    format!("{d:+.1}%")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bytes_units() {
+        assert_eq!(bytes(512), "512 B");
+        assert_eq!(bytes(2048), "2.00 KiB");
+        assert!(bytes(3 * 1024 * 1024 * 1024).contains("GiB"));
+    }
+
+    #[test]
+    fn count_units() {
+        assert_eq!(count(950), "950");
+        assert_eq!(count(12_500), "12.5K");
+        assert_eq!(count(218_000_000_000), "218.0B");
+    }
+
+    #[test]
+    fn sci_loglik() {
+        let s = sci(-2.7e9);
+        assert!(s.starts_with("-2.7") && s.ends_with("e9"), "{s}");
+    }
+
+    #[test]
+    fn pct() {
+        assert_eq!(pct_delta(100.0, 110.0), "+10.0%");
+        assert_eq!(pct_delta(0.0, 1.0), "n/a");
+    }
+}

@@ -1,0 +1,66 @@
+//! Tiny leveled logger wired into the `log` facade.
+//!
+//! `mplda` binaries call [`init`] once; level comes from `MPLDA_LOG`
+//! (error|warn|info|debug|trace, default info). Output goes to stderr with a
+//! monotonic timestamp so experiment logs interleave cleanly with stdout
+//! result tables.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::time::Instant;
+
+use once_cell::sync::Lazy;
+
+static START: Lazy<Instant> = Lazy::new(Instant::now);
+static INSTALLED: AtomicBool = AtomicBool::new(false);
+
+struct StderrLogger {
+    level: log::LevelFilter,
+}
+
+impl log::Log for StderrLogger {
+    fn enabled(&self, metadata: &log::Metadata) -> bool {
+        metadata.level() <= self.level
+    }
+
+    fn log(&self, record: &log::Record) {
+        if self.enabled(record.metadata()) {
+            let t = START.elapsed().as_secs_f64();
+            eprintln!(
+                "[{t:9.3}s {:5} {}] {}",
+                record.level(),
+                record.target().split("::").last().unwrap_or(""),
+                record.args()
+            );
+        }
+    }
+
+    fn flush(&self) {}
+}
+
+/// Install the logger (idempotent). Returns the active level.
+pub fn init() -> log::LevelFilter {
+    let level = match std::env::var("MPLDA_LOG").as_deref() {
+        Ok("error") => log::LevelFilter::Error,
+        Ok("warn") => log::LevelFilter::Warn,
+        Ok("debug") => log::LevelFilter::Debug,
+        Ok("trace") => log::LevelFilter::Trace,
+        Ok("off") => log::LevelFilter::Off,
+        _ => log::LevelFilter::Info,
+    };
+    if !INSTALLED.swap(true, Ordering::SeqCst) {
+        let _ = log::set_boxed_logger(Box::new(StderrLogger { level }));
+        log::set_max_level(level);
+    }
+    level
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn init_is_idempotent() {
+        let a = super::init();
+        let b = super::init();
+        assert_eq!(a, b);
+        log::info!("logger smoke test");
+    }
+}

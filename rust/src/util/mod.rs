@@ -1,0 +1,17 @@
+//! Self-contained substrates: PRNG, CLI parsing, benchmarking, property
+//! testing, logging and formatting helpers.
+//!
+//! This build runs fully offline against a small vendored crate set (no
+//! `rand`, `clap`, `criterion`, `proptest`), so the substrates those crates
+//! would normally provide are implemented here and unit-tested like any other
+//! module.
+
+pub mod rng;
+pub mod cli;
+pub mod bench;
+pub mod prop;
+pub mod logger;
+pub mod cputime;
+pub mod fmt;
+
+pub use rng::Pcg64;

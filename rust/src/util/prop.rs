@@ -1,0 +1,211 @@
+//! Mini property-testing framework (offline substitute for `proptest`).
+//!
+//! A property is a closure over a generated input; the runner executes it for
+//! `cases` random inputs and, on failure, performs greedy shrinking via the
+//! input type's `Shrink` implementation before reporting the minimal
+//! counterexample and the seed that reproduces it.
+
+use crate::util::rng::Pcg64;
+
+/// Something that can be randomly generated from a PRNG within a size budget.
+pub trait Arbitrary: Sized + Clone + std::fmt::Debug {
+    fn arbitrary(rng: &mut Pcg64, size: usize) -> Self;
+
+    /// Candidate smaller versions of `self` (tried in order). Default: none.
+    fn shrink(&self) -> Vec<Self> {
+        Vec::new()
+    }
+}
+
+impl Arbitrary for u32 {
+    fn arbitrary(rng: &mut Pcg64, size: usize) -> Self {
+        rng.next_below(size.max(1) as u64 + 1) as u32
+    }
+    fn shrink(&self) -> Vec<Self> {
+        let mut out = Vec::new();
+        if *self > 0 {
+            out.push(0);
+            out.push(self / 2);
+            out.push(self - 1);
+        }
+        out.dedup();
+        out
+    }
+}
+
+impl Arbitrary for usize {
+    fn arbitrary(rng: &mut Pcg64, size: usize) -> Self {
+        rng.index(size.max(1) + 1)
+    }
+    fn shrink(&self) -> Vec<Self> {
+        let mut out = Vec::new();
+        if *self > 0 {
+            out.push(0);
+            out.push(self / 2);
+            out.push(self - 1);
+        }
+        out.dedup();
+        out
+    }
+}
+
+impl Arbitrary for f64 {
+    fn arbitrary(rng: &mut Pcg64, _size: usize) -> Self {
+        rng.next_f64()
+    }
+    fn shrink(&self) -> Vec<Self> {
+        if *self == 0.0 {
+            Vec::new()
+        } else {
+            vec![0.0, self / 2.0]
+        }
+    }
+}
+
+impl<T: Arbitrary> Arbitrary for Vec<T> {
+    fn arbitrary(rng: &mut Pcg64, size: usize) -> Self {
+        let len = rng.index(size + 1);
+        (0..len).map(|_| T::arbitrary(rng, size)).collect()
+    }
+    fn shrink(&self) -> Vec<Self> {
+        let mut out = Vec::new();
+        if !self.is_empty() {
+            out.push(Vec::new());
+            out.push(self[..self.len() / 2].to_vec());
+            out.push(self[1..].to_vec());
+            // Shrink one element.
+            for (i, x) in self.iter().enumerate() {
+                for sx in x.shrink().into_iter().take(1) {
+                    let mut v = self.clone();
+                    v[i] = sx;
+                    out.push(v);
+                }
+            }
+        }
+        out
+    }
+}
+
+impl<A: Arbitrary, B: Arbitrary> Arbitrary for (A, B) {
+    fn arbitrary(rng: &mut Pcg64, size: usize) -> Self {
+        (A::arbitrary(rng, size), B::arbitrary(rng, size))
+    }
+    fn shrink(&self) -> Vec<Self> {
+        let mut out: Vec<Self> = self.0.shrink().into_iter().map(|a| (a, self.1.clone())).collect();
+        out.extend(self.1.shrink().into_iter().map(|b| (self.0.clone(), b)));
+        out
+    }
+}
+
+/// Property-runner configuration.
+pub struct Config {
+    pub cases: usize,
+    pub size: usize,
+    pub seed: u64,
+    pub max_shrink_steps: usize,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config { cases: 100, size: 50, seed: 0x5eed, max_shrink_steps: 200 }
+    }
+}
+
+/// Run a property; panics with the minimal counterexample on failure.
+pub fn check<T: Arbitrary, P: Fn(&T) -> bool>(cfg: &Config, name: &str, prop: P) {
+    let mut rng = Pcg64::new(cfg.seed);
+    for case in 0..cfg.cases {
+        let input = T::arbitrary(&mut rng, cfg.size);
+        if !prop(&input) {
+            let minimal = shrink_failure(input, &prop, cfg.max_shrink_steps);
+            panic!(
+                "property {name:?} failed (case {case}, seed {:#x}).\nminimal counterexample: {minimal:?}",
+                cfg.seed
+            );
+        }
+    }
+}
+
+/// Like `check` but the property returns `Result` with a reason.
+pub fn check_result<T: Arbitrary, P: Fn(&T) -> Result<(), String>>(
+    cfg: &Config,
+    name: &str,
+    prop: P,
+) {
+    let mut rng = Pcg64::new(cfg.seed);
+    for case in 0..cfg.cases {
+        let input = T::arbitrary(&mut rng, cfg.size);
+        if let Err(reason) = prop(&input) {
+            let minimal = shrink_failure(input, &|t| prop(t).is_ok(), cfg.max_shrink_steps);
+            panic!(
+                "property {name:?} failed (case {case}, seed {:#x}): {reason}\nminimal counterexample: {minimal:?}",
+                cfg.seed
+            );
+        }
+    }
+}
+
+fn shrink_failure<T: Arbitrary, P: Fn(&T) -> bool>(mut failing: T, prop: &P, max_steps: usize) -> T {
+    let mut steps = 0;
+    'outer: while steps < max_steps {
+        for candidate in failing.shrink() {
+            steps += 1;
+            if !prop(&candidate) {
+                failing = candidate;
+                continue 'outer;
+            }
+            if steps >= max_steps {
+                break 'outer;
+            }
+        }
+        break;
+    }
+    failing
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check::<Vec<u32>, _>(&Config::default(), "rev-rev-id", |v| {
+            let mut r = v.clone();
+            r.reverse();
+            r.reverse();
+            r == *v
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "minimal counterexample")]
+    fn failing_property_reports_counterexample() {
+        check::<u32, _>(&Config::default(), "all-below-10", |&x| x < 10);
+    }
+
+    #[test]
+    fn shrinking_finds_small_case() {
+        // Property: no vec contains an element > 5. Shrinker should find a
+        // small failing vector (often [6] or similar, definitely len <= 2).
+        let cfg = Config { cases: 200, size: 40, ..Default::default() };
+        let mut rng = Pcg64::new(cfg.seed);
+        let mut failing = None;
+        for _ in 0..cfg.cases {
+            let v = Vec::<u32>::arbitrary(&mut rng, cfg.size);
+            if v.iter().any(|&x| x > 5) {
+                failing = Some(v);
+                break;
+            }
+        }
+        let v = failing.expect("should generate a failing case");
+        let minimal = shrink_failure(v, &|v: &Vec<u32>| !v.iter().any(|&x| x > 5), 500);
+        assert!(minimal.len() <= 2, "minimal={minimal:?}");
+    }
+
+    #[test]
+    fn tuple_arbitrary_and_shrink() {
+        let mut rng = Pcg64::new(1);
+        let t = <(u32, Vec<u32>)>::arbitrary(&mut rng, 10);
+        let _ = t.shrink();
+    }
+}

@@ -1,0 +1,410 @@
+//! Deterministic pseudo-random number generation.
+//!
+//! PCG64 (PCG-XSL-RR 128/64, O'Neill 2014) — the same generator family numpy
+//! defaults to. Deterministic across platforms given a seed, which the whole
+//! repo relies on: every experiment is reproducible from its config seed.
+
+/// PCG-XSL-RR 128/64 generator.
+///
+/// 128-bit LCG state advanced with a fixed multiplier and a per-stream
+/// increment; output is a xor-shifted, randomly-rotated 64-bit fold.
+#[derive(Clone, Debug)]
+pub struct Pcg64 {
+    state: u128,
+    inc: u128,
+}
+
+const PCG_MULT: u128 = 0x2360ed051fc65da44385df649fccf645;
+
+impl Pcg64 {
+    /// Create a generator from a 64-bit seed (stream id fixed).
+    pub fn new(seed: u64) -> Self {
+        Self::with_stream(seed, 0xda3e39cb94b95bdb)
+    }
+
+    /// Create a generator on an explicit stream. Distinct streams are
+    /// statistically independent — used to give each simulated worker its
+    /// own generator derived from the experiment seed.
+    pub fn with_stream(seed: u64, stream: u64) -> Self {
+        // SplitMix64 expansion of the seed into 128 bits of state to avoid
+        // bad low-entropy seeds.
+        let mut sm = SplitMix64::new(seed);
+        let s0 = sm.next_u64() as u128;
+        let s1 = sm.next_u64() as u128;
+        let inc = (((stream as u128) << 64 | 0x5851f42d4c957f2d) << 1) | 1;
+        let mut rng = Pcg64 { state: (s0 << 64) | s1, inc };
+        rng.state = rng.state.wrapping_add(rng.inc);
+        rng.next_u64();
+        rng
+    }
+
+    /// Derive a child generator; `tag` distinguishes siblings.
+    pub fn fork(&mut self, tag: u64) -> Pcg64 {
+        let seed = self.next_u64() ^ tag.wrapping_mul(0x9e3779b97f4a7c15);
+        Pcg64::with_stream(seed, tag)
+    }
+
+    /// Next raw 64-bit output.
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_mul(PCG_MULT).wrapping_add(self.inc);
+        let rot = (self.state >> 122) as u32;
+        let xored = ((self.state >> 64) as u64) ^ (self.state as u64);
+        xored.rotate_right(rot)
+    }
+
+    /// Uniform in `[0, 1)` with 53 bits of mantissa.
+    #[inline]
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform in `[0, 1)` as f32.
+    #[inline]
+    pub fn next_f32(&mut self) -> f32 {
+        (self.next_u64() >> 40) as f32 * (1.0 / (1u32 << 24) as f32)
+    }
+
+    /// Uniform integer in `[0, bound)` (Lemire's multiply-shift rejection).
+    #[inline]
+    pub fn next_below(&mut self, bound: u64) -> u64 {
+        debug_assert!(bound > 0);
+        loop {
+            let x = self.next_u64();
+            let m = (x as u128).wrapping_mul(bound as u128);
+            let lo = m as u64;
+            if lo >= bound || lo >= lo.wrapping_neg() % bound {
+                return (m >> 64) as u64;
+            }
+        }
+    }
+
+    /// Uniform usize index in `[0, n)`.
+    #[inline]
+    pub fn index(&mut self, n: usize) -> usize {
+        self.next_below(n as u64) as usize
+    }
+
+    /// Sample from an unnormalized discrete distribution given its total
+    /// mass. Returns the chosen index. `O(len)` linear scan — callers on the
+    /// hot path use bucket-local scans instead (see `sampler::inverted_xy`).
+    pub fn discrete(&mut self, weights: &[f64], total: f64) -> usize {
+        debug_assert!(total > 0.0);
+        let mut u = self.next_f64() * total;
+        for (i, &w) in weights.iter().enumerate() {
+            u -= w;
+            if u <= 0.0 {
+                return i;
+            }
+        }
+        weights.len() - 1
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.index(i + 1);
+            xs.swap(i, j);
+        }
+    }
+
+    /// Symmetric-Dirichlet sample via normalized Gamma(alpha) draws
+    /// (Marsaglia–Tsang, with the alpha<1 boost). Used by the synthetic
+    /// corpus generator.
+    pub fn dirichlet(&mut self, alpha: f64, k: usize) -> Vec<f64> {
+        let mut out = vec![0.0; k];
+        let mut sum = 0.0;
+        for v in out.iter_mut() {
+            *v = self.gamma(alpha);
+            sum += *v;
+        }
+        if sum <= 0.0 {
+            // Degenerate underflow (tiny alpha): fall back to a single spike.
+            let i = self.index(k);
+            out.iter_mut().for_each(|v| *v = 0.0);
+            out[i] = 1.0;
+            return out;
+        }
+        out.iter_mut().for_each(|v| *v /= sum);
+        out
+    }
+
+    /// Gamma(shape, 1) sampler (Marsaglia–Tsang squeeze).
+    pub fn gamma(&mut self, shape: f64) -> f64 {
+        if shape < 1.0 {
+            // Boost: Gamma(a) = Gamma(a+1) * U^(1/a)
+            let u: f64 = self.next_f64().max(f64::MIN_POSITIVE);
+            return self.gamma(shape + 1.0) * u.powf(1.0 / shape);
+        }
+        let d = shape - 1.0 / 3.0;
+        let c = 1.0 / (9.0 * d).sqrt();
+        loop {
+            let x = self.normal();
+            let v = 1.0 + c * x;
+            if v <= 0.0 {
+                continue;
+            }
+            let v3 = v * v * v;
+            let u = self.next_f64();
+            if u < 1.0 - 0.0331 * x.powi(4) {
+                return d * v3;
+            }
+            if u.ln() < 0.5 * x * x + d * (1.0 - v3 + v3.ln()) {
+                return d * v3;
+            }
+        }
+    }
+
+    /// Standard normal via Box–Muller.
+    pub fn normal(&mut self) -> f64 {
+        let u1: f64 = self.next_f64().max(f64::MIN_POSITIVE);
+        let u2 = self.next_f64();
+        (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()
+    }
+
+    /// Zipf-like rank sampler over `[0, n)` with exponent `s`, via inverse
+    /// CDF on precomputed weights — see `ZipfTable` for the O(1)-per-draw
+    /// variant used by the corpus generator.
+    pub fn zipf_naive(&mut self, n: usize, s: f64) -> usize {
+        let mut total = 0.0;
+        for r in 1..=n {
+            total += (r as f64).powf(-s);
+        }
+        let mut u = self.next_f64() * total;
+        for r in 1..=n {
+            u -= (r as f64).powf(-s);
+            if u <= 0.0 {
+                return r - 1;
+            }
+        }
+        n - 1
+    }
+}
+
+/// SplitMix64 — seed expander and cheap auxiliary generator.
+#[derive(Clone, Debug)]
+pub struct SplitMix64 {
+    state: u64,
+}
+
+impl SplitMix64 {
+    pub fn new(seed: u64) -> Self {
+        SplitMix64 { state: seed }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9e3779b97f4a7c15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xbf58476d1ce4e5b9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94d049bb133111eb);
+        z ^ (z >> 31)
+    }
+}
+
+/// Alias-method table for O(1) draws from a fixed discrete distribution.
+/// Used for Zipf word marginals in the synthetic corpus generator, where a
+/// naive inverse-CDF per token would be O(V).
+#[derive(Clone, Debug)]
+pub struct AliasTable {
+    prob: Vec<f64>,
+    alias: Vec<u32>,
+}
+
+impl AliasTable {
+    /// Build from unnormalized weights (Vose's algorithm).
+    pub fn new(weights: &[f64]) -> Self {
+        let n = weights.len();
+        assert!(n > 0, "alias table over empty support");
+        let total: f64 = weights.iter().sum();
+        assert!(total > 0.0, "alias table needs positive total mass");
+        let scale = n as f64 / total;
+        let mut prob: Vec<f64> = weights.iter().map(|w| w * scale).collect();
+        let mut alias = vec![0u32; n];
+        let mut small: Vec<u32> = Vec::with_capacity(n);
+        let mut large: Vec<u32> = Vec::with_capacity(n);
+        for (i, &p) in prob.iter().enumerate() {
+            if p < 1.0 {
+                small.push(i as u32);
+            } else {
+                large.push(i as u32);
+            }
+        }
+        while let (Some(s), Some(l)) = (small.pop(), large.pop()) {
+            alias[s as usize] = l;
+            prob[l as usize] = (prob[l as usize] + prob[s as usize]) - 1.0;
+            if prob[l as usize] < 1.0 {
+                small.push(l);
+            } else {
+                large.push(l);
+            }
+        }
+        for i in large {
+            prob[i as usize] = 1.0;
+        }
+        for i in small {
+            prob[i as usize] = 1.0;
+        }
+        AliasTable { prob, alias }
+    }
+
+    /// Build an alias table for a Zipf(s) distribution over `n` ranks.
+    pub fn zipf(n: usize, s: f64) -> Self {
+        let weights: Vec<f64> = (1..=n).map(|r| (r as f64).powf(-s)).collect();
+        AliasTable::new(&weights)
+    }
+
+    /// Draw one index.
+    #[inline]
+    pub fn sample(&self, rng: &mut Pcg64) -> usize {
+        let i = rng.index(self.prob.len());
+        if rng.next_f64() < self.prob[i] {
+            i
+        } else {
+            self.alias[i] as usize
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.prob.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.prob.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mut a = Pcg64::new(42);
+        let mut b = Pcg64::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn distinct_seeds_diverge() {
+        let mut a = Pcg64::new(1);
+        let mut b = Pcg64::new(2);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert!(same < 4);
+    }
+
+    #[test]
+    fn f64_in_unit_interval() {
+        let mut rng = Pcg64::new(7);
+        for _ in 0..10_000 {
+            let x = rng.next_f64();
+            assert!((0.0..1.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn next_below_bounds_and_coverage() {
+        let mut rng = Pcg64::new(3);
+        let mut seen = [false; 10];
+        for _ in 0..10_000 {
+            let x = rng.next_below(10) as usize;
+            assert!(x < 10);
+            seen[x] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn uniform_mean_close() {
+        let mut rng = Pcg64::new(11);
+        let n = 100_000;
+        let mean: f64 = (0..n).map(|_| rng.next_f64()).sum::<f64>() / n as f64;
+        assert!((mean - 0.5).abs() < 0.01, "mean={mean}");
+    }
+
+    #[test]
+    fn discrete_respects_weights() {
+        let mut rng = Pcg64::new(5);
+        let w = [1.0, 0.0, 3.0];
+        let mut counts = [0usize; 3];
+        for _ in 0..40_000 {
+            counts[rng.discrete(&w, 4.0)] += 1;
+        }
+        assert_eq!(counts[1], 0);
+        let ratio = counts[2] as f64 / counts[0] as f64;
+        assert!((ratio - 3.0).abs() < 0.3, "ratio={ratio}");
+    }
+
+    #[test]
+    fn dirichlet_normalizes() {
+        let mut rng = Pcg64::new(9);
+        for &alpha in &[0.01, 0.1, 1.0, 10.0] {
+            let p = rng.dirichlet(alpha, 16);
+            let s: f64 = p.iter().sum();
+            assert!((s - 1.0).abs() < 1e-9, "alpha={alpha} sum={s}");
+            assert!(p.iter().all(|&x| x >= 0.0));
+        }
+    }
+
+    #[test]
+    fn gamma_mean_matches_shape() {
+        let mut rng = Pcg64::new(13);
+        let shape = 3.5;
+        let n = 50_000;
+        let mean: f64 = (0..n).map(|_| rng.gamma(shape)).sum::<f64>() / n as f64;
+        assert!((mean - shape).abs() < 0.1, "mean={mean}");
+    }
+
+    #[test]
+    fn alias_table_matches_weights() {
+        let mut rng = Pcg64::new(17);
+        let w = [5.0, 1.0, 0.0, 4.0];
+        let t = AliasTable::new(&w);
+        let mut counts = [0usize; 4];
+        for _ in 0..100_000 {
+            counts[t.sample(&mut rng)] += 1;
+        }
+        assert_eq!(counts[2], 0);
+        let total: usize = counts.iter().sum();
+        for (i, &wi) in w.iter().enumerate() {
+            let expect = wi / 10.0;
+            let got = counts[i] as f64 / total as f64;
+            assert!((got - expect).abs() < 0.01, "i={i} got={got} expect={expect}");
+        }
+    }
+
+    #[test]
+    fn alias_zipf_is_monotone_decreasing() {
+        let mut rng = Pcg64::new(19);
+        let t = AliasTable::zipf(100, 1.1);
+        let mut counts = vec![0usize; 100];
+        for _ in 0..200_000 {
+            counts[t.sample(&mut rng)] += 1;
+        }
+        // Head rank should dominate deep tail decisively.
+        assert!(counts[0] > counts[50] * 5);
+        assert!(counts[0] > counts[99] * 10);
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut rng = Pcg64::new(23);
+        let mut xs: Vec<u32> = (0..100).collect();
+        rng.shuffle(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<u32>>());
+        assert_ne!(xs, (0..100).collect::<Vec<u32>>()); // astronomically unlikely
+    }
+
+    #[test]
+    fn fork_streams_are_independent() {
+        let mut root = Pcg64::new(31);
+        let mut a = root.fork(0);
+        let mut b = root.fork(1);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert!(same < 4);
+    }
+}

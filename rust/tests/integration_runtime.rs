@@ -1,0 +1,162 @@
+//! Integration: the PJRT runtime against the rust reference — the L1→L2→L3
+//! composition proof. Requires `make artifacts`; every test skips cleanly
+//! when the artifacts directory is absent so `cargo test` works pre-build.
+
+use mplda::config::{Config, SamplerKind};
+use mplda::coordinator::Driver;
+use mplda::runtime::{ArtifactKind, ArtifactRegistry, XlaExecutor};
+use mplda::sampler::xla_dense::{MicrobatchExecutor, RustRefExecutor};
+use mplda::sampler::Params;
+use mplda::util::rng::Pcg64;
+
+fn artifacts_available() -> bool {
+    std::path::Path::new("artifacts/manifest.txt").exists()
+}
+
+#[test]
+fn registry_covers_shipped_variants() {
+    if !artifacts_available() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let reg = ArtifactRegistry::load("artifacts").unwrap();
+    for k in [16, 64, 128, 256, 1000] {
+        assert!(
+            reg.select(ArtifactKind::Gibbs, k, usize::MAX).is_ok(),
+            "missing gibbs K={k}"
+        );
+    }
+    assert!(reg.select(ArtifactKind::Marginal, 16, usize::MAX).is_ok());
+}
+
+#[test]
+fn pjrt_agrees_with_rust_reference_across_regimes() {
+    if !artifacts_available() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let params = Params::new(16, 2_000, 0.1, 0.01);
+    let mut xla = XlaExecutor::from_dir("artifacts", &params, 256).unwrap();
+    let (b, k) = (xla.batch_size(), xla.num_topics());
+    let mut rref = RustRefExecutor::new(b, k, &params);
+    let mut rng = Pcg64::new(123);
+
+    for (density, max_count) in [(0.05, 5u64), (0.3, 50), (0.9, 500)] {
+        let ct: Vec<f32> = (0..b * k)
+            .map(|_| if rng.next_f64() < density { rng.next_below(max_count) as f32 } else { 0.0 })
+            .collect();
+        let cd: Vec<f32> = (0..b * k)
+            .map(|_| if rng.next_f64() < density { rng.next_below(10) as f32 } else { 0.0 })
+            .collect();
+        let ck: Vec<f32> = (0..k).map(|_| 20.0 + rng.next_below(500) as f32).collect();
+        let u: Vec<f32> = (0..b).map(|_| rng.next_f32()).collect();
+        let zx = xla.execute(&ct, &cd, &ck, &u).unwrap();
+        let zr = rref.execute(&ct, &cd, &ck, &u).unwrap();
+        let agree = zx.iter().zip(&zr).filter(|(a, b)| a == b).count();
+        assert!(
+            agree as f64 >= 0.95 * b as f64,
+            "density {density}: agreement {agree}/{b}"
+        );
+        assert!(zx.iter().all(|&z| (z as usize) < k));
+    }
+}
+
+#[test]
+fn full_training_through_pjrt_matches_ref_executor_statistically() {
+    if !artifacts_available() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let cfg = Config::from_str(
+        r#"
+[corpus]
+preset = "tiny"
+seed = 3
+
+[train]
+topics = 16
+iterations = 3
+sampler = "xla"
+microbatch = 256
+seed = 21
+
+[coord]
+workers = 2
+
+[cluster]
+preset = "custom"
+machines = 2
+"#,
+    )
+    .unwrap();
+
+    // PJRT-backed run.
+    let mut d1 = Driver::new(&cfg).unwrap();
+    let params = d1.params;
+    let exec = XlaExecutor::from_dir("artifacts", &params, 256).unwrap();
+    let batch = exec.batch_size();
+    d1.set_executor(Box::new(exec));
+    let r1 = d1.run(3, |_, _| {}).unwrap();
+    d1.check_consistency().unwrap();
+
+    // Rust-reference run with identical batch size (identical schedule and
+    // RNG stream ⇒ identical inputs; outputs may differ only at f32 CDF
+    // ties, so final LLs must be statistically indistinguishable).
+    let mut d2 = Driver::new(&cfg).unwrap();
+    d2.set_executor(Box::new(RustRefExecutor::new(batch, 16, &params)));
+    let r2 = d2.run(3, |_, _| {}).unwrap();
+    d2.check_consistency().unwrap();
+
+    let rel = (r1.final_loglik - r2.final_loglik).abs() / r1.final_loglik.abs();
+    assert!(
+        rel < 0.01,
+        "pjrt={} ref={} rel={rel}",
+        r1.final_loglik,
+        r2.final_loglik
+    );
+}
+
+#[test]
+fn xla_and_rust_xy_backends_converge_to_same_neighbourhood() {
+    if !artifacts_available() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let base = r#"
+[corpus]
+preset = "tiny"
+seed = 3
+
+[train]
+topics = 16
+iterations = 6
+seed = 21
+
+[coord]
+workers = 2
+
+[cluster]
+preset = "custom"
+machines = 2
+"#;
+    let mut cfg_xy = Config::from_str(base).unwrap();
+    cfg_xy.train.sampler = SamplerKind::InvertedXy;
+    let mut d_xy = Driver::new(&cfg_xy).unwrap();
+    let r_xy = d_xy.run(6, |_, _| {}).unwrap();
+
+    let mut cfg_x = Config::from_str(base).unwrap();
+    cfg_x.train.sampler = SamplerKind::Xla;
+    // B=64: on a ~64K-token corpus the Jacobi freeze must stay small
+    // relative to per-word masses (see DESIGN.md §Hardware-Adaptation).
+    cfg_x.train.microbatch = 64;
+    let mut d_x = Driver::new(&cfg_x).unwrap();
+    let params = d_x.params;
+    d_x.set_executor(Box::new(XlaExecutor::from_dir("artifacts", &params, 64).unwrap()));
+    let r_x = d_x.run(6, |_, _| {}).unwrap();
+
+    // Acceptance band 5%: the Jacobi freeze leaves a small plateau bias at
+    // this corpus/batch ratio (~3% here); at E8 scale (400K tokens) the
+    // curves overlap — see EXPERIMENTS.md.
+    let rel = (r_xy.final_loglik - r_x.final_loglik).abs() / r_xy.final_loglik.abs();
+    assert!(rel < 0.05, "xy={} xla={} rel={rel}", r_xy.final_loglik, r_x.final_loglik);
+}

@@ -1,0 +1,185 @@
+//! Integration: the model-parallel driver end-to-end across presets,
+//! layouts and protocol options.
+
+use mplda::config::{CkSyncPolicy, Config, SamplerKind};
+use mplda::coordinator::Driver;
+
+fn cfg(s: &str) -> Config {
+    Config::from_str(s).unwrap()
+}
+
+fn tiny(workers: usize) -> Config {
+    cfg(&format!(
+        r#"
+[corpus]
+preset = "tiny"
+seed = 5
+
+[train]
+topics = 24
+iterations = 4
+seed = 9
+
+[coord]
+workers = {workers}
+
+[cluster]
+preset = "custom"
+machines = {workers}
+"#
+    ))
+}
+
+#[test]
+fn trains_all_presets() {
+    for preset in ["tiny", "pubmed-sim", "wiki-uni-sim", "wiki-bi-sim"] {
+        let mut c = tiny(4);
+        c.corpus.preset = preset.into();
+        c.train.iterations = 1;
+        let mut d = Driver::new(&c).unwrap();
+        let report = d.run(1, |_, _| {}).unwrap();
+        assert_eq!(report.total_tokens as usize, d.corpus.num_tokens(), "{preset}");
+        d.check_consistency().unwrap();
+    }
+}
+
+#[test]
+fn more_blocks_than_workers() {
+    let mut c = tiny(3);
+    c.coord.blocks = 7; // rectangular schedule: 7 rounds per iteration
+    let mut d = Driver::new(&c).unwrap();
+    let report = d.run(2, |_, _| {}).unwrap();
+    assert_eq!(report.total_tokens as usize, 2 * d.corpus.num_tokens());
+    d.check_consistency().unwrap();
+}
+
+#[test]
+fn ck_sync_policies_all_converge() {
+    let mut lls = Vec::new();
+    for policy in [CkSyncPolicy::PerRound, CkSyncPolicy::PerIteration, CkSyncPolicy::PerMicrobatch]
+    {
+        let mut c = tiny(4);
+        c.coord.ck_sync = policy;
+        c.train.iterations = 6;
+        let mut d = Driver::new(&c).unwrap();
+        let report = d.run(6, |_, _| {}).unwrap();
+        d.check_consistency().unwrap();
+        lls.push((policy, report.final_loglik));
+    }
+    // All policies land in the same LL neighbourhood (the §3.3 claim).
+    let best = lls.iter().map(|&(_, l)| l).fold(f64::NEG_INFINITY, f64::max);
+    for (policy, ll) in lls {
+        assert!(
+            (best - ll) / best.abs() < 0.02,
+            "{policy:?} diverged: {ll} vs best {best}"
+        );
+    }
+}
+
+#[test]
+fn prefetch_overlap_reduces_sim_time() {
+    let time = |prefetch: bool| {
+        let mut c = tiny(4);
+        c.coord.prefetch = prefetch;
+        c.cluster.bandwidth_gbps = 0.05; // make comm visible
+        let mut d = Driver::new(&c).unwrap();
+        d.run(2, |_, _| {}).unwrap().sim_time
+    };
+    let with = time(true);
+    let without = time(false);
+    assert!(with <= without, "prefetch should never be slower: {with} vs {without}");
+}
+
+#[test]
+fn serial_single_worker_equals_multi_worker_token_counts() {
+    // 1 worker vs 8 workers: same corpus, same iteration token count, and
+    // both consistent — the schedule only redistributes work.
+    let run = |workers: usize| {
+        let mut d = Driver::new(&tiny(workers)).unwrap();
+        let r = d.run(2, |_, _| {}).unwrap();
+        d.check_consistency().unwrap();
+        r.total_tokens
+    };
+    assert_eq!(run(1), run(8));
+}
+
+#[test]
+fn mean_delta_decreases_with_more_blocks() {
+    // With blocks ≫ workers, each round moves fewer tokens between totals
+    // syncs, so Δ must shrink.
+    let delta = |blocks: usize| {
+        let mut c = tiny(2);
+        c.coord.blocks = blocks;
+        let mut d = Driver::new(&c).unwrap();
+        d.run(2, |_, _| {}).unwrap();
+        d.deltas.mean_delta()
+    };
+    let coarse = delta(2);
+    let fine = delta(16);
+    assert!(fine <= coarse + 1e-9, "fine={fine} coarse={coarse}");
+}
+
+#[test]
+fn ram_enforcement_aborts_infeasible_config() {
+    let mut c = tiny(2);
+    c.cluster.ram_gib = 1e-6; // ~1 KiB per node
+    c.cluster.enforce_ram = true;
+    match Driver::new(&c) {
+        Err(e) => assert!(format!("{e:#}").contains("out of memory"), "{e:#}"),
+        Ok(mut d) => {
+            let err = d.run(1, |_, _| {}).unwrap_err();
+            assert!(format!("{err:#}").contains("out of memory"), "{err:#}");
+        }
+    }
+}
+
+#[test]
+fn run_report_series_is_well_formed() {
+    let mut d = Driver::new(&tiny(4)).unwrap();
+    let report = d.run(4, |_, _| {}).unwrap();
+    assert_eq!(report.ll_series.len(), 5); // init + 4
+    // Iterations numbered 1..=4, sim time monotone.
+    for (i, stats) in report.iters.iter().enumerate() {
+        assert_eq!(stats.iteration, i + 1);
+    }
+    for w in report.ll_series.windows(2) {
+        assert!(w[1].1 >= w[0].1, "sim time must be monotone");
+    }
+    assert!(report.peak_mem_bytes > 0);
+}
+
+#[test]
+fn uci_round_trip_trains() {
+    // Write a tiny corpus in UCI format, reload through the uci preset,
+    // and train on it.
+    let dir = std::env::temp_dir().join(format!("mplda_it_uci_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("docword.mini.txt");
+    let corpus = mplda::corpus::build(&mplda::config::CorpusConfig {
+        preset: "tiny".into(),
+        ..Default::default()
+    })
+    .unwrap();
+    mplda::corpus::bow::write_docword(&corpus, &path).unwrap();
+
+    let mut c = tiny(2);
+    c.corpus.preset = "uci".into();
+    c.corpus.path = path.to_str().unwrap().to_string();
+    let mut d = Driver::new(&c).unwrap();
+    let report = d.run(1, |_, _| {}).unwrap();
+    assert_eq!(report.total_tokens as usize, corpus.num_tokens());
+    d.check_consistency().unwrap();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn sampler_kinds_route_correctly() {
+    // dense & sparse-yao must be rejected by the MP driver with a pointer
+    // to the baseline.
+    for s in [SamplerKind::Dense, SamplerKind::SparseYao] {
+        let mut c = tiny(2);
+        c.train.sampler = s;
+        let mut d = Driver::new(&c).unwrap();
+        assert!(d.run_iteration().is_err());
+    }
+}

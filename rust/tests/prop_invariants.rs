@@ -1,0 +1,242 @@
+//! Property tests over randomized corpora and states (using the in-repo
+//! `util::prop` framework): count consistency, exact covers, wire
+//! round-trips, and sampler-protocol invariants.
+
+use mplda::corpus::partition::DataPartition;
+use mplda::corpus::synthetic::{generate, GenSpec};
+use mplda::corpus::InvertedIndex;
+use mplda::model::{wire, Assignments, BlockMap, ModelBlock, SparseRow, TopicCounts};
+use mplda::sampler::{inverted_xy, Params, Scratch};
+use mplda::util::prop::{check_result, Arbitrary, Config as PropConfig};
+use mplda::util::rng::Pcg64;
+
+/// A randomized mini-corpus description.
+#[derive(Debug, Clone)]
+struct CorpusCase {
+    vocab: usize,
+    docs: usize,
+    avg_len: usize,
+    topics: usize,
+    seed: u64,
+}
+
+impl Arbitrary for CorpusCase {
+    fn arbitrary(rng: &mut Pcg64, size: usize) -> Self {
+        let s = size.max(4);
+        CorpusCase {
+            vocab: 10 + rng.index(s * 10),
+            docs: 5 + rng.index(s * 4),
+            avg_len: 3 + rng.index(30),
+            topics: 2 + rng.index(30),
+            seed: rng.next_u64(),
+        }
+    }
+
+    fn shrink(&self) -> Vec<Self> {
+        let mut out = Vec::new();
+        if self.docs > 5 {
+            out.push(CorpusCase { docs: self.docs / 2, ..self.clone() });
+        }
+        if self.vocab > 10 {
+            out.push(CorpusCase { vocab: self.vocab / 2, ..self.clone() });
+        }
+        if self.topics > 2 {
+            out.push(CorpusCase { topics: self.topics / 2, ..self.clone() });
+        }
+        out
+    }
+}
+
+impl CorpusCase {
+    fn build(&self) -> mplda::corpus::Corpus {
+        generate(&GenSpec {
+            vocab: self.vocab,
+            docs: self.docs,
+            avg_doc_len: self.avg_len,
+            zipf_s: 1.05,
+            topics: 5,
+            alpha: 0.1,
+            seed: self.seed,
+        })
+    }
+}
+
+fn prop_cfg() -> PropConfig {
+    PropConfig { cases: 40, size: 30, seed: 0xfeed, max_shrink_steps: 60 }
+}
+
+#[test]
+fn counts_always_consistent_after_init() {
+    check_result::<CorpusCase, _>(&prop_cfg(), "init-consistency", |case| {
+        let corpus = case.build();
+        let mut rng = Pcg64::new(case.seed ^ 1);
+        let assign = Assignments::random(&corpus, case.topics, &mut rng);
+        let (dt, wt, ck) = assign.build_counts(&corpus);
+        assign.check_consistency(&corpus, &dt, &wt, &ck)?;
+        if ck.total() as usize != corpus.num_tokens() {
+            return Err("ck total != tokens".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn block_map_is_always_exact_cover() {
+    check_result::<CorpusCase, _>(&prop_cfg(), "blockmap-cover", |case| {
+        let corpus = case.build();
+        let freqs = corpus.word_frequencies();
+        for m in [1, 2, 3, 5, 8] {
+            if m > corpus.num_words() {
+                continue;
+            }
+            let map = BlockMap::balanced(&freqs, m);
+            if !map.is_exact_cover(corpus.num_words()) {
+                return Err(format!("not exact cover at m={m}"));
+            }
+            for w in 0..corpus.num_words() as u32 {
+                let b = map.block_of(w);
+                let (lo, hi) = map.range(b);
+                if !(lo..hi).contains(&w) {
+                    return Err(format!("block_of({w}) inconsistent"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn data_partition_is_always_exact_cover() {
+    check_result::<CorpusCase, _>(&prop_cfg(), "partition-cover", |case| {
+        let corpus = case.build();
+        for p in [1, 2, 7, 16] {
+            let part = DataPartition::balanced(&corpus, p);
+            if !part.is_exact_cover(corpus.num_docs()) {
+                return Err(format!("partition not exact at p={p}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn inverted_index_slots_biject_with_tokens() {
+    check_result::<CorpusCase, _>(&prop_cfg(), "index-bijection", |case| {
+        let corpus = case.build();
+        let part = DataPartition::balanced(&corpus, 3);
+        let mut covered = 0usize;
+        for shard in &part.shards {
+            let idx = InvertedIndex::build(&corpus, shard);
+            covered += idx.num_slots();
+            for (i, &w) in idx.words.iter().enumerate() {
+                for slot in idx.slots_at(i) {
+                    if corpus.docs[slot.doc as usize].tokens[slot.pos as usize] != w {
+                        return Err(format!("slot mismatch word {w}"));
+                    }
+                }
+            }
+        }
+        if covered != corpus.num_tokens() {
+            return Err(format!("slots {covered} != tokens {}", corpus.num_tokens()));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn wire_roundtrip_arbitrary_blocks() {
+    check_result::<(u32, Vec<u32>), _>(&prop_cfg(), "wire-roundtrip", |(seed, topics)| {
+        let mut rng = Pcg64::new(*seed as u64 + 7);
+        let lo = rng.next_below(1000) as u32;
+        let hi = lo + 1 + rng.next_below(64) as u32;
+        let mut b = ModelBlock::empty(*seed % 97, lo, hi);
+        for w in lo..hi {
+            for &t in topics.iter() {
+                b.row_mut(w).inc(t % 500);
+            }
+        }
+        let dec = wire::decode_block(&wire::encode_block(&b)).map_err(|e| e.to_string())?;
+        if dec != b {
+            return Err("block roundtrip mismatch".into());
+        }
+        let t = TopicCounts::from_vec(topics.iter().map(|&x| x as i64 - 8).collect());
+        let dt = wire::decode_totals(&wire::encode_totals(&t)).map_err(|e| e.to_string())?;
+        if dt != t {
+            return Err("totals roundtrip mismatch".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn sparse_row_matches_dense_shadow_under_random_ops() {
+    check_result::<Vec<u32>, _>(&prop_cfg(), "row-shadow", |ops| {
+        let k = 32;
+        let mut row = SparseRow::new();
+        let mut shadow = vec![0u32; k];
+        for &op in ops {
+            let topic = op % k as u32;
+            if op & 0x8000_0000 != 0 && shadow[topic as usize] > 0 {
+                row.dec(topic);
+                shadow[topic as usize] -= 1;
+            } else {
+                row.inc(topic);
+                shadow[topic as usize] += 1;
+            }
+        }
+        for (t, &c) in shadow.iter().enumerate() {
+            if row.get(t as u32) != c {
+                return Err(format!("row[{t}]={} shadow={c}", row.get(t as u32)));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn xy_sampler_preserves_consistency_on_random_corpora() {
+    check_result::<CorpusCase, _>(
+        &PropConfig { cases: 15, ..prop_cfg() },
+        "xy-consistency",
+        |case| {
+            let corpus = case.build();
+            let k = case.topics;
+            let mut rng = Pcg64::new(case.seed ^ 3);
+            let mut assign = Assignments::random(&corpus, k, &mut rng);
+            let (mut dt, wt, mut ck) = assign.build_counts(&corpus);
+            let m = 3.min(corpus.num_words());
+            let map = BlockMap::balanced(&corpus.word_frequencies(), m);
+            let mut blocks = Assignments::build_blocks(&wt, &map);
+            let all: Vec<u32> = (0..corpus.num_docs() as u32).collect();
+            let index = InvertedIndex::build(&corpus, &all);
+            let params = Params::new(k, corpus.num_words(), 0.1, 0.01);
+            let mut scratch = Scratch::new(k);
+            let mut n = 0;
+            for b in blocks.iter_mut() {
+                n += inverted_xy::sample_block(
+                    &corpus,
+                    &mut assign.z,
+                    &index,
+                    b,
+                    &mut dt,
+                    &mut ck,
+                    &params,
+                    &mut scratch,
+                    &mut rng,
+                );
+            }
+            if n as usize != corpus.num_tokens() {
+                return Err(format!("sampled {n} != {}", corpus.num_tokens()));
+            }
+            let mut wt2 =
+                mplda::model::WordTopicTable::zeros(corpus.num_words(), k);
+            for b in &blocks {
+                for w in b.lo..b.hi {
+                    *wt2.row_mut(w as usize) = b.row(w).clone();
+                }
+            }
+            assign.check_consistency(&corpus, &dt, &wt2, &ck)?;
+            Ok(())
+        },
+    );
+}

@@ -1,0 +1,128 @@
+//! Property tests for the rotation schedule (Algorithm 1) and the KV-store
+//! lease protocol: the two mechanisms that make model-parallelism safe.
+
+use mplda::cluster::ClusterSpec;
+use mplda::config::Config;
+use mplda::coordinator::RotationSchedule;
+use mplda::kvstore::{KvStore, ShardMap};
+use mplda::model::{ModelBlock, TopicCounts};
+use mplda::util::prop::{check_result, Arbitrary, Config as PropConfig};
+use mplda::util::rng::Pcg64;
+
+#[derive(Debug, Clone)]
+struct Layout {
+    workers: usize,
+    blocks: usize,
+}
+
+impl Arbitrary for Layout {
+    fn arbitrary(rng: &mut Pcg64, size: usize) -> Self {
+        let workers = 1 + rng.index(size.max(2));
+        let blocks = workers + rng.index(size.max(2) * 2);
+        Layout { workers, blocks }
+    }
+
+    fn shrink(&self) -> Vec<Self> {
+        let mut out = Vec::new();
+        if self.workers > 1 {
+            out.push(Layout { workers: self.workers / 2, blocks: self.blocks });
+        }
+        if self.blocks > self.workers {
+            out.push(Layout { workers: self.workers, blocks: self.blocks - 1 });
+        }
+        out
+    }
+}
+
+fn prop_cfg() -> PropConfig {
+    PropConfig { cases: 120, size: 40, seed: 0xabcd, max_shrink_steps: 80 }
+}
+
+#[test]
+fn rounds_are_always_disjoint() {
+    check_result::<Layout, _>(&prop_cfg(), "round-disjoint", |l| {
+        let s = RotationSchedule::new(l.workers, l.blocks);
+        for r in 0..s.rounds_per_iteration() {
+            if !s.round_is_disjoint(r) {
+                return Err(format!("collision in round {r} of {l:?}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn iterations_are_always_complete() {
+    check_result::<Layout, _>(&prop_cfg(), "iteration-complete", |l| {
+        let s = RotationSchedule::new(l.workers, l.blocks);
+        if !s.iteration_is_complete() {
+            return Err(format!("incomplete iteration for {l:?}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn kvstore_lease_protocol_never_double_leases() {
+    check_result::<Layout, _>(
+        &PropConfig { cases: 60, ..prop_cfg() },
+        "kv-lease-safety",
+        |l| {
+            // Simulate a full iteration of lease/commit against the schedule.
+            let machines = l.workers;
+            let cfg = Config::from_str(&format!(
+                "[cluster]\npreset = \"custom\"\nmachines = {machines}"
+            ))
+            .map_err(|e| e.to_string())?;
+            let spec = ClusterSpec::from_config(&cfg.cluster);
+            let blocks: Vec<ModelBlock> = (0..l.blocks as u32)
+                .map(|id| ModelBlock::empty(id, id * 4, (id + 1) * 4))
+                .collect();
+            let shards = ShardMap::round_robin(l.blocks, &spec);
+            let mut kv = KvStore::new(blocks, TopicCounts::zeros(4), shards);
+            let s = RotationSchedule::new(l.workers, l.blocks);
+            for round in 0..s.rounds_per_iteration() {
+                let mut held = Vec::new();
+                for w in 0..l.workers {
+                    let b = s.block_for(w, round);
+                    let blk = kv
+                        .lease_block(b, spec.worker_home(w))
+                        .map_err(|e| format!("round {round}: {e}"))?;
+                    held.push((blk, spec.worker_home(w)));
+                }
+                if kv.num_leased() != l.workers {
+                    return Err("lease count mismatch".into());
+                }
+                for (blk, machine) in held {
+                    kv.commit_block(blk, machine).map_err(|e| e.to_string())?;
+                }
+            }
+            kv.check_quiescent_consistency(4).map_err(|e| e.to_string())?;
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn schedule_visits_are_uniform_over_long_horizons() {
+    // Over W full iterations every (worker, block) pair occurs exactly W
+    // times — no drift in the modular arithmetic.
+    check_result::<Layout, _>(&PropConfig { cases: 50, ..prop_cfg() }, "visit-uniform", |l| {
+        let s = RotationSchedule::new(l.workers, l.blocks);
+        let reps = 3;
+        let mut visits = vec![vec![0usize; l.blocks]; l.workers];
+        for round in 0..s.rounds_per_iteration() * reps {
+            for w in 0..l.workers {
+                visits[w][s.block_for(w, round) as usize] += 1;
+            }
+        }
+        for w in 0..l.workers {
+            for b in 0..l.blocks {
+                if visits[w][b] != reps {
+                    return Err(format!("worker {w} block {b}: {} visits", visits[w][b]));
+                }
+            }
+        }
+        Ok(())
+    });
+}
