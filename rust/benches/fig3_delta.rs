@@ -46,7 +46,7 @@ fn main() {
             format!("{:.3e}", d.deltas.max_delta()),
             format!("{:.1}", report.final_loglik),
             mplda::util::fmt::bytes(
-                d.kv().meter().bytes_of(mplda::kvstore::traffic::TransferKind::TotalsRead),
+                d.kv().bytes_of(mplda::kvstore::traffic::TransferKind::TotalsRead),
             ),
         ]);
     }

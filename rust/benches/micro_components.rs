@@ -55,7 +55,7 @@ fn main() {
     let cfg = Config::from_str("[cluster]\npreset = \"custom\"\nmachines = 16").unwrap();
     let spec = ClusterSpec::from_config(&cfg.cluster);
     let stats = bench.run(|| {
-        let mut kv = KvStore::new(
+        let kv = KvStore::new(
             blocks.clone(),
             ck.clone(),
             ShardMap::round_robin(16, &spec),

@@ -6,6 +6,6 @@ pub mod toml;
 pub mod schema;
 
 pub use schema::{
-    BaselineConfig, BlockLayout, CkSyncPolicy, ClusterConfig, Config, CoordConfig, CorpusConfig, OutputConfig,
-    RuntimeConfig, SamplerKind, TrainConfig,
+    BaselineConfig, BlockLayout, CkSyncPolicy, ClusterConfig, Config, CoordConfig, CorpusConfig,
+    ExecutionMode, OutputConfig, RuntimeConfig, SamplerKind, TrainConfig,
 };

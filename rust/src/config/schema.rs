@@ -160,6 +160,38 @@ impl Default for TrainConfig {
     }
 }
 
+/// How a round's `(worker, block)` tasks actually execute on the host.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ExecutionMode {
+    /// Run workers one after another on the driver thread and account
+    /// wall-clock through the discrete-event cluster simulator (the
+    /// paper-figure reproduction mode; any sampler backend).
+    Simulated,
+    /// Run workers on real OS threads (`coordinator::parallel`),
+    /// exploiting round disjointness for lock-free block ownership.
+    /// Same model state bit-for-bit as `Simulated` from the same seed;
+    /// requires the `inverted-xy` sampler (the XLA executor is a single
+    /// shared device handle and stays on the driver thread).
+    Threaded,
+}
+
+impl ExecutionMode {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "simulated" | "sim" => ExecutionMode::Simulated,
+            "threaded" | "threads" => ExecutionMode::Threaded,
+            other => bail!("unknown execution mode {other:?} (simulated|threaded)"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ExecutionMode::Simulated => "simulated",
+            ExecutionMode::Threaded => "threaded",
+        }
+    }
+}
+
 /// How the vocabulary is laid out into model blocks.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum BlockLayout {
@@ -205,6 +237,11 @@ pub struct CoordConfig {
     /// Overlap communication with sampling (§3.2 "can be further
     /// accelerated"): prefetch the next round's block while sampling.
     pub prefetch: bool,
+    /// How round tasks execute on the host: `simulated` (sequential, the
+    /// paper-figure mode) or `threaded` (real OS-thread parallelism).
+    pub execution: ExecutionMode,
+    /// OS threads for `threaded` execution; 0 ⇒ one per worker.
+    pub parallelism: usize,
 }
 
 impl Default for CoordConfig {
@@ -215,6 +252,8 @@ impl Default for CoordConfig {
             block_layout: BlockLayout::Strided,
             ck_sync: CkSyncPolicy::PerRound,
             prefetch: true,
+            execution: ExecutionMode::Simulated,
+            parallelism: 0,
         }
     }
 }
@@ -424,6 +463,8 @@ impl Config {
             "coord.ck_sync" => self.coord.ck_sync = CkSyncPolicy::parse(&s(value)?)?,
             "coord.block_layout" => self.coord.block_layout = BlockLayout::parse(&s(value)?)?,
             "coord.prefetch" => self.coord.prefetch = b(value)?,
+            "coord.execution" => self.coord.execution = ExecutionMode::parse(&s(value)?)?,
+            "coord.parallelism" => self.coord.parallelism = u(value)?,
             "cluster.preset" => self.cluster.preset = s(value)?,
             "cluster.machines" => self.cluster.machines = u(value)?,
             "cluster.cores_per_machine" => self.cluster.cores_per_machine = u(value)?,
@@ -562,6 +603,21 @@ machines = 10
         assert_eq!(SamplerKind::parse("xy").unwrap(), SamplerKind::InvertedXy);
         assert_eq!(SamplerKind::parse("dense").unwrap(), SamplerKind::Dense);
         assert!(SamplerKind::parse("what").is_err());
+    }
+
+    #[test]
+    fn execution_mode_parse_and_config() {
+        assert_eq!(ExecutionMode::parse("threaded").unwrap(), ExecutionMode::Threaded);
+        assert_eq!(ExecutionMode::parse("sim").unwrap(), ExecutionMode::Simulated);
+        assert!(ExecutionMode::parse("gpu").is_err());
+        let cfg = Config::from_str(
+            "[coord]\nexecution = \"threaded\"\nparallelism = 4",
+        )
+        .unwrap();
+        assert_eq!(cfg.coord.execution, ExecutionMode::Threaded);
+        assert_eq!(cfg.coord.parallelism, 4);
+        // Default stays the paper-figure mode.
+        assert_eq!(Config::default().coord.execution, ExecutionMode::Simulated);
     }
 
     #[test]

@@ -10,8 +10,10 @@
 //!    shard-home NICs).
 //! 3. **Compute**: workers sample their shard ∩ block tokens. Work is real
 //!    and measured; worker RNG streams make results independent of
-//!    execution order, so the serial host execution is *exactly* what a
-//!    parallel cluster would compute.
+//!    execution order, so host execution — sequential
+//!    (`coord.execution = "simulated"`) or on real OS threads
+//!    (`"threaded"`, see [`super::parallel`]) — is *exactly* what a
+//!    parallel cluster would compute, bit for bit.
 //! 4. **Commit**: blocks return to the store; signed `C_k` deltas merge.
 //!    The paper's `Δ_{r,i}` is recorded here (truth vs worker snapshots).
 //! 5. **Clock**: per-worker simulated time advances by comm + compute
@@ -22,15 +24,16 @@ use anyhow::{bail, Context, Result};
 
 use crate::cluster::simclock::barrier;
 use crate::cluster::{ClusterSpec, MemCategory, MemoryAccountant, NetworkModel, SimClock};
-use crate::config::{CkSyncPolicy, Config, SamplerKind};
+use crate::config::{CkSyncPolicy, Config, ExecutionMode, SamplerKind};
 use crate::corpus::{self, Corpus, DataPartition};
 use crate::kvstore::{KvStore, ShardMap};
 use crate::metrics::{joint_log_likelihood_blocks, DeltaTracker};
-use crate::model::{Assignments, BlockMap, DocTopic, TopicCounts};
+use crate::model::{Assignments, BlockMap, DocTopic, DocView, ShardOwnership, TopicCounts};
 use crate::sampler::xla_dense::MicrobatchExecutor;
 use crate::sampler::Params;
 use crate::util::rng::Pcg64;
 
+use super::parallel;
 use super::scheduler::RotationSchedule;
 use super::timeline::{Phase, Span, Timeline};
 use super::worker::{Backend, WorkerState};
@@ -75,6 +78,9 @@ pub struct Driver {
     kv: KvStore,
     schedule: RotationSchedule,
     workers: Vec<WorkerState>,
+    /// Validated doc→worker map (shard `i` = docs of `workers[i]`), built
+    /// once — the threaded engine's per-access ownership guard.
+    doc_ownership: ShardOwnership,
     spec: ClusterSpec,
     net: NetworkModel,
     clocks: Vec<SimClock>,
@@ -148,6 +154,10 @@ impl Driver {
             })
             .collect();
 
+        let shard_refs: Vec<&[u32]> = workers.iter().map(|w| w.docs.as_slice()).collect();
+        let doc_ownership = ShardOwnership::build(&shard_refs, corpus.num_docs());
+        drop(shard_refs);
+
         let net = NetworkModel::new(&spec);
         let clocks = vec![SimClock::new(spec.node.cores, spec.node.speed); cfg.coord.workers];
         let mut mem =
@@ -177,6 +187,7 @@ impl Driver {
             kv,
             schedule,
             workers,
+            doc_ownership,
             spec,
             net,
             clocks,
@@ -209,17 +220,73 @@ impl Driver {
 
     /// Training log-likelihood from the current (quiescent) state.
     pub fn loglik(&self) -> f64 {
-        joint_log_likelihood_blocks(
-            &self.dt,
-            self.kv.resident_blocks(),
-            self.kv.totals(),
-            self.corpus.num_words(),
-            self.params.alpha,
-            self.params.beta,
-        )
+        let totals = self.kv.totals_snapshot();
+        self.kv.with_resident_blocks(|blocks| {
+            joint_log_likelihood_blocks(
+                &self.dt,
+                blocks,
+                &totals,
+                self.corpus.num_words(),
+                self.params.alpha,
+                self.params.beta,
+            )
+        })
+    }
+
+    /// FNV-1a digest of the full model state: assignments, doc–topic
+    /// counts (canonicalized), resident word–topic rows and the totals.
+    /// Two runs with bitwise-identical state produce equal digests — the
+    /// check `tests/threaded_determinism.rs` uses to assert that threaded
+    /// and simulated execution agree exactly.
+    pub fn model_digest(&self) -> u64 {
+        fn mix(h: &mut u64, x: u64) {
+            *h ^= x;
+            *h = h.wrapping_mul(0x100000001b3);
+        }
+        let mut h = 0xcbf29ce484222325u64;
+        for doc in &self.assign.z {
+            mix(&mut h, doc.len() as u64);
+            for &z in doc {
+                mix(&mut h, z as u64);
+            }
+        }
+        for d in 0..self.dt.num_docs() {
+            let counts = self.dt.doc(d);
+            mix(&mut h, counts.len() as u64);
+            // Canonical order: ties among equal counts may be permuted in
+            // the live structure without the *map* differing.
+            let mut entries: Vec<(u32, u32)> = counts.iter().collect();
+            entries.sort_unstable();
+            for (t, c) in entries {
+                mix(&mut h, ((t as u64) << 32) | c as u64);
+            }
+        }
+        self.kv.with_resident_blocks(|blocks| {
+            for b in blocks {
+                mix(&mut h, b.id as u64);
+                for row in &b.rows {
+                    let mut entries: Vec<(u32, u32)> = row.iter().collect();
+                    entries.sort_unstable();
+                    mix(&mut h, entries.len() as u64);
+                    for (t, c) in entries {
+                        mix(&mut h, ((t as u64) << 32) | c as u64);
+                    }
+                }
+            }
+        });
+        for &c in self.kv.totals_snapshot().as_slice() {
+            mix(&mut h, c as u64);
+        }
+        h
     }
 
     /// Run one full iteration (B rounds). Returns its statistics.
+    ///
+    /// The compute phase runs per `coord.execution`: `Simulated` executes
+    /// workers sequentially on the driver thread; `Threaded` hands the
+    /// round's disjoint `(worker, block)` tasks to real OS threads
+    /// ([`parallel::run_round_threaded`]). Both paths produce the same
+    /// model state bit for bit from the same seed.
     pub fn run_iteration(&mut self) -> Result<IterStats> {
         match self.cfg.train.sampler {
             SamplerKind::InvertedXy | SamplerKind::Xla => {}
@@ -229,8 +296,17 @@ impl Driver {
                 other.name()
             ),
         }
+        if self.cfg.coord.execution == ExecutionMode::Threaded
+            && self.cfg.train.sampler != SamplerKind::InvertedXy
+        {
+            bail!(
+                "threaded execution supports the inverted-xy sampler; {} runs in simulated \
+                 mode (the XLA executor is a single shared device handle)",
+                self.cfg.train.sampler.name()
+            );
+        }
         let rounds = self.schedule.rounds_per_iteration();
-        let bytes_before = self.kv.meter().total_bytes();
+        let bytes_before = self.kv.total_bytes();
         let mut tokens = 0u64;
         let mut host_secs_total = 0.0;
         let mut delta_sum = 0.0;
@@ -248,13 +324,13 @@ impl Driver {
             let mut totals_bytes_per_worker = 0u64;
             if sync_totals {
                 for w in &mut self.workers {
-                    let before = self.kv.meter().total_bytes();
+                    let before = self.kv.total_bytes();
                     let t = self.kv.read_totals(w.machine);
-                    totals_bytes_per_worker = self.kv.meter().total_bytes() - before;
+                    totals_bytes_per_worker = self.kv.total_bytes() - before;
                     w.install_totals(t);
                 }
             }
-            let _ = self.kv.meter_mut().drain_flows();
+            let _ = self.kv.drain_flows();
             let t_totals = self.net.reduce_time(totals_bytes_per_worker, self.workers.len());
 
             // ---- Phase 2: block leases -----------------------------------
@@ -263,7 +339,7 @@ impl Driver {
                 let b = self.schedule.block_for(w.id, round);
                 leased.push(self.kv.lease_block(b, w.machine)?);
             }
-            let fetch_flows = self.kv.meter_mut().drain_flows();
+            let fetch_flows = self.kv.drain_flows();
             let fetch_times = self.net.per_flow_times(&fetch_flows);
             debug_assert_eq!(fetch_times.len(), self.workers.len());
 
@@ -275,64 +351,82 @@ impl Driver {
 
             // ---- Phase 3: compute ---------------------------------------
             let mut host_secs = Vec::with_capacity(self.workers.len());
-            for (w, blk) in self.workers.iter_mut().zip(leased.iter_mut()) {
-                let mut backend = match self.cfg.train.sampler {
-                    SamplerKind::InvertedXy => Backend::InvertedXy,
-                    SamplerKind::Xla => {
-                        let exec = self
-                            .exec
-                            .as_deref_mut()
-                            .context("xla sampler selected but no executor installed")?;
-                        Backend::Xla(exec)
+            match self.cfg.coord.execution {
+                ExecutionMode::Simulated => {
+                    let mut docs = DocView::new(&mut self.assign.z, &mut self.dt);
+                    for (w, blk) in self.workers.iter_mut().zip(leased.iter_mut()) {
+                        let mut backend = match self.cfg.train.sampler {
+                            SamplerKind::InvertedXy => Backend::InvertedXy,
+                            SamplerKind::Xla => {
+                                let exec = self
+                                    .exec
+                                    .as_deref_mut()
+                                    .context("xla sampler selected but no executor installed")?;
+                                Backend::Xla(exec)
+                            }
+                            _ => unreachable!(),
+                        };
+                        let (n, secs) =
+                            w.run_round(&self.corpus, &mut docs, blk, &self.params, &mut backend)?;
+                        tokens += n;
+                        host_secs_total += secs;
+                        host_secs.push(secs);
                     }
-                    _ => unreachable!(),
-                };
-                let (n, secs) = w.run_round(
-                    &self.corpus,
-                    &mut self.assign.z,
-                    blk,
-                    &mut self.dt,
-                    &self.params,
-                    &mut backend,
-                )?;
-                tokens += n;
-                host_secs_total += secs;
-                host_secs.push(secs);
+                }
+                ExecutionMode::Threaded => {
+                    let per_worker = parallel::run_round_threaded(
+                        &self.corpus,
+                        &self.params,
+                        &mut self.workers,
+                        &mut leased,
+                        &mut self.assign.z,
+                        &mut self.dt,
+                        &self.doc_ownership,
+                        self.cfg.coord.parallelism,
+                    )?;
+                    for (n, secs) in per_worker {
+                        tokens += n;
+                        host_secs_total += secs;
+                        host_secs.push(secs);
+                    }
+                }
             }
 
             // ---- Phase 4: commits + totals merges ------------------------
             // Block commits are point-to-point to their shard homes; the
-            // C_k delta merge is the reduce half of the allreduce.
+            // C_k delta merge is the reduce half of the allreduce. Merges
+            // stay on the driver thread in worker order under both
+            // execution modes, so the totals trajectory is identical.
             let mut merge_bytes_per_worker = 0u64;
             for (w, blk) in self.workers.iter_mut().zip(leased.drain(..)) {
                 self.mem.release(w.machine, MemCategory::Model, blk.bytes());
                 self.kv.commit_block(blk, w.machine)?;
-                let before = self.kv.meter().total_bytes();
+                let before = self.kv.total_bytes();
                 let delta = w.extract_totals_delta();
                 self.kv.merge_totals_delta(&delta, w.machine);
-                merge_bytes_per_worker = self.kv.meter().total_bytes() - before;
+                merge_bytes_per_worker = self.kv.total_bytes() - before;
             }
             // Partition the recorded transfers: commit flows timed as a
             // phase, merge flows timed as a tree reduce.
             let commit_flows: Vec<crate::cluster::Flow> = self
                 .kv
-                .meter()
-                .pending()
+                .pending_transfers()
                 .iter()
                 .filter(|t| t.what == crate::kvstore::traffic::TransferKind::BlockCommit)
                 .map(|t| crate::cluster::Flow { src: t.src, dst: t.dst, bytes: t.bytes })
                 .collect();
-            let _ = self.kv.meter_mut().drain_flows();
+            let _ = self.kv.drain_flows();
             let t_commit = self.net.phase_time(&commit_flows)
                 + self.net.reduce_time(merge_bytes_per_worker, self.workers.len());
 
             // ---- Δ_{r,i}: truth vs worker snapshots (Fig 3) --------------
             let snaps: Vec<TopicCounts> = self.workers.iter().map(|w| w.ck.clone()).collect();
+            let truth = self.kv.totals_snapshot();
             let d = self.deltas.record_round(
                 self.iteration,
                 round,
                 rounds,
-                self.kv.totals(),
+                &truth,
                 &snaps,
             );
             delta_sum += d;
@@ -420,7 +514,7 @@ impl Driver {
             sim_time: self.sim_time(),
             tokens,
             mean_delta: delta_sum / rounds as f64,
-            comm_bytes: self.kv.meter().total_bytes() - bytes_before,
+            comm_bytes: self.kv.total_bytes() - bytes_before,
             host_compute_secs: host_secs_total,
         })
     }
@@ -452,7 +546,7 @@ impl Driver {
         }
         report.final_loglik = self.loglik();
         report.peak_mem_bytes = self.mem.max_peak();
-        report.total_comm_bytes = self.kv.meter().total_bytes();
+        report.total_comm_bytes = self.kv.total_bytes();
         report.sim_time = self.sim_time();
         Ok(report)
     }
@@ -468,13 +562,16 @@ impl Driver {
             self.corpus.num_words(),
             self.params.num_topics,
         );
-        for b in self.kv.resident_blocks() {
-            for (i, row) in b.rows.iter().enumerate() {
-                *wt.row_mut(b.word_at(i) as usize) = row.clone();
+        self.kv.with_resident_blocks(|blocks| {
+            for b in blocks {
+                for (i, row) in b.rows.iter().enumerate() {
+                    *wt.row_mut(b.word_at(i) as usize) = row.clone();
+                }
             }
-        }
+        });
+        let totals = self.kv.totals_snapshot();
         self.assign
-            .check_consistency(&self.corpus, &self.dt, &wt, self.kv.totals())
+            .check_consistency(&self.corpus, &self.dt, &wt, &totals)
             .map_err(|e| anyhow::anyhow!(e))
     }
 
@@ -578,6 +675,49 @@ machines = {workers}
             d.run(3, |_, _| {}).unwrap().final_loglik
         };
         assert_eq!(run(), run());
+    }
+
+    #[test]
+    fn threaded_matches_simulated_bitwise() {
+        let run = |mode: &str, parallelism: usize| {
+            let mut cfg = tiny_cfg(4, "inverted-xy");
+            cfg.coord.execution = crate::config::ExecutionMode::parse(mode).unwrap();
+            cfg.coord.parallelism = parallelism;
+            let mut d = Driver::new(&cfg).unwrap();
+            let report = d.run(3, |_, _| {}).unwrap();
+            d.check_consistency().unwrap();
+            (d.model_digest(), report.final_loglik, report.total_tokens)
+        };
+        let (dig_sim, ll_sim, tok_sim) = run("simulated", 0);
+        let (dig_thr, ll_thr, tok_thr) = run("threaded", 4);
+        assert_eq!(dig_sim, dig_thr, "model state must be bitwise identical");
+        assert_eq!(ll_sim.to_bits(), ll_thr.to_bits());
+        assert_eq!(tok_sim, tok_thr);
+        // Thread count must not matter either.
+        let (dig_2, _, _) = run("threaded", 2);
+        assert_eq!(dig_thr, dig_2);
+    }
+
+    #[test]
+    fn threaded_rejects_xla_backend() {
+        let mut cfg = tiny_cfg(2, "xla");
+        cfg.coord.execution = crate::config::ExecutionMode::Threaded;
+        let mut d = Driver::new(&cfg).unwrap();
+        let params = d.params;
+        d.set_executor(Box::new(crate::sampler::xla_dense::RustRefExecutor::new(
+            64, 16, &params,
+        )));
+        let err = d.run_iteration().unwrap_err().to_string();
+        assert!(err.contains("threaded execution"), "{err}");
+    }
+
+    #[test]
+    fn model_digest_tracks_state_changes() {
+        let mut d = Driver::new(&tiny_cfg(2, "inverted-xy")).unwrap();
+        let d0 = d.model_digest();
+        assert_eq!(d0, d.model_digest(), "digest must be a pure function");
+        d.run_iteration().unwrap();
+        assert_ne!(d0, d.model_digest(), "sampling must change the digest");
     }
 
     #[test]

@@ -7,13 +7,18 @@
 //! * [`driver`] — ties scheduler, workers, the KV-store, the network model
 //!   and the simulated clocks into the round/iteration loop, collecting the
 //!   convergence/Δ/traffic/memory series the experiments report.
+//! * [`parallel`] — the threaded execution engine: runs a round's
+//!   `(worker, block)` tasks on real OS threads, lock-free by round
+//!   disjointness (`coord.execution = "threaded"`).
 
 pub mod scheduler;
 pub mod worker;
 pub mod driver;
+pub mod parallel;
 pub mod timeline;
 
 pub use driver::{Driver, IterStats, TrainReport};
+pub use parallel::run_round_threaded;
 pub use scheduler::RotationSchedule;
 pub use timeline::{Phase, Timeline};
 pub use worker::WorkerState;

@@ -1,0 +1,238 @@
+//! The threaded round execution engine: Algorithm 1's concurrency claim,
+//! made real.
+//!
+//! The rotation schedule guarantees that within a round no two workers
+//! hold the same model block (`scheduler`, property-tested in
+//! `tests/prop_scheduler.rs`), and the data partition guarantees no two
+//! workers own the same document (`corpus::partition`). Those two
+//! disjointness facts mean a round's `(worker, block)` tasks share **no
+//! mutable state**: each task exclusively owns its leased [`ModelBlock`],
+//! its shard's rows of the assignment/doc–topic state (via
+//! [`DocView::split_disjoint`] over a [`ShardOwnership`] map validated
+//! once per run), and its private `C_k` snapshot and RNG stream. So the
+//! engine can run them on plain OS threads with **no locks on the hot
+//! path** — the same CPU-bound worker-pool design as LightLDA and
+//! Peacock.
+//!
+//! Determinism: per-worker RNG streams and private `C_k` snapshots make a
+//! round's result independent of execution order (the commutation test in
+//! `sampler::inverted_xy`), so threaded execution produces **bitwise
+//! identical** model state to the sequential path from the same seed —
+//! asserted by `tests/threaded_determinism.rs` and the tests below. The
+//! round barrier is the `thread::scope` join; `C_k` delta merges and block
+//! commits stay on the driver thread in worker order, exactly as in
+//! simulated mode.
+
+use anyhow::{anyhow, Result};
+
+use crate::corpus::Corpus;
+use crate::model::{DocTopic, DocView, ModelBlock, ShardOwnership};
+use crate::sampler::Params;
+
+use super::worker::{Backend, WorkerState};
+
+/// Run one round's tasks on up to `parallelism` OS threads
+/// (`0` ⇒ one thread per worker). `blocks[i]` must be the block leased to
+/// `workers[i]` this round, and `ownership` the validated doc→shard map
+/// built once from the same partition (`ownership` shard `i` = docs of
+/// `workers[i]`). Returns `(tokens, host_cpu_secs)` per worker, indexed by
+/// position in `workers`.
+///
+/// Only the `inverted-xy` backend runs here: it is pure CPU-owned state.
+/// The XLA backend's executor is one shared device handle, so the driver
+/// keeps it on the sequential path.
+pub fn run_round_threaded(
+    corpus: &Corpus,
+    params: &Params,
+    workers: &mut [WorkerState],
+    blocks: &mut [ModelBlock],
+    z: &mut [Vec<u32>],
+    dt: &mut DocTopic,
+    ownership: &ShardOwnership,
+    parallelism: usize,
+) -> Result<Vec<(u64, f64)>> {
+    assert_eq!(workers.len(), blocks.len(), "one leased block per worker");
+    assert_eq!(ownership.num_shards(), workers.len(), "one ownership shard per worker");
+    let n = workers.len();
+    if n == 0 {
+        return Ok(Vec::new());
+    }
+
+    // Disjoint views of the shared per-document state — `ownership`
+    // already proved the shards disjoint at construction, and every row
+    // access re-checks its owner in O(1), release builds included.
+    let views = DocView::split_disjoint(z, dt, ownership);
+
+    let mut items: Vec<(usize, &mut WorkerState, &mut ModelBlock, DocView<'_>)> = workers
+        .iter_mut()
+        .zip(blocks.iter_mut())
+        .zip(views)
+        .enumerate()
+        .map(|(i, ((w, b), v))| (i, w, b, v))
+        .collect();
+
+    let threads = if parallelism == 0 { n } else { parallelism.clamp(1, n) };
+    let chunk = items.len().div_ceil(threads);
+
+    let mut results = vec![(0u64, 0.0f64); n];
+    std::thread::scope(|scope| -> Result<()> {
+        let mut handles = Vec::with_capacity(threads);
+        for chunk_items in items.chunks_mut(chunk) {
+            handles.push(scope.spawn(move || -> Result<Vec<(usize, u64, f64)>> {
+                let mut out = Vec::with_capacity(chunk_items.len());
+                for (i, w, b, v) in chunk_items.iter_mut() {
+                    let mut backend = Backend::InvertedXy;
+                    let (tokens, secs) =
+                        w.run_round(corpus, v, &mut **b, params, &mut backend)?;
+                    out.push((*i, tokens, secs));
+                }
+                Ok(out)
+            }));
+        }
+        for h in handles {
+            let per = h.join().map_err(|_| anyhow!("worker thread panicked"))??;
+            for (i, tokens, secs) in per {
+                results[i] = (tokens, secs);
+            }
+        }
+        Ok(())
+    })?;
+    Ok(results)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::corpus::partition::DataPartition;
+    use crate::corpus::synthetic::{generate, GenSpec};
+    use crate::model::{Assignments, BlockMap, TopicCounts};
+    use crate::util::rng::Pcg64;
+
+    struct Fixture {
+        corpus: Corpus,
+        assign: Assignments,
+        dt: DocTopic,
+        blocks: Vec<ModelBlock>,
+        workers: Vec<WorkerState>,
+        own: ShardOwnership,
+        params: Params,
+    }
+
+    fn fixture(seed: u64, num_workers: usize, k: usize) -> Fixture {
+        let corpus = generate(&GenSpec {
+            vocab: 200,
+            docs: 90,
+            avg_doc_len: 22,
+            zipf_s: 1.05,
+            topics: 6,
+            alpha: 0.1,
+            seed,
+        });
+        let mut rng = Pcg64::new(seed ^ 0x5eed);
+        let assign = Assignments::random(&corpus, k, &mut rng);
+        let (dt, wt, ck) = assign.build_counts(&corpus);
+        let map = BlockMap::strided(corpus.num_words(), num_workers);
+        let blocks = Assignments::build_blocks(&wt, &map);
+        let part = DataPartition::balanced(&corpus, num_workers);
+        let workers: Vec<WorkerState> = (0..num_workers)
+            .map(|w| {
+                let mut ws =
+                    WorkerState::new(w, w, part.shards[w].clone(), &corpus, k, seed);
+                ws.install_totals(ck.clone());
+                ws
+            })
+            .collect();
+        let shard_refs: Vec<&[u32]> = part.shards.iter().map(|s| s.as_slice()).collect();
+        let own = ShardOwnership::build(&shard_refs, corpus.num_docs());
+        let params = Params::new(k, corpus.num_words(), 0.1, 0.01);
+        Fixture { corpus, assign, dt, blocks, workers, own, params }
+    }
+
+    /// Sequential reference for one round over the same worker/block zip.
+    fn run_round_sequential(fx: &mut Fixture) -> Vec<(u64, f64)> {
+        let mut docs = DocView::new(&mut fx.assign.z, &mut fx.dt);
+        let mut out = Vec::new();
+        for (w, b) in fx.workers.iter_mut().zip(fx.blocks.iter_mut()) {
+            let mut backend = Backend::InvertedXy;
+            let (tokens, secs) =
+                w.run_round(&fx.corpus, &mut docs, b, &fx.params, &mut backend).unwrap();
+            out.push((tokens, secs));
+        }
+        out
+    }
+
+    fn digest(fx: &Fixture) -> (Vec<Vec<u32>>, Vec<ModelBlock>, Vec<TopicCounts>) {
+        (
+            fx.assign.z.clone(),
+            fx.blocks.clone(),
+            fx.workers.iter().map(|w| w.ck.clone()).collect(),
+        )
+    }
+
+    #[test]
+    fn threaded_round_is_bitwise_identical_to_sequential() {
+        let mut seq = fixture(7, 4, 12);
+        let mut thr = fixture(7, 4, 12);
+        let seq_tokens: u64 = run_round_sequential(&mut seq).iter().map(|r| r.0).sum();
+        let res = run_round_threaded(
+            &thr.corpus,
+            &thr.params,
+            &mut thr.workers,
+            &mut thr.blocks,
+            &mut thr.assign.z,
+            &mut thr.dt,
+            &thr.own,
+            4,
+        )
+        .unwrap();
+        let thr_tokens: u64 = res.iter().map(|r| r.0).sum();
+        assert_eq!(seq_tokens, thr_tokens);
+        assert_eq!(digest(&seq), digest(&thr));
+        assert_eq!(seq.dt.docs, thr.dt.docs);
+    }
+
+    #[test]
+    fn thread_count_does_not_change_results() {
+        // 1, 2, and capped-above-worker-count threads: all identical.
+        let runs: Vec<_> = [1usize, 2, 16]
+            .into_iter()
+            .map(|threads| {
+                let mut fx = fixture(11, 3, 8);
+                run_round_threaded(
+                    &fx.corpus,
+                    &fx.params,
+                    &mut fx.workers,
+                    &mut fx.blocks,
+                    &mut fx.assign.z,
+                    &mut fx.dt,
+                    &fx.own,
+                    threads,
+                )
+                .unwrap();
+                digest(&fx)
+            })
+            .collect();
+        assert_eq!(runs[0], runs[1]);
+        assert_eq!(runs[1], runs[2]);
+    }
+
+    #[test]
+    fn results_are_indexed_by_worker_position() {
+        let mut fx = fixture(23, 5, 8);
+        let res = run_round_threaded(
+            &fx.corpus,
+            &fx.params,
+            &mut fx.workers,
+            &mut fx.blocks,
+            &mut fx.assign.z,
+            &mut fx.dt,
+            &fx.own,
+            2,
+        )
+        .unwrap();
+        assert_eq!(res.len(), 5);
+        for (w, (tokens, _)) in fx.workers.iter().zip(res.iter()) {
+            assert_eq!(w.tokens_sampled, *tokens, "worker {}", w.id);
+        }
+    }
+}

@@ -20,7 +20,7 @@
 use anyhow::Result;
 
 use crate::corpus::{Corpus, InvertedIndex};
-use crate::model::{DocTopic, ModelBlock, TopicCounts};
+use crate::model::{DocView, ModelBlock, TopicCounts};
 use crate::sampler::xla_dense::MicrobatchExecutor;
 use crate::sampler::{inverted_xy, xla_dense, Params, Scratch};
 use crate::util::rng::Pcg64;
@@ -93,12 +93,17 @@ impl WorkerState {
 
     /// Run one round over the leased block: sample every token of the
     /// shard whose word lies in the block. Returns (tokens, host-seconds).
+    ///
+    /// `docs` is a view of the global per-document state; this worker only
+    /// touches its own shard's rows (its inverted index covers nothing
+    /// else), so the threaded engine can pass disjoint views to workers
+    /// running concurrently. Host seconds are thread CPU time, so the
+    /// measurement is identical under sequential and threaded execution.
     pub fn run_round(
         &mut self,
         corpus: &Corpus,
-        assign_z: &mut [Vec<u32>],
+        docs: &mut DocView<'_>,
         block: &mut ModelBlock,
-        dt: &mut DocTopic,
         params: &Params,
         backend: &mut Backend<'_>,
     ) -> Result<(u64, f64)> {
@@ -106,10 +111,9 @@ impl WorkerState {
         let tokens = match backend {
             Backend::InvertedXy => inverted_xy::sample_block(
                 corpus,
-                assign_z,
+                docs,
                 &self.index,
                 block,
-                dt,
                 &mut self.ck,
                 params,
                 &mut self.scratch,
@@ -117,10 +121,9 @@ impl WorkerState {
             ),
             Backend::Xla(exec) => xla_dense::sample_block_microbatch(
                 corpus,
-                assign_z,
+                docs,
                 &self.index,
                 block,
-                dt,
                 &mut self.ck,
                 params,
                 *exec,
@@ -146,7 +149,7 @@ mod tests {
     use super::*;
     use crate::corpus::partition::DataPartition;
     use crate::corpus::synthetic::{generate, GenSpec};
-    use crate::model::{Assignments, BlockMap};
+    use crate::model::{Assignments, BlockMap, DocTopic};
 
     fn setup() -> (Corpus, Assignments, DocTopic, Vec<ModelBlock>, TopicCounts, Params) {
         let corpus = generate(&GenSpec {
@@ -185,8 +188,9 @@ mod tests {
                     .count()
             })
             .sum();
+        let mut docs = DocView::new(&mut assign.z, &mut dt);
         let (n, secs) = w
-            .run_round(&corpus, &mut assign.z, block, &mut dt, &params, &mut Backend::InvertedXy)
+            .run_round(&corpus, &mut docs, block, &params, &mut Backend::InvertedXy)
             .unwrap();
         assert_eq!(n as usize, expect);
         assert!(secs >= 0.0);
@@ -200,7 +204,8 @@ mod tests {
         let mut w = WorkerState::new(0, 0, part.shards[0].clone(), &corpus, 8, 42);
         let before = ck.clone();
         w.install_totals(ck);
-        w.run_round(&corpus, &mut assign.z, &mut blocks[0], &mut dt, &params, &mut Backend::InvertedXy)
+        let mut docs = DocView::new(&mut assign.z, &mut dt);
+        w.run_round(&corpus, &mut docs, &mut blocks[0], &params, &mut Backend::InvertedXy)
             .unwrap();
         let delta = w.extract_totals_delta();
         // Delta sums to zero (tokens moved, not created).

@@ -10,137 +10,217 @@
 //! * [`KvStore::read_totals`] / [`KvStore::merge_totals_delta`] — the §3.3
 //!   relaxed-consistency channel for `C_k`: snapshot at round start, merge
 //!   signed deltas at round end.
+//!
+//! ## Concurrency
+//!
+//! The store is **shard-locked**: every method takes `&self`, and state is
+//! split into one mutex per shard-home machine plus one for the totals and
+//! one for the traffic meter. Leases and commits of blocks homed on
+//! different machines therefore never serialize — which is exactly the
+//! contention profile of the paper's distributed hash table (§3.2), where
+//! each machine serves its own shard independently. The threaded execution
+//! engine (`coordinator::parallel`) relies on this, and so can any future
+//! prefetch thread (§3.2 "can be further accelerated").
 
 use std::collections::BTreeMap;
+use std::sync::{Mutex, MutexGuard};
 
 use anyhow::{bail, Context, Result};
 
+use crate::cluster::Flow;
 use crate::model::wire;
 use crate::model::{ModelBlock, TopicCounts};
 
 use super::shard::ShardMap;
-use super::traffic::{TrafficMeter, TransferKind};
+use super::traffic::{Transfer, TrafficMeter, TransferKind};
+
+/// Per-machine shard state: blocks at home, plus the lease ledger for
+/// blocks this machine is responsible for.
+#[derive(Default)]
+struct MachineShard {
+    /// Blocks currently resident (not leased), by id.
+    resident: BTreeMap<u32, ModelBlock>,
+    /// Holder machine of each leased block.
+    leased_to: BTreeMap<u32, usize>,
+}
 
 /// Sharded in-memory store of model blocks + topic totals.
 pub struct KvStore {
     shards: ShardMap,
-    /// Blocks currently resident (not leased), by id.
-    resident: BTreeMap<u32, ModelBlock>,
-    /// Holder of each leased block.
-    leased_to: BTreeMap<u32, usize>,
+    /// One lock per shard-home machine (index = machine id).
+    slots: Vec<Mutex<MachineShard>>,
     /// Authoritative topic totals (machine hosting it = totals_home).
-    totals: TopicCounts,
+    totals: Mutex<TopicCounts>,
     totals_home: usize,
-    meter: TrafficMeter,
+    meter: Mutex<TrafficMeter>,
 }
 
 impl KvStore {
     /// Build from the initial blocks and totals.
     pub fn new(blocks: Vec<ModelBlock>, totals: TopicCounts, shards: ShardMap) -> KvStore {
         assert_eq!(blocks.len(), shards.num_blocks());
-        let resident = blocks.into_iter().map(|b| (b.id, b)).collect();
+        let machines = (0..shards.num_blocks())
+            .map(|b| shards.home(b) + 1)
+            .max()
+            .unwrap_or(1);
+        let mut slots: Vec<Mutex<MachineShard>> = Vec::with_capacity(machines);
+        for _ in 0..machines {
+            slots.push(Mutex::new(MachineShard::default()));
+        }
+        for b in blocks {
+            let home = shards.home(b.id as usize);
+            slots[home].get_mut().unwrap().resident.insert(b.id, b);
+        }
         KvStore {
             shards,
-            resident,
-            leased_to: BTreeMap::new(),
-            totals,
+            slots,
+            totals: Mutex::new(totals),
             totals_home: 0,
-            meter: TrafficMeter::new(),
+            meter: Mutex::new(TrafficMeter::new()),
         }
+    }
+
+    fn slot(&self, block: u32) -> MutexGuard<'_, MachineShard> {
+        self.slots[self.shards.home(block as usize)]
+            .lock()
+            .expect("kv shard lock poisoned")
     }
 
     /// Lease block `id` to a worker on `worker_machine`. Records the fetch
     /// flow `home(id) → worker_machine` sized by the block's wire encoding.
-    pub fn lease_block(&mut self, id: u32, worker_machine: usize) -> Result<ModelBlock> {
-        if let Some(&holder) = self.leased_to.get(&id) {
-            bail!("protocol violation: block {id} already leased to machine {holder}");
-        }
-        let block = self
-            .resident
-            .remove(&id)
-            .with_context(|| format!("block {id} not in store"))?;
+    pub fn lease_block(&self, id: u32, worker_machine: usize) -> Result<ModelBlock> {
+        let block = {
+            let mut slot = self.slot(id);
+            if let Some(&holder) = slot.leased_to.get(&id) {
+                bail!("protocol violation: block {id} already leased to machine {holder}");
+            }
+            let block = slot
+                .resident
+                .remove(&id)
+                .with_context(|| format!("block {id} not in store"))?;
+            slot.leased_to.insert(id, worker_machine);
+            block
+        };
         let bytes = wire::encode_block(&block).len() as u64;
-        self.meter.record(
+        self.meter.lock().expect("kv meter lock poisoned").record(
             self.shards.home(id as usize),
             worker_machine,
             bytes,
             TransferKind::BlockFetch,
         );
-        self.leased_to.insert(id, worker_machine);
         Ok(block)
     }
 
     /// Commit a leased block back. Records the commit flow.
-    pub fn commit_block(&mut self, block: ModelBlock, worker_machine: usize) -> Result<()> {
-        match self.leased_to.remove(&block.id) {
-            None => bail!("protocol violation: commit of unleased block {}", block.id),
-            Some(holder) if holder != worker_machine => {
-                bail!(
-                    "protocol violation: block {} leased to machine {holder}, committed from {worker_machine}",
-                    block.id
-                );
-            }
-            Some(_) => {}
-        }
+    pub fn commit_block(&self, block: ModelBlock, worker_machine: usize) -> Result<()> {
+        let id = block.id;
         let bytes = wire::encode_block(&block).len() as u64;
-        self.meter.record(
+        {
+            let mut slot = self.slot(id);
+            match slot.leased_to.remove(&id) {
+                None => bail!("protocol violation: commit of unleased block {id}"),
+                Some(holder) if holder != worker_machine => {
+                    // Restore the ledger before erroring so the store stays
+                    // inspectable.
+                    slot.leased_to.insert(id, holder);
+                    bail!(
+                        "protocol violation: block {id} leased to machine {holder}, committed from {worker_machine}"
+                    );
+                }
+                Some(_) => {}
+            }
+            slot.resident.insert(id, block);
+        }
+        self.meter.lock().expect("kv meter lock poisoned").record(
             worker_machine,
-            self.shards.home(block.id as usize),
+            self.shards.home(id as usize),
             bytes,
             TransferKind::BlockCommit,
         );
-        self.resident.insert(block.id, block);
         Ok(())
     }
 
     /// Snapshot the topic totals (round-start sync of §3.3).
-    pub fn read_totals(&mut self, worker_machine: usize) -> TopicCounts {
-        let bytes = wire::encode_totals(&self.totals).len() as u64;
-        self.meter
-            .record(self.totals_home, worker_machine, bytes, TransferKind::TotalsRead);
-        self.totals.clone()
+    pub fn read_totals(&self, worker_machine: usize) -> TopicCounts {
+        let snapshot = self.totals.lock().expect("kv totals lock poisoned").clone();
+        let bytes = wire::encode_totals(&snapshot).len() as u64;
+        self.meter.lock().expect("kv meter lock poisoned").record(
+            self.totals_home,
+            worker_machine,
+            bytes,
+            TransferKind::TotalsRead,
+        );
+        snapshot
     }
 
     /// Merge a worker's signed `C_k` delta (round-end).
-    pub fn merge_totals_delta(&mut self, delta: &TopicCounts, worker_machine: usize) {
+    pub fn merge_totals_delta(&self, delta: &TopicCounts, worker_machine: usize) {
         let bytes = wire::encode_totals(delta).len() as u64;
-        self.meter
-            .record(worker_machine, self.totals_home, bytes, TransferKind::PsSync);
-        // Classified as TotalsMerge for reporting:
-        self.meter.record(worker_machine, self.totals_home, 0, TransferKind::TotalsMerge);
-        self.totals.merge(delta);
+        {
+            let mut meter = self.meter.lock().expect("kv meter lock poisoned");
+            meter.record(worker_machine, self.totals_home, bytes, TransferKind::PsSync);
+            // Classified as TotalsMerge for reporting:
+            meter.record(worker_machine, self.totals_home, 0, TransferKind::TotalsMerge);
+        }
+        self.totals.lock().expect("kv totals lock poisoned").merge(delta);
     }
 
-    /// Authoritative totals (truth `T` of the Fig 3 metric).
-    pub fn totals(&self) -> &TopicCounts {
-        &self.totals
+    /// Clone of the authoritative totals (truth `T` of the Fig 3 metric).
+    pub fn totals_snapshot(&self) -> TopicCounts {
+        self.totals.lock().expect("kv totals lock poisoned").clone()
     }
 
     /// Number of blocks currently leased out.
     pub fn num_leased(&self) -> usize {
-        self.leased_to.len()
+        self.slots
+            .iter()
+            .map(|s| s.lock().expect("kv shard lock poisoned").leased_to.len())
+            .sum()
     }
 
-    /// Traffic meter access (drained by the coordinator for timing).
-    pub fn meter_mut(&mut self) -> &mut TrafficMeter {
-        &mut self.meter
+    /// Total bytes moved so far (all transfer kinds).
+    pub fn total_bytes(&self) -> u64 {
+        self.meter.lock().expect("kv meter lock poisoned").total_bytes()
     }
 
-    pub fn meter(&self) -> &TrafficMeter {
-        &self.meter
+    /// Bytes moved so far for one transfer kind.
+    pub fn bytes_of(&self, kind: TransferKind) -> u64 {
+        self.meter.lock().expect("kv meter lock poisoned").bytes_of(kind)
     }
 
-    /// Resident (non-leased) blocks — the quiescent model view used by the
-    /// driver's log-likelihood pass.
-    pub fn resident_blocks(&self) -> impl Iterator<Item = &ModelBlock> {
-        self.resident.values()
+    /// Take the pending transfers (for a phase's network timing) as flows.
+    pub fn drain_flows(&self) -> Vec<Flow> {
+        self.meter.lock().expect("kv meter lock poisoned").drain_flows()
+    }
+
+    /// Snapshot of the pending (un-drained) transfers.
+    pub fn pending_transfers(&self) -> Vec<Transfer> {
+        self.meter.lock().expect("kv meter lock poisoned").pending().to_vec()
+    }
+
+    /// Visit every resident (non-leased) block — the quiescent model view
+    /// used by the driver's log-likelihood pass. The visitor runs with all
+    /// shard locks held; iteration order is (home machine, block id).
+    pub fn with_resident_blocks<R>(
+        &self,
+        f: impl FnOnce(&mut dyn Iterator<Item = &ModelBlock>) -> R,
+    ) -> R {
+        let guards: Vec<MutexGuard<'_, MachineShard>> = self
+            .slots
+            .iter()
+            .map(|s| s.lock().expect("kv shard lock poisoned"))
+            .collect();
+        let mut it = guards.iter().flat_map(|g| g.resident.values());
+        f(&mut it)
     }
 
     /// Bytes of shard storage on each machine (memory accounting).
     pub fn shard_bytes(&self, machines: usize) -> Vec<u64> {
         let mut per = vec![0u64; machines];
-        for (id, b) in &self.resident {
-            per[self.shards.home(*id as usize)] += b.bytes();
+        for (home, slot) in self.slots.iter().enumerate() {
+            let slot = slot.lock().expect("kv shard lock poisoned");
+            let bytes: u64 = slot.resident.values().map(|b| b.bytes()).sum();
+            per[home] += bytes;
         }
         per
     }
@@ -149,19 +229,23 @@ impl KvStore {
     /// leased; totals match the column sums of resident blocks only if
     /// nothing is leased.
     pub fn check_quiescent_consistency(&self, num_topics: usize) -> Result<()> {
-        if !self.leased_to.is_empty() {
-            bail!("store not quiescent: {} blocks leased", self.leased_to.len());
+        let leased = self.num_leased();
+        if leased != 0 {
+            bail!("store not quiescent: {leased} blocks leased");
         }
         let mut sums = vec![0i64; num_topics];
-        for b in self.resident.values() {
-            for (k, s) in b.column_sums(num_topics).into_iter().enumerate() {
-                sums[k] += s;
+        self.with_resident_blocks(|blocks| {
+            for b in blocks {
+                for (k, s) in b.column_sums(num_topics).into_iter().enumerate() {
+                    sums[k] += s;
+                }
             }
-        }
-        if sums != self.totals.as_slice() {
+        });
+        let totals = self.totals_snapshot();
+        if sums != totals.as_slice() {
             bail!(
                 "totals out of sync with blocks: blocks={sums:?} totals={:?}",
-                self.totals.as_slice()
+                totals.as_slice()
             );
         }
         Ok(())
@@ -203,18 +287,18 @@ mod tests {
 
     #[test]
     fn lease_commit_cycle() {
-        let mut kv = setup(4, 2);
+        let kv = setup(4, 2);
         let b = kv.lease_block(2, 1).unwrap();
         assert_eq!(kv.num_leased(), 1);
         kv.commit_block(b, 1).unwrap();
         assert_eq!(kv.num_leased(), 0);
         kv.check_quiescent_consistency(8).unwrap();
-        assert!(kv.meter().total_bytes() > 0);
+        assert!(kv.total_bytes() > 0);
     }
 
     #[test]
     fn double_lease_rejected() {
-        let mut kv = setup(4, 2);
+        let kv = setup(4, 2);
         let _b = kv.lease_block(0, 0).unwrap();
         let err = kv.lease_block(0, 1).unwrap_err().to_string();
         assert!(err.contains("already leased"), "{err}");
@@ -222,33 +306,36 @@ mod tests {
 
     #[test]
     fn commit_from_wrong_machine_rejected() {
-        let mut kv = setup(4, 2);
+        let kv = setup(4, 2);
         let b = kv.lease_block(0, 0).unwrap();
         assert!(kv.commit_block(b, 1).is_err());
+        // Ledger intact: the lease is still attributed to machine 0.
+        assert_eq!(kv.num_leased(), 1);
     }
 
     #[test]
     fn commit_unleased_rejected() {
-        let mut kv = setup(4, 2);
+        let kv = setup(4, 2);
         let b = ModelBlock::empty(0, 0, 10);
         assert!(kv.commit_block(b, 0).is_err());
     }
 
     #[test]
     fn totals_round_trip() {
-        let mut kv = setup(2, 2);
+        let kv = setup(2, 2);
         let snap = kv.read_totals(1);
         let mut delta = TopicCounts::zeros(8);
         delta.inc(3);
         delta.dec(0);
         kv.merge_totals_delta(&delta, 1);
-        assert_eq!(kv.totals().get(3), snap.get(3) + 1);
-        assert_eq!(kv.totals().get(0), snap.get(0) - 1);
+        let now = kv.totals_snapshot();
+        assert_eq!(now.get(3), snap.get(3) + 1);
+        assert_eq!(now.get(0), snap.get(0) - 1);
     }
 
     #[test]
     fn quiescent_check_detects_leak() {
-        let mut kv = setup(2, 2);
+        let kv = setup(2, 2);
         let _b = kv.lease_block(0, 0).unwrap();
         assert!(kv.check_quiescent_consistency(8).is_err());
     }
@@ -257,7 +344,7 @@ mod tests {
     fn mutated_commit_breaks_totals_until_delta_merged() {
         // Committing a mutated block without merging the C_k delta leaves
         // the store inconsistent — the §3.3 channel is what fixes it.
-        let mut kv = setup(2, 2);
+        let kv = setup(2, 2);
         let mut b = kv.lease_block(0, 0).unwrap();
         b.row_mut(b.lo).inc(5);
         kv.commit_block(b, 0).unwrap();
@@ -266,5 +353,46 @@ mod tests {
         delta.inc(5);
         kv.merge_totals_delta(&delta, 0);
         kv.check_quiescent_consistency(8).unwrap();
+    }
+
+    #[test]
+    fn concurrent_round_from_shared_reference() {
+        // The shard-locked store supports a whole round — totals read,
+        // lease, commit, delta merge — driven from plain `&KvStore` on
+        // many threads at once, one block per "worker".
+        let blocks = 8;
+        let kv = setup(blocks, 4);
+        let before = kv.totals_snapshot();
+        std::thread::scope(|s| {
+            for w in 0..blocks as u32 {
+                let kv = &kv;
+                s.spawn(move || {
+                    let machine = (w as usize) % 4;
+                    let _snap = kv.read_totals(machine);
+                    let mut b = kv.lease_block(w, machine).unwrap();
+                    b.row_mut(b.lo).inc((w % 8) as u32);
+                    kv.commit_block(b, machine).unwrap();
+                    let mut delta = TopicCounts::zeros(8);
+                    delta.inc((w % 8) as usize);
+                    kv.merge_totals_delta(&delta, machine);
+                });
+            }
+        });
+        assert_eq!(kv.num_leased(), 0);
+        kv.check_quiescent_consistency(8).unwrap();
+        let after = kv.totals_snapshot();
+        let sum = |t: &TopicCounts| t.as_slice().iter().sum::<i64>();
+        assert_eq!(sum(&after), sum(&before) + blocks as i64);
+    }
+
+    #[test]
+    fn with_resident_blocks_visits_everything_once() {
+        let kv = setup(6, 3);
+        let ids = kv.with_resident_blocks(|blocks| {
+            let mut ids: Vec<u32> = blocks.map(|b| b.id).collect();
+            ids.sort_unstable();
+            ids
+        });
+        assert_eq!(ids, vec![0, 1, 2, 3, 4, 5]);
     }
 }

@@ -15,7 +15,11 @@
 //!   background asynchronous synchronization) for head-to-head comparison,
 //! * a **discrete-event cluster simulator** (node presets, per-link
 //!   bandwidth/latency, shared-uplink congestion) standing in for the
-//!   paper's PROBE clusters, and
+//!   paper's PROBE clusters,
+//! * a **threaded execution engine** (`coord.execution = "threaded"`)
+//!   that runs each round's disjoint `(worker, block)` tasks on real OS
+//!   threads, lock-free by round disjointness, with bitwise-identical
+//!   results to the simulated path, and
 //! * an **XLA/PJRT execution backend** whose compute kernel is authored in
 //!   JAX/Pallas and AOT-lowered to HLO text at build time (`make artifacts`);
 //!   Python never runs on the sampling path.

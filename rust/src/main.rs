@@ -202,11 +202,13 @@ fn cmd_topics(args: &Args) -> Result<()> {
     // Rebuild a table view for inspection.
     let mut wt =
         mplda::model::WordTopicTable::zeros(driver.corpus.num_words(), cfg.train.topics);
-    for b in driver.kv().resident_blocks() {
-        for (i, row) in b.rows.iter().enumerate() {
-            *wt.row_mut(b.word_at(i) as usize) = row.clone();
+    driver.kv().with_resident_blocks(|blocks| {
+        for b in blocks {
+            for (i, row) in b.rows.iter().enumerate() {
+                *wt.row_mut(b.word_at(i) as usize) = row.clone();
+            }
         }
-    }
+    });
     let n = args.parsed_or("top", 10usize)?;
     for line in mplda::metrics::topics::render_topics(&wt, &driver.corpus, n) {
         println!("{line}");

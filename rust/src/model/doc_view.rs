@@ -1,0 +1,298 @@
+//! Disjoint per-document views over the global training state.
+//!
+//! The driver keeps two document-indexed structures that *every* worker
+//! writes into during a round: the topic assignments `z` (one `Vec<u32>`
+//! per document) and the doc–topic counts `C_d^k` ([`DocTopic`]). The
+//! paper's correctness argument (§3.1) is that these writes never
+//! conflict: each document belongs to exactly one worker's shard, so the
+//! workers' row sets are disjoint. This module turns that argument into
+//! types:
+//!
+//! * [`ShardOwnership`] — built **once** per training run from the data
+//!   partition; validates that shards are pairwise disjoint and in-bounds
+//!   and records each document's owner in a dense map.
+//! * [`DocView`] — hands out `&mut` access to individual document rows.
+//!   Views produced by [`DocView::split_disjoint`] verify **every access**
+//!   against the ownership map (an O(1) array compare, enforced in release
+//!   builds too), so the `unsafe` aliasing below can never be reached with
+//!   overlapping rows from safe code — a contract violation panics instead.
+//!
+//! Sequential callers use [`DocView::new`], which wraps ordinary exclusive
+//! borrows, involves no aliasing at all, and skips the ownership check.
+
+use std::marker::PhantomData;
+
+use super::doc_topic::{DocTopic, SparseCounts};
+
+/// Sentinel in the owner map for "no shard owns this document".
+const UNOWNED: u32 = u32::MAX;
+
+/// Validated doc → owning-shard map, reusable across rounds (the partition
+/// is fixed for a whole training run, so validation cost is paid once, not
+/// per round).
+pub struct ShardOwnership {
+    owner_of: Box<[u32]>,
+    num_shards: u32,
+}
+
+impl ShardOwnership {
+    /// Build from one doc-id list per shard. Panics (protocol violation,
+    /// not a recoverable error) unless every doc id is in-bounds and
+    /// appears in at most one shard — the §3.1 disjointness invariant.
+    pub fn build(shards: &[&[u32]], num_docs: usize) -> ShardOwnership {
+        assert!((shards.len() as u64) < UNOWNED as u64, "too many shards");
+        let mut owner_of = vec![UNOWNED; num_docs].into_boxed_slice();
+        for (w, shard) in shards.iter().enumerate() {
+            for &d in *shard {
+                let d = d as usize;
+                assert!(d < num_docs, "doc id {d} out of range ({num_docs} docs)");
+                assert!(
+                    owner_of[d] == UNOWNED,
+                    "doc {d} appears in two shards — views would alias"
+                );
+                owner_of[d] = w as u32;
+            }
+        }
+        ShardOwnership { owner_of, num_shards: shards.len() as u32 }
+    }
+
+    pub fn num_shards(&self) -> usize {
+        self.num_shards as usize
+    }
+
+    pub fn num_docs(&self) -> usize {
+        self.owner_of.len()
+    }
+
+    /// Owning shard of document `d`, if any.
+    pub fn owner(&self, d: usize) -> Option<usize> {
+        match self.owner_of[d] {
+            UNOWNED => None,
+            w => Some(w as usize),
+        }
+    }
+}
+
+/// Mutable view of document rows (assignments + doc–topic counts),
+/// restricted to one shard when produced by [`DocView::split_disjoint`].
+pub struct DocView<'a> {
+    z: *mut Vec<u32>,
+    dt: *mut SparseCounts,
+    len: usize,
+    /// `(my shard index, doc → owner map)`; `None` = unrestricted
+    /// exclusive view from [`DocView::new`].
+    owner: Option<(u32, &'a [u32])>,
+    _borrow: PhantomData<&'a mut Vec<u32>>,
+}
+
+// SAFETY: a view only dereferences rows it is allowed to touch. Views made
+// by `new` hold genuinely exclusive borrows. Views made by `split_disjoint`
+// check every access against a `ShardOwnership` whose construction proved
+// the shards pairwise disjoint, so two views sent to two threads can never
+// produce overlapping references — a violating access panics before the
+// raw pointer is dereferenced, in release builds too.
+unsafe impl Send for DocView<'_> {}
+
+impl<'a> DocView<'a> {
+    /// Wrap exclusive borrows of the full state (sequential execution; no
+    /// aliasing — the borrows stay exclusive for the view's lifetime).
+    pub fn new(z: &'a mut [Vec<u32>], dt: &'a mut DocTopic) -> DocView<'a> {
+        assert_eq!(z.len(), dt.num_docs(), "z and doc-topic row counts differ");
+        let len = z.len();
+        DocView {
+            z: z.as_mut_ptr(),
+            dt: dt.docs.as_mut_ptr(),
+            len,
+            owner: None,
+            _borrow: PhantomData,
+        }
+    }
+
+    /// Split the state into one view per shard of `ownership` (built once
+    /// via [`ShardOwnership::build`], which is where disjointness was
+    /// validated).
+    pub fn split_disjoint(
+        z: &'a mut [Vec<u32>],
+        dt: &'a mut DocTopic,
+        ownership: &'a ShardOwnership,
+    ) -> Vec<DocView<'a>> {
+        assert_eq!(z.len(), dt.num_docs(), "z and doc-topic row counts differ");
+        assert_eq!(
+            z.len(),
+            ownership.num_docs(),
+            "ownership map was built for a different corpus"
+        );
+        let len = z.len();
+        let zp = z.as_mut_ptr();
+        let dp = dt.docs.as_mut_ptr();
+        (0..ownership.num_shards)
+            .map(|w| DocView {
+                z: zp,
+                dt: dp,
+                len,
+                owner: Some((w, &ownership.owner_of[..])),
+                _borrow: PhantomData,
+            })
+            .collect()
+    }
+
+    /// Documents in the underlying state (not the shard size).
+    pub fn num_docs(&self) -> usize {
+        self.len
+    }
+
+    #[inline]
+    fn check(&self, d: usize) {
+        assert!(d < self.len, "doc id {d} out of range ({} docs)", self.len);
+        if let Some((me, owner_of)) = self.owner {
+            assert!(
+                owner_of[d] == me,
+                "doc {d} accessed by shard-view {me} which does not own it"
+            );
+        }
+    }
+
+    /// Topic assignments of document `d`.
+    #[inline]
+    pub fn z_row(&self, d: usize) -> &[u32] {
+        self.check(d);
+        // SAFETY: in-bounds and owned by this view (checked above).
+        unsafe { &*self.z.add(d) }
+    }
+
+    /// Mutable topic assignments of document `d`.
+    #[inline]
+    pub fn z_row_mut(&mut self, d: usize) -> &mut [u32] {
+        self.check(d);
+        // SAFETY: as above; `&mut self` prevents overlap within the view.
+        unsafe { &mut *self.z.add(d) }
+    }
+
+    /// Doc–topic counts of document `d`.
+    #[inline]
+    pub fn doc(&self, d: usize) -> &SparseCounts {
+        self.check(d);
+        // SAFETY: as above.
+        unsafe { &*self.dt.add(d) }
+    }
+
+    /// Mutable doc–topic counts of document `d`.
+    #[inline]
+    pub fn doc_mut(&mut self, d: usize) -> &mut SparseCounts {
+        self.check(d);
+        // SAFETY: as above.
+        unsafe { &mut *self.dt.add(d) }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn state(docs: usize) -> (Vec<Vec<u32>>, DocTopic) {
+        let z: Vec<Vec<u32>> = (0..docs).map(|d| vec![d as u32; 3]).collect();
+        let dt = DocTopic::zeros(docs);
+        (z, dt)
+    }
+
+    #[test]
+    fn full_view_reads_and_writes() {
+        let (mut z, mut dt) = state(4);
+        let mut v = DocView::new(&mut z, &mut dt);
+        assert_eq!(v.num_docs(), 4);
+        assert_eq!(v.z_row(2)[0], 2);
+        v.z_row_mut(2)[0] = 9;
+        v.doc_mut(3).inc(5);
+        assert_eq!(v.doc(3).get(5), 1);
+        drop(v);
+        assert_eq!(z[2][0], 9);
+        assert_eq!(dt.doc(3).get(5), 1);
+    }
+
+    #[test]
+    fn ownership_map_records_owners() {
+        let a: Vec<u32> = vec![0, 2];
+        let b: Vec<u32> = vec![1];
+        let own = ShardOwnership::build(&[a.as_slice(), b.as_slice()], 4);
+        assert_eq!(own.num_shards(), 2);
+        assert_eq!(own.num_docs(), 4);
+        assert_eq!(own.owner(0), Some(0));
+        assert_eq!(own.owner(1), Some(1));
+        assert_eq!(own.owner(2), Some(0));
+        assert_eq!(own.owner(3), None);
+    }
+
+    #[test]
+    fn split_gives_independent_views() {
+        let (mut z, mut dt) = state(6);
+        let a: Vec<u32> = vec![0, 2, 4];
+        let b: Vec<u32> = vec![1, 3, 5];
+        let own = ShardOwnership::build(&[a.as_slice(), b.as_slice()], 6);
+        let mut views = DocView::split_disjoint(&mut z, &mut dt, &own);
+        let mut vb = views.pop().unwrap();
+        let mut va = views.pop().unwrap();
+        va.z_row_mut(0)[1] = 100;
+        vb.z_row_mut(1)[1] = 200;
+        va.doc_mut(4).inc(1);
+        vb.doc_mut(5).inc(2);
+        drop((va, vb));
+        assert_eq!(z[0][1], 100);
+        assert_eq!(z[1][1], 200);
+        assert_eq!(dt.doc(4).get(1), 1);
+        assert_eq!(dt.doc(5).get(2), 1);
+    }
+
+    #[test]
+    fn split_views_work_across_threads() {
+        let docs = 64;
+        let (mut z, mut dt) = state(docs);
+        let evens: Vec<u32> = (0..docs as u32).filter(|d| d % 2 == 0).collect();
+        let odds: Vec<u32> = (0..docs as u32).filter(|d| d % 2 == 1).collect();
+        let own = ShardOwnership::build(&[evens.as_slice(), odds.as_slice()], docs);
+        let views = DocView::split_disjoint(&mut z, &mut dt, &own);
+        let shards = [evens.clone(), odds.clone()];
+        std::thread::scope(|s| {
+            for (mut view, shard) in views.into_iter().zip(shards.iter()) {
+                s.spawn(move || {
+                    for &d in shard {
+                        view.z_row_mut(d as usize)[0] = d + 1000;
+                        view.doc_mut(d as usize).inc(d % 7);
+                    }
+                });
+            }
+        });
+        for d in 0..docs {
+            assert_eq!(z[d][0], d as u32 + 1000);
+            assert_eq!(dt.doc(d).get(d as u32 % 7), 1);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "two shards")]
+    fn overlapping_shards_rejected() {
+        let a: Vec<u32> = vec![0, 1];
+        let b: Vec<u32> = vec![1, 2];
+        let _ = ShardOwnership::build(&[a.as_slice(), b.as_slice()], 4);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn out_of_bounds_shard_rejected() {
+        let a: Vec<u32> = vec![0, 9];
+        let _ = ShardOwnership::build(&[a.as_slice()], 4);
+    }
+
+    #[test]
+    #[should_panic(expected = "does not own")]
+    fn unowned_access_panics_even_in_release() {
+        // The ownership check is unconditional — a shard view touching a
+        // document outside its shard must die loudly, not race.
+        let (mut z, mut dt) = state(4);
+        let a: Vec<u32> = vec![0, 1];
+        let b: Vec<u32> = vec![2, 3];
+        let own = ShardOwnership::build(&[a.as_slice(), b.as_slice()], 4);
+        let mut views = DocView::split_disjoint(&mut z, &mut dt, &own);
+        let mut va = views.remove(0);
+        let _ = va.z_row_mut(2); // doc 2 belongs to shard 1
+    }
+}

@@ -10,6 +10,7 @@
 
 pub mod topic_counts;
 pub mod doc_topic;
+pub mod doc_view;
 pub mod word_topic;
 pub mod block;
 pub mod init;
@@ -18,6 +19,7 @@ pub mod checkpoint;
 
 pub use block::{BlockMap, ModelBlock};
 pub use doc_topic::{DocTopic, SparseCounts};
+pub use doc_view::{DocView, ShardOwnership};
 pub use init::Assignments;
 pub use topic_counts::TopicCounts;
 pub use word_topic::{SparseRow, WordTopicTable};

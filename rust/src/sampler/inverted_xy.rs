@@ -32,7 +32,7 @@
 //! `O(|words| · K)` to `O(K + nnz)`.
 
 use crate::corpus::{Corpus, InvertedIndex};
-use crate::model::{DocTopic, ModelBlock, TopicCounts};
+use crate::model::{DocView, ModelBlock, TopicCounts};
 use crate::util::rng::Pcg64;
 
 use super::{Params, Scratch};
@@ -41,15 +41,16 @@ use super::{Params, Scratch};
 /// block's rows, the shard's doc–topic counts, the local `C_k` snapshot and
 /// the assignments. Returns tokens sampled.
 ///
-/// `assign_z` is indexed by *global* doc id (same layout as
-/// `Assignments::z`); only documents in this worker's shard are touched.
+/// `docs` is a [`DocView`] over the *global* per-document state (same
+/// layout as `Assignments::z`); only documents in this worker's shard are
+/// touched, which is what lets the threaded engine hand disjoint views of
+/// the same state to concurrent workers.
 #[allow(clippy::too_many_arguments)]
 pub fn sample_block(
     corpus: &Corpus,
-    assign_z: &mut [Vec<u32>],
+    docs: &mut DocView<'_>,
     index: &InvertedIndex,
     block: &mut ModelBlock,
-    dt: &mut DocTopic,
     ck: &mut TopicCounts,
     params: &Params,
     scratch: &mut Scratch,
@@ -106,11 +107,11 @@ pub fn sample_block(
         for si in slot_range {
             let slot = index.slots[si];
             let d = slot.doc as usize;
-            let z_old = assign_z[d][slot.pos as usize];
+            let z_old = docs.z_row(d)[slot.pos as usize];
             let zo = z_old as usize;
 
             // Remove the token; inv[z_old] and Σq follow in O(1).
-            dt.doc_mut(d).dec(z_old);
+            docs.doc_mut(d).dec(z_old);
             sum_q -= (ct[zo] as f64 + params.beta) * inv[zo];
             sum_inv -= inv[zo];
             ct[zo] -= 1;
@@ -122,7 +123,7 @@ pub fn sample_block(
 
             // Y bucket over the doc's non-zeros (desc by count → early exit
             // on the walk below is likely).
-            let doc_counts = dt.doc(d);
+            let doc_counts = docs.doc(d);
             let mut sum_y = 0.0;
             for (kk, c) in doc_counts.iter() {
                 let ki = kk as usize;
@@ -161,7 +162,7 @@ pub fn sample_block(
 
             // Add the token back under z_new.
             let zn = z_new as usize;
-            dt.doc_mut(d).inc(z_new);
+            docs.doc_mut(d).inc(z_new);
             sum_q -= (ct[zn] as f64 + params.beta) * inv[zn];
             sum_inv -= inv[zn];
             if ct[zn] == 0 {
@@ -174,7 +175,7 @@ pub fn sample_block(
             sum_inv += inv_new;
             sum_q += (ct[zn] as f64 + params.beta) * inv_new;
 
-            assign_z[d][slot.pos as usize] = z_new;
+            docs.z_row_mut(d)[slot.pos as usize] = z_new;
             sampled += 1;
         }
 
@@ -192,7 +193,7 @@ mod tests {
     use super::*;
     use crate::corpus::partition::DataPartition;
     use crate::metrics::joint_log_likelihood;
-    use crate::model::{Assignments, BlockMap};
+    use crate::model::{Assignments, BlockMap, DocTopic, ShardOwnership};
     use crate::sampler::testutil::small_state;
 
     /// Serial "model-parallel" driver: one worker, all blocks in order.
@@ -208,9 +209,10 @@ mod tests {
     ) -> u64 {
         let all_docs: Vec<u32> = (0..corpus.num_docs() as u32).collect();
         let index = InvertedIndex::build(corpus, &all_docs);
+        let mut docs = DocView::new(&mut assign.z, dt);
         let mut n = 0;
         for b in blocks.iter_mut() {
-            n += sample_block(corpus, &mut assign.z, &index, b, dt, ck, params, scratch, rng);
+            n += sample_block(corpus, &mut docs, &index, b, ck, params, scratch, rng);
         }
         n
     }
@@ -298,22 +300,32 @@ mod tests {
                 (it.next().unwrap(), it.next().unwrap())
             };
             let mut scratch = Scratch::new(10);
-            // Private C_k snapshots per worker; private RNG per worker.
+            // Private C_k snapshots per worker; private RNG per worker;
+            // disjoint per-shard views of the shared doc state.
             let mut ck0 = ck.clone();
             let mut ck1 = ck.clone();
-            for &who in &order {
-                if who == 0 {
-                    let mut rng = Pcg64::with_stream(7, 0);
-                    sample_block(
-                        &corpus, &mut z, &idx0, &mut b0, &mut dtl, &mut ck0, &params,
-                        &mut scratch, &mut rng,
-                    );
-                } else {
-                    let mut rng = Pcg64::with_stream(7, 1);
-                    sample_block(
-                        &corpus, &mut z, &idx1, &mut b1, &mut dtl, &mut ck1, &params,
-                        &mut scratch, &mut rng,
-                    );
+            {
+                let own = ShardOwnership::build(
+                    &[part.shards[0].as_slice(), part.shards[1].as_slice()],
+                    corpus.num_docs(),
+                );
+                let mut views = DocView::split_disjoint(&mut z, &mut dtl, &own);
+                let mut v1 = views.pop().unwrap();
+                let mut v0 = views.pop().unwrap();
+                for &who in &order {
+                    if who == 0 {
+                        let mut rng = Pcg64::with_stream(7, 0);
+                        sample_block(
+                            &corpus, &mut v0, &idx0, &mut b0, &mut ck0, &params, &mut scratch,
+                            &mut rng,
+                        );
+                    } else {
+                        let mut rng = Pcg64::with_stream(7, 1);
+                        sample_block(
+                            &corpus, &mut v1, &idx1, &mut b1, &mut ck1, &params, &mut scratch,
+                            &mut rng,
+                        );
+                    }
                 }
             }
             (z, b0, b1)
@@ -335,9 +347,9 @@ mod tests {
         let mut block = ModelBlock::empty(9, corpus.num_words() as u32, corpus.num_words() as u32);
         let mut scratch = Scratch::new(6);
         let mut rng = Pcg64::new(3);
+        let mut docs = DocView::new(&mut assign.z, &mut dt);
         let n = sample_block(
-            &corpus, &mut assign.z, &index, &mut block, &mut dt, &mut ck, &params, &mut scratch,
-            &mut rng,
+            &corpus, &mut docs, &index, &mut block, &mut ck, &params, &mut scratch, &mut rng,
         );
         assert_eq!(n, 0);
     }

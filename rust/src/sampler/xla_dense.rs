@@ -24,7 +24,7 @@
 use anyhow::Result;
 
 use crate::corpus::{Corpus, InvertedIndex};
-use crate::model::{DocTopic, ModelBlock, TopicCounts};
+use crate::model::{DocView, ModelBlock, TopicCounts};
 use crate::util::rng::Pcg64;
 
 use super::Params;
@@ -116,10 +116,9 @@ struct Pending {
 #[allow(clippy::too_many_arguments)]
 pub fn sample_block_microbatch(
     corpus: &Corpus,
-    assign_z: &mut [Vec<u32>],
+    docs: &mut DocView<'_>,
     index: &InvertedIndex,
     block: &mut ModelBlock,
-    dt: &mut DocTopic,
     ck: &mut TopicCounts,
     params: &Params,
     exec: &mut dyn MicrobatchExecutor,
@@ -143,12 +142,12 @@ pub fn sample_block_microbatch(
     let start = index.words.partition_point(|&w| w < block.lo);
     let end = index.words.partition_point(|&w| w < block.hi);
 
-    // Collect tokens word-major into microbatches.
+    // Collect tokens word-major into microbatches. The closure owns the
+    // doc-state view (`docs`) for the whole call; the loop below only
+    // reads the block spec and the index.
     let mut flush = |pending: &mut Vec<Pending>,
                      block: &mut ModelBlock,
-                     dt: &mut DocTopic,
                      ck: &mut TopicCounts,
-                     assign_z: &mut [Vec<u32>],
                      ct_buf: &mut [f32],
                      cd_buf: &mut [f32],
                      ck_buf: &mut [f32],
@@ -170,12 +169,12 @@ pub fn sample_block_microbatch(
             *c = ck.get(kk) as f32;
         }
         for (i, p) in pending.iter().enumerate() {
-            let z_old = assign_z[p.doc as usize][p.pos as usize] as usize;
+            let z_old = docs.z_row(p.doc as usize)[p.pos as usize] as usize;
             for (t, c) in block.row(p.word).iter() {
                 ct_buf[i * k + t as usize] = c as f32;
             }
             ct_buf[i * k + z_old] -= 1.0;
-            for (t, c) in dt.doc(p.doc as usize).iter() {
+            for (t, c) in docs.doc(p.doc as usize).iter() {
                 cd_buf[i * k + t as usize] = c as f32;
             }
             cd_buf[i * k + z_old] -= 1.0;
@@ -192,15 +191,15 @@ pub fn sample_block_microbatch(
         for (i, p) in pending.iter().enumerate() {
             let z = z_new[i] as u32;
             anyhow::ensure!((z as usize) < k, "device returned topic {z} >= K");
-            let z_old = assign_z[p.doc as usize][p.pos as usize];
+            let z_old = docs.z_row(p.doc as usize)[p.pos as usize];
             if z != z_old {
-                dt.doc_mut(p.doc as usize).dec(z_old);
-                dt.doc_mut(p.doc as usize).inc(z);
+                docs.doc_mut(p.doc as usize).dec(z_old);
+                docs.doc_mut(p.doc as usize).inc(z);
                 block.row_mut(p.word).dec(z_old);
                 block.row_mut(p.word).inc(z);
                 ck.dec(z_old as usize);
                 ck.inc(z as usize);
-                assign_z[p.doc as usize][p.pos as usize] = z;
+                docs.z_row_mut(p.doc as usize)[p.pos as usize] = z;
             }
         }
         let n = pending.len() as u64;
@@ -218,15 +217,14 @@ pub fn sample_block_microbatch(
             pending.push(Pending { doc: slot.doc, pos: slot.pos, word });
             if pending.len() == b {
                 sampled += flush(
-                    &mut pending, block, dt, ck, assign_z, &mut ct_buf, &mut cd_buf, &mut ck_buf,
-                    &mut u_buf, rng,
+                    &mut pending, block, ck, &mut ct_buf, &mut cd_buf, &mut ck_buf, &mut u_buf,
+                    rng,
                 )?;
             }
         }
     }
     sampled += flush(
-        &mut pending, block, dt, ck, assign_z, &mut ct_buf, &mut cd_buf, &mut ck_buf, &mut u_buf,
-        rng,
+        &mut pending, block, ck, &mut ct_buf, &mut cd_buf, &mut ck_buf, &mut u_buf, rng,
     )?;
     let _ = corpus;
     Ok(sampled)
@@ -291,11 +289,14 @@ mod tests {
         let mut exec = RustRefExecutor::new(64, 8, &params);
         let mut rng = Pcg64::new(4);
         let mut n = 0;
-        for b in blocks.iter_mut() {
-            n += sample_block_microbatch(
-                &corpus, &mut assign.z, &index, b, &mut dt, &mut ck, &params, &mut exec, &mut rng,
-            )
-            .unwrap();
+        {
+            let mut docs = DocView::new(&mut assign.z, &mut dt);
+            for b in blocks.iter_mut() {
+                n += sample_block_microbatch(
+                    &corpus, &mut docs, &index, b, &mut ck, &params, &mut exec, &mut rng,
+                )
+                .unwrap();
+            }
         }
         assert_eq!(n as usize, corpus.num_tokens());
         let mut wt2 = WordTopicTable::zeros(corpus.num_words(), 8);
@@ -324,12 +325,15 @@ mod tests {
         let mut blocks_a = Assignments::build_blocks(&wt0, &map);
         let mut scratch = Scratch::new(8);
         let mut rng = Pcg64::new(11);
-        for _ in 0..20 {
-            for blk in blocks_a.iter_mut() {
-                super::super::inverted_xy::sample_block(
-                    &corpus, &mut a.0.z, &index, blk, &mut a.1, &mut a.2, &params, &mut scratch,
-                    &mut rng,
-                );
+        {
+            let mut docs = DocView::new(&mut a.0.z, &mut a.1);
+            for _ in 0..20 {
+                for blk in blocks_a.iter_mut() {
+                    super::super::inverted_xy::sample_block(
+                        &corpus, &mut docs, &index, blk, &mut a.2, &params, &mut scratch,
+                        &mut rng,
+                    );
+                }
             }
         }
         let mut wta = WordTopicTable::zeros(corpus.num_words(), 8);
@@ -346,13 +350,15 @@ mod tests {
         let mut blocks_b = Assignments::build_blocks(&wt0, &map);
         let mut exec = RustRefExecutor::new(32, 8, &params);
         let mut rng = Pcg64::new(11);
-        for _ in 0..20 {
-            for blk in blocks_b.iter_mut() {
-                sample_block_microbatch(
-                    &corpus, &mut b.0.z, &index, blk, &mut b.1, &mut b.2, &params, &mut exec,
-                    &mut rng,
-                )
-                .unwrap();
+        {
+            let mut docs = DocView::new(&mut b.0.z, &mut b.1);
+            for _ in 0..20 {
+                for blk in blocks_b.iter_mut() {
+                    sample_block_microbatch(
+                        &corpus, &mut docs, &index, blk, &mut b.2, &params, &mut exec, &mut rng,
+                    )
+                    .unwrap();
+                }
             }
         }
         let mut wtb = WordTopicTable::zeros(corpus.num_words(), 8);
@@ -383,12 +389,12 @@ mod tests {
         let all_docs: Vec<u32> = (0..corpus.num_docs() as u32).collect();
         let index = InvertedIndex::build(&corpus, &all_docs);
         let mut rng = Pcg64::new(1);
+        let mut docs = DocView::new(&mut assign.z, &mut dt);
         let res = sample_block_microbatch(
             &corpus,
-            &mut assign.z,
+            &mut docs,
             &index,
             &mut blocks[0],
-            &mut dt,
             &mut ck,
             &params8,
             &mut exec,

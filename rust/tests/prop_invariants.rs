@@ -212,18 +212,20 @@ fn xy_sampler_preserves_consistency_on_random_corpora() {
             let params = Params::new(k, corpus.num_words(), 0.1, 0.01);
             let mut scratch = Scratch::new(k);
             let mut n = 0;
-            for b in blocks.iter_mut() {
-                n += inverted_xy::sample_block(
-                    &corpus,
-                    &mut assign.z,
-                    &index,
-                    b,
-                    &mut dt,
-                    &mut ck,
-                    &params,
-                    &mut scratch,
-                    &mut rng,
-                );
+            {
+                let mut docs = mplda::model::DocView::new(&mut assign.z, &mut dt);
+                for b in blocks.iter_mut() {
+                    n += inverted_xy::sample_block(
+                        &corpus,
+                        &mut docs,
+                        &index,
+                        b,
+                        &mut ck,
+                        &params,
+                        &mut scratch,
+                        &mut rng,
+                    );
+                }
             }
             if n as usize != corpus.num_tokens() {
                 return Err(format!("sampled {n} != {}", corpus.num_tokens()));

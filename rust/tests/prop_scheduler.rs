@@ -79,7 +79,7 @@ fn kvstore_lease_protocol_never_double_leases() {
                 .map(|id| ModelBlock::empty(id, id * 4, (id + 1) * 4))
                 .collect();
             let shards = ShardMap::round_robin(l.blocks, &spec);
-            let mut kv = KvStore::new(blocks, TopicCounts::zeros(4), shards);
+            let kv = KvStore::new(blocks, TopicCounts::zeros(4), shards);
             let s = RotationSchedule::new(l.workers, l.blocks);
             for round in 0..s.rounds_per_iteration() {
                 let mut held = Vec::new();

@@ -1,0 +1,182 @@
+//! Vendored offline shim of the `anyhow` API surface mplda uses.
+//!
+//! The build runs with no network access, so instead of the crates.io
+//! `anyhow` this workspace vendors the subset the codebase touches:
+//! [`Error`], [`Result`], the [`Context`] extension trait, and the
+//! [`anyhow!`]/[`bail!`]/[`ensure!`] macros. Error chains are flattened to
+//! `"context: cause"` strings at attachment time — the repo only ever
+//! renders errors via `Display`/`Debug`, never downcasts.
+
+use std::fmt;
+
+/// A flattened error: the full context chain rendered into one message.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Build an error from a pre-rendered message.
+    pub fn msg(msg: impl fmt::Display) -> Error {
+        Error { msg: msg.to_string() }
+    }
+
+    /// Prepend a context layer (`"context: cause"`).
+    pub fn context(self, context: impl fmt::Display) -> Error {
+        Error { msg: format!("{context}: {}", self.msg) }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+// `?` conversion from any std error. `Error` itself deliberately does NOT
+// implement `std::error::Error`, exactly like the real crate, so this
+// blanket impl cannot collide with `From<Error> for Error`.
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        Error { msg: e.to_string() }
+    }
+}
+
+/// `anyhow::Result<T>`: `Result` defaulted to [`Error`].
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Context-attachment extension for `Result` and `Option`.
+pub trait Context<T, E> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T, Error>;
+    fn with_context<C: fmt::Display + Send + Sync + 'static, F: FnOnce() -> C>(
+        self,
+        f: F,
+    ) -> Result<T, Error>;
+}
+
+impl<T, E: fmt::Display> Context<T, E> for std::result::Result<T, E> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T, Error> {
+        self.map_err(|e| Error { msg: format!("{context}: {e}") })
+    }
+
+    fn with_context<C: fmt::Display + Send + Sync + 'static, F: FnOnce() -> C>(
+        self,
+        f: F,
+    ) -> Result<T, Error> {
+        self.map_err(|e| Error { msg: format!("{}: {e}", f()) })
+    }
+}
+
+impl<T> Context<T, std::convert::Infallible> for Option<T> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display + Send + Sync + 'static, F: FnOnce() -> C>(
+        self,
+        f: F,
+    ) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a message, a displayable value, or a format
+/// string with arguments.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(::std::format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg(::std::format!("{}", $err))
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(::std::format!($fmt, $($arg)*))
+    };
+}
+
+/// Return early with an error.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return ::std::result::Result::Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an error if a condition is false.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return ::std::result::Result::Err($crate::Error::msg(::std::concat!(
+                "Condition failed: `",
+                ::std::stringify!($cond),
+                "`"
+            )));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return ::std::result::Result::Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_fail() -> Result<()> {
+        std::fs::read_to_string("/definitely/not/a/path/9f3a")?;
+        Ok(())
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        assert!(io_fail().is_err());
+    }
+
+    #[test]
+    fn context_chains_render_outermost_first() {
+        let e: Result<()> = Err(Error::msg("root"));
+        let e = e.context("layer").unwrap_err();
+        assert_eq!(e.to_string(), "layer: root");
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u32> = None;
+        let e = v.context("missing thing").unwrap_err();
+        assert_eq!(e.to_string(), "missing thing");
+    }
+
+    #[test]
+    fn macros() {
+        fn f(x: u32) -> Result<u32> {
+            ensure!(x < 10, "x too big: {x}");
+            if x == 5 {
+                bail!("five is right out");
+            }
+            Ok(x)
+        }
+        assert_eq!(f(3).unwrap(), 3);
+        assert!(f(12).unwrap_err().to_string().contains("too big: 12"));
+        assert!(f(5).unwrap_err().to_string().contains("five"));
+        let s = String::from("wrapped");
+        assert_eq!(anyhow!(s).to_string(), "wrapped");
+    }
+
+    #[test]
+    fn ensure_without_message() {
+        fn f() -> Result<()> {
+            ensure!(1 + 1 == 3);
+            Ok(())
+        }
+        assert!(f().unwrap_err().to_string().contains("Condition failed"));
+    }
+}

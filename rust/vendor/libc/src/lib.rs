@@ -1,0 +1,45 @@
+//! Vendored offline shim of `libc`: exactly the `clock_gettime` surface
+//! `mplda::util::cputime` uses (Linux).
+
+#![allow(non_camel_case_types)]
+
+pub type c_int = i32;
+pub type c_long = i64;
+pub type time_t = i64;
+pub type clockid_t = c_int;
+
+/// `CLOCK_THREAD_CPUTIME_ID` — the value is OS-specific; this shim only
+/// supports the platforms it has been checked on (the real crate covers
+/// the rest — swap it in if this ever needs to build elsewhere).
+#[cfg(target_os = "linux")]
+pub const CLOCK_THREAD_CPUTIME_ID: clockid_t = 3;
+#[cfg(target_os = "macos")]
+pub const CLOCK_THREAD_CPUTIME_ID: clockid_t = 16;
+#[cfg(not(any(target_os = "linux", target_os = "macos")))]
+compile_error!(
+    "vendored libc shim: CLOCK_THREAD_CPUTIME_ID unknown for this target OS"
+);
+
+#[repr(C)]
+#[derive(Debug, Clone, Copy)]
+pub struct timespec {
+    pub tv_sec: time_t,
+    pub tv_nsec: c_long,
+}
+
+extern "C" {
+    pub fn clock_gettime(clk_id: clockid_t, tp: *mut timespec) -> c_int;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn thread_clock_readable() {
+        let mut ts = timespec { tv_sec: 0, tv_nsec: 0 };
+        let rc = unsafe { clock_gettime(CLOCK_THREAD_CPUTIME_ID, &mut ts) };
+        assert_eq!(rc, 0);
+        assert!(ts.tv_sec >= 0 && ts.tv_nsec >= 0);
+    }
+}

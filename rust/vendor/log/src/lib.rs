@@ -1,0 +1,222 @@
+//! Vendored offline shim of the `log` facade: leveled macros, the [`Log`]
+//! trait, and the global logger/level registry. API-compatible with the
+//! subset `mplda::util::logger` and the experiment harnesses use.
+
+use std::fmt;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::OnceLock;
+
+/// Verbosity of one log record.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    Error = 1,
+    Warn = 2,
+    Info = 3,
+    Debug = 4,
+    Trace = 5,
+}
+
+impl fmt::Display for Level {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let s = match self {
+            Level::Error => "ERROR",
+            Level::Warn => "WARN",
+            Level::Info => "INFO",
+            Level::Debug => "DEBUG",
+            Level::Trace => "TRACE",
+        };
+        // Respect width/alignment ({:5} in the logger's format string).
+        f.pad(s)
+    }
+}
+
+/// Maximum-verbosity filter installed via [`set_max_level`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum LevelFilter {
+    Off = 0,
+    Error = 1,
+    Warn = 2,
+    Info = 3,
+    Debug = 4,
+    Trace = 5,
+}
+
+impl PartialEq<LevelFilter> for Level {
+    fn eq(&self, other: &LevelFilter) -> bool {
+        (*self as usize) == (*other as usize)
+    }
+}
+
+impl PartialOrd<LevelFilter> for Level {
+    fn partial_cmp(&self, other: &LevelFilter) -> Option<std::cmp::Ordering> {
+        (*self as usize).partial_cmp(&(*other as usize))
+    }
+}
+
+impl PartialEq<Level> for LevelFilter {
+    fn eq(&self, other: &Level) -> bool {
+        (*self as usize) == (*other as usize)
+    }
+}
+
+impl PartialOrd<Level> for LevelFilter {
+    fn partial_cmp(&self, other: &Level) -> Option<std::cmp::Ordering> {
+        (*self as usize).partial_cmp(&(*other as usize))
+    }
+}
+
+/// Metadata of a record (level + target module path).
+pub struct Metadata<'a> {
+    level: Level,
+    target: &'a str,
+}
+
+impl<'a> Metadata<'a> {
+    pub fn level(&self) -> Level {
+        self.level
+    }
+
+    pub fn target(&self) -> &'a str {
+        self.target
+    }
+}
+
+/// One log record: metadata plus the formatted message arguments.
+pub struct Record<'a> {
+    metadata: Metadata<'a>,
+    args: fmt::Arguments<'a>,
+}
+
+impl<'a> Record<'a> {
+    pub fn metadata(&self) -> &Metadata<'a> {
+        &self.metadata
+    }
+
+    pub fn level(&self) -> Level {
+        self.metadata.level
+    }
+
+    pub fn target(&self) -> &'a str {
+        self.metadata.target
+    }
+
+    pub fn args(&self) -> &fmt::Arguments<'a> {
+        &self.args
+    }
+}
+
+/// A logging sink. Mirrors the real facade: loggers are shared across
+/// threads, hence the `Send + Sync` supertraits.
+pub trait Log: Send + Sync {
+    fn enabled(&self, metadata: &Metadata<'_>) -> bool;
+    fn log(&self, record: &Record<'_>);
+    fn flush(&self);
+}
+
+static LOGGER: OnceLock<Box<dyn Log>> = OnceLock::new();
+static MAX_LEVEL: AtomicUsize = AtomicUsize::new(0); // Off until installed
+
+/// Error returned when a logger is already installed.
+#[derive(Debug)]
+pub struct SetLoggerError(());
+
+/// Install the global logger (first call wins).
+pub fn set_boxed_logger(logger: Box<dyn Log>) -> Result<(), SetLoggerError> {
+    LOGGER.set(logger).map_err(|_| SetLoggerError(()))
+}
+
+/// Set the global maximum level; records above it are skipped entirely.
+pub fn set_max_level(level: LevelFilter) {
+    MAX_LEVEL.store(level as usize, Ordering::SeqCst);
+}
+
+/// Current global maximum level.
+pub fn max_level() -> LevelFilter {
+    match MAX_LEVEL.load(Ordering::SeqCst) {
+        1 => LevelFilter::Error,
+        2 => LevelFilter::Warn,
+        3 => LevelFilter::Info,
+        4 => LevelFilter::Debug,
+        5 => LevelFilter::Trace,
+        _ => LevelFilter::Off,
+    }
+}
+
+/// Macro plumbing — not part of the public API contract.
+#[doc(hidden)]
+pub fn __log(level: Level, target: &str, args: fmt::Arguments<'_>) {
+    if (level as usize) > MAX_LEVEL.load(Ordering::SeqCst) {
+        return;
+    }
+    if let Some(logger) = LOGGER.get() {
+        let record = Record { metadata: Metadata { level, target }, args };
+        if logger.enabled(&record.metadata) {
+            logger.log(&record);
+        }
+    }
+}
+
+#[doc(hidden)]
+#[macro_export]
+macro_rules! __log_at {
+    ($lvl:expr, $($arg:tt)+) => {
+        $crate::__log($lvl, ::std::module_path!(), ::std::format_args!($($arg)+))
+    };
+}
+
+#[macro_export]
+macro_rules! error {
+    ($($arg:tt)+) => { $crate::__log_at!($crate::Level::Error, $($arg)+) };
+}
+
+#[macro_export]
+macro_rules! warn {
+    ($($arg:tt)+) => { $crate::__log_at!($crate::Level::Warn, $($arg)+) };
+}
+
+#[macro_export]
+macro_rules! info {
+    ($($arg:tt)+) => { $crate::__log_at!($crate::Level::Info, $($arg)+) };
+}
+
+#[macro_export]
+macro_rules! debug {
+    ($($arg:tt)+) => { $crate::__log_at!($crate::Level::Debug, $($arg)+) };
+}
+
+#[macro_export]
+macro_rules! trace {
+    ($($arg:tt)+) => { $crate::__log_at!($crate::Level::Trace, $($arg)+) };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+
+    static HITS: AtomicUsize = AtomicUsize::new(0);
+
+    struct Counter;
+    impl Log for Counter {
+        fn enabled(&self, _: &Metadata<'_>) -> bool {
+            true
+        }
+        fn log(&self, record: &Record<'_>) {
+            HITS.fetch_add(1, Ordering::SeqCst);
+            assert!(!format!("{}", record.args()).is_empty());
+            assert!(record.target().contains("log"));
+        }
+        fn flush(&self) {}
+    }
+
+    #[test]
+    fn filtering_and_dispatch() {
+        let _ = set_boxed_logger(Box::new(Counter));
+        set_max_level(LevelFilter::Info);
+        info!("hello {}", 1);
+        debug!("filtered {}", 2);
+        assert_eq!(HITS.load(Ordering::SeqCst), 1);
+        assert!(Level::Info <= LevelFilter::Info);
+        assert!(Level::Debug > LevelFilter::Info);
+    }
+}

@@ -1,0 +1,59 @@
+//! Vendored offline shim of `once_cell`: just `sync::Lazy`, built on
+//! `std::sync::OnceLock` (no unsafe).
+
+pub mod sync {
+    use std::ops::Deref;
+    use std::sync::{Mutex, OnceLock};
+
+    /// A value initialized on first access, safe for `static`s.
+    pub struct Lazy<T, F = fn() -> T> {
+        cell: OnceLock<T>,
+        init: Mutex<Option<F>>,
+    }
+
+    impl<T, F: FnOnce() -> T> Lazy<T, F> {
+        pub const fn new(init: F) -> Lazy<T, F> {
+            Lazy { cell: OnceLock::new(), init: Mutex::new(Some(init)) }
+        }
+
+        pub fn force(this: &Lazy<T, F>) -> &T {
+            this.cell.get_or_init(|| {
+                let f = this
+                    .init
+                    .lock()
+                    .expect("Lazy init lock poisoned")
+                    .take()
+                    .expect("Lazy initializer already taken");
+                f()
+            })
+        }
+    }
+
+    impl<T, F: FnOnce() -> T> Deref for Lazy<T, F> {
+        type Target = T;
+
+        fn deref(&self) -> &T {
+            Lazy::force(self)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::sync::Lazy;
+
+    static GLOBAL: Lazy<Vec<u32>> = Lazy::new(|| vec![1, 2, 3]);
+
+    #[test]
+    fn static_lazy_initializes_once() {
+        assert_eq!(GLOBAL.len(), 3);
+        assert_eq!(GLOBAL[0], 1);
+    }
+
+    #[test]
+    fn local_lazy() {
+        let l: Lazy<u32, _> = Lazy::new(|| 40 + 2);
+        assert_eq!(*l, 42);
+        assert_eq!(*l, 42);
+    }
+}
