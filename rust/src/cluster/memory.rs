@@ -19,13 +19,17 @@ pub enum MemCategory {
     DocTopic,
     /// Word–topic model state held right now (blocks or full replica).
     Model,
+    /// Next-round model blocks sitting in the pipelined engine's staging
+    /// buffer (double buffering's memory cost, bounded by
+    /// `coord.staging_budget_mib`).
+    Staging,
     /// KV-store shard hosted on this node.
     KvShard,
     /// Topic totals, buffers, misc.
     Other,
 }
 
-const NUM_CATEGORIES: usize = 6;
+const NUM_CATEGORIES: usize = 7;
 
 fn cat_idx(c: MemCategory) -> usize {
     match c {
@@ -33,8 +37,9 @@ fn cat_idx(c: MemCategory) -> usize {
         MemCategory::Index => 1,
         MemCategory::DocTopic => 2,
         MemCategory::Model => 3,
-        MemCategory::KvShard => 4,
-        MemCategory::Other => 5,
+        MemCategory::Staging => 4,
+        MemCategory::KvShard => 5,
+        MemCategory::Other => 6,
     }
 }
 

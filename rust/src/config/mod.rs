@@ -7,5 +7,5 @@ pub mod schema;
 
 pub use schema::{
     BaselineConfig, BlockLayout, CkSyncPolicy, ClusterConfig, Config, CoordConfig, CorpusConfig,
-    ExecutionMode, OutputConfig, RuntimeConfig, SamplerKind, TrainConfig,
+    ExecutionMode, OutputConfig, PipelineMode, RuntimeConfig, SamplerKind, TrainConfig,
 };

@@ -192,6 +192,40 @@ impl ExecutionMode {
     }
 }
 
+/// Whether the threaded engine pipelines KV-store block transfers with
+/// sampling (`coordinator::pipeline` — §3.2 "can be further accelerated").
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PipelineMode {
+    /// Fetch → sample → flush strictly sequentially per round (PR-1
+    /// behavior, and the E7c stall baseline).
+    Off,
+    /// Double-buffer blocks per worker: a flusher/prefetcher thread
+    /// commits finished blocks and stages each one for its next-round
+    /// consumer while other workers are still sampling. Requires
+    /// `coord.execution = "threaded"`; model state stays bitwise
+    /// identical to the other modes (`tests/pipeline_determinism.rs`).
+    DoubleBuffer,
+}
+
+impl PipelineMode {
+    /// Parse a `coord.pipeline` value.
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "off" | "none" => PipelineMode::Off,
+            "double_buffer" | "double-buffer" | "db" => PipelineMode::DoubleBuffer,
+            other => bail!("unknown pipeline mode {other:?} (off|double_buffer)"),
+        })
+    }
+
+    /// Canonical config-file spelling.
+    pub fn name(&self) -> &'static str {
+        match self {
+            PipelineMode::Off => "off",
+            PipelineMode::DoubleBuffer => "double_buffer",
+        }
+    }
+}
+
 /// How the vocabulary is laid out into model blocks.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum BlockLayout {
@@ -242,6 +276,14 @@ pub struct CoordConfig {
     pub execution: ExecutionMode,
     /// OS threads for `threaded` execution; 0 ⇒ one per worker.
     pub parallelism: usize,
+    /// Host-side transfer pipelining: `off` or `double_buffer` (overlap
+    /// KV-store block commit/prefetch with sampling; threaded only).
+    pub pipeline: PipelineMode,
+    /// Staging-buffer budget for `double_buffer`, in MiB per run; `0` ⇒
+    /// unlimited (bounded structurally at one block per worker). Staged
+    /// bytes are charged to the memory accountant either way, so the
+    /// cluster RAM bound still applies when `cluster.enforce_ram` is on.
+    pub staging_budget_mib: f64,
 }
 
 impl Default for CoordConfig {
@@ -254,6 +296,8 @@ impl Default for CoordConfig {
             prefetch: true,
             execution: ExecutionMode::Simulated,
             parallelism: 0,
+            pipeline: PipelineMode::Off,
+            staging_budget_mib: 0.0,
         }
     }
 }
@@ -465,6 +509,8 @@ impl Config {
             "coord.prefetch" => self.coord.prefetch = b(value)?,
             "coord.execution" => self.coord.execution = ExecutionMode::parse(&s(value)?)?,
             "coord.parallelism" => self.coord.parallelism = u(value)?,
+            "coord.pipeline" => self.coord.pipeline = PipelineMode::parse(&s(value)?)?,
+            "coord.staging_budget_mib" => self.coord.staging_budget_mib = f(value)?,
             "cluster.preset" => self.cluster.preset = s(value)?,
             "cluster.machines" => self.cluster.machines = u(value)?,
             "cluster.cores_per_machine" => self.cluster.cores_per_machine = u(value)?,
@@ -524,6 +570,17 @@ impl Config {
         }
         if self.train.microbatch == 0 {
             bail!("train.microbatch must be >= 1");
+        }
+        if self.coord.pipeline == PipelineMode::DoubleBuffer
+            && self.coord.execution != ExecutionMode::Threaded
+        {
+            bail!(
+                "coord.pipeline = \"double_buffer\" requires coord.execution = \"threaded\" \
+                 (the prefetch/flush overlap runs on real OS threads)"
+            );
+        }
+        if self.coord.staging_budget_mib < 0.0 {
+            bail!("coord.staging_budget_mib must be >= 0 (0 = unlimited)");
         }
         if self.corpus.preset == "uci" && self.corpus.path.is_empty() {
             bail!("corpus.preset = uci requires corpus.path");
@@ -618,6 +675,30 @@ machines = 10
         assert_eq!(cfg.coord.parallelism, 4);
         // Default stays the paper-figure mode.
         assert_eq!(Config::default().coord.execution, ExecutionMode::Simulated);
+    }
+
+    #[test]
+    fn pipeline_mode_parse_and_config() {
+        assert_eq!(PipelineMode::parse("off").unwrap(), PipelineMode::Off);
+        assert_eq!(PipelineMode::parse("double_buffer").unwrap(), PipelineMode::DoubleBuffer);
+        assert_eq!(PipelineMode::parse("double-buffer").unwrap(), PipelineMode::DoubleBuffer);
+        assert!(PipelineMode::parse("triple").is_err());
+        let cfg = Config::from_str(
+            "[coord]\nexecution = \"threaded\"\npipeline = \"double_buffer\"\nstaging_budget_mib = 64.0",
+        )
+        .unwrap();
+        assert_eq!(cfg.coord.pipeline, PipelineMode::DoubleBuffer);
+        assert_eq!(cfg.coord.staging_budget_mib, 64.0);
+        // Default stays off.
+        assert_eq!(Config::default().coord.pipeline, PipelineMode::Off);
+    }
+
+    #[test]
+    fn pipeline_requires_threaded_execution() {
+        let err = Config::from_str("[coord]\npipeline = \"double_buffer\"")
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("threaded"), "{err}");
     }
 
     #[test]

@@ -19,21 +19,32 @@
 //! 5. **Clock**: per-worker simulated time advances by comm + compute
 //!    (overlapped if `coord.prefetch`), then the round barrier aligns all
 //!    clocks (Algorithm 1's "once all the workers have finished").
+//!
+//! With `coord.pipeline = "double_buffer"` steps 2 and 4 leave the host
+//! critical path: blocks arrive from the staging buffer the pipelined
+//! engine ([`super::pipeline`]) filled while the *previous* round was
+//! sampling, and commits + next-round staging run on a flusher thread
+//! overlapped with the *current* round's sampling. `coord.prefetch`
+//! models that overlap in simulated time; `coord.pipeline` realizes it
+//! in host wall-clock. Model state is bit-identical either way.
+
+use std::time::Instant;
 
 use anyhow::{bail, Context, Result};
 
 use crate::cluster::simclock::barrier;
-use crate::cluster::{ClusterSpec, MemCategory, MemoryAccountant, NetworkModel, SimClock};
-use crate::config::{CkSyncPolicy, Config, ExecutionMode, SamplerKind};
+use crate::cluster::{ClusterSpec, Flow, MemCategory, MemoryAccountant, NetworkModel, SimClock};
+use crate::config::{CkSyncPolicy, Config, ExecutionMode, PipelineMode, SamplerKind};
 use crate::corpus::{self, Corpus, DataPartition};
 use crate::kvstore::{KvStore, ShardMap};
-use crate::metrics::{joint_log_likelihood_blocks, DeltaTracker};
+use crate::metrics::{joint_log_likelihood_blocks, DeltaTracker, PipelineStats};
 use crate::model::{Assignments, BlockMap, DocTopic, DocView, ShardOwnership, TopicCounts};
 use crate::sampler::xla_dense::MicrobatchExecutor;
 use crate::sampler::Params;
 use crate::util::rng::Pcg64;
 
 use super::parallel;
+use super::pipeline::{self, PipelineEngine, RoundPlan};
 use super::scheduler::RotationSchedule;
 use super::timeline::{Phase, Span, Timeline};
 use super::worker::{Backend, WorkerState};
@@ -41,6 +52,7 @@ use super::worker::{Backend, WorkerState};
 /// Per-iteration statistics.
 #[derive(Debug, Clone)]
 pub struct IterStats {
+    /// Iteration index (1-based: the count after this iteration ran).
     pub iteration: usize,
     /// Simulated cluster time at iteration end (seconds).
     pub sim_time: f64,
@@ -52,6 +64,10 @@ pub struct IterStats {
     pub comm_bytes: u64,
     /// Host compute seconds actually spent sampling this iteration.
     pub host_compute_secs: f64,
+    /// Host wall seconds this iteration's critical path spent fetching
+    /// blocks at round starts (the quantity `coord.pipeline` shrinks; see
+    /// [`crate::metrics::PipelineStats`] for the full breakdown).
+    pub fetch_stall_secs: f64,
 }
 
 /// Full training report.
@@ -59,19 +75,27 @@ pub struct IterStats {
 pub struct TrainReport {
     /// (iteration, sim_time, loglik) at each `ll_every` checkpoint.
     pub ll_series: Vec<(usize, f64, f64)>,
+    /// Per-iteration statistics, in order.
     pub iters: Vec<IterStats>,
+    /// Log-likelihood of the final state.
     pub final_loglik: f64,
     /// Max per-node peak memory (Fig 4a y-axis).
     pub peak_mem_bytes: u64,
+    /// Total communication bytes over the run.
     pub total_comm_bytes: u64,
+    /// Total tokens sampled over the run.
     pub total_tokens: u64,
+    /// Simulated cluster seconds at run end.
     pub sim_time: f64,
 }
 
 /// The model-parallel training driver.
 pub struct Driver {
+    /// The finalized experiment configuration this driver runs.
     pub cfg: Config,
+    /// The training corpus.
     pub corpus: Corpus,
+    /// LDA hyperparameters (K, V, α, β).
     pub params: Params,
     assign: Assignments,
     dt: DocTopic,
@@ -84,10 +108,18 @@ pub struct Driver {
     spec: ClusterSpec,
     net: NetworkModel,
     clocks: Vec<SimClock>,
+    /// Per-node memory accountant (Fig 4a / Table 1 OOM cells).
     pub mem: MemoryAccountant,
+    /// `Δ_{r,i}` parallelization-error tracker (Fig 3).
     pub deltas: DeltaTracker,
     /// Per-round phase trace (enabled by `output.trace`).
     pub timeline: Timeline,
+    /// Staging buffer of the pipelined prefetch engine
+    /// (`coord.pipeline = "double_buffer"`), `None` when off.
+    pipeline: Option<PipelineEngine>,
+    /// Host wall-clock transfer/compute breakdown, accumulated in every
+    /// execution mode so pipelined and baseline runs are comparable.
+    pstats: PipelineStats,
     iteration: usize,
     exec: Option<Box<dyn MicrobatchExecutor>>,
 }
@@ -178,6 +210,14 @@ impl Driver {
 
         let schedule = RotationSchedule::new(cfg.coord.workers, cfg.coord.blocks);
         let trace_enabled = cfg.output.trace;
+        let pipeline = match cfg.coord.pipeline {
+            PipelineMode::Off => None,
+            PipelineMode::DoubleBuffer => {
+                let budget =
+                    (cfg.coord.staging_budget_mib * (1u64 << 20) as f64).round() as u64;
+                Some(PipelineEngine::new(cfg.coord.workers, budget))
+            }
+        };
         Ok(Driver {
             cfg,
             corpus,
@@ -194,6 +234,8 @@ impl Driver {
             mem,
             deltas: DeltaTracker::new(),
             timeline: Timeline::new(trace_enabled),
+            pipeline,
+            pstats: PipelineStats::default(),
             iteration: 0,
             exec: None,
         })
@@ -206,14 +248,17 @@ impl Driver {
         self.exec = Some(exec);
     }
 
+    /// Simulated cluster time so far (max over worker clocks, seconds).
     pub fn sim_time(&self) -> f64 {
         self.clocks.iter().map(|c| c.now()).fold(0.0, f64::max)
     }
 
+    /// Completed iterations.
     pub fn iteration(&self) -> usize {
         self.iteration
     }
 
+    /// Number of workers in the rotation.
     pub fn num_workers(&self) -> usize {
         self.workers.len()
     }
@@ -236,8 +281,9 @@ impl Driver {
     /// FNV-1a digest of the full model state: assignments, doc–topic
     /// counts (canonicalized), resident word–topic rows and the totals.
     /// Two runs with bitwise-identical state produce equal digests — the
-    /// check `tests/threaded_determinism.rs` uses to assert that threaded
-    /// and simulated execution agree exactly.
+    /// check `tests/threaded_determinism.rs` and
+    /// `tests/pipeline_determinism.rs` use to assert that threaded,
+    /// pipelined and simulated execution agree exactly.
     pub fn model_digest(&self) -> u64 {
         fn mix(h: &mut u64, x: u64) {
             *h ^= x;
@@ -285,8 +331,11 @@ impl Driver {
     /// The compute phase runs per `coord.execution`: `Simulated` executes
     /// workers sequentially on the driver thread; `Threaded` hands the
     /// round's disjoint `(worker, block)` tasks to real OS threads
-    /// ([`parallel::run_round_threaded`]). Both paths produce the same
-    /// model state bit for bit from the same seed.
+    /// ([`parallel::run_round_threaded`]). With
+    /// `coord.pipeline = "double_buffer"` the threaded path additionally
+    /// overlaps block commits and next-round prefetch staging with
+    /// sampling ([`pipeline::run_round_pipelined`]). All paths produce
+    /// the same model state bit for bit from the same seed.
     pub fn run_iteration(&mut self) -> Result<IterStats> {
         match self.cfg.train.sampler {
             SamplerKind::InvertedXy | SamplerKind::Xla => {}
@@ -296,17 +345,18 @@ impl Driver {
                 other.name()
             ),
         }
-        if self.cfg.coord.execution == ExecutionMode::Threaded
+        if (self.cfg.coord.execution == ExecutionMode::Threaded || self.pipeline.is_some())
             && self.cfg.train.sampler != SamplerKind::InvertedXy
         {
             bail!(
-                "threaded execution supports the inverted-xy sampler; {} runs in simulated \
-                 mode (the XLA executor is a single shared device handle)",
+                "threaded/pipelined execution supports the inverted-xy sampler; {} runs in \
+                 simulated mode (the XLA executor is a single shared device handle)",
                 self.cfg.train.sampler.name()
             );
         }
         let rounds = self.schedule.rounds_per_iteration();
         let bytes_before = self.kv.total_bytes();
+        let fetch_stall_before = self.pstats.fetch_stall_secs;
         let mut tokens = 0u64;
         let mut host_secs_total = 0.0;
         let mut delta_sum = 0.0;
@@ -334,12 +384,42 @@ impl Driver {
             let t_totals = self.net.reduce_time(totals_bytes_per_worker, self.workers.len());
 
             // ---- Phase 2: block leases -----------------------------------
-            let mut leased = Vec::with_capacity(self.workers.len());
-            for w in &self.workers {
-                let b = self.schedule.block_for(w.id, round);
-                leased.push(self.kv.lease_block(b, w.machine)?);
-            }
-            let fetch_flows = self.kv.drain_flows();
+            // Pipelined mode hands over blocks prefetched into the staging
+            // buffer while the *previous* round was sampling, falling back
+            // to a synchronous fetch for anything missing (round 0, budget
+            // skips); the other modes fetch synchronously every round. Both
+            // paths time flows in deterministic worker order and account
+            // the synchronous wall time as fetch stall.
+            let machines: Vec<usize> = self.workers.iter().map(|w| w.machine).collect();
+            let (mut leased, fetch_flows, acquire_stats) = if let Some(engine) =
+                self.pipeline.as_mut()
+            {
+                // A staged block becomes this round's active block — same
+                // bytes handed over, so Staging is released as Model is
+                // charged (below) with no double count.
+                for (w, bytes) in engine.staged_bytes_by_worker().into_iter().enumerate() {
+                    if bytes > 0 {
+                        self.mem.release(machines[w], MemCategory::Staging, bytes);
+                    }
+                }
+                let (blocks, receipts, astats) =
+                    engine.acquire_round_blocks(&self.kv, &self.schedule, round, &machines)?;
+                // Flow timing comes from the worker-ordered receipts; the
+                // meter's completion-ordered pending list is discarded.
+                let flows: Vec<Flow> = receipts.iter().map(|r| r.flow()).collect();
+                let _ = self.kv.drain_flows();
+                (blocks, flows, Some(astats))
+            } else {
+                let t0 = Instant::now();
+                let mut leased = Vec::with_capacity(self.workers.len());
+                for w in &self.workers {
+                    let b = self.schedule.block_for(w.id, round);
+                    leased.push(self.kv.lease_block(b, w.machine)?);
+                }
+                self.pstats.fetch_stall_secs += t0.elapsed().as_secs_f64();
+                self.pstats.fallback_fetches += self.workers.len() as u64;
+                (leased, self.kv.drain_flows(), None)
+            };
             let fetch_times = self.net.per_flow_times(&fetch_flows);
             debug_assert_eq!(fetch_times.len(), self.workers.len());
 
@@ -349,75 +429,150 @@ impl Driver {
                 self.mem.charge(w.machine, MemCategory::Model, blk.bytes())?;
             }
 
-            // ---- Phase 3: compute ---------------------------------------
+            // ---- Phase 3 (+4 when pipelined): compute --------------------
             let mut host_secs = Vec::with_capacity(self.workers.len());
-            match self.cfg.coord.execution {
-                ExecutionMode::Simulated => {
-                    let mut docs = DocView::new(&mut self.assign.z, &mut self.dt);
-                    for (w, blk) in self.workers.iter_mut().zip(leased.iter_mut()) {
-                        let mut backend = match self.cfg.train.sampler {
-                            SamplerKind::InvertedXy => Backend::InvertedXy,
-                            SamplerKind::Xla => {
-                                let exec = self
-                                    .exec
-                                    .as_deref_mut()
-                                    .context("xla sampler selected but no executor installed")?;
-                                Backend::Xla(exec)
-                            }
-                            _ => unreachable!(),
-                        };
-                        let (n, secs) =
-                            w.run_round(&self.corpus, &mut docs, blk, &self.params, &mut backend)?;
-                        tokens += n;
-                        host_secs_total += secs;
-                        host_secs.push(secs);
+            let t_commit;
+            if self.pipeline.is_some() {
+                // Compute with block commits and next-round prefetch
+                // staging overlapped on a flusher thread
+                // ([`pipeline::run_round_pipelined`]); only the `C_k`
+                // merges stay here, on the driver thread in worker order,
+                // so the totals trajectory is identical to the other modes.
+                let budget = self.pipeline.as_ref().map_or(0, |e| e.budget_bytes());
+                let plan = RoundPlan::build(&self.schedule, round, &machines, budget);
+                let model_bytes: Vec<u64> = leased.iter().map(|b| b.bytes()).collect();
+                let out = pipeline::run_round_pipelined(
+                    &self.corpus,
+                    &self.params,
+                    &mut self.workers,
+                    std::mem::take(&mut leased),
+                    &mut self.assign.z,
+                    &mut self.dt,
+                    &self.doc_ownership,
+                    self.cfg.coord.parallelism,
+                    &self.kv,
+                    &plan,
+                )?;
+                for &(n, secs) in &out.per_worker {
+                    tokens += n;
+                    host_secs_total += secs;
+                    host_secs.push(secs);
+                }
+                let acquire = acquire_stats.expect("pipelined phase 2 produced acquire stats");
+                PipelineEngine::record_round(&mut self.pstats, &acquire, &out);
+                // Memory: during the round each consumer machine really
+                // held its active (Model) block *and* the staging buffer
+                // the flusher refilled — charge Staging before releasing
+                // Model so the accountant's peak (and `enforce_ram`) sees
+                // the double-buffering overlap.
+                for (w, s) in out.staged.iter().enumerate() {
+                    if let Some(s) = s {
+                        self.mem.charge(machines[w], MemCategory::Staging, s.block.bytes())?;
                     }
                 }
-                ExecutionMode::Threaded => {
-                    let per_worker = parallel::run_round_threaded(
-                        &self.corpus,
-                        &self.params,
-                        &mut self.workers,
-                        &mut leased,
-                        &mut self.assign.z,
-                        &mut self.dt,
-                        &self.doc_ownership,
-                        self.cfg.coord.parallelism,
-                    )?;
-                    for (n, secs) in per_worker {
-                        tokens += n;
-                        host_secs_total += secs;
-                        host_secs.push(secs);
+                for (w, bytes) in model_bytes.into_iter().enumerate() {
+                    self.mem.release(machines[w], MemCategory::Model, bytes);
+                }
+                // C_k merges: reduce half of the allreduce, worker order.
+                // Timed as flush stall so the off baseline (whose commit
+                // loop wraps the same merges) stays directly comparable.
+                let t_merge = Instant::now();
+                let mut merge_bytes_per_worker = 0u64;
+                for w in self.workers.iter_mut() {
+                    let before = self.kv.total_bytes();
+                    let delta = w.extract_totals_delta();
+                    self.kv.merge_totals_delta(&delta, w.machine);
+                    merge_bytes_per_worker = self.kv.total_bytes() - before;
+                }
+                self.pstats.flush_stall_secs += t_merge.elapsed().as_secs_f64();
+                let commit_flows: Vec<Flow> =
+                    out.commit_receipts.iter().map(|r| r.flow()).collect();
+                let _ = self.kv.drain_flows();
+                t_commit = self.net.phase_time(&commit_flows)
+                    + self.net.reduce_time(merge_bytes_per_worker, self.workers.len());
+                self.pipeline
+                    .as_mut()
+                    .expect("pipeline engine present")
+                    .install(out.staged);
+            } else {
+                let t_compute = Instant::now();
+                match self.cfg.coord.execution {
+                    ExecutionMode::Simulated => {
+                        let mut docs = DocView::new(&mut self.assign.z, &mut self.dt);
+                        for (w, blk) in self.workers.iter_mut().zip(leased.iter_mut()) {
+                            let mut backend = match self.cfg.train.sampler {
+                                SamplerKind::InvertedXy => Backend::InvertedXy,
+                                SamplerKind::Xla => {
+                                    let exec = self.exec.as_deref_mut().context(
+                                        "xla sampler selected but no executor installed",
+                                    )?;
+                                    Backend::Xla(exec)
+                                }
+                                _ => unreachable!(),
+                            };
+                            let (n, secs) = w.run_round(
+                                &self.corpus,
+                                &mut docs,
+                                blk,
+                                &self.params,
+                                &mut backend,
+                            )?;
+                            tokens += n;
+                            host_secs_total += secs;
+                            host_secs.push(secs);
+                        }
+                    }
+                    ExecutionMode::Threaded => {
+                        let per_worker = parallel::run_round_threaded(
+                            &self.corpus,
+                            &self.params,
+                            &mut self.workers,
+                            &mut leased,
+                            &mut self.assign.z,
+                            &mut self.dt,
+                            &self.doc_ownership,
+                            self.cfg.coord.parallelism,
+                        )?;
+                        for (n, secs) in per_worker {
+                            tokens += n;
+                            host_secs_total += secs;
+                            host_secs.push(secs);
+                        }
                     }
                 }
-            }
+                self.pstats.sample_secs += t_compute.elapsed().as_secs_f64();
 
-            // ---- Phase 4: commits + totals merges ------------------------
-            // Block commits are point-to-point to their shard homes; the
-            // C_k delta merge is the reduce half of the allreduce. Merges
-            // stay on the driver thread in worker order under both
-            // execution modes, so the totals trajectory is identical.
-            let mut merge_bytes_per_worker = 0u64;
-            for (w, blk) in self.workers.iter_mut().zip(leased.drain(..)) {
-                self.mem.release(w.machine, MemCategory::Model, blk.bytes());
-                self.kv.commit_block(blk, w.machine)?;
-                let before = self.kv.total_bytes();
-                let delta = w.extract_totals_delta();
-                self.kv.merge_totals_delta(&delta, w.machine);
-                merge_bytes_per_worker = self.kv.total_bytes() - before;
+                // ---- Phase 4: commits + totals merges --------------------
+                // Block commits are point-to-point to their shard homes;
+                // the C_k delta merge is the reduce half of the allreduce.
+                // Merges stay on the driver thread in worker order under
+                // both execution modes, so the totals trajectory is
+                // identical.
+                let t_flush = Instant::now();
+                let mut merge_bytes_per_worker = 0u64;
+                for (w, blk) in self.workers.iter_mut().zip(leased.drain(..)) {
+                    self.mem.release(w.machine, MemCategory::Model, blk.bytes());
+                    self.kv.commit_block(blk, w.machine)?;
+                    let before = self.kv.total_bytes();
+                    let delta = w.extract_totals_delta();
+                    self.kv.merge_totals_delta(&delta, w.machine);
+                    merge_bytes_per_worker = self.kv.total_bytes() - before;
+                }
+                // Partition the recorded transfers: commit flows timed as a
+                // phase, merge flows timed as a tree reduce.
+                let commit_flows: Vec<Flow> = self
+                    .kv
+                    .pending_transfers()
+                    .iter()
+                    .filter(|t| t.what == crate::kvstore::traffic::TransferKind::BlockCommit)
+                    .map(|t| Flow { src: t.src, dst: t.dst, bytes: t.bytes })
+                    .collect();
+                let _ = self.kv.drain_flows();
+                t_commit = self.net.phase_time(&commit_flows)
+                    + self.net.reduce_time(merge_bytes_per_worker, self.workers.len());
+                self.pstats.flush_stall_secs += t_flush.elapsed().as_secs_f64();
+                self.pstats.rounds += 1;
             }
-            // Partition the recorded transfers: commit flows timed as a
-            // phase, merge flows timed as a tree reduce.
-            let commit_flows: Vec<crate::cluster::Flow> = self
-                .kv
-                .pending_transfers()
-                .iter()
-                .filter(|t| t.what == crate::kvstore::traffic::TransferKind::BlockCommit)
-                .map(|t| crate::cluster::Flow { src: t.src, dst: t.dst, bytes: t.bytes })
-                .collect();
-            let _ = self.kv.drain_flows();
-            let t_commit = self.net.phase_time(&commit_flows)
-                + self.net.reduce_time(merge_bytes_per_worker, self.workers.len());
 
             // ---- Δ_{r,i}: truth vs worker snapshots (Fig 3) --------------
             let snaps: Vec<TopicCounts> = self.workers.iter().map(|w| w.ck.clone()).collect();
@@ -508,6 +663,14 @@ impl Driver {
             }
         }
 
+        // The last round has no lookahead, so the staging buffer is empty
+        // at every iteration boundary — the store is quiescent for
+        // `loglik`/`check_consistency` exactly as in the other modes.
+        debug_assert!(
+            self.pipeline.as_ref().map_or(true, PipelineEngine::staging_is_empty),
+            "staging buffer must drain by iteration end"
+        );
+
         self.iteration += 1;
         Ok(IterStats {
             iteration: self.iteration,
@@ -516,6 +679,7 @@ impl Driver {
             mean_delta: delta_sum / rounds as f64,
             comm_bytes: self.kv.total_bytes() - bytes_before,
             host_compute_secs: host_secs_total,
+            fetch_stall_secs: self.pstats.fetch_stall_secs - fetch_stall_before,
         })
     }
 
@@ -580,8 +744,18 @@ impl Driver {
         &self.kv
     }
 
+    /// The simulated cluster description this driver runs against.
     pub fn spec(&self) -> &ClusterSpec {
         &self.spec
+    }
+
+    /// Host wall-clock transfer/compute breakdown accumulated so far —
+    /// fetch/flush stall vs sampling time, staging hit counters. Populated
+    /// in every execution mode, so a `coord.pipeline = "off"` run is a
+    /// directly comparable stall baseline for a `"double_buffer"` run
+    /// (bench E7c).
+    pub fn pipeline_stats(&self) -> &PipelineStats {
+        &self.pstats
     }
 }
 
@@ -699,6 +873,69 @@ machines = {workers}
     }
 
     #[test]
+    fn pipelined_matches_simulated_and_threaded_bitwise() {
+        let run = |mode: &str, pipeline: &str| {
+            let mut cfg = tiny_cfg(4, "inverted-xy");
+            cfg.coord.execution = crate::config::ExecutionMode::parse(mode).unwrap();
+            cfg.coord.pipeline = crate::config::PipelineMode::parse(pipeline).unwrap();
+            cfg.coord.parallelism = 4;
+            let mut d = Driver::new(&cfg).unwrap();
+            let report = d.run(3, |_, _| {}).unwrap();
+            d.check_consistency().unwrap();
+            (d.model_digest(), report.final_loglik, report.total_tokens)
+        };
+        let (dig_sim, ll_sim, tok_sim) = run("simulated", "off");
+        let (dig_thr, ll_thr, tok_thr) = run("threaded", "off");
+        let (dig_pip, ll_pip, tok_pip) = run("threaded", "double_buffer");
+        assert_eq!(dig_sim, dig_thr);
+        assert_eq!(dig_thr, dig_pip, "pipelining must not change model state");
+        assert_eq!(ll_sim.to_bits(), ll_pip.to_bits());
+        assert_eq!(tok_sim, tok_pip);
+        assert_eq!(ll_thr.to_bits(), ll_pip.to_bits());
+        assert_eq!(tok_thr, tok_pip);
+    }
+
+    #[test]
+    fn pipelined_run_stages_blocks_and_reports_stall() {
+        let mut cfg = tiny_cfg(4, "inverted-xy");
+        cfg.coord.execution = crate::config::ExecutionMode::Threaded;
+        cfg.coord.pipeline = crate::config::PipelineMode::DoubleBuffer;
+        let mut d = Driver::new(&cfg).unwrap();
+        let stats = d.run_iteration().unwrap();
+        let p = d.pipeline_stats();
+        // Round 0 fetches synchronously, every later round is fully staged.
+        let rounds = 4u64; // blocks = workers = 4
+        assert_eq!(p.rounds, rounds);
+        assert_eq!(p.fallback_fetches, 4);
+        assert_eq!(p.staged_hits, (rounds - 1) * 4);
+        assert_eq!(p.budget_skips, 0);
+        assert!(stats.fetch_stall_secs >= 0.0);
+        // Prefetch traffic is metered as overlapped bytes.
+        assert!(d.kv().overlapped_bytes() > 0);
+        d.check_consistency().unwrap();
+    }
+
+    #[test]
+    fn pipelined_budget_skips_fall_back_deterministically() {
+        let digest = |budget_mib: f64| {
+            let mut cfg = tiny_cfg(3, "inverted-xy");
+            cfg.coord.execution = crate::config::ExecutionMode::Threaded;
+            cfg.coord.pipeline = crate::config::PipelineMode::DoubleBuffer;
+            cfg.coord.staging_budget_mib = budget_mib;
+            let mut d = Driver::new(&cfg).unwrap();
+            d.run(2, |_, _| {}).unwrap();
+            d.check_consistency().unwrap();
+            (d.model_digest(), d.pipeline_stats().budget_skips)
+        };
+        let (dig_unlimited, skips_unlimited) = digest(0.0);
+        // ~1 byte of budget: every prefetch is skipped.
+        let (dig_capped, skips_capped) = digest(1e-6);
+        assert_eq!(skips_unlimited, 0);
+        assert!(skips_capped > 0, "tiny budget must skip prefetches");
+        assert_eq!(dig_unlimited, dig_capped, "budget skips must not change state");
+    }
+
+    #[test]
     fn threaded_rejects_xla_backend() {
         let mut cfg = tiny_cfg(2, "xla");
         cfg.coord.execution = crate::config::ExecutionMode::Threaded;
@@ -708,7 +945,7 @@ machines = {workers}
             64, 16, &params,
         )));
         let err = d.run_iteration().unwrap_err().to_string();
-        assert!(err.contains("threaded execution"), "{err}");
+        assert!(err.contains("threaded/pipelined execution"), "{err}");
     }
 
     #[test]

@@ -10,15 +10,21 @@
 //! * [`parallel`] — the threaded execution engine: runs a round's
 //!   `(worker, block)` tasks on real OS threads, lock-free by round
 //!   disjointness (`coord.execution = "threaded"`).
+//! * [`pipeline`] — the pipelined block-prefetch engine: double-buffers
+//!   model blocks per worker so KV-store commits and next-round prefetch
+//!   staging overlap with sampling (`coord.pipeline = "double_buffer"`,
+//!   §3.2 "can be further accelerated").
 
 pub mod scheduler;
 pub mod worker;
 pub mod driver;
 pub mod parallel;
+pub mod pipeline;
 pub mod timeline;
 
 pub use driver::{Driver, IterStats, TrainReport};
 pub use parallel::run_round_threaded;
+pub use pipeline::{run_round_pipelined, PipelineEngine, RoundPlan};
 pub use scheduler::RotationSchedule;
 pub use timeline::{Phase, Timeline};
 pub use worker::WorkerState;

@@ -1,0 +1,668 @@
+//! The pipelined block-prefetch engine: §3.2's "can be further
+//! accelerated by fetching the next model block when sampling the current
+//! one", made real on host threads.
+//!
+//! PR-1's threaded engine still ran every round strictly as
+//! fetch → sample → flush on the driver thread's critical path. This
+//! module double-buffers model blocks per worker instead
+//! (`coord.pipeline = "double_buffer"`): while sampler threads work on
+//! the current round's blocks, a dedicated **flusher/prefetcher thread**
+//! commits each finished block back to the [`KvStore`] and immediately
+//! re-leases it into a **staging buffer** for the worker that needs it
+//! next round ([`KvStore::stage_block`]). At the next round start the
+//! staged blocks are handed over in O(1) — the wire encode/decode work
+//! that used to stall every round now runs overlapped with sampling, and
+//! only the *last* finisher's flush remains on the critical path.
+//!
+//! Two structural facts of Algorithm 1 make this safe and cheap:
+//!
+//! 1. **The rotation is a handoff chain.** The block worker `w` needs in
+//!    round `r+1` is exactly the block worker `w+1` commits in round `r`
+//!    ([`RotationSchedule::consumer_of`], unit-tested in `scheduler`). So
+//!    "prefetch the next block" degenerates to "stage each block for its
+//!    consumer right after committing it" — no waiting, no polling.
+//! 2. **Blocks that sit a round out (`B > P`) are free.** Nobody holds
+//!    them, so the flusher stages them the moment the round starts,
+//!    overlapping with the entire sampling phase.
+//!
+//! **Determinism.** Pipelining changes *when* transfers happen, never
+//! *what* is transferred: a staged block's contents equal what a
+//! round-start fetch would have returned (the store is idle between a
+//! block's commit and its next lease), sampler threads run the identical
+//! per-worker RNG streams and `C_k` snapshots as the plain threaded
+//! engine, and `C_k` delta merges stay on the driver thread in worker
+//! order. Pipelined runs are therefore **bitwise identical** to
+//! `simulated` and `threaded` runs from the same seed — asserted against
+//! `Driver::model_digest` by `tests/pipeline_determinism.rs`.
+//!
+//! **Memory.** Double buffering costs at most one extra resident block
+//! per worker. The staging buffer is charged to the memory accountant
+//! under `MemCategory::Staging`, and `coord.staging_budget_mib` caps it:
+//! a prefetch that would exceed the budget is skipped (counted in
+//! [`PipelineStats::budget_skips`]) and that block falls back to a
+//! synchronous round-start fetch. See DESIGN.md §Pipelining for the
+//! budget math.
+
+use std::sync::mpsc;
+use std::time::Instant;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::corpus::Corpus;
+use crate::kvstore::{KvStore, LeaseReceipt};
+use crate::metrics::PipelineStats;
+use crate::model::{DocTopic, DocView, ModelBlock, ShardOwnership};
+use crate::sampler::Params;
+
+use super::scheduler::RotationSchedule;
+use super::worker::{Backend, WorkerState};
+
+/// A prefetched block parked in the staging buffer until its round
+/// starts, with the receipt of the (overlapped) transfer that brought it.
+pub struct StagedBlock {
+    /// The leased block, ready for hand-over.
+    pub block: ModelBlock,
+    /// Endpoints/bytes of the prefetch flow (charged to the consuming
+    /// round's fetch lane in simulated time).
+    pub receipt: LeaseReceipt,
+}
+
+/// What the flusher must do with each finished block of a round, plus the
+/// prefetches that need no commit first. Built once per round by
+/// [`RoundPlan::build`] from the schedule lookahead — pure data, so the
+/// flusher thread never touches the scheduler.
+pub struct RoundPlan {
+    /// Machine of each worker position (commit source, stage target).
+    pub machines: Vec<usize>,
+    /// Per worker position `i`: after committing `i`'s block, stage that
+    /// same block for `(consumer_worker, consumer_machine)` — the rotation
+    /// handoff. `None` on the horizon's last round.
+    pub stage_after_commit: Vec<Option<(usize, usize)>>,
+    /// Next-round blocks that are resident all round (`B > P`): stage
+    /// `(consumer_worker, block, consumer_machine)` immediately.
+    pub free_prefetch: Vec<(usize, u32, usize)>,
+    /// Staging budget in heap bytes; `0` = unlimited.
+    pub budget_bytes: u64,
+}
+
+impl RoundPlan {
+    /// Derive the plan for `round` from the schedule lookahead.
+    pub fn build(
+        schedule: &RotationSchedule,
+        round: usize,
+        machines: &[usize],
+        budget_bytes: u64,
+    ) -> RoundPlan {
+        let n = machines.len();
+        debug_assert_eq!(schedule.num_workers(), n);
+        let horizon = schedule.rounds_per_iteration();
+        let mut stage_after_commit: Vec<Option<(usize, usize)>> = vec![None; n];
+        let mut free_prefetch = Vec::new();
+        for w in 0..n {
+            if let Some(next) = schedule.next_block_for(w, round, horizon) {
+                match schedule.consumer_of(next, round) {
+                    // Held this round: stage right after its holder commits.
+                    Some(holder) => stage_after_commit[holder] = Some((w, machines[w])),
+                    // Sitting the round out: stage immediately.
+                    None => free_prefetch.push((w, next, machines[w])),
+                }
+            }
+        }
+        RoundPlan {
+            machines: machines.to_vec(),
+            stage_after_commit,
+            free_prefetch,
+            budget_bytes,
+        }
+    }
+}
+
+/// Everything a pipelined round produced, in deterministic worker order.
+pub struct PipelinedRound {
+    /// `(tokens, host-cpu-seconds)` per worker position.
+    pub per_worker: Vec<(u64, f64)>,
+    /// Commit receipts per worker position (for network-phase timing).
+    pub commit_receipts: Vec<LeaseReceipt>,
+    /// Blocks staged for the next round, indexed by consumer worker.
+    pub staged: Vec<Option<StagedBlock>>,
+    /// Prefetches skipped by the staging budget this round.
+    pub budget_skips: u64,
+    /// Wall seconds of the sampling phase (spawn → last sampler done).
+    pub sample_wall_secs: f64,
+    /// Wall seconds the flusher kept running *after* sampling ended — the
+    /// only transfer time left on the critical path.
+    pub flush_stall_secs: f64,
+}
+
+/// Counters from a round-start staging-buffer hand-over
+/// ([`PipelineEngine::acquire_round_blocks`]).
+#[derive(Debug, Default, Clone, Copy)]
+pub struct AcquireStats {
+    /// Wall seconds spent on synchronous (non-overlapped) fetches.
+    pub stall_secs: f64,
+    /// Blocks served from the staging buffer.
+    pub staged_hits: u64,
+    /// Blocks fetched synchronously (round 0, budget skips).
+    pub fallback_fetches: u64,
+}
+
+/// The per-driver staging state: at most one prefetched block per worker
+/// (double buffering), carried across rounds within an iteration. The
+/// buffer is empty at iteration boundaries — the last round has no
+/// lookahead — so the store stays quiescent for log-likelihood and
+/// consistency checks between iterations.
+pub struct PipelineEngine {
+    staged: Vec<Option<StagedBlock>>,
+    budget_bytes: u64,
+}
+
+impl PipelineEngine {
+    /// An engine for `workers` worker positions under a staging budget of
+    /// `budget_bytes` heap bytes (`0` = unlimited).
+    pub fn new(workers: usize, budget_bytes: u64) -> PipelineEngine {
+        PipelineEngine { staged: (0..workers).map(|_| None).collect(), budget_bytes }
+    }
+
+    /// The configured staging budget in bytes (`0` = unlimited).
+    pub fn budget_bytes(&self) -> u64 {
+        self.budget_bytes
+    }
+
+    /// True when nothing is staged (holds at every iteration boundary).
+    pub fn staging_is_empty(&self) -> bool {
+        self.staged.iter().all(Option::is_none)
+    }
+
+    /// Heap bytes currently staged, per consumer worker — what the driver
+    /// charges to `MemCategory::Staging` on each worker's machine.
+    pub fn staged_bytes_by_worker(&self) -> Vec<u64> {
+        self.staged
+            .iter()
+            .map(|s| s.as_ref().map_or(0, |s| s.block.bytes()))
+            .collect()
+    }
+
+    /// Park a round's prefetched blocks for the next round.
+    pub fn install(&mut self, staged: Vec<Option<StagedBlock>>) {
+        debug_assert_eq!(staged.len(), self.staged.len());
+        debug_assert!(
+            self.staging_is_empty(),
+            "previous round's staging must be consumed before installing"
+        );
+        self.staged = staged;
+    }
+
+    /// Hand over the round's blocks in worker order: staged blocks leave
+    /// the buffer in O(1); anything missing (round 0 of an iteration,
+    /// budget-skipped prefetches) is fetched synchronously — that time is
+    /// the round's fetch stall. Returns the blocks, their fetch/prefetch
+    /// receipts (worker order, for deterministic flow timing), and the
+    /// stall counters.
+    pub fn acquire_round_blocks(
+        &mut self,
+        kv: &KvStore,
+        schedule: &RotationSchedule,
+        round: usize,
+        machines: &[usize],
+    ) -> Result<(Vec<ModelBlock>, Vec<LeaseReceipt>, AcquireStats)> {
+        let n = machines.len();
+        debug_assert_eq!(self.staged.len(), n);
+        let mut blocks = Vec::with_capacity(n);
+        let mut receipts = Vec::with_capacity(n);
+        let mut stats = AcquireStats::default();
+        for w in 0..n {
+            let want = schedule.block_for(w, round);
+            match self.staged[w].take() {
+                Some(s) if s.block.id == want => {
+                    stats.staged_hits += 1;
+                    blocks.push(s.block);
+                    receipts.push(s.receipt);
+                }
+                other => {
+                    if let Some(stray) = other {
+                        // A staged block that is not the scheduled one can
+                        // only come from driving the engine off-schedule;
+                        // return it so the store stays consistent.
+                        kv.commit_block(stray.block, machines[w])?;
+                    }
+                    let t0 = Instant::now();
+                    let (b, receipt) = kv.lease_block_with_receipt(want, machines[w])?;
+                    stats.stall_secs += t0.elapsed().as_secs_f64();
+                    stats.fallback_fetches += 1;
+                    blocks.push(b);
+                    receipts.push(receipt);
+                }
+            }
+        }
+        Ok((blocks, receipts, stats))
+    }
+
+    /// Fold a round's outcome into a [`PipelineStats`] accumulator.
+    pub fn record_round(stats: &mut PipelineStats, acquire: &AcquireStats, round: &PipelinedRound) {
+        stats.fetch_stall_secs += acquire.stall_secs;
+        stats.staged_hits += acquire.staged_hits;
+        stats.fallback_fetches += acquire.fallback_fetches;
+        stats.flush_stall_secs += round.flush_stall_secs;
+        stats.sample_secs += round.sample_wall_secs;
+        stats.budget_skips += round.budget_skips;
+        stats.rounds += 1;
+    }
+}
+
+/// Run one round with sampling and block transfers overlapped: sampler
+/// threads (chunked like [`super::parallel::run_round_threaded`], same
+/// disjointness argument) hand each finished block to a flusher thread
+/// that commits it and stages it for its next-round consumer per `plan`.
+/// `blocks[i]` must be the block leased to `workers[i]`; ownership moves
+/// into the store/staging buffer, which is why `blocks` is taken by
+/// value. Totals (`C_k`) delta extraction and merging are **not** done
+/// here — the driver merges in worker order afterwards, exactly as in
+/// the other execution modes.
+#[allow(clippy::too_many_arguments)]
+pub fn run_round_pipelined(
+    corpus: &Corpus,
+    params: &Params,
+    workers: &mut [WorkerState],
+    blocks: Vec<ModelBlock>,
+    z: &mut [Vec<u32>],
+    dt: &mut DocTopic,
+    ownership: &ShardOwnership,
+    parallelism: usize,
+    kv: &KvStore,
+    plan: &RoundPlan,
+) -> Result<PipelinedRound> {
+    let n = workers.len();
+    assert_eq!(blocks.len(), n, "one leased block per worker");
+    assert_eq!(ownership.num_shards(), n, "one ownership shard per worker");
+    assert_eq!(plan.machines.len(), n, "one machine per worker");
+    assert_eq!(plan.stage_after_commit.len(), n, "one handoff slot per worker");
+    if n == 0 {
+        return Ok(PipelinedRound {
+            per_worker: Vec::new(),
+            commit_receipts: Vec::new(),
+            staged: Vec::new(),
+            budget_skips: 0,
+            sample_wall_secs: 0.0,
+            flush_stall_secs: 0.0,
+        });
+    }
+
+    // Disjoint per-shard views of the shared document state — identical
+    // safety argument to the plain threaded engine.
+    let views = DocView::split_disjoint(z, dt, ownership);
+    let mut items: Vec<(usize, &mut WorkerState, Option<ModelBlock>, DocView<'_>)> = workers
+        .iter_mut()
+        .zip(blocks)
+        .zip(views)
+        .enumerate()
+        .map(|(i, ((w, b), v))| (i, w, Some(b), v))
+        .collect();
+
+    let threads = if parallelism == 0 { n } else { parallelism.clamp(1, n) };
+    let chunk = items.len().div_ceil(threads);
+
+    let (tx, rx) = mpsc::channel::<(usize, ModelBlock)>();
+    let mut results = vec![(0u64, 0.0f64); n];
+    let mut sample_wall_secs = 0.0f64;
+    let mut flush_stall_secs = 0.0f64;
+    let t_round = Instant::now();
+
+    let outcome = std::thread::scope(|scope| -> Result<FlushOutcome> {
+        let flusher = scope.spawn(move || flush_loop(kv, plan, rx));
+        let mut handles = Vec::with_capacity(threads);
+        for chunk_items in items.chunks_mut(chunk) {
+            let tx = tx.clone();
+            handles.push(scope.spawn(move || -> Result<Vec<(usize, u64, f64)>> {
+                let mut out = Vec::with_capacity(chunk_items.len());
+                for (i, w, slot, v) in chunk_items.iter_mut() {
+                    let mut block = slot.take().expect("block present before sampling");
+                    let mut backend = Backend::InvertedXy;
+                    let (tokens, secs) =
+                        w.run_round(corpus, v, &mut block, params, &mut backend)?;
+                    // The overlap: hand the dirty block to the flusher so
+                    // its commit + next-round staging run while remaining
+                    // workers are still sampling.
+                    tx.send((*i, block))
+                        .map_err(|_| anyhow!("flusher thread exited early"))?;
+                    out.push((*i, tokens, secs));
+                }
+                Ok(out)
+            }));
+        }
+        // Close the channel once every sampler clone is dropped.
+        drop(tx);
+        for h in handles {
+            let per = h.join().map_err(|_| anyhow!("worker thread panicked"))??;
+            for (i, tokens, secs) in per {
+                results[i] = (tokens, secs);
+            }
+        }
+        sample_wall_secs = t_round.elapsed().as_secs_f64();
+        let t_flush = Instant::now();
+        let outcome = flusher.join().map_err(|_| anyhow!("flusher thread panicked"))??;
+        flush_stall_secs = t_flush.elapsed().as_secs_f64();
+        Ok(outcome)
+    })?;
+
+    Ok(PipelinedRound {
+        per_worker: results,
+        commit_receipts: outcome.commit_receipts,
+        staged: outcome.staged,
+        budget_skips: outcome.budget_skips,
+        sample_wall_secs,
+        flush_stall_secs,
+    })
+}
+
+struct FlushOutcome {
+    staged: Vec<Option<StagedBlock>>,
+    commit_receipts: Vec<LeaseReceipt>,
+    budget_skips: u64,
+}
+
+/// The flusher/prefetcher body: free prefetches first (they overlap the
+/// whole sampling phase), then commit-and-stage each dirty block in
+/// completion order until the channel closes.
+fn flush_loop(
+    kv: &KvStore,
+    plan: &RoundPlan,
+    rx: mpsc::Receiver<(usize, ModelBlock)>,
+) -> Result<FlushOutcome> {
+    let n = plan.machines.len();
+    let mut staged: Vec<Option<StagedBlock>> = (0..n).map(|_| None).collect();
+    let mut receipts: Vec<Option<LeaseReceipt>> = vec![None; n];
+    let mut staged_bytes = 0u64;
+    let mut budget_skips = 0u64;
+    let fits = |used: u64, add: u64| plan.budget_bytes == 0 || used + add <= plan.budget_bytes;
+
+    for &(consumer, block, machine) in &plan.free_prefetch {
+        let bytes = kv
+            .resident_block_bytes(block)
+            .with_context(|| format!("free-prefetch block {block} not resident"))?;
+        if fits(staged_bytes, bytes) {
+            let (b, receipt) = kv.stage_block(block, machine)?;
+            staged_bytes += bytes;
+            staged[consumer] = Some(StagedBlock { block: b, receipt });
+        } else {
+            budget_skips += 1;
+        }
+    }
+
+    for (i, block) in rx {
+        let id = block.id;
+        let mem_bytes = block.bytes();
+        let receipt = kv.commit_block_with_receipt(block, plan.machines[i])?;
+        receipts[i] = Some(receipt);
+        if let Some((consumer, machine)) = plan.stage_after_commit[i] {
+            if fits(staged_bytes, mem_bytes) {
+                let (b, receipt) = kv.stage_block(id, machine)?;
+                staged_bytes += mem_bytes;
+                staged[consumer] = Some(StagedBlock { block: b, receipt });
+            } else {
+                budget_skips += 1;
+            }
+        }
+    }
+
+    let commit_receipts = receipts
+        .into_iter()
+        .enumerate()
+        .map(|(i, r)| r.with_context(|| format!("worker {i} finished without committing")))
+        .collect::<Result<Vec<_>>>()?;
+    Ok(FlushOutcome { staged, commit_receipts, budget_skips })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::ClusterSpec;
+    use crate::config::Config;
+    use crate::corpus::partition::DataPartition;
+    use crate::corpus::synthetic::{generate, GenSpec};
+    use crate::kvstore::ShardMap;
+    use crate::model::{Assignments, BlockMap};
+    use crate::util::rng::Pcg64;
+
+    struct Fixture {
+        corpus: Corpus,
+        assign: Assignments,
+        dt: DocTopic,
+        kv: KvStore,
+        schedule: RotationSchedule,
+        workers: Vec<WorkerState>,
+        own: ShardOwnership,
+        params: Params,
+        machines: Vec<usize>,
+    }
+
+    fn fixture(seed: u64, num_workers: usize, num_blocks: usize, k: usize) -> Fixture {
+        let corpus = generate(&GenSpec {
+            vocab: 240,
+            docs: 80,
+            avg_doc_len: 24,
+            zipf_s: 1.05,
+            topics: 6,
+            alpha: 0.1,
+            seed,
+        });
+        let mut rng = Pcg64::new(seed ^ 0x5eed);
+        let assign = Assignments::random(&corpus, k, &mut rng);
+        let (dt, wt, ck) = assign.build_counts(&corpus);
+        let map = BlockMap::strided(corpus.num_words(), num_blocks);
+        let blocks = Assignments::build_blocks(&wt, &map);
+        let cfg = Config::from_str(&format!(
+            "[cluster]\npreset = \"custom\"\nmachines = {num_workers}"
+        ))
+        .unwrap();
+        let spec = ClusterSpec::from_config(&cfg.cluster);
+        let shards = ShardMap::round_robin(num_blocks, &spec);
+        let kv = KvStore::new(blocks, ck.clone(), shards);
+        let part = DataPartition::balanced(&corpus, num_workers);
+        let workers: Vec<WorkerState> = (0..num_workers)
+            .map(|w| {
+                let home = spec.worker_home(w);
+                let mut ws =
+                    WorkerState::new(w, home, part.shards[w].clone(), &corpus, k, seed);
+                ws.install_totals(ck.clone());
+                ws
+            })
+            .collect();
+        let shard_refs: Vec<&[u32]> = part.shards.iter().map(|s| s.as_slice()).collect();
+        let own = ShardOwnership::build(&shard_refs, corpus.num_docs());
+        let params = Params::new(k, corpus.num_words(), 0.1, 0.01);
+        let machines = workers.iter().map(|w| w.machine).collect();
+        let schedule = RotationSchedule::new(num_workers, num_blocks);
+        Fixture { corpus, assign, dt, kv, schedule, workers, own, params, machines }
+    }
+
+    /// Drive a full iteration through the engine; returns total tokens.
+    fn run_iteration(fx: &mut Fixture, parallelism: usize, budget: u64) -> u64 {
+        let mut engine = PipelineEngine::new(fx.workers.len(), budget);
+        let rounds = fx.schedule.rounds_per_iteration();
+        let mut tokens = 0u64;
+        for round in 0..rounds {
+            let (blocks, _receipts, _astats) = engine
+                .acquire_round_blocks(&fx.kv, &fx.schedule, round, &fx.machines)
+                .unwrap();
+            let plan = RoundPlan::build(&fx.schedule, round, &fx.machines, budget);
+            let out = run_round_pipelined(
+                &fx.corpus,
+                &fx.params,
+                &mut fx.workers,
+                blocks,
+                &mut fx.assign.z,
+                &mut fx.dt,
+                &fx.own,
+                parallelism,
+                &fx.kv,
+                &plan,
+            )
+            .unwrap();
+            tokens += out.per_worker.iter().map(|r| r.0).sum::<u64>();
+            // Merge totals in worker order, as the driver does.
+            for w in fx.workers.iter_mut() {
+                let delta = w.extract_totals_delta();
+                fx.kv.merge_totals_delta(&delta, w.machine);
+            }
+            engine.install(out.staged);
+        }
+        assert!(engine.staging_is_empty(), "staging must drain by iteration end");
+        tokens
+    }
+
+    /// Sequential (simulated-style) reference over the same schedule.
+    fn run_iteration_sequential(fx: &mut Fixture) -> u64 {
+        let rounds = fx.schedule.rounds_per_iteration();
+        let mut tokens = 0u64;
+        for round in 0..rounds {
+            let mut docs = DocView::new(&mut fx.assign.z, &mut fx.dt);
+            let mut held = Vec::new();
+            for w in fx.workers.iter_mut() {
+                let b = fx.schedule.block_for(w.id, round);
+                let mut blk = fx.kv.lease_block(b, w.machine).unwrap();
+                let mut backend = Backend::InvertedXy;
+                let (n, _) =
+                    w.run_round(&fx.corpus, &mut docs, &mut blk, &fx.params, &mut backend).unwrap();
+                tokens += n;
+                held.push(blk);
+            }
+            for (w, blk) in fx.workers.iter_mut().zip(held) {
+                fx.kv.commit_block(blk, w.machine).unwrap();
+                let delta = w.extract_totals_delta();
+                fx.kv.merge_totals_delta(&delta, w.machine);
+            }
+        }
+        tokens
+    }
+
+    fn digest(fx: &Fixture) -> (Vec<Vec<u32>>, Vec<i64>, Vec<u32>) {
+        let rows = fx.kv.with_resident_blocks(|blocks| {
+            let mut rows = Vec::new();
+            for b in blocks {
+                for (i, row) in b.rows.iter().enumerate() {
+                    let mut entries: Vec<(u32, u32)> = row.iter().collect();
+                    entries.sort_unstable();
+                    rows.push((b.word_at(i), entries));
+                }
+            }
+            rows.sort_by_key(|(w, _)| *w);
+            rows.into_iter().map(|(w, _)| w).collect::<Vec<u32>>()
+        });
+        (
+            fx.assign.z.clone(),
+            fx.kv.totals_snapshot().as_slice().to_vec(),
+            rows,
+        )
+    }
+
+    /// Full word–topic state comparison (not just word ids).
+    fn wt_state(fx: &Fixture) -> Vec<(u32, Vec<(u32, u32)>)> {
+        fx.kv.with_resident_blocks(|blocks| {
+            let mut rows = Vec::new();
+            for b in blocks {
+                for (i, row) in b.rows.iter().enumerate() {
+                    let mut entries: Vec<(u32, u32)> = row.iter().collect();
+                    entries.sort_unstable();
+                    rows.push((b.word_at(i), entries));
+                }
+            }
+            rows.sort_by_key(|(w, _)| *w);
+            rows
+        })
+    }
+
+    #[test]
+    fn pipelined_iteration_is_bitwise_identical_to_sequential() {
+        let mut seq = fixture(7, 4, 4, 12);
+        let mut pip = fixture(7, 4, 4, 12);
+        let t_seq = run_iteration_sequential(&mut seq);
+        let t_pip = run_iteration(&mut pip, 4, 0);
+        assert_eq!(t_seq, t_pip, "every token sampled exactly once");
+        assert_eq!(digest(&seq), digest(&pip));
+        assert_eq!(wt_state(&seq), wt_state(&pip));
+        assert_eq!(seq.dt.docs, pip.dt.docs);
+        pip.kv.check_quiescent_consistency(12).unwrap();
+    }
+
+    #[test]
+    fn rectangular_schedule_free_prefetch_path() {
+        // B > P: some blocks sit rounds out and take the free-prefetch
+        // path; results still bitwise identical.
+        let mut seq = fixture(11, 3, 5, 8);
+        let mut pip = fixture(11, 3, 5, 8);
+        run_iteration_sequential(&mut seq);
+        run_iteration(&mut pip, 2, 0);
+        assert_eq!(digest(&seq), digest(&pip));
+        assert_eq!(wt_state(&seq), wt_state(&pip));
+    }
+
+    #[test]
+    fn zero_budget_means_unlimited_and_tiny_budget_skips() {
+        // budget = 1 byte: every prefetch is skipped, every round falls
+        // back to synchronous fetches — and the state still matches.
+        let mut free = fixture(13, 3, 3, 8);
+        let mut capped = fixture(13, 3, 3, 8);
+        run_iteration(&mut free, 3, 0);
+        run_iteration(&mut capped, 3, 1);
+        assert_eq!(digest(&free), digest(&capped));
+        assert_eq!(wt_state(&free), wt_state(&capped));
+    }
+
+    #[test]
+    fn engine_counts_hits_and_fallbacks() {
+        let mut fx = fixture(17, 4, 4, 8);
+        let mut engine = PipelineEngine::new(4, 0);
+        let mut stats = PipelineStats::default();
+        let rounds = fx.schedule.rounds_per_iteration();
+        for round in 0..rounds {
+            let (blocks, receipts, astats) = engine
+                .acquire_round_blocks(&fx.kv, &fx.schedule, round, &fx.machines)
+                .unwrap();
+            assert_eq!(receipts.len(), 4);
+            let plan = RoundPlan::build(&fx.schedule, round, &fx.machines, 0);
+            let out = run_round_pipelined(
+                &fx.corpus,
+                &fx.params,
+                &mut fx.workers,
+                blocks,
+                &mut fx.assign.z,
+                &mut fx.dt,
+                &fx.own,
+                0,
+                &fx.kv,
+                &plan,
+            )
+            .unwrap();
+            PipelineEngine::record_round(&mut stats, &astats, &out);
+            for w in fx.workers.iter_mut() {
+                let delta = w.extract_totals_delta();
+                fx.kv.merge_totals_delta(&delta, w.machine);
+            }
+            engine.install(out.staged);
+        }
+        // Round 0 fetches synchronously; every later round is fully staged.
+        assert_eq!(stats.fallback_fetches, 4);
+        assert_eq!(stats.staged_hits, (rounds as u64 - 1) * 4);
+        assert_eq!(stats.budget_skips, 0);
+        assert_eq!(stats.rounds, rounds as u64);
+        // Prefetch traffic was metered as overlapped bytes.
+        assert!(fx.kv.overlapped_bytes() > 0);
+    }
+
+    #[test]
+    fn plan_splits_handoffs_and_free_prefetches() {
+        let machines: Vec<usize> = vec![0, 1, 2];
+        let s = RotationSchedule::new(3, 5);
+        let plan = RoundPlan::build(&s, 0, &machines, 0);
+        // Worker w's next block is held by worker w+1 (handoff) except the
+        // last worker, whose next block sits this round out.
+        assert_eq!(plan.stage_after_commit[1], Some((0, 0)));
+        assert_eq!(plan.stage_after_commit[2], Some((1, 1)));
+        assert_eq!(plan.stage_after_commit[0], None);
+        assert_eq!(plan.free_prefetch, vec![(2, 3, 2)]);
+        // Last round: nothing to stage at all.
+        let last = RoundPlan::build(&s, s.rounds_per_iteration() - 1, &machines, 0);
+        assert!(last.stage_after_commit.iter().all(Option::is_none));
+        assert!(last.free_prefetch.is_empty());
+    }
+}

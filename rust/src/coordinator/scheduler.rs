@@ -29,10 +29,12 @@ impl RotationSchedule {
         RotationSchedule { workers, blocks }
     }
 
+    /// Number of workers `P` in the rotation.
     pub fn num_workers(&self) -> usize {
         self.workers
     }
 
+    /// Number of model blocks `B` in the rotation.
     pub fn num_blocks(&self) -> usize {
         self.blocks
     }
@@ -54,6 +56,42 @@ impl RotationSchedule {
     /// The tasks of one round: `(worker, block)` pairs.
     pub fn round_tasks(&self, round: usize) -> Vec<(usize, u32)> {
         (0..self.workers).map(|w| (w, self.block_for(w, round))).collect()
+    }
+
+    /// Lookahead for the pipelined prefetch engine: the block `worker`
+    /// will hold in the round *after* `round`, or `None` when `round` is
+    /// the last round of a `horizon_rounds`-round horizon (there is
+    /// nothing left to prefetch — the staging buffer must drain so the
+    /// store is quiescent at the horizon boundary).
+    #[inline]
+    pub fn next_block_for(
+        &self,
+        worker: usize,
+        round: usize,
+        horizon_rounds: usize,
+    ) -> Option<u32> {
+        if round + 1 >= horizon_rounds {
+            None
+        } else {
+            Some(self.block_for(worker, round + 1))
+        }
+    }
+
+    /// Inverse of [`RotationSchedule::block_for`]: the worker holding
+    /// `block` in `round`, or `None` if the block sits out that round
+    /// (possible only when `B > P`). The prefetch engine uses this to
+    /// decide whether a next-round block must wait for its current
+    /// holder's commit or can be staged from the store immediately.
+    #[inline]
+    pub fn consumer_of(&self, block: u32, round: usize) -> Option<usize> {
+        debug_assert!((block as usize) < self.blocks);
+        let b = block as usize;
+        let w = (b + self.blocks - round % self.blocks) % self.blocks;
+        if w < self.workers {
+            Some(w)
+        } else {
+            None
+        }
     }
 
     /// Check round disjointness for a specific round.
@@ -134,5 +172,76 @@ mod tests {
     fn schedule_is_periodic() {
         let s = RotationSchedule::new(2, 4);
         assert_eq!(s.block_for(1, 3), s.block_for(1, 7));
+    }
+
+    #[test]
+    fn lookahead_matches_next_round_assignment() {
+        let s = RotationSchedule::new(4, 4);
+        let rounds = s.rounds_per_iteration();
+        for r in 0..rounds - 1 {
+            for w in 0..4 {
+                assert_eq!(
+                    s.next_block_for(w, r, rounds),
+                    Some(s.block_for(w, r + 1)),
+                    "worker {w} round {r}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn lookahead_is_none_at_the_last_round() {
+        // Square and rectangular schedules: the final round of the horizon
+        // has nothing to prefetch, and past-the-end rounds don't either.
+        for (workers, blocks) in [(4usize, 4usize), (3, 7), (1, 5)] {
+            let s = RotationSchedule::new(workers, blocks);
+            let rounds = s.rounds_per_iteration();
+            for w in 0..workers {
+                assert_eq!(s.next_block_for(w, rounds - 1, rounds), None);
+                assert_eq!(s.next_block_for(w, rounds, rounds), None);
+            }
+            // Shorter horizons cut the lookahead off early too.
+            assert_eq!(s.next_block_for(0, 0, 1), None);
+        }
+    }
+
+    #[test]
+    fn consumer_of_inverts_block_for() {
+        for (workers, blocks) in [(4usize, 4usize), (3, 7), (2, 5)] {
+            let s = RotationSchedule::new(workers, blocks);
+            for r in 0..s.rounds_per_iteration() {
+                // Every assigned (worker, block) pair inverts exactly.
+                let mut held = vec![false; blocks];
+                for w in 0..workers {
+                    let b = s.block_for(w, r);
+                    held[b as usize] = true;
+                    assert_eq!(s.consumer_of(b, r), Some(w), "w={w} r={r}");
+                }
+                // Blocks sitting the round out have no consumer.
+                for b in 0..blocks as u32 {
+                    if !held[b as usize] {
+                        assert_eq!(s.consumer_of(b, r), None, "b={b} r={r}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn next_block_holder_is_the_rotation_neighbor() {
+        // The pipelined handoff chain: the block worker w needs next round
+        // is held by worker w+1 this round (when it is held at all) — the
+        // structural fact that makes commit-then-stage a valid prefetch.
+        let s = RotationSchedule::new(4, 6);
+        let rounds = s.rounds_per_iteration();
+        for r in 0..rounds - 1 {
+            for w in 0..4 {
+                let next = s.next_block_for(w, r, rounds).unwrap();
+                match s.consumer_of(next, r) {
+                    Some(holder) => assert_eq!(holder, w + 1, "w={w} r={r}"),
+                    None => assert!(w + 1 >= 4, "unheld next block only at the chain tail"),
+                }
+            }
+        }
     }
 }

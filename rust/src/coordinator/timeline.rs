@@ -9,10 +9,15 @@ use std::fmt::Write as _;
 /// Phase tags within a round.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Phase {
+    /// Round-start `C_k` totals snapshot.
     TotalsSync,
+    /// Model-block fetch from the KV-store.
     Fetch,
+    /// Gibbs sampling over the leased block.
     Compute,
+    /// Block commit + `C_k` delta merge.
     Commit,
+    /// Waiting at the round barrier for stragglers.
     Barrier,
 }
 
@@ -41,12 +46,17 @@ impl Phase {
 /// One recorded interval.
 #[derive(Debug, Clone)]
 pub struct Span {
+    /// Worker the interval belongs to.
     pub worker: usize,
+    /// Iteration index.
     pub iteration: usize,
+    /// Round index within the iteration.
     pub round: usize,
+    /// Which phase of the round.
     pub phase: Phase,
-    /// Simulated start/end seconds.
+    /// Simulated start seconds.
     pub start: f64,
+    /// Simulated end seconds.
     pub end: f64,
 }
 
@@ -58,20 +68,24 @@ pub struct Timeline {
 }
 
 impl Timeline {
+    /// A timeline; when `enabled` is false every record is a no-op.
     pub fn new(enabled: bool) -> Timeline {
         Timeline { spans: Vec::new(), enabled }
     }
 
+    /// Whether recording is active.
     pub fn is_enabled(&self) -> bool {
         self.enabled
     }
 
+    /// Record one interval (dropped when disabled or zero-length).
     pub fn record(&mut self, span: Span) {
         if self.enabled && span.end > span.start {
             self.spans.push(span);
         }
     }
 
+    /// All recorded intervals, in record order.
     pub fn spans(&self) -> &[Span] {
         &self.spans
     }

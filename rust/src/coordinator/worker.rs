@@ -35,6 +35,7 @@ pub enum Backend<'a> {
 
 /// Per-worker persistent state.
 pub struct WorkerState {
+    /// Worker id (its position in the rotation schedule).
     pub id: usize,
     /// Machine hosting this worker.
     pub machine: usize,
@@ -55,6 +56,8 @@ pub struct WorkerState {
 }
 
 impl WorkerState {
+    /// Build a worker over its document shard: inverted index, private
+    /// RNG stream (`seed` ⊕ worker id), and empty `C_k` snapshot.
     pub fn new(
         id: usize,
         machine: usize,

@@ -8,11 +8,18 @@
 //! the mechanical enforcement of the paper's disjointness argument),
 //! [`shard`] the block→node placement, and [`traffic`] the byte metering
 //! the network model consumes.
+//!
+//! The pipelined prefetch engine (`coordinator::pipeline`, §3.2 "can be
+//! further accelerated") drives the same lease protocol through
+//! [`store::KvStore::stage_block`]: identical at-most-one-holder
+//! semantics, but the transfer happens while sampling is still running
+//! and is metered separately as overlapped
+//! ([`traffic::TransferKind::BlockPrefetch`]) traffic.
 
 pub mod store;
 pub mod shard;
 pub mod traffic;
 
 pub use shard::ShardMap;
-pub use store::KvStore;
+pub use store::{KvStore, LeaseReceipt};
 pub use traffic::{TrafficMeter, Transfer};

@@ -6,10 +6,19 @@
 //!   A block can have **at most one holder**; double-lease is a protocol
 //!   violation and errors loudly (this is the §3.2 disjointness guarantee
 //!   made mechanical).
+//! * [`KvStore::stage_block`] — the same lease, issued *ahead of need* by
+//!   the pipelined prefetch engine (`coordinator::pipeline`) while the
+//!   current round is still sampling; metered as overlapped
+//!   ([`TransferKind::BlockPrefetch`]) traffic.
 //! * [`KvStore::commit_block`] — return the (mutated) block.
 //! * [`KvStore::read_totals`] / [`KvStore::merge_totals_delta`] — the §3.3
 //!   relaxed-consistency channel for `C_k`: snapshot at round start, merge
 //!   signed deltas at round end.
+//!
+//! Lease, stage and commit also come in `*_with_receipt` forms returning a
+//! [`LeaseReceipt`] — the flow endpoints and wire bytes in caller-held
+//! form, so a concurrent caller (the prefetch engine) can time its flows
+//! deterministically without depending on the shared meter's drain order.
 //!
 //! ## Concurrency
 //!
@@ -19,8 +28,9 @@
 //! different machines therefore never serialize — which is exactly the
 //! contention profile of the paper's distributed hash table (§3.2), where
 //! each machine serves its own shard independently. The threaded execution
-//! engine (`coordinator::parallel`) relies on this, and so can any future
-//! prefetch thread (§3.2 "can be further accelerated").
+//! engine (`coordinator::parallel`) relies on this, and the pipelined
+//! prefetch engine's flusher thread (`coordinator::pipeline`) issues
+//! commits and stages through it concurrently with sampling.
 
 use std::collections::BTreeMap;
 use std::sync::{Mutex, MutexGuard};
@@ -33,6 +43,28 @@ use crate::model::{ModelBlock, TopicCounts};
 
 use super::shard::ShardMap;
 use super::traffic::{Transfer, TrafficMeter, TransferKind};
+
+/// The endpoints and wire size of one store transfer, returned to the
+/// caller that triggered it. Receipts let concurrent callers reconstruct
+/// their flows in a deterministic order (the shared [`TrafficMeter`]'s
+/// pending list is completion-ordered and therefore racy under the
+/// pipelined engine).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct LeaseReceipt {
+    /// Sending machine.
+    pub src: usize,
+    /// Receiving machine.
+    pub dst: usize,
+    /// Wire-encoded bytes moved.
+    pub bytes: u64,
+}
+
+impl LeaseReceipt {
+    /// The receipt as a network-model [`Flow`].
+    pub fn flow(&self) -> Flow {
+        Flow { src: self.src, dst: self.dst, bytes: self.bytes }
+    }
+}
 
 /// Per-machine shard state: blocks at home, plus the lease ledger for
 /// blocks this machine is responsible for.
@@ -89,6 +121,37 @@ impl KvStore {
     /// Lease block `id` to a worker on `worker_machine`. Records the fetch
     /// flow `home(id) → worker_machine` sized by the block's wire encoding.
     pub fn lease_block(&self, id: u32, worker_machine: usize) -> Result<ModelBlock> {
+        Ok(self.lease_inner(id, worker_machine, TransferKind::BlockFetch)?.0)
+    }
+
+    /// [`KvStore::lease_block`] returning the transfer's [`LeaseReceipt`].
+    pub fn lease_block_with_receipt(
+        &self,
+        id: u32,
+        worker_machine: usize,
+    ) -> Result<(ModelBlock, LeaseReceipt)> {
+        self.lease_inner(id, worker_machine, TransferKind::BlockFetch)
+    }
+
+    /// Prefetch block `id` into a staging buffer on `worker_machine` ahead
+    /// of the round that needs it. Identical lease semantics to
+    /// [`KvStore::lease_block`] — at most one holder, same wire bytes —
+    /// but metered as [`TransferKind::BlockPrefetch`] because the transfer
+    /// runs overlapped with sampling, off the round's critical path.
+    pub fn stage_block(
+        &self,
+        id: u32,
+        worker_machine: usize,
+    ) -> Result<(ModelBlock, LeaseReceipt)> {
+        self.lease_inner(id, worker_machine, TransferKind::BlockPrefetch)
+    }
+
+    fn lease_inner(
+        &self,
+        id: u32,
+        worker_machine: usize,
+        kind: TransferKind,
+    ) -> Result<(ModelBlock, LeaseReceipt)> {
         let block = {
             let mut slot = self.slot(id);
             if let Some(&holder) = slot.leased_to.get(&id) {
@@ -101,18 +164,31 @@ impl KvStore {
             slot.leased_to.insert(id, worker_machine);
             block
         };
-        let bytes = wire::encode_block(&block).len() as u64;
+        let receipt = LeaseReceipt {
+            src: self.shards.home(id as usize),
+            dst: worker_machine,
+            bytes: wire::encode_block(&block).len() as u64,
+        };
         self.meter.lock().expect("kv meter lock poisoned").record(
-            self.shards.home(id as usize),
-            worker_machine,
-            bytes,
-            TransferKind::BlockFetch,
+            receipt.src,
+            receipt.dst,
+            receipt.bytes,
+            kind,
         );
-        Ok(block)
+        Ok((block, receipt))
     }
 
     /// Commit a leased block back. Records the commit flow.
     pub fn commit_block(&self, block: ModelBlock, worker_machine: usize) -> Result<()> {
+        self.commit_block_with_receipt(block, worker_machine).map(|_| ())
+    }
+
+    /// [`KvStore::commit_block`] returning the transfer's [`LeaseReceipt`].
+    pub fn commit_block_with_receipt(
+        &self,
+        block: ModelBlock,
+        worker_machine: usize,
+    ) -> Result<LeaseReceipt> {
         let id = block.id;
         let bytes = wire::encode_block(&block).len() as u64;
         {
@@ -131,13 +207,25 @@ impl KvStore {
             }
             slot.resident.insert(id, block);
         }
-        self.meter.lock().expect("kv meter lock poisoned").record(
-            worker_machine,
-            self.shards.home(id as usize),
+        let receipt = LeaseReceipt {
+            src: worker_machine,
+            dst: self.shards.home(id as usize),
             bytes,
+        };
+        self.meter.lock().expect("kv meter lock poisoned").record(
+            receipt.src,
+            receipt.dst,
+            receipt.bytes,
             TransferKind::BlockCommit,
         );
-        Ok(())
+        Ok(receipt)
+    }
+
+    /// Heap bytes of a resident (non-leased) block, or `None` if the block
+    /// is currently leased out (or unknown). The pipelined engine uses this
+    /// for staging-budget checks *before* paying for a prefetch.
+    pub fn resident_block_bytes(&self, id: u32) -> Option<u64> {
+        self.slot(id).resident.get(&id).map(|b| b.bytes())
     }
 
     /// Snapshot the topic totals (round-start sync of §3.3).
@@ -186,6 +274,12 @@ impl KvStore {
     /// Bytes moved so far for one transfer kind.
     pub fn bytes_of(&self, kind: TransferKind) -> u64 {
         self.meter.lock().expect("kv meter lock poisoned").bytes_of(kind)
+    }
+
+    /// Bytes moved overlapped with compute (prefetch traffic) — see
+    /// [`super::traffic::TrafficMeter::overlapped_bytes`].
+    pub fn overlapped_bytes(&self) -> u64 {
+        self.meter.lock().expect("kv meter lock poisoned").overlapped_bytes()
     }
 
     /// Take the pending transfers (for a phase's network timing) as flows.
@@ -294,6 +388,50 @@ mod tests {
         assert_eq!(kv.num_leased(), 0);
         kv.check_quiescent_consistency(8).unwrap();
         assert!(kv.total_bytes() > 0);
+    }
+
+    #[test]
+    fn stage_is_a_lease_metered_as_overlapped() {
+        let kv = setup(4, 2);
+        let fetch_before = kv.bytes_of(TransferKind::BlockFetch);
+        let (b, receipt) = kv.stage_block(2, 1).unwrap();
+        // Same lease ledger as a normal fetch: the block has one holder.
+        assert_eq!(kv.num_leased(), 1);
+        let err = kv.lease_block(2, 0).unwrap_err().to_string();
+        assert!(err.contains("already leased"), "{err}");
+        // Metered as prefetch, not fetch; receipt matches the meter.
+        assert_eq!(kv.bytes_of(TransferKind::BlockFetch), fetch_before);
+        assert_eq!(kv.bytes_of(TransferKind::BlockPrefetch), receipt.bytes);
+        assert_eq!(kv.overlapped_bytes(), receipt.bytes);
+        assert_eq!(receipt.dst, 1);
+        assert!(receipt.bytes > 0);
+        kv.commit_block(b, 1).unwrap();
+        kv.check_quiescent_consistency(8).unwrap();
+    }
+
+    #[test]
+    fn receipts_mirror_recorded_flows() {
+        let kv = setup(4, 2);
+        let (b, lease) = kv.lease_block_with_receipt(1, 0).unwrap();
+        let commit = kv.commit_block_with_receipt(b, 0).unwrap();
+        // Commit is the reverse direction of the lease, same payload shape.
+        assert_eq!(lease.src, commit.dst);
+        assert_eq!(lease.dst, commit.src);
+        assert!(lease.bytes > 0 && commit.bytes > 0);
+        let flows = kv.drain_flows();
+        assert!(flows.contains(&lease.flow()));
+        assert!(flows.contains(&commit.flow()));
+    }
+
+    #[test]
+    fn resident_block_bytes_tracks_leases() {
+        let kv = setup(3, 2);
+        let before = kv.resident_block_bytes(0).unwrap();
+        assert!(before > 0);
+        let b = kv.lease_block(0, 0).unwrap();
+        assert_eq!(kv.resident_block_bytes(0), None);
+        kv.commit_block(b, 0).unwrap();
+        assert_eq!(kv.resident_block_bytes(0), Some(before));
     }
 
     #[test]

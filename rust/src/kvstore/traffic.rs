@@ -10,38 +10,56 @@ use crate::cluster::Flow;
 /// One recorded transfer with a label for reporting.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct Transfer {
+    /// Source machine.
     pub src: usize,
+    /// Destination machine.
     pub dst: usize,
+    /// Wire bytes moved.
     pub bytes: u64,
+    /// What the bytes were (drives traffic breakdowns).
     pub what: TransferKind,
 }
 
 /// Classification for traffic reports.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum TransferKind {
+    /// On-demand block fetch at round start (blocking: the worker waits).
     BlockFetch,
+    /// Block returned to its shard home at round end.
     BlockCommit,
+    /// Prefetch of a *future* round's block into a staging buffer — same
+    /// bytes as a [`TransferKind::BlockFetch`], but issued while sampling
+    /// is still running, so the transfer is off the critical path
+    /// (`coordinator::pipeline`). Tallied separately so experiments can
+    /// report how much traffic the pipeline hid.
+    BlockPrefetch,
+    /// Round-start `C_k` totals snapshot.
     TotalsRead,
+    /// Round-end signed `C_k` delta merge (byte cost carried by `PsSync`).
     TotalsMerge,
     /// Baseline parameter-server delta push/pull.
     PsSync,
 }
+
+/// Number of [`TransferKind`] variants (size of the per-kind tally).
+const NUM_KINDS: usize = 6;
 
 /// Accumulating traffic meter.
 #[derive(Debug, Default, Clone)]
 pub struct TrafficMeter {
     pending: Vec<Transfer>,
     total_bytes: u64,
-    by_kind: [u64; 5],
+    by_kind: [u64; NUM_KINDS],
 }
 
 fn kind_idx(k: TransferKind) -> usize {
     match k {
         TransferKind::BlockFetch => 0,
         TransferKind::BlockCommit => 1,
-        TransferKind::TotalsRead => 2,
-        TransferKind::TotalsMerge => 3,
-        TransferKind::PsSync => 4,
+        TransferKind::BlockPrefetch => 2,
+        TransferKind::TotalsRead => 3,
+        TransferKind::TotalsMerge => 4,
+        TransferKind::PsSync => 5,
     }
 }
 
@@ -50,6 +68,8 @@ impl TrafficMeter {
         Self::default()
     }
 
+    /// Record one transfer (updates the running totals and the pending
+    /// list the next phase-timing drain will consume).
     pub fn record(&mut self, src: usize, dst: usize, bytes: u64, what: TransferKind) {
         self.total_bytes += bytes;
         self.by_kind[kind_idx(what)] += bytes;
@@ -72,12 +92,21 @@ impl TrafficMeter {
         &self.pending
     }
 
+    /// Total bytes recorded so far, all kinds.
     pub fn total_bytes(&self) -> u64 {
         self.total_bytes
     }
 
+    /// Bytes recorded so far for one transfer kind.
     pub fn bytes_of(&self, kind: TransferKind) -> u64 {
         self.by_kind[kind_idx(kind)]
+    }
+
+    /// Bytes that moved *overlapped with compute* rather than on the
+    /// round's critical path — today exactly the
+    /// [`TransferKind::BlockPrefetch`] traffic of the pipelined engine.
+    pub fn overlapped_bytes(&self) -> u64 {
+        self.bytes_of(TransferKind::BlockPrefetch)
     }
 }
 
@@ -109,5 +138,17 @@ mod tests {
         assert_eq!(m.bytes_of(TransferKind::PsSync), 30);
         assert_eq!(m.bytes_of(TransferKind::TotalsRead), 5);
         assert_eq!(m.bytes_of(TransferKind::BlockCommit), 0);
+    }
+
+    #[test]
+    fn prefetch_counts_as_overlapped() {
+        let mut m = TrafficMeter::new();
+        m.record(0, 1, 100, TransferKind::BlockFetch);
+        m.record(0, 2, 40, TransferKind::BlockPrefetch);
+        m.record(0, 3, 25, TransferKind::BlockPrefetch);
+        assert_eq!(m.overlapped_bytes(), 65);
+        assert_eq!(m.bytes_of(TransferKind::BlockPrefetch), 65);
+        assert_eq!(m.bytes_of(TransferKind::BlockFetch), 100);
+        assert_eq!(m.total_bytes(), 165);
     }
 }

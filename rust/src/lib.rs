@@ -19,7 +19,12 @@
 //! * a **threaded execution engine** (`coord.execution = "threaded"`)
 //!   that runs each round's disjoint `(worker, block)` tasks on real OS
 //!   threads, lock-free by round disjointness, with bitwise-identical
-//!   results to the simulated path, and
+//!   results to the simulated path,
+//! * a **pipelined block-prefetch engine**
+//!   (`coord.pipeline = "double_buffer"`) that double-buffers model
+//!   blocks per worker — KV-store commits and next-round prefetch staging
+//!   overlap with sampling, hiding transfer latency while preserving the
+//!   bitwise-identical trajectory (DESIGN.md §Pipelining), and
 //! * an **XLA/PJRT execution backend** whose compute kernel is authored in
 //!   JAX/Pallas and AOT-lowered to HLO text at build time (`make artifacts`);
 //!   Python never runs on the sampling path.

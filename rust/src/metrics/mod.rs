@@ -1,9 +1,11 @@
 //! Evaluation metrics: training log-likelihood (the paper's convergence
 //! surrogate, §5 "Evaluation"), the `Δ_{r,i}` parallelization-error metric
-//! (Fig 3), throughput accounting, and CSV series recording.
+//! (Fig 3), the pipeline fetch-stall breakdown (E7c), throughput
+//! accounting, and CSV series recording.
 
 pub mod loglik;
 pub mod delta;
+pub mod pipeline;
 pub mod recorder;
 pub mod throughput;
 pub mod topics;
@@ -11,5 +13,6 @@ pub mod perplexity;
 
 pub use delta::DeltaTracker;
 pub use loglik::{joint_log_likelihood, joint_log_likelihood_blocks, lgamma, LoglikCache};
+pub use pipeline::PipelineStats;
 pub use recorder::{Recorder, Series};
 pub use throughput::Throughput;

@@ -1,0 +1,121 @@
+//! Host wall-clock breakdown of the block-transfer pipeline: how much
+//! real time rounds spend **stalled on KV-store transfers** versus
+//! sampling, and how much of the transfer work the prefetch engine
+//! managed to hide (`coordinator::pipeline`).
+//!
+//! All figures here are *host* wall-clock seconds — the quantity the
+//! pipeline actually improves — not simulated cluster time (the
+//! simulator models comm/compute overlap separately via
+//! `coord.prefetch`, see DESIGN.md §4). The E7c bench compares
+//! `coord.pipeline = off` against `double_buffer` using exactly this
+//! breakdown; the acceptance bar lives in EXPERIMENTS.md.
+
+/// Accumulated pipeline counters for one driver run. Obtained from
+/// `Driver::pipeline_stats`; populated in every execution mode so that
+/// `off` baselines and `double_buffer` runs are directly comparable.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct PipelineStats {
+    /// Wall seconds the round critical path spent acquiring blocks at
+    /// round start (synchronous fetches; ≈0 in steady-state pipelining).
+    pub fetch_stall_secs: f64,
+    /// Wall seconds the round critical path spent finishing commits (and
+    /// residual staging) after sampling ended.
+    pub flush_stall_secs: f64,
+    /// Wall seconds of the sampling phase (spawn to last worker done).
+    pub sample_secs: f64,
+    /// Rounds accounted.
+    pub rounds: u64,
+    /// Blocks served from the staging buffer (prefetch hits).
+    pub staged_hits: u64,
+    /// Blocks fetched synchronously at round start (round 0 of each
+    /// iteration, budget-skipped blocks, and every fetch when the
+    /// pipeline is off).
+    pub fallback_fetches: u64,
+    /// Prefetches skipped because staging them would exceed
+    /// `coord.staging_budget_mib`.
+    pub budget_skips: u64,
+}
+
+impl PipelineStats {
+    /// Fold another accumulation into this one.
+    pub fn merge(&mut self, other: &PipelineStats) {
+        self.fetch_stall_secs += other.fetch_stall_secs;
+        self.flush_stall_secs += other.flush_stall_secs;
+        self.sample_secs += other.sample_secs;
+        self.rounds += other.rounds;
+        self.staged_hits += other.staged_hits;
+        self.fallback_fetches += other.fallback_fetches;
+        self.budget_skips += other.budget_skips;
+    }
+
+    /// Total critical-path transfer time (fetch + flush stalls).
+    pub fn stall_secs(&self) -> f64 {
+        self.fetch_stall_secs + self.flush_stall_secs
+    }
+
+    /// Fraction of accounted wall time spent stalled on transfers.
+    pub fn stall_fraction(&self) -> f64 {
+        let total = self.stall_secs() + self.sample_secs;
+        if total == 0.0 {
+            0.0
+        } else {
+            self.stall_secs() / total
+        }
+    }
+
+    /// One-line human summary (bench tables embed the raw fields).
+    pub fn summary(&self) -> String {
+        format!(
+            "stall {:.1}ms (fetch {:.1}ms + flush {:.1}ms) vs sample {:.1}ms \
+             [{:.1}% stalled; {} staged, {} fallback, {} budget-skipped over {} rounds]",
+            self.stall_secs() * 1e3,
+            self.fetch_stall_secs * 1e3,
+            self.flush_stall_secs * 1e3,
+            self.sample_secs * 1e3,
+            self.stall_fraction() * 100.0,
+            self.staged_hits,
+            self.fallback_fetches,
+            self.budget_skips,
+            self.rounds,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn merge_accumulates_every_field() {
+        let mut a = PipelineStats {
+            fetch_stall_secs: 1.0,
+            flush_stall_secs: 0.5,
+            sample_secs: 10.0,
+            rounds: 4,
+            staged_hits: 12,
+            fallback_fetches: 4,
+            budget_skips: 1,
+        };
+        let b = a;
+        a.merge(&b);
+        assert_eq!(a.rounds, 8);
+        assert_eq!(a.staged_hits, 24);
+        assert_eq!(a.fallback_fetches, 8);
+        assert_eq!(a.budget_skips, 2);
+        assert!((a.stall_secs() - 3.0).abs() < 1e-12);
+        assert!((a.sample_secs - 20.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn stall_fraction_bounded_and_empty_safe() {
+        assert_eq!(PipelineStats::default().stall_fraction(), 0.0);
+        let s = PipelineStats {
+            fetch_stall_secs: 1.0,
+            flush_stall_secs: 1.0,
+            sample_secs: 2.0,
+            ..PipelineStats::default()
+        };
+        assert!((s.stall_fraction() - 0.5).abs() < 1e-12);
+        assert!(s.summary().contains("50.0% stalled"));
+    }
+}

@@ -104,6 +104,68 @@ fn kvstore_lease_protocol_never_double_leases() {
 }
 
 #[test]
+fn lookahead_agrees_with_the_schedule_everywhere() {
+    // The pipelined engine's lookahead must be exactly "the schedule, one
+    // round later" inside the horizon and None on its last round; and
+    // consumer_of must invert block_for on every (worker, round) pair.
+    check_result::<Layout, _>(&prop_cfg(), "lookahead-consistent", |l| {
+        let s = RotationSchedule::new(l.workers, l.blocks);
+        let rounds = s.rounds_per_iteration();
+        for r in 0..rounds {
+            for w in 0..l.workers {
+                let next = s.next_block_for(w, r, rounds);
+                if r + 1 < rounds {
+                    if next != Some(s.block_for(w, r + 1)) {
+                        return Err(format!("w={w} r={r}: lookahead mismatch in {l:?}"));
+                    }
+                } else if next.is_some() {
+                    return Err(format!("w={w}: lookahead past the horizon in {l:?}"));
+                }
+                let b = s.block_for(w, r);
+                if s.consumer_of(b, r) != Some(w) {
+                    return Err(format!("w={w} r={r}: consumer_of failed to invert in {l:?}"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn every_prefetch_target_is_committed_or_free() {
+    // The flusher plan's dichotomy: each next-round block is either held
+    // by exactly one worker this round (handoff after its commit) or
+    // resident all round (free prefetch) — never anything else.
+    check_result::<Layout, _>(&prop_cfg(), "prefetch-dichotomy", |l| {
+        let s = RotationSchedule::new(l.workers, l.blocks);
+        let rounds = s.rounds_per_iteration();
+        for r in 0..rounds.saturating_sub(1) {
+            let held: Vec<u32> = (0..l.workers).map(|w| s.block_for(w, r)).collect();
+            for w in 0..l.workers {
+                let next = s.next_block_for(w, r, rounds).expect("inside horizon");
+                match s.consumer_of(next, r) {
+                    Some(holder) => {
+                        if held[holder] != next {
+                            return Err(format!(
+                                "w={w} r={r}: holder {holder} does not hold {next} in {l:?}"
+                            ));
+                        }
+                    }
+                    None => {
+                        if held.contains(&next) {
+                            return Err(format!(
+                                "w={w} r={r}: block {next} held but reported free in {l:?}"
+                            ));
+                        }
+                    }
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
 fn schedule_visits_are_uniform_over_long_horizons() {
     // Over W full iterations every (worker, block) pair occurs exactly W
     // times — no drift in the modular arithmetic.
