@@ -8,8 +8,7 @@
 //! ```
 
 use mplda::cluster::ClusterSpec;
-use mplda::config::Config;
-use mplda::coordinator::Driver;
+use mplda::engine::Session;
 use mplda::util::fmt;
 
 fn main() -> anyhow::Result<()> {
@@ -18,17 +17,16 @@ fn main() -> anyhow::Result<()> {
     let k: usize = args.get(1).map(|s| s.parse()).transpose()?.unwrap_or(1000);
     let machines: usize = args.get(2).map(|s| s.parse()).transpose()?.unwrap_or(64);
 
-    let mut cfg = Config::default();
-    cfg.corpus.preset = "wiki-bi-sim".into();
-    cfg.train.topics = k;
-    cfg.train.iterations = 8;
-    cfg.cluster.preset = "low-end".into();
-    cfg.cluster.machines = machines;
-    cfg.coord.workers = machines;
-    cfg.finalize()?;
+    let mut session = Session::builder()
+        .corpus_preset("wiki-bi-sim")
+        .topics(k)
+        .iterations(8)
+        .cluster_preset("low-end")
+        .machines(machines)
+        .workers(machines)
+        .build()?;
 
-    let mut driver = Driver::new(&cfg)?;
-    let corpus = &driver.corpus;
+    let corpus = session.corpus();
     println!("bigram corpus: {}", corpus.summary());
     println!(
         "addressable model: V×K = {} variables across {} machines",
@@ -40,19 +38,19 @@ fn main() -> anyhow::Result<()> {
         corpus.num_tokens() as f64 / corpus.num_words() as f64
     );
 
-    let report = driver.run(cfg.train.iterations, |stats, ll| {
-        if let Some(ll) = ll {
+    let summary = session.train_observed(|ev| {
+        if let Some(ll) = ev.loglik {
             println!(
                 "iter {:2}  ll={:14.1}  sim={:8.2}s  comm={}",
-                stats.iteration,
+                ev.stats.iteration,
                 ll,
-                stats.sim_time,
-                fmt::bytes(stats.comm_bytes)
+                ev.stats.sim_time,
+                fmt::bytes(ev.stats.comm_bytes)
             );
         }
     })?;
-    driver.check_consistency()?;
-    println!("\npeak per-node memory (MP): {}", fmt::bytes(report.peak_mem_bytes));
+    session.check_consistency()?;
+    println!("\npeak per-node memory (MP): {}", fmt::bytes(summary.peak_mem_bytes));
 
     // ---- full-scale extrapolation: the paper's headline -----------------
     // Wiki-bigram: V = 21.8M phrases, 79M tokens, K = 10^4.
@@ -62,7 +60,7 @@ fn main() -> anyhow::Result<()> {
     let full_v: u64 = 21_800_000;
     let full_tokens: u64 = 79_000_000;
     let full_k: u64 = 10_000;
-    let spec = ClusterSpec::from_config(&cfg.cluster);
+    let spec = ClusterSpec::from_config(&session.config().cluster);
     let dense_bytes = full_v * full_k * 4;
     let sparse_bytes = full_tokens * 8 + full_v * 24;
     let per_node_mp = sparse_bytes / machines as u64;

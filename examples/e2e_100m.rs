@@ -3,35 +3,37 @@
 //! synthetic corpus, with the loss (negative log-likelihood) curve logged —
 //! and, first, a short run through the **XLA backend** proving all three
 //! layers compose: the Pallas kernel authored in Python, AOT-lowered to
-//! HLO, loaded and executed by the rust coordinator via PJRT.
+//! HLO, loaded and executed by the rust coordinator via PJRT (the
+//! `Session` builder loads the artifacts itself when the sampler is
+//! `xla`).
 //!
 //! ```bash
 //! make artifacts   # once
 //! cargo run --release --example e2e_100m [iterations]
 //! ```
 
-use mplda::config::{Config, SamplerKind};
-use mplda::coordinator::Driver;
-use mplda::runtime::XlaExecutor;
+use mplda::config::SamplerKind;
+use mplda::engine::{Session, SessionBuilder};
 use mplda::util::fmt;
 
-fn base_cfg() -> anyhow::Result<Config> {
-    let mut cfg = Config::default();
-    cfg.corpus.preset = "custom".into();
-    cfg.corpus.vocab = 100_000;
-    cfg.corpus.docs = 8_000;
-    cfg.corpus.avg_doc_len = 50;
-    cfg.corpus.gen_topics = 100;
-    cfg.corpus.seed = 20260710;
-    cfg.train.topics = 1_000; // 100K × 1000 = 100M model variables
-    cfg.train.alpha = 0.1;
-    cfg.train.beta = 0.01;
-    cfg.coord.workers = 8;
-    cfg.cluster.preset = "custom".into();
-    cfg.cluster.machines = 8;
-    cfg.cluster.cores_per_machine = 16;
-    cfg.finalize()?;
-    Ok(cfg)
+fn base_builder() -> SessionBuilder {
+    Session::builder()
+        .corpus_preset("custom")
+        .topics(1_000) // 100K × 1000 = 100M model variables
+        .workers(8)
+        .cluster_preset("custom")
+        .machines(8)
+        .configure(|cfg| {
+            cfg.corpus.vocab = 100_000;
+            cfg.corpus.docs = 8_000;
+            cfg.corpus.avg_doc_len = 50;
+            cfg.corpus.gen_topics = 100;
+            cfg.corpus.seed = 20260710;
+            cfg.train.alpha = 0.1;
+            cfg.train.beta = 0.01;
+            cfg.cluster.cores_per_machine = 16;
+            cfg.runtime.artifacts_dir = "artifacts".into();
+        })
 }
 
 fn main() -> anyhow::Result<()> {
@@ -40,29 +42,28 @@ fn main() -> anyhow::Result<()> {
     let iterations: usize = args.get(1).map(|s| s.parse()).transpose()?.unwrap_or(200);
 
     // ---------- Phase 1: three-layer composition check (XLA backend) -----
-    let mut cfg = base_cfg()?;
-    let corpus = mplda::corpus::build(&cfg.corpus)?;
+    let mut session = base_builder()
+        .sampler(SamplerKind::Xla)
+        .iterations(2)
+        .configure(|cfg| cfg.train.microbatch = 512)
+        .build()?;
+    let corpus = session.corpus().clone();
     println!("corpus: {}", corpus.summary());
     println!(
         "model : V×K = {} variables ({} blocks × {} workers)\n",
-        fmt::count(corpus.model_variables(cfg.train.topics)),
-        cfg.coord.blocks,
-        cfg.coord.workers
+        fmt::count(corpus.model_variables(session.config().train.topics)),
+        session.config().coord.blocks,
+        session.config().coord.workers
     );
 
     println!("phase 1 — XLA backend (Pallas→HLO→PJRT) for 2 iterations:");
-    cfg.train.sampler = SamplerKind::Xla;
-    cfg.train.microbatch = 512;
-    let mut driver = Driver::with_corpus(&cfg, corpus.clone())?;
-    let exec = XlaExecutor::from_dir("artifacts", &driver.params, cfg.train.microbatch)?;
-    driver.set_executor(Box::new(exec));
     let t0 = std::time::Instant::now();
-    let xla_report = driver.run(2, |stats, ll| {
-        if let Some(ll) = ll {
-            println!("  iter {:2}  ll={ll:16.1}  ({} tokens)", stats.iteration, stats.tokens);
+    let xla_report = session.train_observed(|ev| {
+        if let Some(ll) = ev.loglik {
+            println!("  iter {:2}  ll={ll:16.1}  ({} tokens)", ev.stats.iteration, ev.stats.tokens);
         }
     })?;
-    driver.check_consistency()?;
+    session.check_consistency()?;
     println!(
         "  XLA path verified consistent ✓ ({} tokens through PJRT in {:.1}s wall)\n",
         fmt::count(xla_report.total_tokens),
@@ -71,29 +72,29 @@ fn main() -> anyhow::Result<()> {
 
     // ---------- Phase 2: the long training run (rust X+Y backend) --------
     println!("phase 2 — {iterations} iterations, inverted-index X+Y sampler:");
-    let mut cfg = base_cfg()?;
-    cfg.train.sampler = SamplerKind::InvertedXy;
-    cfg.train.iterations = iterations;
-    cfg.train.ll_every = 10;
-    let mut driver = Driver::with_corpus(&cfg, corpus)?;
+    let mut session = base_builder()
+        .sampler(SamplerKind::InvertedXy)
+        .iterations(iterations)
+        .ll_every(10)
+        .corpus(corpus)
+        .build()?;
     let t0 = std::time::Instant::now();
     println!("{:>6} {:>16} {:>12} {:>12} {:>10}", "iter", "loglik", "sim time", "wall", "Δ max");
-    let report = driver.run(iterations, |stats, ll| {
-        if let Some(ll) = ll {
+    let report = session.train_observed(|ev| {
+        if let Some(ll) = ev.loglik {
             println!(
                 "{:>6} {:>16.1} {:>11.1}s {:>11.1}s {:>10.2e}",
-                stats.iteration,
+                ev.stats.iteration,
                 ll,
-                stats.sim_time,
+                ev.stats.sim_time,
                 t0.elapsed().as_secs_f64(),
-                stats.mean_delta
+                ev.stats.mean_delta
             );
         }
     })?;
-    driver.check_consistency()?;
+    session.check_consistency()?;
 
     let wall = t0.elapsed().as_secs_f64();
-    let host: f64 = report.iters.iter().map(|i| i.host_compute_secs).sum();
     println!("\n== E8 summary ==");
     println!("iterations           : {iterations}");
     println!("final log-likelihood : {:.1}", report.final_loglik);
@@ -105,10 +106,10 @@ fn main() -> anyhow::Result<()> {
     println!("wall time            : {:.1}s", wall);
     println!(
         "sampler throughput   : {} (host, single-core)",
-        mplda::util::bench::fmt_rate(report.total_tokens as f64 / host, "tok")
+        mplda::util::bench::fmt_rate(report.total_tokens as f64 / report.host_compute_secs, "tok")
     );
     println!("peak per-node memory : {}", fmt::bytes(report.peak_mem_bytes));
-    println!("max Δ_r,i            : {:.2e}", driver.deltas.max_delta());
+    println!("max Δ_r,i            : {:.2e}", report.max_delta);
     println!("state verified consistent ✓");
     Ok(())
 }

@@ -1,6 +1,6 @@
 //! Pubmed-scale convergence comparison (the Figure 2 workload): model-
 //! parallel vs Yahoo!LDA-style data-parallel on the high-end cluster
-//! preset.
+//! preset, both driven through the `Session` facade.
 //!
 //! Drop the real UCI Pubmed `docword.pubmed.txt` somewhere and run with
 //! `--corpus.preset uci --corpus.path <file>` via `mplda train` for the
@@ -10,7 +10,8 @@
 //! cargo run --release --example pubmed_convergence [K] [iterations]
 //! ```
 
-use mplda::eval::common::{base_config, ll_threshold, run_training_on};
+use mplda::config::SamplerKind;
+use mplda::engine::{Session, TrainSummary};
 
 fn main() -> anyhow::Result<()> {
     mplda::util::logger::init();
@@ -18,25 +19,30 @@ fn main() -> anyhow::Result<()> {
     let k: usize = args.get(1).map(|s| s.parse()).transpose()?.unwrap_or(500);
     let iters: usize = args.get(2).map(|s| s.parse()).transpose()?.unwrap_or(15);
 
-    let mut cfg = base_config("pubmed-sim", "high-end")?;
-    cfg.cluster.machines = 8;
-    cfg.coord.workers = 8;
-    cfg.coord.blocks = 0;
-    cfg.train.topics = k;
-    cfg.train.iterations = iters;
-    cfg.finalize()?;
-    let corpus = mplda::corpus::build(&cfg.corpus)?;
+    let builder = || {
+        Session::builder()
+            .corpus_preset("pubmed-sim")
+            .cluster_preset("high-end")
+            .machines(8)
+            .workers(8)
+            .topics(k)
+            .iterations(iters)
+            .ll_every(1)
+    };
+    let corpus_cfg = mplda::config::CorpusConfig {
+        preset: "pubmed-sim".into(),
+        ..Default::default()
+    };
+    let corpus = mplda::corpus::build(&corpus_cfg)?;
     println!("corpus: {} | K={k} | 8 high-end machines\n", corpus.summary());
 
-    let mut mp_cfg = cfg.clone();
-    mp_cfg.train.sampler = mplda::config::SamplerKind::InvertedXy;
+    let train = |sampler: SamplerKind, corpus| -> anyhow::Result<TrainSummary> {
+        builder().sampler(sampler).corpus(corpus).build()?.train()
+    };
     println!("training model-parallel (inverted-index X+Y sampler)...");
-    let mp = run_training_on(&mp_cfg, corpus.clone())?;
-
-    let mut dp_cfg = cfg;
-    dp_cfg.train.sampler = mplda::config::SamplerKind::SparseYao;
+    let mp = train(SamplerKind::InvertedXy, corpus.clone())?;
     println!("training data-parallel baseline (SparseLDA + async sync)...");
-    let dp = run_training_on(&dp_cfg, corpus)?;
+    let dp = train(SamplerKind::SparseYao, corpus)?;
 
     println!("\n{:>5} {:>16} {:>16}", "iter", "model-parallel", "yahoo-lda");
     for i in 0..mp.ll_series.len() {
@@ -48,7 +54,7 @@ fn main() -> anyhow::Result<()> {
         );
     }
 
-    let th = ll_threshold(&mp, &dp, 0.95);
+    let th = mplda::eval::common::ll_threshold(&mp, &dp, 0.95);
     println!("\n95%-of-best threshold: {th:.1}");
     println!(
         "  model-parallel: {} iterations, {} simulated",

@@ -1,49 +1,67 @@
-//! Quickstart: train a small LDA model with the model-parallel coordinator
-//! and watch the log-likelihood converge.
+//! Quickstart: train a small LDA model through the `Session` facade,
+//! watch the log-likelihood converge, then freeze the model and answer a
+//! few held-out fold-in queries — the full train → freeze → infer loop.
 //!
 //! ```bash
 //! cargo run --release --example quickstart
 //! ```
 
-use mplda::config::Config;
-use mplda::coordinator::Driver;
+use mplda::engine::{BowDoc, Execution, Session};
 
 fn main() -> anyhow::Result<()> {
     mplda::util::logger::init();
 
-    // Configure entirely in code (a TOML file works too — see configs/).
-    let mut cfg = Config::default();
-    cfg.corpus.preset = "tiny".into(); // 1K docs, 2K words, ~64K tokens
-    cfg.train.topics = 50;
-    cfg.train.iterations = 20;
-    cfg.train.sampler = mplda::config::SamplerKind::InvertedXy;
-    cfg.coord.workers = 4; // 4 simulated machines, 4 model blocks
-    cfg.cluster.preset = "custom".into();
-    cfg.cluster.machines = 4;
-    cfg.finalize()?;
+    // One builder call validates everything up front: corpus preset,
+    // cluster layout, and the execution backend × sampler combination.
+    let mut session = Session::builder()
+        .corpus_preset("tiny") // 1K docs, 2K words, ~64K tokens
+        .topics(50)
+        .iterations(20)
+        .workers(4) // 4 simulated machines, 4 model blocks
+        .cluster_preset("custom")
+        .machines(4)
+        .execution(Execution::Simulated)
+        .build()?;
 
-    let mut driver = Driver::new(&cfg)?;
-    println!("corpus: {}", driver.corpus.summary());
+    println!("corpus: {}", session.corpus().summary());
     println!(
         "model:  V×K = {} variables in {} blocks\n",
-        driver.corpus.model_variables(cfg.train.topics),
-        cfg.coord.blocks,
+        session.corpus().model_variables(session.config().train.topics),
+        session.config().coord.blocks,
     );
 
     println!("{:>5} {:>14} {:>12} {:>10}", "iter", "loglik", "sim time", "Δ_r,i");
-    let report = driver.run(cfg.train.iterations, |stats, ll| {
-        if let Some(ll) = ll {
+    let summary = session.train_observed(|ev| {
+        if let Some(ll) = ev.loglik {
             println!(
                 "{:>5} {:>14.1} {:>11.2}s {:>10.2e}",
-                stats.iteration, ll, stats.sim_time, stats.mean_delta
+                ev.stats.iteration, ll, ev.stats.sim_time, ev.stats.mean_delta
             );
         }
     })?;
 
-    driver.check_consistency()?;
-    println!("\nfinal log-likelihood: {:.1}", report.final_loglik);
-    println!("peak per-node memory: {}", mplda::util::fmt::bytes(report.peak_mem_bytes));
-    println!("total communication : {}", mplda::util::fmt::bytes(report.total_comm_bytes));
+    session.check_consistency()?;
+    println!("\nfinal log-likelihood: {:.1}", summary.final_loglik);
+    println!("peak per-node memory: {}", mplda::util::fmt::bytes(summary.peak_mem_bytes));
+    println!("total communication : {}", mplda::util::fmt::bytes(summary.total_comm_bytes));
     println!("state verified consistent ✓");
+
+    // ---- serve the trained model: fold in unseen documents --------------
+    let held_out: Vec<BowDoc> = session.corpus().docs[..3]
+        .iter()
+        .map(|d| BowDoc::new(d.tokens.clone()))
+        .collect();
+    let model = session.freeze()?;
+    let folded = model.infer(&held_out)?;
+    let (_, ppx) = model.held_out_perplexity(&held_out, &folded)?;
+    println!("\nfold-in over {} query docs: perplexity {:.1}", held_out.len(), ppx);
+    for d in 0..folded.len() {
+        let top: Vec<String> = folded
+            .top_topics(d, 3)
+            .into_iter()
+            .map(|(k, theta)| format!("#{k} ({theta:.2})"))
+            .collect();
+        println!("  query {d}: top topics {}", top.join(", "));
+    }
     Ok(())
 }

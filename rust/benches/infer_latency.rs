@@ -1,0 +1,112 @@
+//! Bench — batch fold-in inference throughput over a frozen model (the
+//! first serving-scenario workload; EXPERIMENTS.md §infer_latency).
+//!
+//! Trains a model through the `Session` facade, freezes it, then folds in
+//! a held-out batch at 1/2/4/8 threads, reporting docs/s and tokens/s.
+//! Acceptance: fold-in results are bitwise identical across thread counts
+//! (documents ride independent RNG streams), and held-out perplexity
+//! beats the uniform-topic baseline.
+//!
+//! `cargo bench --bench infer_latency`
+
+use mplda::engine::{BowDoc, Execution, InferOptions, Session};
+use mplda::util::bench::{banner, fmt_rate, Table};
+
+fn main() {
+    mplda::util::logger::init();
+    banner(
+        "infer_latency",
+        "batch fold-in docs/s over a frozen TopicModel at 1/2/4/8 threads. \
+         Documents are independent given the frozen model, so throughput should \
+         scale with threads while results stay bitwise identical.",
+    );
+    let full = std::env::var("MPLDA_BENCH_FULL").is_ok();
+
+    // Train a model worth querying: pubmed-sim profile, threaded.
+    let (k, train_iters, query_docs) = if full { (500, 20, 2_000) } else { (200, 8, 600) };
+    let mut session = Session::builder()
+        .corpus_preset("custom")
+        .topics(k)
+        .iterations(train_iters)
+        .seed(42)
+        .workers(8)
+        .cluster_preset("custom")
+        .machines(8)
+        .execution(Execution::Threaded { parallelism: 8 })
+        .ll_every(0)
+        .configure(|cfg| {
+            cfg.corpus.vocab = 8_000;
+            cfg.corpus.docs = 2_000;
+            cfg.corpus.avg_doc_len = 90;
+            cfg.corpus.seed = 7;
+        })
+        .build()
+        .expect("session builds");
+    session.train().expect("training runs");
+    let model = session.freeze().expect("model freezes");
+
+    // Held-out queries from the same generative process, unseen seed.
+    let held = mplda::corpus::build(&mplda::config::CorpusConfig {
+        preset: "custom".into(),
+        vocab: 8_000,
+        docs: query_docs,
+        avg_doc_len: 90,
+        seed: 8,
+        ..Default::default()
+    })
+    .expect("held-out corpus");
+    let docs: Vec<BowDoc> = held.docs.iter().map(|d| BowDoc::new(d.tokens.clone())).collect();
+    let tokens: u64 = docs.iter().map(|d| d.len() as u64).sum();
+    println!(
+        "model: V=8000 K={k} | query batch: {} docs, {} tokens\n",
+        docs.len(),
+        tokens
+    );
+
+    let mut table = Table::new(&["threads", "docs/s", "tokens/s", "speedup", "identical"]);
+    let mut base_rate = 0.0f64;
+    let mut reference: Option<Vec<Vec<(u32, u32)>>> = None;
+    for threads in [1usize, 2, 4, 8] {
+        let opts = InferOptions { threads, ..Default::default() };
+        // Warm once, measure once (the batch is big enough to dominate).
+        let _warm = model.infer_with(&docs, &opts).expect("fold-in runs");
+        let t0 = std::time::Instant::now();
+        let folded = model.infer_with(&docs, &opts).expect("fold-in runs");
+        let secs = t0.elapsed().as_secs_f64();
+        let doc_rate = docs.len() as f64 / secs;
+        let tok_rate = tokens as f64 / secs;
+        let snapshot: Vec<Vec<(u32, u32)>> =
+            (0..docs.len()).map(|d| folded.counts(d).iter().collect()).collect();
+        let identical = match &reference {
+            None => {
+                base_rate = doc_rate;
+                reference = Some(snapshot);
+                true
+            }
+            Some(r) => r == &snapshot,
+        };
+        assert!(identical, "thread count must not change fold-in results");
+        table.row(&[
+            threads.to_string(),
+            fmt_rate(doc_rate, "doc"),
+            fmt_rate(tok_rate, "tok"),
+            format!("{:.2}x", doc_rate / base_rate),
+            "yes".into(),
+        ]);
+    }
+    println!("{}", table.render());
+
+    // Quality bar: fold-in must beat the uniform-topic baseline.
+    let folded = model.infer(&docs).expect("fold-in runs");
+    let (_, ppx) = model.held_out_perplexity(&docs, &folded).expect("perplexity");
+    let (_, ppx_uniform) = model.uniform_baseline_perplexity(&docs);
+    assert!(
+        ppx < ppx_uniform,
+        "fold-in ppx {ppx:.1} must beat uniform baseline {ppx_uniform:.1}"
+    );
+    println!(
+        "held-out perplexity: fold-in {ppx:.1} vs uniform baseline {ppx_uniform:.1} ✓"
+    );
+    println!("note: docs ride independent RNG streams keyed by batch position, so");
+    println!("      threading is pure throughput — results are bitwise identical.");
+}

@@ -191,6 +191,19 @@ impl YahooLda {
         self.clocks.iter().map(|c| c.now()).fold(0.0, f64::max)
     }
 
+    /// Completed iterations.
+    pub fn iteration(&self) -> usize {
+        self.iteration
+    }
+
+    /// Flush outstanding worker logs and clone the authoritative
+    /// parameter-server state — what `Session::freeze` turns into a
+    /// servable [`crate::engine::TopicModel`].
+    pub fn model_state(&mut self) -> (WordTopicTable, TopicCounts) {
+        self.flush();
+        (self.ps_wt.clone(), self.ps_ck.clone())
+    }
+
     /// Authoritative-state log-likelihood. Callers should [`Self::flush`]
     /// first for an exact value.
     pub fn loglik(&self) -> f64 {

@@ -10,44 +10,46 @@
 //!    shard-home NICs).
 //! 3. **Compute**: workers sample their shard ∩ block tokens. Work is real
 //!    and measured; worker RNG streams make results independent of
-//!    execution order, so host execution — sequential
-//!    (`coord.execution = "simulated"`) or on real OS threads
-//!    (`"threaded"`, see [`super::parallel`]) — is *exactly* what a
-//!    parallel cluster would compute, bit for bit.
+//!    execution order, so host execution is *exactly* what a parallel
+//!    cluster would compute, bit for bit.
 //! 4. **Commit**: blocks return to the store; signed `C_k` deltas merge.
 //!    The paper's `Δ_{r,i}` is recorded here (truth vs worker snapshots).
 //! 5. **Clock**: per-worker simulated time advances by comm + compute
 //!    (overlapped if `coord.prefetch`), then the round barrier aligns all
 //!    clocks (Algorithm 1's "once all the workers have finished").
 //!
-//! With `coord.pipeline = "double_buffer"` steps 2 and 4 leave the host
-//! critical path: blocks arrive from the staging buffer the pipelined
-//! engine ([`super::pipeline`]) filled while the *previous* round was
-//! sampling, and commits + next-round staging run on a flusher thread
-//! overlapped with the *current* round's sampling. `coord.prefetch`
-//! models that overlap in simulated time; `coord.pipeline` realizes it
-//! in host wall-clock. Model state is bit-identical either way.
+//! Phases 2–4 execute through a pluggable [`Backend`]
+//! ([`crate::engine::backend`]) selected **once** at construction from
+//! `coord.execution`/`coord.pipeline`: sequential on the driver thread
+//! (`SimulatedBackend`), on real OS threads (`ThreadedBackend`,
+//! [`super::parallel`]), or threaded with KV-store transfers overlapped
+//! off the critical path (`PipelinedBackend`, [`super::pipeline`]). The
+//! driver itself only runs the round *protocol* — totals sync, `Δ_{r,i}`
+//! recording, simulated clocks, the barrier — so the trajectory is
+//! bit-identical whichever backend executes.
 
-use std::time::Instant;
+use std::path::Path;
 
 use anyhow::{bail, Context, Result};
 
 use crate::cluster::simclock::barrier;
-use crate::cluster::{ClusterSpec, Flow, MemCategory, MemoryAccountant, NetworkModel, SimClock};
-use crate::config::{CkSyncPolicy, Config, ExecutionMode, PipelineMode, SamplerKind};
+use crate::cluster::{ClusterSpec, MemCategory, MemoryAccountant, NetworkModel, SimClock};
+use crate::config::{CkSyncPolicy, Config};
 use crate::corpus::{self, Corpus, DataPartition};
+use crate::engine::backend::{backend_for, Backend, RoundCtx};
 use crate::kvstore::{KvStore, ShardMap};
 use crate::metrics::{joint_log_likelihood_blocks, DeltaTracker, PipelineStats};
-use crate::model::{Assignments, BlockMap, DocTopic, DocView, ShardOwnership, TopicCounts};
+use crate::model::checkpoint::{self, ResumeState};
+use crate::model::{
+    Assignments, BlockMap, DocTopic, ShardOwnership, TopicCounts, WordTopicTable,
+};
 use crate::sampler::xla_dense::MicrobatchExecutor;
 use crate::sampler::Params;
 use crate::util::rng::Pcg64;
 
-use super::parallel;
-use super::pipeline::{self, PipelineEngine, RoundPlan};
 use super::scheduler::RotationSchedule;
 use super::timeline::{Phase, Span, Timeline};
-use super::worker::{Backend, WorkerState};
+use super::worker::WorkerState;
 
 /// Per-iteration statistics.
 #[derive(Debug, Clone)]
@@ -114,9 +116,9 @@ pub struct Driver {
     pub deltas: DeltaTracker,
     /// Per-round phase trace (enabled by `output.trace`).
     pub timeline: Timeline,
-    /// Staging buffer of the pipelined prefetch engine
-    /// (`coord.pipeline = "double_buffer"`), `None` when off.
-    pipeline: Option<PipelineEngine>,
+    /// The execution backend (simulated / threaded / pipelined), selected
+    /// once at construction from the config.
+    backend: Box<dyn Backend>,
     /// Host wall-clock transfer/compute breakdown, accumulated in every
     /// execution mode so pipelined and baseline runs are comparable.
     pstats: PipelineStats,
@@ -134,6 +136,29 @@ impl Driver {
     /// Build a driver over an existing corpus (experiments reuse corpora
     /// across configurations).
     pub fn with_corpus(cfg: &Config, corpus: Corpus) -> Result<Driver> {
+        Self::build(cfg, corpus, None)
+    }
+
+    /// Rebuild a driver from checkpointed state. With a [`ResumeState`]
+    /// (v2 checkpoint) the continuation is **bitwise identical** to the
+    /// uninterrupted run: the live doc–topic entry order and every worker
+    /// RNG stream position are restored, and the iteration counter
+    /// continues. Without one (v1 checkpoint) this is a warm start —
+    /// counts rebuilt from `Z`, fresh RNG streams, iteration 0.
+    pub fn resume_with_corpus(
+        cfg: &Config,
+        corpus: Corpus,
+        assign: Assignments,
+        state: Option<ResumeState>,
+    ) -> Result<Driver> {
+        Self::build(cfg, corpus, Some((assign, state)))
+    }
+
+    fn build(
+        cfg: &Config,
+        corpus: Corpus,
+        restored: Option<(Assignments, Option<ResumeState>)>,
+    ) -> Result<Driver> {
         let mut cfg = cfg.clone();
         cfg.finalize()?;
         if corpus.num_words() < cfg.coord.blocks {
@@ -145,11 +170,41 @@ impl Driver {
         }
         let k = cfg.train.topics;
         let params = Params::new(k, corpus.num_words(), cfg.train.alpha, cfg.train.beta);
+        // Execution backend chosen once, validating sampler × execution up
+        // front — an invalid combination never reaches run_iteration.
+        let backend = backend_for(&cfg)?;
 
-        // Initial assignments and counts.
-        let mut rng = Pcg64::with_stream(cfg.train.seed, 0xd217);
-        let assign = Assignments::random(&corpus, k, &mut rng);
-        let (dt, wt, ck) = assign.build_counts(&corpus);
+        // Initial assignments: fresh random draw, or checkpointed `Z`.
+        let (assign, iteration, worker_rng, dt_live) = match restored {
+            Some((assign, state)) => {
+                if assign.num_topics != k {
+                    bail!(
+                        "checkpoint was written with K={}, config wants K={k}",
+                        assign.num_topics
+                    );
+                }
+                if assign.z.len() != corpus.num_docs() {
+                    bail!(
+                        "checkpoint covers {} docs, corpus has {}",
+                        assign.z.len(),
+                        corpus.num_docs()
+                    );
+                }
+                match state {
+                    Some(s) => (assign, s.iteration, Some(s.worker_rng), Some(s.dt)),
+                    None => (assign, 0, None, None),
+                }
+            }
+            None => {
+                let mut rng = Pcg64::with_stream(cfg.train.seed, 0xd217);
+                (Assignments::random(&corpus, k, &mut rng), 0, None, None)
+            }
+        };
+        let (dt_built, wt, ck) = assign.build_counts(&corpus);
+        // A bitwise resume restores the *live* doc–topic entry order (the
+        // samplers' walk and FP-summation order depend on it); the values
+        // were already verified against `Z` when the checkpoint loaded.
+        let dt = dt_live.unwrap_or(dt_built);
 
         // Model blocks + KV store.
         let freqs = corpus.word_frequencies();
@@ -171,7 +226,7 @@ impl Driver {
 
         // Workers: disjoint doc shards, private RNG streams.
         let part = DataPartition::balanced(&corpus, cfg.coord.workers);
-        let workers: Vec<WorkerState> = (0..cfg.coord.workers)
+        let mut workers: Vec<WorkerState> = (0..cfg.coord.workers)
             .map(|w| {
                 let mut ws = WorkerState::new(
                     w,
@@ -185,6 +240,19 @@ impl Driver {
                 ws
             })
             .collect();
+        if let Some(rng_states) = worker_rng {
+            if rng_states.len() != workers.len() {
+                bail!(
+                    "checkpoint was written with {} workers, config has {} — resume with \
+                     the original coord.workers",
+                    rng_states.len(),
+                    workers.len()
+                );
+            }
+            for (w, &(s, inc)) in workers.iter_mut().zip(&rng_states) {
+                w.rng = Pcg64::from_raw(s, inc);
+            }
+        }
 
         let shard_refs: Vec<&[u32]> = workers.iter().map(|w| w.docs.as_slice()).collect();
         let doc_ownership = ShardOwnership::build(&shard_refs, corpus.num_docs());
@@ -210,14 +278,6 @@ impl Driver {
 
         let schedule = RotationSchedule::new(cfg.coord.workers, cfg.coord.blocks);
         let trace_enabled = cfg.output.trace;
-        let pipeline = match cfg.coord.pipeline {
-            PipelineMode::Off => None,
-            PipelineMode::DoubleBuffer => {
-                let budget =
-                    (cfg.coord.staging_budget_mib * (1u64 << 20) as f64).round() as u64;
-                Some(PipelineEngine::new(cfg.coord.workers, budget))
-            }
-        };
         Ok(Driver {
             cfg,
             corpus,
@@ -234,9 +294,9 @@ impl Driver {
             mem,
             deltas: DeltaTracker::new(),
             timeline: Timeline::new(trace_enabled),
-            pipeline,
+            backend,
             pstats: PipelineStats::default(),
-            iteration: 0,
+            iteration,
             exec: None,
         })
     }
@@ -261,6 +321,12 @@ impl Driver {
     /// Number of workers in the rotation.
     pub fn num_workers(&self) -> usize {
         self.workers.len()
+    }
+
+    /// Canonical name of the execution backend selected at construction
+    /// (`"simulated"` | `"threaded"` | `"pipelined"`).
+    pub fn backend_name(&self) -> &'static str {
+        self.backend.name()
     }
 
     /// Training log-likelihood from the current (quiescent) state.
@@ -328,32 +394,12 @@ impl Driver {
 
     /// Run one full iteration (B rounds). Returns its statistics.
     ///
-    /// The compute phase runs per `coord.execution`: `Simulated` executes
-    /// workers sequentially on the driver thread; `Threaded` hands the
-    /// round's disjoint `(worker, block)` tasks to real OS threads
-    /// ([`parallel::run_round_threaded`]). With
-    /// `coord.pipeline = "double_buffer"` the threaded path additionally
-    /// overlaps block commits and next-round prefetch staging with
-    /// sampling ([`pipeline::run_round_pipelined`]). All paths produce
-    /// the same model state bit for bit from the same seed.
+    /// Phases 2–4 of every round execute through the [`Backend`] selected
+    /// at construction; the driver contributes the totals sync, `Δ_{r,i}`
+    /// recording and the simulated clock/timeline accounting. All
+    /// backends produce the same model state bit for bit from the same
+    /// seed.
     pub fn run_iteration(&mut self) -> Result<IterStats> {
-        match self.cfg.train.sampler {
-            SamplerKind::InvertedXy | SamplerKind::Xla => {}
-            other => bail!(
-                "the model-parallel driver runs inverted-xy or xla backends; {} is the \
-                 data-parallel baseline's sampler (see baseline::yahoo)",
-                other.name()
-            ),
-        }
-        if (self.cfg.coord.execution == ExecutionMode::Threaded || self.pipeline.is_some())
-            && self.cfg.train.sampler != SamplerKind::InvertedXy
-        {
-            bail!(
-                "threaded/pipelined execution supports the inverted-xy sampler; {} runs in \
-                 simulated mode (the XLA executor is a single shared device handle)",
-                self.cfg.train.sampler.name()
-            );
-        }
         let rounds = self.schedule.rounds_per_iteration();
         let bytes_before = self.kv.total_bytes();
         let fetch_stall_before = self.pstats.fetch_stall_secs;
@@ -383,196 +429,55 @@ impl Driver {
             let _ = self.kv.drain_flows();
             let t_totals = self.net.reduce_time(totals_bytes_per_worker, self.workers.len());
 
-            // ---- Phase 2: block leases -----------------------------------
-            // Pipelined mode hands over blocks prefetched into the staging
-            // buffer while the *previous* round was sampling, falling back
-            // to a synchronous fetch for anything missing (round 0, budget
-            // skips); the other modes fetch synchronously every round. Both
-            // paths time flows in deterministic worker order and account
-            // the synchronous wall time as fetch stall.
+            // ---- Phases 2–4: leases, compute, commits --------------------
+            // Executed by the backend selected at build time; the driver
+            // only sees the outcome the clock accounting needs.
             let machines: Vec<usize> = self.workers.iter().map(|w| w.machine).collect();
-            let (mut leased, fetch_flows, acquire_stats) = if let Some(engine) =
-                self.pipeline.as_mut()
-            {
-                // A staged block becomes this round's active block — same
-                // bytes handed over, so Staging is released as Model is
-                // charged (below) with no double count.
-                for (w, bytes) in engine.staged_bytes_by_worker().into_iter().enumerate() {
-                    if bytes > 0 {
-                        self.mem.release(machines[w], MemCategory::Staging, bytes);
-                    }
-                }
-                let (blocks, receipts, astats) =
-                    engine.acquire_round_blocks(&self.kv, &self.schedule, round, &machines)?;
-                // Flow timing comes from the worker-ordered receipts; the
-                // meter's completion-ordered pending list is discarded.
-                let flows: Vec<Flow> = receipts.iter().map(|r| r.flow()).collect();
-                let _ = self.kv.drain_flows();
-                (blocks, flows, Some(astats))
-            } else {
-                let t0 = Instant::now();
-                let mut leased = Vec::with_capacity(self.workers.len());
-                for w in &self.workers {
-                    let b = self.schedule.block_for(w.id, round);
-                    leased.push(self.kv.lease_block(b, w.machine)?);
-                }
-                self.pstats.fetch_stall_secs += t0.elapsed().as_secs_f64();
-                self.pstats.fallback_fetches += self.workers.len() as u64;
-                (leased, self.kv.drain_flows(), None)
+            let out = {
+                let Driver {
+                    cfg,
+                    corpus,
+                    params,
+                    assign,
+                    dt,
+                    kv,
+                    schedule,
+                    workers,
+                    doc_ownership,
+                    net,
+                    mem,
+                    pstats,
+                    backend,
+                    exec,
+                    ..
+                } = self;
+                let mut ctx = RoundCtx {
+                    round,
+                    corpus,
+                    params,
+                    schedule,
+                    machines: &machines,
+                    workers,
+                    z: assign.z.as_mut_slice(),
+                    dt,
+                    doc_ownership,
+                    kv,
+                    net,
+                    mem,
+                    pstats,
+                    sampler: cfg.train.sampler,
+                    parallelism: cfg.coord.parallelism,
+                    exec: exec.as_deref_mut(),
+                };
+                backend.run_round(&mut ctx)?
             };
-            let fetch_times = self.net.per_flow_times(&fetch_flows);
-            debug_assert_eq!(fetch_times.len(), self.workers.len());
-
-            // Memory: the leased block is resident on the worker during the
-            // round.
-            for (w, blk) in self.workers.iter().zip(&leased) {
-                self.mem.charge(w.machine, MemCategory::Model, blk.bytes())?;
-            }
-
-            // ---- Phase 3 (+4 when pipelined): compute --------------------
-            let mut host_secs = Vec::with_capacity(self.workers.len());
-            let t_commit;
-            if self.pipeline.is_some() {
-                // Compute with block commits and next-round prefetch
-                // staging overlapped on a flusher thread
-                // ([`pipeline::run_round_pipelined`]); only the `C_k`
-                // merges stay here, on the driver thread in worker order,
-                // so the totals trajectory is identical to the other modes.
-                let budget = self.pipeline.as_ref().map_or(0, |e| e.budget_bytes());
-                let plan = RoundPlan::build(&self.schedule, round, &machines, budget);
-                let model_bytes: Vec<u64> = leased.iter().map(|b| b.bytes()).collect();
-                let out = pipeline::run_round_pipelined(
-                    &self.corpus,
-                    &self.params,
-                    &mut self.workers,
-                    std::mem::take(&mut leased),
-                    &mut self.assign.z,
-                    &mut self.dt,
-                    &self.doc_ownership,
-                    self.cfg.coord.parallelism,
-                    &self.kv,
-                    &plan,
-                )?;
-                for &(n, secs) in &out.per_worker {
-                    tokens += n;
-                    host_secs_total += secs;
-                    host_secs.push(secs);
-                }
-                let acquire = acquire_stats.expect("pipelined phase 2 produced acquire stats");
-                PipelineEngine::record_round(&mut self.pstats, &acquire, &out);
-                // Memory: during the round each consumer machine really
-                // held its active (Model) block *and* the staging buffer
-                // the flusher refilled — charge Staging before releasing
-                // Model so the accountant's peak (and `enforce_ram`) sees
-                // the double-buffering overlap.
-                for (w, s) in out.staged.iter().enumerate() {
-                    if let Some(s) = s {
-                        self.mem.charge(machines[w], MemCategory::Staging, s.block.bytes())?;
-                    }
-                }
-                for (w, bytes) in model_bytes.into_iter().enumerate() {
-                    self.mem.release(machines[w], MemCategory::Model, bytes);
-                }
-                // C_k merges: reduce half of the allreduce, worker order.
-                // Timed as flush stall so the off baseline (whose commit
-                // loop wraps the same merges) stays directly comparable.
-                let t_merge = Instant::now();
-                let mut merge_bytes_per_worker = 0u64;
-                for w in self.workers.iter_mut() {
-                    let before = self.kv.total_bytes();
-                    let delta = w.extract_totals_delta();
-                    self.kv.merge_totals_delta(&delta, w.machine);
-                    merge_bytes_per_worker = self.kv.total_bytes() - before;
-                }
-                self.pstats.flush_stall_secs += t_merge.elapsed().as_secs_f64();
-                let commit_flows: Vec<Flow> =
-                    out.commit_receipts.iter().map(|r| r.flow()).collect();
-                let _ = self.kv.drain_flows();
-                t_commit = self.net.phase_time(&commit_flows)
-                    + self.net.reduce_time(merge_bytes_per_worker, self.workers.len());
-                self.pipeline
-                    .as_mut()
-                    .expect("pipeline engine present")
-                    .install(out.staged);
-            } else {
-                let t_compute = Instant::now();
-                match self.cfg.coord.execution {
-                    ExecutionMode::Simulated => {
-                        let mut docs = DocView::new(&mut self.assign.z, &mut self.dt);
-                        for (w, blk) in self.workers.iter_mut().zip(leased.iter_mut()) {
-                            let mut backend = match self.cfg.train.sampler {
-                                SamplerKind::InvertedXy => Backend::InvertedXy,
-                                SamplerKind::Xla => {
-                                    let exec = self.exec.as_deref_mut().context(
-                                        "xla sampler selected but no executor installed",
-                                    )?;
-                                    Backend::Xla(exec)
-                                }
-                                _ => unreachable!(),
-                            };
-                            let (n, secs) = w.run_round(
-                                &self.corpus,
-                                &mut docs,
-                                blk,
-                                &self.params,
-                                &mut backend,
-                            )?;
-                            tokens += n;
-                            host_secs_total += secs;
-                            host_secs.push(secs);
-                        }
-                    }
-                    ExecutionMode::Threaded => {
-                        let per_worker = parallel::run_round_threaded(
-                            &self.corpus,
-                            &self.params,
-                            &mut self.workers,
-                            &mut leased,
-                            &mut self.assign.z,
-                            &mut self.dt,
-                            &self.doc_ownership,
-                            self.cfg.coord.parallelism,
-                        )?;
-                        for (n, secs) in per_worker {
-                            tokens += n;
-                            host_secs_total += secs;
-                            host_secs.push(secs);
-                        }
-                    }
-                }
-                self.pstats.sample_secs += t_compute.elapsed().as_secs_f64();
-
-                // ---- Phase 4: commits + totals merges --------------------
-                // Block commits are point-to-point to their shard homes;
-                // the C_k delta merge is the reduce half of the allreduce.
-                // Merges stay on the driver thread in worker order under
-                // both execution modes, so the totals trajectory is
-                // identical.
-                let t_flush = Instant::now();
-                let mut merge_bytes_per_worker = 0u64;
-                for (w, blk) in self.workers.iter_mut().zip(leased.drain(..)) {
-                    self.mem.release(w.machine, MemCategory::Model, blk.bytes());
-                    self.kv.commit_block(blk, w.machine)?;
-                    let before = self.kv.total_bytes();
-                    let delta = w.extract_totals_delta();
-                    self.kv.merge_totals_delta(&delta, w.machine);
-                    merge_bytes_per_worker = self.kv.total_bytes() - before;
-                }
-                // Partition the recorded transfers: commit flows timed as a
-                // phase, merge flows timed as a tree reduce.
-                let commit_flows: Vec<Flow> = self
-                    .kv
-                    .pending_transfers()
-                    .iter()
-                    .filter(|t| t.what == crate::kvstore::traffic::TransferKind::BlockCommit)
-                    .map(|t| Flow { src: t.src, dst: t.dst, bytes: t.bytes })
-                    .collect();
-                let _ = self.kv.drain_flows();
-                t_commit = self.net.phase_time(&commit_flows)
-                    + self.net.reduce_time(merge_bytes_per_worker, self.workers.len());
-                self.pstats.flush_stall_secs += t_flush.elapsed().as_secs_f64();
-                self.pstats.rounds += 1;
-            }
+            debug_assert_eq!(out.host_secs.len(), self.workers.len());
+            debug_assert_eq!(out.fetch_times.len(), self.workers.len());
+            tokens += out.tokens;
+            host_secs_total += out.host_secs.iter().sum::<f64>();
+            let host_secs = out.host_secs;
+            let fetch_times = out.fetch_times;
+            let t_commit = out.t_commit;
 
             // ---- Δ_{r,i}: truth vs worker snapshots (Fig 3) --------------
             let snaps: Vec<TopicCounts> = self.workers.iter().map(|w| w.ck.clone()).collect();
@@ -663,13 +568,9 @@ impl Driver {
             }
         }
 
-        // The last round has no lookahead, so the staging buffer is empty
-        // at every iteration boundary — the store is quiescent for
-        // `loglik`/`check_consistency` exactly as in the other modes.
-        debug_assert!(
-            self.pipeline.as_ref().map_or(true, PipelineEngine::staging_is_empty),
-            "staging buffer must drain by iteration end"
-        );
+        // Backend invariant check (e.g. pipelined staging drained, so the
+        // store is quiescent for `loglik`/`check_consistency`).
+        self.backend.end_iteration()?;
 
         self.iteration += 1;
         Ok(IterStats {
@@ -685,6 +586,10 @@ impl Driver {
 
     /// Run `iterations` full sweeps, checkpointing the log-likelihood every
     /// `ll_every` iterations. `on_iter` observes progress (may be a no-op).
+    ///
+    /// This is the driver-level loop; the typed facade
+    /// ([`crate::engine::Session`]) wraps it with the streaming
+    /// [`crate::engine::IterEvent`] observer API.
     pub fn run<F: FnMut(&IterStats, Option<f64>)>(
         &mut self,
         iterations: usize,
@@ -692,7 +597,9 @@ impl Driver {
     ) -> Result<TrainReport> {
         let mut report = TrainReport::default();
         let ll0 = self.loglik();
-        report.ll_series.push((0, 0.0, ll0));
+        // A resumed driver's series continues from its checkpoint: entry 0
+        // is (iteration-at-start, current sim time, current LL).
+        report.ll_series.push((self.iteration, self.sim_time(), ll0));
         for _ in 0..iterations {
             let stats = self.run_iteration()?;
             let ll = if self.cfg.train.ll_every > 0
@@ -715,17 +622,33 @@ impl Driver {
         Ok(report)
     }
 
-    /// Verify full-system consistency: KV quiescent, counts match Z.
-    /// Used by integration tests; O(corpus).
-    pub fn check_consistency(&self) -> Result<()> {
-        self.kv
-            .check_quiescent_consistency(self.params.num_topics)
-            .context("kv store")?;
-        // Rebuild a table view from blocks and compare with Z-derived counts.
-        let mut wt = crate::model::WordTopicTable::zeros(
-            self.corpus.num_words(),
-            self.params.num_topics,
-        );
+    /// Everything beyond `Z` a bitwise resume needs, captured at the
+    /// current (quiescent) iteration boundary — see
+    /// [`crate::model::checkpoint`].
+    pub fn resume_state(&self) -> ResumeState {
+        ResumeState {
+            iteration: self.iteration,
+            worker_rng: self.workers.iter().map(|w| w.rng.to_raw()).collect(),
+            dt: self.dt.clone(),
+        }
+    }
+
+    /// The current topic assignments.
+    pub fn assignments(&self) -> &Assignments {
+        &self.assign
+    }
+
+    /// Write a resumable (v2) checkpoint; load it back through
+    /// [`crate::engine::SessionBuilder::resume_from`] (or
+    /// [`checkpoint::load_resumable`] + [`Driver::resume_with_corpus`]).
+    pub fn save_checkpoint<P: AsRef<Path>>(&self, path: P) -> Result<()> {
+        checkpoint::save_resumable(path, &self.assign, &self.corpus, &self.resume_state())
+    }
+
+    /// Assemble the full word–topic table from the (quiescent) KV-store.
+    pub fn word_topic_table(&self) -> WordTopicTable {
+        let mut wt =
+            WordTopicTable::zeros(self.corpus.num_words(), self.params.num_topics);
         self.kv.with_resident_blocks(|blocks| {
             for b in blocks {
                 for (i, row) in b.rows.iter().enumerate() {
@@ -733,6 +656,17 @@ impl Driver {
                 }
             }
         });
+        wt
+    }
+
+    /// Verify full-system consistency: KV quiescent, counts match Z.
+    /// Used by integration tests; O(corpus).
+    pub fn check_consistency(&self) -> Result<()> {
+        self.kv
+            .check_quiescent_consistency(self.params.num_topics)
+            .context("kv store")?;
+        // Rebuild a table view from blocks and compare with Z-derived counts.
+        let wt = self.word_topic_table();
         let totals = self.kv.totals_snapshot();
         self.assign
             .check_consistency(&self.corpus, &self.dt, &wt, &totals)
@@ -836,9 +770,10 @@ machines = {workers}
     }
 
     #[test]
-    fn dense_sampler_rejected_by_mp_driver() {
-        let mut d = Driver::new(&tiny_cfg(2, "dense")).unwrap();
-        let err = d.run_iteration().unwrap_err().to_string();
+    fn dense_sampler_rejected_at_construction() {
+        // Backend selection happens at build time now: the wrong sampler
+        // family never yields a driver.
+        let err = Driver::new(&tiny_cfg(2, "dense")).unwrap_err().to_string();
         assert!(err.contains("baseline"), "{err}");
     }
 
@@ -901,6 +836,7 @@ machines = {workers}
         cfg.coord.execution = crate::config::ExecutionMode::Threaded;
         cfg.coord.pipeline = crate::config::PipelineMode::DoubleBuffer;
         let mut d = Driver::new(&cfg).unwrap();
+        assert_eq!(d.backend_name(), "pipelined");
         let stats = d.run_iteration().unwrap();
         let p = d.pipeline_stats();
         // Round 0 fetches synchronously, every later round is fully staged.
@@ -936,15 +872,10 @@ machines = {workers}
     }
 
     #[test]
-    fn threaded_rejects_xla_backend() {
+    fn threaded_rejects_xla_backend_at_construction() {
         let mut cfg = tiny_cfg(2, "xla");
         cfg.coord.execution = crate::config::ExecutionMode::Threaded;
-        let mut d = Driver::new(&cfg).unwrap();
-        let params = d.params;
-        d.set_executor(Box::new(crate::sampler::xla_dense::RustRefExecutor::new(
-            64, 16, &params,
-        )));
-        let err = d.run_iteration().unwrap_err().to_string();
+        let err = Driver::new(&cfg).unwrap_err().to_string();
         assert!(err.contains("threaded/pipelined execution"), "{err}");
     }
 
@@ -980,5 +911,39 @@ machines = {workers}
             (p8 as f64) < p2 as f64 * 0.55,
             "peak(2)={p2} peak(8)={p8} — expected ~1/M scaling"
         );
+    }
+
+    #[test]
+    fn checkpoint_resume_continues_bitwise() {
+        let dir = std::env::temp_dir().join(format!("mplda_drv_ckpt_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("mid.ckpt");
+
+        // Uninterrupted: 4 iterations.
+        let cfg = tiny_cfg(3, "inverted-xy");
+        let mut full = Driver::new(&cfg).unwrap();
+        let full_report = full.run(4, |_, _| {}).unwrap();
+
+        // Interrupted: 2 iterations, checkpoint, resume, 2 more.
+        let mut first = Driver::new(&cfg).unwrap();
+        first.run(2, |_, _| {}).unwrap();
+        first.save_checkpoint(&path).unwrap();
+        let corpus = crate::corpus::build(&cfg.corpus).unwrap();
+        let (assign, state) =
+            checkpoint::load_resumable(&path, &corpus).unwrap();
+        let mut resumed =
+            Driver::resume_with_corpus(&cfg, corpus, assign, state).unwrap();
+        assert_eq!(resumed.iteration(), 2);
+        let resumed_report = resumed.run(2, |_, _| {}).unwrap();
+
+        assert_eq!(full.model_digest(), resumed.model_digest());
+        assert_eq!(
+            full_report.final_loglik.to_bits(),
+            resumed_report.final_loglik.to_bits()
+        );
+        // The resumed series continues the iteration numbering.
+        assert_eq!(resumed_report.ll_series.first().unwrap().0, 2);
+        assert_eq!(resumed_report.ll_series.last().unwrap().0, 4);
+        std::fs::remove_dir_all(&dir).ok();
     }
 }

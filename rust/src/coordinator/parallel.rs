@@ -29,7 +29,7 @@ use crate::corpus::Corpus;
 use crate::model::{DocTopic, DocView, ModelBlock, ShardOwnership};
 use crate::sampler::Params;
 
-use super::worker::{Backend, WorkerState};
+use super::worker::{SamplerBackend, WorkerState};
 
 /// Run one round's tasks on up to `parallelism` OS threads
 /// (`0` ⇒ one thread per worker). `blocks[i]` must be the block leased to
@@ -81,7 +81,7 @@ pub fn run_round_threaded(
             handles.push(scope.spawn(move || -> Result<Vec<(usize, u64, f64)>> {
                 let mut out = Vec::with_capacity(chunk_items.len());
                 for (i, w, b, v) in chunk_items.iter_mut() {
-                    let mut backend = Backend::InvertedXy;
+                    let mut backend = SamplerBackend::InvertedXy;
                     let (tokens, secs) =
                         w.run_round(corpus, v, &mut **b, params, &mut backend)?;
                     out.push((*i, tokens, secs));
@@ -153,7 +153,7 @@ mod tests {
         let mut docs = DocView::new(&mut fx.assign.z, &mut fx.dt);
         let mut out = Vec::new();
         for (w, b) in fx.workers.iter_mut().zip(fx.blocks.iter_mut()) {
-            let mut backend = Backend::InvertedXy;
+            let mut backend = SamplerBackend::InvertedXy;
             let (tokens, secs) =
                 w.run_round(&fx.corpus, &mut docs, b, &fx.params, &mut backend).unwrap();
             out.push((tokens, secs));

@@ -55,7 +55,7 @@ use crate::model::{DocTopic, DocView, ModelBlock, ShardOwnership};
 use crate::sampler::Params;
 
 use super::scheduler::RotationSchedule;
-use super::worker::{Backend, WorkerState};
+use super::worker::{SamplerBackend, WorkerState};
 
 /// A prefetched block parked in the staging buffer until its round
 /// starts, with the receipt of the (overlapped) transfer that brought it.
@@ -316,7 +316,7 @@ pub fn run_round_pipelined(
                 let mut out = Vec::with_capacity(chunk_items.len());
                 for (i, w, slot, v) in chunk_items.iter_mut() {
                     let mut block = slot.take().expect("block present before sampling");
-                    let mut backend = Backend::InvertedXy;
+                    let mut backend = SamplerBackend::InvertedXy;
                     let (tokens, secs) =
                         w.run_round(corpus, v, &mut block, params, &mut backend)?;
                     // The overlap: hand the dirty block to the flusher so
@@ -520,7 +520,7 @@ mod tests {
             for w in fx.workers.iter_mut() {
                 let b = fx.schedule.block_for(w.id, round);
                 let mut blk = fx.kv.lease_block(b, w.machine).unwrap();
-                let mut backend = Backend::InvertedXy;
+                let mut backend = SamplerBackend::InvertedXy;
                 let (n, _) =
                     w.run_round(&fx.corpus, &mut docs, &mut blk, &fx.params, &mut backend).unwrap();
                 tokens += n;

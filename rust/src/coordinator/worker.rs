@@ -25,8 +25,10 @@ use crate::sampler::xla_dense::MicrobatchExecutor;
 use crate::sampler::{inverted_xy, xla_dense, Params, Scratch};
 use crate::util::rng::Pcg64;
 
-/// Which compute path the worker uses inside a round.
-pub enum Backend<'a> {
+/// Which sampler compute path the worker uses inside a round. (Not to be
+/// confused with [`crate::engine::Backend`], the *execution* backend that
+/// decides where and how a round's tasks run on the host.)
+pub enum SamplerBackend<'a> {
     /// The paper's sparse X+Y sampler (rust, §4.2).
     InvertedXy,
     /// Dense microbatch sampling on an AOT-compiled XLA executable.
@@ -108,11 +110,11 @@ impl WorkerState {
         docs: &mut DocView<'_>,
         block: &mut ModelBlock,
         params: &Params,
-        backend: &mut Backend<'_>,
+        backend: &mut SamplerBackend<'_>,
     ) -> Result<(u64, f64)> {
         let t0 = crate::util::cputime::CpuTimer::start();
         let tokens = match backend {
-            Backend::InvertedXy => inverted_xy::sample_block(
+            SamplerBackend::InvertedXy => inverted_xy::sample_block(
                 corpus,
                 docs,
                 &self.index,
@@ -122,7 +124,7 @@ impl WorkerState {
                 &mut self.scratch,
                 &mut self.rng,
             ),
-            Backend::Xla(exec) => xla_dense::sample_block_microbatch(
+            SamplerBackend::Xla(exec) => xla_dense::sample_block_microbatch(
                 corpus,
                 docs,
                 &self.index,
@@ -193,7 +195,7 @@ mod tests {
             .sum();
         let mut docs = DocView::new(&mut assign.z, &mut dt);
         let (n, secs) = w
-            .run_round(&corpus, &mut docs, block, &params, &mut Backend::InvertedXy)
+            .run_round(&corpus, &mut docs, block, &params, &mut SamplerBackend::InvertedXy)
             .unwrap();
         assert_eq!(n as usize, expect);
         assert!(secs >= 0.0);
@@ -208,7 +210,7 @@ mod tests {
         let before = ck.clone();
         w.install_totals(ck);
         let mut docs = DocView::new(&mut assign.z, &mut dt);
-        w.run_round(&corpus, &mut docs, &mut blocks[0], &params, &mut Backend::InvertedXy)
+        w.run_round(&corpus, &mut docs, &mut blocks[0], &params, &mut SamplerBackend::InvertedXy)
             .unwrap();
         let delta = w.extract_totals_delta();
         // Delta sums to zero (tokens moved, not created).

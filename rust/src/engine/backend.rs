@@ -1,0 +1,434 @@
+//! The pluggable execution backend: *where and how* a round's
+//! `(worker, block)` tasks run on the host, decided **once** when the
+//! driver is built instead of re-branched inside every iteration.
+//!
+//! The paper separates what is computed (Algorithm 1/2's block-rotation
+//! Gibbs) from where it executes; this trait is that separation in the
+//! code. [`crate::coordinator::Driver`] owns the round *protocol* —
+//! totals sync, `Δ_{r,i}` recording, simulated clocks, the barrier —
+//! and delegates phases 2–4 (block leases, compute, commits + `C_k`
+//! merges) to a `Box<dyn Backend>` selected by [`backend_for`] from the
+//! finalized config:
+//!
+//! | backend | selected by | compute |
+//! |---|---|---|
+//! | [`SimulatedBackend`] | `coord.execution = "simulated"` | sequential on the driver thread (any sampler) |
+//! | [`ThreadedBackend`]  | `coord.execution = "threaded"` | real OS threads ([`parallel`]) |
+//! | [`PipelinedBackend`] | `+ coord.pipeline = "double_buffer"` | OS threads + flusher/prefetcher overlap ([`pipeline`]) |
+//!
+//! **Contract.** A backend must (1) lease exactly the blocks the rotation
+//! schedule assigns for `ctx.round`, (2) sample every `shard ∩ block`
+//! token exactly once, (3) leave the KV-store quiescent with all `C_k`
+//! deltas merged **in worker order**, and (4) report per-worker host
+//! seconds and network times so the driver's simulated clocks advance
+//! identically whichever backend ran. Under that contract all three
+//! backends produce bitwise-identical model state from the same seed
+//! (`tests/threaded_determinism.rs`, `tests/pipeline_determinism.rs`) —
+//! which is what lets `SessionBuilder::execution` be a pure performance
+//! knob.
+
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use crate::cluster::{Flow, MemCategory, MemoryAccountant, NetworkModel};
+use crate::config::{Config, ExecutionMode, PipelineMode, SamplerKind};
+use crate::coordinator::parallel;
+use crate::coordinator::pipeline::{self, PipelineEngine, RoundPlan};
+use crate::coordinator::scheduler::RotationSchedule;
+use crate::coordinator::worker::{SamplerBackend, WorkerState};
+use crate::corpus::Corpus;
+use crate::kvstore::{traffic::TransferKind, KvStore};
+use crate::metrics::PipelineStats;
+use crate::model::{DocTopic, DocView, ModelBlock, ShardOwnership};
+use crate::sampler::xla_dense::MicrobatchExecutor;
+use crate::sampler::Params;
+
+/// Everything a backend may touch while executing one round. The driver
+/// retains the round protocol (totals sync, Δ, clocks); the context is
+/// the mutable working set of phases 2–4.
+pub struct RoundCtx<'a> {
+    /// Round index within the current iteration.
+    pub round: usize,
+    /// The training corpus.
+    pub corpus: &'a Corpus,
+    /// LDA hyperparameters.
+    pub params: &'a Params,
+    /// The block-rotation schedule (Algorithm 1).
+    pub schedule: &'a RotationSchedule,
+    /// Machine of each worker position.
+    pub machines: &'a [usize],
+    /// Per-worker state, index = rotation position.
+    pub workers: &'a mut [WorkerState],
+    /// Global topic assignments (one row per document).
+    pub z: &'a mut [Vec<u32>],
+    /// Global doc–topic counts.
+    pub dt: &'a mut DocTopic,
+    /// Validated doc→worker ownership map (threaded split safety).
+    pub doc_ownership: &'a ShardOwnership,
+    /// The sharded model store.
+    pub kv: &'a KvStore,
+    /// Network timing model (fetch/commit flow times).
+    pub net: &'a NetworkModel,
+    /// Per-node memory accountant.
+    pub mem: &'a mut MemoryAccountant,
+    /// Host wall-clock stall/sample accumulator.
+    pub pstats: &'a mut PipelineStats,
+    /// Which sampler kernel workers run.
+    pub sampler: SamplerKind,
+    /// OS threads for the threaded paths (0 ⇒ one per worker).
+    pub parallelism: usize,
+    /// The shared XLA executor, when `sampler = "xla"`.
+    pub exec: Option<&'a mut dyn MicrobatchExecutor>,
+}
+
+/// What one executed round hands back to the driver's clock/timeline
+/// accounting. `host_secs` and `fetch_times` are indexed by worker
+/// position.
+pub struct RoundOutcome {
+    /// Tokens sampled this round (all workers).
+    pub tokens: u64,
+    /// Per-worker host compute seconds (thread CPU time).
+    pub host_secs: Vec<f64>,
+    /// Per-worker simulated block-fetch seconds.
+    pub fetch_times: Vec<f64>,
+    /// Simulated commit-phase + totals-merge-reduce seconds.
+    pub t_commit: f64,
+}
+
+/// One of the three execution paths, chosen at driver build time. See the
+/// module docs for the contract implementations must honor.
+pub trait Backend {
+    /// Canonical name (`"simulated"` | `"threaded"` | `"pipelined"`).
+    fn name(&self) -> &'static str;
+
+    /// Execute phases 2–4 of one round: lease the scheduled blocks,
+    /// sample, commit blocks and merge `C_k` deltas in worker order.
+    fn run_round(&mut self, ctx: &mut RoundCtx<'_>) -> Result<RoundOutcome>;
+
+    /// Iteration-boundary hook: verify the backend left the store
+    /// quiescent (the pipelined backend checks its staging drained).
+    fn end_iteration(&mut self) -> Result<()> {
+        Ok(())
+    }
+}
+
+/// Select the execution backend for a **finalized** config, validating
+/// the sampler × execution combination up front — an invalid pair fails
+/// at build time, never mid-training.
+pub fn backend_for(cfg: &Config) -> Result<Box<dyn Backend>> {
+    match cfg.train.sampler {
+        SamplerKind::InvertedXy | SamplerKind::Xla => {}
+        other => bail!(
+            "the model-parallel driver runs inverted-xy or xla backends; {} is the \
+             data-parallel baseline's sampler (see baseline::yahoo)",
+            other.name()
+        ),
+    }
+    let pipelined = cfg.coord.pipeline == PipelineMode::DoubleBuffer;
+    if (cfg.coord.execution == ExecutionMode::Threaded || pipelined)
+        && cfg.train.sampler != SamplerKind::InvertedXy
+    {
+        bail!(
+            "threaded/pipelined execution supports the inverted-xy sampler; {} runs in \
+             simulated mode (the XLA executor is a single shared device handle)",
+            cfg.train.sampler.name()
+        );
+    }
+    Ok(if pipelined {
+        let budget = (cfg.coord.staging_budget_mib * (1u64 << 20) as f64).round() as u64;
+        Box::new(PipelinedBackend::new(cfg.coord.workers, budget))
+    } else {
+        match cfg.coord.execution {
+            ExecutionMode::Simulated => Box::new(SimulatedBackend),
+            ExecutionMode::Threaded => Box::new(ThreadedBackend),
+        }
+    })
+}
+
+/// Phase 2 for the non-pipelined backends: synchronous round-start block
+/// leases, timed as fetch stall, with the leased bytes charged to the
+/// memory accountant.
+fn lease_blocks_sync(ctx: &mut RoundCtx<'_>) -> Result<(Vec<ModelBlock>, Vec<f64>)> {
+    let t0 = Instant::now();
+    let mut leased = Vec::with_capacity(ctx.workers.len());
+    for w in ctx.workers.iter() {
+        let b = ctx.schedule.block_for(w.id, ctx.round);
+        leased.push(ctx.kv.lease_block(b, w.machine)?);
+    }
+    ctx.pstats.fetch_stall_secs += t0.elapsed().as_secs_f64();
+    ctx.pstats.fallback_fetches += ctx.workers.len() as u64;
+    let fetch_flows = ctx.kv.drain_flows();
+    let fetch_times = ctx.net.per_flow_times(&fetch_flows);
+    debug_assert_eq!(fetch_times.len(), ctx.workers.len());
+    for (w, blk) in ctx.workers.iter().zip(&leased) {
+        ctx.mem.charge(w.machine, MemCategory::Model, blk.bytes())?;
+    }
+    Ok((leased, fetch_times))
+}
+
+/// Phase 4 for the non-pipelined backends: sequential block commits and
+/// `C_k` delta merges in worker order. Commit flows are timed as a
+/// network phase; merges as the reduce half of the allreduce.
+fn commit_blocks_sync(ctx: &mut RoundCtx<'_>, leased: Vec<ModelBlock>) -> Result<f64> {
+    let t_flush = Instant::now();
+    let mut merge_bytes_per_worker = 0u64;
+    for (w, blk) in ctx.workers.iter_mut().zip(leased) {
+        ctx.mem.release(w.machine, MemCategory::Model, blk.bytes());
+        ctx.kv.commit_block(blk, w.machine)?;
+        let before = ctx.kv.total_bytes();
+        let delta = w.extract_totals_delta();
+        ctx.kv.merge_totals_delta(&delta, w.machine);
+        merge_bytes_per_worker = ctx.kv.total_bytes() - before;
+    }
+    let commit_flows: Vec<Flow> = ctx
+        .kv
+        .pending_transfers()
+        .iter()
+        .filter(|t| t.what == TransferKind::BlockCommit)
+        .map(|t| Flow { src: t.src, dst: t.dst, bytes: t.bytes })
+        .collect();
+    let _ = ctx.kv.drain_flows();
+    let t_commit = ctx.net.phase_time(&commit_flows)
+        + ctx.net.reduce_time(merge_bytes_per_worker, ctx.workers.len());
+    ctx.pstats.flush_stall_secs += t_flush.elapsed().as_secs_f64();
+    ctx.pstats.rounds += 1;
+    Ok(t_commit)
+}
+
+/// Sequential execution on the driver thread, wall-clock accounted
+/// through the discrete-event simulator — the paper-figure reproduction
+/// mode, and the only path the shared-handle XLA executor can ride.
+pub struct SimulatedBackend;
+
+impl Backend for SimulatedBackend {
+    fn name(&self) -> &'static str {
+        "simulated"
+    }
+
+    fn run_round(&mut self, ctx: &mut RoundCtx<'_>) -> Result<RoundOutcome> {
+        let (mut leased, fetch_times) = lease_blocks_sync(ctx)?;
+        let t_compute = Instant::now();
+        let mut tokens = 0u64;
+        let mut host_secs = Vec::with_capacity(ctx.workers.len());
+        {
+            let RoundCtx { workers, z, dt, exec, .. } = ctx;
+            let mut docs = DocView::new(z, dt);
+            for (w, blk) in workers.iter_mut().zip(leased.iter_mut()) {
+                let mut backend = match ctx.sampler {
+                    SamplerKind::InvertedXy => SamplerBackend::InvertedXy,
+                    SamplerKind::Xla => {
+                        let exec = exec
+                            .as_mut()
+                            .map(|e| &mut **e)
+                            .context("xla sampler selected but no executor installed")?;
+                        SamplerBackend::Xla(exec)
+                    }
+                    _ => unreachable!("backend_for rejects baseline samplers"),
+                };
+                let (n, secs) = w.run_round(ctx.corpus, &mut docs, blk, ctx.params, &mut backend)?;
+                tokens += n;
+                host_secs.push(secs);
+            }
+        }
+        ctx.pstats.sample_secs += t_compute.elapsed().as_secs_f64();
+        let t_commit = commit_blocks_sync(ctx, leased)?;
+        Ok(RoundOutcome { tokens, host_secs, fetch_times, t_commit })
+    }
+}
+
+/// Real OS-thread execution of a round's disjoint tasks
+/// ([`parallel::run_round_threaded`]); transfers stay synchronous on the
+/// driver thread.
+pub struct ThreadedBackend;
+
+impl Backend for ThreadedBackend {
+    fn name(&self) -> &'static str {
+        "threaded"
+    }
+
+    fn run_round(&mut self, ctx: &mut RoundCtx<'_>) -> Result<RoundOutcome> {
+        let (mut leased, fetch_times) = lease_blocks_sync(ctx)?;
+        let t_compute = Instant::now();
+        let per_worker = {
+            let RoundCtx { workers, z, dt, .. } = ctx;
+            parallel::run_round_threaded(
+                ctx.corpus,
+                ctx.params,
+                workers,
+                &mut leased,
+                z,
+                dt,
+                ctx.doc_ownership,
+                ctx.parallelism,
+            )?
+        };
+        let mut tokens = 0u64;
+        let mut host_secs = Vec::with_capacity(per_worker.len());
+        for (n, secs) in per_worker {
+            tokens += n;
+            host_secs.push(secs);
+        }
+        ctx.pstats.sample_secs += t_compute.elapsed().as_secs_f64();
+        let t_commit = commit_blocks_sync(ctx, leased)?;
+        Ok(RoundOutcome { tokens, host_secs, fetch_times, t_commit })
+    }
+}
+
+/// The threaded engine with KV-store transfers pipelined off the critical
+/// path: round starts take blocks from the staging buffer the flusher
+/// filled during the previous round, commits and next-round staging
+/// overlap with sampling ([`pipeline::run_round_pipelined`]). Owns the
+/// cross-round [`PipelineEngine`] staging state.
+pub struct PipelinedBackend {
+    engine: PipelineEngine,
+}
+
+impl PipelinedBackend {
+    /// A pipelined backend for `workers` positions under a staging budget
+    /// of `budget_bytes` (`0` = unlimited).
+    pub fn new(workers: usize, budget_bytes: u64) -> PipelinedBackend {
+        PipelinedBackend { engine: PipelineEngine::new(workers, budget_bytes) }
+    }
+}
+
+impl Backend for PipelinedBackend {
+    fn name(&self) -> &'static str {
+        "pipelined"
+    }
+
+    fn run_round(&mut self, ctx: &mut RoundCtx<'_>) -> Result<RoundOutcome> {
+        let machines = ctx.machines;
+        // A staged block becomes this round's active block — same bytes
+        // handed over, so Staging is released as Model is charged with no
+        // double count.
+        for (w, bytes) in self.engine.staged_bytes_by_worker().into_iter().enumerate() {
+            if bytes > 0 {
+                ctx.mem.release(machines[w], MemCategory::Staging, bytes);
+            }
+        }
+        let (blocks, receipts, acquire) =
+            self.engine.acquire_round_blocks(ctx.kv, ctx.schedule, ctx.round, machines)?;
+        // Flow timing comes from the worker-ordered receipts; the meter's
+        // completion-ordered pending list is discarded.
+        let fetch_flows: Vec<Flow> = receipts.iter().map(|r| r.flow()).collect();
+        let _ = ctx.kv.drain_flows();
+        let fetch_times = ctx.net.per_flow_times(&fetch_flows);
+        debug_assert_eq!(fetch_times.len(), ctx.workers.len());
+        for (w, blk) in ctx.workers.iter().zip(&blocks) {
+            ctx.mem.charge(w.machine, MemCategory::Model, blk.bytes())?;
+        }
+
+        // Compute with block commits and next-round prefetch staging
+        // overlapped on a flusher thread; only the `C_k` merges stay on
+        // the driver thread in worker order, so the totals trajectory is
+        // identical to the other backends.
+        let plan = RoundPlan::build(ctx.schedule, ctx.round, machines, self.engine.budget_bytes());
+        let model_bytes: Vec<u64> = blocks.iter().map(|b| b.bytes()).collect();
+        let out = {
+            let RoundCtx { workers, z, dt, .. } = ctx;
+            pipeline::run_round_pipelined(
+                ctx.corpus,
+                ctx.params,
+                workers,
+                blocks,
+                z,
+                dt,
+                ctx.doc_ownership,
+                ctx.parallelism,
+                ctx.kv,
+                &plan,
+            )?
+        };
+        let mut tokens = 0u64;
+        let mut host_secs = Vec::with_capacity(out.per_worker.len());
+        for &(n, secs) in &out.per_worker {
+            tokens += n;
+            host_secs.push(secs);
+        }
+        PipelineEngine::record_round(ctx.pstats, &acquire, &out);
+        // During the round each consumer machine really held its active
+        // (Model) block *and* the staging buffer the flusher refilled —
+        // charge Staging before releasing Model so the accountant's peak
+        // (and `enforce_ram`) sees the double-buffering overlap.
+        for (w, s) in out.staged.iter().enumerate() {
+            if let Some(s) = s {
+                ctx.mem.charge(machines[w], MemCategory::Staging, s.block.bytes())?;
+            }
+        }
+        for (w, bytes) in model_bytes.into_iter().enumerate() {
+            ctx.mem.release(machines[w], MemCategory::Model, bytes);
+        }
+        // C_k merges: reduce half of the allreduce, worker order. Timed as
+        // flush stall so the off baseline stays directly comparable.
+        let t_merge = Instant::now();
+        let mut merge_bytes_per_worker = 0u64;
+        for w in ctx.workers.iter_mut() {
+            let before = ctx.kv.total_bytes();
+            let delta = w.extract_totals_delta();
+            ctx.kv.merge_totals_delta(&delta, w.machine);
+            merge_bytes_per_worker = ctx.kv.total_bytes() - before;
+        }
+        ctx.pstats.flush_stall_secs += t_merge.elapsed().as_secs_f64();
+        let commit_flows: Vec<Flow> = out.commit_receipts.iter().map(|r| r.flow()).collect();
+        let _ = ctx.kv.drain_flows();
+        let t_commit = ctx.net.phase_time(&commit_flows)
+            + ctx.net.reduce_time(merge_bytes_per_worker, ctx.workers.len());
+        self.engine.install(out.staged);
+        Ok(RoundOutcome { tokens, host_secs, fetch_times, t_commit })
+    }
+
+    fn end_iteration(&mut self) -> Result<()> {
+        // The last round has no lookahead, so the staging buffer is empty
+        // at every iteration boundary — the store is quiescent for
+        // `loglik`/`check_consistency` exactly as in the other modes.
+        if !self.engine.staging_is_empty() {
+            bail!("staging buffer must drain by iteration end");
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Config;
+
+    fn cfg(text: &str) -> Config {
+        Config::from_str(text).unwrap()
+    }
+
+    #[test]
+    fn selects_backend_by_config() {
+        let sim = backend_for(&cfg("[train]\nsampler = \"inverted-xy\"")).unwrap();
+        assert_eq!(sim.name(), "simulated");
+        let thr = backend_for(&cfg("[coord]\nexecution = \"threaded\"")).unwrap();
+        assert_eq!(thr.name(), "threaded");
+        let pip = backend_for(&cfg(
+            "[coord]\nexecution = \"threaded\"\npipeline = \"double_buffer\"",
+        ))
+        .unwrap();
+        assert_eq!(pip.name(), "pipelined");
+    }
+
+    #[test]
+    fn xla_rides_simulated_only() {
+        assert!(backend_for(&cfg("[train]\nsampler = \"xla\"")).is_ok());
+        let err = {
+            let mut c = cfg("[train]\nsampler = \"xla\"");
+            c.coord.execution = ExecutionMode::Threaded;
+            backend_for(&c).unwrap_err().to_string()
+        };
+        assert!(err.contains("threaded/pipelined execution"), "{err}");
+    }
+
+    #[test]
+    fn baseline_samplers_rejected() {
+        for s in ["dense", "sparse-yao"] {
+            let err = backend_for(&cfg(&format!("[train]\nsampler = \"{s}\"")))
+                .unwrap_err()
+                .to_string();
+            assert!(err.contains("baseline"), "{s}: {err}");
+        }
+    }
+}

@@ -1,0 +1,465 @@
+//! Serving a trained model: frozen-state **fold-in** Gibbs inference.
+//!
+//! [`Session::freeze`](super::Session::freeze) packages the trained state
+//! into a [`TopicModel`] — the word–topic table `C_t^k`, the totals
+//! `C_k`, and the hyperparameters — and [`TopicModel::infer`] answers
+//! queries over it: given unseen bag-of-words documents, Gibbs-sample
+//! their topic assignments against the *frozen* model
+//!
+//! ```text
+//! p(z_n = k | w_n, C_d) ∝ (C_d^k¬ + α) · (C_{w_n}^k + β)/(C_k + Vβ)
+//! ```
+//!
+//! (the word-side fraction never changes — the model is read-only), then
+//! report each document's topic mixture `θ_d`. This is the classic
+//! held-out fold-in procedure and the first serving-scenario workload in
+//! the repo: documents are independent given the frozen model, so batch
+//! queries parallelize embarrassingly across OS threads
+//! (`InferOptions::threads`, benched in `benches/infer_latency.rs`) while
+//! staying **deterministic** — every document samples on its own RNG
+//! stream derived from `InferOptions::seed` and its batch position, so
+//! the thread count never changes a result.
+//!
+//! Quality is measured with [`crate::metrics::perplexity`]: fold-in
+//! perplexity must beat the uniform-topic (cold-start) baseline on held
+//! out text (`tests/session_infer.rs`).
+
+use anyhow::{bail, Result};
+
+use crate::metrics::perplexity::token_log_prob;
+use crate::model::{SparseCounts, TopicCounts, WordTopicTable};
+use crate::sampler::Params;
+use crate::util::rng::Pcg64;
+
+/// One held-out document as a bag of word ids (duplicates = counts).
+#[derive(Debug, Clone, Default)]
+pub struct BowDoc {
+    /// Word ids, in any order; ids must lie in the model's vocabulary.
+    pub tokens: Vec<u32>,
+}
+
+impl BowDoc {
+    /// A document from a token stream.
+    pub fn new(tokens: Vec<u32>) -> BowDoc {
+        BowDoc { tokens }
+    }
+
+    /// A document from `(word, count)` pairs.
+    pub fn from_counts(pairs: &[(u32, u32)]) -> BowDoc {
+        let mut tokens = Vec::new();
+        for &(w, c) in pairs {
+            tokens.extend(std::iter::repeat(w).take(c as usize));
+        }
+        BowDoc { tokens }
+    }
+
+    /// Tokens in the document.
+    pub fn len(&self) -> usize {
+        self.tokens.len()
+    }
+
+    /// True when the document has no tokens.
+    pub fn is_empty(&self) -> bool {
+        self.tokens.is_empty()
+    }
+}
+
+/// Fold-in inference knobs.
+#[derive(Debug, Clone, Copy)]
+pub struct InferOptions {
+    /// Gibbs sweeps per document over the frozen model.
+    pub iterations: usize,
+    /// Seed of the per-document RNG streams (stream id = batch position,
+    /// so results are independent of batching and thread count).
+    pub seed: u64,
+    /// OS threads for the batch (0 ⇒ one; documents are independent, so
+    /// any value returns identical results).
+    pub threads: usize,
+}
+
+impl Default for InferOptions {
+    fn default() -> Self {
+        InferOptions { iterations: 20, seed: 0xf01d, threads: 1 }
+    }
+}
+
+/// Per-document inference results: folded-in doc–topic counts and the
+/// posterior-mean mixtures `θ_d` they induce.
+#[derive(Debug, Clone)]
+pub struct DocTopics {
+    counts: Vec<SparseCounts>,
+    num_topics: usize,
+    alpha: f64,
+}
+
+impl DocTopics {
+    /// Documents in the batch.
+    pub fn len(&self) -> usize {
+        self.counts.len()
+    }
+
+    /// True when the batch was empty.
+    pub fn is_empty(&self) -> bool {
+        self.counts.is_empty()
+    }
+
+    /// Folded-in doc–topic counts of document `d`.
+    pub fn counts(&self, d: usize) -> &SparseCounts {
+        &self.counts[d]
+    }
+
+    /// Posterior-mean topic mixture of document `d`:
+    /// `θ_k = (C_d^k + α) / (N_d + Kα)`.
+    pub fn theta(&self, d: usize) -> Vec<f64> {
+        let counts = &self.counts[d];
+        let denom = counts.total() as f64 + self.num_topics as f64 * self.alpha;
+        let mut theta = vec![self.alpha / denom; self.num_topics];
+        for (k, c) in counts.iter() {
+            theta[k as usize] = (c as f64 + self.alpha) / denom;
+        }
+        theta
+    }
+
+    /// Document `d`'s `n` heaviest topics as `(topic, θ)` pairs,
+    /// descending.
+    pub fn top_topics(&self, d: usize, n: usize) -> Vec<(u32, f64)> {
+        let counts = &self.counts[d];
+        let denom = counts.total() as f64 + self.num_topics as f64 * self.alpha;
+        counts
+            .iter()
+            .take(n)
+            .map(|(k, c)| (k, (c as f64 + self.alpha) / denom))
+            .collect()
+    }
+}
+
+/// A trained, frozen LDA model ready to serve fold-in queries — what
+/// [`Session::freeze`](super::Session::freeze) returns.
+pub struct TopicModel {
+    wt: WordTopicTable,
+    ck: TopicCounts,
+    params: Params,
+    /// `1/(C_k + Vβ)` per topic — shared by every query (model is
+    /// read-only).
+    inv: Vec<f64>,
+    /// `α·β·inv_k` per topic — the all-smoothing floor of the fold-in
+    /// conditional.
+    prior: Vec<f64>,
+    prior_total: f64,
+}
+
+impl TopicModel {
+    /// Package trained state. Fails on dimension mismatches or invalid
+    /// totals, so a `TopicModel` that constructs is servable.
+    pub fn new(wt: WordTopicTable, ck: TopicCounts, params: Params) -> Result<TopicModel> {
+        if wt.num_topics() != params.num_topics {
+            bail!(
+                "word-topic table has K={}, params say K={}",
+                wt.num_topics(),
+                params.num_topics
+            );
+        }
+        if ck.num_topics() != params.num_topics {
+            bail!("totals have K={}, params say K={}", ck.num_topics(), params.num_topics);
+        }
+        if !ck.is_valid() {
+            bail!("topic totals contain negative entries — state is not quiescent");
+        }
+        let inv: Vec<f64> =
+            (0..params.num_topics).map(|k| 1.0 / (ck.get(k) as f64 + params.vbeta)).collect();
+        let prior: Vec<f64> = inv.iter().map(|&v| params.alpha * params.beta * v).collect();
+        let prior_total = prior.iter().sum();
+        Ok(TopicModel { wt, ck, params, inv, prior, prior_total })
+    }
+
+    /// Number of topics `K`.
+    pub fn num_topics(&self) -> usize {
+        self.params.num_topics
+    }
+
+    /// Vocabulary size `V`.
+    pub fn num_words(&self) -> usize {
+        self.wt.num_words()
+    }
+
+    /// The hyperparameters the model was trained with.
+    pub fn params(&self) -> &Params {
+        &self.params
+    }
+
+    /// The frozen word–topic table.
+    pub fn word_topic(&self) -> &WordTopicTable {
+        &self.wt
+    }
+
+    /// The frozen topic totals.
+    pub fn totals(&self) -> &TopicCounts {
+        &self.ck
+    }
+
+    /// Fold in a batch of held-out documents with default options
+    /// (20 sweeps, fixed seed, single thread).
+    pub fn infer(&self, docs: &[BowDoc]) -> Result<DocTopics> {
+        self.infer_with(docs, &InferOptions::default())
+    }
+
+    /// Fold in a batch of held-out documents. Deterministic for a fixed
+    /// `opts.seed` regardless of `opts.threads` — each document samples
+    /// on its own RNG stream keyed by batch position.
+    pub fn infer_with(&self, docs: &[BowDoc], opts: &InferOptions) -> Result<DocTopics> {
+        if opts.iterations == 0 {
+            bail!("infer: iterations must be >= 1");
+        }
+        let v = self.wt.num_words();
+        for (i, doc) in docs.iter().enumerate() {
+            if let Some(&w) = doc.tokens.iter().find(|&&w| w as usize >= v) {
+                bail!("doc {i}: word id {w} out of vocabulary (V={v})");
+            }
+        }
+        let empty = DocTopics {
+            counts: Vec::new(),
+            num_topics: self.params.num_topics,
+            alpha: self.params.alpha,
+        };
+        if docs.is_empty() {
+            return Ok(empty);
+        }
+
+        let threads = opts.threads.max(1).min(docs.len());
+        let chunk = docs.len().div_ceil(threads);
+        let mut counts: Vec<SparseCounts> = vec![SparseCounts::new(); docs.len()];
+        std::thread::scope(|scope| {
+            for (ci, (doc_chunk, out_chunk)) in
+                docs.chunks(chunk).zip(counts.chunks_mut(chunk)).enumerate()
+            {
+                scope.spawn(move || {
+                    let mut prob = vec![0.0f64; self.params.num_topics];
+                    for (j, (doc, out)) in
+                        doc_chunk.iter().zip(out_chunk.iter_mut()).enumerate()
+                    {
+                        let mut rng = Pcg64::with_stream(opts.seed, (ci * chunk + j) as u64);
+                        *out = self.fold_in_doc(doc, opts.iterations, &mut rng, &mut prob);
+                    }
+                });
+            }
+        });
+        Ok(DocTopics { counts, ..empty })
+    }
+
+    /// Gibbs-sample one document against the frozen model. O(K + K_t)
+    /// per token: the all-smoothing floor is precomputed, the doc and
+    /// word sparse parts are added over their non-zeros.
+    fn fold_in_doc(
+        &self,
+        doc: &BowDoc,
+        sweeps: usize,
+        rng: &mut Pcg64,
+        prob: &mut [f64],
+    ) -> SparseCounts {
+        let k = self.params.num_topics;
+        let alpha = self.params.alpha;
+        let beta = self.params.beta;
+        let mut counts = SparseCounts::new();
+        let mut z = Vec::with_capacity(doc.tokens.len());
+        for _ in &doc.tokens {
+            let t = rng.next_below(k as u64) as u32;
+            counts.inc(t);
+            z.push(t);
+        }
+        for _ in 0..sweeps {
+            for (n, &w) in doc.tokens.iter().enumerate() {
+                counts.dec(z[n]);
+                // p_k = (C_d^k + α)(C_w^k + β)·inv_k, regrouped as
+                // αβ·inv (dense, precomputed) + C_d^k·β·inv (doc nnz)
+                // + (C_d^k + α)·C_w^k·inv (word-row nnz).
+                prob.copy_from_slice(&self.prior);
+                let mut total = self.prior_total;
+                for (t, c) in counts.iter() {
+                    let add = c as f64 * beta * self.inv[t as usize];
+                    prob[t as usize] += add;
+                    total += add;
+                }
+                for (t, ct) in self.wt.row(w as usize).iter() {
+                    let add =
+                        (counts.get(t) as f64 + alpha) * ct as f64 * self.inv[t as usize];
+                    prob[t as usize] += add;
+                    total += add;
+                }
+                let new = rng.discrete(prob, total) as u32;
+                counts.inc(new);
+                z[n] = new;
+            }
+        }
+        counts
+    }
+
+    /// Mean per-token predictive log-probability and perplexity of
+    /// held-out docs under their folded-in mixtures
+    /// ([`crate::metrics::perplexity`]). `folded` must come from
+    /// [`TopicModel::infer`] over the same `docs` batch.
+    pub fn held_out_perplexity(&self, docs: &[BowDoc], folded: &DocTopics) -> Result<(f64, f64)> {
+        if folded.len() != docs.len() {
+            bail!("fold-in results cover {} docs, batch has {}", folded.len(), docs.len());
+        }
+        let mut total_lp = 0.0;
+        let mut tokens = 0usize;
+        for (i, doc) in docs.iter().enumerate() {
+            let dc = folded.counts(i);
+            for &w in &doc.tokens {
+                total_lp += token_log_prob(&self.wt, &self.ck, Some(dc), w, &self.params);
+                tokens += 1;
+            }
+        }
+        if tokens == 0 {
+            return Ok((0.0, f64::NAN));
+        }
+        let mean_lp = total_lp / tokens as f64;
+        Ok((mean_lp, (-mean_lp).exp()))
+    }
+
+    /// The cold-start control: perplexity with no document mixture at
+    /// all, which mixes topics by the uniform smoothing prior. Fold-in
+    /// must beat this on any topical corpus.
+    pub fn uniform_baseline_perplexity(&self, docs: &[BowDoc]) -> (f64, f64) {
+        let mut total_lp = 0.0;
+        let mut tokens = 0usize;
+        for doc in docs {
+            for &w in &doc.tokens {
+                total_lp += token_log_prob(&self.wt, &self.ck, None, w, &self.params);
+                tokens += 1;
+            }
+        }
+        if tokens == 0 {
+            return (0.0, f64::NAN);
+        }
+        let mean_lp = total_lp / tokens as f64;
+        (mean_lp, (-mean_lp).exp())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::Assignments;
+    use crate::sampler::{dense, Scratch};
+
+    /// A small trained model: dense Gibbs on a synthetic topical corpus.
+    fn trained_model() -> (TopicModel, Vec<BowDoc>) {
+        let corpus = crate::corpus::synthetic::generate(&crate::corpus::synthetic::GenSpec {
+            vocab: 120,
+            docs: 150,
+            avg_doc_len: 30,
+            zipf_s: 1.05,
+            topics: 6,
+            alpha: 0.08,
+            seed: 44,
+        });
+        let mut rng = Pcg64::new(5);
+        let mut assign = Assignments::random(&corpus, 8, &mut rng);
+        let (mut dt, mut wt, mut ck) = assign.build_counts(&corpus);
+        let params = Params::new(8, corpus.num_words(), 0.1, 0.01);
+        let mut scratch = Scratch::new(8);
+        for _ in 0..30 {
+            dense::sweep(
+                &corpus, &mut assign, &mut dt, &mut wt, &mut ck, &params, &mut scratch, &mut rng,
+            );
+        }
+        // Held out: fresh docs from the same generative process.
+        let held = crate::corpus::synthetic::generate(&crate::corpus::synthetic::GenSpec {
+            vocab: 120,
+            docs: 40,
+            avg_doc_len: 30,
+            zipf_s: 1.05,
+            topics: 6,
+            alpha: 0.08,
+            seed: 45,
+        });
+        let docs: Vec<BowDoc> =
+            held.docs.iter().map(|d| BowDoc::new(d.tokens.clone())).collect();
+        (TopicModel::new(wt, ck, params).unwrap(), docs)
+    }
+
+    #[test]
+    fn fold_in_beats_uniform_baseline() {
+        let (model, docs) = trained_model();
+        let folded = model.infer(&docs).unwrap();
+        let (_, ppx) = model.held_out_perplexity(&docs, &folded).unwrap();
+        let (_, ppx_uniform) = model.uniform_baseline_perplexity(&docs);
+        assert!(
+            ppx < ppx_uniform,
+            "fold-in ppx {ppx} must beat uniform baseline {ppx_uniform}"
+        );
+        assert!(ppx > 1.0);
+    }
+
+    #[test]
+    fn deterministic_and_thread_count_invisible() {
+        let (model, docs) = trained_model();
+        let run = |threads: usize| {
+            let folded = model
+                .infer_with(&docs, &InferOptions { threads, ..Default::default() })
+                .unwrap();
+            (0..docs.len())
+                .map(|d| folded.counts(d).iter().collect::<Vec<_>>())
+                .collect::<Vec<_>>()
+        };
+        let one = run(1);
+        assert_eq!(one, run(1), "same seed same result");
+        for threads in [2, 4, 7] {
+            assert_eq!(one, run(threads), "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn theta_normalizes_and_ranks() {
+        let (model, docs) = trained_model();
+        let folded = model.infer(&docs[..4].to_vec()).unwrap();
+        for d in 0..folded.len() {
+            let theta = folded.theta(d);
+            let sum: f64 = theta.iter().sum();
+            assert!((sum - 1.0).abs() < 1e-9, "doc {d}: θ sums to {sum}");
+            let top = folded.top_topics(d, 2);
+            if top.len() == 2 {
+                assert!(top[0].1 >= top[1].1);
+            }
+        }
+    }
+
+    #[test]
+    fn validates_inputs() {
+        let (model, _) = trained_model();
+        // Word out of vocabulary.
+        let err = model
+            .infer(&[BowDoc::new(vec![9999])])
+            .map(|_| ())
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("vocabulary"), "{err}");
+        // Zero sweeps.
+        let err = model
+            .infer_with(&[], &InferOptions { iterations: 0, ..Default::default() })
+            .map(|_| ())
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("iterations"), "{err}");
+        // Empty batch and empty doc are fine.
+        assert!(model.infer(&[]).unwrap().is_empty());
+        let folded = model.infer(&[BowDoc::default()]).unwrap();
+        assert_eq!(folded.counts(0).len(), 0);
+        // Dimension mismatch at construction.
+        let bad = TopicModel::new(
+            WordTopicTable::zeros(10, 4),
+            TopicCounts::zeros(8),
+            Params::new(8, 10, 0.1, 0.01),
+        );
+        assert!(bad.is_err());
+    }
+
+    #[test]
+    fn from_counts_expands() {
+        let d = BowDoc::from_counts(&[(3, 2), (7, 1)]);
+        assert_eq!(d.tokens, vec![3, 3, 7]);
+        assert_eq!(d.len(), 3);
+        assert!(!d.is_empty());
+    }
+}

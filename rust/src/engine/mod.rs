@@ -1,0 +1,24 @@
+//! The `engine` subsystem — the public facade over the block-scheduled
+//! core, separating *what* is computed (Algorithm 1/2's block-rotation
+//! Gibbs) from *where and how* it executes.
+//!
+//! * [`session`] — [`SessionBuilder`] / [`Session`]: one typed entry
+//!   point for **train / resume / infer**, validating the entire config
+//!   up front and streaming [`IterEvent`]s to observers.
+//! * [`backend`] — the pluggable [`Backend`] execution trait
+//!   (`simulated` | `threaded` | `pipelined`), selected once at build
+//!   time instead of branched per-iteration inside the driver.
+//! * [`infer`] — [`TopicModel`]: a frozen trained model serving held-out
+//!   **fold-in** queries ([`TopicModel::infer`]) — the first
+//!   serving-scenario workload.
+//!
+//! See `DESIGN.md` §Public-API for the facade diagram, the `Backend`
+//! contract, and the old→new deprecation table.
+
+pub mod backend;
+pub mod infer;
+pub mod session;
+
+pub use backend::{Backend, RoundCtx, RoundOutcome};
+pub use infer::{BowDoc, DocTopics, InferOptions, TopicModel};
+pub use session::{Execution, IterEvent, Session, SessionBuilder, TrainSummary};

@@ -1,0 +1,744 @@
+//! `Session` — the one typed entry point for train / resume / infer.
+//!
+//! ```text
+//! SessionBuilder ── build() ──► Session ── train()/step() ──► TrainSummary
+//!       │  (validates the whole      │                            + IterEvent stream
+//!       │   config up front)         ├── checkpoint(path)  ──► resumable .ckpt
+//!       │                            └── freeze()          ──► TopicModel ── infer()
+//!       └── resume_from(path)  (bitwise-exact continuation)
+//! ```
+//!
+//! The builder resolves everything that can fail **before** any corpus
+//! token is sampled: config invariants, corpus construction, the
+//! execution-backend × sampler combination
+//! ([`crate::engine::backend::backend_for`]), checkpoint compatibility,
+//! and — for the XLA sampler — artifact loading. A `Session` that builds
+//! is a session that trains.
+//!
+//! One facade covers both systems in the repo: the model-parallel driver
+//! (`inverted-xy` / `xla` samplers) and the Yahoo!LDA-style data-parallel
+//! baseline (`sparse-yao` / `dense`), so experiment code compares them
+//! through a single API (the parameter-server serving designs of Li et
+//! al. and LightLDA follow the same one-facade shape).
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::baseline::YahooLda;
+use crate::config::{
+    Config, CoordConfig, ExecutionMode, PipelineMode, SamplerKind,
+};
+use crate::coordinator::{Driver, IterStats};
+use crate::corpus::Corpus;
+use crate::metrics::PipelineStats;
+use crate::model::checkpoint;
+use crate::runtime::XlaExecutor;
+use crate::sampler::xla_dense::MicrobatchExecutor;
+
+use super::infer::TopicModel;
+
+/// Where and how a round's `(worker, block)` tasks execute on the host —
+/// the typed replacement for the stringly `coord.execution` /
+/// `coord.pipeline` pair. All three variants produce bitwise-identical
+/// model state from the same seed, so this is purely a performance knob.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Execution {
+    /// Sequential on the driver thread, accounted through the
+    /// discrete-event cluster simulator (the paper-figure mode; any
+    /// sampler).
+    Simulated,
+    /// Real OS threads, lock-free by round disjointness
+    /// (`inverted-xy` only). `parallelism = 0` ⇒ one thread per worker.
+    Threaded {
+        /// OS threads for the round's tasks (0 ⇒ one per worker).
+        parallelism: usize,
+    },
+    /// Threaded, plus KV-store transfers pipelined off the critical path
+    /// (double-buffered block prefetch into a staging buffer).
+    Pipelined {
+        /// OS threads for the round's tasks (0 ⇒ one per worker).
+        parallelism: usize,
+        /// Staging-buffer budget in MiB (0 ⇒ unlimited; staged bytes are
+        /// still charged to the cluster RAM accountant).
+        staging_budget_mib: f64,
+    },
+}
+
+impl Execution {
+    /// The execution a (finalized) coordinator config selects.
+    pub fn from_coord(coord: &CoordConfig) -> Execution {
+        match coord.pipeline {
+            PipelineMode::DoubleBuffer => Execution::Pipelined {
+                parallelism: coord.parallelism,
+                staging_budget_mib: coord.staging_budget_mib,
+            },
+            PipelineMode::Off => match coord.execution {
+                ExecutionMode::Simulated => Execution::Simulated,
+                ExecutionMode::Threaded => {
+                    Execution::Threaded { parallelism: coord.parallelism }
+                }
+            },
+        }
+    }
+
+    /// Write this execution back onto the legacy config pair.
+    pub fn apply_to(&self, coord: &mut CoordConfig) {
+        match *self {
+            Execution::Simulated => {
+                coord.execution = ExecutionMode::Simulated;
+                coord.pipeline = PipelineMode::Off;
+            }
+            Execution::Threaded { parallelism } => {
+                coord.execution = ExecutionMode::Threaded;
+                coord.pipeline = PipelineMode::Off;
+                coord.parallelism = parallelism;
+            }
+            Execution::Pipelined { parallelism, staging_budget_mib } => {
+                coord.execution = ExecutionMode::Threaded;
+                coord.pipeline = PipelineMode::DoubleBuffer;
+                coord.parallelism = parallelism;
+                coord.staging_budget_mib = staging_budget_mib;
+            }
+        }
+    }
+
+    /// Canonical name (`"simulated"` | `"threaded"` | `"pipelined"`).
+    pub fn name(&self) -> &'static str {
+        match self {
+            Execution::Simulated => "simulated",
+            Execution::Threaded { .. } => "threaded",
+            Execution::Pipelined { .. } => "pipelined",
+        }
+    }
+}
+
+/// One iteration's worth of progress, streamed to the observer passed to
+/// [`Session::train_observed`] (and returned by [`Session::step`]) —
+/// the replacement for the raw `run(FnMut(&IterStats, Option<f64>))`
+/// callback.
+#[derive(Debug, Clone)]
+pub struct IterEvent {
+    /// Per-iteration statistics (tokens, simulated time, Δ, stalls).
+    pub stats: IterStats,
+    /// Training log-likelihood, when this iteration hit the
+    /// `train.ll_every` cadence.
+    pub loglik: Option<f64>,
+    /// Cumulative host wall-clock transfer/compute breakdown — fetch
+    /// stalls vs sampling, staging hits ([`PipelineStats`]); zeros for
+    /// the baseline.
+    pub pipeline: PipelineStats,
+    /// Baseline only: fraction of sync periods whose pulls were skipped
+    /// because the network fell behind (0 for model-parallel runs).
+    pub skip_rate: f64,
+}
+
+/// Unified result of a training run (either system). Formerly
+/// `eval::common::RunSummary`, which now re-exports this type.
+#[derive(Debug, Clone, Default)]
+pub struct TrainSummary {
+    /// (iteration, sim_time_secs, loglik) checkpoints; entry 0 is the
+    /// state at session start (iteration 0, or the resume point).
+    pub ll_series: Vec<(usize, f64, f64)>,
+    /// Every iteration's event, in order.
+    pub iters: Vec<IterEvent>,
+    /// Log-likelihood of the final state.
+    pub final_loglik: f64,
+    /// Simulated cluster seconds at run end.
+    pub sim_time: f64,
+    /// Max per-node peak memory (Fig 4a y-axis).
+    pub peak_mem_bytes: u64,
+    /// Total communication bytes over the run.
+    pub total_comm_bytes: u64,
+    /// Total tokens sampled over the run.
+    pub total_tokens: u64,
+    /// Mean Δ_{r,i} (MP runs only; 0 for the baseline).
+    pub mean_delta: f64,
+    /// Max Δ_{r,i} (MP runs only; 0 for the baseline).
+    pub max_delta: f64,
+    /// Host compute seconds actually burned (for throughput reporting).
+    pub host_compute_secs: f64,
+}
+
+impl TrainSummary {
+    /// Simulated time at which the LL series first reaches `threshold`
+    /// (linear interpolation), if it does.
+    pub fn time_to_ll(&self, threshold: f64) -> Option<f64> {
+        let mut prev: Option<(f64, f64)> = None;
+        for &(_, t, ll) in &self.ll_series {
+            if ll >= threshold {
+                return Some(match prev {
+                    Some((pt, pll)) if ll > pll => pt + (t - pt) * (threshold - pll) / (ll - pll),
+                    _ => t,
+                });
+            }
+            prev = Some((t, ll));
+        }
+        None
+    }
+
+    /// Iterations to reach `threshold`.
+    pub fn iters_to_ll(&self, threshold: f64) -> Option<usize> {
+        self.ll_series.iter().find(|&&(_, _, ll)| ll >= threshold).map(|&(i, _, _)| i)
+    }
+}
+
+/// Builds a [`Session`], validating the entire configuration up front.
+///
+/// Typed setters cover the common knobs; [`SessionBuilder::configure`] is
+/// the escape hatch to every remaining `Config` field. Call order never
+/// matters — everything resolves in [`SessionBuilder::build`].
+#[derive(Default)]
+pub struct SessionBuilder {
+    cfg: Config,
+    execution: Option<Execution>,
+    corpus: Option<Corpus>,
+    resume: Option<PathBuf>,
+    executor: Option<Box<dyn MicrobatchExecutor>>,
+}
+
+impl SessionBuilder {
+    /// Start from the default config.
+    pub fn new() -> SessionBuilder {
+        Self::default()
+    }
+
+    /// Start from an existing config (TOML file loads, CLI overrides).
+    pub fn from_config(cfg: Config) -> SessionBuilder {
+        SessionBuilder { cfg, execution: None, corpus: None, resume: None, executor: None }
+    }
+
+    /// Corpus preset (`tiny` | `pubmed-sim` | `wiki-uni-sim` |
+    /// `wiki-bi-sim` | `custom` | `uci`).
+    pub fn corpus_preset(mut self, preset: &str) -> Self {
+        self.cfg.corpus.preset = preset.into();
+        self
+    }
+
+    /// Train on a pre-built corpus (experiments reuse corpora across
+    /// configurations; overrides the preset).
+    pub fn corpus(mut self, corpus: Corpus) -> Self {
+        self.corpus = Some(corpus);
+        self
+    }
+
+    /// Number of topics `K`.
+    pub fn topics(mut self, k: usize) -> Self {
+        self.cfg.train.topics = k;
+        self
+    }
+
+    /// Full sweeps [`Session::train`] runs.
+    pub fn iterations(mut self, n: usize) -> Self {
+        self.cfg.train.iterations = n;
+        self
+    }
+
+    /// Training seed (initial assignments + sampling streams).
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.cfg.train.seed = seed;
+        self
+    }
+
+    /// Sampler kernel (selects the system: `inverted-xy`/`xla` → the
+    /// model-parallel driver, `sparse-yao`/`dense` → the data-parallel
+    /// baseline).
+    pub fn sampler(mut self, sampler: SamplerKind) -> Self {
+        self.cfg.train.sampler = sampler;
+        self
+    }
+
+    /// Worker count (0 ⇒ one per cluster machine).
+    pub fn workers(mut self, n: usize) -> Self {
+        self.cfg.coord.workers = n;
+        self
+    }
+
+    /// Model-block count `M` (0 ⇒ equal to worker count).
+    pub fn blocks(mut self, n: usize) -> Self {
+        self.cfg.coord.blocks = n;
+        self
+    }
+
+    /// Simulated cluster preset (`high-end` | `low-end` | `custom`).
+    pub fn cluster_preset(mut self, preset: &str) -> Self {
+        self.cfg.cluster.preset = preset.into();
+        self
+    }
+
+    /// Simulated machine count.
+    pub fn machines(mut self, n: usize) -> Self {
+        self.cfg.cluster.machines = n;
+        self
+    }
+
+    /// Log-likelihood cadence (compute LL every N iterations; 0 = never).
+    pub fn ll_every(mut self, n: usize) -> Self {
+        self.cfg.train.ll_every = n;
+        self
+    }
+
+    /// Typed execution selection — replaces setting `coord.execution` and
+    /// `coord.pipeline` separately (the builder keeps the pair coherent,
+    /// so the "pipeline without threads" foot-gun cannot be expressed).
+    pub fn execution(mut self, execution: Execution) -> Self {
+        self.execution = Some(execution);
+        self
+    }
+
+    /// Resume from a checkpoint written by [`Session::checkpoint`]. A v2
+    /// checkpoint continues **bitwise identically** to the uninterrupted
+    /// run; a v1 (`model::checkpoint::save`) file warm-starts from its
+    /// assignments.
+    pub fn resume_from<P: Into<PathBuf>>(mut self, path: P) -> Self {
+        self.resume = Some(path.into());
+        self
+    }
+
+    /// Install an explicit microbatch executor for the `xla` sampler
+    /// (tests use the rust reference executor). Without this, `build`
+    /// AOT-loads the PJRT executor from `runtime.artifacts_dir`.
+    pub fn executor(mut self, exec: Box<dyn MicrobatchExecutor>) -> Self {
+        self.executor = Some(exec);
+        self
+    }
+
+    /// Escape hatch: edit any remaining `Config` field in place.
+    pub fn configure<F: FnOnce(&mut Config)>(mut self, f: F) -> Self {
+        f(&mut self.cfg);
+        self
+    }
+
+    /// Resolve presets, validate every invariant, build the corpus and
+    /// the execution backend, load checkpoints/artifacts — and return a
+    /// session that is guaranteed ready to train.
+    pub fn build(self) -> Result<Session> {
+        let SessionBuilder { mut cfg, execution, corpus, resume, executor } = self;
+        if let Some(exec) = execution {
+            exec.apply_to(&mut cfg.coord);
+        }
+        cfg.finalize().context("validating session config")?;
+
+        let baseline = matches!(cfg.train.sampler, SamplerKind::SparseYao | SamplerKind::Dense);
+        if baseline {
+            if Execution::from_coord(&cfg.coord) != Execution::Simulated {
+                bail!(
+                    "the data-parallel baseline ({}) runs on the simulated path; threaded/\
+                     pipelined execution rides the model-parallel driver (inverted-xy)",
+                    cfg.train.sampler.name()
+                );
+            }
+            if resume.is_some() {
+                bail!("checkpoint/resume rides the model-parallel driver");
+            }
+        }
+        if executor.is_some() && cfg.train.sampler != SamplerKind::Xla {
+            bail!("a microbatch executor only applies to the xla sampler");
+        }
+
+        let corpus = match corpus {
+            Some(c) => c,
+            None => crate::corpus::build(&cfg.corpus).context("building corpus")?,
+        };
+
+        if baseline {
+            let y = YahooLda::with_corpus(&cfg, corpus)?;
+            return Ok(Session { cfg, inner: Inner::Baseline(Box::new(y)) });
+        }
+
+        let mut driver = match &resume {
+            Some(path) => {
+                let (assign, state) = checkpoint::load_resumable(path, &corpus)
+                    .with_context(|| format!("loading checkpoint {path:?}"))?;
+                Driver::resume_with_corpus(&cfg, corpus, assign, state)?
+            }
+            None => Driver::with_corpus(&cfg, corpus)?,
+        };
+        if cfg.train.sampler == SamplerKind::Xla {
+            let exec: Box<dyn MicrobatchExecutor> = match executor {
+                Some(e) => e,
+                None => Box::new(
+                    XlaExecutor::from_dir(
+                        &cfg.runtime.artifacts_dir,
+                        &driver.params,
+                        cfg.train.microbatch,
+                    )
+                    .context("loading XLA artifacts (run `make artifacts`)")?,
+                ),
+            };
+            driver.set_executor(exec);
+        }
+        Ok(Session { cfg, inner: Inner::ModelParallel(Box::new(driver)) })
+    }
+}
+
+enum Inner {
+    ModelParallel(Box<Driver>),
+    Baseline(Box<YahooLda>),
+}
+
+/// A live training session over the block-scheduled core: step or stream
+/// iterations, checkpoint, and finally [`Session::freeze`] into a
+/// servable [`TopicModel`].
+pub struct Session {
+    cfg: Config,
+    inner: Inner,
+}
+
+impl Session {
+    /// Entry point: `Session::builder().topics(100)...build()`.
+    pub fn builder() -> SessionBuilder {
+        SessionBuilder::new()
+    }
+
+    /// The finalized configuration this session runs.
+    pub fn config(&self) -> &Config {
+        &self.cfg
+    }
+
+    /// The training corpus.
+    pub fn corpus(&self) -> &Corpus {
+        match &self.inner {
+            Inner::ModelParallel(d) => &d.corpus,
+            Inner::Baseline(y) => &y.corpus,
+        }
+    }
+
+    /// The execution backend this session selected at build time.
+    pub fn execution(&self) -> Execution {
+        Execution::from_coord(&self.cfg.coord)
+    }
+
+    /// Completed iterations (continues across resume).
+    pub fn iteration(&self) -> usize {
+        match &self.inner {
+            Inner::ModelParallel(d) => d.iteration(),
+            Inner::Baseline(y) => y.iteration(),
+        }
+    }
+
+    /// Simulated cluster seconds so far.
+    pub fn sim_time(&self) -> f64 {
+        match &self.inner {
+            Inner::ModelParallel(d) => d.sim_time(),
+            Inner::Baseline(y) => y.sim_time(),
+        }
+    }
+
+    /// Training log-likelihood of the current state (the baseline flushes
+    /// its outstanding worker logs first, so the value is exact).
+    pub fn loglik(&mut self) -> f64 {
+        match &mut self.inner {
+            Inner::ModelParallel(d) => d.loglik(),
+            Inner::Baseline(y) => {
+                y.flush();
+                y.loglik()
+            }
+        }
+    }
+
+    /// FNV-1a digest of the full model state (model-parallel sessions).
+    /// Bitwise-equal runs produce equal digests — the determinism suites'
+    /// primary check.
+    pub fn model_digest(&self) -> Result<u64> {
+        match &self.inner {
+            Inner::ModelParallel(d) => Ok(d.model_digest()),
+            Inner::Baseline(_) => bail!("model_digest is defined for model-parallel sessions"),
+        }
+    }
+
+    /// Mean `Δ_{r,i}` so far (0 for the baseline).
+    pub fn mean_delta(&self) -> f64 {
+        match &self.inner {
+            Inner::ModelParallel(d) => d.deltas.mean_delta(),
+            Inner::Baseline(_) => 0.0,
+        }
+    }
+
+    /// Max `Δ_{r,i}` so far (0 for the baseline).
+    pub fn max_delta(&self) -> f64 {
+        match &self.inner {
+            Inner::ModelParallel(d) => d.deltas.max_delta(),
+            Inner::Baseline(_) => 0.0,
+        }
+    }
+
+    /// Max per-node peak memory so far.
+    pub fn peak_mem_bytes(&self) -> u64 {
+        match &self.inner {
+            Inner::ModelParallel(d) => d.mem.max_peak(),
+            Inner::Baseline(y) => y.mem.max_peak(),
+        }
+    }
+
+    /// Total communication bytes so far.
+    pub fn total_comm_bytes(&self) -> u64 {
+        match &self.inner {
+            Inner::ModelParallel(d) => d.kv().total_bytes(),
+            Inner::Baseline(y) => y.meter().total_bytes(),
+        }
+    }
+
+    /// Cumulative host wall-clock transfer/compute breakdown (zeros for
+    /// the baseline).
+    pub fn pipeline_stats(&self) -> PipelineStats {
+        match &self.inner {
+            Inner::ModelParallel(d) => *d.pipeline_stats(),
+            Inner::Baseline(_) => PipelineStats::default(),
+        }
+    }
+
+    /// The underlying model-parallel driver, when this session runs one —
+    /// the escape hatch for driver-level instrumentation (timeline
+    /// traces, KV-store meters).
+    pub fn driver(&self) -> Option<&Driver> {
+        match &self.inner {
+            Inner::ModelParallel(d) => Some(d),
+            Inner::Baseline(_) => None,
+        }
+    }
+
+    /// Mutable access to the underlying driver (see [`Session::driver`]).
+    pub fn driver_mut(&mut self) -> Option<&mut Driver> {
+        match &mut self.inner {
+            Inner::ModelParallel(d) => Some(d),
+            Inner::Baseline(_) => None,
+        }
+    }
+
+    /// Run one full iteration and report it as an [`IterEvent`]
+    /// (log-likelihood attached per the `train.ll_every` cadence).
+    pub fn step(&mut self) -> Result<IterEvent> {
+        let ll_every = self.cfg.train.ll_every;
+        match &mut self.inner {
+            Inner::ModelParallel(d) => {
+                let stats = d.run_iteration()?;
+                let loglik = if ll_every > 0 && d.iteration() % ll_every == 0 {
+                    Some(d.loglik())
+                } else {
+                    None
+                };
+                Ok(IterEvent { loglik, pipeline: *d.pipeline_stats(), skip_rate: 0.0, stats })
+            }
+            Inner::Baseline(y) => {
+                let ys = y.run_iteration()?;
+                let loglik = if ll_every > 0 && y.iteration() % ll_every == 0 {
+                    y.flush();
+                    Some(y.loglik())
+                } else {
+                    None
+                };
+                Ok(IterEvent {
+                    stats: IterStats {
+                        iteration: ys.iteration,
+                        sim_time: ys.sim_time,
+                        tokens: ys.tokens,
+                        mean_delta: 0.0,
+                        comm_bytes: ys.comm_bytes,
+                        host_compute_secs: ys.host_compute_secs,
+                        fetch_stall_secs: 0.0,
+                    },
+                    loglik,
+                    pipeline: PipelineStats::default(),
+                    skip_rate: ys.skip_rate,
+                })
+            }
+        }
+    }
+
+    /// Train for `train.iterations` full sweeps.
+    pub fn train(&mut self) -> Result<TrainSummary> {
+        self.train_observed(|_| {})
+    }
+
+    /// Train for `train.iterations` sweeps, streaming an [`IterEvent`]
+    /// per iteration to `observer`.
+    pub fn train_observed<F: FnMut(&IterEvent)>(&mut self, observer: F) -> Result<TrainSummary> {
+        let iterations = self.cfg.train.iterations;
+        self.train_for(iterations, observer)
+    }
+
+    /// Train for an explicit number of sweeps (experiments often trim the
+    /// configured count).
+    pub fn train_for<F: FnMut(&IterEvent)>(
+        &mut self,
+        iterations: usize,
+        mut observer: F,
+    ) -> Result<TrainSummary> {
+        let mut summary = TrainSummary {
+            // Entry 0 is the state at session start — iteration 0, or the
+            // resume point for a resumed session.
+            ll_series: vec![(self.iteration(), self.sim_time(), self.loglik())],
+            ..TrainSummary::default()
+        };
+        for _ in 0..iterations {
+            let ev = self.step()?;
+            if let Some(ll) = ev.loglik {
+                summary.ll_series.push((ev.stats.iteration, ev.stats.sim_time, ll));
+            }
+            summary.total_tokens += ev.stats.tokens;
+            summary.host_compute_secs += ev.stats.host_compute_secs;
+            observer(&ev);
+            summary.iters.push(ev);
+        }
+        summary.final_loglik = self.loglik();
+        summary.sim_time = self.sim_time();
+        summary.peak_mem_bytes = self.peak_mem_bytes();
+        summary.total_comm_bytes = self.total_comm_bytes();
+        summary.mean_delta = self.mean_delta();
+        summary.max_delta = self.max_delta();
+        Ok(summary)
+    }
+
+    /// Write a resumable checkpoint at the current iteration boundary.
+    /// A fresh session built with [`SessionBuilder::resume_from`] on this
+    /// file continues **bitwise identically** to an uninterrupted run
+    /// (`tests/session_resume.rs`).
+    pub fn checkpoint<P: AsRef<Path>>(&self, path: P) -> Result<()> {
+        match &self.inner {
+            Inner::ModelParallel(d) => d.save_checkpoint(path),
+            Inner::Baseline(_) => bail!(
+                "checkpoint/resume rides the model-parallel driver; the data-parallel \
+                 baseline does not support it"
+            ),
+        }
+    }
+
+    /// Full-system consistency check (KV quiescent / PS flushed, counts
+    /// match Z). O(corpus); used by integration tests.
+    pub fn check_consistency(&mut self) -> Result<()> {
+        match &mut self.inner {
+            Inner::ModelParallel(d) => d.check_consistency(),
+            Inner::Baseline(y) => y.check_consistency(),
+        }
+    }
+
+    /// End training and package the model for serving: the word–topic
+    /// table, topic totals and hyperparameters, ready for
+    /// [`TopicModel::infer`] fold-in queries.
+    pub fn freeze(self) -> Result<TopicModel> {
+        match self.inner {
+            Inner::ModelParallel(d) => {
+                let wt = d.word_topic_table();
+                let ck = d.kv().totals_snapshot();
+                TopicModel::new(wt, ck, d.params)
+            }
+            Inner::Baseline(mut y) => {
+                let (wt, ck) = y.model_state();
+                let params = y.params;
+                TopicModel::new(wt, ck, params)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> SessionBuilder {
+        Session::builder()
+            .corpus_preset("tiny")
+            .topics(16)
+            .iterations(3)
+            .seed(7)
+            .workers(4)
+            .cluster_preset("custom")
+            .machines(4)
+    }
+
+    #[test]
+    fn builder_trains_and_reports() {
+        let mut s = tiny().build().unwrap();
+        let summary = s.train().unwrap();
+        assert_eq!(summary.iters.len(), 3);
+        assert_eq!(summary.ll_series.len(), 4); // init + 3
+        assert_eq!(summary.total_tokens as usize, 3 * s.corpus().num_tokens());
+        assert!(summary.final_loglik.is_finite());
+        s.check_consistency().unwrap();
+    }
+
+    #[test]
+    fn execution_round_trips_through_coord() {
+        for exec in [
+            Execution::Simulated,
+            Execution::Threaded { parallelism: 4 },
+            Execution::Pipelined { parallelism: 2, staging_budget_mib: 64.0 },
+        ] {
+            let mut coord = CoordConfig::default();
+            exec.apply_to(&mut coord);
+            assert_eq!(Execution::from_coord(&coord), exec, "{}", exec.name());
+        }
+    }
+
+    #[test]
+    fn executions_agree_bitwise_through_facade() {
+        let digest = |exec: Execution| {
+            let mut s = tiny().execution(exec).build().unwrap();
+            s.train().unwrap();
+            s.model_digest().unwrap()
+        };
+        let sim = digest(Execution::Simulated);
+        let thr = digest(Execution::Threaded { parallelism: 4 });
+        let pip = digest(Execution::Pipelined { parallelism: 4, staging_budget_mib: 0.0 });
+        assert_eq!(sim, thr);
+        assert_eq!(thr, pip);
+    }
+
+    #[test]
+    fn baseline_session_trains_through_same_facade() {
+        let mut s = tiny().sampler(SamplerKind::SparseYao).build().unwrap();
+        let summary = s.train().unwrap();
+        assert!(summary.final_loglik.is_finite());
+        assert_eq!(summary.mean_delta, 0.0);
+        s.check_consistency().unwrap();
+    }
+
+    #[test]
+    fn invalid_combinations_fail_at_build() {
+        // Baseline sampler cannot ride the threaded path.
+        let err = tiny()
+            .sampler(SamplerKind::SparseYao)
+            .execution(Execution::Threaded { parallelism: 2 })
+            .build()
+            .map(|_| ())
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("baseline"), "{err}");
+        // Xla cannot ride the pipelined path.
+        let err = tiny()
+            .sampler(SamplerKind::Xla)
+            .execution(Execution::Pipelined { parallelism: 2, staging_budget_mib: 0.0 })
+            .build()
+            .map(|_| ())
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("threaded/pipelined"), "{err}");
+        // Unknown corpus preset fails at build, not mid-train.
+        let err =
+            tiny().corpus_preset("nope").build().map(|_| ()).unwrap_err().to_string();
+        assert!(err.contains("corpus"), "{err}");
+        // Executor on a non-xla sampler is a config error.
+        let params = crate::sampler::Params::new(16, 100, 0.1, 0.01);
+        let err = tiny()
+            .executor(Box::new(crate::sampler::xla_dense::RustRefExecutor::new(
+                64, 16, &params,
+            )))
+            .build()
+            .map(|_| ())
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("xla"), "{err}");
+    }
+
+    #[test]
+    fn step_streams_events_with_ll_cadence() {
+        let mut s = tiny().iterations(4).ll_every(2).build().unwrap();
+        let e1 = s.step().unwrap();
+        assert_eq!(e1.stats.iteration, 1);
+        assert!(e1.loglik.is_none());
+        let e2 = s.step().unwrap();
+        assert_eq!(e2.stats.iteration, 2);
+        assert!(e2.loglik.is_some());
+    }
+}

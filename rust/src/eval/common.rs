@@ -1,129 +1,77 @@
-//! Shared experiment plumbing: unified training entry point over both
-//! systems (model-parallel driver and the Yahoo!LDA baseline), scaled-size
-//! helpers, and report rendering.
+//! Shared experiment plumbing over the [`crate::engine::Session`] facade:
+//! scaled-size helpers, convergence thresholds, and the deprecated
+//! pre-facade training entry points.
+//!
+//! The unified runner that used to live here (`run_training`) is now
+//! [`crate::engine::Session`]; the figure drivers go through
+//! [`train_summary_on`], a thin crate-internal wrapper that adds the
+//! experiment log lines. The old free functions remain for one PR as
+//! deprecated shims (see DESIGN.md §Public-API for the old→new table).
 
 use anyhow::{bail, Result};
 
-use crate::baseline::YahooLda;
 use crate::config::{Config, SamplerKind};
-use crate::coordinator::Driver;
 use crate::corpus::Corpus;
-use crate::runtime::XlaExecutor;
+use crate::engine::SessionBuilder;
 
-/// Unified result of a training run (either system).
-#[derive(Debug, Clone, Default)]
-pub struct RunSummary {
-    /// (iteration, sim_time_secs, loglik) checkpoints; entry 0 is init.
-    pub ll_series: Vec<(usize, f64, f64)>,
-    pub final_loglik: f64,
-    pub sim_time: f64,
-    pub peak_mem_bytes: u64,
-    pub total_comm_bytes: u64,
-    pub total_tokens: u64,
-    /// Mean Δ_{r,i} (MP runs only; 0 for the baseline).
-    pub mean_delta: f64,
-    pub max_delta: f64,
-    /// Host compute seconds actually burned (for throughput reporting).
-    pub host_compute_secs: f64,
-}
-
-impl RunSummary {
-    /// Simulated time at which the LL series first reaches `threshold`
-    /// (linear interpolation), if it does.
-    pub fn time_to_ll(&self, threshold: f64) -> Option<f64> {
-        let mut prev: Option<(f64, f64)> = None;
-        for &(_, t, ll) in &self.ll_series {
-            if ll >= threshold {
-                return Some(match prev {
-                    Some((pt, pll)) if ll > pll => pt + (t - pt) * (threshold - pll) / (ll - pll),
-                    _ => t,
-                });
-            }
-            prev = Some((t, ll));
-        }
-        None
-    }
-
-    /// Iterations to reach `threshold`.
-    pub fn iters_to_ll(&self, threshold: f64) -> Option<usize> {
-        self.ll_series.iter().find(|&&(_, _, ll)| ll >= threshold).map(|&(i, _, _)| i)
-    }
-}
+/// Unified result of a training run — the facade's summary type, re-
+/// exported under its historical experiment-side name.
+pub use crate::engine::TrainSummary as RunSummary;
 
 /// Train per `cfg` and return the unified summary.
-///
-/// * `inverted-xy` / `xla` → the model-parallel [`Driver`];
-/// * `sparse-yao` / `dense` → the data-parallel [`YahooLda`] baseline
-///   (dense is coerced to sparse-yao — the baseline's sampler is eq. 2).
+#[deprecated(
+    since = "0.2.0",
+    note = "build a session instead: `SessionBuilder::from_config(cfg).build()?.train()`"
+)]
 pub fn run_training(cfg: &Config) -> Result<RunSummary> {
-    let corpus = crate::corpus::build(&cfg.corpus)?;
-    run_training_on(cfg, corpus)
+    train_summary(cfg)
 }
 
 /// Same, over a pre-built corpus (experiments reuse corpora).
+#[deprecated(
+    since = "0.2.0",
+    note = "build a session instead: `SessionBuilder::from_config(cfg).corpus(corpus).build()?.train()`"
+)]
 pub fn run_training_on(cfg: &Config, corpus: Corpus) -> Result<RunSummary> {
-    match cfg.train.sampler {
-        SamplerKind::InvertedXy | SamplerKind::Xla => {
-            let mut driver = Driver::with_corpus(cfg, corpus)?;
-            if cfg.train.sampler == SamplerKind::Xla {
-                let exec = XlaExecutor::from_dir(
-                    &cfg.runtime.artifacts_dir,
-                    &driver.params,
-                    cfg.train.microbatch,
-                )?;
-                driver.set_executor(Box::new(exec));
+    train_summary_on(cfg, corpus)
+}
+
+/// Crate-internal unified runner for the figure drivers: a `Session`
+/// built from `cfg`, trained with the standard experiment log lines.
+///
+/// * `inverted-xy` / `xla` → the model-parallel driver;
+/// * `sparse-yao` / `dense` → the data-parallel Yahoo!LDA baseline
+///   (dense is coerced to sparse-yao — the baseline's sampler is eq. 2).
+pub(crate) fn train_summary(cfg: &Config) -> Result<RunSummary> {
+    let corpus = crate::corpus::build(&cfg.corpus)?;
+    train_summary_on(cfg, corpus)
+}
+
+/// See [`train_summary`]; takes a pre-built corpus.
+pub(crate) fn train_summary_on(cfg: &Config, corpus: Corpus) -> Result<RunSummary> {
+    let baseline = matches!(cfg.train.sampler, SamplerKind::SparseYao | SamplerKind::Dense);
+    let mut session = SessionBuilder::from_config(cfg.clone()).corpus(corpus).build()?;
+    session.train_observed(|ev| {
+        if let Some(ll) = ev.loglik {
+            if baseline {
+                log::info!(
+                    "iter {:3} t={:8.2}s ll={} skip={:.0}%",
+                    ev.stats.iteration,
+                    ev.stats.sim_time,
+                    crate::util::fmt::sci(ll),
+                    ev.skip_rate * 100.0
+                );
+            } else {
+                log::info!(
+                    "iter {:3} t={:8.2}s ll={} Δ={:.2e}",
+                    ev.stats.iteration,
+                    ev.stats.sim_time,
+                    crate::util::fmt::sci(ll),
+                    ev.stats.mean_delta
+                );
             }
-            let report = driver.run(cfg.train.iterations, |stats, ll| {
-                if let Some(ll) = ll {
-                    log::info!(
-                        "iter {:3} t={:8.2}s ll={} Δ={:.2e}",
-                        stats.iteration,
-                        stats.sim_time,
-                        crate::util::fmt::sci(ll),
-                        stats.mean_delta
-                    );
-                }
-            })?;
-            let host = report.iters.iter().map(|i| i.host_compute_secs).sum();
-            Ok(RunSummary {
-                ll_series: report.ll_series,
-                final_loglik: report.final_loglik,
-                sim_time: report.sim_time,
-                peak_mem_bytes: report.peak_mem_bytes,
-                total_comm_bytes: report.total_comm_bytes,
-                total_tokens: report.total_tokens,
-                mean_delta: driver.deltas.mean_delta(),
-                max_delta: driver.deltas.max_delta(),
-                host_compute_secs: host,
-            })
         }
-        SamplerKind::SparseYao | SamplerKind::Dense => {
-            let mut y = YahooLda::with_corpus(cfg, corpus)?;
-            let report = y.run(cfg.train.iterations, |stats, ll| {
-                if let Some(ll) = ll {
-                    log::info!(
-                        "iter {:3} t={:8.2}s ll={} skip={:.0}%",
-                        stats.iteration,
-                        stats.sim_time,
-                        crate::util::fmt::sci(ll),
-                        stats.skip_rate * 100.0
-                    );
-                }
-            })?;
-            let host = report.iters.iter().map(|i| i.host_compute_secs).sum();
-            Ok(RunSummary {
-                ll_series: report.ll_series,
-                final_loglik: report.final_loglik,
-                sim_time: report.sim_time,
-                peak_mem_bytes: report.peak_mem_bytes,
-                total_comm_bytes: report.total_comm_bytes,
-                total_tokens: report.total_tokens,
-                mean_delta: 0.0,
-                max_delta: 0.0,
-                host_compute_secs: host,
-            })
-        }
-    }
+    })
 }
 
 /// A convergence threshold for "time to converge" comparisons: the LL both
@@ -198,12 +146,19 @@ mod tests {
 
     #[test]
     fn unified_runner_both_systems() {
-        let mp = run_training(&quick_cfg("inverted-xy")).unwrap();
-        let dp = run_training(&quick_cfg("sparse-yao")).unwrap();
+        let mp = train_summary(&quick_cfg("inverted-xy")).unwrap();
+        let dp = train_summary(&quick_cfg("sparse-yao")).unwrap();
         assert!(mp.final_loglik.is_finite() && dp.final_loglik.is_finite());
         assert!(mp.total_tokens > 0 && dp.total_tokens > 0);
         assert_eq!(mp.ll_series.len(), 4); // init + 3 iters
         assert!(mp.mean_delta >= 0.0);
+    }
+
+    #[test]
+    fn deprecated_shims_still_run() {
+        #[allow(deprecated)]
+        let summary = run_training(&quick_cfg("inverted-xy")).unwrap();
+        assert!(summary.final_loglik.is_finite());
     }
 
     #[test]

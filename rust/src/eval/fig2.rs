@@ -8,7 +8,7 @@ use crate::metrics::Recorder;
 use crate::util::bench::Table;
 use crate::util::fmt;
 
-use super::common::{apply_scaled_cluster, base_config, run_training_on, RunSummary};
+use super::common::{apply_scaled_cluster, base_config, train_summary_on, RunSummary};
 
 /// Experiment parameters (defaults are the scaled CI size; the paper-scale
 /// values are K ∈ {1000, 5000} over the full Pubmed).
@@ -55,7 +55,7 @@ pub fn run(opts: &Opts) -> Result<String> {
             cfg.finalize()?;
             let corpus = crate::corpus::build(&cfg.corpus)?;
             log::info!("fig2: {label} K={k} on {}", corpus.summary());
-            let summary = run_training_on(&cfg, corpus)?;
+            let summary = train_summary_on(&cfg, corpus)?;
 
             let series = recorder.series(
                 &format!("fig2_{label}_k{k}"),

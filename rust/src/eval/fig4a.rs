@@ -10,7 +10,7 @@ use crate::metrics::Recorder;
 use crate::util::bench::Table;
 use crate::util::fmt;
 
-use super::common::{apply_scaled_cluster, base_config, run_training_on};
+use super::common::{apply_scaled_cluster, base_config, train_summary_on};
 
 #[derive(Debug, Clone)]
 pub struct Opts {
@@ -58,11 +58,11 @@ pub fn run(opts: &Opts) -> Result<String> {
 
         let mut mp_cfg = cfg.clone();
         mp_cfg.train.sampler = crate::config::SamplerKind::InvertedXy;
-        let mp = run_training_on(&mp_cfg, corpus.clone())?;
+        let mp = train_summary_on(&mp_cfg, corpus.clone())?;
 
         let mut dp_cfg = cfg;
         dp_cfg.train.sampler = crate::config::SamplerKind::SparseYao;
-        let dp = run_training_on(&dp_cfg, corpus)?;
+        let dp = train_summary_on(&dp_cfg, corpus)?;
 
         if mp_first.is_none() {
             mp_first = Some(mp.peak_mem_bytes as f64);

@@ -11,7 +11,7 @@ use anyhow::Result;
 use crate::metrics::Recorder;
 use crate::util::bench::{fmt_secs, Table};
 
-use super::common::{apply_scaled_cluster, base_config, ll_threshold_common, run_training_on, RunSummary};
+use super::common::{apply_scaled_cluster, base_config, ll_threshold_common, train_summary_on, RunSummary};
 
 #[derive(Debug, Clone)]
 pub struct Opts {
@@ -64,11 +64,11 @@ pub fn run(opts: &Opts) -> Result<String> {
 
         let mut mp_cfg = cfg.clone();
         mp_cfg.train.sampler = crate::config::SamplerKind::InvertedXy;
-        let mp = run_training_on(&mp_cfg, corpus.clone())?;
+        let mp = train_summary_on(&mp_cfg, corpus.clone())?;
 
         let mut dp_cfg = cfg;
         dp_cfg.train.sampler = crate::config::SamplerKind::SparseYao;
-        let dp = run_training_on(&dp_cfg, corpus)?;
+        let dp = train_summary_on(&dp_cfg, corpus)?;
 
         log_summary(m, &mp, &dp);
         runs.push((m, mp, dp));

@@ -12,4 +12,6 @@ pub mod fig4a;
 pub mod fig4b;
 pub mod ablations;
 
-pub use common::{run_training, RunSummary};
+#[allow(deprecated)]
+pub use common::run_training;
+pub use common::RunSummary;

@@ -15,7 +15,7 @@ use crate::metrics::Recorder;
 use crate::util::bench::{fmt_secs, Table};
 use crate::util::fmt;
 
-use super::common::{apply_scaled_cluster, base_config, ll_threshold_common, run_training_on, RunSummary};
+use super::common::{apply_scaled_cluster, base_config, ll_threshold_common, train_summary_on, RunSummary};
 
 #[derive(Debug, Clone)]
 pub struct Opts {
@@ -101,11 +101,11 @@ pub fn run(opts: &Opts) -> Result<String> {
         log::info!("table1: {preset} K={k} ({})", corpus.summary());
         let mut mp_cfg = cfg.clone();
         mp_cfg.train.sampler = crate::config::SamplerKind::InvertedXy;
-        let mp = run_training_on(&mp_cfg, corpus.clone())?;
+        let mp = train_summary_on(&mp_cfg, corpus.clone())?;
 
         let mut dp_cfg = cfg.clone();
         dp_cfg.train.sampler = crate::config::SamplerKind::SparseYao;
-        let dp = run_training_on(&dp_cfg, corpus)?;
+        let dp = train_summary_on(&dp_cfg, corpus)?;
 
         let th = ll_threshold_common(&mp, &dp, 0.95);
         let cell = |s: &RunSummary| -> Cell {

@@ -34,16 +34,29 @@
 //!
 //! ## Quick start
 //!
-//! ```no_run
-//! use mplda::config::Config;
-//! use mplda::eval::common::run_training;
+//! Everything goes through the [`engine::Session`] facade: a
+//! [`engine::SessionBuilder`] validates the whole configuration up
+//! front, `train()` streams iteration events, and `freeze()` turns the
+//! trained state into a servable [`engine::TopicModel`].
 //!
-//! let mut cfg = Config::default();
-//! cfg.corpus.preset = "tiny".into();
-//! cfg.train.topics = 50;
-//! cfg.train.iterations = 20;
-//! let report = run_training(&cfg).unwrap();
-//! println!("final log-likelihood: {}", report.final_loglik);
+//! ```no_run
+//! use mplda::engine::{BowDoc, Execution, Session};
+//!
+//! let mut session = Session::builder()
+//!     .corpus_preset("tiny")
+//!     .topics(50)
+//!     .iterations(20)
+//!     .execution(Execution::Threaded { parallelism: 4 })
+//!     .build()
+//!     .unwrap();
+//! let summary = session.train().unwrap();
+//! println!("final log-likelihood: {}", summary.final_loglik);
+//!
+//! // Serve the trained model: fold in unseen documents.
+//! let model = session.freeze().unwrap();
+//! let queries = vec![BowDoc::new(vec![0, 1, 2, 2])];
+//! let topics = model.infer(&queries).unwrap();
+//! println!("top topic of query 0: {:?}", topics.top_topics(0, 1));
 //! ```
 
 pub mod util;
@@ -53,6 +66,7 @@ pub mod model;
 pub mod sampler;
 pub mod kvstore;
 pub mod coordinator;
+pub mod engine;
 pub mod cluster;
 pub mod baseline;
 pub mod metrics;

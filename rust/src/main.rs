@@ -8,11 +8,13 @@
 //! ```
 //!
 //! Every experiment of the paper's §5 is reachable from `mplda eval`; the
-//! same drivers back the `cargo bench` targets.
+//! same drivers back the `cargo bench` targets. Training commands go
+//! through the [`mplda::engine::Session`] facade.
 
 use anyhow::{bail, Context, Result};
 
 use mplda::config::Config;
+use mplda::engine::{IterEvent, SessionBuilder};
 use mplda::eval;
 use mplda::util::cli::{Args, HelpBuilder};
 use mplda::util::{fmt, logger};
@@ -77,10 +79,34 @@ fn help() -> String {
     .render()
 }
 
+/// The standard per-iteration progress line (`baseline` selects the
+/// skip-rate format — Δ is meaningless for the data-parallel system).
+fn log_progress(baseline: bool, ev: &IterEvent) {
+    if let Some(ll) = ev.loglik {
+        if baseline {
+            log::info!(
+                "iter {:3} t={:8.2}s ll={} skip={:.0}%",
+                ev.stats.iteration,
+                ev.stats.sim_time,
+                fmt::sci(ll),
+                ev.skip_rate * 100.0
+            );
+        } else {
+            log::info!(
+                "iter {:3} t={:8.2}s ll={} Δ={:.2e}",
+                ev.stats.iteration,
+                ev.stats.sim_time,
+                fmt::sci(ll),
+                ev.stats.mean_delta
+            );
+        }
+    }
+}
+
 fn cmd_train(args: &Args) -> Result<()> {
     let cfg = load_config(args)?;
     if cfg.output.trace {
-        return cmd_train_traced(&cfg);
+        return cmd_train_traced(cfg);
     }
     log::info!(
         "training: sampler={} K={} iters={} workers={} machines={}",
@@ -90,7 +116,9 @@ fn cmd_train(args: &Args) -> Result<()> {
         cfg.coord.workers,
         cfg.cluster.machines
     );
-    let summary = eval::run_training(&cfg)?;
+    let mut session = SessionBuilder::from_config(cfg).build()?;
+    let baseline = session.driver().is_none();
+    let summary = session.train_observed(|ev| log_progress(baseline, ev))?;
     println!("== training complete ==");
     println!("final log-likelihood : {}", fmt::sci(summary.final_loglik));
     println!("simulated time       : {}", mplda::util::bench::fmt_secs(summary.sim_time));
@@ -112,14 +140,27 @@ fn cmd_train(args: &Args) -> Result<()> {
     Ok(())
 }
 
-/// Traced variant of `train`: runs the MP driver with the phase timeline
-/// on, prints the phase breakdown and writes Chrome trace JSON.
-fn cmd_train_traced(cfg: &Config) -> Result<()> {
-    use mplda::coordinator::{Driver, Phase};
-    let mut driver = Driver::new(cfg)?;
-    let report = driver.run(cfg.train.iterations, |_, _| {})?;
-    println!("final log-likelihood : {}", fmt::sci(report.final_loglik));
-    println!("simulated time       : {}", mplda::util::bench::fmt_secs(report.sim_time));
+/// Traced variant of `train`: runs with the phase timeline on, prints the
+/// phase breakdown and writes Chrome trace JSON (model-parallel only —
+/// the timeline lives on the driver, reached through the facade's escape
+/// hatch).
+fn cmd_train_traced(cfg: Config) -> Result<()> {
+    use mplda::coordinator::Phase;
+    let mut session = SessionBuilder::from_config(cfg.clone()).build()?;
+    // Fail before training, not after: the baseline has no driver
+    // timeline to trace.
+    if session.driver().is_none() {
+        bail!(
+            "--output.trace records driver phases; the data-parallel baseline ({}) has none",
+            cfg.train.sampler.name()
+        );
+    }
+    let summary = session.train()?;
+    println!("final log-likelihood : {}", fmt::sci(summary.final_loglik));
+    println!("simulated time       : {}", mplda::util::bench::fmt_secs(summary.sim_time));
+    let driver = session
+        .driver()
+        .context("--output.trace records driver phases; the baseline has none")?;
     println!("\nphase breakdown (fraction of worker-time):");
     for phase in [Phase::TotalsSync, Phase::Fetch, Phase::Compute, Phase::Commit, Phase::Barrier]
     {
@@ -191,31 +232,24 @@ fn cmd_corpus(args: &Args) -> Result<()> {
     Ok(())
 }
 
-/// Train briefly and show topic quality: top words and UMass coherence.
+/// Train briefly, freeze, and show topic quality: top words and UMass
+/// coherence over the frozen model's word–topic table.
 fn cmd_topics(args: &Args) -> Result<()> {
     let mut cfg = load_config(args)?;
     if cfg.train.iterations > 30 {
         cfg.train.iterations = 30;
     }
-    let mut driver = mplda::coordinator::Driver::new(&cfg)?;
-    driver.run(cfg.train.iterations, |_, _| {})?;
-    // Rebuild a table view for inspection.
-    let mut wt =
-        mplda::model::WordTopicTable::zeros(driver.corpus.num_words(), cfg.train.topics);
-    driver.kv().with_resident_blocks(|blocks| {
-        for b in blocks {
-            for (i, row) in b.rows.iter().enumerate() {
-                *wt.row_mut(b.word_at(i) as usize) = row.clone();
-            }
-        }
-    });
+    let mut session = SessionBuilder::from_config(cfg).build()?;
+    session.train()?;
+    let corpus = session.corpus().clone();
+    let model = session.freeze()?;
     let n = args.parsed_or("top", 10usize)?;
-    for line in mplda::metrics::topics::render_topics(&wt, &driver.corpus, n) {
+    for line in mplda::metrics::topics::render_topics(model.word_topic(), &corpus, n) {
         println!("{line}");
     }
     println!(
         "\nmean UMass coherence (top {n}): {:.2}",
-        mplda::metrics::topics::mean_coherence(&wt, &driver.corpus, n)
+        mplda::metrics::topics::mean_coherence(model.word_topic(), &corpus, n)
     );
     Ok(())
 }

@@ -1,16 +1,30 @@
 //! Training-state checkpointing.
 //!
-//! A checkpoint stores the topic assignments `Z` (the sufficient state —
-//! all three count statistics are pure functions of `Z` and the corpus)
-//! plus a corpus fingerprint and the topic count, varint-packed with the
-//! same codec as the wire format. Restoring rebuilds the counts and
-//! verifies the fingerprint, so resuming against the wrong corpus fails
-//! loudly instead of silently corrupting counts.
+//! A **v1** checkpoint stores the topic assignments `Z` (the sufficient
+//! state — all three count statistics are pure functions of `Z` and the
+//! corpus) plus a corpus fingerprint and the topic count, varint-packed
+//! with the same codec as the wire format. Restoring rebuilds the counts
+//! and verifies the fingerprint, so resuming against the wrong corpus
+//! fails loudly instead of silently corrupting counts.
+//!
+//! A **v2** checkpoint (written by `Session::checkpoint` /
+//! [`write_resumable`]) appends a [`ResumeState`] trailer: the completed
+//! iteration count, every worker's raw RNG stream position, and the
+//! doc–topic counts **in their live storage order**. The trailer is what
+//! makes resume *bitwise*-deterministic rather than merely statistically
+//! equivalent: the samplers' bucket walks and floating-point summations
+//! depend on the [`SparseCounts`](super::SparseCounts) entry order, and
+//! the RNG streams must continue from their exact positions, so a resumed
+//! run reproduces the uninterrupted run's log-likelihood series and
+//! `model_digest` exactly (asserted by `rust/tests/session_resume.rs`).
 //!
 //! Format:
 //! ```text
 //! magic "MPLDAKPT" | version:varint | num_topics:varint |
 //! corpus_fp:u64 | num_docs:varint | (doc_len:varint z:varint*)*
+//! -- v2 trailer --
+//! iteration:varint | num_workers:varint | (rng state:16B inc:16B)* |
+//! (K_d:varint (topic:varint count:varint)*)*   # per doc, live order
 //! ```
 
 use std::io::{Read, Write};
@@ -20,11 +34,25 @@ use anyhow::{bail, Context, Result};
 
 use crate::corpus::Corpus;
 
+use super::doc_topic::{DocTopic, SparseCounts};
 use super::init::Assignments;
 use super::wire::{get_varint, put_varint};
 
 const MAGIC: &[u8; 8] = b"MPLDAKPT";
-const VERSION: u64 = 1;
+const VERSION_PLAIN: u64 = 1;
+const VERSION_RESUMABLE: u64 = 2;
+
+/// The mid-run trainer state a v2 checkpoint carries beyond `Z` — see the
+/// module docs for why each piece is needed for bitwise-exact resume.
+#[derive(Debug, Clone)]
+pub struct ResumeState {
+    /// Completed iterations at checkpoint time.
+    pub iteration: usize,
+    /// Raw `(state, inc)` of each worker's RNG stream, in worker order.
+    pub worker_rng: Vec<(u128, u128)>,
+    /// Doc–topic counts with live entry order preserved.
+    pub dt: DocTopic,
+}
 
 /// Order-sensitive corpus fingerprint (FNV-1a over doc lengths and token
 /// ids): cheap, stable across runs, catches preset/seed/path mismatches.
@@ -45,29 +73,87 @@ pub fn corpus_fingerprint(corpus: &Corpus) -> u64 {
     h
 }
 
-/// Serialize assignments to a writer.
+fn encode_header(buf: &mut Vec<u8>, version: u64, assign: &Assignments, corpus: &Corpus) {
+    buf.extend_from_slice(MAGIC);
+    put_varint(buf, version);
+    put_varint(buf, assign.num_topics as u64);
+    buf.extend_from_slice(&corpus_fingerprint(corpus).to_le_bytes());
+    put_varint(buf, assign.z.len() as u64);
+    for doc in &assign.z {
+        put_varint(buf, doc.len() as u64);
+        for &z in doc {
+            put_varint(buf, z as u64);
+        }
+    }
+}
+
+/// Serialize assignments to a writer (v1: no resume trailer).
 pub fn write_checkpoint<W: Write>(
     mut w: W,
     assign: &Assignments,
     corpus: &Corpus,
 ) -> Result<()> {
     let mut buf = Vec::with_capacity(assign.num_tokens() * 2 + 64);
-    buf.extend_from_slice(MAGIC);
-    put_varint(&mut buf, VERSION);
-    put_varint(&mut buf, assign.num_topics as u64);
-    buf.extend_from_slice(&corpus_fingerprint(corpus).to_le_bytes());
-    put_varint(&mut buf, assign.z.len() as u64);
-    for doc in &assign.z {
-        put_varint(&mut buf, doc.len() as u64);
-        for &z in doc {
-            put_varint(&mut buf, z as u64);
-        }
-    }
+    encode_header(&mut buf, VERSION_PLAIN, assign, corpus);
     w.write_all(&buf).context("writing checkpoint")
 }
 
-/// Deserialize assignments, verifying the corpus fingerprint.
-pub fn read_checkpoint<R: Read>(mut r: R, corpus: &Corpus) -> Result<Assignments> {
+/// Serialize assignments plus the [`ResumeState`] trailer (v2).
+pub fn write_resumable<W: Write>(
+    mut w: W,
+    assign: &Assignments,
+    corpus: &Corpus,
+    state: &ResumeState,
+) -> Result<()> {
+    if state.dt.num_docs() != assign.z.len() {
+        bail!(
+            "resume state covers {} docs, assignments cover {}",
+            state.dt.num_docs(),
+            assign.z.len()
+        );
+    }
+    let mut buf = Vec::with_capacity(assign.num_tokens() * 4 + 64);
+    encode_header(&mut buf, VERSION_RESUMABLE, assign, corpus);
+    put_varint(&mut buf, state.iteration as u64);
+    put_varint(&mut buf, state.worker_rng.len() as u64);
+    for &(s, inc) in &state.worker_rng {
+        buf.extend_from_slice(&s.to_le_bytes());
+        buf.extend_from_slice(&inc.to_le_bytes());
+    }
+    for d in 0..state.dt.num_docs() {
+        let counts = state.dt.doc(d);
+        put_varint(&mut buf, counts.len() as u64);
+        for (k, c) in counts.iter() {
+            put_varint(&mut buf, k as u64);
+            put_varint(&mut buf, c as u64);
+        }
+    }
+    w.write_all(&buf).context("writing resumable checkpoint")
+}
+
+fn get_u128(buf: &[u8], pos: &mut usize) -> Result<u128> {
+    if buf.len() < *pos + 16 {
+        bail!("truncated checkpoint (u128 field)");
+    }
+    let v = u128::from_le_bytes(buf[*pos..*pos + 16].try_into().unwrap());
+    *pos += 16;
+    Ok(v)
+}
+
+/// Deserialize assignments, verifying the corpus fingerprint. Accepts
+/// both versions; any v2 resume trailer is validated and discarded.
+pub fn read_checkpoint<R: Read>(r: R, corpus: &Corpus) -> Result<Assignments> {
+    read_resumable(r, corpus).map(|(assign, _)| assign)
+}
+
+/// Deserialize assignments and, for v2 checkpoints, the resume trailer.
+/// The trailer's doc–topic counts are verified against the counts `Z`
+/// induces, so a corrupted checkpoint fails here rather than training on
+/// inconsistent state.
+pub fn read_resumable<R: Read>(
+    mut r: R,
+    corpus: &Corpus,
+) -> Result<(Assignments, Option<ResumeState>)> {
     let mut buf = Vec::new();
     r.read_to_end(&mut buf).context("reading checkpoint")?;
     if buf.len() < 16 || &buf[..8] != MAGIC {
@@ -75,10 +161,13 @@ pub fn read_checkpoint<R: Read>(mut r: R, corpus: &Corpus) -> Result<Assignments
     }
     let mut pos = 8;
     let version = get_varint(&buf, &mut pos)?;
-    if version != VERSION {
+    if version != VERSION_PLAIN && version != VERSION_RESUMABLE {
         bail!("unsupported checkpoint version {version}");
     }
     let num_topics = get_varint(&buf, &mut pos)? as usize;
+    if num_topics == 0 || num_topics > 1 << 26 {
+        bail!("implausible topic count {num_topics} in checkpoint");
+    }
     let fp = u64::from_le_bytes(buf[pos..pos + 8].try_into().unwrap());
     pos += 8;
     let expect = corpus_fingerprint(corpus);
@@ -105,24 +194,115 @@ pub fn read_checkpoint<R: Read>(mut r: R, corpus: &Corpus) -> Result<Assignments
         }
         z.push(doc);
     }
+    let assign = Assignments { z, num_topics };
+
+    let state = if version == VERSION_RESUMABLE {
+        let iteration = get_varint(&buf, &mut pos)? as usize;
+        let num_workers = get_varint(&buf, &mut pos)? as usize;
+        if num_workers == 0 || num_workers > 1 << 20 {
+            bail!("implausible worker count {num_workers} in checkpoint");
+        }
+        let mut worker_rng = Vec::with_capacity(num_workers);
+        for _ in 0..num_workers {
+            let s = get_u128(&buf, &mut pos)?;
+            let inc = get_u128(&buf, &mut pos)?;
+            worker_rng.push((s, inc));
+        }
+        let mut dt = DocTopic::zeros(num_docs);
+        for d in 0..num_docs {
+            let kd = get_varint(&buf, &mut pos)? as usize;
+            if kd > num_topics {
+                bail!("doc {d}: K_d {kd} exceeds K={num_topics} — corrupt checkpoint");
+            }
+            let mut entries = Vec::with_capacity(kd);
+            let mut prev_count = u32::MAX;
+            for _ in 0..kd {
+                let k = get_varint(&buf, &mut pos)? as u32;
+                let c = get_varint(&buf, &mut pos)? as u32;
+                if k as usize >= num_topics {
+                    bail!("doc {d}: topic {k} out of range (K={num_topics})");
+                }
+                if c == 0 || c > prev_count {
+                    bail!("doc {d}: doc-topic entries must be positive and descending");
+                }
+                if entries.iter().any(|&(kk, _)| kk == k) {
+                    bail!("doc {d}: duplicate topic {k} in doc-topic counts");
+                }
+                prev_count = c;
+                entries.push((k, c));
+            }
+            *dt.doc_mut(d) = SparseCounts::from_ordered_entries(entries);
+        }
+        // The trailer must agree with the counts Z induces (the trailer
+        // only adds *order*, never different values). Tallied per doc
+        // with one reusable dense scratch — no full-table rebuild; the
+        // driver rebuilds the model counts once, after this returns.
+        let mut scratch = vec![0u32; num_topics];
+        for d in 0..num_docs {
+            let mut nonzero = 0usize;
+            for &z in &assign.z[d] {
+                if scratch[z as usize] == 0 {
+                    nonzero += 1;
+                }
+                scratch[z as usize] += 1;
+            }
+            let doc = dt.doc(d);
+            // Duplicate topics were rejected while parsing, so equal
+            // entry counts + per-entry equality ⇒ exact map equality.
+            let ok = doc.len() == nonzero
+                && doc.iter().all(|(k, c)| scratch[k as usize] == c);
+            for &z in &assign.z[d] {
+                scratch[z as usize] = 0;
+            }
+            if !ok {
+                bail!("doc {d}: doc-topic counts disagree with assignments");
+            }
+        }
+        Some(ResumeState { iteration, worker_rng, dt })
+    } else {
+        None
+    };
+
     if pos != buf.len() {
         bail!("trailing bytes in checkpoint");
     }
-    Ok(Assignments { z, num_topics })
+    Ok((assign, state))
 }
 
-/// Convenience: save to a path.
+/// Convenience: save to a path (v1).
 pub fn save<P: AsRef<Path>>(path: P, assign: &Assignments, corpus: &Corpus) -> Result<()> {
     let f = std::fs::File::create(path.as_ref())
         .with_context(|| format!("creating {:?}", path.as_ref()))?;
     write_checkpoint(std::io::BufWriter::new(f), assign, corpus)
 }
 
-/// Convenience: load from a path.
+/// Convenience: load from a path (either version; trailer discarded).
 pub fn load<P: AsRef<Path>>(path: P, corpus: &Corpus) -> Result<Assignments> {
     let f = std::fs::File::open(path.as_ref())
         .with_context(|| format!("opening {:?}", path.as_ref()))?;
     read_checkpoint(std::io::BufReader::new(f), corpus)
+}
+
+/// Convenience: save a resumable (v2) checkpoint to a path.
+pub fn save_resumable<P: AsRef<Path>>(
+    path: P,
+    assign: &Assignments,
+    corpus: &Corpus,
+    state: &ResumeState,
+) -> Result<()> {
+    let f = std::fs::File::create(path.as_ref())
+        .with_context(|| format!("creating {:?}", path.as_ref()))?;
+    write_resumable(std::io::BufWriter::new(f), assign, corpus, state)
+}
+
+/// Convenience: load either version from a path, keeping the trailer.
+pub fn load_resumable<P: AsRef<Path>>(
+    path: P,
+    corpus: &Corpus,
+) -> Result<(Assignments, Option<ResumeState>)> {
+    let f = std::fs::File::open(path.as_ref())
+        .with_context(|| format!("opening {:?}", path.as_ref()))?;
+    read_resumable(std::io::BufReader::new(f), corpus)
 }
 
 #[cfg(test)]
@@ -160,6 +340,53 @@ mod tests {
     }
 
     #[test]
+    fn resumable_round_trip_preserves_trailer() {
+        let (corpus, assign) = fixture();
+        let (dt, _, _) = assign.build_counts(&corpus);
+        let state = ResumeState {
+            iteration: 17,
+            worker_rng: vec![(1u128 << 70 | 3, 5), (u128::MAX - 9, 11)],
+            dt: dt.clone(),
+        };
+        let mut buf = Vec::new();
+        write_resumable(&mut buf, &assign, &corpus, &state).unwrap();
+        let (loaded, trailer) = read_resumable(&buf[..], &corpus).unwrap();
+        assert_eq!(loaded.z, assign.z);
+        let trailer = trailer.expect("v2 checkpoint carries a trailer");
+        assert_eq!(trailer.iteration, 17);
+        assert_eq!(trailer.worker_rng, state.worker_rng);
+        assert_eq!(trailer.dt.num_docs(), dt.num_docs());
+        for d in 0..dt.num_docs() {
+            // Entry *order* preserved verbatim, not just the map.
+            let a: Vec<(u32, u32)> = trailer.dt.doc(d).iter().collect();
+            let b: Vec<(u32, u32)> = dt.doc(d).iter().collect();
+            assert_eq!(a, b, "doc {d}");
+        }
+    }
+
+    #[test]
+    fn plain_checkpoint_has_no_trailer() {
+        let (corpus, assign) = fixture();
+        let mut buf = Vec::new();
+        write_checkpoint(&mut buf, &assign, &corpus).unwrap();
+        let (_, trailer) = read_resumable(&buf[..], &corpus).unwrap();
+        assert!(trailer.is_none());
+    }
+
+    #[test]
+    fn corrupted_trailer_counts_rejected() {
+        let (corpus, assign) = fixture();
+        let (mut dt, _, _) = assign.build_counts(&corpus);
+        // Shift one count so the trailer disagrees with Z.
+        dt.doc_mut(0).inc(0);
+        let state = ResumeState { iteration: 1, worker_rng: vec![(1, 1)], dt };
+        let mut buf = Vec::new();
+        write_resumable(&mut buf, &assign, &corpus, &state).unwrap();
+        let err = read_resumable(&buf[..], &corpus).unwrap_err().to_string();
+        assert!(err.contains("disagree"), "{err}");
+    }
+
+    #[test]
     fn wrong_corpus_rejected() {
         let (corpus, assign) = fixture();
         let mut buf = Vec::new();
@@ -189,10 +416,18 @@ mod tests {
     #[test]
     fn truncation_rejected() {
         let (corpus, assign) = fixture();
-        let mut buf = Vec::new();
-        write_checkpoint(&mut buf, &assign, &corpus).unwrap();
-        buf.truncate(buf.len() - 3);
-        assert!(read_checkpoint(&buf[..], &corpus).is_err());
+        for resumable in [false, true] {
+            let mut buf = Vec::new();
+            if resumable {
+                let (dt, _, _) = assign.build_counts(&corpus);
+                let state = ResumeState { iteration: 2, worker_rng: vec![(3, 7)], dt };
+                write_resumable(&mut buf, &assign, &corpus, &state).unwrap();
+            } else {
+                write_checkpoint(&mut buf, &assign, &corpus).unwrap();
+            }
+            buf.truncate(buf.len() - 3);
+            assert!(read_resumable(&buf[..], &corpus).is_err(), "resumable={resumable}");
+        }
     }
 
     #[test]

@@ -36,6 +36,18 @@ impl SparseCounts {
         Self::default()
     }
 
+    /// Rebuild from entries **in their live storage order** (descending by
+    /// count; ties in whatever order update history left them). Used by the
+    /// resumable checkpoint: the bucket-walk order and floating-point
+    /// summation order of the samplers depend on this order, so restoring
+    /// it verbatim is what makes resume bitwise-deterministic. Entries must
+    /// be positive-count, sorted descending, with no duplicate topics.
+    pub fn from_ordered_entries(entries: Vec<(u32, u32)>) -> SparseCounts {
+        debug_assert!(entries.iter().all(|&(_, c)| c > 0));
+        debug_assert!(entries.windows(2).all(|w| w[0].1 >= w[1].1));
+        SparseCounts { entries }
+    }
+
     pub fn len(&self) -> usize {
         self.entries.len()
     }

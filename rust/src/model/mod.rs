@@ -18,6 +18,7 @@ pub mod wire;
 pub mod checkpoint;
 
 pub use block::{BlockMap, ModelBlock};
+pub use checkpoint::ResumeState;
 pub use doc_topic::{DocTopic, SparseCounts};
 pub use doc_view::{DocView, ShardOwnership};
 pub use init::Assignments;

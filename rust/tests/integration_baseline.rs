@@ -1,41 +1,29 @@
 //! Integration: the Yahoo!LDA baseline end-to-end and head-to-head with
 //! the model-parallel driver on the same corpus and seeds — the Figure 2
-//! mechanics at test scale.
+//! mechanics at test scale, both systems behind the `engine::Session`
+//! facade.
 
-use mplda::baseline::YahooLda;
-use mplda::config::Config;
-use mplda::coordinator::Driver;
+use mplda::config::SamplerKind;
+use mplda::engine::{Session, SessionBuilder};
 
-fn cfg(extra: &str) -> Config {
-    Config::from_str(&format!(
-        r#"
-[corpus]
-preset = "tiny"
-seed = 13
-
-[train]
-topics = 24
-iterations = 5
-seed = 31
-
-[coord]
-workers = 8
-
-[cluster]
-preset = "custom"
-machines = 8
-{extra}
-"#
-    ))
-    .unwrap()
+fn builder() -> SessionBuilder {
+    Session::builder()
+        .corpus_preset("tiny")
+        .topics(24)
+        .iterations(5)
+        .seed(31)
+        .workers(8)
+        .cluster_preset("custom")
+        .machines(8)
+        .configure(|cfg| cfg.corpus.seed = 13)
 }
 
 #[test]
 fn baseline_full_run_consistent() {
-    let mut y = YahooLda::new(&cfg("")).unwrap();
-    let report = y.run(3, |_, _| {}).unwrap();
-    assert_eq!(report.total_tokens as usize, 3 * y.corpus.num_tokens());
-    y.check_consistency().unwrap();
+    let mut s = builder().sampler(SamplerKind::SparseYao).iterations(3).build().unwrap();
+    let report = s.train().unwrap();
+    assert_eq!(report.total_tokens as usize, 3 * s.corpus().num_tokens());
+    s.check_consistency().unwrap();
     assert!(report.total_comm_bytes > 0);
 }
 
@@ -44,19 +32,31 @@ fn mp_converges_at_least_as_fast_per_iteration() {
     // The paper's core convergence claim, at test scale: after the same
     // number of iterations from the same init, MP's LL is >= the stale
     // baseline's (within noise). Use a slow network so staleness bites.
-    let c = cfg("bandwidth_gbps = 0.001");
-    let corpus = mplda::corpus::build(&c.corpus).unwrap();
+    let corpus = mplda::corpus::build(&mplda::config::CorpusConfig {
+        preset: "tiny".into(),
+        seed: 13,
+        ..Default::default()
+    })
+    .unwrap();
 
-    let mut mp_cfg = c.clone();
-    mp_cfg.train.sampler = mplda::config::SamplerKind::InvertedXy;
-    let mut d = Driver::with_corpus(&mp_cfg, corpus.clone()).unwrap();
-    let mp = d.run(5, |_, _| {}).unwrap();
+    let mut mp_s = builder()
+        .sampler(SamplerKind::InvertedXy)
+        .corpus(corpus.clone())
+        .configure(|cfg| cfg.cluster.bandwidth_gbps = 0.001)
+        .build()
+        .unwrap();
+    let mp = mp_s.train().unwrap();
 
-    let mut dp_cfg = c;
-    dp_cfg.train.sampler = mplda::config::SamplerKind::SparseYao;
-    dp_cfg.baseline.sync_period_tokens = 2_000;
-    let mut y = YahooLda::with_corpus(&dp_cfg, corpus).unwrap();
-    let dp = y.run(5, |_, _| {}).unwrap();
+    let mut dp_s = builder()
+        .sampler(SamplerKind::SparseYao)
+        .corpus(corpus)
+        .configure(|cfg| {
+            cfg.cluster.bandwidth_gbps = 0.001;
+            cfg.baseline.sync_period_tokens = 2_000;
+        })
+        .build()
+        .unwrap();
+    let dp = dp_s.train().unwrap();
 
     assert!(
         mp.final_loglik >= dp.final_loglik - dp.final_loglik.abs() * 0.01,
@@ -70,15 +70,20 @@ fn mp_converges_at_least_as_fast_per_iteration() {
 fn staleness_hurts_convergence_per_iteration() {
     // Same baseline, fast vs slow network: slow network ⇒ skipped pulls ⇒
     // staler replicas ⇒ equal-or-worse LL after equal iterations.
-    let run = |bw: &str, period: usize| {
-        let mut c = cfg(&format!("bandwidth_gbps = {bw}"));
-        c.baseline.sync_period_tokens = period;
-        let mut y = YahooLda::new(&c).unwrap();
-        let r = y.run(5, |_, _| {}).unwrap();
+    let run = |bw: f64, period: usize| {
+        let mut s = builder()
+            .sampler(SamplerKind::SparseYao)
+            .configure(move |cfg| {
+                cfg.cluster.bandwidth_gbps = bw;
+                cfg.baseline.sync_period_tokens = period;
+            })
+            .build()
+            .unwrap();
+        let r = s.train().unwrap();
         (r.final_loglik, r.iters.last().unwrap().skip_rate)
     };
-    let (ll_fast, skip_fast) = run("100.0", 2_000);
-    let (ll_slow, skip_slow) = run("0.00001", 2_000);
+    let (ll_fast, skip_fast) = run(100.0, 2_000);
+    let (ll_slow, skip_slow) = run(0.00001, 2_000);
     assert!(skip_slow > skip_fast, "skip_slow={skip_slow} skip_fast={skip_fast}");
     assert!(
         ll_fast >= ll_slow - ll_slow.abs() * 0.005,
@@ -89,10 +94,13 @@ fn staleness_hurts_convergence_per_iteration() {
 #[test]
 fn comm_volume_scales_with_sync_frequency() {
     let bytes = |period: usize| {
-        let mut c = cfg("");
-        c.baseline.sync_period_tokens = period;
-        let mut y = YahooLda::new(&c).unwrap();
-        y.run(1, |_, _| {}).unwrap().total_comm_bytes
+        let mut s = builder()
+            .sampler(SamplerKind::SparseYao)
+            .iterations(1)
+            .configure(move |cfg| cfg.baseline.sync_period_tokens = period)
+            .build()
+            .unwrap();
+        s.train().unwrap().total_comm_bytes
     };
     let frequent = bytes(1_000);
     let rare = bytes(50_000);
@@ -102,19 +110,29 @@ fn comm_volume_scales_with_sync_frequency() {
 #[test]
 fn on_demand_mp_traffic_beats_baseline_sync_traffic() {
     // §3.2: "the amount of communication is reduced significantly".
-    let c = cfg("");
-    let corpus = mplda::corpus::build(&c.corpus).unwrap();
+    let corpus = mplda::corpus::build(&mplda::config::CorpusConfig {
+        preset: "tiny".into(),
+        seed: 13,
+        ..Default::default()
+    })
+    .unwrap();
 
-    let mut mp_cfg = c.clone();
-    mp_cfg.train.sampler = mplda::config::SamplerKind::InvertedXy;
-    let mut d = Driver::with_corpus(&mp_cfg, corpus.clone()).unwrap();
-    let mp = d.run(2, |_, _| {}).unwrap();
+    let mut mp_s = builder()
+        .sampler(SamplerKind::InvertedXy)
+        .corpus(corpus.clone())
+        .iterations(2)
+        .build()
+        .unwrap();
+    let mp = mp_s.train().unwrap();
 
-    let mut dp_cfg = c;
-    dp_cfg.train.sampler = mplda::config::SamplerKind::SparseYao;
-    dp_cfg.baseline.sync_period_tokens = 2_000;
-    let mut y = YahooLda::with_corpus(&dp_cfg, corpus).unwrap();
-    let dp = y.run(2, |_, _| {}).unwrap();
+    let mut dp_s = builder()
+        .sampler(SamplerKind::SparseYao)
+        .corpus(corpus)
+        .iterations(2)
+        .configure(|cfg| cfg.baseline.sync_period_tokens = 2_000)
+        .build()
+        .unwrap();
+    let dp = dp_s.train().unwrap();
 
     assert!(
         mp.total_comm_bytes < dp.total_comm_bytes,

@@ -1,9 +1,12 @@
 //! Integration: the PJRT runtime against the rust reference — the L1→L2→L3
-//! composition proof. Requires `make artifacts`; every test skips cleanly
-//! when the artifacts directory is absent so `cargo test` works pre-build.
+//! composition proof, with full-training runs driven through the
+//! `engine::Session` facade (which AOT-loads the artifacts itself when
+//! the sampler is `xla`). Requires `make artifacts`; every test skips
+//! cleanly when the artifacts directory is absent so `cargo test` works
+//! pre-build.
 
-use mplda::config::{Config, SamplerKind};
-use mplda::coordinator::Driver;
+use mplda::config::SamplerKind;
+use mplda::engine::{Session, SessionBuilder};
 use mplda::runtime::{ArtifactKind, ArtifactRegistry, XlaExecutor};
 use mplda::sampler::xla_dense::{MicrobatchExecutor, RustRefExecutor};
 use mplda::sampler::Params;
@@ -11,6 +14,21 @@ use mplda::util::rng::Pcg64;
 
 fn artifacts_available() -> bool {
     std::path::Path::new("artifacts/manifest.txt").exists()
+}
+
+fn tiny_xla(microbatch: usize) -> SessionBuilder {
+    Session::builder()
+        .corpus_preset("tiny")
+        .topics(16)
+        .sampler(SamplerKind::Xla)
+        .seed(21)
+        .workers(2)
+        .cluster_preset("custom")
+        .machines(2)
+        .configure(move |cfg| {
+            cfg.corpus.seed = 3;
+            cfg.train.microbatch = microbatch;
+        })
 }
 
 #[test]
@@ -67,45 +85,23 @@ fn full_training_through_pjrt_matches_ref_executor_statistically() {
         eprintln!("skipping: run `make artifacts`");
         return;
     }
-    let cfg = Config::from_str(
-        r#"
-[corpus]
-preset = "tiny"
-seed = 3
-
-[train]
-topics = 16
-iterations = 3
-sampler = "xla"
-microbatch = 256
-seed = 21
-
-[coord]
-workers = 2
-
-[cluster]
-preset = "custom"
-machines = 2
-"#,
-    )
-    .unwrap();
-
-    // PJRT-backed run.
-    let mut d1 = Driver::new(&cfg).unwrap();
-    let params = d1.params;
-    let exec = XlaExecutor::from_dir("artifacts", &params, 256).unwrap();
-    let batch = exec.batch_size();
-    d1.set_executor(Box::new(exec));
-    let r1 = d1.run(3, |_, _| {}).unwrap();
-    d1.check_consistency().unwrap();
+    // PJRT-backed run: the builder loads the artifacts itself.
+    let mut s1 = tiny_xla(256).iterations(3).build().unwrap();
+    let r1 = s1.train().unwrap();
+    s1.check_consistency().unwrap();
 
     // Rust-reference run with identical batch size (identical schedule and
     // RNG stream ⇒ identical inputs; outputs may differ only at f32 CDF
     // ties, so final LLs must be statistically indistinguishable).
-    let mut d2 = Driver::new(&cfg).unwrap();
-    d2.set_executor(Box::new(RustRefExecutor::new(batch, 16, &params)));
-    let r2 = d2.run(3, |_, _| {}).unwrap();
-    d2.check_consistency().unwrap();
+    let params = Params::new(16, 2_000, 0.1, 0.01);
+    let batch = XlaExecutor::from_dir("artifacts", &params, 256).unwrap().batch_size();
+    let mut s2 = tiny_xla(256)
+        .iterations(3)
+        .executor(Box::new(RustRefExecutor::new(batch, 16, &params)))
+        .build()
+        .unwrap();
+    let r2 = s2.train().unwrap();
+    s2.check_consistency().unwrap();
 
     let rel = (r1.final_loglik - r2.final_loglik).abs() / r1.final_loglik.abs();
     assert!(
@@ -122,37 +118,13 @@ fn xla_and_rust_xy_backends_converge_to_same_neighbourhood() {
         eprintln!("skipping: run `make artifacts`");
         return;
     }
-    let base = r#"
-[corpus]
-preset = "tiny"
-seed = 3
+    let mut s_xy = tiny_xla(64).sampler(SamplerKind::InvertedXy).iterations(6).build().unwrap();
+    let r_xy = s_xy.train().unwrap();
 
-[train]
-topics = 16
-iterations = 6
-seed = 21
-
-[coord]
-workers = 2
-
-[cluster]
-preset = "custom"
-machines = 2
-"#;
-    let mut cfg_xy = Config::from_str(base).unwrap();
-    cfg_xy.train.sampler = SamplerKind::InvertedXy;
-    let mut d_xy = Driver::new(&cfg_xy).unwrap();
-    let r_xy = d_xy.run(6, |_, _| {}).unwrap();
-
-    let mut cfg_x = Config::from_str(base).unwrap();
-    cfg_x.train.sampler = SamplerKind::Xla;
     // B=64: on a ~64K-token corpus the Jacobi freeze must stay small
     // relative to per-word masses (see DESIGN.md §Hardware-Adaptation).
-    cfg_x.train.microbatch = 64;
-    let mut d_x = Driver::new(&cfg_x).unwrap();
-    let params = d_x.params;
-    d_x.set_executor(Box::new(XlaExecutor::from_dir("artifacts", &params, 64).unwrap()));
-    let r_x = d_x.run(6, |_, _| {}).unwrap();
+    let mut s_x = tiny_xla(64).iterations(6).build().unwrap();
+    let r_x = s_x.train().unwrap();
 
     // Acceptance band 5%: the Jacobi freeze leaves a small plateau bias at
     // this corpus/batch ratio (~3% here); at E8 scale (400K tokens) the

@@ -1,56 +1,38 @@
-//! Integration: the model-parallel driver end-to-end across presets,
-//! layouts and protocol options.
+//! Integration: end-to-end training through the `engine::Session` facade
+//! across presets, layouts and protocol options.
 
-use mplda::config::{CkSyncPolicy, Config, SamplerKind};
-use mplda::coordinator::Driver;
+use mplda::config::{CkSyncPolicy, SamplerKind};
+use mplda::engine::{Execution, Session, SessionBuilder};
 
-fn cfg(s: &str) -> Config {
-    Config::from_str(s).unwrap()
-}
-
-fn tiny(workers: usize) -> Config {
-    cfg(&format!(
-        r#"
-[corpus]
-preset = "tiny"
-seed = 5
-
-[train]
-topics = 24
-iterations = 4
-seed = 9
-
-[coord]
-workers = {workers}
-
-[cluster]
-preset = "custom"
-machines = {workers}
-"#
-    ))
+fn tiny(workers: usize) -> SessionBuilder {
+    Session::builder()
+        .corpus_preset("tiny")
+        .topics(24)
+        .iterations(4)
+        .seed(9)
+        .workers(workers)
+        .cluster_preset("custom")
+        .machines(workers)
+        .configure(|cfg| cfg.corpus.seed = 5)
 }
 
 #[test]
 fn trains_all_presets() {
     for preset in ["tiny", "pubmed-sim", "wiki-uni-sim", "wiki-bi-sim"] {
-        let mut c = tiny(4);
-        c.corpus.preset = preset.into();
-        c.train.iterations = 1;
-        let mut d = Driver::new(&c).unwrap();
-        let report = d.run(1, |_, _| {}).unwrap();
-        assert_eq!(report.total_tokens as usize, d.corpus.num_tokens(), "{preset}");
-        d.check_consistency().unwrap();
+        let mut s = tiny(4).corpus_preset(preset).iterations(1).build().unwrap();
+        let report = s.train().unwrap();
+        assert_eq!(report.total_tokens as usize, s.corpus().num_tokens(), "{preset}");
+        s.check_consistency().unwrap();
     }
 }
 
 #[test]
 fn more_blocks_than_workers() {
-    let mut c = tiny(3);
-    c.coord.blocks = 7; // rectangular schedule: 7 rounds per iteration
-    let mut d = Driver::new(&c).unwrap();
-    let report = d.run(2, |_, _| {}).unwrap();
-    assert_eq!(report.total_tokens as usize, 2 * d.corpus.num_tokens());
-    d.check_consistency().unwrap();
+    // Rectangular schedule: 7 rounds per iteration.
+    let mut s = tiny(3).blocks(7).iterations(2).build().unwrap();
+    let report = s.train().unwrap();
+    assert_eq!(report.total_tokens as usize, 2 * s.corpus().num_tokens());
+    s.check_consistency().unwrap();
 }
 
 #[test]
@@ -58,12 +40,13 @@ fn ck_sync_policies_all_converge() {
     let mut lls = Vec::new();
     for policy in [CkSyncPolicy::PerRound, CkSyncPolicy::PerIteration, CkSyncPolicy::PerMicrobatch]
     {
-        let mut c = tiny(4);
-        c.coord.ck_sync = policy;
-        c.train.iterations = 6;
-        let mut d = Driver::new(&c).unwrap();
-        let report = d.run(6, |_, _| {}).unwrap();
-        d.check_consistency().unwrap();
+        let mut s = tiny(4)
+            .iterations(6)
+            .configure(|cfg| cfg.coord.ck_sync = policy)
+            .build()
+            .unwrap();
+        let report = s.train().unwrap();
+        s.check_consistency().unwrap();
         lls.push((policy, report.final_loglik));
     }
     // All policies land in the same LL neighbourhood (the §3.3 claim).
@@ -79,11 +62,15 @@ fn ck_sync_policies_all_converge() {
 #[test]
 fn prefetch_overlap_reduces_sim_time() {
     let time = |prefetch: bool| {
-        let mut c = tiny(4);
-        c.coord.prefetch = prefetch;
-        c.cluster.bandwidth_gbps = 0.05; // make comm visible
-        let mut d = Driver::new(&c).unwrap();
-        d.run(2, |_, _| {}).unwrap().sim_time
+        let mut s = tiny(4)
+            .iterations(2)
+            .configure(|cfg| {
+                cfg.coord.prefetch = prefetch;
+                cfg.cluster.bandwidth_gbps = 0.05; // make comm visible
+            })
+            .build()
+            .unwrap();
+        s.train().unwrap().sim_time
     };
     let with = time(true);
     let without = time(false);
@@ -95,9 +82,9 @@ fn serial_single_worker_equals_multi_worker_token_counts() {
     // 1 worker vs 8 workers: same corpus, same iteration token count, and
     // both consistent — the schedule only redistributes work.
     let run = |workers: usize| {
-        let mut d = Driver::new(&tiny(workers)).unwrap();
-        let r = d.run(2, |_, _| {}).unwrap();
-        d.check_consistency().unwrap();
+        let mut s = tiny(workers).iterations(2).build().unwrap();
+        let r = s.train().unwrap();
+        s.check_consistency().unwrap();
         r.total_tokens
     };
     assert_eq!(run(1), run(8));
@@ -108,11 +95,9 @@ fn mean_delta_decreases_with_more_blocks() {
     // With blocks ≫ workers, each round moves fewer tokens between totals
     // syncs, so Δ must shrink.
     let delta = |blocks: usize| {
-        let mut c = tiny(2);
-        c.coord.blocks = blocks;
-        let mut d = Driver::new(&c).unwrap();
-        d.run(2, |_, _| {}).unwrap();
-        d.deltas.mean_delta()
+        let mut s = tiny(2).blocks(blocks).iterations(2).build().unwrap();
+        s.train().unwrap();
+        s.mean_delta()
     };
     let coarse = delta(2);
     let fine = delta(16);
@@ -121,13 +106,16 @@ fn mean_delta_decreases_with_more_blocks() {
 
 #[test]
 fn ram_enforcement_aborts_infeasible_config() {
-    let mut c = tiny(2);
-    c.cluster.ram_gib = 1e-6; // ~1 KiB per node
-    c.cluster.enforce_ram = true;
-    match Driver::new(&c) {
+    let built = tiny(2)
+        .configure(|cfg| {
+            cfg.cluster.ram_gib = 1e-6; // ~1 KiB per node
+            cfg.cluster.enforce_ram = true;
+        })
+        .build();
+    match built {
         Err(e) => assert!(format!("{e:#}").contains("out of memory"), "{e:#}"),
-        Ok(mut d) => {
-            let err = d.run(1, |_, _| {}).unwrap_err();
+        Ok(mut s) => {
+            let err = s.train().unwrap_err();
             assert!(format!("{err:#}").contains("out of memory"), "{err:#}");
         }
     }
@@ -135,12 +123,13 @@ fn ram_enforcement_aborts_infeasible_config() {
 
 #[test]
 fn run_report_series_is_well_formed() {
-    let mut d = Driver::new(&tiny(4)).unwrap();
-    let report = d.run(4, |_, _| {}).unwrap();
+    let mut s = tiny(4).build().unwrap();
+    let report = s.train().unwrap();
     assert_eq!(report.ll_series.len(), 5); // init + 4
     // Iterations numbered 1..=4, sim time monotone.
-    for (i, stats) in report.iters.iter().enumerate() {
-        assert_eq!(stats.iteration, i + 1);
+    for (i, ev) in report.iters.iter().enumerate() {
+        assert_eq!(ev.stats.iteration, i + 1);
+        assert!(ev.loglik.is_some(), "default cadence computes LL every iteration");
     }
     for w in report.ll_series.windows(2) {
         assert!(w[1].1 >= w[0].1, "sim time must be monotone");
@@ -162,24 +151,37 @@ fn uci_round_trip_trains() {
     .unwrap();
     mplda::corpus::bow::write_docword(&corpus, &path).unwrap();
 
-    let mut c = tiny(2);
-    c.corpus.preset = "uci".into();
-    c.corpus.path = path.to_str().unwrap().to_string();
-    let mut d = Driver::new(&c).unwrap();
-    let report = d.run(1, |_, _| {}).unwrap();
+    let mut s = tiny(2)
+        .corpus_preset("uci")
+        .iterations(1)
+        .configure(|cfg| cfg.corpus.path = path.to_str().unwrap().to_string())
+        .build()
+        .unwrap();
+    let report = s.train().unwrap();
     assert_eq!(report.total_tokens as usize, corpus.num_tokens());
-    d.check_consistency().unwrap();
+    s.check_consistency().unwrap();
     std::fs::remove_dir_all(&dir).ok();
 }
 
 #[test]
-fn sampler_kinds_route_correctly() {
-    // dense & sparse-yao must be rejected by the MP driver with a pointer
-    // to the baseline.
+fn sampler_kinds_route_to_the_right_system() {
+    // inverted-xy/xla ride the model-parallel driver; dense & sparse-yao
+    // route to the data-parallel baseline behind the same facade.
+    let mp = tiny(2).sampler(SamplerKind::InvertedXy).build().unwrap();
+    assert!(mp.driver().is_some());
+    assert!(mp.model_digest().is_ok());
     for s in [SamplerKind::Dense, SamplerKind::SparseYao] {
-        let mut c = tiny(2);
-        c.train.sampler = s;
-        let mut d = Driver::new(&c).unwrap();
-        assert!(d.run_iteration().is_err());
+        let session = tiny(2).sampler(s).build().unwrap();
+        assert!(session.driver().is_none(), "{s:?} routes to the baseline");
+        assert!(session.model_digest().is_err());
+        // And the baseline cannot ride the threaded path — caught at build.
+        let err = tiny(2)
+            .sampler(s)
+            .execution(Execution::Threaded { parallelism: 2 })
+            .build()
+            .map(|_| ())
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("baseline"), "{err}");
     }
 }

@@ -1,42 +1,31 @@
 //! Pipelined-vs-threaded-vs-simulated determinism (the ISSUE 2
-//! acceptance bar).
+//! acceptance bar), driven through the `engine::Session` facade.
 //!
-//! The pipelined prefetch engine moves KV-store transfers off the round
+//! The pipelined prefetch backend moves KV-store transfers off the round
 //! critical path — commits and next-round staging run on a flusher
 //! thread overlapped with sampling — but it must be *invisible* in the
 //! model trajectory: a staged block's contents equal what a round-start
 //! fetch would have returned, and `C_k` merges stay on the driver thread
-//! in worker order. These tests drive the full `Driver` through all
-//! three execution flavors from the same seed and require bitwise
-//! equality of the log-likelihood series, the word–topic state, and
-//! `Driver::model_digest`.
+//! in worker order. These tests build sessions over all three
+//! `Execution` variants from the same seed and require bitwise equality
+//! of the log-likelihood series, the word–topic state, and the model
+//! digest.
 
-use mplda::config::{Config, ExecutionMode, PipelineMode};
-use mplda::coordinator::Driver;
+use mplda::config::SamplerKind;
+use mplda::engine::{Execution, Session, SessionBuilder};
 use mplda::model::WordTopicTable;
 
-fn cfg(workers: usize, blocks: usize, topics: usize, seed: u64) -> Config {
-    Config::from_str(&format!(
-        r#"
-[corpus]
-preset = "tiny"
-seed = 29
-
-[train]
-topics = {topics}
-sampler = "inverted-xy"
-seed = {seed}
-
-[coord]
-workers = {workers}
-blocks = {blocks}
-
-[cluster]
-preset = "custom"
-machines = {workers}
-"#
-    ))
-    .unwrap()
+fn builder(workers: usize, blocks: usize, topics: usize, seed: u64) -> SessionBuilder {
+    Session::builder()
+        .corpus_preset("tiny")
+        .topics(topics)
+        .sampler(SamplerKind::InvertedXy)
+        .seed(seed)
+        .workers(workers)
+        .blocks(blocks)
+        .cluster_preset("custom")
+        .machines(workers)
+        .configure(|cfg| cfg.corpus.seed = 29)
 }
 
 struct RunOut {
@@ -48,43 +37,33 @@ struct RunOut {
     budget_skips: u64,
 }
 
-fn run(
-    mut config: Config,
-    mode: ExecutionMode,
-    pipeline: PipelineMode,
-    parallelism: usize,
-    iters: usize,
-) -> RunOut {
-    config.coord.execution = mode;
-    config.coord.pipeline = pipeline;
-    config.coord.parallelism = parallelism;
-    let mut d = Driver::new(&config).unwrap();
-    let report = d.run(iters, |_, _| {}).unwrap();
-    d.check_consistency().unwrap();
+fn run(b: SessionBuilder, execution: Execution, iters: usize) -> RunOut {
+    let mut s = b.execution(execution).iterations(iters).build().unwrap();
+    let report = s.train().unwrap();
+    s.check_consistency().unwrap();
     let ll_bits: Vec<u64> = report.ll_series.iter().map(|&(_, _, ll)| ll.to_bits()).collect();
-    let mut wt = WordTopicTable::zeros(d.corpus.num_words(), d.params.num_topics);
-    d.kv().with_resident_blocks(|blocks| {
-        for b in blocks {
-            for (i, row) in b.rows.iter().enumerate() {
-                *wt.row_mut(b.word_at(i) as usize) = row.clone();
-            }
-        }
-    });
+    let digest = s.model_digest().unwrap();
+    let pstats = s.pipeline_stats();
+    let wt = s.freeze().unwrap().word_topic().clone();
     RunOut {
         ll_bits,
         wt,
-        digest: d.model_digest(),
+        digest,
         tokens: report.total_tokens,
-        staged_hits: d.pipeline_stats().staged_hits,
-        budget_skips: d.pipeline_stats().budget_skips,
+        staged_hits: pstats.staged_hits,
+        budget_skips: pstats.budget_skips,
     }
+}
+
+fn pipelined(parallelism: usize) -> Execution {
+    Execution::Pipelined { parallelism, staging_budget_mib: 0.0 }
 }
 
 #[test]
 fn pipelined_matches_simulated_and_threaded_exactly() {
-    let sim = run(cfg(4, 4, 16, 7), ExecutionMode::Simulated, PipelineMode::Off, 0, 4);
-    let thr = run(cfg(4, 4, 16, 7), ExecutionMode::Threaded, PipelineMode::Off, 4, 4);
-    let pip = run(cfg(4, 4, 16, 7), ExecutionMode::Threaded, PipelineMode::DoubleBuffer, 4, 4);
+    let sim = run(builder(4, 4, 16, 7), Execution::Simulated, 4);
+    let thr = run(builder(4, 4, 16, 7), Execution::Threaded { parallelism: 4 }, 4);
+    let pip = run(builder(4, 4, 16, 7), pipelined(4), 4);
 
     assert_eq!(sim.tokens, pip.tokens, "every token sampled exactly once in all modes");
     assert_eq!(sim.ll_bits, pip.ll_bits, "ll trajectory must be bitwise identical");
@@ -103,15 +82,9 @@ fn pipelined_matches_simulated_and_threaded_exactly() {
 
 #[test]
 fn parallelism_is_invisible_under_pipelining() {
-    let reference = run(cfg(4, 4, 12, 11), ExecutionMode::Simulated, PipelineMode::Off, 0, 3);
+    let reference = run(builder(4, 4, 12, 11), Execution::Simulated, 3);
     for parallelism in [1usize, 2, 4, 7] {
-        let got = run(
-            cfg(4, 4, 12, 11),
-            ExecutionMode::Threaded,
-            PipelineMode::DoubleBuffer,
-            parallelism,
-            3,
-        );
+        let got = run(builder(4, 4, 12, 11), pipelined(parallelism), 3);
         assert_eq!(reference.ll_bits, got.ll_bits, "parallelism={parallelism}: ll series");
         assert_eq!(reference.digest, got.digest, "parallelism={parallelism}: digest");
     }
@@ -130,11 +103,17 @@ fn determinism_holds_across_layouts_policies_and_budgets() {
         (3, 3, 16, 17, "per-round", 1e-6), // ~1-byte budget: all skips
     ];
     for &(workers, blocks, topics, seed, ck_sync, budget_mib) in cases {
-        let mut base = cfg(workers, blocks, topics, seed);
-        base.coord.ck_sync = mplda::config::CkSyncPolicy::parse(ck_sync).unwrap();
-        base.coord.staging_budget_mib = budget_mib;
-        let sim = run(base.clone(), ExecutionMode::Simulated, PipelineMode::Off, 0, 2);
-        let pip = run(base, ExecutionMode::Threaded, PipelineMode::DoubleBuffer, 3, 2);
+        let base = || {
+            builder(workers, blocks, topics, seed).configure(|cfg| {
+                cfg.coord.ck_sync = mplda::config::CkSyncPolicy::parse(ck_sync).unwrap();
+            })
+        };
+        let sim = run(base(), Execution::Simulated, 2);
+        let pip = run(
+            base(),
+            Execution::Pipelined { parallelism: 3, staging_budget_mib: budget_mib },
+            2,
+        );
         let tag = format!("workers={workers} blocks={blocks} K={topics} seed={seed} {ck_sync}");
         assert_eq!(sim.ll_bits, pip.ll_bits, "case {tag}: ll");
         assert_eq!(sim.digest, pip.digest, "case {tag}: digest");
@@ -151,16 +130,14 @@ fn determinism_holds_across_layouts_policies_and_budgets() {
 fn pipelined_traffic_totals_match_threaded() {
     // Same bytes move in both modes; the pipeline only reclassifies the
     // fetch lane (BlockFetch → BlockPrefetch) for staged transfers.
-    let total = |pipeline: PipelineMode| {
-        let mut config = cfg(4, 4, 12, 19);
-        config.coord.execution = ExecutionMode::Threaded;
-        config.coord.pipeline = pipeline;
-        let mut d = Driver::new(&config).unwrap();
-        d.run(2, |_, _| {}).unwrap();
-        (d.kv().total_bytes(), d.kv().overlapped_bytes())
+    let total = |execution: Execution| {
+        let mut s = builder(4, 4, 12, 19).execution(execution).iterations(2).build().unwrap();
+        s.train().unwrap();
+        let kv = s.driver().expect("model-parallel session").kv();
+        (kv.total_bytes(), kv.overlapped_bytes())
     };
-    let (bytes_off, overlapped_off) = total(PipelineMode::Off);
-    let (bytes_pip, overlapped_pip) = total(PipelineMode::DoubleBuffer);
+    let (bytes_off, overlapped_off) = total(Execution::Threaded { parallelism: 0 });
+    let (bytes_pip, overlapped_pip) = total(pipelined(0));
     assert_eq!(bytes_off, bytes_pip, "pipelining must not change traffic volume");
     assert_eq!(overlapped_off, 0);
     assert!(overlapped_pip > 0, "staged transfers must be metered as overlapped");

@@ -1,0 +1,106 @@
+//! Fold-in inference through the facade (ISSUE 3 acceptance bar):
+//! train on the `tiny` preset via `Session`, freeze into a `TopicModel`,
+//! and serve held-out queries. Held-out perplexity must beat the
+//! uniform-topic baseline, and results must be deterministic from a
+//! fixed seed — independent of batch threading.
+
+use mplda::config::SamplerKind;
+use mplda::engine::{BowDoc, Execution, InferOptions, Session, TopicModel};
+
+/// Train a model on the `tiny` preset and split off held-out queries
+/// drawn from the same generative process (a fresh corpus seed).
+fn trained() -> (TopicModel, Vec<BowDoc>) {
+    let mut session = Session::builder()
+        .corpus_preset("tiny")
+        .topics(20)
+        .iterations(15)
+        .seed(3)
+        .workers(4)
+        .cluster_preset("custom")
+        .machines(4)
+        .execution(Execution::Threaded { parallelism: 4 })
+        .build()
+        .unwrap();
+    session.train().unwrap();
+
+    let held = mplda::corpus::build(&mplda::config::CorpusConfig {
+        preset: "tiny".into(),
+        seed: 4321, // unseen documents, same process
+        ..Default::default()
+    })
+    .unwrap();
+    let docs: Vec<BowDoc> =
+        held.docs[..60].iter().map(|d| BowDoc::new(d.tokens.clone())).collect();
+    (session.freeze().unwrap(), docs)
+}
+
+#[test]
+fn foldin_beats_uniform_baseline_on_tiny() {
+    let (model, docs) = trained();
+    let folded = model.infer(&docs).unwrap();
+    let (_, ppx) = model.held_out_perplexity(&docs, &folded).unwrap();
+    let (_, ppx_uniform) = model.uniform_baseline_perplexity(&docs);
+    assert!(ppx.is_finite() && ppx > 1.0);
+    assert!(
+        ppx < ppx_uniform,
+        "fold-in perplexity {ppx:.1} must beat the uniform-topic baseline {ppx_uniform:.1}"
+    );
+}
+
+#[test]
+fn foldin_is_deterministic_from_a_fixed_seed() {
+    let (model, docs) = trained();
+    let snapshot = |opts: &InferOptions| {
+        let folded = model.infer_with(&docs, opts).unwrap();
+        (0..folded.len())
+            .map(|d| folded.counts(d).iter().collect::<Vec<_>>())
+            .collect::<Vec<_>>()
+    };
+    let a = snapshot(&InferOptions { seed: 99, threads: 1, ..Default::default() });
+    let b = snapshot(&InferOptions { seed: 99, threads: 1, ..Default::default() });
+    assert_eq!(a, b, "same seed ⇒ same fold-in");
+    // Thread count is invisible.
+    for threads in [2, 4, 8] {
+        let t = snapshot(&InferOptions { seed: 99, threads, ..Default::default() });
+        assert_eq!(a, t, "threads={threads}");
+    }
+    // A different seed actually changes the sampled counts somewhere.
+    let c = snapshot(&InferOptions { seed: 100, threads: 1, ..Default::default() });
+    assert_ne!(a, c, "different seeds must explore different assignments");
+}
+
+#[test]
+fn frozen_model_shape_matches_training_config() {
+    let (model, docs) = trained();
+    assert_eq!(model.num_topics(), 20);
+    assert_eq!(model.num_words(), 2_000); // tiny preset vocabulary
+    let folded = model.infer(&docs).unwrap();
+    assert_eq!(folded.len(), docs.len());
+    for d in 0..folded.len() {
+        let theta = folded.theta(d);
+        assert_eq!(theta.len(), 20);
+        let sum: f64 = theta.iter().sum();
+        assert!((sum - 1.0).abs() < 1e-9, "doc {d}: θ sums to {sum}");
+    }
+}
+
+#[test]
+fn baseline_session_freezes_too() {
+    // The facade serves both systems: a baseline session freezes into the
+    // same TopicModel type.
+    let mut session = Session::builder()
+        .corpus_preset("tiny")
+        .topics(12)
+        .iterations(4)
+        .sampler(SamplerKind::SparseYao)
+        .workers(4)
+        .cluster_preset("custom")
+        .machines(4)
+        .build()
+        .unwrap();
+    session.train().unwrap();
+    let model = session.freeze().unwrap();
+    assert_eq!(model.num_topics(), 12);
+    let folded = model.infer(&[BowDoc::new(vec![0, 1, 2])]).unwrap();
+    assert_eq!(folded.len(), 1);
+}

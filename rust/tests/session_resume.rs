@@ -1,0 +1,173 @@
+//! Checkpoint → resume determinism through the `engine::Session` facade
+//! (ISSUE 3 acceptance bar).
+//!
+//! `Session::checkpoint` writes a resumable (v2) checkpoint — `Z`, the
+//! live doc–topic entry order, every worker RNG stream position, and the
+//! iteration counter. A fresh session built with
+//! `SessionBuilder::resume_from` must then continue **bitwise
+//! identically** to an uninterrupted run: same `model_digest`, same
+//! log-likelihood series (by iteration and bit pattern), across all
+//! three execution backends. Simulated time is *not* compared — it is
+//! derived from measured host CPU time and varies run to run by design.
+
+use std::path::PathBuf;
+
+use mplda::config::SamplerKind;
+use mplda::engine::{Execution, Session, SessionBuilder};
+
+fn builder(seed: u64) -> SessionBuilder {
+    Session::builder()
+        .corpus_preset("tiny")
+        .topics(16)
+        .sampler(SamplerKind::InvertedXy)
+        .seed(seed)
+        .workers(3)
+        .cluster_preset("custom")
+        .machines(3)
+        .configure(|cfg| cfg.corpus.seed = 23)
+}
+
+fn tmp_path(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("mplda_resume_{tag}_{}.ckpt", std::process::id()))
+}
+
+/// (iteration, ll bits) pairs of a summary's LL series.
+fn ll_points(series: &[(usize, f64, f64)]) -> Vec<(usize, u64)> {
+    series.iter().map(|&(i, _, ll)| (i, ll.to_bits())).collect()
+}
+
+#[test]
+fn resume_is_bitwise_identical_across_all_backends() {
+    let executions = [
+        ("simulated", Execution::Simulated),
+        ("threaded", Execution::Threaded { parallelism: 3 }),
+        ("pipelined", Execution::Pipelined { parallelism: 3, staging_budget_mib: 0.0 }),
+    ];
+    for (tag, execution) in executions {
+        let path = tmp_path(tag);
+
+        // Uninterrupted reference: 6 iterations.
+        let mut full = builder(7).execution(execution).iterations(6).build().unwrap();
+        let full_summary = full.train().unwrap();
+        let full_digest = full.model_digest().unwrap();
+
+        // Interrupted: 3 iterations, checkpoint, fresh session, 3 more.
+        let mut first = builder(7).execution(execution).iterations(3).build().unwrap();
+        let first_summary = first.train().unwrap();
+        first.checkpoint(&path).unwrap();
+        drop(first);
+
+        let mut resumed = builder(7)
+            .execution(execution)
+            .iterations(3)
+            .resume_from(&path)
+            .build()
+            .unwrap();
+        assert_eq!(resumed.iteration(), 3, "{tag}: iteration counter resumes");
+        let resumed_summary = resumed.train().unwrap();
+        resumed.check_consistency().unwrap();
+
+        // Digest: the resumed state equals the uninterrupted state bit for
+        // bit.
+        assert_eq!(
+            full_digest,
+            resumed.model_digest().unwrap(),
+            "{tag}: model digest must match the uninterrupted run"
+        );
+
+        // LL series: first half + resumed half == full series, by
+        // iteration index and f64 bit pattern. The resumed series' init
+        // entry re-evaluates the checkpointed state, so it must equal the
+        // first run's last entry too.
+        let full_pts = ll_points(&full_summary.ll_series);
+        let mut split_pts = ll_points(&first_summary.ll_series);
+        let resumed_pts = ll_points(&resumed_summary.ll_series);
+        assert_eq!(
+            split_pts.last().unwrap(),
+            resumed_pts.first().unwrap(),
+            "{tag}: resume re-evaluates the checkpointed state exactly"
+        );
+        split_pts.extend_from_slice(&resumed_pts[1..]);
+        assert_eq!(full_pts, split_pts, "{tag}: stitched LL series must match");
+
+        std::fs::remove_file(&path).ok();
+    }
+}
+
+#[test]
+fn resume_can_switch_execution_backend() {
+    // The backend is a pure performance knob, so checkpoint under one and
+    // resume under another still reproduces the uninterrupted trajectory.
+    let path = tmp_path("switch");
+    let mut full = builder(11).execution(Execution::Simulated).iterations(4).build().unwrap();
+    full.train().unwrap();
+
+    let mut first = builder(11).execution(Execution::Simulated).iterations(2).build().unwrap();
+    first.train().unwrap();
+    first.checkpoint(&path).unwrap();
+
+    let mut resumed = builder(11)
+        .execution(Execution::Threaded { parallelism: 2 })
+        .iterations(2)
+        .resume_from(&path)
+        .build()
+        .unwrap();
+    resumed.train().unwrap();
+    assert_eq!(full.model_digest().unwrap(), resumed.model_digest().unwrap());
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn resume_against_wrong_corpus_fails_at_build() {
+    let path = tmp_path("wrong_corpus");
+    let first = builder(3).iterations(0).build().unwrap();
+    first.checkpoint(&path).unwrap();
+    let err = builder(3)
+        .configure(|cfg| cfg.corpus.seed = 99) // different corpus
+        .resume_from(&path)
+        .build()
+        .map(|_| ())
+        .unwrap_err();
+    assert!(format!("{err:#}").contains("different corpus"), "{err:#}");
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn resume_with_wrong_worker_count_fails_at_build() {
+    let path = tmp_path("wrong_workers");
+    let first = builder(5).iterations(0).build().unwrap();
+    first.checkpoint(&path).unwrap();
+    let err = builder(5)
+        .workers(4)
+        .machines(4)
+        .resume_from(&path)
+        .build()
+        .map(|_| ())
+        .unwrap_err();
+    assert!(format!("{err:#}").contains("workers"), "{err:#}");
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn plain_v1_checkpoint_warm_starts() {
+    // A v1 checkpoint (assignments only) still loads — as a warm start:
+    // counts rebuilt from Z, fresh RNG streams, iteration 0.
+    let dir = std::env::temp_dir().join(format!("mplda_resume_v1_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("v1.ckpt");
+
+    let mut s = builder(13).iterations(2).build().unwrap();
+    s.train().unwrap();
+    let driver = s.driver().unwrap();
+    mplda::model::checkpoint::save(&path, driver.assignments(), s.corpus()).unwrap();
+    let digest = s.model_digest().unwrap();
+
+    let warm = builder(13).resume_from(&path).build().unwrap();
+    assert_eq!(warm.iteration(), 0, "v1 checkpoints carry no iteration counter");
+    assert_eq!(
+        warm.model_digest().unwrap(),
+        digest,
+        "warm start restores the same counts (Z is the sufficient state)"
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}

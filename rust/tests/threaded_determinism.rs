@@ -1,73 +1,54 @@
-//! Threaded-vs-simulated determinism (the ISSUE 1 acceptance bar).
+//! Threaded-vs-simulated determinism (the ISSUE 1 acceptance bar), driven
+//! through the `engine::Session` facade and its typed `Execution` knob.
 //!
-//! The threaded execution engine must be *invisible* in the model's
+//! The threaded execution backend must be *invisible* in the model's
 //! trajectory: per-worker RNG streams and private `C_k` snapshots make
 //! round results independent of execution order, so running a round's
 //! workers on 4 OS threads has to produce **bitwise identical** state to
 //! running them one after another — identical log-likelihood series,
-//! identical word–topic counts, identical totals. These tests drive the
-//! full `Driver` through both `coord.execution` modes from the same seed
-//! and compare everything.
+//! identical word–topic counts, identical totals. These tests build
+//! sessions over both `Execution` variants from the same seed and compare
+//! everything.
 
-use mplda::config::{Config, ExecutionMode};
-use mplda::coordinator::Driver;
+use mplda::config::SamplerKind;
+use mplda::engine::{Execution, Session, SessionBuilder};
 use mplda::model::WordTopicTable;
 
-fn cfg(workers: usize, blocks: usize, topics: usize, seed: u64) -> Config {
-    Config::from_str(&format!(
-        r#"
-[corpus]
-preset = "tiny"
-seed = 31
-
-[train]
-topics = {topics}
-sampler = "inverted-xy"
-seed = {seed}
-
-[coord]
-workers = {workers}
-blocks = {blocks}
-
-[cluster]
-preset = "custom"
-machines = {workers}
-"#
-    ))
-    .unwrap()
+fn builder(workers: usize, blocks: usize, topics: usize, seed: u64) -> SessionBuilder {
+    Session::builder()
+        .corpus_preset("tiny")
+        .topics(topics)
+        .sampler(SamplerKind::InvertedXy)
+        .seed(seed)
+        .workers(workers)
+        .blocks(blocks)
+        .cluster_preset("custom")
+        .machines(workers)
+        .configure(|cfg| cfg.corpus.seed = 31)
 }
 
 /// Run `iters` iterations; return (ll series bits, word–topic table,
 /// state digest, total tokens).
 fn run(
-    mut config: Config,
-    mode: ExecutionMode,
-    parallelism: usize,
+    b: SessionBuilder,
+    execution: Execution,
     iters: usize,
 ) -> (Vec<u64>, WordTopicTable, u64, u64) {
-    config.coord.execution = mode;
-    config.coord.parallelism = parallelism;
-    let mut d = Driver::new(&config).unwrap();
-    let report = d.run(iters, |_, _| {}).unwrap();
-    d.check_consistency().unwrap();
+    let mut s = b.execution(execution).iterations(iters).build().unwrap();
+    let report = s.train().unwrap();
+    s.check_consistency().unwrap();
     let ll_bits: Vec<u64> = report.ll_series.iter().map(|&(_, _, ll)| ll.to_bits()).collect();
-    let mut wt = WordTopicTable::zeros(d.corpus.num_words(), d.params.num_topics);
-    d.kv().with_resident_blocks(|blocks| {
-        for b in blocks {
-            for (i, row) in b.rows.iter().enumerate() {
-                *wt.row_mut(b.word_at(i) as usize) = row.clone();
-            }
-        }
-    });
-    (ll_bits, wt, d.model_digest(), report.total_tokens)
+    let digest = s.model_digest().unwrap();
+    let wt = s.freeze().unwrap().word_topic().clone();
+    (ll_bits, wt, digest, report.total_tokens)
 }
 
 #[test]
 fn threaded4_matches_simulated_exactly() {
     let (ll_sim, wt_sim, dig_sim, tok_sim) =
-        run(cfg(4, 4, 16, 7), ExecutionMode::Simulated, 0, 4);
+        run(builder(4, 4, 16, 7), Execution::Simulated, 4);
     let (ll_thr, wt_thr, dig_thr, tok_thr) =
-        run(cfg(4, 4, 16, 7), ExecutionMode::Threaded, 4, 4);
+        run(builder(4, 4, 16, 7), Execution::Threaded { parallelism: 4 }, 4);
 
     assert_eq!(tok_sim, tok_thr, "every token sampled exactly once in both modes");
     assert_eq!(ll_sim, ll_thr, "log-likelihood trajectory must be bitwise identical");
@@ -81,9 +62,9 @@ fn threaded4_matches_simulated_exactly() {
 #[test]
 fn thread_count_is_invisible() {
     // 1-thread threaded == 4-thread threaded == simulated (3 iterations).
-    let reference = run(cfg(4, 4, 12, 11), ExecutionMode::Simulated, 0, 3);
+    let reference = run(builder(4, 4, 12, 11), Execution::Simulated, 3);
     for parallelism in [1usize, 2, 4, 7] {
-        let got = run(cfg(4, 4, 12, 11), ExecutionMode::Threaded, parallelism, 3);
+        let got = run(builder(4, 4, 12, 11), Execution::Threaded { parallelism }, 3);
         assert_eq!(reference.0, got.0, "parallelism={parallelism}: ll series");
         assert_eq!(reference.2, got.2, "parallelism={parallelism}: digest");
     }
@@ -101,10 +82,14 @@ fn determinism_holds_across_layouts_and_policies() {
         (8, 8, 16, 17, "per-iteration"),
     ];
     for &(workers, blocks, topics, seed, ck_sync) in &cases {
-        let mut base = cfg(workers, blocks, topics, seed);
-        base.coord.ck_sync = mplda::config::CkSyncPolicy::parse(ck_sync).unwrap();
-        let (ll_sim, _, dig_sim, _) = run(base.clone(), ExecutionMode::Simulated, 0, 2);
-        let (ll_thr, _, dig_thr, _) = run(base, ExecutionMode::Threaded, 3, 2);
+        let base = || {
+            builder(workers, blocks, topics, seed).configure(|cfg| {
+                cfg.coord.ck_sync = mplda::config::CkSyncPolicy::parse(ck_sync).unwrap();
+            })
+        };
+        let (ll_sim, _, dig_sim, _) = run(base(), Execution::Simulated, 2);
+        let (ll_thr, _, dig_thr, _) =
+            run(base(), Execution::Threaded { parallelism: 3 }, 2);
         assert_eq!(
             ll_sim, ll_thr,
             "case workers={workers} blocks={blocks} K={topics} seed={seed} {ck_sync}: ll"
@@ -122,17 +107,12 @@ fn threaded_sim_clock_matches_sequential_accounting() {
     // *simulated* cluster time must stay in the same ballpark across
     // modes (it is measurement-noise sensitive, not structure sensitive):
     // both runs do identical sampling work.
-    let sim = {
-        let mut d = Driver::new(&cfg(4, 4, 16, 7)).unwrap();
-        d.run(2, |_, _| {}).unwrap().sim_time
+    let sim_time = |execution: Execution| {
+        let mut s = builder(4, 4, 16, 7).execution(execution).iterations(2).build().unwrap();
+        s.train().unwrap().sim_time
     };
-    let thr = {
-        let mut c = cfg(4, 4, 16, 7);
-        c.coord.execution = ExecutionMode::Threaded;
-        c.coord.parallelism = 4;
-        let mut d = Driver::new(&c).unwrap();
-        d.run(2, |_, _| {}).unwrap().sim_time
-    };
+    let sim = sim_time(Execution::Simulated);
+    let thr = sim_time(Execution::Threaded { parallelism: 4 });
     assert!(sim > 0.0 && thr > 0.0);
     let ratio = if sim > thr { sim / thr } else { thr / sim };
     assert!(ratio < 3.0, "sim={sim} thr={thr}: simulated time diverged structurally");
