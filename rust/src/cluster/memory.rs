@@ -23,13 +23,17 @@ pub enum MemCategory {
     /// buffer (double buffering's memory cost, bounded by
     /// `coord.staging_budget_mib`).
     Staging,
+    /// MH proposal tables cached on leased blocks (`sampler::mh_alias`),
+    /// bounded per block by `train.alias_budget_mib` and cleared at
+    /// commit.
+    AliasCache,
     /// KV-store shard hosted on this node.
     KvShard,
     /// Topic totals, buffers, misc.
     Other,
 }
 
-const NUM_CATEGORIES: usize = 7;
+const NUM_CATEGORIES: usize = 8;
 
 fn cat_idx(c: MemCategory) -> usize {
     match c {
@@ -38,8 +42,9 @@ fn cat_idx(c: MemCategory) -> usize {
         MemCategory::DocTopic => 2,
         MemCategory::Model => 3,
         MemCategory::Staging => 4,
-        MemCategory::KvShard => 5,
-        MemCategory::Other => 6,
+        MemCategory::AliasCache => 5,
+        MemCategory::KvShard => 6,
+        MemCategory::Other => 7,
     }
 }
 
@@ -49,6 +54,10 @@ pub struct MemoryAccountant {
     capacity: u64,
     current: Vec<[u64; NUM_CATEGORIES]>,
     peak: Vec<u64>,
+    /// Per-category peaks (visibility into transient structures like the
+    /// staging buffer and kernel caches, which are released within the
+    /// round that charged them).
+    peak_cat: Vec<[u64; NUM_CATEGORIES]>,
     enforce: bool,
 }
 
@@ -58,6 +67,7 @@ impl MemoryAccountant {
             capacity: capacity_bytes,
             current: vec![[0; NUM_CATEGORIES]; machines],
             peak: vec![0; machines],
+            peak_cat: vec![[0; NUM_CATEGORIES]; machines],
             enforce,
         }
     }
@@ -65,6 +75,10 @@ impl MemoryAccountant {
     /// Add bytes; errors if enforcement is on and the node exceeds RAM.
     pub fn charge(&mut self, node: usize, cat: MemCategory, bytes: u64) -> Result<()> {
         self.current[node][cat_idx(cat)] += bytes;
+        let cur = self.current[node][cat_idx(cat)];
+        if cur > self.peak_cat[node][cat_idx(cat)] {
+            self.peak_cat[node][cat_idx(cat)] = cur;
+        }
         let total = self.node_total(node);
         if total > self.peak[node] {
             self.peak[node] = total;
@@ -117,6 +131,17 @@ impl MemoryAccountant {
     pub fn category(&self, node: usize, cat: MemCategory) -> u64 {
         self.current[node][cat_idx(cat)]
     }
+
+    /// Peak bytes a category ever held on `node` — how transient
+    /// structures (staging, alias caches) stay visible after release.
+    pub fn peak_category(&self, node: usize, cat: MemCategory) -> u64 {
+        self.peak_cat[node][cat_idx(cat)]
+    }
+
+    /// Max per-category peak across nodes.
+    pub fn max_peak_category(&self, cat: MemCategory) -> u64 {
+        self.peak_cat.iter().map(|p| p[cat_idx(cat)]).max().unwrap_or(0)
+    }
 }
 
 #[cfg(test)]
@@ -157,6 +182,17 @@ mod tests {
         m.set(0, MemCategory::DocTopic, 100).unwrap();
         m.set(0, MemCategory::DocTopic, 40).unwrap();
         assert_eq!(m.category(0, MemCategory::DocTopic), 40);
+    }
+
+    #[test]
+    fn category_peaks_survive_release() {
+        let mut m = MemoryAccountant::new(2, 1000, false);
+        m.charge(1, MemCategory::AliasCache, 70).unwrap();
+        m.release(1, MemCategory::AliasCache, 70);
+        assert_eq!(m.category(1, MemCategory::AliasCache), 0);
+        assert_eq!(m.peak_category(1, MemCategory::AliasCache), 70);
+        assert_eq!(m.max_peak_category(MemCategory::AliasCache), 70);
+        assert_eq!(m.peak_category(0, MemCategory::AliasCache), 0);
     }
 
     #[test]

@@ -23,6 +23,9 @@ pub enum SamplerKind {
     SparseYao,
     /// The paper's X+Y decomposition on the inverted index (eq. 3).
     InvertedXy,
+    /// LightLDA-style cycling Metropolis–Hastings with per-word alias
+    /// proposal tables — amortized O(1)/token (`sampler::mh_alias`).
+    MhAlias,
     /// Dense microbatch sampling through the AOT-compiled XLA artifact
     /// (JAX/Pallas L1–L2 path).
     Xla,
@@ -34,8 +37,11 @@ impl SamplerKind {
             "dense" => SamplerKind::Dense,
             "sparse-yao" | "sparse" | "yao" => SamplerKind::SparseYao,
             "inverted-xy" | "xy" | "mp" => SamplerKind::InvertedXy,
+            "mh-alias" | "mh_alias" | "mh" | "alias" => SamplerKind::MhAlias,
             "xla" => SamplerKind::Xla,
-            other => bail!("unknown sampler {other:?} (dense|sparse-yao|inverted-xy|xla)"),
+            other => {
+                bail!("unknown sampler {other:?} (dense|sparse-yao|inverted-xy|mh-alias|xla)")
+            }
         })
     }
 
@@ -44,6 +50,7 @@ impl SamplerKind {
             SamplerKind::Dense => "dense",
             SamplerKind::SparseYao => "sparse-yao",
             SamplerKind::InvertedXy => "inverted-xy",
+            SamplerKind::MhAlias => "mh-alias",
             SamplerKind::Xla => "xla",
         }
     }
@@ -141,6 +148,11 @@ pub struct TrainConfig {
     pub sampler: SamplerKind,
     /// Microbatch size for the XLA backend (tokens per device call).
     pub microbatch: usize,
+    /// Per-block byte budget (MiB) for the `mh-alias` kernel's proposal
+    /// tables; `0` = unlimited. Over-budget words fall back to a uniform
+    /// proposal (slower mixing, never incorrect), and cached bytes are
+    /// charged to the RAM accountant under `MemCategory::AliasCache`.
+    pub alias_budget_mib: f64,
     /// Compute the training log-likelihood every N iterations.
     pub ll_every: usize,
 }
@@ -155,6 +167,7 @@ impl Default for TrainConfig {
             seed: 42,
             sampler: SamplerKind::InvertedXy,
             microbatch: 1024,
+            alias_budget_mib: 0.0,
             ll_every: 1,
         }
     }
@@ -501,6 +514,7 @@ impl Config {
             "train.seed" => self.train.seed = u64v(value)?,
             "train.sampler" => self.train.sampler = SamplerKind::parse(&s(value)?)?,
             "train.microbatch" => self.train.microbatch = u(value)?,
+            "train.alias_budget_mib" => self.train.alias_budget_mib = f(value)?,
             "train.ll_every" => self.train.ll_every = u(value)?,
             "coord.workers" => self.coord.workers = u(value)?,
             "coord.blocks" => self.coord.blocks = u(value)?,
@@ -582,6 +596,9 @@ impl Config {
         if self.coord.staging_budget_mib < 0.0 {
             bail!("coord.staging_budget_mib must be >= 0 (0 = unlimited)");
         }
+        if self.train.alias_budget_mib < 0.0 {
+            bail!("train.alias_budget_mib must be >= 0 (0 = unlimited)");
+        }
         if self.corpus.preset == "uci" && self.corpus.path.is_empty() {
             bail!("corpus.preset = uci requires corpus.path");
         }
@@ -659,7 +676,22 @@ machines = 10
     fn sampler_parse() {
         assert_eq!(SamplerKind::parse("xy").unwrap(), SamplerKind::InvertedXy);
         assert_eq!(SamplerKind::parse("dense").unwrap(), SamplerKind::Dense);
+        assert_eq!(SamplerKind::parse("mh-alias").unwrap(), SamplerKind::MhAlias);
+        assert_eq!(SamplerKind::parse("mh").unwrap(), SamplerKind::MhAlias);
         assert!(SamplerKind::parse("what").is_err());
+    }
+
+    #[test]
+    fn alias_budget_parses_and_validates() {
+        let cfg = Config::from_str(
+            "[train]\nsampler = \"mh-alias\"\nalias_budget_mib = 16.0",
+        )
+        .unwrap();
+        assert_eq!(cfg.train.sampler, SamplerKind::MhAlias);
+        assert_eq!(cfg.train.alias_budget_mib, 16.0);
+        assert!(Config::from_str("[train]\nalias_budget_mib = -1.0").is_err());
+        // Default: unlimited.
+        assert_eq!(Config::default().train.alias_budget_mib, 0.0);
     }
 
     #[test]

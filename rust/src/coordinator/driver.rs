@@ -44,7 +44,7 @@ use crate::model::{
     Assignments, BlockMap, DocTopic, ShardOwnership, TopicCounts, WordTopicTable,
 };
 use crate::sampler::xla_dense::MicrobatchExecutor;
-use crate::sampler::Params;
+use crate::sampler::{KernelOpts, Params};
 use crate::util::rng::Pcg64;
 
 use super::scheduler::RotationSchedule;
@@ -466,6 +466,10 @@ impl Driver {
                     mem,
                     pstats,
                     sampler: cfg.train.sampler,
+                    kernel_opts: KernelOpts {
+                        alias_budget_bytes: (cfg.train.alias_budget_mib * (1u64 << 20) as f64)
+                            .round() as u64,
+                    },
                     parallelism: cfg.coord.parallelism,
                     exec: exec.as_deref_mut(),
                 };
@@ -869,6 +873,36 @@ machines = {workers}
         assert_eq!(skips_unlimited, 0);
         assert!(skips_capped > 0, "tiny budget must skip prefetches");
         assert_eq!(dig_unlimited, dig_capped, "budget skips must not change state");
+    }
+
+    #[test]
+    fn mh_alias_rides_every_backend_bitwise_with_accounted_cache() {
+        // The MH kernel is thread-safe by capability, so it runs on all
+        // three execution paths — bitwise identically — and its lease-time
+        // proposal tables must be visible to the RAM accountant.
+        let run = |mode: &str, pipeline: &str| {
+            let mut cfg = tiny_cfg(4, "mh-alias");
+            cfg.coord.execution = crate::config::ExecutionMode::parse(mode).unwrap();
+            cfg.coord.pipeline = crate::config::PipelineMode::parse(pipeline).unwrap();
+            cfg.coord.parallelism = 4;
+            let mut d = Driver::new(&cfg).unwrap();
+            let report = d.run(2, |_, _| {}).unwrap();
+            d.check_consistency().unwrap();
+            let alias_peak =
+                d.mem.max_peak_category(crate::cluster::MemCategory::AliasCache);
+            (d.model_digest(), report.final_loglik.to_bits(), alias_peak)
+        };
+        let (dig_sim, ll_sim, peak_sim) = run("simulated", "off");
+        let (dig_thr, ll_thr, peak_thr) = run("threaded", "off");
+        let (dig_pip, ll_pip, peak_pip) = run("threaded", "double_buffer");
+        assert_eq!(dig_sim, dig_thr, "mh-alias must be execution-invariant");
+        assert_eq!(dig_thr, dig_pip);
+        assert_eq!(ll_sim, ll_thr);
+        assert_eq!(ll_thr, ll_pip);
+        let peaks = [("simulated", peak_sim), ("threaded", peak_thr), ("pipelined", peak_pip)];
+        for (name, peak) in peaks {
+            assert!(peak > 0, "{name}: alias-cache bytes must reach the RAM accountant");
+        }
     }
 
     #[test]

@@ -25,11 +25,12 @@
 
 use anyhow::{anyhow, Result};
 
+use crate::config::SamplerKind;
 use crate::corpus::Corpus;
 use crate::model::{DocTopic, DocView, ModelBlock, ShardOwnership};
-use crate::sampler::Params;
+use crate::sampler::{cpu_kernel, KernelOpts, Params};
 
-use super::worker::{SamplerBackend, WorkerState};
+use super::worker::WorkerState;
 
 /// Run one round's tasks on up to `parallelism` OS threads
 /// (`0` ⇒ one thread per worker). `blocks[i]` must be the block leased to
@@ -38,9 +39,12 @@ use super::worker::{SamplerBackend, WorkerState};
 /// `workers[i]`). Returns `(tokens, host_cpu_secs)` per worker, indexed by
 /// position in `workers`.
 ///
-/// Only the `inverted-xy` backend runs here: it is pure CPU-owned state.
-/// The XLA backend's executor is one shared device handle, so the driver
+/// Each thread constructs its own `sampler` kernel (CPU kernels are
+/// stateless, so this is free) — only thread-safe kernels reach this
+/// path, enforced by the `KernelCaps` query in `engine::backend_for`.
+/// The XLA kernel's executor is one shared device handle, so the driver
 /// keeps it on the sequential path.
+#[allow(clippy::too_many_arguments)]
 pub fn run_round_threaded(
     corpus: &Corpus,
     params: &Params,
@@ -50,6 +54,8 @@ pub fn run_round_threaded(
     dt: &mut DocTopic,
     ownership: &ShardOwnership,
     parallelism: usize,
+    sampler: SamplerKind,
+    opts: KernelOpts,
 ) -> Result<Vec<(u64, f64)>> {
     assert_eq!(workers.len(), blocks.len(), "one leased block per worker");
     assert_eq!(ownership.num_shards(), workers.len(), "one ownership shard per worker");
@@ -79,11 +85,11 @@ pub fn run_round_threaded(
         let mut handles = Vec::with_capacity(threads);
         for chunk_items in items.chunks_mut(chunk) {
             handles.push(scope.spawn(move || -> Result<Vec<(usize, u64, f64)>> {
+                let mut kernel = cpu_kernel(sampler, &opts)?;
                 let mut out = Vec::with_capacity(chunk_items.len());
                 for (i, w, b, v) in chunk_items.iter_mut() {
-                    let mut backend = SamplerBackend::InvertedXy;
                     let (tokens, secs) =
-                        w.run_round(corpus, v, &mut **b, params, &mut backend)?;
+                        w.run_round(corpus, v, &mut **b, params, &mut *kernel)?;
                     out.push((*i, tokens, secs));
                 }
                 Ok(out)
@@ -151,11 +157,11 @@ mod tests {
     /// Sequential reference for one round over the same worker/block zip.
     fn run_round_sequential(fx: &mut Fixture) -> Vec<(u64, f64)> {
         let mut docs = DocView::new(&mut fx.assign.z, &mut fx.dt);
+        let mut kernel = cpu_kernel(SamplerKind::InvertedXy, &KernelOpts::default()).unwrap();
         let mut out = Vec::new();
         for (w, b) in fx.workers.iter_mut().zip(fx.blocks.iter_mut()) {
-            let mut backend = SamplerBackend::InvertedXy;
             let (tokens, secs) =
-                w.run_round(&fx.corpus, &mut docs, b, &fx.params, &mut backend).unwrap();
+                w.run_round(&fx.corpus, &mut docs, b, &fx.params, &mut *kernel).unwrap();
             out.push((tokens, secs));
         }
         out
@@ -207,6 +213,8 @@ mod tests {
                     &mut fx.dt,
                     &fx.own,
                     threads,
+                    SamplerKind::InvertedXy,
+                    KernelOpts::default(),
                 )
                 .unwrap();
                 digest(&fx)
@@ -228,6 +236,8 @@ mod tests {
             &mut fx.dt,
             &fx.own,
             2,
+            SamplerKind::InvertedXy,
+            KernelOpts::default(),
         )
         .unwrap();
         assert_eq!(res.len(), 5);

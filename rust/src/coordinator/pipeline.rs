@@ -48,14 +48,15 @@ use std::time::Instant;
 
 use anyhow::{anyhow, Context, Result};
 
+use crate::config::SamplerKind;
 use crate::corpus::Corpus;
 use crate::kvstore::{KvStore, LeaseReceipt};
 use crate::metrics::PipelineStats;
 use crate::model::{DocTopic, DocView, ModelBlock, ShardOwnership};
-use crate::sampler::Params;
+use crate::sampler::{cpu_kernel, KernelOpts, Params};
 
 use super::scheduler::RotationSchedule;
-use super::worker::{SamplerBackend, WorkerState};
+use super::worker::WorkerState;
 
 /// A prefetched block parked in the staging buffer until its round
 /// starts, with the receipt of the (overlapped) transfer that brought it.
@@ -125,6 +126,10 @@ pub struct PipelinedRound {
     pub commit_receipts: Vec<LeaseReceipt>,
     /// Blocks staged for the next round, indexed by consumer worker.
     pub staged: Vec<Option<StagedBlock>>,
+    /// Alias-cache bytes each worker's kernel left on its block, captured
+    /// before the block moved to the flusher (the commit clears the
+    /// cache, so this is the accountant's only view of it).
+    pub alias_bytes: Vec<u64>,
     /// Prefetches skipped by the staging budget this round.
     pub budget_skips: u64,
     /// Wall seconds of the sampling phase (spawn → last sampler done).
@@ -270,6 +275,8 @@ pub fn run_round_pipelined(
     parallelism: usize,
     kv: &KvStore,
     plan: &RoundPlan,
+    sampler: SamplerKind,
+    opts: KernelOpts,
 ) -> Result<PipelinedRound> {
     let n = workers.len();
     assert_eq!(blocks.len(), n, "one leased block per worker");
@@ -281,6 +288,7 @@ pub fn run_round_pipelined(
             per_worker: Vec::new(),
             commit_receipts: Vec::new(),
             staged: Vec::new(),
+            alias_bytes: Vec::new(),
             budget_skips: 0,
             sample_wall_secs: 0.0,
             flush_stall_secs: 0.0,
@@ -303,6 +311,7 @@ pub fn run_round_pipelined(
 
     let (tx, rx) = mpsc::channel::<(usize, ModelBlock)>();
     let mut results = vec![(0u64, 0.0f64); n];
+    let mut alias_bytes = vec![0u64; n];
     let mut sample_wall_secs = 0.0f64;
     let mut flush_stall_secs = 0.0f64;
     let t_round = Instant::now();
@@ -312,19 +321,22 @@ pub fn run_round_pipelined(
         let mut handles = Vec::with_capacity(threads);
         for chunk_items in items.chunks_mut(chunk) {
             let tx = tx.clone();
-            handles.push(scope.spawn(move || -> Result<Vec<(usize, u64, f64)>> {
+            handles.push(scope.spawn(move || -> Result<Vec<(usize, u64, f64, u64)>> {
+                let mut kernel = cpu_kernel(sampler, &opts)?;
                 let mut out = Vec::with_capacity(chunk_items.len());
                 for (i, w, slot, v) in chunk_items.iter_mut() {
                     let mut block = slot.take().expect("block present before sampling");
-                    let mut backend = SamplerBackend::InvertedXy;
                     let (tokens, secs) =
-                        w.run_round(corpus, v, &mut block, params, &mut backend)?;
+                        w.run_round(corpus, v, &mut block, params, &mut *kernel)?;
+                    // Capture kernel cache bytes before the flusher's
+                    // commit clears them.
+                    let ab = block.alias_bytes();
                     // The overlap: hand the dirty block to the flusher so
                     // its commit + next-round staging run while remaining
                     // workers are still sampling.
                     tx.send((*i, block))
                         .map_err(|_| anyhow!("flusher thread exited early"))?;
-                    out.push((*i, tokens, secs));
+                    out.push((*i, tokens, secs, ab));
                 }
                 Ok(out)
             }));
@@ -333,8 +345,9 @@ pub fn run_round_pipelined(
         drop(tx);
         for h in handles {
             let per = h.join().map_err(|_| anyhow!("worker thread panicked"))??;
-            for (i, tokens, secs) in per {
+            for (i, tokens, secs, ab) in per {
                 results[i] = (tokens, secs);
+                alias_bytes[i] = ab;
             }
         }
         sample_wall_secs = t_round.elapsed().as_secs_f64();
@@ -348,6 +361,7 @@ pub fn run_round_pipelined(
         per_worker: results,
         commit_receipts: outcome.commit_receipts,
         staged: outcome.staged,
+        alias_bytes,
         budget_skips: outcome.budget_skips,
         sample_wall_secs,
         flush_stall_secs,
@@ -496,6 +510,8 @@ mod tests {
                 parallelism,
                 &fx.kv,
                 &plan,
+                SamplerKind::InvertedXy,
+                KernelOpts::default(),
             )
             .unwrap();
             tokens += out.per_worker.iter().map(|r| r.0).sum::<u64>();
@@ -517,12 +533,13 @@ mod tests {
         for round in 0..rounds {
             let mut docs = DocView::new(&mut fx.assign.z, &mut fx.dt);
             let mut held = Vec::new();
+            let mut kernel =
+                cpu_kernel(SamplerKind::InvertedXy, &KernelOpts::default()).unwrap();
             for w in fx.workers.iter_mut() {
                 let b = fx.schedule.block_for(w.id, round);
                 let mut blk = fx.kv.lease_block(b, w.machine).unwrap();
-                let mut backend = SamplerBackend::InvertedXy;
                 let (n, _) =
-                    w.run_round(&fx.corpus, &mut docs, &mut blk, &fx.params, &mut backend).unwrap();
+                    w.run_round(&fx.corpus, &mut docs, &mut blk, &fx.params, &mut *kernel).unwrap();
                 tokens += n;
                 held.push(blk);
             }
@@ -631,6 +648,8 @@ mod tests {
                 0,
                 &fx.kv,
                 &plan,
+                SamplerKind::InvertedXy,
+                KernelOpts::default(),
             )
             .unwrap();
             PipelineEngine::record_round(&mut stats, &astats, &out);

@@ -11,6 +11,14 @@
 //!   commit new model blocks to kv-store
 //! ```
 //!
+//! The compute inside a round is a [`Kernel`] — any of the five sampler
+//! kernels, driven through the uniform `extend_scratch` →
+//! `prepare_block` → `sample_block` → `finish_block` lifecycle. The
+//! worker knows nothing about which kernel it runs (the per-kernel match
+//! arms that used to live here are gone); the execution backends pick the
+//! kernel from the config via `sampler::cpu_kernel`, and which backends a
+//! kernel may ride is a [`crate::sampler::KernelCaps`] capability query.
+//!
 //! The worker's private state — doc–topic counts are shared-by-disjointness
 //! (each document belongs to exactly one worker), the `C_k` snapshot is
 //! private and lazily synced (§3.3), and the RNG is a per-worker stream so
@@ -21,19 +29,8 @@ use anyhow::Result;
 
 use crate::corpus::{Corpus, InvertedIndex};
 use crate::model::{DocView, ModelBlock, TopicCounts};
-use crate::sampler::xla_dense::MicrobatchExecutor;
-use crate::sampler::{inverted_xy, xla_dense, Params, Scratch};
+use crate::sampler::{Kernel, Params, Scratch};
 use crate::util::rng::Pcg64;
-
-/// Which sampler compute path the worker uses inside a round. (Not to be
-/// confused with [`crate::engine::Backend`], the *execution* backend that
-/// decides where and how a round's tasks run on the host.)
-pub enum SamplerBackend<'a> {
-    /// The paper's sparse X+Y sampler (rust, §4.2).
-    InvertedXy,
-    /// Dense microbatch sampling on an AOT-compiled XLA executable.
-    Xla(&'a mut dyn MicrobatchExecutor),
-}
 
 /// Per-worker persistent state.
 pub struct WorkerState {
@@ -47,7 +44,9 @@ pub struct WorkerState {
     pub index: InvertedIndex,
     /// Private RNG stream.
     pub rng: Pcg64,
-    /// Dense scratch (allocation-free sampling).
+    /// Dense scratch — allocated once here and reused across every round
+    /// and iteration (the sampling path is allocation-free; see
+    /// `rust/tests/scratch_lifecycle.rs`).
     pub scratch: Scratch,
     /// Local `C_k` snapshot (drifts within a round — §3.3).
     pub ck: TopicCounts,
@@ -96,8 +95,11 @@ impl WorkerState {
         delta
     }
 
-    /// Run one round over the leased block: sample every token of the
-    /// shard whose word lies in the block. Returns (tokens, host-seconds).
+    /// Run one round over the leased block: drive `kernel` through its
+    /// lifecycle to sample every token of the shard whose word lies in
+    /// the block. Returns (tokens, host-seconds) — the measured time
+    /// includes `prepare_block` (e.g. alias-table construction is real
+    /// lease-time work).
     ///
     /// `docs` is a view of the global per-document state; this worker only
     /// touches its own shard's rows (its inverted index covers nothing
@@ -110,31 +112,22 @@ impl WorkerState {
         docs: &mut DocView<'_>,
         block: &mut ModelBlock,
         params: &Params,
-        backend: &mut SamplerBackend<'_>,
+        kernel: &mut dyn Kernel,
     ) -> Result<(u64, f64)> {
+        kernel.extend_scratch(&mut self.scratch, params);
         let t0 = crate::util::cputime::CpuTimer::start();
-        let tokens = match backend {
-            SamplerBackend::InvertedXy => inverted_xy::sample_block(
-                corpus,
-                docs,
-                &self.index,
-                block,
-                &mut self.ck,
-                params,
-                &mut self.scratch,
-                &mut self.rng,
-            ),
-            SamplerBackend::Xla(exec) => xla_dense::sample_block_microbatch(
-                corpus,
-                docs,
-                &self.index,
-                block,
-                &mut self.ck,
-                params,
-                *exec,
-                &mut self.rng,
-            )?,
-        };
+        kernel.prepare_block(&self.index, block, &self.ck, params, &mut self.scratch)?;
+        let tokens = kernel.sample_block(
+            corpus,
+            docs,
+            &self.index,
+            block,
+            &mut self.ck,
+            params,
+            &mut self.scratch,
+            &mut self.rng,
+        )?;
+        kernel.finish_block(block, &mut self.scratch)?;
         self.tokens_sampled += tokens;
         Ok((tokens, t0.elapsed()))
     }
@@ -155,6 +148,8 @@ mod tests {
     use crate::corpus::partition::DataPartition;
     use crate::corpus::synthetic::{generate, GenSpec};
     use crate::model::{Assignments, BlockMap, DocTopic};
+    use crate::sampler::inverted_xy::InvertedXy;
+    use crate::sampler::mh_alias::MhAlias;
 
     fn setup() -> (Corpus, Assignments, DocTopic, Vec<ModelBlock>, TopicCounts, Params) {
         let corpus = generate(&GenSpec {
@@ -195,11 +190,28 @@ mod tests {
             .sum();
         let mut docs = DocView::new(&mut assign.z, &mut dt);
         let (n, secs) = w
-            .run_round(&corpus, &mut docs, block, &params, &mut SamplerBackend::InvertedXy)
+            .run_round(&corpus, &mut docs, block, &params, &mut InvertedXy)
             .unwrap();
         assert_eq!(n as usize, expect);
         assert!(secs >= 0.0);
         assert_eq!(w.tokens_sampled, n);
+    }
+
+    #[test]
+    fn round_drives_any_kernel_through_the_lifecycle() {
+        // Same round, MH kernel: the lease-time prepare hook must have
+        // built alias tables on the block, and every block token samples.
+        let (corpus, mut assign, mut dt, mut blocks, ck, params) = setup();
+        let part = DataPartition::balanced(&corpus, 1);
+        let mut w = WorkerState::new(0, 0, part.shards[0].clone(), &corpus, 8, 7);
+        w.install_totals(ck);
+        let mut kernel = MhAlias::new(0);
+        let mut docs = DocView::new(&mut assign.z, &mut dt);
+        let (n, _) = w
+            .run_round(&corpus, &mut docs, &mut blocks[0], &params, &mut kernel)
+            .unwrap();
+        assert!(n > 0);
+        assert!(blocks[0].alias_bytes() > 0, "prepare_block must cache proposal tables");
     }
 
     #[test]
@@ -210,7 +222,7 @@ mod tests {
         let before = ck.clone();
         w.install_totals(ck);
         let mut docs = DocView::new(&mut assign.z, &mut dt);
-        w.run_round(&corpus, &mut docs, &mut blocks[0], &params, &mut SamplerBackend::InvertedXy)
+        w.run_round(&corpus, &mut docs, &mut blocks[0], &params, &mut InvertedXy)
             .unwrap();
         let delta = w.extract_totals_delta();
         // Delta sums to zero (tokens moved, not created).

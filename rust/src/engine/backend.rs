@@ -36,13 +36,13 @@ use crate::config::{Config, ExecutionMode, PipelineMode, SamplerKind};
 use crate::coordinator::parallel;
 use crate::coordinator::pipeline::{self, PipelineEngine, RoundPlan};
 use crate::coordinator::scheduler::RotationSchedule;
-use crate::coordinator::worker::{SamplerBackend, WorkerState};
+use crate::coordinator::worker::WorkerState;
 use crate::corpus::Corpus;
 use crate::kvstore::{traffic::TransferKind, KvStore};
 use crate::metrics::PipelineStats;
 use crate::model::{DocTopic, DocView, ModelBlock, ShardOwnership};
-use crate::sampler::xla_dense::MicrobatchExecutor;
-use crate::sampler::Params;
+use crate::sampler::xla_dense::{MicrobatchExecutor, XlaKernel};
+use crate::sampler::{caps_of, cpu_kernel, Kernel, KernelOpts, Params};
 
 /// Everything a backend may touch while executing one round. The driver
 /// retains the round protocol (totals sync, Δ, clocks); the context is
@@ -76,6 +76,8 @@ pub struct RoundCtx<'a> {
     pub pstats: &'a mut PipelineStats,
     /// Which sampler kernel workers run.
     pub sampler: SamplerKind,
+    /// Kernel construction options (alias-cache budget etc.).
+    pub kernel_opts: KernelOpts,
     /// OS threads for the threaded paths (0 ⇒ one per worker).
     pub parallelism: usize,
     /// The shared XLA executor, when `sampler = "xla"`.
@@ -115,24 +117,25 @@ pub trait Backend {
 
 /// Select the execution backend for a **finalized** config, validating
 /// the sampler × execution combination up front — an invalid pair fails
-/// at build time, never mid-training.
+/// at build time, never mid-training. The legality of a combination is a
+/// [`crate::sampler::KernelCaps`] capability query, not a per-kind
+/// table: a new kernel that registers truthful caps rides every legal
+/// path with no changes here.
 pub fn backend_for(cfg: &Config) -> Result<Box<dyn Backend>> {
-    match cfg.train.sampler {
-        SamplerKind::InvertedXy | SamplerKind::Xla => {}
-        other => bail!(
-            "the model-parallel driver runs inverted-xy or xla backends; {} is the \
+    let caps = caps_of(cfg.train.sampler);
+    if caps.data_parallel_baseline {
+        bail!(
+            "the model-parallel driver runs block-rotation kernels; {} is the \
              data-parallel baseline's sampler (see baseline::yahoo)",
-            other.name()
-        ),
+            caps.name
+        );
     }
     let pipelined = cfg.coord.pipeline == PipelineMode::DoubleBuffer;
-    if (cfg.coord.execution == ExecutionMode::Threaded || pipelined)
-        && cfg.train.sampler != SamplerKind::InvertedXy
-    {
+    if (cfg.coord.execution == ExecutionMode::Threaded || pipelined) && !caps.thread_safe {
         bail!(
-            "threaded/pipelined execution supports the inverted-xy sampler; {} runs in \
-             simulated mode (the XLA executor is a single shared device handle)",
-            cfg.train.sampler.name()
+            "threaded/pipelined execution requires a thread-safe sampler kernel; {} runs \
+             in simulated mode (its executor is a single shared device handle)",
+            caps.name
         );
     }
     Ok(if pipelined {
@@ -175,6 +178,11 @@ fn commit_blocks_sync(ctx: &mut RoundCtx<'_>, leased: Vec<ModelBlock>) -> Result
     let mut merge_bytes_per_worker = 0u64;
     for (w, blk) in ctx.workers.iter_mut().zip(leased) {
         ctx.mem.release(w.machine, MemCategory::Model, blk.bytes());
+        // The commit clears the block's kernel cache; release its bytes.
+        let alias = blk.alias_bytes();
+        if alias > 0 {
+            ctx.mem.release(w.machine, MemCategory::AliasCache, alias);
+        }
         ctx.kv.commit_block(blk, w.machine)?;
         let before = ctx.kv.total_bytes();
         let delta = w.extract_totals_delta();
@@ -213,28 +221,51 @@ impl Backend for SimulatedBackend {
         let mut host_secs = Vec::with_capacity(ctx.workers.len());
         {
             let RoundCtx { workers, z, dt, exec, .. } = ctx;
+            // One kernel instance serves the whole sequential round: a CPU
+            // kernel from the factory, or the XLA kernel wrapping the
+            // process's shared device executor.
+            let mut cpu;
+            let mut xla;
+            let kernel: &mut dyn Kernel = match ctx.sampler {
+                SamplerKind::Xla => {
+                    let exec = exec
+                        .as_mut()
+                        .map(|e| &mut **e)
+                        .context("xla sampler selected but no executor installed")?;
+                    xla = XlaKernel::new(exec);
+                    &mut xla
+                }
+                kind => {
+                    cpu = cpu_kernel(kind, &ctx.kernel_opts)?;
+                    &mut *cpu
+                }
+            };
             let mut docs = DocView::new(z, dt);
             for (w, blk) in workers.iter_mut().zip(leased.iter_mut()) {
-                let mut backend = match ctx.sampler {
-                    SamplerKind::InvertedXy => SamplerBackend::InvertedXy,
-                    SamplerKind::Xla => {
-                        let exec = exec
-                            .as_mut()
-                            .map(|e| &mut **e)
-                            .context("xla sampler selected but no executor installed")?;
-                        SamplerBackend::Xla(exec)
-                    }
-                    _ => unreachable!("backend_for rejects baseline samplers"),
-                };
-                let (n, secs) = w.run_round(ctx.corpus, &mut docs, blk, ctx.params, &mut backend)?;
+                let (n, secs) = w.run_round(ctx.corpus, &mut docs, blk, ctx.params, kernel)?;
                 tokens += n;
                 host_secs.push(secs);
             }
         }
         ctx.pstats.sample_secs += t_compute.elapsed().as_secs_f64();
+        charge_alias_caches(ctx, &leased)?;
         let t_commit = commit_blocks_sync(ctx, leased)?;
         Ok(RoundOutcome { tokens, host_secs, fetch_times, t_commit })
     }
+}
+
+/// Charge the kernel caches the round left on its blocks (e.g. mh-alias
+/// proposal tables) to the RAM accountant. Matched by a release in
+/// [`commit_blocks_sync`] when the commit clears them, so the accountant's
+/// per-node peak sees the cache resident alongside the block it serves.
+fn charge_alias_caches(ctx: &mut RoundCtx<'_>, leased: &[ModelBlock]) -> Result<()> {
+    for (w, blk) in ctx.workers.iter().zip(leased) {
+        let bytes = blk.alias_bytes();
+        if bytes > 0 {
+            ctx.mem.charge(w.machine, MemCategory::AliasCache, bytes)?;
+        }
+    }
+    Ok(())
 }
 
 /// Real OS-thread execution of a round's disjoint tasks
@@ -261,6 +292,8 @@ impl Backend for ThreadedBackend {
                 dt,
                 ctx.doc_ownership,
                 ctx.parallelism,
+                ctx.sampler,
+                ctx.kernel_opts,
             )?
         };
         let mut tokens = 0u64;
@@ -270,6 +303,7 @@ impl Backend for ThreadedBackend {
             host_secs.push(secs);
         }
         ctx.pstats.sample_secs += t_compute.elapsed().as_secs_f64();
+        charge_alias_caches(ctx, &leased)?;
         let t_commit = commit_blocks_sync(ctx, leased)?;
         Ok(RoundOutcome { tokens, host_secs, fetch_times, t_commit })
     }
@@ -338,6 +372,8 @@ impl Backend for PipelinedBackend {
                 ctx.parallelism,
                 ctx.kv,
                 &plan,
+                ctx.sampler,
+                ctx.kernel_opts,
             )?
         };
         let mut tokens = 0u64;
@@ -348,9 +384,17 @@ impl Backend for PipelinedBackend {
         }
         PipelineEngine::record_round(ctx.pstats, &acquire, &out);
         // During the round each consumer machine really held its active
-        // (Model) block *and* the staging buffer the flusher refilled —
-        // charge Staging before releasing Model so the accountant's peak
-        // (and `enforce_ram`) sees the double-buffering overlap.
+        // (Model) block, that block's kernel caches (mh-alias proposal
+        // tables, captured per worker before the flusher's commit cleared
+        // them), *and* the staging buffer the flusher refilled — charge
+        // the caches and Staging before releasing Model and the caches,
+        // so the accountant's peak (and `enforce_ram`) sees the full
+        // double-buffering overlap.
+        for (w, &bytes) in out.alias_bytes.iter().enumerate() {
+            if bytes > 0 {
+                ctx.mem.charge(machines[w], MemCategory::AliasCache, bytes)?;
+            }
+        }
         for (w, s) in out.staged.iter().enumerate() {
             if let Some(s) = s {
                 ctx.mem.charge(machines[w], MemCategory::Staging, s.block.bytes())?;
@@ -358,6 +402,11 @@ impl Backend for PipelinedBackend {
         }
         for (w, bytes) in model_bytes.into_iter().enumerate() {
             ctx.mem.release(machines[w], MemCategory::Model, bytes);
+        }
+        for (w, &bytes) in out.alias_bytes.iter().enumerate() {
+            if bytes > 0 {
+                ctx.mem.release(machines[w], MemCategory::AliasCache, bytes);
+            }
         }
         // C_k merges: reduce half of the allreduce, worker order. Timed as
         // flush stall so the off baseline stays directly comparable.

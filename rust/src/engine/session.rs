@@ -240,9 +240,10 @@ impl SessionBuilder {
         self
     }
 
-    /// Sampler kernel (selects the system: `inverted-xy`/`xla` → the
-    /// model-parallel driver, `sparse-yao`/`dense` → the data-parallel
-    /// baseline).
+    /// Sampler kernel (selects the system: `inverted-xy`/`mh-alias`/`xla`
+    /// → the model-parallel driver, `sparse-yao`/`dense` → the
+    /// data-parallel baseline; a `sampler::KernelCaps` query, see
+    /// [`crate::sampler::caps_of`]).
     pub fn sampler(mut self, sampler: SamplerKind) -> Self {
         self.cfg.train.sampler = sampler;
         self
@@ -319,7 +320,9 @@ impl SessionBuilder {
         }
         cfg.finalize().context("validating session config")?;
 
-        let baseline = matches!(cfg.train.sampler, SamplerKind::SparseYao | SamplerKind::Dense);
+        // Which system the sampler kind selects is a kernel capability
+        // query (`sampler::KernelCaps`), not a hand-maintained kind list.
+        let baseline = crate::sampler::caps_of(cfg.train.sampler).data_parallel_baseline;
         if baseline {
             if Execution::from_coord(&cfg.coord) != Execution::Simulated {
                 bail!(
@@ -692,6 +695,23 @@ mod tests {
         assert!(summary.final_loglik.is_finite());
         assert_eq!(summary.mean_delta, 0.0);
         s.check_consistency().unwrap();
+    }
+
+    #[test]
+    fn mh_alias_trains_through_the_facade_on_every_execution() {
+        // Thread-safety is a kernel capability, so the new kernel rides
+        // the threaded and pipelined paths with no session-layer changes.
+        let mut s = tiny().sampler(SamplerKind::MhAlias).build().unwrap();
+        let summary = s.train().unwrap();
+        assert!(summary.final_loglik.is_finite());
+        s.check_consistency().unwrap();
+        let mut p = tiny()
+            .sampler(SamplerKind::MhAlias)
+            .execution(Execution::Pipelined { parallelism: 2, staging_budget_mib: 0.0 })
+            .build()
+            .unwrap();
+        p.train().unwrap();
+        p.check_consistency().unwrap();
     }
 
     #[test]

@@ -1,16 +1,15 @@
 //! Shared experiment plumbing over the [`crate::engine::Session`] facade:
-//! scaled-size helpers, convergence thresholds, and the deprecated
-//! pre-facade training entry points.
+//! scaled-size helpers and convergence thresholds.
 //!
-//! The unified runner that used to live here (`run_training`) is now
-//! [`crate::engine::Session`]; the figure drivers go through
-//! [`train_summary_on`], a thin crate-internal wrapper that adds the
-//! experiment log lines. The old free functions remain for one PR as
-//! deprecated shims (see DESIGN.md §Public-API for the old→new table).
+//! The unified runner that used to live here (`run_training`, deprecated
+//! in the ISSUE 3 facade migration and removed now that every caller goes
+//! through the builder) is [`crate::engine::Session`]; the figure drivers
+//! go through [`train_summary_on`], a thin crate-internal wrapper that
+//! adds the experiment log lines.
 
 use anyhow::{bail, Result};
 
-use crate::config::{Config, SamplerKind};
+use crate::config::Config;
 use crate::corpus::Corpus;
 use crate::engine::SessionBuilder;
 
@@ -18,28 +17,10 @@ use crate::engine::SessionBuilder;
 /// exported under its historical experiment-side name.
 pub use crate::engine::TrainSummary as RunSummary;
 
-/// Train per `cfg` and return the unified summary.
-#[deprecated(
-    since = "0.2.0",
-    note = "build a session instead: `SessionBuilder::from_config(cfg).build()?.train()`"
-)]
-pub fn run_training(cfg: &Config) -> Result<RunSummary> {
-    train_summary(cfg)
-}
-
-/// Same, over a pre-built corpus (experiments reuse corpora).
-#[deprecated(
-    since = "0.2.0",
-    note = "build a session instead: `SessionBuilder::from_config(cfg).corpus(corpus).build()?.train()`"
-)]
-pub fn run_training_on(cfg: &Config, corpus: Corpus) -> Result<RunSummary> {
-    train_summary_on(cfg, corpus)
-}
-
 /// Crate-internal unified runner for the figure drivers: a `Session`
 /// built from `cfg`, trained with the standard experiment log lines.
 ///
-/// * `inverted-xy` / `xla` → the model-parallel driver;
+/// * `inverted-xy` / `mh-alias` / `xla` → the model-parallel driver;
 /// * `sparse-yao` / `dense` → the data-parallel Yahoo!LDA baseline
 ///   (dense is coerced to sparse-yao — the baseline's sampler is eq. 2).
 pub(crate) fn train_summary(cfg: &Config) -> Result<RunSummary> {
@@ -49,7 +30,7 @@ pub(crate) fn train_summary(cfg: &Config) -> Result<RunSummary> {
 
 /// See [`train_summary`]; takes a pre-built corpus.
 pub(crate) fn train_summary_on(cfg: &Config, corpus: Corpus) -> Result<RunSummary> {
-    let baseline = matches!(cfg.train.sampler, SamplerKind::SparseYao | SamplerKind::Dense);
+    let baseline = crate::sampler::caps_of(cfg.train.sampler).data_parallel_baseline;
     let mut session = SessionBuilder::from_config(cfg.clone()).corpus(corpus).build()?;
     session.train_observed(|ev| {
         if let Some(ll) = ev.loglik {
@@ -152,13 +133,6 @@ mod tests {
         assert!(mp.total_tokens > 0 && dp.total_tokens > 0);
         assert_eq!(mp.ll_series.len(), 4); // init + 3 iters
         assert!(mp.mean_delta >= 0.0);
-    }
-
-    #[test]
-    fn deprecated_shims_still_run() {
-        #[allow(deprecated)]
-        let summary = run_training(&quick_cfg("inverted-xy")).unwrap();
-        assert!(summary.final_loglik.is_finite());
     }
 
     #[test]

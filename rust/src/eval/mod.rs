@@ -12,6 +12,4 @@ pub mod fig4a;
 pub mod fig4b;
 pub mod ablations;
 
-#[allow(deprecated)]
-pub use common::run_training;
 pub use common::RunSummary;

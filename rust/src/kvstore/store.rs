@@ -184,11 +184,17 @@ impl KvStore {
     }
 
     /// [`KvStore::commit_block`] returning the transfer's [`LeaseReceipt`].
+    ///
+    /// Committing **invalidates the block's alias-table cache**: the rows
+    /// just changed, so the next lease (including the pipelined engine's
+    /// immediate re-lease into staging) must rebuild its proposal tables
+    /// from fresh counts.
     pub fn commit_block_with_receipt(
         &self,
-        block: ModelBlock,
+        mut block: ModelBlock,
         worker_machine: usize,
     ) -> Result<LeaseReceipt> {
+        block.alias.clear();
         let id = block.id;
         let bytes = wire::encode_block(&block).len() as u64;
         {
@@ -432,6 +438,22 @@ mod tests {
         assert_eq!(kv.resident_block_bytes(0), None);
         kv.commit_block(b, 0).unwrap();
         assert_eq!(kv.resident_block_bytes(0), Some(before));
+    }
+
+    #[test]
+    fn commit_invalidates_alias_cache() {
+        // Proposal tables are lease-scoped: whatever the holder cached on
+        // the block must be gone by the next lease (the rows changed), so
+        // staged/prefetched blocks always carry fresh tables.
+        let kv = setup(2, 2);
+        let mut b = kv.lease_block(0, 0).unwrap();
+        b.alias.ensure(b.rows.len(), 0).build(0, &b.rows[0], &mut Vec::new());
+        assert!(b.alias_bytes() > 0);
+        kv.commit_block(b, 0).unwrap();
+        let b2 = kv.lease_block(0, 0).unwrap();
+        assert_eq!(b2.alias_bytes(), 0, "commit must clear the alias cache");
+        kv.commit_block(b2, 0).unwrap();
+        kv.check_quiescent_consistency(8).unwrap();
     }
 
     #[test]

@@ -24,7 +24,12 @@
 //!   (`coord.pipeline = "double_buffer"`) that double-buffers model
 //!   blocks per worker — KV-store commits and next-round prefetch staging
 //!   overlap with sampling, hiding transfer latency while preserving the
-//!   bitwise-identical trajectory (DESIGN.md §Pipelining), and
+//!   bitwise-identical trajectory (DESIGN.md §Pipelining),
+//! * a unified **[`sampler::Kernel`] layer** — all five sampler kernels
+//!   (dense oracle, SparseLDA, X+Y, LightLDA-style **amortized-O(1)
+//!   `mh-alias`** with per-block proposal-table caches, XLA microbatch)
+//!   behind one trait with capability-queried execution legality
+//!   (DESIGN.md §Samplers), and
 //! * an **XLA/PJRT execution backend** whose compute kernel is authored in
 //!   JAX/Pallas and AOT-lowered to HLO text at build time (`make artifacts`);
 //!   Python never runs on the sampling path.

@@ -1,0 +1,293 @@
+//! Per-word alias tables for the Metropolis–Hastings sampler
+//! (`sampler::mh_alias`), cached on the [`crate::model::ModelBlock`]
+//! they serve.
+//!
+//! LightLDA's observation (Yuan et al., 2015 — see PAPERS.md) is that the
+//! word-side factor of eq. 1 can be turned into an **O(1) proposal**: build
+//! a Walker alias table over `q_w(k) ∝ C_t^k + β` once per word, draw from
+//! it in constant time, and let a Metropolis–Hastings acceptance step
+//! correct for both the missing doc/totals factors *and* the table going
+//! stale as sampling mutates the row. Staleness is therefore a **quality
+//! knob, not a correctness risk**: the acceptance ratio divides by the
+//! exact pmf that was drawn from (the stale one, recorded in
+//! [`WordAlias::weight`]), so the chain's stationary distribution is the
+//! exact eq. 1 conditional no matter how old the table is.
+//!
+//! ## Cache lifecycle
+//!
+//! ```text
+//! lease ──► prepare_block builds tables lazily (shard ∩ block words only)
+//!   │            │  bytes capped by `train.alias_budget_mib` per block
+//!   │            ▼
+//!   │       sample_block draws O(1) word proposals from the cache
+//!   ▼
+//! commit ──► KvStore clears the slot — staged/re-leased blocks start fresh
+//! ```
+//!
+//! The slot is deliberately **transparent to block identity**: it never
+//! serializes ([`crate::model::wire`] ignores it), never participates in
+//! equality or digests, and a clone starts empty. That is what keeps the
+//! pipelined prefetch engine's staged blocks bitwise-interchangeable with
+//! synchronously fetched ones.
+
+use crate::util::rng::{AliasTable, Pcg64};
+
+use super::word_topic::SparseRow;
+
+/// One word's proposal table: `q_w(k) ∝ ct_stale[k] + β`, drawn in O(1)
+/// by splitting the mass into the row's count part (alias table over the
+/// non-zero support) and the `βK` smoothing part (uniform topic).
+#[derive(Debug, Clone)]
+pub struct WordAlias {
+    /// `(topic, count)` support of the row **at build time** (ascending by
+    /// topic — the stale snapshot the proposal pmf is defined over).
+    entries: Vec<(u32, u32)>,
+    /// Walker table over `entries` weighted by count (`None` ⇔ empty row).
+    table: Option<AliasTable>,
+    /// Σ stale counts.
+    row_total: u64,
+}
+
+impl WordAlias {
+    /// Snapshot `row` and build its Walker table. `weights` is a reusable
+    /// scratch buffer (no steady-state allocation beyond the table itself).
+    pub fn build(row: &SparseRow, weights: &mut Vec<f64>) -> WordAlias {
+        let entries: Vec<(u32, u32)> = row.iter().collect();
+        let row_total: u64 = entries.iter().map(|&(_, c)| c as u64).sum();
+        let table = if entries.is_empty() {
+            None
+        } else {
+            weights.clear();
+            weights.extend(entries.iter().map(|&(_, c)| c as f64));
+            Some(AliasTable::new(weights))
+        };
+        WordAlias { entries, table, row_total }
+    }
+
+    /// Draw a topic from `q_w(k) ∝ ct_stale[k] + β` over `num_topics`
+    /// topics. O(1): one branch draw, then either an alias draw over the
+    /// non-zero support or a uniform topic.
+    #[inline]
+    pub fn draw(&self, num_topics: usize, beta: f64, rng: &mut Pcg64) -> u32 {
+        let count_mass = self.row_total as f64;
+        let total = count_mass + beta * num_topics as f64;
+        let u = rng.next_f64() * total;
+        if u < count_mass {
+            // row_total > 0 here, so the table exists.
+            let table = self.table.as_ref().expect("non-empty row has a table");
+            self.entries[table.sample(rng)].0
+        } else {
+            rng.index(num_topics) as u32
+        }
+    }
+
+    /// Unnormalized proposal weight `q_w(k) ∝ ct_stale[k] + β` — the exact
+    /// pmf [`WordAlias::draw`] samples from, which the MH acceptance ratio
+    /// divides by (this is the stale-count tolerance: the correction uses
+    /// the snapshot, not the live row).
+    #[inline]
+    pub fn weight(&self, topic: u32, beta: f64) -> f64 {
+        let c = match self.entries.binary_search_by_key(&topic, |&(k, _)| k) {
+            Ok(i) => self.entries[i].1,
+            Err(_) => 0,
+        };
+        c as f64 + beta
+    }
+
+    /// Approximate heap bytes: support entries (8 B) plus the Walker
+    /// table's probability/alias arrays (8 + 4 B per entry).
+    pub fn bytes(&self) -> u64 {
+        let per_entry = if self.table.is_some() { 8 + 8 + 4 } else { 8 };
+        (self.entries.len() * per_entry + 48) as u64
+    }
+}
+
+/// All of one block's cached word tables, under a byte budget. Indexed by
+/// the block's row index (`(word - lo) / stride`).
+#[derive(Debug, Clone)]
+pub struct AliasCache {
+    tables: Vec<Option<Box<WordAlias>>>,
+    bytes: u64,
+    budget: u64,
+    skipped: u64,
+}
+
+impl AliasCache {
+    /// An empty cache for a block with `rows` word rows and a byte budget
+    /// (`0` = unlimited).
+    pub fn new(rows: usize, budget: u64) -> AliasCache {
+        AliasCache { tables: vec![None; rows], bytes: 0, budget, skipped: 0 }
+    }
+
+    /// The cached table for row `idx`, if one was built and fit the budget.
+    #[inline]
+    pub fn get(&self, idx: usize) -> Option<&WordAlias> {
+        self.tables[idx].as_deref()
+    }
+
+    /// Build (or keep) row `idx`'s table. Returns `false` when the byte
+    /// budget rejected it — the kernel then falls back to a uniform word
+    /// proposal for that word, degrading mixing, never correctness.
+    pub fn build(&mut self, idx: usize, row: &SparseRow, weights: &mut Vec<f64>) -> bool {
+        if self.tables[idx].is_some() {
+            return true;
+        }
+        let table = WordAlias::build(row, weights);
+        let add = table.bytes();
+        if self.budget != 0 && self.bytes + add > self.budget {
+            self.skipped += 1;
+            return false;
+        }
+        self.bytes += add;
+        self.tables[idx] = Some(Box::new(table));
+        true
+    }
+
+    /// Heap bytes of every cached table (what the driver charges to
+    /// [`crate::cluster::MemCategory::AliasCache`]).
+    pub fn bytes(&self) -> u64 {
+        self.bytes
+    }
+
+    /// Tables rejected by the budget since construction.
+    pub fn skipped(&self) -> u64 {
+        self.skipped
+    }
+}
+
+/// The alias-cache slot a [`crate::model::ModelBlock`] carries. Transparent
+/// to block identity: clones start empty, equality always holds, and the
+/// KV-store clears the slot on commit so every lease starts fresh.
+#[derive(Debug, Default)]
+pub struct AliasSlot(Option<Box<AliasCache>>);
+
+impl AliasSlot {
+    /// The cache, creating an empty one sized for `rows` rows on first use.
+    /// An existing cache keeps its budget (it was created this lease).
+    pub fn ensure(&mut self, rows: usize, budget: u64) -> &mut AliasCache {
+        self.0.get_or_insert_with(|| Box::new(AliasCache::new(rows, budget)))
+    }
+
+    /// The cache, if any tables were built this lease.
+    #[inline]
+    pub fn get(&self) -> Option<&AliasCache> {
+        self.0.as_deref()
+    }
+
+    /// Drop every cached table (commit-time invalidation).
+    pub fn clear(&mut self) {
+        self.0 = None;
+    }
+
+    /// Cached bytes (0 when empty).
+    pub fn bytes(&self) -> u64 {
+        self.0.as_ref().map_or(0, |c| c.bytes())
+    }
+}
+
+/// Caches are lease-scoped: a cloned block (tests, benches, wire decode)
+/// starts with an empty slot, exactly like a freshly leased one.
+impl Clone for AliasSlot {
+    fn clone(&self) -> AliasSlot {
+        AliasSlot(None)
+    }
+}
+
+/// The slot never participates in block identity — two blocks with equal
+/// rows are equal whatever either one has cached.
+impl PartialEq for AliasSlot {
+    fn eq(&self, _: &AliasSlot) -> bool {
+        true
+    }
+}
+
+impl Eq for AliasSlot {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn row(entries: &[(u32, u32)]) -> SparseRow {
+        SparseRow::from_entries(entries.to_vec())
+    }
+
+    #[test]
+    fn draw_matches_proposal_distribution() {
+        // Empirical draw frequencies must match q(k) ∝ ct[k] + β.
+        let r = row(&[(1, 6), (4, 2)]);
+        let mut weights = Vec::new();
+        let a = WordAlias::build(&r, &mut weights);
+        let k = 8;
+        let beta = 0.25;
+        let mut rng = Pcg64::new(11);
+        let n = 200_000;
+        let mut counts = vec![0u64; k];
+        for _ in 0..n {
+            counts[a.draw(k, beta, &mut rng) as usize] += 1;
+        }
+        let total: f64 = (0..k as u32).map(|t| a.weight(t, beta)).sum();
+        for t in 0..k {
+            let expect = a.weight(t as u32, beta) / total;
+            let got = counts[t] as f64 / n as f64;
+            assert!(
+                (got - expect).abs() < 0.01,
+                "topic {t}: got {got:.4} expect {expect:.4}"
+            );
+        }
+    }
+
+    #[test]
+    fn empty_row_draws_uniform() {
+        let a = WordAlias::build(&row(&[]), &mut Vec::new());
+        let mut rng = Pcg64::new(3);
+        let mut seen = [false; 4];
+        for _ in 0..1_000 {
+            seen[a.draw(4, 0.1, &mut rng) as usize] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+        assert_eq!(a.weight(2, 0.1), 0.1);
+    }
+
+    #[test]
+    fn weight_reads_stale_snapshot() {
+        // The table keeps the build-time counts even after the row moves on.
+        let mut r = row(&[(2, 5)]);
+        let a = WordAlias::build(&r, &mut Vec::new());
+        r.inc(2);
+        r.inc(3);
+        assert_eq!(a.weight(2, 0.0), 5.0, "weight must be the stale count");
+        assert_eq!(a.weight(3, 0.0), 0.0);
+    }
+
+    #[test]
+    fn cache_budget_rejects_and_counts() {
+        let r = row(&[(0, 1), (1, 2), (2, 3)]);
+        let mut weights = Vec::new();
+        let mut unlimited = AliasCache::new(4, 0);
+        assert!(unlimited.build(0, &r, &mut weights));
+        assert!(unlimited.bytes() > 0);
+        // A 1-byte budget rejects everything.
+        let mut capped = AliasCache::new(4, 1);
+        assert!(!capped.build(0, &r, &mut weights));
+        assert_eq!(capped.bytes(), 0);
+        assert_eq!(capped.skipped(), 1);
+        assert!(capped.get(0).is_none());
+        // Rebuild of a cached row is a no-op hit.
+        assert!(unlimited.build(0, &r, &mut weights));
+        assert_eq!(unlimited.skipped(), 0);
+    }
+
+    #[test]
+    fn slot_is_identity_transparent() {
+        let mut a = AliasSlot::default();
+        let b = AliasSlot::default();
+        a.ensure(2, 0).build(0, &row(&[(1, 3)]), &mut Vec::new());
+        assert!(a.bytes() > 0);
+        assert_eq!(a, b, "cache contents must not affect equality");
+        let c = a.clone();
+        assert_eq!(c.bytes(), 0, "clones start with an empty cache");
+        a.clear();
+        assert_eq!(a.bytes(), 0);
+        assert!(a.get().is_none());
+    }
+}

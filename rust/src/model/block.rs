@@ -13,6 +13,7 @@
 //! (`lo + i·stride`); exactly one holder may mutate it at any time, which
 //! the KV-store lease protocol enforces.
 
+use super::alias::AliasSlot;
 use super::word_topic::SparseRow;
 
 /// The static map from word ids to block ids.
@@ -156,6 +157,10 @@ pub struct ModelBlock {
     pub stride: u32,
     /// Rows indexed by `(word - lo) / stride`.
     pub rows: Vec<SparseRow>,
+    /// Lease-scoped MH proposal-table cache ([`crate::model::alias`]):
+    /// ignored by equality/serialization, cleared by the KV-store on
+    /// commit, empty in clones.
+    pub alias: AliasSlot,
 }
 
 impl ModelBlock {
@@ -166,7 +171,8 @@ impl ModelBlock {
     pub fn empty_strided(id: u32, lo: u32, hi: u32, stride: u32) -> ModelBlock {
         assert!(stride >= 1 && hi >= lo);
         let n = ((hi - lo) as usize).div_ceil(stride as usize);
-        ModelBlock { id, lo, hi, stride, rows: vec![SparseRow::new(); n] }
+        let rows = vec![SparseRow::new(); n];
+        ModelBlock { id, lo, hi, stride, rows, alias: AliasSlot::default() }
     }
 
     pub fn num_words(&self) -> usize {
@@ -213,9 +219,16 @@ impl ModelBlock {
         self.rows.iter().map(|r| r.nnz()).sum()
     }
 
-    /// Approximate heap bytes (memory accounting).
+    /// Approximate heap bytes (memory accounting). Excludes the alias
+    /// cache, which is lease-scoped and accounted separately under
+    /// `MemCategory::AliasCache` (see [`ModelBlock::alias_bytes`]).
     pub fn bytes(&self) -> u64 {
         self.rows.iter().map(|r| r.bytes()).sum::<u64>() + 16
+    }
+
+    /// Bytes of MH proposal tables cached on this block this lease.
+    pub fn alias_bytes(&self) -> u64 {
+        self.alias.bytes()
     }
 }
 

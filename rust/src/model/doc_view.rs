@@ -183,6 +183,18 @@ impl<'a> DocView<'a> {
         // SAFETY: as above.
         unsafe { &mut *self.dt.add(d) }
     }
+
+    /// Document `d`'s topic counts and its mutable assignment row,
+    /// together — for kernels that update `z` mid-token while reading
+    /// `C_d` (the MH kernel's live-state doc proposal).
+    #[inline]
+    pub fn doc_and_z_mut(&mut self, d: usize) -> (&SparseCounts, &mut [u32]) {
+        self.check(d);
+        // SAFETY: as above; the counts and the assignment row are
+        // distinct allocations, and `&mut self` keeps the pair exclusive
+        // within this view.
+        unsafe { (&*self.dt.add(d), &mut *self.z.add(d)) }
+    }
 }
 
 #[cfg(test)]

@@ -8,6 +8,7 @@
 //! the byte format blocks travel in (its length is what the network
 //! simulator charges), and [`init`] draws the initial topic assignments.
 
+pub mod alias;
 pub mod topic_counts;
 pub mod doc_topic;
 pub mod doc_view;
@@ -17,6 +18,7 @@ pub mod init;
 pub mod wire;
 pub mod checkpoint;
 
+pub use alias::{AliasCache, WordAlias};
 pub use block::{BlockMap, ModelBlock};
 pub use checkpoint::ResumeState;
 pub use doc_topic::{DocTopic, SparseCounts};

@@ -119,7 +119,7 @@ pub fn decode_block(buf: &[u8]) -> Result<ModelBlock> {
     if pos != buf.len() {
         bail!("trailing bytes after block");
     }
-    Ok(ModelBlock { id, lo, hi, stride, rows })
+    Ok(ModelBlock { id, lo, hi, stride, rows, alias: Default::default() })
 }
 
 /// Encode a topic-totals vector (or signed delta).

@@ -5,11 +5,87 @@
 //! design; used for small-scale equivalence tests and as the reference for
 //! the XLA microbatch backend's probability construction.
 
-use crate::corpus::Corpus;
-use crate::model::{Assignments, DocTopic, TopicCounts, WordTopicTable};
+use anyhow::Result;
+
+use crate::corpus::{Corpus, InvertedIndex};
+use crate::model::{
+    Assignments, DocTopic, DocView, ModelBlock, SparseCounts, SparseRow, TopicCounts,
+    WordTopicTable,
+};
 use crate::util::rng::Pcg64;
 
+use super::kernel::{Kernel, KernelCaps};
 use super::{Params, Scratch};
+
+/// The exact O(K) sampler as a block [`Kernel`]: word-major over the
+/// leased block's words, dense eq. 1 conditional per token. The oracle
+/// the sparse/MH kernels are validated against, now drivable through the
+/// same round loop as every other kernel. As a `SamplerKind` it still
+/// selects the data-parallel baseline *system* (capability
+/// `data_parallel_baseline`), so sessions route it to `baseline::yahoo`.
+pub struct DenseBlock;
+
+impl DenseBlock {
+    pub const CAPS: KernelCaps = KernelCaps {
+        name: "dense",
+        data_parallel_baseline: true,
+        thread_safe: true,
+    };
+}
+
+impl Kernel for DenseBlock {
+    fn caps(&self) -> KernelCaps {
+        Self::CAPS
+    }
+
+    fn sample_block(
+        &mut self,
+        _corpus: &Corpus,
+        docs: &mut DocView<'_>,
+        index: &InvertedIndex,
+        block: &mut ModelBlock,
+        ck: &mut TopicCounts,
+        params: &Params,
+        scratch: &mut Scratch,
+        rng: &mut Pcg64,
+    ) -> Result<u64> {
+        let k = params.num_topics;
+        let mut sampled = 0u64;
+        let start = index.words.partition_point(|&w| w < block.lo);
+        let end = index.words.partition_point(|&w| w < block.hi);
+        for wi in start..end {
+            let word = index.words[wi];
+            if block.stride != 1 && (word - block.lo) % block.stride != 0 {
+                continue;
+            }
+            for si in index.offsets[wi] as usize..index.offsets[wi + 1] as usize {
+                let slot = index.slots[si];
+                let d = slot.doc as usize;
+                let pos = slot.pos as usize;
+                let z_old = docs.z_row(d)[pos];
+                docs.doc_mut(d).dec(z_old);
+                block.row_mut(word).dec(z_old);
+                ck.dec(z_old as usize);
+
+                let z_new = draw_eq1(
+                    docs.doc(d),
+                    block.row(word),
+                    ck,
+                    params,
+                    &mut scratch.prob[..k],
+                    rng,
+                );
+
+                docs.doc_mut(d).inc(z_new);
+                block.row_mut(word).inc(z_new);
+                ck.inc(z_new as usize);
+                docs.z_row_mut(d)[pos] = z_new;
+                sampled += 1;
+            }
+        }
+        Ok(sampled)
+    }
+}
 
 /// One full Gibbs sweep over all tokens, doc-major. Returns tokens sampled.
 pub fn sweep(
@@ -58,11 +134,23 @@ pub fn sample_token(
     rng: &mut Pcg64,
 ) -> u32 {
     let k = params.num_topics;
-    let prob = &mut scratch.prob[..k];
-    // Dense construction: start from the smoothing-only term, then add the
-    // sparse doc and word contributions.
-    let row = wt.row(w as usize);
-    let doc = dt.doc(d);
+    draw_eq1(dt.doc(d), wt.row(w as usize), ck, params, &mut scratch.prob[..k], rng)
+}
+
+/// The one dense eq. 1 construction both entry points share (the doc-major
+/// sweep above and the block kernel): smoothing-only term, then the sparse
+/// doc and word contributions, then an inverse-CDF draw. Counts must
+/// already exclude the token.
+#[inline]
+fn draw_eq1(
+    doc: &SparseCounts,
+    row: &SparseRow,
+    ck: &TopicCounts,
+    params: &Params,
+    prob: &mut [f64],
+    rng: &mut Pcg64,
+) -> u32 {
+    let k = prob.len();
     let mut total = 0.0;
     for (kk, p) in prob.iter_mut().enumerate() {
         *p = params.alpha * params.beta / (ck.get(kk) as f64 + params.vbeta);

@@ -31,11 +31,47 @@
 //! walk evaluates `q` on the fly from `ct`/`inv`. Per-call cost drops from
 //! `O(|words| · K)` to `O(K + nnz)`.
 
+use anyhow::Result;
+
 use crate::corpus::{Corpus, InvertedIndex};
 use crate::model::{DocView, ModelBlock, TopicCounts};
 use crate::util::rng::Pcg64;
 
+use super::kernel::{Kernel, KernelCaps};
 use super::{Params, Scratch};
+
+/// The X+Y sampler as a [`Kernel`] — the model-parallel driver's default
+/// compute path. Stateless: everything lives in the worker's scratch and
+/// the leased block, so instances ride any execution backend.
+pub struct InvertedXy;
+
+impl InvertedXy {
+    pub const CAPS: KernelCaps = KernelCaps {
+        name: "inverted-xy",
+        data_parallel_baseline: false,
+        thread_safe: true,
+    };
+}
+
+impl Kernel for InvertedXy {
+    fn caps(&self) -> KernelCaps {
+        Self::CAPS
+    }
+
+    fn sample_block(
+        &mut self,
+        corpus: &Corpus,
+        docs: &mut DocView<'_>,
+        index: &InvertedIndex,
+        block: &mut ModelBlock,
+        ck: &mut TopicCounts,
+        params: &Params,
+        scratch: &mut Scratch,
+        rng: &mut Pcg64,
+    ) -> Result<u64> {
+        Ok(sample_block(corpus, docs, index, block, ck, params, scratch, rng))
+    }
+}
 
 /// Sample every token of `index ∩ [block.lo, block.hi)`, mutating the
 /// block's rows, the shard's doc–topic counts, the local `C_k` snapshot and

@@ -1,0 +1,236 @@
+//! The unified sampler-kernel layer: one trait between the block-rotation
+//! engine and every Gibbs/MH compute kernel.
+//!
+//! Before this layer, the worker dispatched kernels through a hand-rolled
+//! enum whose per-variant match arms leaked kernel-specific signatures
+//! into `coordinator::{worker,parallel,pipeline}` and whose legal
+//! sampler × execution combinations were re-encoded as ad-hoc tables in
+//! `engine::{session,backend}`. [`Kernel`] collapses both: the round loop
+//! drives the three-phase lifecycle below against `&mut dyn Kernel`, and
+//! the validation layers ask [`KernelCaps`] instead of matching kinds.
+//!
+//! ## Lifecycle (one leased block, one worker, one round)
+//!
+//! ```text
+//! extend_scratch   size any kernel-private scratch (idempotent, counted)
+//! prepare_block    lease-time setup on the block — e.g. mh_alias builds
+//!                  its per-word proposal tables here, cached on the block
+//! sample_block     sample every shard ∩ block token (the hot path)
+//! finish_block     lease-end hook before the block is handed back
+//! ```
+//!
+//! Every kernel mutates exactly the state the paper's §3 disjointness
+//! argument allows: the leased block's rows, the worker shard's rows of
+//! the doc state (through a [`DocView`]), and the worker-private `C_k`
+//! snapshot. That shared contract — not any per-kernel property — is what
+//! lets the threaded and pipelined engines run kernels with no locks.
+//!
+//! New kernels (HDP, hybrid CPU/XLA, …) implement the trait, register a
+//! [`SamplerKind`] and one [`caps_of`]/[`cpu_kernel`] arm, and every
+//! execution path and validation layer picks them up unchanged.
+
+use anyhow::{bail, Result};
+
+use crate::config::SamplerKind;
+use crate::corpus::{Corpus, InvertedIndex};
+use crate::model::{DocView, ModelBlock, TopicCounts};
+use crate::util::rng::Pcg64;
+
+use super::{Params, Scratch};
+
+/// What a kernel can do — the capability queries that replaced the
+/// sampler × execution validation tables in `engine::{session,backend}`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct KernelCaps {
+    /// Canonical kind name (matches [`SamplerKind::name`]).
+    pub name: &'static str,
+    /// The kind selects the data-parallel Yahoo!LDA baseline *system*
+    /// rather than the model-parallel block-rotation driver (`dense`,
+    /// `sparse-yao`). Their block kernels still exist — they are the
+    /// oracles the driver-side kernels are validated against — but a
+    /// session routes these kinds to `baseline::yahoo`.
+    pub data_parallel_baseline: bool,
+    /// Instances may run concurrently on OS worker threads (everything
+    /// except `xla`, whose executor is one shared device handle).
+    pub thread_safe: bool,
+}
+
+/// One sampler compute kernel, driven by `WorkerState::run_round` through
+/// the three-phase lifecycle in the module docs. Implementations keep all
+/// per-token state in the caller's [`Scratch`]/[`ModelBlock`]/worker
+/// structures so that thread-safe kernels stay stateless and cheap to
+/// construct per round.
+pub trait Kernel {
+    /// This kernel's capabilities (a constant per implementation).
+    fn caps(&self) -> KernelCaps;
+
+    /// Size kernel-private scratch (via [`Scratch::ensure_kf`] or the
+    /// dense buffers). Called every round; must be idempotent and
+    /// allocation-free once sized.
+    fn extend_scratch(&self, _scratch: &mut Scratch, _params: &Params) {}
+
+    /// Lease-time setup on the block this worker will sample — e.g. build
+    /// proposal tables over `index ∩ block`. Runs inside the round's
+    /// measured host time.
+    fn prepare_block(
+        &mut self,
+        _index: &InvertedIndex,
+        _block: &mut ModelBlock,
+        _ck: &TopicCounts,
+        _params: &Params,
+        _scratch: &mut Scratch,
+    ) -> Result<()> {
+        Ok(())
+    }
+
+    /// Sample every token of `index ∩ [block.lo, block.hi)`, mutating the
+    /// block's rows, the shard's doc–topic counts/assignments (through
+    /// `docs`), and the worker-private `C_k` snapshot. Returns tokens
+    /// sampled.
+    #[allow(clippy::too_many_arguments)]
+    fn sample_block(
+        &mut self,
+        corpus: &Corpus,
+        docs: &mut DocView<'_>,
+        index: &InvertedIndex,
+        block: &mut ModelBlock,
+        ck: &mut TopicCounts,
+        params: &Params,
+        scratch: &mut Scratch,
+        rng: &mut Pcg64,
+    ) -> Result<u64>;
+
+    /// Lease-end hook before the block is handed back to the store.
+    fn finish_block(&mut self, _block: &mut ModelBlock, _scratch: &mut Scratch) -> Result<()> {
+        Ok(())
+    }
+}
+
+/// Construction options for CPU kernels (everything a kernel needs beyond
+/// [`Params`], plumbed from the config by the execution backends).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct KernelOpts {
+    /// Per-block alias-cache byte budget for `mh-alias`
+    /// (`train.alias_budget_mib`; 0 = unlimited).
+    pub alias_budget_bytes: u64,
+}
+
+/// Capabilities of `kind`'s kernel — with [`cpu_kernel`], the single place
+/// a new kernel registers itself.
+pub fn caps_of(kind: SamplerKind) -> KernelCaps {
+    match kind {
+        SamplerKind::Dense => super::dense::DenseBlock::CAPS,
+        SamplerKind::SparseYao => super::sparse_yao::SparseYaoBlock::CAPS,
+        SamplerKind::InvertedXy => super::inverted_xy::InvertedXy::CAPS,
+        SamplerKind::MhAlias => super::mh_alias::MhAlias::CAPS,
+        SamplerKind::Xla => super::xla_dense::XlaKernel::CAPS,
+    }
+}
+
+/// Build the CPU kernel for `kind`. The `xla` kind has no CPU kernel —
+/// its kernel wraps the shared device executor and is constructed by the
+/// simulated backend ([`super::xla_dense::XlaKernel::new`]).
+pub fn cpu_kernel(kind: SamplerKind, opts: &KernelOpts) -> Result<Box<dyn Kernel>> {
+    Ok(match kind {
+        SamplerKind::Dense => Box::new(super::dense::DenseBlock),
+        SamplerKind::SparseYao => Box::new(super::sparse_yao::SparseYaoBlock),
+        SamplerKind::InvertedXy => Box::new(super::inverted_xy::InvertedXy),
+        SamplerKind::MhAlias => Box::new(super::mh_alias::MhAlias::new(opts.alias_budget_bytes)),
+        SamplerKind::Xla => bail!(
+            "the xla kernel wraps the shared device executor; the simulated backend \
+             constructs it from the installed MicrobatchExecutor"
+        ),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::corpus::InvertedIndex;
+    use crate::metrics::joint_log_likelihood;
+    use crate::model::{Assignments, BlockMap, WordTopicTable};
+    use crate::sampler::testutil::small_state;
+
+    /// Every CPU kernel, driven through the trait lifecycle over a serial
+    /// block sweep, must leave the counts consistent with `Z` and sample
+    /// every token exactly once.
+    #[test]
+    fn every_cpu_kernel_runs_through_the_trait() {
+        for kind in [
+            SamplerKind::Dense,
+            SamplerKind::SparseYao,
+            SamplerKind::InvertedXy,
+            SamplerKind::MhAlias,
+        ] {
+            let (corpus, mut assign, mut dt, wt, mut ck) = small_state(60, 10);
+            let params = Params::new(10, corpus.num_words(), 0.1, 0.01);
+            let map = BlockMap::strided(corpus.num_words(), 3);
+            let mut blocks = Assignments::build_blocks(&wt, &map);
+            let all: Vec<u32> = (0..corpus.num_docs() as u32).collect();
+            let index = InvertedIndex::build(&corpus, &all);
+            let mut kernel = cpu_kernel(kind, &KernelOpts::default()).unwrap();
+            assert_eq!(kernel.caps().name, kind.name());
+            let mut scratch = Scratch::new(10);
+            kernel.extend_scratch(&mut scratch, &params);
+            let mut rng = Pcg64::new(5);
+            let mut n = 0;
+            {
+                let mut docs = DocView::new(&mut assign.z, &mut dt);
+                for b in blocks.iter_mut() {
+                    kernel.prepare_block(&index, b, &ck, &params, &mut scratch).unwrap();
+                    n += kernel
+                        .sample_block(
+                            &corpus, &mut docs, &index, b, &mut ck, &params, &mut scratch,
+                            &mut rng,
+                        )
+                        .unwrap();
+                    kernel.finish_block(b, &mut scratch).unwrap();
+                }
+            }
+            assert_eq!(n as usize, corpus.num_tokens(), "{}", kind.name());
+            let mut wt2 = WordTopicTable::zeros(corpus.num_words(), 10);
+            for b in &blocks {
+                for (i, row) in b.rows.iter().enumerate() {
+                    *wt2.row_mut(b.word_at(i) as usize) = row.clone();
+                }
+            }
+            assign
+                .check_consistency(&corpus, &dt, &wt2, &ck)
+                .unwrap_or_else(|e| panic!("{}: {e}", kind.name()));
+            let ll = joint_log_likelihood(&dt, &wt2, &ck, params.alpha, params.beta);
+            assert!(ll.is_finite(), "{}", kind.name());
+        }
+    }
+
+    #[test]
+    fn caps_drive_the_validation_queries() {
+        // The properties the engine layers rely on.
+        assert!(caps_of(SamplerKind::Dense).data_parallel_baseline);
+        assert!(caps_of(SamplerKind::SparseYao).data_parallel_baseline);
+        for kind in [SamplerKind::InvertedXy, SamplerKind::MhAlias, SamplerKind::Xla] {
+            assert!(!caps_of(kind).data_parallel_baseline, "{}", kind.name());
+        }
+        assert!(caps_of(SamplerKind::InvertedXy).thread_safe);
+        assert!(caps_of(SamplerKind::MhAlias).thread_safe);
+        assert!(!caps_of(SamplerKind::Xla).thread_safe);
+        // Names round-trip with the config kind.
+        for kind in [
+            SamplerKind::Dense,
+            SamplerKind::SparseYao,
+            SamplerKind::InvertedXy,
+            SamplerKind::MhAlias,
+            SamplerKind::Xla,
+        ] {
+            assert_eq!(caps_of(kind).name, kind.name());
+        }
+    }
+
+    #[test]
+    fn xla_has_no_cpu_kernel() {
+        let err = cpu_kernel(SamplerKind::Xla, &KernelOpts::default())
+            .err()
+            .unwrap()
+            .to_string();
+        assert!(err.contains("device executor"), "{err}");
+    }
+}

@@ -1,0 +1,482 @@
+//! The amortized-O(1) Metropolis–Hastings kernel — LightLDA's
+//! cycling alias proposal (Yuan et al., 2015; PAPERS.md) on this repo's
+//! block-rotation architecture.
+//!
+//! Every exact sparse sampler in this crate still pays O(K_d) or O(K_t)
+//! per token to *normalize* eq. 1. This kernel never normalizes: it runs
+//! a short Metropolis–Hastings chain per token whose proposals are O(1)
+//! draws and whose acceptance ratio touches only the two topics involved,
+//! so per-token cost is independent of K once the per-word tables are
+//! amortized over the word's occurrence list.
+//!
+//! Per cycle (default 2 cycles/token) it alternates two proposals:
+//!
+//! * **word proposal** — `q_w(k) ∝ ct_stale[k] + β`, drawn in O(1) from a
+//!   per-word alias table ([`crate::model::alias::WordAlias`]) built at
+//!   block-lease time in [`Kernel::prepare_block`] and cached on the
+//!   [`ModelBlock`]. The table goes stale as sampling mutates the row;
+//!   the acceptance ratio divides by the *stale* pmf actually drawn from,
+//!   so staleness costs mixing speed, never correctness.
+//! * **doc proposal** — `q_d(k) ∝ C_d^k|with token| + α`, drawn in O(1)
+//!   by picking a uniform token slot of the document (its `z` entry is a
+//!   count-proportional draw — no table needed) or, with probability
+//!   `αK / (N_d + αK)`, a uniform topic.
+//!
+//! Both are independence proposals with exactly known unnormalized pmfs
+//! (fixed for the duration of one token's chain), so each accept step
+//!
+//! ```text
+//! π = min(1, p(t)·q(s) / (p(s)·q(t)))      p = eq. 1, token excluded
+//! ```
+//!
+//! leaves the exact eq. 1 conditional invariant — verified empirically by
+//! the total-variation test below. When the alias-cache byte budget
+//! (`train.alias_budget_mib`) rejects a word's table, the word proposal
+//! falls back to a uniform topic (a valid, if slower-mixing, proposal):
+//! the budget bounds memory, never correctness.
+//!
+//! Determinism: the kernel is stateless (the cache lives on the leased
+//! block, rebuilt identically per lease), draws only from the worker's
+//! private RNG stream, and mutates only round-disjoint state — so
+//! simulated, threaded and pipelined execution stay bitwise identical
+//! (`rust/tests/pipeline_determinism.rs`).
+
+use anyhow::Result;
+
+use crate::corpus::{Corpus, InvertedIndex};
+use crate::model::alias::WordAlias;
+use crate::model::{DocView, ModelBlock, SparseCounts, SparseRow, TopicCounts};
+use crate::util::rng::Pcg64;
+
+use super::kernel::{Kernel, KernelCaps};
+use super::{Params, Scratch};
+
+/// The MH alias kernel. Stateless between rounds — proposal tables live
+/// on the leased block, per-word working state in the shared scratch.
+pub struct MhAlias {
+    /// Per-block alias-cache byte budget (0 = unlimited).
+    budget_bytes: u64,
+    /// MH proposal cycles per token (each cycle = word + doc proposal).
+    cycles: usize,
+}
+
+impl MhAlias {
+    pub const CAPS: KernelCaps = KernelCaps {
+        name: "mh-alias",
+        data_parallel_baseline: false,
+        thread_safe: true,
+    };
+
+    /// A kernel with the LightLDA-standard 2 proposal cycles per token.
+    pub fn new(budget_bytes: u64) -> MhAlias {
+        MhAlias { budget_bytes, cycles: 2 }
+    }
+}
+
+/// Unnormalized eq. 1 with the token excluded from every count —
+/// the chain's target, evaluated at exactly two topics per accept step.
+#[inline]
+fn target(k: u32, doc: &SparseCounts, ct: &[u32], ck: &TopicCounts, params: &Params) -> f64 {
+    let ki = k as usize;
+    (doc.get(k) as f64 + params.alpha) * (ct[ki] as f64 + params.beta)
+        / (ck.get(ki) as f64 + params.vbeta)
+}
+
+/// One token's MH chain: `cycles` rounds of word + doc proposals. The
+/// chain's live state is `z_arr[pos]` — every accepted move writes it
+/// back, so the doc proposal's uniform-slot draw always samples the
+/// *current*-state pmf `q_d(· | z) ∝ C_d^¬ + e_z + α` (the token's own
+/// slot contributes its live assignment), which is exactly the pmf the
+/// acceptance ratio divides by. `doc`/`ct`/`ck` are token-excluded and
+/// stay fixed for the whole chain. Returns the final state.
+#[allow(clippy::too_many_arguments)]
+#[inline]
+fn mh_token(
+    z_arr: &mut [u32],
+    pos: usize,
+    doc: &SparseCounts,
+    ct: &[u32],
+    ck: &TopicCounts,
+    alias: Option<&WordAlias>,
+    params: &Params,
+    cycles: usize,
+    rng: &mut Pcg64,
+) -> u32 {
+    let k = params.num_topics;
+    let n_d = z_arr.len() as f64;
+    let mut z = z_arr[pos];
+    for _ in 0..cycles {
+        // ---- word proposal: stale alias table (uniform under budget).
+        // State-independent, so the ratio divides by the fixed stale pmf
+        // the draw actually came from.
+        let t = match alias {
+            Some(a) => a.draw(k, params.beta, rng),
+            None => rng.index(k) as u32,
+        };
+        if t != z {
+            let p_ratio = target(t, doc, ct, ck, params) / target(z, doc, ct, ck, params);
+            let q_ratio = match alias {
+                Some(a) => a.weight(z, params.beta) / a.weight(t, params.beta),
+                None => 1.0,
+            };
+            let pi = p_ratio * q_ratio;
+            if pi >= 1.0 || rng.next_f64() < pi {
+                z = t;
+                z_arr[pos] = z;
+            }
+        }
+        // ---- doc proposal: uniform slot of the doc, or α-smoothing ------
+        // q_d(t | z) ∝ doc.get(t) + [t == z] + α; for t ≠ z the indicator
+        // vanishes on both sides of the reversibility ratio, leaving
+        // (doc.get(z) + α) / (doc.get(t) + α).
+        let total = n_d + params.alpha * k as f64;
+        let u = rng.next_f64() * total;
+        let t = if u < n_d {
+            // Conditioned on landing in the count mass, ⌊u⌋ is a uniform
+            // slot index — its `z` entry is a count-proportional topic.
+            z_arr[u as usize]
+        } else {
+            rng.index(k) as u32
+        };
+        if t != z {
+            let p_ratio = target(t, doc, ct, ck, params) / target(z, doc, ct, ck, params);
+            let qz = doc.get(z) as f64 + params.alpha;
+            let qt = doc.get(t) as f64 + params.alpha;
+            let pi = p_ratio * qz / qt;
+            if pi >= 1.0 || rng.next_f64() < pi {
+                z = t;
+                z_arr[pos] = z;
+            }
+        }
+    }
+    z
+}
+
+/// Words of `index ∩ [lo, hi)` under `stride`, yielding the index-array
+/// position, the word id, and the block row index. `prepare_block` and
+/// `sample_block` share this one enumeration, so the set of words with
+/// prepared proposal tables can never diverge from the set sampled.
+fn block_words(
+    index: &InvertedIndex,
+    lo: u32,
+    hi: u32,
+    stride: u32,
+) -> impl Iterator<Item = (usize, u32, usize)> + '_ {
+    let start = index.words.partition_point(move |&w| w < lo);
+    let end = index.words.partition_point(move |&w| w < hi);
+    (start..end).filter_map(move |wi| {
+        let word = index.words[wi];
+        if stride != 1 && (word - lo) % stride != 0 {
+            return None;
+        }
+        Some((wi, word, ((word - lo) / stride) as usize))
+    })
+}
+
+impl Kernel for MhAlias {
+    fn caps(&self) -> KernelCaps {
+        Self::CAPS
+    }
+
+    fn extend_scratch(&self, scratch: &mut Scratch, params: &Params) {
+        // Alias-construction weight buffer: one f64 per support entry,
+        // bounded by K.
+        scratch.ensure_kf(params.num_topics);
+    }
+
+    /// Build the proposal tables for every word this worker's shard will
+    /// sample in the block — lazy relative to the block's full word set —
+    /// within the byte budget. Cached on the block; the KV-store clears
+    /// the cache on commit, so staged/re-leased blocks rebuild from fresh
+    /// counts.
+    fn prepare_block(
+        &mut self,
+        index: &InvertedIndex,
+        block: &mut ModelBlock,
+        _ck: &TopicCounts,
+        _params: &Params,
+        scratch: &mut Scratch,
+    ) -> Result<()> {
+        let ModelBlock { lo, hi, stride, rows, alias, .. } = block;
+        let (lo, hi, stride) = (*lo, *hi, *stride);
+        let cache = alias.ensure(rows.len(), self.budget_bytes);
+        for (_wi, _word, idx) in block_words(index, lo, hi, stride) {
+            cache.build(idx, &rows[idx], &mut scratch.kf);
+        }
+        Ok(())
+    }
+
+    fn sample_block(
+        &mut self,
+        corpus: &Corpus,
+        docs: &mut DocView<'_>,
+        index: &InvertedIndex,
+        block: &mut ModelBlock,
+        ck: &mut TopicCounts,
+        params: &Params,
+        scratch: &mut Scratch,
+        rng: &mut Pcg64,
+    ) -> Result<u64> {
+        debug_assert_eq!(scratch.ct.len(), params.num_topics);
+        let mut sampled = 0u64;
+        let ModelBlock { lo, hi, stride, rows, alias, .. } = block;
+        let (lo, hi, stride) = (*lo, *hi, *stride);
+        let Scratch { ct, touched, .. } = scratch;
+
+        for (wi, _word, idx) in block_words(index, lo, hi, stride) {
+            // Dense expansion of the *live* row (the target's word factor);
+            // the proposal keeps reading its stale build-time snapshot.
+            for &t in touched.iter() {
+                ct[t as usize] = 0;
+            }
+            touched.clear();
+            rows[idx].expand_into(ct, touched);
+            let word_alias = alias.get().and_then(|c| c.get(idx));
+
+            for si in index.offsets[wi] as usize..index.offsets[wi + 1] as usize {
+                let slot = index.slots[si];
+                let d = slot.doc as usize;
+                let pos = slot.pos as usize;
+                let z_old = docs.z_row(d)[pos];
+                let zo = z_old as usize;
+
+                // Exclude the token from doc / word / totals counts.
+                docs.doc_mut(d).dec(z_old);
+                ct[zo] -= 1;
+                ck.dec(zo);
+
+                let z_new = {
+                    let (doc, z_arr) = docs.doc_and_z_mut(d);
+                    mh_token(z_arr, pos, doc, ct, ck, word_alias, params, self.cycles, rng)
+                };
+
+                // Re-insert under the chain's final state (`mh_token`
+                // already wrote the assignment slot).
+                let zn = z_new as usize;
+                docs.doc_mut(d).inc(z_new);
+                if ct[zn] == 0 && !touched.contains(&z_new) {
+                    touched.push(z_new);
+                }
+                ct[zn] += 1;
+                ck.inc(zn);
+                sampled += 1;
+            }
+
+            rows[idx] = SparseRow::compress_from(ct, touched);
+        }
+        for &t in touched.iter() {
+            ct[t as usize] = 0;
+        }
+        touched.clear();
+        let _ = corpus;
+        Ok(sampled)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::joint_log_likelihood;
+    use crate::model::{Assignments, BlockMap, WordTopicTable};
+    use crate::sampler::kernel::{cpu_kernel, KernelOpts};
+    use crate::config::SamplerKind;
+    use crate::sampler::testutil::{eq1_excluded, small_state};
+
+    /// Drive one serial sweep of every block through the trait lifecycle.
+    #[allow(clippy::too_many_arguments)]
+    fn sweep(
+        kernel: &mut dyn Kernel,
+        corpus: &crate::corpus::Corpus,
+        assign: &mut Assignments,
+        dt: &mut crate::model::DocTopic,
+        blocks: &mut [ModelBlock],
+        ck: &mut TopicCounts,
+        index: &InvertedIndex,
+        params: &Params,
+        scratch: &mut Scratch,
+        rng: &mut Pcg64,
+    ) -> u64 {
+        let mut docs = DocView::new(&mut assign.z, dt);
+        let mut n = 0;
+        for b in blocks.iter_mut() {
+            kernel.prepare_block(index, b, ck, params, scratch).unwrap();
+            n += kernel
+                .sample_block(corpus, &mut docs, index, b, ck, params, scratch, rng)
+                .unwrap();
+            kernel.finish_block(b, scratch).unwrap();
+            // Emulate the commit-time invalidation between leases.
+            b.alias.clear();
+        }
+        n
+    }
+
+    /// The satellite's statistical correctness bar: the empirical state
+    /// distribution of the per-token MH chain must match the exact eq. 1
+    /// conditional in total variation — with a fresh table, with a *stale*
+    /// table, and with no table at all (the budget-fallback uniform
+    /// proposal).
+    #[test]
+    fn mh_chain_matches_eq1_conditional_in_total_variation() {
+        let (corpus, assign, dt, wt, ck) = small_state(70, 8);
+        let params = Params::new(8, corpus.num_words(), 0.1, 0.01);
+        let d = 3;
+        assert!(!corpus.docs[d].is_empty());
+        let w = corpus.docs[d].tokens[0] as usize;
+        let z0 = assign.z[d][0];
+
+        // Exact conditional (token excluded), normalized.
+        let truth_raw = eq1_excluded(&params, dt.doc(d), wt.row(w), &ck, z0);
+        let total: f64 = truth_raw.iter().sum();
+        let truth: Vec<f64> = truth_raw.iter().map(|p| p / total).collect();
+
+        // Token-excluded counts the chain runs against.
+        let mut doc = dt.doc(d).clone();
+        doc.dec(z0);
+        let mut ct = vec![0u32; 8];
+        for (k, c) in wt.row(w).iter() {
+            ct[k as usize] = c;
+        }
+        ct[z0 as usize] -= 1;
+        let mut ck_excl = ck.clone();
+        ck_excl.dec(z0 as usize);
+
+        let fresh = {
+            let mut row = wt.row(w).clone();
+            row.dec(z0);
+            WordAlias::build(&row, &mut Vec::new())
+        };
+        // A deliberately stale table: built from counts that drifted a lot.
+        let stale = {
+            let mut row = wt.row(w).clone();
+            for _ in 0..7 {
+                row.inc(5);
+            }
+            row.inc(1);
+            WordAlias::build(&row, &mut Vec::new())
+        };
+
+        for (name, alias) in
+            [("fresh", Some(&fresh)), ("stale", Some(&stale)), ("uniform-fallback", None)]
+        {
+            let mut rng = Pcg64::new(0xa11a5);
+            let mut z_arr = assign.z[d].clone();
+            let n = 300_000usize;
+            let mut counts = vec![0u64; 8];
+            for _ in 0..n {
+                let z = mh_token(&mut z_arr, 0, &doc, &ct, &ck_excl, alias, &params, 2, &mut rng);
+                counts[z as usize] += 1;
+            }
+            let tv: f64 = 0.5
+                * counts
+                    .iter()
+                    .zip(&truth)
+                    .map(|(&c, &p)| (c as f64 / n as f64 - p).abs())
+                    .sum::<f64>();
+            assert!(tv < 0.02, "{name}: TV distance {tv:.4} vs eq. 1 (truth {truth:?})");
+        }
+    }
+
+    #[test]
+    fn block_sweep_preserves_consistency() {
+        let (corpus, mut assign, mut dt, wt, mut ck) = small_state(71, 12);
+        let params = Params::new(12, corpus.num_words(), 0.1, 0.01);
+        let map = BlockMap::strided(corpus.num_words(), 4);
+        let mut blocks = Assignments::build_blocks(&wt, &map);
+        let all: Vec<u32> = (0..corpus.num_docs() as u32).collect();
+        let index = InvertedIndex::build(&corpus, &all);
+        let mut kernel = MhAlias::new(0);
+        let mut scratch = Scratch::new(12);
+        let mut rng = Pcg64::new(9);
+        let n = sweep(
+            &mut kernel, &corpus, &mut assign, &mut dt, &mut blocks, &mut ck, &index, &params,
+            &mut scratch, &mut rng,
+        );
+        assert_eq!(n as usize, corpus.num_tokens());
+        let mut wt2 = WordTopicTable::zeros(corpus.num_words(), 12);
+        for b in &blocks {
+            for (i, row) in b.rows.iter().enumerate() {
+                *wt2.row_mut(b.word_at(i) as usize) = row.clone();
+            }
+        }
+        assign.check_consistency(&corpus, &dt, &wt2, &ck).unwrap();
+    }
+
+    #[test]
+    fn converges_like_inverted_xy() {
+        // Acceptance bar: within 2% of the exact X+Y sampler's final LL
+        // after the same number of sweeps from the same init.
+        let (corpus, assign0, dt0, wt0, ck0) = small_state(72, 8);
+        let params = Params::new(8, corpus.num_words(), 0.1, 0.01);
+        let map = BlockMap::strided(corpus.num_words(), 4);
+        let all: Vec<u32> = (0..corpus.num_docs() as u32).collect();
+        let index = InvertedIndex::build(&corpus, &all);
+        let sweeps = 25;
+
+        let run = |kind: SamplerKind| {
+            let mut assign = assign0.clone();
+            let mut dt = dt0.clone();
+            let mut ck = ck0.clone();
+            let mut blocks = Assignments::build_blocks(&wt0, &map);
+            let mut kernel = cpu_kernel(kind, &KernelOpts::default()).unwrap();
+            let mut scratch = Scratch::new(8);
+            kernel.extend_scratch(&mut scratch, &params);
+            let mut rng = Pcg64::new(2);
+            for _ in 0..sweeps {
+                sweep(
+                    &mut *kernel, &corpus, &mut assign, &mut dt, &mut blocks, &mut ck, &index,
+                    &params, &mut scratch, &mut rng,
+                );
+            }
+            let mut wt = WordTopicTable::zeros(corpus.num_words(), 8);
+            for b in &blocks {
+                for (i, row) in b.rows.iter().enumerate() {
+                    *wt.row_mut(b.word_at(i) as usize) = row.clone();
+                }
+            }
+            joint_log_likelihood(&dt, &wt, &ck, params.alpha, params.beta)
+        };
+
+        let ll_xy = run(SamplerKind::InvertedXy);
+        let ll_mh = run(SamplerKind::MhAlias);
+        let rel = (ll_xy - ll_mh).abs() / ll_xy.abs();
+        assert!(rel < 0.02, "xy={ll_xy} mh={ll_mh} rel={rel}");
+    }
+
+    #[test]
+    fn deterministic_given_seed_and_budget_bounds_cache() {
+        let run = |seed: u64, budget: u64| {
+            let (corpus, mut assign, mut dt, wt, mut ck) = small_state(73, 8);
+            let params = Params::new(8, corpus.num_words(), 0.1, 0.01);
+            let map = BlockMap::strided(corpus.num_words(), 2);
+            let mut blocks = Assignments::build_blocks(&wt, &map);
+            let all: Vec<u32> = (0..corpus.num_docs() as u32).collect();
+            let index = InvertedIndex::build(&corpus, &all);
+            let mut kernel = MhAlias::new(budget);
+            let mut scratch = Scratch::new(8);
+            let mut rng = Pcg64::new(seed);
+            let mut docs = DocView::new(&mut assign.z, &mut dt);
+            let mut cache_bytes = 0;
+            for b in blocks.iter_mut() {
+                kernel.prepare_block(&index, b, &ck, &params, &mut scratch).unwrap();
+                cache_bytes += b.alias_bytes();
+                kernel
+                    .sample_block(
+                        &corpus, &mut docs, &index, b, &mut ck, &params, &mut scratch, &mut rng,
+                    )
+                    .unwrap();
+            }
+            drop(docs);
+            (assign.z, cache_bytes)
+        };
+        let (z1, bytes_unlimited) = run(1, 0);
+        let (z2, _) = run(1, 0);
+        let (z3, _) = run(2, 0);
+        assert_eq!(z1, z2);
+        assert_ne!(z1, z3);
+        assert!(bytes_unlimited > 0, "unlimited budget must cache tables");
+        // A 1-byte budget rejects every table (uniform fallback) but the
+        // kernel still samples every token and stays consistent.
+        let (_, bytes_capped) = run(1, 1);
+        assert_eq!(bytes_capped, 0, "1-byte budget must cache nothing");
+    }
+}

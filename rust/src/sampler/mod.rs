@@ -1,27 +1,41 @@
-//! Collapsed Gibbs samplers for LDA.
+//! Collapsed Gibbs sampler kernels for LDA, unified behind the
+//! [`Kernel`] trait ([`kernel`]).
 //!
-//! Four interchangeable backends (selected by `train.sampler`):
+//! Five interchangeable kernels (selected by `train.sampler`):
 //!
-//! | backend | decomposition | order | complexity/token | role |
+//! | kernel | decomposition | order | complexity/token | role |
 //! |---|---|---|---|---|
-//! | [`dense`] | eq. 1 direct | doc-major | O(K) | correctness oracle |
-//! | [`sparse_yao`] | eq. 2 `A+B+C` | doc-major | O(K_d + K_t) | Yahoo!LDA baseline core |
+//! | [`dense`] | eq. 1 direct | word-major (block) / doc-major (sweep) | O(K) | correctness oracle |
+//! | [`sparse_yao`] | eq. 2 `A+B+C` | word-major (block) / doc-major (sweep) | O(K_d + K_t) | Yahoo!LDA baseline core |
 //! | [`inverted_xy`] | eq. 3 `X+Y` | **word-major** | O(K_d) + amortized O(K)/word | the paper's model-parallel sampler |
+//! | [`mh_alias`] | MH over eq. 1, alias proposals | word-major | amortized **O(1)** | the LightLDA-style big-K kernel |
 //! | [`xla_dense`] | eq. 3 dense microbatch | word-major | O(K) on device | the JAX/Pallas AOT path |
 //!
-//! All four target the same conditional (eq. 1):
+//! All five target the same conditional (eq. 1):
 //!
 //! ```text
 //! p(z_dn = k | Z¬dn) ∝ (C_d^k¬ + α)(C_t^k¬ + β) / (C_k¬ + Vβ)
 //! ```
 //!
-//! and the bucket decompositions are *exact* regroupings of it — verified
-//! term-by-term in `tests` against the dense construction.
+//! The bucket decompositions are *exact* regroupings of it — verified
+//! term-by-term in `tests` against the dense construction — and the MH
+//! kernel targets it as the stationary distribution of its proposal
+//! chain (verified by total-variation distance in `mh_alias::tests`).
+//!
+//! The block-rotation engine drives every kernel through the
+//! [`Kernel`] lifecycle (`prepare_block` → `sample_block` →
+//! `finish_block`); which execution paths a kernel may ride is a
+//! [`KernelCaps`] capability query, not a hand-maintained table.
+
+pub mod kernel;
 
 pub mod dense;
 pub mod sparse_yao;
 pub mod inverted_xy;
+pub mod mh_alias;
 pub mod xla_dense;
+
+pub use kernel::{caps_of, cpu_kernel, Kernel, KernelCaps, KernelOpts};
 
 /// Shared hyperparameters, precomputed.
 #[derive(Debug, Clone, Copy)]
@@ -39,8 +53,17 @@ impl Params {
     }
 }
 
-/// Reusable dense scratch buffers sized to K. One per worker thread;
-/// allocation-free on the sampling path.
+/// Counts every [`Scratch`] construction and kernel-buffer growth — the
+/// debug instrument behind the "no allocations on the sampling path"
+/// lifecycle test (`rust/tests/scratch_lifecycle.rs`): in steady state
+/// (iteration 2 onward) the counter must not move, whatever the
+/// execution backend or kernel.
+static SCRATCH_ALLOCS: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(0);
+
+/// Reusable dense scratch buffers sized to K. One per worker thread,
+/// allocated at worker construction and reused across every round and
+/// iteration; allocation-free on the sampling path (asserted by
+/// [`Scratch::allocations`] in the lifecycle test).
 #[derive(Debug, Clone)]
 pub struct Scratch {
     /// Dense expansion of the current word's topic counts `C_t^k`.
@@ -51,16 +74,41 @@ pub struct Scratch {
     pub q: Vec<f64>,
     /// General-purpose probability buffer (dense sampler).
     pub prob: Vec<f64>,
+    /// Kernel-extension buffer, sized by [`Kernel::extend_scratch`] —
+    /// e.g. the MH kernel's alias-construction weights. Grown (counted)
+    /// at most once per worker; steady-state rounds reuse it.
+    pub kf: Vec<f64>,
 }
 
 impl Scratch {
     pub fn new(num_topics: usize) -> Scratch {
+        SCRATCH_ALLOCS.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
         Scratch {
             ct: vec![0; num_topics],
             touched: Vec::with_capacity(64),
             q: vec![0.0; num_topics],
             prob: vec![0.0; num_topics],
+            kf: Vec::new(),
         }
+    }
+
+    /// Grow the kernel-extension buffer to at least `len` (the
+    /// [`Kernel::extend_scratch`] hook's workhorse). Growth is counted as
+    /// an allocation; calls at or below the current size are free, which
+    /// is what makes repeated per-round hook invocations allocation-free
+    /// after the first round.
+    pub fn ensure_kf(&mut self, len: usize) {
+        if self.kf.capacity() < len {
+            SCRATCH_ALLOCS.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+            let additional = len - self.kf.len();
+            self.kf.reserve(additional);
+        }
+    }
+
+    /// Process-wide count of scratch constructions + buffer growths (the
+    /// sampling path must leave it unchanged in steady state).
+    pub fn allocations() -> u64 {
+        SCRATCH_ALLOCS.load(std::sync::atomic::Ordering::Relaxed)
     }
 
     /// Clear the dense `ct` expansion via the touched list.

@@ -15,11 +15,173 @@
 //! `(α+C_d^k)/(C_k+Vβ)`. Most of the probability mass sits in `C` then `B`,
 //! so the bucket test order makes the expected per-token cost O(K_d+K_t).
 
-use crate::corpus::Corpus;
-use crate::model::{Assignments, DocTopic, TopicCounts, WordTopicTable};
+use anyhow::Result;
+
+use crate::corpus::{Corpus, InvertedIndex};
+use crate::model::{
+    Assignments, DocTopic, DocView, ModelBlock, SparseRow, TopicCounts, WordTopicTable,
+};
 use crate::util::rng::Pcg64;
 
+use super::kernel::{Kernel, KernelCaps};
 use super::{Params, Scratch};
+
+/// Eq. 2's `A+B+C` buckets as a word-major block [`Kernel`]. The `A`
+/// bucket sum is maintained in O(1) per token move (as in the doc-major
+/// sweep below); `B` is rebuilt per token over the doc's non-zeros and
+/// `C` over the word row's — word-major order forfeits SparseLDA's
+/// per-document caching, which is precisely the eq. 2 → eq. 3 argument
+/// the paper makes (§4.2). Exists as the baseline-core oracle on the
+/// block interface; as a `SamplerKind` it still selects the data-parallel
+/// baseline system.
+pub struct SparseYaoBlock;
+
+impl SparseYaoBlock {
+    pub const CAPS: KernelCaps = KernelCaps {
+        name: "sparse-yao",
+        data_parallel_baseline: true,
+        thread_safe: true,
+    };
+}
+
+impl Kernel for SparseYaoBlock {
+    fn caps(&self) -> KernelCaps {
+        Self::CAPS
+    }
+
+    fn sample_block(
+        &mut self,
+        _corpus: &Corpus,
+        docs: &mut DocView<'_>,
+        index: &InvertedIndex,
+        block: &mut ModelBlock,
+        ck: &mut TopicCounts,
+        params: &Params,
+        scratch: &mut Scratch,
+        rng: &mut Pcg64,
+    ) -> Result<u64> {
+        let k = params.num_topics;
+        let mut sampled = 0u64;
+        let start = index.words.partition_point(|&w| w < block.lo);
+        let end = index.words.partition_point(|&w| w < block.hi);
+        let Scratch { ct, touched, .. } = scratch;
+        // s = Σ_k αβ/(C_k+Vβ): O(K) once per call, O(1) per move.
+        let mut s_bucket: f64 = (0..k)
+            .map(|kk| params.alpha * params.beta / (ck.get(kk) as f64 + params.vbeta))
+            .sum();
+
+        for wi in start..end {
+            let word = index.words[wi];
+            if block.stride != 1 && (word - block.lo) % block.stride != 0 {
+                continue;
+            }
+            for &t in touched.iter() {
+                ct[t as usize] = 0;
+            }
+            touched.clear();
+            block.row(word).expand_into(ct, touched);
+
+            for si in index.offsets[wi] as usize..index.offsets[wi + 1] as usize {
+                let slot = index.slots[si];
+                let d = slot.doc as usize;
+                let pos = slot.pos as usize;
+                let z_old = docs.z_row(d)[pos];
+                let zo = z_old as usize;
+
+                // Remove the token; `s` follows in O(1).
+                s_bucket -= params.alpha * params.beta / (ck.get(zo) as f64 + params.vbeta);
+                docs.doc_mut(d).dec(z_old);
+                ct[zo] -= 1;
+                ck.dec(zo);
+                s_bucket += params.alpha * params.beta / (ck.get(zo) as f64 + params.vbeta);
+
+                let doc = docs.doc(d);
+                // B: Σ β·C_d^k/(C_k+Vβ) over the doc's non-zeros.
+                let mut r_bucket = 0.0;
+                for (kk, c) in doc.iter() {
+                    r_bucket +=
+                        params.beta * c as f64 / (ck.get(kk as usize) as f64 + params.vbeta);
+                }
+                // C: Σ (α+C_d^k)·C_t^k/(C_k+Vβ) over the row's non-zeros.
+                let mut c_bucket = 0.0;
+                for &t in touched.iter() {
+                    let ti = t as usize;
+                    if ct[ti] > 0 {
+                        c_bucket += (params.alpha + doc.get(t) as f64) * ct[ti] as f64
+                            / (ck.get(ti) as f64 + params.vbeta);
+                    }
+                }
+
+                let u = rng.next_f64() * (s_bucket + r_bucket + c_bucket);
+                let z_new = if u < c_bucket {
+                    // Word bucket: walk the row's non-zeros.
+                    let mut acc = 0.0;
+                    let mut chosen = None;
+                    for &t in touched.iter() {
+                        let ti = t as usize;
+                        if ct[ti] == 0 {
+                            continue;
+                        }
+                        acc += (params.alpha + doc.get(t) as f64) * ct[ti] as f64
+                            / (ck.get(ti) as f64 + params.vbeta);
+                        if u <= acc {
+                            chosen = Some(t);
+                            break;
+                        }
+                    }
+                    chosen.unwrap_or(z_old)
+                } else if u < c_bucket + r_bucket {
+                    // Doc bucket: walk C_d^k non-zeros (desc by count).
+                    let target = u - c_bucket;
+                    let mut acc = 0.0;
+                    let mut chosen = None;
+                    for (kk, c) in doc.iter() {
+                        acc += params.beta * c as f64
+                            / (ck.get(kk as usize) as f64 + params.vbeta);
+                        if target <= acc {
+                            chosen = Some(kk);
+                            break;
+                        }
+                    }
+                    chosen.unwrap_or_else(|| doc.iter().last().map(|(kk, _)| kk).unwrap())
+                } else {
+                    // Smoothing bucket: dense walk (rare).
+                    let target = u - c_bucket - r_bucket;
+                    let mut acc = 0.0;
+                    let mut chosen = (k - 1) as u32;
+                    for kk in 0..k {
+                        acc += params.alpha * params.beta / (ck.get(kk) as f64 + params.vbeta);
+                        if target <= acc {
+                            chosen = kk as u32;
+                            break;
+                        }
+                    }
+                    chosen
+                };
+
+                // Add the token back; `s` follows in O(1).
+                let zn = z_new as usize;
+                s_bucket -= params.alpha * params.beta / (ck.get(zn) as f64 + params.vbeta);
+                docs.doc_mut(d).inc(z_new);
+                if ct[zn] == 0 && !touched.contains(&z_new) {
+                    touched.push(z_new);
+                }
+                ct[zn] += 1;
+                ck.inc(zn);
+                s_bucket += params.alpha * params.beta / (ck.get(zn) as f64 + params.vbeta);
+                docs.z_row_mut(d)[pos] = z_new;
+                sampled += 1;
+            }
+
+            *block.row_mut(word) = SparseRow::compress_from(ct, touched);
+        }
+        for &t in touched.iter() {
+            ct[t as usize] = 0;
+        }
+        touched.clear();
+        Ok(sampled)
+    }
+}
 
 /// Persistent sampler state across sweeps (bucket caches).
 pub struct SparseYao {

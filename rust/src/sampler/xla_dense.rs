@@ -27,7 +27,50 @@ use crate::corpus::{Corpus, InvertedIndex};
 use crate::model::{DocView, ModelBlock, TopicCounts};
 use crate::util::rng::Pcg64;
 
-use super::Params;
+use super::kernel::{Kernel, KernelCaps};
+use super::{Params, Scratch};
+
+/// The microbatch path as a [`Kernel`], wrapping the process's shared
+/// device executor for the duration of one round. **Not** thread-safe
+/// (capability-queried, not table-checked): there is exactly one PJRT
+/// client per process, so this kernel only rides the simulated backend,
+/// which constructs it per round around the installed executor.
+pub struct XlaKernel<'a> {
+    exec: &'a mut dyn MicrobatchExecutor,
+}
+
+impl<'a> XlaKernel<'a> {
+    pub const CAPS: KernelCaps = KernelCaps {
+        name: "xla",
+        data_parallel_baseline: false,
+        thread_safe: false,
+    };
+
+    /// Wrap the shared device executor for one round of sampling.
+    pub fn new(exec: &'a mut dyn MicrobatchExecutor) -> XlaKernel<'a> {
+        XlaKernel { exec }
+    }
+}
+
+impl Kernel for XlaKernel<'_> {
+    fn caps(&self) -> KernelCaps {
+        Self::CAPS
+    }
+
+    fn sample_block(
+        &mut self,
+        corpus: &Corpus,
+        docs: &mut DocView<'_>,
+        index: &InvertedIndex,
+        block: &mut ModelBlock,
+        ck: &mut TopicCounts,
+        params: &Params,
+        _scratch: &mut Scratch,
+        rng: &mut Pcg64,
+    ) -> Result<u64> {
+        sample_block_microbatch(corpus, docs, index, block, ck, params, self.exec, rng)
+    }
+}
 
 /// A device that samples one microbatch of B tokens over K topics.
 pub trait MicrobatchExecutor {

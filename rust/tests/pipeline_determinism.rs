@@ -142,3 +142,40 @@ fn pipelined_traffic_totals_match_threaded() {
     assert_eq!(overlapped_off, 0);
     assert!(overlapped_pip > 0, "staged transfers must be metered as overlapped");
 }
+
+#[test]
+fn mh_alias_kernel_is_bitwise_identical_across_all_executions() {
+    // The ISSUE 4 satellite bar: the MH alias kernel — whose proposal
+    // tables are built at block-lease time and invalidated at commit —
+    // must be invisible to the execution backend exactly like the X+Y
+    // kernel. A rectangular rotation (B > P) exercises the staged path.
+    let base = || builder(3, 4, 16, 23).sampler(SamplerKind::MhAlias);
+    let sim = run(base(), Execution::Simulated, 3);
+    let thr = run(base(), Execution::Threaded { parallelism: 3 }, 3);
+    let pip = run(base(), pipelined(2), 3);
+    assert_eq!(sim.tokens, pip.tokens, "every token sampled exactly once in all modes");
+    assert_eq!(sim.ll_bits, thr.ll_bits, "mh-alias ll trajectory: simulated vs threaded");
+    assert_eq!(sim.ll_bits, pip.ll_bits, "mh-alias ll trajectory: simulated vs pipelined");
+    assert_eq!(sim.digest, thr.digest, "mh-alias digest: simulated vs threaded");
+    assert_eq!(sim.digest, pip.digest, "mh-alias digest: simulated vs pipelined");
+    for (w, (a, b)) in sim.wt.rows.iter().zip(pip.wt.rows.iter()).enumerate() {
+        assert_eq!(a, b, "word {w} topic counts diverged under mh-alias");
+    }
+    assert!(pip.staged_hits > 0, "the pipelined run must actually stage blocks");
+}
+
+#[test]
+fn mh_alias_budget_caps_tables_without_changing_traffic_shape() {
+    // A starving alias budget (uniform-proposal fallback everywhere) is a
+    // *different sampler configuration* — but it must still be execution-
+    // invariant, and it must cache nothing.
+    let base = |budget: f64| {
+        builder(3, 3, 12, 29)
+            .sampler(SamplerKind::MhAlias)
+            .configure(move |cfg| cfg.train.alias_budget_mib = budget)
+    };
+    let sim = run(base(1e-6), Execution::Simulated, 2);
+    let pip = run(base(1e-6), pipelined(3), 2);
+    assert_eq!(sim.ll_bits, pip.ll_bits, "budget-capped mh-alias: ll series");
+    assert_eq!(sim.digest, pip.digest, "budget-capped mh-alias: digest");
+}

@@ -1,0 +1,52 @@
+//! Scratch lifecycle: buffers are allocated once per worker and reused
+//! across every round and iteration — the sampling path never allocates
+//! *scratch* in steady state (the ISSUE 4 satellite bar). Lease-time
+//! work that allocates by design — mh-alias builds its proposal tables
+//! on every block lease, accounted under `MemCategory::AliasCache` — is
+//! outside the counter's scope.
+//!
+//! `Scratch::allocations()` counts every `Scratch` construction and every
+//! kernel-extension buffer growth process-wide. This file holds exactly
+//! one test so the counter observes only its own session's allocations
+//! (integration tests run in their own process; sibling tests would race
+//! the counter).
+
+use mplda::config::SamplerKind;
+use mplda::engine::{Execution, Session};
+use mplda::sampler::Scratch;
+
+#[test]
+fn threaded_training_never_allocates_scratch_after_warmup() {
+    for sampler in [SamplerKind::InvertedXy, SamplerKind::MhAlias] {
+        let mut s = Session::builder()
+            .corpus_preset("tiny")
+            .topics(16)
+            .sampler(sampler)
+            .seed(7)
+            .workers(4)
+            .cluster_preset("custom")
+            .machines(4)
+            .execution(Execution::Threaded { parallelism: 4 })
+            .iterations(0)
+            .build()
+            .unwrap();
+
+        // Warmup: worker construction allocates one Scratch each, and the
+        // first rounds size any kernel-extension buffers.
+        s.step().unwrap();
+        let after_warmup = Scratch::allocations();
+
+        // Steady state: rounds and iterations must reuse the per-worker
+        // scratch — zero constructions, zero buffer growth.
+        for _ in 0..3 {
+            s.step().unwrap();
+        }
+        assert_eq!(
+            Scratch::allocations(),
+            after_warmup,
+            "{}: the sampling path allocated scratch after warmup",
+            sampler.name()
+        );
+        s.check_consistency().unwrap();
+    }
+}
