@@ -1,0 +1,229 @@
+//! Bench — online serving latency/throughput vs cache budget and batch
+//! size (EXPERIMENTS.md §E9).
+//!
+//! Grid: `serve.cache_budget_mib` ∈ {starved, half, full} ×
+//! `max_batch` ∈ {1, 16, 64}. Every cell serves the identical request
+//! workload through the full stack (sharded model → LRU paging →
+//! micro-batcher → executor) and reports docs/s, p99 latency and cache
+//! hit rate.
+//!
+//! Acceptance (asserted):
+//! * the digest of all served `DocTopics` is **equal in every cell** and
+//!   equal to the offline `TopicModel::infer` oracle — budget and batch
+//!   size are pure performance knobs;
+//! * cache hit rate is monotonically non-decreasing starved → half →
+//!   full (LRU inclusion), strictly better at full than starved;
+//! * p99 improves from starved to full (adjacent cells compared with
+//!   slack for the histogram's factor-2 bucket resolution);
+//! * the `ServeCache` peak never exceeds the budget.
+//!
+//! `cargo bench --bench serve_latency`
+
+use std::time::{Duration, Instant};
+
+use mplda::engine::{BowDoc, InferOptions, Session, TopicModel};
+use mplda::serve::{BatchOpts, Harness, InferRequest, ShardedTopicModel};
+use mplda::util::bench::{banner, fmt_rate, Table};
+use mplda::util::rng::Pcg64;
+
+const ITERATIONS: usize = 6;
+const BLOCKS: usize = 16;
+
+fn digest(results: &[Vec<Vec<(u32, u32)>>]) -> u64 {
+    let mut h = 0xcbf29ce484222325u64;
+    let mut mix = |x: u64| {
+        h ^= x;
+        h = h.wrapping_mul(0x100000001b3);
+    };
+    for req in results {
+        mix(req.len() as u64);
+        for doc in req {
+            mix(doc.len() as u64);
+            for &(t, c) in doc {
+                mix(((t as u64) << 32) | c as u64);
+            }
+        }
+    }
+    h
+}
+
+fn snap(folded: &mplda::engine::DocTopics) -> Vec<Vec<(u32, u32)>> {
+    (0..folded.len()).map(|d| folded.counts(d).iter().collect()).collect()
+}
+
+fn main() {
+    mplda::util::logger::init();
+    banner(
+        "serve_latency",
+        "online serving docs/s and p99 across cache budget (starved/half/full) x \
+         micro-batch size, digest-checked against offline inference.",
+    );
+    let full_run = std::env::var("MPLDA_BENCH_FULL").is_ok();
+    let (k, train_iters, nreq) = if full_run { (256, 12, 128) } else { (64, 5, 32) };
+
+    // One trained model backs every cell.
+    let mut session = Session::builder()
+        .corpus_preset("custom")
+        .topics(k)
+        .iterations(train_iters)
+        .seed(42)
+        .workers(4)
+        .cluster_preset("custom")
+        .machines(4)
+        .ll_every(0)
+        .configure(|cfg| {
+            cfg.corpus.vocab = 2_000;
+            cfg.corpus.docs = 1_500;
+            cfg.corpus.avg_doc_len = 60;
+            cfg.corpus.seed = 7;
+        })
+        .build()
+        .expect("session builds");
+    session.train().expect("training runs");
+    let offline: TopicModel = session.freeze().expect("model freezes");
+
+    // Fixed request workload: nreq requests x 2 docs x ~40 tokens.
+    let mut rng = Pcg64::new(8);
+    let requests: Vec<(Vec<BowDoc>, u64)> = (0..nreq)
+        .map(|r| {
+            let docs = (0..2)
+                .map(|_| {
+                    BowDoc::new(
+                        (0..40).map(|_| rng.next_below(2_000) as u32).collect(),
+                    )
+                })
+                .collect();
+            (docs, 5_000 + r as u64)
+        })
+        .collect();
+    let total_docs: usize = requests.iter().map(|(d, _)| d.len()).sum();
+
+    // Offline oracle digest.
+    let oracle: Vec<Vec<Vec<(u32, u32)>>> = requests
+        .iter()
+        .map(|(docs, seed)| {
+            let opts = InferOptions { iterations: ITERATIONS, seed: *seed, threads: 1 };
+            snap(&offline.infer_with(docs, &opts).expect("oracle infer"))
+        })
+        .collect();
+    let oracle_digest = digest(&oracle);
+
+    // Budgets from real block sizes.
+    let probe = ShardedTopicModel::from_table(
+        offline.word_topic(),
+        offline.totals().clone(),
+        *offline.params(),
+        BLOCKS,
+        0.0,
+    )
+    .expect("probe model");
+    let mib = |bytes: u64| (bytes as f64 / (1u64 << 20) as f64).max(1e-4);
+    let budgets = [
+        ("starved", mib(probe.max_block_bytes() + probe.max_block_bytes() / 2)),
+        ("half", mib(probe.total_block_bytes() / 2)),
+        ("full", mib(probe.total_block_bytes() + probe.max_block_bytes())),
+    ];
+    println!(
+        "model: V=2000 K={k} in {BLOCKS} blocks ({} KiB total, {} KiB max block)",
+        probe.total_block_bytes() / 1024,
+        probe.max_block_bytes() / 1024
+    );
+    println!(
+        "workload: {} requests, {} docs | budgets MiB: starved {:.3} / half {:.3} / full {:.3}\n",
+        requests.len(),
+        total_docs,
+        budgets[0].1,
+        budgets[1].1,
+        budgets[2].1
+    );
+
+    let mut table =
+        Table::new(&["budget", "batch", "docs/s", "p99 ms", "hit rate", "digest"]);
+    // [budget][batch] -> (hit_rate, p99_ms)
+    let mut cells: Vec<Vec<(f64, f64)>> = Vec::new();
+    for (budget_name, budget_mib) in budgets {
+        let mut row_cells = Vec::new();
+        for batch in [1usize, 16, 64] {
+            let model = ShardedTopicModel::from_table(
+                offline.word_topic(),
+                offline.totals().clone(),
+                *offline.params(),
+                BLOCKS,
+                budget_mib,
+            )
+            .expect("cell model");
+            let harness = Harness::new(
+                model,
+                BatchOpts { max_batch: batch, max_wait: Duration::from_millis(1) },
+            );
+            let t0 = Instant::now();
+            let rxs: Vec<_> = requests
+                .iter()
+                .map(|(docs, seed)| {
+                    harness.submit(InferRequest {
+                        docs: docs.clone(),
+                        seed: *seed,
+                        iterations: ITERATIONS,
+                    })
+                })
+                .collect();
+            let served: Vec<Vec<Vec<(u32, u32)>>> = rxs
+                .into_iter()
+                .map(|rx| snap(&rx.recv().expect("executor alive").expect("infer ok")))
+                .collect();
+            let secs = t0.elapsed().as_secs_f64();
+            let stats = harness.stats();
+            let cell_digest = digest(&served);
+            assert_eq!(
+                cell_digest, oracle_digest,
+                "{budget_name}/batch {batch}: served results must equal offline"
+            );
+            assert!(
+                stats.cache.peak_bytes <= stats.cache.budget_bytes,
+                "{budget_name}/batch {batch}: ServeCache peak over budget"
+            );
+            let hit_rate = stats.cache.hit_rate();
+            table.row(&[
+                format!("{budget_name} ({budget_mib:.3}M)"),
+                batch.to_string(),
+                fmt_rate(total_docs as f64 / secs, "doc"),
+                format!("{:.2}", stats.p99_ms),
+                format!("{:.1}%", hit_rate * 100.0),
+                "==offline".into(),
+            ]);
+            row_cells.push((hit_rate, stats.p99_ms));
+            harness.shutdown();
+        }
+        cells.push(row_cells);
+    }
+    println!("{}", table.render());
+
+    // Monotonicity bars, per batch column across starved -> half -> full.
+    for (b, batch) in [1usize, 16, 64].iter().enumerate() {
+        let (hr_starved, p99_starved) = cells[0][b];
+        let (hr_half, p99_half) = cells[1][b];
+        let (hr_full, p99_full) = cells[2][b];
+        assert!(
+            hr_half >= hr_starved - 1e-9 && hr_full >= hr_half - 1e-9,
+            "batch {batch}: hit rate must not degrade with budget \
+             ({hr_starved:.3} -> {hr_half:.3} -> {hr_full:.3})"
+        );
+        assert!(
+            hr_full > hr_starved,
+            "batch {batch}: full budget must strictly beat starved hit rate"
+        );
+        // p99 resolution is a factor-2 histogram bucket: adjacent cells
+        // get slack, the endpoints must separate cleanly.
+        assert!(
+            p99_half <= p99_starved * 2.1 && p99_full <= p99_half * 2.1,
+            "batch {batch}: p99 must not degrade with budget \
+             ({p99_starved:.2} -> {p99_half:.2} -> {p99_full:.2} ms)"
+        );
+        assert!(
+            p99_full <= p99_starved,
+            "batch {batch}: full budget p99 must not exceed starved p99"
+        );
+    }
+    println!("digests equal across all cells and vs offline ✓");
+    println!("hit rate and p99 improve monotonically starved → full ✓");
+}

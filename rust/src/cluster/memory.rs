@@ -29,11 +29,16 @@ pub enum MemCategory {
     AliasCache,
     /// KV-store shard hosted on this node.
     KvShard,
+    /// Model blocks paged into the serving tier's LRU cache
+    /// (`serve::ShardedTopicModel`), bounded by `serve.cache_budget_mib`
+    /// — the cache never admits past the budget, so this category's peak
+    /// is the enforcement witness (`tests/serve_determinism.rs`).
+    ServeCache,
     /// Topic totals, buffers, misc.
     Other,
 }
 
-const NUM_CATEGORIES: usize = 8;
+const NUM_CATEGORIES: usize = 9;
 
 fn cat_idx(c: MemCategory) -> usize {
     match c {
@@ -44,7 +49,8 @@ fn cat_idx(c: MemCategory) -> usize {
         MemCategory::Staging => 4,
         MemCategory::AliasCache => 5,
         MemCategory::KvShard => 6,
-        MemCategory::Other => 7,
+        MemCategory::ServeCache => 7,
+        MemCategory::Other => 8,
     }
 }
 

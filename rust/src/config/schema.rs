@@ -402,6 +402,49 @@ impl Default for BaselineConfig {
     }
 }
 
+/// Online-serving tier knobs (`mplda serve`, `serve::`).
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// TCP port the front end binds on 127.0.0.1 (`0` = OS-assigned
+    /// ephemeral port, printed at startup — what the loopback smoke test
+    /// uses).
+    pub port: usize,
+    /// Connection-handler threads in the front end's worker pool. The
+    /// thread count never changes results — every request's documents
+    /// sample on RNG streams keyed to the request, not the thread.
+    pub threads: usize,
+    /// Byte budget (MiB) of the serving tier's LRU block cache; `0` =
+    /// unlimited. The cache never admits past the budget (blocks larger
+    /// than the whole budget are served uncached), so
+    /// `MemCategory::ServeCache` peak ≤ budget always holds. A model
+    /// larger than the cache still serves correctly, just slower.
+    pub cache_budget_mib: f64,
+    /// Most documents a micro-batch may gather before it is cut (a
+    /// request's documents are never split across batches, so one
+    /// oversized request still forms a single batch).
+    pub max_batch: usize,
+    /// Longest a queued request may wait (milliseconds) for the batch to
+    /// fill before it is cut anyway — the latency half of the
+    /// batching trade-off.
+    pub max_wait_ms: u64,
+    /// Default fold-in Gibbs sweeps per served document (requests may
+    /// override per query).
+    pub iterations: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            port: 7878,
+            threads: 2,
+            cache_budget_mib: 0.0,
+            max_batch: 32,
+            max_wait_ms: 5,
+            iterations: 20,
+        }
+    }
+}
+
 /// PJRT/XLA runtime settings.
 #[derive(Debug, Clone)]
 pub struct RuntimeConfig {
@@ -438,6 +481,7 @@ pub struct Config {
     pub coord: CoordConfig,
     pub cluster: ClusterConfig,
     pub baseline: BaselineConfig,
+    pub serve: ServeConfig,
     pub runtime: RuntimeConfig,
     pub output: OutputConfig,
 }
@@ -535,6 +579,12 @@ impl Config {
             "cluster.enforce_ram" => self.cluster.enforce_ram = b(value)?,
             "baseline.sync_period_tokens" => self.baseline.sync_period_tokens = u(value)?,
             "baseline.server_shards" => self.baseline.server_shards = u(value)?,
+            "serve.port" => self.serve.port = u(value)?,
+            "serve.threads" => self.serve.threads = u(value)?,
+            "serve.cache_budget_mib" => self.serve.cache_budget_mib = f(value)?,
+            "serve.max_batch" => self.serve.max_batch = u(value)?,
+            "serve.max_wait_ms" => self.serve.max_wait_ms = u(value)? as u64,
+            "serve.iterations" => self.serve.iterations = u(value)?,
             "runtime.artifacts_dir" => self.runtime.artifacts_dir = s(value)?,
             "output.dir" => self.output.dir = s(value)?,
             "output.write_csv" => self.output.write_csv = b(value)?,
@@ -601,6 +651,21 @@ impl Config {
         }
         if self.corpus.preset == "uci" && self.corpus.path.is_empty() {
             bail!("corpus.preset = uci requires corpus.path");
+        }
+        if self.serve.port > u16::MAX as usize {
+            bail!("serve.port must fit in 16 bits (0 = ephemeral)");
+        }
+        if self.serve.threads == 0 {
+            bail!("serve.threads must be >= 1");
+        }
+        if self.serve.cache_budget_mib < 0.0 {
+            bail!("serve.cache_budget_mib must be >= 0 (0 = unlimited)");
+        }
+        if self.serve.max_batch == 0 {
+            bail!("serve.max_batch must be >= 1");
+        }
+        if self.serve.iterations == 0 {
+            bail!("serve.iterations must be >= 1");
         }
         Ok(())
     }
@@ -731,6 +796,29 @@ machines = 10
             .unwrap_err()
             .to_string();
         assert!(err.contains("threaded"), "{err}");
+    }
+
+    #[test]
+    fn serve_section_parses_and_validates() {
+        let cfg = Config::from_str(
+            "[serve]\nport = 0\nthreads = 4\ncache_budget_mib = 32.0\nmax_batch = 64\nmax_wait_ms = 2\niterations = 10",
+        )
+        .unwrap();
+        assert_eq!(cfg.serve.port, 0);
+        assert_eq!(cfg.serve.threads, 4);
+        assert_eq!(cfg.serve.cache_budget_mib, 32.0);
+        assert_eq!(cfg.serve.max_batch, 64);
+        assert_eq!(cfg.serve.max_wait_ms, 2);
+        assert_eq!(cfg.serve.iterations, 10);
+        assert!(Config::from_str("[serve]\nport = 70000").is_err());
+        assert!(Config::from_str("[serve]\nthreads = 0").is_err());
+        assert!(Config::from_str("[serve]\ncache_budget_mib = -1.0").is_err());
+        assert!(Config::from_str("[serve]\nmax_batch = 0").is_err());
+        assert!(Config::from_str("[serve]\niterations = 0").is_err());
+        // Defaults: bounded batching, unlimited cache.
+        let d = ServeConfig::default();
+        assert_eq!(d.cache_budget_mib, 0.0);
+        assert!(d.max_batch >= 1 && d.threads >= 1 && d.iterations >= 1);
     }
 
     #[test]

@@ -102,6 +102,10 @@ pub struct Driver {
     assign: Assignments,
     dt: DocTopic,
     kv: KvStore,
+    /// The static vocabulary → block layout the KV-store's blocks follow
+    /// (kept for serving: `serve::ShardedTopicModel` routes word lookups
+    /// through it).
+    block_map: BlockMap,
     schedule: RotationSchedule,
     workers: Vec<WorkerState>,
     /// Validated doc→worker map (shard `i` = docs of `workers[i]`), built
@@ -218,6 +222,7 @@ impl Driver {
             }
         };
         let blocks = Assignments::build_blocks(&wt, &map);
+        let block_map = map;
         drop(wt); // the full table never persists — blocks own the rows now
 
         let spec = ClusterSpec::from_config(&cfg.cluster);
@@ -285,6 +290,7 @@ impl Driver {
             assign,
             dt,
             kv,
+            block_map,
             schedule,
             workers,
             doc_ownership,
@@ -680,6 +686,21 @@ impl Driver {
     /// Access to pieces experiments need.
     pub fn kv(&self) -> &KvStore {
         &self.kv
+    }
+
+    /// The vocabulary → block layout the KV-store's blocks follow.
+    pub fn block_map(&self) -> &BlockMap {
+        &self.block_map
+    }
+
+    /// Tear the driver down into the parts the serving tier needs: the
+    /// (quiescent) block store, the block layout, the hyperparameters and
+    /// the vocabulary size — the model **stays sharded**; nothing is
+    /// materialized densely. Consumed by
+    /// [`crate::engine::Session::freeze_sharded`].
+    pub fn into_serving_parts(self) -> (KvStore, BlockMap, Params, usize) {
+        let num_words = self.corpus.num_words();
+        (self.kv, self.block_map, self.params, num_words)
     }
 
     /// The simulated cluster description this driver runs against.

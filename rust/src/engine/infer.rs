@@ -27,8 +27,8 @@
 use anyhow::{bail, Result};
 
 use crate::metrics::perplexity::token_log_prob;
-use crate::model::{SparseCounts, TopicCounts, WordTopicTable};
-use crate::sampler::Params;
+use crate::model::{SparseCounts, SparseRow, TopicCounts, WordTopicTable};
+use crate::sampler::{Params, Scratch};
 use crate::util::rng::Pcg64;
 
 /// One held-out document as a bag of word ids (duplicates = counts).
@@ -133,12 +133,25 @@ impl DocTopics {
     }
 }
 
-/// A trained, frozen LDA model ready to serve fold-in queries — what
-/// [`Session::freeze`](super::Session::freeze) returns.
-pub struct TopicModel {
-    wt: WordTopicTable,
-    ck: TopicCounts,
-    params: Params,
+/// A source of frozen word–topic rows, visitor-style so implementations
+/// may hand out rows under internal locks (the paged serving model) or
+/// straight from an owned table (the dense offline model). The *same*
+/// fold-in arithmetic ([`FrozenStats::fold_in_doc`]) runs over either, so
+/// results are bitwise identical whichever source backs a query — the
+/// serving tier's determinism argument (DESIGN.md §Serving).
+pub(crate) trait RowSource: Sync {
+    /// Visit word `w`'s frozen `C_t^k` row.
+    fn with_row(&self, w: u32, f: &mut dyn FnMut(&SparseRow));
+    /// Vocabulary size `V` (for input validation).
+    fn num_words(&self) -> usize;
+}
+
+/// The precomputed per-topic statistics of a frozen model that every
+/// fold-in query shares — everything *except* the word–topic rows, which
+/// arrive through a [`RowSource`]. Owned by both [`TopicModel`] (dense,
+/// offline) and `serve::ShardedTopicModel` (block-paged, online).
+pub(crate) struct FrozenStats {
+    pub(crate) params: Params,
     /// `1/(C_k + Vβ)` per topic — shared by every query (model is
     /// read-only).
     inv: Vec<f64>,
@@ -146,6 +159,178 @@ pub struct TopicModel {
     /// conditional.
     prior: Vec<f64>,
     prior_total: f64,
+}
+
+impl FrozenStats {
+    /// Precompute from frozen totals. Fails on dimension mismatches or
+    /// invalid totals, so stats that construct are servable.
+    pub(crate) fn new(ck: &TopicCounts, params: Params) -> Result<FrozenStats> {
+        if ck.num_topics() != params.num_topics {
+            bail!("totals have K={}, params say K={}", ck.num_topics(), params.num_topics);
+        }
+        if !ck.is_valid() {
+            bail!("topic totals contain negative entries — state is not quiescent");
+        }
+        let inv: Vec<f64> =
+            (0..params.num_topics).map(|k| 1.0 / (ck.get(k) as f64 + params.vbeta)).collect();
+        let prior: Vec<f64> = inv.iter().map(|&v| params.alpha * params.beta * v).collect();
+        let prior_total = prior.iter().sum();
+        Ok(FrozenStats { params, inv, prior, prior_total })
+    }
+
+    /// Gibbs-sample one document against the frozen model. O(K + K_t)
+    /// per token: the all-smoothing floor is precomputed, the doc and
+    /// word sparse parts are added over their non-zeros. Works entirely
+    /// in the caller's [`Scratch`] (`prob` + `zbuf`) — allocation-free
+    /// once the scratch has warmed to the longest document seen.
+    pub(crate) fn fold_in_doc<S: RowSource + ?Sized>(
+        &self,
+        doc: &BowDoc,
+        sweeps: usize,
+        rng: &mut Pcg64,
+        scratch: &mut Scratch,
+        src: &S,
+    ) -> SparseCounts {
+        let k = self.params.num_topics;
+        let alpha = self.params.alpha;
+        let beta = self.params.beta;
+        scratch.ensure_zbuf(doc.tokens.len());
+        let Scratch { ref mut prob, ref mut zbuf, .. } = *scratch;
+        assert!(prob.len() >= k, "scratch sized for K={}, model has K={k}", prob.len());
+        let prob = &mut prob[..k];
+        let mut counts = SparseCounts::new();
+        zbuf.clear();
+        for _ in &doc.tokens {
+            let t = rng.next_below(k as u64) as u32;
+            counts.inc(t);
+            zbuf.push(t);
+        }
+        for _ in 0..sweeps {
+            for (n, &w) in doc.tokens.iter().enumerate() {
+                counts.dec(zbuf[n]);
+                // p_k = (C_d^k + α)(C_w^k + β)·inv_k, regrouped as
+                // αβ·inv (dense, precomputed) + C_d^k·β·inv (doc nnz)
+                // + (C_d^k + α)·C_w^k·inv (word-row nnz).
+                prob.copy_from_slice(&self.prior);
+                let mut total = self.prior_total;
+                for (t, c) in counts.iter() {
+                    let add = c as f64 * beta * self.inv[t as usize];
+                    prob[t as usize] += add;
+                    total += add;
+                }
+                src.with_row(w, &mut |row| {
+                    for (t, ct) in row.iter() {
+                        let add =
+                            (counts.get(t) as f64 + alpha) * ct as f64 * self.inv[t as usize];
+                        prob[t as usize] += add;
+                        total += add;
+                    }
+                });
+                let new = rng.discrete(prob, total) as u32;
+                counts.inc(new);
+                zbuf[n] = new;
+            }
+        }
+        counts
+    }
+}
+
+/// Validate a query batch against a vocabulary of `v` words.
+pub(crate) fn validate_docs(docs: &[BowDoc], v: usize) -> Result<()> {
+    for (i, doc) in docs.iter().enumerate() {
+        if let Some(&w) = doc.tokens.iter().find(|&&w| w as usize >= v) {
+            bail!("doc {i}: word id {w} out of vocabulary (V={v})");
+        }
+    }
+    Ok(())
+}
+
+/// Fold in a batch over any [`RowSource`], allocating one fresh
+/// [`Scratch`] per thread. Deterministic for a fixed `opts.seed`
+/// regardless of `opts.threads` — each document samples on its own RNG
+/// stream keyed by batch position.
+pub(crate) fn infer_batch<S: RowSource + ?Sized>(
+    stats: &FrozenStats,
+    src: &S,
+    docs: &[BowDoc],
+    opts: &InferOptions,
+) -> Result<DocTopics> {
+    let threads = opts.threads.max(1).min(docs.len().max(1));
+    let mut scratches: Vec<Scratch> =
+        (0..threads).map(|_| Scratch::new(stats.params.num_topics)).collect();
+    infer_batch_reusing(stats, src, docs, opts.iterations, opts.seed, &mut scratches)
+}
+
+/// [`infer_batch`] reusing caller-held scratches: one worker thread per
+/// scratch (the batch loop never allocates once the scratches have
+/// warmed — `tests/scratch_lifecycle.rs`). Results are identical for any
+/// scratch count: per-document RNG streams are keyed by batch position,
+/// never by thread.
+pub(crate) fn infer_batch_reusing<S: RowSource + ?Sized>(
+    stats: &FrozenStats,
+    src: &S,
+    docs: &[BowDoc],
+    iterations: usize,
+    seed: u64,
+    scratches: &mut [Scratch],
+) -> Result<DocTopics> {
+    if iterations == 0 {
+        bail!("infer: iterations must be >= 1");
+    }
+    if scratches.is_empty() {
+        bail!("infer: need at least one scratch buffer");
+    }
+    validate_docs(docs, src.num_words())?;
+    let empty = DocTopics {
+        counts: Vec::new(),
+        num_topics: stats.params.num_topics,
+        alpha: stats.params.alpha,
+    };
+    if docs.is_empty() {
+        return Ok(empty);
+    }
+
+    let threads = scratches.len().min(docs.len());
+    let chunk = docs.len().div_ceil(threads);
+    let mut counts: Vec<SparseCounts> = vec![SparseCounts::new(); docs.len()];
+    std::thread::scope(|scope| {
+        for (ci, ((doc_chunk, out_chunk), scratch)) in docs
+            .chunks(chunk)
+            .zip(counts.chunks_mut(chunk))
+            .zip(scratches.iter_mut())
+            .enumerate()
+        {
+            scope.spawn(move || {
+                for (j, (doc, out)) in doc_chunk.iter().zip(out_chunk.iter_mut()).enumerate()
+                {
+                    let mut rng = Pcg64::with_stream(seed, (ci * chunk + j) as u64);
+                    *out = stats.fold_in_doc(doc, iterations, &mut rng, scratch, src);
+                }
+            });
+        }
+    });
+    Ok(DocTopics { counts, ..empty })
+}
+
+/// A trained, frozen LDA model ready to serve fold-in queries — what
+/// [`Session::freeze`](super::Session::freeze) returns. The whole
+/// word–topic table lives dense in process memory; the block-paged
+/// alternative for models bigger than RAM is
+/// [`crate::serve::ShardedTopicModel`].
+pub struct TopicModel {
+    wt: WordTopicTable,
+    ck: TopicCounts,
+    stats: FrozenStats,
+}
+
+impl RowSource for TopicModel {
+    fn with_row(&self, w: u32, f: &mut dyn FnMut(&SparseRow)) {
+        f(self.wt.row(w as usize));
+    }
+
+    fn num_words(&self) -> usize {
+        self.wt.num_words()
+    }
 }
 
 impl TopicModel {
@@ -159,22 +344,13 @@ impl TopicModel {
                 params.num_topics
             );
         }
-        if ck.num_topics() != params.num_topics {
-            bail!("totals have K={}, params say K={}", ck.num_topics(), params.num_topics);
-        }
-        if !ck.is_valid() {
-            bail!("topic totals contain negative entries — state is not quiescent");
-        }
-        let inv: Vec<f64> =
-            (0..params.num_topics).map(|k| 1.0 / (ck.get(k) as f64 + params.vbeta)).collect();
-        let prior: Vec<f64> = inv.iter().map(|&v| params.alpha * params.beta * v).collect();
-        let prior_total = prior.iter().sum();
-        Ok(TopicModel { wt, ck, params, inv, prior, prior_total })
+        let stats = FrozenStats::new(&ck, params)?;
+        Ok(TopicModel { wt, ck, stats })
     }
 
     /// Number of topics `K`.
     pub fn num_topics(&self) -> usize {
-        self.params.num_topics
+        self.stats.params.num_topics
     }
 
     /// Vocabulary size `V`.
@@ -184,7 +360,7 @@ impl TopicModel {
 
     /// The hyperparameters the model was trained with.
     pub fn params(&self) -> &Params {
-        &self.params
+        &self.stats.params
     }
 
     /// The frozen word–topic table.
@@ -207,90 +383,22 @@ impl TopicModel {
     /// `opts.seed` regardless of `opts.threads` — each document samples
     /// on its own RNG stream keyed by batch position.
     pub fn infer_with(&self, docs: &[BowDoc], opts: &InferOptions) -> Result<DocTopics> {
-        if opts.iterations == 0 {
-            bail!("infer: iterations must be >= 1");
-        }
-        let v = self.wt.num_words();
-        for (i, doc) in docs.iter().enumerate() {
-            if let Some(&w) = doc.tokens.iter().find(|&&w| w as usize >= v) {
-                bail!("doc {i}: word id {w} out of vocabulary (V={v})");
-            }
-        }
-        let empty = DocTopics {
-            counts: Vec::new(),
-            num_topics: self.params.num_topics,
-            alpha: self.params.alpha,
-        };
-        if docs.is_empty() {
-            return Ok(empty);
-        }
-
-        let threads = opts.threads.max(1).min(docs.len());
-        let chunk = docs.len().div_ceil(threads);
-        let mut counts: Vec<SparseCounts> = vec![SparseCounts::new(); docs.len()];
-        std::thread::scope(|scope| {
-            for (ci, (doc_chunk, out_chunk)) in
-                docs.chunks(chunk).zip(counts.chunks_mut(chunk)).enumerate()
-            {
-                scope.spawn(move || {
-                    let mut prob = vec![0.0f64; self.params.num_topics];
-                    for (j, (doc, out)) in
-                        doc_chunk.iter().zip(out_chunk.iter_mut()).enumerate()
-                    {
-                        let mut rng = Pcg64::with_stream(opts.seed, (ci * chunk + j) as u64);
-                        *out = self.fold_in_doc(doc, opts.iterations, &mut rng, &mut prob);
-                    }
-                });
-            }
-        });
-        Ok(DocTopics { counts, ..empty })
+        infer_batch(&self.stats, self, docs, opts)
     }
 
-    /// Gibbs-sample one document against the frozen model. O(K + K_t)
-    /// per token: the all-smoothing floor is precomputed, the doc and
-    /// word sparse parts are added over their non-zeros.
-    fn fold_in_doc(
+    /// [`TopicModel::infer_with`] reusing caller-held scratch buffers:
+    /// one worker thread per scratch (`opts.threads` is ignored), and the
+    /// batch loop allocates nothing once the scratches have warmed to the
+    /// longest document seen. Results are bitwise identical to
+    /// [`TopicModel::infer_with`] for the same seed and iterations,
+    /// whatever the scratch count.
+    pub fn infer_with_scratch(
         &self,
-        doc: &BowDoc,
-        sweeps: usize,
-        rng: &mut Pcg64,
-        prob: &mut [f64],
-    ) -> SparseCounts {
-        let k = self.params.num_topics;
-        let alpha = self.params.alpha;
-        let beta = self.params.beta;
-        let mut counts = SparseCounts::new();
-        let mut z = Vec::with_capacity(doc.tokens.len());
-        for _ in &doc.tokens {
-            let t = rng.next_below(k as u64) as u32;
-            counts.inc(t);
-            z.push(t);
-        }
-        for _ in 0..sweeps {
-            for (n, &w) in doc.tokens.iter().enumerate() {
-                counts.dec(z[n]);
-                // p_k = (C_d^k + α)(C_w^k + β)·inv_k, regrouped as
-                // αβ·inv (dense, precomputed) + C_d^k·β·inv (doc nnz)
-                // + (C_d^k + α)·C_w^k·inv (word-row nnz).
-                prob.copy_from_slice(&self.prior);
-                let mut total = self.prior_total;
-                for (t, c) in counts.iter() {
-                    let add = c as f64 * beta * self.inv[t as usize];
-                    prob[t as usize] += add;
-                    total += add;
-                }
-                for (t, ct) in self.wt.row(w as usize).iter() {
-                    let add =
-                        (counts.get(t) as f64 + alpha) * ct as f64 * self.inv[t as usize];
-                    prob[t as usize] += add;
-                    total += add;
-                }
-                let new = rng.discrete(prob, total) as u32;
-                counts.inc(new);
-                z[n] = new;
-            }
-        }
-        counts
+        docs: &[BowDoc],
+        opts: &InferOptions,
+        scratches: &mut [Scratch],
+    ) -> Result<DocTopics> {
+        infer_batch_reusing(&self.stats, self, docs, opts.iterations, opts.seed, scratches)
     }
 
     /// Mean per-token predictive log-probability and perplexity of
@@ -306,7 +414,7 @@ impl TopicModel {
         for (i, doc) in docs.iter().enumerate() {
             let dc = folded.counts(i);
             for &w in &doc.tokens {
-                total_lp += token_log_prob(&self.wt, &self.ck, Some(dc), w, &self.params);
+                total_lp += token_log_prob(&self.wt, &self.ck, Some(dc), w, &self.stats.params);
                 tokens += 1;
             }
         }
@@ -325,7 +433,7 @@ impl TopicModel {
         let mut tokens = 0usize;
         for doc in docs {
             for &w in &doc.tokens {
-                total_lp += token_log_prob(&self.wt, &self.ck, None, w, &self.params);
+                total_lp += token_log_prob(&self.wt, &self.ck, None, w, &self.stats.params);
                 tokens += 1;
             }
         }

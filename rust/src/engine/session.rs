@@ -619,6 +619,10 @@ impl Session {
     /// End training and package the model for serving: the word–topic
     /// table, topic totals and hyperparameters, ready for
     /// [`TopicModel::infer`] fold-in queries.
+    ///
+    /// This materializes the **whole** table densely, so it caps servable
+    /// model size at one node's RAM; [`Session::freeze_sharded`] keeps the
+    /// model block-sharded instead.
     pub fn freeze(self) -> Result<TopicModel> {
         match self.inner {
             Inner::ModelParallel(d) => {
@@ -631,6 +635,31 @@ impl Session {
                 let params = y.params;
                 TopicModel::new(wt, ck, params)
             }
+        }
+    }
+
+    /// End training and keep the model **block-sharded** for online
+    /// serving: the KV-store, block layout and hyperparameters move into
+    /// a [`crate::serve::ShardedTopicModel`] that pages blocks through an
+    /// LRU cache bounded by `serve.cache_budget_mib` — nothing is ever
+    /// materialized densely, so the servable model size is bounded by the
+    /// sharded store, not one node's RAM. Served results are bitwise
+    /// identical to [`Session::freeze`] + [`TopicModel::infer`] for the
+    /// same seed (`tests/serve_determinism.rs`).
+    ///
+    /// Model-parallel sessions only: the data-parallel baseline holds a
+    /// full replica per worker anyway — use [`Session::freeze`] there.
+    pub fn freeze_sharded(self) -> Result<crate::serve::ShardedTopicModel> {
+        let budget_mib = self.cfg.serve.cache_budget_mib;
+        match self.inner {
+            Inner::ModelParallel(d) => {
+                let (kv, map, params, num_words) = (*d).into_serving_parts();
+                crate::serve::ShardedTopicModel::new(kv, map, params, num_words, budget_mib)
+            }
+            Inner::Baseline(_) => bail!(
+                "freeze_sharded rides the model-parallel driver; the data-parallel \
+                 baseline materializes a full replica anyway — use freeze()"
+            ),
         }
     }
 }
@@ -749,6 +778,43 @@ mod tests {
             .unwrap_err()
             .to_string();
         assert!(err.contains("xla"), "{err}");
+    }
+
+    #[test]
+    fn freeze_sharded_serves_identically_to_freeze() {
+        use crate::engine::{BowDoc, InferOptions};
+        // Two identical sessions trained from the same seed hold the same
+        // state (determinism), so one can freeze densely and the other
+        // keep its shards.
+        let mut dense_s = tiny().build().unwrap();
+        dense_s.train().unwrap();
+        let mut sharded_s = tiny().build().unwrap();
+        sharded_s.train().unwrap();
+        assert_eq!(
+            dense_s.model_digest().unwrap(),
+            sharded_s.model_digest().unwrap(),
+            "identical sessions must agree before freezing"
+        );
+        let dense = dense_s.freeze().unwrap();
+        let sharded = sharded_s.freeze_sharded().unwrap();
+        assert_eq!(dense.num_words(), sharded.num_words());
+        assert_eq!(dense.num_topics(), sharded.num_topics());
+        let docs =
+            vec![BowDoc::new(vec![0, 1, 2, 3, 2]), BowDoc::new(vec![5, 5, 9, 1])];
+        let opts = InferOptions { iterations: 6, seed: 31, threads: 2 };
+        let a = dense.infer_with(&docs, &opts).unwrap();
+        let b = sharded.infer_with(&docs, &opts).unwrap();
+        for d in 0..docs.len() {
+            assert_eq!(
+                a.counts(d).iter().collect::<Vec<_>>(),
+                b.counts(d).iter().collect::<Vec<_>>(),
+                "doc {d}: sharded serving must equal dense serving bitwise"
+            );
+        }
+        // The baseline has no shards to serve.
+        let y = tiny().sampler(SamplerKind::SparseYao).build().unwrap();
+        let err = y.freeze_sharded().map(|_| ()).unwrap_err().to_string();
+        assert!(err.contains("model-parallel"), "{err}");
     }
 
     #[test]

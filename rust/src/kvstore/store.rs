@@ -227,6 +227,39 @@ impl KvStore {
         Ok(receipt)
     }
 
+    /// Read-only serving lease: copy block `id`'s rows to `reader_machine`
+    /// **without taking ownership** — the block stays resident, so any
+    /// number of concurrent readers proceed in parallel (shard-locked only
+    /// for the duration of the copy), which is what lets the serving tier
+    /// (`serve::ShardedTopicModel`) page blocks while other queries are in
+    /// flight. Metered as [`TransferKind::BlockRead`] so serving traffic
+    /// stays separable from training traffic. Errors if the block is
+    /// exclusively leased out (the store is mid-training, not quiescent).
+    pub fn read_block(&self, id: u32, reader_machine: usize) -> Result<ModelBlock> {
+        let block = {
+            let slot = self.slot(id);
+            if let Some(&holder) = slot.leased_to.get(&id) {
+                bail!(
+                    "block {id} is exclusively leased to machine {holder} — the store is \
+                     mid-training; serve from a quiescent store"
+                );
+            }
+            slot.resident
+                .get(&id)
+                .with_context(|| format!("block {id} not in store"))?
+                .clone()
+        };
+        // Length-only metering: a starved serving cache reads blocks per
+        // token, so the O(block) encode allocation stays off this path.
+        self.meter.lock().expect("kv meter lock poisoned").record(
+            self.shards.home(id as usize),
+            reader_machine,
+            wire::encoded_block_len(&block),
+            TransferKind::BlockRead,
+        );
+        Ok(block)
+    }
+
     /// Heap bytes of a resident (non-leased) block, or `None` if the block
     /// is currently leased out (or unknown). The pipelined engine uses this
     /// for staging-budget checks *before* paying for a prefetch.
@@ -453,6 +486,68 @@ mod tests {
         let b2 = kv.lease_block(0, 0).unwrap();
         assert_eq!(b2.alias_bytes(), 0, "commit must clear the alias cache");
         kv.commit_block(b2, 0).unwrap();
+        kv.check_quiescent_consistency(8).unwrap();
+    }
+
+    #[test]
+    fn read_block_is_a_concurrent_copy() {
+        let kv = setup(4, 2);
+        let before = kv.bytes_of(TransferKind::BlockRead);
+        // Two "concurrent" readers: both get full copies, nothing leases.
+        let a = kv.read_block(2, 0).unwrap();
+        let b = kv.read_block(2, 1).unwrap();
+        assert_eq!(a, b);
+        assert_eq!(kv.num_leased(), 0);
+        assert!(kv.bytes_of(TransferKind::BlockRead) > before);
+        // The original is untouched: an exclusive lease still works …
+        let owned = kv.lease_block(2, 0).unwrap();
+        assert_eq!(owned, a);
+        // … and while it is out, serving reads fail loudly.
+        let err = kv.read_block(2, 1).unwrap_err().to_string();
+        assert!(err.contains("exclusively leased"), "{err}");
+        kv.commit_block(owned, 0).unwrap();
+        kv.check_quiescent_consistency(8).unwrap();
+    }
+
+    #[test]
+    fn read_block_copies_do_not_alias_store_state() {
+        // Mutating a serving copy must never reach the store.
+        let kv = setup(2, 2);
+        let mut copy = kv.read_block(0, 0).unwrap();
+        copy.row_mut(copy.lo).inc(7);
+        drop(copy);
+        kv.check_quiescent_consistency(8).unwrap();
+    }
+
+    #[test]
+    fn commit_clears_alias_on_every_return_path() {
+        // Direct coverage of the commit-time alias invalidation contract
+        // (previously only exercised indirectly through pipeline
+        // determinism): whatever the holder cached must be gone after
+        // `commit_block`, `commit_block_with_receipt`, and the staged
+        // re-lease the pipelined engine performs.
+        let kv = setup(2, 2);
+
+        // Plain commit.
+        let mut b = kv.lease_block(0, 0).unwrap();
+        b.alias.ensure(b.rows.len(), 0).build(0, &b.rows[0], &mut Vec::new());
+        assert!(b.alias_bytes() > 0);
+        kv.commit_block(b, 0).unwrap();
+        let fresh = kv.lease_block(0, 0).unwrap();
+        assert_eq!(fresh.alias_bytes(), 0, "plain commit must clear the alias cache");
+        kv.commit_block(fresh, 0).unwrap();
+
+        // Receipt-returning commit (the pipelined flusher's path).
+        let mut b = kv.lease_block(0, 1).unwrap();
+        b.alias.ensure(b.rows.len(), 0).build(0, &b.rows[0], &mut Vec::new());
+        kv.commit_block_with_receipt(b, 1).unwrap();
+        let staged = kv.stage_block(0, 0).unwrap().0;
+        assert_eq!(staged.alias_bytes(), 0, "staged re-lease must carry a fresh alias slot");
+        kv.commit_block(staged, 0).unwrap();
+
+        // Serving reads after a commit see no stale alias either.
+        let read = kv.read_block(0, 0).unwrap();
+        assert_eq!(read.alias_bytes(), 0);
         kv.check_quiescent_consistency(8).unwrap();
     }
 

@@ -39,10 +39,16 @@ pub enum TransferKind {
     TotalsMerge,
     /// Baseline parameter-server delta push/pull.
     PsSync,
+    /// Read-only serving copy of a block
+    /// (`KvStore::read_block`): the serving tier pages a block into its
+    /// LRU cache without taking ownership, so any number of readers
+    /// proceed concurrently. Tallied separately so serving traffic never
+    /// contaminates training-communication comparisons.
+    BlockRead,
 }
 
 /// Number of [`TransferKind`] variants (size of the per-kind tally).
-const NUM_KINDS: usize = 6;
+const NUM_KINDS: usize = 7;
 
 /// Accumulating traffic meter.
 #[derive(Debug, Default, Clone)]
@@ -60,6 +66,7 @@ fn kind_idx(k: TransferKind) -> usize {
         TransferKind::TotalsRead => 3,
         TransferKind::TotalsMerge => 4,
         TransferKind::PsSync => 5,
+        TransferKind::BlockRead => 6,
     }
 }
 

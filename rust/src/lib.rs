@@ -32,7 +32,13 @@
 //!   (DESIGN.md §Samplers), and
 //! * an **XLA/PJRT execution backend** whose compute kernel is authored in
 //!   JAX/Pallas and AOT-lowered to HLO text at build time (`make artifacts`);
-//!   Python never runs on the sampling path.
+//!   Python never runs on the sampling path, and
+//! * a **[`serve`] tier** (`mplda serve`) — model-parallel *online*
+//!   inference: a [`serve::ShardedTopicModel`] pages blocks through a
+//!   budget-bounded LRU cache straight from the KV-store, a micro-batcher
+//!   groups queued documents by block, and a dependency-free TCP front
+//!   end answers fold-in queries bitwise identical to offline
+//!   [`engine::TopicModel::infer`] (DESIGN.md §Serving).
 //!
 //! See `DESIGN.md` for the system inventory and the per-experiment index, and
 //! `EXPERIMENTS.md` for paper-vs-measured results.
@@ -72,6 +78,7 @@ pub mod sampler;
 pub mod kvstore;
 pub mod coordinator;
 pub mod engine;
+pub mod serve;
 pub mod cluster;
 pub mod baseline;
 pub mod metrics;

@@ -51,6 +51,7 @@ fn dispatch(args: &Args) -> Result<()> {
         Some("eval") => cmd_eval(args),
         Some("corpus") => cmd_corpus(args),
         Some("topics") => cmd_topics(args),
+        Some("serve") => cmd_serve(args),
         Some("check") => cmd_check(args),
         Some("help") | None => {
             print!("{}", help());
@@ -70,6 +71,7 @@ fn help() -> String {
     .entry("train", "train LDA per config (model-parallel or baseline)")
     .entry("eval <exp>", "reproduce a paper experiment: fig2 fig3 table1 fig4a fig4b ablations all")
     .entry("topics", "train briefly, then print top words + coherence per topic")
+    .entry("serve", "train, then serve fold-in queries over TCP (block-paged model)")
     .entry("corpus", "print corpus statistics for a preset")
     .entry("check", "verify AOT artifacts load and execute via PJRT")
     .section("Common options")
@@ -251,6 +253,52 @@ fn cmd_topics(args: &Args) -> Result<()> {
         "\nmean UMass coherence (top {n}): {:.2}",
         mplda::metrics::topics::mean_coherence(model.word_topic(), &corpus, n)
     );
+    Ok(())
+}
+
+/// Train per config (optionally resuming a checkpoint), freeze the model
+/// **sharded**, and serve fold-in queries over TCP until a `shutdown`
+/// request arrives. The model never materializes densely — blocks page
+/// through the `serve.cache_budget_mib`-bounded LRU cache on demand.
+fn cmd_serve(args: &Args) -> Result<()> {
+    let cfg = load_config(args)?;
+    let mut builder = SessionBuilder::from_config(cfg.clone());
+    if let Some(ckpt) = args.get("resume") {
+        builder = builder.resume_from(ckpt);
+    }
+    let mut session = builder.build()?;
+    // Fail before training, not after: serving pages the model-parallel
+    // driver's block shards; the baseline has none.
+    if session.driver().is_none() {
+        bail!(
+            "serve rides the model-parallel driver; the data-parallel baseline ({}) holds \
+             a full replica — train with sampler = \"inverted-xy\" (or mh-alias)",
+            cfg.train.sampler.name()
+        );
+    }
+    if cfg.train.iterations > 0 {
+        log::info!(
+            "training before serving: sampler={} K={} iters={}",
+            cfg.train.sampler.name(),
+            cfg.train.topics,
+            cfg.train.iterations
+        );
+        session.train_observed(|ev| log_progress(false, ev))?;
+    }
+    let model = session.freeze_sharded()?;
+    println!(
+        "model ready: V={} K={} in {} blocks ({} total)",
+        model.num_words(),
+        model.num_topics(),
+        model.num_blocks(),
+        fmt::bytes(model.total_block_bytes()),
+    );
+    let server = mplda::serve::Server::serve(model, &cfg.serve)?;
+    println!("serving on {}", server.addr());
+    println!("protocol: length-prefixed JSON — ping | infer | stats | shutdown");
+    println!("stop with a {{\"type\":\"shutdown\"}} request");
+    server.join();
+    println!("server stopped");
     Ok(())
 }
 

@@ -84,6 +84,29 @@ pub fn encode_block(block: &ModelBlock) -> Vec<u8> {
     buf
 }
 
+/// Bytes a LEB128 varint of `x` occupies.
+#[inline]
+fn varint_len(x: u64) -> u64 {
+    (((64 - (x | 1).leading_zeros() as u64) + 6) / 7).max(1)
+}
+
+/// Length of [`encode_block`]'s output **without materializing it** — the
+/// serving tier meters read-lease traffic per block copy, sometimes once
+/// per token (a starved cache), so the O(block) encode allocation must
+/// stay off that path.
+pub fn encoded_block_len(block: &ModelBlock) -> u64 {
+    let mut len = 12 + varint_len(block.stride as u64) + varint_len(block.rows.len() as u64);
+    for row in &block.rows {
+        len += varint_len(row.nnz() as u64);
+        let mut prev = 0u32;
+        for (k, c) in row.iter() {
+            len += varint_len((k - prev) as u64) + varint_len(c as u64);
+            prev = k;
+        }
+    }
+    len
+}
+
 /// Decode a model block.
 pub fn decode_block(buf: &[u8]) -> Result<ModelBlock> {
     if buf.len() < 12 {
@@ -208,6 +231,21 @@ mod tests {
         let b = ModelBlock::empty(0, 5, 9);
         let dec = decode_block(&encode_block(&b)).unwrap();
         assert_eq!(dec, b);
+    }
+
+    #[test]
+    fn encoded_len_matches_encoding_exactly() {
+        for (seed, lo, hi, k) in [(10u64, 100u32, 164u32, 50u64), (7, 0, 1, 2), (3, 0, 40, 1000)]
+        {
+            let b = random_block(seed, lo, hi, k);
+            assert_eq!(
+                encoded_block_len(&b),
+                encode_block(&b).len() as u64,
+                "seed {seed}"
+            );
+        }
+        let empty = ModelBlock::empty(0, 5, 9);
+        assert_eq!(encoded_block_len(&empty), encode_block(&empty).len() as u64);
     }
 
     #[test]

@@ -78,6 +78,12 @@ pub struct Scratch {
     /// e.g. the MH kernel's alias-construction weights. Grown (counted)
     /// at most once per worker; steady-state rounds reuse it.
     pub kf: Vec<f64>,
+    /// Fold-in assignment buffer `z` (the serving path,
+    /// `engine::infer`): one entry per token of the document currently
+    /// being folded in. Grown (counted) via [`Scratch::ensure_zbuf`] to
+    /// the longest document seen, then reused across documents, batches
+    /// and requests.
+    pub zbuf: Vec<u32>,
 }
 
 impl Scratch {
@@ -89,6 +95,7 @@ impl Scratch {
             q: vec![0.0; num_topics],
             prob: vec![0.0; num_topics],
             kf: Vec::new(),
+            zbuf: Vec::new(),
         }
     }
 
@@ -102,6 +109,19 @@ impl Scratch {
             SCRATCH_ALLOCS.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
             let additional = len - self.kf.len();
             self.kf.reserve(additional);
+        }
+    }
+
+    /// Grow the fold-in assignment buffer to at least `len` entries
+    /// (the inference analogue of [`Scratch::ensure_kf`]). Growth is
+    /// counted as an allocation; calls at or below the current capacity
+    /// are free, so folding in documents no longer than the longest one
+    /// already seen is allocation-free.
+    pub fn ensure_zbuf(&mut self, len: usize) {
+        if self.zbuf.capacity() < len {
+            SCRATCH_ALLOCS.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+            let additional = len - self.zbuf.len();
+            self.zbuf.reserve(additional);
         }
     }
 

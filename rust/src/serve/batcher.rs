@@ -1,0 +1,259 @@
+//! Micro-batching request queue: group queued documents **by block** so
+//! each block fetch is amortized across the whole batch — the training
+//! rotation's model-parallelism, replayed at query time.
+//!
+//! Requests enqueue on a [`Batcher`]; the batch executor
+//! ([`run_executor`]) cuts a batch when either `max_batch` documents are
+//! queued or the oldest request has waited `max_wait` (the classic
+//! throughput/latency dial). Before any document samples, the executor
+//! touches every distinct block the batch needs once, in ascending id
+//! order ([`super::model::ShardedTopicModel::touch_blocks`]) — with a
+//! cache larger than the working set that pre-pass is the *only* paging
+//! the batch pays, and with a starved cache it degrades gracefully to
+//! per-token paging, still correct.
+//!
+//! **Batching never changes results.** Every request's documents sample
+//! on RNG streams keyed by `(request seed, position within the request)`
+//! — the same streams the offline model uses for that request as a
+//! standalone batch — so any grouping of requests into batches, any
+//! `max_batch`, and any number of front-end threads produce bitwise
+//! identical `DocTopics` (`tests/serve_determinism.rs`).
+
+use std::collections::VecDeque;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::engine::{BowDoc, DocTopics};
+use crate::sampler::Scratch;
+
+use super::metrics::ServeMetrics;
+use super::model::ShardedTopicModel;
+
+/// One inference request: a document batch plus its RNG seed and Gibbs
+/// sweep count. Equivalent offline call:
+/// `TopicModel::infer_with(&docs, &InferOptions { seed, iterations, .. })`.
+#[derive(Debug, Clone)]
+pub struct InferRequest {
+    /// The held-out documents to fold in.
+    pub docs: Vec<BowDoc>,
+    /// Seed of the per-document RNG streams (stream = position in
+    /// `docs`).
+    pub seed: u64,
+    /// Gibbs sweeps per document.
+    pub iterations: usize,
+}
+
+/// Batch-cutting knobs (config: `serve.max_batch` / `serve.max_wait_ms`).
+#[derive(Debug, Clone, Copy)]
+pub struct BatchOpts {
+    /// Most documents a batch gathers before it is cut. A request's
+    /// documents are never split across batches, so one oversized request
+    /// still forms a single batch.
+    pub max_batch: usize,
+    /// Longest the oldest queued request may wait before the batch is cut
+    /// anyway.
+    pub max_wait: Duration,
+}
+
+impl Default for BatchOpts {
+    fn default() -> Self {
+        BatchOpts { max_batch: 32, max_wait: Duration::from_millis(5) }
+    }
+}
+
+/// A queued request with its reply channel and enqueue time (latency is
+/// measured enqueue → reply).
+pub(crate) struct Pending {
+    pub(crate) req: InferRequest,
+    pub(crate) tx: Sender<Result<DocTopics>>,
+    pub(crate) enqueued: Instant,
+}
+
+struct QueueState {
+    queue: VecDeque<Pending>,
+    closed: bool,
+}
+
+/// The shared request queue between front-end threads (producers) and
+/// the batch executor (consumer).
+pub struct Batcher {
+    state: Mutex<QueueState>,
+    cond: Condvar,
+    opts: BatchOpts,
+}
+
+impl Batcher {
+    /// An empty queue with the given batch-cutting knobs.
+    pub fn new(opts: BatchOpts) -> Batcher {
+        Batcher {
+            state: Mutex::new(QueueState { queue: VecDeque::new(), closed: false }),
+            cond: Condvar::new(),
+            opts,
+        }
+    }
+
+    /// Enqueue a request; the reply arrives on the returned channel once
+    /// the executor has folded the documents in. After [`Batcher::close`]
+    /// the reply is an immediate shutdown error.
+    pub fn submit(&self, req: InferRequest) -> Receiver<Result<DocTopics>> {
+        let (tx, rx) = channel();
+        let mut st = self.state.lock().expect("batcher lock poisoned");
+        if st.closed {
+            let _ = tx.send(Err(anyhow::anyhow!("serving tier is shutting down")));
+        } else {
+            st.queue.push_back(Pending { req, tx, enqueued: Instant::now() });
+            self.cond.notify_all();
+        }
+        rx
+    }
+
+    /// Stop accepting requests and wake the executor so it drains the
+    /// queue and exits.
+    pub fn close(&self) {
+        self.state.lock().expect("batcher lock poisoned").closed = true;
+        self.cond.notify_all();
+    }
+
+    /// Queued (not yet executed) requests right now.
+    pub fn queued(&self) -> usize {
+        self.state.lock().expect("batcher lock poisoned").queue.len()
+    }
+
+    /// Block until a batch is ready and cut it: whole requests in FIFO
+    /// order until `max_batch` documents are gathered. Returns `None`
+    /// once closed *and* drained.
+    pub(crate) fn next_batch(&self) -> Option<Vec<Pending>> {
+        let mut st = self.state.lock().expect("batcher lock poisoned");
+        loop {
+            if st.queue.is_empty() {
+                if st.closed {
+                    return None;
+                }
+                st = self.cond.wait(st).expect("batcher lock poisoned");
+                continue;
+            }
+            let docs_queued: usize = st.queue.iter().map(|p| p.req.docs.len()).sum();
+            let oldest = st.queue.front().expect("queue non-empty").enqueued.elapsed();
+            if st.closed || docs_queued >= self.opts.max_batch || oldest >= self.opts.max_wait {
+                let mut batch = Vec::new();
+                let mut docs = 0usize;
+                loop {
+                    let take = match st.queue.front() {
+                        Some(p) => {
+                            batch.is_empty() || docs + p.req.docs.len() <= self.opts.max_batch
+                        }
+                        None => false,
+                    };
+                    if !take {
+                        break;
+                    }
+                    let p = st.queue.pop_front().expect("front was Some");
+                    docs += p.req.docs.len();
+                    batch.push(p);
+                    if docs >= self.opts.max_batch {
+                        break;
+                    }
+                }
+                return Some(batch);
+            }
+            // Not full yet: sleep until the oldest request's deadline (or
+            // a new arrival re-evaluates the cut conditions).
+            let (guard, _) = self
+                .cond
+                .wait_timeout(st, self.opts.max_wait - oldest)
+                .expect("batcher lock poisoned");
+            st = guard;
+        }
+    }
+}
+
+/// The batch executor loop: cut batches until the queue closes, amortize
+/// block paging with the group-by-block pre-pass, fold each request in on
+/// its own RNG streams, and reply. One long-lived [`Scratch`] serves
+/// every request — the serving hot path allocates nothing once warmed
+/// (`tests/scratch_lifecycle.rs` proves the same property for the infer
+/// core).
+pub fn run_executor(model: &ShardedTopicModel, batcher: &Batcher, metrics: &ServeMetrics) {
+    let mut scratch = Scratch::new(model.num_topics());
+    while let Some(batch) = batcher.next_batch() {
+        // Group-by-block pre-pass over the whole batch: each distinct
+        // block is paged at most once however many documents touch it.
+        let ids = model.blocks_of(batch.iter().flat_map(|p| p.req.docs.iter()));
+        model.touch_blocks(&ids);
+        metrics.record_batch();
+
+        for p in batch {
+            let result =
+                model.fold_in_request(&p.req.docs, p.req.seed, p.req.iterations, &mut scratch);
+            let docs = p.req.docs.len() as u64;
+            let tokens: u64 = p.req.docs.iter().map(|d| d.len() as u64).sum();
+            metrics.record_request(p.enqueued.elapsed().as_micros() as u64, docs, tokens);
+            // The requester may have hung up; serving continues either way.
+            let _ = p.tx.send(result);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(ndocs: usize, seed: u64) -> InferRequest {
+        InferRequest {
+            docs: (0..ndocs).map(|i| BowDoc::new(vec![i as u32])).collect(),
+            seed,
+            iterations: 1,
+        }
+    }
+
+    #[test]
+    fn cuts_on_max_batch_without_waiting() {
+        let b = Batcher::new(BatchOpts { max_batch: 4, max_wait: Duration::from_secs(60) });
+        let _r1 = b.submit(req(2, 1));
+        let _r2 = b.submit(req(2, 2));
+        let _r3 = b.submit(req(3, 3));
+        // 4 docs queued from the first two requests: cut immediately, the
+        // third request stays queued for the next batch.
+        let batch = b.next_batch().expect("batch ready");
+        assert_eq!(batch.len(), 2);
+        assert_eq!(b.queued(), 1);
+        assert_eq!(batch.iter().map(|p| p.req.docs.len()).sum::<usize>(), 4);
+    }
+
+    #[test]
+    fn oversized_request_forms_its_own_batch() {
+        let b = Batcher::new(BatchOpts { max_batch: 2, max_wait: Duration::from_secs(60) });
+        let _r = b.submit(req(7, 1));
+        let batch = b.next_batch().expect("batch ready");
+        assert_eq!(batch.len(), 1);
+        assert_eq!(batch[0].req.docs.len(), 7);
+        assert_eq!(b.queued(), 0);
+    }
+
+    #[test]
+    fn cuts_on_deadline_when_underfull() {
+        let b = Batcher::new(BatchOpts { max_batch: 1000, max_wait: Duration::from_millis(5) });
+        let t0 = Instant::now();
+        let _r = b.submit(req(1, 1));
+        let batch = b.next_batch().expect("batch ready");
+        assert_eq!(batch.len(), 1);
+        assert!(t0.elapsed() >= Duration::from_millis(5), "must respect max_wait");
+    }
+
+    #[test]
+    fn close_drains_then_ends() {
+        let b = Batcher::new(BatchOpts { max_batch: 1000, max_wait: Duration::from_secs(60) });
+        let _r = b.submit(req(1, 1));
+        b.close();
+        // Closed: queued work is still delivered, then the stream ends.
+        assert!(b.next_batch().is_some());
+        assert!(b.next_batch().is_none());
+        // New submissions fail fast with a shutdown error.
+        let rx = b.submit(req(1, 2));
+        let reply = rx.recv().expect("immediate error reply");
+        assert!(reply.unwrap_err().to_string().contains("shutting down"));
+    }
+}

@@ -1,0 +1,163 @@
+//! In-process serving harness: the full serving stack — sharded model,
+//! micro-batcher, executor thread, metrics — with **no sockets**.
+//!
+//! Tests drive it to assert the serving tier's determinism contract:
+//! a request served through batching and paging returns `DocTopics`
+//! bitwise identical to `TopicModel::infer_with` over the same documents
+//! and seed, at every cache budget and batch size
+//! (`tests/serve_determinism.rs`). The TCP front end
+//! ([`super::server::Server`]) runs this same harness behind a socket,
+//! so what the harness proves, the server inherits.
+
+use std::sync::mpsc::Receiver;
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+use anyhow::{anyhow, Result};
+
+use crate::engine::{BowDoc, DocTopics};
+
+use super::batcher::{run_executor, BatchOpts, Batcher, InferRequest};
+use super::metrics::{ServeMetrics, StatsSnapshot};
+use super::model::ShardedTopicModel;
+
+/// A live in-process serving stack. Dropping it closes the queue and
+/// joins the executor.
+pub struct Harness {
+    model: Arc<ShardedTopicModel>,
+    batcher: Arc<Batcher>,
+    metrics: Arc<ServeMetrics>,
+    executor: Option<JoinHandle<()>>,
+}
+
+impl Harness {
+    /// Spin up the stack over a model, spawning the batch-executor
+    /// thread.
+    pub fn new(model: ShardedTopicModel, opts: BatchOpts) -> Harness {
+        Self::over(Arc::new(model), opts)
+    }
+
+    /// [`Harness::new`] over an already-shared model.
+    pub fn over(model: Arc<ShardedTopicModel>, opts: BatchOpts) -> Harness {
+        let batcher = Arc::new(Batcher::new(opts));
+        let metrics = Arc::new(ServeMetrics::new());
+        let executor = {
+            let (model, batcher, metrics) =
+                (Arc::clone(&model), Arc::clone(&batcher), Arc::clone(&metrics));
+            std::thread::spawn(move || run_executor(&model, &batcher, &metrics))
+        };
+        Harness { model, batcher, metrics, executor: Some(executor) }
+    }
+
+    /// The model being served.
+    pub fn model(&self) -> &ShardedTopicModel {
+        &self.model
+    }
+
+    /// Shared handles for a front end layered on this harness.
+    pub(crate) fn shared(
+        &self,
+    ) -> (Arc<ShardedTopicModel>, Arc<Batcher>, Arc<ServeMetrics>) {
+        (Arc::clone(&self.model), Arc::clone(&self.batcher), Arc::clone(&self.metrics))
+    }
+
+    /// Enqueue a request; the reply arrives asynchronously on the
+    /// returned channel (tests submit many before receiving any, to
+    /// exercise real batching).
+    pub fn submit(&self, req: InferRequest) -> Receiver<Result<DocTopics>> {
+        self.batcher.submit(req)
+    }
+
+    /// Submit one request and wait for its reply.
+    pub fn infer(&self, docs: Vec<BowDoc>, seed: u64, iterations: usize) -> Result<DocTopics> {
+        self.submit(InferRequest { docs, seed, iterations })
+            .recv()
+            .map_err(|_| anyhow!("serving executor hung up"))?
+    }
+
+    /// Current serving statistics (what the TCP `stats` request returns).
+    pub fn stats(&self) -> StatsSnapshot {
+        self.metrics.snapshot(self.model.cache_stats())
+    }
+
+    /// Close the queue, drain outstanding work, and join the executor.
+    /// (Dropping the harness does the same.)
+    pub fn shutdown(self) {}
+}
+
+impl Drop for Harness {
+    fn drop(&mut self) {
+        self.batcher.close();
+        if let Some(handle) = self.executor.take() {
+            let _ = handle.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{TopicCounts, WordTopicTable};
+    use crate::sampler::Params;
+    use crate::util::rng::Pcg64;
+
+    fn model() -> ShardedTopicModel {
+        let (v, k) = (80, 8);
+        let mut rng = Pcg64::new(21);
+        let mut wt = WordTopicTable::zeros(v, k);
+        let mut ck = TopicCounts::zeros(k);
+        for w in 0..v {
+            for _ in 0..rng.next_below(5) {
+                let t = rng.next_below(k as u64) as u32;
+                wt.row_mut(w).inc(t);
+                ck.inc(t as usize);
+            }
+        }
+        let params = Params::new(k, v, 0.1, 0.01);
+        ShardedTopicModel::from_table(&wt, ck, params, 8, 0.0).unwrap()
+    }
+
+    #[test]
+    fn serves_requests_and_reports_stats() {
+        let h = Harness::new(model(), BatchOpts::default());
+        let folded = h.infer(vec![BowDoc::new(vec![1, 2, 3, 3])], 7, 5).unwrap();
+        assert_eq!(folded.len(), 1);
+        assert_eq!(folded.counts(0).total(), 4);
+        // Async pile-up: all replies arrive, in whatever batching.
+        let rxs: Vec<_> = (0..10u64)
+            .map(|i| {
+                h.submit(InferRequest {
+                    docs: vec![BowDoc::new(vec![i as u32, (i + 1) as u32])],
+                    seed: i,
+                    iterations: 3,
+                })
+            })
+            .collect();
+        for rx in rxs {
+            let reply = rx.recv().expect("executor alive").expect("infer ok");
+            assert_eq!(reply.len(), 1);
+        }
+        let stats = h.stats();
+        assert_eq!(stats.requests, 11);
+        assert_eq!(stats.docs, 11);
+        assert!(stats.batches >= 1);
+        assert!(stats.p99_ms > 0.0);
+        h.shutdown();
+    }
+
+    #[test]
+    fn request_errors_come_back_as_replies() {
+        let h = Harness::new(model(), BatchOpts::default());
+        let err = h
+            .infer(vec![BowDoc::new(vec![9_999])], 1, 5)
+            .map(|_| ())
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("vocabulary"), "{err}");
+        let err =
+            h.infer(vec![BowDoc::new(vec![1])], 1, 0).map(|_| ()).unwrap_err().to_string();
+        assert!(err.contains("iterations"), "{err}");
+        // The executor survives bad requests.
+        assert!(h.infer(vec![BowDoc::new(vec![1])], 1, 2).is_ok());
+    }
+}

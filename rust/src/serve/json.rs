@@ -1,0 +1,412 @@
+//! Minimal dependency-free JSON for the serving wire format.
+//!
+//! The TCP front end ([`super::server`]) frames requests and responses as
+//! length-prefixed JSON documents; this module supplies the value type,
+//! a recursive-descent parser and a writer. It is deliberately small —
+//! no serde, no derive, no borrowing parser — because the serving
+//! protocol's payloads are shallow (word-id arrays, count pairs, stat
+//! scalars) and the workspace builds offline with zero external crates.
+//!
+//! Numbers are carried as `f64`; exact integers up to 2^53 round-trip,
+//! which covers word ids, counts, ports, and seeds as used on the wire.
+
+use anyhow::{bail, Result};
+
+/// One JSON value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Json {
+    /// `null`.
+    Null,
+    /// `true` / `false`.
+    Bool(bool),
+    /// Any number (integers round-trip exactly up to 2^53).
+    Num(f64),
+    /// A string.
+    Str(String),
+    /// An array.
+    Arr(Vec<Json>),
+    /// An object, insertion-ordered (the writer emits keys in this order).
+    Obj(Vec<(String, Json)>),
+}
+
+impl Json {
+    /// Shorthand: a string value.
+    pub fn str(s: impl Into<String>) -> Json {
+        Json::Str(s.into())
+    }
+
+    /// Shorthand: a numeric value.
+    pub fn num(n: f64) -> Json {
+        Json::Num(n)
+    }
+
+    /// Object field lookup (first match; `None` for non-objects).
+    pub fn get(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(fields) => fields.iter().find(|(k, _)| k == key).map(|(_, v)| v),
+            _ => None,
+        }
+    }
+
+    /// The value as `f64`, if numeric.
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Json::Num(n) => Some(*n),
+            _ => None,
+        }
+    }
+
+    /// The value as a non-negative integer, if it is one exactly.
+    pub fn as_u64(&self) -> Option<u64> {
+        match self {
+            Json::Num(n) if *n >= 0.0 && n.fract() == 0.0 && *n <= 9_007_199_254_740_992.0 => {
+                Some(*n as u64)
+            }
+            _ => None,
+        }
+    }
+
+    /// The value as a string slice, if it is a string.
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Json::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    /// The value as an array slice, if it is one.
+    pub fn as_arr(&self) -> Option<&[Json]> {
+        match self {
+            Json::Arr(items) => Some(items),
+            _ => None,
+        }
+    }
+
+    /// Parse a JSON document (must consume the whole input).
+    pub fn parse(text: &str) -> Result<Json> {
+        let bytes = text.as_bytes();
+        let mut pos = 0usize;
+        let value = parse_value(bytes, &mut pos, 0)?;
+        skip_ws(bytes, &mut pos);
+        if pos != bytes.len() {
+            bail!("trailing bytes after JSON value at offset {pos}");
+        }
+        Ok(value)
+    }
+
+    /// Render to compact JSON text.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        write_value(self, &mut out);
+        out
+    }
+}
+
+const MAX_DEPTH: usize = 64;
+
+fn skip_ws(b: &[u8], pos: &mut usize) {
+    while *pos < b.len() && matches!(b[*pos], b' ' | b'\t' | b'\n' | b'\r') {
+        *pos += 1;
+    }
+}
+
+fn expect(b: &[u8], pos: &mut usize, lit: &str) -> Result<()> {
+    if b.len() >= *pos + lit.len() && &b[*pos..*pos + lit.len()] == lit.as_bytes() {
+        *pos += lit.len();
+        Ok(())
+    } else {
+        bail!("expected {lit:?} at offset {}", *pos);
+    }
+}
+
+fn parse_value(b: &[u8], pos: &mut usize, depth: usize) -> Result<Json> {
+    if depth > MAX_DEPTH {
+        bail!("JSON nested deeper than {MAX_DEPTH}");
+    }
+    skip_ws(b, pos);
+    match b.get(*pos).copied() {
+        None => bail!("unexpected end of JSON"),
+        Some(b'n') => {
+            expect(b, pos, "null")?;
+            Ok(Json::Null)
+        }
+        Some(b't') => {
+            expect(b, pos, "true")?;
+            Ok(Json::Bool(true))
+        }
+        Some(b'f') => {
+            expect(b, pos, "false")?;
+            Ok(Json::Bool(false))
+        }
+        Some(b'"') => parse_string(b, pos).map(Json::Str),
+        Some(b'[') => {
+            *pos += 1;
+            let mut items = Vec::new();
+            skip_ws(b, pos);
+            if b.get(*pos) == Some(&b']') {
+                *pos += 1;
+                return Ok(Json::Arr(items));
+            }
+            loop {
+                items.push(parse_value(b, pos, depth + 1)?);
+                skip_ws(b, pos);
+                match b.get(*pos).copied() {
+                    Some(b',') => *pos += 1,
+                    Some(b']') => {
+                        *pos += 1;
+                        return Ok(Json::Arr(items));
+                    }
+                    _ => bail!("expected ',' or ']' at offset {}", *pos),
+                }
+            }
+        }
+        Some(b'{') => {
+            *pos += 1;
+            let mut fields = Vec::new();
+            skip_ws(b, pos);
+            if b.get(*pos) == Some(&b'}') {
+                *pos += 1;
+                return Ok(Json::Obj(fields));
+            }
+            loop {
+                skip_ws(b, pos);
+                let key = parse_string(b, pos)?;
+                skip_ws(b, pos);
+                expect(b, pos, ":")?;
+                let value = parse_value(b, pos, depth + 1)?;
+                fields.push((key, value));
+                skip_ws(b, pos);
+                match b.get(*pos).copied() {
+                    Some(b',') => *pos += 1,
+                    Some(b'}') => {
+                        *pos += 1;
+                        return Ok(Json::Obj(fields));
+                    }
+                    _ => bail!("expected ',' or '}}' at offset {}", *pos),
+                }
+            }
+        }
+        Some(_) => parse_number(b, pos).map(Json::Num),
+    }
+}
+
+fn parse_string(b: &[u8], pos: &mut usize) -> Result<String> {
+    if b.get(*pos) != Some(&b'"') {
+        bail!("expected string at offset {}", *pos);
+    }
+    *pos += 1;
+    let mut out = String::new();
+    loop {
+        match b.get(*pos).copied() {
+            None => bail!("unterminated string"),
+            Some(b'"') => {
+                *pos += 1;
+                return Ok(out);
+            }
+            Some(b'\\') => {
+                *pos += 1;
+                match b.get(*pos).copied() {
+                    Some(b'"') => out.push('"'),
+                    Some(b'\\') => out.push('\\'),
+                    Some(b'/') => out.push('/'),
+                    Some(b'b') => out.push('\u{0008}'),
+                    Some(b'f') => out.push('\u{000c}'),
+                    Some(b'n') => out.push('\n'),
+                    Some(b'r') => out.push('\r'),
+                    Some(b't') => out.push('\t'),
+                    Some(b'u') => {
+                        if b.len() < *pos + 5 {
+                            bail!("truncated \\u escape");
+                        }
+                        let hex = std::str::from_utf8(&b[*pos + 1..*pos + 5])
+                            .ok()
+                            .and_then(|h| u32::from_str_radix(h, 16).ok());
+                        let cp = hex.with_offset(*pos)?;
+                        // BMP only — the writer never emits surrogate
+                        // escapes (it writes UTF-8 directly).
+                        match char::from_u32(cp) {
+                            Some(c) => out.push(c),
+                            None => bail!("\\u escape is not a scalar value"),
+                        }
+                        *pos += 4;
+                    }
+                    _ => bail!("bad escape at offset {}", *pos),
+                }
+                *pos += 1;
+            }
+            Some(_) => {
+                // Consume one UTF-8 scalar (input validated as UTF-8 by
+                // the caller taking &str).
+                let rest = std::str::from_utf8(&b[*pos..]).map_err(|_| {
+                    anyhow::Error::msg(format!("invalid UTF-8 at offset {}", *pos))
+                })?;
+                let c = rest.chars().next().unwrap();
+                if (c as u32) < 0x20 {
+                    bail!("unescaped control character in string");
+                }
+                out.push(c);
+                *pos += c.len_utf8();
+            }
+        }
+    }
+}
+
+/// Tiny helper so the `\u` path reads linearly.
+trait WithOffset {
+    fn with_offset(self, pos: usize) -> Result<u32>;
+}
+
+impl WithOffset for Option<u32> {
+    fn with_offset(self, pos: usize) -> Result<u32> {
+        match self {
+            Some(v) => Ok(v),
+            None => bail!("bad \\u escape at offset {pos}"),
+        }
+    }
+}
+
+fn parse_number(b: &[u8], pos: &mut usize) -> Result<f64> {
+    let start = *pos;
+    while *pos < b.len()
+        && matches!(b[*pos], b'-' | b'+' | b'.' | b'e' | b'E' | b'0'..=b'9')
+    {
+        *pos += 1;
+    }
+    if start == *pos {
+        bail!("expected a JSON value at offset {start}");
+    }
+    let text = std::str::from_utf8(&b[start..*pos]).expect("digits are ASCII");
+    match text.parse::<f64>() {
+        Ok(n) if n.is_finite() => Ok(n),
+        _ => bail!("bad number {text:?} at offset {start}"),
+    }
+}
+
+fn write_value(v: &Json, out: &mut String) {
+    match v {
+        Json::Null => out.push_str("null"),
+        Json::Bool(true) => out.push_str("true"),
+        Json::Bool(false) => out.push_str("false"),
+        Json::Num(n) => write_number(*n, out),
+        Json::Str(s) => write_string(s, out),
+        Json::Arr(items) => {
+            out.push('[');
+            for (i, item) in items.iter().enumerate() {
+                if i > 0 {
+                    out.push(',');
+                }
+                write_value(item, out);
+            }
+            out.push(']');
+        }
+        Json::Obj(fields) => {
+            out.push('{');
+            for (i, (k, item)) in fields.iter().enumerate() {
+                if i > 0 {
+                    out.push(',');
+                }
+                write_string(k, out);
+                out.push(':');
+                write_value(item, out);
+            }
+            out.push('}');
+        }
+    }
+}
+
+fn write_number(n: f64, out: &mut String) {
+    if !n.is_finite() {
+        // JSON has no NaN/Inf; the protocol never produces them, but a
+        // defensive null beats emitting an unparsable document.
+        out.push_str("null");
+    } else if n.fract() == 0.0 && n.abs() <= 9_007_199_254_740_992.0 {
+        out.push_str(&format!("{}", n as i64));
+    } else {
+        out.push_str(&format!("{n}"));
+    }
+}
+
+fn write_string(s: &str, out: &mut String) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_trips_protocol_shapes() {
+        let doc = Json::Obj(vec![
+            ("type".into(), Json::str("infer")),
+            ("seed".into(), Json::num(61455.0)),
+            (
+                "docs".into(),
+                Json::Arr(vec![
+                    Json::Arr(vec![Json::num(0.0), Json::num(2.0), Json::num(2.0)]),
+                    Json::Arr(vec![]),
+                ]),
+            ),
+        ]);
+        let text = doc.render();
+        assert_eq!(text, r#"{"type":"infer","seed":61455,"docs":[[0,2,2],[]]}"#);
+        assert_eq!(Json::parse(&text).unwrap(), doc);
+    }
+
+    #[test]
+    fn accessors() {
+        let v = Json::parse(r#"{"a": 3, "b": "x", "c": [1, 2.5], "d": null}"#).unwrap();
+        assert_eq!(v.get("a").and_then(Json::as_u64), Some(3));
+        assert_eq!(v.get("b").and_then(Json::as_str), Some("x"));
+        assert_eq!(v.get("c").and_then(Json::as_arr).map(|a| a.len()), Some(2));
+        assert_eq!(v.get("c").unwrap().as_arr().unwrap()[1].as_f64(), Some(2.5));
+        assert_eq!(v.get("c").unwrap().as_arr().unwrap()[1].as_u64(), None);
+        assert!(v.get("d").is_some());
+        assert!(v.get("e").is_none());
+        // Negative and fractional numbers are not u64.
+        assert_eq!(Json::parse("-4").unwrap().as_u64(), None);
+    }
+
+    #[test]
+    fn strings_escape_and_unescape() {
+        let s = Json::Str("line\nquote\"back\\slash\ttab".into());
+        let text = s.render();
+        assert_eq!(Json::parse(&text).unwrap(), s);
+        assert_eq!(Json::parse(r#""\u0041\u00e9""#).unwrap(), Json::Str("Aé".into()));
+        assert!(Json::parse("\"unterminated").is_err());
+        assert!(Json::parse("\"ctrl\u{1}\"").is_err());
+    }
+
+    #[test]
+    fn rejects_malformed_documents() {
+        for bad in [
+            "", "{", "[1,", "{\"a\" 1}", "[1 2]", "tru", "nul", "01a", "{} garbage",
+            "\"\\q\"", "1e999",
+        ] {
+            assert!(Json::parse(bad).is_err(), "{bad:?} should fail");
+        }
+        // Depth bomb.
+        let deep = "[".repeat(100) + &"]".repeat(100);
+        assert!(Json::parse(&deep).is_err());
+    }
+
+    #[test]
+    fn numbers_render_integers_exactly() {
+        assert_eq!(Json::num(0.0).render(), "0");
+        assert_eq!(Json::num(-7.0).render(), "-7");
+        assert_eq!(Json::num(2.5).render(), "2.5");
+        let big = 9_007_199_254_740_992.0; // 2^53 round-trips
+        assert_eq!(Json::parse(&Json::num(big).render()).unwrap().as_u64(), Some(1 << 53));
+    }
+}

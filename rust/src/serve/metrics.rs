@@ -1,0 +1,232 @@
+//! Serving observability: latency histograms, throughput counters, and
+//! the `stats` snapshot the TCP front end reports.
+//!
+//! Latencies land in a log₂-bucketed histogram (one `u64` per power of
+//! two of microseconds), so recording is O(1), lock-held time is tiny,
+//! and percentiles are exact to a factor of two — plenty for the
+//! starved-vs-full cache comparisons of bench `serve_latency`, which
+//! differ by orders of magnitude.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+use super::json::Json;
+use super::model::CacheStats;
+
+/// Number of log₂ buckets: covers 1 µs … ~2^39 µs (≈ 6 days).
+const BUCKETS: usize = 40;
+
+/// Log₂-bucketed latency histogram over microseconds.
+#[derive(Debug, Clone)]
+pub struct LatencyHistogram {
+    buckets: [u64; BUCKETS],
+    count: u64,
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl LatencyHistogram {
+    /// An empty histogram.
+    pub fn new() -> LatencyHistogram {
+        LatencyHistogram { buckets: [0; BUCKETS], count: 0 }
+    }
+
+    /// Record one latency sample.
+    pub fn record(&mut self, micros: u64) {
+        let idx = (63 - micros.max(1).leading_zeros() as usize).min(BUCKETS - 1);
+        self.buckets[idx] += 1;
+        self.count += 1;
+    }
+
+    /// Samples recorded.
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    /// The `p`-th percentile in milliseconds (upper bucket bound, so the
+    /// value over-estimates by at most 2×). Returns 0 with no samples.
+    pub fn percentile_ms(&self, p: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let target = ((p / 100.0) * self.count as f64).ceil().max(1.0) as u64;
+        let mut cum = 0u64;
+        for (i, &n) in self.buckets.iter().enumerate() {
+            cum += n;
+            if cum >= target {
+                return (1u64 << (i + 1)) as f64 / 1000.0;
+            }
+        }
+        (1u64 << BUCKETS) as f64 / 1000.0
+    }
+}
+
+/// Shared serving counters; one instance per server/harness, updated by
+/// the batch executor and read (lock-briefly) by `stats` requests.
+pub struct ServeMetrics {
+    start: Instant,
+    hist: Mutex<LatencyHistogram>,
+    requests: AtomicU64,
+    docs: AtomicU64,
+    tokens: AtomicU64,
+    batches: AtomicU64,
+}
+
+impl Default for ServeMetrics {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ServeMetrics {
+    /// Fresh counters; throughput is measured from this instant.
+    pub fn new() -> ServeMetrics {
+        ServeMetrics {
+            start: Instant::now(),
+            hist: Mutex::new(LatencyHistogram::new()),
+            requests: AtomicU64::new(0),
+            docs: AtomicU64::new(0),
+            tokens: AtomicU64::new(0),
+            batches: AtomicU64::new(0),
+        }
+    }
+
+    /// Record one completed request: queue-to-reply latency plus its
+    /// document/token volume.
+    pub fn record_request(&self, latency_micros: u64, docs: u64, tokens: u64) {
+        self.hist.lock().expect("metrics lock poisoned").record(latency_micros);
+        self.requests.fetch_add(1, Ordering::Relaxed);
+        self.docs.fetch_add(docs, Ordering::Relaxed);
+        self.tokens.fetch_add(tokens, Ordering::Relaxed);
+    }
+
+    /// Record one executed micro-batch.
+    pub fn record_batch(&self) {
+        self.batches.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A consistent-enough snapshot for reporting (counters are relaxed;
+    /// the histogram is copied under its lock).
+    pub fn snapshot(&self, cache: CacheStats) -> StatsSnapshot {
+        let hist = self.hist.lock().expect("metrics lock poisoned").clone();
+        let elapsed = self.start.elapsed().as_secs_f64().max(1e-9);
+        let docs = self.docs.load(Ordering::Relaxed);
+        StatsSnapshot {
+            requests: self.requests.load(Ordering::Relaxed),
+            docs,
+            tokens: self.tokens.load(Ordering::Relaxed),
+            batches: self.batches.load(Ordering::Relaxed),
+            elapsed_secs: elapsed,
+            docs_per_sec: docs as f64 / elapsed,
+            p50_ms: hist.percentile_ms(50.0),
+            p95_ms: hist.percentile_ms(95.0),
+            p99_ms: hist.percentile_ms(99.0),
+            cache,
+        }
+    }
+}
+
+/// What a `stats` request returns: request/volume counters, latency
+/// percentiles, throughput, and the block cache's hit/byte accounting.
+#[derive(Debug, Clone)]
+pub struct StatsSnapshot {
+    /// Requests completed.
+    pub requests: u64,
+    /// Documents folded in.
+    pub docs: u64,
+    /// Tokens sampled over.
+    pub tokens: u64,
+    /// Micro-batches executed.
+    pub batches: u64,
+    /// Seconds since the metrics were created.
+    pub elapsed_secs: f64,
+    /// Documents per wall-clock second since startup.
+    pub docs_per_sec: f64,
+    /// Median request latency (ms, log₂-bucket upper bound).
+    pub p50_ms: f64,
+    /// 95th-percentile request latency (ms).
+    pub p95_ms: f64,
+    /// 99th-percentile request latency (ms).
+    pub p99_ms: f64,
+    /// Block-cache counters at snapshot time.
+    pub cache: CacheStats,
+}
+
+impl StatsSnapshot {
+    /// The snapshot as the wire-format `stats` response body.
+    pub fn to_json(&self) -> Json {
+        Json::Obj(vec![
+            ("type".into(), Json::str("stats")),
+            ("requests".into(), Json::num(self.requests as f64)),
+            ("docs".into(), Json::num(self.docs as f64)),
+            ("tokens".into(), Json::num(self.tokens as f64)),
+            ("batches".into(), Json::num(self.batches as f64)),
+            ("elapsed_secs".into(), Json::num(self.elapsed_secs)),
+            ("docs_per_sec".into(), Json::num(self.docs_per_sec)),
+            ("p50_ms".into(), Json::num(self.p50_ms)),
+            ("p95_ms".into(), Json::num(self.p95_ms)),
+            ("p99_ms".into(), Json::num(self.p99_ms)),
+            ("cache_hits".into(), Json::num(self.cache.hits as f64)),
+            ("cache_misses".into(), Json::num(self.cache.misses as f64)),
+            ("cache_bypasses".into(), Json::num(self.cache.bypasses as f64)),
+            ("cache_evictions".into(), Json::num(self.cache.evictions as f64)),
+            ("cache_hit_rate".into(), Json::num(self.cache.hit_rate())),
+            ("cache_resident_blocks".into(), Json::num(self.cache.resident_blocks as f64)),
+            ("cache_resident_bytes".into(), Json::num(self.cache.resident_bytes as f64)),
+            ("cache_peak_bytes".into(), Json::num(self.cache.peak_bytes as f64)),
+            ("cache_budget_bytes".into(), Json::num(self.cache.budget_bytes as f64)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_percentiles_bracket_samples() {
+        let mut h = LatencyHistogram::new();
+        assert_eq!(h.percentile_ms(99.0), 0.0);
+        // 90 fast samples (~100 µs), 10 slow (~50 ms).
+        for _ in 0..90 {
+            h.record(100);
+        }
+        for _ in 0..10 {
+            h.record(50_000);
+        }
+        assert_eq!(h.count(), 100);
+        let p50 = h.percentile_ms(50.0);
+        let p99 = h.percentile_ms(99.0);
+        assert!(p50 >= 0.1 && p50 <= 0.3, "p50={p50}");
+        assert!(p99 >= 50.0 && p99 <= 70.0, "p99={p99}");
+        assert!(h.percentile_ms(89.0) <= p99);
+        // Zero-latency samples land in the first bucket, not a panic.
+        h.record(0);
+        assert!(h.percentile_ms(1.0) > 0.0);
+    }
+
+    #[test]
+    fn snapshot_counts_and_renders() {
+        let m = ServeMetrics::new();
+        m.record_batch();
+        m.record_request(1_000, 4, 120);
+        m.record_request(2_000, 1, 30);
+        let snap = m.snapshot(CacheStats::default());
+        assert_eq!(snap.requests, 2);
+        assert_eq!(snap.docs, 5);
+        assert_eq!(snap.tokens, 150);
+        assert_eq!(snap.batches, 1);
+        assert!(snap.docs_per_sec > 0.0);
+        assert!(snap.p99_ms >= snap.p50_ms);
+        let j = snap.to_json();
+        assert_eq!(j.get("type").and_then(Json::as_str), Some("stats"));
+        assert_eq!(j.get("docs").and_then(Json::as_u64), Some(5));
+        // Round-trips through the wire format.
+        assert_eq!(Json::parse(&j.render()).unwrap(), j);
+    }
+}

@@ -1,0 +1,46 @@
+//! The `serve` subsystem — model-parallel **online inference**: fold-in
+//! queries answered against a model that stays block-sharded in the
+//! KV-store, never materialized densely.
+//!
+//! ```text
+//!            TCP (length-prefixed JSON)            in process
+//!  clients ──────────► server ───► batcher ───► executor ──► ShardedTopicModel
+//!                        │            │  micro-batch,           │  LRU block cache
+//!                        │            │  group-by-block         │  (serve.cache_budget_mib,
+//!                        ▼            ▼                         ▼   MemCategory::ServeCache)
+//!                     metrics ◄── latency/throughput        KvStore::read_block
+//!                                    + cache hit rate       (read-only concurrent leases)
+//! ```
+//!
+//! * [`model`] — [`ShardedTopicModel`]: pages `ModelBlock`s on demand
+//!   through a budget-bounded LRU cache; a model larger than the cache
+//!   serves correctly, just slower.
+//! * [`batcher`] — micro-batching queue (`serve.max_batch`,
+//!   `serve.max_wait_ms`) grouping queued documents' tokens by block, so
+//!   each block fetch amortizes across the whole batch — the training
+//!   rotation's model-parallelism replayed at query time.
+//! * [`server`] — dependency-free `std::net` TCP front end
+//!   (`mplda serve`) with a handler pool and a `stats` verb (latency
+//!   percentiles, throughput, cache hit rate from [`metrics`]).
+//! * [`harness`] — the same stack with no sockets, driven by
+//!   `tests/serve_determinism.rs` to prove served results **bitwise
+//!   equal** offline `TopicModel::infer` at every cache budget, batch
+//!   size and thread count.
+//!
+//! See DESIGN.md §Serving for the paging lifecycle, the cache budget
+//! math, and the determinism argument; EXPERIMENTS.md §E9 for the
+//! `serve_latency` bench and its acceptance bar.
+
+pub mod batcher;
+pub mod harness;
+pub mod json;
+pub mod metrics;
+pub mod model;
+pub mod server;
+
+pub use batcher::{BatchOpts, Batcher, InferRequest};
+pub use harness::Harness;
+pub use json::Json;
+pub use metrics::{LatencyHistogram, ServeMetrics, StatsSnapshot};
+pub use model::{CacheStats, ShardedTopicModel};
+pub use server::{Client, Server};

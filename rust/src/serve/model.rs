@@ -1,0 +1,511 @@
+//! `ShardedTopicModel` — fold-in inference against a model that **stays
+//! block-sharded** in the [`KvStore`].
+//!
+//! [`Session::freeze`](crate::engine::Session::freeze) materializes the
+//! whole word–topic table densely, which caps servable model size at one
+//! node's RAM — exactly the limit the paper's block sharding exists to
+//! break. This type is the serving-side answer: the trained blocks stay
+//! in the store, and queries page them on demand through an **LRU cache**
+//! bounded by `serve.cache_budget_mib`:
+//!
+//! * Block reads are **read-only concurrent leases**
+//!   ([`KvStore::read_block`]) — the store stays intact and any number of
+//!   queries page in parallel.
+//! * The cache **never admits past its budget**: admission evicts
+//!   least-recently-used blocks first, and a block larger than the whole
+//!   budget is served *uncached* (a bypass). `MemCategory::ServeCache`
+//!   under the standard [`MemoryAccountant`] witnesses the bound — its
+//!   peak can never exceed the budget.
+//! * A model larger than the cache therefore still serves **correctly,
+//!   just slower** — and bitwise identically: the fold-in arithmetic is
+//!   the same `engine::infer` fold-in core the offline
+//!   [`TopicModel`](crate::engine::TopicModel) runs, and cache state can
+//!   only change *when* a row is fetched, never *what* it contains
+//!   (`tests/serve_determinism.rs`).
+
+use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex};
+
+use anyhow::{bail, Result};
+
+use crate::cluster::{ClusterSpec, MemCategory, MemoryAccountant};
+use crate::config::ClusterConfig;
+use crate::engine::infer::{infer_batch, infer_batch_reusing, FrozenStats, RowSource};
+use crate::engine::{BowDoc, DocTopics, InferOptions};
+use crate::kvstore::{KvStore, ShardMap};
+use crate::model::{Assignments, BlockMap, ModelBlock, SparseRow, TopicCounts, WordTopicTable};
+use crate::sampler::{Params, Scratch};
+
+/// Block-cache counters, snapshotted by [`ShardedTopicModel::cache_stats`].
+#[derive(Debug, Clone, Copy, Default)]
+pub struct CacheStats {
+    /// Row lookups answered from the cache.
+    pub hits: u64,
+    /// Lookups that paged a block in from the store.
+    pub misses: u64,
+    /// Lookups whose block exceeded the whole budget and was served
+    /// uncached (counts as a miss for hit-rate purposes).
+    pub bypasses: u64,
+    /// Blocks evicted to make room.
+    pub evictions: u64,
+    /// Blocks resident right now.
+    pub resident_blocks: usize,
+    /// Bytes resident right now.
+    pub resident_bytes: u64,
+    /// Peak resident bytes ever (the `ServeCache` accountant category —
+    /// must never exceed `budget_bytes` when a budget is set).
+    pub peak_bytes: u64,
+    /// The configured budget in bytes (0 = unlimited).
+    pub budget_bytes: u64,
+}
+
+impl CacheStats {
+    /// Fraction of block lookups answered without touching the store.
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses + self.bypasses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+}
+
+struct CacheEntry {
+    block: Arc<ModelBlock>,
+    bytes: u64,
+    last_used: u64,
+}
+
+/// The LRU block cache plus its accounting, all behind one mutex so
+/// budget checks, admission and counters stay coherent.
+struct BlockCache {
+    entries: BTreeMap<u32, CacheEntry>,
+    /// Monotone access clock for LRU ordering.
+    tick: u64,
+    /// Bytes currently resident.
+    bytes: u64,
+    /// Admission budget in bytes; 0 = unlimited.
+    budget: u64,
+    /// Single-node accountant charged under `MemCategory::ServeCache`.
+    mem: MemoryAccountant,
+    hits: u64,
+    misses: u64,
+    bypasses: u64,
+    evictions: u64,
+}
+
+/// A trained LDA model served straight from its block shards.
+pub struct ShardedTopicModel {
+    kv: KvStore,
+    map: BlockMap,
+    stats: FrozenStats,
+    num_words: usize,
+    cache: Mutex<BlockCache>,
+}
+
+impl RowSource for ShardedTopicModel {
+    fn with_row(&self, w: u32, f: &mut dyn FnMut(&SparseRow)) {
+        let block = self.block(self.map.block_of(w) as u32);
+        f(block.row(w));
+    }
+
+    fn num_words(&self) -> usize {
+        self.num_words
+    }
+}
+
+impl ShardedTopicModel {
+    /// Package a quiescent block store for serving. Fails if any block is
+    /// still leased (training in flight), the layout does not cover the
+    /// vocabulary, or the totals are invalid — a model that constructs is
+    /// servable.
+    pub fn new(
+        kv: KvStore,
+        map: BlockMap,
+        params: Params,
+        num_words: usize,
+        cache_budget_mib: f64,
+    ) -> Result<ShardedTopicModel> {
+        if kv.num_leased() != 0 {
+            bail!(
+                "store not quiescent: {} blocks still leased — finish training before serving",
+                kv.num_leased()
+            );
+        }
+        if !map.is_exact_cover(num_words) {
+            bail!("block layout does not cover the vocabulary (V={num_words})");
+        }
+        if cache_budget_mib < 0.0 {
+            bail!("serve cache budget must be >= 0 (0 = unlimited)");
+        }
+        let stats = FrozenStats::new(&kv.totals_snapshot(), params)?;
+        let budget = (cache_budget_mib * (1u64 << 20) as f64).round() as u64;
+        let capacity = if budget > 0 { budget } else { u64::MAX };
+        let cache = BlockCache {
+            entries: BTreeMap::new(),
+            tick: 0,
+            bytes: 0,
+            budget,
+            mem: MemoryAccountant::new(1, capacity, false),
+            hits: 0,
+            misses: 0,
+            bypasses: 0,
+            evictions: 0,
+        };
+        Ok(ShardedTopicModel { kv, map, stats, num_words, cache: Mutex::new(cache) })
+    }
+
+    /// Build a sharded serving model from a dense table (tests and
+    /// benches compare paged serving against the offline model this way):
+    /// the table is cut into `num_blocks` strided blocks homed on one
+    /// simulated machine.
+    pub fn from_table(
+        wt: &WordTopicTable,
+        ck: TopicCounts,
+        params: Params,
+        num_blocks: usize,
+        cache_budget_mib: f64,
+    ) -> Result<ShardedTopicModel> {
+        if num_blocks == 0 || num_blocks > wt.num_words() {
+            bail!(
+                "need 1 <= blocks <= V, got {num_blocks} blocks over V={}",
+                wt.num_words()
+            );
+        }
+        let map = BlockMap::strided(wt.num_words(), num_blocks);
+        let blocks = Assignments::build_blocks(wt, &map);
+        let spec = ClusterSpec::from_config(&ClusterConfig {
+            machines: 1,
+            ..ClusterConfig::default()
+        });
+        let shards = ShardMap::round_robin(num_blocks, &spec);
+        let kv = KvStore::new(blocks, ck, shards);
+        Self::new(kv, map, params, wt.num_words(), cache_budget_mib)
+    }
+
+    /// Number of topics `K`.
+    pub fn num_topics(&self) -> usize {
+        self.stats.params.num_topics
+    }
+
+    /// Vocabulary size `V`.
+    pub fn num_words(&self) -> usize {
+        self.num_words
+    }
+
+    /// Number of model blocks backing the store.
+    pub fn num_blocks(&self) -> usize {
+        self.map.num_blocks()
+    }
+
+    /// The hyperparameters the model was trained with.
+    pub fn params(&self) -> &Params {
+        &self.stats.params
+    }
+
+    /// Which block owns word `w`'s row.
+    pub fn block_of(&self, w: u32) -> u32 {
+        self.map.block_of(w) as u32
+    }
+
+    /// Total bytes of all blocks in the store (for sizing cache budgets
+    /// relative to the model: "full" = this, "starved" = about one
+    /// block).
+    pub fn total_block_bytes(&self) -> u64 {
+        self.kv.with_resident_blocks(|blocks| blocks.map(|b| b.bytes()).sum())
+    }
+
+    /// Bytes of the largest single block (the smallest budget that still
+    /// caches at all).
+    pub fn max_block_bytes(&self) -> u64 {
+        self.kv.with_resident_blocks(|blocks| blocks.map(|b| b.bytes()).max().unwrap_or(0))
+    }
+
+    /// Get block `id`, from cache or by paging it in. The returned `Arc`
+    /// stays valid across evictions, so row visits never hold the cache
+    /// lock — and neither does the O(block) store copy on a miss: the
+    /// lock covers only the map lookups and the admission bookkeeping,
+    /// so concurrent queries keep hitting unrelated blocks while one
+    /// pages in. (Two threads missing the *same* block may both pay the
+    /// copy; admission below dedupes, and both copies are equal.)
+    fn block(&self, id: u32) -> Arc<ModelBlock> {
+        {
+            let mut cache = self.cache.lock().expect("serve cache lock poisoned");
+            cache.tick += 1;
+            let tick = cache.tick;
+            if let Some(e) = cache.entries.get_mut(&id) {
+                e.last_used = tick;
+                let block = e.block.clone();
+                cache.hits += 1;
+                return block;
+            }
+        }
+        // Page in with the lock released.
+        let block = self
+            .kv
+            .read_block(id, 0)
+            .expect("serving store is quiescent and owns every block");
+        let bytes = block.bytes();
+        let arc = Arc::new(block);
+        let mut cache = self.cache.lock().expect("serve cache lock poisoned");
+        let tick = cache.tick;
+        if let Some(e) = cache.entries.get_mut(&id) {
+            // A racing misser admitted it while we copied. Serve the
+            // cached one (LRU stays coherent); our fetch still counts —
+            // it really hit the store.
+            e.last_used = tick;
+            let block = e.block.clone();
+            cache.misses += 1;
+            return block;
+        }
+        if cache.budget > 0 && bytes > cache.budget {
+            // Larger than the whole budget: serve uncached. The budget
+            // is a hard admission bound, never exceeded.
+            cache.bypasses += 1;
+            return arc;
+        }
+        cache.misses += 1;
+        while cache.budget > 0 && cache.bytes + bytes > cache.budget {
+            // Evict least-recently-used until the newcomer fits. The loop
+            // terminates: either entries shrink to empty (then
+            // cache.bytes == 0 and the bypass check above guarantees
+            // bytes <= budget) or the condition clears first.
+            let victim = cache
+                .entries
+                .iter()
+                .min_by_key(|(_, e)| e.last_used)
+                .map(|(&vid, _)| vid)
+                .expect("eviction loop ran with an empty cache");
+            let evicted = cache.entries.remove(&victim).expect("victim came from the map");
+            cache.bytes -= evicted.bytes;
+            cache.mem.release(0, MemCategory::ServeCache, evicted.bytes);
+            cache.evictions += 1;
+        }
+        cache.bytes += bytes;
+        cache
+            .mem
+            .charge(0, MemCategory::ServeCache, bytes)
+            .expect("serve cache accountant does not enforce");
+        cache.entries.insert(id, CacheEntry { block: arc.clone(), bytes, last_used: tick });
+        arc
+    }
+
+    /// Warm the cache with each listed block once, in the given order —
+    /// the micro-batcher's group-by-block pre-pass, which amortizes one
+    /// store read across every queued document that touches the block.
+    /// Out-of-range ids are ignored (per-document validation reports them
+    /// properly later).
+    pub fn touch_blocks(&self, ids: &[u32]) {
+        for &id in ids {
+            if (id as usize) < self.map.num_blocks() {
+                let _ = self.block(id);
+            }
+        }
+    }
+
+    /// The distinct blocks a set of documents will touch, ascending —
+    /// what the batcher feeds [`ShardedTopicModel::touch_blocks`]. Takes
+    /// any document iterator so the executor can sweep a whole batch of
+    /// requests without concatenating them. Out-of-vocabulary words are
+    /// skipped here (per-document validation reports them properly).
+    pub fn blocks_of<'a, I: IntoIterator<Item = &'a BowDoc>>(&self, docs: I) -> Vec<u32> {
+        let mut ids: Vec<u32> = docs
+            .into_iter()
+            .flat_map(|d| d.tokens.iter())
+            .filter(|&&w| (w as usize) < self.num_words)
+            .map(|&w| self.map.block_of(w) as u32)
+            .collect();
+        ids.sort_unstable();
+        ids.dedup();
+        ids
+    }
+
+    /// Snapshot the cache counters.
+    pub fn cache_stats(&self) -> CacheStats {
+        let cache = self.cache.lock().expect("serve cache lock poisoned");
+        CacheStats {
+            hits: cache.hits,
+            misses: cache.misses,
+            bypasses: cache.bypasses,
+            evictions: cache.evictions,
+            resident_blocks: cache.entries.len(),
+            resident_bytes: cache.bytes,
+            peak_bytes: cache.mem.peak_category(0, MemCategory::ServeCache),
+            budget_bytes: cache.budget,
+        }
+    }
+
+    /// Fold in a batch with default options — same contract as
+    /// [`TopicModel::infer`](crate::engine::TopicModel::infer), bitwise
+    /// identical results.
+    pub fn infer(&self, docs: &[BowDoc]) -> Result<DocTopics> {
+        self.infer_with(docs, &InferOptions::default())
+    }
+
+    /// Fold in a batch of held-out documents. Bitwise identical to
+    /// [`TopicModel::infer_with`](crate::engine::TopicModel::infer_with)
+    /// over the same trained state, for every cache budget and thread
+    /// count: per-document RNG streams are keyed by batch position, and
+    /// paging changes only when rows are fetched, never their contents.
+    pub fn infer_with(&self, docs: &[BowDoc], opts: &InferOptions) -> Result<DocTopics> {
+        infer_batch(&self.stats, self, docs, opts)
+    }
+
+    /// [`ShardedTopicModel::infer_with`] reusing caller-held scratches
+    /// (one worker thread per scratch; `opts.threads` is ignored).
+    pub fn infer_with_scratch(
+        &self,
+        docs: &[BowDoc],
+        opts: &InferOptions,
+        scratches: &mut [Scratch],
+    ) -> Result<DocTopics> {
+        infer_batch_reusing(&self.stats, self, docs, opts.iterations, opts.seed, scratches)
+    }
+
+    /// Serve one *request*: fold in its documents on RNG streams keyed by
+    /// position **within the request** — the same streams the offline
+    /// model would use for the request as a standalone batch — so results
+    /// are independent of how the micro-batcher groups requests, of batch
+    /// size, and of server thread count.
+    pub fn fold_in_request(
+        &self,
+        docs: &[BowDoc],
+        seed: u64,
+        iterations: usize,
+        scratch: &mut Scratch,
+    ) -> Result<DocTopics> {
+        infer_batch_reusing(&self.stats, self, docs, iterations, seed, std::slice::from_mut(scratch))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    /// A small synthetic trained state with non-trivial rows.
+    fn table(v: usize, k: usize, seed: u64) -> (WordTopicTable, TopicCounts, Params) {
+        let mut rng = Pcg64::new(seed);
+        let mut wt = WordTopicTable::zeros(v, k);
+        let mut ck = TopicCounts::zeros(k);
+        for w in 0..v {
+            for _ in 0..rng.next_below(6) {
+                let t = rng.next_below(k as u64) as u32;
+                wt.row_mut(w).inc(t);
+                ck.inc(t as usize);
+            }
+        }
+        (wt, ck, Params::new(k, v, 0.1, 0.01))
+    }
+
+    fn docs(v: usize, n: usize, len: usize, seed: u64) -> Vec<BowDoc> {
+        let mut rng = Pcg64::new(seed);
+        (0..n)
+            .map(|_| BowDoc::new((0..len).map(|_| rng.next_below(v as u64) as u32).collect()))
+            .collect()
+    }
+
+    #[test]
+    fn pages_blocks_and_answers_rows() {
+        let (wt, ck, params) = table(60, 8, 3);
+        let m = ShardedTopicModel::from_table(&wt, ck, params, 6, 0.0).unwrap();
+        assert_eq!(m.num_blocks(), 6);
+        assert_eq!(m.num_words(), 60);
+        // Every word's row matches the dense table through the pager.
+        for w in 0..60u32 {
+            m.with_row(w, &mut |row| assert_eq!(row, wt.row(w as usize), "word {w}"));
+        }
+        let s = m.cache_stats();
+        assert_eq!(s.misses, 6, "each block paged once");
+        assert_eq!(s.hits, 54);
+        assert_eq!(s.resident_blocks, 6);
+        assert_eq!(s.evictions, 0);
+        assert!(s.hit_rate() > 0.8);
+    }
+
+    #[test]
+    fn budget_is_a_hard_admission_bound() {
+        let (wt, ck, params) = table(120, 8, 4);
+        let full = ShardedTopicModel::from_table(&wt, ck.clone(), params, 8, 0.0).unwrap();
+        let per_block = full.max_block_bytes();
+        // Budget fits roughly two blocks: constant eviction, never over.
+        let budget_mib = (per_block * 2) as f64 / (1u64 << 20) as f64;
+        let m = ShardedTopicModel::from_table(&wt, ck.clone(), params, 8, budget_mib).unwrap();
+        let qs = docs(120, 10, 40, 9);
+        let folded = m.infer(&qs).unwrap();
+        assert_eq!(folded.len(), 10);
+        let s = m.cache_stats();
+        assert!(s.evictions > 0, "a starved cache must evict");
+        assert!(s.budget_bytes > 0);
+        assert!(
+            s.peak_bytes <= s.budget_bytes,
+            "ServeCache peak {} exceeded budget {}",
+            s.peak_bytes,
+            s.budget_bytes
+        );
+        // Tiny budget (smaller than any block): everything bypasses,
+        // nothing is ever admitted — and serving still works.
+        let tiny = ShardedTopicModel::from_table(&wt, ck, params, 8, 1e-6).unwrap();
+        tiny.infer(&qs).unwrap();
+        let ts = tiny.cache_stats();
+        assert_eq!(ts.misses, 0);
+        assert!(ts.bypasses > 0);
+        assert_eq!(ts.peak_bytes, 0);
+        assert_eq!(ts.resident_blocks, 0);
+    }
+
+    #[test]
+    fn served_results_equal_offline_at_every_budget() {
+        let (wt, ck, params) = table(100, 12, 5);
+        let offline = crate::engine::TopicModel::new(wt.clone(), ck.clone(), params).unwrap();
+        let qs = docs(100, 12, 30, 11);
+        let opts = InferOptions { iterations: 8, seed: 99, threads: 3 };
+        let reference = offline.infer_with(&qs, &opts).unwrap();
+        let snap = |dt: &DocTopics| -> Vec<Vec<(u32, u32)>> {
+            (0..dt.len()).map(|d| dt.counts(d).iter().collect()).collect()
+        };
+        for budget_mib in [0.0, 0.001, 0.005] {
+            let m =
+                ShardedTopicModel::from_table(&wt, ck.clone(), params, 10, budget_mib).unwrap();
+            let served = m.infer_with(&qs, &opts).unwrap();
+            assert_eq!(
+                snap(&reference),
+                snap(&served),
+                "budget {budget_mib} MiB must not change results"
+            );
+        }
+    }
+
+    #[test]
+    fn validates_like_the_offline_model() {
+        let (wt, ck, params) = table(50, 8, 6);
+        let m = ShardedTopicModel::from_table(&wt, ck.clone(), params, 5, 0.0).unwrap();
+        let err = m.infer(&[BowDoc::new(vec![5000])]).map(|_| ()).unwrap_err().to_string();
+        assert!(err.contains("vocabulary"), "{err}");
+        assert!(m.infer(&[]).unwrap().is_empty());
+        // Construction guards: bad block counts, negative budget.
+        assert!(ShardedTopicModel::from_table(&wt, ck.clone(), params, 0, 0.0).is_err());
+        assert!(ShardedTopicModel::from_table(&wt, ck.clone(), params, 51, 0.0).is_err());
+        assert!(ShardedTopicModel::from_table(&wt, ck, params, 5, -1.0).is_err());
+    }
+
+    #[test]
+    fn touch_blocks_amortizes_and_ignores_junk() {
+        let (wt, ck, params) = table(40, 8, 7);
+        let m = ShardedTopicModel::from_table(&wt, ck, params, 4, 0.0).unwrap();
+        let qs = docs(40, 6, 20, 13);
+        let wanted = m.blocks_of(&qs);
+        assert!(!wanted.is_empty() && wanted.windows(2).all(|w| w[0] < w[1]));
+        m.touch_blocks(&wanted);
+        let before = m.cache_stats();
+        assert_eq!(before.misses, wanted.len() as u64);
+        // Junk ids are ignored, not fatal.
+        m.touch_blocks(&[999]);
+        // The warmed batch now runs hit-only.
+        m.infer(&qs).unwrap();
+        let after = m.cache_stats();
+        assert_eq!(after.misses, before.misses, "warmed batch must not re-fetch");
+        assert!(after.hits > before.hits);
+    }
+}

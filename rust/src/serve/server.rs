@@ -1,0 +1,571 @@
+//! The TCP front end: a dependency-free `std::net` server speaking
+//! length-prefixed JSON, layered on the in-process [`Harness`].
+//!
+//! ## Wire format
+//!
+//! Every message — both directions — is one frame:
+//!
+//! ```text
+//! ┌────────────────────┬──────────────────────────────┐
+//! │ length: u32 (BE)   │ body: `length` bytes of JSON │
+//! └────────────────────┴──────────────────────────────┘
+//! ```
+//!
+//! Requests (`"type"` selects the verb):
+//!
+//! | request                                                        | response |
+//! |----------------------------------------------------------------|----------|
+//! | `{"type":"ping"}`                                              | `{"type":"pong"}` |
+//! | `{"type":"infer","docs":[[w,…],…],"seed":S,"iterations":N}`    | `{"type":"result","counts":[[[topic,count],…],…]}` |
+//! | `{"type":"stats"}`                                             | `{"type":"stats", …counters…}` (see [`StatsSnapshot::to_json`]) |
+//! | `{"type":"shutdown"}`                                          | `{"type":"bye"}`, then the server stops |
+//!
+//! `seed` and `iterations` are optional (defaults: seed 0, the
+//! configured `serve.iterations`). Malformed JSON or unknown verbs get
+//! `{"type":"error","message":…}` and the connection stays open; framing
+//! errors close the connection.
+//!
+//! ## Threading
+//!
+//! One accept thread feeds a pool of `serve.threads` connection
+//! handlers; all of them enqueue onto the shared micro-batcher, whose
+//! single executor owns the sampling. Results are independent of the
+//! pool size — per-request RNG streams, see [`super::batcher`].
+
+use std::collections::HashMap;
+use std::io::{ErrorKind, Read, Write};
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::ServeConfig;
+use crate::engine::{BowDoc, DocTopics};
+
+use super::batcher::{BatchOpts, Batcher, InferRequest};
+use super::harness::Harness;
+use super::json::Json;
+use super::metrics::{ServeMetrics, StatsSnapshot};
+use super::model::ShardedTopicModel;
+
+/// Upper bound on one frame's body (guards against garbage prefixes).
+const MAX_FRAME: usize = 64 << 20;
+
+/// Upper bound on client-requested Gibbs sweeps. The executor is shared;
+/// without a cap one request could wedge it (and teardown) for an
+/// arbitrary multiple of its document cost. The default is 20; anything
+/// past this is a client error, not a workload.
+const MAX_REQUEST_ITERATIONS: usize = 1_000;
+
+/// Write one length-prefixed JSON frame.
+pub fn write_frame<W: Write>(w: &mut W, body: &Json) -> Result<()> {
+    let text = body.render();
+    if text.len() > MAX_FRAME {
+        bail!("response frame of {} bytes exceeds the {MAX_FRAME}-byte cap", text.len());
+    }
+    w.write_all(&(text.len() as u32).to_be_bytes()).context("writing frame length")?;
+    w.write_all(text.as_bytes()).context("writing frame body")?;
+    w.flush().context("flushing frame")?;
+    Ok(())
+}
+
+/// Read one frame's raw body; `Ok(None)` on clean EOF before a frame
+/// starts (the peer is done). Errors here mean the *framing* is broken —
+/// the stream can no longer be trusted.
+fn read_frame_bytes<R: Read>(r: &mut R) -> Result<Option<Vec<u8>>> {
+    // Fill the length prefix byte-wise so EOF *before* a frame (clean
+    // disconnect) is distinguishable from EOF *inside* the prefix (a
+    // truncated frame — a real framing error).
+    let mut len_bytes = [0u8; 4];
+    let mut filled = 0usize;
+    while filled < len_bytes.len() {
+        match r.read(&mut len_bytes[filled..]) {
+            Ok(0) => {
+                if filled == 0 {
+                    return Ok(None);
+                }
+                bail!("connection closed mid-frame ({filled} of 4 length bytes)");
+            }
+            Ok(n) => filled += n,
+            Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+            Err(e) => return Err(e.into()),
+        }
+    }
+    let len = u32::from_be_bytes(len_bytes) as usize;
+    if len > MAX_FRAME {
+        bail!("frame of {len} bytes exceeds the {MAX_FRAME}-byte cap");
+    }
+    let mut body = vec![0u8; len];
+    r.read_exact(&mut body).context("reading frame body")?;
+    Ok(Some(body))
+}
+
+/// Read one length-prefixed JSON frame; `Ok(None)` on clean EOF before a
+/// frame starts (the peer is done).
+pub fn read_frame<R: Read>(r: &mut R) -> Result<Option<Json>> {
+    match read_frame_bytes(r)? {
+        None => Ok(None),
+        Some(body) => {
+            let text = std::str::from_utf8(&body).context("frame body is not UTF-8")?;
+            Json::parse(text).map(Some)
+        }
+    }
+}
+
+fn error_frame(message: impl std::fmt::Display) -> Json {
+    Json::Obj(vec![
+        ("type".into(), Json::str("error")),
+        ("message".into(), Json::str(message.to_string())),
+    ])
+}
+
+/// Render served [`DocTopics`] as the `result` response: per document,
+/// the folded-in `(topic, count)` pairs in their live (descending-count)
+/// order — exact integers, so clients can digest-compare across servers.
+fn result_frame(folded: &DocTopics) -> Json {
+    let docs: Vec<Json> = (0..folded.len())
+        .map(|d| {
+            Json::Arr(
+                folded
+                    .counts(d)
+                    .iter()
+                    .map(|(t, c)| Json::Arr(vec![Json::num(t as f64), Json::num(c as f64)]))
+                    .collect(),
+            )
+        })
+        .collect();
+    Json::Obj(vec![("type".into(), Json::str("result")), ("counts".into(), Json::Arr(docs))])
+}
+
+fn parse_infer(req: &Json, default_iterations: usize) -> Result<InferRequest> {
+    let docs_json = req.get("docs").and_then(Json::as_arr).context("infer needs \"docs\"")?;
+    let mut docs = Vec::with_capacity(docs_json.len());
+    for (i, doc) in docs_json.iter().enumerate() {
+        let words = doc.as_arr().with_context(|| format!("doc {i} is not an array"))?;
+        let mut tokens = Vec::with_capacity(words.len());
+        for w in words {
+            let id = w
+                .as_u64()
+                .with_context(|| format!("doc {i} has a non-integer word id"))?;
+            if id > u32::MAX as u64 {
+                bail!("doc {i} word id {id} exceeds u32");
+            }
+            tokens.push(id as u32);
+        }
+        docs.push(BowDoc::new(tokens));
+    }
+    let seed = match req.get("seed") {
+        None => 0,
+        Some(s) => s.as_u64().context("\"seed\" must be a non-negative integer")?,
+    };
+    let iterations = match req.get("iterations") {
+        None => default_iterations,
+        Some(n) => n.as_u64().context("\"iterations\" must be a non-negative integer")? as usize,
+    };
+    if iterations > MAX_REQUEST_ITERATIONS {
+        bail!("iterations {iterations} exceeds the per-request cap of {MAX_REQUEST_ITERATIONS}");
+    }
+    Ok(InferRequest { docs, seed, iterations })
+}
+
+/// Per-connection state shared with the handler threads.
+struct ConnCtx {
+    model: Arc<ShardedTopicModel>,
+    batcher: Arc<Batcher>,
+    metrics: Arc<ServeMetrics>,
+    shutdown: Arc<AtomicBool>,
+    addr: SocketAddr,
+    default_iterations: usize,
+}
+
+/// Serve one connection until EOF, a framing error, or shutdown.
+fn handle_conn(mut stream: TcpStream, ctx: &ConnCtx) {
+    loop {
+        let body = match read_frame_bytes(&mut stream) {
+            Ok(Some(body)) => body,
+            Ok(None) => return, // clean EOF
+            Err(e) => {
+                // Framing is broken; report if possible, then drop.
+                let _ = write_frame(&mut stream, &error_frame(e));
+                return;
+            }
+        };
+        // The body was fully consumed, so a malformed payload leaves the
+        // framing intact: report and keep the connection open.
+        let parsed = std::str::from_utf8(&body)
+            .map_err(|e| anyhow::anyhow!("frame body is not UTF-8: {e}"))
+            .and_then(|text| Json::parse(text));
+        let request = match parsed {
+            Ok(json) => json,
+            Err(e) => {
+                if write_frame(&mut stream, &error_frame(e)).is_err() {
+                    return;
+                }
+                continue;
+            }
+        };
+        let response = match request.get("type").and_then(Json::as_str) {
+            Some("ping") => Json::Obj(vec![("type".into(), Json::str("pong"))]),
+            Some("infer") => match parse_infer(&request, ctx.default_iterations) {
+                Err(e) => error_frame(e),
+                Ok(req) => {
+                    let rx = ctx.batcher.submit(req);
+                    match rx.recv() {
+                        Err(_) => error_frame("serving executor hung up"),
+                        Ok(Err(e)) => error_frame(e),
+                        Ok(Ok(folded)) => result_frame(&folded),
+                    }
+                }
+            },
+            Some("stats") => {
+                ctx.metrics.snapshot(ctx.model.cache_stats()).to_json()
+            }
+            Some("shutdown") => {
+                let _ = write_frame(&mut stream, &Json::Obj(vec![(
+                    "type".into(),
+                    Json::str("bye"),
+                )]));
+                ctx.shutdown.store(true, Ordering::SeqCst);
+                // Poke the accept loop so it observes the flag.
+                let _ = TcpStream::connect(ctx.addr);
+                return;
+            }
+            _ => error_frame("unknown request type (ping|infer|stats|shutdown)"),
+        };
+        if write_frame(&mut stream, &response).is_err() {
+            return; // peer went away mid-reply
+        }
+    }
+}
+
+/// A running serving front end. Built by [`Server::serve`]; stop it with
+/// [`Server::shutdown`] (or a `shutdown` request + [`Server::join`]).
+pub struct Server {
+    addr: SocketAddr,
+    shutdown: Arc<AtomicBool>,
+    accept: Option<JoinHandle<()>>,
+    handlers: Vec<JoinHandle<()>>,
+    /// Clones of every live connection, so teardown can force-close them
+    /// — a handler blocked reading an idle client must still be joinable.
+    conns: Arc<Mutex<HashMap<u64, TcpStream>>>,
+    harness: Option<Harness>,
+}
+
+impl Server {
+    /// Bind `127.0.0.1:{cfg.port}` (port 0 = ephemeral), spin up the
+    /// serving stack (model, batcher, executor) and `cfg.threads`
+    /// connection handlers, and start accepting.
+    pub fn serve(model: ShardedTopicModel, cfg: &ServeConfig) -> Result<Server> {
+        if cfg.port > u16::MAX as usize {
+            bail!("serve.port {} does not fit in 16 bits (0 = ephemeral)", cfg.port);
+        }
+        let listener = TcpListener::bind(("127.0.0.1", cfg.port as u16))
+            .with_context(|| format!("binding 127.0.0.1:{}", cfg.port))?;
+        let addr = listener.local_addr().context("reading bound address")?;
+        let opts = BatchOpts {
+            max_batch: cfg.max_batch,
+            max_wait: std::time::Duration::from_millis(cfg.max_wait_ms),
+        };
+        let harness = Harness::new(model, opts);
+        let (model, batcher, metrics) = harness.shared();
+        let shutdown = Arc::new(AtomicBool::new(false));
+
+        // Connection pool: the accept thread feeds handlers over a
+        // channel (a Receiver is single-consumer, so it rides a mutex).
+        let (conn_tx, conn_rx): (Sender<TcpStream>, Receiver<TcpStream>) = channel();
+        let conn_rx = Arc::new(Mutex::new(conn_rx));
+        let conns: Arc<Mutex<HashMap<u64, TcpStream>>> = Arc::new(Mutex::new(HashMap::new()));
+        let next_conn_id = Arc::new(AtomicU64::new(0));
+        let mut handlers = Vec::with_capacity(cfg.threads);
+        for _ in 0..cfg.threads.max(1) {
+            let conn_rx = Arc::clone(&conn_rx);
+            let conns = Arc::clone(&conns);
+            let next_conn_id = Arc::clone(&next_conn_id);
+            let ctx = ConnCtx {
+                model: Arc::clone(&model),
+                batcher: Arc::clone(&batcher),
+                metrics: Arc::clone(&metrics),
+                shutdown: Arc::clone(&shutdown),
+                addr,
+                default_iterations: cfg.iterations,
+            };
+            handlers.push(std::thread::spawn(move || loop {
+                // Take the next connection; when the accept thread drops
+                // the sender, recv errors and the handler retires.
+                let next = conn_rx.lock().expect("conn queue lock poisoned").recv();
+                match next {
+                    Ok(stream) => {
+                        // Register before the shutdown check: any
+                        // interleaving either registers in time for
+                        // teardown's force-close sweep or observes the
+                        // flag here — a blocked handler is always
+                        // joinable.
+                        let id = next_conn_id.fetch_add(1, Ordering::Relaxed);
+                        if let Ok(peer) = stream.try_clone() {
+                            conns.lock().expect("conn registry poisoned").insert(id, peer);
+                        }
+                        if !ctx.shutdown.load(Ordering::SeqCst) {
+                            handle_conn(stream, &ctx);
+                        }
+                        conns.lock().expect("conn registry poisoned").remove(&id);
+                    }
+                    Err(_) => return,
+                }
+            }));
+        }
+
+        let accept = {
+            let shutdown = Arc::clone(&shutdown);
+            std::thread::spawn(move || {
+                for stream in listener.incoming() {
+                    if shutdown.load(Ordering::SeqCst) {
+                        return; // conn_tx drops here; handlers retire
+                    }
+                    match stream {
+                        Ok(s) => {
+                            if conn_tx.send(s).is_err() {
+                                return;
+                            }
+                        }
+                        Err(_) => continue,
+                    }
+                }
+            })
+        };
+
+        log::info!(
+            "serving on {addr} ({} handler threads, max_batch {}, max_wait {}ms, cache {})",
+            cfg.threads,
+            cfg.max_batch,
+            cfg.max_wait_ms,
+            if cfg.cache_budget_mib > 0.0 {
+                format!("{} MiB", cfg.cache_budget_mib)
+            } else {
+                "unlimited".into()
+            }
+        );
+        Ok(Server { addr, shutdown, accept: Some(accept), handlers, conns, harness: Some(harness) })
+    }
+
+    /// The bound address (reads back the OS-assigned port when
+    /// `serve.port = 0`).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Current serving statistics.
+    pub fn stats(&self) -> StatsSnapshot {
+        self.harness.as_ref().expect("harness lives until teardown").stats()
+    }
+
+    /// Block until the server stops (a `shutdown` request arrived or
+    /// [`Server::shutdown`] ran), then tear the stack down in order:
+    /// accept thread → handlers → batcher/executor.
+    pub fn join(mut self) {
+        self.teardown();
+    }
+
+    /// Stop accepting, finish in-flight work, and join every thread.
+    pub fn shutdown(mut self) {
+        self.shutdown.store(true, Ordering::SeqCst);
+        // Unblock the accept loop.
+        let _ = TcpStream::connect(self.addr);
+        self.teardown();
+    }
+
+    fn teardown(&mut self) {
+        if let Some(accept) = self.accept.take() {
+            let _ = accept.join();
+        }
+        // Force-close live connections: a handler blocked reading an idle
+        // client sees EOF and retires instead of pinning join() forever.
+        // (teardown only runs with the shutdown flag set, so handlers
+        // won't pick up *new* connections past this sweep.)
+        for (_, conn) in self.conns.lock().expect("conn registry poisoned").drain() {
+            let _ = conn.shutdown(Shutdown::Both);
+        }
+        for handle in self.handlers.drain(..) {
+            let _ = handle.join();
+        }
+        // Dropping the harness closes the batcher and joins the executor.
+        self.harness.take();
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.shutdown.store(true, Ordering::SeqCst);
+        let _ = TcpStream::connect(self.addr);
+        self.teardown();
+    }
+}
+
+/// A small blocking client for the wire protocol — what the loopback
+/// smoke test and operational scripts use.
+pub struct Client {
+    stream: TcpStream,
+}
+
+impl Client {
+    /// Connect to a running server.
+    pub fn connect(addr: SocketAddr) -> Result<Client> {
+        let stream = TcpStream::connect(addr)
+            .with_context(|| format!("connecting to mplda serve at {addr}"))?;
+        Ok(Client { stream })
+    }
+
+    /// One request/response round trip.
+    pub fn request(&mut self, body: &Json) -> Result<Json> {
+        write_frame(&mut self.stream, body)?;
+        read_frame(&mut self.stream)?.context("server closed the connection mid-request")
+    }
+
+    /// Liveness probe.
+    pub fn ping(&mut self) -> Result<()> {
+        let reply = self.request(&Json::Obj(vec![("type".into(), Json::str("ping"))]))?;
+        match reply.get("type").and_then(Json::as_str) {
+            Some("pong") => Ok(()),
+            _ => bail!("unexpected ping reply: {}", reply.render()),
+        }
+    }
+
+    /// Fold in documents; returns per-document `(topic, count)` pairs.
+    pub fn infer(
+        &mut self,
+        docs: &[Vec<u32>],
+        seed: u64,
+        iterations: usize,
+    ) -> Result<Vec<Vec<(u32, u32)>>> {
+        let docs_json = Json::Arr(
+            docs.iter()
+                .map(|d| Json::Arr(d.iter().map(|&w| Json::num(w as f64)).collect()))
+                .collect(),
+        );
+        let reply = self.request(&Json::Obj(vec![
+            ("type".into(), Json::str("infer")),
+            ("seed".into(), Json::num(seed as f64)),
+            ("iterations".into(), Json::num(iterations as f64)),
+            ("docs".into(), docs_json),
+        ]))?;
+        match reply.get("type").and_then(Json::as_str) {
+            Some("result") => {}
+            Some("error") => bail!(
+                "server error: {}",
+                reply.get("message").and_then(Json::as_str).unwrap_or("?")
+            ),
+            _ => bail!("unexpected infer reply: {}", reply.render()),
+        }
+        let counts = reply.get("counts").and_then(Json::as_arr).context("reply has counts")?;
+        let mut out = Vec::with_capacity(counts.len());
+        for doc in counts {
+            let pairs = doc.as_arr().context("doc counts are an array")?;
+            let mut entries = Vec::with_capacity(pairs.len());
+            for p in pairs {
+                let pair = p.as_arr().context("count entry is a pair")?;
+                if pair.len() != 2 {
+                    bail!("count entry is not a (topic, count) pair");
+                }
+                let t = pair[0].as_u64().context("topic is an integer")?;
+                let c = pair[1].as_u64().context("count is an integer")?;
+                entries.push((t as u32, c as u32));
+            }
+            out.push(entries);
+        }
+        Ok(out)
+    }
+
+    /// Fetch the server's stats object.
+    pub fn stats(&mut self) -> Result<Json> {
+        let reply = self.request(&Json::Obj(vec![("type".into(), Json::str("stats"))]))?;
+        match reply.get("type").and_then(Json::as_str) {
+            Some("stats") => Ok(reply),
+            _ => bail!("unexpected stats reply: {}", reply.render()),
+        }
+    }
+
+    /// Ask the server to stop (it finishes in-flight work first).
+    pub fn shutdown(&mut self) -> Result<()> {
+        let reply = self.request(&Json::Obj(vec![("type".into(), Json::str("shutdown"))]))?;
+        match reply.get("type").and_then(Json::as_str) {
+            Some("bye") => Ok(()),
+            _ => bail!("unexpected shutdown reply: {}", reply.render()),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn frames_round_trip_over_a_buffer() {
+        let msg = Json::Obj(vec![
+            ("type".into(), Json::str("infer")),
+            ("docs".into(), Json::Arr(vec![Json::Arr(vec![Json::num(3.0)])])),
+        ]);
+        let mut buf: Vec<u8> = Vec::new();
+        write_frame(&mut buf, &msg).unwrap();
+        let body_len = (buf.len() - 4) as u32;
+        assert_eq!(buf[..4], body_len.to_be_bytes()[..]);
+        let mut r = &buf[..];
+        assert_eq!(read_frame(&mut r).unwrap(), Some(msg));
+        // Clean EOF after the frame.
+        assert_eq!(read_frame(&mut r).unwrap(), None);
+    }
+
+    #[test]
+    fn read_frame_rejects_garbage() {
+        // EOF before any frame is a clean end-of-stream …
+        let mut r: &[u8] = &[];
+        assert_eq!(read_frame(&mut r).unwrap(), None);
+        // … but EOF inside the length prefix is a framing error.
+        let mut r: &[u8] = &[0, 0];
+        let err = read_frame(&mut r).unwrap_err().to_string();
+        assert!(err.contains("mid-frame"), "{err}");
+        // Absurd length prefix.
+        let mut r: &[u8] = &[0xff, 0xff, 0xff, 0xff, 0, 0];
+        assert!(read_frame(&mut r).is_err());
+        // Truncated body.
+        let mut buf = 10u32.to_be_bytes().to_vec();
+        buf.extend_from_slice(b"abc");
+        let mut r = &buf[..];
+        assert!(read_frame(&mut r).is_err());
+        // Non-JSON body.
+        let mut buf = 3u32.to_be_bytes().to_vec();
+        buf.extend_from_slice(b"zzz");
+        let mut r = &buf[..];
+        assert!(read_frame(&mut r).is_err());
+    }
+
+    #[test]
+    fn parse_infer_defaults_and_validation() {
+        let req = Json::parse(r#"{"type":"infer","docs":[[1,2],[3]]}"#).unwrap();
+        let parsed = parse_infer(&req, 17).unwrap();
+        assert_eq!(parsed.docs.len(), 2);
+        assert_eq!(parsed.docs[0].tokens, vec![1, 2]);
+        assert_eq!(parsed.seed, 0);
+        assert_eq!(parsed.iterations, 17);
+
+        let req =
+            Json::parse(r#"{"type":"infer","docs":[[7]],"seed":9,"iterations":3}"#).unwrap();
+        let parsed = parse_infer(&req, 17).unwrap();
+        assert_eq!((parsed.seed, parsed.iterations), (9, 3));
+
+        for bad in [
+            r#"{"type":"infer"}"#,
+            r#"{"type":"infer","docs":[0]}"#,
+            r#"{"type":"infer","docs":[[1.5]]}"#,
+            r#"{"type":"infer","docs":[[-1]]}"#,
+            r#"{"type":"infer","docs":[[4294967296]]}"#,
+            r#"{"type":"infer","docs":[[1]],"seed":-2}"#,
+            // Over the sweep cap: one request must not wedge the executor.
+            r#"{"type":"infer","docs":[[1]],"iterations":1000000}"#,
+        ] {
+            let req = Json::parse(bad).unwrap();
+            assert!(parse_infer(&req, 17).is_err(), "{bad} should fail");
+        }
+    }
+}

@@ -1,8 +1,11 @@
 //! Scratch lifecycle: buffers are allocated once per worker and reused
 //! across every round and iteration — the sampling path never allocates
-//! *scratch* in steady state (the ISSUE 4 satellite bar). Lease-time
-//! work that allocates by design — mh-alias builds its proposal tables
-//! on every block lease, accounted under `MemCategory::AliasCache` — is
+//! *scratch* in steady state (the ISSUE 4 satellite bar), and since
+//! ISSUE 5 the same holds for the **inference path**: fold-in batch
+//! loops reuse per-thread scratches (`infer_with_scratch`), so a serving
+//! process in steady state allocates no scratch either. Lease-time work
+//! that allocates by design — mh-alias builds its proposal tables on
+//! every block lease, accounted under `MemCategory::AliasCache` — is
 //! outside the counter's scope.
 //!
 //! `Scratch::allocations()` counts every `Scratch` construction and every
@@ -12,7 +15,7 @@
 //! the counter).
 
 use mplda::config::SamplerKind;
-use mplda::engine::{Execution, Session};
+use mplda::engine::{BowDoc, Execution, InferOptions, Session};
 use mplda::sampler::Scratch;
 
 #[test]
@@ -49,4 +52,49 @@ fn threaded_training_never_allocates_scratch_after_warmup() {
         );
         s.check_consistency().unwrap();
     }
+
+    // ---- Inference path (ISSUE 5 satellite) -----------------------------
+    // A frozen model serving repeated batches through caller-held
+    // scratches must stop allocating once the scratches have warmed to
+    // the longest document seen.
+    let mut s = Session::builder()
+        .corpus_preset("tiny")
+        .topics(16)
+        .seed(7)
+        .workers(2)
+        .cluster_preset("custom")
+        .machines(2)
+        .iterations(1)
+        .build()
+        .unwrap();
+    s.train().unwrap();
+    let model = s.freeze().unwrap();
+    let docs: Vec<BowDoc> = (0..8)
+        .map(|i| BowDoc::new((0..20).map(|j| (i * 7 + j) as u32).collect()))
+        .collect();
+    let opts = InferOptions { iterations: 3, seed: 9, ..Default::default() };
+    let mut scratches: Vec<Scratch> =
+        (0..2).map(|_| Scratch::new(model.num_topics())).collect();
+
+    // Warmup batch: grows each scratch's fold-in buffer once.
+    let warm = model.infer_with_scratch(&docs, &opts, &mut scratches).unwrap();
+    let after_warmup = Scratch::allocations();
+
+    // Steady state: repeated batches reuse the scratches — zero
+    // constructions, zero buffer growth — and results stay identical.
+    for _ in 0..3 {
+        let again = model.infer_with_scratch(&docs, &opts, &mut scratches).unwrap();
+        for d in 0..docs.len() {
+            assert_eq!(
+                warm.counts(d).iter().collect::<Vec<_>>(),
+                again.counts(d).iter().collect::<Vec<_>>(),
+                "doc {d}: scratch reuse must not change results"
+            );
+        }
+    }
+    assert_eq!(
+        Scratch::allocations(),
+        after_warmup,
+        "the inference path allocated scratch after warmup"
+    );
 }

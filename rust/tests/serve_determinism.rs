@@ -1,0 +1,217 @@
+//! Serving-tier determinism (ISSUE 5 acceptance bar): `DocTopics` served
+//! through the full stack — sharded model, LRU block paging, micro-batch
+//! grouping — must be **bitwise identical** to offline
+//! `TopicModel::infer` for the same seed, at every cache budget and
+//! batch size; and the `ServeCache` accountant peak must never exceed
+//! `serve.cache_budget_mib`.
+//!
+//! The argument being verified: paging changes only *when* a row is
+//! fetched, never its contents, and per-request RNG streams are keyed by
+//! position within the request, never by batch or thread.
+
+use std::time::Duration;
+
+use mplda::engine::{BowDoc, InferOptions, Session, TopicModel};
+use mplda::serve::{BatchOpts, Harness, InferRequest, ShardedTopicModel};
+use mplda::util::rng::Pcg64;
+
+const ITERATIONS: usize = 5;
+
+/// Train a small model once through the facade and freeze it densely —
+/// the offline oracle the serving tier is compared against.
+fn offline_model() -> TopicModel {
+    let mut s = Session::builder()
+        .corpus_preset("tiny")
+        .topics(12)
+        .iterations(3)
+        .seed(19)
+        .workers(3)
+        .cluster_preset("custom")
+        .machines(3)
+        .build()
+        .unwrap();
+    s.train().unwrap();
+    s.freeze().unwrap()
+}
+
+/// Deterministic query requests: `n` requests of a few documents each,
+/// every request with its own seed.
+fn requests(v: usize, n: usize) -> Vec<(Vec<BowDoc>, u64)> {
+    let mut rng = Pcg64::new(0xbeef);
+    (0..n)
+        .map(|r| {
+            let docs = (0..2 + r % 3)
+                .map(|_| {
+                    let len = 8 + rng.next_below(20) as usize;
+                    BowDoc::new(
+                        (0..len).map(|_| rng.next_below(v as u64) as u32).collect(),
+                    )
+                })
+                .collect();
+            (docs, 1000 + r as u64)
+        })
+        .collect()
+}
+
+/// Canonical per-doc counts of a fold-in result.
+fn snap(folded: &mplda::engine::DocTopics) -> Vec<Vec<(u32, u32)>> {
+    (0..folded.len()).map(|d| folded.counts(d).iter().collect()).collect()
+}
+
+#[test]
+fn served_results_are_bitwise_offline_at_every_budget_and_batch_size() {
+    let offline = offline_model();
+    let v = offline.num_words();
+    let reqs = requests(v, 7);
+
+    // Offline oracle, one infer per request with the request's seed.
+    let oracle: Vec<Vec<Vec<(u32, u32)>>> = reqs
+        .iter()
+        .map(|(docs, seed)| {
+            let opts =
+                InferOptions { iterations: ITERATIONS, seed: *seed, threads: 1 };
+            snap(&offline.infer_with(docs, &opts).unwrap())
+        })
+        .collect();
+
+    // Budgets: unlimited, about half the model, and starved (about one
+    // and a half blocks). Derived from real block sizes so they stay
+    // meaningful if tiny-corpus dimensions drift.
+    let probe = ShardedTopicModel::from_table(
+        offline.word_topic(),
+        offline.totals().clone(),
+        *offline.params(),
+        8,
+        0.0,
+    )
+    .unwrap();
+    let mib = |bytes: u64| bytes as f64 / (1u64 << 20) as f64;
+    let budgets = [
+        0.0,
+        mib(probe.total_block_bytes() / 2),
+        mib(probe.max_block_bytes() + probe.max_block_bytes() / 2),
+    ];
+
+    for &budget_mib in &budgets {
+        for max_batch in [1usize, 4, 64] {
+            let model = ShardedTopicModel::from_table(
+                offline.word_topic(),
+                offline.totals().clone(),
+                *offline.params(),
+                8,
+                budget_mib,
+            )
+            .unwrap();
+            let harness = Harness::new(
+                model,
+                BatchOpts { max_batch, max_wait: Duration::from_millis(1) },
+            );
+            // Submit everything before reading any reply, so the batcher
+            // actually groups requests (max_batch > 1 cells).
+            let rxs: Vec<_> = reqs
+                .iter()
+                .map(|(docs, seed)| {
+                    harness.submit(InferRequest {
+                        docs: docs.clone(),
+                        seed: *seed,
+                        iterations: ITERATIONS,
+                    })
+                })
+                .collect();
+            for (r, rx) in rxs.into_iter().enumerate() {
+                let served = rx.recv().expect("executor alive").expect("infer ok");
+                assert_eq!(
+                    oracle[r],
+                    snap(&served),
+                    "request {r}: budget {budget_mib} MiB, max_batch {max_batch}"
+                );
+            }
+            let stats = harness.stats();
+            assert_eq!(stats.requests, reqs.len() as u64);
+            if budget_mib > 0.0 {
+                assert!(
+                    stats.cache.peak_bytes <= stats.cache.budget_bytes,
+                    "ServeCache peak {} exceeded budget {} (budget {budget_mib} MiB)",
+                    stats.cache.peak_bytes,
+                    stats.cache.budget_bytes
+                );
+            }
+            harness.shutdown();
+        }
+    }
+}
+
+#[test]
+fn concurrent_submitters_get_the_same_answers() {
+    // Many client threads racing into one harness: batching interleaves
+    // arbitrarily, yet every request's reply equals its offline oracle.
+    let offline = offline_model();
+    let v = offline.num_words();
+    let reqs = requests(v, 6);
+    let oracle: Vec<Vec<Vec<(u32, u32)>>> = reqs
+        .iter()
+        .map(|(docs, seed)| {
+            let opts =
+                InferOptions { iterations: ITERATIONS, seed: *seed, threads: 1 };
+            snap(&offline.infer_with(docs, &opts).unwrap())
+        })
+        .collect();
+    let model = ShardedTopicModel::from_table(
+        offline.word_topic(),
+        offline.totals().clone(),
+        *offline.params(),
+        6,
+        0.01, // small enough to force paging churn under concurrency
+    )
+    .unwrap();
+    let harness = Harness::new(
+        model,
+        BatchOpts { max_batch: 4, max_wait: Duration::from_millis(1) },
+    );
+    std::thread::scope(|scope| {
+        for (r, (docs, seed)) in reqs.iter().enumerate() {
+            let harness = &harness;
+            let oracle = &oracle;
+            scope.spawn(move || {
+                let served = harness
+                    .infer(docs.clone(), *seed, ITERATIONS)
+                    .expect("infer ok");
+                assert_eq!(oracle[r], snap(&served), "request {r}");
+            });
+        }
+    });
+    let stats = harness.stats();
+    assert_eq!(stats.requests, reqs.len() as u64);
+    assert!(stats.cache.peak_bytes <= stats.cache.budget_bytes);
+}
+
+#[test]
+fn sharded_infer_api_is_thread_count_invariant() {
+    // The direct batch API mirrors the offline model's contract: thread
+    // count and scratch count are invisible in results.
+    let offline = offline_model();
+    let v = offline.num_words();
+    let mut rng = Pcg64::new(77);
+    let docs: Vec<BowDoc> = (0..9)
+        .map(|_| {
+            BowDoc::new((0..12).map(|_| rng.next_below(v as u64) as u32).collect())
+        })
+        .collect();
+    let model = ShardedTopicModel::from_table(
+        offline.word_topic(),
+        offline.totals().clone(),
+        *offline.params(),
+        5,
+        0.002,
+    )
+    .unwrap();
+    let base = snap(
+        &offline
+            .infer_with(&docs, &InferOptions { iterations: 4, seed: 5, threads: 1 })
+            .unwrap(),
+    );
+    for threads in [1usize, 2, 4] {
+        let opts = InferOptions { iterations: 4, seed: 5, threads };
+        assert_eq!(base, snap(&model.infer_with(&docs, &opts).unwrap()), "threads={threads}");
+    }
+}
