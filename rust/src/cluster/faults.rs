@@ -1,0 +1,259 @@
+//! Scripted fault injection for the simulated cluster.
+//!
+//! The paper targets "a low-end cluster with very limited computational
+//! resources" — exactly the environment where machines die mid-rotation.
+//! This module is the *injection plane*: a [`FaultScript`] names, ahead of
+//! time, which worker dies or stalls (or which machine loses its
+//! shard-home) at which `(iteration, round)`. The driver consults the
+//! script at each round boundary and perturbs the run; the *recovery*
+//! machinery (lease timeouts, block reassignment, degraded rounds) lives
+//! in `kvstore` and `coordinator` and is exercised by
+//! `tests/fault_injection.rs`.
+//!
+//! Scripts have a compact text form so they can travel through
+//! `coord.fault_script` in a config file:
+//!
+//! ```text
+//! kill@1.2:w0; stall@0.1:w2*0.5; drophome@2.0:m1
+//! ```
+//!
+//! reads "kill worker 0 at iteration 1 round 2; stall worker 2 for 0.5
+//! simulated seconds at iteration 0 round 1; drop machine 1's shard-home
+//! at iteration 2 round 0". Events are `;`-separated; whitespace around
+//! separators is ignored.
+
+use anyhow::{bail, Context, Result};
+
+/// What happens to whom.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum FaultKind {
+    /// The worker vanishes mid-round: it never commits the block it holds
+    /// this round and does no further work. Detection is by lease
+    /// timeout; its block and documents are adopted by a survivor.
+    KillWorker {
+        /// Worker position (current numbering at injection time).
+        worker: usize,
+    },
+    /// The worker survives but its round takes `secs` extra simulated
+    /// seconds (a slow disk, a GC pause). Purely a timing perturbation —
+    /// the sampled trajectory is unchanged.
+    StallWorker {
+        /// Worker position to slow down.
+        worker: usize,
+        /// Extra simulated seconds added to the worker's round.
+        secs: f64,
+    },
+    /// The machine's KV shard-home fails; its resident blocks are
+    /// promoted on a backup machine. Block *contents* survive (replica
+    /// promotion), so the trajectory is unchanged; only placement and
+    /// traffic endpoints move.
+    DropShardHome {
+        /// Machine index losing its shard-home.
+        machine: usize,
+    },
+}
+
+/// One scripted fault at a `(iteration, round)` coordinate.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultEvent {
+    /// Iteration at which the fault fires (0-based).
+    pub iteration: usize,
+    /// Round within that iteration (0-based).
+    pub round: usize,
+    /// The fault itself.
+    pub kind: FaultKind,
+}
+
+/// An ordered list of scripted faults, checked by the driver at every
+/// round boundary.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct FaultScript {
+    events: Vec<FaultEvent>,
+}
+
+impl FaultScript {
+    /// The empty script (injects nothing).
+    pub fn new() -> FaultScript {
+        FaultScript::default()
+    }
+
+    /// True when the script injects nothing.
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// Add a kill event (builder style).
+    pub fn kill_worker(mut self, iteration: usize, round: usize, worker: usize) -> Self {
+        self.events.push(FaultEvent {
+            iteration,
+            round,
+            kind: FaultKind::KillWorker { worker },
+        });
+        self
+    }
+
+    /// Add a stall event (builder style).
+    pub fn stall_worker(
+        mut self,
+        iteration: usize,
+        round: usize,
+        worker: usize,
+        secs: f64,
+    ) -> Self {
+        self.events.push(FaultEvent {
+            iteration,
+            round,
+            kind: FaultKind::StallWorker { worker, secs },
+        });
+        self
+    }
+
+    /// Add a shard-home drop event (builder style).
+    pub fn drop_shard_home(mut self, iteration: usize, round: usize, machine: usize) -> Self {
+        self.events.push(FaultEvent {
+            iteration,
+            round,
+            kind: FaultKind::DropShardHome { machine },
+        });
+        self
+    }
+
+    /// Every event scheduled for `(iteration, round)`, in script order.
+    pub fn events_at(&self, iteration: usize, round: usize) -> Vec<FaultEvent> {
+        self.events
+            .iter()
+            .filter(|e| e.iteration == iteration && e.round == round)
+            .copied()
+            .collect()
+    }
+
+    /// Parse the compact text form (see module docs). The empty string
+    /// parses to the empty script.
+    pub fn parse(text: &str) -> Result<FaultScript> {
+        let mut script = FaultScript::new();
+        for raw in text.split(';') {
+            let item = raw.trim();
+            if item.is_empty() {
+                continue;
+            }
+            let (head, target) = item
+                .split_once(':')
+                .with_context(|| format!("fault event `{item}`: expected `<kind>@<i>.<r>:<target>`"))?;
+            let (kind, at) = head
+                .split_once('@')
+                .with_context(|| format!("fault event `{item}`: missing `@<iteration>.<round>`"))?;
+            let (it, rd) = at
+                .split_once('.')
+                .with_context(|| format!("fault event `{item}`: expected `<iteration>.<round>`"))?;
+            let iteration: usize = it
+                .trim()
+                .parse()
+                .with_context(|| format!("fault event `{item}`: bad iteration `{it}`"))?;
+            let round: usize = rd
+                .trim()
+                .parse()
+                .with_context(|| format!("fault event `{item}`: bad round `{rd}`"))?;
+            let target = target.trim();
+            script.events.push(FaultEvent {
+                iteration,
+                round,
+                kind: parse_kind(kind.trim(), target)
+                    .with_context(|| format!("fault event `{item}`"))?,
+            });
+        }
+        Ok(script)
+    }
+}
+
+fn parse_kind(kind: &str, target: &str) -> Result<FaultKind> {
+    match kind {
+        "kill" => Ok(FaultKind::KillWorker { worker: parse_target(target, 'w')? }),
+        "stall" => {
+            let (who, secs) = target
+                .split_once('*')
+                .context("stall target must be `w<id>*<secs>`")?;
+            let secs: f64 = secs
+                .trim()
+                .parse()
+                .with_context(|| format!("bad stall seconds `{secs}`"))?;
+            if !secs.is_finite() || secs < 0.0 {
+                bail!("stall seconds must be finite and non-negative, got {secs}");
+            }
+            Ok(FaultKind::StallWorker { worker: parse_target(who.trim(), 'w')?, secs })
+        }
+        "drophome" => Ok(FaultKind::DropShardHome { machine: parse_target(target, 'm')? }),
+        other => bail!("unknown fault kind `{other}` (expected kill, stall, or drophome)"),
+    }
+}
+
+fn parse_target(target: &str, prefix: char) -> Result<usize> {
+    let rest = target
+        .strip_prefix(prefix)
+        .with_context(|| format!("target `{target}` must start with `{prefix}`"))?;
+    rest.parse()
+        .with_context(|| format!("bad target index `{rest}` in `{target}`"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_every_kind() {
+        let s = FaultScript::parse("kill@1.2:w0; stall@0.1:w2*0.5; drophome@2.0:m1").unwrap();
+        assert_eq!(
+            s.events_at(1, 2),
+            vec![FaultEvent { iteration: 1, round: 2, kind: FaultKind::KillWorker { worker: 0 } }]
+        );
+        assert_eq!(
+            s.events_at(0, 1),
+            vec![FaultEvent {
+                iteration: 0,
+                round: 1,
+                kind: FaultKind::StallWorker { worker: 2, secs: 0.5 },
+            }]
+        );
+        assert_eq!(
+            s.events_at(2, 0),
+            vec![FaultEvent {
+                iteration: 2,
+                round: 0,
+                kind: FaultKind::DropShardHome { machine: 1 },
+            }]
+        );
+        assert!(s.events_at(3, 0).is_empty());
+    }
+
+    #[test]
+    fn empty_and_whitespace_scripts_are_empty() {
+        assert!(FaultScript::parse("").unwrap().is_empty());
+        assert!(FaultScript::parse("  ;  ; ").unwrap().is_empty());
+        assert!(FaultScript::new().is_empty());
+    }
+
+    #[test]
+    fn builder_matches_parser() {
+        let built = FaultScript::new()
+            .kill_worker(1, 2, 0)
+            .stall_worker(0, 1, 2, 0.5)
+            .drop_shard_home(2, 0, 1);
+        let parsed =
+            FaultScript::parse("kill@1.2:w0; stall@0.1:w2*0.5; drophome@2.0:m1").unwrap();
+        assert_eq!(built, parsed);
+    }
+
+    #[test]
+    fn rejects_malformed_events() {
+        for bad in [
+            "kill@1:w0",           // no round
+            "kill@1.2",            // no target
+            "kill@1.2:m0",         // wrong prefix
+            "stall@1.2:w0",        // no seconds
+            "stall@1.2:w0*-1",     // negative stall
+            "reboot@1.2:w0",       // unknown kind
+            "kill@x.2:w0",         // bad iteration
+        ] {
+            assert!(FaultScript::parse(bad).is_err(), "`{bad}` should not parse");
+        }
+    }
+}

@@ -6,14 +6,18 @@
 //! RAM, NIC), [`network`] turns measured byte flows into transfer times
 //! under a bottleneck (NIC-share) model, [`simclock`] merges measured
 //! compute time with modeled communication time into per-worker simulated
-//! clocks with round barriers, and [`memory`] accounts peak bytes per node
-//! (Fig 4a) and enforces RAM capacity (the Table 1 OOM row).
+//! clocks with round barriers, [`memory`] accounts peak bytes per node
+//! (Fig 4a) and enforces RAM capacity (the Table 1 OOM row), and
+//! [`faults`] scripts worker deaths, stalls, and shard-home failures at
+//! chosen `(iteration, round)` coordinates for the fault-tolerance suite.
 
 pub mod node;
 pub mod network;
 pub mod simclock;
 pub mod memory;
+pub mod faults;
 
+pub use faults::{FaultEvent, FaultKind, FaultScript};
 pub use memory::{MemCategory, MemoryAccountant};
 pub use network::{Flow, NetworkModel};
 pub use node::ClusterSpec;

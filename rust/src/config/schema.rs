@@ -297,6 +297,24 @@ pub struct CoordConfig {
     /// bytes are charged to the memory accountant either way, so the
     /// cluster RAM bound still applies when `cluster.enforce_ram` is on.
     pub staging_budget_mib: f64,
+    /// Lease-timeout fault tolerance: a block lease not committed within
+    /// this many round boundaries marks its holder dead — the lease is
+    /// revoked from a recovery copy and the rotation reassigned to the
+    /// survivors. `0` (default) disables tolerance: an uncommitted lease
+    /// surfaces a typed `LeaseTimeout` error instead of hanging the round.
+    pub lease_timeout_rounds: usize,
+    /// Write an async `ResumeState` snapshot every N iterations (`0` =
+    /// off). Serialization runs on a background thread off the sampling
+    /// path; files land in `checkpoint_dir` as `ckpt-<iter>.mplda` via
+    /// write-to-temp + atomic rename.
+    pub checkpoint_every_iters: usize,
+    /// Directory for periodic async snapshots; required when
+    /// `checkpoint_every_iters > 0`.
+    pub checkpoint_dir: String,
+    /// Scripted fault injection, e.g. `"kill@1.2:w0; drophome@2.0:m1"`
+    /// (see `cluster::faults::FaultScript::parse`). Empty = no faults.
+    /// Parsed at driver build time so a typo fails fast.
+    pub fault_script: String,
 }
 
 impl Default for CoordConfig {
@@ -311,6 +329,10 @@ impl Default for CoordConfig {
             parallelism: 0,
             pipeline: PipelineMode::Off,
             staging_budget_mib: 0.0,
+            lease_timeout_rounds: 0,
+            checkpoint_every_iters: 0,
+            checkpoint_dir: String::new(),
+            fault_script: String::new(),
         }
     }
 }
@@ -569,6 +591,10 @@ impl Config {
             "coord.parallelism" => self.coord.parallelism = u(value)?,
             "coord.pipeline" => self.coord.pipeline = PipelineMode::parse(&s(value)?)?,
             "coord.staging_budget_mib" => self.coord.staging_budget_mib = f(value)?,
+            "coord.lease_timeout_rounds" => self.coord.lease_timeout_rounds = u(value)?,
+            "coord.checkpoint_every_iters" => self.coord.checkpoint_every_iters = u(value)?,
+            "coord.checkpoint_dir" => self.coord.checkpoint_dir = s(value)?,
+            "coord.fault_script" => self.coord.fault_script = s(value)?,
             "cluster.preset" => self.cluster.preset = s(value)?,
             "cluster.machines" => self.cluster.machines = u(value)?,
             "cluster.cores_per_machine" => self.cluster.cores_per_machine = u(value)?,
@@ -648,6 +674,9 @@ impl Config {
         }
         if self.train.alias_budget_mib < 0.0 {
             bail!("train.alias_budget_mib must be >= 0 (0 = unlimited)");
+        }
+        if self.coord.checkpoint_every_iters > 0 && self.coord.checkpoint_dir.is_empty() {
+            bail!("coord.checkpoint_every_iters > 0 requires coord.checkpoint_dir");
         }
         if self.corpus.preset == "uci" && self.corpus.path.is_empty() {
             bail!("corpus.preset = uci requires corpus.path");
@@ -819,6 +848,26 @@ machines = 10
         let d = ServeConfig::default();
         assert_eq!(d.cache_budget_mib, 0.0);
         assert!(d.max_batch >= 1 && d.threads >= 1 && d.iterations >= 1);
+    }
+
+    #[test]
+    fn fault_tolerance_keys_parse_and_validate() {
+        let cfg = Config::from_str(
+            "[coord]\nlease_timeout_rounds = 2\ncheckpoint_every_iters = 5\n\
+             checkpoint_dir = \"/tmp/ckpts\"\nfault_script = \"kill@1.2:w0\"",
+        )
+        .unwrap();
+        assert_eq!(cfg.coord.lease_timeout_rounds, 2);
+        assert_eq!(cfg.coord.checkpoint_every_iters, 5);
+        assert_eq!(cfg.coord.checkpoint_dir, "/tmp/ckpts");
+        assert_eq!(cfg.coord.fault_script, "kill@1.2:w0");
+        // Periodic snapshots need somewhere to go.
+        assert!(Config::from_str("[coord]\ncheckpoint_every_iters = 5").is_err());
+        // Defaults: everything off.
+        let d = CoordConfig::default();
+        assert_eq!(d.lease_timeout_rounds, 0);
+        assert_eq!(d.checkpoint_every_iters, 0);
+        assert!(d.checkpoint_dir.is_empty() && d.fault_script.is_empty());
     }
 
     #[test]

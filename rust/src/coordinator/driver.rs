@@ -33,10 +33,14 @@ use std::path::Path;
 use anyhow::{bail, Context, Result};
 
 use crate::cluster::simclock::barrier;
-use crate::cluster::{ClusterSpec, MemCategory, MemoryAccountant, NetworkModel, SimClock};
+use crate::cluster::{
+    ClusterSpec, FaultEvent, FaultKind, FaultScript, MemCategory, MemoryAccountant,
+    NetworkModel, SimClock,
+};
 use crate::config::{CkSyncPolicy, Config};
-use crate::corpus::{self, Corpus, DataPartition};
-use crate::engine::backend::{backend_for, Backend, RoundCtx};
+use crate::corpus::{self, Corpus, DataPartition, InvertedIndex};
+use crate::engine::backend::{backend_for, run_round_degraded, Backend, RoundCtx};
+use crate::error::MpldaError;
 use crate::kvstore::{KvStore, ShardMap};
 use crate::metrics::{joint_log_likelihood_blocks, DeltaTracker, PipelineStats};
 use crate::model::checkpoint::{self, ResumeState};
@@ -128,6 +132,30 @@ pub struct Driver {
     pstats: PipelineStats,
     iteration: usize,
     exec: Option<Box<dyn MicrobatchExecutor>>,
+    /// Scripted fault injections (kill / stall / shard-home drop), applied
+    /// at their `(iteration, round)` marks.
+    faults: FaultScript,
+    /// Workers that died holding a lease and have not been reaped yet:
+    /// the coordinator only learns of the death when the lease times out.
+    dead: Vec<DeadWorker>,
+    /// Corpus fingerprint, captured once so snapshot jobs never need the
+    /// corpus on the writer thread.
+    corpus_fp: u64,
+    /// Background snapshot writer (`coord.checkpoint_every_iters > 0`).
+    ckpt: Option<checkpoint::AsyncCheckpointer>,
+}
+
+/// A worker that crashed while holding a block lease. Until the lease
+/// expires the coordinator treats it as merely slow; after
+/// `coord.lease_timeout_rounds` grace rounds the lease is revoked, the
+/// block restored from its recovery copy, and the position removed from
+/// the rotation.
+#[derive(Debug, Clone, Copy)]
+struct DeadWorker {
+    /// Position in the (current) rotation.
+    position: usize,
+    /// The block that died with it — leased, never committed.
+    block: u32,
 }
 
 impl Driver {
@@ -227,7 +255,21 @@ impl Driver {
 
         let spec = ClusterSpec::from_config(&cfg.cluster);
         let shards = ShardMap::round_robin(cfg.coord.blocks, &spec);
-        let kv = KvStore::new(blocks, ck.clone(), shards);
+        let mut kv = KvStore::new(blocks, ck.clone(), shards);
+        if cfg.coord.lease_timeout_rounds > 0 {
+            // Reassignment needs a pre-lease copy of every checked-out
+            // block; the clone-per-lease cost is paid only when the lease
+            // protocol is armed.
+            kv.enable_recovery();
+        }
+        let faults = FaultScript::parse(&cfg.coord.fault_script)
+            .context("parsing coord.fault_script")?;
+        let ckpt = if cfg.coord.checkpoint_every_iters > 0 {
+            Some(checkpoint::AsyncCheckpointer::new(&cfg.coord.checkpoint_dir)?)
+        } else {
+            None
+        };
+        let corpus_fp = checkpoint::corpus_fingerprint(&corpus);
 
         // Workers: disjoint doc shards, private RNG streams.
         let part = DataPartition::balanced(&corpus, cfg.coord.workers);
@@ -304,6 +346,10 @@ impl Driver {
             pstats: PipelineStats::default(),
             iteration,
             exec: None,
+            faults,
+            dead: Vec::new(),
+            corpus_fp,
+            ckpt,
         })
     }
 
@@ -380,6 +426,11 @@ impl Driver {
             }
         }
         self.kv.with_resident_blocks(|blocks| {
+            // Canonical id order: placement must be invisible (a shard-home
+            // failover moves blocks between machines without touching their
+            // contents, and machine order is how the store iterates).
+            let mut blocks: Vec<_> = blocks.collect();
+            blocks.sort_unstable_by_key(|b| b.id);
             for b in blocks {
                 mix(&mut h, b.id as u64);
                 for row in &b.rows {
@@ -414,6 +465,28 @@ impl Driver {
         let mut delta_sum = 0.0;
 
         for round in 0..rounds {
+            // ---- Phase 0: fault plane ------------------------------------
+            // Reap leases that outlived their grace rounds (revoke + block
+            // reassignment), then apply any scripted faults at this
+            // `(iteration, round)` mark. Both are no-ops on a healthy run.
+            if self.cfg.coord.lease_timeout_rounds > 0 {
+                self.reap_expired_leases(round)?;
+            }
+            let machines: Vec<usize> = self.workers.iter().map(|w| w.machine).collect();
+            let events = self.faults.events_at(self.iteration, round);
+            let kills_now = events
+                .iter()
+                .any(|e| matches!(e.kind, FaultKind::KillWorker { .. }));
+            if kills_now || !self.dead.is_empty() {
+                // A kill leases the victim's block; a degraded round leases
+                // the survivors'. Either needs every staged prefetch back
+                // in the store first (the handoff chain it was staged for
+                // no longer runs).
+                self.backend.drain_staging(&self.kv, &mut self.mem, &machines)?;
+            }
+            let stalls = self.apply_fault_events(&events, round)?;
+            let degraded = !self.dead.is_empty();
+
             let sync_totals = match self.cfg.coord.ck_sync {
                 CkSyncPolicy::PerRound | CkSyncPolicy::PerMicrobatch => true,
                 CkSyncPolicy::PerIteration => round == 0,
@@ -422,10 +495,16 @@ impl Driver {
             // ---- Phase 1: totals snapshot --------------------------------
             // Distribution is tree-structured (broadcast half of an
             // allreduce): the timing uses `reduce_time`, not the star
-            // topology the per-flow records would imply.
+            // topology the per-flow records would imply. Dead workers do
+            // not read (they are dead); the flow drain below also discards
+            // any fault-plane traffic so round timing stays clean.
             let mut totals_bytes_per_worker = 0u64;
             if sync_totals {
-                for w in &mut self.workers {
+                let dead: Vec<usize> = self.dead.iter().map(|d| d.position).collect();
+                for (i, w) in self.workers.iter_mut().enumerate() {
+                    if dead.contains(&i) {
+                        continue;
+                    }
                     let before = self.kv.total_bytes();
                     let t = self.kv.read_totals(w.machine);
                     totals_bytes_per_worker = self.kv.total_bytes() - before;
@@ -437,8 +516,16 @@ impl Driver {
 
             // ---- Phases 2–4: leases, compute, commits --------------------
             // Executed by the backend selected at build time; the driver
-            // only sees the outcome the clock accounting needs.
-            let machines: Vec<usize> = self.workers.iter().map(|w| w.machine).collect();
+            // only sees the outcome the clock accounting needs. While any
+            // lease is stuck on a corpse the round runs degraded: dead
+            // positions and the consumers of stuck blocks sit out.
+            let skip: Vec<bool> = (0..self.workers.len())
+                .map(|i| {
+                    self.dead.iter().any(|d| {
+                        d.position == i || d.block == self.schedule.block_for(i, round)
+                    })
+                })
+                .collect();
             let out = {
                 let Driver {
                     cfg,
@@ -479,7 +566,11 @@ impl Driver {
                     parallelism: cfg.coord.parallelism,
                     exec: exec.as_deref_mut(),
                 };
-                backend.run_round(&mut ctx)?
+                if degraded {
+                    run_round_degraded(&mut ctx, &skip)?
+                } else {
+                    backend.run_round(&mut ctx)?
+                }
             };
             debug_assert_eq!(out.host_secs.len(), self.workers.len());
             debug_assert_eq!(out.fetch_times.len(), self.workers.len());
@@ -558,6 +649,14 @@ impl Driver {
                         });
                     }
                 }
+                // Scripted stalls: the worker is unresponsive for extra
+                // simulated seconds; the barrier spreads the delay to the
+                // whole round. Model state is untouched.
+                for &(p, secs) in &stalls {
+                    if p == w.id {
+                        c.charge_comm(secs);
+                    }
+                }
             }
             let pre_barrier: Vec<f64> = self.clocks.iter().map(|c| c.now()).collect();
             let bar = barrier(&mut self.clocks);
@@ -576,6 +675,28 @@ impl Driver {
             for (node, bytes) in self.kv.shard_bytes(self.spec.machines).into_iter().enumerate() {
                 self.mem.set(node, MemCategory::KvShard, bytes)?;
             }
+
+            // The lease clock ticks at round boundaries; `leased_at` ages
+            // against it.
+            self.kv.advance_round();
+        }
+
+        // Leases cannot outlive an iteration: the boundary is a commit
+        // deadline. Any lease still stuck on a corpse (its timeout spans
+        // the remaining rounds) is force-revoked here so the store is
+        // quiescent for `loglik`/`check_consistency` and the next
+        // iteration starts from a complete rotation.
+        if !self.dead.is_empty() {
+            let dead = std::mem::take(&mut self.dead);
+            let mut positions = Vec::new();
+            for d in dead {
+                self.kv
+                    .revoke_lease(d.block)
+                    .with_context(|| format!("force-revoking block {} at iteration end", d.block))?;
+                positions.push(d.position);
+            }
+            positions.sort_unstable();
+            self.remove_workers(positions, rounds)?;
         }
 
         // Backend invariant check (e.g. pipelined staging drained, so the
@@ -583,6 +704,19 @@ impl Driver {
         self.backend.end_iteration()?;
 
         self.iteration += 1;
+        // Periodic async snapshot: the sampling path pays only the clone;
+        // serialization and I/O run on the writer thread.
+        if let Some(ckpt) = &self.ckpt {
+            let every = self.cfg.coord.checkpoint_every_iters;
+            if every > 0 && self.iteration % every == 0 {
+                ckpt.submit(
+                    self.iteration,
+                    self.corpus_fp,
+                    self.assign.clone(),
+                    self.resume_state(),
+                )?;
+            }
+        }
         Ok(IterStats {
             iteration: self.iteration,
             sim_time: self.sim_time(),
@@ -592,6 +726,181 @@ impl Driver {
             host_compute_secs: host_secs_total,
             fetch_stall_secs: self.pstats.fetch_stall_secs - fetch_stall_before,
         })
+    }
+
+    /// Install a fault script programmatically (tests; the config key
+    /// `coord.fault_script` covers the CLI path). Events already in the
+    /// past are never applied — the script is consulted per
+    /// `(iteration, round)` as the run reaches it.
+    pub fn set_fault_script(&mut self, script: FaultScript) {
+        self.faults = script;
+    }
+
+    /// Apply this round's scripted faults. Kills lease the victim's block
+    /// (it dies uncommitted, exactly what a crash mid-round leaves behind)
+    /// and mark the position dead; stalls are returned for the clock loop;
+    /// shard-home drops promote the failed machine's blocks onto their
+    /// backup immediately.
+    fn apply_fault_events(
+        &mut self,
+        events: &[FaultEvent],
+        round: usize,
+    ) -> Result<Vec<(usize, f64)>> {
+        let mut stalls = Vec::new();
+        for ev in events {
+            match ev.kind {
+                FaultKind::KillWorker { worker } => {
+                    if worker >= self.workers.len() {
+                        bail!(
+                            "fault script kills worker {worker} at iteration {} round {round}, \
+                             but only {} workers remain",
+                            self.iteration,
+                            self.workers.len()
+                        );
+                    }
+                    if self.dead.iter().any(|d| d.position == worker) {
+                        bail!("fault script kills worker {worker} twice");
+                    }
+                    let block = self.schedule.block_for(worker, round);
+                    if self.cfg.coord.lease_timeout_rounds == 0 {
+                        // No lease protocol armed: the cluster would wait on
+                        // this commit forever. Fail fast with the diagnosis
+                        // instead of hanging.
+                        return Err(MpldaError::LeaseTimeout { worker, block, round }.into());
+                    }
+                    let machine = self.workers[worker].machine;
+                    let (blk, _receipt) = self.kv.lease_block_with_receipt(block, machine)?;
+                    drop(blk); // the crash: the leased block dies with the worker
+                    self.dead.push(DeadWorker { position: worker, block });
+                }
+                FaultKind::StallWorker { worker, secs } => {
+                    if worker >= self.workers.len() {
+                        bail!(
+                            "fault script stalls worker {worker}, but only {} workers remain",
+                            self.workers.len()
+                        );
+                    }
+                    stalls.push((worker, secs));
+                }
+                FaultKind::DropShardHome { machine } => {
+                    self.kv
+                        .fail_home(machine)
+                        .with_context(|| format!("dropping shard-home {machine}"))?;
+                }
+            }
+        }
+        Ok(stalls)
+    }
+
+    /// Revoke every lease that outlived `coord.lease_timeout_rounds` and
+    /// remove the dead holders from the rotation. Blocks come back from
+    /// their recovery copies — only the corpse's uncommitted round is
+    /// lost — and the schedule shrinks via
+    /// [`RotationSchedule::reassign`].
+    fn reap_expired_leases(&mut self, round: usize) -> Result<()> {
+        let expired = self
+            .kv
+            .expired_leases(self.cfg.coord.lease_timeout_rounds as u64);
+        if expired.is_empty() {
+            return Ok(());
+        }
+        let mut positions = Vec::new();
+        for b in expired {
+            let Some(ix) = self.dead.iter().position(|d| d.block == b) else {
+                bail!("lease on block {b} expired with no dead holder on record — protocol bug");
+            };
+            let d = self.dead.remove(ix);
+            self.kv
+                .revoke_lease(b)
+                .with_context(|| format!("revoking expired lease on block {b}"))?;
+            positions.push(d.position);
+        }
+        positions.sort_unstable();
+        self.remove_workers(positions, round)
+    }
+
+    /// Remove dead `positions` (sorted ascending) from the rotation:
+    /// orphaned document shards are adopted by the next surviving position
+    /// (cyclically), survivors are renumbered densely, and the schedule,
+    /// clocks, ownership map, memory ledger and execution backend all
+    /// follow. The adopters' RNG streams are their own, so the continued
+    /// run stays deterministic (though it diverges from the no-fault
+    /// trajectory — the dead worker's uncommitted round is gone).
+    fn remove_workers(&mut self, positions: Vec<usize>, round: usize) -> Result<()> {
+        if positions.is_empty() {
+            return Ok(());
+        }
+        if positions.len() >= self.workers.len() {
+            return Err(MpldaError::NoSurvivors { round }.into());
+        }
+        self.schedule = self.schedule.reassign(&positions)?;
+
+        // Orphaned docs go to the next surviving position, cyclically in
+        // the pre-removal numbering.
+        let p_old = self.workers.len();
+        let mut is_dead = vec![false; p_old];
+        for &p in &positions {
+            is_dead[p] = true;
+        }
+        let mut orphans: Vec<(usize, Vec<u32>)> = Vec::new();
+        for &p in &positions {
+            let mut q = (p + 1) % p_old;
+            while is_dead[q] {
+                q = (q + 1) % p_old;
+            }
+            orphans.push((q, self.workers[p].docs.clone()));
+        }
+        for &p in positions.iter().rev() {
+            self.workers.remove(p);
+            self.clocks.remove(p);
+        }
+        for (q_old, docs) in orphans {
+            let q = q_old - positions.iter().filter(|&&p| p < q_old).count();
+            let w = &mut self.workers[q];
+            w.docs.extend(docs);
+            w.docs.sort_unstable();
+            w.index = InvertedIndex::build(&self.corpus, &w.docs);
+        }
+        for (i, w) in self.workers.iter_mut().enumerate() {
+            w.id = i;
+        }
+
+        // Ownership guard, per-machine memory ledger and backend all track
+        // the new shard layout.
+        let shard_refs: Vec<&[u32]> = self.workers.iter().map(|w| w.docs.as_slice()).collect();
+        self.doc_ownership = ShardOwnership::build(&shard_refs, self.corpus.num_docs());
+        drop(shard_refs);
+        let nodes = self.spec.machines;
+        let mut data = vec![0u64; nodes];
+        let mut index = vec![0u64; nodes];
+        let mut dtb = vec![0u64; nodes];
+        for w in &self.workers {
+            data[w.machine] += w.resident_bytes(&self.corpus);
+            index[w.machine] += w.index.bytes();
+            dtb[w.machine] += w
+                .docs
+                .iter()
+                .map(|&d| self.dt.doc(d as usize).bytes())
+                .sum::<u64>();
+        }
+        for node in 0..nodes {
+            self.mem
+                .set(node, MemCategory::Data, data[node])
+                .context("re-charging adopted shard data")?;
+            self.mem.set(node, MemCategory::Index, index[node])?;
+            self.mem.set(node, MemCategory::DocTopic, dtb[node])?;
+        }
+        self.backend.reset_workers(self.workers.len())
+    }
+
+    /// Flush the async snapshot queue and surface any write error. A
+    /// no-op when checkpointing is off; call at run end before reading
+    /// the snapshot directory.
+    pub fn finish_checkpoints(&mut self) -> Result<()> {
+        match self.ckpt.take() {
+            Some(c) => c.finish(),
+            None => Ok(()),
+        }
     }
 
     /// Run `iterations` full sweeps, checkpointing the log-likelihood every

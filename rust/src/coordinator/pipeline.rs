@@ -187,6 +187,15 @@ impl PipelineEngine {
             .collect()
     }
 
+    /// Take every staged block out of the buffer (leaving it empty) — the
+    /// fault-recovery drain: the caller commits them back to the store
+    /// before the rotation is reassigned, since the handoff chain they
+    /// were staged for no longer exists.
+    pub fn take_staged(&mut self) -> Vec<Option<StagedBlock>> {
+        let empty: Vec<Option<StagedBlock>> = (0..self.staged.len()).map(|_| None).collect();
+        std::mem::replace(&mut self.staged, empty)
+    }
+
     /// Park a round's prefetched blocks for the next round.
     pub fn install(&mut self, staged: Vec<Option<StagedBlock>>) {
         debug_assert_eq!(staged.len(), self.staged.len());

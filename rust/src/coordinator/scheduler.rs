@@ -94,6 +94,32 @@ impl RotationSchedule {
         }
     }
 
+    /// Shrink the rotation after worker deaths: the schedule over the
+    /// surviving `P - |dead|` workers and the *same* `B` blocks. Survivors
+    /// are renumbered densely (position order preserved), so the caller
+    /// must compact its worker array the same way. Every block still
+    /// rotates past every survivor — disjointness and completeness hold by
+    /// construction (`B ≥ P' > 0`), re-checked by `tests/prop_faults.rs`
+    /// for random death sequences. Errors if a dead position is out of
+    /// range, repeated, or if nobody survives.
+    pub fn reassign(&self, dead: &[usize]) -> anyhow::Result<RotationSchedule> {
+        let mut seen = vec![false; self.workers];
+        for &d in dead {
+            if d >= self.workers {
+                anyhow::bail!("dead worker {d} out of range (have {} workers)", self.workers);
+            }
+            if seen[d] {
+                anyhow::bail!("dead worker {d} listed twice");
+            }
+            seen[d] = true;
+        }
+        let survivors = self.workers - dead.len();
+        if survivors == 0 {
+            anyhow::bail!("no surviving workers to reassign {} blocks to", self.blocks);
+        }
+        Ok(RotationSchedule::new(survivors, self.blocks))
+    }
+
     /// Check round disjointness for a specific round.
     pub fn round_is_disjoint(&self, round: usize) -> bool {
         let mut seen = vec![false; self.blocks];
@@ -225,6 +251,32 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn reassign_shrinks_workers_and_keeps_blocks() {
+        let s = RotationSchedule::new(4, 6);
+        let s2 = s.reassign(&[1, 3]).unwrap();
+        assert_eq!(s2.num_workers(), 2);
+        assert_eq!(s2.num_blocks(), 6);
+        assert_eq!(s2.rounds_per_iteration(), 6);
+        assert!(s2.iteration_is_complete());
+        for r in 0..s2.rounds_per_iteration() {
+            assert!(s2.round_is_disjoint(r), "round {r}");
+        }
+        // Chained failures compose.
+        let s3 = s2.reassign(&[0]).unwrap();
+        assert_eq!(s3.num_workers(), 1);
+        assert!(s3.iteration_is_complete());
+    }
+
+    #[test]
+    fn reassign_rejects_bad_death_lists() {
+        let s = RotationSchedule::new(3, 4);
+        assert!(s.reassign(&[3]).is_err(), "out of range");
+        assert!(s.reassign(&[1, 1]).is_err(), "duplicate");
+        assert!(s.reassign(&[0, 1, 2]).is_err(), "no survivors");
+        assert_eq!(s.reassign(&[]).unwrap(), s, "empty death list is the identity");
     }
 
     #[test]

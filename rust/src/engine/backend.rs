@@ -113,6 +113,132 @@ pub trait Backend {
     fn end_iteration(&mut self) -> Result<()> {
         Ok(())
     }
+
+    /// Fault-recovery hook: return any cross-round backend state to the
+    /// store so a degraded round sees every healthy block resident. The
+    /// pipelined backend commits its staged prefetches back (their
+    /// handoff chain is broken once the rotation is about to change);
+    /// stateless backends have nothing to drain.
+    fn drain_staging(
+        &mut self,
+        _kv: &KvStore,
+        _mem: &mut MemoryAccountant,
+        _machines: &[usize],
+    ) -> Result<()> {
+        Ok(())
+    }
+
+    /// Fault-recovery hook: resize per-worker backend state after the
+    /// rotation was reassigned to `workers` survivors. Stateless backends
+    /// need no action.
+    fn reset_workers(&mut self, _workers: usize) -> Result<()> {
+        Ok(())
+    }
+}
+
+/// One round executed sequentially with a *skip mask* — the driver's
+/// fault-recovery path. `skip[i]` marks worker positions that must sit
+/// this round out: positions whose scheduled block is still stuck under a
+/// dead worker's not-yet-expired lease. Skipped workers lease nothing,
+/// sample nothing, and report zero compute/fetch time; everyone else runs
+/// exactly as under [`SimulatedBackend`] (CPU kernels only — the shared
+/// XLA executor does not ride fault rounds). The round is therefore
+/// *partial* by design: the tokens of a skipped `(worker, block)` cell
+/// keep their previous assignments for one iteration, which is the
+/// sacrifice lease-revocation recovery makes (DESIGN.md §Fault-Tolerance).
+pub fn run_round_degraded(ctx: &mut RoundCtx<'_>, skip: &[bool]) -> Result<RoundOutcome> {
+    debug_assert_eq!(skip.len(), ctx.workers.len());
+    if ctx.sampler == SamplerKind::Xla {
+        bail!(
+            "degraded (fault-recovery) rounds require a CPU sampler kernel; \
+             the xla executor cannot run them"
+        );
+    }
+    let n = ctx.workers.len();
+    let t0 = Instant::now();
+    let mut leased: Vec<Option<ModelBlock>> = Vec::with_capacity(n);
+    for (i, w) in ctx.workers.iter().enumerate() {
+        if skip[i] {
+            leased.push(None);
+            continue;
+        }
+        let b = ctx.schedule.block_for(w.id, ctx.round);
+        leased.push(Some(ctx.kv.lease_block(b, w.machine)?));
+    }
+    ctx.pstats.fetch_stall_secs += t0.elapsed().as_secs_f64();
+    ctx.pstats.fallback_fetches += leased.iter().flatten().count() as u64;
+    let fetch_flows = ctx.kv.drain_flows();
+    let flow_times = ctx.net.per_flow_times(&fetch_flows);
+    let mut fetch_times = vec![0.0f64; n];
+    let mut next_flow = 0usize;
+    for (i, l) in leased.iter().enumerate() {
+        if l.is_some() {
+            fetch_times[i] = flow_times[next_flow];
+            next_flow += 1;
+        }
+    }
+    for (w, blk) in ctx.workers.iter().zip(&leased) {
+        if let Some(blk) = blk {
+            ctx.mem.charge(w.machine, MemCategory::Model, blk.bytes())?;
+        }
+    }
+
+    let t_compute = Instant::now();
+    let mut tokens = 0u64;
+    let mut host_secs = vec![0.0f64; n];
+    {
+        let RoundCtx { workers, z, dt, .. } = ctx;
+        let mut kernel = cpu_kernel(ctx.sampler, &ctx.kernel_opts)?;
+        let mut docs = DocView::new(z, dt);
+        for (i, (w, blk)) in workers.iter_mut().zip(leased.iter_mut()).enumerate() {
+            if let Some(blk) = blk {
+                let (nt, secs) =
+                    w.run_round(ctx.corpus, &mut docs, blk, ctx.params, &mut *kernel)?;
+                tokens += nt;
+                host_secs[i] = secs;
+            }
+        }
+    }
+    ctx.pstats.sample_secs += t_compute.elapsed().as_secs_f64();
+    for (w, blk) in ctx.workers.iter().zip(&leased) {
+        if let Some(blk) = blk {
+            let bytes = blk.alias_bytes();
+            if bytes > 0 {
+                ctx.mem.charge(w.machine, MemCategory::AliasCache, bytes)?;
+            }
+        }
+    }
+
+    // Commits + C_k merges for participants, in worker order — the same
+    // deterministic merge order the healthy backends use.
+    let t_flush = Instant::now();
+    let mut merge_bytes_per_worker = 0u64;
+    for (w, blk) in ctx.workers.iter_mut().zip(leased) {
+        let Some(blk) = blk else { continue };
+        ctx.mem.release(w.machine, MemCategory::Model, blk.bytes());
+        let alias = blk.alias_bytes();
+        if alias > 0 {
+            ctx.mem.release(w.machine, MemCategory::AliasCache, alias);
+        }
+        ctx.kv.commit_block(blk, w.machine)?;
+        let before = ctx.kv.total_bytes();
+        let delta = w.extract_totals_delta();
+        ctx.kv.merge_totals_delta(&delta, w.machine);
+        merge_bytes_per_worker = ctx.kv.total_bytes() - before;
+    }
+    let commit_flows: Vec<Flow> = ctx
+        .kv
+        .pending_transfers()
+        .iter()
+        .filter(|t| t.what == TransferKind::BlockCommit)
+        .map(|t| Flow { src: t.src, dst: t.dst, bytes: t.bytes })
+        .collect();
+    let _ = ctx.kv.drain_flows();
+    let t_commit = ctx.net.phase_time(&commit_flows)
+        + ctx.net.reduce_time(merge_bytes_per_worker, ctx.workers.len());
+    ctx.pstats.flush_stall_secs += t_flush.elapsed().as_secs_f64();
+    ctx.pstats.rounds += 1;
+    Ok(RoundOutcome { tokens, host_secs, fetch_times, t_commit })
 }
 
 /// Select the execution backend for a **finalized** config, validating
@@ -434,6 +560,34 @@ impl Backend for PipelinedBackend {
         if !self.engine.staging_is_empty() {
             bail!("staging buffer must drain by iteration end");
         }
+        Ok(())
+    }
+
+    fn drain_staging(
+        &mut self,
+        kv: &KvStore,
+        mem: &mut MemoryAccountant,
+        machines: &[usize],
+    ) -> Result<()> {
+        // Staged prefetches were leased for a handoff chain that the
+        // rotation change is about to invalidate — commit them back
+        // untouched so the degraded round finds every healthy block
+        // resident. (A prefetch stranded by its *consumer's* death is not
+        // here: it ages in the store and is revoked by lease timeout.)
+        for (w, staged) in self.engine.take_staged().into_iter().enumerate() {
+            if let Some(s) = staged {
+                mem.release(machines[w], MemCategory::Staging, s.block.bytes());
+                kv.commit_block(s.block, s.receipt.dst)?;
+            }
+        }
+        Ok(())
+    }
+
+    fn reset_workers(&mut self, workers: usize) -> Result<()> {
+        if !self.engine.staging_is_empty() {
+            bail!("drain staging before resizing the pipeline engine");
+        }
+        self.engine = PipelineEngine::new(workers, self.engine.budget_bytes());
         Ok(())
     }
 }

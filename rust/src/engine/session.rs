@@ -279,6 +279,32 @@ impl SessionBuilder {
         self
     }
 
+    /// Arm the lease protocol: a block lease not committed within `rounds`
+    /// grace rounds is revoked and its holder removed from the rotation
+    /// (0 = off; a stuck lease then fails the iteration with a typed
+    /// [`crate::error::MpldaError::LeaseTimeout`]).
+    pub fn lease_timeout_rounds(mut self, rounds: usize) -> Self {
+        self.cfg.coord.lease_timeout_rounds = rounds;
+        self
+    }
+
+    /// Write an async v2 snapshot into `dir` every `every` iterations
+    /// (serialization and I/O run on a background thread; `every = 0`
+    /// disables). Call [`Session::finish_checkpoints`] before reading the
+    /// directory.
+    pub fn checkpoint_every<P: Into<PathBuf>>(mut self, every: usize, dir: P) -> Self {
+        self.cfg.coord.checkpoint_every_iters = every;
+        self.cfg.coord.checkpoint_dir = dir.into().to_string_lossy().into_owned();
+        self
+    }
+
+    /// Scripted fault injections, in [`crate::cluster::FaultScript`] text
+    /// form (e.g. `"kill@1.0:w2"`).
+    pub fn fault_script(mut self, script: &str) -> Self {
+        self.cfg.coord.fault_script = script.into();
+        self
+    }
+
     /// Typed execution selection — replaces setting `coord.execution` and
     /// `coord.pipeline` separately (the builder keeps the pair coherent,
     /// so the "pipeline without threads" foot-gun cannot be expressed).
@@ -604,6 +630,17 @@ impl Session {
                 "checkpoint/resume rides the model-parallel driver; the data-parallel \
                  baseline does not support it"
             ),
+        }
+    }
+
+    /// Flush the async snapshot queue and surface any write error — a
+    /// no-op when `coord.checkpoint_every_iters` is 0 or for the
+    /// baseline. Call before reading the snapshot directory (e.g. with
+    /// [`checkpoint::find_latest_checkpoint`]).
+    pub fn finish_checkpoints(&mut self) -> Result<()> {
+        match &mut self.inner {
+            Inner::ModelParallel(d) => d.finish_checkpoints(),
+            Inner::Baseline(_) => Ok(()),
         }
     }
 

@@ -1,0 +1,102 @@
+//! Typed error values for faults the caller is expected to *match on*.
+//!
+//! Most failures in this crate are programming or configuration errors and
+//! flow through [`anyhow`] as context-rich strings. Fault-tolerance events
+//! are different: a lease that times out or an injected paging fault is an
+//! *expected* runtime condition that supervisors (and tests) must be able
+//! to recognize programmatically. Those conditions are raised as
+//! [`MpldaError`] values — still carried inside [`anyhow::Error`] chains,
+//! so call sites that don't care keep their `Result<T>` signatures, while
+//! call sites that do care recover the variant with
+//! `err.downcast_ref::<MpldaError>()` (anyhow preserves the root cause
+//! through any number of `.context(..)` layers).
+
+use std::fmt;
+
+/// A fault condition with a typed identity, recoverable from an
+/// [`anyhow::Error`] chain via `downcast_ref`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum MpldaError {
+    /// A worker's lease on `block` was not committed within
+    /// `coord.lease_timeout_rounds` rounds: the worker is presumed dead.
+    /// Raised by `Driver::run_iteration` when fault tolerance is *off*
+    /// (`lease_timeout_rounds = 0` would otherwise hang the round
+    /// forever); when tolerance is on, the driver revokes the lease and
+    /// reassigns instead of erroring.
+    LeaseTimeout {
+        /// Worker position that held the expired lease.
+        worker: usize,
+        /// The block whose lease expired.
+        block: u32,
+        /// Round index (within the iteration) at which expiry was detected.
+        round: usize,
+    },
+    /// An injected (or real) I/O fault while paging `block` for serving.
+    /// Scoped to the single request that needed the block; the serving
+    /// stack itself stays up.
+    ReadFault {
+        /// The block whose read failed.
+        block: u32,
+    },
+    /// Every worker died within one iteration — there is no survivor to
+    /// adopt the orphaned blocks, so training cannot continue.
+    NoSurvivors {
+        /// Round index at which the last worker was lost.
+        round: usize,
+    },
+}
+
+impl fmt::Display for MpldaError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            MpldaError::LeaseTimeout { worker, block, round } => write!(
+                f,
+                "lease timeout: worker {worker} never committed block {block} \
+                 (detected at round {round}); set coord.lease_timeout_rounds > 0 \
+                 to reassign instead of failing"
+            ),
+            MpldaError::ReadFault { block } => {
+                write!(f, "I/O fault while paging block {block}")
+            }
+            MpldaError::NoSurvivors { round } => {
+                write!(f, "all workers lost by round {round}; no survivor to adopt blocks")
+            }
+        }
+    }
+}
+
+impl std::error::Error for MpldaError {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use anyhow::Context;
+
+    #[test]
+    fn display_carries_identifying_fields() {
+        let e = MpldaError::LeaseTimeout { worker: 3, block: 7, round: 2 };
+        let s = e.to_string();
+        assert!(s.contains("worker 3"), "{s}");
+        assert!(s.contains("block 7"), "{s}");
+        assert!(s.contains("round 2"), "{s}");
+        let s = MpldaError::ReadFault { block: 9 }.to_string();
+        assert!(s.contains("block 9"), "{s}");
+        let s = MpldaError::NoSurvivors { round: 4 }.to_string();
+        assert!(s.contains("round 4"), "{s}");
+    }
+
+    #[test]
+    fn downcast_survives_context_layers() {
+        let base: anyhow::Result<()> =
+            Err(MpldaError::LeaseTimeout { worker: 1, block: 2, round: 0 }.into());
+        let wrapped = base
+            .context("running round 0")
+            .context("iteration 5")
+            .unwrap_err();
+        let typed = wrapped.downcast_ref::<MpldaError>().expect("typed root cause");
+        assert_eq!(
+            *typed,
+            MpldaError::LeaseTimeout { worker: 1, block: 2, round: 0 }
+        );
+    }
+}

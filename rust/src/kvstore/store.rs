@@ -31,13 +31,34 @@
 //! engine (`coordinator::parallel`) relies on this, and the pipelined
 //! prefetch engine's flusher thread (`coordinator::pipeline`) issues
 //! commits and stages through it concurrently with sampling.
+//!
+//! ## Fault tolerance
+//!
+//! When recovery is enabled ([`KvStore::enable_recovery`]) every lease
+//! keeps a **recovery copy** of the block at its shard-home, and the
+//! store's round clock ([`KvStore::advance_round`]) stamps each lease.
+//! A lease that survives *more than* `timeout_rounds` round boundaries
+//! without a commit is reported by [`KvStore::expired_leases`] and can be
+//! rolled back with [`KvStore::revoke_lease`] — the recovery copy becomes
+//! resident again, sacrificing only the dead holder's uncommitted round.
+//! Staged prefetch leases ([`KvStore::stage_block`]) age under the same
+//! clock: a healthy staged lease is committed one boundary after it was
+//! taken, so it never trips a `timeout_rounds >= 1` deadline, while a
+//! staged block stranded by its consumer's death expires like any other
+//! lease. [`KvStore::fail_home`] simulates losing a machine's shard-home
+//! by promoting its replica on a backup machine (blocks survive; only
+//! placement and flow endpoints move), and
+//! [`KvStore::inject_read_fault`] arms paging faults for the serving
+//! tier's error-isolation tests.
 
 use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Mutex, MutexGuard};
 
 use anyhow::{bail, Context, Result};
 
 use crate::cluster::Flow;
+use crate::error::MpldaError;
 use crate::model::wire;
 use crate::model::{ModelBlock, TopicCounts};
 
@@ -74,6 +95,11 @@ struct MachineShard {
     resident: BTreeMap<u32, ModelBlock>,
     /// Holder machine of each leased block.
     leased_to: BTreeMap<u32, usize>,
+    /// Round-clock value at which each outstanding lease was taken.
+    leased_at: BTreeMap<u32, u64>,
+    /// Pre-lease copies of leased blocks, kept only when recovery is
+    /// enabled; restored by [`KvStore::revoke_lease`].
+    recovery: BTreeMap<u32, ModelBlock>,
 }
 
 /// Sharded in-memory store of model blocks + topic totals.
@@ -85,6 +111,17 @@ pub struct KvStore {
     totals: Mutex<TopicCounts>,
     totals_home: usize,
     meter: Mutex<TrafficMeter>,
+    /// When true, leases keep a recovery copy at the shard-home so an
+    /// expired lease can be revoked instead of losing the block.
+    recovery_enabled: bool,
+    /// Monotone round counter (advanced by the driver at round ends);
+    /// lease ages are measured against it.
+    clock: AtomicU64,
+    /// Armed paging faults: block id → remaining reads that must fail.
+    read_faults: Mutex<BTreeMap<u32, usize>>,
+    /// Shard-home relocations from [`KvStore::fail_home`]: block id →
+    /// promoted backup machine, consulted before the static [`ShardMap`].
+    home_overrides: Mutex<BTreeMap<u32, usize>>,
 }
 
 impl KvStore {
@@ -109,13 +146,34 @@ impl KvStore {
             totals: Mutex::new(totals),
             totals_home: 0,
             meter: Mutex::new(TrafficMeter::new()),
+            recovery_enabled: false,
+            clock: AtomicU64::new(0),
+            read_faults: Mutex::new(BTreeMap::new()),
+            home_overrides: Mutex::new(BTreeMap::new()),
         }
     }
 
+    /// Keep a recovery copy of every leased block at its shard-home so
+    /// that [`KvStore::revoke_lease`] can roll an expired lease back.
+    /// Costs one block clone per lease; the driver enables it only when
+    /// `coord.lease_timeout_rounds > 0`. Must be called before the store
+    /// is shared (hence `&mut self`).
+    pub fn enable_recovery(&mut self) {
+        self.recovery_enabled = true;
+    }
+
+    /// The effective home machine of `block`: a [`KvStore::fail_home`]
+    /// promotion if one happened, the static shard map otherwise.
+    fn home_of(&self, block: u32) -> usize {
+        let overrides = self.home_overrides.lock().expect("kv overrides lock poisoned");
+        overrides
+            .get(&block)
+            .copied()
+            .unwrap_or_else(|| self.shards.home(block as usize))
+    }
+
     fn slot(&self, block: u32) -> MutexGuard<'_, MachineShard> {
-        self.slots[self.shards.home(block as usize)]
-            .lock()
-            .expect("kv shard lock poisoned")
+        self.slots[self.home_of(block)].lock().expect("kv shard lock poisoned")
     }
 
     /// Lease block `id` to a worker on `worker_machine`. Records the fetch
@@ -162,10 +220,14 @@ impl KvStore {
                 .remove(&id)
                 .with_context(|| format!("block {id} not in store"))?;
             slot.leased_to.insert(id, worker_machine);
+            slot.leased_at.insert(id, self.clock.load(Ordering::Relaxed));
+            if self.recovery_enabled {
+                slot.recovery.insert(id, block.clone());
+            }
             block
         };
         let receipt = LeaseReceipt {
-            src: self.shards.home(id as usize),
+            src: self.home_of(id),
             dst: worker_machine,
             bytes: wire::encode_block(&block).len() as u64,
         };
@@ -211,11 +273,13 @@ impl KvStore {
                 }
                 Some(_) => {}
             }
+            slot.leased_at.remove(&id);
+            slot.recovery.remove(&id);
             slot.resident.insert(id, block);
         }
         let receipt = LeaseReceipt {
             src: worker_machine,
-            dst: self.shards.home(id as usize),
+            dst: self.home_of(id),
             bytes,
         };
         self.meter.lock().expect("kv meter lock poisoned").record(
@@ -236,6 +300,16 @@ impl KvStore {
     /// stays separable from training traffic. Errors if the block is
     /// exclusively leased out (the store is mid-training, not quiescent).
     pub fn read_block(&self, id: u32, reader_machine: usize) -> Result<ModelBlock> {
+        {
+            let mut faults = self.read_faults.lock().expect("kv faults lock poisoned");
+            if let Some(remaining) = faults.get_mut(&id) {
+                *remaining -= 1;
+                if *remaining == 0 {
+                    faults.remove(&id);
+                }
+                return Err(MpldaError::ReadFault { block: id }.into());
+            }
+        }
         let block = {
             let slot = self.slot(id);
             if let Some(&holder) = slot.leased_to.get(&id) {
@@ -252,12 +326,133 @@ impl KvStore {
         // Length-only metering: a starved serving cache reads blocks per
         // token, so the O(block) encode allocation stays off this path.
         self.meter.lock().expect("kv meter lock poisoned").record(
-            self.shards.home(id as usize),
+            self.home_of(id),
             reader_machine,
             wire::encoded_block_len(&block),
             TransferKind::BlockRead,
         );
         Ok(block)
+    }
+
+    /// Arm a paging fault: the next `count` calls to
+    /// [`KvStore::read_block`] for `id` fail with a typed
+    /// [`MpldaError::ReadFault`] instead of copying the block. Faults are
+    /// *sticky* across `count` reads because the serving tier's cache
+    /// warm-up touches blocks ahead of fold-in; arm generously and
+    /// [`KvStore::clear_read_faults`] when done.
+    pub fn inject_read_fault(&self, id: u32, count: usize) {
+        if count == 0 {
+            return;
+        }
+        self.read_faults
+            .lock()
+            .expect("kv faults lock poisoned")
+            .insert(id, count);
+    }
+
+    /// Disarm every fault set by [`KvStore::inject_read_fault`].
+    pub fn clear_read_faults(&self) {
+        self.read_faults.lock().expect("kv faults lock poisoned").clear();
+    }
+
+    /// Advance the round clock. The driver calls this at every round end;
+    /// lease ages in [`KvStore::expired_leases`] are measured in these
+    /// ticks.
+    pub fn advance_round(&self) {
+        self.clock.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Outstanding leases older than `timeout_rounds` round boundaries —
+    /// strictly older: a lease taken during round `r` and committed by the
+    /// end of round `r + timeout_rounds` is *within* its deadline. (That
+    /// is what keeps healthy pipelined prefetches — staged in round `r`,
+    /// committed in round `r+1` — alive under `timeout_rounds = 1`.)
+    pub fn expired_leases(&self, timeout_rounds: u64) -> Vec<u32> {
+        let now = self.clock.load(Ordering::Relaxed);
+        let mut expired = Vec::new();
+        for slot in &self.slots {
+            let slot = slot.lock().expect("kv shard lock poisoned");
+            for (&id, &at) in &slot.leased_at {
+                if now.saturating_sub(at) > timeout_rounds {
+                    expired.push(id);
+                }
+            }
+        }
+        expired.sort_unstable();
+        expired
+    }
+
+    /// Roll back an outstanding lease on `id`: the ledger entry is
+    /// dropped and the recovery copy taken at lease time becomes resident
+    /// again, so a surviving worker can lease the block next round. The
+    /// dead holder's uncommitted round of updates on this block is lost —
+    /// that is the recovery contract. Errors if the block is not leased
+    /// or recovery was never enabled ([`KvStore::enable_recovery`]).
+    pub fn revoke_lease(&self, id: u32) -> Result<()> {
+        let mut slot = self.slot(id);
+        let holder = match slot.leased_to.remove(&id) {
+            Some(h) => h,
+            None => bail!("cannot revoke block {id}: not leased"),
+        };
+        slot.leased_at.remove(&id);
+        match slot.recovery.remove(&id) {
+            Some(copy) => {
+                slot.resident.insert(id, copy);
+                Ok(())
+            }
+            None => {
+                // Keep the ledger truthful before erroring.
+                slot.leased_to.insert(id, holder);
+                bail!(
+                    "cannot revoke block {id}: no recovery copy \
+                     (enable_recovery was not called before the lease)"
+                )
+            }
+        }
+    }
+
+    /// Simulate losing machine `machine`'s shard-home: every block homed
+    /// there (resident, recovery copies, and lease ledger entries alike)
+    /// is promoted on the backup machine `(machine + 1) % machines`, and
+    /// future traffic for those blocks flows to/from the backup. Block
+    /// *contents* are untouched — this models replica promotion in the
+    /// distributed hash table, so no recovery traffic is metered and the
+    /// sampled trajectory is unchanged. Returns the relocated block ids.
+    pub fn fail_home(&self, machine: usize) -> Result<Vec<u32>> {
+        if self.slots.len() < 2 {
+            bail!("cannot fail machine {machine}: single-machine store has no backup");
+        }
+        if machine >= self.slots.len() {
+            bail!("cannot fail machine {machine}: store spans {} machines", self.slots.len());
+        }
+        let backup = (machine + 1) % self.slots.len();
+        // Lock order mirrors every other path: overrides first, then
+        // slots (two of them, by index, to stay deadlock-free).
+        let mut overrides = self.home_overrides.lock().expect("kv overrides lock poisoned");
+        let (lo, hi) = (machine.min(backup), machine.max(backup));
+        let mut guard_lo = self.slots[lo].lock().expect("kv shard lock poisoned");
+        let mut guard_hi = self.slots[hi].lock().expect("kv shard lock poisoned");
+        let (failed, target) = if machine == lo {
+            (&mut *guard_lo, &mut *guard_hi)
+        } else {
+            (&mut *guard_hi, &mut *guard_lo)
+        };
+        let mut moved: Vec<u32> = failed
+            .resident
+            .keys()
+            .chain(failed.leased_to.keys())
+            .copied()
+            .collect();
+        moved.sort_unstable();
+        moved.dedup();
+        target.resident.append(&mut failed.resident);
+        target.leased_to.append(&mut failed.leased_to);
+        target.leased_at.append(&mut failed.leased_at);
+        target.recovery.append(&mut failed.recovery);
+        for &id in &moved {
+            overrides.insert(id, backup);
+        }
+        Ok(moved)
     }
 
     /// Heap bytes of a resident (non-leased) block, or `None` if the block
@@ -348,12 +543,15 @@ impl KvStore {
     }
 
     /// Bytes of shard storage on each machine (memory accounting).
+    /// Recovery copies held for outstanding leases count against their
+    /// home machine — that is the RAM price of fault tolerance.
     pub fn shard_bytes(&self, machines: usize) -> Vec<u64> {
         let mut per = vec![0u64; machines];
         for (home, slot) in self.slots.iter().enumerate() {
             let slot = slot.lock().expect("kv shard lock poisoned");
             let bytes: u64 = slot.resident.values().map(|b| b.bytes()).sum();
-            per[home] += bytes;
+            let recovery: u64 = slot.recovery.values().map(|b| b.bytes()).sum();
+            per[home] += bytes + recovery;
         }
         per
     }
@@ -638,6 +836,129 @@ mod tests {
         let after = kv.totals_snapshot();
         let sum = |t: &TopicCounts| t.as_slice().iter().sum::<i64>();
         assert_eq!(sum(&after), sum(&before) + blocks as i64);
+    }
+
+    fn setup_recovering(num_blocks: usize, machines: usize) -> KvStore {
+        let mut kv = setup(num_blocks, machines);
+        kv.enable_recovery();
+        kv
+    }
+
+    #[test]
+    fn expired_lease_is_revoked_and_block_restored() {
+        let kv = setup_recovering(4, 2);
+        let snapshot = kv.read_block(2, 0).unwrap();
+        let mut b = kv.lease_block(2, 1).unwrap();
+        b.row_mut(b.lo).inc(3); // dead worker's uncommitted mutation
+        // Healthy within the deadline: one boundary with timeout 1.
+        kv.advance_round();
+        assert!(kv.expired_leases(1).is_empty());
+        // One more boundary without a commit → expired.
+        kv.advance_round();
+        assert_eq!(kv.expired_leases(1), vec![2]);
+        kv.revoke_lease(2).unwrap();
+        assert_eq!(kv.num_leased(), 0);
+        // The pre-lease copy is back; the holder's mutation is gone.
+        assert_eq!(kv.read_block(2, 0).unwrap(), snapshot);
+        kv.check_quiescent_consistency(8).unwrap();
+        // The zombie's late commit is now a protocol violation.
+        assert!(kv.commit_block(b, 1).is_err());
+    }
+
+    #[test]
+    fn staged_leases_age_like_any_other() {
+        // A staged prefetch taken in round r and committed during round
+        // r+1 survives timeout 1; one stranded past that expires.
+        let kv = setup_recovering(4, 2);
+        let (b, _r) = kv.stage_block(1, 0).unwrap();
+        kv.advance_round();
+        assert!(kv.expired_leases(1).is_empty(), "healthy handoff must not expire");
+        kv.commit_block(b, 0).unwrap();
+        let (_stranded, _r) = kv.stage_block(3, 0).unwrap();
+        kv.advance_round();
+        kv.advance_round();
+        assert_eq!(kv.expired_leases(1), vec![3]);
+        kv.revoke_lease(3).unwrap();
+        kv.check_quiescent_consistency(8).unwrap();
+    }
+
+    #[test]
+    fn revoke_without_recovery_copy_fails_cleanly() {
+        let kv = setup(4, 2); // recovery NOT enabled
+        let _b = kv.lease_block(0, 0).unwrap();
+        let err = kv.revoke_lease(0).unwrap_err().to_string();
+        assert!(err.contains("no recovery copy"), "{err}");
+        // Ledger still truthful.
+        assert_eq!(kv.num_leased(), 1);
+        let err = kv.revoke_lease(2).unwrap_err().to_string();
+        assert!(err.contains("not leased"), "{err}");
+    }
+
+    #[test]
+    fn recovery_copies_count_toward_shard_bytes() {
+        let kv = setup_recovering(4, 2);
+        let quiescent: u64 = kv.shard_bytes(2).iter().sum();
+        let b = kv.lease_block(2, 1).unwrap();
+        let with_lease: u64 = kv.shard_bytes(2).iter().sum();
+        assert_eq!(with_lease, quiescent, "recovery copy keeps the bytes home");
+        kv.commit_block(b, 1).unwrap();
+        assert_eq!(kv.shard_bytes(2).iter().sum::<u64>(), quiescent);
+    }
+
+    #[test]
+    fn injected_read_faults_are_typed_counted_and_clearable() {
+        use crate::error::MpldaError;
+        let kv = setup(4, 2);
+        kv.inject_read_fault(2, 2);
+        for _ in 0..2 {
+            let err = kv.read_block(2, 0).unwrap_err();
+            assert_eq!(
+                err.downcast_ref::<MpldaError>(),
+                Some(&MpldaError::ReadFault { block: 2 })
+            );
+        }
+        // Count exhausted: reads heal.
+        assert!(kv.read_block(2, 0).is_ok());
+        // Other blocks were never affected.
+        kv.inject_read_fault(2, 1000);
+        assert!(kv.read_block(3, 0).is_ok());
+        kv.clear_read_faults();
+        assert!(kv.read_block(2, 0).is_ok());
+    }
+
+    #[test]
+    fn fail_home_promotes_blocks_on_backup() {
+        let kv = setup_recovering(4, 2);
+        let before: Vec<ModelBlock> =
+            (0..4).map(|id| kv.read_block(id, 0).unwrap()).collect();
+        // Machine 0 homes blocks 0 and 2 under round-robin; lease one of
+        // them first so the ledger relocates too.
+        let leased = kv.lease_block(0, 1).unwrap();
+        let moved = kv.fail_home(0).unwrap();
+        assert_eq!(moved, vec![0, 2]);
+        // All shard bytes now live on machine 1.
+        let per = kv.shard_bytes(2);
+        assert_eq!(per[0], 0);
+        assert!(per[1] > 0);
+        // The relocated ledger still accepts the in-flight commit …
+        kv.commit_block(leased, 1).unwrap();
+        // … contents are unchanged, and new reads flow from the backup.
+        for want in &before {
+            assert_eq!(&kv.read_block(want.id, 0).unwrap(), want);
+        }
+        kv.check_quiescent_consistency(8).unwrap();
+        // Lease/commit cycles keep working against the promoted home.
+        let b = kv.lease_block(2, 0).unwrap();
+        kv.commit_block(b, 0).unwrap();
+        kv.check_quiescent_consistency(8).unwrap();
+    }
+
+    #[test]
+    fn fail_home_needs_a_backup_machine() {
+        let kv = setup(2, 1);
+        assert!(kv.fail_home(0).is_err());
+        let kv = setup(2, 2);
+        assert!(kv.fail_home(7).is_err());
     }
 
     #[test]

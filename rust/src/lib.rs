@@ -71,6 +71,7 @@
 //! ```
 
 pub mod util;
+pub mod error;
 pub mod config;
 pub mod corpus;
 pub mod model;

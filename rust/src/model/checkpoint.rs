@@ -27,10 +27,21 @@
 //! (K_d:varint (topic:varint count:varint)*)*   # per doc, live order
 //! ```
 
-use std::io::{Read, Write};
-use std::path::Path;
+//!
+//! Periodic **async snapshots** ([`AsyncCheckpointer`]) keep serialization
+//! off the sampling path: the driver hands a cloned `(Z, ResumeState)`
+//! snapshot to a background thread, which encodes and writes it to
+//! `<dir>/ckpt-<iteration>.mplda` via write-to-temp + atomic rename. A
+//! reader scanning with [`find_latest_checkpoint`] therefore never
+//! observes a partially-written file: the final name only ever appears
+//! complete.
 
-use anyhow::{bail, Context, Result};
+use std::io::{Read, Write};
+use std::path::{Path, PathBuf};
+use std::sync::mpsc;
+use std::thread::JoinHandle;
+
+use anyhow::{anyhow, bail, Context, Result};
 
 use crate::corpus::Corpus;
 
@@ -73,11 +84,11 @@ pub fn corpus_fingerprint(corpus: &Corpus) -> u64 {
     h
 }
 
-fn encode_header(buf: &mut Vec<u8>, version: u64, assign: &Assignments, corpus: &Corpus) {
+fn encode_header(buf: &mut Vec<u8>, version: u64, assign: &Assignments, fingerprint: u64) {
     buf.extend_from_slice(MAGIC);
     put_varint(buf, version);
     put_varint(buf, assign.num_topics as u64);
-    buf.extend_from_slice(&corpus_fingerprint(corpus).to_le_bytes());
+    buf.extend_from_slice(&fingerprint.to_le_bytes());
     put_varint(buf, assign.z.len() as u64);
     for doc in &assign.z {
         put_varint(buf, doc.len() as u64);
@@ -94,15 +105,27 @@ pub fn write_checkpoint<W: Write>(
     corpus: &Corpus,
 ) -> Result<()> {
     let mut buf = Vec::with_capacity(assign.num_tokens() * 2 + 64);
-    encode_header(&mut buf, VERSION_PLAIN, assign, corpus);
+    encode_header(&mut buf, VERSION_PLAIN, assign, corpus_fingerprint(corpus));
     w.write_all(&buf).context("writing checkpoint")
 }
 
 /// Serialize assignments plus the [`ResumeState`] trailer (v2).
 pub fn write_resumable<W: Write>(
-    mut w: W,
+    w: W,
     assign: &Assignments,
     corpus: &Corpus,
+    state: &ResumeState,
+) -> Result<()> {
+    write_resumable_with_fingerprint(w, assign, corpus_fingerprint(corpus), state)
+}
+
+/// [`write_resumable`] with a precomputed corpus fingerprint — what the
+/// [`AsyncCheckpointer`]'s writer thread uses, so snapshot jobs never
+/// need to carry (or re-hash) the corpus itself.
+pub fn write_resumable_with_fingerprint<W: Write>(
+    mut w: W,
+    assign: &Assignments,
+    fingerprint: u64,
     state: &ResumeState,
 ) -> Result<()> {
     if state.dt.num_docs() != assign.z.len() {
@@ -113,7 +136,7 @@ pub fn write_resumable<W: Write>(
         );
     }
     let mut buf = Vec::with_capacity(assign.num_tokens() * 4 + 64);
-    encode_header(&mut buf, VERSION_RESUMABLE, assign, corpus);
+    encode_header(&mut buf, VERSION_RESUMABLE, assign, fingerprint);
     put_varint(&mut buf, state.iteration as u64);
     put_varint(&mut buf, state.worker_rng.len() as u64);
     for &(s, inc) in &state.worker_rng {
@@ -305,6 +328,137 @@ pub fn load_resumable<P: AsRef<Path>>(
     read_resumable(std::io::BufReader::new(f), corpus)
 }
 
+/// File name of a periodic snapshot for `iteration`.
+fn snapshot_name(iteration: usize) -> String {
+    format!("ckpt-{iteration}.mplda")
+}
+
+/// Scan `dir` for completed periodic snapshots (`ckpt-<iteration>.mplda`)
+/// and return the newest as `(iteration, path)`. In-flight `*.tmp` files
+/// are never candidates — the atomic rename in the writer thread means a
+/// final-named file is always complete. `Ok(None)` when the directory has
+/// no snapshots (or does not exist yet).
+pub fn find_latest_checkpoint<P: AsRef<Path>>(dir: P) -> Result<Option<(usize, PathBuf)>> {
+    let dir = dir.as_ref();
+    let entries = match std::fs::read_dir(dir) {
+        Ok(e) => e,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(None),
+        Err(e) => return Err(e).with_context(|| format!("scanning {dir:?}")),
+    };
+    let mut best: Option<(usize, PathBuf)> = None;
+    for entry in entries {
+        let entry = entry.with_context(|| format!("scanning {dir:?}"))?;
+        let name = entry.file_name();
+        let Some(name) = name.to_str() else { continue };
+        let Some(iter) = name
+            .strip_prefix("ckpt-")
+            .and_then(|rest| rest.strip_suffix(".mplda"))
+            .and_then(|n| n.parse::<usize>().ok())
+        else {
+            continue;
+        };
+        let newer = match &best {
+            Some((b, _)) => iter > *b,
+            None => true,
+        };
+        if newer {
+            best = Some((iter, entry.path()));
+        }
+    }
+    Ok(best)
+}
+
+/// One queued snapshot: everything the writer thread needs, owned.
+struct SnapshotJob {
+    iteration: usize,
+    fingerprint: u64,
+    assign: Assignments,
+    state: ResumeState,
+}
+
+/// Background checkpoint writer: snapshots queue through a channel and
+/// are encoded + written on a dedicated thread, so the only cost on the
+/// sampling path is cloning the state to snapshot. Each snapshot lands as
+/// `<dir>/ckpt-<iteration>.mplda`, written to a `.tmp` sibling first and
+/// atomically renamed — a crash mid-write leaves a stale `.tmp` that
+/// [`find_latest_checkpoint`] ignores, never a corrupt "latest".
+pub struct AsyncCheckpointer {
+    dir: PathBuf,
+    tx: Option<mpsc::Sender<SnapshotJob>>,
+    writer: Option<JoinHandle<Result<()>>>,
+}
+
+impl AsyncCheckpointer {
+    /// Spawn the writer thread targeting `dir` (created if missing).
+    pub fn new<P: AsRef<Path>>(dir: P) -> Result<AsyncCheckpointer> {
+        let dir = dir.as_ref().to_path_buf();
+        std::fs::create_dir_all(&dir)
+            .with_context(|| format!("creating checkpoint dir {dir:?}"))?;
+        let (tx, rx) = mpsc::channel::<SnapshotJob>();
+        let writer_dir = dir.clone();
+        let writer = std::thread::spawn(move || -> Result<()> {
+            for job in rx {
+                let tmp = writer_dir.join(format!("{}.tmp", snapshot_name(job.iteration)));
+                let done = writer_dir.join(snapshot_name(job.iteration));
+                let f = std::fs::File::create(&tmp)
+                    .with_context(|| format!("creating {tmp:?}"))?;
+                write_resumable_with_fingerprint(
+                    std::io::BufWriter::new(f),
+                    &job.assign,
+                    job.fingerprint,
+                    &job.state,
+                )?;
+                std::fs::rename(&tmp, &done)
+                    .with_context(|| format!("publishing {done:?}"))?;
+            }
+            Ok(())
+        });
+        Ok(AsyncCheckpointer { dir, tx: Some(tx), writer: Some(writer) })
+    }
+
+    /// The snapshot directory.
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Queue a snapshot. Returns immediately; serialization and I/O run
+    /// on the writer thread. Errors only if the writer already exited
+    /// (its failure surfaces in [`AsyncCheckpointer::finish`]).
+    pub fn submit(
+        &self,
+        iteration: usize,
+        fingerprint: u64,
+        assign: Assignments,
+        state: ResumeState,
+    ) -> Result<()> {
+        self.tx
+            .as_ref()
+            .expect("checkpointer already finished")
+            .send(SnapshotJob { iteration, fingerprint, assign, state })
+            .map_err(|_| anyhow!("checkpoint writer thread exited early"))
+    }
+
+    /// Close the queue, drain every pending snapshot, and surface any
+    /// write error. Dropping without calling this still drains, but
+    /// swallows errors.
+    pub fn finish(mut self) -> Result<()> {
+        self.tx.take();
+        match self.writer.take() {
+            Some(h) => h.join().map_err(|_| anyhow!("checkpoint writer thread panicked"))?,
+            None => Ok(()),
+        }
+    }
+}
+
+impl Drop for AsyncCheckpointer {
+    fn drop(&mut self) {
+        self.tx.take();
+        if let Some(h) = self.writer.take() {
+            let _ = h.join();
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -428,6 +582,50 @@ mod tests {
             buf.truncate(buf.len() - 3);
             assert!(read_resumable(&buf[..], &corpus).is_err(), "resumable={resumable}");
         }
+    }
+
+    #[test]
+    fn async_snapshots_land_atomically_and_latest_wins() {
+        let (corpus, assign) = fixture();
+        let (dt, _, _) = assign.build_counts(&corpus);
+        let dir = std::env::temp_dir()
+            .join(format!("mplda_async_ckpt_{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        let fp = corpus_fingerprint(&corpus);
+        let ck = AsyncCheckpointer::new(&dir).unwrap();
+        assert_eq!(ck.dir(), dir.as_path());
+        for iteration in [5usize, 10, 15] {
+            let state =
+                ResumeState { iteration, worker_rng: vec![(3, 7)], dt: dt.clone() };
+            ck.submit(iteration, fp, assign.clone(), state).unwrap();
+        }
+        ck.finish().unwrap();
+        // A stale in-flight temp file must never be chosen as latest.
+        std::fs::write(dir.join("ckpt-99.mplda.tmp"), b"partial").unwrap();
+        std::fs::write(dir.join("unrelated.txt"), b"x").unwrap();
+        let (iter, path) = find_latest_checkpoint(&dir).unwrap().expect("snapshots exist");
+        assert_eq!(iter, 15);
+        // The published file is complete and loads with its trailer.
+        let (loaded, trailer) = load_resumable(&path, &corpus).unwrap();
+        assert_eq!(loaded.z, assign.z);
+        assert_eq!(trailer.expect("v2 trailer").iteration, 15);
+        // No temp droppings for completed snapshots.
+        for it in [5usize, 10, 15] {
+            assert!(dir.join(format!("ckpt-{it}.mplda")).exists());
+            assert!(!dir.join(format!("ckpt-{it}.mplda.tmp")).exists());
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn find_latest_handles_missing_and_empty_dirs() {
+        let dir = std::env::temp_dir()
+            .join(format!("mplda_no_such_dir_{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        assert!(find_latest_checkpoint(&dir).unwrap().is_none());
+        std::fs::create_dir_all(&dir).unwrap();
+        assert!(find_latest_checkpoint(&dir).unwrap().is_none());
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

@@ -26,7 +26,7 @@
 use std::collections::BTreeMap;
 use std::sync::{Arc, Mutex};
 
-use anyhow::{bail, Result};
+use anyhow::{bail, Context, Result};
 
 use crate::cluster::{ClusterSpec, MemCategory, MemoryAccountant};
 use crate::config::ClusterConfig;
@@ -106,7 +106,13 @@ pub struct ShardedTopicModel {
 
 impl RowSource for ShardedTopicModel {
     fn with_row(&self, w: u32, f: &mut dyn FnMut(&SparseRow)) {
-        let block = self.block(self.map.block_of(w) as u32);
+        // The fold-in entry points page every needed block in a fallible
+        // pre-pass before sampling starts, so a store fault surfaces as a
+        // typed request error there — by the time rows are visited the
+        // block is cached (or the store is healthy again).
+        let block = self
+            .block(self.map.block_of(w) as u32)
+            .expect("block paged by the fold-in pre-pass; the store read cannot fault here");
         f(block.row(w));
     }
 
@@ -229,7 +235,11 @@ impl ShardedTopicModel {
     /// so concurrent queries keep hitting unrelated blocks while one
     /// pages in. (Two threads missing the *same* block may both pay the
     /// copy; admission below dedupes, and both copies are equal.)
-    fn block(&self, id: u32) -> Arc<ModelBlock> {
+    ///
+    /// A failed store read (e.g. an injected
+    /// [`crate::error::MpldaError::ReadFault`]) propagates — cache state
+    /// is untouched, so the next attempt retries the store cleanly.
+    fn block(&self, id: u32) -> Result<Arc<ModelBlock>> {
         {
             let mut cache = self.cache.lock().expect("serve cache lock poisoned");
             cache.tick += 1;
@@ -238,14 +248,11 @@ impl ShardedTopicModel {
                 e.last_used = tick;
                 let block = e.block.clone();
                 cache.hits += 1;
-                return block;
+                return Ok(block);
             }
         }
         // Page in with the lock released.
-        let block = self
-            .kv
-            .read_block(id, 0)
-            .expect("serving store is quiescent and owns every block");
+        let block = self.kv.read_block(id, 0)?;
         let bytes = block.bytes();
         let arc = Arc::new(block);
         let mut cache = self.cache.lock().expect("serve cache lock poisoned");
@@ -257,13 +264,13 @@ impl ShardedTopicModel {
             e.last_used = tick;
             let block = e.block.clone();
             cache.misses += 1;
-            return block;
+            return Ok(block);
         }
         if cache.budget > 0 && bytes > cache.budget {
             // Larger than the whole budget: serve uncached. The budget
             // is a hard admission bound, never exceeded.
             cache.bypasses += 1;
-            return arc;
+            return Ok(arc);
         }
         cache.misses += 1;
         while cache.budget > 0 && cache.bytes + bytes > cache.budget {
@@ -288,14 +295,32 @@ impl ShardedTopicModel {
             .charge(0, MemCategory::ServeCache, bytes)
             .expect("serve cache accountant does not enforce");
         cache.entries.insert(id, CacheEntry { block: arc.clone(), bytes, last_used: tick });
-        arc
+        Ok(arc)
+    }
+
+    /// Fallibly page in every block `docs` will touch — the pre-pass each
+    /// fold-in entry point runs so a store fault fails the *request* with
+    /// a typed error before any sampling work starts, instead of
+    /// panicking mid-batch inside a row visit.
+    fn page_in(&self, docs: &[BowDoc]) -> Result<()> {
+        for id in self.blocks_of(docs) {
+            self.block(id).with_context(|| format!("paging block {id} for fold-in"))?;
+        }
+        Ok(())
+    }
+
+    /// The backing block store — the serve fault-injection tests reach
+    /// [`KvStore::inject_read_fault`] through this.
+    pub fn store(&self) -> &KvStore {
+        &self.kv
     }
 
     /// Warm the cache with each listed block once, in the given order —
     /// the micro-batcher's group-by-block pre-pass, which amortizes one
     /// store read across every queued document that touches the block.
     /// Out-of-range ids are ignored (per-document validation reports them
-    /// properly later).
+    /// properly later), and so are store faults — warming is best-effort;
+    /// the request's own pre-pass surfaces any error as a typed failure.
     pub fn touch_blocks(&self, ids: &[u32]) {
         for &id in ids {
             if (id as usize) < self.map.num_blocks() {
@@ -349,6 +374,7 @@ impl ShardedTopicModel {
     /// count: per-document RNG streams are keyed by batch position, and
     /// paging changes only when rows are fetched, never their contents.
     pub fn infer_with(&self, docs: &[BowDoc], opts: &InferOptions) -> Result<DocTopics> {
+        self.page_in(docs)?;
         infer_batch(&self.stats, self, docs, opts)
     }
 
@@ -360,6 +386,7 @@ impl ShardedTopicModel {
         opts: &InferOptions,
         scratches: &mut [Scratch],
     ) -> Result<DocTopics> {
+        self.page_in(docs)?;
         infer_batch_reusing(&self.stats, self, docs, opts.iterations, opts.seed, scratches)
     }
 
@@ -375,6 +402,7 @@ impl ShardedTopicModel {
         iterations: usize,
         scratch: &mut Scratch,
     ) -> Result<DocTopics> {
+        self.page_in(docs)?;
         infer_batch_reusing(&self.stats, self, docs, iterations, seed, std::slice::from_mut(scratch))
     }
 }
@@ -507,5 +535,28 @@ mod tests {
         let after = m.cache_stats();
         assert_eq!(after.misses, before.misses, "warmed batch must not re-fetch");
         assert!(after.hits > before.hits);
+    }
+
+    #[test]
+    fn read_faults_fail_the_request_typed_then_clear() {
+        use crate::error::MpldaError;
+        let (wt, ck, params) = table(60, 8, 8);
+        let m = ShardedTopicModel::from_table(&wt, ck, params, 6, 0.0).unwrap();
+        let qs = docs(60, 3, 15, 17);
+        for id in m.blocks_of(&qs) {
+            m.store().inject_read_fault(id, 1000);
+        }
+        // The pre-pass turns the store fault into a typed request error;
+        // nothing panics and the cache stays clean.
+        let err = m.infer(&qs).unwrap_err();
+        assert!(
+            matches!(err.downcast_ref::<MpldaError>(), Some(MpldaError::ReadFault { .. })),
+            "{err:#}"
+        );
+        assert_eq!(m.cache_stats().resident_blocks, 0);
+        // Clearing the faults makes the same request succeed.
+        m.store().clear_read_faults();
+        let folded = m.infer(&qs).unwrap();
+        assert_eq!(folded.len(), qs.len());
     }
 }

@@ -361,6 +361,13 @@ impl Server {
         self.harness.as_ref().expect("harness lives until teardown").stats()
     }
 
+    /// The served model — the paging-fault tests reach
+    /// [`crate::kvstore::KvStore::inject_read_fault`] through it while
+    /// the server is live.
+    pub fn model(&self) -> &ShardedTopicModel {
+        self.harness.as_ref().expect("harness lives until teardown").model()
+    }
+
     /// Block until the server stops (a `shutdown` request arrived or
     /// [`Server::shutdown`] ran), then tear the stack down in order:
     /// accept thread → handlers → batcher/executor.

@@ -1,0 +1,145 @@
+//! Async-checkpoint recovery acceptance (ISSUE 6): periodic background
+//! snapshots must be invisible in the trajectory (same digest as a run
+//! without them), resumable bitwise, atomic on disk (an in-flight `.tmp`
+//! is never "latest"), and robust to damage — truncated or corrupted
+//! snapshot files are rejected with an error, never a panic.
+
+use std::fs;
+use std::path::PathBuf;
+
+use mplda::config::SamplerKind;
+use mplda::engine::{Session, SessionBuilder};
+use mplda::model::checkpoint::{find_latest_checkpoint, load_resumable};
+
+fn builder(seed: u64) -> SessionBuilder {
+    Session::builder()
+        .corpus_preset("tiny")
+        .topics(12)
+        .sampler(SamplerKind::InvertedXy)
+        .seed(seed)
+        .workers(3)
+        .cluster_preset("custom")
+        .machines(3)
+        .configure(|cfg| cfg.corpus.seed = 37)
+}
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("mplda_ckptrec_{tag}_{}", std::process::id()));
+    fs::remove_dir_all(&dir).ok(); // stale state from a previous run
+    dir
+}
+
+#[test]
+fn periodic_snapshots_are_digest_neutral_and_resume_bitwise() {
+    let dir = tmp_dir("periodic");
+
+    // Reference: the same 5 iterations with checkpointing off.
+    let mut reference = builder(7).iterations(5).build().unwrap();
+    reference.train().unwrap();
+    let reference_digest = reference.model_digest().unwrap();
+
+    // Snapshots at iterations 2 and 4, written off the critical path. The
+    // writer only ever sees clones, so the trajectory cannot move.
+    let mut s = builder(7).checkpoint_every(2, &dir).iterations(5).build().unwrap();
+    s.train().unwrap();
+    s.finish_checkpoints().unwrap();
+    assert_eq!(
+        s.model_digest().unwrap(),
+        reference_digest,
+        "async checkpointing must be digest-neutral"
+    );
+
+    // The newest completed snapshot is iteration 4's.
+    let (iter, path) = find_latest_checkpoint(&dir).unwrap().expect("snapshots written");
+    assert_eq!(iter, 4);
+
+    // Resume it for one more iteration: bitwise equal to the
+    // uninterrupted 5-iteration run (same seed, same trajectory).
+    let mut resumed = builder(7).iterations(1).resume_from(&path).build().unwrap();
+    assert_eq!(resumed.iteration(), 4, "snapshot carries the iteration counter");
+    resumed.train().unwrap();
+    resumed.check_consistency().unwrap();
+    assert_eq!(
+        resumed.model_digest().unwrap(),
+        reference_digest,
+        "resume from a periodic snapshot must rejoin the run bitwise"
+    );
+
+    fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn damaged_snapshots_are_rejected_not_panicked_on() {
+    let dir = tmp_dir("damage");
+    fs::create_dir_all(&dir).unwrap();
+    let good = dir.join("good.mplda");
+
+    let mut s = builder(11).iterations(2).build().unwrap();
+    s.train().unwrap();
+    s.checkpoint(&good).unwrap();
+    let corpus = s.corpus().clone();
+    let bytes = fs::read(&good).unwrap();
+    assert!(load_resumable(&good, &corpus).is_ok(), "the intact file loads");
+
+    // Truncations: half the file, and the file minus its final byte.
+    for (tag, cut) in [("half", bytes.len() / 2), ("one-short", bytes.len() - 1)] {
+        let path = dir.join(format!("trunc_{tag}.mplda"));
+        fs::write(&path, &bytes[..cut]).unwrap();
+        let err = load_resumable(&path, &corpus)
+            .map(|_| ())
+            .expect_err("a truncated snapshot must not load");
+        assert!(!format!("{err:#}").is_empty(), "{tag}: error must explain itself");
+    }
+
+    // Header corruption: a flipped magic byte and a bogus version byte
+    // are both caught before any state is trusted.
+    for (tag, pos) in [("magic", 2usize), ("version", 8usize)] {
+        let mut bad = bytes.clone();
+        bad[pos] ^= 0xff;
+        let path = dir.join(format!("corrupt_{tag}.mplda"));
+        fs::write(&path, &bad).unwrap();
+        assert!(
+            load_resumable(&path, &corpus).is_err(),
+            "{tag}: corrupted snapshot must be rejected"
+        );
+    }
+
+    // A snapshot for a *different* corpus is damage too (fingerprint).
+    let other = builder(11).configure(|cfg| cfg.corpus.seed = 99).iterations(0).build().unwrap();
+    let err = load_resumable(&good, other.corpus()).map(|_| ()).unwrap_err();
+    assert!(format!("{err:#}").contains("corpus"), "{err:#}");
+
+    fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn inflight_tmp_files_never_become_latest() {
+    let dir = tmp_dir("tmpfiles");
+    fs::create_dir_all(&dir).unwrap();
+
+    // Only garbage and in-flight files: no "latest" exists.
+    fs::write(dir.join("ckpt-99.mplda.tmp"), b"half-written snapshot").unwrap();
+    fs::write(dir.join("ckpt-abc.mplda"), b"not a snapshot number").unwrap();
+    fs::write(dir.join("notes.txt"), b"unrelated").unwrap();
+    assert_eq!(find_latest_checkpoint(&dir).unwrap(), None);
+
+    // Real snapshots land; the stale .tmp (from a "crashed" writer) still
+    // never wins, even though 99 > 2.
+    let mut s = builder(13).checkpoint_every(1, &dir).iterations(2).build().unwrap();
+    s.train().unwrap();
+    s.finish_checkpoints().unwrap();
+    let (iter, path) = find_latest_checkpoint(&dir).unwrap().expect("snapshots written");
+    assert_eq!(iter, 2, "the stale .tmp must never be picked up");
+    assert!(load_resumable(&path, s.corpus()).is_ok(), "and the winner is complete");
+
+    fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn missing_or_empty_directories_are_not_errors() {
+    let dir = tmp_dir("empty");
+    assert_eq!(find_latest_checkpoint(&dir).unwrap(), None, "missing dir");
+    fs::create_dir_all(&dir).unwrap();
+    assert_eq!(find_latest_checkpoint(&dir).unwrap(), None, "empty dir");
+    fs::remove_dir_all(&dir).ok();
+}

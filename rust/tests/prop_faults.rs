@@ -1,0 +1,225 @@
+//! Property tests for the fault-recovery schedule math (ISSUE 6
+//! satellite): under arbitrary kill sequences the reassigned rotation
+//! must keep the two invariants that make model-parallel sampling safe —
+//! every round disjoint, every iteration complete — and the driver's
+//! limbo-round skip rule must sideline *only* the corpse and the stuck
+//! block's consumer while every other worker keeps sampling a distinct,
+//! live block.
+
+use mplda::cluster::FaultScript;
+use mplda::coordinator::RotationSchedule;
+use mplda::util::prop::{check_result, Arbitrary, Config as PropConfig};
+use mplda::util::rng::Pcg64;
+
+/// A layout plus a survivable sequence of worker deaths: each entry is a
+/// position valid in the *current* (post-previous-kills) numbering, and
+/// at least one worker always survives.
+#[derive(Debug, Clone)]
+struct KillPlan {
+    workers: usize,
+    blocks: usize,
+    kills: Vec<usize>,
+}
+
+impl Arbitrary for KillPlan {
+    fn arbitrary(rng: &mut Pcg64, size: usize) -> Self {
+        let workers = 2 + rng.index(size.max(2));
+        let blocks = workers + rng.index(size.max(2) * 2);
+        let n = rng.index(workers); // leaves >= 1 survivor
+        let mut alive = workers;
+        let kills = (0..n)
+            .map(|_| {
+                let k = rng.index(alive);
+                alive -= 1;
+                k
+            })
+            .collect();
+        KillPlan { workers, blocks, kills }
+    }
+
+    fn shrink(&self) -> Vec<Self> {
+        let mut out = Vec::new();
+        if !self.kills.is_empty() {
+            let mut fewer = self.clone();
+            fewer.kills.pop();
+            out.push(fewer);
+        }
+        if self.blocks > self.workers {
+            out.push(KillPlan { blocks: self.blocks - 1, ..self.clone() });
+        }
+        out
+    }
+}
+
+fn prop_cfg() -> PropConfig {
+    PropConfig { cases: 120, size: 40, seed: 0xfa17, max_shrink_steps: 80 }
+}
+
+#[test]
+fn reassignment_preserves_disjointness_and_completeness() {
+    // However many workers die, in whatever order: the surviving rotation
+    // still samples every block exactly once per round slot and visits
+    // every (worker, block) pair exactly once per iteration.
+    check_result::<KillPlan, _>(&prop_cfg(), "reassign-invariants", |p| {
+        let mut s = RotationSchedule::new(p.workers, p.blocks);
+        for (step, &k) in p.kills.iter().enumerate() {
+            s = s.reassign(&[k]).map_err(|e| format!("kill #{step}: {e}"))?;
+            if s.rounds_per_iteration() != p.blocks {
+                return Err(format!("kill #{step}: round count changed in {p:?}"));
+            }
+            for r in 0..s.rounds_per_iteration() {
+                if !s.round_is_disjoint(r) {
+                    return Err(format!("kill #{step}: round {r} collides in {p:?}"));
+                }
+            }
+            if !s.iteration_is_complete() {
+                return Err(format!("kill #{step}: iteration incomplete in {p:?}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn batched_reassignment_equals_sequential() {
+    // The iteration-boundary reaper removes several corpses in one
+    // `reassign` call; the periodic reaper removes them one at a time.
+    // Both must land on the same surviving schedule.
+    check_result::<KillPlan, _>(&prop_cfg(), "reassign-batch-vs-seq", |p| {
+        // Translate the sequential (current-numbering) kills into one
+        // pre-removal batch: a position shifts up by every earlier kill
+        // at or below it.
+        let mut original: Vec<usize> = (0..p.workers).collect();
+        let mut batch = Vec::new();
+        for &k in &p.kills {
+            batch.push(original.remove(k));
+        }
+        batch.sort_unstable();
+
+        let mut seq = RotationSchedule::new(p.workers, p.blocks);
+        for &k in &p.kills {
+            seq = seq.reassign(&[k]).map_err(|e| e.to_string())?;
+        }
+        let all = RotationSchedule::new(p.workers, p.blocks)
+            .reassign(&batch)
+            .map_err(|e| e.to_string())?;
+        if seq != all {
+            return Err(format!("batch {batch:?} != sequential {:?} in {p:?}", p.kills));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn handoff_inversion_survives_reassignment() {
+    // The pipelined prefetch chain relies on `consumer_of` inverting
+    // `block_for`; that has to keep holding on every reassigned schedule.
+    check_result::<KillPlan, _>(&prop_cfg(), "reassign-handoff", |p| {
+        let mut s = RotationSchedule::new(p.workers, p.blocks);
+        for &k in &p.kills {
+            s = s.reassign(&[k]).map_err(|e| e.to_string())?;
+        }
+        for r in 0..s.rounds_per_iteration() {
+            for w in 0..s.num_workers() {
+                let b = s.block_for(w, r);
+                if s.consumer_of(b, r) != Some(w) {
+                    return Err(format!("w={w} r={r}: inversion broke in {p:?}"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// A layout plus one kill mark `(victim, round)` inside the iteration.
+#[derive(Debug, Clone)]
+struct LimboCase {
+    workers: usize,
+    blocks: usize,
+    victim: usize,
+    round: usize,
+    grace: usize,
+}
+
+impl Arbitrary for LimboCase {
+    fn arbitrary(rng: &mut Pcg64, size: usize) -> Self {
+        let workers = 2 + rng.index(size.max(2));
+        let blocks = workers + rng.index(size.max(2));
+        LimboCase {
+            workers,
+            blocks,
+            victim: rng.index(workers),
+            round: rng.index(blocks),
+            grace: 1 + rng.index(4),
+        }
+    }
+
+    fn shrink(&self) -> Vec<Self> {
+        let mut out = Vec::new();
+        if self.workers > 2 {
+            out.push(LimboCase { workers: self.workers - 1, victim: 0, ..self.clone() });
+        }
+        if self.grace > 1 {
+            out.push(LimboCase { grace: self.grace - 1, ..self.clone() });
+        }
+        out
+    }
+}
+
+#[test]
+fn limbo_skip_rule_sidelines_exactly_the_stuck_chain() {
+    // Between the crash and the lease expiry the driver runs degraded
+    // rounds, skipping the dead position and whoever is scheduled to
+    // consume the stuck block. Mirror that rule in pure schedule math:
+    // the skipped set is at most {victim, one consumer}, and the workers
+    // still running hold pairwise-distinct blocks, none of them stuck.
+    check_result::<LimboCase, _>(&prop_cfg(), "limbo-skip-rule", |c| {
+        let s = RotationSchedule::new(c.workers, c.blocks);
+        let stuck = s.block_for(c.victim, c.round);
+        for r in c.round..(c.round + c.grace + 1) {
+            let r = r % s.rounds_per_iteration();
+            let skip: Vec<bool> = (0..c.workers)
+                .map(|i| i == c.victim || s.block_for(i, r) == stuck)
+                .collect();
+            if skip.iter().filter(|&&x| x).count() > 2 {
+                return Err(format!("round {r}: more than two sidelined in {c:?}"));
+            }
+            let mut held = Vec::new();
+            for (i, &sk) in skip.iter().enumerate() {
+                if sk {
+                    continue;
+                }
+                let b = s.block_for(i, r);
+                if b == stuck {
+                    return Err(format!("round {r}: worker {i} sampling the corpse's block"));
+                }
+                if held.contains(&b) {
+                    return Err(format!("round {r}: block {b} sampled twice in {c:?}"));
+                }
+                held.push(b);
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn parsed_scripts_round_trip_their_events() {
+    // The config-string surface and the builder surface must describe the
+    // same event stream mark for mark.
+    let parsed =
+        FaultScript::parse("kill@1.0:w1; stall@2.1:w0*0.5; drophome@3.2:m1").unwrap();
+    let built = FaultScript::new()
+        .kill_worker(1, 0, 1)
+        .stall_worker(2, 1, 0, 0.5)
+        .drop_shard_home(3, 2, 1);
+    for (iter, round) in [(0, 0), (1, 0), (2, 1), (3, 2), (4, 0)] {
+        assert_eq!(
+            parsed.events_at(iter, round),
+            built.events_at(iter, round),
+            "events diverge at ({iter}, {round})"
+        );
+    }
+    assert!(FaultScript::parse("").unwrap().is_empty());
+    assert!(FaultScript::parse("explode@1.0:w1").is_err(), "unknown verbs are rejected");
+}

@@ -1,0 +1,121 @@
+//! Serving under paging faults (ISSUE 6 satellite): an injected
+//! `read_block` I/O error must fail *only* the request that needed the
+//! block — as a typed `MpldaError::ReadFault` at the model layer and an
+//! error frame on the wire — while the TCP front end stays up, healthy
+//! blocks keep serving, and the same request succeeds once the fault
+//! clears.
+
+use mplda::config::ServeConfig;
+use mplda::engine::{BowDoc, InferOptions, Session, SessionBuilder};
+use mplda::error::MpldaError;
+use mplda::serve::{Client, Server};
+
+fn builder() -> SessionBuilder {
+    Session::builder()
+        .corpus_preset("tiny")
+        .topics(10)
+        .iterations(2)
+        .seed(41)
+        .workers(2)
+        .cluster_preset("custom")
+        .machines(2)
+}
+
+#[test]
+fn read_fault_is_typed_and_scoped_to_the_block() {
+    let mut s = builder().build().unwrap();
+    s.train().unwrap();
+    let model = s.freeze_sharded().unwrap();
+
+    // One word per side of the fault line: a word in block 0 and a word
+    // in any other block.
+    let in_faulted = (0..model.num_words() as u32)
+        .find(|&w| model.block_of(w) == 0)
+        .expect("block 0 owns some word");
+    let in_healthy = (0..model.num_words() as u32)
+        .find(|&w| model.block_of(w) != 0)
+        .expect("more than one block");
+    let opts = InferOptions { iterations: 3, seed: 5, threads: 1 };
+
+    model.store().inject_read_fault(0, 1_000);
+
+    // The request that needs block 0 fails with the typed fault...
+    let err = model
+        .infer_with(&[BowDoc::new(vec![in_faulted])], &opts)
+        .map(|_| ())
+        .expect_err("paging a faulted block must fail the request");
+    match err.downcast_ref::<MpldaError>() {
+        Some(&MpldaError::ReadFault { block }) => assert_eq!(block, 0),
+        other => panic!("expected ReadFault, got {other:?} in {err:#}"),
+    }
+
+    // ...while a request over healthy blocks sails through.
+    model
+        .infer_with(&[BowDoc::new(vec![in_healthy])], &opts)
+        .expect("healthy blocks must keep serving");
+
+    // The fault clears; the originally doomed request now succeeds.
+    model.store().clear_read_faults();
+    model
+        .infer_with(&[BowDoc::new(vec![in_faulted])], &opts)
+        .expect("the same request succeeds once the fault clears");
+}
+
+#[test]
+fn tcp_server_survives_paging_faults() {
+    // Offline oracle for the post-recovery answer.
+    let mut oracle_s = builder().build().unwrap();
+    oracle_s.train().unwrap();
+    let oracle = oracle_s.freeze().unwrap();
+
+    let mut server_s = builder().build().unwrap();
+    server_s.train().unwrap();
+    let model = server_s.freeze_sharded().unwrap();
+
+    let cfg = ServeConfig {
+        port: 0,
+        threads: 2,
+        cache_budget_mib: 0.05,
+        max_batch: 8,
+        max_wait_ms: 1,
+        iterations: 4,
+    };
+    let server = Server::serve(model, &cfg).unwrap();
+    let addr = server.addr();
+    let mut client = Client::connect(addr).unwrap();
+    client.ping().unwrap();
+
+    // Fault every block before anything is cached: the next fold-in
+    // cannot page and must come back as an error frame.
+    let store = server.model().store();
+    for id in 0..server.model().num_blocks() as u32 {
+        store.inject_read_fault(id, 1_000);
+    }
+    let queries: Vec<Vec<u32>> = vec![vec![0, 1, 2, 3], vec![5, 5, 9]];
+    let err = client.infer(&queries, 42, 4).expect_err("faulted paging must report");
+    let msg = format!("{err:#}");
+    assert!(msg.contains("server error"), "wire errors are error frames: {msg}");
+    assert!(msg.contains("paging block"), "the frame names the fault: {msg}");
+
+    // The failure was scoped to that request: the same connection still
+    // pings, and fresh connections are accepted.
+    client.ping().unwrap();
+    let mut second = Client::connect(addr).unwrap();
+    second.ping().unwrap();
+
+    // Fault gone → the identical request succeeds and matches the
+    // offline oracle exactly.
+    server.model().store().clear_read_faults();
+    let served = client.infer(&queries, 42, 4).unwrap();
+    let docs: Vec<BowDoc> = queries.iter().map(|q| BowDoc::new(q.clone())).collect();
+    let opts = InferOptions { iterations: 4, seed: 42, threads: 1 };
+    let folded = oracle.infer_with(&docs, &opts).unwrap();
+    let expect: Vec<Vec<(u32, u32)>> =
+        (0..folded.len()).map(|d| folded.counts(d).iter().collect()).collect();
+    assert_eq!(served, expect, "recovery must serve the exact oracle counts");
+
+    client.shutdown().unwrap();
+    drop(client);
+    drop(second);
+    server.join();
+}
