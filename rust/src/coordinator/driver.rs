@@ -835,6 +835,17 @@ impl Driver {
         }
         self.schedule = self.schedule.reassign(&positions)?;
 
+        // Overlapping kills: a corpse whose lease has not expired yet is
+        // still pending in `self.dead`, and its recorded position is in
+        // the pre-removal numbering. Shift it past the removals so the
+        // later reap (skip mask, rotation removal) targets the corpse and
+        // not whichever survivor inherited its old index. (A pending
+        // position can never itself be removed here: each dead worker has
+        // exactly one entry, taken out of `self.dead` before removal.)
+        for d in &mut self.dead {
+            d.position -= positions.iter().filter(|&&p| p < d.position).count();
+        }
+
         // Orphaned docs go to the next surviving position, cyclically in
         // the pre-removal numbering.
         let p_old = self.workers.len();

@@ -16,6 +16,12 @@
 //!   budget is served *uncached* (a bypass). `MemCategory::ServeCache`
 //!   under the standard [`MemoryAccountant`] witnesses the bound — its
 //!   peak can never exceed the budget.
+//! * Each request's working set is **pinned** for the request's
+//!   duration: the fallible pre-pass returns the `Arc`s it paged, row
+//!   visits answer from that pinned set, and the sampling path performs
+//!   no store reads at all — so a store fault can only fail the pre-pass
+//!   (a typed request error), never panic mid-batch, even when the
+//!   working set exceeds the budget and the cache evicts it.
 //! * A model larger than the cache therefore still serves **correctly,
 //!   just slower** — and bitwise identically: the fold-in arithmetic is
 //!   the same `engine::infer` fold-in core the offline
@@ -104,15 +110,29 @@ pub struct ShardedTopicModel {
     cache: Mutex<BlockCache>,
 }
 
-impl RowSource for ShardedTopicModel {
+/// One request's working set, pinned for the request's whole duration:
+/// every block its documents touch, held by `Arc` from the fallible
+/// [`ShardedTopicModel::pin`] pre-pass. Row visits answer from this set
+/// and never go back to the store or the cache — so later LRU evictions
+/// (a working set larger than the budget evicts its own pre-passed
+/// blocks), over-budget bypasses, and store faults injected mid-request
+/// cannot reach the sampling path. The only fallible store reads happen
+/// in the pre-pass, where they fail the request with a typed error.
+struct PinnedBlocks<'a> {
+    map: &'a BlockMap,
+    num_words: usize,
+    blocks: BTreeMap<u32, Arc<ModelBlock>>,
+}
+
+impl RowSource for PinnedBlocks<'_> {
     fn with_row(&self, w: u32, f: &mut dyn FnMut(&SparseRow)) {
-        // The fold-in entry points page every needed block in a fallible
-        // pre-pass before sampling starts, so a store fault surfaces as a
-        // typed request error there — by the time rows are visited the
-        // block is cached (or the store is healthy again).
         let block = self
-            .block(self.map.block_of(w) as u32)
-            .expect("block paged by the fold-in pre-pass; the store read cannot fault here");
+            .blocks
+            .get(&(self.map.block_of(w) as u32))
+            // Unreachable via store state: the pre-pass pinned the block
+            // of every in-vocabulary word in the request's documents, and
+            // out-of-vocabulary words are rejected before sampling.
+            .expect("word outside the request's pinned working set");
         f(block.row(w));
     }
 
@@ -298,15 +318,20 @@ impl ShardedTopicModel {
         Ok(arc)
     }
 
-    /// Fallibly page in every block `docs` will touch — the pre-pass each
-    /// fold-in entry point runs so a store fault fails the *request* with
-    /// a typed error before any sampling work starts, instead of
-    /// panicking mid-batch inside a row visit.
-    fn page_in(&self, docs: &[BowDoc]) -> Result<()> {
+    /// Fallibly page in and **pin** every block `docs` will touch — the
+    /// pre-pass each fold-in entry point runs. A store fault fails the
+    /// *request* with a typed error before any sampling work starts, and
+    /// the returned [`PinnedBlocks`] keeps the working set alive for the
+    /// request even if the cache evicts (or never admitted) some of it —
+    /// the sampling path performs no store reads at all.
+    fn pin(&self, docs: &[BowDoc]) -> Result<PinnedBlocks<'_>> {
+        let mut blocks = BTreeMap::new();
         for id in self.blocks_of(docs) {
-            self.block(id).with_context(|| format!("paging block {id} for fold-in"))?;
+            let block =
+                self.block(id).with_context(|| format!("paging block {id} for fold-in"))?;
+            blocks.insert(id, block);
         }
-        Ok(())
+        Ok(PinnedBlocks { map: &self.map, num_words: self.num_words, blocks })
     }
 
     /// The backing block store — the serve fault-injection tests reach
@@ -374,8 +399,8 @@ impl ShardedTopicModel {
     /// count: per-document RNG streams are keyed by batch position, and
     /// paging changes only when rows are fetched, never their contents.
     pub fn infer_with(&self, docs: &[BowDoc], opts: &InferOptions) -> Result<DocTopics> {
-        self.page_in(docs)?;
-        infer_batch(&self.stats, self, docs, opts)
+        let pinned = self.pin(docs)?;
+        infer_batch(&self.stats, &pinned, docs, opts)
     }
 
     /// [`ShardedTopicModel::infer_with`] reusing caller-held scratches
@@ -386,8 +411,8 @@ impl ShardedTopicModel {
         opts: &InferOptions,
         scratches: &mut [Scratch],
     ) -> Result<DocTopics> {
-        self.page_in(docs)?;
-        infer_batch_reusing(&self.stats, self, docs, opts.iterations, opts.seed, scratches)
+        let pinned = self.pin(docs)?;
+        infer_batch_reusing(&self.stats, &pinned, docs, opts.iterations, opts.seed, scratches)
     }
 
     /// Serve one *request*: fold in its documents on RNG streams keyed by
@@ -402,8 +427,15 @@ impl ShardedTopicModel {
         iterations: usize,
         scratch: &mut Scratch,
     ) -> Result<DocTopics> {
-        self.page_in(docs)?;
-        infer_batch_reusing(&self.stats, self, docs, iterations, seed, std::slice::from_mut(scratch))
+        let pinned = self.pin(docs)?;
+        infer_batch_reusing(
+            &self.stats,
+            &pinned,
+            docs,
+            iterations,
+            seed,
+            std::slice::from_mut(scratch),
+        )
     }
 }
 
@@ -440,16 +472,55 @@ mod tests {
         let m = ShardedTopicModel::from_table(&wt, ck, params, 6, 0.0).unwrap();
         assert_eq!(m.num_blocks(), 6);
         assert_eq!(m.num_words(), 60);
-        // Every word's row matches the dense table through the pager.
+        // Every word's row matches the dense table through the pinned view.
+        let all = BowDoc::new((0..60).collect());
+        let pinned = m.pin(std::slice::from_ref(&all)).unwrap();
         for w in 0..60u32 {
-            m.with_row(w, &mut |row| assert_eq!(row, wt.row(w as usize), "word {w}"));
+            pinned.with_row(w, &mut |row| assert_eq!(row, wt.row(w as usize), "word {w}"));
         }
         let s = m.cache_stats();
         assert_eq!(s.misses, 6, "each block paged once");
-        assert_eq!(s.hits, 54);
+        assert_eq!(s.hits, 0, "row visits never touch the cache");
         assert_eq!(s.resident_blocks, 6);
         assert_eq!(s.evictions, 0);
-        assert!(s.hit_rate() > 0.8);
+        // A second pin of the same working set runs hit-only.
+        m.pin(std::slice::from_ref(&all)).unwrap();
+        let s = m.cache_stats();
+        assert_eq!(s.misses, 6);
+        assert_eq!(s.hits, 6);
+        assert!(s.hit_rate() >= 0.5);
+    }
+
+    #[test]
+    fn working_set_stays_pinned_across_its_own_evictions() {
+        // Budget fits ~2 of 8 blocks while one request touches all 8: the
+        // pre-pass evicts its own earlier pins as it pages. The pinned
+        // `Arc`s must keep answering row visits — the sampling path never
+        // goes back to the store, so the request's store-read count is
+        // exactly the block count (pre-pass only).
+        let (wt, ck, params) = table(120, 8, 4);
+        let full = ShardedTopicModel::from_table(&wt, ck.clone(), params, 8, 0.0).unwrap();
+        let per_block = full.max_block_bytes();
+        let budget_mib = (per_block * 2) as f64 / (1u64 << 20) as f64;
+        let m = ShardedTopicModel::from_table(&wt, ck, params, 8, budget_mib).unwrap();
+        let qs = docs(120, 10, 60, 21);
+        let wanted = m.blocks_of(&qs).len() as u64;
+        assert_eq!(wanted, 8, "the request must touch every block");
+        let folded = m.infer(&qs).unwrap();
+        assert_eq!(folded.len(), 10);
+        let s = m.cache_stats();
+        assert!(s.evictions > 0, "the pre-pass must evict under this budget");
+        assert_eq!(
+            s.misses + s.bypasses,
+            wanted,
+            "row visits must be answered by the pinned set, not fresh store reads"
+        );
+        assert!(
+            s.peak_bytes <= s.budget_bytes,
+            "ServeCache peak {} exceeded budget {}",
+            s.peak_bytes,
+            s.budget_bytes
+        );
     }
 
     #[test]

@@ -177,6 +177,48 @@ fn fault_scripts_can_be_installed_programmatically() {
 }
 
 #[test]
+fn overlapping_kills_with_staggered_lease_expiry_reap_the_right_corpses() {
+    // Two kills in the SAME iteration whose leases expire at different
+    // rounds: w1 dies at round 0 (its lease expires at the round-2 reap),
+    // w5 at round 1 (expires at round 3). The first reap renumbers the
+    // rotation while w5's corpse is still pending in the dead list, so
+    // its recorded position must be remapped (5 → 4) — otherwise the
+    // second reap aims at a rotation slot that no longer exists (or, for
+    // interior positions, at whichever survivor inherited the index).
+    let b = || {
+        Session::builder()
+            .corpus_preset("tiny")
+            .topics(12)
+            .sampler(SamplerKind::InvertedXy)
+            .seed(13)
+            .workers(6)
+            .blocks(6)
+            .cluster_preset("custom")
+            .machines(6)
+            .configure(|cfg| cfg.corpus.seed = 29)
+    };
+    for (tag, execution) in [
+        ("simulated", Execution::Simulated),
+        ("pipelined", Execution::Pipelined { parallelism: 3, staging_budget_mib: 0.0 }),
+    ] {
+        let (clean, clean_workers, _) = run(b(), execution, 6);
+        assert_eq!(clean_workers, 6, "{tag}: healthy run keeps every worker");
+        let (faulted, survivors, _) = run(
+            b().fault_script("kill@1.0:w1; kill@1.1:w5").lease_timeout_rounds(1),
+            execution,
+            6,
+        );
+        assert_eq!(survivors, 4, "{tag}: both corpses reaped, every survivor kept");
+        let (g_clean, g_fault) = (gain(&clean), gain(&faulted));
+        assert!(g_clean > 0.0, "{tag}: clean run must improve ({g_clean})");
+        assert!(
+            g_fault > 0.5 * g_clean,
+            "{tag}: faulted run fell off the trajectory: gain {g_fault} vs clean {g_clean}"
+        );
+    }
+}
+
+#[test]
 fn two_workers_can_die_in_different_iterations() {
     // Sequential failures: the rotation reassigns twice, documents adopt
     // twice, and the run still converges on the single survivor... of the
