@@ -7,6 +7,6 @@ pub mod schema;
 
 pub use schema::{
     BaselineConfig, BlockLayout, CkSyncPolicy, ClusterConfig, Config, CoordConfig, CorpusConfig,
-    ExecutionMode, OutputConfig, PipelineMode, RuntimeConfig, SamplerKind, ServeConfig,
-    TrainConfig,
+    DistConfig, ExecutionMode, OutputConfig, PipelineMode, RuntimeConfig, SamplerKind,
+    ServeConfig, TrainConfig,
 };

@@ -186,6 +186,14 @@ pub enum ExecutionMode {
     /// requires the `inverted-xy` sampler (the XLA executor is a single
     /// shared device handle and stays on the driver thread).
     Threaded,
+    /// Run workers as separate OS **processes** speaking the
+    /// length-prefixed JSON protocol over TCP (`distributed::master` /
+    /// `mplda worker`). The master owns the rotation, the KV-store and
+    /// the iteration loop; worker processes run the sampler kernel on
+    /// shipped task state. Same model state bit-for-bit as `Simulated`
+    /// from the same seed (`tests/distributed_determinism.rs`); see the
+    /// `[dist]` section for listen address and process count.
+    Distributed,
 }
 
 impl ExecutionMode {
@@ -193,7 +201,8 @@ impl ExecutionMode {
         Ok(match s {
             "simulated" | "sim" => ExecutionMode::Simulated,
             "threaded" | "threads" => ExecutionMode::Threaded,
-            other => bail!("unknown execution mode {other:?} (simulated|threaded)"),
+            "distributed" | "dist" => ExecutionMode::Distributed,
+            other => bail!("unknown execution mode {other:?} (simulated|threaded|distributed)"),
         })
     }
 
@@ -201,6 +210,7 @@ impl ExecutionMode {
         match self {
             ExecutionMode::Simulated => "simulated",
             ExecutionMode::Threaded => "threaded",
+            ExecutionMode::Distributed => "distributed",
         }
     }
 }
@@ -467,6 +477,32 @@ impl Default for ServeConfig {
     }
 }
 
+/// Distributed training transport knobs (`coord.execution =
+/// "distributed"`, `mplda master` / `mplda worker`).
+#[derive(Debug, Clone)]
+pub struct DistConfig {
+    /// Address the master binds for worker registration,
+    /// `host:port` (`port 0` = OS-assigned ephemeral, printed at
+    /// startup — what the loopback determinism test uses).
+    pub listen: String,
+    /// Worker **processes** the master waits for before the first round;
+    /// `0` (default) ⇒ one per rotation position (`coord.workers`),
+    /// resolved by `finalize()`. Fewer processes than positions is legal:
+    /// positions are dealt round-robin over the connected processes.
+    pub workers: usize,
+    /// Per-socket read timeout in seconds on the master side (`0` = block
+    /// forever). A worker that neither answers nor closes its socket
+    /// within this window counts as dead, feeding the lease-timeout
+    /// reassignment path instead of hanging the round.
+    pub io_timeout_secs: f64,
+}
+
+impl Default for DistConfig {
+    fn default() -> Self {
+        DistConfig { listen: "127.0.0.1:0".into(), workers: 0, io_timeout_secs: 30.0 }
+    }
+}
+
 /// PJRT/XLA runtime settings.
 #[derive(Debug, Clone)]
 pub struct RuntimeConfig {
@@ -504,6 +540,7 @@ pub struct Config {
     pub cluster: ClusterConfig,
     pub baseline: BaselineConfig,
     pub serve: ServeConfig,
+    pub dist: DistConfig,
     pub runtime: RuntimeConfig,
     pub output: OutputConfig,
 }
@@ -611,6 +648,9 @@ impl Config {
             "serve.max_batch" => self.serve.max_batch = u(value)?,
             "serve.max_wait_ms" => self.serve.max_wait_ms = u(value)? as u64,
             "serve.iterations" => self.serve.iterations = u(value)?,
+            "dist.listen" => self.dist.listen = s(value)?,
+            "dist.workers" => self.dist.workers = u(value)?,
+            "dist.io_timeout_secs" => self.dist.io_timeout_secs = f(value)?,
             "runtime.artifacts_dir" => self.runtime.artifacts_dir = s(value)?,
             "output.dir" => self.output.dir = s(value)?,
             "output.write_csv" => self.output.write_csv = b(value)?,
@@ -633,6 +673,9 @@ impl Config {
         }
         if self.coord.blocks == 0 {
             self.coord.blocks = self.coord.workers;
+        }
+        if self.dist.workers == 0 {
+            self.dist.workers = self.coord.workers;
         }
         self.validate()
     }
@@ -695,6 +738,17 @@ impl Config {
         }
         if self.serve.iterations == 0 {
             bail!("serve.iterations must be >= 1");
+        }
+        if self.coord.execution == ExecutionMode::Distributed {
+            if self.coord.pipeline == PipelineMode::DoubleBuffer {
+                bail!(
+                    "coord.pipeline = \"double_buffer\" is a host-thread overlap; \
+                     it does not compose with coord.execution = \"distributed\""
+                );
+            }
+            if self.dist.io_timeout_secs < 0.0 {
+                bail!("dist.io_timeout_secs must be >= 0 (0 = block forever)");
+            }
         }
         Ok(())
     }

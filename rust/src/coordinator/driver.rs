@@ -376,9 +376,17 @@ impl Driver {
     }
 
     /// Canonical name of the execution backend selected at construction
-    /// (`"simulated"` | `"threaded"` | `"pipelined"`).
+    /// (`"simulated"` | `"threaded"` | `"pipelined"` | `"distributed"`).
     pub fn backend_name(&self) -> &'static str {
         self.backend.name()
+    }
+
+    /// The TCP address the distributed backend listens on for worker
+    /// processes; `None` for the in-process backends. Available as soon
+    /// as the driver is built (the listener binds at construction), so
+    /// callers can print it before training blocks on the handshake.
+    pub fn listen_addr(&self) -> Option<std::net::SocketAddr> {
+        self.backend.listen_addr()
     }
 
     /// Training log-likelihood from the current (quiescent) state.
@@ -574,6 +582,22 @@ impl Driver {
             };
             debug_assert_eq!(out.host_secs.len(), self.workers.len());
             debug_assert_eq!(out.fetch_times.len(), self.workers.len());
+
+            // ---- Worker-process deaths (distributed backend) -------------
+            // A vanished process left its lease out and uncommitted —
+            // exactly the state a scripted kill leaves — so it enters the
+            // same lease-timeout fault plane: fail fast when timeouts are
+            // disabled, otherwise queue for reaping.
+            for &(position, block) in &out.dead {
+                if self.cfg.coord.lease_timeout_rounds == 0 {
+                    return Err(MpldaError::LeaseTimeout { worker: position, block, round }.into());
+                }
+                log::warn!(
+                    "worker process at position {position} died in round {round} \
+                     (block {block} stranded); awaiting lease expiry"
+                );
+                self.dead.push(DeadWorker { position, block });
+            }
             tokens += out.tokens;
             host_secs_total += out.host_secs.iter().sum::<f64>();
             let host_secs = out.host_secs;

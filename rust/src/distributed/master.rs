@@ -1,0 +1,377 @@
+//! The master side: a [`Backend`] whose compute phase happens in other
+//! processes.
+//!
+//! ## Determinism argument (summarized in DESIGN.md §Distributed)
+//!
+//! The backend contract fixes everything except *where* the sampling
+//! kernel runs. This backend keeps the lease phase, the commit phase and
+//! the `C_k` merge order byte-identical to [`SimulatedBackend`]'s
+//! (`lease_blocks_sync` + the worker-ordered commit loop below); the
+//! sampling phase ships each position's full working set — leased block,
+//! `C_k` snapshot, RNG stream position, assignments and live-order
+//! doc–topic entries — to a worker process, which runs the *same*
+//! `WorkerState::run_round` lifecycle on the *same* bytes and ships every
+//! mutated structure back. Nothing about the computation depends on which
+//! process hosts it, so the model trajectory is bitwise equal to the
+//! simulated one from the same seed; only wall-clock measurements (which
+//! never touch model state) differ.
+//!
+//! ## Fault path
+//!
+//! A worker process that dies mid-round takes its socket with it; the
+//! send or receive for its positions fails and those positions come back
+//! in [`RoundOutcome::dead`]. Their leases are already out (taken in the
+//! lease phase) and stay uncommitted — exactly the state a scripted
+//! `kill@` fault leaves — so the driver's PR-6 machinery (grace rounds,
+//! lease revocation from the recovery copy, rotation reassignment, shard
+//! adoption) handles the rest without knowing sockets exist.
+//!
+//! [`SimulatedBackend`]: crate::engine::backend::SimulatedBackend
+
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+use crate::cluster::{Flow, MemCategory};
+use crate::config::{Config, SamplerKind};
+use crate::engine::backend::{lease_blocks_sync, Backend, RoundCtx, RoundOutcome};
+use crate::kvstore::traffic::TransferKind;
+use crate::model::checkpoint::corpus_fingerprint;
+use crate::model::{wire as codec, SparseCounts};
+use crate::serve::wire::{read_frame, write_frame};
+use crate::util::rng::Pcg64;
+
+use super::protocol::{InitMsg, Message, ResultMsg, TaskMsg};
+
+/// How long the first round waits for the full worker roster to connect
+/// and complete the handshake before giving up.
+const HANDSHAKE_WAIT: Duration = Duration::from_secs(120);
+
+/// One registered worker process.
+struct WorkerConn {
+    stream: TcpStream,
+}
+
+impl WorkerConn {
+    fn send(&mut self, msg: &Message) -> Result<()> {
+        write_frame(&mut self.stream, &msg.to_json())
+    }
+
+    fn recv(&mut self) -> Result<Message> {
+        match read_frame(&mut self.stream)? {
+            Some(j) => Message::from_json(&j),
+            None => bail!("worker closed its connection"),
+        }
+    }
+}
+
+/// The `coord.execution = "distributed"` backend: master-side transport
+/// plus the lease/commit halves of the round. Binds its listener eagerly
+/// at construction (so `Driver::listen_addr` is known before training
+/// starts) and completes the worker handshake lazily on the first round
+/// (the corpus fingerprint it must verify lives on the driver).
+pub struct DistributedBackend {
+    listener: TcpListener,
+    addr: SocketAddr,
+    expected: usize,
+    io_timeout: Option<Duration>,
+    init: InitMsg,
+    conns: Vec<WorkerConn>,
+    handshook: bool,
+}
+
+impl DistributedBackend {
+    /// Bind the listen address from `cfg.dist` and capture the handshake
+    /// payload. No worker needs to be running yet.
+    pub fn new(cfg: &Config) -> Result<DistributedBackend> {
+        if cfg.dist.workers == 0 {
+            bail!("dist.workers must be >= 1 (finalize() resolves 0 to coord.workers)");
+        }
+        let listener = TcpListener::bind(&cfg.dist.listen)
+            .with_context(|| format!("binding master listener on {:?}", cfg.dist.listen))?;
+        let addr = listener.local_addr().context("reading master listen address")?;
+        let io_timeout = if cfg.dist.io_timeout_secs > 0.0 {
+            Some(Duration::from_secs_f64(cfg.dist.io_timeout_secs))
+        } else {
+            None
+        };
+        let init = InitMsg {
+            corpus: cfg.corpus.clone(),
+            topics: cfg.train.topics,
+            alpha: cfg.train.alpha,
+            beta: cfg.train.beta,
+            sampler: cfg.train.sampler,
+            alias_budget_bytes: (cfg.train.alias_budget_mib * (1u64 << 20) as f64).round() as u64,
+            corpus_fp: 0, // filled at handshake, when the corpus exists
+        };
+        Ok(DistributedBackend {
+            listener,
+            addr,
+            expected: cfg.dist.workers,
+            io_timeout,
+            init,
+            conns: Vec::new(),
+            handshook: false,
+        })
+    }
+
+    /// Accept `expected` connections and run the register→init→ready
+    /// handshake on each, verifying every worker rebuilt the identical
+    /// corpus.
+    fn handshake(&mut self, corpus_fp: u64) -> Result<()> {
+        self.init.corpus_fp = corpus_fp;
+        self.listener
+            .set_nonblocking(true)
+            .context("switching master listener to polling")?;
+        let deadline = Instant::now() + HANDSHAKE_WAIT;
+        while self.conns.len() < self.expected {
+            match self.listener.accept() {
+                Ok((stream, _peer)) => {
+                    stream.set_nonblocking(false).context("configuring worker socket")?;
+                    stream.set_nodelay(true).context("configuring worker socket")?;
+                    stream
+                        .set_read_timeout(self.io_timeout)
+                        .context("configuring worker socket")?;
+                    self.conns.push(WorkerConn { stream });
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    if Instant::now() > deadline {
+                        bail!(
+                            "timed out waiting for workers: {} of {} connected within {:?} \
+                             — start them with `mplda worker --connect {}`",
+                            self.conns.len(),
+                            self.expected,
+                            HANDSHAKE_WAIT,
+                            self.addr
+                        );
+                    }
+                    std::thread::sleep(Duration::from_millis(5));
+                }
+                Err(e) => return Err(e).context("accepting worker connection"),
+            }
+        }
+        self.listener.set_nonblocking(false).context("restoring master listener")?;
+        for (i, conn) in self.conns.iter_mut().enumerate() {
+            match conn.recv().with_context(|| format!("worker {i} handshake"))? {
+                Message::Register => {}
+                other => bail!("worker {i}: expected register, got {:?}", other.kind()),
+            }
+            conn.send(&Message::Init(self.init.clone()))
+                .with_context(|| format!("sending init to worker {i}"))?;
+            match conn.recv().with_context(|| format!("worker {i} handshake"))? {
+                Message::Ready { corpus_fp: fp } if fp == corpus_fp => {}
+                Message::Ready { corpus_fp: fp } => bail!(
+                    "worker {i} rebuilt a different corpus (fingerprint {fp:#x}, \
+                     master has {corpus_fp:#x}) — config drift between processes"
+                ),
+                other => bail!("worker {i}: expected ready, got {:?}", other.kind()),
+            }
+        }
+        log::info!("distributed: {} workers registered on {}", self.conns.len(), self.addr);
+        Ok(())
+    }
+}
+
+/// Build one position's task message from the master's authoritative
+/// state.
+fn build_task(ctx: &RoundCtx<'_>, position: usize, block: &crate::model::ModelBlock) -> TaskMsg {
+    let w = &ctx.workers[position];
+    let z = w.docs.iter().map(|&d| ctx.z[d as usize].clone()).collect();
+    let dt = w.docs.iter().map(|&d| ctx.dt.doc(d as usize).iter().collect()).collect();
+    TaskMsg {
+        position,
+        round: ctx.round,
+        block: codec::encode_block(block),
+        ck: codec::encode_totals(&w.ck),
+        rng: w.rng.to_raw(),
+        docs: w.docs.clone(),
+        z,
+        dt,
+    }
+}
+
+/// Splice one result back into the master's state, exactly where a local
+/// round would have left it.
+fn apply_result(ctx: &mut RoundCtx<'_>, r: &ResultMsg) -> Result<crate::model::ModelBlock> {
+    let w = &mut ctx.workers[r.position];
+    if r.z.len() != w.docs.len() || r.dt.len() != w.docs.len() {
+        bail!(
+            "worker result for position {} covers {} z rows / {} dt rows, shard has {} docs",
+            r.position,
+            r.z.len(),
+            r.dt.len(),
+            w.docs.len()
+        );
+    }
+    let ck = codec::decode_totals(&r.ck).context("decoding result C_k")?;
+    if ck.num_topics() != ctx.params.num_topics {
+        bail!(
+            "worker result C_k has {} topics, model has {}",
+            ck.num_topics(),
+            ctx.params.num_topics
+        );
+    }
+    let block = codec::decode_block(&r.block).context("decoding result block")?;
+    w.rng = Pcg64::from_raw(r.rng.0, r.rng.1);
+    w.ck = ck;
+    w.tokens_sampled += r.tokens;
+    for ((&d, z_row), dt_row) in w.docs.iter().zip(&r.z).zip(&r.dt) {
+        ctx.z[d as usize] = z_row.clone();
+        // Live order ships verbatim: the samplers' bucket-walk and FP
+        // summation order depend on it (same contract as bitwise resume).
+        *ctx.dt.doc_mut(d as usize) = SparseCounts::from_ordered_entries(dt_row.clone());
+    }
+    Ok(block)
+}
+
+impl Backend for DistributedBackend {
+    fn name(&self) -> &'static str {
+        "distributed"
+    }
+
+    fn listen_addr(&self) -> Option<SocketAddr> {
+        Some(self.addr)
+    }
+
+    fn run_round(&mut self, ctx: &mut RoundCtx<'_>) -> Result<RoundOutcome> {
+        if ctx.sampler == SamplerKind::Xla {
+            bail!("distributed execution requires a CPU sampler kernel (worker processes \
+                   cannot share the device executor)");
+        }
+        if !self.handshook {
+            self.handshake(corpus_fingerprint(ctx.corpus))?;
+            self.handshook = true;
+        }
+        if self.conns.is_empty() {
+            bail!("every worker process has disconnected; cannot run the round");
+        }
+        let n = ctx.workers.len();
+        let (mut leased, fetch_times) = lease_blocks_sync(ctx)?;
+        let leased_ids: Vec<u32> = leased.iter().map(|b| b.id).collect();
+
+        // ---- Compute phase, remote -----------------------------------
+        // Positions are dealt round-robin over the live connections and
+        // exchanged one wave at a time (send a task to every connection,
+        // then collect every result), so each socket holds at most one
+        // in-flight task — no unbounded buffering, strict request/reply.
+        // A socket failure marks the connection dead; its remaining
+        // positions simply never produce results.
+        let t_compute = Instant::now();
+        let nc = self.conns.len();
+        let mut per_conn: Vec<Vec<usize>> = vec![Vec::new(); nc];
+        for i in 0..n {
+            per_conn[i % nc].push(i);
+        }
+        let waves = per_conn.iter().map(Vec::len).max().unwrap_or(0);
+        let mut conn_ok = vec![true; nc];
+        let mut results: Vec<Option<ResultMsg>> = (0..n).map(|_| None).collect();
+        for wave in 0..waves {
+            for (c, positions) in per_conn.iter().enumerate() {
+                let Some(&i) = positions.get(wave) else { continue };
+                if !conn_ok[c] {
+                    continue;
+                }
+                let task = Message::Task(build_task(ctx, i, &leased[i]));
+                if let Err(e) = self.conns[c].send(&task) {
+                    log::warn!("distributed: worker conn {c} failed on send: {e:#}");
+                    conn_ok[c] = false;
+                }
+            }
+            for (c, positions) in per_conn.iter().enumerate() {
+                let Some(&i) = positions.get(wave) else { continue };
+                if !conn_ok[c] {
+                    continue;
+                }
+                match self.conns[c].recv() {
+                    Ok(Message::Result(r)) if r.position == i => results[i] = Some(r),
+                    Ok(Message::Result(r)) => {
+                        bail!("worker answered position {} for a task at position {i}", r.position)
+                    }
+                    Ok(other) => {
+                        bail!("expected a result frame, got {:?}", other.kind())
+                    }
+                    Err(e) => {
+                        log::warn!("distributed: worker conn {c} failed on receive: {e:#}");
+                        conn_ok[c] = false;
+                    }
+                }
+            }
+        }
+
+        // ---- Apply results, position order ---------------------------
+        let mut tokens = 0u64;
+        let mut host_secs = vec![0.0f64; n];
+        for i in 0..n {
+            if let Some(r) = results[i].take() {
+                let block = apply_result(ctx, &r)?;
+                if block.id != leased_ids[i] {
+                    bail!("worker returned block {} for leased block {}", block.id, leased_ids[i]);
+                }
+                leased[i] = block;
+                host_secs[i] = r.host_secs;
+                tokens += r.tokens;
+                results[i] = Some(r);
+            }
+        }
+        ctx.pstats.sample_secs += t_compute.elapsed().as_secs_f64();
+
+        // ---- Commit phase, worker order (skipping corpses) -----------
+        // Byte-identical to `commit_blocks_sync` for the healthy
+        // positions; a corpse's lease stays out (uncommitted — the state
+        // a crash leaves) and only its memory charge is returned.
+        let t_flush = Instant::now();
+        let mut dead: Vec<(usize, u32)> = Vec::new();
+        let mut merge_bytes_per_worker = 0u64;
+        for (i, (w, blk)) in ctx.workers.iter_mut().zip(leased).enumerate() {
+            ctx.mem.release(w.machine, MemCategory::Model, blk.bytes());
+            if results[i].is_none() {
+                dead.push((i, leased_ids[i]));
+                continue;
+            }
+            let alias = blk.alias_bytes();
+            if alias > 0 {
+                ctx.mem.release(w.machine, MemCategory::AliasCache, alias);
+            }
+            ctx.kv.commit_block(blk, w.machine)?;
+            let before = ctx.kv.total_bytes();
+            let delta = w.extract_totals_delta();
+            ctx.kv.merge_totals_delta(&delta, w.machine);
+            merge_bytes_per_worker = ctx.kv.total_bytes() - before;
+        }
+        let commit_flows: Vec<Flow> = ctx
+            .kv
+            .pending_transfers()
+            .iter()
+            .filter(|t| t.what == TransferKind::BlockCommit)
+            .map(|t| Flow { src: t.src, dst: t.dst, bytes: t.bytes })
+            .collect();
+        let _ = ctx.kv.drain_flows();
+        let t_commit = ctx.net.phase_time(&commit_flows)
+            + ctx.net.reduce_time(merge_bytes_per_worker, ctx.workers.len());
+        ctx.pstats.flush_stall_secs += t_flush.elapsed().as_secs_f64();
+        ctx.pstats.rounds += 1;
+
+        // Forget broken connections; later rounds re-deal positions over
+        // the survivors.
+        let mut keep = conn_ok.iter();
+        self.conns.retain(|_| *keep.next().unwrap());
+
+        Ok(RoundOutcome { tokens, host_secs, fetch_times, t_commit, dead })
+    }
+}
+
+impl Drop for DistributedBackend {
+    fn drop(&mut self) {
+        // Best-effort orderly shutdown so worker processes exit instead
+        // of blocking on a read forever; failures are moot (the peer may
+        // already be gone).
+        for conn in &mut self.conns {
+            let _ = conn.stream.set_read_timeout(Some(Duration::from_secs(2)));
+            if conn.send(&Message::Shutdown).is_ok() {
+                let _ = conn.recv(); // Bye, or whatever is left
+            }
+            let _ = conn.stream.shutdown(std::net::Shutdown::Both);
+        }
+    }
+}

@@ -1,0 +1,34 @@
+//! Real multi-process master/worker training over TCP.
+//!
+//! The rest of the crate runs the paper's block-rotation protocol inside
+//! one process (`cluster::` simulates the machines). This module promotes
+//! the shard-home abstraction to actual OS processes: an `mplda master`
+//! owns the `RotationSchedule`, the `KvStore` and the iteration loop from
+//! `coordinator::driver`, while `mplda worker` peers register over TCP,
+//! receive per-round sampling tasks, run their `sampler::Kernel` locally,
+//! and push the results back — block leases, commit receipts,
+//! `TransferKind` metering and the lease-timeout fault plane all flow
+//! through the same driver code paths as the simulated backends.
+//!
+//! * [`protocol`] — the typed message vocabulary and its lossless JSON
+//!   codec (frames via [`crate::serve::wire`]).
+//! * [`master`] — [`master::DistributedBackend`], the fourth
+//!   [`crate::engine::Backend`]: selected by
+//!   `coord.execution = "distributed"`, it leases/commits against the
+//!   master's KV-store and delegates the sampling of each
+//!   `(position, round)` task to a connected worker process.
+//! * [`worker`] — the worker-process main loop behind `mplda worker`:
+//!   stateless compute that rebuilds the corpus from the master's recipe
+//!   and answers tasks until shutdown or EOF.
+//!
+//! **Correctness bar** (DESIGN.md §Distributed): a distributed run's
+//! `model_digest` and log-likelihood series are **bitwise equal** to the
+//! simulated backend's from the same seed, at any worker-process count —
+//! held by `tests/distributed_determinism.rs` at 1, 2 and 4 processes.
+
+pub mod master;
+pub mod protocol;
+pub mod worker;
+
+pub use master::DistributedBackend;
+pub use protocol::{InitMsg, Message, ResultMsg, TaskMsg};

@@ -1,0 +1,470 @@
+//! The master↔worker message vocabulary, as typed structs with lossless
+//! JSON codecs.
+//!
+//! Every message travels as one `serve::wire` frame (length-prefixed
+//! JSON, shared cap and typed framing errors). The conversation is a
+//! strict state machine per connection:
+//!
+//! ```text
+//!  worker                         master
+//!    │ ── register ──────────────► │   (once, at connect)
+//!    │ ◄────────────────── init ── │   corpus recipe + hyperparameters
+//!    │ ── ready{corpus_fp} ──────► │   fingerprints must agree
+//!    │                             │
+//!    │ ◄────────────────── task ── │ ┐ one per (position, round):
+//!    │ ── result ────────────────► │ ┘ full task state both ways
+//!    │          …                  │
+//!    │ ◄────────────── shutdown ── │
+//!    │ ── bye ───────────────────► │   then both sides close
+//! ```
+//!
+//! **Numbers on the wire.** `serve::json` renders `f64` and integers are
+//! exact only up to 2^53, so anything wider rides as a decimal *string*:
+//! the two `u128` halves of a PCG64 state, and the `u64` corpus
+//! fingerprint. Block and totals payloads reuse the binary checkpoint
+//! codec (`model::wire`, LEB128 + zigzag) hex-encoded into a JSON string
+//! — one codec for disk and socket, one set of validation errors.
+//!
+//! **Why ship full task state every round?** The master stays the single
+//! authority over `z`, `C_d^k`, worker RNG streams and `C_k` snapshots;
+//! workers are pure compute. A round's task therefore carries everything
+//! the sampler kernel reads, and its result carries everything the kernel
+//! wrote — which is what makes the distributed trajectory *bitwise* equal
+//! to the simulated one (the worker runs the identical
+//! `WorkerState::run_round` on identical inputs) and makes worker death
+//! recoverable by construction: a corpse holds no state the master does
+//! not already have, except the one uncommitted round the lease-timeout
+//! protocol is designed to sacrifice.
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::{CorpusConfig, SamplerKind};
+use crate::serve::json::Json;
+
+/// One protocol message, either direction. `Json`-codable losslessly;
+/// `tests/prop_protocol.rs` round-trips every variant through the wire.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Message {
+    /// Worker → master: first frame after connect.
+    Register,
+    /// Master → worker: everything needed to rebuild the shared world.
+    Init(InitMsg),
+    /// Worker → master: corpus rebuilt; `corpus_fp` proves it is the
+    /// same corpus bit for bit.
+    Ready {
+        /// `model::checkpoint::corpus_fingerprint` of the rebuilt corpus.
+        corpus_fp: u64,
+    },
+    /// Master → worker: one `(position, round)` sampling task.
+    Task(TaskMsg),
+    /// Worker → master: the completed task's full output state.
+    Result(ResultMsg),
+    /// Master → worker: training is over, close after `Bye`.
+    Shutdown,
+    /// Worker → master: acknowledges `Shutdown`; the socket closes next.
+    Bye,
+}
+
+/// The master's handshake payload: a *recipe* for the corpus (workers
+/// rebuild it locally — deterministic from its config — instead of
+/// streaming gigabytes of tokens) plus every hyperparameter the sampler
+/// kernel reads.
+#[derive(Debug, Clone, PartialEq)]
+pub struct InitMsg {
+    /// Corpus recipe; `corpus::build` is deterministic in it.
+    pub corpus: CorpusConfig,
+    /// Topic count `K`.
+    pub topics: usize,
+    /// Dirichlet hyperparameter α.
+    pub alpha: f64,
+    /// Dirichlet hyperparameter β.
+    pub beta: f64,
+    /// Sampler kernel every task runs.
+    pub sampler: SamplerKind,
+    /// `train.alias_budget_mib` in bytes (mh-alias proposal tables).
+    pub alias_budget_bytes: u64,
+    /// Master-side corpus fingerprint the worker must reproduce.
+    pub corpus_fp: u64,
+}
+
+/// One round's task for one rotation position: the leased block, the
+/// position's `C_k` snapshot and RNG stream, and the doc-shard state
+/// (assignments + live-order doc–topic entries, one row per doc of
+/// `docs`, in `docs` order).
+#[derive(Debug, Clone, PartialEq)]
+pub struct TaskMsg {
+    /// Rotation position this task computes.
+    pub position: usize,
+    /// Round index within the iteration (diagnostics only).
+    pub round: usize,
+    /// `model::wire::encode_block` bytes of the leased block.
+    pub block: Vec<u8>,
+    /// `model::wire::encode_totals` bytes of the position's `C_k`.
+    pub ck: Vec<u8>,
+    /// Raw PCG64 `(state, inc)` of the position's RNG stream.
+    pub rng: (u128, u128),
+    /// The position's document shard (global doc ids, sorted).
+    pub docs: Vec<u32>,
+    /// Topic assignments, one row per doc of `docs`, in order.
+    pub z: Vec<Vec<u32>>,
+    /// Doc–topic counts in **live storage order** (descending by count —
+    /// the samplers' walk order, so it must survive the trip verbatim),
+    /// one row per doc of `docs`.
+    pub dt: Vec<Vec<(u32, u32)>>,
+}
+
+/// A completed task: every piece of state the kernel mutated, shipped
+/// back so the master can splice it in as if it had sampled locally.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ResultMsg {
+    /// Rotation position this result answers.
+    pub position: usize,
+    /// Tokens sampled.
+    pub tokens: u64,
+    /// Thread CPU seconds the kernel took (drives the simulated clocks;
+    /// never model state).
+    pub host_secs: f64,
+    /// Updated block bytes (`model::wire::encode_block`).
+    pub block: Vec<u8>,
+    /// Updated `C_k` snapshot bytes.
+    pub ck: Vec<u8>,
+    /// RNG stream position after the round.
+    pub rng: (u128, u128),
+    /// Updated assignments, rows matching the task's `docs` order.
+    pub z: Vec<Vec<u32>>,
+    /// Updated doc–topic counts, live order, rows matching `docs`.
+    pub dt: Vec<Vec<(u32, u32)>>,
+}
+
+// ---------------------------------------------------------------------
+// Encoding helpers
+// ---------------------------------------------------------------------
+
+/// Hex-encode binary payload bytes for a JSON string field.
+pub fn hex_encode(bytes: &[u8]) -> String {
+    let mut s = String::with_capacity(bytes.len() * 2);
+    for b in bytes {
+        s.push(char::from_digit((b >> 4) as u32, 16).unwrap());
+        s.push(char::from_digit((b & 0xf) as u32, 16).unwrap());
+    }
+    s
+}
+
+/// Decode [`hex_encode`] output; typed errors on odd length or non-hex.
+pub fn hex_decode(s: &str) -> Result<Vec<u8>> {
+    if s.len() % 2 != 0 {
+        bail!("hex payload has odd length {}", s.len());
+    }
+    let digits = s.as_bytes();
+    let mut out = Vec::with_capacity(s.len() / 2);
+    for pair in digits.chunks_exact(2) {
+        let hi = (pair[0] as char).to_digit(16).context("non-hex byte in payload")?;
+        let lo = (pair[1] as char).to_digit(16).context("non-hex byte in payload")?;
+        out.push(((hi << 4) | lo) as u8);
+    }
+    Ok(out)
+}
+
+/// `u64` as a decimal JSON string (`Json::Num` is exact only to 2^53).
+fn u64_str(v: u64) -> Json {
+    Json::str(v.to_string())
+}
+
+fn get_u64_str(j: &Json, key: &str) -> Result<u64> {
+    j.get(key)
+        .and_then(Json::as_str)
+        .with_context(|| format!("missing string field {key:?}"))?
+        .parse::<u64>()
+        .with_context(|| format!("field {key:?} is not a u64"))
+}
+
+fn get_u128_pair(j: &Json, key: &str) -> Result<(u128, u128)> {
+    let arr = j
+        .get(key)
+        .and_then(Json::as_arr)
+        .with_context(|| format!("missing array field {key:?}"))?;
+    if arr.len() != 2 {
+        bail!("field {key:?} must be a [state, inc] pair, got {} entries", arr.len());
+    }
+    let part = |i: usize| -> Result<u128> {
+        arr[i]
+            .as_str()
+            .with_context(|| format!("field {key:?}[{i}] is not a string"))?
+            .parse::<u128>()
+            .with_context(|| format!("field {key:?}[{i}] is not a u128"))
+    };
+    Ok((part(0)?, part(1)?))
+}
+
+fn rng_json((state, inc): (u128, u128)) -> Json {
+    Json::Arr(vec![Json::str(state.to_string()), Json::str(inc.to_string())])
+}
+
+fn get_usize(j: &Json, key: &str) -> Result<usize> {
+    j.get(key)
+        .and_then(Json::as_u64)
+        .with_context(|| format!("missing integer field {key:?}"))
+        .map(|v| v as usize)
+}
+
+fn get_f64(j: &Json, key: &str) -> Result<f64> {
+    j.get(key)
+        .and_then(Json::as_f64)
+        .with_context(|| format!("missing number field {key:?}"))
+}
+
+fn get_str<'a>(j: &'a Json, key: &str) -> Result<&'a str> {
+    j.get(key)
+        .and_then(Json::as_str)
+        .with_context(|| format!("missing string field {key:?}"))
+}
+
+fn get_hex(j: &Json, key: &str) -> Result<Vec<u8>> {
+    hex_decode(get_str(j, key)?).with_context(|| format!("decoding hex field {key:?}"))
+}
+
+fn z_json(z: &[Vec<u32>]) -> Json {
+    Json::Arr(
+        z.iter()
+            .map(|row| Json::Arr(row.iter().map(|&t| Json::num(t as f64)).collect()))
+            .collect(),
+    )
+}
+
+fn get_z(j: &Json, key: &str) -> Result<Vec<Vec<u32>>> {
+    let rows = j
+        .get(key)
+        .and_then(Json::as_arr)
+        .with_context(|| format!("missing array field {key:?}"))?;
+    rows.iter()
+        .map(|row| {
+            row.as_arr()
+                .context("assignment row is not an array")?
+                .iter()
+                .map(|t| {
+                    let v = t.as_u64().context("assignment is not a non-negative integer")?;
+                    u32::try_from(v).context("assignment exceeds u32")
+                })
+                .collect()
+        })
+        .collect()
+}
+
+/// Doc–topic rows as flat `[t0,c0,t1,c1,…]` arrays — half the JSON nodes
+/// of nested pairs, and the flat order *is* the live storage order.
+fn dt_json(dt: &[Vec<(u32, u32)>]) -> Json {
+    Json::Arr(
+        dt.iter()
+            .map(|row| {
+                let mut flat = Vec::with_capacity(row.len() * 2);
+                for &(t, c) in row {
+                    flat.push(Json::num(t as f64));
+                    flat.push(Json::num(c as f64));
+                }
+                Json::Arr(flat)
+            })
+            .collect(),
+    )
+}
+
+fn get_dt(j: &Json, key: &str) -> Result<Vec<Vec<(u32, u32)>>> {
+    let rows = j
+        .get(key)
+        .and_then(Json::as_arr)
+        .with_context(|| format!("missing array field {key:?}"))?;
+    rows.iter()
+        .map(|row| {
+            let flat = row.as_arr().context("doc-topic row is not an array")?;
+            if flat.len() % 2 != 0 {
+                bail!("doc-topic row has odd length {}", flat.len());
+            }
+            flat.chunks_exact(2)
+                .map(|pair| {
+                    let t = pair[0].as_u64().context("doc-topic topic is not an integer")?;
+                    let c = pair[1].as_u64().context("doc-topic count is not an integer")?;
+                    Ok((
+                        u32::try_from(t).context("topic exceeds u32")?,
+                        u32::try_from(c).context("count exceeds u32")?,
+                    ))
+                })
+                .collect()
+        })
+        .collect()
+}
+
+impl Message {
+    /// The `"type"` tag this message carries on the wire.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            Message::Register => "register",
+            Message::Init(_) => "init",
+            Message::Ready { .. } => "ready",
+            Message::Task(_) => "task",
+            Message::Result(_) => "result",
+            Message::Shutdown => "shutdown",
+            Message::Bye => "bye",
+        }
+    }
+
+    /// Encode for one wire frame.
+    pub fn to_json(&self) -> Json {
+        let tag = ("type".to_string(), Json::str(self.kind()));
+        match self {
+            Message::Register | Message::Shutdown | Message::Bye => Json::Obj(vec![tag]),
+            Message::Ready { corpus_fp } => {
+                Json::Obj(vec![tag, ("corpus_fp".into(), u64_str(*corpus_fp))])
+            }
+            Message::Init(m) => Json::Obj(vec![
+                tag,
+                ("corpus_preset".into(), Json::str(&m.corpus.preset)),
+                ("corpus_vocab".into(), Json::num(m.corpus.vocab as f64)),
+                ("corpus_docs".into(), Json::num(m.corpus.docs as f64)),
+                ("corpus_avg_doc_len".into(), Json::num(m.corpus.avg_doc_len as f64)),
+                ("corpus_zipf_s".into(), Json::num(m.corpus.zipf_s)),
+                ("corpus_gen_topics".into(), Json::num(m.corpus.gen_topics as f64)),
+                ("corpus_gen_alpha".into(), Json::num(m.corpus.gen_alpha)),
+                ("corpus_gen_beta".into(), Json::num(m.corpus.gen_beta)),
+                ("corpus_bigram".into(), Json::Bool(m.corpus.bigram)),
+                ("corpus_path".into(), Json::str(&m.corpus.path)),
+                ("corpus_seed".into(), u64_str(m.corpus.seed)),
+                ("topics".into(), Json::num(m.topics as f64)),
+                ("alpha".into(), Json::num(m.alpha)),
+                ("beta".into(), Json::num(m.beta)),
+                ("sampler".into(), Json::str(m.sampler.name())),
+                ("alias_budget_bytes".into(), u64_str(m.alias_budget_bytes)),
+                ("corpus_fp".into(), u64_str(m.corpus_fp)),
+            ]),
+            Message::Task(m) => Json::Obj(vec![
+                tag,
+                ("position".into(), Json::num(m.position as f64)),
+                ("round".into(), Json::num(m.round as f64)),
+                ("block".into(), Json::str(hex_encode(&m.block))),
+                ("ck".into(), Json::str(hex_encode(&m.ck))),
+                ("rng".into(), rng_json(m.rng)),
+                (
+                    "docs".into(),
+                    Json::Arr(m.docs.iter().map(|&d| Json::num(d as f64)).collect()),
+                ),
+                ("z".into(), z_json(&m.z)),
+                ("dt".into(), dt_json(&m.dt)),
+            ]),
+            Message::Result(m) => Json::Obj(vec![
+                tag,
+                ("position".into(), Json::num(m.position as f64)),
+                ("tokens".into(), u64_str(m.tokens)),
+                ("host_secs".into(), Json::num(m.host_secs)),
+                ("block".into(), Json::str(hex_encode(&m.block))),
+                ("ck".into(), Json::str(hex_encode(&m.ck))),
+                ("rng".into(), rng_json(m.rng)),
+                ("z".into(), z_json(&m.z)),
+                ("dt".into(), dt_json(&m.dt)),
+            ]),
+        }
+    }
+
+    /// Decode one wire frame; typed errors on unknown tags or malformed
+    /// fields — never a panic (the peer controls these bytes).
+    pub fn from_json(j: &Json) -> Result<Message> {
+        let kind = get_str(j, "type")?;
+        Ok(match kind {
+            "register" => Message::Register,
+            "shutdown" => Message::Shutdown,
+            "bye" => Message::Bye,
+            "ready" => Message::Ready { corpus_fp: get_u64_str(j, "corpus_fp")? },
+            "init" => {
+                let corpus = CorpusConfig {
+                    preset: get_str(j, "corpus_preset")?.to_string(),
+                    vocab: get_usize(j, "corpus_vocab")?,
+                    docs: get_usize(j, "corpus_docs")?,
+                    avg_doc_len: get_usize(j, "corpus_avg_doc_len")?,
+                    zipf_s: get_f64(j, "corpus_zipf_s")?,
+                    gen_topics: get_usize(j, "corpus_gen_topics")?,
+                    gen_alpha: get_f64(j, "corpus_gen_alpha")?,
+                    gen_beta: get_f64(j, "corpus_gen_beta")?,
+                    bigram: matches!(j.get("corpus_bigram"), Some(Json::Bool(true))),
+                    path: get_str(j, "corpus_path")?.to_string(),
+                    seed: get_u64_str(j, "corpus_seed")?,
+                };
+                Message::Init(InitMsg {
+                    corpus,
+                    topics: get_usize(j, "topics")?,
+                    alpha: get_f64(j, "alpha")?,
+                    beta: get_f64(j, "beta")?,
+                    sampler: SamplerKind::parse(get_str(j, "sampler")?)?,
+                    alias_budget_bytes: get_u64_str(j, "alias_budget_bytes")?,
+                    corpus_fp: get_u64_str(j, "corpus_fp")?,
+                })
+            }
+            "task" => {
+                let docs = j
+                    .get("docs")
+                    .and_then(Json::as_arr)
+                    .context("missing array field \"docs\"")?
+                    .iter()
+                    .map(|d| {
+                        let v = d.as_u64().context("doc id is not a non-negative integer")?;
+                        u32::try_from(v).context("doc id exceeds u32")
+                    })
+                    .collect::<Result<Vec<u32>>>()?;
+                Message::Task(TaskMsg {
+                    position: get_usize(j, "position")?,
+                    round: get_usize(j, "round")?,
+                    block: get_hex(j, "block")?,
+                    ck: get_hex(j, "ck")?,
+                    rng: get_u128_pair(j, "rng")?,
+                    docs,
+                    z: get_z(j, "z")?,
+                    dt: get_dt(j, "dt")?,
+                })
+            }
+            "result" => Message::Result(ResultMsg {
+                position: get_usize(j, "position")?,
+                tokens: get_u64_str(j, "tokens")?,
+                host_secs: get_f64(j, "host_secs")?,
+                block: get_hex(j, "block")?,
+                ck: get_hex(j, "ck")?,
+                rng: get_u128_pair(j, "rng")?,
+                z: get_z(j, "z")?,
+                dt: get_dt(j, "dt")?,
+            }),
+            other => bail!("unknown protocol message type {other:?}"),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hex_round_trips_and_rejects_garbage() {
+        let bytes: Vec<u8> = (0..=255u8).collect();
+        assert_eq!(hex_decode(&hex_encode(&bytes)).unwrap(), bytes);
+        assert_eq!(hex_encode(&[]), "");
+        assert!(hex_decode("abc").is_err(), "odd length");
+        assert!(hex_decode("zz").is_err(), "non-hex");
+    }
+
+    #[test]
+    fn rng_state_survives_the_json_number_precision_wall() {
+        // A PCG64 state uses all 128 bits; Json::Num would destroy it.
+        let m = Message::Task(TaskMsg {
+            position: 0,
+            round: 0,
+            block: vec![],
+            ck: vec![],
+            rng: (u128::MAX - 12345, (1u128 << 100) | 1),
+            docs: vec![],
+            z: vec![],
+            dt: vec![],
+        });
+        assert_eq!(Message::from_json(&m.to_json()).unwrap(), m);
+    }
+
+    #[test]
+    fn unknown_type_is_a_typed_error() {
+        let j = Json::parse(r#"{"type":"warp"}"#).unwrap();
+        let err = Message::from_json(&j).unwrap_err().to_string();
+        assert!(err.contains("warp"), "{err}");
+    }
+}

@@ -1,0 +1,190 @@
+//! The worker side: the main loop behind `mplda worker`.
+//!
+//! A worker is **stateless compute**: every task ships the complete
+//! working set for one `(position, round)` cell — leased block, `C_k`
+//! snapshot, RNG stream position, assignments, live-order doc–topic
+//! entries — and the reply ships every mutated structure back. Nothing
+//! the worker retains between tasks affects the model trajectory; the
+//! cache below merely avoids rebuilding the inverted index when the same
+//! shard comes back next round (after a rotation reassignment the doc
+//! list changes and the cached entry is rebuilt).
+//!
+//! The only worker-local input is the corpus, rebuilt from the master's
+//! recipe (`InitMsg::corpus` is seed-deterministic) and verified against
+//! the master's fingerprint during the handshake — a config drift between
+//! the two processes fails loudly before any sampling happens.
+
+use std::collections::HashMap;
+use std::net::TcpStream;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::SamplerKind;
+use crate::coordinator::worker::WorkerState;
+use crate::corpus;
+use crate::model::checkpoint::corpus_fingerprint;
+use crate::model::{wire as codec, DocTopic, DocView, SparseCounts};
+use crate::sampler::{cpu_kernel, KernelOpts, Params};
+use crate::serve::wire::{read_frame, write_frame};
+use crate::util::rng::Pcg64;
+
+use super::protocol::{Message, ResultMsg, TaskMsg};
+
+/// How long `connect` retries before giving up (the master may not have
+/// bound its listener yet when workers launch).
+const CONNECT_WAIT: Duration = Duration::from_secs(30);
+
+/// Connect to `addr`, retrying while the master comes up.
+fn connect_with_retry(addr: &str) -> Result<TcpStream> {
+    let deadline = Instant::now() + CONNECT_WAIT;
+    loop {
+        match TcpStream::connect(addr) {
+            Ok(s) => return Ok(s),
+            Err(e) => {
+                if Instant::now() > deadline {
+                    return Err(e).with_context(|| format!("connecting to master at {addr:?}"));
+                }
+                std::thread::sleep(Duration::from_millis(50));
+            }
+        }
+    }
+}
+
+/// Run the worker loop: register with the master at `addr`, rebuild the
+/// corpus from its recipe, then answer sampling tasks until a shutdown
+/// frame or a clean EOF. Returns when the master is done with us.
+pub fn run(addr: &str) -> Result<()> {
+    let mut stream = connect_with_retry(addr)?;
+    stream.set_nodelay(true).context("configuring master socket")?;
+    write_frame(&mut stream, &Message::Register.to_json())?;
+
+    let init = match read_frame(&mut stream)? {
+        Some(j) => match Message::from_json(&j)? {
+            Message::Init(init) => init,
+            other => bail!("expected init from master, got {:?}", other.kind()),
+        },
+        None => bail!("master closed the connection before init"),
+    };
+    let corpus = corpus::build(&init.corpus).context("rebuilding corpus from master recipe")?;
+    let fp = corpus_fingerprint(&corpus);
+    if fp != init.corpus_fp {
+        bail!(
+            "rebuilt corpus fingerprint {fp:#x} does not match master's {:#x} — \
+             config drift between processes",
+            init.corpus_fp
+        );
+    }
+    write_frame(&mut stream, &Message::Ready { corpus_fp: fp }.to_json())?;
+    log::info!(
+        "worker: registered with {addr}, corpus {} docs / {} words, sampler {}",
+        corpus.num_docs(),
+        corpus.num_words(),
+        init.sampler.name()
+    );
+
+    let params = Params::new(init.topics, corpus.num_words(), init.alpha, init.beta);
+    let opts = KernelOpts { alias_budget_bytes: init.alias_budget_bytes };
+    // Full-corpus-shaped views; tasks splice their shard's rows in and
+    // out by global doc id, mirroring the master's layout so the kernel
+    // sees identical indices.
+    let mut z: Vec<Vec<u32>> = vec![Vec::new(); corpus.num_docs()];
+    let mut dt = DocTopic::zeros(corpus.num_docs());
+    let mut cache: HashMap<usize, WorkerState> = HashMap::new();
+
+    loop {
+        let task = match read_frame(&mut stream)? {
+            Some(j) => match Message::from_json(&j)? {
+                Message::Task(task) => task,
+                Message::Shutdown => {
+                    let _ = write_frame(&mut stream, &Message::Bye.to_json());
+                    return Ok(());
+                }
+                other => bail!("expected task or shutdown, got {:?}", other.kind()),
+            },
+            None => return Ok(()), // master gone; a crash there is its problem
+        };
+        let reply = run_task(
+            &task,
+            &corpus,
+            &params,
+            &opts,
+            init.sampler,
+            init.topics,
+            &mut z,
+            &mut dt,
+            &mut cache,
+        )?;
+        write_frame(&mut stream, &Message::Result(reply).to_json())?;
+    }
+}
+
+/// Execute one task against the shipped state and package the reply.
+#[allow(clippy::too_many_arguments)]
+fn run_task(
+    task: &TaskMsg,
+    corpus: &corpus::Corpus,
+    params: &Params,
+    opts: &KernelOpts,
+    sampler: SamplerKind,
+    num_topics: usize,
+    z: &mut [Vec<u32>],
+    dt: &mut DocTopic,
+    cache: &mut HashMap<usize, WorkerState>,
+) -> Result<ResultMsg> {
+    if task.z.len() != task.docs.len() || task.dt.len() != task.docs.len() {
+        bail!(
+            "task for position {} ships {} z rows / {} dt rows for {} docs",
+            task.position,
+            task.z.len(),
+            task.dt.len(),
+            task.docs.len()
+        );
+    }
+    if let Some(&bad) = task.docs.iter().find(|&&d| d as usize >= corpus.num_docs()) {
+        bail!("task references doc {bad}, corpus has {}", corpus.num_docs());
+    }
+    let mut block = codec::decode_block(&task.block).context("decoding task block")?;
+    let ck = codec::decode_totals(&task.ck).context("decoding task C_k")?;
+
+    // Reuse the cached shard state (inverted index) when the doc list is
+    // unchanged; rebuild after reassignments. RNG and C_k are overwritten
+    // from the task either way — the cache is a pure index cache.
+    let rebuild = match cache.get(&task.position) {
+        Some(w) => w.docs != task.docs,
+        None => true,
+    };
+    if rebuild {
+        cache.insert(
+            task.position,
+            WorkerState::new(task.position, 0, task.docs.clone(), corpus, num_topics, 0),
+        );
+    }
+    let ws = cache.get_mut(&task.position).unwrap();
+    ws.rng = Pcg64::from_raw(task.rng.0, task.rng.1);
+    ws.install_totals(ck);
+
+    for ((&d, z_row), dt_row) in task.docs.iter().zip(&task.z).zip(&task.dt) {
+        z[d as usize] = z_row.clone();
+        *dt.doc_mut(d as usize) = SparseCounts::from_ordered_entries(dt_row.clone());
+    }
+
+    let mut kernel = cpu_kernel(sampler, opts)?;
+    let (tokens, host_secs) = {
+        let mut docs = DocView::new(z, dt);
+        ws.run_round(corpus, &mut docs, &mut block, params, &mut *kernel)?
+    };
+
+    let z_out = task.docs.iter().map(|&d| z[d as usize].clone()).collect();
+    let dt_out = task.docs.iter().map(|&d| dt.doc(d as usize).iter().collect()).collect();
+    Ok(ResultMsg {
+        position: task.position,
+        tokens,
+        host_secs,
+        block: codec::encode_block(&block),
+        ck: codec::encode_totals(&ws.ck),
+        rng: ws.rng.to_raw(),
+        z: z_out,
+        dt: dt_out,
+    })
+}

@@ -96,6 +96,11 @@ pub struct RoundOutcome {
     pub fetch_times: Vec<f64>,
     /// Simulated commit-phase + totals-merge-reduce seconds.
     pub t_commit: f64,
+    /// `(position, block)` pairs whose worker **process** vanished
+    /// mid-round (socket failure in the distributed backend). Their
+    /// leases stayed out, uncommitted — the driver routes them into the
+    /// lease-timeout fault plane. Always empty for in-process backends.
+    pub dead: Vec<(usize, u32)>,
 }
 
 /// One of the three execution paths, chosen at driver build time. See the
@@ -133,6 +138,13 @@ pub trait Backend {
     /// need no action.
     fn reset_workers(&mut self, _workers: usize) -> Result<()> {
         Ok(())
+    }
+
+    /// The TCP address the backend listens on for worker processes, when
+    /// it has one (the distributed backend). In-process backends have no
+    /// wire presence.
+    fn listen_addr(&self) -> Option<std::net::SocketAddr> {
+        None
     }
 }
 
@@ -238,7 +250,7 @@ pub fn run_round_degraded(ctx: &mut RoundCtx<'_>, skip: &[bool]) -> Result<Round
         + ctx.net.reduce_time(merge_bytes_per_worker, ctx.workers.len());
     ctx.pstats.flush_stall_secs += t_flush.elapsed().as_secs_f64();
     ctx.pstats.rounds += 1;
-    Ok(RoundOutcome { tokens, host_secs, fetch_times, t_commit })
+    Ok(RoundOutcome { tokens, host_secs, fetch_times, t_commit, dead: Vec::new() })
 }
 
 /// Select the execution backend for a **finalized** config, validating
@@ -264,21 +276,27 @@ pub fn backend_for(cfg: &Config) -> Result<Box<dyn Backend>> {
             caps.name
         );
     }
-    Ok(if pipelined {
+    if cfg.coord.execution == ExecutionMode::Distributed && cfg.train.sampler == SamplerKind::Xla {
+        bail!(
+            "distributed execution requires a CPU sampler kernel; the xla executor is a \
+             process-local device handle that worker processes cannot share"
+        );
+    }
+    if pipelined {
         let budget = (cfg.coord.staging_budget_mib * (1u64 << 20) as f64).round() as u64;
-        Box::new(PipelinedBackend::new(cfg.coord.workers, budget))
-    } else {
-        match cfg.coord.execution {
-            ExecutionMode::Simulated => Box::new(SimulatedBackend),
-            ExecutionMode::Threaded => Box::new(ThreadedBackend),
-        }
+        return Ok(Box::new(PipelinedBackend::new(cfg.coord.workers, budget)));
+    }
+    Ok(match cfg.coord.execution {
+        ExecutionMode::Simulated => Box::new(SimulatedBackend),
+        ExecutionMode::Threaded => Box::new(ThreadedBackend),
+        ExecutionMode::Distributed => Box::new(crate::distributed::DistributedBackend::new(cfg)?),
     })
 }
 
 /// Phase 2 for the non-pipelined backends: synchronous round-start block
 /// leases, timed as fetch stall, with the leased bytes charged to the
 /// memory accountant.
-fn lease_blocks_sync(ctx: &mut RoundCtx<'_>) -> Result<(Vec<ModelBlock>, Vec<f64>)> {
+pub(crate) fn lease_blocks_sync(ctx: &mut RoundCtx<'_>) -> Result<(Vec<ModelBlock>, Vec<f64>)> {
     let t0 = Instant::now();
     let mut leased = Vec::with_capacity(ctx.workers.len());
     for w in ctx.workers.iter() {
@@ -376,7 +394,7 @@ impl Backend for SimulatedBackend {
         ctx.pstats.sample_secs += t_compute.elapsed().as_secs_f64();
         charge_alias_caches(ctx, &leased)?;
         let t_commit = commit_blocks_sync(ctx, leased)?;
-        Ok(RoundOutcome { tokens, host_secs, fetch_times, t_commit })
+        Ok(RoundOutcome { tokens, host_secs, fetch_times, t_commit, dead: Vec::new() })
     }
 }
 
@@ -431,7 +449,7 @@ impl Backend for ThreadedBackend {
         ctx.pstats.sample_secs += t_compute.elapsed().as_secs_f64();
         charge_alias_caches(ctx, &leased)?;
         let t_commit = commit_blocks_sync(ctx, leased)?;
-        Ok(RoundOutcome { tokens, host_secs, fetch_times, t_commit })
+        Ok(RoundOutcome { tokens, host_secs, fetch_times, t_commit, dead: Vec::new() })
     }
 }
 
@@ -550,7 +568,7 @@ impl Backend for PipelinedBackend {
         let t_commit = ctx.net.phase_time(&commit_flows)
             + ctx.net.reduce_time(merge_bytes_per_worker, ctx.workers.len());
         self.engine.install(out.staged);
-        Ok(RoundOutcome { tokens, host_secs, fetch_times, t_commit })
+        Ok(RoundOutcome { tokens, host_secs, fetch_times, t_commit, dead: Vec::new() })
     }
 
     fn end_iteration(&mut self) -> Result<()> {

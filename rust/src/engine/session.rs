@@ -63,6 +63,11 @@ pub enum Execution {
         /// still charged to the cluster RAM accountant).
         staging_budget_mib: f64,
     },
+    /// Real worker **processes** over TCP (`distributed::master` on this
+    /// side, `mplda worker` peers on the other). The listen address and
+    /// process count come from the config's `[dist]` section
+    /// (`SessionBuilder::configure`). CPU sampler kernels only.
+    Distributed,
 }
 
 impl Execution {
@@ -78,6 +83,7 @@ impl Execution {
                 ExecutionMode::Threaded => {
                     Execution::Threaded { parallelism: coord.parallelism }
                 }
+                ExecutionMode::Distributed => Execution::Distributed,
             },
         }
     }
@@ -100,15 +106,21 @@ impl Execution {
                 coord.parallelism = parallelism;
                 coord.staging_budget_mib = staging_budget_mib;
             }
+            Execution::Distributed => {
+                coord.execution = ExecutionMode::Distributed;
+                coord.pipeline = PipelineMode::Off;
+            }
         }
     }
 
-    /// Canonical name (`"simulated"` | `"threaded"` | `"pipelined"`).
+    /// Canonical name (`"simulated"` | `"threaded"` | `"pipelined"` |
+    /// `"distributed"`).
     pub fn name(&self) -> &'static str {
         match self {
             Execution::Simulated => "simulated",
             Execution::Threaded { .. } => "threaded",
             Execution::Pipelined { .. } => "pipelined",
+            Execution::Distributed => "distributed",
         }
     }
 }

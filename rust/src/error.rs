@@ -44,6 +44,21 @@ pub enum MpldaError {
         /// Round index at which the last worker was lost.
         round: usize,
     },
+    /// A frame's length prefix exceeds the wire cap
+    /// (`serve::wire::MAX_FRAME`). Raised **before** the body buffer is
+    /// allocated, so a garbage or hostile prefix can never trigger a
+    /// multi-GiB allocation.
+    FrameTooLarge {
+        /// The length the prefix claimed, in bytes.
+        len: u64,
+    },
+    /// The stream ended inside a frame's 4-byte length prefix — a
+    /// truncated frame, distinct from the clean EOF (`Ok(None)`) of a
+    /// peer that closed between frames.
+    FrameTruncated {
+        /// Length-prefix bytes received before EOF (1..=3).
+        got: usize,
+    },
 }
 
 impl fmt::Display for MpldaError {
@@ -60,6 +75,12 @@ impl fmt::Display for MpldaError {
             }
             MpldaError::NoSurvivors { round } => {
                 write!(f, "all workers lost by round {round}; no survivor to adopt blocks")
+            }
+            MpldaError::FrameTooLarge { len } => {
+                write!(f, "frame of {len} bytes exceeds the wire frame cap")
+            }
+            MpldaError::FrameTruncated { got } => {
+                write!(f, "connection closed mid-frame ({got} of 4 length bytes)")
             }
         }
     }

@@ -38,7 +38,13 @@
 //!   budget-bounded LRU cache straight from the KV-store, a micro-batcher
 //!   groups queued documents by block, and a dependency-free TCP front
 //!   end answers fold-in queries bitwise identical to offline
-//!   [`engine::TopicModel::infer`] (DESIGN.md §Serving).
+//!   [`engine::TopicModel::infer`] (DESIGN.md §Serving), and
+//! * a **[`distributed`] trainer** (`mplda master` / `mplda worker`,
+//!   `coord.execution = "distributed"`) — real multi-process execution
+//!   over TCP: the master owns the schedule, KV-store and iteration loop;
+//!   worker processes lease blocks, sample locally and push commits back,
+//!   with the model trajectory **bitwise equal** to the simulated
+//!   backend's from the same seed (DESIGN.md §Distributed).
 //!
 //! See `DESIGN.md` for the system inventory and the per-experiment index, and
 //! `EXPERIMENTS.md` for paper-vs-measured results.
@@ -78,6 +84,7 @@ pub mod model;
 pub mod sampler;
 pub mod kvstore;
 pub mod coordinator;
+pub mod distributed;
 pub mod engine;
 pub mod serve;
 pub mod cluster;

@@ -3,6 +3,8 @@
 //! ```text
 //! mplda train   [--config FILE] [--<section>.<key> VALUE ...]
 //! mplda eval    <fig2|fig3|table1|fig4a|fig4b|all> [options]
+//! mplda master  [--config FILE ...]             # distributed trainer, master side
+//! mplda worker  --connect HOST:PORT             # distributed trainer, worker side
 //! mplda corpus  [--corpus.preset NAME ...]      # corpus statistics
 //! mplda check   [--runtime.artifacts_dir DIR]   # artifact + PJRT smoke
 //! ```
@@ -52,6 +54,8 @@ fn dispatch(args: &Args) -> Result<()> {
         Some("corpus") => cmd_corpus(args),
         Some("topics") => cmd_topics(args),
         Some("serve") => cmd_serve(args),
+        Some("master") => cmd_master(args),
+        Some("worker") => cmd_worker(args),
         Some("check") => cmd_check(args),
         Some("help") | None => {
             print!("{}", help());
@@ -72,6 +76,8 @@ fn help() -> String {
     .entry("eval <exp>", "reproduce a paper experiment: fig2 fig3 table1 fig4a fig4b ablations all")
     .entry("topics", "train briefly, then print top words + coherence per topic")
     .entry("serve", "train, then serve fold-in queries over TCP (block-paged model)")
+    .entry("master", "train as the distributed master: listen per [dist], wait for workers")
+    .entry("worker --connect A", "join a distributed master at address A (HOST:PORT)")
     .entry("corpus", "print corpus statistics for a preset")
     .entry("check", "verify AOT artifacts load and execute via PJRT")
     .section("Common options")
@@ -300,6 +306,52 @@ fn cmd_serve(args: &Args) -> Result<()> {
     server.join();
     println!("server stopped");
     Ok(())
+}
+
+/// Train as the distributed master: bind the `[dist]` listener, print the
+/// address workers should join, then run the normal training loop — the
+/// first round blocks until `dist.workers` processes complete the
+/// register→init→ready handshake.
+fn cmd_master(args: &Args) -> Result<()> {
+    use mplda::config::{ExecutionMode, PipelineMode};
+    let mut cfg = load_config(args)?;
+    cfg.coord.execution = ExecutionMode::Distributed;
+    cfg.coord.pipeline = PipelineMode::Off;
+    if cfg.dist.workers == 0 {
+        cfg.dist.workers = cfg.coord.workers;
+    }
+    let expected = cfg.dist.workers;
+    log::info!(
+        "distributed training: sampler={} K={} iters={} positions={} processes={}",
+        cfg.train.sampler.name(),
+        cfg.train.topics,
+        cfg.train.iterations,
+        cfg.coord.workers,
+        expected
+    );
+    let mut session = SessionBuilder::from_config(cfg).build()?;
+    let addr = session
+        .driver()
+        .and_then(|d| d.listen_addr())
+        .context("distributed driver did not bind a listener")?;
+    println!("master listening on {addr}");
+    println!("waiting for {expected} worker(s): mplda worker --connect {addr}");
+    let summary = session.train_observed(|ev| log_progress(false, ev))?;
+    println!("== training complete ==");
+    println!("final log-likelihood : {}", fmt::sci(summary.final_loglik));
+    println!("simulated time       : {}", mplda::util::bench::fmt_secs(summary.sim_time));
+    println!("tokens sampled       : {}", fmt::count(summary.total_tokens));
+    Ok(())
+}
+
+/// Join a distributed master as a worker process: stateless compute that
+/// rebuilds the corpus from the master's recipe and answers sampling
+/// tasks until the master shuts the session down.
+fn cmd_worker(args: &Args) -> Result<()> {
+    let addr = args
+        .get("connect")
+        .context("worker needs --connect HOST:PORT (printed by `mplda master`)")?;
+    mplda::distributed::worker::run(addr)
 }
 
 fn cmd_check(args: &Args) -> Result<()> {

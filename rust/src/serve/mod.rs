@@ -22,6 +22,9 @@
 //! * [`server`] — dependency-free `std::net` TCP front end
 //!   (`mplda serve`) with a handler pool and a `stats` verb (latency
 //!   percentiles, throughput, cache hit rate from [`metrics`]).
+//! * [`wire`] — the length-prefixed JSON framing itself (frame cap,
+//!   typed truncation/oversize errors), shared with the distributed
+//!   trainer's master/worker protocol ([`crate::distributed`]).
 //! * [`harness`] — the same stack with no sockets, driven by
 //!   `tests/serve_determinism.rs` to prove served results **bitwise
 //!   equal** offline `TopicModel::infer` at every cache budget, batch
@@ -37,6 +40,7 @@ pub mod json;
 pub mod metrics;
 pub mod model;
 pub mod server;
+pub mod wire;
 
 pub use batcher::{BatchOpts, Batcher, InferRequest};
 pub use harness::Harness;

@@ -33,7 +33,6 @@
 //! pool size — per-request RNG streams, see [`super::batcher`].
 
 use std::collections::HashMap;
-use std::io::{ErrorKind, Read, Write};
 use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
@@ -51,69 +50,17 @@ use super::json::Json;
 use super::metrics::{ServeMetrics, StatsSnapshot};
 use super::model::ShardedTopicModel;
 
-/// Upper bound on one frame's body (guards against garbage prefixes).
-const MAX_FRAME: usize = 64 << 20;
+// The framing codec (cap, typed errors, EOF discipline) lives in the
+// shared `wire` module since the distributed trainer adopted the same
+// format; re-exported so this module remains the serving tier's one-stop
+// wire surface.
+pub use super::wire::{read_frame, read_frame_bytes, write_frame};
 
 /// Upper bound on client-requested Gibbs sweeps. The executor is shared;
 /// without a cap one request could wedge it (and teardown) for an
 /// arbitrary multiple of its document cost. The default is 20; anything
 /// past this is a client error, not a workload.
 const MAX_REQUEST_ITERATIONS: usize = 1_000;
-
-/// Write one length-prefixed JSON frame.
-pub fn write_frame<W: Write>(w: &mut W, body: &Json) -> Result<()> {
-    let text = body.render();
-    if text.len() > MAX_FRAME {
-        bail!("response frame of {} bytes exceeds the {MAX_FRAME}-byte cap", text.len());
-    }
-    w.write_all(&(text.len() as u32).to_be_bytes()).context("writing frame length")?;
-    w.write_all(text.as_bytes()).context("writing frame body")?;
-    w.flush().context("flushing frame")?;
-    Ok(())
-}
-
-/// Read one frame's raw body; `Ok(None)` on clean EOF before a frame
-/// starts (the peer is done). Errors here mean the *framing* is broken —
-/// the stream can no longer be trusted.
-fn read_frame_bytes<R: Read>(r: &mut R) -> Result<Option<Vec<u8>>> {
-    // Fill the length prefix byte-wise so EOF *before* a frame (clean
-    // disconnect) is distinguishable from EOF *inside* the prefix (a
-    // truncated frame — a real framing error).
-    let mut len_bytes = [0u8; 4];
-    let mut filled = 0usize;
-    while filled < len_bytes.len() {
-        match r.read(&mut len_bytes[filled..]) {
-            Ok(0) => {
-                if filled == 0 {
-                    return Ok(None);
-                }
-                bail!("connection closed mid-frame ({filled} of 4 length bytes)");
-            }
-            Ok(n) => filled += n,
-            Err(e) if e.kind() == ErrorKind::Interrupted => continue,
-            Err(e) => return Err(e.into()),
-        }
-    }
-    let len = u32::from_be_bytes(len_bytes) as usize;
-    if len > MAX_FRAME {
-        bail!("frame of {len} bytes exceeds the {MAX_FRAME}-byte cap");
-    }
-    let mut body = vec![0u8; len];
-    r.read_exact(&mut body).context("reading frame body")?;
-    Ok(Some(body))
-}
-
-/// Read one length-prefixed JSON frame; `Ok(None)` on clean EOF before a
-/// frame starts (the peer is done).
-pub fn read_frame<R: Read>(r: &mut R) -> Result<Option<Json>> {
-    match read_frame_bytes(r)? {
-        None => Ok(None),
-        Some(body) => {
-            let text = std::str::from_utf8(&body).context("frame body is not UTF-8")?;
-            Json::parse(text).map(Some)
-        }
-    }
-}
 
 fn error_frame(message: impl std::fmt::Display) -> Json {
     Json::Obj(vec![

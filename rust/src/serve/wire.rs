@@ -1,0 +1,132 @@
+//! Length-prefixed JSON framing shared by every TCP surface.
+//!
+//! One frame is a 4-byte big-endian length followed by that many bytes of
+//! UTF-8 JSON. The codec grew up inside `serve::server` (the online
+//! inference front end) and was lifted here when the distributed trainer
+//! (`crate::distributed`) started speaking the same wire format — both
+//! sides now share one cap, one EOF discipline, and one set of typed
+//! errors:
+//!
+//! * a prefix larger than [`MAX_FRAME`] fails with
+//!   [`MpldaError::FrameTooLarge`] **before** the body buffer is
+//!   allocated, so garbage or hostile prefixes can never trigger a
+//!   multi-GiB allocation;
+//! * EOF *between* frames is a clean end-of-stream (`Ok(None)`); EOF
+//!   *inside* the length prefix is [`MpldaError::FrameTruncated`]; EOF
+//!   inside the body surfaces the underlying `UnexpectedEof` I/O error.
+//!
+//! Malformed input is always a typed `Err`, never a panic —
+//! `tests/prop_protocol.rs` drives the codec with truncations, garbage
+//! and oversized prefixes to hold that line.
+
+use std::io::{ErrorKind, Read, Write};
+
+use anyhow::{bail, Context, Result};
+
+use crate::error::MpldaError;
+
+use super::json::Json;
+
+/// Upper bound on one frame's body (guards against garbage prefixes).
+pub const MAX_FRAME: usize = 64 << 20;
+
+/// Write one length-prefixed JSON frame.
+pub fn write_frame<W: Write>(w: &mut W, body: &Json) -> Result<()> {
+    let text = body.render();
+    if text.len() > MAX_FRAME {
+        bail!("response frame of {} bytes exceeds the {MAX_FRAME}-byte cap", text.len());
+    }
+    w.write_all(&(text.len() as u32).to_be_bytes()).context("writing frame length")?;
+    w.write_all(text.as_bytes()).context("writing frame body")?;
+    w.flush().context("flushing frame")?;
+    Ok(())
+}
+
+/// Read one frame's raw body; `Ok(None)` on clean EOF before a frame
+/// starts (the peer is done). Errors here mean the *framing* is broken —
+/// the stream can no longer be trusted.
+pub fn read_frame_bytes<R: Read>(r: &mut R) -> Result<Option<Vec<u8>>> {
+    // Fill the length prefix byte-wise so EOF *before* a frame (clean
+    // disconnect) is distinguishable from EOF *inside* the prefix (a
+    // truncated frame — a real framing error).
+    let mut len_bytes = [0u8; 4];
+    let mut filled = 0usize;
+    while filled < len_bytes.len() {
+        match r.read(&mut len_bytes[filled..]) {
+            Ok(0) => {
+                if filled == 0 {
+                    return Ok(None);
+                }
+                return Err(MpldaError::FrameTruncated { got: filled }.into());
+            }
+            Ok(n) => filled += n,
+            Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+            Err(e) => return Err(e.into()),
+        }
+    }
+    let len = u32::from_be_bytes(len_bytes) as usize;
+    if len > MAX_FRAME {
+        // The prefix is data from the wire, not a trusted size: reject it
+        // before `vec![0u8; len]` commits gigabytes to a lie.
+        return Err(MpldaError::FrameTooLarge { len: len as u64 }.into());
+    }
+    let mut body = vec![0u8; len];
+    r.read_exact(&mut body).context("reading frame body")?;
+    Ok(Some(body))
+}
+
+/// Read one length-prefixed JSON frame; `Ok(None)` on clean EOF before a
+/// frame starts (the peer is done).
+pub fn read_frame<R: Read>(r: &mut R) -> Result<Option<Json>> {
+    match read_frame_bytes(r)? {
+        None => Ok(None),
+        Some(body) => {
+            let text = std::str::from_utf8(&body).context("frame body is not UTF-8")?;
+            Json::parse(text).map(Some)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn oversized_prefix_is_typed_and_never_allocated() {
+        // A multi-GiB claim in 6 bytes of input: the typed rejection must
+        // arrive without the 3 GiB body buffer ever existing.
+        let mut r: &[u8] = &(3u32 << 30).to_be_bytes()[..];
+        let err = read_frame(&mut r).unwrap_err();
+        match err.downcast_ref::<MpldaError>() {
+            Some(&MpldaError::FrameTooLarge { len }) => assert_eq!(len, (3u64) << 30),
+            other => panic!("expected FrameTooLarge, got {other:?} in {err:#}"),
+        }
+    }
+
+    #[test]
+    fn mid_prefix_eof_is_typed() {
+        let mut r: &[u8] = &[0, 0, 1];
+        let err = read_frame(&mut r).unwrap_err();
+        match err.downcast_ref::<MpldaError>() {
+            Some(&MpldaError::FrameTruncated { got }) => assert_eq!(got, 3),
+            other => panic!("expected FrameTruncated, got {other:?} in {err:#}"),
+        }
+    }
+
+    #[test]
+    fn exactly_max_frame_passes_the_cap() {
+        // The cap is inclusive: a body of exactly MAX_FRAME bytes reads.
+        // (Built as raw bytes — rendering a 64 MiB Json would dwarf the
+        // point of the test.)
+        let mut buf = (MAX_FRAME as u32).to_be_bytes().to_vec();
+        buf.resize(4 + MAX_FRAME, b' ');
+        let mut r = &buf[..];
+        let body = read_frame_bytes(&mut r).unwrap().unwrap();
+        assert_eq!(body.len(), MAX_FRAME);
+        let mut r: &[u8] = &(MAX_FRAME as u32 + 1).to_be_bytes()[..];
+        assert!(matches!(
+            read_frame_bytes(&mut r).unwrap_err().downcast_ref::<MpldaError>(),
+            Some(&MpldaError::FrameTooLarge { .. })
+        ));
+    }
+}

@@ -236,3 +236,107 @@ fn two_workers_can_die_in_different_iterations() {
     assert_eq!(s.driver().unwrap().num_workers(), 1, "two corpses, one survivor");
     assert!(gain(&summary) > 0.0, "the survivor still makes progress");
 }
+
+// ---------------------------------------------------------------------
+// The socket path (ISSUE 7 satellite): the fault above was a *scripted*
+// kill inside one process; here a worker **process** actually dies and
+// the master finds out the only way a real master can — its socket
+// breaks mid-round. The corpse must flow into the same lease-timeout
+// reap/reassign machinery, and the LL trajectory must rejoin the clean
+// distributed run's.
+// ---------------------------------------------------------------------
+
+mod process_kill {
+    use super::*;
+    use std::process::{Child, Command, Stdio};
+    use std::time::{Duration, Instant};
+
+    fn spawn_worker(addr: &str) -> Child {
+        Command::new(env!("CARGO_BIN_EXE_mplda"))
+            .args(["worker", "--connect", addr])
+            .stdin(Stdio::null())
+            .stdout(Stdio::null())
+            .stderr(Stdio::null())
+            .spawn()
+            .expect("spawning mplda worker")
+    }
+
+    fn reap(mut children: Vec<Child>) {
+        let deadline = Instant::now() + Duration::from_secs(10);
+        while !children.is_empty() && Instant::now() < deadline {
+            children.retain_mut(|c| !matches!(c.try_wait(), Ok(Some(_))));
+            std::thread::sleep(Duration::from_millis(20));
+        }
+        for c in &mut children {
+            let _ = c.kill();
+            let _ = c.wait();
+        }
+    }
+
+    /// One distributed run over `nprocs` real worker processes; if
+    /// `kill_after_iter` is set, that many iterations in, one child is
+    /// SIGKILLed mid-run. Returns (summary, surviving positions).
+    fn run_distributed(
+        seed: u64,
+        nprocs: usize,
+        kill_after_iter: Option<usize>,
+    ) -> (TrainSummary, usize) {
+        let mut session = builder(seed)
+            .lease_timeout_rounds(1)
+            .execution(Execution::Distributed)
+            .iterations(6)
+            .configure(move |cfg| {
+                cfg.dist.listen = "127.0.0.1:0".to_string();
+                cfg.dist.workers = nprocs;
+            })
+            .build()
+            .unwrap();
+        let addr = session
+            .driver()
+            .and_then(|d| d.listen_addr())
+            .expect("distributed driver binds at build time")
+            .to_string();
+        let mut children: Vec<Child> = (0..nprocs).map(|_| spawn_worker(&addr)).collect();
+        let summary = session
+            .train_observed(|ev| {
+                if Some(ev.stats.iteration) == kill_after_iter {
+                    // SIGKILL, not shutdown: the master must discover the
+                    // death from the broken socket alone.
+                    if let Some(mut c) = children.pop() {
+                        let _ = c.kill();
+                        let _ = c.wait();
+                    }
+                }
+            })
+            .unwrap();
+        session.check_consistency().unwrap();
+        let survivors = session.driver().unwrap().num_workers();
+        drop(session);
+        reap(children);
+        (summary, survivors)
+    }
+
+    #[test]
+    fn killed_worker_process_is_reaped_and_ll_rejoins() {
+        // Clean distributed run: both processes live, all 3 positions.
+        let (clean, clean_survivors) = run_distributed(7, 2, None);
+        assert_eq!(clean_survivors, 3, "clean run keeps every position");
+
+        // Same seed, but the second process is SIGKILLed after iteration
+        // 1. Its position's round fails on the socket, the lease times
+        // out after the one-round grace, the block is restored from its
+        // recovery copy and reassigned, and the orphaned docs adopt.
+        let (faulted, faulted_survivors) = run_distributed(7, 2, Some(1));
+        assert!(
+            faulted_survivors < 3,
+            "a position must have been reaped after its process died"
+        );
+
+        let (g_clean, g_fault) = (gain(&clean), gain(&faulted));
+        assert!(g_clean > 0.0, "clean distributed run must improve ({g_clean})");
+        assert!(
+            g_fault > 0.7 * g_clean,
+            "post-kill trajectory fell off: gain {g_fault} vs clean {g_clean}"
+        );
+    }
+}
