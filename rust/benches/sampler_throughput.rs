@@ -145,6 +145,115 @@ fn main() {
     pipeline_scaling();
     mh_alias_scaling();
     checkpoint_overhead();
+    out_of_core_overhead();
+}
+
+/// E12 — out-of-core overhead: the full driver fully resident vs starved
+/// down to a tiny `storage.resident_budget_mib`, under both spill
+/// encodings. The tier is required to be bitwise invisible (digests equal
+/// in every row — the real bar lives in `tests/out_of_core.rs`); this
+/// bench prices it: tokens/s with every lease recalling from disk and
+/// every commit spilling back, plus the disk traffic that replaced
+/// resident memory.
+fn out_of_core_overhead() {
+    use mplda::config::{CompressionKind, Config};
+    use mplda::coordinator::Driver;
+    use mplda::kvstore::TransferKind;
+    use mplda::util::fmt;
+
+    banner(
+        "out_of_core_overhead",
+        "full driver tokens/s: fully resident vs storage.resident_budget_mib \
+         = 0.001 (every home starved; spill on commit, recall on lease) under \
+         compression = none and sparse (8 workers, K=200, 4 threads). \
+         EXPERIMENTS.md E12 acceptance bar: identical state digests.",
+    );
+    let corpus = generate(&GenSpec {
+        vocab: 8_000,
+        docs: 2_000,
+        avg_doc_len: 90,
+        zipf_s: 1.07,
+        topics: 50,
+        alpha: 0.1,
+        seed: 42,
+    });
+    let cfg_text = r#"
+[train]
+topics = 200
+sampler = "inverted-xy"
+seed = 7
+ll_every = 0
+
+[coord]
+workers = 8
+execution = "threaded"
+parallelism = 4
+
+[cluster]
+preset = "custom"
+machines = 8
+"#;
+    let dir = std::env::temp_dir().join(format!("mplda_bench_ooc_{}", std::process::id()));
+    let mut table = Table::new(&[
+        "tier",
+        "tokens/s (wall)",
+        "vs resident",
+        "spilled",
+        "recalled",
+        "state digest",
+    ]);
+    let mut base_rate = 0.0f64;
+    let mut base_digest = 0u64;
+    for (tier, compression) in [
+        ("resident", None),
+        ("spilled, none", Some(CompressionKind::None)),
+        ("spilled, sparse", Some(CompressionKind::Sparse)),
+    ] {
+        let mut cfg = Config::from_str(cfg_text).unwrap();
+        if let Some(compression) = compression {
+            cfg.storage.resident_budget_mib = 0.001;
+            cfg.storage.dir = dir.join(compression.name()).to_string_lossy().into_owned();
+            cfg.storage.compression = compression;
+        }
+        let mut d = Driver::with_corpus(&cfg, corpus.clone()).unwrap();
+        // Warm one iteration, measure two (every measured lease pays a
+        // recall and every commit a spill when the budget is starved).
+        d.run_iteration().unwrap();
+        let t0 = std::time::Instant::now();
+        let mut tokens = 0u64;
+        for _ in 0..2 {
+            tokens += d.run_iteration().unwrap().tokens;
+        }
+        let rate = tokens as f64 / t0.elapsed().as_secs_f64();
+        let digest = d.model_digest();
+        let spilled = d.kv().bytes_of(TransferKind::BlockSpill);
+        let recalled = d.kv().bytes_of(TransferKind::BlockRecall);
+        if compression.is_none() {
+            base_rate = rate;
+            base_digest = digest;
+        } else {
+            assert_eq!(
+                digest, base_digest,
+                "E12 acceptance bar: the disk tier must be bitwise invisible"
+            );
+            assert!(
+                spilled > 0 && recalled > 0,
+                "a starved run must actually hit the disk tier"
+            );
+        }
+        table.row(&[
+            tier.into(),
+            fmt_rate(rate, "tok"),
+            format!("{:.2}x", rate / base_rate),
+            fmt::bytes(spilled),
+            fmt::bytes(recalled),
+            format!("{digest:016x}"),
+        ]);
+    }
+    std::fs::remove_dir_all(&dir).ok();
+    println!("{}", table.render());
+    println!("note: the sparse encoding trades decode work for disk bytes on long-tail");
+    println!("      blocks; bitwise equality across all rows is tests/out_of_core.rs's bar.");
 }
 
 /// E10 — async checkpointing overhead: the full driver with

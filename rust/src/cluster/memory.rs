@@ -34,11 +34,18 @@ pub enum MemCategory {
     /// — the cache never admits past the budget, so this category's peak
     /// is the enforcement witness (`tests/serve_determinism.rs`).
     ServeCache,
+    /// Resident (in-RAM) model blocks of a KV-store shard-home when the
+    /// out-of-core `storage::` tier is attached — the working set the
+    /// spill policy keeps under `storage.resident_budget_mib`. Split out
+    /// of [`MemCategory::KvShard`] (which then carries only recovery
+    /// copies) so the budget enforcement is observable:
+    /// `max_peak_category(Resident) ≤ budget` is the E12 acceptance bar.
+    Resident,
     /// Topic totals, buffers, misc.
     Other,
 }
 
-const NUM_CATEGORIES: usize = 9;
+const NUM_CATEGORIES: usize = 10;
 
 fn cat_idx(c: MemCategory) -> usize {
     match c {
@@ -50,7 +57,8 @@ fn cat_idx(c: MemCategory) -> usize {
         MemCategory::AliasCache => 5,
         MemCategory::KvShard => 6,
         MemCategory::ServeCache => 7,
-        MemCategory::Other => 8,
+        MemCategory::Resident => 8,
+        MemCategory::Other => 9,
     }
 }
 

@@ -6,7 +6,7 @@ pub mod toml;
 pub mod schema;
 
 pub use schema::{
-    BaselineConfig, BlockLayout, CkSyncPolicy, ClusterConfig, Config, CoordConfig, CorpusConfig,
-    DistConfig, ExecutionMode, OutputConfig, PipelineMode, RuntimeConfig, SamplerKind,
-    ServeConfig, TrainConfig,
+    BaselineConfig, BlockLayout, CkSyncPolicy, ClusterConfig, CompressionKind, Config,
+    CoordConfig, CorpusConfig, DistConfig, ExecutionMode, OutputConfig, PipelineMode,
+    RuntimeConfig, SamplerKind, ServeConfig, StorageConfig, TrainConfig,
 };

@@ -503,6 +503,60 @@ impl Default for DistConfig {
     }
 }
 
+/// Payload encoding for blocks spilled to the out-of-core tier.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CompressionKind {
+    /// `model::wire` varint codec verbatim — no extra compression.
+    None,
+    /// Compressed sparse rows with run-length-encoded row lengths: cold
+    /// long-tail blocks cost disk bytes proportional to non-zeros.
+    Sparse,
+}
+
+impl CompressionKind {
+    /// Parse a `storage.compression` value.
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "none" | "off" | "wire" => CompressionKind::None,
+            "sparse" | "csr" => CompressionKind::Sparse,
+            other => bail!("unknown storage compression {other:?} (none|sparse)"),
+        })
+    }
+
+    /// Canonical config-file spelling.
+    pub fn name(&self) -> &'static str {
+        match self {
+            CompressionKind::None => "none",
+            CompressionKind::Sparse => "sparse",
+        }
+    }
+}
+
+/// Out-of-core block storage knobs (`storage::`, ROADMAP item 3).
+#[derive(Debug, Clone)]
+pub struct StorageConfig {
+    /// Byte budget (MiB) of **resident** model blocks per shard-home
+    /// machine; commits past it spill the coldest blocks to the home's
+    /// disk segment. `0` (default) = fully resident, disk tier off.
+    pub resident_budget_mib: f64,
+    /// Directory for the per-home segment files (`home-<m>.seg`).
+    /// Required when the budget is set; each concurrent run needs its
+    /// own directory.
+    pub dir: String,
+    /// Spilled-block payload encoding.
+    pub compression: CompressionKind,
+}
+
+impl Default for StorageConfig {
+    fn default() -> Self {
+        StorageConfig {
+            resident_budget_mib: 0.0,
+            dir: String::new(),
+            compression: CompressionKind::None,
+        }
+    }
+}
+
 /// PJRT/XLA runtime settings.
 #[derive(Debug, Clone)]
 pub struct RuntimeConfig {
@@ -541,6 +595,7 @@ pub struct Config {
     pub baseline: BaselineConfig,
     pub serve: ServeConfig,
     pub dist: DistConfig,
+    pub storage: StorageConfig,
     pub runtime: RuntimeConfig,
     pub output: OutputConfig,
 }
@@ -651,6 +706,11 @@ impl Config {
             "dist.listen" => self.dist.listen = s(value)?,
             "dist.workers" => self.dist.workers = u(value)?,
             "dist.io_timeout_secs" => self.dist.io_timeout_secs = f(value)?,
+            "storage.resident_budget_mib" => self.storage.resident_budget_mib = f(value)?,
+            "storage.dir" => self.storage.dir = s(value)?,
+            "storage.compression" => {
+                self.storage.compression = CompressionKind::parse(&s(value)?)?
+            }
             "runtime.artifacts_dir" => self.runtime.artifacts_dir = s(value)?,
             "output.dir" => self.output.dir = s(value)?,
             "output.write_csv" => self.output.write_csv = b(value)?,
@@ -738,6 +798,12 @@ impl Config {
         }
         if self.serve.iterations == 0 {
             bail!("serve.iterations must be >= 1");
+        }
+        if self.storage.resident_budget_mib < 0.0 {
+            bail!("storage.resident_budget_mib must be >= 0 (0 = fully resident)");
+        }
+        if self.storage.resident_budget_mib > 0.0 && self.storage.dir.is_empty() {
+            bail!("storage.resident_budget_mib > 0 requires storage.dir");
         }
         if self.coord.execution == ExecutionMode::Distributed {
             if self.coord.pipeline == PipelineMode::DoubleBuffer {
@@ -922,6 +988,28 @@ machines = 10
         assert_eq!(d.lease_timeout_rounds, 0);
         assert_eq!(d.checkpoint_every_iters, 0);
         assert!(d.checkpoint_dir.is_empty() && d.fault_script.is_empty());
+    }
+
+    #[test]
+    fn storage_section_parses_and_validates() {
+        let cfg = Config::from_str(
+            "[storage]\nresident_budget_mib = 0.5\ndir = \"/tmp/spill\"\ncompression = \"sparse\"",
+        )
+        .unwrap();
+        assert_eq!(cfg.storage.resident_budget_mib, 0.5);
+        assert_eq!(cfg.storage.dir, "/tmp/spill");
+        assert_eq!(cfg.storage.compression, CompressionKind::Sparse);
+        // A budget needs somewhere to spill to.
+        assert!(Config::from_str("[storage]\nresident_budget_mib = 1.0").is_err());
+        assert!(Config::from_str("[storage]\nresident_budget_mib = -1.0").is_err());
+        assert!(Config::from_str("[storage]\ncompression = \"zip\"").is_err());
+        assert_eq!(CompressionKind::parse("none").unwrap().name(), "none");
+        assert_eq!(CompressionKind::parse("csr").unwrap(), CompressionKind::Sparse);
+        // Defaults: tier off, no compression.
+        let d = StorageConfig::default();
+        assert_eq!(d.resident_budget_mib, 0.0);
+        assert!(d.dir.is_empty());
+        assert_eq!(d.compression, CompressionKind::None);
     }
 
     #[test]

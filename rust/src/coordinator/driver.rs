@@ -41,7 +41,7 @@ use crate::config::{CkSyncPolicy, Config};
 use crate::corpus::{self, Corpus, DataPartition, InvertedIndex};
 use crate::engine::backend::{backend_for, run_round_degraded, Backend, RoundCtx};
 use crate::error::MpldaError;
-use crate::kvstore::{KvStore, ShardMap};
+use crate::kvstore::{KvStore, ShardMap, TransferKind};
 use crate::metrics::{joint_log_likelihood_blocks, DeltaTracker, PipelineStats};
 use crate::model::checkpoint::{self, ResumeState};
 use crate::model::{
@@ -66,8 +66,14 @@ pub struct IterStats {
     pub tokens: u64,
     /// Mean `Δ_{r,i}` over the iteration's rounds.
     pub mean_delta: f64,
-    /// Communication bytes this iteration.
+    /// Network communication bytes this iteration (disk-tier spill/recall
+    /// traffic is excluded — it never crosses the wire).
     pub comm_bytes: u64,
+    /// Bytes spilled to the out-of-core disk tier this iteration (0 when
+    /// `[storage]` is unattached).
+    pub spill_bytes: u64,
+    /// Bytes recalled from the out-of-core disk tier this iteration.
+    pub recall_bytes: u64,
     /// Host compute seconds actually spent sampling this iteration.
     pub host_compute_secs: f64,
     /// Host wall seconds this iteration's critical path spent fetching
@@ -262,6 +268,24 @@ impl Driver {
             // protocol is armed.
             kv.enable_recovery();
         }
+        if cfg.storage.resident_budget_mib > 0.0 {
+            // Out-of-core tier: shard-homes spill past the resident budget
+            // into log-structured segments under `storage.dir`. Attached
+            // before any lease, so the attach-time spill of the coldest
+            // initial blocks happens outside every iteration's metering.
+            let budget =
+                ((cfg.storage.resident_budget_mib * (1u64 << 20) as f64).round() as u64).max(1);
+            let encoding = match cfg.storage.compression {
+                crate::config::CompressionKind::None => crate::storage::Encoding::Wire,
+                crate::config::CompressionKind::Sparse => crate::storage::Encoding::Sparse,
+            };
+            kv.attach_storage(crate::storage::StorageOptions {
+                dir: std::path::PathBuf::from(&cfg.storage.dir),
+                budget_bytes: budget,
+                encoding,
+            })
+            .context("attaching out-of-core block storage")?;
+        }
         let faults = FaultScript::parse(&cfg.coord.fault_script)
             .context("parsing coord.fault_script")?;
         let ckpt = if cfg.coord.checkpoint_every_iters > 0 {
@@ -319,8 +343,20 @@ impl Driver {
             let dt_bytes: u64 = w.docs.iter().map(|&d| dt.doc(d as usize).bytes()).sum();
             mem.charge(w.machine, MemCategory::DocTopic, dt_bytes)?;
         }
-        for (node, bytes) in kv.shard_bytes(spec.machines).into_iter().enumerate() {
-            mem.charge(node, MemCategory::KvShard, bytes)?;
+        let shard = kv.shard_bytes(spec.machines);
+        if kv.storage_attached() {
+            // Resident working set split from the (recovery-copy) shard
+            // remainder, so `MemCategory::Resident`'s peak witnesses the
+            // spill policy's budget enforcement.
+            let resident = kv.resident_tier_bytes(spec.machines);
+            for node in 0..spec.machines {
+                mem.charge(node, MemCategory::Resident, resident[node])?;
+                mem.charge(node, MemCategory::KvShard, shard[node] - resident[node])?;
+            }
+        } else {
+            for (node, bytes) in shard.into_iter().enumerate() {
+                mem.charge(node, MemCategory::KvShard, bytes)?;
+            }
         }
 
         let schedule = RotationSchedule::new(cfg.coord.workers, cfg.coord.blocks);
@@ -466,7 +502,9 @@ impl Driver {
     /// seed.
     pub fn run_iteration(&mut self) -> Result<IterStats> {
         let rounds = self.schedule.rounds_per_iteration();
-        let bytes_before = self.kv.total_bytes();
+        let net_bytes_before = self.kv.network_bytes();
+        let spill_before = self.kv.bytes_of(TransferKind::BlockSpill);
+        let recall_before = self.kv.bytes_of(TransferKind::BlockRecall);
         let fetch_stall_before = self.pstats.fetch_stall_secs;
         let mut tokens = 0u64;
         let mut host_secs_total = 0.0;
@@ -695,9 +733,19 @@ impl Driver {
                 });
             }
 
-            // KV shard memory can shift as rows grow/shrink.
-            for (node, bytes) in self.kv.shard_bytes(self.spec.machines).into_iter().enumerate() {
-                self.mem.set(node, MemCategory::KvShard, bytes)?;
+            // KV shard memory can shift as rows grow/shrink (and, with the
+            // disk tier attached, as blocks spill and recall).
+            let shard = self.kv.shard_bytes(self.spec.machines);
+            if self.kv.storage_attached() {
+                let resident = self.kv.resident_tier_bytes(self.spec.machines);
+                for node in 0..self.spec.machines {
+                    self.mem.set(node, MemCategory::Resident, resident[node])?;
+                    self.mem.set(node, MemCategory::KvShard, shard[node] - resident[node])?;
+                }
+            } else {
+                for (node, bytes) in shard.into_iter().enumerate() {
+                    self.mem.set(node, MemCategory::KvShard, bytes)?;
+                }
             }
 
             // The lease clock ticks at round boundaries; `leased_at` ages
@@ -746,7 +794,9 @@ impl Driver {
             sim_time: self.sim_time(),
             tokens,
             mean_delta: delta_sum / rounds as f64,
-            comm_bytes: self.kv.total_bytes() - bytes_before,
+            comm_bytes: self.kv.network_bytes() - net_bytes_before,
+            spill_bytes: self.kv.bytes_of(TransferKind::BlockSpill) - spill_before,
+            recall_bytes: self.kv.bytes_of(TransferKind::BlockRecall) - recall_before,
             host_compute_secs: host_secs_total,
             fetch_stall_secs: self.pstats.fetch_stall_secs - fetch_stall_before,
         })
@@ -971,7 +1021,7 @@ impl Driver {
         }
         report.final_loglik = self.loglik();
         report.peak_mem_bytes = self.mem.max_peak();
-        report.total_comm_bytes = self.kv.total_bytes();
+        report.total_comm_bytes = self.kv.network_bytes();
         report.sim_time = self.sim_time();
         Ok(report)
     }

@@ -317,6 +317,18 @@ impl SessionBuilder {
         self
     }
 
+    /// Attach the out-of-core disk tier ([`crate::storage`]): each
+    /// KV-store shard-home keeps at most `budget_mib` MiB of model blocks
+    /// resident and spills the coldest past it into log-structured
+    /// segments under `dir` (0 disables — fully resident). Spilled blocks
+    /// are recalled transparently on lease/read, and the trained state is
+    /// bitwise identical to an unstarved run (`tests/out_of_core.rs`).
+    pub fn storage_budget<P: Into<PathBuf>>(mut self, budget_mib: f64, dir: P) -> Self {
+        self.cfg.storage.resident_budget_mib = budget_mib;
+        self.cfg.storage.dir = dir.into().to_string_lossy().into_owned();
+        self
+    }
+
     /// Typed execution selection — replaces setting `coord.execution` and
     /// `coord.pipeline` separately (the builder keeps the pair coherent,
     /// so the "pipeline without threads" foot-gun cannot be expressed).
@@ -512,10 +524,11 @@ impl Session {
         }
     }
 
-    /// Total communication bytes so far.
+    /// Total network communication bytes so far (out-of-core spill/recall
+    /// traffic is local disk I/O and excluded).
     pub fn total_comm_bytes(&self) -> u64 {
         match &self.inner {
-            Inner::ModelParallel(d) => d.kv().total_bytes(),
+            Inner::ModelParallel(d) => d.kv().network_bytes(),
             Inner::Baseline(y) => y.meter().total_bytes(),
         }
     }
@@ -576,6 +589,8 @@ impl Session {
                         tokens: ys.tokens,
                         mean_delta: 0.0,
                         comm_bytes: ys.comm_bytes,
+                        spill_bytes: 0,
+                        recall_bytes: 0,
                         host_compute_secs: ys.host_compute_secs,
                         fetch_stall_secs: 0.0,
                     },

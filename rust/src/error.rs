@@ -59,6 +59,22 @@ pub enum MpldaError {
         /// Length-prefix bytes received before EOF (1..=3).
         got: usize,
     },
+    /// A storage segment record extends past end-of-file — a torn append
+    /// from a crash mid-write. On reopen the torn tail is detected and
+    /// discarded; a mid-read hit means the file shrank underneath us.
+    SegmentTruncated {
+        /// Byte offset of the record that ran off the end of the file.
+        offset: u64,
+    },
+    /// A storage segment record failed its payload checksum or decode —
+    /// on-disk corruption, distinguished from a torn tail (which is a
+    /// clean crash artifact and silently dropped on reopen).
+    SegmentCorrupt {
+        /// Byte offset of the corrupt record.
+        offset: u64,
+        /// What failed (checksum mismatch, unknown encoding tag, …).
+        reason: String,
+    },
 }
 
 impl fmt::Display for MpldaError {
@@ -81,6 +97,12 @@ impl fmt::Display for MpldaError {
             }
             MpldaError::FrameTruncated { got } => {
                 write!(f, "connection closed mid-frame ({got} of 4 length bytes)")
+            }
+            MpldaError::SegmentTruncated { offset } => {
+                write!(f, "segment record at offset {offset} truncated (torn append)")
+            }
+            MpldaError::SegmentCorrupt { offset, reason } => {
+                write!(f, "segment record at offset {offset} corrupt: {reason}")
             }
         }
     }

@@ -22,4 +22,4 @@ pub mod traffic;
 
 pub use shard::ShardMap;
 pub use store::{KvStore, LeaseReceipt};
-pub use traffic::{TrafficMeter, Transfer};
+pub use traffic::{Transfer, TrafficMeter, TransferKind};

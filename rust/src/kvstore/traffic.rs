@@ -45,10 +45,19 @@ pub enum TransferKind {
     /// proceed concurrently. Tallied separately so serving traffic never
     /// contaminates training-communication comparisons.
     BlockRead,
+    /// A cold resident block evicted to its shard-home's disk segment
+    /// (`storage::` tier, over `storage.resident_budget_mib`). Local
+    /// disk I/O, not network: excluded from [`TrafficMeter::drain_flows`]
+    /// and [`TrafficMeter::network_bytes`], reported as disk pressure.
+    BlockSpill,
+    /// A spilled block decoded back from the disk segment on lease/read.
+    /// Local disk I/O like [`TransferKind::BlockSpill`]: metered,
+    /// reported, never timed by the network model.
+    BlockRecall,
 }
 
 /// Number of [`TransferKind`] variants (size of the per-kind tally).
-const NUM_KINDS: usize = 7;
+const NUM_KINDS: usize = 9;
 
 /// Accumulating traffic meter.
 #[derive(Debug, Default, Clone)]
@@ -56,6 +65,7 @@ pub struct TrafficMeter {
     pending: Vec<Transfer>,
     total_bytes: u64,
     by_kind: [u64; NUM_KINDS],
+    count_by_kind: [u64; NUM_KINDS],
 }
 
 fn kind_idx(k: TransferKind) -> usize {
@@ -67,7 +77,15 @@ fn kind_idx(k: TransferKind) -> usize {
         TransferKind::TotalsMerge => 4,
         TransferKind::PsSync => 5,
         TransferKind::BlockRead => 6,
+        TransferKind::BlockSpill => 7,
+        TransferKind::BlockRecall => 8,
     }
+}
+
+/// Disk-tier traffic: real bytes moved, but over a local disk, not the
+/// network — the network model must never see it as a flow.
+fn is_disk(k: TransferKind) -> bool {
+    matches!(k, TransferKind::BlockSpill | TransferKind::BlockRecall)
 }
 
 impl TrafficMeter {
@@ -75,12 +93,20 @@ impl TrafficMeter {
         Self::default()
     }
 
-    /// Record one transfer (updates the running totals and the pending
-    /// list the next phase-timing drain will consume).
+    /// Record one transfer (updates the running totals, the per-kind
+    /// count, and — for network kinds — the pending list the next
+    /// phase-timing drain will consume). Disk-tier transfers
+    /// ([`TransferKind::BlockSpill`], [`TransferKind::BlockRecall`]) are
+    /// tallied but never become flows: spilling must not perturb the
+    /// simulated network clock, or a starved run's `sim_time` series
+    /// would diverge from the resident oracle's.
     pub fn record(&mut self, src: usize, dst: usize, bytes: u64, what: TransferKind) {
         self.total_bytes += bytes;
         self.by_kind[kind_idx(what)] += bytes;
-        self.pending.push(Transfer { src, dst, bytes, what });
+        self.count_by_kind[kind_idx(what)] += 1;
+        if !is_disk(what) {
+            self.pending.push(Transfer { src, dst, bytes, what });
+        }
     }
 
     /// Take the pending transfers (for a phase's network timing) as flows.
@@ -107,6 +133,22 @@ impl TrafficMeter {
     /// Bytes recorded so far for one transfer kind.
     pub fn bytes_of(&self, kind: TransferKind) -> u64 {
         self.by_kind[kind_idx(kind)]
+    }
+
+    /// Number of transfers recorded so far for one kind (the serve tier
+    /// reports recall *counts* next to recall bytes).
+    pub fn count_of(&self, kind: TransferKind) -> u64 {
+        self.count_by_kind[kind_idx(kind)]
+    }
+
+    /// Bytes that actually crossed the network — total minus the
+    /// disk-tier spill/recall traffic. Communication-volume comparisons
+    /// (§5.3) use this so enabling out-of-core storage doesn't inflate
+    /// the reported network cost.
+    pub fn network_bytes(&self) -> u64 {
+        self.total_bytes
+            - self.bytes_of(TransferKind::BlockSpill)
+            - self.bytes_of(TransferKind::BlockRecall)
     }
 
     /// Bytes that moved *overlapped with compute* rather than on the
@@ -145,6 +187,25 @@ mod tests {
         assert_eq!(m.bytes_of(TransferKind::PsSync), 30);
         assert_eq!(m.bytes_of(TransferKind::TotalsRead), 5);
         assert_eq!(m.bytes_of(TransferKind::BlockCommit), 0);
+    }
+
+    #[test]
+    fn disk_kinds_are_metered_but_never_flow() {
+        let mut m = TrafficMeter::new();
+        m.record(0, 1, 100, TransferKind::BlockFetch);
+        m.record(1, 1, 70, TransferKind::BlockSpill);
+        m.record(1, 1, 30, TransferKind::BlockRecall);
+        m.record(1, 1, 30, TransferKind::BlockRecall);
+        // Counted as bytes moved…
+        assert_eq!(m.total_bytes(), 230);
+        assert_eq!(m.bytes_of(TransferKind::BlockSpill), 70);
+        assert_eq!(m.bytes_of(TransferKind::BlockRecall), 60);
+        assert_eq!(m.count_of(TransferKind::BlockRecall), 2);
+        // …but excluded from the network's view.
+        assert_eq!(m.network_bytes(), 100);
+        let flows = m.drain_flows();
+        assert_eq!(flows.len(), 1);
+        assert_eq!(flows[0], Flow { src: 0, dst: 1, bytes: 100 });
     }
 
     #[test]

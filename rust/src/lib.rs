@@ -39,6 +39,12 @@
 //!   groups queued documents by block, and a dependency-free TCP front
 //!   end answers fold-in queries bitwise identical to offline
 //!   [`engine::TopicModel::infer`] (DESIGN.md §Serving), and
+//! * an **out-of-core [`storage`] tier** (`[storage]` config section) —
+//!   a log-structured spill file per shard-home with checksummed,
+//!   compressed-sparse-row block records; the KV-store evicts cold
+//!   blocks past `storage.resident_budget_mib` and recalls them on
+//!   lease/read, keeping the trajectory bitwise-equal to a fully
+//!   resident run (DESIGN.md §Storage), and
 //! * a **[`distributed`] trainer** (`mplda master` / `mplda worker`,
 //!   `coord.execution = "distributed"`) — real multi-process execution
 //!   over TCP: the master owns the schedule, KV-store and iteration loop;
@@ -83,6 +89,7 @@ pub mod corpus;
 pub mod model;
 pub mod sampler;
 pub mod kvstore;
+pub mod storage;
 pub mod coordinator;
 pub mod distributed;
 pub mod engine;

@@ -299,6 +299,16 @@ fn cmd_serve(args: &Args) -> Result<()> {
         model.num_blocks(),
         fmt::bytes(model.total_block_bytes()),
     );
+    let disk = model.disk_stats();
+    if disk.attached {
+        println!(
+            "out-of-core tier attached: {} spilled (budget {} MiB, dir {}) — `stats` reports \
+             disk_recalls / disk_recall_p99_ms",
+            fmt::bytes(disk.spill_bytes),
+            cfg.storage.resident_budget_mib,
+            cfg.storage.dir,
+        );
+    }
     let server = mplda::serve::Server::serve(model, &cfg.serve)?;
     println!("serving on {}", server.addr());
     println!("protocol: length-prefixed JSON — ping | infer | stats | shutdown");

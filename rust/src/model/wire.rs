@@ -128,6 +128,13 @@ pub fn decode_block(buf: &[u8]) -> Result<ModelBlock> {
     let mut rows = Vec::with_capacity(nrows);
     for _ in 0..nrows {
         let nnz = get_varint(buf, &mut pos)? as usize;
+        // Every entry costs at least two bytes (two varints): bound the
+        // claimed count by the remaining buffer before any allocation
+        // trusts it — a hostile varint fits a 64 MiB frame but can claim
+        // 2^64 entries.
+        if nnz > (buf.len() - pos) / 2 {
+            bail!("row claims {nnz} entries but only {} bytes remain", buf.len() - pos);
+        }
         let mut entries = Vec::with_capacity(nnz);
         let mut prev = 0u32;
         for _ in 0..nnz {

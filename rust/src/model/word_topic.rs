@@ -94,9 +94,15 @@ impl SparseRow {
         self.entries.iter().map(|&(_, c)| c as u64).sum()
     }
 
-    /// Approximate heap bytes (memory accounting).
+    /// Approximate heap bytes (memory accounting). Length-based, not
+    /// capacity-based: byte accounting must be a pure function of row
+    /// *content* so that a block which took a detour through the disk
+    /// tier (whose codec normalizes capacity to nnz) accounts identically
+    /// to one that stayed resident — budget decisions built on these
+    /// bytes (pipeline staging, spill eviction) feed the bitwise
+    /// determinism bar.
     pub fn bytes(&self) -> u64 {
-        (self.entries.capacity() * 8 + 24) as u64
+        (self.entries.len() * 8 + 24) as u64
     }
 }
 

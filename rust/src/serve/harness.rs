@@ -77,7 +77,7 @@ impl Harness {
 
     /// Current serving statistics (what the TCP `stats` request returns).
     pub fn stats(&self) -> StatsSnapshot {
-        self.metrics.snapshot(self.model.cache_stats())
+        self.metrics.snapshot(self.model.cache_stats(), self.model.disk_stats())
     }
 
     /// Close the queue, drain outstanding work, and join the executor.

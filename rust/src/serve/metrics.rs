@@ -12,7 +12,7 @@ use std::sync::Mutex;
 use std::time::Instant;
 
 use super::json::Json;
-use super::model::CacheStats;
+use super::model::{CacheStats, DiskStats};
 
 /// Number of log₂ buckets: covers 1 µs … ~2^39 µs (≈ 6 days).
 const BUCKETS: usize = 40;
@@ -112,7 +112,7 @@ impl ServeMetrics {
 
     /// A consistent-enough snapshot for reporting (counters are relaxed;
     /// the histogram is copied under its lock).
-    pub fn snapshot(&self, cache: CacheStats) -> StatsSnapshot {
+    pub fn snapshot(&self, cache: CacheStats, disk: DiskStats) -> StatsSnapshot {
         let hist = self.hist.lock().expect("metrics lock poisoned").clone();
         let elapsed = self.start.elapsed().as_secs_f64().max(1e-9);
         let docs = self.docs.load(Ordering::Relaxed);
@@ -127,6 +127,7 @@ impl ServeMetrics {
             p95_ms: hist.percentile_ms(95.0),
             p99_ms: hist.percentile_ms(99.0),
             cache,
+            disk,
         }
     }
 }
@@ -155,6 +156,9 @@ pub struct StatsSnapshot {
     pub p99_ms: f64,
     /// Block-cache counters at snapshot time.
     pub cache: CacheStats,
+    /// Out-of-core disk-tier counters at snapshot time (all zeros when
+    /// the backing store has no disk tier attached).
+    pub disk: DiskStats,
 }
 
 impl StatsSnapshot {
@@ -180,6 +184,11 @@ impl StatsSnapshot {
             ("cache_resident_bytes".into(), Json::num(self.cache.resident_bytes as f64)),
             ("cache_peak_bytes".into(), Json::num(self.cache.peak_bytes as f64)),
             ("cache_budget_bytes".into(), Json::num(self.cache.budget_bytes as f64)),
+            ("disk_attached".into(), Json::Bool(self.disk.attached)),
+            ("disk_recalls".into(), Json::num(self.disk.recalls as f64)),
+            ("disk_recall_bytes".into(), Json::num(self.disk.recall_bytes as f64)),
+            ("disk_spill_bytes".into(), Json::num(self.disk.spill_bytes as f64)),
+            ("disk_recall_p99_ms".into(), Json::num(self.disk.recall_p99_ms)),
         ])
     }
 }
@@ -216,7 +225,14 @@ mod tests {
         m.record_batch();
         m.record_request(1_000, 4, 120);
         m.record_request(2_000, 1, 30);
-        let snap = m.snapshot(CacheStats::default());
+        let disk = DiskStats {
+            attached: true,
+            recalls: 3,
+            recall_bytes: 700,
+            spill_bytes: 900,
+            recall_p99_ms: 0.5,
+        };
+        let snap = m.snapshot(CacheStats::default(), disk);
         assert_eq!(snap.requests, 2);
         assert_eq!(snap.docs, 5);
         assert_eq!(snap.tokens, 150);
@@ -226,6 +242,9 @@ mod tests {
         let j = snap.to_json();
         assert_eq!(j.get("type").and_then(Json::as_str), Some("stats"));
         assert_eq!(j.get("docs").and_then(Json::as_u64), Some(5));
+        assert_eq!(j.get("disk_attached"), Some(&Json::Bool(true)));
+        assert_eq!(j.get("disk_recalls").and_then(Json::as_u64), Some(3));
+        assert_eq!(j.get("disk_spill_bytes").and_then(Json::as_u64), Some(900));
         // Round-trips through the wire format.
         assert_eq!(Json::parse(&j.render()).unwrap(), j);
     }

@@ -46,5 +46,5 @@ pub use batcher::{BatchOpts, Batcher, InferRequest};
 pub use harness::Harness;
 pub use json::Json;
 pub use metrics::{LatencyHistogram, ServeMetrics, StatsSnapshot};
-pub use model::{CacheStats, ShardedTopicModel};
+pub use model::{CacheStats, DiskStats, ShardedTopicModel};
 pub use server::{Client, Server};

@@ -31,14 +31,16 @@
 
 use std::collections::BTreeMap;
 use std::sync::{Arc, Mutex};
+use std::time::Instant;
 
 use anyhow::{bail, Context, Result};
 
+use super::metrics::LatencyHistogram;
 use crate::cluster::{ClusterSpec, MemCategory, MemoryAccountant};
 use crate::config::ClusterConfig;
 use crate::engine::infer::{infer_batch, infer_batch_reusing, FrozenStats, RowSource};
 use crate::engine::{BowDoc, DocTopics, InferOptions};
-use crate::kvstore::{KvStore, ShardMap};
+use crate::kvstore::{KvStore, ShardMap, TransferKind};
 use crate::model::{Assignments, BlockMap, ModelBlock, SparseRow, TopicCounts, WordTopicTable};
 use crate::sampler::{Params, Scratch};
 
@@ -77,6 +79,26 @@ impl CacheStats {
     }
 }
 
+/// Disk-tier counters, snapshotted by [`ShardedTopicModel::disk_stats`]:
+/// the out-of-core block store's spill/recall traffic
+/// ([`crate::storage`]) as seen from the serving tier, plus the recall
+/// latency distribution this process actually paid. All zeros when the
+/// store has no disk tier attached.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct DiskStats {
+    /// Whether an out-of-core tier is attached to the backing store.
+    pub attached: bool,
+    /// Blocks recalled (decoded back) from disk segments.
+    pub recalls: u64,
+    /// Segment bytes read back by recalls.
+    pub recall_bytes: u64,
+    /// Segment bytes appended by spills.
+    pub spill_bytes: u64,
+    /// 99th-percentile recall latency in milliseconds (log₂-bucket upper
+    /// bound; 0 with no samples).
+    pub recall_p99_ms: f64,
+}
+
 struct CacheEntry {
     block: Arc<ModelBlock>,
     bytes: u64,
@@ -108,6 +130,11 @@ pub struct ShardedTopicModel {
     stats: FrozenStats,
     num_words: usize,
     cache: Mutex<BlockCache>,
+    /// Wall-clock latency of cache misses that hit a **spilled** block —
+    /// the price of serving straight from an out-of-core store
+    /// ([`ShardedTopicModel::disk_stats`]). Separate from the cache lock:
+    /// recalls are timed with that lock released.
+    recall_hist: Mutex<LatencyHistogram>,
 }
 
 /// One request's working set, pinned for the request's whole duration:
@@ -179,7 +206,14 @@ impl ShardedTopicModel {
             bypasses: 0,
             evictions: 0,
         };
-        Ok(ShardedTopicModel { kv, map, stats, num_words, cache: Mutex::new(cache) })
+        Ok(ShardedTopicModel {
+            kv,
+            map,
+            stats,
+            num_words,
+            cache: Mutex::new(cache),
+            recall_hist: Mutex::new(LatencyHistogram::new()),
+        })
     }
 
     /// Build a sharded serving model from a dense table (tests and
@@ -271,8 +305,16 @@ impl ShardedTopicModel {
                 return Ok(block);
             }
         }
-        // Page in with the lock released.
+        // Page in with the lock released. A spilled block pays a disk
+        // recall inside the store read — time it so `disk_stats` can
+        // report the latency distribution of serving out-of-core.
+        let spilled = self.kv.is_spilled(id);
+        let started = Instant::now();
         let block = self.kv.read_block(id, 0)?;
+        if spilled {
+            let micros = started.elapsed().as_micros().min(u64::MAX as u128) as u64;
+            self.recall_hist.lock().expect("recall histogram lock poisoned").record(micros);
+        }
         let bytes = block.bytes();
         let arc = Arc::new(block);
         let mut cache = self.cache.lock().expect("serve cache lock poisoned");
@@ -383,6 +425,21 @@ impl ShardedTopicModel {
             resident_bytes: cache.bytes,
             peak_bytes: cache.mem.peak_category(0, MemCategory::ServeCache),
             budget_bytes: cache.budget,
+        }
+    }
+
+    /// Snapshot the disk-tier counters: the backing store's lifetime
+    /// spill/recall byte totals plus the recall latency distribution this
+    /// serving process paid on cache misses of spilled blocks. All zeros
+    /// when no out-of-core tier is attached.
+    pub fn disk_stats(&self) -> DiskStats {
+        let hist = self.recall_hist.lock().expect("recall histogram lock poisoned");
+        DiskStats {
+            attached: self.kv.storage_attached(),
+            recalls: self.kv.count_of(TransferKind::BlockRecall),
+            recall_bytes: self.kv.bytes_of(TransferKind::BlockRecall),
+            spill_bytes: self.kv.bytes_of(TransferKind::BlockSpill),
+            recall_p99_ms: hist.percentile_ms(99.0),
         }
     }
 
@@ -606,6 +663,59 @@ mod tests {
         let after = m.cache_stats();
         assert_eq!(after.misses, before.misses, "warmed batch must not re-fetch");
         assert!(after.hits > before.hits);
+    }
+
+    #[test]
+    fn disk_stats_track_recalls_from_a_spilled_store() {
+        use crate::storage::{Encoding, StorageOptions};
+        // A store with no disk tier reports zeros.
+        let (wt, ck, params) = table(80, 8, 9);
+        let plain = ShardedTopicModel::from_table(&wt, ck.clone(), params, 8, 0.0).unwrap();
+        let zero = plain.disk_stats();
+        assert!(!zero.attached);
+        assert_eq!((zero.recalls, zero.spill_bytes, zero.recall_bytes), (0, 0, 0));
+        assert_eq!(zero.recall_p99_ms, 0.0);
+
+        // Same model behind a fully starved out-of-core store: a 1-byte
+        // budget spills every block, so serving pages each one off disk.
+        let map = BlockMap::strided(80, 8);
+        let blocks = Assignments::build_blocks(&wt, &map);
+        let spec = ClusterSpec::from_config(&ClusterConfig {
+            machines: 1,
+            ..ClusterConfig::default()
+        });
+        let shards = ShardMap::round_robin(8, &spec);
+        let mut kv = KvStore::new(blocks, ck.clone(), shards);
+        let dir = std::env::temp_dir().join(format!("mplda_serve_disk_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        kv.attach_storage(StorageOptions {
+            dir: dir.clone(),
+            budget_bytes: 1,
+            encoding: Encoding::Sparse,
+        })
+        .unwrap();
+        let m = ShardedTopicModel::new(kv, map, params, 80, 0.0).unwrap();
+        let before = m.disk_stats();
+        assert!(before.attached);
+        assert!(before.spill_bytes > 0, "a 1-byte budget must spill everything");
+        assert_eq!(before.recalls, 0, "no serving traffic yet");
+
+        // Served results still equal the offline model, and the recalls
+        // show up in the counters and the latency histogram.
+        let offline = crate::engine::TopicModel::new(wt.clone(), ck, params).unwrap();
+        let qs = docs(80, 6, 25, 23);
+        let opts = InferOptions { iterations: 5, seed: 7, threads: 1 };
+        let reference = offline.infer_with(&qs, &opts).unwrap();
+        let served = m.infer_with(&qs, &opts).unwrap();
+        let snap = |dt: &DocTopics| -> Vec<Vec<(u32, u32)>> {
+            (0..dt.len()).map(|d| dt.counts(d).iter().collect()).collect()
+        };
+        assert_eq!(snap(&reference), snap(&served), "spilled serving must stay bitwise equal");
+        let after = m.disk_stats();
+        assert!(after.recalls > 0, "spilled blocks must have been recalled");
+        assert!(after.recall_bytes > 0);
+        assert!(after.recall_p99_ms > 0.0, "recall latencies must be recorded");
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

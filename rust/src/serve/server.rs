@@ -167,9 +167,10 @@ fn handle_conn(mut stream: TcpStream, ctx: &ConnCtx) {
                     }
                 }
             },
-            Some("stats") => {
-                ctx.metrics.snapshot(ctx.model.cache_stats()).to_json()
-            }
+            Some("stats") => ctx
+                .metrics
+                .snapshot(ctx.model.cache_stats(), ctx.model.disk_stats())
+                .to_json(),
             Some("shutdown") => {
                 let _ = write_frame(&mut stream, &Json::Obj(vec![(
                     "type".into(),

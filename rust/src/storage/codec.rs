@@ -1,0 +1,241 @@
+//! Block payload codecs for the on-disk tier.
+//!
+//! A spilled [`ModelBlock`] is serialized to a byte payload before being
+//! appended to its home's [`segment`](super::segment) file. Two encodings
+//! exist:
+//!
+//! * [`Encoding::Wire`] — the existing `model::wire` varint-delta codec,
+//!   verbatim (`storage.compression = "none"`). Already compact for dense
+//!   blocks; one byte per empty row.
+//! * [`Encoding::Sparse`] — a compressed sparse row layout for long-tail
+//!   word–topic data (`storage.compression = "sparse"`): the per-row
+//!   lengths are run-length encoded, so a cold block whose rows are
+//!   overwhelmingly empty costs disk bytes proportional to its non-zeros
+//!   (plus one `(runlen, nnz)` varint pair per *run* of equal-length
+//!   rows), not `V_block × K`.
+//!
+//! Both encodings are **lossless**: decode(encode(b)) reconstructs `b`
+//! exactly (rows, range, stride; the alias slot is rebuilt empty, which
+//! matches a block's post-commit state). This is the foundation of the
+//! out-of-core bitwise-equality bar — see DESIGN.md §Storage.
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::model::block::ModelBlock;
+use crate::model::wire::{get_varint, put_varint};
+use crate::model::word_topic::SparseRow;
+
+/// How a segment payload is encoded. The tag byte is stored in every
+/// segment record so a segment can mix encodings (e.g. after a config
+/// change followed by crash recovery).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Encoding {
+    /// `model::wire::encode_block` — varint topic-deltas, dense row list.
+    Wire,
+    /// Compressed sparse rows: RLE row-length table + varint entries.
+    Sparse,
+}
+
+impl Encoding {
+    /// Single-byte on-disk tag.
+    pub fn tag(self) -> u8 {
+        match self {
+            Encoding::Wire => 0,
+            Encoding::Sparse => 1,
+        }
+    }
+
+    /// Inverse of [`Encoding::tag`].
+    pub fn from_tag(tag: u8) -> Result<Encoding> {
+        match tag {
+            0 => Ok(Encoding::Wire),
+            1 => Ok(Encoding::Sparse),
+            other => bail!("unknown storage encoding tag {other}"),
+        }
+    }
+}
+
+/// Encode a block under the given encoding.
+pub fn encode_block(block: &ModelBlock, encoding: Encoding) -> Vec<u8> {
+    match encoding {
+        Encoding::Wire => crate::model::wire::encode_block(block),
+        Encoding::Sparse => encode_sparse(block),
+    }
+}
+
+/// Decode a payload produced by [`encode_block`] under the same encoding.
+pub fn decode_block(buf: &[u8], encoding: Encoding) -> Result<ModelBlock> {
+    match encoding {
+        Encoding::Wire => crate::model::wire::decode_block(buf),
+        Encoding::Sparse => decode_sparse(buf),
+    }
+}
+
+/// Compressed-sparse-row block layout:
+///
+/// ```text
+/// header  := id:u32le  lo:u32le  hi:u32le  stride:varint  nrows:varint
+/// rowlens := (runlen:varint  nnz:varint)*     Σ runlen == nrows
+/// entries := per row, nnz × (topic_delta:varint  count:varint)
+/// ```
+///
+/// Topic ids within a row are strictly increasing, so they are stored as
+/// deltas from the previous topic (first entry: the topic itself), exactly
+/// as in `model::wire`. The row-length table collapses runs of equal-nnz
+/// rows — on long-tail data the dominant run is `nnz == 0`.
+fn encode_sparse(block: &ModelBlock) -> Vec<u8> {
+    let mut out = Vec::with_capacity(64 + block.nnz() * 2);
+    out.extend_from_slice(&block.id.to_le_bytes());
+    out.extend_from_slice(&block.lo.to_le_bytes());
+    out.extend_from_slice(&block.hi.to_le_bytes());
+    put_varint(&mut out, block.stride as u64);
+    put_varint(&mut out, block.rows.len() as u64);
+    // RLE row-length table.
+    let mut i = 0;
+    while i < block.rows.len() {
+        let nnz = block.rows[i].nnz();
+        let mut run = 1u64;
+        while i + (run as usize) < block.rows.len() && block.rows[i + run as usize].nnz() == nnz {
+            run += 1;
+        }
+        put_varint(&mut out, run);
+        put_varint(&mut out, nnz as u64);
+        i += run as usize;
+    }
+    // Entry table.
+    for row in &block.rows {
+        let mut prev = 0u32;
+        for (k, c) in row.iter() {
+            put_varint(&mut out, (k - prev) as u64);
+            put_varint(&mut out, c as u64);
+            prev = k;
+        }
+    }
+    out
+}
+
+fn decode_sparse(buf: &[u8]) -> Result<ModelBlock> {
+    ensure!(buf.len() >= 12, "sparse block header truncated");
+    let id = u32::from_le_bytes(buf[0..4].try_into().unwrap());
+    let lo = u32::from_le_bytes(buf[4..8].try_into().unwrap());
+    let hi = u32::from_le_bytes(buf[8..12].try_into().unwrap());
+    let mut pos = 12;
+    let stride = get_varint(buf, &mut pos).context("sparse block stride")? as u32;
+    ensure!(stride > 0, "zero stride in sparse block");
+    let nrows = get_varint(buf, &mut pos).context("sparse block row count")? as usize;
+    ensure!(hi >= lo, "inverted word range [{lo},{hi})");
+    let expect = ((hi - lo) as usize).div_ceil(stride as usize);
+    ensure!(
+        nrows == expect,
+        "row count {nrows} does not match range [{lo},{hi}) stride {stride}"
+    );
+    // RLE row-length table.
+    let mut row_nnz = Vec::with_capacity(nrows);
+    while row_nnz.len() < nrows {
+        let run = get_varint(buf, &mut pos).context("sparse block run length")? as usize;
+        let nnz = get_varint(buf, &mut pos).context("sparse block run nnz")? as usize;
+        ensure!(run > 0, "zero-length run in sparse block row table");
+        ensure!(
+            row_nnz.len() + run <= nrows,
+            "row-length runs overflow row count {nrows}"
+        );
+        for _ in 0..run {
+            row_nnz.push(nnz);
+        }
+    }
+    // Every entry costs at least two bytes (two varints), so the claimed
+    // totals are bounded by the remaining buffer — reject hostile counts
+    // before any `with_capacity` trusts them.
+    let total_nnz = row_nnz.iter().fold(0u64, |a, &n| a.saturating_add(n as u64));
+    ensure!(
+        total_nnz <= (buf.len() - pos) as u64 / 2,
+        "entry table claims {total_nnz} entries but only {} bytes remain",
+        buf.len() - pos
+    );
+    // Entry table.
+    let mut rows = Vec::with_capacity(nrows);
+    for (r, &nnz) in row_nnz.iter().enumerate() {
+        let mut entries = Vec::with_capacity(nnz);
+        let mut prev = 0u64;
+        for _ in 0..nnz {
+            let dk = get_varint(buf, &mut pos).with_context(|| format!("row {r} topic delta"))?;
+            let c = get_varint(buf, &mut pos).with_context(|| format!("row {r} count"))?;
+            let k = prev + dk;
+            ensure!(k <= u32::MAX as u64, "topic id {k} out of range in row {r}");
+            ensure!(c > 0 && c <= u32::MAX as u64, "bad count {c} in row {r}");
+            entries.push((k as u32, c as u32));
+            prev = k;
+        }
+        rows.push(SparseRow::from_entries(entries));
+    }
+    ensure!(pos == buf.len(), "trailing bytes after sparse block");
+    Ok(ModelBlock { id, lo, hi, stride, rows, alias: Default::default() })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    fn sample_block(seed: u64, lo: u32, hi: u32, k: u32, fill: f64) -> ModelBlock {
+        let mut b = ModelBlock::empty(7, lo, hi);
+        let mut rng = Pcg64::new(seed);
+        for w in lo..hi {
+            for t in 0..k {
+                if rng.next_f64() < fill {
+                    let c = 1 + rng.next_below(40) as u32;
+                    for _ in 0..c {
+                        b.row_mut(w).inc(t);
+                    }
+                }
+            }
+        }
+        b
+    }
+
+    #[test]
+    fn sparse_round_trip_dense_and_longtail() {
+        for fill in [0.0, 0.02, 0.5, 1.0] {
+            let b = sample_block(9, 30, 61, 12, fill);
+            let enc = encode_block(&b, Encoding::Sparse);
+            let back = decode_block(&enc, Encoding::Sparse).unwrap();
+            assert_eq!(b.rows, back.rows, "fill={fill}");
+            assert_eq!((b.id, b.lo, b.hi, b.stride), (back.id, back.lo, back.hi, back.stride));
+        }
+    }
+
+    #[test]
+    fn wire_encoding_matches_model_wire() {
+        let b = sample_block(3, 0, 17, 8, 0.3);
+        assert_eq!(encode_block(&b, Encoding::Wire), crate::model::wire::encode_block(&b));
+    }
+
+    #[test]
+    fn sparse_beats_wire_on_longtail_blocks() {
+        // 1000 words, 2% of (word, topic) cells occupied: most rows empty.
+        let b = sample_block(11, 0, 1000, 64, 0.002);
+        let sparse = encode_block(&b, Encoding::Sparse).len();
+        let wire = encode_block(&b, Encoding::Wire).len();
+        assert!(sparse < wire, "sparse={sparse} wire={wire}");
+    }
+
+    #[test]
+    fn sparse_decode_rejects_truncation_and_garbage() {
+        let b = sample_block(5, 0, 40, 16, 0.2);
+        let enc = encode_block(&b, Encoding::Sparse);
+        for cut in [0, 5, 11, enc.len() / 2, enc.len() - 1] {
+            assert!(decode_block(&enc[..cut], Encoding::Sparse).is_err(), "cut={cut}");
+        }
+        let mut trailing = enc.clone();
+        trailing.push(0);
+        assert!(decode_block(&trailing, Encoding::Sparse).is_err());
+    }
+
+    #[test]
+    fn encoding_tag_round_trips() {
+        for e in [Encoding::Wire, Encoding::Sparse] {
+            assert_eq!(Encoding::from_tag(e.tag()).unwrap(), e);
+        }
+        assert!(Encoding::from_tag(9).is_err());
+    }
+}

@@ -1,0 +1,45 @@
+//! Out-of-core block storage: the disk tier under the KV-store.
+//!
+//! ROADMAP item 3 — the paper's 200-billion-variable headline is only
+//! reachable when model size stops being bounded by the smallest node's
+//! RAM. This module provides the mechanism: each shard-home machine gets a
+//! log-structured [`segment::HomeSegment`] file, and the
+//! [`KvStore`](crate::kvstore::KvStore) spills cold resident blocks to it
+//! whenever the home's resident bytes exceed `storage.resident_budget_mib`,
+//! recalling them transparently on the next lease or read.
+//!
+//! * [`codec`] — block payload encodings: the `model::wire` varint format
+//!   verbatim, or a compressed-sparse-row layout whose disk bytes are
+//!   proportional to non-zeros (long-tail blocks are mostly empty rows).
+//! * [`segment`] — the append-on-commit record log with checksummed
+//!   records, torn-tail recovery, and dead-byte compaction.
+//!
+//! The tier is **transparent**: spill/recall never changes block content
+//! (the codecs are lossless), never enters the network model
+//! (`TransferKind::{BlockSpill, BlockRecall}` are metered but filtered
+//! out of simulated flows), and evicts by a deterministic
+//! (last-commit-round, block-id) rule — so a starved run is bitwise-equal
+//! (model digest, LL series, served `DocTopics`) to a fully-resident one.
+//! DESIGN.md §Storage carries the full argument.
+
+pub mod codec;
+pub mod segment;
+
+use std::path::PathBuf;
+
+pub use codec::Encoding;
+pub use segment::HomeSegment;
+
+/// Configuration of the disk tier, attached to a `KvStore` via
+/// [`KvStore::attach_storage`](crate::kvstore::KvStore::attach_storage).
+#[derive(Debug, Clone)]
+pub struct StorageOptions {
+    /// Directory holding one `home-<m>.seg` per shard-home. Created on
+    /// attach; each concurrent run needs its own directory.
+    pub dir: PathBuf,
+    /// Resident-block byte budget **per shard-home machine**. Commits
+    /// that push a home past this spill its coldest blocks to disk.
+    pub budget_bytes: u64,
+    /// Payload encoding for spilled blocks.
+    pub encoding: Encoding,
+}

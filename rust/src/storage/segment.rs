@@ -1,0 +1,437 @@
+//! Log-structured segment file: one per shard-home machine.
+//!
+//! A [`HomeSegment`] is an append-only record log on disk plus an
+//! in-memory `block → (offset, len, encoding)` index. Spilling a block
+//! appends a record; re-spilling the same block appends a *new* record and
+//! marks the old one dead (the index always points at the latest). When
+//! dead bytes outgrow live bytes the segment compacts: live records are
+//! rewritten to a temp file which atomically renames over the log.
+//!
+//! Record layout (little-endian):
+//! ```text
+//! Record := payload_len:u32  block_id:u32  encoding:u8  checksum:u64  payload
+//! ```
+//! `checksum` is FNV-1a over the payload. On reopen the log is scanned
+//! sequentially; the first record that runs past end-of-file or fails its
+//! checksum is treated as a torn final append (crash mid-write) and the
+//! file is truncated there. Corruption detected on a *read* — the record
+//! was fine at scan time — surfaces as the typed
+//! [`MpldaError::SegmentCorrupt`] / [`MpldaError::SegmentTruncated`].
+
+use std::collections::BTreeMap;
+use std::fs::{File, OpenOptions};
+use std::io::{Read, Seek, SeekFrom, Write};
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::error::MpldaError;
+use crate::storage::codec::Encoding;
+
+/// Fixed per-record header: `len:u32 id:u32 encoding:u8 checksum:u64`.
+const HEADER_LEN: u64 = 4 + 4 + 1 + 8;
+
+/// Don't bother compacting segments smaller than this.
+const COMPACT_MIN_DEAD: u64 = 4096;
+
+/// FNV-1a 64-bit — dependency-free payload checksum.
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf29ce484222325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+#[derive(Debug, Clone, Copy)]
+struct RecordLoc {
+    /// Byte offset of the record header in the file.
+    offset: u64,
+    /// Payload length in bytes.
+    len: u32,
+    encoding: Encoding,
+}
+
+/// Append-only spill log for one shard-home, with an in-memory index.
+#[derive(Debug)]
+pub struct HomeSegment {
+    path: PathBuf,
+    file: File,
+    index: BTreeMap<u32, RecordLoc>,
+    /// Bytes (header + payload) of records the index still points at.
+    live_bytes: u64,
+    /// Bytes of superseded/removed records awaiting compaction.
+    dead_bytes: u64,
+    /// Current append offset (logical end of log).
+    end: u64,
+}
+
+impl HomeSegment {
+    /// Create a fresh, empty segment, truncating any existing file.
+    pub fn create(path: &Path) -> Result<HomeSegment> {
+        let file = OpenOptions::new()
+            .read(true)
+            .write(true)
+            .create(true)
+            .truncate(true)
+            .open(path)
+            .with_context(|| format!("creating segment {}", path.display()))?;
+        Ok(HomeSegment {
+            path: path.to_path_buf(),
+            file,
+            index: BTreeMap::new(),
+            live_bytes: 0,
+            dead_bytes: 0,
+            end: 0,
+        })
+    }
+
+    /// Reopen an existing segment, rebuilding the index by sequential scan.
+    /// A torn final record (crash mid-append) is detected — it runs past
+    /// end-of-file or fails its checksum — logged, and truncated away.
+    pub fn open(path: &Path) -> Result<HomeSegment> {
+        let mut file = OpenOptions::new()
+            .read(true)
+            .write(true)
+            .open(path)
+            .with_context(|| format!("opening segment {}", path.display()))?;
+        let file_len = file.metadata()?.len();
+        let mut index: BTreeMap<u32, RecordLoc> = BTreeMap::new();
+        let mut offset = 0u64;
+        let mut dead_bytes = 0u64;
+        file.seek(SeekFrom::Start(0))?;
+        while offset < file_len {
+            let torn = |why: &str| {
+                log::warn!(
+                    "segment {}: discarding torn tail at offset {offset} ({why})",
+                    path.display()
+                );
+            };
+            if file_len - offset < HEADER_LEN {
+                torn("partial header");
+                break;
+            }
+            let mut header = [0u8; HEADER_LEN as usize];
+            file.read_exact(&mut header)?;
+            let len = u32::from_le_bytes(header[0..4].try_into().unwrap());
+            let id = u32::from_le_bytes(header[4..8].try_into().unwrap());
+            let checksum = u64::from_le_bytes(header[9..17].try_into().unwrap());
+            if file_len - offset - HEADER_LEN < len as u64 {
+                torn("partial payload");
+                break;
+            }
+            let mut payload = vec![0u8; len as usize];
+            file.read_exact(&mut payload)?;
+            let Ok(encoding) = Encoding::from_tag(header[8]) else {
+                torn("unknown encoding tag");
+                break;
+            };
+            if fnv1a(&payload) != checksum {
+                torn("checksum mismatch");
+                break;
+            }
+            if let Some(old) = index.insert(id, RecordLoc { offset, len, encoding }) {
+                dead_bytes += HEADER_LEN + old.len as u64;
+            }
+            offset += HEADER_LEN + len as u64;
+        }
+        if offset < file_len {
+            file.set_len(offset)?;
+        }
+        let live_bytes = index.values().map(|r| HEADER_LEN + r.len as u64).sum();
+        Ok(HomeSegment { path: path.to_path_buf(), file, index, live_bytes, dead_bytes, end: offset })
+    }
+
+    /// Append (or supersede) the record for `id`. Compacts afterwards if
+    /// dead bytes outweigh live bytes.
+    pub fn append(&mut self, id: u32, encoding: Encoding, payload: &[u8]) -> Result<()> {
+        let len = payload.len() as u32;
+        let mut record = Vec::with_capacity(HEADER_LEN as usize + payload.len());
+        record.extend_from_slice(&len.to_le_bytes());
+        record.extend_from_slice(&id.to_le_bytes());
+        record.push(encoding.tag());
+        record.extend_from_slice(&fnv1a(payload).to_le_bytes());
+        record.extend_from_slice(payload);
+        self.file.seek(SeekFrom::Start(self.end))?;
+        self.file
+            .write_all(&record)
+            .with_context(|| format!("appending block {id} to {}", self.path.display()))?;
+        let loc = RecordLoc { offset: self.end, len, encoding };
+        self.end += record.len() as u64;
+        self.live_bytes += HEADER_LEN + len as u64;
+        if let Some(old) = self.index.insert(id, loc) {
+            let bytes = HEADER_LEN + old.len as u64;
+            self.live_bytes -= bytes;
+            self.dead_bytes += bytes;
+        }
+        self.maybe_compact()
+    }
+
+    /// Read back the payload for `id`, verifying the checksum. Returns
+    /// `None` if the block is not in this segment; typed
+    /// [`MpldaError::SegmentTruncated`] / [`MpldaError::SegmentCorrupt`]
+    /// if the record bytes are damaged.
+    pub fn read(&mut self, id: u32) -> Result<Option<(Encoding, Vec<u8>)>> {
+        let Some(loc) = self.index.get(&id).copied() else {
+            return Ok(None);
+        };
+        self.file.seek(SeekFrom::Start(loc.offset))?;
+        let mut record = vec![0u8; HEADER_LEN as usize + loc.len as usize];
+        self.file
+            .read_exact(&mut record)
+            .map_err(|_| MpldaError::SegmentTruncated { offset: loc.offset })?;
+        let len = u32::from_le_bytes(record[0..4].try_into().unwrap());
+        let rid = u32::from_le_bytes(record[4..8].try_into().unwrap());
+        let checksum = u64::from_le_bytes(record[9..17].try_into().unwrap());
+        if len != loc.len || rid != id {
+            return Err(MpldaError::SegmentCorrupt {
+                offset: loc.offset,
+                reason: format!("header says block {rid} len {len}, index says block {id} len {}", loc.len),
+            }
+            .into());
+        }
+        let payload = record.split_off(HEADER_LEN as usize);
+        if fnv1a(&payload) != checksum {
+            return Err(MpldaError::SegmentCorrupt {
+                offset: loc.offset,
+                reason: "payload checksum mismatch".into(),
+            }
+            .into());
+        }
+        Ok(Some((loc.encoding, payload)))
+    }
+
+    /// Drop `id` from the index (the bytes become dead; reclaimed by the
+    /// next compaction). No-op if absent.
+    pub fn remove(&mut self, id: u32) -> Result<()> {
+        if let Some(old) = self.index.remove(&id) {
+            let bytes = HEADER_LEN + old.len as u64;
+            self.live_bytes -= bytes;
+            self.dead_bytes += bytes;
+            self.maybe_compact()?;
+        }
+        Ok(())
+    }
+
+    /// Is `id` currently stored in this segment?
+    pub fn contains(&self, id: u32) -> bool {
+        self.index.contains_key(&id)
+    }
+
+    /// Stored block ids, ascending.
+    pub fn block_ids(&self) -> Vec<u32> {
+        self.index.keys().copied().collect()
+    }
+
+    /// Number of live records.
+    pub fn len(&self) -> usize {
+        self.index.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.index.is_empty()
+    }
+
+    /// Bytes of live records (header + payload).
+    pub fn live_bytes(&self) -> u64 {
+        self.live_bytes
+    }
+
+    /// Logical size of the log file.
+    pub fn file_bytes(&self) -> u64 {
+        self.end
+    }
+
+    /// Drop every record and truncate the file (home failover moved the
+    /// blocks elsewhere).
+    pub fn clear(&mut self) -> Result<()> {
+        self.index.clear();
+        self.live_bytes = 0;
+        self.dead_bytes = 0;
+        self.end = 0;
+        self.file.set_len(0)?;
+        Ok(())
+    }
+
+    fn maybe_compact(&mut self) -> Result<()> {
+        if self.dead_bytes > self.live_bytes && self.dead_bytes >= COMPACT_MIN_DEAD {
+            self.compact()?;
+        }
+        Ok(())
+    }
+
+    /// Rewrite live records to a temp file and atomically rename it over
+    /// the log. Record order (ascending block id) is deterministic.
+    pub fn compact(&mut self) -> Result<()> {
+        let tmp_path = self.path.with_extension("seg.tmp");
+        let mut records: Vec<(u32, Encoding, Vec<u8>)> = Vec::with_capacity(self.index.len());
+        for id in self.block_ids() {
+            let (encoding, payload) = self
+                .read(id)?
+                .expect("indexed block vanished during compaction");
+            records.push((id, encoding, payload));
+        }
+        {
+            let mut tmp = File::create(&tmp_path)
+                .with_context(|| format!("creating {}", tmp_path.display()))?;
+            for (id, encoding, payload) in &records {
+                let mut record = Vec::with_capacity(HEADER_LEN as usize + payload.len());
+                record.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+                record.extend_from_slice(&id.to_le_bytes());
+                record.push(encoding.tag());
+                record.extend_from_slice(&fnv1a(payload).to_le_bytes());
+                record.extend_from_slice(payload);
+                tmp.write_all(&record)?;
+            }
+            tmp.sync_all().ok();
+        }
+        std::fs::rename(&tmp_path, &self.path)
+            .with_context(|| format!("publishing compacted {}", self.path.display()))?;
+        self.file = OpenOptions::new().read(true).write(true).open(&self.path)?;
+        self.index.clear();
+        self.end = 0;
+        self.live_bytes = 0;
+        self.dead_bytes = 0;
+        for (id, encoding, payload) in &records {
+            let loc = RecordLoc { offset: self.end, len: payload.len() as u32, encoding: *encoding };
+            self.index.insert(*id, loc);
+            self.end += HEADER_LEN + payload.len() as u64;
+            self.live_bytes += HEADER_LEN + payload.len() as u64;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn temp_seg(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("mplda_seg_{}_{name}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join("home-0.seg")
+    }
+
+    fn cleanup(path: &Path) {
+        std::fs::remove_dir_all(path.parent().unwrap()).ok();
+    }
+
+    #[test]
+    fn append_read_round_trip() {
+        let path = temp_seg("roundtrip");
+        let mut seg = HomeSegment::create(&path).unwrap();
+        seg.append(3, Encoding::Wire, b"hello").unwrap();
+        seg.append(9, Encoding::Sparse, b"").unwrap();
+        assert_eq!(seg.read(3).unwrap(), Some((Encoding::Wire, b"hello".to_vec())));
+        assert_eq!(seg.read(9).unwrap(), Some((Encoding::Sparse, Vec::new())));
+        assert_eq!(seg.read(4).unwrap(), None);
+        assert_eq!(seg.block_ids(), vec![3, 9]);
+        cleanup(&path);
+    }
+
+    #[test]
+    fn supersede_marks_dead_and_compaction_reclaims() {
+        let path = temp_seg("compact");
+        let mut seg = HomeSegment::create(&path).unwrap();
+        let big = vec![7u8; 8192];
+        seg.append(1, Encoding::Wire, &big).unwrap();
+        seg.append(2, Encoding::Wire, b"keep").unwrap();
+        let before = seg.file_bytes();
+        // Superseding the big record flips dead > live and triggers
+        // compaction; the new small record must survive.
+        seg.append(1, Encoding::Wire, b"small now").unwrap();
+        assert!(seg.file_bytes() < before, "{} !< {before}", seg.file_bytes());
+        assert_eq!(seg.read(1).unwrap(), Some((Encoding::Wire, b"small now".to_vec())));
+        assert_eq!(seg.read(2).unwrap(), Some((Encoding::Wire, b"keep".to_vec())));
+        cleanup(&path);
+    }
+
+    #[test]
+    fn reopen_rebuilds_index() {
+        let path = temp_seg("reopen");
+        {
+            let mut seg = HomeSegment::create(&path).unwrap();
+            seg.append(5, Encoding::Sparse, b"abc").unwrap();
+            seg.append(6, Encoding::Wire, b"defg").unwrap();
+            seg.append(5, Encoding::Wire, b"newer").unwrap();
+        }
+        let mut seg = HomeSegment::open(&path).unwrap();
+        assert_eq!(seg.len(), 2);
+        assert_eq!(seg.read(5).unwrap(), Some((Encoding::Wire, b"newer".to_vec())));
+        assert_eq!(seg.read(6).unwrap(), Some((Encoding::Wire, b"defg".to_vec())));
+        cleanup(&path);
+    }
+
+    #[test]
+    fn torn_final_append_discarded_on_reopen() {
+        let path = temp_seg("torn");
+        {
+            let mut seg = HomeSegment::create(&path).unwrap();
+            seg.append(1, Encoding::Wire, b"complete record").unwrap();
+        }
+        // Simulate a crash mid-append: half a header, then half a payload.
+        for extra in [&[0xFFu8, 0x00][..], &[64, 0, 0, 0, 2, 0, 0, 0, 0, 1, 2, 3, 4, 5, 6, 7, 8, 42][..]] {
+            let good_len = {
+                let mut f = OpenOptions::new().append(true).open(&path).unwrap();
+                let good = f.metadata().unwrap().len();
+                f.write_all(extra).unwrap();
+                good
+            };
+            let mut seg = HomeSegment::open(&path).unwrap();
+            assert_eq!(seg.len(), 1, "torn tail must be dropped");
+            assert_eq!(seg.read(1).unwrap(), Some((Encoding::Wire, b"complete record".to_vec())));
+            assert_eq!(seg.file_bytes(), good_len, "file truncated back to last good record");
+            assert_eq!(std::fs::metadata(&path).unwrap().len(), good_len);
+        }
+        cleanup(&path);
+    }
+
+    #[test]
+    fn corrupted_payload_yields_typed_error_on_read() {
+        let path = temp_seg("corrupt");
+        let mut seg = HomeSegment::create(&path).unwrap();
+        seg.append(1, Encoding::Wire, b"precious bytes").unwrap();
+        // Flip a payload byte behind the segment's back.
+        {
+            let mut f = OpenOptions::new().write(true).open(&path).unwrap();
+            f.seek(SeekFrom::Start(HEADER_LEN + 2)).unwrap();
+            f.write_all(b"X").unwrap();
+        }
+        let err = seg.read(1).unwrap_err();
+        match err.downcast_ref::<MpldaError>() {
+            Some(MpldaError::SegmentCorrupt { offset: 0, .. }) => {}
+            other => panic!("expected SegmentCorrupt at offset 0, got {other:?}"),
+        }
+        cleanup(&path);
+    }
+
+    #[test]
+    fn shrunken_file_yields_typed_truncation_on_read() {
+        let path = temp_seg("shrunk");
+        let mut seg = HomeSegment::create(&path).unwrap();
+        seg.append(1, Encoding::Wire, b"soon to vanish").unwrap();
+        seg.file.set_len(HEADER_LEN + 3).unwrap();
+        let err = seg.read(1).unwrap_err();
+        match err.downcast_ref::<MpldaError>() {
+            Some(MpldaError::SegmentTruncated { offset: 0 }) => {}
+            other => panic!("expected SegmentTruncated at offset 0, got {other:?}"),
+        }
+        cleanup(&path);
+    }
+
+    #[test]
+    fn remove_then_clear() {
+        let path = temp_seg("remove");
+        let mut seg = HomeSegment::create(&path).unwrap();
+        seg.append(1, Encoding::Wire, b"a").unwrap();
+        seg.append(2, Encoding::Wire, b"b").unwrap();
+        seg.remove(1).unwrap();
+        assert!(!seg.contains(1));
+        assert!(seg.contains(2));
+        seg.clear().unwrap();
+        assert!(seg.is_empty());
+        assert_eq!(seg.file_bytes(), 0);
+        cleanup(&path);
+    }
+}

@@ -1,0 +1,237 @@
+//! ISSUE 8 acceptance bar: the out-of-core disk tier ([`mplda::storage`])
+//! is **bitwise invisible**. A run whose KV-store is starved down to a
+//! resident budget — spilling cold blocks into log-structured segment
+//! files and recalling them on lease — must produce the *same model*
+//! as a fully resident run: identical `model_digest`, identical
+//! log-likelihood series, identical served fold-in results. Disk traffic
+//! is metered ([`TransferKind::BlockSpill`]/[`BlockRecall`]) but never
+//! enters the network model, and `MemCategory::Resident`'s peak stays
+//! under the configured budget — the whole point of spilling.
+//!
+//! Covered backends: simulated, threaded, pipelined, and real worker
+//! processes over loopback TCP (the master's store spills; workers are
+//! oblivious). Runs under `timeout` in CI.
+
+use std::path::PathBuf;
+use std::process::{Child, Command, Stdio};
+use std::time::{Duration, Instant};
+
+use mplda::cluster::MemCategory;
+use mplda::config::{CompressionKind, SamplerKind};
+use mplda::engine::{BowDoc, Execution, InferOptions, Session, SessionBuilder};
+use mplda::kvstore::TransferKind;
+
+const ITERS: usize = 4;
+
+/// The shared trajectory config — identical for the resident oracle and
+/// every starved run, so they all walk one seeded trajectory.
+fn builder(seed: u64) -> SessionBuilder {
+    Session::builder()
+        .corpus_preset("tiny")
+        .topics(12)
+        .sampler(SamplerKind::InvertedXy)
+        .seed(seed)
+        .workers(3)
+        .blocks(6)
+        .cluster_preset("custom")
+        .machines(3)
+        .iterations(ITERS)
+        .configure(|cfg| cfg.corpus.seed = 29)
+}
+
+/// A fresh (pre-cleaned) per-run segment directory: concurrent stores
+/// must never share one.
+fn temp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("mplda_ooc_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+/// Everything the tier must not change (digest, LL series, served
+/// DocTopics, network bytes) plus everything it must change (disk
+/// traffic, resident peak).
+struct Outcome {
+    digest: u64,
+    ll_bits: Vec<(usize, u64)>,
+    served: Vec<Vec<(u32, u32)>>,
+    comm_bytes: u64,
+    spill_bytes: u64,
+    recall_bytes: u64,
+    iter_spill_bytes: u64,
+    iter_recall_bytes: u64,
+    resident_peak: u64,
+}
+
+/// Train, capture the bitwise identity, then serve a fixed query batch
+/// straight from the (possibly spilled) sharded store.
+fn run(b: SessionBuilder, execution: Execution) -> Outcome {
+    let mut s = b.execution(execution).build().unwrap();
+    let summary = s.train().unwrap();
+    s.check_consistency().unwrap();
+    let digest = s.model_digest().unwrap();
+    let d = s.driver().expect("model-parallel session");
+    let spill_bytes = d.kv().bytes_of(TransferKind::BlockSpill);
+    let recall_bytes = d.kv().bytes_of(TransferKind::BlockRecall);
+    let resident_peak = d.mem.max_peak_category(MemCategory::Resident);
+    let ll_bits = summary.ll_series.iter().map(|&(it, _t, ll)| (it, ll.to_bits())).collect();
+    let iter_spill_bytes = summary.iters.iter().map(|e| e.stats.spill_bytes).sum();
+    let iter_recall_bytes = summary.iters.iter().map(|e| e.stats.recall_bytes).sum();
+    let comm_bytes = summary.total_comm_bytes;
+    let model = s.freeze_sharded().unwrap();
+    let docs = vec![BowDoc::new(vec![0, 1, 2, 3, 2]), BowDoc::new(vec![5, 5, 9, 1, 7])];
+    let opts = InferOptions { iterations: 6, seed: 31, threads: 2 };
+    let folded = model.infer_with(&docs, &opts).unwrap();
+    let served =
+        (0..folded.len()).map(|i| folded.counts(i).iter().collect()).collect();
+    Outcome {
+        digest,
+        ll_bits,
+        served,
+        comm_bytes,
+        spill_bytes,
+        recall_bytes,
+        iter_spill_bytes,
+        iter_recall_bytes,
+        resident_peak,
+    }
+}
+
+fn assert_matches_oracle(got: &Outcome, oracle: &Outcome, label: &str) {
+    assert_eq!(got.digest, oracle.digest, "{label}: model digest diverged");
+    assert_eq!(got.ll_bits, oracle.ll_bits, "{label}: log-likelihood series diverged (bitwise)");
+    assert_eq!(got.served, oracle.served, "{label}: served DocTopics diverged");
+}
+
+#[test]
+fn starved_runs_match_the_resident_oracle_bitwise() {
+    let seed = 11;
+    let oracle = run(builder(seed), Execution::Simulated);
+    assert!(oracle.ll_bits.len() > 1, "oracle must record an LL series");
+    assert_eq!(oracle.spill_bytes, 0, "no [storage] section: nothing may spill");
+    assert_eq!(oracle.resident_peak, 0, "MemCategory::Resident is disk-tier-only");
+
+    // A 1-byte budget (the floor) starves every home completely: each
+    // commit spills straight to disk, each lease recalls.
+    let backends = [
+        ("simulated", Execution::Simulated),
+        ("threaded", Execution::Threaded { parallelism: 4 }),
+        ("pipelined", Execution::Pipelined { parallelism: 3, staging_budget_mib: 0.0 }),
+    ];
+    for (name, execution) in backends {
+        let dir = temp_dir(name);
+        let got = run(builder(seed).storage_budget(1e-6, &dir), execution);
+        assert_matches_oracle(&got, &oracle, name);
+        if name == "simulated" {
+            // Same backend as the oracle, so the byte totals are directly
+            // comparable: spill/recall must not leak into network comm.
+            assert_eq!(
+                got.comm_bytes, oracle.comm_bytes,
+                "disk traffic leaked into network communication accounting"
+            );
+        }
+        assert!(got.spill_bytes > 0, "{name}: a starved run must spill");
+        assert!(got.recall_bytes > 0, "{name}: leases of spilled blocks must recall");
+        assert!(
+            got.iter_spill_bytes > 0 && got.iter_recall_bytes > 0,
+            "{name}: IterStats must expose the disk traffic"
+        );
+        assert!(
+            got.resident_peak <= 1,
+            "{name}: Resident peak {} exceeded the 1-byte budget",
+            got.resident_peak
+        );
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}
+
+#[test]
+fn compression_kinds_and_partial_budgets_agree() {
+    let seed = 17;
+    let oracle = run(builder(seed), Execution::Simulated);
+
+    // A mid-sized budget (2 KiB per home) spills only the long tail —
+    // eviction order is exercised, results must not move.
+    let dir = temp_dir("partial");
+    let got = run(builder(seed).storage_budget(0.002, &dir), Execution::Simulated);
+    assert_matches_oracle(&got, &oracle, "partial budget");
+    assert_eq!(got.comm_bytes, oracle.comm_bytes, "partial budget: network bytes moved");
+    // 0.002 MiB rounds to a 2097-byte budget in the driver.
+    assert!(got.resident_peak <= 2097, "Resident peak {} over budget", got.resident_peak);
+    let _ = std::fs::remove_dir_all(&dir);
+
+    // The sparse row codec and the raw wire codec must decode to the
+    // same blocks — digest equality across `storage.compression`.
+    for (name, compression) in
+        [("none", CompressionKind::None), ("sparse", CompressionKind::Sparse)]
+    {
+        let dir = temp_dir(name);
+        let got = run(
+            builder(seed)
+                .storage_budget(1e-6, &dir)
+                .configure(move |cfg| cfg.storage.compression = compression),
+            Execution::Simulated,
+        );
+        assert_matches_oracle(&got, &oracle, name);
+        assert!(got.spill_bytes > 0, "compression={name}: must spill");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}
+
+fn spawn_worker(addr: &str) -> Child {
+    Command::new(env!("CARGO_BIN_EXE_mplda"))
+        .args(["worker", "--connect", addr])
+        .stdin(Stdio::null())
+        .stdout(Stdio::null())
+        .stderr(Stdio::null())
+        .spawn()
+        .expect("spawning mplda worker")
+}
+
+fn reap(mut children: Vec<Child>) {
+    let deadline = Instant::now() + Duration::from_secs(10);
+    while !children.is_empty() && Instant::now() < deadline {
+        children.retain_mut(|c| !matches!(c.try_wait(), Ok(Some(_))));
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    for c in &mut children {
+        let _ = c.kill();
+        let _ = c.wait();
+    }
+}
+
+#[test]
+fn distributed_starved_run_matches_the_oracle() {
+    // The master's store spills; worker processes lease over TCP and
+    // never know. Mirrors `tests/distributed_determinism.rs`.
+    let seed = 11;
+    let oracle = run(builder(seed), Execution::Simulated);
+    let dir = temp_dir("dist");
+    let mut session = builder(seed)
+        .storage_budget(1e-6, &dir)
+        .execution(Execution::Distributed)
+        .configure(|cfg| {
+            cfg.dist.listen = "127.0.0.1:0".to_string();
+            cfg.dist.workers = 2;
+        })
+        .build()
+        .unwrap();
+    let addr = session
+        .driver()
+        .and_then(|d| d.listen_addr())
+        .expect("distributed driver binds its listener at build time")
+        .to_string();
+    let children: Vec<Child> = (0..2).map(|_| spawn_worker(&addr)).collect();
+    let summary = session.train().unwrap();
+    session.check_consistency().unwrap();
+    let digest = session.model_digest().unwrap();
+    let ll_bits: Vec<(usize, u64)> =
+        summary.ll_series.iter().map(|&(it, _t, ll)| (it, ll.to_bits())).collect();
+    let spill = session.driver().unwrap().kv().bytes_of(TransferKind::BlockSpill);
+    let recall = session.driver().unwrap().kv().bytes_of(TransferKind::BlockRecall);
+    drop(session); // sends shutdown frames to the workers
+    reap(children);
+    assert_eq!(digest, oracle.digest, "distributed: model digest diverged");
+    assert_eq!(ll_bits, oracle.ll_bits, "distributed: LL series diverged (bitwise)");
+    assert!(spill > 0 && recall > 0, "distributed: the master's store must spill and recall");
+    let _ = std::fs::remove_dir_all(&dir);
+}

@@ -111,6 +111,11 @@ fn loopback_round_trip_and_clean_shutdown() {
     let peak = stats.get("cache_peak_bytes").and_then(Json::as_u64).unwrap();
     let budget = stats.get("cache_budget_bytes").and_then(Json::as_u64).unwrap();
     assert!(peak <= budget, "ServeCache peak {peak} exceeded budget {budget}");
+    // Disk-tier counters are present, and idle: this run trained fully
+    // resident (no [storage] budget), so nothing ever spilled.
+    assert_eq!(stats.get("disk_attached"), Some(&Json::Bool(false)));
+    assert_eq!(stats.get("disk_recalls").and_then(Json::as_u64), Some(0));
+    assert_eq!(stats.get("disk_spill_bytes").and_then(Json::as_u64), Some(0));
 
     // Clean shutdown over the wire; join() returns once torn down, even
     // though `raw` is still connected and idle (the force-close sweep).
