@@ -146,6 +146,7 @@ fn main() {
     mh_alias_scaling();
     checkpoint_overhead();
     out_of_core_overhead();
+    delta_protocol_traffic();
 }
 
 /// E12 — out-of-core overhead: the full driver fully resident vs starved
@@ -627,6 +628,154 @@ machines = 8
     println!("{}", table.render());
     println!("note: stalls are host wall-clock on the round critical path; simulated-time");
     println!("      figures model the overlap separately via coord.prefetch (DESIGN.md §4).");
+}
+
+/// E13 — distributed wire traffic: the delta protocol (`dist.delta = on`,
+/// the default) vs the full-state JSON protocol, same corpus/seed, real
+/// worker processes over loopback TCP. Steady-state iterations (the first
+/// one ships full state to populate the worker caches and is excluded)
+/// must move **≥ 5× fewer task+result bytes per round**, with the model
+/// digest and LL series bitwise unchanged — the encoding is a pure
+/// bandwidth knob. Bytes come straight from `IterStats`
+/// (`task_bytes`/`result_bytes`/`full_resend_bytes`, metered at the
+/// socket), and the per-iteration split is also written as a
+/// `metrics::Recorder` CSV series.
+fn delta_protocol_traffic() {
+    use std::process::{Child, Command, Stdio};
+    use mplda::config::SamplerKind;
+    use mplda::engine::{Execution, Session, TrainSummary};
+    use mplda::metrics::Recorder;
+    use mplda::util::fmt;
+
+    banner(
+        "delta_protocol_traffic",
+        "E13: distributed task+result bytes per iteration, dist.delta on vs off \
+         (3 positions, 2 worker processes over loopback). EXPERIMENTS.md E13 \
+         acceptance bar: >=5x fewer steady-state bytes, digest and LL series \
+         bitwise unchanged.",
+    );
+
+    fn spawn_worker(addr: &str) -> Child {
+        Command::new(env!("CARGO_BIN_EXE_mplda"))
+            .args(["worker", "--connect", addr])
+            .stdin(Stdio::null())
+            .stdout(Stdio::null())
+            .stderr(Stdio::null())
+            .spawn()
+            .expect("spawning mplda worker")
+    }
+
+    fn run(delta: bool) -> (TrainSummary, u64) {
+        let mut session = Session::builder()
+            .corpus_preset("custom")
+            .topics(48)
+            .sampler(SamplerKind::InvertedXy)
+            .seed(7)
+            .workers(3)
+            .blocks(3)
+            .cluster_preset("custom")
+            .machines(3)
+            .execution(Execution::Distributed)
+            .iterations(5)
+            .configure(move |cfg| {
+                cfg.corpus.vocab = 600;
+                cfg.corpus.docs = 6_000;
+                cfg.corpus.avg_doc_len = 24;
+                cfg.corpus.zipf_s = 1.07;
+                cfg.corpus.gen_topics = 24;
+                cfg.corpus.seed = 42;
+                cfg.train.ll_every = 1;
+                cfg.dist.listen = "127.0.0.1:0".to_string();
+                cfg.dist.workers = 2;
+                cfg.dist.delta = delta;
+            })
+            .build()
+            .unwrap();
+        let addr = session
+            .driver()
+            .and_then(|d| d.listen_addr())
+            .expect("distributed driver binds at build time")
+            .to_string();
+        let mut children: Vec<Child> = (0..2).map(|_| spawn_worker(&addr)).collect();
+        let summary = session.train().unwrap();
+        let digest = session.model_digest().unwrap();
+        drop(session); // shutdown frames
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(10);
+        while !children.is_empty() && std::time::Instant::now() < deadline {
+            children.retain_mut(|c| !matches!(c.try_wait(), Ok(Some(_))));
+            std::thread::sleep(std::time::Duration::from_millis(20));
+        }
+        for c in &mut children {
+            let _ = c.kill();
+            let _ = c.wait();
+        }
+        (summary, digest)
+    }
+
+    let (delta_summary, delta_digest) = run(true);
+    let (full_summary, full_digest) = run(false);
+
+    // The encoding must be invisible to the model.
+    assert_eq!(delta_digest, full_digest, "E13: dist.delta must be digest-neutral");
+    let bits = |s: &TrainSummary| -> Vec<(usize, u64)> {
+        s.ll_series.iter().map(|&(it, _t, ll)| (it, ll.to_bits())).collect()
+    };
+    assert_eq!(
+        bits(&delta_summary),
+        bits(&full_summary),
+        "E13: dist.delta must leave the LL series bitwise unchanged"
+    );
+
+    let dir = std::env::temp_dir().join(format!("mplda_bench_e13_{}", std::process::id()));
+    let mut recorder = Recorder::with_dir(&dir);
+    let series = recorder.series(
+        "e13_wire_traffic",
+        &["iteration", "delta_on", "task_bytes", "result_bytes", "full_resend_bytes"],
+    );
+    let mut table = Table::new(&[
+        "protocol",
+        "iteration",
+        "task bytes",
+        "result bytes",
+        "full-state bytes",
+    ]);
+    let mut steady = [0u64, 0u64]; // [full, delta] steady-state task+result bytes
+    for (on, summary) in [(false, &full_summary), (true, &delta_summary)] {
+        for ev in &summary.iters {
+            let s = &ev.stats;
+            series.push(&[
+                s.iteration as f64,
+                on as u8 as f64,
+                s.task_bytes as f64,
+                s.result_bytes as f64,
+                s.full_resend_bytes as f64,
+            ]);
+            if s.iteration > 1 {
+                steady[on as usize] += s.task_bytes + s.result_bytes;
+            }
+            table.row(&[
+                (if on { "delta" } else { "full-state" }).into(),
+                s.iteration.to_string(),
+                fmt::bytes(s.task_bytes),
+                fmt::bytes(s.result_bytes),
+                fmt::bytes(s.full_resend_bytes),
+            ]);
+        }
+    }
+    recorder.flush().unwrap();
+    println!("{}", table.render());
+    let reduction = steady[0] as f64 / steady[1].max(1) as f64;
+    println!(
+        "steady state (iterations 2+): {} full-state vs {} delta — {reduction:.1}x fewer bytes",
+        fmt::bytes(steady[0]),
+        fmt::bytes(steady[1]),
+    );
+    println!("per-iteration series: {}", dir.join("e13_wire_traffic.csv").display());
+    assert!(
+        reduction >= 5.0,
+        "E13 acceptance bar: delta protocol must ship >=5x fewer steady-state \
+         task+result bytes (got {reduction:.2}x)"
+    );
 }
 
 fn ratio(rate: f64) -> String {

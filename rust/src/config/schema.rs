@@ -495,11 +495,31 @@ pub struct DistConfig {
     /// within this window counts as dead, feeding the lease-timeout
     /// reassignment path instead of hanging the round.
     pub io_timeout_secs: f64,
+    /// Delta-only task shipping (default on): workers keep their doc
+    /// shard and `C_k` resident across rounds, tasks and results ride
+    /// binary frames as sparse deltas, and the master falls back to a
+    /// full resend whenever its epoch bumps (reassignment, reap,
+    /// degraded round). `off` restores the PR-7 full-state JSON
+    /// protocol — the A/B baseline the E13 bench compares against.
+    /// Either way the model trajectory is bitwise identical.
+    pub delta: bool,
+    /// Wire frame cap for the distributed transport, MiB (default 64,
+    /// must be ≥ 1). Full resends of big-K blocks can outgrow the
+    /// default serve-tier cap; this raises it per-connection (the master
+    /// ships the value to workers in the init handshake). JSON-only
+    /// surfaces (the serve front end) keep the fixed 64 MiB cap.
+    pub max_frame_mib: usize,
 }
 
 impl Default for DistConfig {
     fn default() -> Self {
-        DistConfig { listen: "127.0.0.1:0".into(), workers: 0, io_timeout_secs: 30.0 }
+        DistConfig {
+            listen: "127.0.0.1:0".into(),
+            workers: 0,
+            io_timeout_secs: 30.0,
+            delta: true,
+            max_frame_mib: 64,
+        }
     }
 }
 
@@ -706,6 +726,18 @@ impl Config {
             "dist.listen" => self.dist.listen = s(value)?,
             "dist.workers" => self.dist.workers = u(value)?,
             "dist.io_timeout_secs" => self.dist.io_timeout_secs = f(value)?,
+            // Accepts a bool or the "on"/"off" strings the CLI uses.
+            "dist.delta" => {
+                self.dist.delta = match value.as_bool() {
+                    Some(v) => v,
+                    None => match s(value)?.as_str() {
+                        "on" => true,
+                        "off" => false,
+                        other => bail!("dist.delta must be on/off or a bool, got {other:?}"),
+                    },
+                }
+            }
+            "dist.max_frame_mib" => self.dist.max_frame_mib = u(value)?,
             "storage.resident_budget_mib" => self.storage.resident_budget_mib = f(value)?,
             "storage.dir" => self.storage.dir = s(value)?,
             "storage.compression" => {
@@ -814,6 +846,9 @@ impl Config {
             }
             if self.dist.io_timeout_secs < 0.0 {
                 bail!("dist.io_timeout_secs must be >= 0 (0 = block forever)");
+            }
+            if self.dist.max_frame_mib < 1 {
+                bail!("dist.max_frame_mib must be >= 1");
             }
         }
         Ok(())

@@ -80,6 +80,18 @@ pub struct IterStats {
     /// blocks at round starts (the quantity `coord.pipeline` shrinks; see
     /// [`crate::metrics::PipelineStats`] for the full breakdown).
     pub fetch_stall_secs: f64,
+    /// Real TCP bytes of task frames sent to worker processes this
+    /// iteration (delta + full-resend; 0 outside distributed execution).
+    /// Metered out-of-band: the simulated network already times the
+    /// logical transfers, so these never enter `comm_bytes`/`sim_time`.
+    pub task_bytes: u64,
+    /// Real TCP bytes of result frames received from worker processes
+    /// this iteration.
+    pub result_bytes: u64,
+    /// The subset of `task_bytes + result_bytes` that travelled as
+    /// full-state frames (first contact and post-epoch-bump resends,
+    /// plus the entire `dist.delta = off` protocol).
+    pub full_resend_bytes: u64,
 }
 
 /// Full training report.
@@ -505,6 +517,10 @@ impl Driver {
         let net_bytes_before = self.kv.network_bytes();
         let spill_before = self.kv.bytes_of(TransferKind::BlockSpill);
         let recall_before = self.kv.bytes_of(TransferKind::BlockRecall);
+        let task_delta_before = self.kv.bytes_of(TransferKind::TaskDelta);
+        let task_full_before = self.kv.bytes_of(TransferKind::TaskFull);
+        let result_delta_before = self.kv.bytes_of(TransferKind::ResultDelta);
+        let result_full_before = self.kv.bytes_of(TransferKind::ResultFull);
         let fetch_stall_before = self.pstats.fetch_stall_secs;
         let mut tokens = 0u64;
         let mut host_secs_total = 0.0;
@@ -618,6 +634,12 @@ impl Driver {
                     backend.run_round(&mut ctx)?
                 }
             };
+            if degraded {
+                // The degraded round ran the kernel locally on the
+                // master: shard state resident on worker processes is
+                // stale now. No-op for in-process backends.
+                self.backend.invalidate_worker_cache();
+            }
             debug_assert_eq!(out.host_secs.len(), self.workers.len());
             debug_assert_eq!(out.fetch_times.len(), self.workers.len());
 
@@ -789,6 +811,22 @@ impl Driver {
                 )?;
             }
         }
+        let task_full = self.kv.bytes_of(TransferKind::TaskFull) - task_full_before;
+        let result_full = self.kv.bytes_of(TransferKind::ResultFull) - result_full_before;
+        let task_bytes =
+            self.kv.bytes_of(TransferKind::TaskDelta) - task_delta_before + task_full;
+        let result_bytes =
+            self.kv.bytes_of(TransferKind::ResultDelta) - result_delta_before + result_full;
+        if task_bytes > 0 {
+            log::debug!(
+                "iter {}: distributed wire traffic {} task B + {} result B \
+                 ({} B in full-state frames)",
+                self.iteration,
+                task_bytes,
+                result_bytes,
+                task_full + result_full
+            );
+        }
         Ok(IterStats {
             iteration: self.iteration,
             sim_time: self.sim_time(),
@@ -799,6 +837,9 @@ impl Driver {
             recall_bytes: self.kv.bytes_of(TransferKind::BlockRecall) - recall_before,
             host_compute_secs: host_secs_total,
             fetch_stall_secs: self.pstats.fetch_stall_secs - fetch_stall_before,
+            task_bytes,
+            result_bytes,
+            full_resend_bytes: task_full + result_full,
         })
     }
 

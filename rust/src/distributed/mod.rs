@@ -10,16 +10,20 @@
 //! `TransferKind` metering and the lease-timeout fault plane all flow
 //! through the same driver code paths as the simulated backends.
 //!
-//! * [`protocol`] — the typed message vocabulary and its lossless JSON
-//!   codec (frames via [`crate::serve::wire`]).
+//! * [`protocol`] — the typed message vocabulary: the JSON control plane
+//!   and full-state fallback, plus the binary delta data plane
+//!   (`dist.delta`, the default) whose steady-state tasks/results ship
+//!   worker-resident state as sparse deltas stamped with a master epoch
+//!   (frames via [`crate::serve::wire`]).
 //! * [`master`] — [`master::DistributedBackend`], the fourth
 //!   [`crate::engine::Backend`]: selected by
 //!   `coord.execution = "distributed"`, it leases/commits against the
 //!   master's KV-store and delegates the sampling of each
 //!   `(position, round)` task to a connected worker process.
 //! * [`worker`] — the worker-process main loop behind `mplda worker`:
-//!   stateless compute that rebuilds the corpus from the master's recipe
-//!   and answers tasks until shutdown or EOF.
+//!   deterministic compute plus a per-position resident-state cache,
+//!   rebuilt from the master's corpus recipe; answers tasks until
+//!   shutdown or EOF.
 //!
 //! **Correctness bar** (DESIGN.md §Distributed): a distributed run's
 //! `model_digest` and log-likelihood series are **bitwise equal** to the
@@ -31,4 +35,7 @@ pub mod protocol;
 pub mod worker;
 
 pub use master::DistributedBackend;
-pub use protocol::{InitMsg, Message, ResultMsg, TaskMsg};
+pub use protocol::{
+    require_epoch, BinMsg, InitMsg, Message, ResultDeltaMsg, ResultMsg, TaskDeltaMsg, TaskMsg,
+    ZRowDiff,
+};

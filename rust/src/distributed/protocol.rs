@@ -1,9 +1,12 @@
-//! The master↔worker message vocabulary, as typed structs with lossless
-//! JSON codecs.
+//! The master↔worker message vocabulary: JSON control plane, binary
+//! delta data plane.
 //!
-//! Every message travels as one `serve::wire` frame (length-prefixed
-//! JSON, shared cap and typed framing errors). The conversation is a
-//! strict state machine per connection:
+//! Every message travels as one `serve::wire` frame. Control messages
+//! (register/init/ready/shutdown/bye) and the `dist.delta = off`
+//! full-state protocol ride JSON frames; with deltas on (the default)
+//! the task/result hot path rides **binary frames** carrying
+//! `model::wire` bytes directly — no hex-in-JSON doubling. The
+//! conversation is a strict state machine per connection:
 //!
 //! ```text
 //!  worker                         master
@@ -11,38 +14,55 @@
 //!    │ ◄────────────────── init ── │   corpus recipe + hyperparameters
 //!    │ ── ready{corpus_fp} ──────► │   fingerprints must agree
 //!    │                             │
-//!    │ ◄────────────────── task ── │ ┐ one per (position, round):
-//!    │ ── result ────────────────► │ ┘ full task state both ways
+//!    │ ◄── task (full @ epoch) ─── │ ┐ first contact / epoch bump:
+//!    │ ── result Δ ──────────────► │ ┘ full state out, sparse deltas back
+//!    │ ◄── task Δ (epoch) ──────── │ ┐ steady state: block + C_k Δ + RNG
+//!    │ ── result Δ ──────────────► │ ┘ out, sparse deltas back
 //!    │          …                  │
 //!    │ ◄────────────── shutdown ── │
 //!    │ ── bye ───────────────────► │   then both sides close
 //! ```
 //!
-//! **Numbers on the wire.** `serve::json` renders `f64` and integers are
-//! exact only up to 2^53, so anything wider rides as a decimal *string*:
-//! the two `u128` halves of a PCG64 state, and the `u64` corpus
-//! fingerprint. Block and totals payloads reuse the binary checkpoint
-//! codec (`model::wire`, LEB128 + zigzag) hex-encoded into a JSON string
-//! — one codec for disk and socket, one set of validation errors.
+//! **Epochs.** A worker's resident shard state (`docs`, `z`, `dt`, its
+//! `C_k` snapshot) is only patchable by a delta if both sides agree on
+//! the base. The master stamps every task with its current `epoch` and
+//! bumps it on *any* event that could desynchronize residents — roster
+//! change, rotation reassignment, reap, degraded round — after which
+//! each position's first task ships full again. A worker receiving a
+//! delta task whose epoch does not match its resident state refuses it
+//! with the typed [`MpldaError::StaleEpoch`] rather than sampling
+//! against a stale base; the master applies the same check to result
+//! epochs. Over-bumping is correctness-neutral (it costs one full
+//! resend), which is what makes the fault path safe by construction.
 //!
-//! **Why ship full task state every round?** The master stays the single
-//! authority over `z`, `C_d^k`, worker RNG streams and `C_k` snapshots;
-//! workers are pure compute. A round's task therefore carries everything
-//! the sampler kernel reads, and its result carries everything the kernel
-//! wrote — which is what makes the distributed trajectory *bitwise* equal
-//! to the simulated one (the worker runs the identical
-//! `WorkerState::run_round` on identical inputs) and makes worker death
-//! recoverable by construction: a corpse holds no state the master does
-//! not already have, except the one uncommitted round the lease-timeout
-//! protocol is designed to sacrifice.
+//! **Numbers on the wire.** `serve::json` renders `f64` and integers are
+//! exact only up to 2^53, so in JSON anything wider rides as a decimal
+//! *string*: the two `u128` halves of a PCG64 state, and `u64` values
+//! (fingerprints, epochs). Binary frames have no such wall — varints
+//! and little-endian fixed fields throughout, sharing `model::wire`'s
+//! primitives and its hostile-input discipline: every claimed count is
+//! bounded by the remaining buffer before any allocation trusts it.
+//!
+//! **Why results still ship the mutated doc state every round?** The
+//! master stays the single authority over `z`, `C_d^k`, worker RNG
+//! streams and `C_k` snapshots; workers are pure compute plus a cache.
+//! A result carries everything the kernel wrote (as deltas against the
+//! task's base, which the master also holds) — which is what keeps the
+//! distributed trajectory *bitwise* equal to the simulated one and makes
+//! worker death recoverable by construction: a corpse holds no state the
+//! master does not already have, except the one uncommitted round the
+//! lease-timeout protocol is designed to sacrifice.
 
 use anyhow::{bail, Context, Result};
 
 use crate::config::{CorpusConfig, SamplerKind};
+use crate::error::MpldaError;
+use crate::model::wire::{get_varint, put_varint};
 use crate::serve::json::Json;
 
-/// One protocol message, either direction. `Json`-codable losslessly;
-/// `tests/prop_protocol.rs` round-trips every variant through the wire.
+/// One JSON-plane protocol message, either direction. `Json`-codable
+/// losslessly; `tests/prop_protocol.rs` round-trips every variant
+/// through the wire. The binary data plane is [`BinMsg`].
 #[derive(Debug, Clone, PartialEq)]
 pub enum Message {
     /// Worker → master: first frame after connect.
@@ -55,7 +75,9 @@ pub enum Message {
         /// `model::checkpoint::corpus_fingerprint` of the rebuilt corpus.
         corpus_fp: u64,
     },
-    /// Master → worker: one `(position, round)` sampling task.
+    /// Master → worker: one `(position, round)` full-state sampling task
+    /// (the whole `dist.delta = off` protocol; the binary plane wraps
+    /// the same struct for full resends).
     Task(TaskMsg),
     /// Worker → master: the completed task's full output state.
     Result(ResultMsg),
@@ -85,18 +107,25 @@ pub struct InitMsg {
     pub alias_budget_bytes: u64,
     /// Master-side corpus fingerprint the worker must reproduce.
     pub corpus_fp: u64,
+    /// Wire frame cap both sides enforce after the handshake
+    /// (`dist.max_frame_mib`, in bytes). The handshake itself always
+    /// fits the default cap.
+    pub max_frame_bytes: u64,
 }
 
-/// One round's task for one rotation position: the leased block, the
-/// position's `C_k` snapshot and RNG stream, and the doc-shard state
-/// (assignments + live-order doc–topic entries, one row per doc of
-/// `docs`, in `docs` order).
+/// One round's full-state task for one rotation position: the leased
+/// block, the position's `C_k` snapshot and RNG stream, and the
+/// doc-shard state (assignments + live-order doc–topic entries, one row
+/// per doc of `docs`, in `docs` order).
 #[derive(Debug, Clone, PartialEq)]
 pub struct TaskMsg {
     /// Rotation position this task computes.
     pub position: usize,
     /// Round index within the iteration (diagnostics only).
     pub round: usize,
+    /// Master epoch this task belongs to; the worker stamps its
+    /// resident state with it and later deltas must match it.
+    pub epoch: u64,
     /// `model::wire::encode_block` bytes of the leased block.
     pub block: Vec<u8>,
     /// `model::wire::encode_totals` bytes of the position's `C_k`.
@@ -114,11 +143,13 @@ pub struct TaskMsg {
 }
 
 /// A completed task: every piece of state the kernel mutated, shipped
-/// back so the master can splice it in as if it had sampled locally.
+/// back whole (the `dist.delta = off` reply).
 #[derive(Debug, Clone, PartialEq)]
 pub struct ResultMsg {
     /// Rotation position this result answers.
     pub position: usize,
+    /// Epoch echoed from the task; the master rejects stale echoes.
+    pub epoch: u64,
     /// Tokens sampled.
     pub tokens: u64,
     /// Thread CPU seconds the kernel took (drives the simulated clocks;
@@ -136,8 +167,97 @@ pub struct ResultMsg {
     pub dt: Vec<Vec<(u32, u32)>>,
 }
 
+/// The steady-state task: position/round/epoch routing, the RNG stream,
+/// the **full** leased block (rotation hands each position a different
+/// block every round, so there is no resident base to delta against) and
+/// the sparse `C_k` delta from the worker's post-round snapshot to the
+/// master's freshly synced one. The doc shard does not ride at all —
+/// it is resident on the worker at this epoch.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TaskDeltaMsg {
+    /// Rotation position this task computes.
+    pub position: usize,
+    /// Round index within the iteration (diagnostics only).
+    pub round: usize,
+    /// Master epoch; must match the worker's resident state exactly.
+    pub epoch: u64,
+    /// Raw PCG64 `(state, inc)` of the position's RNG stream.
+    pub rng: (u128, u128),
+    /// `model::wire::encode_block` bytes of the leased block.
+    pub block: Vec<u8>,
+    /// `model::wire::encode_totals_delta` bytes: worker's resident
+    /// `C_k` → the round's synced snapshot (empty delta when
+    /// `coord.ck_sync` skipped the sync this round).
+    pub ck_delta: Vec<u8>,
+}
+
+/// One document row's assignment update inside a delta result.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ZRowDiff {
+    /// The round left every assignment in this row unchanged.
+    Unchanged,
+    /// Most slots changed — the full row is cheaper than a diff.
+    Full(Vec<u32>),
+    /// Sparse update: `(slot, new_topic)` pairs, slots strictly
+    /// increasing.
+    Sparse(Vec<(u32, u32)>),
+}
+
+/// The steady-state reply: sparse deltas for the block and `C_k`
+/// (against the task's base, which the master also holds), per-row
+/// assignment diffs, and the doc–topic rows verbatim (their **live
+/// order** is a function of the full sampling history — it cannot be
+/// re-derived master-side, so it ships whole; rows are tiny,
+/// `nnz ≤ min(doc_len, K)`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ResultDeltaMsg {
+    /// Rotation position this result answers.
+    pub position: usize,
+    /// Epoch echoed from the task; the master rejects stale echoes.
+    pub epoch: u64,
+    /// Tokens sampled.
+    pub tokens: u64,
+    /// Thread CPU seconds the kernel took.
+    pub host_secs: f64,
+    /// RNG stream position after the round.
+    pub rng: (u128, u128),
+    /// `model::wire::encode_block_delta` bytes, task block → mutated
+    /// block.
+    pub block_delta: Vec<u8>,
+    /// `model::wire::encode_totals_delta` bytes, task `C_k` → the
+    /// worker's post-round snapshot.
+    pub ck_delta: Vec<u8>,
+    /// Assignment updates, one entry per doc of the shard, in `docs`
+    /// order.
+    pub z: Vec<ZRowDiff>,
+    /// Doc–topic counts in live storage order, one row per doc.
+    pub dt: Vec<Vec<(u32, u32)>>,
+}
+
+/// One binary-plane message. Encoded as a 1-byte tag + body; travels in
+/// a `serve::wire` **binary** frame (top-bit length prefix).
+#[derive(Debug, Clone, PartialEq)]
+pub enum BinMsg {
+    /// Full-state task (first contact at an epoch / post-bump resend).
+    TaskFull(TaskMsg),
+    /// Steady-state delta task.
+    TaskDelta(TaskDeltaMsg),
+    /// The reply to either binary task kind.
+    ResultDelta(ResultDeltaMsg),
+}
+
+/// Typed gate shared by both sides of the delta protocol: a message at
+/// `got` is only applicable when the receiver's resident state is at
+/// exactly that epoch.
+pub fn require_epoch(position: usize, got: u64, have: Option<u64>) -> Result<()> {
+    if have != Some(got) {
+        return Err(MpldaError::StaleEpoch { position, got, have }.into());
+    }
+    Ok(())
+}
+
 // ---------------------------------------------------------------------
-// Encoding helpers
+// JSON encoding helpers
 // ---------------------------------------------------------------------
 
 /// Hex-encode binary payload bytes for a JSON string field.
@@ -231,11 +351,17 @@ fn z_json(z: &[Vec<u32>]) -> Json {
     )
 }
 
-fn get_z(j: &Json, key: &str) -> Result<Vec<Vec<u32>>> {
+fn get_z(j: &Json, key: &str, rows_expected: usize) -> Result<Vec<Vec<u32>>> {
     let rows = j
         .get(key)
         .and_then(Json::as_arr)
         .with_context(|| format!("missing array field {key:?}"))?;
+    // Bound the row count by the shard size *before* converting rows —
+    // a hostile frame must not get row allocations for docs the shard
+    // does not have (same guard discipline as `model::wire`).
+    if rows.len() != rows_expected {
+        bail!("field {key:?} has {} rows, shard has {rows_expected} docs", rows.len());
+    }
     rows.iter()
         .map(|row| {
             row.as_arr()
@@ -267,11 +393,14 @@ fn dt_json(dt: &[Vec<(u32, u32)>]) -> Json {
     )
 }
 
-fn get_dt(j: &Json, key: &str) -> Result<Vec<Vec<(u32, u32)>>> {
+fn get_dt(j: &Json, key: &str, rows_expected: usize) -> Result<Vec<Vec<(u32, u32)>>> {
     let rows = j
         .get(key)
         .and_then(Json::as_arr)
         .with_context(|| format!("missing array field {key:?}"))?;
+    if rows.len() != rows_expected {
+        bail!("field {key:?} has {} rows, shard has {rows_expected} docs", rows.len());
+    }
     rows.iter()
         .map(|row| {
             let flat = row.as_arr().context("doc-topic row is not an array")?;
@@ -288,6 +417,18 @@ fn get_dt(j: &Json, key: &str) -> Result<Vec<Vec<(u32, u32)>>> {
                     ))
                 })
                 .collect()
+        })
+        .collect()
+}
+
+fn get_docs(j: &Json, key: &str) -> Result<Vec<u32>> {
+    j.get(key)
+        .and_then(Json::as_arr)
+        .with_context(|| format!("missing array field {key:?}"))?
+        .iter()
+        .map(|d| {
+            let v = d.as_u64().context("doc id is not a non-negative integer")?;
+            u32::try_from(v).context("doc id exceeds u32")
         })
         .collect()
 }
@@ -333,11 +474,13 @@ impl Message {
                 ("sampler".into(), Json::str(m.sampler.name())),
                 ("alias_budget_bytes".into(), u64_str(m.alias_budget_bytes)),
                 ("corpus_fp".into(), u64_str(m.corpus_fp)),
+                ("max_frame_bytes".into(), u64_str(m.max_frame_bytes)),
             ]),
             Message::Task(m) => Json::Obj(vec![
                 tag,
                 ("position".into(), Json::num(m.position as f64)),
                 ("round".into(), Json::num(m.round as f64)),
+                ("epoch".into(), u64_str(m.epoch)),
                 ("block".into(), Json::str(hex_encode(&m.block))),
                 ("ck".into(), Json::str(hex_encode(&m.ck))),
                 ("rng".into(), rng_json(m.rng)),
@@ -351,11 +494,13 @@ impl Message {
             Message::Result(m) => Json::Obj(vec![
                 tag,
                 ("position".into(), Json::num(m.position as f64)),
+                ("epoch".into(), u64_str(m.epoch)),
                 ("tokens".into(), u64_str(m.tokens)),
                 ("host_secs".into(), Json::num(m.host_secs)),
                 ("block".into(), Json::str(hex_encode(&m.block))),
                 ("ck".into(), Json::str(hex_encode(&m.ck))),
                 ("rng".into(), rng_json(m.rng)),
+                ("docs".into(), Json::num(m.z.len() as f64)),
                 ("z".into(), z_json(&m.z)),
                 ("dt".into(), dt_json(&m.dt)),
             ]),
@@ -393,42 +538,356 @@ impl Message {
                     sampler: SamplerKind::parse(get_str(j, "sampler")?)?,
                     alias_budget_bytes: get_u64_str(j, "alias_budget_bytes")?,
                     corpus_fp: get_u64_str(j, "corpus_fp")?,
+                    max_frame_bytes: get_u64_str(j, "max_frame_bytes")?,
                 })
             }
             "task" => {
-                let docs = j
-                    .get("docs")
-                    .and_then(Json::as_arr)
-                    .context("missing array field \"docs\"")?
-                    .iter()
-                    .map(|d| {
-                        let v = d.as_u64().context("doc id is not a non-negative integer")?;
-                        u32::try_from(v).context("doc id exceeds u32")
-                    })
-                    .collect::<Result<Vec<u32>>>()?;
+                let docs = get_docs(j, "docs")?;
+                let ndocs = docs.len();
                 Message::Task(TaskMsg {
                     position: get_usize(j, "position")?,
                     round: get_usize(j, "round")?,
+                    epoch: get_u64_str(j, "epoch")?,
                     block: get_hex(j, "block")?,
                     ck: get_hex(j, "ck")?,
                     rng: get_u128_pair(j, "rng")?,
                     docs,
-                    z: get_z(j, "z")?,
-                    dt: get_dt(j, "dt")?,
+                    z: get_z(j, "z", ndocs)?,
+                    dt: get_dt(j, "dt", ndocs)?,
                 })
             }
-            "result" => Message::Result(ResultMsg {
-                position: get_usize(j, "position")?,
-                tokens: get_u64_str(j, "tokens")?,
-                host_secs: get_f64(j, "host_secs")?,
-                block: get_hex(j, "block")?,
-                ck: get_hex(j, "ck")?,
-                rng: get_u128_pair(j, "rng")?,
-                z: get_z(j, "z")?,
-                dt: get_dt(j, "dt")?,
-            }),
+            "result" => {
+                // Results carry no doc list; the row count rides as a
+                // scalar so `z`/`dt` conversion is bounded before any
+                // row materializes (the master re-checks it against the
+                // shard when applying).
+                let ndocs = get_usize(j, "docs")?;
+                Message::Result(ResultMsg {
+                    position: get_usize(j, "position")?,
+                    epoch: get_u64_str(j, "epoch")?,
+                    tokens: get_u64_str(j, "tokens")?,
+                    host_secs: get_f64(j, "host_secs")?,
+                    block: get_hex(j, "block")?,
+                    ck: get_hex(j, "ck")?,
+                    rng: get_u128_pair(j, "rng")?,
+                    z: get_z(j, "z", ndocs)?,
+                    dt: get_dt(j, "dt", ndocs)?,
+                })
+            }
             other => bail!("unknown protocol message type {other:?}"),
         })
+    }
+}
+
+// ---------------------------------------------------------------------
+// Binary codec
+// ---------------------------------------------------------------------
+
+const TAG_TASK_FULL: u8 = 1;
+const TAG_TASK_DELTA: u8 = 2;
+const TAG_RESULT_DELTA: u8 = 3;
+
+fn put_u128(buf: &mut Vec<u8>, v: u128) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn get_u128(buf: &[u8], pos: &mut usize) -> Result<u128> {
+    let end = pos.checked_add(16).filter(|&e| e <= buf.len()).context("u128 truncated")?;
+    let v = u128::from_le_bytes(buf[*pos..end].try_into().unwrap());
+    *pos = end;
+    Ok(v)
+}
+
+fn put_rng(buf: &mut Vec<u8>, (state, inc): (u128, u128)) {
+    put_u128(buf, state);
+    put_u128(buf, inc);
+}
+
+fn get_rng(buf: &[u8], pos: &mut usize) -> Result<(u128, u128)> {
+    Ok((get_u128(buf, pos)?, get_u128(buf, pos)?))
+}
+
+fn put_bytes(buf: &mut Vec<u8>, b: &[u8]) {
+    put_varint(buf, b.len() as u64);
+    buf.extend_from_slice(b);
+}
+
+fn get_bytes(buf: &[u8], pos: &mut usize) -> Result<Vec<u8>> {
+    let len = get_varint(buf, pos)? as usize;
+    if len > buf.len() - *pos {
+        bail!("payload claims {len} bytes but only {} remain", buf.len() - *pos);
+    }
+    let out = buf[*pos..*pos + len].to_vec();
+    *pos += len;
+    Ok(out)
+}
+
+fn get_u32v(buf: &[u8], pos: &mut usize) -> Result<u32> {
+    u32::try_from(get_varint(buf, pos)?).context("value exceeds u32")
+}
+
+/// Bound a claimed element count by the remaining bytes, given the
+/// minimum wire cost per element, *before* allocating for it.
+fn bounded_count(buf: &[u8], pos: usize, n: u64, min_bytes: usize, what: &str) -> Result<usize> {
+    let remain = buf.len() - pos;
+    if n as usize > remain / min_bytes.max(1) {
+        bail!("{what} claims {n} entries but only {remain} bytes remain");
+    }
+    Ok(n as usize)
+}
+
+fn put_dt_rows(buf: &mut Vec<u8>, dt: &[Vec<(u32, u32)>]) {
+    for row in dt {
+        put_varint(buf, row.len() as u64);
+        for &(t, c) in row {
+            // Live order is arbitrary, so topics ride raw, not
+            // gap-coded.
+            put_varint(buf, t as u64);
+            put_varint(buf, c as u64);
+        }
+    }
+}
+
+fn get_dt_rows(buf: &[u8], pos: &mut usize, nrows: usize) -> Result<Vec<Vec<(u32, u32)>>> {
+    let mut dt = Vec::with_capacity(nrows);
+    for _ in 0..nrows {
+        let n = get_varint(buf, pos)?;
+        let n = bounded_count(buf, *pos, n, 2, "doc-topic row")?;
+        let mut row = Vec::with_capacity(n);
+        for _ in 0..n {
+            let t = get_u32v(buf, pos)?;
+            let c = get_u32v(buf, pos)?;
+            row.push((t, c));
+        }
+        dt.push(row);
+    }
+    Ok(dt)
+}
+
+impl BinMsg {
+    /// Encode as one binary frame body.
+    pub fn encode(&self) -> Vec<u8> {
+        let mut buf = Vec::with_capacity(64);
+        match self {
+            BinMsg::TaskFull(m) => {
+                buf.push(TAG_TASK_FULL);
+                put_varint(&mut buf, m.position as u64);
+                put_varint(&mut buf, m.round as u64);
+                put_varint(&mut buf, m.epoch);
+                put_rng(&mut buf, m.rng);
+                put_bytes(&mut buf, &m.block);
+                put_bytes(&mut buf, &m.ck);
+                put_varint(&mut buf, m.docs.len() as u64);
+                for &d in &m.docs {
+                    put_varint(&mut buf, d as u64);
+                }
+                for row in &m.z {
+                    put_varint(&mut buf, row.len() as u64);
+                    for &t in row {
+                        put_varint(&mut buf, t as u64);
+                    }
+                }
+                put_dt_rows(&mut buf, &m.dt);
+            }
+            BinMsg::TaskDelta(m) => {
+                buf.push(TAG_TASK_DELTA);
+                put_varint(&mut buf, m.position as u64);
+                put_varint(&mut buf, m.round as u64);
+                put_varint(&mut buf, m.epoch);
+                put_rng(&mut buf, m.rng);
+                put_bytes(&mut buf, &m.block);
+                put_bytes(&mut buf, &m.ck_delta);
+            }
+            BinMsg::ResultDelta(m) => {
+                buf.push(TAG_RESULT_DELTA);
+                put_varint(&mut buf, m.position as u64);
+                put_varint(&mut buf, m.epoch);
+                put_varint(&mut buf, m.tokens);
+                buf.extend_from_slice(&m.host_secs.to_le_bytes());
+                put_rng(&mut buf, m.rng);
+                put_bytes(&mut buf, &m.block_delta);
+                put_bytes(&mut buf, &m.ck_delta);
+                put_varint(&mut buf, m.z.len() as u64);
+                for row in &m.z {
+                    match row {
+                        ZRowDiff::Unchanged => put_varint(&mut buf, 0),
+                        ZRowDiff::Full(topics) => {
+                            put_varint(&mut buf, 1);
+                            put_varint(&mut buf, topics.len() as u64);
+                            for &t in topics {
+                                put_varint(&mut buf, t as u64);
+                            }
+                        }
+                        ZRowDiff::Sparse(pairs) => {
+                            put_varint(&mut buf, pairs.len() as u64 + 2);
+                            for &(slot, topic) in pairs {
+                                put_varint(&mut buf, slot as u64);
+                                put_varint(&mut buf, topic as u64);
+                            }
+                        }
+                    }
+                }
+                put_dt_rows(&mut buf, &m.dt);
+            }
+        }
+        buf
+    }
+
+    /// Decode one binary frame body. Typed errors throughout, never a
+    /// panic; every claimed count is bounded by the remaining bytes
+    /// before any allocation trusts it, and `z`/`dt` row counts are the
+    /// (bounded) doc count itself — a frame cannot claim more rows than
+    /// docs.
+    pub fn decode(buf: &[u8]) -> Result<BinMsg> {
+        let Some(&tag) = buf.first() else { bail!("empty binary protocol frame") };
+        let mut pos = 1usize;
+        let msg = match tag {
+            TAG_TASK_FULL => {
+                let position = get_varint(buf, &mut pos)? as usize;
+                let round = get_varint(buf, &mut pos)? as usize;
+                let epoch = get_varint(buf, &mut pos)?;
+                let rng = get_rng(buf, &mut pos)?;
+                let block = get_bytes(buf, &mut pos)?;
+                let ck = get_bytes(buf, &mut pos)?;
+                let n = get_varint(buf, &mut pos)?;
+                let ndocs = bounded_count(buf, pos, n, 1, "doc list")?;
+                let mut docs = Vec::with_capacity(ndocs);
+                for _ in 0..ndocs {
+                    docs.push(get_u32v(buf, &mut pos)?);
+                }
+                let mut z = Vec::with_capacity(ndocs);
+                for _ in 0..ndocs {
+                    let len = get_varint(buf, &mut pos)?;
+                    let len = bounded_count(buf, pos, len, 1, "assignment row")?;
+                    let mut row = Vec::with_capacity(len);
+                    for _ in 0..len {
+                        row.push(get_u32v(buf, &mut pos)?);
+                    }
+                    z.push(row);
+                }
+                let dt = get_dt_rows(buf, &mut pos, ndocs)?;
+                BinMsg::TaskFull(TaskMsg { position, round, epoch, block, ck, rng, docs, z, dt })
+            }
+            TAG_TASK_DELTA => {
+                let position = get_varint(buf, &mut pos)? as usize;
+                let round = get_varint(buf, &mut pos)? as usize;
+                let epoch = get_varint(buf, &mut pos)?;
+                let rng = get_rng(buf, &mut pos)?;
+                let block = get_bytes(buf, &mut pos)?;
+                let ck_delta = get_bytes(buf, &mut pos)?;
+                BinMsg::TaskDelta(TaskDeltaMsg { position, round, epoch, rng, block, ck_delta })
+            }
+            TAG_RESULT_DELTA => {
+                let position = get_varint(buf, &mut pos)? as usize;
+                let epoch = get_varint(buf, &mut pos)?;
+                let tokens = get_varint(buf, &mut pos)?;
+                let end = pos
+                    .checked_add(8)
+                    .filter(|&e| e <= buf.len())
+                    .context("host_secs truncated")?;
+                let host_secs = f64::from_le_bytes(buf[pos..end].try_into().unwrap());
+                pos = end;
+                let rng = get_rng(buf, &mut pos)?;
+                let block_delta = get_bytes(buf, &mut pos)?;
+                let ck_delta = get_bytes(buf, &mut pos)?;
+                let n = get_varint(buf, &mut pos)?;
+                let nrows = bounded_count(buf, pos, n, 1, "assignment diff list")?;
+                let mut z = Vec::with_capacity(nrows);
+                for _ in 0..nrows {
+                    let t = get_varint(buf, &mut pos)?;
+                    z.push(match t {
+                        0 => ZRowDiff::Unchanged,
+                        1 => {
+                            let len = get_varint(buf, &mut pos)?;
+                            let len = bounded_count(buf, pos, len, 1, "assignment row")?;
+                            let mut row = Vec::with_capacity(len);
+                            for _ in 0..len {
+                                row.push(get_u32v(buf, &mut pos)?);
+                            }
+                            ZRowDiff::Full(row)
+                        }
+                        t => {
+                            let np = bounded_count(buf, pos, t - 2, 2, "assignment diff")?;
+                            let mut pairs = Vec::with_capacity(np);
+                            let mut prev: Option<u32> = None;
+                            for _ in 0..np {
+                                let slot = get_u32v(buf, &mut pos)?;
+                                if prev.is_some_and(|p| slot <= p) {
+                                    bail!("assignment diff slots are not strictly increasing");
+                                }
+                                prev = Some(slot);
+                                let topic = get_u32v(buf, &mut pos)?;
+                                pairs.push((slot, topic));
+                            }
+                            ZRowDiff::Sparse(pairs)
+                        }
+                    });
+                }
+                let dt = get_dt_rows(buf, &mut pos, nrows)?;
+                BinMsg::ResultDelta(ResultDeltaMsg {
+                    position,
+                    epoch,
+                    tokens,
+                    host_secs,
+                    rng,
+                    block_delta,
+                    ck_delta,
+                    z,
+                    dt,
+                })
+            }
+            other => bail!("unknown binary protocol tag {other}"),
+        };
+        if pos != buf.len() {
+            bail!("trailing bytes after binary protocol message");
+        }
+        Ok(msg)
+    }
+}
+
+/// Build the per-row assignment update for one doc: `Unchanged` when
+/// nothing moved, a sparse `(slot, new_topic)` list when few slots did,
+/// the full row once a diff would cost more than shipping it whole
+/// (each sparse pair is two varints to a full row's one).
+pub fn z_row_diff(before: &[u32], after: &[u32]) -> ZRowDiff {
+    debug_assert_eq!(before.len(), after.len());
+    let changed: Vec<(u32, u32)> = before
+        .iter()
+        .zip(after)
+        .enumerate()
+        .filter(|(_, (b, a))| b != a)
+        .map(|(i, (_, &a))| (i as u32, a))
+        .collect();
+    if changed.is_empty() {
+        ZRowDiff::Unchanged
+    } else if changed.len() * 2 >= after.len() {
+        ZRowDiff::Full(after.to_vec())
+    } else {
+        ZRowDiff::Sparse(changed)
+    }
+}
+
+/// Apply a [`ZRowDiff`] onto the resident row in place. Typed errors on
+/// length/slot mismatches (the peer controls these values).
+pub fn apply_z_row_diff(row: &mut Vec<u32>, diff: &ZRowDiff) -> Result<()> {
+    match diff {
+        ZRowDiff::Unchanged => Ok(()),
+        ZRowDiff::Full(topics) => {
+            if topics.len() != row.len() {
+                bail!("full assignment row has {} slots, doc has {}", topics.len(), row.len());
+            }
+            row.clone_from(topics);
+            Ok(())
+        }
+        ZRowDiff::Sparse(pairs) => {
+            for &(slot, topic) in pairs {
+                let s = row
+                    .get_mut(slot as usize)
+                    .with_context(|| format!("assignment diff slot {slot} out of range"))?;
+                *s = topic;
+            }
+            Ok(())
+        }
     }
 }
 
@@ -451,6 +910,7 @@ mod tests {
         let m = Message::Task(TaskMsg {
             position: 0,
             round: 0,
+            epoch: u64::MAX - 7,
             block: vec![],
             ck: vec![],
             rng: (u128::MAX - 12345, (1u128 << 100) | 1),
@@ -466,5 +926,150 @@ mod tests {
         let j = Json::parse(r#"{"type":"warp"}"#).unwrap();
         let err = Message::from_json(&j).unwrap_err().to_string();
         assert!(err.contains("warp"), "{err}");
+    }
+
+    #[test]
+    fn json_task_row_counts_are_bounded_by_docs() {
+        let m = Message::Task(TaskMsg {
+            position: 1,
+            round: 2,
+            epoch: 3,
+            block: vec![1, 2],
+            ck: vec![3],
+            rng: (4, 5),
+            docs: vec![10, 11],
+            z: vec![vec![0], vec![1, 2]],
+            dt: vec![vec![(0, 1)], vec![(1, 2)]],
+        });
+        let mut j = m.to_json();
+        // Graft an extra z row: decode must refuse before converting.
+        if let Json::Obj(fields) = &mut j {
+            for (k, v) in fields.iter_mut() {
+                if k == "z" {
+                    if let Json::Arr(rows) = v {
+                        rows.push(Json::Arr(vec![]));
+                    }
+                }
+            }
+        }
+        let err = Message::from_json(&j).unwrap_err().to_string();
+        assert!(err.contains("shard has 2 docs"), "{err}");
+    }
+
+    fn sample_result_delta() -> ResultDeltaMsg {
+        ResultDeltaMsg {
+            position: 3,
+            epoch: 9,
+            tokens: 1234,
+            host_secs: 0.25,
+            rng: (u128::MAX - 1, 77),
+            block_delta: vec![1, 2, 3],
+            ck_delta: vec![4, 5],
+            z: vec![
+                ZRowDiff::Unchanged,
+                ZRowDiff::Full(vec![7, 8, 9]),
+                ZRowDiff::Sparse(vec![(0, 5), (4, 2)]),
+            ],
+            dt: vec![vec![(3, 2)], vec![(1, 1), (0, 4)], vec![]],
+        }
+    }
+
+    #[test]
+    fn bin_messages_roundtrip() {
+        let msgs = [
+            BinMsg::TaskFull(TaskMsg {
+                position: 2,
+                round: 1,
+                epoch: 6,
+                block: vec![9; 5],
+                ck: vec![8; 3],
+                rng: (1 << 90, 3),
+                docs: vec![4, 7, 9],
+                z: vec![vec![1, 2], vec![], vec![3]],
+                dt: vec![vec![(1, 2)], vec![], vec![(3, 1), (0, 1)]],
+            }),
+            BinMsg::TaskDelta(TaskDeltaMsg {
+                position: 0,
+                round: 4,
+                epoch: 2,
+                rng: (5, 6),
+                block: vec![1],
+                ck_delta: vec![],
+            }),
+            BinMsg::ResultDelta(sample_result_delta()),
+        ];
+        for m in msgs {
+            let enc = m.encode();
+            assert_eq!(BinMsg::decode(&enc).unwrap(), m, "{m:?}");
+        }
+    }
+
+    #[test]
+    fn bin_decode_never_panics_on_truncation_or_garbage() {
+        let enc = BinMsg::ResultDelta(sample_result_delta()).encode();
+        for cut in 0..enc.len() {
+            assert!(BinMsg::decode(&enc[..cut]).is_err(), "cut {cut}");
+        }
+        assert!(BinMsg::decode(&[]).is_err());
+        assert!(BinMsg::decode(&[200, 1, 2]).is_err(), "unknown tag");
+        let mut trailing = enc;
+        trailing.push(0);
+        assert!(BinMsg::decode(&trailing).is_err());
+        // Hostile doc count: claims 2^40 docs in a few bytes.
+        let mut buf = vec![TAG_TASK_FULL];
+        put_varint(&mut buf, 0);
+        put_varint(&mut buf, 0);
+        put_varint(&mut buf, 0);
+        put_rng(&mut buf, (0, 0));
+        put_bytes(&mut buf, &[]);
+        put_bytes(&mut buf, &[]);
+        put_varint(&mut buf, 1 << 40);
+        assert!(BinMsg::decode(&buf).is_err());
+    }
+
+    #[test]
+    fn z_row_diff_picks_the_cheaper_encoding_and_applies_exactly() {
+        let before = vec![1, 2, 3, 4, 5, 6];
+        // One change → sparse.
+        let mut after = before.clone();
+        after[2] = 9;
+        let d = z_row_diff(&before, &after);
+        assert!(matches!(d, ZRowDiff::Sparse(ref p) if p.len() == 1));
+        let mut row = before.clone();
+        apply_z_row_diff(&mut row, &d).unwrap();
+        assert_eq!(row, after);
+        // Most slots changed → full.
+        let after: Vec<u32> = before.iter().map(|t| t + 1).collect();
+        let d = z_row_diff(&before, &after);
+        assert!(matches!(d, ZRowDiff::Full(_)));
+        let mut row = before.clone();
+        apply_z_row_diff(&mut row, &d).unwrap();
+        assert_eq!(row, after);
+        // No change → unchanged.
+        assert_eq!(z_row_diff(&before, &before), ZRowDiff::Unchanged);
+        // Out-of-range slot is typed.
+        let mut row = vec![0u32; 2];
+        let err = apply_z_row_diff(&mut row, &ZRowDiff::Sparse(vec![(5, 1)]));
+        assert!(err.is_err());
+        // Wrong-length full row is typed.
+        let err = apply_z_row_diff(&mut row, &ZRowDiff::Full(vec![1, 2, 3]));
+        assert!(err.is_err());
+    }
+
+    #[test]
+    fn stale_epochs_are_typed() {
+        assert!(require_epoch(2, 5, Some(5)).is_ok());
+        let err = require_epoch(2, 5, Some(4)).unwrap_err();
+        match err.downcast_ref::<MpldaError>() {
+            Some(&MpldaError::StaleEpoch { position, got, have }) => {
+                assert_eq!((position, got, have), (2, 5, Some(4)));
+            }
+            other => panic!("expected StaleEpoch, got {other:?}"),
+        }
+        let err = require_epoch(0, 1, None).unwrap_err();
+        assert!(matches!(
+            err.downcast_ref::<MpldaError>(),
+            Some(&MpldaError::StaleEpoch { have: None, .. })
+        ));
     }
 }

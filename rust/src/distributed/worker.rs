@@ -1,13 +1,24 @@
 //! The worker side: the main loop behind `mplda worker`.
 //!
-//! A worker is **stateless compute**: every task ships the complete
-//! working set for one `(position, round)` cell — leased block, `C_k`
-//! snapshot, RNG stream position, assignments, live-order doc–topic
-//! entries — and the reply ships every mutated structure back. Nothing
-//! the worker retains between tasks affects the model trajectory; the
-//! cache below merely avoids rebuilding the inverted index when the same
-//! shard comes back next round (after a rotation reassignment the doc
-//! list changes and the cached entry is rebuilt).
+//! A worker is **deterministic compute plus a cache**. Under the default
+//! delta protocol each position's shard state — `docs`, assignments,
+//! live-order doc–topic entries and the `C_k` snapshot — stays resident
+//! here between rounds, stamped with the master's `epoch`. A
+//! steady-state task then carries only routing + RNG + the leased block
+//! + a sparse `C_k` delta; the reply carries sparse block/`C_k`/
+//! assignment deltas back. A full-state task (first contact, or any
+//! resend after the master bumped its epoch) re-installs everything and
+//! re-stamps the position. A delta task whose epoch does not match the
+//! resident stamp is refused with the typed `StaleEpoch` error rather
+//! than sampled against a stale base — by protocol the master never
+//! sends one, so hitting this means the conversation itself is broken.
+//!
+//! Nothing the worker retains is authoritative: every reply re-ships
+//! each structure the kernel mutated (as deltas against a base the
+//! master also holds), so a worker crash loses at most the one round in
+//! flight — exactly what the lease-timeout fault plane is built to
+//! sacrifice. JSON full-state tasks (`dist.delta = off`) are answered
+//! with JSON full-state results, byte-compatible with the PR-7 protocol.
 //!
 //! The only worker-local input is the corpus, rebuilt from the master's
 //! recipe (`InitMsg::corpus` is seed-deterministic) and verified against
@@ -24,12 +35,17 @@ use crate::config::SamplerKind;
 use crate::coordinator::worker::WorkerState;
 use crate::corpus;
 use crate::model::checkpoint::corpus_fingerprint;
-use crate::model::{wire as codec, DocTopic, DocView, SparseCounts};
+use crate::model::{wire as codec, DocTopic, DocView, ModelBlock, SparseCounts};
 use crate::sampler::{cpu_kernel, KernelOpts, Params};
-use crate::serve::wire::{read_frame, write_frame};
+use crate::serve::wire::{
+    read_frame, read_frame_any, write_binary_frame, write_frame, write_frame_with_cap, Frame,
+    MAX_FRAME,
+};
 use crate::util::rng::Pcg64;
 
-use super::protocol::{Message, ResultMsg, TaskMsg};
+use super::protocol::{
+    require_epoch, z_row_diff, BinMsg, Message, ResultDeltaMsg, ResultMsg, TaskDeltaMsg, TaskMsg,
+};
 
 /// How long `connect` retries before giving up (the master may not have
 /// bound its listener yet when workers launch).
@@ -49,6 +65,27 @@ fn connect_with_retry(addr: &str) -> Result<TcpStream> {
             }
         }
     }
+}
+
+/// Everything the task loop needs besides the stream: the rebuilt world
+/// plus the per-position resident state.
+struct WorkerEnv {
+    corpus: corpus::Corpus,
+    params: Params,
+    opts: KernelOpts,
+    sampler: SamplerKind,
+    num_topics: usize,
+    /// Full-corpus-shaped views; tasks splice their shard's rows in by
+    /// global doc id, mirroring the master's layout so the kernel sees
+    /// identical indices. Under the delta protocol the spliced rows stay
+    /// resident between rounds.
+    z: Vec<Vec<u32>>,
+    dt: DocTopic,
+    /// Per-position sampling state (inverted index, RNG, `C_k`).
+    cache: HashMap<usize, WorkerState>,
+    /// Per-position epoch stamp: which master epoch the resident shard
+    /// state belongs to. Delta tasks must match it exactly.
+    resident: HashMap<usize, u64>,
 }
 
 /// Run the worker loop: register with the master at `addr`, rebuild the
@@ -83,55 +120,50 @@ pub fn run(addr: &str) -> Result<()> {
         init.sampler.name()
     );
 
-    let params = Params::new(init.topics, corpus.num_words(), init.alpha, init.beta);
-    let opts = KernelOpts { alias_budget_bytes: init.alias_budget_bytes };
-    // Full-corpus-shaped views; tasks splice their shard's rows in and
-    // out by global doc id, mirroring the master's layout so the kernel
-    // sees identical indices.
-    let mut z: Vec<Vec<u32>> = vec![Vec::new(); corpus.num_docs()];
-    let mut dt = DocTopic::zeros(corpus.num_docs());
-    let mut cache: HashMap<usize, WorkerState> = HashMap::new();
+    // The data-plane frame cap comes from the master (dist.max_frame_mib);
+    // the handshake above always fits the compiled-in default.
+    let cap = usize::try_from(init.max_frame_bytes).unwrap_or(MAX_FRAME).max(1 << 16);
+    let mut env = WorkerEnv {
+        params: Params::new(init.topics, corpus.num_words(), init.alpha, init.beta),
+        opts: KernelOpts { alias_budget_bytes: init.alias_budget_bytes },
+        sampler: init.sampler,
+        num_topics: init.topics,
+        z: vec![Vec::new(); corpus.num_docs()],
+        dt: DocTopic::zeros(corpus.num_docs()),
+        cache: HashMap::new(),
+        resident: HashMap::new(),
+        corpus,
+    };
 
     loop {
-        let task = match read_frame(&mut stream)? {
-            Some(j) => match Message::from_json(&j)? {
-                Message::Task(task) => task,
+        match read_frame_any(&mut stream, cap)? {
+            None => return Ok(()), // master gone; a crash there is its problem
+            Some((Frame::Json(j), _)) => match Message::from_json(&j)? {
+                Message::Task(task) => {
+                    let reply = run_task(&task, &mut env)?;
+                    write_frame_with_cap(&mut stream, &Message::Result(reply).to_json(), cap)?;
+                }
                 Message::Shutdown => {
                     let _ = write_frame(&mut stream, &Message::Bye.to_json());
                     return Ok(());
                 }
                 other => bail!("expected task or shutdown, got {:?}", other.kind()),
             },
-            None => return Ok(()), // master gone; a crash there is its problem
-        };
-        let reply = run_task(
-            &task,
-            &corpus,
-            &params,
-            &opts,
-            init.sampler,
-            init.topics,
-            &mut z,
-            &mut dt,
-            &mut cache,
-        )?;
-        write_frame(&mut stream, &Message::Result(reply).to_json())?;
+            Some((Frame::Binary(body), _)) => {
+                let reply = match BinMsg::decode(&body).context("decoding binary task")? {
+                    BinMsg::TaskFull(task) => run_task_full(&task, &mut env)?,
+                    BinMsg::TaskDelta(task) => run_task_delta(&task, &mut env)?,
+                    BinMsg::ResultDelta(_) => bail!("master sent a result frame to a worker"),
+                };
+                write_binary_frame(&mut stream, &BinMsg::ResultDelta(reply).encode(), cap)?;
+            }
+        }
     }
 }
 
-/// Execute one task against the shipped state and package the reply.
-#[allow(clippy::too_many_arguments)]
-fn run_task(
-    task: &TaskMsg,
-    corpus: &corpus::Corpus,
-    params: &Params,
-    opts: &KernelOpts,
-    sampler: SamplerKind,
-    num_topics: usize,
-    z: &mut [Vec<u32>],
-    dt: &mut DocTopic,
-    cache: &mut HashMap<usize, WorkerState>,
-) -> Result<ResultMsg> {
+/// Validate a full task's shape against the corpus, (re)build the
+/// position's sampling state, and splice the shipped shard in.
+fn install_full_task(task: &TaskMsg, env: &mut WorkerEnv) -> Result<()> {
     if task.z.len() != task.docs.len() || task.dt.len() != task.docs.len() {
         bail!(
             "task for position {} ships {} z rows / {} dt rows for {} docs",
@@ -141,44 +173,124 @@ fn run_task(
             task.docs.len()
         );
     }
-    if let Some(&bad) = task.docs.iter().find(|&&d| d as usize >= corpus.num_docs()) {
-        bail!("task references doc {bad}, corpus has {}", corpus.num_docs());
+    if let Some(&bad) = task.docs.iter().find(|&&d| d as usize >= env.corpus.num_docs()) {
+        bail!("task references doc {bad}, corpus has {}", env.corpus.num_docs());
     }
-    let mut block = codec::decode_block(&task.block).context("decoding task block")?;
     let ck = codec::decode_totals(&task.ck).context("decoding task C_k")?;
 
     // Reuse the cached shard state (inverted index) when the doc list is
     // unchanged; rebuild after reassignments. RNG and C_k are overwritten
-    // from the task either way — the cache is a pure index cache.
-    let rebuild = match cache.get(&task.position) {
+    // from the task either way.
+    let rebuild = match env.cache.get(&task.position) {
         Some(w) => w.docs != task.docs,
         None => true,
     };
     if rebuild {
-        cache.insert(
+        env.cache.insert(
             task.position,
-            WorkerState::new(task.position, 0, task.docs.clone(), corpus, num_topics, 0),
+            WorkerState::new(task.position, 0, task.docs.clone(), &env.corpus, env.num_topics, 0),
         );
     }
-    let ws = cache.get_mut(&task.position).unwrap();
+    let ws = env.cache.get_mut(&task.position).unwrap();
     ws.rng = Pcg64::from_raw(task.rng.0, task.rng.1);
     ws.install_totals(ck);
 
     for ((&d, z_row), dt_row) in task.docs.iter().zip(&task.z).zip(&task.dt) {
-        z[d as usize] = z_row.clone();
-        *dt.doc_mut(d as usize) = SparseCounts::from_ordered_entries(dt_row.clone());
+        env.z[d as usize] = z_row.clone();
+        *env.dt.doc_mut(d as usize) = SparseCounts::from_ordered_entries(dt_row.clone());
     }
+    env.resident.insert(task.position, task.epoch);
+    Ok(())
+}
 
-    let mut kernel = cpu_kernel(sampler, opts)?;
+/// Run one round over the position's resident state and package every
+/// mutation as a delta against the pre-round base (which the master
+/// holds too).
+fn run_resident_round(
+    position: usize,
+    epoch: u64,
+    block: &mut ModelBlock,
+    env: &mut WorkerEnv,
+) -> Result<ResultDeltaMsg> {
+    let ws = env
+        .cache
+        .get_mut(&position)
+        .with_context(|| format!("no resident state for position {position}"))?;
+    let z_base: Vec<Vec<u32>> = ws.docs.iter().map(|&d| env.z[d as usize].clone()).collect();
+    let ck_base = ws.ck.clone();
+    let block_base = block.clone();
+
+    let mut kernel = cpu_kernel(env.sampler, &env.opts)?;
     let (tokens, host_secs) = {
-        let mut docs = DocView::new(z, dt);
-        ws.run_round(corpus, &mut docs, &mut block, params, &mut *kernel)?
+        let mut docs = DocView::new(&mut env.z, &mut env.dt);
+        ws.run_round(&env.corpus, &mut docs, block, &env.params, &mut *kernel)?
     };
 
-    let z_out = task.docs.iter().map(|&d| z[d as usize].clone()).collect();
-    let dt_out = task.docs.iter().map(|&d| dt.doc(d as usize).iter().collect()).collect();
+    let z = ws
+        .docs
+        .iter()
+        .zip(&z_base)
+        .map(|(&d, base)| z_row_diff(base, &env.z[d as usize]))
+        .collect();
+    let dt = ws.docs.iter().map(|&d| env.dt.doc(d as usize).iter().collect()).collect();
+    Ok(ResultDeltaMsg {
+        position,
+        epoch,
+        tokens,
+        host_secs,
+        rng: ws.rng.to_raw(),
+        block_delta: codec::encode_block_delta(&block_base, block),
+        ck_delta: codec::encode_totals_delta(&ck_base, &ws.ck),
+        z,
+        dt,
+    })
+}
+
+/// Binary full-state task: install everything, stamp the epoch, sample,
+/// reply with deltas.
+fn run_task_full(task: &TaskMsg, env: &mut WorkerEnv) -> Result<ResultDeltaMsg> {
+    install_full_task(task, env)?;
+    let mut block = codec::decode_block(&task.block).context("decoding task block")?;
+    run_resident_round(task.position, task.epoch, &mut block, env)
+}
+
+/// Binary delta task: verify the epoch stamp, patch the resident `C_k`,
+/// sample over the resident shard, reply with deltas.
+fn run_task_delta(task: &TaskDeltaMsg, env: &mut WorkerEnv) -> Result<ResultDeltaMsg> {
+    require_epoch(task.position, task.epoch, env.resident.get(&task.position).copied())?;
+    let mut block = codec::decode_block(&task.block).context("decoding task block")?;
+    {
+        let ws = env
+            .cache
+            .get_mut(&task.position)
+            .with_context(|| format!("no resident state for position {}", task.position))?;
+        ws.rng = Pcg64::from_raw(task.rng.0, task.rng.1);
+        codec::apply_totals_delta(&mut ws.ck, &task.ck_delta)
+            .context("applying task C_k delta")?;
+        ws.ck_read = ws.ck.clone();
+    }
+    run_resident_round(task.position, task.epoch, &mut block, env)
+}
+
+/// Execute one JSON full-state task (`dist.delta = off`) and package the
+/// full-state reply — the PR-7 protocol, byte for byte plus the epoch
+/// echo.
+fn run_task(task: &TaskMsg, env: &mut WorkerEnv) -> Result<ResultMsg> {
+    install_full_task(task, env)?;
+    let mut block = codec::decode_block(&task.block).context("decoding task block")?;
+    let ws = env.cache.get_mut(&task.position).unwrap();
+
+    let mut kernel = cpu_kernel(env.sampler, &env.opts)?;
+    let (tokens, host_secs) = {
+        let mut docs = DocView::new(&mut env.z, &mut env.dt);
+        ws.run_round(&env.corpus, &mut docs, &mut block, &env.params, &mut *kernel)?
+    };
+
+    let z_out = ws.docs.iter().map(|&d| env.z[d as usize].clone()).collect();
+    let dt_out = ws.docs.iter().map(|&d| env.dt.doc(d as usize).iter().collect()).collect();
     Ok(ResultMsg {
         position: task.position,
+        epoch: task.epoch,
         tokens,
         host_secs,
         block: codec::encode_block(&block),

@@ -146,6 +146,14 @@ pub trait Backend {
     fn listen_addr(&self) -> Option<std::net::SocketAddr> {
         None
     }
+
+    /// Driver signal: model state (`z`, `dt`, worker `C_k` snapshots) was
+    /// mutated outside this backend's rounds — a degraded round ran the
+    /// kernel locally, a checkpoint restored. Backends that cache state
+    /// remotely (the distributed backend's worker-resident shards) must
+    /// invalidate it; for everyone else the state *is* the master copy
+    /// and there is nothing to do. Over-calling is always safe.
+    fn invalidate_worker_cache(&mut self) {}
 }
 
 /// One round executed sequentially with a *skip mask* — the driver's

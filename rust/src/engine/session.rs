@@ -593,6 +593,9 @@ impl Session {
                         recall_bytes: 0,
                         host_compute_secs: ys.host_compute_secs,
                         fetch_stall_secs: 0.0,
+                        task_bytes: 0,
+                        result_bytes: 0,
+                        full_resend_bytes: 0,
                     },
                     loglik,
                     pipeline: PipelineStats::default(),

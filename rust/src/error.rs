@@ -59,6 +59,21 @@ pub enum MpldaError {
         /// Length-prefix bytes received before EOF (1..=3).
         got: usize,
     },
+    /// A delta-protocol task or result carries an epoch other than the
+    /// receiver's current one: the worker-resident state it would patch
+    /// does not exist (or was invalidated by a reassignment/reap). The
+    /// master reacts by bumping its epoch and falling back to a full
+    /// resend; a worker seeing this refuses the task rather than
+    /// sampling against stale state.
+    StaleEpoch {
+        /// Rotation position the message addressed.
+        position: usize,
+        /// Epoch the message carried.
+        got: u64,
+        /// The receiver's current epoch for that position, if it holds
+        /// resident state at all.
+        have: Option<u64>,
+    },
     /// A storage segment record extends past end-of-file — a torn append
     /// from a crash mid-write. On reopen the torn tail is detected and
     /// discarded; a mid-read hit means the file shrank underneath us.
@@ -98,6 +113,18 @@ impl fmt::Display for MpldaError {
             MpldaError::FrameTruncated { got } => {
                 write!(f, "connection closed mid-frame ({got} of 4 length bytes)")
             }
+            MpldaError::StaleEpoch { position, got, have } => match have {
+                Some(have) => write!(
+                    f,
+                    "stale epoch at position {position}: message carries epoch {got}, \
+                     resident state is at epoch {have}"
+                ),
+                None => write!(
+                    f,
+                    "stale epoch at position {position}: message carries epoch {got}, \
+                     but no resident state exists"
+                ),
+            },
             MpldaError::SegmentTruncated { offset } => {
                 write!(f, "segment record at offset {offset} truncated (torn append)")
             }

@@ -706,6 +706,27 @@ impl KvStore {
         self.meter.lock().expect("kv meter lock poisoned").bytes_of(kind)
     }
 
+    /// Meter real socket bytes the distributed transport moved for
+    /// `machine` — one of the out-of-band transport kinds
+    /// ([`TransferKind::TaskDelta`]/[`TransferKind::TaskFull`]/
+    /// [`TransferKind::ResultDelta`]/[`TransferKind::ResultFull`]).
+    /// Never becomes a flow and never counts toward
+    /// [`KvStore::network_bytes`]: the simulated network already timed
+    /// the logical transfers these frames realize.
+    pub fn record_transport(&self, machine: usize, bytes: u64, what: TransferKind) {
+        debug_assert!(matches!(
+            what,
+            TransferKind::TaskDelta
+                | TransferKind::TaskFull
+                | TransferKind::ResultDelta
+                | TransferKind::ResultFull
+        ));
+        self.meter
+            .lock()
+            .expect("kv meter lock poisoned")
+            .record(machine, machine, bytes, what);
+    }
+
     /// Bytes moved overlapped with compute (prefetch traffic) — see
     /// [`super::traffic::TrafficMeter::overlapped_bytes`].
     pub fn overlapped_bytes(&self) -> u64 {

@@ -54,10 +54,30 @@ pub enum TransferKind {
     /// Local disk I/O like [`TransferKind::BlockSpill`]: metered,
     /// reported, never timed by the network model.
     BlockRecall,
+    /// A distributed-trainer task frame shipped **delta-encoded** (the
+    /// worker holds resident state for the position; only the block,
+    /// `C_k` delta and RNG ride). Real socket bytes — but the simulated
+    /// network model already times these transfers as
+    /// `BlockFetch`/`TotalsRead` flows, so like the disk kinds they are
+    /// metered out-of-band: excluded from [`TrafficMeter::drain_flows`]
+    /// and [`TrafficMeter::network_bytes`], or `comm_bytes`/`sim_time`
+    /// would double-count and diverge from the simulated oracle.
+    TaskDelta,
+    /// A distributed-trainer task frame shipped **full** (first contact
+    /// with a worker, or after an epoch bump invalidated its resident
+    /// state). Out-of-band like [`TransferKind::TaskDelta`].
+    TaskFull,
+    /// A distributed-trainer result frame shipped delta-encoded.
+    /// Out-of-band like [`TransferKind::TaskDelta`].
+    ResultDelta,
+    /// A distributed-trainer result frame shipped full (the JSON
+    /// full-state protocol, `dist.delta = off`). Out-of-band like
+    /// [`TransferKind::TaskDelta`].
+    ResultFull,
 }
 
 /// Number of [`TransferKind`] variants (size of the per-kind tally).
-const NUM_KINDS: usize = 9;
+const NUM_KINDS: usize = 13;
 
 /// Accumulating traffic meter.
 #[derive(Debug, Default, Clone)]
@@ -79,13 +99,29 @@ fn kind_idx(k: TransferKind) -> usize {
         TransferKind::BlockRead => 6,
         TransferKind::BlockSpill => 7,
         TransferKind::BlockRecall => 8,
+        TransferKind::TaskDelta => 9,
+        TransferKind::TaskFull => 10,
+        TransferKind::ResultDelta => 11,
+        TransferKind::ResultFull => 12,
     }
 }
 
-/// Disk-tier traffic: real bytes moved, but over a local disk, not the
-/// network — the network model must never see it as a flow.
-fn is_disk(k: TransferKind) -> bool {
-    matches!(k, TransferKind::BlockSpill | TransferKind::BlockRecall)
+/// Out-of-band traffic: real bytes moved, but either over a local disk
+/// (spill/recall) or over a socket whose *logical* transfers the network
+/// model already times as flows (the distributed transport kinds) — the
+/// network model must never see these as flows, and
+/// [`TrafficMeter::network_bytes`] must not count them, or the simulated
+/// clock/communication totals would diverge from the oracle.
+fn is_out_of_band(k: TransferKind) -> bool {
+    matches!(
+        k,
+        TransferKind::BlockSpill
+            | TransferKind::BlockRecall
+            | TransferKind::TaskDelta
+            | TransferKind::TaskFull
+            | TransferKind::ResultDelta
+            | TransferKind::ResultFull
+    )
 }
 
 impl TrafficMeter {
@@ -104,7 +140,7 @@ impl TrafficMeter {
         self.total_bytes += bytes;
         self.by_kind[kind_idx(what)] += bytes;
         self.count_by_kind[kind_idx(what)] += 1;
-        if !is_disk(what) {
+        if !is_out_of_band(what) {
             self.pending.push(Transfer { src, dst, bytes, what });
         }
     }
@@ -141,14 +177,29 @@ impl TrafficMeter {
         self.count_by_kind[kind_idx(kind)]
     }
 
-    /// Bytes that actually crossed the network — total minus the
-    /// disk-tier spill/recall traffic. Communication-volume comparisons
-    /// (§5.3) use this so enabling out-of-core storage doesn't inflate
-    /// the reported network cost.
+    /// Bytes of the *simulated* network traffic — total minus every
+    /// out-of-band kind: disk-tier spill/recall (local I/O, not network)
+    /// and the distributed transport frames (real socket bytes, but the
+    /// realization of transfers the simulation already counts as
+    /// `BlockFetch`/`BlockCommit`/`TotalsRead`/`TotalsMerge` flows —
+    /// counting both would double-report). Communication-volume
+    /// comparisons (§5.3) use this so neither out-of-core storage nor
+    /// the transport encoding inflates the reported network cost.
     pub fn network_bytes(&self) -> u64 {
         self.total_bytes
             - self.bytes_of(TransferKind::BlockSpill)
             - self.bytes_of(TransferKind::BlockRecall)
+            - self.transport_bytes()
+    }
+
+    /// Real socket bytes the distributed transport moved, both
+    /// directions, all encodings — the quantity the E13 bench compares
+    /// across `dist.delta = on|off`.
+    pub fn transport_bytes(&self) -> u64 {
+        self.bytes_of(TransferKind::TaskDelta)
+            + self.bytes_of(TransferKind::TaskFull)
+            + self.bytes_of(TransferKind::ResultDelta)
+            + self.bytes_of(TransferKind::ResultFull)
     }
 
     /// Bytes that moved *overlapped with compute* rather than on the
@@ -206,6 +257,25 @@ mod tests {
         let flows = m.drain_flows();
         assert_eq!(flows.len(), 1);
         assert_eq!(flows[0], Flow { src: 0, dst: 1, bytes: 100 });
+    }
+
+    #[test]
+    fn transport_kinds_are_metered_but_never_flow_or_count_as_network() {
+        let mut m = TrafficMeter::new();
+        m.record(0, 1, 100, TransferKind::BlockFetch);
+        m.record(2, 2, 400, TransferKind::TaskFull);
+        m.record(2, 2, 40, TransferKind::TaskDelta);
+        m.record(2, 2, 30, TransferKind::ResultDelta);
+        m.record(2, 2, 300, TransferKind::ResultFull);
+        assert_eq!(m.total_bytes(), 870);
+        assert_eq!(m.transport_bytes(), 770);
+        // The simulated network only ever sees the fetch: the socket
+        // bytes realize transfers it already timed as flows.
+        assert_eq!(m.network_bytes(), 100);
+        let flows = m.drain_flows();
+        assert_eq!(flows.len(), 1);
+        assert_eq!(flows[0], Flow { src: 0, dst: 1, bytes: 100 });
+        assert_eq!(m.count_of(TransferKind::TaskDelta), 1);
     }
 
     #[test]

@@ -33,6 +33,11 @@ impl TopicCounts {
     }
 
     #[inline]
+    pub fn set(&mut self, k: usize, v: i64) {
+        self.counts[k] = v;
+    }
+
+    #[inline]
     pub fn inc(&mut self, k: usize) {
         self.counts[k] += 1;
     }

@@ -12,6 +12,21 @@
 //! Row    := nnz:varint (topic_delta:varint count:varint)*
 //! Totals := k:varint (zigzag(count):varint)*
 //! ```
+//!
+//! **Delta encodings** (the distributed protocol's round-trip payloads —
+//! one Gibbs round touches O(tokens) entries of a block that costs
+//! O(nnz) to ship whole, and a handful of `C_k` buckets out of `K`):
+//! ```text
+//! TotalsΔ := k:varint n:varint (idx_gap:varint zigzag(Δ):varint)*
+//! BlockΔ  := id:u32 lo:u32 hi:u32 stride:varint nrows:varint
+//!            (row_gap:varint n:varint (topic_gap:varint zigzag(Δ):varint)*)*
+//! ```
+//! Both are *lossless against a shared base*: `apply(base, encode(base,
+//! new)) == new` bit for bit, which is what keeps the delta-shipping
+//! distributed backend on the bitwise-equal-to-oracle bar. Decoding is
+//! hostile-input hardened the same way [`decode_block`] is — every
+//! claimed entry count is bounded by the remaining buffer *before* any
+//! allocation trusts it.
 
 use anyhow::{bail, Result};
 
@@ -176,6 +191,259 @@ pub fn decode_totals(buf: &[u8]) -> Result<TopicCounts> {
     Ok(TopicCounts::from_vec(counts))
 }
 
+/// Encode the sparse signed difference `new - base` between two totals
+/// vectors of equal dimension. Entries ride as strictly increasing
+/// index gaps with zigzag-varint deltas, so the cost is O(touched
+/// buckets), not O(K).
+pub fn encode_totals_delta(base: &TopicCounts, new: &TopicCounts) -> Vec<u8> {
+    assert_eq!(
+        base.num_topics(),
+        new.num_topics(),
+        "totals delta requires equal topic dimensions"
+    );
+    let mut buf = Vec::with_capacity(8);
+    put_varint(&mut buf, base.num_topics() as u64);
+    let mut n = 0u64;
+    for (b, a) in base.as_slice().iter().zip(new.as_slice()) {
+        if a != b {
+            n += 1;
+        }
+    }
+    put_varint(&mut buf, n);
+    let mut prev = 0usize;
+    for (k, (b, a)) in base.as_slice().iter().zip(new.as_slice()).enumerate() {
+        if a != b {
+            put_varint(&mut buf, (k - prev) as u64);
+            put_varint(&mut buf, zigzag(a - b));
+            prev = k;
+        }
+    }
+    buf
+}
+
+/// Apply an [`encode_totals_delta`] payload in place. Typed errors on
+/// dimension mismatch, out-of-range indices, non-increasing runs,
+/// arithmetic overflow, or trailing bytes — never a panic (the peer
+/// controls these bytes).
+pub fn apply_totals_delta(t: &mut TopicCounts, buf: &[u8]) -> Result<()> {
+    let mut pos = 0;
+    let k = get_varint(buf, &mut pos)? as usize;
+    if k != t.num_topics() {
+        bail!("totals delta is over {k} topics, target has {}", t.num_topics());
+    }
+    let n = get_varint(buf, &mut pos)? as usize;
+    // Each entry is at least two bytes (two varints): bound the claim
+    // before trusting it.
+    if n > (buf.len() - pos) / 2 {
+        bail!("totals delta claims {n} entries but only {} bytes remain", buf.len() - pos);
+    }
+    let mut idx = 0usize;
+    for i in 0..n {
+        let gap = get_varint(buf, &mut pos)? as usize;
+        if i > 0 && gap == 0 {
+            bail!("totals delta indices are not strictly increasing");
+        }
+        idx = idx
+            .checked_add(gap)
+            .filter(|&x| x < k)
+            .with_context(|| format!("totals delta index out of range (gap {gap})"))?;
+        let d = unzigzag(get_varint(buf, &mut pos)?);
+        let v = t
+            .get(idx)
+            .checked_add(d)
+            .with_context(|| format!("totals delta overflows bucket {idx}"))?;
+        t.set(idx, v);
+    }
+    if pos != buf.len() {
+        bail!("trailing bytes after totals delta");
+    }
+    Ok(())
+}
+
+/// Encode the sparse difference between two blocks covering the same
+/// `(id, lo, hi, stride)` word range: only rows that changed appear, and
+/// within a changed row only the topics whose count changed, as signed
+/// zigzag deltas over the merge-walk of the two sorted entry lists.
+pub fn encode_block_delta(base: &ModelBlock, new: &ModelBlock) -> Vec<u8> {
+    assert!(
+        base.id == new.id
+            && base.lo == new.lo
+            && base.hi == new.hi
+            && base.stride == new.stride
+            && base.rows.len() == new.rows.len(),
+        "block delta requires an identical word range"
+    );
+    let mut changed: Vec<(usize, Vec<(u32, i64)>)> = Vec::new();
+    for (r, (b, a)) in base.rows.iter().zip(&new.rows).enumerate() {
+        let diff = row_diff(b, a);
+        if !diff.is_empty() {
+            changed.push((r, diff));
+        }
+    }
+    let mut buf = Vec::with_capacity(16 + changed.len() * 8);
+    buf.extend_from_slice(&base.id.to_le_bytes());
+    buf.extend_from_slice(&base.lo.to_le_bytes());
+    buf.extend_from_slice(&base.hi.to_le_bytes());
+    put_varint(&mut buf, base.stride as u64);
+    put_varint(&mut buf, changed.len() as u64);
+    let mut prev_row = 0usize;
+    for (r, diff) in &changed {
+        put_varint(&mut buf, (r - prev_row) as u64);
+        prev_row = *r;
+        put_varint(&mut buf, diff.len() as u64);
+        let mut prev_k = 0u32;
+        for &(k, d) in diff {
+            put_varint(&mut buf, (k - prev_k) as u64);
+            put_varint(&mut buf, zigzag(d));
+            prev_k = k;
+        }
+    }
+    buf
+}
+
+/// Signed sparse difference `new - base` of two topic-sorted rows.
+fn row_diff(base: &SparseRow, new: &SparseRow) -> Vec<(u32, i64)> {
+    let mut out = Vec::new();
+    let (mut bi, mut ni) = (base.iter().peekable(), new.iter().peekable());
+    loop {
+        match (bi.peek().copied(), ni.peek().copied()) {
+            (Some((bk, bc)), Some((nk, nc))) => {
+                if bk == nk {
+                    if bc != nc {
+                        out.push((bk, nc as i64 - bc as i64));
+                    }
+                    bi.next();
+                    ni.next();
+                } else if bk < nk {
+                    out.push((bk, -(bc as i64)));
+                    bi.next();
+                } else {
+                    out.push((nk, nc as i64));
+                    ni.next();
+                }
+            }
+            (Some((bk, bc)), None) => {
+                out.push((bk, -(bc as i64)));
+                bi.next();
+            }
+            (None, Some((nk, nc))) => {
+                out.push((nk, nc as i64));
+                ni.next();
+            }
+            (None, None) => return out,
+        }
+    }
+}
+
+/// Apply an [`encode_block_delta`] payload in place. The header must
+/// match the target block exactly (a delta never retargets); counts must
+/// stay within `u32` and never go negative. Typed errors throughout,
+/// entry counts bounded by the remaining buffer before allocation.
+pub fn apply_block_delta(block: &mut ModelBlock, buf: &[u8]) -> Result<()> {
+    if buf.len() < 12 {
+        bail!("block delta header truncated");
+    }
+    let id = u32::from_le_bytes(buf[0..4].try_into().unwrap());
+    let lo = u32::from_le_bytes(buf[4..8].try_into().unwrap());
+    let hi = u32::from_le_bytes(buf[8..12].try_into().unwrap());
+    let mut pos = 12;
+    let stride = get_varint(buf, &mut pos)? as u32;
+    if id != block.id || lo != block.lo || hi != block.hi || stride != block.stride {
+        bail!(
+            "block delta targets block {id} [{lo},{hi}) stride {stride}, \
+             base is block {} [{},{}) stride {}",
+            block.id,
+            block.lo,
+            block.hi,
+            block.stride
+        );
+    }
+    let nrows = get_varint(buf, &mut pos)? as usize;
+    // A changed row costs at least three bytes (row gap + count + one
+    // entry — empty diffs are never encoded).
+    if nrows > (buf.len() - pos) / 3 {
+        bail!("block delta claims {nrows} rows but only {} bytes remain", buf.len() - pos);
+    }
+    let mut row = 0usize;
+    for i in 0..nrows {
+        let gap = get_varint(buf, &mut pos)? as usize;
+        if i > 0 && gap == 0 {
+            bail!("block delta rows are not strictly increasing");
+        }
+        row = row
+            .checked_add(gap)
+            .filter(|&r| r < block.rows.len())
+            .with_context(|| format!("block delta row out of range (gap {gap})"))?;
+        let n = get_varint(buf, &mut pos)? as usize;
+        if n == 0 {
+            bail!("block delta encodes an empty row diff");
+        }
+        if n > (buf.len() - pos) / 2 {
+            bail!("row diff claims {n} entries but only {} bytes remain", buf.len() - pos);
+        }
+        let mut diff = Vec::with_capacity(n);
+        let mut prev = 0u32;
+        for j in 0..n {
+            let dk = get_varint(buf, &mut pos)? as u32;
+            if j > 0 && dk == 0 {
+                bail!("row diff topics are not strictly increasing");
+            }
+            let k = prev
+                .checked_add(dk)
+                .with_context(|| "row diff topic overflows u32")?;
+            let d = unzigzag(get_varint(buf, &mut pos)?);
+            diff.push((k, d));
+            prev = k;
+        }
+        apply_row_diff(&mut block.rows[row], &diff)
+            .with_context(|| format!("applying delta to row {row}"))?;
+    }
+    if pos != buf.len() {
+        bail!("trailing bytes after block delta");
+    }
+    Ok(())
+}
+
+/// Merge a sorted signed diff into a sorted row; entries hitting zero
+/// vanish (mirroring [`row_diff`]'s view of absence as count 0).
+fn apply_row_diff(row: &mut SparseRow, diff: &[(u32, i64)]) -> Result<()> {
+    let mut out = Vec::with_capacity(row.nnz() + diff.len());
+    let mut di = diff.iter().peekable();
+    for (k, c) in row.iter() {
+        while let Some(&&(dk, dd)) = di.peek() {
+            if dk >= k {
+                break;
+            }
+            push_diffed(&mut out, dk, 0, dd)?;
+            di.next();
+        }
+        if let Some(&&(dk, dd)) = di.peek() {
+            if dk == k {
+                push_diffed(&mut out, k, c as i64, dd)?;
+                di.next();
+                continue;
+            }
+        }
+        out.push((k, c));
+    }
+    for &(dk, dd) in di {
+        push_diffed(&mut out, dk, 0, dd)?;
+    }
+    *row = SparseRow::from_entries(out);
+    Ok(())
+}
+
+fn push_diffed(out: &mut Vec<(u32, u32)>, k: u32, c: i64, d: i64) -> Result<()> {
+    let v = c.checked_add(d).with_context(|| format!("count overflow at topic {k}"))?;
+    if v < 0 || v > u32::MAX as i64 {
+        bail!("delta drives topic {k} count to {v}, outside u32");
+    }
+    if v > 0 {
+        out.push((k, v as u32));
+    }
+    Ok(())
+}
+
 /// Wire size of a block without materializing the encoding — used by the
 /// memory/traffic accountant for the full-scale extrapolations where we
 /// never build the 21.8M-word table.
@@ -285,6 +553,115 @@ mod tests {
         let mut enc = encode_block(&b);
         enc.push(0); // trailing byte
         assert!(decode_block(&enc).is_err());
+    }
+
+    #[test]
+    fn totals_delta_roundtrip_and_sparsity() {
+        let base = TopicCounts::from_vec(vec![10, 0, 5, 7, 0, 3, 1_000_000]);
+        let new = TopicCounts::from_vec(vec![10, 2, 5, 4, 0, 3, 999_999]);
+        let enc = encode_totals_delta(&base, &new);
+        // 3 touched buckets: far smaller than the 7-bucket full encoding
+        // would be for realistic magnitudes, and exact on apply.
+        let mut t = base.clone();
+        apply_totals_delta(&mut t, &enc).unwrap();
+        assert_eq!(t, new);
+        // Identical vectors encode to a 2-varint header.
+        let empty = encode_totals_delta(&base, &base);
+        assert_eq!(empty.len(), 2);
+        let mut t = base.clone();
+        apply_totals_delta(&mut t, &empty).unwrap();
+        assert_eq!(t, base);
+    }
+
+    #[test]
+    fn totals_delta_rejects_garbage() {
+        let base = TopicCounts::from_vec(vec![1, 2, 3]);
+        let new = TopicCounts::from_vec(vec![3, 2, 1]);
+        let enc = encode_totals_delta(&base, &new);
+        // Truncations never panic.
+        for cut in 0..enc.len() {
+            let mut t = base.clone();
+            assert!(apply_totals_delta(&mut t, &enc[..cut]).is_err(), "cut {cut}");
+        }
+        // Wrong dimension.
+        let mut short = TopicCounts::from_vec(vec![1, 2]);
+        assert!(apply_totals_delta(&mut short, &enc).is_err());
+        // Hostile entry count: claims 2^40 entries in a few bytes.
+        let mut buf = Vec::new();
+        put_varint(&mut buf, 3);
+        put_varint(&mut buf, 1 << 40);
+        let mut t = base.clone();
+        assert!(apply_totals_delta(&mut t, &buf).is_err());
+        // Trailing byte.
+        let mut tr = enc.clone();
+        tr.push(0);
+        let mut t = base;
+        assert!(apply_totals_delta(&mut t, &tr).is_err());
+    }
+
+    #[test]
+    fn block_delta_roundtrip_on_mutations() {
+        let base = random_block(42, 0, 64, 50);
+        let mut new = base.clone();
+        // Mutations of every flavor: bump existing, insert fresh, remove.
+        new.row_mut(3).inc(7);
+        new.row_mut(10).inc(49);
+        let first = base.row(20).iter().next();
+        if let Some((k, _)) = first {
+            new.row_mut(20).dec(k);
+        }
+        let enc = encode_block_delta(&base, &new);
+        let mut b = base.clone();
+        apply_block_delta(&mut b, &enc).unwrap();
+        assert_eq!(b, new);
+        // Unchanged block: header-only delta, applies to a no-op.
+        let enc = encode_block_delta(&base, &base);
+        assert_eq!(enc.len(), 14); // 12-byte header + stride + 0 rows
+        let mut b = base.clone();
+        apply_block_delta(&mut b, &enc).unwrap();
+        assert_eq!(b, base);
+        // Delta size tracks touched entries, not block size.
+        let mut one = base.clone();
+        one.row_mut(0).inc(1);
+        assert!(encode_block_delta(&base, &one).len() < encode_block(&base).len() / 4);
+    }
+
+    #[test]
+    fn block_delta_rejects_retarget_truncation_and_negatives() {
+        let base = random_block(5, 0, 32, 40);
+        let mut new = base.clone();
+        new.row_mut(1).inc(3);
+        let enc = encode_block_delta(&base, &new);
+        for cut in 0..enc.len() {
+            let mut b = base.clone();
+            assert!(apply_block_delta(&mut b, &enc[..cut]).is_err(), "cut {cut}");
+        }
+        // Retargeting a different block is typed, not silent.
+        let mut other = random_block(5, 0, 32, 40);
+        other.id = 9;
+        assert!(apply_block_delta(&mut other, &enc).is_err());
+        // A delta that would drive a count negative is rejected.
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&base.id.to_le_bytes());
+        buf.extend_from_slice(&base.lo.to_le_bytes());
+        buf.extend_from_slice(&base.hi.to_le_bytes());
+        put_varint(&mut buf, base.stride as u64);
+        put_varint(&mut buf, 1); // one row
+        put_varint(&mut buf, 0); // row 0
+        put_varint(&mut buf, 1); // one entry
+        put_varint(&mut buf, 0); // topic 0
+        put_varint(&mut buf, zigzag(-1_000_000));
+        let mut b = base.clone();
+        assert!(apply_block_delta(&mut b, &buf).is_err());
+        // Hostile row count bounded before allocation.
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&base.id.to_le_bytes());
+        buf.extend_from_slice(&base.lo.to_le_bytes());
+        buf.extend_from_slice(&base.hi.to_le_bytes());
+        put_varint(&mut buf, base.stride as u64);
+        put_varint(&mut buf, 1 << 50);
+        let mut b = base;
+        assert!(apply_block_delta(&mut b, &buf).is_err());
     }
 
     #[test]

@@ -1,16 +1,22 @@
-//! Length-prefixed JSON framing shared by every TCP surface.
+//! Length-prefixed framing shared by every TCP surface, in two flavors:
+//! JSON frames (the original codec) and raw binary frames.
 //!
-//! One frame is a 4-byte big-endian length followed by that many bytes of
-//! UTF-8 JSON. The codec grew up inside `serve::server` (the online
-//! inference front end) and was lifted here when the distributed trainer
-//! (`crate::distributed`) started speaking the same wire format — both
-//! sides now share one cap, one EOF discipline, and one set of typed
-//! errors:
+//! A frame is a 4-byte big-endian prefix followed by that many body
+//! bytes. The prefix's **top bit selects the frame kind**: clear = UTF-8
+//! JSON (every frame the serve front end and the distributed control
+//! plane exchange — byte-identical to the pre-binary protocol), set =
+//! raw binary (the distributed trainer's task/result hot path, carrying
+//! `model::wire` bytes directly instead of hex-in-JSON). The bit is free
+//! to take because frame caps stay far below 2³¹. The codec grew up
+//! inside `serve::server` and was lifted here when the distributed
+//! trainer started speaking the same wire format — both sides share one
+//! cap discipline and one set of typed errors:
 //!
-//! * a prefix larger than [`MAX_FRAME`] fails with
-//!   [`MpldaError::FrameTooLarge`] **before** the body buffer is
-//!   allocated, so garbage or hostile prefixes can never trigger a
-//!   multi-GiB allocation;
+//! * a prefix larger than the cap ([`MAX_FRAME`] by default; the
+//!   distributed tier passes `dist.max_frame_mib` through the `_with_cap`
+//!   variants) fails with [`MpldaError::FrameTooLarge`] **before** the
+//!   body buffer is allocated, so garbage or hostile prefixes can never
+//!   trigger a multi-GiB allocation;
 //! * EOF *between* frames is a clean end-of-stream (`Ok(None)`); EOF
 //!   *inside* the length prefix is [`MpldaError::FrameTruncated`]; EOF
 //!   inside the body surfaces the underlying `UnexpectedEof` I/O error.
@@ -27,28 +33,62 @@ use crate::error::MpldaError;
 
 use super::json::Json;
 
-/// Upper bound on one frame's body (guards against garbage prefixes).
+/// Default upper bound on one frame's body (guards against garbage
+/// prefixes). The distributed tier can raise it per-connection via
+/// `dist.max_frame_mib`; JSON-only surfaces (the serve front end) always
+/// use this value.
 pub const MAX_FRAME: usize = 64 << 20;
 
-/// Write one length-prefixed JSON frame.
+/// Prefix bit marking a binary frame. Caps never reach 2³¹, so a length
+/// with this bit set is unambiguous.
+const BINARY_BIT: u32 = 1 << 31;
+
+/// One decoded frame: the kind the peer sent decides how the body was
+/// parsed.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Frame {
+    /// A UTF-8 JSON frame (prefix top bit clear).
+    Json(Json),
+    /// A raw binary frame (prefix top bit set).
+    Binary(Vec<u8>),
+}
+
+/// Write one length-prefixed JSON frame (default cap).
 pub fn write_frame<W: Write>(w: &mut W, body: &Json) -> Result<()> {
+    write_frame_with_cap(w, body, MAX_FRAME).map(|_| ())
+}
+
+/// Write one length-prefixed JSON frame under an explicit cap; returns
+/// total wire bytes written (prefix + body) for traffic accounting.
+pub fn write_frame_with_cap<W: Write>(w: &mut W, body: &Json, cap: usize) -> Result<u64> {
     let text = body.render();
-    if text.len() > MAX_FRAME {
-        bail!("response frame of {} bytes exceeds the {MAX_FRAME}-byte cap", text.len());
+    if text.len() > cap {
+        bail!("response frame of {} bytes exceeds the {cap}-byte cap", text.len());
     }
     w.write_all(&(text.len() as u32).to_be_bytes()).context("writing frame length")?;
     w.write_all(text.as_bytes()).context("writing frame body")?;
     w.flush().context("flushing frame")?;
-    Ok(())
+    Ok(4 + text.len() as u64)
 }
 
-/// Read one frame's raw body; `Ok(None)` on clean EOF before a frame
-/// starts (the peer is done). Errors here mean the *framing* is broken —
-/// the stream can no longer be trusted.
-pub fn read_frame_bytes<R: Read>(r: &mut R) -> Result<Option<Vec<u8>>> {
-    // Fill the length prefix byte-wise so EOF *before* a frame (clean
-    // disconnect) is distinguishable from EOF *inside* the prefix (a
-    // truncated frame — a real framing error).
+/// Write one binary frame (prefix top bit set) under an explicit cap;
+/// returns total wire bytes written (prefix + body).
+pub fn write_binary_frame<W: Write>(w: &mut W, body: &[u8], cap: usize) -> Result<u64> {
+    let cap = cap.min(BINARY_BIT as usize - 1);
+    if body.len() > cap {
+        bail!("binary frame of {} bytes exceeds the {cap}-byte cap", body.len());
+    }
+    w.write_all(&(body.len() as u32 | BINARY_BIT).to_be_bytes())
+        .context("writing frame length")?;
+    w.write_all(body).context("writing frame body")?;
+    w.flush().context("flushing frame")?;
+    Ok(4 + body.len() as u64)
+}
+
+/// Fill the 4-byte length prefix byte-wise so EOF *before* a frame
+/// (clean disconnect, `Ok(None)`) is distinguishable from EOF *inside*
+/// the prefix (a truncated frame — a real framing error).
+fn read_prefix<R: Read>(r: &mut R) -> Result<Option<u32>> {
     let mut len_bytes = [0u8; 4];
     let mut filled = 0usize;
     while filled < len_bytes.len() {
@@ -64,15 +104,46 @@ pub fn read_frame_bytes<R: Read>(r: &mut R) -> Result<Option<Vec<u8>>> {
             Err(e) => return Err(e.into()),
         }
     }
-    let len = u32::from_be_bytes(len_bytes) as usize;
-    if len > MAX_FRAME {
-        // The prefix is data from the wire, not a trusted size: reject it
-        // before `vec![0u8; len]` commits gigabytes to a lie.
+    Ok(Some(u32::from_be_bytes(len_bytes)))
+}
+
+/// Read a `len`-byte body, rejecting the claim against `cap` *before*
+/// allocation — the prefix is data from the wire, not a trusted size;
+/// reject it before `vec![0u8; len]` commits gigabytes to a lie.
+fn read_body<R: Read>(r: &mut R, len: usize, cap: usize) -> Result<Vec<u8>> {
+    if len > cap {
         return Err(MpldaError::FrameTooLarge { len: len as u64 }.into());
     }
     let mut body = vec![0u8; len];
     r.read_exact(&mut body).context("reading frame body")?;
-    Ok(Some(body))
+    Ok(body)
+}
+
+/// Read one frame's length prefix and body under `cap`, reporting the
+/// kind bit. `Ok(None)` on clean EOF before a frame starts.
+fn read_frame_raw<R: Read>(r: &mut R, cap: usize) -> Result<Option<(bool, Vec<u8>)>> {
+    let Some(raw) = read_prefix(r)? else { return Ok(None) };
+    let binary = raw & BINARY_BIT != 0;
+    let body = read_body(r, (raw & !BINARY_BIT) as usize, cap)?;
+    Ok(Some((binary, body)))
+}
+
+/// Read one frame's raw body under the default cap; `Ok(None)` on clean
+/// EOF before a frame starts (the peer is done). Errors here mean the
+/// *framing* is broken — the stream can no longer be trusted. A binary
+/// frame from the peer is rejected as oversized (its prefix reads above
+/// the cap with the kind bit folded in), which keeps JSON-only surfaces
+/// honest without a new error variant.
+pub fn read_frame_bytes<R: Read>(r: &mut R) -> Result<Option<Vec<u8>>> {
+    read_frame_raw_jsononly(r, MAX_FRAME)
+}
+
+/// JSON-only read: a set kind bit is *not* masked — the whole prefix is
+/// compared against the cap, so binary frames surface as
+/// [`MpldaError::FrameTooLarge`] exactly as any garbage prefix would.
+fn read_frame_raw_jsononly<R: Read>(r: &mut R, cap: usize) -> Result<Option<Vec<u8>>> {
+    let Some(raw) = read_prefix(r)? else { return Ok(None) };
+    read_body(r, raw as usize, cap).map(Some)
 }
 
 /// Read one length-prefixed JSON frame; `Ok(None)` on clean EOF before a
@@ -80,11 +151,32 @@ pub fn read_frame_bytes<R: Read>(r: &mut R) -> Result<Option<Vec<u8>>> {
 pub fn read_frame<R: Read>(r: &mut R) -> Result<Option<Json>> {
     match read_frame_bytes(r)? {
         None => Ok(None),
-        Some(body) => {
-            let text = std::str::from_utf8(&body).context("frame body is not UTF-8")?;
-            Json::parse(text).map(Some)
+        Some(body) => parse_json_body(&body).map(Some),
+    }
+}
+
+/// Read one frame of either kind under an explicit cap; `Ok(None)` on
+/// clean EOF before a frame starts. The distributed data plane uses this
+/// so a control-plane JSON frame and a binary task/result frame can share
+/// one socket. Returns the frame plus its total wire size (prefix +
+/// body) for traffic accounting.
+pub fn read_frame_any<R: Read>(r: &mut R, cap: usize) -> Result<Option<(Frame, u64)>> {
+    match read_frame_raw(r, cap)? {
+        None => Ok(None),
+        Some((true, body)) => {
+            let wire = 4 + body.len() as u64;
+            Ok(Some((Frame::Binary(body), wire)))
+        }
+        Some((false, body)) => {
+            let wire = 4 + body.len() as u64;
+            Ok(Some((Frame::Json(parse_json_body(&body)?), wire)))
         }
     }
+}
+
+fn parse_json_body(body: &[u8]) -> Result<Json> {
+    let text = std::str::from_utf8(body).context("frame body is not UTF-8")?;
+    Json::parse(text)
 }
 
 #[cfg(test)]
@@ -128,5 +220,66 @@ mod tests {
             read_frame_bytes(&mut r).unwrap_err().downcast_ref::<MpldaError>(),
             Some(&MpldaError::FrameTooLarge { .. })
         ));
+    }
+
+    #[test]
+    fn binary_frames_roundtrip_and_carry_their_kind() {
+        let mut buf = Vec::new();
+        let wrote = write_binary_frame(&mut buf, &[1, 2, 3, 255], MAX_FRAME).unwrap();
+        assert_eq!(wrote, 8);
+        let mut r = &buf[..];
+        let (frame, wire) = read_frame_any(&mut r, MAX_FRAME).unwrap().unwrap();
+        assert_eq!(wire, 8);
+        assert_eq!(frame, Frame::Binary(vec![1, 2, 3, 255]));
+        // Empty binary frame is legal (prefix carries only the kind bit).
+        let mut buf = Vec::new();
+        write_binary_frame(&mut buf, &[], MAX_FRAME).unwrap();
+        let mut r = &buf[..];
+        let (frame, _) = read_frame_any(&mut r, MAX_FRAME).unwrap().unwrap();
+        assert_eq!(frame, Frame::Binary(Vec::new()));
+    }
+
+    #[test]
+    fn json_frames_read_identically_through_both_entry_points() {
+        let j = Json::parse(r#"{"type":"register"}"#).unwrap();
+        let mut buf = Vec::new();
+        let wrote = write_frame_with_cap(&mut buf, &j, MAX_FRAME).unwrap();
+        let mut r = &buf[..];
+        assert_eq!(read_frame(&mut r).unwrap().unwrap(), j);
+        let mut r = &buf[..];
+        let (frame, wire) = read_frame_any(&mut r, MAX_FRAME).unwrap().unwrap();
+        assert_eq!(frame, Frame::Json(j));
+        assert_eq!(wire, wrote);
+    }
+
+    #[test]
+    fn json_only_reader_rejects_binary_frames() {
+        // The serve front end never learned binary: a binary frame's
+        // prefix reads as a > 2 GiB length and dies typed, pre-alloc.
+        let mut buf = Vec::new();
+        write_binary_frame(&mut buf, b"payload", MAX_FRAME).unwrap();
+        let mut r = &buf[..];
+        let err = read_frame(&mut r).unwrap_err();
+        assert!(matches!(
+            err.downcast_ref::<MpldaError>(),
+            Some(&MpldaError::FrameTooLarge { .. })
+        ));
+    }
+
+    #[test]
+    fn caps_are_per_call() {
+        let mut buf = Vec::new();
+        write_binary_frame(&mut buf, &[0u8; 2048], 4096).unwrap();
+        // A reader with a smaller cap rejects it typed.
+        let mut r = &buf[..];
+        let err = read_frame_any(&mut r, 1024).unwrap_err();
+        match err.downcast_ref::<MpldaError>() {
+            Some(&MpldaError::FrameTooLarge { len }) => assert_eq!(len, 2048),
+            other => panic!("expected FrameTooLarge, got {other:?}"),
+        }
+        // A writer over its own cap refuses to send.
+        let mut sink = Vec::new();
+        assert!(write_binary_frame(&mut sink, &[0u8; 2048], 1024).is_err());
+        assert!(sink.is_empty(), "nothing hits the wire on a refused frame");
     }
 }

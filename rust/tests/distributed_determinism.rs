@@ -1,10 +1,15 @@
-//! The ISSUE 7 tentpole acceptance bar: real multi-process training over
-//! loopback TCP is **bitwise equal** to the simulated oracle. One master
-//! (in-process, via the session facade) plus 1, 2 and 4 `mplda worker`
-//! child processes train the same seeded config; every run's
-//! `model_digest` and per-iteration log-likelihood series must match the
-//! simulated backend's bit for bit — the worker-process count (including
-//! more processes than rotation positions) is purely a deployment knob.
+//! The ISSUE 7 tentpole acceptance bar, extended by ISSUE 9: real
+//! multi-process training over loopback TCP is **bitwise equal** to the
+//! simulated oracle. One master (in-process, via the session facade)
+//! plus 1, 2 and 4 `mplda worker` child processes train the same seeded
+//! config; every run's `model_digest` and per-iteration log-likelihood
+//! series must match the simulated backend's bit for bit — the
+//! worker-process count (including more processes than rotation
+//! positions) is purely a deployment knob, and so is the wire encoding:
+//! the delta protocol (`dist.delta = on`, the default) and the
+//! full-state JSON protocol (`dist.delta = off`) must walk the same
+//! trajectory, including across a SIGKILL-induced epoch bump where the
+//! master falls back to full resends.
 //!
 //! Runs under a hard timeout in CI (a hung handshake or socket must fail
 //! the step, not wedge it).
@@ -65,14 +70,20 @@ fn reap(mut children: Vec<Child>) {
 }
 
 /// Run one distributed training session against `nprocs` freshly spawned
-/// worker processes; return its bitwise identity.
-fn run_distributed(seed: u64, nprocs: usize) -> (u64, Vec<(usize, u64)>) {
+/// worker processes; return its bitwise identity and the full summary
+/// (for wire-byte accounting).
+fn run_distributed_with(
+    seed: u64,
+    nprocs: usize,
+    delta: bool,
+) -> ((u64, Vec<(usize, u64)>), TrainSummary) {
     let mut session = builder(seed)
         .execution(Execution::Distributed)
         .iterations(ITERS)
         .configure(move |cfg| {
             cfg.dist.listen = "127.0.0.1:0".to_string();
             cfg.dist.workers = nprocs;
+            cfg.dist.delta = delta;
         })
         .build()
         .unwrap();
@@ -88,7 +99,11 @@ fn run_distributed(seed: u64, nprocs: usize) -> (u64, Vec<(usize, u64)>) {
     let id = identity(&summary, digest);
     drop(session); // sends shutdown frames to the workers
     reap(children);
-    id
+    (id, summary)
+}
+
+fn run_distributed(seed: u64, nprocs: usize) -> (u64, Vec<(usize, u64)>) {
+    run_distributed_with(seed, nprocs, true).0
 }
 
 #[test]
@@ -126,4 +141,133 @@ fn distributed_runs_are_self_consistent_across_seeds() {
     assert_eq!(a, b, "same seed, same process count must reproduce bitwise");
     let c = run_distributed(24, 1);
     assert_ne!(a.0, c.0, "different seeds must produce different models");
+}
+
+/// Sum an [`mplda::engine::IterStats`] wire-byte column over a run.
+fn wire_bytes(summary: &TrainSummary) -> (u64, u64, u64) {
+    summary.iters.iter().fold((0, 0, 0), |(t, r, f), ev| {
+        (
+            t + ev.stats.task_bytes,
+            r + ev.stats.result_bytes,
+            f + ev.stats.full_resend_bytes,
+        )
+    })
+}
+
+#[test]
+fn full_state_protocol_walks_the_same_trajectory_as_deltas() {
+    // `dist.delta` must be a pure encoding knob: on and off produce
+    // bitwise-identical digests and LL series, and both match the
+    // simulated oracle.
+    let seed = 31;
+    let mut oracle_session =
+        builder(seed).execution(Execution::Simulated).iterations(ITERS).build().unwrap();
+    let oracle_summary = oracle_session.train().unwrap();
+    let oracle = identity(&oracle_summary, oracle_session.model_digest().unwrap());
+
+    let (with_delta, delta_summary) = run_distributed_with(seed, 2, true);
+    let (without, full_summary) = run_distributed_with(seed, 2, false);
+    assert_eq!(with_delta, oracle, "delta protocol diverged from the simulated oracle");
+    assert_eq!(without, oracle, "full-state protocol diverged from the simulated oracle");
+
+    // Byte accounting. Delta mode: iteration 1 ships full state (nothing
+    // resident yet), afterwards every frame is a delta — full-resend
+    // bytes must stop after the first iteration of a fault-free run.
+    let (dt, dr, df) = wire_bytes(&delta_summary);
+    let (ft, fr, ff) = wire_bytes(&full_summary);
+    assert!(dt > 0 && dr > 0, "delta run must meter task and result bytes ({dt}/{dr})");
+    assert!(ft > 0 && fr > 0, "full run must meter task and result bytes ({ft}/{fr})");
+    assert_eq!(ft + fr, ff, "with deltas off, every byte is a full-state byte");
+    let first = &delta_summary.iters[0].stats;
+    assert!(first.full_resend_bytes > 0, "iteration 1 must ship full state");
+    assert_eq!(
+        df, first.full_resend_bytes,
+        "a fault-free delta run's only full-state bytes are iteration 1's"
+    );
+    for ev in &delta_summary.iters[1..] {
+        assert_eq!(
+            ev.stats.full_resend_bytes, 0,
+            "fault-free steady state must be delta-only (iter {})",
+            ev.stats.iteration
+        );
+    }
+    assert!(
+        dt + dr < ft + fr,
+        "delta protocol must ship fewer bytes ({} vs {})",
+        dt + dr,
+        ft + fr
+    );
+}
+
+/// A SIGKILLed worker process mid-run: the broken socket bumps the
+/// master's epoch, the next round falls back to full resends, and the
+/// trajectory — reap, reassignment, every sampled token — must stay
+/// bitwise-identical between the delta and full-state protocols.
+mod epoch_bump {
+    use super::*;
+
+    fn run_killed(seed: u64, delta: bool) -> ((u64, Vec<(usize, u64)>), TrainSummary) {
+        let mut session = builder(seed)
+            .lease_timeout_rounds(1)
+            .execution(Execution::Distributed)
+            .iterations(6)
+            .configure(move |cfg| {
+                cfg.dist.listen = "127.0.0.1:0".to_string();
+                cfg.dist.workers = 2;
+                cfg.dist.delta = delta;
+            })
+            .build()
+            .unwrap();
+        let addr = session
+            .driver()
+            .and_then(|d| d.listen_addr())
+            .expect("distributed driver binds at build time")
+            .to_string();
+        // Stagger the spawns so registration order — and therefore which
+        // rotation positions land on the process we kill — is the same
+        // in every run of this test. The master deals positions in
+        // connection-accept order.
+        let mut children = vec![spawn_worker(&addr)];
+        std::thread::sleep(Duration::from_millis(500));
+        children.push(spawn_worker(&addr));
+        let summary = session
+            .train_observed(|ev| {
+                if ev.stats.iteration == 1 {
+                    // SIGKILL the second process: the master must find
+                    // out from the broken socket alone.
+                    if let Some(mut c) = children.pop() {
+                        let _ = c.kill();
+                        let _ = c.wait();
+                    }
+                }
+            })
+            .unwrap();
+        session.check_consistency().unwrap();
+        let digest = session.model_digest().unwrap();
+        let id = identity(&summary, digest);
+        drop(session);
+        reap(children);
+        (id, summary)
+    }
+
+    #[test]
+    fn sigkill_epoch_bump_keeps_both_protocols_bitwise_equal() {
+        let (with_delta, delta_summary) = run_killed(41, true);
+        let (without, _) = run_killed(41, false);
+        assert_eq!(
+            with_delta, without,
+            "post-kill trajectories diverged between delta and full-state protocols"
+        );
+
+        // The epoch bump must be visible in the byte accounting: some
+        // post-kill iteration ships full state again before the run
+        // settles back into deltas.
+        let resent: u64 = delta_summary
+            .iters
+            .iter()
+            .filter(|ev| ev.stats.iteration > 1)
+            .map(|ev| ev.stats.full_resend_bytes)
+            .sum();
+        assert!(resent > 0, "a SIGKILL must force at least one full resend");
+    }
 }

@@ -1,16 +1,28 @@
 //! Property tests for the distributed-trainer wire protocol (ISSUE 7
-//! satellite): every protocol message must round-trip **losslessly**
-//! through `write_frame`/`read_frame` — including the 128-bit RNG states
-//! and 64-bit fingerprints that ride as decimal strings because JSON
-//! numbers stop being exact at 2^53 — and malformed wire input
-//! (truncations, garbage, hostile length prefixes) must surface as typed
-//! errors, never as a panic or a multi-GiB allocation. Extends the unit
-//! tests in `serve::server`/`serve::wire` with generated coverage.
+//! satellite, extended for the ISSUE 9 delta protocol): every protocol
+//! message must round-trip **losslessly** through its wire encoding —
+//! JSON frames for the control plane and full-state fallback (including
+//! the 128-bit RNG states and 64-bit fingerprints/epochs that ride as
+//! decimal strings because JSON numbers stop being exact at 2^53),
+//! binary frames for the delta data plane — and malformed wire input
+//! (truncations, garbage, hostile length prefixes and entry counts)
+//! must surface as typed errors, never as a panic or a multi-GiB
+//! allocation. The delta codecs carry the stronger property the epoch
+//! machinery leans on: `apply(base, encode_delta(base, new)) == new`
+//! for arbitrary mutations.
 
 use mplda::config::{CorpusConfig, SamplerKind};
-use mplda::distributed::{InitMsg, Message, ResultMsg, TaskMsg};
+use mplda::distributed::{
+    require_epoch, BinMsg, InitMsg, Message, ResultDeltaMsg, ResultMsg, TaskDeltaMsg, TaskMsg,
+    ZRowDiff,
+};
 use mplda::error::MpldaError;
-use mplda::serve::wire::{read_frame, write_frame, MAX_FRAME};
+use mplda::model::wire::{
+    apply_block_delta, apply_totals_delta, encode_block_delta, encode_totals_delta,
+};
+use mplda::model::{ModelBlock, SparseRow, TopicCounts};
+use mplda::serve::wire::{read_frame, read_frame_any, write_binary_frame, write_frame, Frame,
+    MAX_FRAME};
 use mplda::util::prop::{check_result, Arbitrary, Config as PropConfig};
 use mplda::util::rng::Pcg64;
 
@@ -42,6 +54,20 @@ fn arb_dt(rng: &mut Pcg64, rows: usize, size: usize) -> Vec<Vec<(u32, u32)>> {
         .collect()
 }
 
+fn arb_task(rng: &mut Pcg64, rows: usize, size: usize) -> TaskMsg {
+    TaskMsg {
+        position: rng.index(64),
+        round: rng.index(64),
+        epoch: rng.next_u64(),
+        block: arb_bytes(rng, size),
+        ck: arb_bytes(rng, size),
+        rng: (arb_u128(rng), arb_u128(rng)),
+        docs: (0..rows).map(|_| rng.next_u64() as u32).collect(),
+        z: arb_z(rng, rows, size),
+        dt: arb_dt(rng, rows, size),
+    }
+}
+
 impl Arbitrary for AnyMessage {
     fn arbitrary(rng: &mut Pcg64, size: usize) -> Self {
         let rows = rng.index(4);
@@ -71,25 +97,66 @@ impl Arbitrary for AnyMessage {
                     [rng.index(3)],
                 alias_budget_bytes: rng.next_u64(),
                 corpus_fp: rng.next_u64(),
+                max_frame_bytes: rng.next_u64(),
             }),
-            5 => Message::Task(TaskMsg {
-                position: rng.index(64),
-                round: rng.index(64),
-                block: arb_bytes(rng, size),
-                ck: arb_bytes(rng, size),
-                rng: (arb_u128(rng), arb_u128(rng)),
-                docs: (0..rows).map(|_| rng.next_u64() as u32).collect(),
-                z: arb_z(rng, rows, size),
-                dt: arb_dt(rng, rows, size),
-            }),
+            5 => Message::Task(arb_task(rng, rows, size)),
             _ => Message::Result(ResultMsg {
                 position: rng.index(64),
+                epoch: rng.next_u64(),
                 tokens: rng.next_u64(),
                 host_secs: rng.next_f64(),
                 block: arb_bytes(rng, size),
                 ck: arb_bytes(rng, size),
                 rng: (arb_u128(rng), arb_u128(rng)),
                 z: arb_z(rng, rows, size),
+                dt: arb_dt(rng, rows, size),
+            }),
+        })
+    }
+}
+
+/// One binary data-plane message.
+#[derive(Debug, Clone)]
+struct AnyBinMessage(BinMsg);
+
+impl Arbitrary for AnyBinMessage {
+    fn arbitrary(rng: &mut Pcg64, size: usize) -> Self {
+        let rows = rng.index(4);
+        AnyBinMessage(match rng.index(3) {
+            0 => BinMsg::TaskFull(arb_task(rng, rows, size)),
+            1 => BinMsg::TaskDelta(TaskDeltaMsg {
+                position: rng.index(64),
+                round: rng.index(64),
+                epoch: rng.next_u64(),
+                rng: (arb_u128(rng), arb_u128(rng)),
+                block: arb_bytes(rng, size),
+                ck_delta: arb_bytes(rng, size),
+            }),
+            _ => BinMsg::ResultDelta(ResultDeltaMsg {
+                position: rng.index(64),
+                epoch: rng.next_u64(),
+                tokens: rng.next_u64(),
+                host_secs: rng.next_f64(),
+                rng: (arb_u128(rng), arb_u128(rng)),
+                block_delta: arb_bytes(rng, size),
+                ck_delta: arb_bytes(rng, size),
+                z: (0..rows)
+                    .map(|_| match rng.index(3) {
+                        0 => ZRowDiff::Unchanged,
+                        1 => ZRowDiff::Full(
+                            (0..rng.index(size + 1)).map(|_| rng.next_u64() as u32).collect(),
+                        ),
+                        _ => ZRowDiff::Sparse(
+                            // Slots must be strictly increasing.
+                            (0..rng.index(8))
+                                .scan(0u32, |slot, _| {
+                                    *slot += rng.index(9) as u32 + 1;
+                                    Some((*slot, rng.next_u64() as u32))
+                                })
+                                .collect(),
+                        ),
+                    })
+                    .collect(),
                 dt: arb_dt(rng, rows, size),
             }),
         })
@@ -116,6 +183,49 @@ fn every_message_round_trips_through_the_wire() {
         // And the stream is exactly one frame long.
         if read_frame(&mut r).map_err(|e| format!("tail: {e:#}"))?.is_some() {
             return Err("trailing bytes after the frame".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn every_binary_message_round_trips_through_binary_frames() {
+    check_result(&prop_cfg(), "binary wire round-trip", |m: &AnyBinMessage| {
+        let mut buf: Vec<u8> = Vec::new();
+        write_binary_frame(&mut buf, &m.0.encode(), MAX_FRAME)
+            .map_err(|e| format!("write: {e:#}"))?;
+        let mut r = &buf[..];
+        let (frame, bytes) = read_frame_any(&mut r, MAX_FRAME)
+            .map_err(|e| format!("read: {e:#}"))?
+            .ok_or("frame vanished")?;
+        if bytes != buf.len() as u64 {
+            return Err(format!("reader counted {bytes} wire bytes of {}", buf.len()));
+        }
+        let body = match frame {
+            Frame::Binary(body) => body,
+            Frame::Json(j) => return Err(format!("binary frame read back as JSON {j:?}")),
+        };
+        let back = BinMsg::decode(&body).map_err(|e| format!("decode: {e:#}"))?;
+        if back != m.0 {
+            return Err(format!("lossy trip:\n sent {:?}\n got  {back:?}", m.0));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn binary_message_truncations_error_and_never_panic() {
+    check_result(&prop_cfg(), "binary truncation handling", |m: &AnyBinMessage| {
+        let enc = m.0.encode();
+        for cut in 0..enc.len() {
+            if BinMsg::decode(&enc[..cut]).is_ok() {
+                return Err(format!("cut at {cut} of {} still decoded", enc.len()));
+            }
+        }
+        let mut trailing = enc;
+        trailing.push(0);
+        if BinMsg::decode(&trailing).is_ok() {
+            return Err("trailing byte accepted".into());
         }
         Ok(())
     });
@@ -191,6 +301,16 @@ fn garbage_input_never_panics() {
 }
 
 #[test]
+fn garbage_binary_bodies_never_panic() {
+    check_result(&prop_cfg(), "binary garbage in, error out", |g: &Garbage| {
+        // Whatever it returns, it must return: typed error or a decoded
+        // message, never a panic or a giant allocation.
+        let _ = BinMsg::decode(&g.0);
+        Ok(())
+    });
+}
+
+#[test]
 fn multi_gib_length_prefix_is_rejected_before_allocation() {
     // A hostile 6-byte input claiming a 3 GiB body: the typed rejection
     // must arrive without the body buffer ever being allocated (if it
@@ -230,4 +350,154 @@ fn cap_boundary_is_exact() {
         read_frame(&mut r).unwrap_err().downcast_ref::<MpldaError>(),
         Some(&MpldaError::FrameTooLarge { .. })
     ));
+}
+
+// ---------------------------------------------------------------------
+// Delta codecs: apply(base, delta(base, new)) == new
+// ---------------------------------------------------------------------
+
+/// A `(base, new)` pair of topic-totals vectors differing in a random
+/// subset of buckets.
+#[derive(Debug, Clone)]
+struct TotalsPair {
+    base: TopicCounts,
+    new: TopicCounts,
+}
+
+impl Arbitrary for TotalsPair {
+    fn arbitrary(rng: &mut Pcg64, size: usize) -> Self {
+        let k = rng.index(size * 4) + 1;
+        let base: Vec<i64> = (0..k).map(|_| rng.index(1_000_000) as i64).collect();
+        let mut new = base.clone();
+        for _ in 0..rng.index(k + 1) {
+            let i = rng.index(k);
+            new[i] = (new[i] + rng.index(2001) as i64 - 1000).max(0);
+        }
+        TotalsPair { base: TopicCounts::from_vec(base), new: TopicCounts::from_vec(new) }
+    }
+}
+
+#[test]
+fn totals_delta_reconstructs_exactly() {
+    check_result(&prop_cfg(), "totals delta apply==new", |p: &TotalsPair| {
+        let delta = encode_totals_delta(&p.base, &p.new);
+        let mut t = p.base.clone();
+        apply_totals_delta(&mut t, &delta).map_err(|e| format!("apply: {e:#}"))?;
+        if t != p.new {
+            return Err(format!("lossy delta:\n base {:?}\n new  {:?}\n got  {t:?}", p.base, p.new));
+        }
+        // Hostile-input floor: every truncation errors, never panics.
+        for cut in 0..delta.len() {
+            let mut t = p.base.clone();
+            if apply_totals_delta(&mut t, &delta[..cut]).is_ok() && cut != delta.len() {
+                return Err(format!("truncation at {cut} of {} accepted", delta.len()));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// A `(base, new)` pair of model blocks where `new` differs by random
+/// count bumps, entry insertions and removals.
+#[derive(Debug, Clone)]
+struct BlockPair {
+    base: ModelBlock,
+    new: ModelBlock,
+}
+
+impl Arbitrary for BlockPair {
+    fn arbitrary(rng: &mut Pcg64, size: usize) -> Self {
+        let words = rng.index(size) + 1;
+        let k = rng.index(64) + 2;
+        let mut base = ModelBlock::empty(3, 100, 100 + words as u32);
+        for row in base.rows.iter_mut() {
+            let entries: Vec<(u32, u32)> = (0..rng.index(6))
+                .map(|_| (rng.index(k) as u32, rng.index(50) as u32 + 1))
+                .collect();
+            *row = SparseRow::from_entries(entries);
+        }
+        let mut new = base.clone();
+        for row in new.rows.iter_mut() {
+            match rng.index(4) {
+                0 => {} // untouched row
+                1 => {
+                    // Insert (or bump) a topic.
+                    row.inc(rng.index(k) as u32);
+                }
+                2 => {
+                    // Remove one entry, if any.
+                    let entries: Vec<(u32, u32)> = row.iter().collect();
+                    if let Some(&(t, c)) = entries.get(rng.index(entries.len().max(1))) {
+                        for _ in 0..c {
+                            row.dec(t);
+                        }
+                    }
+                }
+                _ => {
+                    // Rewrite wholesale.
+                    let entries: Vec<(u32, u32)> = (0..rng.index(6))
+                        .map(|_| (rng.index(k) as u32, rng.index(50) as u32 + 1))
+                        .collect();
+                    *row = SparseRow::from_entries(entries);
+                }
+            }
+        }
+        BlockPair { base, new }
+    }
+}
+
+#[test]
+fn block_delta_reconstructs_exactly() {
+    check_result(&prop_cfg(), "block delta apply==new", |p: &BlockPair| {
+        let delta = encode_block_delta(&p.base, &p.new);
+        let mut b = p.base.clone();
+        apply_block_delta(&mut b, &delta).map_err(|e| format!("apply: {e:#}"))?;
+        if b != p.new {
+            return Err("lossy block delta".into());
+        }
+        // A delta must refuse any other target block — the header check
+        // fires even for an empty diff.
+        let mut other = p.base.clone();
+        other.id += 1;
+        if apply_block_delta(&mut other, &delta).is_ok() {
+            return Err("delta applied to a retargeted block".into());
+        }
+        // Truncations error, never panic.
+        for cut in 0..delta.len() {
+            let mut b = p.base.clone();
+            if apply_block_delta(&mut b, &delta[..cut]).is_ok() {
+                return Err(format!("truncation at {cut} of {} accepted", delta.len()));
+            }
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------
+// Epoch gate
+// ---------------------------------------------------------------------
+
+#[test]
+fn stale_epochs_are_rejected_with_the_typed_error() {
+    check_result(&prop_cfg(), "epoch gate", |m: &AnyMessage| {
+        // Reuse the message generator as a source of (position, epoch)
+        // randomness; only task/result messages carry epochs.
+        let (position, got) = match &m.0 {
+            Message::Task(t) => (t.position, t.epoch),
+            Message::Result(r) => (r.position, r.epoch),
+            _ => return Ok(()),
+        };
+        require_epoch(position, got, Some(got)).map_err(|e| format!("exact match: {e:#}"))?;
+        for have in [None, Some(got.wrapping_add(1)), Some(got.wrapping_sub(1))] {
+            let err = require_epoch(position, got, have)
+                .err()
+                .ok_or_else(|| format!("epoch {got} vs {have:?} accepted"))?;
+            match err.downcast_ref::<MpldaError>() {
+                Some(&MpldaError::StaleEpoch { position: p, got: g, have: h })
+                    if p == position && g == got && h == have => {}
+                other => return Err(format!("expected StaleEpoch, got {other:?}")),
+            }
+        }
+        Ok(())
+    });
 }
