@@ -47,6 +47,40 @@ pub enum MemCategory {
 
 const NUM_CATEGORIES: usize = 10;
 
+impl MemCategory {
+    /// Every variant, in tally order — metric exporters iterate this so
+    /// a new category shows up in the `category` label automatically.
+    pub const ALL: [MemCategory; NUM_CATEGORIES] = [
+        MemCategory::Data,
+        MemCategory::Index,
+        MemCategory::DocTopic,
+        MemCategory::Model,
+        MemCategory::Staging,
+        MemCategory::AliasCache,
+        MemCategory::KvShard,
+        MemCategory::ServeCache,
+        MemCategory::Resident,
+        MemCategory::Other,
+    ];
+
+    /// Stable snake_case label value (the `category` label of
+    /// `mplda_mem_peak_bytes`).
+    pub fn name(&self) -> &'static str {
+        match self {
+            MemCategory::Data => "data",
+            MemCategory::Index => "index",
+            MemCategory::DocTopic => "doc_topic",
+            MemCategory::Model => "model",
+            MemCategory::Staging => "staging",
+            MemCategory::AliasCache => "alias_cache",
+            MemCategory::KvShard => "kv_shard",
+            MemCategory::ServeCache => "serve_cache",
+            MemCategory::Resident => "resident",
+            MemCategory::Other => "other",
+        }
+    }
+}
+
 fn cat_idx(c: MemCategory) -> usize {
     match c {
         MemCategory::Data => 0,

@@ -7,6 +7,6 @@ pub mod schema;
 
 pub use schema::{
     BaselineConfig, BlockLayout, CkSyncPolicy, ClusterConfig, CompressionKind, Config,
-    CoordConfig, CorpusConfig, DistConfig, ExecutionMode, OutputConfig, PipelineMode,
+    CoordConfig, CorpusConfig, DistConfig, ExecutionMode, ObsConfig, OutputConfig, PipelineMode,
     RuntimeConfig, SamplerKind, ServeConfig, StorageConfig, TrainConfig,
 };

@@ -577,6 +577,26 @@ impl Default for StorageConfig {
     }
 }
 
+/// Observability knobs (`obs::` — registry export is always on; span
+/// tracing is opt-in because it writes files).
+#[derive(Debug, Clone)]
+pub struct ObsConfig {
+    /// Directory for Chrome trace-event JSON output (`trace.json`, plus
+    /// per-process worker files in distributed runs). Empty (default) =
+    /// tracing off; every span call is then a single atomic load.
+    pub trace_dir: String,
+    /// Record spans every N-th iteration (1 = every iteration). Sampled
+    /// tracing bounds the event buffer on long runs while still showing
+    /// the steady-state round shape.
+    pub trace_sample_every: usize,
+}
+
+impl Default for ObsConfig {
+    fn default() -> Self {
+        ObsConfig { trace_dir: String::new(), trace_sample_every: 1 }
+    }
+}
+
 /// PJRT/XLA runtime settings.
 #[derive(Debug, Clone)]
 pub struct RuntimeConfig {
@@ -616,6 +636,7 @@ pub struct Config {
     pub serve: ServeConfig,
     pub dist: DistConfig,
     pub storage: StorageConfig,
+    pub obs: ObsConfig,
     pub runtime: RuntimeConfig,
     pub output: OutputConfig,
 }
@@ -743,6 +764,8 @@ impl Config {
             "storage.compression" => {
                 self.storage.compression = CompressionKind::parse(&s(value)?)?
             }
+            "obs.trace_dir" => self.obs.trace_dir = s(value)?,
+            "obs.trace_sample_every" => self.obs.trace_sample_every = u(value)?,
             "runtime.artifacts_dir" => self.runtime.artifacts_dir = s(value)?,
             "output.dir" => self.output.dir = s(value)?,
             "output.write_csv" => self.output.write_csv = b(value)?,
@@ -836,6 +859,9 @@ impl Config {
         }
         if self.storage.resident_budget_mib > 0.0 && self.storage.dir.is_empty() {
             bail!("storage.resident_budget_mib > 0 requires storage.dir");
+        }
+        if self.obs.trace_sample_every == 0 {
+            bail!("obs.trace_sample_every must be >= 1 (1 = trace every iteration)");
         }
         if self.coord.execution == ExecutionMode::Distributed {
             if self.coord.pipeline == PipelineMode::DoubleBuffer {
@@ -1045,6 +1071,19 @@ machines = 10
         assert_eq!(d.resident_budget_mib, 0.0);
         assert!(d.dir.is_empty());
         assert_eq!(d.compression, CompressionKind::None);
+    }
+
+    #[test]
+    fn obs_section_parses_and_validates() {
+        let cfg = Config::from_str("[obs]\ntrace_dir = \"/tmp/trace\"\ntrace_sample_every = 4")
+            .unwrap();
+        assert_eq!(cfg.obs.trace_dir, "/tmp/trace");
+        assert_eq!(cfg.obs.trace_sample_every, 4);
+        assert!(Config::from_str("[obs]\ntrace_sample_every = 0").is_err());
+        // Defaults: tracing off, every iteration when on.
+        let d = ObsConfig::default();
+        assert!(d.trace_dir.is_empty());
+        assert_eq!(d.trace_sample_every, 1);
     }
 
     #[test]

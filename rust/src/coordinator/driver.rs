@@ -29,6 +29,7 @@
 //! bit-identical whichever backend executes.
 
 use std::path::Path;
+use std::sync::Arc;
 
 use anyhow::{bail, Context, Result};
 
@@ -47,6 +48,8 @@ use crate::model::checkpoint::{self, ResumeState};
 use crate::model::{
     Assignments, BlockMap, DocTopic, ShardOwnership, TopicCounts, WordTopicTable,
 };
+use crate::obs::trace::TID_DRIVER;
+use crate::obs::{self, names, Tracer};
 use crate::sampler::xla_dense::MicrobatchExecutor;
 use crate::sampler::{KernelOpts, Params};
 use crate::util::rng::Pcg64;
@@ -142,6 +145,13 @@ pub struct Driver {
     pub deltas: DeltaTracker,
     /// Per-round phase trace (enabled by `output.trace`).
     pub timeline: Timeline,
+    /// Host wall-clock span tracer (`[obs] trace_dir`); inert when off.
+    /// Where [`Timeline`] records *simulated* time for paper figures,
+    /// this records what the host actually did, as Chrome trace JSON.
+    tracer: Tracer,
+    /// The shared metrics registry; every iteration mirrors its
+    /// statistics here under the stable [`names`] vocabulary.
+    registry: Arc<obs::Registry>,
     /// The execution backend (simulated / threaded / pipelined), selected
     /// once at construction from the config.
     backend: Box<dyn Backend>,
@@ -222,7 +232,15 @@ impl Driver {
         let params = Params::new(k, corpus.num_words(), cfg.train.alpha, cfg.train.beta);
         // Execution backend chosen once, validating sampler × execution up
         // front — an invalid combination never reaches run_iteration.
-        let backend = backend_for(&cfg)?;
+        let mut backend = backend_for(&cfg)?;
+        // Observability: the registry always exists (per-iteration exports
+        // are cheap); the wall-clock span tracer arms only when
+        // `[obs] trace_dir` asks for output. The distributed backend keeps
+        // clones to merge worker phase timings and answer `metrics`.
+        let tracer =
+            if cfg.obs.trace_dir.is_empty() { Tracer::off() } else { Tracer::new() };
+        let registry = Arc::new(obs::Registry::new());
+        backend.attach_obs(tracer.clone(), Arc::clone(&registry));
 
         // Initial assignments: fresh random draw, or checkpointed `Z`.
         let (assign, iteration, worker_rng, dt_live) = match restored {
@@ -390,6 +408,8 @@ impl Driver {
             mem,
             deltas: DeltaTracker::new(),
             timeline: Timeline::new(trace_enabled),
+            tracer,
+            registry,
             backend,
             pstats: PipelineStats::default(),
             iteration,
@@ -513,6 +533,13 @@ impl Driver {
     /// backends produce the same model state bit for bit from the same
     /// seed.
     pub fn run_iteration(&mut self) -> Result<IterStats> {
+        // Span tracing: one gate decision per iteration
+        // (`obs.trace_sample_every`), then an `iteration` span over the
+        // whole sweep. The local clone keeps span guards clear of the
+        // `&mut self` borrows below; recording never touches model state.
+        let tracer = self.tracer.clone();
+        tracer.set_active(self.iteration % self.cfg.obs.trace_sample_every.max(1) == 0);
+        let _iter_span = tracer.span(0, TID_DRIVER, "iteration", "driver");
         let rounds = self.schedule.rounds_per_iteration();
         let net_bytes_before = self.kv.network_bytes();
         let spill_before = self.kv.bytes_of(TransferKind::BlockSpill);
@@ -527,6 +554,7 @@ impl Driver {
         let mut delta_sum = 0.0;
 
         for round in 0..rounds {
+            let _round_span = tracer.span(0, TID_DRIVER, "round", "driver");
             // ---- Phase 0: fault plane ------------------------------------
             // Reap leases that outlived their grace rounds (revoke + block
             // reassignment), then apply any scripted faults at this
@@ -560,6 +588,7 @@ impl Driver {
             // topology the per-flow records would imply. Dead workers do
             // not read (they are dead); the flow drain below also discards
             // any fault-plane traffic so round timing stays clean.
+            let totals_span = tracer.span(0, TID_DRIVER, "totals_sync", "coord");
             let mut totals_bytes_per_worker = 0u64;
             if sync_totals {
                 let dead: Vec<usize> = self.dead.iter().map(|d| d.position).collect();
@@ -575,6 +604,7 @@ impl Driver {
             }
             let _ = self.kv.drain_flows();
             let t_totals = self.net.reduce_time(totals_bytes_per_worker, self.workers.len());
+            drop(totals_span);
 
             // ---- Phases 2–4: leases, compute, commits --------------------
             // Executed by the backend selected at build time; the driver
@@ -627,6 +657,7 @@ impl Driver {
                     },
                     parallelism: cfg.coord.parallelism,
                     exec: exec.as_deref_mut(),
+                    tracer: tracer.clone(),
                 };
                 if degraded {
                     run_round_degraded(&mut ctx, &skip)?
@@ -827,7 +858,7 @@ impl Driver {
                 task_full + result_full
             );
         }
-        Ok(IterStats {
+        let stats = IterStats {
             iteration: self.iteration,
             sim_time: self.sim_time(),
             tokens,
@@ -840,7 +871,89 @@ impl Driver {
             task_bytes,
             result_bytes,
             full_resend_bytes: task_full + result_full,
-        })
+        };
+        self.export_metrics(&stats);
+        Ok(stats)
+    }
+
+    /// Mirror the run's accumulated statistics into the shared metrics
+    /// registry under the stable [`names`] vocabulary. Called after every
+    /// iteration; counters carry absolute lifetime values (the sources —
+    /// the traffic meter, the memory accountant, the pipeline stats — own
+    /// accumulation), so a re-export is idempotent.
+    fn export_metrics(&self, stats: &IterStats) {
+        let r = &*self.registry;
+        r.set_counter(names::ITERATIONS, "Iterations completed.", &[], self.iteration as u64);
+        r.inc_counter(names::TOKENS, "Tokens sampled across all iterations.", &[], stats.tokens);
+        r.set_gauge(names::SIM_TIME, "Simulated cluster seconds elapsed.", &[], self.sim_time());
+        r.set_counter(
+            names::COMM_BYTES,
+            "Simulated network communication bytes (out-of-band kinds excluded).",
+            &[],
+            self.kv.network_bytes(),
+        );
+        r.set_gauge(
+            names::MEAN_DELTA,
+            "Mean per-round staleness (delta_ri) of the last iteration.",
+            &[],
+            stats.mean_delta,
+        );
+        for kind in TransferKind::ALL {
+            let labels = [("kind", kind.name())];
+            r.set_counter(
+                names::TRANSFER_BYTES,
+                "KV-store transfer bytes by kind.",
+                &labels,
+                self.kv.bytes_of(kind),
+            );
+            r.set_counter(
+                names::TRANSFER_OPS,
+                "KV-store transfer operations by kind.",
+                &labels,
+                self.kv.count_of(kind),
+            );
+        }
+        for cat in MemCategory::ALL {
+            r.set_gauge(
+                names::MEM_PEAK_BYTES,
+                "Peak bytes per memory category, max across nodes.",
+                &[("category", cat.name())],
+                self.mem.max_peak_category(cat) as f64,
+            );
+        }
+        let p = &self.pstats;
+        r.set_counter_f64(
+            names::PIPE_FETCH_STALL,
+            "Round-critical-path seconds stalled acquiring blocks.",
+            &[],
+            p.fetch_stall_secs,
+        );
+        r.set_counter_f64(
+            names::PIPE_FLUSH_STALL,
+            "Round-critical-path seconds stalled finishing commits.",
+            &[],
+            p.flush_stall_secs,
+        );
+        r.set_counter_f64(names::PIPE_SAMPLE, "Sampling-phase wall seconds.", &[], p.sample_secs);
+        r.set_counter(names::PIPE_ROUNDS, "Rounds accounted by the pipeline stats.", &[], p.rounds);
+        r.set_counter(
+            names::PIPE_STAGED_HITS,
+            "Blocks served from the prefetch staging buffer.",
+            &[],
+            p.staged_hits,
+        );
+        r.set_counter(
+            names::PIPE_FALLBACK_FETCHES,
+            "Blocks fetched synchronously at round start.",
+            &[],
+            p.fallback_fetches,
+        );
+        r.set_counter(
+            names::PIPE_BUDGET_SKIPS,
+            "Prefetches skipped for the staging budget.",
+            &[],
+            p.budget_skips,
+        );
     }
 
     /// Install a fault script programmatically (tests; the config key
@@ -1064,7 +1177,32 @@ impl Driver {
         report.peak_mem_bytes = self.mem.max_peak();
         report.total_comm_bytes = self.kv.network_bytes();
         report.sim_time = self.sim_time();
+        self.write_trace()?;
         Ok(report)
+    }
+
+    /// The run's span tracer (inert unless `[obs] trace_dir` is set).
+    pub fn tracer(&self) -> &Tracer {
+        &self.tracer
+    }
+
+    /// The run's shared metrics registry, refreshed after every iteration.
+    pub fn registry(&self) -> &Arc<obs::Registry> {
+        &self.registry
+    }
+
+    /// Write the collected spans as a Chrome trace-event JSON file under
+    /// `[obs] trace_dir` (`trace.json`, overwritten). A no-op when tracing
+    /// is off; safe to call more than once — the file reflects everything
+    /// recorded so far.
+    pub fn write_trace(&self) -> Result<()> {
+        if !self.tracer.enabled() {
+            return Ok(());
+        }
+        let dir = Path::new(&self.cfg.obs.trace_dir);
+        std::fs::create_dir_all(dir)
+            .with_context(|| format!("creating obs.trace_dir {}", dir.display()))?;
+        self.tracer.write(&dir.join("trace.json"))
     }
 
     /// Everything beyond `Z` a bitwise resume needs, captured at the

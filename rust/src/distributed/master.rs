@@ -62,6 +62,7 @@
 //! [`SimulatedBackend`]: crate::engine::backend::SimulatedBackend
 
 use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use anyhow::{bail, Context, Result};
@@ -72,14 +73,17 @@ use crate::engine::backend::{lease_blocks_sync, Backend, RoundCtx, RoundOutcome}
 use crate::kvstore::traffic::TransferKind;
 use crate::model::checkpoint::corpus_fingerprint;
 use crate::model::{wire as codec, SparseCounts, TopicCounts};
+use crate::obs::trace::{tid_worker, TID_DRIVER};
+use crate::obs::{self, names, Log2Histogram, TraceEvent, Tracer};
+use crate::serve::json::Json;
 use crate::serve::wire::{
     read_frame, read_frame_any, write_binary_frame, write_frame, write_frame_with_cap, Frame,
 };
 use crate::util::rng::Pcg64;
 
 use super::protocol::{
-    apply_z_row_diff, require_epoch, BinMsg, InitMsg, Message, ResultDeltaMsg, ResultMsg,
-    TaskDeltaMsg, TaskMsg,
+    apply_z_row_diff, require_epoch, BinMsg, InitMsg, Message, PhaseSample, ResultDeltaMsg,
+    ResultMsg, TaskDeltaMsg, TaskMsg,
 };
 
 /// How long the first round waits for the full worker roster to connect
@@ -172,6 +176,13 @@ pub struct DistributedBackend {
     resident_ck: Vec<Option<TopicCounts>>,
     /// Per position: the doc list last seen, to detect reassignments.
     resident_docs: Vec<Vec<u32>>,
+    /// The shared metrics registry, when the driver attached one
+    /// ([`Backend::attach_obs`]); also serves the listener's `metrics`
+    /// scrape verb.
+    registry: Option<Arc<obs::Registry>>,
+    /// Master wait from the start of each result-collection wave to
+    /// each result's arrival (µs) — the straggler picture.
+    round_wait: Log2Histogram,
 }
 
 impl DistributedBackend {
@@ -215,7 +226,60 @@ impl DistributedBackend {
             resident: Vec::new(),
             resident_ck: Vec::new(),
             resident_docs: Vec::new(),
+            registry: None,
+            round_wait: Log2Histogram::new(),
         })
+    }
+
+    /// Answer any pending connections on the listen socket with the
+    /// serve-tier `metrics` verb (one request/reply per connection).
+    /// After the worker handshake completes the listener has no other
+    /// callers, so everything that connects now is a scrape; the poll is
+    /// non-blocking and costs one `accept` syscall per round when nobody
+    /// is scraping. Scrape failures are logged, never fatal — a broken
+    /// monitoring client must not kill training.
+    fn poll_scrapes(&mut self) {
+        loop {
+            match self.listener.accept() {
+                Ok((mut stream, _peer)) => {
+                    let body = match self.registry.as_ref() {
+                        Some(reg) => reg.render_prometheus(),
+                        None => String::new(),
+                    };
+                    if let Err(e) = serve_scrape(&mut stream, &body) {
+                        log::warn!("distributed: metrics scrape failed: {e:#}");
+                    }
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => return,
+                Err(e) => {
+                    log::warn!("distributed: metrics listener error: {e:#}");
+                    return;
+                }
+            }
+        }
+    }
+
+    /// Mirror the transport's own statistics into the registry.
+    fn export_metrics(&self) {
+        let Some(reg) = self.registry.as_ref() else { return };
+        reg.set_histogram(
+            names::DIST_ROUND_WAIT,
+            "Master wait from wave start to each result's arrival.",
+            &[],
+            &self.round_wait,
+        );
+        reg.set_gauge(
+            names::DIST_WORKERS,
+            "Worker processes currently connected.",
+            &[],
+            self.conns.len() as f64,
+        );
+        reg.set_gauge(
+            names::DIST_EPOCH,
+            "Delta-protocol epoch (counts full-resend generations).",
+            &[],
+            self.epoch as f64,
+        );
     }
 
     /// Accept `expected` connections and run the register→init→ready
@@ -300,6 +364,57 @@ impl DistributedBackend {
     }
 }
 
+/// One scrape conversation: read one JSON frame, answer the `metrics`
+/// verb with the Prometheus text rendering, anything else with a typed
+/// error frame. Same `serve::wire` framing the serve tier speaks, so
+/// [`crate::serve::Client`]-style callers work against the master too.
+fn serve_scrape(stream: &mut TcpStream, body: &str) -> Result<()> {
+    // The accepted socket may inherit the listener's polling mode.
+    stream.set_nonblocking(false).context("configuring scrape socket")?;
+    stream
+        .set_read_timeout(Some(Duration::from_secs(2)))
+        .context("configuring scrape socket")?;
+    let Some(req) = read_frame(stream)? else { return Ok(()) };
+    let reply = match req.get("type").and_then(Json::as_str) {
+        Some("metrics") => Json::Obj(vec![
+            ("type".into(), Json::str("metrics")),
+            ("body".into(), Json::str(body)),
+        ]),
+        other => Json::Obj(vec![
+            ("type".into(), Json::str("error")),
+            (
+                "error".into(),
+                Json::str(format!("unknown master verb {other:?}; supported: metrics")),
+            ),
+        ]),
+    };
+    write_frame(stream, &reply)
+}
+
+/// Re-base one worker's piggybacked phase offsets onto the master clock
+/// at task-send time and merge them into the cluster trace, with the
+/// worker process as pid `1 + connection index`. Offsets ignore the
+/// network flight time — good enough for a phase breakdown, and the
+/// alternative (clock sync) buys nothing a simulator needs.
+fn merge_phases(
+    tracer: &Tracer,
+    pid: u32,
+    position: usize,
+    sent_us: u64,
+    phases: &[PhaseSample],
+) {
+    for p in phases {
+        tracer.record_unsampled(TraceEvent {
+            pid,
+            tid: tid_worker(position),
+            name: p.phase.name().into(),
+            cat: "worker",
+            ts_us: sent_us + p.start_us,
+            dur_us: p.dur_us,
+        });
+    }
+}
+
 /// Build one position's full-state task from the master's authoritative
 /// state.
 fn build_task(
@@ -307,6 +422,7 @@ fn build_task(
     position: usize,
     epoch: u64,
     block: &crate::model::ModelBlock,
+    trace: bool,
 ) -> TaskMsg {
     let w = &ctx.workers[position];
     let z = w.docs.iter().map(|&d| ctx.z[d as usize].clone()).collect();
@@ -321,6 +437,7 @@ fn build_task(
         docs: w.docs.clone(),
         z,
         dt,
+        trace,
     }
 }
 
@@ -399,6 +516,10 @@ impl Backend for DistributedBackend {
         Some(self.addr)
     }
 
+    fn attach_obs(&mut self, _tracer: Tracer, registry: Arc<obs::Registry>) {
+        self.registry = Some(registry);
+    }
+
     fn reset_workers(&mut self, _workers: usize) -> Result<()> {
         // Checkpoint restore: every master-side structure was rebuilt,
         // so no worker-resident state can be trusted.
@@ -424,11 +545,19 @@ impl Backend for DistributedBackend {
         if !self.handshook {
             self.handshake(corpus_fingerprint(ctx.corpus))?;
             self.handshook = true;
+            // Leave the listener in polling mode: every worker is
+            // registered, so from here on it only answers scrapes.
+            self.listener
+                .set_nonblocking(true)
+                .context("arming the master metrics listener")?;
         }
         if self.conns.is_empty() {
             bail!("every worker process has disconnected; cannot run the round");
         }
+        self.poll_scrapes();
         self.reconcile_epoch(ctx);
+        let tracer = ctx.tracer.clone();
+        let trace = tracer.active();
         let n = ctx.workers.len();
         let (mut leased, fetch_times) = lease_blocks_sync(ctx)?;
         let leased_ids: Vec<u32> = leased.iter().map(|b| b.id).collect();
@@ -449,6 +578,9 @@ impl Backend for DistributedBackend {
         let waves = per_conn.iter().map(Vec::len).max().unwrap_or(0);
         let mut conn_ok = vec![true; nc];
         let mut results: Vec<Option<RoundResult>> = (0..n).map(|_| None).collect();
+        // Master-clock µs at each task's send, the re-base anchor for
+        // that task's piggybacked phase timings (zero when untraced).
+        let mut send_ts = vec![0u64; n];
         for wave in 0..waves {
             for (c, positions) in per_conn.iter().enumerate() {
                 let Some(&i) = positions.get(wave) else { continue };
@@ -456,8 +588,11 @@ impl Backend for DistributedBackend {
                     continue;
                 }
                 let machine = ctx.workers[i].machine;
+                if trace {
+                    send_ts[i] = tracer.now_us();
+                }
                 let sent = if !self.delta {
-                    let task = Message::Task(build_task(ctx, i, self.epoch, &leased[i]));
+                    let task = Message::Task(build_task(ctx, i, self.epoch, &leased[i], trace));
                     self.conns[c]
                         .send_json(&task, self.max_frame)
                         .map(|b| (b, TransferKind::TaskFull))
@@ -473,12 +608,14 @@ impl Backend for DistributedBackend {
                             self.resident_ck[i].as_ref().unwrap(),
                             &w.ck,
                         ),
+                        trace,
                     });
                     self.conns[c]
                         .send_bin(&task, self.max_frame)
                         .map(|b| (b, TransferKind::TaskDelta))
                 } else {
-                    let task = BinMsg::TaskFull(build_task(ctx, i, self.epoch, &leased[i]));
+                    let task =
+                        BinMsg::TaskFull(build_task(ctx, i, self.epoch, &leased[i], trace));
                     self.conns[c]
                         .send_bin(&task, self.max_frame)
                         .map(|b| (b, TransferKind::TaskFull))
@@ -491,6 +628,8 @@ impl Backend for DistributedBackend {
                     }
                 }
             }
+            let _wait_span = tracer.span(0, TID_DRIVER, "result_wait", "coord");
+            let t_wave = Instant::now();
             for (c, positions) in per_conn.iter().enumerate() {
                 let Some(&i) = positions.get(wave) else { continue };
                 if !conn_ok[c] {
@@ -500,10 +639,18 @@ impl Backend for DistributedBackend {
                 match self.conns[c].recv_any(self.max_frame) {
                     Ok((AnyMsg::Json(Message::Result(r)), bytes)) if r.position == i => {
                         ctx.kv.record_transport(machine, bytes, TransferKind::ResultFull);
+                        self.round_wait.record(t_wave.elapsed().as_micros() as u64);
+                        if trace {
+                            merge_phases(&tracer, c as u32 + 1, i, send_ts[i], &r.phases);
+                        }
                         results[i] = Some(RoundResult::Full(r));
                     }
                     Ok((AnyMsg::Bin(BinMsg::ResultDelta(r)), bytes)) if r.position == i => {
                         ctx.kv.record_transport(machine, bytes, TransferKind::ResultDelta);
+                        self.round_wait.record(t_wave.elapsed().as_micros() as u64);
+                        if trace {
+                            merge_phases(&tracer, c as u32 + 1, i, send_ts[i], &r.phases);
+                        }
                         results[i] = Some(RoundResult::Delta(r));
                     }
                     Ok((AnyMsg::Json(Message::Result(r)), _)) => {
@@ -569,6 +716,7 @@ impl Backend for DistributedBackend {
         // positions; a corpse's lease stays out (uncommitted — the state
         // a crash leaves) and only its memory charge is returned.
         let t_flush = Instant::now();
+        let _commit_span = tracer.span(0, TID_DRIVER, "commit", "coord");
         let mut dead: Vec<(usize, u32)> = Vec::new();
         let mut merge_bytes_per_worker = 0u64;
         for (i, (w, blk)) in ctx.workers.iter_mut().zip(leased).enumerate() {
@@ -613,6 +761,7 @@ impl Backend for DistributedBackend {
         if self.conns.len() != nc {
             self.stale = true;
         }
+        self.export_metrics();
 
         Ok(RoundOutcome { tokens, host_secs, fetch_times, t_commit, dead })
     }

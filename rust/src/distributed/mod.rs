@@ -36,6 +36,6 @@ pub mod worker;
 
 pub use master::DistributedBackend;
 pub use protocol::{
-    require_epoch, BinMsg, InitMsg, Message, ResultDeltaMsg, ResultMsg, TaskDeltaMsg, TaskMsg,
-    ZRowDiff,
+    require_epoch, BinMsg, InitMsg, Message, PhaseSample, ResultDeltaMsg, ResultMsg, TaskDeltaMsg,
+    TaskMsg, WirePhase, ZRowDiff,
 };

@@ -140,6 +140,9 @@ pub struct TaskMsg {
     /// the samplers' walk order, so it must survive the trip verbatim),
     /// one row per doc of `docs`.
     pub dt: Vec<Vec<(u32, u32)>>,
+    /// The master is tracing this round: the worker measures its phases
+    /// and piggybacks [`PhaseSample`]s on the result.
+    pub trace: bool,
 }
 
 /// A completed task: every piece of state the kernel mutated, shipped
@@ -165,6 +168,8 @@ pub struct ResultMsg {
     pub z: Vec<Vec<u32>>,
     /// Updated doc–topic counts, live order, rows matching `docs`.
     pub dt: Vec<Vec<(u32, u32)>>,
+    /// Piggybacked phase timings; empty unless the task set `trace`.
+    pub phases: Vec<PhaseSample>,
 }
 
 /// The steady-state task: position/round/epoch routing, the RNG stream,
@@ -189,6 +194,9 @@ pub struct TaskDeltaMsg {
     /// `C_k` → the round's synced snapshot (empty delta when
     /// `coord.ck_sync` skipped the sync this round).
     pub ck_delta: Vec<u8>,
+    /// The master is tracing this round: the worker measures its phases
+    /// and piggybacks [`PhaseSample`]s on the result.
+    pub trace: bool,
 }
 
 /// One document row's assignment update inside a delta result.
@@ -232,6 +240,8 @@ pub struct ResultDeltaMsg {
     pub z: Vec<ZRowDiff>,
     /// Doc–topic counts in live storage order, one row per doc.
     pub dt: Vec<Vec<(u32, u32)>>,
+    /// Piggybacked phase timings; empty unless the task set `trace`.
+    pub phases: Vec<PhaseSample>,
 }
 
 /// One binary-plane message. Encoded as a 1-byte tag + body; travels in
@@ -244,6 +254,65 @@ pub enum BinMsg {
     TaskDelta(TaskDeltaMsg),
     /// The reply to either binary task kind.
     ResultDelta(ResultDeltaMsg),
+}
+
+/// Which worker-side phase a piggybacked timing covers.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WirePhase {
+    /// Task frame / block decoding.
+    Decode,
+    /// The sampling kernel.
+    Sample,
+    /// Result / delta encoding.
+    Encode,
+}
+
+impl WirePhase {
+    /// Stable wire id.
+    pub fn id(self) -> u64 {
+        match self {
+            WirePhase::Decode => 0,
+            WirePhase::Sample => 1,
+            WirePhase::Encode => 2,
+        }
+    }
+
+    /// Decode a wire id; typed error on unknown values.
+    pub fn from_id(id: u64) -> Result<WirePhase> {
+        Ok(match id {
+            0 => WirePhase::Decode,
+            1 => WirePhase::Sample,
+            2 => WirePhase::Encode,
+            other => bail!("unknown phase id {other}"),
+        })
+    }
+
+    /// Span name in the merged cluster trace (the driver's phase
+    /// vocabulary: `wire_decode` / `sample` / `wire_encode`).
+    pub fn name(self) -> &'static str {
+        match self {
+            WirePhase::Decode => "wire_decode",
+            WirePhase::Sample => "sample",
+            WirePhase::Encode => "wire_encode",
+        }
+    }
+}
+
+/// One worker-side phase timing, µs offsets relative to task receipt.
+///
+/// Rides **out-of-band** on result frames when the master asked for
+/// tracing (`trace` flag on the task): the master re-bases the offsets
+/// onto its own clock at task-send time and merges them into the
+/// cluster trace. Model bytes, RNG streams and the simulated clock
+/// never read these values, so tracing on vs off is digest-identical.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PhaseSample {
+    /// Which phase this covers.
+    pub phase: WirePhase,
+    /// Start offset since task receipt (µs).
+    pub start_us: u64,
+    /// Duration (µs).
+    pub dur_us: u64,
 }
 
 /// Typed gate shared by both sides of the delta protocol: a message at
@@ -421,6 +490,38 @@ fn get_dt(j: &Json, key: &str, rows_expected: usize) -> Result<Vec<Vec<(u32, u32
         .collect()
 }
 
+/// Phase samples as one flat `[id, start, dur, …]` array.
+fn phases_json(phases: &[PhaseSample]) -> Json {
+    let mut flat = Vec::with_capacity(phases.len() * 3);
+    for p in phases {
+        flat.push(Json::num(p.phase.id() as f64));
+        flat.push(Json::num(p.start_us as f64));
+        flat.push(Json::num(p.dur_us as f64));
+    }
+    Json::Arr(flat)
+}
+
+fn get_phases(j: &Json) -> Result<Vec<PhaseSample>> {
+    let Some(flat) = j.get("phases").and_then(Json::as_arr) else {
+        return Ok(Vec::new());
+    };
+    if flat.len() % 3 != 0 {
+        bail!("phases array length {} is not a multiple of 3", flat.len());
+    }
+    flat.chunks_exact(3)
+        .map(|t| {
+            let num = |i: usize, what: &str| {
+                t[i].as_u64().with_context(|| format!("phase {what} is not an integer"))
+            };
+            Ok(PhaseSample {
+                phase: WirePhase::from_id(num(0, "id")?)?,
+                start_us: num(1, "start")?,
+                dur_us: num(2, "duration")?,
+            })
+        })
+        .collect()
+}
+
 fn get_docs(j: &Json, key: &str) -> Result<Vec<u32>> {
     j.get(key)
         .and_then(Json::as_arr)
@@ -476,34 +577,47 @@ impl Message {
                 ("corpus_fp".into(), u64_str(m.corpus_fp)),
                 ("max_frame_bytes".into(), u64_str(m.max_frame_bytes)),
             ]),
-            Message::Task(m) => Json::Obj(vec![
-                tag,
-                ("position".into(), Json::num(m.position as f64)),
-                ("round".into(), Json::num(m.round as f64)),
-                ("epoch".into(), u64_str(m.epoch)),
-                ("block".into(), Json::str(hex_encode(&m.block))),
-                ("ck".into(), Json::str(hex_encode(&m.ck))),
-                ("rng".into(), rng_json(m.rng)),
-                (
-                    "docs".into(),
-                    Json::Arr(m.docs.iter().map(|&d| Json::num(d as f64)).collect()),
-                ),
-                ("z".into(), z_json(&m.z)),
-                ("dt".into(), dt_json(&m.dt)),
-            ]),
-            Message::Result(m) => Json::Obj(vec![
-                tag,
-                ("position".into(), Json::num(m.position as f64)),
-                ("epoch".into(), u64_str(m.epoch)),
-                ("tokens".into(), u64_str(m.tokens)),
-                ("host_secs".into(), Json::num(m.host_secs)),
-                ("block".into(), Json::str(hex_encode(&m.block))),
-                ("ck".into(), Json::str(hex_encode(&m.ck))),
-                ("rng".into(), rng_json(m.rng)),
-                ("docs".into(), Json::num(m.z.len() as f64)),
-                ("z".into(), z_json(&m.z)),
-                ("dt".into(), dt_json(&m.dt)),
-            ]),
+            Message::Task(m) => {
+                let mut fields = vec![
+                    tag,
+                    ("position".into(), Json::num(m.position as f64)),
+                    ("round".into(), Json::num(m.round as f64)),
+                    ("epoch".into(), u64_str(m.epoch)),
+                    ("block".into(), Json::str(hex_encode(&m.block))),
+                    ("ck".into(), Json::str(hex_encode(&m.ck))),
+                    ("rng".into(), rng_json(m.rng)),
+                    (
+                        "docs".into(),
+                        Json::Arr(m.docs.iter().map(|&d| Json::num(d as f64)).collect()),
+                    ),
+                    ("z".into(), z_json(&m.z)),
+                    ("dt".into(), dt_json(&m.dt)),
+                ];
+                // Absent unless set, keeping untraced frames byte-stable.
+                if m.trace {
+                    fields.push(("trace".into(), Json::Bool(true)));
+                }
+                Json::Obj(fields)
+            }
+            Message::Result(m) => {
+                let mut fields = vec![
+                    tag,
+                    ("position".into(), Json::num(m.position as f64)),
+                    ("epoch".into(), u64_str(m.epoch)),
+                    ("tokens".into(), u64_str(m.tokens)),
+                    ("host_secs".into(), Json::num(m.host_secs)),
+                    ("block".into(), Json::str(hex_encode(&m.block))),
+                    ("ck".into(), Json::str(hex_encode(&m.ck))),
+                    ("rng".into(), rng_json(m.rng)),
+                    ("docs".into(), Json::num(m.z.len() as f64)),
+                    ("z".into(), z_json(&m.z)),
+                    ("dt".into(), dt_json(&m.dt)),
+                ];
+                if !m.phases.is_empty() {
+                    fields.push(("phases".into(), phases_json(&m.phases)));
+                }
+                Json::Obj(fields)
+            }
         }
     }
 
@@ -554,6 +668,7 @@ impl Message {
                     docs,
                     z: get_z(j, "z", ndocs)?,
                     dt: get_dt(j, "dt", ndocs)?,
+                    trace: matches!(j.get("trace"), Some(Json::Bool(true))),
                 })
             }
             "result" => {
@@ -572,6 +687,7 @@ impl Message {
                     rng: get_u128_pair(j, "rng")?,
                     z: get_z(j, "z", ndocs)?,
                     dt: get_dt(j, "dt", ndocs)?,
+                    phases: get_phases(j)?,
                 })
             }
             other => bail!("unknown protocol message type {other:?}"),
@@ -624,6 +740,43 @@ fn get_bytes(buf: &[u8], pos: &mut usize) -> Result<Vec<u8>> {
 
 fn get_u32v(buf: &[u8], pos: &mut usize) -> Result<u32> {
     u32::try_from(get_varint(buf, pos)?).context("value exceeds u32")
+}
+
+fn get_u8(buf: &[u8], pos: &mut usize) -> Result<u8> {
+    let b = *buf.get(*pos).context("byte field truncated")?;
+    *pos += 1;
+    Ok(b)
+}
+
+fn get_trace_flag(buf: &[u8], pos: &mut usize) -> Result<bool> {
+    match get_u8(buf, pos)? {
+        0 => Ok(false),
+        1 => Ok(true),
+        other => bail!("trace flag must be 0 or 1, got {other}"),
+    }
+}
+
+fn put_phases(buf: &mut Vec<u8>, phases: &[PhaseSample]) {
+    put_varint(buf, phases.len() as u64);
+    for p in phases {
+        put_varint(buf, p.phase.id());
+        put_varint(buf, p.start_us);
+        put_varint(buf, p.dur_us);
+    }
+}
+
+fn get_phases_bin(buf: &[u8], pos: &mut usize) -> Result<Vec<PhaseSample>> {
+    let n = get_varint(buf, pos)?;
+    let n = bounded_count(buf, *pos, n, 3, "phase sample list")?;
+    let mut phases = Vec::with_capacity(n);
+    for _ in 0..n {
+        phases.push(PhaseSample {
+            phase: WirePhase::from_id(get_varint(buf, pos)?)?,
+            start_us: get_varint(buf, pos)?,
+            dur_us: get_varint(buf, pos)?,
+        });
+    }
+    Ok(phases)
 }
 
 /// Bound a claimed element count by the remaining bytes, given the
@@ -688,6 +841,7 @@ impl BinMsg {
                     }
                 }
                 put_dt_rows(&mut buf, &m.dt);
+                buf.push(m.trace as u8);
             }
             BinMsg::TaskDelta(m) => {
                 buf.push(TAG_TASK_DELTA);
@@ -697,6 +851,7 @@ impl BinMsg {
                 put_rng(&mut buf, m.rng);
                 put_bytes(&mut buf, &m.block);
                 put_bytes(&mut buf, &m.ck_delta);
+                buf.push(m.trace as u8);
             }
             BinMsg::ResultDelta(m) => {
                 buf.push(TAG_RESULT_DELTA);
@@ -728,6 +883,7 @@ impl BinMsg {
                     }
                 }
                 put_dt_rows(&mut buf, &m.dt);
+                put_phases(&mut buf, &m.phases);
             }
         }
         buf
@@ -766,7 +922,19 @@ impl BinMsg {
                     z.push(row);
                 }
                 let dt = get_dt_rows(buf, &mut pos, ndocs)?;
-                BinMsg::TaskFull(TaskMsg { position, round, epoch, block, ck, rng, docs, z, dt })
+                let trace = get_trace_flag(buf, &mut pos)?;
+                BinMsg::TaskFull(TaskMsg {
+                    position,
+                    round,
+                    epoch,
+                    block,
+                    ck,
+                    rng,
+                    docs,
+                    z,
+                    dt,
+                    trace,
+                })
             }
             TAG_TASK_DELTA => {
                 let position = get_varint(buf, &mut pos)? as usize;
@@ -775,7 +943,16 @@ impl BinMsg {
                 let rng = get_rng(buf, &mut pos)?;
                 let block = get_bytes(buf, &mut pos)?;
                 let ck_delta = get_bytes(buf, &mut pos)?;
-                BinMsg::TaskDelta(TaskDeltaMsg { position, round, epoch, rng, block, ck_delta })
+                let trace = get_trace_flag(buf, &mut pos)?;
+                BinMsg::TaskDelta(TaskDeltaMsg {
+                    position,
+                    round,
+                    epoch,
+                    rng,
+                    block,
+                    ck_delta,
+                    trace,
+                })
             }
             TAG_RESULT_DELTA => {
                 let position = get_varint(buf, &mut pos)? as usize;
@@ -824,6 +1001,7 @@ impl BinMsg {
                     });
                 }
                 let dt = get_dt_rows(buf, &mut pos, nrows)?;
+                let phases = get_phases_bin(buf, &mut pos)?;
                 BinMsg::ResultDelta(ResultDeltaMsg {
                     position,
                     epoch,
@@ -834,6 +1012,7 @@ impl BinMsg {
                     ck_delta,
                     z,
                     dt,
+                    phases,
                 })
             }
             other => bail!("unknown binary protocol tag {other}"),
@@ -917,6 +1096,7 @@ mod tests {
             docs: vec![],
             z: vec![],
             dt: vec![],
+            trace: true,
         });
         assert_eq!(Message::from_json(&m.to_json()).unwrap(), m);
     }
@@ -940,6 +1120,7 @@ mod tests {
             docs: vec![10, 11],
             z: vec![vec![0], vec![1, 2]],
             dt: vec![vec![(0, 1)], vec![(1, 2)]],
+            trace: false,
         });
         let mut j = m.to_json();
         // Graft an extra z row: decode must refuse before converting.
@@ -971,6 +1152,11 @@ mod tests {
                 ZRowDiff::Sparse(vec![(0, 5), (4, 2)]),
             ],
             dt: vec![vec![(3, 2)], vec![(1, 1), (0, 4)], vec![]],
+            phases: vec![
+                PhaseSample { phase: WirePhase::Decode, start_us: 0, dur_us: 12 },
+                PhaseSample { phase: WirePhase::Sample, start_us: 15, dur_us: 800 },
+                PhaseSample { phase: WirePhase::Encode, start_us: 820, dur_us: 9 },
+            ],
         }
     }
 
@@ -987,6 +1173,7 @@ mod tests {
                 docs: vec![4, 7, 9],
                 z: vec![vec![1, 2], vec![], vec![3]],
                 dt: vec![vec![(1, 2)], vec![], vec![(3, 1), (0, 1)]],
+                trace: true,
             }),
             BinMsg::TaskDelta(TaskDeltaMsg {
                 position: 0,
@@ -995,6 +1182,7 @@ mod tests {
                 rng: (5, 6),
                 block: vec![1],
                 ck_delta: vec![],
+                trace: false,
             }),
             BinMsg::ResultDelta(sample_result_delta()),
         ];

@@ -44,8 +44,54 @@ use crate::serve::wire::{
 use crate::util::rng::Pcg64;
 
 use super::protocol::{
-    require_epoch, z_row_diff, BinMsg, Message, ResultDeltaMsg, ResultMsg, TaskDeltaMsg, TaskMsg,
+    require_epoch, z_row_diff, BinMsg, Message, PhaseSample, ResultDeltaMsg, ResultMsg,
+    TaskDeltaMsg, TaskMsg, WirePhase,
 };
+
+/// Measures this worker's phases for one traced task (decode → sample →
+/// encode) as µs offsets from task receipt, for piggybacking on the
+/// result frame. Inert when the task did not set `trace`: `begin`
+/// returns `None` without reading the clock, so untraced rounds pay
+/// nothing. Timings never feed the kernel, the RNG streams or
+/// `host_secs` — they are observability-only.
+struct PhaseClock {
+    t0: Instant,
+    on: bool,
+    phases: Vec<PhaseSample>,
+}
+
+impl PhaseClock {
+    fn new(on: bool) -> PhaseClock {
+        PhaseClock::with_anchor(Instant::now(), on)
+    }
+
+    /// Anchor offsets at `t0` (the moment the task frame was received).
+    fn with_anchor(t0: Instant, on: bool) -> PhaseClock {
+        PhaseClock { t0, on, phases: Vec::new() }
+    }
+
+    fn begin(&self) -> Option<u64> {
+        if self.on {
+            Some(self.t0.elapsed().as_micros() as u64)
+        } else {
+            None
+        }
+    }
+
+    fn end(&mut self, started: Option<u64>, phase: WirePhase) {
+        let Some(start_us) = started else { return };
+        let end_us = self.t0.elapsed().as_micros() as u64;
+        self.phases.push(PhaseSample {
+            phase,
+            start_us,
+            dur_us: end_us.saturating_sub(start_us),
+        });
+    }
+
+    fn take(&mut self) -> Vec<PhaseSample> {
+        std::mem::take(&mut self.phases)
+    }
+}
 
 /// How long `connect` retries before giving up (the master may not have
 /// bound its listener yet when workers launch).
@@ -140,7 +186,9 @@ pub fn run(addr: &str) -> Result<()> {
             None => return Ok(()), // master gone; a crash there is its problem
             Some((Frame::Json(j), _)) => match Message::from_json(&j)? {
                 Message::Task(task) => {
-                    let reply = run_task(&task, &mut env)?;
+                    let mut clock = PhaseClock::new(task.trace);
+                    let mut reply = run_task(&task, &mut env, &mut clock)?;
+                    reply.phases = clock.take();
                     write_frame_with_cap(&mut stream, &Message::Result(reply).to_json(), cap)?;
                 }
                 Message::Shutdown => {
@@ -150,11 +198,28 @@ pub fn run(addr: &str) -> Result<()> {
                 other => bail!("expected task or shutdown, got {:?}", other.kind()),
             },
             Some((Frame::Binary(body), _)) => {
-                let reply = match BinMsg::decode(&body).context("decoding binary task")? {
-                    BinMsg::TaskFull(task) => run_task_full(&task, &mut env)?,
-                    BinMsg::TaskDelta(task) => run_task_delta(&task, &mut env)?,
+                let t_recv = Instant::now();
+                let msg = BinMsg::decode(&body).context("decoding binary task")?;
+                let frame_us = t_recv.elapsed().as_micros() as u64;
+                let trace = match &msg {
+                    BinMsg::TaskFull(t) => t.trace,
+                    BinMsg::TaskDelta(t) => t.trace,
+                    BinMsg::ResultDelta(_) => false,
+                };
+                let mut clock = PhaseClock::with_anchor(t_recv, trace);
+                if trace {
+                    clock.phases.push(PhaseSample {
+                        phase: WirePhase::Decode,
+                        start_us: 0,
+                        dur_us: frame_us,
+                    });
+                }
+                let mut reply = match msg {
+                    BinMsg::TaskFull(task) => run_task_full(&task, &mut env, &mut clock)?,
+                    BinMsg::TaskDelta(task) => run_task_delta(&task, &mut env, &mut clock)?,
                     BinMsg::ResultDelta(_) => bail!("master sent a result frame to a worker"),
                 };
+                reply.phases = clock.take();
                 write_binary_frame(&mut stream, &BinMsg::ResultDelta(reply).encode(), cap)?;
             }
         }
@@ -211,6 +276,7 @@ fn run_resident_round(
     epoch: u64,
     block: &mut ModelBlock,
     env: &mut WorkerEnv,
+    clock: &mut PhaseClock,
 ) -> Result<ResultDeltaMsg> {
     let ws = env
         .cache
@@ -221,11 +287,14 @@ fn run_resident_round(
     let block_base = block.clone();
 
     let mut kernel = cpu_kernel(env.sampler, &env.opts)?;
+    let t_sample = clock.begin();
     let (tokens, host_secs) = {
         let mut docs = DocView::new(&mut env.z, &mut env.dt);
         ws.run_round(&env.corpus, &mut docs, block, &env.params, &mut *kernel)?
     };
+    clock.end(t_sample, WirePhase::Sample);
 
+    let t_encode = clock.begin();
     let z = ws
         .docs
         .iter()
@@ -233,32 +302,48 @@ fn run_resident_round(
         .map(|(&d, base)| z_row_diff(base, &env.z[d as usize]))
         .collect();
     let dt = ws.docs.iter().map(|&d| env.dt.doc(d as usize).iter().collect()).collect();
+    let block_delta = codec::encode_block_delta(&block_base, block);
+    let ck_delta = codec::encode_totals_delta(&ck_base, &ws.ck);
+    clock.end(t_encode, WirePhase::Encode);
     Ok(ResultDeltaMsg {
         position,
         epoch,
         tokens,
         host_secs,
         rng: ws.rng.to_raw(),
-        block_delta: codec::encode_block_delta(&block_base, block),
-        ck_delta: codec::encode_totals_delta(&ck_base, &ws.ck),
+        block_delta,
+        ck_delta,
         z,
         dt,
+        phases: Vec::new(), // the task loop attaches the clock's samples
     })
 }
 
 /// Binary full-state task: install everything, stamp the epoch, sample,
 /// reply with deltas.
-fn run_task_full(task: &TaskMsg, env: &mut WorkerEnv) -> Result<ResultDeltaMsg> {
+fn run_task_full(
+    task: &TaskMsg,
+    env: &mut WorkerEnv,
+    clock: &mut PhaseClock,
+) -> Result<ResultDeltaMsg> {
     install_full_task(task, env)?;
+    let t_decode = clock.begin();
     let mut block = codec::decode_block(&task.block).context("decoding task block")?;
-    run_resident_round(task.position, task.epoch, &mut block, env)
+    clock.end(t_decode, WirePhase::Decode);
+    run_resident_round(task.position, task.epoch, &mut block, env, clock)
 }
 
 /// Binary delta task: verify the epoch stamp, patch the resident `C_k`,
 /// sample over the resident shard, reply with deltas.
-fn run_task_delta(task: &TaskDeltaMsg, env: &mut WorkerEnv) -> Result<ResultDeltaMsg> {
+fn run_task_delta(
+    task: &TaskDeltaMsg,
+    env: &mut WorkerEnv,
+    clock: &mut PhaseClock,
+) -> Result<ResultDeltaMsg> {
     require_epoch(task.position, task.epoch, env.resident.get(&task.position).copied())?;
+    let t_decode = clock.begin();
     let mut block = codec::decode_block(&task.block).context("decoding task block")?;
+    clock.end(t_decode, WirePhase::Decode);
     {
         let ws = env
             .cache
@@ -269,34 +354,43 @@ fn run_task_delta(task: &TaskDeltaMsg, env: &mut WorkerEnv) -> Result<ResultDelt
             .context("applying task C_k delta")?;
         ws.ck_read = ws.ck.clone();
     }
-    run_resident_round(task.position, task.epoch, &mut block, env)
+    run_resident_round(task.position, task.epoch, &mut block, env, clock)
 }
 
 /// Execute one JSON full-state task (`dist.delta = off`) and package the
 /// full-state reply — the PR-7 protocol, byte for byte plus the epoch
 /// echo.
-fn run_task(task: &TaskMsg, env: &mut WorkerEnv) -> Result<ResultMsg> {
+fn run_task(task: &TaskMsg, env: &mut WorkerEnv, clock: &mut PhaseClock) -> Result<ResultMsg> {
     install_full_task(task, env)?;
+    let t_decode = clock.begin();
     let mut block = codec::decode_block(&task.block).context("decoding task block")?;
+    clock.end(t_decode, WirePhase::Decode);
     let ws = env.cache.get_mut(&task.position).unwrap();
 
     let mut kernel = cpu_kernel(env.sampler, &env.opts)?;
+    let t_sample = clock.begin();
     let (tokens, host_secs) = {
         let mut docs = DocView::new(&mut env.z, &mut env.dt);
         ws.run_round(&env.corpus, &mut docs, &mut block, &env.params, &mut *kernel)?
     };
+    clock.end(t_sample, WirePhase::Sample);
 
+    let t_encode = clock.begin();
     let z_out = ws.docs.iter().map(|&d| env.z[d as usize].clone()).collect();
     let dt_out = ws.docs.iter().map(|&d| env.dt.doc(d as usize).iter().collect()).collect();
+    let block_bytes = codec::encode_block(&block);
+    let ck_bytes = codec::encode_totals(&ws.ck);
+    clock.end(t_encode, WirePhase::Encode);
     Ok(ResultMsg {
         position: task.position,
         epoch: task.epoch,
         tokens,
         host_secs,
-        block: codec::encode_block(&block),
-        ck: codec::encode_totals(&ws.ck),
+        block: block_bytes,
+        ck: ck_bytes,
         rng: ws.rng.to_raw(),
         z: z_out,
         dt: dt_out,
+        phases: Vec::new(), // the task loop attaches the clock's samples
     })
 }

@@ -41,6 +41,8 @@ use crate::corpus::Corpus;
 use crate::kvstore::{traffic::TransferKind, KvStore};
 use crate::metrics::PipelineStats;
 use crate::model::{DocTopic, DocView, ModelBlock, ShardOwnership};
+use crate::obs::trace::{tid_worker, TID_DRIVER};
+use crate::obs::{TraceEvent, Tracer};
 use crate::sampler::xla_dense::{MicrobatchExecutor, XlaKernel};
 use crate::sampler::{caps_of, cpu_kernel, Kernel, KernelOpts, Params};
 
@@ -82,6 +84,11 @@ pub struct RoundCtx<'a> {
     pub parallelism: usize,
     /// The shared XLA executor, when `sampler = "xla"`.
     pub exec: Option<&'a mut dyn MicrobatchExecutor>,
+    /// Host wall-clock span recorder ([`crate::obs`]) — a cheap clone of
+    /// the driver's tracer, inert unless `[obs] trace_dir` armed it.
+    /// Recording never touches model state, RNG streams or the simulated
+    /// clock, so tracing on vs off is bitwise digest-equal.
+    pub tracer: Tracer,
 }
 
 /// What one executed round hands back to the driver's clock/timeline
@@ -154,6 +161,36 @@ pub trait Backend {
     /// invalidate it; for everyone else the state *is* the master copy
     /// and there is nothing to do. Over-calling is always safe.
     fn invalidate_worker_cache(&mut self) {}
+
+    /// Observability hook, called once at driver construction with the
+    /// shared span tracer and metrics registry. Backends with
+    /// out-of-process state keep them — the distributed master merges
+    /// piggybacked worker phase timings into the cluster trace and
+    /// answers the `metrics` verb from the registry. In-process backends
+    /// see every span through [`RoundCtx`]'s tracer already and ignore
+    /// this.
+    fn attach_obs(&mut self, _tracer: Tracer, _registry: std::sync::Arc<crate::obs::Registry>) {}
+}
+
+/// Record per-worker `sample` spans derived from the kernel's reported
+/// host seconds, all anchored at the compute phase's start. Worker
+/// threads never see the tracer — the spans are synthesized on the
+/// driver thread afterwards, so instrumentation cannot perturb thread
+/// scheduling or the sampled trajectory.
+fn record_sample_spans(tracer: &Tracer, start_us: u64, host_secs: &[f64]) {
+    if !tracer.active() {
+        return;
+    }
+    for (i, &secs) in host_secs.iter().enumerate() {
+        tracer.record(TraceEvent {
+            pid: 0,
+            tid: tid_worker(i),
+            name: "sample".into(),
+            cat: "worker",
+            ts_us: start_us,
+            dur_us: (secs * 1e6) as u64,
+        });
+    }
 }
 
 /// One round executed sequentially with a *skip mask* — the driver's
@@ -305,6 +342,8 @@ pub fn backend_for(cfg: &Config) -> Result<Box<dyn Backend>> {
 /// leases, timed as fetch stall, with the leased bytes charged to the
 /// memory accountant.
 pub(crate) fn lease_blocks_sync(ctx: &mut RoundCtx<'_>) -> Result<(Vec<ModelBlock>, Vec<f64>)> {
+    let tracer = ctx.tracer.clone();
+    let _span = tracer.span(0, TID_DRIVER, "lease", "coord");
     let t0 = Instant::now();
     let mut leased = Vec::with_capacity(ctx.workers.len());
     for w in ctx.workers.iter() {
@@ -326,6 +365,8 @@ pub(crate) fn lease_blocks_sync(ctx: &mut RoundCtx<'_>) -> Result<(Vec<ModelBloc
 /// `C_k` delta merges in worker order. Commit flows are timed as a
 /// network phase; merges as the reduce half of the allreduce.
 fn commit_blocks_sync(ctx: &mut RoundCtx<'_>, leased: Vec<ModelBlock>) -> Result<f64> {
+    let tracer = ctx.tracer.clone();
+    let _span = tracer.span(0, TID_DRIVER, "commit", "coord");
     let t_flush = Instant::now();
     let mut merge_bytes_per_worker = 0u64;
     for (w, blk) in ctx.workers.iter_mut().zip(leased) {
@@ -368,6 +409,7 @@ impl Backend for SimulatedBackend {
 
     fn run_round(&mut self, ctx: &mut RoundCtx<'_>) -> Result<RoundOutcome> {
         let (mut leased, fetch_times) = lease_blocks_sync(ctx)?;
+        let compute_start_us = ctx.tracer.now_us();
         let t_compute = Instant::now();
         let mut tokens = 0u64;
         let mut host_secs = Vec::with_capacity(ctx.workers.len());
@@ -400,6 +442,7 @@ impl Backend for SimulatedBackend {
             }
         }
         ctx.pstats.sample_secs += t_compute.elapsed().as_secs_f64();
+        record_sample_spans(&ctx.tracer, compute_start_us, &host_secs);
         charge_alias_caches(ctx, &leased)?;
         let t_commit = commit_blocks_sync(ctx, leased)?;
         Ok(RoundOutcome { tokens, host_secs, fetch_times, t_commit, dead: Vec::new() })
@@ -432,6 +475,7 @@ impl Backend for ThreadedBackend {
 
     fn run_round(&mut self, ctx: &mut RoundCtx<'_>) -> Result<RoundOutcome> {
         let (mut leased, fetch_times) = lease_blocks_sync(ctx)?;
+        let compute_start_us = ctx.tracer.now_us();
         let t_compute = Instant::now();
         let per_worker = {
             let RoundCtx { workers, z, dt, .. } = ctx;
@@ -455,6 +499,7 @@ impl Backend for ThreadedBackend {
             host_secs.push(secs);
         }
         ctx.pstats.sample_secs += t_compute.elapsed().as_secs_f64();
+        record_sample_spans(&ctx.tracer, compute_start_us, &host_secs);
         charge_alias_caches(ctx, &leased)?;
         let t_commit = commit_blocks_sync(ctx, leased)?;
         Ok(RoundOutcome { tokens, host_secs, fetch_times, t_commit, dead: Vec::new() })
@@ -484,6 +529,7 @@ impl Backend for PipelinedBackend {
     }
 
     fn run_round(&mut self, ctx: &mut RoundCtx<'_>) -> Result<RoundOutcome> {
+        let tracer = ctx.tracer.clone();
         let machines = ctx.machines;
         // A staged block becomes this round's active block — same bytes
         // handed over, so Staging is released as Model is charged with no
@@ -493,8 +539,10 @@ impl Backend for PipelinedBackend {
                 ctx.mem.release(machines[w], MemCategory::Staging, bytes);
             }
         }
-        let (blocks, receipts, acquire) =
-            self.engine.acquire_round_blocks(ctx.kv, ctx.schedule, ctx.round, machines)?;
+        let (blocks, receipts, acquire) = {
+            let _span = tracer.span(0, TID_DRIVER, "lease", "coord");
+            self.engine.acquire_round_blocks(ctx.kv, ctx.schedule, ctx.round, machines)?
+        };
         // Flow timing comes from the worker-ordered receipts; the meter's
         // completion-ordered pending list is discarded.
         let fetch_flows: Vec<Flow> = receipts.iter().map(|r| r.flow()).collect();
@@ -511,6 +559,7 @@ impl Backend for PipelinedBackend {
         // identical to the other backends.
         let plan = RoundPlan::build(ctx.schedule, ctx.round, machines, self.engine.budget_bytes());
         let model_bytes: Vec<u64> = blocks.iter().map(|b| b.bytes()).collect();
+        let compute_start_us = tracer.now_us();
         let out = {
             let RoundCtx { workers, z, dt, .. } = ctx;
             pipeline::run_round_pipelined(
@@ -534,6 +583,7 @@ impl Backend for PipelinedBackend {
             tokens += n;
             host_secs.push(secs);
         }
+        record_sample_spans(&tracer, compute_start_us, &host_secs);
         PipelineEngine::record_round(ctx.pstats, &acquire, &out);
         // During the round each consumer machine really held its active
         // (Model) block, that block's kernel caches (mh-alias proposal
@@ -562,6 +612,7 @@ impl Backend for PipelinedBackend {
         }
         // C_k merges: reduce half of the allreduce, worker order. Timed as
         // flush stall so the off baseline stays directly comparable.
+        let _flush_span = tracer.span(0, TID_DRIVER, "pipeline_flush", "coord");
         let t_merge = Instant::now();
         let mut merge_bytes_per_worker = 0u64;
         for w in ctx.workers.iter_mut() {

@@ -646,6 +646,12 @@ impl Session {
         summary.total_comm_bytes = self.total_comm_bytes();
         summary.mean_delta = self.mean_delta();
         summary.max_delta = self.max_delta();
+        // Flush the obs trace at the end of every training call (a no-op
+        // unless `[obs] trace_dir` armed the tracer) — the facade drives
+        // iterations itself, so `Driver::run`'s flush never fires here.
+        if let Inner::ModelParallel(d) = &self.inner {
+            d.write_trace()?;
+        }
         Ok(summary)
     }
 

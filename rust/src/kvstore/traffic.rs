@@ -79,6 +79,46 @@ pub enum TransferKind {
 /// Number of [`TransferKind`] variants (size of the per-kind tally).
 const NUM_KINDS: usize = 13;
 
+impl TransferKind {
+    /// Every variant, in tally order — metric exporters iterate this so
+    /// a new kind shows up in the `kind` label automatically.
+    pub const ALL: [TransferKind; NUM_KINDS] = [
+        TransferKind::BlockFetch,
+        TransferKind::BlockCommit,
+        TransferKind::BlockPrefetch,
+        TransferKind::TotalsRead,
+        TransferKind::TotalsMerge,
+        TransferKind::PsSync,
+        TransferKind::BlockRead,
+        TransferKind::BlockSpill,
+        TransferKind::BlockRecall,
+        TransferKind::TaskDelta,
+        TransferKind::TaskFull,
+        TransferKind::ResultDelta,
+        TransferKind::ResultFull,
+    ];
+
+    /// Stable snake_case label value (the `kind` label of
+    /// `mplda_transfer_bytes_total`).
+    pub fn name(&self) -> &'static str {
+        match self {
+            TransferKind::BlockFetch => "block_fetch",
+            TransferKind::BlockCommit => "block_commit",
+            TransferKind::BlockPrefetch => "block_prefetch",
+            TransferKind::TotalsRead => "totals_read",
+            TransferKind::TotalsMerge => "totals_merge",
+            TransferKind::PsSync => "ps_sync",
+            TransferKind::BlockRead => "block_read",
+            TransferKind::BlockSpill => "block_spill",
+            TransferKind::BlockRecall => "block_recall",
+            TransferKind::TaskDelta => "task_delta",
+            TransferKind::TaskFull => "task_full",
+            TransferKind::ResultDelta => "result_delta",
+            TransferKind::ResultFull => "result_full",
+        }
+    }
+}
+
 /// Accumulating traffic meter.
 #[derive(Debug, Default, Clone)]
 pub struct TrafficMeter {

@@ -97,6 +97,7 @@ pub mod serve;
 pub mod cluster;
 pub mod baseline;
 pub mod metrics;
+pub mod obs;
 pub mod runtime;
 pub mod eval;
 

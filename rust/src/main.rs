@@ -5,6 +5,7 @@
 //! mplda eval    <fig2|fig3|table1|fig4a|fig4b|all> [options]
 //! mplda master  [--config FILE ...]             # distributed trainer, master side
 //! mplda worker  --connect HOST:PORT             # distributed trainer, worker side
+//! mplda metrics --connect HOST:PORT             # scrape Prometheus metrics
 //! mplda corpus  [--corpus.preset NAME ...]      # corpus statistics
 //! mplda check   [--runtime.artifacts_dir DIR]   # artifact + PJRT smoke
 //! ```
@@ -56,6 +57,7 @@ fn dispatch(args: &Args) -> Result<()> {
         Some("serve") => cmd_serve(args),
         Some("master") => cmd_master(args),
         Some("worker") => cmd_worker(args),
+        Some("metrics") => cmd_metrics(args),
         Some("check") => cmd_check(args),
         Some("help") | None => {
             print!("{}", help());
@@ -78,6 +80,7 @@ fn help() -> String {
     .entry("serve", "train, then serve fold-in queries over TCP (block-paged model)")
     .entry("master", "train as the distributed master: listen per [dist], wait for workers")
     .entry("worker --connect A", "join a distributed master at address A (HOST:PORT)")
+    .entry("metrics --connect A", "scrape Prometheus metrics from a serve front end or master")
     .entry("corpus", "print corpus statistics for a preset")
     .entry("check", "verify AOT artifacts load and execute via PJRT")
     .section("Common options")
@@ -311,7 +314,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     }
     let server = mplda::serve::Server::serve(model, &cfg.serve)?;
     println!("serving on {}", server.addr());
-    println!("protocol: length-prefixed JSON — ping | infer | stats | shutdown");
+    println!("protocol: length-prefixed JSON — ping | infer | stats | metrics | shutdown");
     println!("stop with a {{\"type\":\"shutdown\"}} request");
     server.join();
     println!("server stopped");
@@ -362,6 +365,30 @@ fn cmd_worker(args: &Args) -> Result<()> {
         .get("connect")
         .context("worker needs --connect HOST:PORT (printed by `mplda master`)")?;
     mplda::distributed::worker::run(addr)
+}
+
+/// Scrape a running serving front end or distributed master: send one
+/// `{"type":"metrics"}` request, validate the returned body as
+/// Prometheus text exposition format, and print it to stdout (the
+/// validation summary goes to stderr so the output pipes cleanly into
+/// other tools).
+fn cmd_metrics(args: &Args) -> Result<()> {
+    use std::net::ToSocketAddrs;
+    let target = args
+        .get("connect")
+        .context("metrics needs --connect HOST:PORT (a serve front end or a master)")?;
+    let addr = target
+        .to_socket_addrs()
+        .with_context(|| format!("resolving {target}"))?
+        .next()
+        .with_context(|| format!("{target} resolved to no address"))?;
+    let mut client = mplda::serve::Client::connect(addr)?;
+    let body = client.metrics()?;
+    let summary = mplda::obs::prometheus::parse(&body)
+        .context("scraped body is not valid Prometheus text exposition format")?;
+    print!("{body}");
+    eprintln!("# {target}: {} metric families, {} samples", summary.families, summary.samples);
+    Ok(())
 }
 
 fn cmd_check(args: &Args) -> Result<()> {

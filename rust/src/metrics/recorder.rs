@@ -168,6 +168,27 @@ mod tests {
     }
 
     #[test]
+    fn recorder_flush_overwrites_stale_files() {
+        let dir = std::env::temp_dir().join(format!("mplda_rec_ow_{}", std::process::id()));
+        let mut r = Recorder::with_dir(&dir);
+        r.series("ow", &["x"]).push(&[1.0]);
+        r.series("ow", &["x"]).push(&[2.0]);
+        r.flush().unwrap();
+        assert_eq!(std::fs::read_to_string(dir.join("ow.csv")).unwrap(), "x\n1\n2\n");
+        // Flushing a fresh recorder into the same directory replaces the
+        // file wholesale: shorter content must not leave stale trailing
+        // rows from the previous run behind.
+        let mut r = Recorder::with_dir(&dir);
+        r.series("ow", &["x"]).push(&[3.0]);
+        r.flush().unwrap();
+        assert_eq!(std::fs::read_to_string(dir.join("ow.csv")).unwrap(), "x\n3\n");
+        // Re-flushing the same recorder is idempotent.
+        r.flush().unwrap();
+        assert_eq!(std::fs::read_to_string(dir.join("ow.csv")).unwrap(), "x\n3\n");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
     #[should_panic(expected = "row width")]
     fn wrong_width_panics() {
         let mut s = Series::new("x", &["a", "b"]);

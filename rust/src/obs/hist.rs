@@ -1,0 +1,140 @@
+//! The shared log₂-bucketed latency histogram.
+//!
+//! Lifted out of `serve::metrics` (which re-exports it as
+//! `LatencyHistogram` for compatibility) so every subsystem that wants
+//! cheap latency percentiles — serve request latencies, serve disk
+//! recalls, the distributed master's per-round result waits — records
+//! into the *same* type and exposes through the same Prometheus
+//! rendering ([`crate::obs::prometheus`]).
+//!
+//! One `u64` per power of two of microseconds: recording is O(1), the
+//! lock-held time is tiny, and percentiles are exact to a factor of two
+//! — plenty for comparisons that differ by orders of magnitude.
+
+/// Number of log₂ buckets: covers 1 µs … ~2^39 µs (≈ 6 days).
+pub const BUCKETS: usize = 40;
+
+/// Log₂-bucketed latency histogram over microseconds.
+#[derive(Debug, Clone)]
+pub struct Log2Histogram {
+    buckets: [u64; BUCKETS],
+    count: u64,
+    sum_micros: u64,
+}
+
+impl Default for Log2Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Log2Histogram {
+    /// An empty histogram.
+    pub fn new() -> Log2Histogram {
+        Log2Histogram { buckets: [0; BUCKETS], count: 0, sum_micros: 0 }
+    }
+
+    /// Record one latency sample.
+    pub fn record(&mut self, micros: u64) {
+        let idx = (63 - micros.max(1).leading_zeros() as usize).min(BUCKETS - 1);
+        self.buckets[idx] += 1;
+        self.count += 1;
+        self.sum_micros += micros;
+    }
+
+    /// Samples recorded.
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    /// Sum of all recorded samples in microseconds (the `_sum` of the
+    /// Prometheus histogram rendering).
+    pub fn sum_micros(&self) -> u64 {
+        self.sum_micros
+    }
+
+    /// The per-bucket counts (index `i` holds samples in
+    /// `[2^i, 2^(i+1))` µs, with under/overflow clamped to the ends).
+    pub fn buckets(&self) -> &[u64; BUCKETS] {
+        &self.buckets
+    }
+
+    /// Upper bound of bucket `i` in microseconds.
+    pub fn bucket_upper_micros(i: usize) -> u64 {
+        1u64 << (i + 1).min(63)
+    }
+
+    /// Fold another histogram into this one.
+    pub fn merge(&mut self, other: &Log2Histogram) {
+        for (a, b) in self.buckets.iter_mut().zip(other.buckets.iter()) {
+            *a += b;
+        }
+        self.count += other.count;
+        self.sum_micros += other.sum_micros;
+    }
+
+    /// The `p`-th percentile in milliseconds (upper bucket bound, so the
+    /// value over-estimates by at most 2×). Returns 0 with no samples.
+    pub fn percentile_ms(&self, p: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let target = ((p / 100.0) * self.count as f64).ceil().max(1.0) as u64;
+        let mut cum = 0u64;
+        for (i, &n) in self.buckets.iter().enumerate() {
+            cum += n;
+            if cum >= target {
+                return (1u64 << (i + 1)) as f64 / 1000.0;
+            }
+        }
+        (1u64 << BUCKETS) as f64 / 1000.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentiles_bracket_samples() {
+        let mut h = Log2Histogram::new();
+        assert_eq!(h.percentile_ms(99.0), 0.0);
+        for _ in 0..90 {
+            h.record(100);
+        }
+        for _ in 0..10 {
+            h.record(50_000);
+        }
+        assert_eq!(h.count(), 100);
+        assert_eq!(h.sum_micros(), 90 * 100 + 10 * 50_000);
+        let p50 = h.percentile_ms(50.0);
+        let p99 = h.percentile_ms(99.0);
+        assert!(p50 >= 0.1 && p50 <= 0.3, "p50={p50}");
+        assert!(p99 >= 50.0 && p99 <= 70.0, "p99={p99}");
+        // Zero-latency samples land in the first bucket, not a panic.
+        h.record(0);
+        assert!(h.percentile_ms(1.0) > 0.0);
+    }
+
+    #[test]
+    fn merge_adds_counts_and_sums() {
+        let mut a = Log2Histogram::new();
+        let mut b = Log2Histogram::new();
+        a.record(10);
+        b.record(10);
+        b.record(1_000_000);
+        a.merge(&b);
+        assert_eq!(a.count(), 3);
+        assert_eq!(a.sum_micros(), 1_000_020);
+        assert_eq!(a.buckets()[3], 2); // 10 µs lands in [8, 16)
+    }
+
+    #[test]
+    fn bucket_bounds_are_powers_of_two() {
+        assert_eq!(Log2Histogram::bucket_upper_micros(0), 2);
+        assert_eq!(Log2Histogram::bucket_upper_micros(9), 1024);
+        let mut h = Log2Histogram::new();
+        h.record(1023);
+        assert_eq!(h.buckets()[9], 1);
+    }
+}

@@ -1,0 +1,43 @@
+//! Unified observability: one dependency-free subsystem for *seeing*
+//! where a training round's or a serve request's time goes, across all
+//! four execution backends.
+//!
+//! Three layers, each usable alone:
+//!
+//! * **[`hist`]** — the log₂-bucketed [`Log2Histogram`] (lifted out of
+//!   `serve::metrics`, which now re-exports it): O(1) recording, exact
+//!   percentiles to a factor of two, a `sum` so it renders as a real
+//!   Prometheus histogram.
+//! * **[`registry`]** — a thread-safe, snapshot-able [`Registry`] of
+//!   typed counters/gauges/histograms under the **stable metric names**
+//!   of [`names`], covering what was previously scattered across
+//!   `IterStats` scalars, the `TransferKind` traffic meter,
+//!   `MemCategory` peaks, pipeline stall stats, and serve cache/disk
+//!   stats. [`prometheus`] renders a snapshot as Prometheus text
+//!   exposition format (and parses it back, for tests and the `mplda
+//!   metrics` scrape).
+//! * **[`trace`]** — span instrumentation of the round lifecycle
+//!   (iteration → round → lease / sample / commit / pipeline-flush /
+//!   wire encode+decode), per worker, emitted as Chrome trace-event
+//!   JSON (open in Perfetto / `chrome://tracing`). Gated by the
+//!   `[obs]` config section (`trace_dir`, `trace_sample_every`), off
+//!   by default.
+//!
+//! **The determinism bar.** Instrumentation reads wall clocks and
+//! buffers events; it never touches model state, RNG streams, the
+//! simulated clock, or `comm_bytes`. On the distributed backend the
+//! workers' per-round phase timings piggyback on result frames
+//! **out-of-band** — exactly like the PR 9 `TransferKind` transport
+//! accounting — so the master merges one cluster-wide trace (workers
+//! as pids) while the model digest and LL series stay bitwise equal to
+//! an untraced run (`tests/obs_trace.rs`, DESIGN.md §Observability).
+
+pub mod hist;
+pub mod names;
+pub mod prometheus;
+pub mod registry;
+pub mod trace;
+
+pub use hist::Log2Histogram;
+pub use registry::{MetricKind, Registry, Sample, SampleValue, Snapshot};
+pub use trace::{TraceEvent, Tracer};

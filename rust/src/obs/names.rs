@@ -1,0 +1,91 @@
+//! The stable metric-name vocabulary.
+//!
+//! Every name a [`crate::obs::Registry`] exposes is a constant here, so
+//! dashboards and scrape checks never chase renames. The table in
+//! DESIGN.md §Observability mirrors this file; keep them in sync.
+//!
+//! Conventions: `mplda_` prefix throughout; `_total` suffix on
+//! monotone counters; byte quantities end in `_bytes`; wall-clock
+//! accumulators end in `_seconds_total`; histograms are recorded in
+//! microseconds and rendered in seconds by the Prometheus layer.
+
+// --- Training (driver) -------------------------------------------------
+
+/// Iterations completed (counter).
+pub const ITERATIONS: &str = "mplda_iterations_total";
+/// Tokens sampled across all iterations (counter).
+pub const TOKENS: &str = "mplda_tokens_sampled_total";
+/// Simulated cluster seconds elapsed (gauge — the paper's x-axis).
+pub const SIM_TIME: &str = "mplda_sim_time_seconds";
+/// Simulated network communication bytes (counter; excludes out-of-band
+/// transport/disk kinds, matching `IterStats::comm_bytes`).
+pub const COMM_BYTES: &str = "mplda_comm_bytes_total";
+/// Mean `Δ_{r,i}` staleness of the last iteration (gauge).
+pub const MEAN_DELTA: &str = "mplda_mean_delta";
+/// Per-kind KV-store transfer bytes (counter, label `kind`).
+pub const TRANSFER_BYTES: &str = "mplda_transfer_bytes_total";
+/// Per-kind KV-store transfer counts (counter, label `kind`).
+pub const TRANSFER_OPS: &str = "mplda_transfer_ops_total";
+/// Peak bytes per memory category, max across nodes (gauge, label
+/// `category`).
+pub const MEM_PEAK_BYTES: &str = "mplda_mem_peak_bytes";
+
+// --- Pipeline stalls (host wall clock) ---------------------------------
+
+/// Round-critical-path seconds stalled acquiring blocks (counter).
+pub const PIPE_FETCH_STALL: &str = "mplda_pipeline_fetch_stall_seconds_total";
+/// Round-critical-path seconds stalled finishing commits (counter).
+pub const PIPE_FLUSH_STALL: &str = "mplda_pipeline_flush_stall_seconds_total";
+/// Sampling-phase wall seconds (counter).
+pub const PIPE_SAMPLE: &str = "mplda_pipeline_sample_seconds_total";
+/// Rounds accounted by the pipeline stats (counter).
+pub const PIPE_ROUNDS: &str = "mplda_pipeline_rounds_total";
+/// Blocks served from the prefetch staging buffer (counter).
+pub const PIPE_STAGED_HITS: &str = "mplda_pipeline_staged_hits_total";
+/// Blocks fetched synchronously at round start (counter).
+pub const PIPE_FALLBACK_FETCHES: &str = "mplda_pipeline_fallback_fetches_total";
+/// Prefetches skipped for the staging budget (counter).
+pub const PIPE_BUDGET_SKIPS: &str = "mplda_pipeline_budget_skips_total";
+
+// --- Distributed transport ---------------------------------------------
+
+/// Master wait from first result-wave poll to each result's arrival
+/// (histogram, µs).
+pub const DIST_ROUND_WAIT: &str = "mplda_dist_round_wait";
+/// Worker processes currently connected (gauge).
+pub const DIST_WORKERS: &str = "mplda_dist_connected_workers";
+/// Master epoch (gauge; bumps count roster/ownership invalidations).
+pub const DIST_EPOCH: &str = "mplda_dist_epoch";
+
+// --- Serve tier ---------------------------------------------------------
+
+/// Requests completed (counter).
+pub const SERVE_REQUESTS: &str = "mplda_serve_requests_total";
+/// Documents folded in (counter).
+pub const SERVE_DOCS: &str = "mplda_serve_docs_total";
+/// Tokens sampled over (counter).
+pub const SERVE_TOKENS: &str = "mplda_serve_tokens_total";
+/// Micro-batches executed (counter).
+pub const SERVE_BATCHES: &str = "mplda_serve_batches_total";
+/// Documents per wall-clock second since startup (gauge).
+pub const SERVE_DOCS_PER_SEC: &str = "mplda_serve_docs_per_second";
+/// Queue-to-reply request latency (histogram, µs).
+pub const SERVE_LATENCY: &str = "mplda_serve_request_latency";
+/// Block-cache hits (counter).
+pub const SERVE_CACHE_HITS: &str = "mplda_serve_cache_hits_total";
+/// Block-cache misses (counter).
+pub const SERVE_CACHE_MISSES: &str = "mplda_serve_cache_misses_total";
+/// Oversized blocks served around the cache (counter).
+pub const SERVE_CACHE_BYPASSES: &str = "mplda_serve_cache_bypasses_total";
+/// Cache evictions (counter).
+pub const SERVE_CACHE_EVICTIONS: &str = "mplda_serve_cache_evictions_total";
+/// Blocks resident in the cache right now (gauge).
+pub const SERVE_CACHE_BLOCKS: &str = "mplda_serve_cache_resident_blocks";
+/// Bytes resident in the cache right now (gauge).
+pub const SERVE_CACHE_BYTES: &str = "mplda_serve_cache_resident_bytes";
+/// Disk-tier block recalls (counter).
+pub const SERVE_DISK_RECALLS: &str = "mplda_serve_disk_recalls_total";
+/// Disk-tier recall bytes (counter).
+pub const SERVE_DISK_RECALL_BYTES: &str = "mplda_serve_disk_recall_bytes_total";
+/// Disk recall latency (histogram, µs).
+pub const SERVE_DISK_RECALL_LATENCY: &str = "mplda_serve_disk_recall_latency";

@@ -1,0 +1,283 @@
+//! The typed metrics registry: counters, gauges and log₂ histograms
+//! under stable names, thread-safe, snapshot-able.
+//!
+//! A [`Registry`] is a passive store — subsystems *push* their current
+//! values into it (the driver after every iteration, the serve tier at
+//! scrape time) and an exposition layer renders a [`Snapshot`]
+//! ([`crate::obs::prometheus`]). Counters here carry **absolute**
+//! values: sources own their accumulation (`IterStats`, the traffic
+//! meter, `ServeMetrics`) and the registry mirrors them, which keeps
+//! one source of truth and makes re-exports idempotent.
+//!
+//! Names must follow the Prometheus charset
+//! (`[a-zA-Z_:][a-zA-Z0-9_:]*`); [`names`](crate::obs::names) holds the
+//! vocabulary. A name is bound to one kind forever — pushing a gauge
+//! value under a histogram name is a programming error and panics in
+//! debug builds (release builds ignore the mismatched write rather
+//! than corrupt the family).
+
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+
+use super::hist::Log2Histogram;
+
+/// What a metric family is, for the `# TYPE` exposition line.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MetricKind {
+    /// Monotone accumulator.
+    Counter,
+    /// Point-in-time value.
+    Gauge,
+    /// Log₂-bucketed latency distribution (µs).
+    Histogram,
+}
+
+impl MetricKind {
+    /// The Prometheus `# TYPE` keyword.
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            MetricKind::Counter => "counter",
+            MetricKind::Gauge => "gauge",
+            MetricKind::Histogram => "histogram",
+        }
+    }
+}
+
+/// One exported value of a family: its label set plus either a scalar
+/// or a histogram snapshot.
+#[derive(Debug, Clone)]
+pub struct Sample {
+    /// Label pairs, sorted by key; empty for unlabeled metrics.
+    pub labels: Vec<(String, String)>,
+    /// The value.
+    pub value: SampleValue,
+}
+
+/// A sample's payload.
+#[derive(Debug, Clone)]
+pub enum SampleValue {
+    /// Counter or gauge scalar.
+    Num(f64),
+    /// Histogram snapshot.
+    Hist(Log2Histogram),
+}
+
+/// One metric family in a snapshot.
+#[derive(Debug, Clone)]
+pub struct FamilySnapshot {
+    /// Metric name (`names::` vocabulary).
+    pub name: String,
+    /// `# HELP` text.
+    pub help: String,
+    /// Family kind.
+    pub kind: MetricKind,
+    /// The family's samples, one per label set, label-sorted.
+    pub samples: Vec<Sample>,
+}
+
+/// A consistent copy of the whole registry at one instant.
+#[derive(Debug, Clone, Default)]
+pub struct Snapshot {
+    /// Families sorted by name.
+    pub families: Vec<FamilySnapshot>,
+}
+
+struct Family {
+    help: String,
+    kind: MetricKind,
+    series: BTreeMap<Vec<(String, String)>, SampleValue>,
+}
+
+/// The thread-safe metric store.
+#[derive(Default)]
+pub struct Registry {
+    families: Mutex<BTreeMap<String, Family>>,
+}
+
+fn valid_name(name: &str) -> bool {
+    let mut chars = name.chars();
+    match chars.next() {
+        Some(c) if c.is_ascii_alphabetic() || c == '_' || c == ':' => {}
+        _ => return false,
+    }
+    chars.all(|c| c.is_ascii_alphanumeric() || c == '_' || c == ':')
+}
+
+fn label_vec(labels: &[(&str, &str)]) -> Vec<(String, String)> {
+    let mut v: Vec<(String, String)> =
+        labels.iter().map(|(k, v)| (k.to_string(), v.to_string())).collect();
+    v.sort();
+    v
+}
+
+impl Registry {
+    /// An empty registry.
+    pub fn new() -> Registry {
+        Registry::default()
+    }
+
+    fn write(
+        &self,
+        name: &str,
+        help: &str,
+        kind: MetricKind,
+        labels: &[(&str, &str)],
+        update: impl FnOnce(&mut SampleValue),
+    ) {
+        debug_assert!(valid_name(name), "invalid metric name {name:?}");
+        let mut families = self.families.lock().expect("obs registry lock poisoned");
+        let fam = families.entry(name.to_string()).or_insert_with(|| Family {
+            help: help.to_string(),
+            kind,
+            series: BTreeMap::new(),
+        });
+        if fam.kind != kind {
+            debug_assert!(false, "metric {name} registered as {:?}, written as {kind:?}", fam.kind);
+            return;
+        }
+        let slot = fam.series.entry(label_vec(labels)).or_insert_with(|| match kind {
+            MetricKind::Histogram => SampleValue::Hist(Log2Histogram::new()),
+            _ => SampleValue::Num(0.0),
+        });
+        update(slot);
+    }
+
+    /// Set a counter to an absolute value (sources own accumulation).
+    pub fn set_counter(&self, name: &str, help: &str, labels: &[(&str, &str)], value: u64) {
+        self.write(name, help, MetricKind::Counter, labels, |s| {
+            *s = SampleValue::Num(value as f64)
+        });
+    }
+
+    /// Set a counter to an absolute fractional value (the wall-second
+    /// accumulators: stall/sample `_seconds_total` metrics).
+    pub fn set_counter_f64(&self, name: &str, help: &str, labels: &[(&str, &str)], value: f64) {
+        self.write(name, help, MetricKind::Counter, labels, |s| *s = SampleValue::Num(value));
+    }
+
+    /// Add to a counter (for sources with no accumulator of their own).
+    pub fn inc_counter(&self, name: &str, help: &str, labels: &[(&str, &str)], by: u64) {
+        self.write(name, help, MetricKind::Counter, labels, |s| {
+            if let SampleValue::Num(v) = s {
+                *v += by as f64;
+            }
+        });
+    }
+
+    /// Set a gauge.
+    pub fn set_gauge(&self, name: &str, help: &str, labels: &[(&str, &str)], value: f64) {
+        self.write(name, help, MetricKind::Gauge, labels, |s| *s = SampleValue::Num(value));
+    }
+
+    /// Record one sample into a histogram metric (µs).
+    pub fn observe(&self, name: &str, help: &str, labels: &[(&str, &str)], micros: u64) {
+        self.write(name, help, MetricKind::Histogram, labels, |s| {
+            if let SampleValue::Hist(h) = s {
+                h.record(micros);
+            }
+        });
+    }
+
+    /// Replace a histogram metric with a snapshot owned elsewhere (the
+    /// dedupe path: `ServeMetrics` and the distributed master keep their
+    /// own [`Log2Histogram`] and mirror it here).
+    pub fn set_histogram(&self, name: &str, help: &str, labels: &[(&str, &str)], hist: &Log2Histogram) {
+        self.write(name, help, MetricKind::Histogram, labels, |s| {
+            *s = SampleValue::Hist(hist.clone())
+        });
+    }
+
+    /// A consistent copy of every family, name- and label-sorted.
+    pub fn snapshot(&self) -> Snapshot {
+        let families = self.families.lock().expect("obs registry lock poisoned");
+        Snapshot {
+            families: families
+                .iter()
+                .map(|(name, fam)| FamilySnapshot {
+                    name: name.clone(),
+                    help: fam.help.clone(),
+                    kind: fam.kind,
+                    samples: fam
+                        .series
+                        .iter()
+                        .map(|(labels, value)| Sample {
+                            labels: labels.clone(),
+                            value: value.clone(),
+                        })
+                        .collect(),
+                })
+                .collect(),
+        }
+    }
+
+    /// Render the current contents as Prometheus text exposition format.
+    pub fn render_prometheus(&self) -> String {
+        super::prometheus::render(&self.snapshot())
+    }
+
+    /// Scalar value of a metric, if present (tests and harness queries).
+    pub fn get_num(&self, name: &str, labels: &[(&str, &str)]) -> Option<f64> {
+        let families = self.families.lock().expect("obs registry lock poisoned");
+        match families.get(name)?.series.get(&label_vec(labels))? {
+            SampleValue::Num(v) => Some(*v),
+            SampleValue::Hist(_) => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_gauges_histograms_round_trip() {
+        let r = Registry::new();
+        r.set_counter("mplda_test_total", "help", &[], 3);
+        r.inc_counter("mplda_test_total", "help", &[], 2);
+        r.set_gauge("mplda_test_gauge", "g", &[("node", "0")], 1.5);
+        r.observe("mplda_test_lat", "h", &[], 100);
+        r.observe("mplda_test_lat", "h", &[], 200);
+        assert_eq!(r.get_num("mplda_test_total", &[]), Some(5.0));
+        assert_eq!(r.get_num("mplda_test_gauge", &[("node", "0")]), Some(1.5));
+        let snap = r.snapshot();
+        assert_eq!(snap.families.len(), 3);
+        let hist = snap.families.iter().find(|f| f.name == "mplda_test_lat").unwrap();
+        assert_eq!(hist.kind, MetricKind::Histogram);
+        match &hist.samples[0].value {
+            SampleValue::Hist(h) => assert_eq!(h.count(), 2),
+            other => panic!("expected histogram, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn labels_separate_series_and_sort() {
+        let r = Registry::new();
+        r.set_counter("mplda_k_total", "", &[("kind", "a")], 1);
+        r.set_counter("mplda_k_total", "", &[("kind", "b")], 2);
+        let snap = r.snapshot();
+        assert_eq!(snap.families[0].samples.len(), 2);
+        assert_eq!(snap.families[0].samples[0].labels, vec![("kind".into(), "a".into())]);
+        // Label order in the call does not matter.
+        r.set_gauge("mplda_two", "", &[("b", "2"), ("a", "1")], 9.0);
+        assert_eq!(r.get_num("mplda_two", &[("a", "1"), ("b", "2")]), Some(9.0));
+    }
+
+    #[test]
+    fn shared_across_threads() {
+        let r = std::sync::Arc::new(Registry::new());
+        let handles: Vec<_> = (0..4)
+            .map(|_| {
+                let r = std::sync::Arc::clone(&r);
+                std::thread::spawn(move || {
+                    for _ in 0..100 {
+                        r.inc_counter("mplda_mt_total", "", &[], 1);
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(r.get_num("mplda_mt_total", &[]), Some(400.0));
+    }
+}

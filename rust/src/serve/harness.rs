@@ -80,6 +80,14 @@ impl Harness {
         self.metrics.snapshot(self.model.cache_stats(), self.model.disk_stats())
     }
 
+    /// The serving counters rendered as Prometheus text exposition —
+    /// the body of the TCP `metrics` response, available in-process so
+    /// tests and embedders need no socket to scrape.
+    pub fn prometheus(&self) -> String {
+        self.stats()
+            .to_prometheus(&self.metrics.latency_histogram(), &self.model.recall_histogram())
+    }
+
     /// Close the queue, drain outstanding work, and join the executor.
     /// (Dropping the harness does the same.)
     pub fn shutdown(self) {}
@@ -142,6 +150,21 @@ mod tests {
         assert_eq!(stats.docs, 11);
         assert!(stats.batches >= 1);
         assert!(stats.p99_ms > 0.0);
+        h.shutdown();
+    }
+
+    #[test]
+    fn prometheus_rendering_round_trips() {
+        let h = Harness::new(model(), BatchOpts::default());
+        h.infer(vec![BowDoc::new(vec![1, 2, 3])], 5, 3).unwrap();
+        let text = h.prometheus();
+        let summary = crate::obs::prometheus::parse(&text).expect("exposition parses");
+        assert!(summary.families >= 10, "{text}");
+        assert!(text.contains(crate::obs::names::SERVE_REQUESTS), "{text}");
+        assert!(
+            text.contains(&format!("{}_bucket", crate::obs::names::SERVE_LATENCY)),
+            "{text}"
+        );
         h.shutdown();
     }
 

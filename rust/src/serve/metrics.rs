@@ -1,70 +1,27 @@
 //! Serving observability: latency histograms, throughput counters, and
 //! the `stats` snapshot the TCP front end reports.
 //!
-//! Latencies land in a log₂-bucketed histogram (one `u64` per power of
-//! two of microseconds), so recording is O(1), lock-held time is tiny,
-//! and percentiles are exact to a factor of two — plenty for the
-//! starved-vs-full cache comparisons of bench `serve_latency`, which
-//! differ by orders of magnitude.
+//! Latencies land in the shared [`crate::obs::Log2Histogram`]
+//! (re-exported here as [`LatencyHistogram`]), so recording is O(1),
+//! lock-held time is tiny, and percentiles are exact to a factor of two
+//! — plenty for the starved-vs-full cache comparisons of bench
+//! `serve_latency`, which differ by orders of magnitude. The `metrics`
+//! verb renders these same counters as Prometheus text via
+//! [`StatsSnapshot::to_prometheus`].
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 use std::time::Instant;
 
+use crate::obs::{self, names};
+
 use super::json::Json;
 use super::model::{CacheStats, DiskStats};
 
-/// Number of log₂ buckets: covers 1 µs … ~2^39 µs (≈ 6 days).
-const BUCKETS: usize = 40;
-
-/// Log₂-bucketed latency histogram over microseconds.
-#[derive(Debug, Clone)]
-pub struct LatencyHistogram {
-    buckets: [u64; BUCKETS],
-    count: u64,
-}
-
-impl Default for LatencyHistogram {
-    fn default() -> Self {
-        Self::new()
-    }
-}
-
-impl LatencyHistogram {
-    /// An empty histogram.
-    pub fn new() -> LatencyHistogram {
-        LatencyHistogram { buckets: [0; BUCKETS], count: 0 }
-    }
-
-    /// Record one latency sample.
-    pub fn record(&mut self, micros: u64) {
-        let idx = (63 - micros.max(1).leading_zeros() as usize).min(BUCKETS - 1);
-        self.buckets[idx] += 1;
-        self.count += 1;
-    }
-
-    /// Samples recorded.
-    pub fn count(&self) -> u64 {
-        self.count
-    }
-
-    /// The `p`-th percentile in milliseconds (upper bucket bound, so the
-    /// value over-estimates by at most 2×). Returns 0 with no samples.
-    pub fn percentile_ms(&self, p: f64) -> f64 {
-        if self.count == 0 {
-            return 0.0;
-        }
-        let target = ((p / 100.0) * self.count as f64).ceil().max(1.0) as u64;
-        let mut cum = 0u64;
-        for (i, &n) in self.buckets.iter().enumerate() {
-            cum += n;
-            if cum >= target {
-                return (1u64 << (i + 1)) as f64 / 1000.0;
-            }
-        }
-        (1u64 << BUCKETS) as f64 / 1000.0
-    }
-}
+/// The serving tier's latency histogram — the lifted
+/// [`crate::obs::Log2Histogram`], shared with the disk-recall timer and
+/// the distributed master's round-wait meter.
+pub use crate::obs::Log2Histogram as LatencyHistogram;
 
 /// Shared serving counters; one instance per server/harness, updated by
 /// the batch executor and read (lock-briefly) by `stats` requests.
@@ -108,6 +65,13 @@ impl ServeMetrics {
     /// Record one executed micro-batch.
     pub fn record_batch(&self) {
         self.batches.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A copy of the request-latency histogram (for Prometheus
+    /// exposition, which renders the full distribution rather than the
+    /// snapshot's three percentiles).
+    pub fn latency_histogram(&self) -> LatencyHistogram {
+        self.hist.lock().expect("metrics lock poisoned").clone()
     }
 
     /// A consistent-enough snapshot for reporting (counters are relaxed;
@@ -190,6 +154,78 @@ impl StatsSnapshot {
             ("disk_spill_bytes".into(), Json::num(self.disk.spill_bytes as f64)),
             ("disk_recall_p99_ms".into(), Json::num(self.disk.recall_p99_ms)),
         ])
+    }
+
+    /// Export the snapshot into an [`obs::Registry`] under the stable
+    /// [`obs::names`] vocabulary — the single place serve counters map
+    /// to metric names, shared by the server's `metrics` verb and
+    /// [`super::harness::Harness::prometheus`].
+    pub fn export(&self, reg: &obs::Registry) {
+        reg.set_counter(names::SERVE_REQUESTS, "Requests completed.", &[], self.requests);
+        reg.set_counter(names::SERVE_DOCS, "Documents folded in.", &[], self.docs);
+        reg.set_counter(names::SERVE_TOKENS, "Tokens sampled over.", &[], self.tokens);
+        reg.set_counter(names::SERVE_BATCHES, "Micro-batches executed.", &[], self.batches);
+        reg.set_gauge(
+            names::SERVE_DOCS_PER_SEC,
+            "Documents per wall-clock second since startup.",
+            &[],
+            self.docs_per_sec,
+        );
+        let c = &self.cache;
+        reg.set_counter(names::SERVE_CACHE_HITS, "Serve cache hits.", &[], c.hits);
+        reg.set_counter(names::SERVE_CACHE_MISSES, "Serve cache misses.", &[], c.misses);
+        reg.set_counter(
+            names::SERVE_CACHE_BYPASSES,
+            "Oversized blocks served without caching.",
+            &[],
+            c.bypasses,
+        );
+        reg.set_counter(names::SERVE_CACHE_EVICTIONS, "Serve cache evictions.", &[], c.evictions);
+        reg.set_gauge(
+            names::SERVE_CACHE_BLOCKS,
+            "Blocks resident in the serve cache.",
+            &[],
+            c.resident_blocks as f64,
+        );
+        reg.set_gauge(
+            names::SERVE_CACHE_BYTES,
+            "Bytes resident in the serve cache.",
+            &[],
+            c.resident_bytes as f64,
+        );
+        let d = &self.disk;
+        reg.set_counter(names::SERVE_DISK_RECALLS, "Disk-tier block recalls.", &[], d.recalls);
+        reg.set_counter(
+            names::SERVE_DISK_RECALL_BYTES,
+            "Bytes recalled from the disk tier.",
+            &[],
+            d.recall_bytes,
+        );
+    }
+
+    /// The snapshot rendered as Prometheus text exposition format,
+    /// including the request-latency and disk-recall-latency
+    /// distributions (both log₂ histograms, rendered in seconds).
+    pub fn to_prometheus(
+        &self,
+        latency: &LatencyHistogram,
+        recall: &LatencyHistogram,
+    ) -> String {
+        let reg = obs::Registry::new();
+        self.export(&reg);
+        reg.set_histogram(
+            names::SERVE_LATENCY,
+            "Request queue-to-reply latency (seconds).",
+            &[],
+            latency,
+        );
+        reg.set_histogram(
+            names::SERVE_DISK_RECALL_LATENCY,
+            "Cache-miss recall latency from the disk tier (seconds).",
+            &[],
+            recall,
+        );
+        reg.render_prometheus()
     }
 }
 

@@ -443,6 +443,13 @@ impl ShardedTopicModel {
         }
     }
 
+    /// A copy of the disk-recall latency histogram (Prometheus
+    /// exposition renders the whole distribution; [`DiskStats`] carries
+    /// only its p99).
+    pub fn recall_histogram(&self) -> LatencyHistogram {
+        self.recall_hist.lock().expect("recall histogram lock poisoned").clone()
+    }
+
     /// Fold in a batch with default options — same contract as
     /// [`TopicModel::infer`](crate::engine::TopicModel::infer), bitwise
     /// identical results.

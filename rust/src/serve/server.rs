@@ -18,6 +18,7 @@
 //! | `{"type":"ping"}`                                              | `{"type":"pong"}` |
 //! | `{"type":"infer","docs":[[w,…],…],"seed":S,"iterations":N}`    | `{"type":"result","counts":[[[topic,count],…],…]}` |
 //! | `{"type":"stats"}`                                             | `{"type":"stats", …counters…}` (see [`StatsSnapshot::to_json`]) |
+//! | `{"type":"metrics"}`                                           | `{"type":"metrics","body":"…"}` — Prometheus text exposition |
 //! | `{"type":"shutdown"}`                                          | `{"type":"bye"}`, then the server stops |
 //!
 //! `seed` and `iterations` are optional (defaults: seed 0, the
@@ -171,6 +172,16 @@ fn handle_conn(mut stream: TcpStream, ctx: &ConnCtx) {
                 .metrics
                 .snapshot(ctx.model.cache_stats(), ctx.model.disk_stats())
                 .to_json(),
+            Some("metrics") => {
+                let body = ctx
+                    .metrics
+                    .snapshot(ctx.model.cache_stats(), ctx.model.disk_stats())
+                    .to_prometheus(&ctx.metrics.latency_histogram(), &ctx.model.recall_histogram());
+                Json::Obj(vec![
+                    ("type".into(), Json::str("metrics")),
+                    ("body".into(), Json::str(body)),
+                ])
+            }
             Some("shutdown") => {
                 let _ = write_frame(&mut stream, &Json::Obj(vec![(
                     "type".into(),
@@ -181,7 +192,7 @@ fn handle_conn(mut stream: TcpStream, ctx: &ConnCtx) {
                 let _ = TcpStream::connect(ctx.addr);
                 return;
             }
-            _ => error_frame("unknown request type (ping|infer|stats|shutdown)"),
+            _ => error_frame("unknown request type (ping|infer|stats|metrics|shutdown)"),
         };
         if write_frame(&mut stream, &response).is_err() {
             return; // peer went away mid-reply
@@ -307,6 +318,12 @@ impl Server {
     /// Current serving statistics.
     pub fn stats(&self) -> StatsSnapshot {
         self.harness.as_ref().expect("harness lives until teardown").stats()
+    }
+
+    /// The serving counters as Prometheus text — what the `metrics`
+    /// request returns in its `body` field.
+    pub fn prometheus(&self) -> String {
+        self.harness.as_ref().expect("harness lives until teardown").prometheus()
     }
 
     /// The served model — the paging-fault tests reach
@@ -438,6 +455,19 @@ impl Client {
         match reply.get("type").and_then(Json::as_str) {
             Some("stats") => Ok(reply),
             _ => bail!("unexpected stats reply: {}", reply.render()),
+        }
+    }
+
+    /// Fetch the server's metrics in Prometheus text exposition format.
+    pub fn metrics(&mut self) -> Result<String> {
+        let reply = self.request(&Json::Obj(vec![("type".into(), Json::str("metrics"))]))?;
+        match reply.get("type").and_then(Json::as_str) {
+            Some("metrics") => reply
+                .get("body")
+                .and_then(Json::as_str)
+                .map(str::to_owned)
+                .context("metrics reply has a \"body\" string"),
+            _ => bail!("unexpected metrics reply: {}", reply.render()),
         }
     }
 

@@ -1,9 +1,23 @@
 //! Tiny leveled logger wired into the `log` facade.
 //!
-//! `mplda` binaries call [`init`] once; level comes from `MPLDA_LOG`
-//! (error|warn|info|debug|trace, default info). Output goes to stderr with a
-//! monotonic timestamp so experiment logs interleave cleanly with stdout
-//! result tables.
+//! `mplda` binaries call [`init`] once; filtering comes from `MPLDA_LOG`,
+//! a comma-separated list of directives in the usual `env_logger` shape:
+//!
+//! ```text
+//! MPLDA_LOG=debug                                  # global level
+//! MPLDA_LOG=mplda::distributed=debug               # one subsystem only
+//! MPLDA_LOG=warn,mplda::distributed=debug,mplda::serve=trace
+//! ```
+//!
+//! A bare level (`error|warn|info|debug|trace|off`) sets the default; a
+//! `target=level` pair overrides it for that module path and everything
+//! beneath it. The most specific (longest) matching target wins, so
+//! `mplda=warn,mplda::distributed::master=trace` behaves as expected.
+//! Malformed directives are ignored rather than fatal — a typo in an env
+//! var must not take the binary down. Default level is info.
+//!
+//! Output goes to stderr with a monotonic timestamp so experiment logs
+//! interleave cleanly with stdout result tables.
 
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::time::Instant;
@@ -13,13 +27,87 @@ use once_cell::sync::Lazy;
 static START: Lazy<Instant> = Lazy::new(Instant::now);
 static INSTALLED: AtomicBool = AtomicBool::new(false);
 
+fn parse_level(s: &str) -> Option<log::LevelFilter> {
+    match s {
+        "error" => Some(log::LevelFilter::Error),
+        "warn" => Some(log::LevelFilter::Warn),
+        "info" => Some(log::LevelFilter::Info),
+        "debug" => Some(log::LevelFilter::Debug),
+        "trace" => Some(log::LevelFilter::Trace),
+        "off" => Some(log::LevelFilter::Off),
+        _ => None,
+    }
+}
+
+/// The parsed `MPLDA_LOG` filter: a default level plus per-target
+/// overrides, matched longest-prefix-first on module paths.
+#[derive(Debug, Clone, PartialEq, Eq)]
+struct Filter {
+    default: log::LevelFilter,
+    /// `(target, level)` pairs sorted by descending target length, so a
+    /// linear scan finds the most specific match first.
+    directives: Vec<(String, log::LevelFilter)>,
+}
+
+impl Filter {
+    fn parse(spec: &str) -> Filter {
+        let mut default = log::LevelFilter::Info;
+        let mut directives: Vec<(String, log::LevelFilter)> = Vec::new();
+        for part in spec.split(',') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            match part.split_once('=') {
+                None => {
+                    if let Some(level) = parse_level(part) {
+                        default = level;
+                    }
+                }
+                Some((target, level)) => {
+                    let (target, level) = (target.trim(), level.trim());
+                    if target.is_empty() {
+                        continue;
+                    }
+                    if let Some(level) = parse_level(level) {
+                        directives.push((target.to_string(), level));
+                    }
+                }
+            }
+        }
+        directives.sort_by(|a, b| b.0.len().cmp(&a.0.len()).then_with(|| a.0.cmp(&b.0)));
+        Filter { default, directives }
+    }
+
+    /// The level for one log target: the longest directive whose target
+    /// is the module path itself or a `::`-delimited ancestor of it.
+    fn level_for(&self, target: &str) -> log::LevelFilter {
+        for (prefix, level) in &self.directives {
+            if target == prefix
+                || (target.starts_with(prefix.as_str())
+                    && target[prefix.len()..].starts_with("::"))
+            {
+                return *level;
+            }
+        }
+        self.default
+    }
+
+    /// The loosest level any directive allows — what `log::set_max_level`
+    /// needs so per-target `debug` still reaches the logger when the
+    /// default is `warn`.
+    fn max_level(&self) -> log::LevelFilter {
+        self.directives.iter().map(|&(_, l)| l).fold(self.default, std::cmp::max)
+    }
+}
+
 struct StderrLogger {
-    level: log::LevelFilter,
+    filter: Filter,
 }
 
 impl log::Log for StderrLogger {
     fn enabled(&self, metadata: &log::Metadata) -> bool {
-        metadata.level() <= self.level
+        metadata.level() <= self.filter.level_for(metadata.target())
     }
 
     fn log(&self, record: &log::Record) {
@@ -37,30 +125,68 @@ impl log::Log for StderrLogger {
     fn flush(&self) {}
 }
 
-/// Install the logger (idempotent). Returns the active level.
+/// Install the logger (idempotent). Returns the loosest active level
+/// across all `MPLDA_LOG` directives.
 pub fn init() -> log::LevelFilter {
-    let level = match std::env::var("MPLDA_LOG").as_deref() {
-        Ok("error") => log::LevelFilter::Error,
-        Ok("warn") => log::LevelFilter::Warn,
-        Ok("debug") => log::LevelFilter::Debug,
-        Ok("trace") => log::LevelFilter::Trace,
-        Ok("off") => log::LevelFilter::Off,
-        _ => log::LevelFilter::Info,
-    };
+    let filter = Filter::parse(&std::env::var("MPLDA_LOG").unwrap_or_default());
+    let max = filter.max_level();
     if !INSTALLED.swap(true, Ordering::SeqCst) {
-        let _ = log::set_boxed_logger(Box::new(StderrLogger { level }));
-        log::set_max_level(level);
+        let _ = log::set_boxed_logger(Box::new(StderrLogger { filter }));
+        log::set_max_level(max);
     }
-    level
+    max
 }
 
 #[cfg(test)]
 mod tests {
+    use super::*;
+    use log::LevelFilter;
+
     #[test]
     fn init_is_idempotent() {
         let a = super::init();
         let b = super::init();
         assert_eq!(a, b);
         log::info!("logger smoke test");
+    }
+
+    #[test]
+    fn bare_levels_set_the_default() {
+        assert_eq!(Filter::parse("").default, LevelFilter::Info);
+        assert_eq!(Filter::parse("debug").default, LevelFilter::Debug);
+        assert_eq!(Filter::parse("off").default, LevelFilter::Off);
+        // Unknown bare words are ignored, not fatal.
+        assert_eq!(Filter::parse("verbose").default, LevelFilter::Info);
+    }
+
+    #[test]
+    fn per_target_directives_override_the_default() {
+        let f = Filter::parse("warn,mplda::distributed=debug,mplda::serve=trace");
+        assert_eq!(f.default, LevelFilter::Warn);
+        assert_eq!(f.level_for("mplda::coordinator::driver"), LevelFilter::Warn);
+        assert_eq!(f.level_for("mplda::distributed"), LevelFilter::Debug);
+        assert_eq!(f.level_for("mplda::distributed::master"), LevelFilter::Debug);
+        assert_eq!(f.level_for("mplda::serve::server"), LevelFilter::Trace);
+        // Prefixes only match at `::` boundaries: `mplda::serve` must not
+        // capture a hypothetical `mplda::server_util`.
+        assert_eq!(f.level_for("mplda::server_util"), LevelFilter::Warn);
+        assert_eq!(f.max_level(), LevelFilter::Trace);
+    }
+
+    #[test]
+    fn longest_target_wins() {
+        let f = Filter::parse("mplda=warn,mplda::distributed=off,mplda::distributed::master=trace");
+        assert_eq!(f.level_for("mplda::distributed::master"), LevelFilter::Trace);
+        assert_eq!(f.level_for("mplda::distributed::worker"), LevelFilter::Off);
+        assert_eq!(f.level_for("mplda::kvstore"), LevelFilter::Warn);
+        assert_eq!(f.level_for("other_crate"), LevelFilter::Info);
+    }
+
+    #[test]
+    fn malformed_directives_are_ignored() {
+        let f = Filter::parse("=debug, ,mplda::serve=zigzag,debug");
+        assert_eq!(f.default, LevelFilter::Debug);
+        assert!(f.directives.is_empty());
+        assert_eq!(f.level_for("mplda::serve"), LevelFilter::Debug);
     }
 }

@@ -1,0 +1,307 @@
+//! ISSUE 10 acceptance: round-lifecycle tracing is **bitwise invisible**.
+//!
+//! Tracing on vs off must leave the model digest, the log-likelihood
+//! series and the simulated communication bytes unchanged on every
+//! backend — simulated, threaded, pipelined, and distributed with two
+//! real worker processes over loopback TCP (whose per-round phase
+//! timings piggyback on result frames out-of-band and merge into the
+//! master's trace as pids 1+). The written `trace.json` must be valid
+//! Chrome trace-event JSON whose spans nest properly per `(pid, tid)`
+//! lane, and the `obs.trace_sample_every` gate must drop exactly the
+//! unsampled iterations. The distributed master must also answer
+//! `metrics` scrapes mid-run with parseable Prometheus text.
+
+use std::path::{Path, PathBuf};
+use std::process::{Child, Command, Stdio};
+use std::time::{Duration, Instant};
+
+use mplda::config::SamplerKind;
+use mplda::engine::{Execution, Session, SessionBuilder, TrainSummary};
+use mplda::obs::TraceEvent;
+use mplda::serve::Json;
+
+const ITERS: usize = 4;
+const SEED: u64 = 19;
+
+fn builder() -> SessionBuilder {
+    Session::builder()
+        .corpus_preset("tiny")
+        .topics(12)
+        .sampler(SamplerKind::InvertedXy)
+        .seed(SEED)
+        .workers(3)
+        .blocks(3)
+        .cluster_preset("custom")
+        .machines(3)
+        .iterations(ITERS)
+        .configure(|cfg| {
+            cfg.corpus.seed = 29;
+            cfg.train.ll_every = 1;
+        })
+}
+
+/// The bitwise identity of a run: digest, LL series bits, and simulated
+/// communication bytes (the trace flag and phase payloads ride the
+/// out-of-band transport kinds, so `comm_bytes` must not move).
+type Identity = (u64, Vec<(usize, u64)>, u64);
+
+fn identity(summary: &TrainSummary, digest: u64) -> Identity {
+    (
+        digest,
+        summary.ll_series.iter().map(|&(it, _t, ll)| (it, ll.to_bits())).collect(),
+        summary.total_comm_bytes,
+    )
+}
+
+fn spawn_worker(addr: &str) -> Child {
+    Command::new(env!("CARGO_BIN_EXE_mplda"))
+        .args(["worker", "--connect", addr])
+        .stdin(Stdio::null())
+        .stdout(Stdio::null())
+        .stderr(Stdio::null())
+        .spawn()
+        .expect("spawning mplda worker")
+}
+
+fn reap(mut children: Vec<Child>) {
+    let deadline = Instant::now() + Duration::from_secs(10);
+    while !children.is_empty() && Instant::now() < deadline {
+        children.retain_mut(|c| !matches!(c.try_wait(), Ok(Some(_))));
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    for c in &mut children {
+        let _ = c.kill();
+        let _ = c.wait();
+    }
+}
+
+fn backend_builder(backend: &str) -> SessionBuilder {
+    match backend {
+        "simulated" => builder().execution(Execution::Simulated),
+        "threaded" => builder().execution(Execution::Threaded { parallelism: 2 }),
+        "pipelined" => builder()
+            .execution(Execution::Pipelined { parallelism: 2, staging_budget_mib: 0.0 }),
+        "distributed" => builder().execution(Execution::Distributed).configure(|cfg| {
+            cfg.dist.listen = "127.0.0.1:0".to_string();
+            cfg.dist.workers = 2;
+        }),
+        other => panic!("unknown backend {other}"),
+    }
+}
+
+/// One run; `trace_dir = Some(..)` arms the tracer. Returns the bitwise
+/// identity, the recorded span events, and the summed result-frame
+/// transport bytes (to show the piggyback actually rode along).
+fn run(backend: &str, trace_dir: Option<&Path>) -> (Identity, Vec<TraceEvent>, u64) {
+    let mut b = backend_builder(backend);
+    if let Some(dir) = trace_dir {
+        let dir = dir.to_string_lossy().into_owned();
+        b = b.configure(move |cfg| cfg.obs.trace_dir = dir.clone());
+    }
+    let mut session = b.build().unwrap();
+    let children = if backend == "distributed" {
+        let addr = session
+            .driver()
+            .and_then(|d| d.listen_addr())
+            .expect("distributed driver binds at build time")
+            .to_string();
+        (0..2).map(|_| spawn_worker(&addr)).collect()
+    } else {
+        Vec::new()
+    };
+    let summary = session.train().unwrap();
+    session.check_consistency().unwrap();
+    let digest = session.model_digest().unwrap();
+    let events = session.driver().map(|d| d.tracer().events()).unwrap_or_default();
+    let result_bytes: u64 = summary.iters.iter().map(|ev| ev.stats.result_bytes).sum();
+    let id = identity(&summary, digest);
+    drop(session);
+    reap(children);
+    (id, events, result_bytes)
+}
+
+fn temp_dir(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("mplda_obs_{tag}_{}", std::process::id()))
+}
+
+/// Structural validity of one trace: per `(pid, tid)` lane, span close
+/// times are monotone in record order (guards drop chronologically on
+/// their thread), and spans sorted by start either nest fully or are
+/// disjoint — partial overlap within a lane means broken bookkeeping.
+fn check_lanes(events: &[TraceEvent], label: &str) {
+    use std::collections::BTreeMap;
+    let mut lanes: BTreeMap<(u32, u32), Vec<&TraceEvent>> = BTreeMap::new();
+    for e in events {
+        assert!(!e.name.is_empty(), "{label}: unnamed span");
+        lanes.entry((e.pid, e.tid)).or_default().push(e);
+    }
+    for ((pid, tid), lane) in &lanes {
+        // Record order per lane is close order: ends never go backwards.
+        let mut prev_end = 0u64;
+        for e in lane {
+            let end = e.ts_us + e.dur_us;
+            assert!(
+                end >= prev_end,
+                "{label}: lane ({pid},{tid}) span {:?} closed at {end}µs, \
+                 before the previous close at {prev_end}µs",
+                e.name
+            );
+            prev_end = end;
+        }
+        // Sorted by start (widest first on ties), spans nest or are
+        // disjoint within a lane.
+        let mut sorted: Vec<&&TraceEvent> = lane.iter().collect();
+        sorted.sort_by(|a, b| a.ts_us.cmp(&b.ts_us).then(b.dur_us.cmp(&a.dur_us)));
+        let mut stack: Vec<u64> = Vec::new(); // open-span end times
+        for e in sorted {
+            let end = e.ts_us + e.dur_us;
+            while stack.last().is_some_and(|&open_end| e.ts_us >= open_end) {
+                stack.pop();
+            }
+            if let Some(&open_end) = stack.last() {
+                assert!(
+                    end <= open_end,
+                    "{label}: lane ({pid},{tid}) span {:?} [{},{end}] partially \
+                     overlaps an enclosing span ending at {open_end}",
+                    e.name,
+                    e.ts_us
+                );
+            }
+            stack.push(end);
+        }
+    }
+}
+
+#[test]
+fn tracing_is_bitwise_invisible_on_every_backend() {
+    for backend in ["simulated", "threaded", "pipelined", "distributed"] {
+        let dir = temp_dir(backend);
+        let (plain, plain_events, plain_result_bytes) = run(backend, None);
+        assert!(plain_events.is_empty(), "{backend}: untraced run must record nothing");
+        let (traced, events, traced_result_bytes) = run(backend, Some(&dir));
+        assert_eq!(
+            traced.0, plain.0,
+            "{backend}: tracing changed the model digest"
+        );
+        assert_eq!(
+            traced.1, plain.1,
+            "{backend}: tracing changed the log-likelihood series (bitwise)"
+        );
+        assert_eq!(
+            traced.2, plain.2,
+            "{backend}: tracing changed the simulated communication bytes"
+        );
+        assert!(!events.is_empty(), "{backend}: traced run recorded no spans");
+        assert!(
+            events.iter().any(|e| e.name == "iteration"),
+            "{backend}: no iteration spans"
+        );
+        assert!(events.iter().any(|e| e.name == "round"), "{backend}: no round spans");
+        check_lanes(&events, backend);
+        if backend == "pipelined" {
+            assert!(
+                events.iter().any(|e| e.name == "pipeline_flush"),
+                "pipelined: no pipeline_flush spans"
+            );
+        }
+        if backend == "distributed" {
+            // Worker phases merged into the master's trace as pids 1+…
+            assert!(
+                events.iter().any(|e| e.pid >= 1 && e.name == "sample"),
+                "distributed: no merged worker sample phases"
+            );
+            assert!(
+                events.iter().any(|e| e.pid >= 1 && e.name == "wire_decode"),
+                "distributed: no merged worker wire_decode phases"
+            );
+            // …and the piggybacked payload genuinely rode the result
+            // frames (out-of-band transport bytes grow; comm_bytes,
+            // asserted equal above, does not).
+            assert!(
+                traced_result_bytes > plain_result_bytes,
+                "distributed: traced result frames ({traced_result_bytes} B) should \
+                 carry more transport bytes than untraced ({plain_result_bytes} B)"
+            );
+        }
+        // The trace file exists, parses as Chrome trace-event JSON, and
+        // holds every recorded span.
+        let text = std::fs::read_to_string(dir.join("trace.json"))
+            .unwrap_or_else(|e| panic!("{backend}: reading trace.json: {e}"));
+        let json = Json::parse(&text).expect("trace.json parses");
+        let file_events =
+            json.get("traceEvents").and_then(Json::as_arr).expect("traceEvents array");
+        assert_eq!(file_events.len(), events.len(), "{backend}: span count mismatch on disk");
+        for fe in file_events {
+            for key in ["name", "ph", "ts", "dur", "pid", "tid"] {
+                assert!(fe.get(key).is_some(), "{backend}: event missing {key:?}: {fe:?}");
+            }
+            assert_eq!(fe.get("ph").and_then(Json::as_str), Some("X"));
+            assert!(fe.get("dur").and_then(Json::as_u64).unwrap() >= 1);
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}
+
+#[test]
+fn trace_sampling_gate_drops_unsampled_iterations() {
+    let dir = temp_dir("gate");
+    let mut session = backend_builder("threaded")
+        .configure({
+            let dir = dir.to_string_lossy().into_owned();
+            move |cfg| {
+                cfg.obs.trace_dir = dir.clone();
+                cfg.obs.trace_sample_every = 2;
+            }
+        })
+        .build()
+        .unwrap();
+    session.train().unwrap();
+    let events = session.driver().unwrap().tracer().events();
+    let iter_spans = events.iter().filter(|e| e.name == "iteration").count();
+    assert_eq!(
+        iter_spans,
+        ITERS / 2,
+        "trace_sample_every = 2 over {ITERS} iterations must record exactly half"
+    );
+    check_lanes(&events, "sampled");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn master_answers_metrics_scrapes_mid_run() {
+    use mplda::serve::server::{read_frame, write_frame};
+    let mut session = backend_builder("distributed").build().unwrap();
+    let addr = session
+        .driver()
+        .and_then(|d| d.listen_addr())
+        .expect("distributed driver binds at build time")
+        .to_string();
+    let children: Vec<Child> = (0..2).map(|_| spawn_worker(&addr)).collect();
+    // Connect after the worker handshake is over (iteration 1 has
+    // completed) so the listener cannot mistake the scrape for a worker
+    // registration; the master answers at the next round start, so the
+    // reply is waiting in the socket by the time training finishes.
+    let mut scrape: Option<std::net::TcpStream> = None;
+    session
+        .train_observed(|ev| {
+            if ev.stats.iteration == 1 {
+                let mut stream = std::net::TcpStream::connect(&addr).expect("scrape connect");
+                let req = Json::Obj(vec![("type".into(), Json::str("metrics"))]);
+                write_frame(&mut stream, &req).expect("scrape request");
+                scrape = Some(stream);
+            }
+        })
+        .unwrap();
+    let mut stream = scrape.expect("observer ran at iteration 1");
+    let reply = read_frame(&mut stream).expect("scrape reply").expect("frame not EOF");
+    assert_eq!(reply.get("type").and_then(Json::as_str), Some("metrics"), "{reply:?}");
+    let body = reply.get("body").and_then(Json::as_str).expect("metrics body").to_string();
+    let summary = mplda::obs::prometheus::parse(&body).expect("master scrape parses");
+    assert!(summary.families >= 5, "{body}");
+    assert!(body.contains("mplda_dist_connected_workers"), "{body}");
+    assert!(body.contains("mplda_iterations_total"), "{body}");
+    assert!(body.contains("mplda_dist_round_wait_bucket"), "{body}");
+    drop(stream);
+    drop(session);
+    reap(children);
+}

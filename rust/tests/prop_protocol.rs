@@ -13,8 +13,8 @@
 
 use mplda::config::{CorpusConfig, SamplerKind};
 use mplda::distributed::{
-    require_epoch, BinMsg, InitMsg, Message, ResultDeltaMsg, ResultMsg, TaskDeltaMsg, TaskMsg,
-    ZRowDiff,
+    require_epoch, BinMsg, InitMsg, Message, PhaseSample, ResultDeltaMsg, ResultMsg, TaskDeltaMsg,
+    TaskMsg, WirePhase, ZRowDiff,
 };
 use mplda::error::MpldaError;
 use mplda::model::wire::{
@@ -54,6 +54,18 @@ fn arb_dt(rng: &mut Pcg64, rows: usize, size: usize) -> Vec<Vec<(u32, u32)>> {
         .collect()
 }
 
+/// Piggybacked phase timings. Offsets stay below 2^32 so the JSON ride
+/// through `Json::num` (exact to 2^53) is lossless by construction.
+fn arb_phases(rng: &mut Pcg64) -> Vec<PhaseSample> {
+    (0..rng.index(4))
+        .map(|_| PhaseSample {
+            phase: [WirePhase::Decode, WirePhase::Sample, WirePhase::Encode][rng.index(3)],
+            start_us: rng.next_u64() as u32 as u64,
+            dur_us: rng.next_u64() as u32 as u64,
+        })
+        .collect()
+}
+
 fn arb_task(rng: &mut Pcg64, rows: usize, size: usize) -> TaskMsg {
     TaskMsg {
         position: rng.index(64),
@@ -65,6 +77,7 @@ fn arb_task(rng: &mut Pcg64, rows: usize, size: usize) -> TaskMsg {
         docs: (0..rows).map(|_| rng.next_u64() as u32).collect(),
         z: arb_z(rng, rows, size),
         dt: arb_dt(rng, rows, size),
+        trace: rng.index(2) == 1,
     }
 }
 
@@ -110,6 +123,7 @@ impl Arbitrary for AnyMessage {
                 rng: (arb_u128(rng), arb_u128(rng)),
                 z: arb_z(rng, rows, size),
                 dt: arb_dt(rng, rows, size),
+                phases: arb_phases(rng),
             }),
         })
     }
@@ -131,6 +145,7 @@ impl Arbitrary for AnyBinMessage {
                 rng: (arb_u128(rng), arb_u128(rng)),
                 block: arb_bytes(rng, size),
                 ck_delta: arb_bytes(rng, size),
+                trace: rng.index(2) == 1,
             }),
             _ => BinMsg::ResultDelta(ResultDeltaMsg {
                 position: rng.index(64),
@@ -158,6 +173,7 @@ impl Arbitrary for AnyBinMessage {
                     })
                     .collect(),
                 dt: arb_dt(rng, rows, size),
+                phases: arb_phases(rng),
             }),
         })
     }

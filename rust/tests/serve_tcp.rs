@@ -117,6 +117,16 @@ fn loopback_round_trip_and_clean_shutdown() {
     assert_eq!(stats.get("disk_recalls").and_then(Json::as_u64), Some(0));
     assert_eq!(stats.get("disk_spill_bytes").and_then(Json::as_u64), Some(0));
 
+    // The `metrics` verb returns Prometheus text that the crate's own
+    // exposition parser accepts (the acceptance round trip) and that
+    // agrees with the `stats` counters above.
+    let body = client.metrics().unwrap();
+    let summary = mplda::obs::prometheus::parse(&body).expect("metrics body parses");
+    assert!(summary.families >= 10, "{body}");
+    assert!(body.contains("mplda_serve_requests_total"), "{body}");
+    assert!(body.contains("mplda_serve_request_latency_bucket"), "{body}");
+    assert!(body.contains("mplda_serve_cache_hits_total"), "{body}");
+
     // Clean shutdown over the wire; join() returns once torn down, even
     // though `raw` is still connected and idle (the force-close sweep).
     client.shutdown().unwrap();
